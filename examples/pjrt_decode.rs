@@ -1,0 +1,66 @@
+//! Three-layer demo: execute the AOT-compiled JAX/Pallas artifacts
+//! (built by `make artifacts`) from the Rust runtime and cross-check the
+//! Pallas ternary kernel against the native Rust I2_S kernel.
+//!
+//!     make artifacts && cargo run --offline --release --example pjrt_decode
+
+use bitnet::kernels::quant::TernaryWeights;
+use bitnet::kernels::{kernel_for, QuantType};
+use bitnet::runtime::{manifest_for, Runtime};
+use bitnet::util::Rng;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let art_dir = Path::new("artifacts");
+    if !art_dir.join("ternary_matmul.hlo.txt").exists() {
+        eprintln!("artifacts/ not built — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let rt = Runtime::new()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // 1. The Pallas mpGEMM kernel vs Rust I2_S on identical inputs.
+    let exe = rt.load_hlo_text(&art_dir.join("ternary_matmul.hlo.txt"))?;
+    let (m, k) = (256usize, 768usize);
+    let mut rng = Rng::new(5);
+    let wq: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+    let w_f32: Vec<f32> = wq.iter().map(|&v| v as f32).collect();
+    let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+    let t0 = std::time::Instant::now();
+    let pjrt_out = &exe.execute_f32(&[(&x, &[k]), (&w_f32, &[m, k])])?[0];
+    let pjrt_time = t0.elapsed();
+
+    let t = TernaryWeights::from_ternary(wq, m, k, 0.05);
+    let kern = kernel_for(QuantType::I2S);
+    let packed = kern.quantize(&t);
+    let p = kern.prepare(&x, k);
+    let mut rust_out = vec![0f32; m];
+    let t1 = std::time::Instant::now();
+    kern.gemv(&packed, &p, &mut rust_out);
+    let rust_time = t1.elapsed();
+
+    let max_diff = pjrt_out
+        .iter()
+        .zip(&rust_out)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    println!(
+        "ternary_matmul ({m}x{k}): pallas-via-PJRT vs Rust I2_S max |Δ| = {max_diff:.2e} \
+         (PJRT {:.1}µs, Rust {:.1}µs)",
+        pjrt_time.as_secs_f64() * 1e6,
+        rust_time.as_secs_f64() * 1e6
+    );
+
+    // 2. Full transformer-block decode step artifact.
+    let block = rt.load_hlo_text(&art_dir.join("bitnet_block.hlo.txt"))?;
+    let entry = manifest_for(&art_dir.join("bitnet_block.hlo.txt")).expect("manifest");
+    let t2 = std::time::Instant::now();
+    let outs = block.execute_random(&entry)?;
+    println!(
+        "bitnet_block decode step: outputs (x', k_new, v_new) lens = {:?} in {:.1}µs",
+        outs.iter().map(|o| o.len()).collect::<Vec<_>>(),
+        t2.elapsed().as_secs_f64() * 1e6
+    );
+    println!("three-layer stack OK: Python built it, Rust runs it.");
+    Ok(())
+}

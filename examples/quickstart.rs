@@ -1,0 +1,40 @@
+//! Quickstart: build a synthetic BitNet b1.58 model, run it under the
+//! paper's lossless I2_S kernel, and generate a few tokens.
+//!
+//!     cargo run --offline --release --example quickstart
+
+use bitnet::kernels::QuantType;
+use bitnet::model::{sample, ModelConfig, SamplingParams, Transformer};
+use bitnet::tokenizer::{synthetic_corpus, Tokenizer};
+use bitnet::util::Rng;
+
+fn main() {
+    // 1. A model. Real deployments load a BTNZ checkpoint
+    //    (bitnet::modelio::load); here we synthesize one.
+    let cfg = ModelConfig::tiny();
+    let model = Transformer::synthetic(&cfg, QuantType::I2S, 42);
+    println!(
+        "model {}: {:.1}M params, kernel {} ({} bpw packed)",
+        cfg.name,
+        cfg.param_count() as f64 / 1e6,
+        model.qtype.name(),
+        model.layers[0].wq.qtensor.bits_per_weight(),
+    );
+
+    // 2. A prompt.
+    let tok = Tokenizer::train(&synthetic_corpus(5000, 1), cfg.vocab_size);
+    let prompt = tok.encode("the ternary model");
+
+    // 3. Prefill + decode.
+    let mut session = model.new_session(prompt.len() + 24);
+    let mut logits = model.prefill(&mut session, &prompt);
+    let mut rng = Rng::new(0);
+    let params = SamplingParams::with_temperature(0.8);
+    let mut out = Vec::new();
+    for _ in 0..24 {
+        let t = sample(&logits, &params, &mut rng);
+        out.push(t);
+        logits = model.decode_step(&mut session, t);
+    }
+    println!("generated: {:?}", tok.decode(&out));
+}

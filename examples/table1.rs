@@ -1,0 +1,34 @@
+//! Paper Table 1: the Bitnet.cpp ternary mpGEMM library — regenerated
+//! from kernel metadata and *measured* packed storage (not constants).
+//!
+//!     cargo run --offline --release --example table1
+
+use bitnet::kernels::quant::TernaryWeights;
+use bitnet::kernels::{kernel_for, KernelClass, QuantType};
+use bitnet::util::Rng;
+
+fn main() {
+    let (m, k) = (64, 3072);
+    let mut rng = Rng::new(1);
+    let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+    let t = TernaryWeights::from_ternary(q, m, k, 0.05);
+
+    println!("Table 1: Bitnet.cpp ternary mpGEMM library");
+    println!("{:<9} {:<10} {:>14} {:>9}", "Kernel", "type", "bpw (measured)", "Lossless");
+    for qt in [QuantType::Tl10, QuantType::Tl11, QuantType::Tl20, QuantType::Tl21, QuantType::I2S]
+    {
+        let kern = kernel_for(qt);
+        let info = kern.info();
+        let packed = kern.quantize(&t);
+        println!(
+            "{:<9} {:<10} {:>14.2} {:>9}",
+            info.name,
+            match info.class {
+                KernelClass::LutBased => "LUT-based",
+                KernelClass::MadBased => "MAD-based",
+            },
+            packed.bits_per_weight(),
+            if info.lossless { "yes" } else { "no" }
+        );
+    }
+}

@@ -1,0 +1,23 @@
+//! Paper Table 3 (appendix): bit-wise vs element-wise bpw across weight
+//! cardinalities — computed from the code-space math in kernels::lut.
+//!
+//!     cargo run --offline --release --example table3
+
+use bitnet::kernels::lut::{bitwise_bpw, code_count, elementwise_bpw, half_code_count};
+
+fn main() {
+    println!("Table 3: bpw, bit-wise vs element-wise");
+    println!("{:>3} {:>3} {:>8} {:>8}   note", "C", "g", "bpw_b", "bpw_e");
+    for (c, g) in [(3usize, 3usize), (4, 2), (5, 2), (6, 2), (7, 2), (9, 2)] {
+        let full = code_count(c, g);
+        let mirrored = full > 16 && half_code_count(c, g) <= 16;
+        println!(
+            "{:>3} {:>3} {:>8.2} {:>8.2}   {}",
+            c,
+            g,
+            bitwise_bpw(c),
+            elementwise_bpw(c, g),
+            if mirrored { "mirror consolidation" } else { "full enumeration" }
+        );
+    }
+}

@@ -1,0 +1,39 @@
+//! Direct (non-composed) Table 7 anchor: true end-to-end decode tokens/s
+//! on sizes this host can materialize (tiny + 100M), all Table-7 kernels.
+//! The composed full-ladder numbers come from `cargo bench e2e_table7`;
+//! this example validates the composition against reality at small scale.
+//!
+//!     cargo run --offline --release --example table7 [threads]
+
+use bitnet::kernels::QuantType;
+use bitnet::model::{ModelConfig, Transformer};
+use std::time::Instant;
+
+fn main() {
+    let threads: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    println!("# Table 7 (direct end-to-end anchor) — {threads} threads");
+    println!("{:<7} {:<8} {:>12} {:>14}", "size", "kernel", "tok/s", "MB/token");
+    for cfg in [ModelConfig::tiny(), ModelConfig::m100()] {
+        let ck = bitnet::model::weights::Checkpoint::synthetic(&cfg, 1);
+        for qt in QuantType::TABLE7 {
+            let model = Transformer::from_checkpoint(&ck, qt, threads);
+            let mut session = model.new_session(128);
+            let mut logits = model.prefill(&mut session, &[1, 2, 3]);
+            // Warm + measure decode steps.
+            let n = if cfg.hidden > 512 { 12 } else { 48 };
+            let t0 = Instant::now();
+            for _ in 0..n {
+                let tok = bitnet::model::sampling::argmax(&logits);
+                logits = model.decode_step(&mut session, tok);
+            }
+            let tps = n as f64 / t0.elapsed().as_secs_f64();
+            println!(
+                "{:<7} {:<8} {:>12.2} {:>14.2}",
+                cfg.name,
+                qt.name(),
+                tps,
+                model.weight_bytes_per_token() as f64 / 1e6
+            );
+        }
+    }
+}

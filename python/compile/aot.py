@@ -1,0 +1,124 @@
+"""AOT pipeline: lower the Layer-2 JAX functions (with the Layer-1 Pallas
+kernel inlined, interpret=True) to **HLO text** and write the artifact
+bundle the Rust runtime loads:
+
+    artifacts/ternary_matmul.hlo.txt   the mpGEMM kernel alone
+    artifacts/bitnet_ffn.hlo.txt       SwiGLU FFN decode row
+    artifacts/bitnet_block.hlo.txt     full block decode step
+    artifacts/manifest.toml            input shapes per artifact
+
+HLO text (NOT HloModuleProto.serialize()) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Run via `make artifacts`:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Tiny-model geometry — must match ModelConfig::tiny() in rust/src/model/config.rs.
+H, F, T = 256, 768, 64
+N_HEADS, N_KV_HEADS = 4, 2
+KV = N_KV_HEADS * (H // N_HEADS)
+# Kernel-artifact geometry.
+KM, KK = 256, 768
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.float32)
+
+
+def i32(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.int32)
+
+
+def build_artifacts():
+    """(name, lowered, input-shape spec) triples."""
+    arts = []
+
+    # 1. The mpGEMM kernel: out = ternary_matmul(x, w, w_scale).
+    def matmul_fn(x, w):
+        return (model.ternary_matmul(x, w, 0.05),)
+
+    arts.append((
+        "ternary_matmul",
+        jax.jit(matmul_fn).lower(f32(KK), f32(KM, KK)),
+        f"{KK};{KM}x{KK}",
+    ))
+
+    # 2. FFN decode row.
+    def ffn_fn(x, w_gate, w_up, w_down, gain):
+        return (model.bitnet_ffn(x, w_gate, w_up, w_down, 0.05, gain),)
+
+    arts.append((
+        "bitnet_ffn",
+        jax.jit(ffn_fn).lower(f32(H), f32(F, H), f32(F, H), f32(H, F), f32(H)),
+        f"{H};{F}x{H};{F}x{H};{H}x{F};{H}",
+    ))
+
+    # 3. Full block decode step.
+    block = functools.partial(model.bitnet_block, n_heads=N_HEADS, n_kv_heads=N_KV_HEADS)
+
+    def block_fn(x, k_cache, v_cache, pos, wq, wk, wv, wo, w_gate, w_up, w_down,
+                 attn_gain, ffn_gain):
+        return block(x, k_cache, v_cache, pos, wq, wk, wv, wo, w_gate, w_up,
+                     w_down, 0.05, attn_gain, ffn_gain)
+
+    arts.append((
+        "bitnet_block",
+        jax.jit(block_fn).lower(
+            f32(H), f32(T, KV), f32(T, KV), i32(),
+            f32(H, H), f32(KV, H), f32(KV, H), f32(H, H),
+            f32(F, H), f32(F, H), f32(H, F), f32(H), f32(H),
+        ),
+        f"{H};{T}x{KV};{T}x{KV};1;{H}x{H};{KV}x{H};{KV}x{H};{H}x{H};{F}x{H};{F}x{H};{H}x{F};{H};{H}",
+    ))
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    # kept for Makefile compatibility; --out names the primary artifact
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = []
+    for name, lowered, shapes in build_artifacts():
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"[{name}]\ninputs = \"{shapes}\"\n")
+        print(f"wrote {path} ({len(text)} chars)")
+    # Legacy single-artifact name expected by the original Makefile target.
+    if args.out:
+        import shutil
+        shutil.copy(os.path.join(out_dir, "bitnet_block.hlo.txt"), args.out)
+    with open(os.path.join(out_dir, "manifest.toml"), "w") as f:
+        f.write("\n".join(manifest))
+    print(f"wrote {os.path.join(out_dir, 'manifest.toml')}")
+
+
+if __name__ == "__main__":
+    main()

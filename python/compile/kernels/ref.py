@@ -1,0 +1,120 @@
+"""Pure-jnp oracle for the ternary mpGEMM kernel.
+
+Reproduces the BitNet b1.58 training-scheme computation exactly (the
+paper's "lossless" semantics, Figure 2):
+
+* per-tensor int8 activation quantization, ``s = 127 / max|x|``;
+* ternary weights with one per-tensor scale;
+* integer accumulation, one combined rescale at the end.
+
+Rounding note: Rust's ``f32::round`` is round-half-away-from-zero while
+``jnp.round`` is round-half-to-even. The Rust L3 kernels are the reference
+implementation, so this module (and therefore the AOT artifacts) uses
+half-away rounding to stay bit-compatible across the language boundary.
+"""
+
+import jax.numpy as jnp
+
+GROUP = 3  # element-wise group size g used by the TL2-style kernel
+HALF_TABLE = 14  # mirror-consolidated table entries for C=3, g=3 (27//2+1)
+
+
+def round_half_away(x):
+    """Round half away from zero (Rust f32::round semantics)."""
+    return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+
+
+def quantize_act_int8(x):
+    """Per-tensor int8 activation quantization (BitNet b1.58 scheme).
+
+    Returns (xq_as_f32, scale) with ``x ~= xq / scale``. Values stay in an
+    f32 array (exact for |v| <= 127) so the artifact runs on any PJRT
+    backend without int8 support.
+    """
+    max_abs = jnp.maximum(jnp.max(jnp.abs(x)), 1e-5)
+    scale = 127.0 / max_abs
+    xq = jnp.clip(round_half_away(x * scale), -127.0, 127.0)
+    return xq, scale
+
+
+def ternary_matmul_ref(x, w, w_scale):
+    """Reference mpGEMM: ``out[m] = sum_k x[k]*(w[m,k]*w_scale)`` through
+    the training-scheme integer path.
+
+    x: f32[K] raw activations; w: f32[M,K] ternary values in {-1,0,1};
+    w_scale: python float or 0-d array. Returns f32[M].
+    """
+    xq, s = quantize_act_int8(x)
+    acc = w @ xq  # integer values held in f32: |acc| <= K*127 < 2^24
+    return acc * (w_scale / s)
+
+
+def dense_matmul_ref(x, w, w_scale):
+    """Loose float reference (no activation quantization)."""
+    return (w * w_scale) @ x
+
+
+# ---- TL2-style element-wise LUT decomposition (Phase 1 of Algorithm 2) ----
+
+def _enumeration_matrix():
+    """U[i, j]: weight value of digit j in positive-half code i (paper
+    Table 6 order): code = mirror_join(0, i) over base-3 digits.
+
+    Built from iota ops rather than a dense literal: the HLO-text printer
+    elides array constants ("constant({...})"), which xla_extension
+    0.5.1's parser silently reads as zeros — iota survives the text
+    round-trip (see DESIGN.md #Substitutions).
+    """
+    mid = 13
+    codes = jnp.arange(HALF_TABLE, dtype=jnp.int32) + mid  # (14,)
+    power = jnp.array([9, 3, 1], dtype=jnp.int32)  # 3^(GROUP-1-j), tiny constant
+    digits = (codes[:, None] // power[None, :]) % 3 - 1
+    return digits.astype(jnp.float32)  # (14, 3)
+
+
+ENUM_U = _enumeration_matrix()
+
+
+def build_lut(xq):
+    """Phase 1: enumerate the 14 positive-half group sums per activation
+    group — on TPU this is a small MXU matmul, the vpshufb-table analogue
+    (DESIGN.md section Hardware-Adaptation).
+
+    xq: f32[K] quantized activations, K % 3 == 0.
+    Returns f32[K/3, 14].
+    """
+    groups = xq.reshape(-1, GROUP)  # (K/3, 3)
+    # Build the enumeration matrix inside the trace (as iota ops), not as
+    # a captured constant: large dense literals are elided by the HLO-text
+    # printer and read back as zeros by xla_extension 0.5.1.
+    return groups @ _enumeration_matrix().T  # (K/3, 14)
+
+
+def encode_weights(w):
+    """Split ternary weights into (index, sign) planes — signed-unsigned
+    weight splitting (paper Fig. 5).
+
+    w: f32[M, K] ternary, K % 3 == 0.
+    Returns idx i32[M, K/3] in [0, 14), sign f32[M, K/3] in {-1, +1}.
+    """
+    m, k = w.shape
+    trios = w.reshape(m, k // GROUP, GROUP)
+    code = ((trios[..., 0] + 1) * 9 + (trios[..., 1] + 1) * 3 + (trios[..., 2] + 1)).astype(
+        jnp.int32
+    )
+    mid = 13
+    sign = jnp.where(code >= mid, 1.0, -1.0).astype(jnp.float32)
+    idx = jnp.abs(code - mid)
+    return idx, sign
+
+
+def lut_matmul_ref(x, w, w_scale):
+    """The same training-scheme result computed through the LUT
+    decomposition (pure jnp — the Pallas kernel must match this AND
+    ternary_matmul_ref bit-for-bit)."""
+    xq, s = quantize_act_int8(x)
+    lut = build_lut(xq)  # (K/3, 14)
+    idx, sign = encode_weights(w)  # (M, K/3)
+    vals = jnp.take_along_axis(lut[None, :, :], idx[:, :, None], axis=2)[..., 0]
+    acc = jnp.sum(sign * vals, axis=1)
+    return acc * (w_scale / s)

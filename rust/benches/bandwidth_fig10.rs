@@ -1,0 +1,39 @@
+//! Paper Figure 10: token throughput and achieved memory bandwidth,
+//! side-by-side, as threads scale (PCM stand-in: bandwidth derived from
+//! bytes the kernel must stream / measured step time, plus a STREAM-style
+//! ceiling measurement).
+
+use bitnet::kernels::QuantType;
+use bitnet::model::ModelConfig;
+use bitnet::perf::bandwidth::stream_read_gbps;
+use bitnet::perf::calibrate::{calibrate_kernel, tokens_per_second};
+use bitnet::threadpool::ThreadPool;
+
+fn main() {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let max_threads: usize = std::env::var("BENCH_MAX_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| cores.min(8));
+    let fast = std::env::var("BENCH_FAST").is_ok();
+    let (m, k) = if fast { (2048, 2048) } else { (8192, 8192) };
+    let cfg = ModelConfig::b700m(); // paper uses bitnet-b1.58-large (~700M)
+    println!("# Figure 10 reproduction — I2_S on {} shapes", cfg.name);
+    println!(
+        "{:>7} {:>12} {:>16} {:>16}",
+        "threads", "tokens/s", "achieved GB/s", "STREAM GB/s"
+    );
+    for t in 1..=max_threads {
+        let pool = ThreadPool::new(t);
+        let r = calibrate_kernel(QuantType::I2S, m, k, &pool, 2);
+        let f16 = calibrate_kernel(QuantType::F16, m / 4, k, &pool, 2);
+        let tps = tokens_per_second(&cfg, &r, &f16, 0.0);
+        let stream = stream_read_gbps(&pool, if fast { 64 } else { 256 }, 3);
+        println!(
+            "{t:>7} {tps:>12.2} {:>16.2} {stream:>16.2}",
+            r.weight_bytes_per_s / 1e9
+        );
+    }
+    println!("# expected shape: tokens/s and achieved GB/s curves rise together and");
+    println!("# flatten at the same thread count — throughput is bandwidth-limited.");
+}

@@ -1,0 +1,49 @@
+//! Raw kernel GEMV sweep: every kernel × a ladder of matmul shapes (the
+//! per-projection shapes behind Table 7). The generic profiling entry
+//! point for the §Perf optimization loop.
+
+use bitnet::kernels::quant::TernaryWeights;
+use bitnet::kernels::{kernel_for, QuantType};
+use bitnet::perf::bench::{bench, black_box};
+use bitnet::util::Rng;
+use std::time::Duration;
+
+fn main() {
+    let fast = std::env::var("BENCH_FAST").is_ok();
+    let shapes: &[(usize, usize)] =
+        if fast { &[(1024, 1024)] } else { &[(1024, 1024), (4096, 4096), (8704, 3328)] };
+    println!("# kernel GEMV sweep (single thread)");
+    println!("{:<9} {:>12} {:>12} {:>14} {:>12}", "kernel", "M", "K", "µs/GEMV", "Gweight/s");
+    for &(m, k) in shapes {
+        let mut rng = Rng::new(3);
+        let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+        let t = TernaryWeights::from_ternary(q, m, k, 0.05);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        for qt in QuantType::ALL {
+            let kern = kernel_for(qt);
+            if k % kern.info().k_multiple != 0 {
+                continue;
+            }
+            let packed = kern.quantize(&t);
+            let p = kern.prepare(&x, k);
+            let mut out = vec![0f32; m];
+            let r = bench(
+                kern.info().name,
+                Duration::from_millis(30),
+                Duration::from_millis(if fast { 100 } else { 250 }),
+                || {
+                    kern.gemv(&packed, &p, &mut out);
+                    black_box(&out);
+                },
+            );
+            println!(
+                "{:<9} {:>12} {:>12} {:>14.1} {:>12.3}",
+                kern.info().name,
+                m,
+                k,
+                r.seconds.mean * 1e6,
+                (m * k) as f64 / r.seconds.mean / 1e9
+            );
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Paper Table 2: end-to-end inference quality per kernel vs the
+//! full-precision path — perplexity on a deterministic token stream and
+//! accuracy on two synthetic cloze tasks (WinoGrande/HellaSwag stand-ins;
+//! see DESIGN.md §Substitutions: the table's *claim* is equality to the
+//! reference, which is corpus-independent).
+
+use bitnet::eval::{cloze_choice, eval_token_stream, perplexity, synthetic_cloze_set};
+use bitnet::kernels::QuantType;
+use bitnet::model::{ModelConfig, Transformer};
+
+fn main() {
+    let cfg = ModelConfig::tiny();
+    let tokens = eval_token_stream(cfg.vocab_size, 96, 1);
+    let cloze_a = synthetic_cloze_set(cfg.vocab_size, 24, 2);
+    let cloze_b = synthetic_cloze_set(cfg.vocab_size, 24, 3);
+
+    // The full-precision reference path (paper's Float16 row): F32 MAD.
+    let reference = Transformer::synthetic(&cfg, QuantType::F32, 7);
+    let ref_ppl = perplexity(&reference, &tokens);
+    let ref_a: Vec<usize> = cloze_a.iter().map(|it| cloze_choice(&reference, it)).collect();
+    let ref_b: Vec<usize> = cloze_b.iter().map(|it| cloze_choice(&reference, it)).collect();
+
+    println!("# Table 2 reproduction (synthetic corpus; agreement vs full-precision path)");
+    println!(
+        "{:<9} {:>11} {:>10} {:>10}  note",
+        "Method", "Perplexity", "ClozeA %", "ClozeB %"
+    );
+    let kernels = [
+        QuantType::F32,
+        QuantType::Q40,
+        QuantType::Tl10,
+        QuantType::Tl20,
+        QuantType::Tl11,
+        QuantType::Tl21,
+        QuantType::I2S,
+    ];
+    // Separately compute the integer reference once (I2_S) for the
+    // losslessness note.
+    let int_ref_ppl = perplexity(&Transformer::synthetic(&cfg, QuantType::I2S, 7), &tokens);
+    for qt in kernels {
+        let model = Transformer::synthetic(&cfg, qt, 7);
+        let ppl = perplexity(&model, &tokens);
+        let acc = |items: &[bitnet::eval::ClozeItem], refs: &[usize]| {
+            let agree = items
+                .iter()
+                .zip(refs)
+                .filter(|(it, &r)| cloze_choice(&model, it) == r)
+                .count();
+            100.0 * agree as f64 / items.len() as f64
+        };
+        let note = if ppl == int_ref_ppl && qt != QuantType::I2S {
+            "lossless (== I2_S bitwise)"
+        } else if qt == QuantType::I2S {
+            "training-scheme reference"
+        } else {
+            ""
+        };
+        println!(
+            "{:<9} {:>11.4} {:>10.1} {:>10.1}  {}",
+            qt.name(),
+            ppl,
+            acc(&cloze_a, &ref_a),
+            acc(&cloze_b, &ref_b),
+            note
+        );
+    }
+    println!("# Float16-path reference perplexity: {ref_ppl:.4}");
+}

@@ -1,0 +1,48 @@
+//! Paper Figure 11: hypothetical SIMD register length vs raw lookup
+//! latency. Emulates W-byte shuffles for W ∈ {16, 32, 64, 128} and
+//! reports per-lookup latency plus the group size g each width enables
+//! (C^g/2 entries ≤ W) and the resulting accumulation-complexity factor.
+
+use bitnet::perf::bench::{bench_quick, black_box};
+use bitnet::perf::simd::shuffle_w;
+
+const N: usize = 4096;
+
+fn run<const W: usize>() -> (usize, f64) {
+    let tables: Vec<i8> = (0..W).map(|i| (i % 16) as i8 - 8).collect();
+    let idxs: Vec<[u8; W]> = (0..N)
+        .map(|j| core::array::from_fn(|i| ((i * 13 + j) % 16) as u8))
+        .collect();
+    let r = bench_quick(&format!("shuffle_w<{W}>"), || {
+        let mut acc = 0i32;
+        for idx in &idxs {
+            let v = shuffle_w::<W>(&tables, idx);
+            acc = acc.wrapping_add(v[0] as i32 + v[W - 1] as i32);
+        }
+        black_box(acc);
+    });
+    (W, r.seconds.mean / N as f64 * 1e9)
+}
+
+fn main() {
+    println!("# Figure 11 reproduction — emulated register width vs lookup latency");
+    println!(
+        "{:>7} {:>12} {:>12} {:>6} {:>18}",
+        "W bytes", "ns/lookup", "ns/byte", "max g", "accum ops ∝ 1/g"
+    );
+    let results = [run::<16>(), run::<32>(), run::<64>(), run::<128>()];
+    for (w, ns) in results {
+        // Largest g with ceil(3^g/2) ≤ 16·(w/16) table entries.
+        let mut g = 1usize;
+        while 3usize.pow((g + 1) as u32) / 2 + 1 <= w {
+            g += 1;
+        }
+        println!(
+            "{w:>7} {ns:>12.3} {:>12.4} {g:>6} {:>18.3}",
+            ns / w as f64,
+            1.0 / g as f64
+        );
+    }
+    println!("# expected shape: ns/lookup grows sub-linearly with W while max g grows,");
+    println!("# so wider registers reduce total accumulation work until C^g ≈ M (§C.3).");
+}

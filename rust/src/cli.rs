@@ -1,0 +1,104 @@
+//! Minimal argument parser (clap is unavailable offline): subcommands,
+//! `--flag value` options and positional arguments.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Declared option for help text.
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+impl Args {
+    /// Parse argv (past the program name). The first non-flag token is the
+    /// subcommand; `--name value` pairs become options unless `name` is in
+    /// `bool_flags`.
+    pub fn parse<I: Iterator<Item = String>>(argv: I, bool_flags: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if bool_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let Some(val) = it.next() else {
+                        bail!("option --{name} expects a value");
+                    };
+                    out.options.insert(name.to_string(), val);
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> impl Iterator<Item = String> + '_ {
+        s.split_whitespace().map(|t| t.to_string())
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(argv("serve --kernel TL2_0 --threads 4 --verbose extra"), &["verbose"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("kernel"), Some("TL2_0"));
+        assert_eq!(a.get_usize("threads", 1).unwrap(), 4);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(argv("run --kernel"), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_integer_errors() {
+        let a = Args::parse(argv("run --threads abc"), &[]).unwrap();
+        assert!(a.get_usize("threads", 1).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(argv("bench"), &[]).unwrap();
+        assert_eq!(a.get_or("kernel", "I2_S"), "I2_S");
+        assert_eq!(a.get_usize("threads", 2).unwrap(), 2);
+    }
+}

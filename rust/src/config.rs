@@ -1,0 +1,250 @@
+//! Configuration system: a TOML-subset parser (no external crates are
+//! available offline) plus typed launcher configs.
+//!
+//! Supported syntax: `[section]` headers, `key = value` pairs, `#`
+//! comments, values of type string (`"..."`), integer, float and bool.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: `section.key → value` (top-level keys use section "").
+#[derive(Debug, Default)]
+pub struct Config {
+    values: HashMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = HashMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            values.insert(full, parse_value(val.trim(), lineno + 1)?);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(|v| v.as_str().map(|s| s.to_string())).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_int()).map(|i| i as usize).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_float()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .with_context(|| format!("line {lineno}: unterminated string"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("line {lineno}: cannot parse value {s:?}")
+}
+
+/// Launcher-level configuration (CLI `--config engine.toml`).
+#[derive(Clone, Debug)]
+pub struct LaunchConfig {
+    pub model_preset: String,
+    pub model_path: Option<String>,
+    pub kernel: String,
+    pub threads: usize,
+    pub max_batch: usize,
+    pub kv_budget_tokens: usize,
+    pub seed: u64,
+}
+
+impl Default for LaunchConfig {
+    fn default() -> Self {
+        LaunchConfig {
+            model_preset: "tiny".into(),
+            model_path: None,
+            kernel: "I2_S".into(),
+            threads: 1,
+            max_batch: 8,
+            kv_budget_tokens: 8192,
+            seed: 0,
+        }
+    }
+}
+
+impl LaunchConfig {
+    pub fn from_config(cfg: &Config) -> LaunchConfig {
+        let d = LaunchConfig::default();
+        LaunchConfig {
+            model_preset: cfg.get_str("model.preset", &d.model_preset),
+            model_path: cfg.get("model.path").and_then(|v| v.as_str().map(|s| s.to_string())),
+            kernel: cfg.get_str("model.kernel", &d.kernel),
+            threads: cfg.get_usize("engine.threads", d.threads),
+            max_batch: cfg.get_usize("engine.max_batch", d.max_batch),
+            kv_budget_tokens: cfg.get_usize("engine.kv_budget_tokens", d.kv_budget_tokens),
+            seed: cfg.get_usize("engine.seed", d.seed as usize) as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# engine config
+[model]
+preset = "3.8B"
+kernel = "TL2_0"   # the headline kernel
+
+[engine]
+threads = 8
+max_batch = 16
+kv_budget_tokens = 32768
+temperature = 0.7
+stream = true
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.get_str("model.preset", ""), "3.8B");
+        assert_eq!(cfg.get_str("model.kernel", ""), "TL2_0");
+        assert_eq!(cfg.get_usize("engine.threads", 0), 8);
+        assert_eq!(cfg.get_f64("engine.temperature", 0.0), 0.7);
+        assert!(cfg.get_bool("engine.stream", false));
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let cfg = Config::parse("").unwrap();
+        assert_eq!(cfg.get_usize("engine.threads", 4), 4);
+        assert!(cfg.is_empty());
+    }
+
+    #[test]
+    fn launch_config_mapping() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        let lc = LaunchConfig::from_config(&cfg);
+        assert_eq!(lc.model_preset, "3.8B");
+        assert_eq!(lc.kernel, "TL2_0");
+        assert_eq!(lc.max_batch, 16);
+        assert_eq!(lc.kv_budget_tokens, 32768);
+    }
+
+    #[test]
+    fn comments_inside_strings_survive() {
+        let cfg = Config::parse(r##"key = "a # not comment""##).unwrap();
+        assert_eq!(cfg.get_str("key", ""), "a # not comment");
+    }
+
+    #[test]
+    fn bad_syntax_errors() {
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("x = @@@").is_err());
+    }
+}

@@ -1,0 +1,363 @@
+//! The serving engine: one background thread owns the model, sessions and
+//! scheduler; clients submit requests over a channel and stream token
+//! events back. Decode runs as one batched GEMM per step over every
+//! running sequence (continuous batching), prefill is chunked per admitted
+//! request — the standard split the paper's serving setting assumes.
+
+use super::kv_pool::KvPool;
+use super::request::{Event, FinishReason, Request, RequestHandle, RequestStats};
+use super::scheduler::{Phase, Scheduler, SeqState};
+use crate::metrics::EngineMetrics;
+use crate::model::{sample, Session, Transformer};
+use crate::util::Rng;
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Maximum sequences decoded per step.
+    pub max_batch: usize,
+    /// Total KV token budget across sequences.
+    pub kv_budget_tokens: usize,
+    /// EOS token id for `stop_on_eos`.
+    pub eos_token: u32,
+    /// Sampling RNG seed (deterministic serving runs).
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { max_batch: 8, kv_budget_tokens: 8192, eos_token: 1, seed: 0 }
+    }
+}
+
+enum Command {
+    Submit(u64, Request, Sender<Event>),
+    Shutdown,
+}
+
+/// Public engine handle (cheap to clone submissions through).
+pub struct Engine {
+    cmd: Sender<Command>,
+    next_id: std::sync::atomic::AtomicU64,
+    pub metrics: Arc<EngineMetrics>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Start the engine thread around a packed model.
+    pub fn start(model: Transformer, config: EngineConfig) -> Engine {
+        let (tx, rx) = channel();
+        let metrics = Arc::new(EngineMetrics::new());
+        let m2 = Arc::clone(&metrics);
+        let worker = std::thread::Builder::new()
+            .name("bitnet-engine".into())
+            .spawn(move || run_loop(model, config, rx, m2))
+            .expect("spawn engine thread");
+        Engine { cmd: tx, next_id: 0.into(), metrics, worker: Some(worker) }
+    }
+
+    /// Submit a request; returns a streaming handle.
+    pub fn submit(&self, req: Request) -> RequestHandle {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        self.metrics.requests_submitted.fetch_add(1, Ordering::Relaxed);
+        // If the engine is gone the receiver hangs up immediately, which
+        // RequestHandle::wait maps to Cancelled.
+        let _ = self.cmd.send(Command::Submit(id, req, tx));
+        RequestHandle { id, events: rx }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.cmd.send(Command::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Engine-side per-request state.
+struct Live {
+    session: Session,
+    req: Request,
+    events: Sender<Event>,
+    submitted: Instant,
+    prefilled_at: Option<Instant>,
+    last_token: u32,
+    generated: Vec<u32>,
+}
+
+fn run_loop(
+    model: Transformer,
+    config: EngineConfig,
+    rx: Receiver<Command>,
+    metrics: Arc<EngineMetrics>,
+) {
+    let mut pool = KvPool::new(config.kv_budget_tokens);
+    let mut scheduler = Scheduler::new(config.max_batch);
+    let mut live: HashMap<u64, Live> = HashMap::new();
+    let mut rng = Rng::new(config.seed);
+
+    'outer: loop {
+        // Drain commands. Block when idle (no running/waiting work).
+        let idle = scheduler.running_len() == 0 && scheduler.waiting_len() == 0;
+        loop {
+            let cmd = if idle && live.is_empty() {
+                match rx.recv() {
+                    Ok(c) => c,
+                    Err(_) => break 'outer,
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(c) => c,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => break 'outer,
+                }
+            };
+            match cmd {
+                Command::Shutdown => break 'outer,
+                Command::Submit(id, req, events) => {
+                    let prompt_len = req.prompt.len().max(1);
+                    let seq = SeqState {
+                        id,
+                        prompt_len,
+                        max_new_tokens: req.max_new_tokens,
+                        generated: 0,
+                        phase: Phase::Waiting,
+                    };
+                    if req.prompt.is_empty() || !scheduler.submit(seq, &pool) {
+                        metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
+                        let _ = events.send(Event::Done {
+                            request_id: id,
+                            reason: FinishReason::Rejected,
+                            stats: RequestStats::default(),
+                        });
+                        continue;
+                    }
+                    metrics.prompt_tokens.fetch_add(prompt_len as u64, Ordering::Relaxed);
+                    let session = model.new_session(prompt_len + req.max_new_tokens);
+                    live.insert(
+                        id,
+                        Live {
+                            session,
+                            req,
+                            events,
+                            submitted: Instant::now(),
+                            prefilled_at: None,
+                            last_token: 0,
+                            generated: Vec::new(),
+                        },
+                    );
+                }
+            }
+            if idle {
+                break; // got one command while idle; re-plan
+            }
+        }
+
+        let plan = scheduler.step(&mut pool);
+        if plan.prefill.is_empty() && plan.decode.is_empty() {
+            continue;
+        }
+
+        // Prefill newly admitted requests (chunked prompt GEMM); the first
+        // sampled token comes from the prefill logits.
+        for id in &plan.prefill {
+            let l = live.get_mut(id).expect("live entry for admitted seq");
+            let logits = model.prefill(&mut l.session, &l.req.prompt.clone());
+            let tok = sample(&logits, &l.req.sampling, &mut rng);
+            l.prefilled_at = Some(Instant::now());
+            metrics.ttft.record(l.submitted.elapsed());
+            l.last_token = tok;
+            l.generated.push(tok);
+            let _ = l.events.send(Event::Token { request_id: *id, token: tok });
+            scheduler.on_token(*id);
+            metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
+        }
+
+        // Retire sequences that already hit a stop condition.
+        let mut finished: Vec<(u64, FinishReason)> = Vec::new();
+        for id in &plan.decode {
+            let l = &live[id];
+            if l.generated.len() >= l.req.max_new_tokens {
+                finished.push((*id, FinishReason::Length));
+            } else if l.req.stop_on_eos && l.last_token == config.eos_token {
+                finished.push((*id, FinishReason::Eos));
+            }
+        }
+        let decode_ids: Vec<u64> =
+            plan.decode.iter().copied().filter(|id| !finished.iter().any(|(f, _)| f == id)).collect();
+
+        // Batched decode step over every still-running sequence.
+        if !decode_ids.is_empty() {
+            let t0 = Instant::now();
+            let tokens: Vec<u32> = decode_ids.iter().map(|id| live[id].last_token).collect();
+            // Pull the sessions out to satisfy the borrow checker, then
+            // reinstall (cheap: Session is a couple of Vecs moved by ptr).
+            let mut entries: Vec<(u64, &mut Live)> = live
+                .iter_mut()
+                .filter(|(id, _)| decode_ids.contains(id))
+                .map(|(id, l)| (*id, l))
+                .collect();
+            entries.sort_by_key(|(id, _)| decode_ids.iter().position(|d| d == id).unwrap());
+            let mut sessions: Vec<&mut Session> =
+                entries.iter_mut().map(|(_, l)| &mut l.session).collect();
+            let logits = model.decode_batch(&mut sessions, &tokens);
+            drop(sessions);
+            metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+            metrics.batched_tokens.fetch_add(decode_ids.len() as u64, Ordering::Relaxed);
+            metrics.step_latency.record(t0.elapsed());
+
+            for ((id, l), lg) in entries.into_iter().zip(logits.iter()) {
+                let tok = sample(lg, &l.req.sampling, &mut rng);
+                l.last_token = tok;
+                l.generated.push(tok);
+                let _ = l.events.send(Event::Token { request_id: id, token: tok });
+                scheduler.on_token(id);
+                metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+
+        // Emit completions.
+        for (id, reason) in finished {
+            scheduler.finish(id, &mut pool);
+            if let Some(l) = live.remove(&id) {
+                let stats = RequestStats {
+                    queue_wait: l
+                        .prefilled_at
+                        .map(|t| t.duration_since(l.submitted))
+                        .unwrap_or_default(),
+                    ttft: l
+                        .prefilled_at
+                        .map(|t| t.duration_since(l.submitted))
+                        .unwrap_or_default(),
+                    prompt_tokens: l.req.prompt.len(),
+                    new_tokens: l.generated.len(),
+                    total: l.submitted.elapsed(),
+                };
+                metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+                let _ = l.events.send(Event::Done { request_id: id, reason, stats });
+            }
+        }
+    }
+
+    // Shutdown: cancel everything still live.
+    for (id, l) in live {
+        let _ = l.events.send(Event::Done {
+            request_id: id,
+            reason: FinishReason::Cancelled,
+            stats: RequestStats::default(),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::QuantType;
+    use crate::model::{ModelConfig, SamplingParams};
+
+    fn tiny_engine(max_batch: usize) -> Engine {
+        let model = Transformer::synthetic(&ModelConfig::tiny(), QuantType::I2S, 3);
+        Engine::start(
+            model,
+            EngineConfig { max_batch, kv_budget_tokens: 2048, eos_token: 1, seed: 7 },
+        )
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let engine = tiny_engine(4);
+        let h = engine.submit(Request::greedy(vec![5, 6, 7], 8));
+        let (tokens, reason, stats) = h.wait();
+        assert_eq!(tokens.len(), 8);
+        assert_eq!(reason, FinishReason::Length);
+        assert_eq!(stats.prompt_tokens, 3);
+        assert_eq!(stats.new_tokens, 8);
+    }
+
+    #[test]
+    fn greedy_is_deterministic_across_engines() {
+        let a = {
+            let engine = tiny_engine(4);
+            engine.submit(Request::greedy(vec![9, 9, 9], 6)).wait().0
+        };
+        let b = {
+            let engine = tiny_engine(4);
+            engine.submit(Request::greedy(vec![9, 9, 9], 6)).wait().0
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn concurrent_requests_all_complete() {
+        let engine = tiny_engine(3);
+        let handles: Vec<_> = (0..6)
+            .map(|i| engine.submit(Request::greedy(vec![i as u32 + 1, 2, 3], 5)))
+            .collect();
+        for h in handles {
+            let (tokens, reason, _) = h.wait();
+            assert_eq!(tokens.len(), 5);
+            assert_eq!(reason, FinishReason::Length);
+        }
+        assert!(engine.metrics.mean_batch() > 1.0, "batching should engage");
+    }
+
+    #[test]
+    fn batched_output_matches_sequential_output() {
+        // Continuous batching must not change greedy outputs.
+        let prompts: Vec<Vec<u32>> = vec![vec![4, 5], vec![6, 7, 8], vec![100]];
+        let sequential: Vec<Vec<u32>> = {
+            let engine = tiny_engine(1); // batch of 1 → sequential
+            prompts
+                .iter()
+                .map(|p| engine.submit(Request::greedy(p.clone(), 6)).wait().0)
+                .collect()
+        };
+        let engine = tiny_engine(4);
+        let handles: Vec<_> =
+            prompts.iter().map(|p| engine.submit(Request::greedy(p.clone(), 6))).collect();
+        let batched: Vec<Vec<u32>> = handles.into_iter().map(|h| h.wait().0).collect();
+        assert_eq!(sequential, batched);
+    }
+
+    #[test]
+    fn oversized_prompt_is_rejected() {
+        let model = Transformer::synthetic(&ModelConfig::tiny(), QuantType::I2S, 3);
+        let engine = Engine::start(
+            model,
+            EngineConfig { max_batch: 2, kv_budget_tokens: 64, eos_token: 1, seed: 0 },
+        );
+        let h = engine.submit(Request::greedy((0..100).collect(), 50));
+        let (_, reason, _) = h.wait();
+        assert_eq!(reason, FinishReason::Rejected);
+    }
+
+    #[test]
+    fn empty_prompt_is_rejected() {
+        let engine = tiny_engine(2);
+        let (_, reason, _) = engine.submit(Request::greedy(vec![], 4)).wait();
+        assert_eq!(reason, FinishReason::Rejected);
+    }
+
+    #[test]
+    fn sampled_generation_stays_in_vocab() {
+        let engine = tiny_engine(2);
+        let req = Request {
+            prompt: vec![1, 2],
+            max_new_tokens: 12,
+            sampling: SamplingParams { temperature: 1.0, top_k: 50, top_p: 0.95 },
+            stop_on_eos: false,
+        };
+        let (tokens, _, _) = engine.submit(req).wait();
+        assert_eq!(tokens.len(), 12);
+        assert!(tokens.iter().all(|&t| (t as usize) < 512));
+    }
+}

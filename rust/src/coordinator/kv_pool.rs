@@ -1,0 +1,158 @@
+//! Paged KV-cache accounting (vLLM-style block allocator).
+//!
+//! The pool divides the engine's KV budget into fixed-size pages of
+//! [`PAGE_TOKENS`] tokens and tracks which sequence holds which pages.
+//! The scheduler admits a request only when its worst-case page demand
+//! (prompt + max_new_tokens) fits — preventing mid-decode OOM-evictions.
+//! Sessions grow page-by-page as they decode, so freed capacity from
+//! finished sequences is immediately reusable (continuous batching).
+
+use std::collections::HashMap;
+
+/// Tokens per KV page.
+pub const PAGE_TOKENS: usize = 16;
+
+/// Page-granular KV budget manager.
+pub struct KvPool {
+    total_pages: usize,
+    free_pages: Vec<u32>,
+    /// seq id → held pages.
+    held: HashMap<u64, Vec<u32>>,
+    /// High-water mark for metrics.
+    peak_used: usize,
+}
+
+impl KvPool {
+    /// Pool sized for `max_tokens` total KV tokens across all sequences.
+    pub fn new(max_tokens: usize) -> KvPool {
+        let total_pages = max_tokens / PAGE_TOKENS;
+        KvPool {
+            total_pages,
+            free_pages: (0..total_pages as u32).rev().collect(),
+            held: HashMap::new(),
+            peak_used: 0,
+        }
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
+    }
+
+    pub fn free_page_count(&self) -> usize {
+        self.free_pages.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.total_pages - self.free_pages.len()
+    }
+
+    pub fn peak_used_pages(&self) -> usize {
+        self.peak_used
+    }
+
+    /// Pages needed to hold `tokens` tokens.
+    pub fn pages_for(tokens: usize) -> usize {
+        crate::util::ceil_div(tokens, PAGE_TOKENS)
+    }
+
+    /// Can a sequence with this worst-case token demand be admitted now?
+    pub fn can_admit(&self, worst_case_tokens: usize) -> bool {
+        Self::pages_for(worst_case_tokens) <= self.free_pages.len()
+    }
+
+    /// Reserve pages for `seq` to cover `tokens` tokens total (idempotent
+    /// growth: only the delta beyond current holdings is allocated).
+    /// Returns false (no change) if the pool cannot satisfy the demand.
+    pub fn reserve(&mut self, seq: u64, tokens: usize) -> bool {
+        let want = Self::pages_for(tokens);
+        let have = self.held.get(&seq).map_or(0, |v| v.len());
+        if want <= have {
+            return true;
+        }
+        let need = want - have;
+        if need > self.free_pages.len() {
+            return false;
+        }
+        let entry = self.held.entry(seq).or_default();
+        for _ in 0..need {
+            entry.push(self.free_pages.pop().unwrap());
+        }
+        self.peak_used = self.peak_used.max(self.total_pages - self.free_pages.len());
+        true
+    }
+
+    /// Release all pages held by `seq`.
+    pub fn release(&mut self, seq: u64) {
+        if let Some(pages) = self.held.remove(&seq) {
+            self.free_pages.extend(pages);
+        }
+    }
+
+    /// Pages held by `seq`.
+    pub fn held_pages(&self, seq: u64) -> usize {
+        self.held.get(&seq).map_or(0, |v| v.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pages_for_rounds_up() {
+        assert_eq!(KvPool::pages_for(0), 0);
+        assert_eq!(KvPool::pages_for(1), 1);
+        assert_eq!(KvPool::pages_for(16), 1);
+        assert_eq!(KvPool::pages_for(17), 2);
+    }
+
+    #[test]
+    fn reserve_and_release_cycle() {
+        let mut pool = KvPool::new(160); // 10 pages
+        assert!(pool.reserve(1, 50)); // 4 pages
+        assert_eq!(pool.held_pages(1), 4);
+        assert_eq!(pool.free_page_count(), 6);
+        assert!(pool.reserve(2, 96)); // 6 pages
+        assert_eq!(pool.free_page_count(), 0);
+        assert!(!pool.can_admit(1));
+        pool.release(1);
+        assert_eq!(pool.free_page_count(), 4);
+        assert!(pool.can_admit(64));
+        assert!(!pool.can_admit(65));
+    }
+
+    #[test]
+    fn growth_is_incremental() {
+        let mut pool = KvPool::new(160);
+        assert!(pool.reserve(7, 16)); // 1 page
+        assert!(pool.reserve(7, 17)); // grow to 2
+        assert_eq!(pool.held_pages(7), 2);
+        assert!(pool.reserve(7, 10)); // shrink requests are no-ops
+        assert_eq!(pool.held_pages(7), 2);
+    }
+
+    #[test]
+    fn reserve_fails_atomically() {
+        let mut pool = KvPool::new(32); // 2 pages
+        assert!(pool.reserve(1, 16));
+        assert!(!pool.reserve(2, 32), "2 pages not available");
+        assert_eq!(pool.held_pages(2), 0, "failed reserve must not leak");
+        assert_eq!(pool.free_page_count(), 1);
+    }
+
+    #[test]
+    fn peak_tracking() {
+        let mut pool = KvPool::new(160);
+        pool.reserve(1, 80);
+        pool.release(1);
+        pool.reserve(2, 16);
+        assert_eq!(pool.peak_used_pages(), 5);
+    }
+
+    #[test]
+    fn release_unknown_seq_is_noop() {
+        let mut pool = KvPool::new(64);
+        pool.release(99);
+        assert_eq!(pool.free_page_count(), 4);
+    }
+}

@@ -1,0 +1,17 @@
+//! Layer-3 coordinator: the serving system around the kernel library —
+//! request router, paged KV accounting, continuous-batching scheduler and
+//! the engine event loop (the role llama.cpp's `server` / vLLM's router
+//! play for the paper's system).
+//!
+//! Threading model: one engine thread owns the model and all sessions;
+//! clients submit [`request::Request`]s over a channel and stream
+//! [`request::Event`]s back. Python is never involved; the binary is
+//! self-contained after `make artifacts`.
+
+pub mod engine;
+pub mod kv_pool;
+pub mod request;
+pub mod scheduler;
+
+pub use engine::{Engine, EngineConfig};
+pub use request::{Event, FinishReason, Request, RequestHandle};

@@ -1,0 +1,210 @@
+//! Continuous-batching scheduler: decides, each engine step, which waiting
+//! requests to admit (prefill) and which running sequences decode — under
+//! a max-batch-size cap and the [`KvPool`] page budget. Pure state
+//! machine, no threads, so policies are unit-testable.
+//!
+//! Policy (vLLM-style FCFS):
+//! * finished sequences release their pages immediately;
+//! * waiting requests admit in arrival order while batch + KV allow;
+//! * decode runs as one batch over everything in the running set.
+
+use super::kv_pool::KvPool;
+use std::collections::VecDeque;
+
+/// Scheduler-side view of a sequence.
+#[derive(Clone, Debug)]
+pub struct SeqState {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    pub generated: usize,
+    pub phase: Phase,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Waiting,
+    /// Admitted; prompt not yet prefilled.
+    Prefill,
+    Decoding,
+}
+
+impl SeqState {
+    /// Worst-case KV tokens this sequence can ever hold.
+    pub fn worst_case_tokens(&self) -> usize {
+        self.prompt_len + self.max_new_tokens
+    }
+    /// Tokens currently in the KV cache.
+    pub fn current_tokens(&self) -> usize {
+        match self.phase {
+            Phase::Waiting => 0,
+            Phase::Prefill => 0,
+            Phase::Decoding => self.prompt_len + self.generated,
+        }
+    }
+}
+
+/// What the engine should do this step.
+#[derive(Debug, Default, PartialEq, Eq)]
+pub struct StepPlan {
+    /// Newly admitted requests to prefill (in order).
+    pub prefill: Vec<u64>,
+    /// Running sequences to decode as one batch.
+    pub decode: Vec<u64>,
+}
+
+/// The scheduler.
+pub struct Scheduler {
+    pub max_batch: usize,
+    waiting: VecDeque<SeqState>,
+    running: Vec<SeqState>,
+}
+
+impl Scheduler {
+    pub fn new(max_batch: usize) -> Scheduler {
+        Scheduler { max_batch: max_batch.max(1), waiting: VecDeque::new(), running: Vec::new() }
+    }
+
+    /// Enqueue a new request. Returns false if it can *never* be admitted
+    /// (worst-case demand exceeds the whole pool).
+    pub fn submit(&mut self, seq: SeqState, pool: &KvPool) -> bool {
+        if KvPool::pages_for(seq.worst_case_tokens()) > pool.total_pages() {
+            return false;
+        }
+        self.waiting.push_back(seq);
+        true
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Mark a running sequence as having generated one more token.
+    pub fn on_token(&mut self, id: u64) {
+        if let Some(s) = self.running.iter_mut().find(|s| s.id == id) {
+            s.generated += 1;
+        }
+    }
+
+    /// Remove a finished sequence and release its pages.
+    pub fn finish(&mut self, id: u64, pool: &mut KvPool) {
+        self.running.retain(|s| s.id != id);
+        pool.release(id);
+    }
+
+    /// Plan one engine step: admit while room, then decode the batch.
+    /// Admission reserves the *worst-case* page demand up front, so a
+    /// sequence admitted here can always run to completion (no preemption
+    /// needed — the paper's serving setting has no swapping tier).
+    pub fn step(&mut self, pool: &mut KvPool) -> StepPlan {
+        let mut plan = StepPlan::default();
+        // Admit in FCFS order. Head-of-line blocking is intentional
+        // (fairness): if the head doesn't fit, nothing behind it jumps.
+        while self.running.len() < self.max_batch {
+            let Some(head) = self.waiting.front() else { break };
+            if !pool.reserve(head.id, head.worst_case_tokens()) {
+                break;
+            }
+            let mut seq = self.waiting.pop_front().unwrap();
+            seq.phase = Phase::Prefill;
+            plan.prefill.push(seq.id);
+            self.running.push(seq);
+        }
+        for s in self.running.iter_mut() {
+            if s.phase == Phase::Prefill {
+                s.phase = Phase::Decoding;
+            }
+            plan.decode.push(s.id);
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(id: u64, prompt: usize, max_new: usize) -> SeqState {
+        SeqState { id, prompt_len: prompt, max_new_tokens: max_new, generated: 0, phase: Phase::Waiting }
+    }
+
+    #[test]
+    fn admits_up_to_batch_cap() {
+        let mut pool = KvPool::new(16 * 100);
+        let mut sch = Scheduler::new(2);
+        for i in 0..4 {
+            assert!(sch.submit(seq(i, 8, 8), &pool));
+        }
+        let plan = sch.step(&mut pool);
+        assert_eq!(plan.prefill, vec![0, 1]);
+        assert_eq!(plan.decode, vec![0, 1]);
+        assert_eq!(sch.waiting_len(), 2);
+    }
+
+    #[test]
+    fn kv_budget_gates_admission() {
+        let mut pool = KvPool::new(16 * 4); // 4 pages
+        let mut sch = Scheduler::new(8);
+        sch.submit(seq(1, 16, 16), &pool); // 2 pages
+        sch.submit(seq(2, 16, 32), &pool); // 3 pages — won't fit after 1
+        let plan = sch.step(&mut pool);
+        assert_eq!(plan.prefill, vec![1]);
+        assert_eq!(sch.waiting_len(), 1);
+        // Finish 1 → 2 admits next step.
+        sch.finish(1, &mut pool);
+        let plan = sch.step(&mut pool);
+        assert_eq!(plan.prefill, vec![2]);
+    }
+
+    #[test]
+    fn oversized_request_rejected_at_submit() {
+        let pool = KvPool::new(16 * 4);
+        let mut sch = Scheduler::new(8);
+        assert!(!sch.submit(seq(1, 100, 100), &pool));
+        assert_eq!(sch.waiting_len(), 0);
+    }
+
+    #[test]
+    fn fcfs_head_of_line() {
+        let mut pool = KvPool::new(16 * 4);
+        let mut sch = Scheduler::new(8);
+        sch.submit(seq(1, 16, 48), &pool); // 4 pages
+        sch.submit(seq(2, 8, 8), &pool); // 1 page — could fit, but behind 1
+        let plan = sch.step(&mut pool);
+        assert_eq!(plan.prefill, vec![1]);
+        let plan = sch.step(&mut pool);
+        assert!(plan.prefill.is_empty(), "2 must wait for 1's pages");
+        assert_eq!(plan.decode, vec![1]);
+    }
+
+    #[test]
+    fn continuous_batching_joins_mid_stream() {
+        let mut pool = KvPool::new(16 * 100);
+        let mut sch = Scheduler::new(4);
+        sch.submit(seq(1, 4, 4), &pool);
+        let p1 = sch.step(&mut pool);
+        assert_eq!(p1.decode, vec![1]);
+        sch.on_token(1);
+        // New request joins while 1 is mid-decode.
+        sch.submit(seq(2, 4, 4), &pool);
+        let p2 = sch.step(&mut pool);
+        assert_eq!(p2.prefill, vec![2]);
+        assert_eq!(p2.decode, vec![1, 2]);
+    }
+
+    #[test]
+    fn finish_releases_pages() {
+        let mut pool = KvPool::new(16 * 2);
+        let mut sch = Scheduler::new(4);
+        sch.submit(seq(1, 16, 16), &pool);
+        sch.step(&mut pool);
+        assert_eq!(pool.free_page_count(), 0);
+        sch.finish(1, &mut pool);
+        assert_eq!(pool.free_page_count(), 2);
+        assert_eq!(sch.running_len(), 0);
+    }
+}

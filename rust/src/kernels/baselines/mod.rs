@@ -1,0 +1,20 @@
+//! Baseline kernels the paper compares against (§2.3, §4.1.2):
+//!
+//! * [`f32_mad`] / [`f16_mad`] — full-precision MAD path ("Float16" in the
+//!   paper; our reference CPU has no native f16 FMA so F16 stores half
+//!   weights and widens on the fly, exactly like llama.cpp on AVX2).
+//! * [`q4_0`] — llama.cpp general 4-bit format (bit-wise MAD).
+//! * [`q2_k`] — llama.cpp K-quants 2-bit format: the multi-step
+//!   dequantization the paper calls out as a ternary-hostile cost.
+//! * [`tq1_0`] / [`tq2_0`] — llama.cpp element-wise MAD ternary formats
+//!   (bpw 1.69 / 2.06) with per-block Q8_K activations (not lossless).
+//! * [`tmac`] — a T-MAC-style *bit-wise* LUT kernel (2-bit, g=4): the
+//!   prior state of the art TL improves upon.
+
+pub mod f16_mad;
+pub mod f32_mad;
+pub mod q2_k;
+pub mod q4_0;
+pub mod tmac;
+pub mod tq1_0;
+pub mod tq2_0;

@@ -1,0 +1,286 @@
+//! **ELUT** — the element-wise lookup-table mpGEMM generalized beyond
+//! ternary weights (paper Appendix A–C): arbitrary weight cardinality C,
+//! group size g, with mirror consolidation applied whenever the full code
+//! space `C^g` exceeds the 16-entry shuffle width but the half space fits.
+//!
+//! Two instantiations ship as kernels:
+//!
+//! * **ELUT_C4** — C=4 (alphabet −2,−1,0,1), g=2 → full 16-entry table,
+//!   2.0 bpw (paper Table 3 row C=4).
+//! * **ELUT_C5** — C=5 (alphabet −2..2), g=2 → mirror-consolidated
+//!   13-entry table + sign plane, 2.5 bpw (paper Table 3 row C=5).
+//!
+//! Ternary weights embed exactly into both alphabets, so these kernels are
+//! drop-in (and, with int16 tables, training-scheme exact) on BitNet
+//! models — empirical backing for the appendix claim that ELUT extends to
+//! low-bit LLMs in general.
+
+use super::lut::{code_count, decode_code, mirror_join, mirror_split, sign_apply_i32};
+use super::quant::{quantize_act_int8, TernaryWeights};
+use super::tl1::LUT_W;
+use super::{Kernel, KernelClass, KernelInfo, Prepared, QTensor, QuantType};
+
+/// Generic element-wise LUT kernel over a symmetric integer alphabet.
+pub struct ElutKernel {
+    pub qtype: QuantType,
+    pub name: &'static str,
+    /// Weight cardinality C.
+    pub c: usize,
+    /// Group size g.
+    pub g: usize,
+    /// The weight alphabet, ascending, `alphabet[i] = -alphabet[c-1-i]`
+    /// when `mirror` is set.
+    pub alphabet: &'static [i8],
+    /// Mirror consolidation (sign plane + half table).
+    pub mirror: bool,
+}
+
+/// C=4 instantiation (full table, no mirror).
+pub static ELUT4: ElutKernel = ElutKernel {
+    qtype: QuantType::Elut4,
+    name: "ELUT_C4",
+    c: 4,
+    g: 2,
+    alphabet: &[-2, -1, 0, 1],
+    mirror: false,
+};
+
+/// C=5 instantiation (mirror-consolidated).
+pub static ELUT5: ElutKernel = ElutKernel {
+    qtype: QuantType::Elut5,
+    name: "ELUT_C5",
+    c: 5,
+    g: 2,
+    alphabet: &[-2, -1, 0, 1, 2],
+    mirror: true,
+};
+
+impl ElutKernel {
+    fn weights_per_byte_checks(&self) {
+        debug_assert_eq!(self.g, 2, "shipped instantiations use g=2");
+    }
+
+    /// Bytes per row: nibble plane (+ sign plane when mirrored).
+    fn row_bytes(&self, k: usize) -> usize {
+        let groups = k / self.g;
+        let idx = groups / 2; // 2 nibbles per byte
+        if self.mirror {
+            idx + groups / 8
+        } else {
+            idx
+        }
+    }
+}
+
+impl Kernel for ElutKernel {
+    fn info(&self) -> KernelInfo {
+        KernelInfo {
+            qtype: self.qtype,
+            name: self.name,
+            class: KernelClass::LutBased,
+            element_wise: true,
+            bpw: super::lut::elementwise_bpw(self.c, self.g),
+            // int16 tables + per-tensor int8 activations ⇒ training-scheme
+            // exact on any weights the alphabet represents (incl. ternary).
+            lossless: true,
+            k_multiple: if self.mirror { 16 } else { 4 },
+            ternary_native: true,
+        }
+    }
+
+    fn quantize(&self, w: &TernaryWeights) -> QTensor {
+        self.weights_per_byte_checks();
+        let (m, k) = (w.m, w.k);
+        assert_eq!(k % self.info().k_multiple, 0, "{} K alignment", self.name);
+        let row_bytes = self.row_bytes(k);
+        let groups = k / self.g;
+        let mut data = vec![0u8; m * row_bytes];
+        for r in 0..m {
+            let row = w.row(r);
+            let out = &mut data[r * row_bytes..(r + 1) * row_bytes];
+            let (idx_plane, sign_plane) = out.split_at_mut(groups / 2);
+            for (gi, pair) in row.chunks_exact(self.g).enumerate() {
+                let code = super::lut::encode_code(pair, self.c, self.alphabet);
+                let (sign, idx) = if self.mirror {
+                    mirror_split(code, self.c, self.g)
+                } else {
+                    (0, code)
+                };
+                debug_assert!(idx < 16);
+                if gi % 2 == 0 {
+                    idx_plane[gi / 2] = idx as u8;
+                } else {
+                    idx_plane[gi / 2] |= (idx as u8) << 4;
+                }
+                if self.mirror {
+                    sign_plane[gi / 8] |= sign << (gi % 8);
+                }
+            }
+        }
+        QTensor { qtype: self.qtype, m, k, data, scale: w.scale }
+    }
+
+    fn dequantize(&self, t: &QTensor) -> Vec<f32> {
+        let groups = t.k / self.g;
+        let row_bytes = self.row_bytes(t.k);
+        let mut out = Vec::with_capacity(t.m * t.k);
+        for r in 0..t.m {
+            let row = &t.data[r * row_bytes..(r + 1) * row_bytes];
+            let (idx_plane, sign_plane) = row.split_at(groups / 2);
+            for gi in 0..groups {
+                let nib = if gi % 2 == 0 { idx_plane[gi / 2] & 0xf } else { idx_plane[gi / 2] >> 4 };
+                let code = if self.mirror {
+                    let sign = (sign_plane[gi / 8] >> (gi % 8)) & 1;
+                    mirror_join(sign, nib as usize, self.c, self.g)
+                } else {
+                    nib as usize
+                };
+                for w in decode_code(code, self.c, self.g, self.alphabet) {
+                    out.push(w as f32 * t.scale);
+                }
+            }
+        }
+        out
+    }
+
+    fn prepare(&self, x: &[f32], k: usize) -> Prepared {
+        assert_eq!(x.len(), k);
+        let act = quantize_act_int8(x);
+        let groups = k / self.g;
+        let entries = if self.mirror {
+            super::lut::half_code_count(self.c, self.g)
+        } else {
+            code_count(self.c, self.g)
+        };
+        let mut tables = vec![0i16; groups * LUT_W];
+        for gi in 0..groups {
+            let a = &act.q[gi * self.g..(gi + 1) * self.g];
+            let t = &mut tables[gi * LUT_W..gi * LUT_W + entries];
+            for (slot_i, slot) in t.iter_mut().enumerate() {
+                let code =
+                    if self.mirror { mirror_join(0, slot_i, self.c, self.g) } else { slot_i };
+                let w = decode_code(code, self.c, self.g, self.alphabet);
+                *slot = w
+                    .iter()
+                    .zip(a.iter())
+                    .map(|(&wv, &av)| wv as i16 * av as i16)
+                    .sum();
+            }
+        }
+        Prepared::LutI16 { tables, scale: act.scale }
+    }
+
+    fn gemv_rows(&self, t: &QTensor, p: &Prepared, out: &mut [f32], rows: std::ops::Range<usize>) {
+        let (tables, scale) = match p {
+            Prepared::LutI16 { tables, scale } => (tables, scale),
+            _ => panic!("ELUT expects LutI16 activations"),
+        };
+        let groups = t.k / self.g;
+        let row_bytes = self.row_bytes(t.k);
+        let combined = t.scale / scale;
+        for (o, r) in out.iter_mut().zip(rows) {
+            let row = &t.data[r * row_bytes..(r + 1) * row_bytes];
+            let (idx_plane, sign_plane) = row.split_at(groups / 2);
+            let mut acc = 0i32;
+            if self.mirror {
+                for gi in 0..groups {
+                    let byte = unsafe { *idx_plane.get_unchecked(gi / 2) };
+                    let nib = if gi % 2 == 0 { byte & 0xf } else { byte >> 4 };
+                    let sign = (unsafe { *sign_plane.get_unchecked(gi / 8) } >> (gi % 8)) & 1;
+                    let v = unsafe { *tables.get_unchecked(gi * LUT_W + nib as usize) } as i32;
+                    acc += sign_apply_i32(v, sign);
+                }
+            } else {
+                let mut gi = 0usize;
+                for &byte in idx_plane {
+                    acc += unsafe { *tables.get_unchecked(gi * LUT_W + (byte & 0xf) as usize) }
+                        as i32;
+                    acc += unsafe {
+                        *tables.get_unchecked((gi + 1) * LUT_W + (byte >> 4) as usize)
+                    } as i32;
+                    gi += 2;
+                }
+            }
+            *o = acc as f32 * combined;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::quant::training_scheme_ref_row;
+    use crate::util::Rng;
+
+    fn random_ternary(m: usize, k: usize, seed: u64) -> TernaryWeights {
+        let mut rng = Rng::new(seed);
+        let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+        TernaryWeights::from_ternary(q, m, k, 0.033)
+    }
+
+    #[test]
+    fn bpw_matches_table3() {
+        let t = random_ternary(4, 1024, 1);
+        let p4 = ELUT4.quantize(&t);
+        assert_eq!(p4.bits_per_weight(), 2.0);
+        let p5 = ELUT5.quantize(&t);
+        assert_eq!(p5.bits_per_weight(), 2.5);
+    }
+
+    #[test]
+    fn ternary_embeds_exactly() {
+        let t = random_ternary(4, 256, 2);
+        for kern in [&ELUT4, &ELUT5] {
+            let packed = kern.quantize(&t);
+            assert_eq!(kern.dequantize(&packed), t.dequantize(), "{}", kern.name);
+        }
+    }
+
+    #[test]
+    fn training_scheme_exact_on_ternary() {
+        let (m, k) = (8, 512);
+        let t = random_ternary(m, k, 3);
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        let act = quantize_act_int8(&x);
+        for kern in [&ELUT4, &ELUT5] {
+            let packed = kern.quantize(&t);
+            let p = kern.prepare(&x, k);
+            let mut out = vec![0f32; m];
+            kern.gemv(&packed, &p, &mut out);
+            for r in 0..m {
+                assert_eq!(
+                    out[r],
+                    training_scheme_ref_row(t.row(r), t.scale, &act),
+                    "{} row {r}",
+                    kern.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mirror_table_is_half_size() {
+        use crate::kernels::lut::half_code_count;
+        assert_eq!(half_code_count(5, 2), 13);
+        assert!(half_code_count(5, 2) <= 16, "fits one shuffle register");
+        assert_eq!(code_count(4, 2), 16);
+    }
+
+    /// C=5 can represent a 2-bit-symmetric model that ternary cannot;
+    /// exercise non-ternary alphabet values through the full path.
+    #[test]
+    fn wider_alphabet_round_trip() {
+        let mut rng = Rng::new(5);
+        let k = 64;
+        let q: Vec<i8> = (0..4 * k).map(|_| (rng.next_below(5) as i8) - 2).collect();
+        // Bypass TernaryWeights' debug assertion by building the struct
+        // directly (alphabet values -2..2 are legal for ELUT5).
+        let t = TernaryWeights { q: q.clone(), m: 4, k, scale: 0.1 };
+        let packed = ELUT5.quantize(&t);
+        let back = ELUT5.dequantize(&packed);
+        for (i, (&want, got)) in q.iter().zip(back.iter()).enumerate() {
+            assert_eq!(*got, want as f32 * 0.1, "idx {i}");
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! Shared machinery for element-wise LUT-based (ELUT) kernels — paper §3.1
+//! and Appendix A/D.
+//!
+//! Terminology (paper Fig. 4, Eq. 3): weights are grouped `g` at a time;
+//! each group's value pattern is a *code*; a lookup table built from the
+//! activations maps code → partial sum `Σ_j a_j · w_j`. With *element-wise
+//! mirror consolidation* (§3.1.1) only the non-negative half of the code
+//! space is tabulated and a 1-bit sign recovers the other half
+//! (`x = sign ⊕ (sign + x)`, Eq. 5).
+
+/// Number of distinct codes for cardinality C, group g: `C^g`.
+pub const fn code_count(c: usize, g: usize) -> usize {
+    let mut n = 1;
+    let mut i = 0;
+    while i < g {
+        n *= c;
+        i += 1;
+    }
+    n
+}
+
+/// Mirror-consolidated (half) table size: `ceil(C^g / 2)` for symmetric
+/// alphabets (the all-zero code maps to itself).
+pub const fn half_code_count(c: usize, g: usize) -> usize {
+    code_count(c, g) / 2 + 1
+}
+
+/// Bits per weight of the *bit-wise* representation (paper Table 3):
+/// `ceil(log2(C)) * g / g = ceil(log2(C))`.
+pub fn bitwise_bpw(c: usize) -> f64 {
+    (usize::BITS - (c - 1).leading_zeros()) as f64
+}
+
+/// Bits per weight of the *element-wise* representation (paper Table 3):
+/// index bits for the (possibly mirrored) table plus the sign bit, per g
+/// weights. Mirror consolidation applies when the half table fits 16
+/// entries but the full table does not (the SIMD 128-bit constraint).
+pub fn elementwise_bpw(c: usize, g: usize) -> f64 {
+    let full = code_count(c, g);
+    if full <= 16 {
+        // Full enumeration indexable by 4 bits (or fewer); round up to the
+        // bit width actually needed.
+        let idx_bits = (usize::BITS - (full - 1).leading_zeros()) as f64;
+        idx_bits / g as f64
+    } else {
+        let half = half_code_count(c, g);
+        assert!(half <= 16, "half table must fit a 16-entry shuffle");
+        // 4-bit index + 1-bit sign per group.
+        5.0 / g as f64
+    }
+}
+
+/// Decode a base-C code into `g` digits, most-significant first, each
+/// mapped to a symmetric alphabet value via `alphabet`.
+pub fn decode_code(code: usize, c: usize, g: usize, alphabet: &[i8]) -> Vec<i8> {
+    assert_eq!(alphabet.len(), c);
+    let mut digits = vec![0i8; g];
+    let mut rest = code;
+    for d in (0..g).rev() {
+        digits[d] = alphabet[rest % c];
+        rest /= c;
+    }
+    assert_eq!(rest, 0, "code out of range");
+    digits
+}
+
+/// Encode `g` alphabet values into a base-C code (inverse of
+/// [`decode_code`]).
+pub fn encode_code(vals: &[i8], c: usize, alphabet: &[i8]) -> usize {
+    let mut code = 0usize;
+    for &v in vals {
+        let digit = alphabet.iter().position(|&a| a == v).expect("value in alphabet");
+        code = code * c + digit;
+    }
+    code
+}
+
+/// Mirror consolidation for symmetric alphabets ordered so that
+/// `alphabet[i] == -alphabet[c-1-i]` (e.g. ternary `[-1, 0, 1]`):
+/// the mirror of code `x` (negating every digit) is `C^g - 1 - x`.
+/// Codes above the midpoint are "positive"; return (sign, half_index)
+/// where `half_index ∈ 0..=mid` and sign is 1 for the negative half.
+///
+/// For ternary g=3 this reproduces paper Table 6 exactly: mid = 13,
+/// (1,1,1) → (0, 13), (-1,-1,-1) → (1, 13), (0,0,0) → (0, 0).
+pub fn mirror_split(code: usize, c: usize, g: usize) -> (u8, usize) {
+    let full = code_count(c, g);
+    let mid = (full - 1) / 2; // all-zero code for odd alphabets
+    if code >= mid {
+        (0, code - mid)
+    } else {
+        (1, mid - code)
+    }
+}
+
+/// Inverse of [`mirror_split`].
+pub fn mirror_join(sign: u8, half_index: usize, c: usize, g: usize) -> usize {
+    let mid = (code_count(c, g) - 1) / 2;
+    if sign == 0 {
+        mid + half_index
+    } else {
+        mid - half_index
+    }
+}
+
+/// The paper's 1-bit sign operation (Eq. 5): `x = sign ⊕ (sign + x)` with
+/// the sign broadcast to an all-ones mask. Branch-free conditional negate,
+/// exactly what `vpsignb`-less SIMD code does.
+#[inline(always)]
+pub fn sign_apply_i16(x: i16, sign_bit: u8) -> i16 {
+    let mask = -(sign_bit as i16); // 0 or -1 (all ones)
+    (x.wrapping_add(mask)) ^ mask
+}
+
+/// Same trick on i32 accumulators.
+#[inline(always)]
+pub fn sign_apply_i32(x: i32, sign_bit: u8) -> i32 {
+    let mask = -(sign_bit as i32);
+    (x.wrapping_add(mask)) ^ mask
+}
+
+/// Requantize an i16 LUT block to i8 with a single power-free scale —
+/// the `_0` fast path (T-MAC-style table quantization, §3.2.1). Returns
+/// the scale such that `i16 ≈ i8 * scale`.
+pub fn requantize_lut_block(src: &[i16], dst: &mut [i8]) -> f32 {
+    debug_assert_eq!(src.len(), dst.len());
+    let max_abs = src.iter().fold(0i32, |m, &v| m.max((v as i32).abs()));
+    if max_abs == 0 {
+        dst.fill(0);
+        return 0.0;
+    }
+    let scale = max_abs as f32 / 127.0;
+    let inv = 127.0 / max_abs as f32;
+    for (d, &s) in dst.iter_mut().zip(src.iter()) {
+        *d = ((s as f32) * inv).round() as i8;
+    }
+    scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TERNARY: [i8; 3] = [-1, 0, 1];
+
+    #[test]
+    fn code_counts() {
+        assert_eq!(code_count(3, 2), 9);
+        assert_eq!(code_count(3, 3), 27);
+        assert_eq!(half_code_count(3, 3), 14); // 27/2+1 → 14 entries (0..=13)
+        assert_eq!(code_count(4, 2), 16);
+        assert_eq!(code_count(5, 2), 25);
+        assert_eq!(half_code_count(5, 2), 13);
+    }
+
+    #[test]
+    fn table3_bpw_values() {
+        // Paper Table 3 rows: (C, g, bpw_bitwise, bpw_elementwise)
+        assert_eq!(bitwise_bpw(3), 2.0);
+        assert!((elementwise_bpw(3, 3) - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(bitwise_bpw(4), 2.0);
+        assert_eq!(elementwise_bpw(4, 2), 2.0);
+        assert_eq!(bitwise_bpw(5), 3.0);
+        assert_eq!(elementwise_bpw(5, 2), 2.5);
+    }
+
+    #[test]
+    fn codes_round_trip() {
+        for code in 0..27 {
+            let d = decode_code(code, 3, 3, &TERNARY);
+            assert_eq!(encode_code(&d, 3, &TERNARY), code);
+        }
+    }
+
+    #[test]
+    fn mirror_matches_paper_table6() {
+        // v = 9*(w0+1) + 3*(w1+1) + (w2+1) with digits in {-1,0,1}
+        let code_of = |w: [i8; 3]| encode_code(&w, 3, &TERNARY);
+        assert_eq!(mirror_split(code_of([0, 0, 0]), 3, 3), (0, 0));
+        assert_eq!(mirror_split(code_of([1, 1, 1]), 3, 3), (0, 13));
+        assert_eq!(mirror_split(code_of([-1, -1, -1]), 3, 3), (1, 13));
+        assert_eq!(mirror_split(code_of([1, 1, -1]), 3, 3), (0, 11));
+        assert_eq!(mirror_split(code_of([-1, -1, 1]), 3, 3), (1, 11));
+    }
+
+    #[test]
+    fn mirror_split_join_round_trip() {
+        for code in 0..27 {
+            let (s, h) = mirror_split(code, 3, 3);
+            assert_eq!(mirror_join(s, h, 3, 3), code);
+            assert!(h <= 13);
+        }
+        for code in 0..25 {
+            let (s, h) = mirror_split(code, 5, 2);
+            assert_eq!(mirror_join(s, h, 5, 2), code);
+        }
+    }
+
+    #[test]
+    fn mirror_negates_digits() {
+        // sign=1 half must decode to the negation of the sign=0 half.
+        for h in 0..=13usize {
+            let pos = decode_code(mirror_join(0, h, 3, 3), 3, 3, &TERNARY);
+            let neg = decode_code(mirror_join(1, h, 3, 3), 3, 3, &TERNARY);
+            for (p, n) in pos.iter().zip(neg.iter()) {
+                assert_eq!(*p, -*n);
+            }
+        }
+    }
+
+    #[test]
+    fn sign_op_equation5() {
+        for x in [-300i16, -1, 0, 1, 5, 123, 300] {
+            assert_eq!(sign_apply_i16(x, 0), x);
+            assert_eq!(sign_apply_i16(x, 1), -x);
+        }
+        for x in [-100_000i32, -1, 0, 7, 100_000] {
+            assert_eq!(sign_apply_i32(x, 0), x);
+            assert_eq!(sign_apply_i32(x, 1), -x);
+        }
+    }
+
+    #[test]
+    fn lut_requantization_error_bounded() {
+        let src: Vec<i16> = (-8..8).map(|i| (i * 37) as i16).collect();
+        let mut dst = vec![0i8; src.len()];
+        let scale = requantize_lut_block(&src, &mut dst);
+        for (&s, &d) in src.iter().zip(dst.iter()) {
+            let back = d as f32 * scale;
+            assert!((back - s as f32).abs() <= scale * 0.5 + 1e-3);
+        }
+    }
+
+    #[test]
+    fn lut_requantization_zero_block() {
+        let src = vec![0i16; 16];
+        let mut dst = vec![0i8; 16];
+        assert_eq!(requantize_lut_block(&src, &mut dst), 0.0);
+        assert!(dst.iter().all(|&v| v == 0));
+    }
+}

@@ -1,0 +1,428 @@
+//! The ternary mpGEMM library — the paper's core contribution (§3, Table 1)
+//! plus every baseline the evaluation compares against (§4, Table 7).
+//!
+//! | kernel | class | unit | bpw | lossless |
+//! |--------|-------|------|-----|----------|
+//! | `TL1_0`/`TL1_1` | LUT  | element-wise | 2.00 | ✗ / ✓ |
+//! | `TL2_0`/`TL2_1` | LUT  | element-wise | 1.67 | ✗ / ✓ |
+//! | `I2_S`          | MAD  | element-wise | 2.00 | ✓ |
+//! | `TMAC` (stand-in)| LUT | bit-wise     | 2.00 | ✗ |
+//! | `TQ1_0`         | MAD  | element-wise | 1.69 | ✗ |
+//! | `TQ2_0`         | MAD  | element-wise | 2.06 | ✗ |
+//! | `Q4_0`          | MAD  | bit-wise     | 4.50 | ✗ |
+//! | `Q2_K`          | MAD  | bit-wise     | 2.63 | ✗ |
+//! | `F16`           | MAD  | —            | 16.0 | — (full-precision baseline) |
+//! | `ELUT4`/`ELUT5` | LUT  | element-wise | 2.00/2.50 | ✗ (appendix A extension) |
+//!
+//! All kernels consume the same [`quant::TernaryWeights`] (or raw f32 for
+//! the general-purpose baselines) and produce f32 outputs, so they are
+//! interchangeable inside the model and the quality/speed harnesses.
+
+pub mod baselines;
+pub mod counters;
+pub mod elut;
+pub mod i2s;
+pub mod lut;
+pub mod quant;
+pub mod tl1;
+pub mod tl2;
+
+use crate::threadpool::ThreadPool;
+use quant::{ActBlocked, ActInt8, TernaryWeights};
+
+/// Every quantization type / kernel in the library (paper Table 1 +
+/// baselines + appendix ELUT extension).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum QuantType {
+    /// f32 reference MAD path (stands in for llama.cpp Float32).
+    F32,
+    /// f16-stored weights, f32 MAD — the paper's "Float16" baseline.
+    F16,
+    /// llama.cpp Q4_0: 4-bit blocks of 32, general-purpose.
+    Q40,
+    /// llama.cpp Q2_K: 2-bit K-quants, multi-step dequant (§2.3).
+    Q2K,
+    /// llama.cpp TQ1_0: base-3 packed ternary, bpw 1.69, element-wise MAD.
+    Tq10,
+    /// llama.cpp TQ2_0: 2-bit ternary, bpw 2.06, element-wise MAD.
+    Tq20,
+    /// T-MAC style bit-wise LUT (2-bit, g=4, int8-requantized tables).
+    Tmac,
+    /// Paper TL1, int8-requantized LUT (fast, near-lossless).
+    Tl10,
+    /// Paper TL1, pack-and-unpack int16 LUT (lossless).
+    Tl11,
+    /// Paper TL2, mirror-consolidated g=3, int8 LUT (fast, bpw 1.67).
+    Tl20,
+    /// Paper TL2, int16 LUT (lossless, bpw 1.67).
+    Tl21,
+    /// Paper I2_S: element-wise MAD, per-tensor scales (lossless).
+    I2S,
+    /// Appendix ELUT with weight cardinality C=4 (alphabet ±1, ±3).
+    Elut4,
+    /// Appendix ELUT with weight cardinality C=5 (alphabet -2..2).
+    Elut5,
+}
+
+/// Computational strategy (paper §2.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelClass {
+    MadBased,
+    LutBased,
+}
+
+/// Metadata describing a kernel (regenerates paper Table 1).
+#[derive(Clone, Debug)]
+pub struct KernelInfo {
+    pub qtype: QuantType,
+    /// Paper-facing name, e.g. "TL2_0".
+    pub name: &'static str,
+    pub class: KernelClass,
+    /// Element-wise kernels exploit weight cardinality; bit-wise do not.
+    pub element_wise: bool,
+    /// Nominal bits per weight of the storage format.
+    pub bpw: f64,
+    /// Exactly reproduces the BitNet b1.58 training-scheme computation.
+    pub lossless: bool,
+    /// K must be a multiple of this for the kernel to apply.
+    pub k_multiple: usize,
+    /// Supports arbitrary ternary weights (false for general formats that
+    /// merely *store* ternary models, e.g. Q4_0).
+    pub ternary_native: bool,
+}
+
+impl QuantType {
+    pub const ALL: [QuantType; 14] = [
+        QuantType::F32,
+        QuantType::F16,
+        QuantType::Q40,
+        QuantType::Q2K,
+        QuantType::Tq10,
+        QuantType::Tq20,
+        QuantType::Tmac,
+        QuantType::Tl10,
+        QuantType::Tl11,
+        QuantType::Tl20,
+        QuantType::Tl21,
+        QuantType::I2S,
+        QuantType::Elut4,
+        QuantType::Elut5,
+    ];
+
+    /// The set the paper's Table 7 sweeps (ternary-relevant kernels).
+    pub const TABLE7: [QuantType; 8] = [
+        QuantType::F16,
+        QuantType::Q40,
+        QuantType::Tmac,
+        QuantType::Tq10,
+        QuantType::Tq20,
+        QuantType::Tl10,
+        QuantType::Tl20,
+        QuantType::I2S,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        kernel_for(*self).info().name
+    }
+
+    pub fn parse(s: &str) -> Option<QuantType> {
+        QuantType::ALL
+            .iter()
+            .copied()
+            .find(|q| q.name().eq_ignore_ascii_case(s))
+    }
+}
+
+/// Prepared (quantized / tabulated) activations. Built once per activation
+/// row, reused across all M weight rows — the "preprocessing stage" of
+/// Algorithms 1 and 2.
+pub enum Prepared {
+    /// No quantization (F32/F16 baselines).
+    Raw(Vec<f32>),
+    /// Per-tensor int8 (BitNet training scheme).
+    Int8(ActInt8),
+    /// Per-block int8 (llama.cpp Q8_0 / Q8_K).
+    Blocked(ActBlocked),
+    /// Element-wise LUT, int16 entries (lossless TL path). `tables` holds
+    /// `k/g` tables of 16 entries each; `scale` is the activation scale.
+    LutI16 { tables: Vec<i16>, scale: f32 },
+    /// Element-wise LUT requantized to int8 with one scale per k-block
+    /// (fast TL path). `block_groups` = LUT groups per scale block.
+    LutI8 { tables: Vec<i8>, block_scales: Vec<f32>, block_groups: usize, scale: f32 },
+    /// Bit-wise LUT (T-MAC stand-in): int8 tables over 4-activation groups
+    /// + per-block scales + activation sum for offset correction.
+    BitLut { tables: Vec<i8>, block_scales: Vec<f32>, block_groups: usize, scale: f32, act_sum: i32 },
+}
+
+/// A packed weight tensor in some kernel's storage format.
+pub struct QTensor {
+    pub qtype: QuantType,
+    pub m: usize,
+    pub k: usize,
+    /// Packed bytes, layout private to the kernel (row-major by weight row).
+    pub data: Vec<u8>,
+    /// Per-tensor weight scale (absmean `s`), where applicable.
+    pub scale: f32,
+}
+
+impl QTensor {
+    /// Achieved bits per weight of this packed tensor (regenerates the bpw
+    /// column of Table 1 / Table 3 from real storage, not constants).
+    pub fn bits_per_weight(&self) -> f64 {
+        (self.data.len() as f64 * 8.0) / (self.m * self.k) as f64
+    }
+
+    /// Bytes that one GEMV must read from the weight side.
+    pub fn weight_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// The kernel interface. One implementation per [`QuantType`].
+pub trait Kernel: Send + Sync {
+    fn info(&self) -> KernelInfo;
+
+    /// Pack ternary weights into this kernel's storage format.
+    fn quantize(&self, w: &TernaryWeights) -> QTensor;
+
+    /// Reconstruct effective f32 weights (tests, quality eval).
+    fn dequantize(&self, t: &QTensor) -> Vec<f32>;
+
+    /// Quantize activations and (for LUT kernels) build lookup tables —
+    /// Algorithm 1/2 "preprocessing" phase. `x.len() == k`.
+    fn prepare(&self, x: &[f32], k: usize) -> Prepared;
+
+    /// Compute `out[r] = Σ_k x[k] * W[r,k]` for `r` in `rows` —
+    /// Algorithm 1/2 "accumulation" phase.
+    fn gemv_rows(&self, t: &QTensor, p: &Prepared, out: &mut [f32], rows: std::ops::Range<usize>);
+
+    /// Full single-row GEMV.
+    fn gemv(&self, t: &QTensor, p: &Prepared, out: &mut [f32]) {
+        assert_eq!(out.len(), t.m);
+        self.gemv_rows(t, p, out, 0..t.m);
+    }
+}
+
+/// Look up the kernel implementation for a quant type.
+pub fn kernel_for(q: QuantType) -> &'static dyn Kernel {
+    match q {
+        QuantType::F32 => &baselines::f32_mad::F32Kernel,
+        QuantType::F16 => &baselines::f16_mad::F16Kernel,
+        QuantType::Q40 => &baselines::q4_0::Q40Kernel,
+        QuantType::Q2K => &baselines::q2_k::Q2KKernel,
+        QuantType::Tq10 => &baselines::tq1_0::Tq10Kernel,
+        QuantType::Tq20 => &baselines::tq2_0::Tq20Kernel,
+        QuantType::Tmac => &baselines::tmac::TmacKernel,
+        QuantType::Tl10 => &tl1::TL1_0,
+        QuantType::Tl11 => &tl1::TL1_1,
+        QuantType::Tl20 => &tl2::TL2_0,
+        QuantType::Tl21 => &tl2::TL2_1,
+        QuantType::I2S => &i2s::I2SKernel,
+        QuantType::Elut4 => &elut::ELUT4,
+        QuantType::Elut5 => &elut::ELUT5,
+    }
+}
+
+/// All kernel infos (regenerates paper Table 1).
+pub fn library_table() -> Vec<KernelInfo> {
+    QuantType::ALL.iter().map(|&q| kernel_for(q).info()).collect()
+}
+
+/// Multi-row, multi-threaded matmul: `out[(n, m)] = X[(n, k)] · Wᵀ`.
+/// Preprocessing runs once per activation row; accumulation is chunked
+/// over weight rows across the pool (llama.cpp parallelizes the same way).
+pub fn matmul(
+    kernel: &dyn Kernel,
+    t: &QTensor,
+    x: &[f32],
+    n: usize,
+    out: &mut [f32],
+    pool: &ThreadPool,
+) {
+    assert_eq!(x.len(), n * t.k);
+    assert_eq!(out.len(), n * t.m);
+    let m = t.m;
+    // Row chunking: aim for ~4 chunks per thread for load balance.
+    let chunks = (pool.size() * 4).min(m.max(1));
+    let rows_per = crate::util::ceil_div(m, chunks);
+    for i in 0..n {
+        let p = kernel.prepare(&x[i * t.k..(i + 1) * t.k], t.k);
+        let out_row = &mut out[i * m..(i + 1) * m];
+        // SAFETY: chunks write disjoint ranges of out_row.
+        let out_ptr = SendPtr(out_row.as_mut_ptr());
+        pool.parallel_for(chunks, |c| {
+            // Capture the whole wrapper (edition-2021 closures would
+            // otherwise capture the raw-pointer field, which is !Sync).
+            let out_ptr = &out_ptr;
+            let lo = c * rows_per;
+            if lo >= m {
+                return;
+            }
+            let hi = ((c + 1) * rows_per).min(m);
+            let slice = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(lo), hi - lo) };
+            kernel.gemv_rows(t, &p, slice, lo..hi);
+        });
+    }
+}
+
+/// Pointer wrapper to move a raw pointer into the pool closure.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Reference f64 GEMV over dequantized weights and raw activations.
+    fn dense_ref(w: &[f32], m: usize, k: usize, x: &[f32]) -> Vec<f32> {
+        (0..m)
+            .map(|r| {
+                w[r * k..(r + 1) * k]
+                    .iter()
+                    .zip(x.iter())
+                    .map(|(&wv, &xv)| wv as f64 * xv as f64)
+                    .sum::<f64>() as f32
+            })
+            .collect()
+    }
+
+    fn random_ternary(m: usize, k: usize, seed: u64) -> TernaryWeights {
+        let mut rng = Rng::new(seed);
+        let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+        TernaryWeights::from_ternary(q, m, k, 0.0625)
+    }
+
+    /// Every kernel must approximate the dense reference within a
+    /// quantization-error bound on random ternary weights.
+    #[test]
+    fn all_kernels_match_dense_reference() {
+        let (m, k) = (64, 512);
+        let t = random_ternary(m, k, 9);
+        let wd = t.dequantize();
+        let mut rng = Rng::new(10);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        let reference = dense_ref(&wd, m, k, &x);
+        let ref_norm = reference.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+
+        for qt in QuantType::ALL {
+            let kern = kernel_for(qt);
+            if k % kern.info().k_multiple != 0 {
+                continue;
+            }
+            let qt_tensor = kern.quantize(&t);
+            let p = kern.prepare(&x, k);
+            let mut out = vec![0f32; m];
+            kern.gemv(&qt_tensor, &p, &mut out);
+            let err = out
+                .iter()
+                .zip(reference.iter())
+                .map(|(a, b)| ((*a - *b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            let rel = err / ref_norm.max(1e-12);
+            // Int8 activation quantization alone gives ~1e-3 relative error;
+            // blocky baselines (Q2_K) are the loosest.
+            let bound = match qt {
+                QuantType::Q2K => 0.12,
+                // Q4_0's asymmetric grid maps the −amax side to ±7/8 of
+                // its value — up to ~12% error on exact-ternary data.
+                QuantType::Q40 => 0.12,
+                QuantType::Elut4 | QuantType::Elut5 => 0.08,
+                // Bit-wise LUT requantizes subset-sum tables whose dynamic
+                // range (up to 4·127) is wider than TL's pair/trio sums.
+                QuantType::Tmac => 0.04,
+                _ => 0.02,
+            };
+            assert!(rel < bound, "{}: rel err {rel:.5} >= {bound}", kern.info().name);
+        }
+    }
+
+    /// Storage bpw must match the nominal Table-1 values.
+    #[test]
+    fn bpw_matches_table1() {
+        let t = random_ternary(32, 3072, 11);
+        for qt in QuantType::ALL {
+            let kern = kernel_for(qt);
+            if t.k % kern.info().k_multiple != 0 {
+                continue;
+            }
+            let packed = kern.quantize(&t);
+            let got = packed.bits_per_weight();
+            let want = kern.info().bpw;
+            assert!(
+                (got - want).abs() / want < 0.02,
+                "{}: measured bpw {got:.3} vs nominal {want:.3}",
+                kern.info().name
+            );
+        }
+    }
+
+    /// dequantize(quantize(w)) must preserve ternary values exactly for all
+    /// ternary-native kernels.
+    #[test]
+    fn ternary_native_round_trip() {
+        let t = random_ternary(16, 768, 12);
+        for qt in QuantType::ALL {
+            let kern = kernel_for(qt);
+            let info = kern.info();
+            if !info.ternary_native || t.k % info.k_multiple != 0 {
+                continue;
+            }
+            let packed = kern.quantize(&t);
+            let back = kern.dequantize(&packed);
+            let want = t.dequantize();
+            for (i, (a, b)) in back.iter().zip(want.iter()).enumerate() {
+                assert!((a - b).abs() < 1e-6, "{} idx {i}: {a} vs {b}", info.name);
+            }
+        }
+    }
+
+    /// matmul (threaded) must equal gemv row-by-row (serial).
+    #[test]
+    fn threaded_matmul_matches_serial() {
+        let (m, k, n) = (48, 256, 3);
+        let t = random_ternary(m, k, 13);
+        let mut rng = Rng::new(14);
+        let x: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+        let pool = ThreadPool::new(4);
+        for qt in [QuantType::I2S, QuantType::Tl20, QuantType::Tq20, QuantType::F16] {
+            let kern = kernel_for(qt);
+            if k % kern.info().k_multiple != 0 {
+                continue;
+            }
+            let packed = kern.quantize(&t);
+            let mut out_par = vec![0f32; n * m];
+            matmul(kern, &packed, &x, n, &mut out_par, &pool);
+            for i in 0..n {
+                let p = kern.prepare(&x[i * k..(i + 1) * k], k);
+                let mut out_ser = vec![0f32; m];
+                kern.gemv(&packed, &p, &mut out_ser);
+                assert_eq!(&out_par[i * m..(i + 1) * m], &out_ser[..], "{qt:?} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn quant_type_parse_round_trip() {
+        for qt in QuantType::ALL {
+            assert_eq!(QuantType::parse(qt.name()), Some(qt));
+        }
+        assert_eq!(QuantType::parse("tl2_0"), Some(QuantType::Tl20));
+        assert_eq!(QuantType::parse("nope"), None);
+    }
+
+    #[test]
+    fn library_table_has_expected_properties() {
+        let table = library_table();
+        assert_eq!(table.len(), QuantType::ALL.len());
+        let tl2 = table.iter().find(|i| i.name == "TL2_0").unwrap();
+        assert!(tl2.element_wise && tl2.class == KernelClass::LutBased && !tl2.lossless);
+        let i2s = table.iter().find(|i| i.name == "I2_S").unwrap();
+        assert!(i2s.lossless && i2s.class == KernelClass::MadBased);
+        let tmac = table.iter().find(|i| i.name == "TMAC").unwrap();
+        assert!(!tmac.element_wise);
+    }
+}

@@ -1,0 +1,341 @@
+//! **TL1** — element-wise LUT-based ternary kernel with group size g=2
+//! (paper §3.1.1, Algorithm 3, Table 5).
+//!
+//! Every pair of ternary weights is packed into a 4-bit code
+//! `c = 3·(w0+1) + (w1+1) ∈ 0..9` (bpw = 2). The activation-side
+//! preprocessing enumerates all 9 pair sums `a0·w0 + a1·w1` into a
+//! 16-entry table per weight pair position; accumulation is one table
+//! lookup per 2 weights instead of 2 multiply-adds.
+//!
+//! Two variants (paper §3.2.1):
+//! * **TL1_0** — tables requantized to int8 with one scale per block of
+//!   [`LUT_BLOCK_GROUPS`] groups (T-MAC-style). Fast, *near*-lossless.
+//! * **TL1_1** — tables kept in int16 via the pack-and-unpack technique
+//!   (two byte-table lookups reconstruct the 16-bit entry). Lossless:
+//!   bit-identical to the BitNet b1.58 training computation.
+
+use super::lut::{decode_code, requantize_lut_block};
+use super::quant::{quantize_act_int8, ActInt8, TernaryWeights};
+use super::{Kernel, KernelClass, KernelInfo, Prepared, QTensor, QuantType};
+
+/// Table entries per group (9 used, padded to 16 = one 128-bit SIMD
+/// register of int8, the `vpshufb`/`vqtbl1q_u8` width).
+pub const LUT_W: usize = 16;
+/// Number of weight pairs (groups) sharing one int8 requantization scale
+/// in the `_0` fast path.
+pub const LUT_BLOCK_GROUPS: usize = 32;
+
+const TERNARY: [i8; 3] = [-1, 0, 1];
+
+/// TL1 kernel; `LOSSLESS = false` → TL1_0, `true` → TL1_1.
+pub struct Tl1Kernel<const LOSSLESS: bool>;
+
+/// TL1_0: int8-requantized LUT (fast path).
+pub static TL1_0: Tl1Kernel<false> = Tl1Kernel::<false>;
+/// TL1_1: int16 LUT via pack-and-unpack (lossless path).
+pub static TL1_1: Tl1Kernel<true> = Tl1Kernel::<true>;
+
+/// Pack one row of ternary weights into 4-bit TL1 codes (2 per byte).
+pub fn pack_row_tl1(row: &[i8], out: &mut [u8]) {
+    debug_assert_eq!(row.len() % 4, 0);
+    debug_assert_eq!(out.len(), row.len() / 4);
+    for (b, quad) in row.chunks_exact(4).enumerate() {
+        let c0 = (3 * (quad[0] + 1) + (quad[1] + 1)) as u8;
+        let c1 = (3 * (quad[2] + 1) + (quad[3] + 1)) as u8;
+        out[b] = c0 | (c1 << 4);
+    }
+}
+
+/// Build the int16 pair-sum tables for a quantized activation vector:
+/// `tables[g*16 + c] = aq[2g]·w0(c) + aq[2g+1]·w1(c)`.
+pub fn build_tables_tl1(aq: &[i8]) -> Vec<i16> {
+    debug_assert_eq!(aq.len() % 2, 0);
+    let groups = aq.len() / 2;
+    let mut tables = vec![0i16; groups * LUT_W];
+    for g in 0..groups {
+        let a0 = aq[2 * g] as i16;
+        let a1 = aq[2 * g + 1] as i16;
+        let t = &mut tables[g * LUT_W..g * LUT_W + 9];
+        // Enumerate codes in Table-5 order: c = 3*(w0+1) + (w1+1).
+        let mut c = 0;
+        for w0 in TERNARY {
+            for w1 in TERNARY {
+                t[c] = a0 * w0 as i16 + a1 * w1 as i16;
+                c += 1;
+            }
+        }
+    }
+    tables
+}
+
+/// Requantize i16 tables to i8 per block of `block_groups` groups.
+pub fn requantize_tables(
+    tables: &[i16],
+    block_groups: usize,
+) -> (Vec<i8>, Vec<f32>) {
+    let per_block = block_groups * LUT_W;
+    let mut out = vec![0i8; tables.len()];
+    let mut scales = Vec::with_capacity(crate::util::ceil_div(tables.len(), per_block));
+    for (src, dst) in tables.chunks(per_block).zip(out.chunks_mut(per_block)) {
+        scales.push(requantize_lut_block(src, dst));
+    }
+    (out, scales)
+}
+
+impl<const LOSSLESS: bool> Tl1Kernel<LOSSLESS> {
+    fn prepare_act(&self, act: ActInt8) -> Prepared {
+        let tables = build_tables_tl1(&act.q);
+        if LOSSLESS {
+            Prepared::LutI16 { tables, scale: act.scale }
+        } else {
+            let (t8, scales) = requantize_tables(&tables, LUT_BLOCK_GROUPS);
+            Prepared::LutI8 {
+                tables: t8,
+                block_scales: scales,
+                block_groups: LUT_BLOCK_GROUPS,
+                scale: act.scale,
+            }
+        }
+    }
+}
+
+impl<const LOSSLESS: bool> Kernel for Tl1Kernel<LOSSLESS> {
+    fn info(&self) -> KernelInfo {
+        KernelInfo {
+            qtype: if LOSSLESS { QuantType::Tl11 } else { QuantType::Tl10 },
+            name: if LOSSLESS { "TL1_1" } else { "TL1_0" },
+            class: KernelClass::LutBased,
+            element_wise: true,
+            bpw: 2.0,
+            lossless: LOSSLESS,
+            k_multiple: 4,
+            ternary_native: true,
+        }
+    }
+
+    fn quantize(&self, w: &TernaryWeights) -> QTensor {
+        let (m, k) = (w.m, w.k);
+        assert_eq!(k % 4, 0, "TL1 requires K % 4 == 0");
+        let row_bytes = k / 4;
+        let mut data = vec![0u8; m * row_bytes];
+        for r in 0..m {
+            pack_row_tl1(w.row(r), &mut data[r * row_bytes..(r + 1) * row_bytes]);
+        }
+        QTensor {
+            qtype: self.info().qtype,
+            m,
+            k,
+            data,
+            scale: w.scale,
+        }
+    }
+
+    fn dequantize(&self, t: &QTensor) -> Vec<f32> {
+        let row_bytes = t.k / 4;
+        let mut out = Vec::with_capacity(t.m * t.k);
+        for r in 0..t.m {
+            for b in 0..row_bytes {
+                let byte = t.data[r * row_bytes + b];
+                for code in [byte & 0xf, byte >> 4] {
+                    for w in decode_code(code as usize, 3, 2, &TERNARY) {
+                        out.push(w as f32 * t.scale);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn prepare(&self, x: &[f32], k: usize) -> Prepared {
+        assert_eq!(x.len(), k);
+        self.prepare_act(quantize_act_int8(x))
+    }
+
+    fn gemv_rows(&self, t: &QTensor, p: &Prepared, out: &mut [f32], rows: std::ops::Range<usize>) {
+        let row_bytes = t.k / 4;
+        match p {
+            Prepared::LutI16 { tables, scale } => {
+                let combined = t.scale / scale;
+                for (o, r) in out.iter_mut().zip(rows) {
+                    let wrow = &t.data[r * row_bytes..(r + 1) * row_bytes];
+                    *o = gemv_row_lut16(wrow, tables) as f32 * combined;
+                }
+            }
+            Prepared::LutI8 { tables, block_scales, block_groups, scale } => {
+                let combined = t.scale / scale;
+                for (o, r) in out.iter_mut().zip(rows) {
+                    let wrow = &t.data[r * row_bytes..(r + 1) * row_bytes];
+                    *o = gemv_row_lut8(wrow, tables, block_scales, *block_groups) * combined;
+                }
+            }
+            _ => panic!("TL1 expects a LUT-prepared activation"),
+        }
+    }
+}
+
+/// Lossless accumulation: i32 sum of i16 table entries, one lookup per
+/// packed nibble. Codes stream linearly; the table for group g sits at
+/// `tables[g*16..]`, i.e. the LUT-centric layout of §3.1.2.
+#[inline]
+pub fn gemv_row_lut16(wrow: &[u8], tables: &[i16]) -> i32 {
+    let mut acc = 0i32;
+    let mut g = 0usize;
+    for &byte in wrow {
+        let c0 = (byte & 0xf) as usize;
+        let c1 = (byte >> 4) as usize;
+        acc += unsafe { *tables.get_unchecked(g * LUT_W + c0) } as i32;
+        acc += unsafe { *tables.get_unchecked((g + 1) * LUT_W + c1) } as i32;
+        g += 2;
+    }
+    acc
+}
+
+/// Fast-path accumulation: int8 table entries summed per scale-block in
+/// i32, then folded into f32 with the block scale.
+#[inline]
+pub fn gemv_row_lut8(
+    wrow: &[u8],
+    tables: &[i8],
+    block_scales: &[f32],
+    block_groups: usize,
+) -> f32 {
+    let mut facc = 0f32;
+    let bytes_per_block = block_groups / 2; // 2 groups per byte
+    for (blk, bytes) in wrow.chunks(bytes_per_block).enumerate() {
+        let mut acc = 0i32;
+        let base = blk * block_groups * LUT_W;
+        let mut g = 0usize;
+        for &byte in bytes {
+            let c0 = (byte & 0xf) as usize;
+            let c1 = (byte >> 4) as usize;
+            acc += unsafe { *tables.get_unchecked(base + g * LUT_W + c0) } as i32;
+            acc += unsafe { *tables.get_unchecked(base + (g + 1) * LUT_W + c1) } as i32;
+            g += 2;
+        }
+        facc += acc as f32 * block_scales[blk];
+    }
+    facc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::quant::training_scheme_ref_row;
+    use crate::util::Rng;
+
+    fn random_ternary(m: usize, k: usize, seed: u64) -> TernaryWeights {
+        let mut rng = Rng::new(seed);
+        let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+        TernaryWeights::from_ternary(q, m, k, 0.05)
+    }
+
+    /// Paper Table 5: the pack/unpack enumeration for every pair.
+    #[test]
+    fn table5_pack_unpack() {
+        let expected: [( [i8; 2], u8); 9] = [
+            ([-1, -1], 0b0000),
+            ([-1, 0], 0b0001),
+            ([-1, 1], 0b0010),
+            ([0, -1], 0b0011),
+            ([0, 0], 0b0100),
+            ([0, 1], 0b0101),
+            ([1, -1], 0b0110),
+            ([1, 0], 0b0111),
+            ([1, 1], 0b1000),
+        ];
+        for (pair, code) in expected {
+            let mut row = [pair[0], pair[1], 0, 0];
+            let mut out = [0u8; 1];
+            pack_row_tl1(&row, &mut out);
+            assert_eq!(out[0] & 0xf, code, "pack {pair:?}");
+            // And the decode direction:
+            let d = decode_code(code as usize, 3, 2, &TERNARY);
+            assert_eq!(&d[..], &pair[..], "unpack {code:#06b}");
+            row = [0, 0, pair[0], pair[1]];
+            pack_row_tl1(&row, &mut out);
+            assert_eq!(out[0] >> 4, code, "pack high nibble {pair:?}");
+        }
+    }
+
+    #[test]
+    fn tables_enumerate_pair_sums() {
+        let aq = [3i8, -5, 100, 2];
+        let t = build_tables_tl1(&aq);
+        // group 0, code for (1, -1) = 3*2+0 = 6 → 3*1 + (-5)*(-1) = 8
+        assert_eq!(t[6], 8);
+        // group 1, code for (-1, 1) = 0*3+2 = 2 → -100 + 2 = -98
+        assert_eq!(t[LUT_W + 2], -98);
+        // all-zero code (0,0) = 4 → 0
+        assert_eq!(t[4], 0);
+    }
+
+    #[test]
+    fn tl1_1_is_bit_identical_to_training_scheme() {
+        let (m, k) = (24, 768);
+        let t = random_ternary(m, k, 21);
+        let mut rng = Rng::new(22);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        let packed = TL1_1.quantize(&t);
+        let p = TL1_1.prepare(&x, k);
+        let act = quantize_act_int8(&x);
+        let mut out = vec![0f32; m];
+        TL1_1.gemv(&packed, &p, &mut out);
+        for r in 0..m {
+            assert_eq!(out[r], training_scheme_ref_row(t.row(r), t.scale, &act), "row {r}");
+        }
+    }
+
+    #[test]
+    fn tl1_0_close_but_not_exact() {
+        let (m, k) = (32, 1024);
+        let t = random_ternary(m, k, 31);
+        let mut rng = Rng::new(32);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        let act = quantize_act_int8(&x);
+        let packed = TL1_0.quantize(&t);
+        let p = TL1_0.prepare(&x, k);
+        let mut out = vec![0f32; m];
+        TL1_0.gemv(&packed, &p, &mut out);
+        // L2-relative error across the row vector: per-row relative error
+        // is meaningless on near-zero dot products.
+        let mut err2 = 0f64;
+        let mut ref2 = 0f64;
+        let mut any_diff = false;
+        for r in 0..m {
+            let want = training_scheme_ref_row(t.row(r), t.scale, &act) as f64;
+            err2 += ((out[r] as f64) - want).powi(2);
+            ref2 += want * want;
+            any_diff |= out[r] as f64 != want;
+        }
+        let rel = (err2 / ref2.max(1e-12)).sqrt();
+        assert!(rel < 0.05, "requantized LUT should be close: {rel}");
+        assert!(any_diff, "TL1_0 should NOT be bit-exact (it requantizes the LUT)");
+    }
+
+    #[test]
+    fn dequantize_round_trip() {
+        let t = random_ternary(4, 64, 41);
+        let packed = TL1_0.quantize(&t);
+        assert_eq!(packed.bits_per_weight(), 2.0);
+        assert_eq!(TL1_0.dequantize(&packed), t.dequantize());
+    }
+
+    #[test]
+    fn k_not_multiple_of_block_still_works() {
+        // K/2 groups not a multiple of LUT_BLOCK_GROUPS exercises the
+        // trailing partial block in the `_0` path.
+        let k = 4 * 9; // 18 groups < 32
+        let t = random_ternary(8, k, 51);
+        let mut rng = Rng::new(52);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        let packed = TL1_0.quantize(&t);
+        let p = TL1_0.prepare(&x, k);
+        let mut out = vec![0f32; 8];
+        TL1_0.gemv(&packed, &p, &mut out);
+        let wd = t.dequantize();
+        for r in 0..8 {
+            let want: f32 = wd[r * k..(r + 1) * k].iter().zip(&x).map(|(w, a)| w * a).sum();
+            assert!((out[r] - want).abs() < 0.05 * want.abs().max(1.0), "row {r}");
+        }
+    }
+}

@@ -1,0 +1,54 @@
+//! # bitnet-rs — Bitnet.cpp reproduction
+//!
+//! A from-scratch reproduction of *"Bitnet.cpp: Efficient Edge Inference for
+//! Ternary LLMs"* (Wang et al., ACL 2025) as a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the inference engine: a ternary mpGEMM
+//!   kernel library ([`kernels`]) with the paper's TL1/TL2/I2_S kernels and
+//!   every baseline it compares against, a BitNet b1.58 transformer
+//!   ([`model`]), a continuous-batching serving coordinator
+//!   ([`coordinator`]), and the perf/eval harnesses that regenerate the
+//!   paper's tables and figures ([`perf`], [`eval`]).
+//! * **Layer 2** — `python/compile/model.py`: the same model in JAX,
+//!   AOT-lowered to HLO text artifacts.
+//! * **Layer 1** — `python/compile/kernels/ternary_matmul.py`: the
+//!   element-wise LUT mpGEMM as a Pallas kernel, loaded and executed from
+//!   Rust through [`runtime`] (PJRT, `xla` crate).
+//!
+//! Python never runs on the request path: artifacts are built once by
+//! `make artifacts`; the serving binary is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use bitnet::kernels::{QuantType, kernel_for};
+//! use bitnet::model::{ModelConfig, Transformer};
+//!
+//! // Build a tiny synthetic BitNet b1.58 model quantized with the lossless
+//! // I2_S kernel and generate a few tokens.
+//! let cfg = ModelConfig::tiny();
+//! let model = Transformer::synthetic(&cfg, QuantType::I2S, 42);
+//! let mut session = model.new_session(64);
+//! let logits = model.prefill(&mut session, &[1, 2, 3]);
+//! assert_eq!(logits.len(), cfg.vocab_size);
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod kernels;
+pub mod metrics;
+pub mod model;
+pub mod modelio;
+pub mod perf;
+pub mod runtime;
+pub mod threadpool;
+pub mod tokenizer;
+pub mod util;
+
+pub use kernels::QuantType;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

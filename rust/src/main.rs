@@ -1,0 +1,226 @@
+//! `bitnet` — the Bitnet.cpp-reproduction launcher.
+//!
+//! Subcommands:
+//!   info                         print the kernel library (paper Table 1)
+//!   gen-model                    generate a synthetic BTNZ checkpoint
+//!   run                          generate tokens from a prompt
+//!   serve                        run the batching engine on a synthetic workload
+//!   pjrt                         execute an AOT artifact through PJRT
+//!
+//! Common options: --preset tiny|100M|700M|…, --kernel I2_S|TL2_0|…,
+//! --threads N, --config path.toml. See README for examples.
+
+use anyhow::{bail, Context, Result};
+use bitnet::cli::Args;
+use bitnet::config::{Config, LaunchConfig};
+use bitnet::coordinator::{Engine, EngineConfig, Request};
+use bitnet::kernels::{library_table, QuantType};
+use bitnet::model::{ModelConfig, SamplingParams, Transformer};
+use bitnet::model::weights::Checkpoint;
+use bitnet::tokenizer::{synthetic_corpus, Tokenizer};
+use std::path::PathBuf;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "usage: bitnet <info|gen-model|run|serve|pjrt> [options]
+  info
+  gen-model --preset tiny --seed 42 --out model.btnz
+  run       --preset tiny --kernel I2_S --threads 1 --prompt 'text' --max-new 32
+            [--model model.btnz] [--temperature 0.0]
+  serve     --preset tiny --kernel TL2_0 --threads 2 --requests 16 --max-batch 8
+  pjrt      --artifact artifacts/ternary_matmul.hlo.txt";
+
+fn run() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["help", "verbose"])?;
+    if args.has_flag("help") || args.subcommand.is_none() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match args.subcommand.as_deref().unwrap() {
+        "info" => cmd_info(),
+        "gen-model" => cmd_gen_model(&args),
+        "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
+        "pjrt" => cmd_pjrt(&args),
+        other => bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+fn launch_config(args: &Args) -> Result<LaunchConfig> {
+    let mut lc = match args.get("config") {
+        Some(path) => LaunchConfig::from_config(&Config::load(&PathBuf::from(path))?),
+        None => LaunchConfig::default(),
+    };
+    if let Some(p) = args.get("preset") {
+        lc.model_preset = p.to_string();
+    }
+    if let Some(k) = args.get("kernel") {
+        lc.kernel = k.to_string();
+    }
+    if let Some(m) = args.get("model") {
+        lc.model_path = Some(m.to_string());
+    }
+    lc.threads = args.get_usize("threads", lc.threads)?;
+    lc.max_batch = args.get_usize("max-batch", lc.max_batch)?;
+    lc.seed = args.get_usize("seed", lc.seed as usize)? as u64;
+    Ok(lc)
+}
+
+fn build_model(lc: &LaunchConfig) -> Result<Transformer> {
+    let qtype = QuantType::parse(&lc.kernel)
+        .with_context(|| format!("unknown kernel {:?}", lc.kernel))?;
+    let ck = match &lc.model_path {
+        Some(path) => bitnet::modelio::load(&PathBuf::from(path))?,
+        None => {
+            let cfg = ModelConfig::preset(&lc.model_preset)
+                .with_context(|| format!("unknown preset {:?}", lc.model_preset))?;
+            Checkpoint::synthetic(&cfg, lc.seed)
+        }
+    };
+    eprintln!(
+        "model {} ({:.1}M params, {:.1}M ternary) kernel {} threads {}",
+        ck.config.name,
+        ck.config.param_count() as f64 / 1e6,
+        ck.config.ternary_param_count() as f64 / 1e6,
+        qtype.name(),
+        lc.threads
+    );
+    Ok(Transformer::from_checkpoint(&ck, qtype, lc.threads))
+}
+
+fn cmd_info() -> Result<()> {
+    println!("Bitnet.cpp ternary mpGEMM library (paper Table 1 + baselines)");
+    println!("{:<9} {:<10} {:<13} {:>6} {:>9} {:>7}", "kernel", "class", "unit", "bpw", "lossless", "K mult");
+    for info in library_table() {
+        println!(
+            "{:<9} {:<10} {:<13} {:>6.2} {:>9} {:>7}",
+            info.name,
+            match info.class {
+                bitnet::kernels::KernelClass::LutBased => "LUT",
+                bitnet::kernels::KernelClass::MadBased => "MAD",
+            },
+            if info.element_wise { "element-wise" } else { "bit-wise" },
+            info.bpw,
+            if info.lossless { "yes" } else { "no" },
+            info.k_multiple
+        );
+    }
+    Ok(())
+}
+
+fn cmd_gen_model(args: &Args) -> Result<()> {
+    let preset = args.get_or("preset", "tiny");
+    let seed = args.get_usize("seed", 42)? as u64;
+    let out = PathBuf::from(args.get_or("out", "model.btnz"));
+    let cfg = ModelConfig::preset(&preset).with_context(|| format!("unknown preset {preset:?}"))?;
+    let ck = Checkpoint::synthetic(&cfg, seed);
+    bitnet::modelio::save(&ck, &out)?;
+    println!(
+        "wrote {} ({} params, {} bytes)",
+        out.display(),
+        cfg.param_count(),
+        std::fs::metadata(&out)?.len()
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let lc = launch_config(args)?;
+    let model = build_model(&lc)?;
+    let prompt_text = args.get_or("prompt", "the ternary model");
+    let max_new = args.get_usize("max-new", 32)?;
+    let temperature: f32 = args.get_or("temperature", "0.0").parse().context("--temperature")?;
+
+    let tok = Tokenizer::train(&synthetic_corpus(5000, 1), model.cfg.vocab_size.min(2048));
+    let prompt = tok.encode(&prompt_text);
+    let mut session = model.new_session(prompt.len() + max_new);
+
+    let t0 = std::time::Instant::now();
+    let mut logits = model.prefill(&mut session, &prompt);
+    let prefill_time = t0.elapsed();
+
+    let params = SamplingParams { temperature, top_k: 40, top_p: 0.95 };
+    let mut rng = bitnet::util::Rng::new(lc.seed);
+    let mut generated = Vec::new();
+    let t1 = std::time::Instant::now();
+    for _ in 0..max_new {
+        let next = bitnet::model::sample(&logits, &params, &mut rng);
+        generated.push(next);
+        logits = model.decode_step(&mut session, next);
+    }
+    let decode_time = t1.elapsed();
+
+    println!("{}", tok.decode(&generated));
+    eprintln!(
+        "prefill {} tok in {:.1} ms | decode {} tok in {:.1} ms ({:.2} tok/s)",
+        prompt.len(),
+        prefill_time.as_secs_f64() * 1e3,
+        max_new,
+        decode_time.as_secs_f64() * 1e3,
+        max_new as f64 / decode_time.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let lc = launch_config(args)?;
+    let n_requests = args.get_usize("requests", 16)?;
+    let max_new = args.get_usize("max-new", 16)?;
+    let model = build_model(&lc)?;
+    let vocab = model.cfg.vocab_size as u32;
+    let engine = Engine::start(
+        model,
+        EngineConfig {
+            max_batch: lc.max_batch,
+            kv_budget_tokens: lc.kv_budget_tokens,
+            eos_token: 1,
+            seed: lc.seed,
+        },
+    );
+    let mut rng = bitnet::util::Rng::new(lc.seed + 1);
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..n_requests)
+        .map(|_| {
+            let len = 4 + rng.next_below(12);
+            let prompt: Vec<u32> = (0..len).map(|_| 3 + rng.next_below(vocab as usize - 3) as u32).collect();
+            engine.submit(Request::greedy(prompt, max_new))
+        })
+        .collect();
+    let mut total_tokens = 0usize;
+    for h in handles {
+        let (tokens, reason, stats) = h.wait();
+        total_tokens += tokens.len();
+        if args.has_flag("verbose") {
+            eprintln!("req done: {} tokens, {:?}, ttft {:.1}ms", tokens.len(), reason, stats.ttft.as_secs_f64() * 1e3);
+        }
+    }
+    let wall = t0.elapsed();
+    println!(
+        "served {n_requests} requests, {total_tokens} tokens in {:.2}s → {:.2} tok/s aggregate",
+        wall.as_secs_f64(),
+        total_tokens as f64 / wall.as_secs_f64()
+    );
+    println!("engine: {}", engine.metrics.summary());
+    Ok(())
+}
+
+fn cmd_pjrt(args: &Args) -> Result<()> {
+    let artifact = args.get_or("artifact", "artifacts/ternary_matmul.hlo.txt");
+    let rt = bitnet::runtime::Runtime::new()?;
+    let exe = rt.load_hlo_text(&PathBuf::from(&artifact))?;
+    println!("loaded {artifact}: {}", exe.describe());
+    // Smoke-execute with the manifest-declared shapes if present.
+    match bitnet::runtime::manifest_for(&PathBuf::from(&artifact)) {
+        Some(entry) => {
+            let outputs = exe.execute_random(&entry)?;
+            println!("executed: {} outputs, first values {:?}", outputs.len(), &outputs[0][..outputs[0].len().min(4)]);
+        }
+        None => println!("no manifest entry; skipping execution"),
+    }
+    Ok(())
+}

@@ -1,0 +1,157 @@
+//! Engine telemetry: counters and latency histograms, lock-free on the
+//! hot path (atomics), snapshotable for reporting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Fixed-bucket log-scale latency histogram (µs): 1µs .. ~17min.
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+const N_BUCKETS: usize = 30;
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: std::time::Duration) {
+        let us = d.as_micros() as u64;
+        let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(N_BUCKETS - 1);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of the
+    /// bucket containing the q-quantile).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us()
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Engine-wide metrics.
+#[derive(Default)]
+pub struct EngineMetrics {
+    pub requests_submitted: AtomicU64,
+    pub requests_completed: AtomicU64,
+    pub requests_rejected: AtomicU64,
+    pub prompt_tokens: AtomicU64,
+    pub generated_tokens: AtomicU64,
+    pub decode_steps: AtomicU64,
+    /// Sum of batch sizes over decode steps (mean batch = this / steps).
+    pub batched_tokens: AtomicU64,
+    pub step_latency: LatencyHistogram,
+    pub ttft: LatencyHistogram,
+}
+
+impl EngineMetrics {
+    pub fn new() -> EngineMetrics {
+        EngineMetrics::default()
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        let steps = self.decode_steps.load(Ordering::Relaxed);
+        if steps == 0 {
+            0.0
+        } else {
+            self.batched_tokens.load(Ordering::Relaxed) as f64 / steps as f64
+        }
+    }
+
+    /// Human-readable one-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "req {}/{} done, {} rejected | tokens {}+{} | steps {} (mean batch {:.2}) | step mean {:.1}µs p99 {}µs | ttft mean {:.1}µs",
+            self.requests_completed.load(Ordering::Relaxed),
+            self.requests_submitted.load(Ordering::Relaxed),
+            self.requests_rejected.load(Ordering::Relaxed),
+            self.prompt_tokens.load(Ordering::Relaxed),
+            self.generated_tokens.load(Ordering::Relaxed),
+            self.decode_steps.load(Ordering::Relaxed),
+            self.mean_batch(),
+            self.step_latency.mean_us(),
+            self.step_latency.quantile_us(0.99),
+            self.ttft.mean_us(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn histogram_records_and_quantiles() {
+        let h = LatencyHistogram::new();
+        for us in [10u64, 20, 40, 80, 10_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean_us() > 2000.0);
+        assert_eq!(h.max_us(), 10_000);
+        // p50 bucket upper bound covers ≤ 40µs values.
+        assert!(h.quantile_us(0.5) <= 64);
+        assert!(h.quantile_us(1.0) >= 10_000 / 2);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn mean_batch_math() {
+        let m = EngineMetrics::new();
+        m.decode_steps.store(4, Ordering::Relaxed);
+        m.batched_tokens.store(10, Ordering::Relaxed);
+        assert_eq!(m.mean_batch(), 2.5);
+    }
+}

@@ -1,0 +1,110 @@
+//! **BitLinear**: the ternary linear layer of BitNet b1.58, dispatching
+//! its mpGEMM through any kernel in the library. Holds the packed weight
+//! tensor; activation quantization happens inside the kernel's `prepare`
+//! so each kernel applies its own scheme (per-tensor for the lossless
+//! kernels, per-block for the llama.cpp baselines — exactly the
+//! distinction Figure 2 of the paper illustrates).
+
+use crate::kernels::quant::TernaryWeights;
+use crate::kernels::{kernel_for, matmul, Kernel, QTensor, QuantType};
+use crate::threadpool::ThreadPool;
+
+pub struct BitLinear {
+    pub qtensor: QTensor,
+    kernel: &'static dyn Kernel,
+    /// Output features (rows).
+    pub m: usize,
+    /// Input features (cols).
+    pub k: usize,
+}
+
+impl BitLinear {
+    /// Pack ternary weights for the given kernel.
+    pub fn new(w: &TernaryWeights, qtype: QuantType) -> BitLinear {
+        let kernel = kernel_for(qtype);
+        let info = kernel.info();
+        assert_eq!(
+            w.k % info.k_multiple,
+            0,
+            "{}: K={} not a multiple of {}",
+            info.name,
+            w.k,
+            info.k_multiple
+        );
+        BitLinear { qtensor: kernel.quantize(w), kernel, m: w.m, k: w.k }
+    }
+
+    pub fn qtype(&self) -> QuantType {
+        self.kernel.info().qtype
+    }
+
+    /// Single-row forward: `out = W · x`.
+    pub fn forward(&self, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.k);
+        debug_assert_eq!(out.len(), self.m);
+        let p = self.kernel.prepare(x, self.k);
+        self.kernel.gemv(&self.qtensor, &p, out);
+    }
+
+    /// Batched forward over `n` activation rows, parallelized on `pool`.
+    pub fn forward_batch(&self, x: &[f32], n: usize, out: &mut [f32], pool: &ThreadPool) {
+        matmul(self.kernel, &self.qtensor, x, n, out, pool);
+    }
+
+    /// Weight bytes this layer streams per token (memory-bound decode cost).
+    pub fn weight_bytes(&self) -> usize {
+        self.qtensor.weight_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_ternary(m: usize, k: usize, seed: u64) -> TernaryWeights {
+        let mut rng = Rng::new(seed);
+        let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+        TernaryWeights::from_ternary(q, m, k, 1.0 / (0.5 * k as f32).sqrt())
+    }
+
+    #[test]
+    fn forward_matches_dense() {
+        let (m, k) = (32, 256);
+        let w = random_ternary(m, k, 1);
+        let layer = BitLinear::new(&w, QuantType::I2S);
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        let mut out = vec![0f32; m];
+        layer.forward(&x, &mut out);
+        let wd = w.dequantize();
+        for r in 0..m {
+            let want: f32 = (0..k).map(|i| wd[r * k + i] * x[i]).sum();
+            assert!((out[r] - want).abs() < 0.05 * want.abs().max(1.0), "row {r}");
+        }
+    }
+
+    #[test]
+    fn batch_forward_consistent_with_single() {
+        let (m, k, n) = (16, 256, 4);
+        let w = random_ternary(m, k, 3);
+        let layer = BitLinear::new(&w, QuantType::Tl21);
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+        let pool = ThreadPool::new(2);
+        let mut out_b = vec![0f32; n * m];
+        layer.forward_batch(&x, n, &mut out_b, &pool);
+        for i in 0..n {
+            let mut out_s = vec![0f32; m];
+            layer.forward(&x[i * k..(i + 1) * k], &mut out_s);
+            assert_eq!(&out_b[i * m..(i + 1) * m], &out_s[..], "row {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not a multiple")]
+    fn rejects_misaligned_k() {
+        let w = random_ternary(4, 100, 5);
+        BitLinear::new(&w, QuantType::I2S);
+    }
+}

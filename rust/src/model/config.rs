@@ -1,0 +1,227 @@
+//! Model architecture configs. Shapes follow the BitNet b1.58 family used
+//! in the paper's Table 7 (sizes per Wang et al. 2024b, "1-bit AI Infra"),
+//! i.e. LLaMA-shaped transformers with ternary BitLinear projections.
+//!
+//! Sizes 700M…100B are used *shape-only* by the layer-composition bench
+//! (no host here fits a dense 100B); the runnable presets (`tiny`,
+//! `m100`) are small enough to train/infer end-to-end in CI.
+
+/// Transformer hyperparameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub hidden: usize,
+    /// FFN inner dimension (SwiGLU: three hidden×ffn matrices).
+    pub ffn: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// Grouped-query attention KV heads.
+    pub n_kv_heads: usize,
+    pub vocab_size: usize,
+    pub max_seq_len: usize,
+    pub rope_theta: f32,
+    pub rms_eps: f32,
+}
+
+impl ModelConfig {
+    /// Head dimension.
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.n_heads
+    }
+
+    /// KV projection output dimension.
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim()
+    }
+
+    /// Total parameter count (embeddings + blocks + head).
+    pub fn param_count(&self) -> u64 {
+        let h = self.hidden as u64;
+        let f = self.ffn as u64;
+        let v = self.vocab_size as u64;
+        let kv = self.kv_dim() as u64;
+        let per_layer = h * h          // wq
+            + h * kv * 2               // wk, wv
+            + h * h                    // wo
+            + h * f * 3                // w_gate, w_up, w_down
+            + h * 2; // two RMSNorm gains
+        v * h          // tok embedding
+            + self.n_layers as u64 * per_layer
+            + h            // final norm
+            + v * h // lm head (untied)
+    }
+
+    /// Ternary (BitLinear) parameter count — the weights the mpGEMM
+    /// kernels see. Embeddings/norms stay high-precision (BitNet b1.58).
+    pub fn ternary_param_count(&self) -> u64 {
+        let h = self.hidden as u64;
+        let f = self.ffn as u64;
+        let kv = self.kv_dim() as u64;
+        self.n_layers as u64 * (h * h * 2 + h * kv * 2 + h * f * 3)
+    }
+
+    /// The per-token weight-byte traffic for a given kernel bpw — the
+    /// quantity that bounds decode tokens/s on a memory-bound CPU.
+    pub fn decode_weight_bytes(&self, bpw: f64, embed_bpw: f64) -> f64 {
+        let ternary = self.ternary_param_count() as f64 * bpw / 8.0;
+        let head = (self.vocab_size * self.hidden) as f64 * embed_bpw / 8.0;
+        ternary + head
+    }
+
+    /// All matmul shapes (m, k) of one decode step — the workload the
+    /// kernel-level benches sweep (one GEMV per projection per layer +
+    /// the LM head).
+    pub fn gemv_shapes(&self) -> Vec<(usize, usize)> {
+        vec![
+            (self.hidden, self.hidden),  // wq
+            (self.kv_dim(), self.hidden), // wk
+            (self.kv_dim(), self.hidden), // wv
+            (self.hidden, self.hidden),  // wo
+            (self.ffn, self.hidden),     // w_gate
+            (self.ffn, self.hidden),     // w_up
+            (self.hidden, self.ffn),     // w_down
+        ]
+    }
+
+    // ---- Runnable presets -------------------------------------------------
+
+    /// ~1M params: unit/integration tests.
+    pub fn tiny() -> ModelConfig {
+        ModelConfig {
+            name: "tiny",
+            hidden: 256,
+            ffn: 768,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            vocab_size: 512,
+            max_seq_len: 256,
+            rope_theta: 10000.0,
+            rms_eps: 1e-5,
+        }
+    }
+
+    /// ~100M params: the end-to-end serving example (examples/serve_e2e.rs).
+    pub fn m100() -> ModelConfig {
+        ModelConfig {
+            name: "100M",
+            hidden: 768,
+            ffn: 2048,
+            n_layers: 12,
+            n_heads: 12,
+            n_kv_heads: 12,
+            vocab_size: 32000,
+            max_seq_len: 2048,
+            rope_theta: 10000.0,
+            rms_eps: 1e-5,
+        }
+    }
+
+    // ---- Paper Table 7 shape presets --------------------------------------
+
+    pub fn b700m() -> ModelConfig {
+        ModelConfig { name: "700M", hidden: 1536, ffn: 4096, n_layers: 24, n_heads: 16, n_kv_heads: 16, vocab_size: 32000, max_seq_len: 2048, rope_theta: 10000.0, rms_eps: 1e-5 }
+    }
+    pub fn b1_5() -> ModelConfig {
+        ModelConfig { name: "1.5B", hidden: 2048, ffn: 5632, n_layers: 24, n_heads: 32, n_kv_heads: 32, vocab_size: 32000, max_seq_len: 2048, rope_theta: 10000.0, rms_eps: 1e-5 }
+    }
+    pub fn b3_8() -> ModelConfig {
+        // Paper's 3.8B uses hidden 3200; we round K dims up to the next
+        // multiple of 256 so every kernel (TQ*/Q2_K need K % 256 == 0)
+        // runs on the same shape — see DESIGN.md §Substitutions.
+        ModelConfig { name: "3.8B", hidden: 3328, ffn: 8704, n_layers: 26, n_heads: 26, n_kv_heads: 26, vocab_size: 32000, max_seq_len: 2048, rope_theta: 10000.0, rms_eps: 1e-5 }
+    }
+    pub fn b7() -> ModelConfig {
+        ModelConfig { name: "7B", hidden: 4096, ffn: 11008, n_layers: 32, n_heads: 32, n_kv_heads: 32, vocab_size: 32000, max_seq_len: 2048, rope_theta: 10000.0, rms_eps: 1e-5 }
+    }
+    pub fn b13() -> ModelConfig {
+        ModelConfig { name: "13B", hidden: 5120, ffn: 13824, n_layers: 40, n_heads: 40, n_kv_heads: 40, vocab_size: 32000, max_seq_len: 2048, rope_theta: 10000.0, rms_eps: 1e-5 }
+    }
+    pub fn b30() -> ModelConfig {
+        ModelConfig { name: "30B", hidden: 6656, ffn: 17920, n_layers: 60, n_heads: 52, n_kv_heads: 52, vocab_size: 32000, max_seq_len: 2048, rope_theta: 10000.0, rms_eps: 1e-5 }
+    }
+    pub fn b70() -> ModelConfig {
+        ModelConfig { name: "70B", hidden: 8192, ffn: 28672, n_layers: 80, n_heads: 64, n_kv_heads: 8, vocab_size: 32000, max_seq_len: 2048, rope_theta: 10000.0, rms_eps: 1e-5 }
+    }
+    pub fn b100() -> ModelConfig {
+        ModelConfig { name: "100B", hidden: 9216, ffn: 32768, n_layers: 88, n_heads: 72, n_kv_heads: 8, vocab_size: 32000, max_seq_len: 2048, rope_theta: 10000.0, rms_eps: 1e-5 }
+    }
+
+    /// The paper's Table 7 size ladder (shape presets).
+    pub fn table7_sizes() -> Vec<ModelConfig> {
+        vec![
+            Self::b700m(),
+            Self::b1_5(),
+            Self::b3_8(),
+            Self::b7(),
+            Self::b13(),
+            Self::b30(),
+            Self::b70(),
+            Self::b100(),
+        ]
+    }
+
+    /// Look up any preset by name.
+    pub fn preset(name: &str) -> Option<ModelConfig> {
+        let mut all = Self::table7_sizes();
+        all.push(Self::tiny());
+        all.push(Self::m100());
+        all.into_iter().find(|c| c.name.eq_ignore_ascii_case(name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_land_near_nominal_sizes() {
+        let cases = [
+            (ModelConfig::b700m(), 0.7e9),
+            (ModelConfig::b1_5(), 1.5e9),
+            (ModelConfig::b3_8(), 3.8e9),
+            (ModelConfig::b7(), 7e9),
+            (ModelConfig::b13(), 13e9),
+            (ModelConfig::b30(), 30e9),
+            (ModelConfig::b70(), 70e9),
+            (ModelConfig::b100(), 100e9),
+        ];
+        for (cfg, want) in cases {
+            let got = cfg.param_count() as f64;
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.35, "{}: {got:.3e} vs nominal {want:.1e} (rel {rel:.2})", cfg.name);
+        }
+    }
+
+    #[test]
+    fn m100_is_about_100m() {
+        let got = ModelConfig::m100().param_count() as f64;
+        assert!((0.8e8..1.6e8).contains(&got), "{got:.3e}");
+    }
+
+    #[test]
+    fn head_dims_divide() {
+        for cfg in ModelConfig::table7_sizes() {
+            assert_eq!(cfg.hidden % cfg.n_heads, 0, "{}", cfg.name);
+            assert_eq!(cfg.n_heads % cfg.n_kv_heads, 0, "{}", cfg.name);
+            // All GEMV K dims must satisfy the strictest kernel (K % 256).
+            for (_, k) in cfg.gemv_shapes() {
+                assert_eq!(k % 256, 0, "{} k={k}", cfg.name);
+            }
+        }
+    }
+
+    #[test]
+    fn ternary_fraction_dominates() {
+        let cfg = ModelConfig::b7();
+        let frac = cfg.ternary_param_count() as f64 / cfg.param_count() as f64;
+        assert!(frac > 0.9, "ternary fraction {frac}");
+    }
+
+    #[test]
+    fn preset_lookup() {
+        assert_eq!(ModelConfig::preset("3.8B").unwrap().hidden, 3328);
+        assert_eq!(ModelConfig::preset("tiny").unwrap().n_layers, 2);
+        assert!(ModelConfig::preset("404B").is_none());
+    }
+}

@@ -1,0 +1,436 @@
+//! The BitNet b1.58 transformer forward pass, with a chunked (GEMM)
+//! prefill path and a batched decode path — the compute engine behind the
+//! serving coordinator.
+//!
+//! Key properties:
+//! * every projection goes through [`BitLinear`] → pluggable mpGEMM kernel;
+//! * decode over a continuous batch runs each projection as one GEMM over
+//!   the batch rows (weights streamed once per batch, the memory-bound win
+//!   of dynamic batching);
+//! * prefill processes the whole prompt as one chunk (compute-bound GEMM),
+//!   matching the paper's decode/prefill distinction (§Limitations).
+
+use super::bitlinear::BitLinear;
+use super::config::ModelConfig;
+use super::ops::{rmsnorm, rope, softmax, swiglu};
+use super::weights::Checkpoint;
+use crate::kernels::baselines::f16_mad::dot_f16;
+use crate::kernels::QuantType;
+use crate::threadpool::ThreadPool;
+use crate::util::f32_to_f16;
+
+/// High-precision (f16-stored) dense layer for the LM head.
+pub struct DenseF16 {
+    data: Vec<u8>,
+    pub m: usize,
+    pub k: usize,
+}
+
+impl DenseF16 {
+    pub fn new(w: &[f32], m: usize, k: usize) -> DenseF16 {
+        assert_eq!(w.len(), m * k);
+        let mut data = vec![0u8; m * k * 2];
+        for (chunk, &v) in data.chunks_exact_mut(2).zip(w.iter()) {
+            chunk.copy_from_slice(&f32_to_f16(v).to_le_bytes());
+        }
+        DenseF16 { data, m, k }
+    }
+
+    pub fn forward(&self, x: &[f32], out: &mut [f32], pool: &ThreadPool) {
+        assert_eq!(x.len(), self.k);
+        assert_eq!(out.len(), self.m);
+        let row_bytes = self.k * 2;
+        let chunks = (pool.size() * 4).min(self.m);
+        let rows_per = crate::util::ceil_div(self.m, chunks);
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        pool.parallel_for(chunks, |c| {
+            let out_ptr = &out_ptr;
+            let lo = c * rows_per;
+            if lo >= self.m {
+                return;
+            }
+            let hi = ((c + 1) * rows_per).min(self.m);
+            let slice = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(lo), hi - lo) };
+            for (o, r) in slice.iter_mut().zip(lo..hi) {
+                *o = dot_f16(&self.data[r * row_bytes..(r + 1) * row_bytes], x);
+            }
+        });
+    }
+
+    pub fn weight_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Packed weights for one layer.
+pub struct Layer {
+    pub wq: BitLinear,
+    pub wk: BitLinear,
+    pub wv: BitLinear,
+    pub wo: BitLinear,
+    pub w_gate: BitLinear,
+    pub w_up: BitLinear,
+    pub w_down: BitLinear,
+    pub attn_norm: Vec<f32>,
+    pub ffn_norm: Vec<f32>,
+}
+
+/// Per-sequence inference state: position + per-layer KV cache.
+pub struct Session {
+    pub pos: usize,
+    pub capacity: usize,
+    kv_dim: usize,
+    /// One (k, v) pair of `capacity × kv_dim` buffers per layer.
+    k_cache: Vec<Vec<f32>>,
+    v_cache: Vec<Vec<f32>>,
+}
+
+impl Session {
+    pub fn new(n_layers: usize, kv_dim: usize, capacity: usize) -> Session {
+        Session {
+            pos: 0,
+            capacity,
+            kv_dim,
+            k_cache: (0..n_layers).map(|_| vec![0f32; capacity * kv_dim]).collect(),
+            v_cache: (0..n_layers).map(|_| vec![0f32; capacity * kv_dim]).collect(),
+        }
+    }
+
+    fn append(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        assert!(pos < self.capacity, "KV cache overflow at pos {pos}");
+        let d = self.kv_dim;
+        self.k_cache[layer][pos * d..(pos + 1) * d].copy_from_slice(k);
+        self.v_cache[layer][pos * d..(pos + 1) * d].copy_from_slice(v);
+    }
+
+    /// Bytes held by the KV cache (coordinator accounting).
+    pub fn kv_bytes(&self) -> usize {
+        self.k_cache.iter().chain(self.v_cache.iter()).map(|v| v.len() * 4).sum()
+    }
+
+    /// Reset for reuse.
+    pub fn clear(&mut self) {
+        self.pos = 0;
+    }
+}
+
+/// The packed model.
+pub struct Transformer {
+    pub cfg: ModelConfig,
+    pub qtype: QuantType,
+    pub tok_embed: Vec<f32>,
+    pub layers: Vec<Layer>,
+    pub final_norm: Vec<f32>,
+    pub lm_head: DenseF16,
+    pub pool: ThreadPool,
+}
+
+impl Transformer {
+    /// Pack a checkpoint for the given kernel, with `n_threads` compute
+    /// threads.
+    pub fn from_checkpoint(ck: &Checkpoint, qtype: QuantType, n_threads: usize) -> Transformer {
+        let cfg = ck.config.clone();
+        let layers = ck
+            .layers
+            .iter()
+            .map(|l| Layer {
+                wq: BitLinear::new(&l.wq, qtype),
+                wk: BitLinear::new(&l.wk, qtype),
+                wv: BitLinear::new(&l.wv, qtype),
+                wo: BitLinear::new(&l.wo, qtype),
+                w_gate: BitLinear::new(&l.w_gate, qtype),
+                w_up: BitLinear::new(&l.w_up, qtype),
+                w_down: BitLinear::new(&l.w_down, qtype),
+                attn_norm: l.attn_norm.clone(),
+                ffn_norm: l.ffn_norm.clone(),
+            })
+            .collect();
+        Transformer {
+            lm_head: DenseF16::new(&ck.lm_head, cfg.vocab_size, cfg.hidden),
+            tok_embed: ck.tok_embed.clone(),
+            final_norm: ck.final_norm.clone(),
+            layers,
+            qtype,
+            cfg,
+            pool: ThreadPool::new(n_threads.max(1)),
+        }
+    }
+
+    /// Synthetic model shortcut (tests, examples, benches).
+    pub fn synthetic(cfg: &ModelConfig, qtype: QuantType, seed: u64) -> Transformer {
+        Self::from_checkpoint(&Checkpoint::synthetic(cfg, seed), qtype, 1)
+    }
+
+    pub fn new_session(&self, capacity: usize) -> Session {
+        Session::new(self.cfg.n_layers, self.cfg.kv_dim(), capacity.min(self.cfg.max_seq_len))
+    }
+
+    /// Total packed weight bytes streamed per decoded token.
+    pub fn weight_bytes_per_token(&self) -> usize {
+        let per_layer: usize = self
+            .layers
+            .first()
+            .map(|l| {
+                l.wq.weight_bytes()
+                    + l.wk.weight_bytes()
+                    + l.wv.weight_bytes()
+                    + l.wo.weight_bytes()
+                    + l.w_gate.weight_bytes()
+                    + l.w_up.weight_bytes()
+                    + l.w_down.weight_bytes()
+            })
+            .unwrap_or(0);
+        per_layer * self.layers.len() + self.lm_head.weight_bytes()
+    }
+
+    /// Prefill `tokens` into `session` as one chunk; returns the logits of
+    /// the final position.
+    pub fn prefill(&self, session: &mut Session, tokens: &[u32]) -> Vec<f32> {
+        assert!(!tokens.is_empty());
+        let n = tokens.len();
+        let h = self.cfg.hidden;
+        let base_pos = session.pos;
+        // Embed the chunk.
+        let mut xs = vec![0f32; n * h];
+        for (i, &t) in tokens.iter().enumerate() {
+            xs[i * h..(i + 1) * h]
+                .copy_from_slice(&self.tok_embed[t as usize * h..(t as usize + 1) * h]);
+        }
+        let positions: Vec<usize> = (0..n).map(|i| base_pos + i).collect();
+        {
+            let mut refs = [&mut *session];
+            for (li, layer) in self.layers.iter().enumerate() {
+                self.block_chunk(layer, li, &mut xs, n, &positions, &mut refs, true);
+            }
+        }
+        session.pos = base_pos + n;
+        self.logits_for(&xs[(n - 1) * h..])
+    }
+
+    /// One decode step for a single sequence.
+    pub fn decode_step(&self, session: &mut Session, token: u32) -> Vec<f32> {
+        let mut sessions = [session];
+        let mut out = self.decode_batch(&mut sessions, &[token]);
+        out.pop().unwrap()
+    }
+
+    /// One decode step for a continuous batch: `tokens[i]` is appended to
+    /// `sessions[i]`. Each projection runs as a single GEMM over the batch.
+    /// Returns one logits vector per sequence.
+    pub fn decode_batch(&self, sessions: &mut [&mut Session], tokens: &[u32]) -> Vec<Vec<f32>> {
+        assert_eq!(sessions.len(), tokens.len());
+        let n = tokens.len();
+        let h = self.cfg.hidden;
+        let mut xs = vec![0f32; n * h];
+        for (i, &t) in tokens.iter().enumerate() {
+            xs[i * h..(i + 1) * h]
+                .copy_from_slice(&self.tok_embed[t as usize * h..(t as usize + 1) * h]);
+        }
+        let positions: Vec<usize> = sessions.iter().map(|s| s.pos).collect();
+        for (li, layer) in self.layers.iter().enumerate() {
+            self.block_chunk(layer, li, &mut xs, n, &positions, sessions, false);
+        }
+        for s in sessions.iter_mut() {
+            s.pos += 1;
+        }
+        (0..n).map(|i| self.logits_for(&xs[i * h..(i + 1) * h])).collect()
+    }
+
+    /// One transformer block over a chunk of `n` rows.
+    ///
+    /// `prefill` mode: all rows belong to `sessions[0]` at ascending
+    /// positions (causal attention inside the chunk). Batch mode: row `i`
+    /// belongs to `sessions[i]` at `positions[i]`.
+    #[allow(clippy::too_many_arguments)]
+    fn block_chunk(
+        &self,
+        layer: &Layer,
+        li: usize,
+        xs: &mut [f32],
+        n: usize,
+        positions: &[usize],
+        sessions: &mut [&mut Session],
+        prefill: bool,
+    ) {
+        let cfg = &self.cfg;
+        let h = cfg.hidden;
+        let hd = cfg.head_dim();
+        let kvd = cfg.kv_dim();
+        let group = cfg.n_heads / cfg.n_kv_heads;
+
+        // ---- Attention ----
+        let mut normed = vec![0f32; n * h];
+        for i in 0..n {
+            rmsnorm(&xs[i * h..(i + 1) * h], &layer.attn_norm, cfg.rms_eps, &mut normed[i * h..(i + 1) * h]);
+        }
+        let mut q = vec![0f32; n * h];
+        let mut k = vec![0f32; n * kvd];
+        let mut v = vec![0f32; n * kvd];
+        layer.wq.forward_batch(&normed, n, &mut q, &self.pool);
+        layer.wk.forward_batch(&normed, n, &mut k, &self.pool);
+        layer.wv.forward_batch(&normed, n, &mut v, &self.pool);
+        for i in 0..n {
+            rope(&mut q[i * h..(i + 1) * h], cfg.n_heads, hd, positions[i], cfg.rope_theta);
+            rope(&mut k[i * kvd..(i + 1) * kvd], cfg.n_kv_heads, hd, positions[i], cfg.rope_theta);
+            let s = if prefill { &mut *sessions[0] } else { &mut *sessions[i] };
+            s.append(li, positions[i], &k[i * kvd..(i + 1) * kvd], &v[i * kvd..(i + 1) * kvd]);
+        }
+        // Scaled dot-product attention per row against its session's cache.
+        let mut attn_out = vec![0f32; n * h];
+        let scale = 1.0 / (hd as f32).sqrt();
+        for i in 0..n {
+            let s: &Session = if prefill { &*sessions[0] } else { &*sessions[i] };
+            let ctx_len = positions[i] + 1; // causal: everything ≤ this position
+            let kc = &s.k_cache[li];
+            let vc = &s.v_cache[li];
+            for head in 0..cfg.n_heads {
+                let kv_head = head / group;
+                let qh = &q[i * h + head * hd..i * h + (head + 1) * hd];
+                let mut scores = vec![0f32; ctx_len];
+                for (t, sc) in scores.iter_mut().enumerate() {
+                    let kt = &kc[t * kvd + kv_head * hd..t * kvd + (kv_head + 1) * hd];
+                    *sc = qh.iter().zip(kt).map(|(a, b)| a * b).sum::<f32>() * scale;
+                }
+                softmax(&mut scores);
+                let out = &mut attn_out[i * h + head * hd..i * h + (head + 1) * hd];
+                for (t, &w) in scores.iter().enumerate() {
+                    let vt = &vc[t * kvd + kv_head * hd..t * kvd + (kv_head + 1) * hd];
+                    for (o, &vv) in out.iter_mut().zip(vt) {
+                        *o += w * vv;
+                    }
+                }
+            }
+        }
+        let mut proj = vec![0f32; n * h];
+        layer.wo.forward_batch(&attn_out, n, &mut proj, &self.pool);
+        for (x, p) in xs.iter_mut().zip(proj.iter()) {
+            *x += p;
+        }
+
+        // ---- FFN (SwiGLU) ----
+        for i in 0..n {
+            rmsnorm(&xs[i * h..(i + 1) * h], &layer.ffn_norm, cfg.rms_eps, &mut normed[i * h..(i + 1) * h]);
+        }
+        let f = cfg.ffn;
+        let mut gate = vec![0f32; n * f];
+        let mut up = vec![0f32; n * f];
+        layer.w_gate.forward_batch(&normed, n, &mut gate, &self.pool);
+        layer.w_up.forward_batch(&normed, n, &mut up, &self.pool);
+        let mut act = vec![0f32; n * f];
+        swiglu(&gate, &up, &mut act);
+        let mut down = vec![0f32; n * h];
+        layer.w_down.forward_batch(&act, n, &mut down, &self.pool);
+        for (x, d) in xs.iter_mut().zip(down.iter()) {
+            *x += d;
+        }
+    }
+
+    fn logits_for(&self, x: &[f32]) -> Vec<f32> {
+        let h = self.cfg.hidden;
+        let mut normed = vec![0f32; h];
+        rmsnorm(&x[..h], &self.final_norm, self.cfg.rms_eps, &mut normed);
+        let mut logits = vec![0f32; self.cfg.vocab_size];
+        self.lm_head.forward(&normed, &mut logits, &self.pool);
+        logits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_model(qtype: QuantType) -> Transformer {
+        Transformer::synthetic(&ModelConfig::tiny(), qtype, 7)
+    }
+
+    #[test]
+    fn prefill_then_decode_matches_token_by_token() {
+        let model = tiny_model(QuantType::I2S);
+        let tokens = [5u32, 10, 400, 3, 77];
+        // Path A: chunked prefill.
+        let mut s1 = model.new_session(64);
+        let logits_a = model.prefill(&mut s1, &tokens);
+        // Path B: token-by-token prefill (chunks of one).
+        let mut s2 = model.new_session(64);
+        let mut logits_b = Vec::new();
+        for &t in &tokens {
+            logits_b = model.prefill(&mut s2, &[t]);
+        }
+        assert_eq!(s1.pos, s2.pos);
+        for (a, b) in logits_a.iter().zip(logits_b.iter()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn decode_batch_matches_individual_decode() {
+        let model = tiny_model(QuantType::Tl21);
+        let prompts: [&[u32]; 3] = [&[1, 2, 3], &[9, 8], &[100, 200, 300, 400]];
+        // Individual path.
+        let mut singles = Vec::new();
+        for p in prompts {
+            let mut s = model.new_session(64);
+            model.prefill(&mut s, p);
+            let l = model.decode_step(&mut s, 42);
+            singles.push(l);
+        }
+        // Batched path.
+        let mut sessions: Vec<Session> = prompts
+            .iter()
+            .map(|p| {
+                let mut s = model.new_session(64);
+                model.prefill(&mut s, p);
+                s
+            })
+            .collect();
+        let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+        let batched = model.decode_batch(&mut refs, &[42, 42, 42]);
+        for (i, (a, b)) in singles.iter().zip(batched.iter()).enumerate() {
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert!((x - y).abs() < 1e-4, "seq {i}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn logits_are_finite_and_varied() {
+        let model = tiny_model(QuantType::Tl20);
+        let mut s = model.new_session(32);
+        let logits = model.prefill(&mut s, &[1, 2, 3]);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        let min = logits.iter().cloned().fold(f32::INFINITY, f32::min);
+        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert!(max > min, "degenerate logits");
+    }
+
+    #[test]
+    fn lossless_kernels_agree_bitwise_on_logits() {
+        // The paper's Figure 2 property at model level: I2_S, TL1_1 and
+        // TL2_1 produce identical logits (same integer math everywhere).
+        let tokens = [3u32, 1, 4, 1, 5, 9, 2, 6];
+        let mut outs = Vec::new();
+        for qt in [QuantType::I2S, QuantType::Tl11, QuantType::Tl21] {
+            let model = tiny_model(qt);
+            let mut s = model.new_session(32);
+            let l = model.prefill(&mut s, &tokens);
+            outs.push(l);
+        }
+        assert_eq!(outs[0], outs[1], "I2_S vs TL1_1");
+        assert_eq!(outs[0], outs[2], "I2_S vs TL2_1");
+    }
+
+    #[test]
+    fn kv_overflow_panics() {
+        let model = tiny_model(QuantType::I2S);
+        let mut s = model.new_session(4);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            model.prefill(&mut s, &[1, 2, 3, 4, 5, 6]);
+        }));
+        assert!(result.is_err());
+    }
+}

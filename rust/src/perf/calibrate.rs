@@ -1,0 +1,102 @@
+//! Kernel calibration: measured GEMV throughput on an out-of-cache
+//! working set, used to compose the Table 7 / Figure 1 estimates for
+//! model sizes that cannot be hosted dense (see DESIGN.md
+//! §Substitutions — the paper's own N/A entries are the same phenomenon).
+
+use crate::kernels::quant::TernaryWeights;
+use crate::kernels::{kernel_for, matmul, QuantType};
+use crate::threadpool::ThreadPool;
+use crate::util::Rng;
+use std::time::Instant;
+
+/// Measured per-kernel GEMV throughput.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelRate {
+    pub qtype: QuantType,
+    /// Packed weight bytes consumed per second of GEMV.
+    pub weight_bytes_per_s: f64,
+    /// Weights (elements) consumed per second.
+    pub weights_per_s: f64,
+    /// Achieved bits per weight of the packed tensor.
+    pub bpw: f64,
+}
+
+/// Calibrate one kernel on an `m`×`k` GEMV with `pool` threads.
+/// The working set should exceed LLC so rates are memory-realistic
+/// (default shape 8192×8192 ≈ 17–134 MB depending on bpw).
+pub fn calibrate_kernel(
+    qtype: QuantType,
+    m: usize,
+    k: usize,
+    pool: &ThreadPool,
+    min_iters: usize,
+) -> KernelRate {
+    let kern = kernel_for(qtype);
+    let mut rng = Rng::new(0xCA11);
+    let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+    let t = TernaryWeights::from_ternary(q, m, k, 0.05);
+    let packed = kern.quantize(&t);
+    let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+    let mut out = vec![0f32; m];
+    // Warm.
+    matmul(kern, &packed, &x, 1, &mut out, pool);
+    // Measure at least `min_iters` and at least ~200ms.
+    let t0 = Instant::now();
+    let mut iters = 0usize;
+    while iters < min_iters || t0.elapsed().as_secs_f64() < 0.2 {
+        matmul(kern, &packed, &x, 1, &mut out, pool);
+        iters += 1;
+        if iters > 10_000 {
+            break;
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64() / iters as f64;
+    let bytes = packed.weight_bytes() as f64;
+    KernelRate {
+        qtype,
+        weight_bytes_per_s: bytes / secs,
+        weights_per_s: (m * k) as f64 / secs,
+        bpw: packed.bits_per_weight(),
+    }
+}
+
+/// Estimated decode tokens/s for a model config under a calibrated rate:
+/// ternary projections at the measured kernel rate, LM head at the
+/// measured F16 rate, plus a fixed per-token overhead for attention/norms.
+pub fn tokens_per_second(
+    cfg: &crate::model::ModelConfig,
+    rate: &KernelRate,
+    f16_rate: &KernelRate,
+    overhead_s: f64,
+) -> f64 {
+    let ternary_bytes = cfg.ternary_param_count() as f64 * rate.bpw / 8.0;
+    let head_bytes = (cfg.vocab_size * cfg.hidden) as f64 * 2.0;
+    let t = ternary_bytes / rate.weight_bytes_per_s
+        + head_bytes / f16_rate.weight_bytes_per_s
+        + overhead_s;
+    1.0 / t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_produces_sane_rates() {
+        let pool = ThreadPool::new(2);
+        let r = calibrate_kernel(QuantType::I2S, 512, 1024, &pool, 3);
+        assert!(r.weight_bytes_per_s > 1e6, "{:?}", r);
+        assert!((r.bpw - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn tokens_per_second_ordering() {
+        let cfg = crate::model::ModelConfig::b3_8();
+        let fast = KernelRate { qtype: QuantType::Tl20, weight_bytes_per_s: 1e10, weights_per_s: 5e10, bpw: 1.67 };
+        let slow = KernelRate { qtype: QuantType::F16, weight_bytes_per_s: 1e10, weights_per_s: 5e9, bpw: 16.0 };
+        let f16 = slow;
+        let a = tokens_per_second(&cfg, &fast, &f16, 0.0);
+        let b = tokens_per_second(&cfg, &slow, &f16, 0.0);
+        assert!(a > b * 5.0, "{a} vs {b}");
+    }
+}

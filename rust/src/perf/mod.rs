@@ -1,0 +1,12 @@
+//! Performance measurement substrate: a criterion-like bench harness
+//! (criterion is unavailable offline), a memory-bandwidth meter, SIMD
+//! primitive emulations for the instruction-level studies (paper Table 4,
+//! Fig. 11) and the bandwidth roofline model behind Fig. 9.
+
+pub mod bandwidth;
+pub mod calibrate;
+pub mod bench;
+pub mod roofline;
+pub mod simd;
+
+pub use bench::{bench, BenchResult};

@@ -1,0 +1,107 @@
+//! Bandwidth roofline model for decode tokens/s — the analytic engine
+//! behind paper Fig. 9 (ELUT potential vs bandwidth) and the Table 7
+//! layer-composition estimates for model sizes that do not fit in RAM.
+//!
+//! Decode is memory-bound: a token cannot be produced faster than the
+//! packed weights (plus LUT traffic) can be streamed, nor faster than the
+//! compute side can consume them:
+//!
+//! `t_token = max(bytes / BW, ops / throughput) + overhead`
+
+/// One kernel's per-token cost model.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Bytes streamed per token (weights + tables).
+    pub bytes_per_token: f64,
+    /// Scalar-equivalent compute ops per token.
+    pub ops_per_token: f64,
+    /// Fixed per-token overhead seconds (attention, norms, sampling).
+    pub overhead_s: f64,
+}
+
+impl CostModel {
+    /// Tokens/s under the roofline with `bw_gbps` memory bandwidth and
+    /// `gops` compute throughput (giga-ops/s).
+    pub fn tokens_per_second(&self, bw_gbps: f64, gops: f64) -> f64 {
+        let t_mem = self.bytes_per_token / (bw_gbps * 1e9);
+        let t_cmp = self.ops_per_token / (gops * 1e9);
+        1.0 / (t_mem.max(t_cmp) + self.overhead_s)
+    }
+
+    /// The bandwidth (GB/s) beyond which this kernel turns compute-bound —
+    /// the knee of the Fig. 9 curve.
+    pub fn memory_bound_knee_gbps(&self, gops: f64) -> f64 {
+        if self.ops_per_token <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.bytes_per_token * gops / self.ops_per_token
+    }
+}
+
+/// Build a decode cost model from a model's ternary parameter count and a
+/// kernel's bpw + per-weight op cost.
+pub fn decode_cost_model(
+    ternary_params: f64,
+    head_params: f64,
+    bpw: f64,
+    ops_per_weight: f64,
+    lut_bytes_per_weight: f64,
+    overhead_s: f64,
+) -> CostModel {
+    CostModel {
+        bytes_per_token: ternary_params * (bpw / 8.0 + lut_bytes_per_weight)
+            + head_params * 2.0, // f16 LM head
+        ops_per_token: (ternary_params + head_params) * ops_per_weight,
+        overhead_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model_1b(bpw: f64, opw: f64) -> CostModel {
+        decode_cost_model(1e9, 5e7, bpw, opw, 0.0, 0.0)
+    }
+
+    #[test]
+    fn lower_bpw_is_faster_when_memory_bound() {
+        let tl2 = model_1b(1.67, 1.0 / 3.0);
+        let tmac = model_1b(2.0, 0.5);
+        let bw = 50.0; // GB/s, low-bandwidth edge CPU
+        let gops = 100.0;
+        assert!(tl2.tokens_per_second(bw, gops) > tmac.tokens_per_second(bw, gops));
+    }
+
+    #[test]
+    fn bandwidth_scaling_saturates_at_compute() {
+        let m = model_1b(1.67, 1.0 / 3.0);
+        let low = m.tokens_per_second(10.0, 100.0);
+        let mid = m.tokens_per_second(100.0, 100.0);
+        let hi = m.tokens_per_second(10_000.0, 100.0);
+        let hi2 = m.tokens_per_second(100_000.0, 100.0);
+        assert!(mid > low * 5.0, "linear region");
+        assert!(hi2 / hi < 1.01, "saturated past the knee");
+    }
+
+    #[test]
+    fn knee_moves_with_compute_cost() {
+        // MAD (1 op/weight) goes compute-bound at lower bandwidth than
+        // ELUT (1/3 op/weight): that's the ELUT headroom argument (Fig. 9).
+        let mad = model_1b(2.0, 1.0);
+        let elut = model_1b(1.67, 1.0 / 3.0);
+        assert!(elut.memory_bound_knee_gbps(100.0) > mad.memory_bound_knee_gbps(100.0));
+    }
+
+    #[test]
+    fn float16_vs_ternary_ratio_matches_paper_scale() {
+        // Paper Fig. 1: I2_S ~6x over Float16 at equal bandwidth — byte
+        // ratio 16/2 = 8 bounds it; overheads bring it to ~6. Check the
+        // model reproduces the bytes-driven ordering.
+        let f16 = model_1b(16.0, 1.0);
+        let i2s = model_1b(2.0, 1.0);
+        let bw = 60.0;
+        let ratio = i2s.tokens_per_second(bw, 200.0) / f16.tokens_per_second(bw, 200.0);
+        assert!(ratio > 4.0 && ratio <= 8.5, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,135 @@
+//! SIMD-primitive emulations for the instruction-level studies:
+//!
+//! * paper Table 4 — the LUT path's core op (`vpshufb`-style 16-byte
+//!   shuffle) vs the MAD path's (`maddubs`-style multiply-add), plus the
+//!   full TBL+ADD+CVT sequence whose extra latency the paper measures;
+//! * paper Fig. 11 — "what if registers were wider": shuffle emulations at
+//!   16/32/64/128-byte widths, showing latency grows sub-linearly while
+//!   the covered group size g grows, so wider registers pay off until
+//!   `C^g ≈ M`.
+//!
+//! These are written as fixed-width array ops that LLVM vectorizes; they
+//! measure *relative* costs on this CPU, standing in for the paper's
+//! AVX2/NEON microbenchmarks.
+
+/// 16-byte table shuffle: `out[i] = table[idx[i] & 0x0f]` — the exact
+/// semantics of AVX2 `vpshufb` (restricted to the low nibble).
+#[inline]
+pub fn shuffle16(table: &[i8; 16], idx: &[u8; 16]) -> [i8; 16] {
+    let mut out = [0i8; 16];
+    for i in 0..16 {
+        out[i] = table[(idx[i] & 0x0f) as usize];
+    }
+    out
+}
+
+/// Generic-width shuffle over W-byte lanes of 16-entry tables (each lane
+/// has its own table) — the Fig. 11 "longer register" emulation: a
+/// hypothetical W-byte `vpshufb` doing W parallel lookups.
+#[inline]
+pub fn shuffle_w<const W: usize>(tables: &[i8], idx: &[u8; W]) -> [i8; W] {
+    debug_assert_eq!(tables.len(), W);
+    let mut out = [0i8; W];
+    for i in 0..W {
+        // Lane-local 16-entry table: lane i reads tables[(i/16)*16 + nib].
+        out[i] = tables[(i & !0x0f) | (idx[i] & 0x0f) as usize];
+    }
+    out
+}
+
+/// `maddubs`-style MAD: 16 u8×i8 products, pairwise-added into 8 i16 —
+/// the MAD path's core instruction (AVX2 `_mm256_maddubs_epi16` halved to
+/// 128-bit for symmetry with the 128-bit TBL).
+#[inline]
+pub fn maddubs16(a: &[u8; 16], b: &[i8; 16]) -> [i16; 8] {
+    let mut out = [0i16; 8];
+    for i in 0..8 {
+        out[i] = (a[2 * i] as i16 * b[2 * i] as i16)
+            .wrapping_add(a[2 * i + 1] as i16 * b[2 * i + 1] as i16);
+    }
+    out
+}
+
+/// 8-lane i16 add (the ADD of the TBL+ADD+CVT sequence).
+#[inline]
+pub fn add16(a: &[i16; 8], b: &[i16; 8]) -> [i16; 8] {
+    let mut out = [0i16; 8];
+    for i in 0..8 {
+        out[i] = a[i].wrapping_add(b[i]);
+    }
+    out
+}
+
+/// Sign-extend conversion i8→i16 of the low 8 lanes (the CVT step).
+#[inline]
+pub fn cvt_i8_i16(a: &[i8; 16]) -> [i16; 8] {
+    let mut out = [0i16; 8];
+    for i in 0..8 {
+        out[i] = a[i] as i16;
+    }
+    out
+}
+
+/// The full LUT-path primitive the paper times as TBL+ADD+CVT: one
+/// shuffle, widen, accumulate.
+#[inline]
+pub fn tbl_add_cvt(table: &[i8; 16], idx: &[u8; 16], acc: &[i16; 8]) -> [i16; 8] {
+    let looked = shuffle16(table, idx);
+    let widened = cvt_i8_i16(&looked);
+    add16(acc, &widened)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shuffle_semantics() {
+        let mut table = [0i8; 16];
+        for (i, t) in table.iter_mut().enumerate() {
+            *t = (i as i8) * 3 - 8;
+        }
+        let idx: [u8; 16] = [0, 15, 3, 7, 1, 2, 4, 5, 6, 8, 9, 10, 11, 12, 13, 14];
+        let out = shuffle16(&table, &idx);
+        for i in 0..16 {
+            assert_eq!(out[i], table[idx[i] as usize]);
+        }
+    }
+
+    #[test]
+    fn shuffle_masks_high_bits() {
+        let table: [i8; 16] = core::array::from_fn(|i| i as i8);
+        let idx = [0xf3u8; 16];
+        assert!(shuffle16(&table, &idx).iter().all(|&v| v == 3));
+    }
+
+    #[test]
+    fn shuffle_w_matches_shuffle16_at_w16() {
+        let table: [i8; 16] = core::array::from_fn(|i| (i as i8) - 5);
+        let idx: [u8; 16] = core::array::from_fn(|i| (i * 7 % 16) as u8);
+        assert_eq!(shuffle_w::<16>(&table, &idx), shuffle16(&table, &idx));
+    }
+
+    #[test]
+    fn maddubs_matches_scalar() {
+        let a: [u8; 16] = core::array::from_fn(|i| (i * 3) as u8);
+        let b: [i8; 16] = core::array::from_fn(|i| (i as i8) - 7);
+        let out = maddubs16(&a, &b);
+        for i in 0..8 {
+            let want =
+                a[2 * i] as i16 * b[2 * i] as i16 + a[2 * i + 1] as i16 * b[2 * i + 1] as i16;
+            assert_eq!(out[i], want);
+        }
+    }
+
+    #[test]
+    fn tbl_add_cvt_accumulates() {
+        let table: [i8; 16] = core::array::from_fn(|i| i as i8);
+        let idx: [u8; 16] = core::array::from_fn(|i| i as u8);
+        let acc = [100i16; 8];
+        let out = tbl_add_cvt(&table, &idx, &acc);
+        for i in 0..8 {
+            assert_eq!(out[i], 100 + i as i16);
+        }
+    }
+}

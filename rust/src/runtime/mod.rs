@@ -1,0 +1,148 @@
+//! PJRT runtime — loads the AOT artifacts produced by `python/compile/`
+//! (Layer 1 Pallas kernel + Layer 2 JAX model lowered to HLO text) and
+//! executes them on the `xla` crate's CPU PJRT client. This is the only
+//! bridge between the Rust request path and the Python build path; Python
+//! itself never runs at inference time.
+//!
+//! Interchange format is **HLO text** (not serialized protos): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+
+use crate::config::Config;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A loaded PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("utf8 path")?)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+        })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    pub fn describe(&self) -> String {
+        format!("executable '{}'", self.name)
+    }
+
+    /// Execute with f32 inputs of the given shapes. The artifact is lowered
+    /// with `return_tuple=True`, so the single output literal is a tuple;
+    /// each element comes back as a flat f32 vector.
+    pub fn execute_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let n: usize = dims.iter().product();
+                anyhow::ensure!(n == data.len(), "shape {:?} vs {} values", dims, data.len());
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let parts = result.to_tuple().context("untupling result")?;
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}")))
+            .collect()
+    }
+
+    /// Execute with deterministic pseudo-random inputs per the manifest
+    /// entry (CLI smoke path).
+    pub fn execute_random(&self, entry: &ManifestEntry) -> Result<Vec<Vec<f32>>> {
+        let mut rng = crate::util::Rng::new(0xB17);
+        let buffers: Vec<Vec<f32>> = entry
+            .input_shapes
+            .iter()
+            .map(|dims| {
+                let n: usize = dims.iter().product();
+                (0..n).map(|_| rng.next_f32_signed()).collect()
+            })
+            .collect();
+        let inputs: Vec<(&[f32], &[usize])> = buffers
+            .iter()
+            .zip(entry.input_shapes.iter())
+            .map(|(b, d)| (b.as_slice(), d.as_slice()))
+            .collect();
+        self.execute_f32(&inputs)
+    }
+}
+
+/// Input-shape metadata for one artifact, read from
+/// `artifacts/manifest.toml` (written by `python/compile/aot.py`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+/// Parse a shape list like `"512;256x512"` → `[[512], [256, 512]]`.
+pub fn parse_shapes(spec: &str) -> Result<Vec<Vec<usize>>> {
+    spec.split(';')
+        .filter(|s| !s.trim().is_empty())
+        .map(|shape| {
+            shape
+                .trim()
+                .split('x')
+                .map(|d| d.trim().parse::<usize>().with_context(|| format!("bad dim in {shape:?}")))
+                .collect()
+        })
+        .collect()
+}
+
+/// Look up the manifest entry for an artifact path
+/// (`<dir>/manifest.toml`, section named after the file stem).
+pub fn manifest_for(artifact: &Path) -> Option<ManifestEntry> {
+    let stem = artifact.file_stem()?.to_string_lossy().into_owned();
+    // `foo.hlo.txt` → file_stem is `foo.hlo`; drop the inner extension too.
+    let stem = stem.strip_suffix(".hlo").unwrap_or(&stem).to_string();
+    let manifest_path: PathBuf = artifact.parent()?.join("manifest.toml");
+    let cfg = Config::load(&manifest_path).ok()?;
+    let spec = cfg.get(&format!("{stem}.inputs"))?.as_str()?.to_string();
+    Some(ManifestEntry { name: stem, input_shapes: parse_shapes(&spec).ok()? })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_spec_parses() {
+        assert_eq!(parse_shapes("512;256x512").unwrap(), vec![vec![512], vec![256, 512]]);
+        assert_eq!(parse_shapes("4").unwrap(), vec![vec![4]]);
+        assert!(parse_shapes("a").is_err());
+    }
+
+    // PJRT-backed tests live in rust/tests/runtime_pjrt.rs (they need the
+    // artifacts built by `make artifacts`).
+}

@@ -1,0 +1,257 @@
+//! Persistent worker pool with a fork-join `parallel_for`, modeled on
+//! ggml's compute threadpool: the same fixed set of threads executes every
+//! mpGEMM row-range, so the thread-sweep experiments (paper Fig. 8 / Fig.
+//! 10) measure kernel scaling rather than thread-spawn overhead.
+//!
+//! Design: N-1 parked workers plus the caller. A job is an `Arc<dyn Fn>`
+//! over chunk indices plus an atomic chunk cursor (work stealing by atomic
+//! fetch_add), so uneven rows still balance. The caller participates, then
+//! waits on a completion latch.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Arc<dyn Fn(usize) + Send + Sync>;
+
+struct Shared {
+    state: Mutex<State>,
+    work_ready: Condvar,
+    work_done: Condvar,
+}
+
+struct State {
+    job: Option<Job>,
+    /// Total chunks in the current job.
+    n_chunks: usize,
+    /// Monotonic id so workers can tell jobs apart.
+    epoch: u64,
+    /// Chunks claimed so far (shared cursor).
+    cursor: Arc<AtomicUsize>,
+    /// Chunks finished so far.
+    finished: usize,
+    shutdown: bool,
+}
+
+/// A fixed-size pool. `size` counts the caller: `ThreadPool::new(1)` runs
+/// everything inline with zero synchronization.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool that uses `size` threads in total (including the
+    /// caller's thread). `size` is clamped to at least 1.
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                job: None,
+                n_chunks: 0,
+                epoch: 0,
+                cursor: Arc::new(AtomicUsize::new(0)),
+                finished: 0,
+                shutdown: false,
+            }),
+            work_ready: Condvar::new(),
+            work_done: Condvar::new(),
+        });
+        let workers = (1..size)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(shared))
+            })
+            .collect();
+        ThreadPool { shared, workers, size }
+    }
+
+    /// Number of threads (including the caller).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Run `f(chunk)` for every `chunk in 0..n_chunks`, distributing chunks
+    /// across all threads; returns when every chunk has completed.
+    pub fn parallel_for<F>(&self, n_chunks: usize, f: F)
+    where
+        F: Fn(usize) + Send + Sync,
+    {
+        if n_chunks == 0 {
+            return;
+        }
+        if self.size == 1 || n_chunks == 1 {
+            for c in 0..n_chunks {
+                f(c);
+            }
+            return;
+        }
+        // SAFETY of the transmute-free design: we wrap the borrowed closure
+        // in an Arc with a 'static lifetime by boxing a shim that only lives
+        // for the duration of this call; we block until all chunks complete
+        // before returning, so the borrow cannot dangle.
+        let f_ref: &(dyn Fn(usize) + Send + Sync) = &f;
+        // Erase the lifetime. Guarded by the completion wait below.
+        let f_static: &'static (dyn Fn(usize) + Send + Sync) =
+            unsafe { std::mem::transmute(f_ref) };
+        let job: Job = Arc::new(move |c| f_static(c));
+
+        let cursor = Arc::new(AtomicUsize::new(0));
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.job.is_none(), "parallel_for is not reentrant");
+            st.job = Some(job);
+            st.n_chunks = n_chunks;
+            st.cursor = Arc::clone(&cursor);
+            st.finished = 0;
+            st.epoch += 1;
+            self.shared.work_ready.notify_all();
+        }
+
+        // The caller participates in the same job.
+        let mut mine = 0usize;
+        loop {
+            let c = cursor.fetch_add(1, Ordering::Relaxed);
+            if c >= n_chunks {
+                break;
+            }
+            f(c);
+            mine += 1;
+        }
+        // Credit the caller's chunks and wait for the stragglers.
+        let mut st = self.shared.state.lock().unwrap();
+        st.finished += mine;
+        while st.finished < st.n_chunks {
+            st = self.shared.work_done.wait(st).unwrap();
+        }
+        st.job = None;
+        st.n_chunks = 0;
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut last_epoch = 0u64;
+    loop {
+        // Wait for a new job (or shutdown).
+        let (job, cursor, n_chunks) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(job) = st.job.clone() {
+                    if st.epoch != last_epoch {
+                        last_epoch = st.epoch;
+                        break (job, Arc::clone(&st.cursor), st.n_chunks);
+                    }
+                }
+                st = shared.work_ready.wait(st).unwrap();
+            }
+        };
+        // Pull chunks until the cursor runs dry.
+        let mut done = 0usize;
+        loop {
+            let c = cursor.fetch_add(1, Ordering::Relaxed);
+            if c >= n_chunks {
+                break;
+            }
+            job(c);
+            done += 1;
+        }
+        let mut st = shared.state.lock().unwrap();
+        st.finished += done;
+        if st.finished >= st.n_chunks {
+            shared.work_done.notify_all();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_ready.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_chunk_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for(hits.len(), |c| {
+            hits[c].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "chunk {i}");
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_is_inline() {
+        let pool = ThreadPool::new(1);
+        let mut sum = 0u64;
+        // Mutable capture works because size-1 pools run inline; use a cell
+        // via atomics to keep the closure Fn.
+        let total = AtomicU64::new(0);
+        pool.parallel_for(10, |c| {
+            total.fetch_add(c as u64, Ordering::SeqCst);
+        });
+        sum += total.load(Ordering::SeqCst);
+        assert_eq!(sum, 45);
+    }
+
+    #[test]
+    fn reusable_across_jobs() {
+        let pool = ThreadPool::new(3);
+        for round in 0..50 {
+            let total = AtomicU64::new(0);
+            pool.parallel_for(64, |c| {
+                total.fetch_add((c + round) as u64, Ordering::SeqCst);
+            });
+            let expect: u64 = (0..64).map(|c| (c + round) as u64).sum();
+            assert_eq!(total.load(Ordering::SeqCst), expect);
+        }
+    }
+
+    #[test]
+    fn zero_chunks_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.parallel_for(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn more_threads_than_chunks() {
+        let pool = ThreadPool::new(8);
+        let total = AtomicU64::new(0);
+        pool.parallel_for(3, |c| {
+            total.fetch_add(c as u64 + 1, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 6);
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        let pool = ThreadPool::new(4);
+        let data: Vec<f64> = (0..10_000).map(|i| i as f64).collect();
+        let chunks = 16;
+        let partial: Vec<Mutex<f64>> = (0..chunks).map(|_| Mutex::new(0.0)).collect();
+        let per = data.len() / chunks;
+        pool.parallel_for(chunks, |c| {
+            let s: f64 = data[c * per..(c + 1) * per].iter().sum();
+            *partial[c].lock().unwrap() = s;
+        });
+        let total: f64 = partial.iter().map(|m| *m.lock().unwrap()).sum();
+        assert_eq!(total, data.iter().sum::<f64>());
+    }
+}

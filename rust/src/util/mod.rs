@@ -1,0 +1,46 @@
+//! Small shared substrates: IEEE-754 half-precision conversion, a seedable
+//! PRNG (no external deps are available offline), and summary statistics.
+//!
+//! These exist because the offline crate set is limited to `xla`, `anyhow`
+//! and `thiserror`; everything else in the stack is built from scratch.
+
+pub mod f16;
+pub mod rng;
+pub mod stats;
+
+pub use f16::{f16_to_f32, f32_to_f16};
+pub use rng::Rng;
+pub use stats::Summary;
+
+/// Ceiling division for usize.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub fn round_up(a: usize, b: usize) -> usize {
+    ceil_div(a, b) * b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 32), 0);
+        assert_eq!(round_up(1, 32), 32);
+        assert_eq!(round_up(32, 32), 32);
+        assert_eq!(round_up(33, 32), 64);
+    }
+}

@@ -1,0 +1,95 @@
+//! Three-layer composition: the Pallas kernel / JAX block lowered by
+//! `make artifacts` executes under the Rust PJRT runtime and agrees with
+//! the native Rust kernel library on the same inputs.
+//!
+//! These tests skip (pass vacuously, with a note) when artifacts/ has not
+//! been built, so `cargo test` works pre-`make artifacts`; CI runs
+//! `make test` which builds artifacts first.
+
+use bitnet::kernels::quant::TernaryWeights;
+use bitnet::kernels::{kernel_for, QuantType};
+use bitnet::runtime::{manifest_for, Runtime};
+use bitnet::util::Rng;
+use std::path::Path;
+
+fn artifact(name: &str) -> Option<std::path::PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(name);
+    if p.exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: {} not built (run `make artifacts`)", p.display());
+        None
+    }
+}
+
+#[test]
+fn pallas_kernel_matches_rust_i2s() {
+    let Some(path) = artifact("ternary_matmul.hlo.txt") else { return };
+    let rt = Runtime::new().unwrap();
+    let exe = rt.load_hlo_text(&path).unwrap();
+
+    // Geometry fixed by aot.py: x f32[768], w f32[256, 768], scale 0.05.
+    let (m, k) = (256usize, 768usize);
+    let mut rng = Rng::new(2024);
+    let wq: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+    let w_f32: Vec<f32> = wq.iter().map(|&v| v as f32).collect();
+    let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+
+    let outputs = exe
+        .execute_f32(&[(&x, &[k]), (&w_f32, &[m, k])])
+        .expect("execute ternary_matmul artifact");
+    assert_eq!(outputs.len(), 1);
+    let pjrt_out = &outputs[0];
+    assert_eq!(pjrt_out.len(), m);
+
+    // Rust-native result through the lossless I2_S path, same scale 0.05.
+    let t = TernaryWeights::from_ternary(wq, m, k, 0.05);
+    let kern = kernel_for(QuantType::I2S);
+    let packed = kern.quantize(&t);
+    let p = kern.prepare(&x, k);
+    let mut rust_out = vec![0f32; m];
+    kern.gemv(&packed, &p, &mut rust_out);
+
+    let mut max_rel = 0f64;
+    for (a, b) in pjrt_out.iter().zip(rust_out.iter()) {
+        let rel = ((a - b).abs() as f64) / (b.abs() as f64).max(1e-3);
+        max_rel = max_rel.max(rel);
+    }
+    // Both paths compute the identical integer sum; only the final f32
+    // rescale ordering can differ by an ulp.
+    assert!(max_rel < 1e-5, "PJRT vs Rust I2_S max rel {max_rel}");
+}
+
+#[test]
+fn ffn_artifact_executes_with_real_shapes() {
+    let Some(path) = artifact("bitnet_ffn.hlo.txt") else { return };
+    let rt = Runtime::new().unwrap();
+    let exe = rt.load_hlo_text(&path).unwrap();
+    let entry = manifest_for(&path).expect("manifest entry");
+    let out = exe.execute_random(&entry).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].len(), 256); // H of the tiny config
+    assert!(out[0].iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn block_artifact_decode_step_shapes() {
+    let Some(path) = artifact("bitnet_block.hlo.txt") else { return };
+    let rt = Runtime::new().unwrap();
+    let exe = rt.load_hlo_text(&path).unwrap();
+    let entry = manifest_for(&path).expect("manifest entry");
+    assert_eq!(entry.input_shapes.len(), 13);
+    let out = exe.execute_random(&entry).unwrap();
+    // (x', k_new, v_new)
+    assert_eq!(out.len(), 3);
+    assert_eq!(out[0].len(), 256);
+    assert_eq!(out[1].len(), 128);
+    assert_eq!(out[2].len(), 128);
+}
+
+#[test]
+fn manifest_shapes_parse() {
+    let Some(path) = artifact("manifest.toml") else { return };
+    let cfg = bitnet::config::Config::load(&path).unwrap();
+    assert!(cfg.get("ternary_matmul.inputs").is_some());
+}
