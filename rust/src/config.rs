@@ -154,7 +154,12 @@ fn parse_value(s: &str, lineno: usize) -> Result<Value> {
 pub struct LaunchConfig {
     pub model_preset: String,
     pub model_path: Option<String>,
+    /// Kernel name (`I2_S`, `TL2_0`, …) or `auto` for profile-driven
+    /// dispatch (requires [`LaunchConfig::tune_profile`]).
     pub kernel: String,
+    /// Path to a `bitnet tune` JSON profile, consulted when `kernel` is
+    /// `auto` (config key `model.tune_profile`, CLI `--tune-profile`).
+    pub tune_profile: Option<String>,
     pub threads: usize,
     pub max_batch: usize,
     pub kv_budget_tokens: usize,
@@ -167,6 +172,7 @@ impl Default for LaunchConfig {
             model_preset: "tiny".into(),
             model_path: None,
             kernel: "I2_S".into(),
+            tune_profile: None,
             threads: 1,
             max_batch: 8,
             kv_budget_tokens: 8192,
@@ -182,6 +188,9 @@ impl LaunchConfig {
             model_preset: cfg.get_str("model.preset", &d.model_preset),
             model_path: cfg.get("model.path").and_then(|v| v.as_str().map(|s| s.to_string())),
             kernel: cfg.get_str("model.kernel", &d.kernel),
+            tune_profile: cfg
+                .get("model.tune_profile")
+                .and_then(|v| v.as_str().map(|s| s.to_string())),
             threads: cfg.get_usize("engine.threads", d.threads),
             max_batch: cfg.get_usize("engine.max_batch", d.max_batch),
             kv_budget_tokens: cfg.get_usize("engine.kv_budget_tokens", d.kv_budget_tokens),
@@ -198,7 +207,8 @@ mod tests {
 # engine config
 [model]
 preset = "3.8B"
-kernel = "TL2_0"   # the headline kernel
+kernel = "TL2_0"   # the headline kernel; or "auto" + tune_profile
+tune_profile = "profile.json"
 
 [engine]
 threads = 8
@@ -233,6 +243,8 @@ stream = true
         assert_eq!(lc.kernel, "TL2_0");
         assert_eq!(lc.max_batch, 16);
         assert_eq!(lc.kv_budget_tokens, 32768);
+        assert_eq!(lc.tune_profile.as_deref(), Some("profile.json"));
+        assert_eq!(LaunchConfig::default().tune_profile, None);
     }
 
     #[test]

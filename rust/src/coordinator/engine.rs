@@ -46,6 +46,11 @@ pub struct Engine {
     cmd: Sender<Command>,
     next_id: std::sync::atomic::AtomicU64,
     pub metrics: Arc<EngineMetrics>,
+    /// The dispatch policy the model was packed with plus its per-shape
+    /// kernel picks (e.g. `fixed(I2_S)` or `auto(...): 256x256->TL2_0 ...`)
+    /// — recorded at startup so serving logs can attribute throughput to
+    /// kernel selection.
+    pub kernel_info: String,
     worker: Option<JoinHandle<()>>,
 }
 
@@ -55,11 +60,19 @@ impl Engine {
         let (tx, rx) = channel();
         let metrics = Arc::new(EngineMetrics::new());
         let m2 = Arc::clone(&metrics);
+        let kernel_info = {
+            let shapes: Vec<String> = model
+                .kernel_summary()
+                .into_iter()
+                .map(|(m, k, q)| format!("{m}x{k}->{}", q.name()))
+                .collect();
+            format!("{}: {}", model.dispatch.describe(), shapes.join(" "))
+        };
         let worker = std::thread::Builder::new()
             .name("bitnet-engine".into())
             .spawn(move || run_loop(model, config, rx, m2))
             .expect("spawn engine thread");
-        Engine { cmd: tx, next_id: 0.into(), metrics, worker: Some(worker) }
+        Engine { cmd: tx, next_id: 0.into(), metrics, kernel_info, worker: Some(worker) }
     }
 
     /// Submit a request; returns a streaming handle.
@@ -275,6 +288,7 @@ mod tests {
     #[test]
     fn single_request_completes() {
         let engine = tiny_engine(4);
+        assert!(engine.kernel_info.contains("fixed(I2_S)"), "{}", engine.kernel_info);
         let h = engine.submit(Request::greedy(vec![5, 6, 7], 8));
         let (tokens, reason, stats) = h.wait();
         assert_eq!(tokens.len(), 8);

@@ -26,6 +26,9 @@ pub mod lut;
 pub mod quant;
 pub mod tl1;
 pub mod tl2;
+pub mod tuner;
+
+pub use tuner::{Dispatch, TuningProfile};
 
 use crate::threadpool::ThreadPool;
 use quant::{ActBlocked, ActInt8, TernaryWeights};

@@ -1,0 +1,525 @@
+//! Auto-tuned kernel dispatch (upstream bitnet.cpp's `kernel_tuning`
+//! utility, reconstructed): micro-benchmark every applicable kernel for
+//! the matmul shapes a model actually runs, persist the winners in a
+//! [`TuningProfile`], and route every [`crate::model::BitLinear`] through
+//! a [`Dispatch`] policy that either pins one kernel (`Fixed`) or selects
+//! per shape from the profile (`Auto`).
+//!
+//! Why this exists: the paper's speedups (§4, Table 7) come from picking
+//! the right mpGEMM kernel per machine *and* per matrix shape — TL2's
+//! 1.67 bpw wins when decode is memory-bound, I2_S/TL1 win where the
+//! LUT preprocessing dominates, and the crossover moves with m, k, batch
+//! size and thread count. Upstream reports 20–30% extra throughput from
+//! hardware-specific selection; this module makes that selection
+//! measured rather than guessed.
+//!
+//! Flow:
+//! 1. `bitnet tune --preset <p> --out profile.json` runs [`tune`] over the
+//!    preset's projection shapes and writes the profile (JSON via
+//!    [`crate::util::Json`]).
+//! 2. `bitnet run --qtype auto --tune-profile profile.json` loads it into
+//!    `Dispatch::Auto`, and each layer packs with the per-shape winner.
+//!
+//! Fallback semantics are documented on [`TuningProfile::select`] and in
+//! `docs/tuning.md`.
+#![deny(missing_docs)]
+
+use super::{kernel_for, QuantType};
+use crate::perf::calibrate::{calibrate_kernel_shape, KernelRate};
+use crate::threadpool::ThreadPool;
+use crate::util::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Profile file format version (bump on breaking schema changes).
+pub const PROFILE_VERSION: u64 = 1;
+
+/// One timed kernel on one shape.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Measurement {
+    /// The kernel measured.
+    pub qtype: QuantType,
+    /// Mean wall time of one matmul call, microseconds.
+    pub us_per_matmul: f64,
+    /// Weights streamed per second (`m·k / secs_per_call`), in units of
+    /// 1e9 weights — the tuner's ranking metric (higher is better).
+    pub gweights_per_s: f64,
+}
+
+/// Tuning result for one (m, k, batch) matmul shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuningEntry {
+    /// Output features (weight rows).
+    pub m: usize,
+    /// Input features (weight cols / reduction dim).
+    pub k: usize,
+    /// Activation batch rows the measurement used.
+    pub n: usize,
+    /// The fastest measured kernel for this shape.
+    pub best: QuantType,
+    /// All measurements, fastest first (kept for inspection/debugging).
+    pub measurements: Vec<Measurement>,
+}
+
+/// A machine- and shape-specific kernel selection table, serializable to
+/// a JSON profile file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuningProfile {
+    /// Thread count the measurements were taken with (selection quality
+    /// degrades if the serving thread count differs; the CLI warns).
+    pub threads: usize,
+    /// Fallback kernel for shapes absent from the profile.
+    pub default: QuantType,
+    /// Per-shape winners.
+    pub entries: Vec<TuningEntry>,
+}
+
+impl TuningProfile {
+    /// An empty profile that always falls back to `default`.
+    pub fn empty(default: QuantType, threads: usize) -> TuningProfile {
+        TuningProfile { threads, default, entries: Vec::new() }
+    }
+
+    /// Select the kernel for an `m`×`k` matmul at batch size `n`.
+    ///
+    /// Resolution order (documented contract, see docs/tuning.md):
+    /// 1. the entry matching (m, k) with the **largest tuned batch ≤ n**
+    ///    (decode at n=1 uses the n=1 entry; a batch of 6 uses the n=4
+    ///    entry when 1 and 4 were tuned);
+    /// 2. if every tuned batch for (m, k) exceeds `n`, the smallest one;
+    /// 3. if (m, k) was never tuned at all, [`TuningProfile::default`].
+    pub fn select(&self, m: usize, k: usize, n: usize) -> QuantType {
+        let mut below: Option<&TuningEntry> = None;
+        let mut above: Option<&TuningEntry> = None;
+        for e in self.entries.iter().filter(|e| e.m == m && e.k == k) {
+            if e.n <= n {
+                if below.map_or(true, |b| e.n > b.n) {
+                    below = Some(e);
+                }
+            } else if above.map_or(true, |a| e.n < a.n) {
+                above = Some(e);
+            }
+        }
+        below.or(above).map(|e| e.best).unwrap_or(self.default)
+    }
+
+    /// Serialize to the JSON profile schema.
+    pub fn to_json(&self) -> Json {
+        let entries = self
+            .entries
+            .iter()
+            .map(|e| {
+                let ms = e
+                    .measurements
+                    .iter()
+                    .map(|m| {
+                        Json::Obj(vec![
+                            ("kernel".into(), Json::Str(m.qtype.name().into())),
+                            ("us_per_matmul".into(), Json::Num(m.us_per_matmul)),
+                            ("gweights_per_s".into(), Json::Num(m.gweights_per_s)),
+                        ])
+                    })
+                    .collect();
+                Json::Obj(vec![
+                    ("m".into(), Json::Num(e.m as f64)),
+                    ("k".into(), Json::Num(e.k as f64)),
+                    ("n".into(), Json::Num(e.n as f64)),
+                    ("best".into(), Json::Str(e.best.name().into())),
+                    ("measurements".into(), Json::Arr(ms)),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("version".into(), Json::Num(PROFILE_VERSION as f64)),
+            ("threads".into(), Json::Num(self.threads as f64)),
+            ("default".into(), Json::Str(self.default.name().into())),
+            ("entries".into(), Json::Arr(entries)),
+        ])
+    }
+
+    /// Parse from the JSON profile schema.
+    pub fn from_json(v: &Json) -> Result<TuningProfile> {
+        let version = v.get("version").and_then(Json::as_usize).context("profile: version")?;
+        if version as u64 != PROFILE_VERSION {
+            bail!("unsupported profile version {version} (expected {PROFILE_VERSION})");
+        }
+        let threads = v.get("threads").and_then(Json::as_usize).context("profile: threads")?;
+        let default = parse_qtype(v.get("default").and_then(Json::as_str).context("profile: default")?)?;
+        let mut entries = Vec::new();
+        for (i, e) in v
+            .get("entries")
+            .and_then(Json::as_array)
+            .context("profile: entries")?
+            .iter()
+            .enumerate()
+        {
+            let field = |name: &str| {
+                e.get(name).and_then(Json::as_usize).with_context(|| format!("entry {i}: {name}"))
+            };
+            let best = parse_qtype(
+                e.get("best").and_then(Json::as_str).with_context(|| format!("entry {i}: best"))?,
+            )?;
+            let mut measurements = Vec::new();
+            if let Some(ms) = e.get("measurements").and_then(Json::as_array) {
+                for m in ms {
+                    let (Some(kname), Some(us), Some(gw)) = (
+                        m.get("kernel").and_then(Json::as_str),
+                        m.get("us_per_matmul").and_then(Json::as_f64),
+                        m.get("gweights_per_s").and_then(Json::as_f64),
+                    ) else {
+                        bail!("entry {i}: malformed measurement");
+                    };
+                    measurements.push(Measurement {
+                        qtype: parse_qtype(kname)?,
+                        us_per_matmul: us,
+                        gweights_per_s: gw,
+                    });
+                }
+            }
+            entries.push(TuningEntry {
+                m: field("m")?,
+                k: field("k")?,
+                n: field("n")?,
+                best,
+                measurements,
+            });
+        }
+        Ok(TuningProfile { threads, default, entries })
+    }
+
+    /// Write the profile to a JSON file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing profile {}", path.display()))
+    }
+
+    /// Load a profile from a JSON file.
+    pub fn load(path: &Path) -> Result<TuningProfile> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading profile {}", path.display()))?;
+        let v = Json::parse(&text).with_context(|| format!("parsing profile {}", path.display()))?;
+        Self::from_json(&v)
+    }
+}
+
+fn parse_qtype(name: &str) -> Result<QuantType> {
+    QuantType::parse(name).with_context(|| format!("unknown kernel {name:?} in profile"))
+}
+
+/// How a model picks the kernel for each of its ternary projections.
+#[derive(Clone, Debug)]
+pub enum Dispatch {
+    /// Every projection uses this kernel (the pre-tuner behavior).
+    Fixed(QuantType),
+    /// Per-shape selection from a measured profile.
+    Auto(TuningProfile),
+}
+
+impl Dispatch {
+    /// The kernel for an `m`×`k` projection at decode batch `n`.
+    pub fn select(&self, m: usize, k: usize, n: usize) -> QuantType {
+        match self {
+            Dispatch::Fixed(q) => *q,
+            Dispatch::Auto(p) => p.select(m, k, n),
+        }
+    }
+
+    /// A representative kernel (what `Transformer::qtype` reports): the
+    /// fixed kernel, or the profile's selection for the given shape.
+    pub fn representative(&self, m: usize, k: usize) -> QuantType {
+        self.select(m, k, 1)
+    }
+
+    /// One-line human description for logs.
+    pub fn describe(&self) -> String {
+        match self {
+            Dispatch::Fixed(q) => format!("fixed({})", q.name()),
+            Dispatch::Auto(p) => format!(
+                "auto({} tuned shapes, default {}, tuned @ {} threads)",
+                p.entries.len(),
+                p.default.name(),
+                p.threads
+            ),
+        }
+    }
+}
+
+/// What [`tune`] measures.
+#[derive(Clone, Debug)]
+pub struct TuneConfig {
+    /// (m, k) matmul shapes to tune (see [`shapes_for_model`]).
+    pub shapes: Vec<(usize, usize)>,
+    /// Activation batch sizes to tune each shape at.
+    pub batches: Vec<usize>,
+    /// Thread-pool size to measure with (match the serving `--threads`).
+    pub threads: usize,
+    /// Candidate kernels; non-applicable ones (k % k_multiple != 0) are
+    /// skipped per shape.
+    pub candidates: Vec<QuantType>,
+    /// Fallback kernel recorded in the profile.
+    pub default: QuantType,
+    /// Minimum timed iterations per (kernel, shape).
+    pub min_iters: usize,
+    /// Minimum measurement wall time per (kernel, shape), seconds.
+    pub min_seconds: f64,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        TuneConfig {
+            shapes: Vec::new(),
+            batches: vec![1, 4],
+            threads: 1,
+            candidates: default_candidates(),
+            default: QuantType::I2S,
+            min_iters: 3,
+            min_seconds: 0.06,
+        }
+    }
+}
+
+/// The default candidate set: compact ternary-native serving kernels
+/// (storage ≤ 4 bpw). The dense baselines (F32/F16) and the general
+/// llama.cpp formats (Q4_0/Q2_K) are excluded on purpose — a dense MAD
+/// path can win a small cache-resident micro-benchmark, and silently
+/// packing a "ternary" model at 16–32 bpw would defeat the 1-bit
+/// serving premise. Measure them anyway with `--kernels`.
+pub fn default_candidates() -> Vec<QuantType> {
+    QuantType::ALL
+        .iter()
+        .copied()
+        .filter(|&q| {
+            let info = kernel_for(q).info();
+            info.ternary_native && info.bpw <= 4.0
+        })
+        .collect()
+}
+
+/// The unique ternary-projection shapes of a model config, as (m, k) —
+/// exactly the shapes [`crate::model::Transformer`] dispatches
+/// ([`crate::model::ModelConfig::gemv_shapes`], deduplicated).
+pub fn shapes_for_model(cfg: &crate::model::ModelConfig) -> Vec<(usize, usize)> {
+    let mut shapes = cfg.gemv_shapes();
+    shapes.sort_unstable();
+    shapes.dedup();
+    shapes
+}
+
+/// Micro-benchmark every applicable candidate on every (shape × batch)
+/// and return the winners as a [`TuningProfile`]. `progress` (when given)
+/// receives one line per measurement — the CLI wires it to stderr under
+/// `--verbose`.
+pub fn tune(cfg: &TuneConfig, mut progress: Option<&mut dyn FnMut(&str)>) -> TuningProfile {
+    let pool = ThreadPool::new(cfg.threads.max(1));
+    let mut entries = Vec::new();
+    for &(m, k) in &cfg.shapes {
+        for &n in &cfg.batches {
+            if n == 0 {
+                // A zero-row matmul measures nothing; an n=0 entry would
+                // also shadow every real batch in `select` (e.n <= n).
+                if let Some(p) = progress.as_mut() {
+                    p(&format!("tune {m}x{k}: skipping batch 0 (no work to measure)"));
+                }
+                continue;
+            }
+            let mut measurements: Vec<Measurement> = Vec::new();
+            for &qt in &cfg.candidates {
+                if k % kernel_for(qt).info().k_multiple != 0 {
+                    continue;
+                }
+                let rate: KernelRate =
+                    calibrate_kernel_shape(qt, m, k, n, &pool, cfg.min_iters, cfg.min_seconds);
+                let meas = Measurement {
+                    qtype: qt,
+                    us_per_matmul: rate.secs_per_matmul(m, k) * 1e6,
+                    gweights_per_s: rate.weights_per_s / 1e9,
+                };
+                if let Some(p) = progress.as_mut() {
+                    p(&format!(
+                        "tune {m}x{k} n={n} {:<9} {:>10.1} µs/matmul ({:.2} Gw/s)",
+                        qt.name(),
+                        meas.us_per_matmul,
+                        meas.gweights_per_s
+                    ));
+                }
+                measurements.push(meas);
+            }
+            if measurements.is_empty() {
+                continue;
+            }
+            measurements
+                .sort_by(|a, b| a.us_per_matmul.partial_cmp(&b.us_per_matmul).expect("finite"));
+            let best = measurements[0].qtype;
+            if let Some(p) = progress.as_mut() {
+                p(&format!("tune {m}x{k} n={n} -> best {}", best.name()));
+            }
+            entries.push(TuningEntry { m, k, n, best, measurements });
+        }
+    }
+    TuningProfile { threads: cfg.threads.max(1), default: cfg.default, entries }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(m: usize, k: usize, n: usize, best: QuantType) -> TuningEntry {
+        TuningEntry { m, k, n, best, measurements: Vec::new() }
+    }
+
+    #[test]
+    fn select_prefers_largest_tuned_batch_not_above_n() {
+        let p = TuningProfile {
+            threads: 2,
+            default: QuantType::I2S,
+            entries: vec![
+                entry(256, 256, 1, QuantType::Tl20),
+                entry(256, 256, 4, QuantType::Tq20),
+                entry(256, 256, 16, QuantType::F16),
+            ],
+        };
+        assert_eq!(p.select(256, 256, 1), QuantType::Tl20);
+        assert_eq!(p.select(256, 256, 3), QuantType::Tl20);
+        assert_eq!(p.select(256, 256, 4), QuantType::Tq20);
+        assert_eq!(p.select(256, 256, 9), QuantType::Tq20);
+        assert_eq!(p.select(256, 256, 100), QuantType::F16);
+    }
+
+    #[test]
+    fn select_falls_back_to_smallest_batch_then_default() {
+        let p = TuningProfile {
+            threads: 1,
+            default: QuantType::I2S,
+            entries: vec![entry(64, 512, 8, QuantType::Tl10)],
+        };
+        // Tuned batches all exceed n → smallest tuned batch.
+        assert_eq!(p.select(64, 512, 1), QuantType::Tl10);
+        // Unknown shape → default.
+        assert_eq!(p.select(65, 512, 1), QuantType::I2S);
+        assert_eq!(p.select(64, 513, 4), QuantType::I2S);
+    }
+
+    #[test]
+    fn json_round_trip_is_lossless() {
+        let p = TuningProfile {
+            threads: 4,
+            default: QuantType::Tl20,
+            entries: vec![TuningEntry {
+                m: 768,
+                k: 256,
+                n: 1,
+                best: QuantType::Tl21,
+                measurements: vec![
+                    Measurement {
+                        qtype: QuantType::Tl21,
+                        us_per_matmul: 12.5,
+                        gweights_per_s: 15.7,
+                    },
+                    Measurement {
+                        qtype: QuantType::I2S,
+                        us_per_matmul: 14.0,
+                        gweights_per_s: 14.0,
+                    },
+                ],
+            }],
+        };
+        let back = TuningProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+        // And through the text form too.
+        let text = p.to_json().to_string_pretty();
+        let back2 = TuningProfile::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back2, p);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_profiles() {
+        assert!(TuningProfile::from_json(&Json::parse("{}").unwrap()).is_err());
+        let wrong_version =
+            r#"{"version": 99, "threads": 1, "default": "I2_S", "entries": []}"#;
+        assert!(TuningProfile::from_json(&Json::parse(wrong_version).unwrap()).is_err());
+        let bad_kernel =
+            r#"{"version": 1, "threads": 1, "default": "NOPE", "entries": []}"#;
+        assert!(TuningProfile::from_json(&Json::parse(bad_kernel).unwrap()).is_err());
+    }
+
+    #[test]
+    fn default_candidates_exclude_dense_and_general_formats() {
+        let c = default_candidates();
+        for q in [QuantType::I2S, QuantType::Tl20, QuantType::Tl11, QuantType::Tq10] {
+            assert!(c.contains(&q), "{q:?} should be a default candidate");
+        }
+        for q in [QuantType::F32, QuantType::F16, QuantType::Q40, QuantType::Q2K] {
+            assert!(!c.contains(&q), "{q:?} must not be packed by default auto-tuning");
+        }
+    }
+
+    #[test]
+    fn tune_skips_zero_batch() {
+        let cfg = TuneConfig {
+            shapes: vec![(16, 128)],
+            batches: vec![0, 1],
+            threads: 1,
+            candidates: vec![QuantType::I2S],
+            default: QuantType::I2S,
+            min_iters: 1,
+            min_seconds: 0.001,
+        };
+        let profile = tune(&cfg, None);
+        assert_eq!(profile.entries.len(), 1);
+        assert_eq!(profile.entries[0].n, 1);
+    }
+
+    #[test]
+    fn shapes_for_model_covers_all_projections() {
+        let cfg = crate::model::ModelConfig::tiny();
+        let shapes = shapes_for_model(&cfg);
+        assert!(shapes.contains(&(cfg.hidden, cfg.hidden)));
+        assert!(shapes.contains(&(cfg.kv_dim(), cfg.hidden)));
+        assert!(shapes.contains(&(cfg.ffn, cfg.hidden)));
+        assert!(shapes.contains(&(cfg.hidden, cfg.ffn)));
+        // Deduped and sorted.
+        let mut sorted = shapes.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(shapes, sorted);
+    }
+
+    #[test]
+    fn tune_produces_entries_with_winners() {
+        let cfg = TuneConfig {
+            shapes: vec![(64, 256)],
+            batches: vec![1],
+            threads: 1,
+            candidates: vec![QuantType::I2S, QuantType::Tl10],
+            default: QuantType::I2S,
+            min_iters: 2,
+            min_seconds: 0.005,
+        };
+        let mut lines = Vec::new();
+        let mut sink = |s: &str| lines.push(s.to_string());
+        let profile = tune(&cfg, Some(&mut sink));
+        assert_eq!(profile.entries.len(), 1);
+        let e = &profile.entries[0];
+        assert_eq!((e.m, e.k, e.n), (64, 256, 1));
+        assert!(cfg.candidates.contains(&e.best));
+        assert_eq!(e.measurements.len(), 2);
+        assert!(e.measurements[0].us_per_matmul <= e.measurements[1].us_per_matmul);
+        assert!(!lines.is_empty());
+        // Selection from a freshly tuned profile resolves to the winner.
+        assert_eq!(profile.select(64, 256, 1), e.best);
+    }
+
+    #[test]
+    fn dispatch_policies_select_as_documented() {
+        let fixed = Dispatch::Fixed(QuantType::Tl21);
+        assert_eq!(fixed.select(10, 20, 1), QuantType::Tl21);
+        assert!(fixed.describe().contains("TL2_1"));
+
+        let mut p = TuningProfile::empty(QuantType::I2S, 1);
+        p.entries.push(entry(256, 768, 1, QuantType::Tl11));
+        let auto = Dispatch::Auto(p);
+        assert_eq!(auto.select(256, 768, 1), QuantType::Tl11);
+        assert_eq!(auto.select(512, 512, 1), QuantType::I2S, "missing shape → default");
+        assert!(auto.describe().contains("auto"));
+    }
+}

@@ -48,7 +48,7 @@ pub mod threadpool;
 pub mod tokenizer;
 pub mod util;
 
-pub use kernels::QuantType;
+pub use kernels::{Dispatch, QuantType, TuningProfile};
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

@@ -5,20 +5,23 @@
 //!   gen-model                    generate a synthetic BTNZ checkpoint
 //!   run                          generate tokens from a prompt
 //!   serve                        run the batching engine on a synthetic workload
+//!   tune                         micro-benchmark kernels, write a tuning profile
 //!   pjrt                         execute an AOT artifact through PJRT
 //!
-//! Common options: --preset tiny|100M|700M|…, --kernel I2_S|TL2_0|…,
-//! --threads N, --config path.toml. See README for examples.
+//! Common options: --preset tiny|100M|700M|…, --kernel I2_S|TL2_0|…|auto
+//! (--qtype is an alias), --tune-profile profile.json, --threads N,
+//! --config path.toml. See README for examples.
 
 use anyhow::{bail, Context, Result};
 use bitnet::cli::Args;
 use bitnet::config::{Config, LaunchConfig};
 use bitnet::coordinator::{Engine, EngineConfig, Request};
-use bitnet::kernels::{library_table, QuantType};
+use bitnet::kernels::tuner::{self, TuneConfig, TuningProfile};
+use bitnet::kernels::{library_table, Dispatch, QuantType};
 use bitnet::model::{ModelConfig, SamplingParams, Transformer};
 use bitnet::model::weights::Checkpoint;
 use bitnet::tokenizer::{synthetic_corpus, Tokenizer};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 fn main() {
     if let Err(e) = run() {
@@ -27,13 +30,22 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: bitnet <info|gen-model|run|serve|pjrt> [options]
+const USAGE: &str = "usage: bitnet <info|gen-model|run|serve|tune|pjrt> [options]
   info
   gen-model --preset tiny --seed 42 --out model.btnz
   run       --preset tiny --kernel I2_S --threads 1 --prompt 'text' --max-new 32
             [--model model.btnz] [--temperature 0.0]
+            [--qtype auto --tune-profile profile.json] [--verbose]
   serve     --preset tiny --kernel TL2_0 --threads 2 --requests 16 --max-batch 8
-  pjrt      --artifact artifacts/ternary_matmul.hlo.txt";
+            [--qtype auto --tune-profile profile.json]
+  tune      --out profile.json [--preset tiny] [--threads 1] [--batches 1,4]
+            [--kernels I2_S,TL1_0,…|all] [--measure-ms 60] [--verbose]
+            (default candidates: compact ternary kernels; `all` adds the
+             dense/general baselines)
+  pjrt      --artifact artifacts/ternary_matmul.hlo.txt
+
+  --qtype is an alias of --kernel; the value `auto` selects the kernel
+  per projection shape from the --tune-profile file (see docs/tuning.md).";
 
 fn run() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1), &["help", "verbose"])?;
@@ -46,6 +58,7 @@ fn run() -> Result<()> {
         "gen-model" => cmd_gen_model(&args),
         "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
+        "tune" => cmd_tune(&args),
         "pjrt" => cmd_pjrt(&args),
         other => bail!("unknown subcommand {other:?}\n{USAGE}"),
     }
@@ -59,8 +72,16 @@ fn launch_config(args: &Args) -> Result<LaunchConfig> {
     if let Some(p) = args.get("preset") {
         lc.model_preset = p.to_string();
     }
+    // --qtype is an alias of --kernel (last one on the command line wins
+    // is not supported by the mini-parser, so --qtype takes precedence).
     if let Some(k) = args.get("kernel") {
         lc.kernel = k.to_string();
+    }
+    if let Some(k) = args.get("qtype") {
+        lc.kernel = k.to_string();
+    }
+    if let Some(p) = args.get("tune-profile") {
+        lc.tune_profile = Some(p.to_string());
     }
     if let Some(m) = args.get("model") {
         lc.model_path = Some(m.to_string());
@@ -71,9 +92,31 @@ fn launch_config(args: &Args) -> Result<LaunchConfig> {
     Ok(lc)
 }
 
-fn build_model(lc: &LaunchConfig) -> Result<Transformer> {
-    let qtype = QuantType::parse(&lc.kernel)
-        .with_context(|| format!("unknown kernel {:?}", lc.kernel))?;
+/// Resolve the `--kernel`/`--qtype` value into a dispatch policy.
+fn build_dispatch(lc: &LaunchConfig) -> Result<Dispatch> {
+    if lc.kernel.eq_ignore_ascii_case("auto") {
+        let path = lc.tune_profile.as_deref().with_context(|| {
+            "--qtype auto requires --tune-profile <path> (generate one with `bitnet tune --out profile.json`)"
+                .to_string()
+        })?;
+        let profile = TuningProfile::load(Path::new(path))?;
+        if profile.threads != lc.threads {
+            eprintln!(
+                "warning: profile was tuned at {} threads but running with {} — \
+                 selections may be stale (re-run `bitnet tune --threads {}`)",
+                profile.threads, lc.threads, lc.threads
+            );
+        }
+        Ok(Dispatch::Auto(profile))
+    } else {
+        let qtype = QuantType::parse(&lc.kernel)
+            .with_context(|| format!("unknown kernel {:?}", lc.kernel))?;
+        Ok(Dispatch::Fixed(qtype))
+    }
+}
+
+fn build_model(lc: &LaunchConfig, verbose: bool) -> Result<Transformer> {
+    let dispatch = build_dispatch(lc)?;
     let ck = match &lc.model_path {
         Some(path) => bitnet::modelio::load(&PathBuf::from(path))?,
         None => {
@@ -82,15 +125,21 @@ fn build_model(lc: &LaunchConfig) -> Result<Transformer> {
             Checkpoint::synthetic(&cfg, lc.seed)
         }
     };
+    let model = Transformer::from_checkpoint_dispatch(&ck, dispatch, lc.threads);
     eprintln!(
-        "model {} ({:.1}M params, {:.1}M ternary) kernel {} threads {}",
+        "model {} ({:.1}M params, {:.1}M ternary) dispatch {} threads {}",
         ck.config.name,
         ck.config.param_count() as f64 / 1e6,
         ck.config.ternary_param_count() as f64 / 1e6,
-        qtype.name(),
+        model.dispatch.describe(),
         lc.threads
     );
-    Ok(Transformer::from_checkpoint(&ck, qtype, lc.threads))
+    if verbose {
+        for (m, k, q) in model.kernel_summary() {
+            eprintln!("dispatch: {m}x{k} -> {}", q.name());
+        }
+    }
+    Ok(model)
 }
 
 fn cmd_info() -> Result<()> {
@@ -131,7 +180,7 @@ fn cmd_gen_model(args: &Args) -> Result<()> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let lc = launch_config(args)?;
-    let model = build_model(&lc)?;
+    let model = build_model(&lc, args.has_flag("verbose"))?;
     let prompt_text = args.get_or("prompt", "the ternary model");
     let max_new = args.get_usize("max-new", 32)?;
     let temperature: f32 = args.get_or("temperature", "0.0").parse().context("--temperature")?;
@@ -171,7 +220,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let lc = launch_config(args)?;
     let n_requests = args.get_usize("requests", 16)?;
     let max_new = args.get_usize("max-new", 16)?;
-    let model = build_model(&lc)?;
+    let model = build_model(&lc, args.has_flag("verbose"))?;
     let vocab = model.cfg.vocab_size as u32;
     let engine = Engine::start(
         model,
@@ -206,6 +255,78 @@ fn cmd_serve(args: &Args) -> Result<()> {
         total_tokens as f64 / wall.as_secs_f64()
     );
     println!("engine: {}", engine.metrics.summary());
+    if args.has_flag("verbose") {
+        println!("kernels: {}", engine.kernel_info);
+    }
+    Ok(())
+}
+
+/// Micro-benchmark every applicable kernel on the projection shapes of a
+/// model preset and write the winners to a JSON tuning profile.
+fn cmd_tune(args: &Args) -> Result<()> {
+    let preset = args.get_or("preset", "tiny");
+    let model_cfg = ModelConfig::preset(&preset)
+        .with_context(|| format!("unknown preset {preset:?}"))?;
+    let out = PathBuf::from(args.get_or("out", "profile.json"));
+    let threads = args.get_usize("threads", 1)?;
+    let measure_ms = args.get_usize("measure-ms", 60)?;
+    let batches: Vec<usize> = args
+        .get_or("batches", "1,4")
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| match s.trim().parse::<usize>() {
+            Ok(0) => Err(anyhow::anyhow!("--batches entries must be >= 1, got 0")),
+            Ok(n) => Ok(n),
+            Err(_) => Err(anyhow::anyhow!("--batches expects integers, got {s:?}")),
+        })
+        .collect::<Result<_>>()?;
+    if batches.is_empty() {
+        bail!("--batches must name at least one batch size (e.g. --batches 1,4)");
+    }
+    // Default candidates are the compact ternary serving kernels; the
+    // dense/general baselines can win small cache-resident shapes and
+    // would silently pack the model at up to 32 bpw. `--kernels all`
+    // measures everything anyway.
+    let candidates: Vec<QuantType> = match args.get("kernels") {
+        None => tuner::default_candidates(),
+        Some(list) if list.eq_ignore_ascii_case("all") => QuantType::ALL.to_vec(),
+        Some(list) => list
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                QuantType::parse(s.trim())
+                    .with_context(|| format!("unknown kernel {s:?} in --kernels"))
+            })
+            .collect::<Result<_>>()?,
+    };
+    if candidates.is_empty() {
+        bail!("--kernels must name at least one kernel");
+    }
+    let cfg = TuneConfig {
+        shapes: tuner::shapes_for_model(&model_cfg),
+        batches,
+        threads,
+        candidates,
+        default: QuantType::I2S,
+        min_iters: 3,
+        min_seconds: measure_ms as f64 / 1e3,
+    };
+    eprintln!(
+        "tuning preset {} ({} shapes x {} batches, {} candidate kernels, {} threads)",
+        preset,
+        cfg.shapes.len(),
+        cfg.batches.len(),
+        cfg.candidates.len(),
+        threads
+    );
+    let verbose = args.has_flag("verbose");
+    let mut log = |s: &str| eprintln!("{s}");
+    let profile = tuner::tune(&cfg, if verbose { Some(&mut log) } else { None });
+    for e in &profile.entries {
+        println!("{}x{} n={}: {}", e.m, e.k, e.n, e.best.name());
+    }
+    profile.save(&out)?;
+    println!("wrote {} ({} entries)", out.display(), profile.entries.len());
     Ok(())
 }
 

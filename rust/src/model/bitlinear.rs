@@ -6,7 +6,7 @@
 //! distinction Figure 2 of the paper illustrates).
 
 use crate::kernels::quant::TernaryWeights;
-use crate::kernels::{kernel_for, matmul, Kernel, QTensor, QuantType};
+use crate::kernels::{kernel_for, matmul, Dispatch, Kernel, QTensor, QuantType};
 use crate::threadpool::ThreadPool;
 
 pub struct BitLinear {
@@ -32,6 +32,14 @@ impl BitLinear {
             info.k_multiple
         );
         BitLinear { qtensor: kernel.quantize(w), kernel, m: w.m, k: w.k }
+    }
+
+    /// Pack ternary weights with the kernel a [`Dispatch`] policy selects
+    /// for this layer's (m, k) shape — `Fixed` pins one kernel, `Auto`
+    /// consults a measured [`crate::kernels::TuningProfile`] (decode-path
+    /// batch of 1 is the selection key; see `docs/tuning.md`).
+    pub fn from_dispatch(w: &TernaryWeights, dispatch: &Dispatch) -> BitLinear {
+        Self::new(w, dispatch.select(w.m, w.k, 1))
     }
 
     pub fn qtype(&self) -> QuantType {
@@ -99,6 +107,26 @@ mod tests {
             layer.forward(&x[i * k..(i + 1) * k], &mut out_s);
             assert_eq!(&out_b[i * m..(i + 1) * m], &out_s[..], "row {i}");
         }
+    }
+
+    #[test]
+    fn dispatch_packing_matches_fixed() {
+        use crate::kernels::TuningProfile;
+        let (m, k) = (16, 256);
+        let w = random_ternary(m, k, 6);
+        let mut profile = TuningProfile::empty(QuantType::I2S, 1);
+        profile.entries.push(crate::kernels::tuner::TuningEntry {
+            m,
+            k,
+            n: 1,
+            best: QuantType::Tl21,
+            measurements: Vec::new(),
+        });
+        let auto = BitLinear::from_dispatch(&w, &Dispatch::Auto(profile));
+        assert_eq!(auto.qtype(), QuantType::Tl21);
+        let fixed = BitLinear::from_dispatch(&w, &Dispatch::Fixed(QuantType::Tl21));
+        assert_eq!(fixed.qtype(), QuantType::Tl21);
+        assert_eq!(auto.qtensor.data, fixed.qtensor.data, "identical packing");
     }
 
     #[test]

@@ -15,7 +15,7 @@ use super::config::ModelConfig;
 use super::ops::{rmsnorm, rope, softmax, swiglu};
 use super::weights::Checkpoint;
 use crate::kernels::baselines::f16_mad::dot_f16;
-use crate::kernels::QuantType;
+use crate::kernels::{Dispatch, QuantType};
 use crate::threadpool::ThreadPool;
 use crate::util::f32_to_f16;
 
@@ -122,7 +122,11 @@ impl Session {
 /// The packed model.
 pub struct Transformer {
     pub cfg: ModelConfig,
+    /// Representative kernel: the fixed kernel, or (under `Auto`
+    /// dispatch) the profile's pick for the h×h attention projections.
     pub qtype: QuantType,
+    /// The policy every ternary projection was packed with.
+    pub dispatch: Dispatch,
     pub tok_embed: Vec<f32>,
     pub layers: Vec<Layer>,
     pub final_norm: Vec<f32>,
@@ -134,18 +138,29 @@ impl Transformer {
     /// Pack a checkpoint for the given kernel, with `n_threads` compute
     /// threads.
     pub fn from_checkpoint(ck: &Checkpoint, qtype: QuantType, n_threads: usize) -> Transformer {
+        Self::from_checkpoint_dispatch(ck, Dispatch::Fixed(qtype), n_threads)
+    }
+
+    /// Pack a checkpoint routing every projection through a [`Dispatch`]
+    /// policy — with `Dispatch::Auto` each (m, k) projection shape packs
+    /// with the kernel its tuning profile measured fastest.
+    pub fn from_checkpoint_dispatch(
+        ck: &Checkpoint,
+        dispatch: Dispatch,
+        n_threads: usize,
+    ) -> Transformer {
         let cfg = ck.config.clone();
         let layers = ck
             .layers
             .iter()
             .map(|l| Layer {
-                wq: BitLinear::new(&l.wq, qtype),
-                wk: BitLinear::new(&l.wk, qtype),
-                wv: BitLinear::new(&l.wv, qtype),
-                wo: BitLinear::new(&l.wo, qtype),
-                w_gate: BitLinear::new(&l.w_gate, qtype),
-                w_up: BitLinear::new(&l.w_up, qtype),
-                w_down: BitLinear::new(&l.w_down, qtype),
+                wq: BitLinear::from_dispatch(&l.wq, &dispatch),
+                wk: BitLinear::from_dispatch(&l.wk, &dispatch),
+                wv: BitLinear::from_dispatch(&l.wv, &dispatch),
+                wo: BitLinear::from_dispatch(&l.wo, &dispatch),
+                w_gate: BitLinear::from_dispatch(&l.w_gate, &dispatch),
+                w_up: BitLinear::from_dispatch(&l.w_up, &dispatch),
+                w_down: BitLinear::from_dispatch(&l.w_down, &dispatch),
                 attn_norm: l.attn_norm.clone(),
                 ffn_norm: l.ffn_norm.clone(),
             })
@@ -155,7 +170,8 @@ impl Transformer {
             tok_embed: ck.tok_embed.clone(),
             final_norm: ck.final_norm.clone(),
             layers,
-            qtype,
+            qtype: dispatch.representative(cfg.hidden, cfg.hidden),
+            dispatch,
             cfg,
             pool: ThreadPool::new(n_threads.max(1)),
         }
@@ -164,6 +180,23 @@ impl Transformer {
     /// Synthetic model shortcut (tests, examples, benches).
     pub fn synthetic(cfg: &ModelConfig, qtype: QuantType, seed: u64) -> Transformer {
         Self::from_checkpoint(&Checkpoint::synthetic(cfg, seed), qtype, 1)
+    }
+
+    /// The distinct (m, k) projection shapes of this model and the kernel
+    /// each was packed with — what `--verbose` prints so an operator can
+    /// see auto-dispatch decisions.
+    pub fn kernel_summary(&self) -> Vec<(usize, usize, QuantType)> {
+        let mut out: Vec<(usize, usize, QuantType)> = Vec::new();
+        if let Some(l) = self.layers.first() {
+            for lin in [&l.wq, &l.wk, &l.wv, &l.wo, &l.w_gate, &l.w_up, &l.w_down] {
+                let item = (lin.m, lin.k, lin.qtype());
+                if !out.contains(&item) {
+                    out.push(item);
+                }
+            }
+        }
+        out.sort_unstable_by_key(|&(m, k, _)| (m, k));
+        out
     }
 
     pub fn new_session(&self, capacity: usize) -> Session {

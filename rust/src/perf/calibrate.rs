@@ -21,6 +21,14 @@ pub struct KernelRate {
     pub bpw: f64,
 }
 
+impl KernelRate {
+    /// Measured wall time of one `m`×`k` matmul (any batch), derived from
+    /// the weight-streaming rate.
+    pub fn secs_per_matmul(&self, m: usize, k: usize) -> f64 {
+        (m * k) as f64 / self.weights_per_s
+    }
+}
+
 /// Calibrate one kernel on an `m`×`k` GEMV with `pool` threads.
 /// The working set should exceed LLC so rates are memory-realistic
 /// (default shape 8192×8192 ≈ 17–134 MB depending on bpw).
@@ -31,20 +39,41 @@ pub fn calibrate_kernel(
     pool: &ThreadPool,
     min_iters: usize,
 ) -> KernelRate {
+    calibrate_kernel_shape(qtype, m, k, 1, pool, min_iters, 0.2)
+}
+
+/// Calibrate one kernel on an `m`×`k` matmul over an `n`-row activation
+/// batch — the generalized entry point the auto-tuner
+/// ([`crate::kernels::tuner`]) sweeps over (m, k, batch, threads) shapes.
+///
+/// Rates are *per matmul* regardless of `n`: weights stream once per call,
+/// so `weights_per_s = m·k / secs_per_call`. Batched calls amortize that
+/// stream over `n` rows, which is exactly the effect batch-aware tuning
+/// needs to observe. Measures at least `min_iters` iterations and at
+/// least `min_seconds` of wall time (capped at 10k iterations).
+pub fn calibrate_kernel_shape(
+    qtype: QuantType,
+    m: usize,
+    k: usize,
+    n: usize,
+    pool: &ThreadPool,
+    min_iters: usize,
+    min_seconds: f64,
+) -> KernelRate {
     let kern = kernel_for(qtype);
     let mut rng = Rng::new(0xCA11);
     let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
     let t = TernaryWeights::from_ternary(q, m, k, 0.05);
     let packed = kern.quantize(&t);
-    let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
-    let mut out = vec![0f32; m];
+    let x: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+    let mut out = vec![0f32; n * m];
     // Warm.
-    matmul(kern, &packed, &x, 1, &mut out, pool);
-    // Measure at least `min_iters` and at least ~200ms.
+    matmul(kern, &packed, &x, n, &mut out, pool);
+    // Measure at least `min_iters` and at least `min_seconds`.
     let t0 = Instant::now();
     let mut iters = 0usize;
-    while iters < min_iters || t0.elapsed().as_secs_f64() < 0.2 {
-        matmul(kern, &packed, &x, 1, &mut out, pool);
+    while iters < min_iters || t0.elapsed().as_secs_f64() < min_seconds {
+        matmul(kern, &packed, &x, n, &mut out, pool);
         iters += 1;
         if iters > 10_000 {
             break;
@@ -80,6 +109,15 @@ pub fn tokens_per_second(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn batched_calibration_produces_sane_rates() {
+        let pool = ThreadPool::new(1);
+        let r = calibrate_kernel_shape(QuantType::I2S, 128, 256, 4, &pool, 2, 0.01);
+        assert!(r.weights_per_s > 0.0, "{:?}", r);
+        assert!(r.secs_per_matmul(128, 256) > 0.0);
+        assert!((r.bpw - 2.0).abs() < 0.01);
+    }
 
     #[test]
     fn calibration_produces_sane_rates() {

@@ -7,22 +7,43 @@
 //! Interchange format is **HLO text** (not serialized protos): jax ≥ 0.5
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
 //! text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The PJRT-backed implementation needs the `xla` crate, which is not
+//! available in the offline build image, so it is gated behind the
+//! **`pjrt` cargo feature** (add the `xla` dependency before enabling).
+//! Without the feature a stub with the identical API compiles in; every
+//! entry point returns an "unavailable" error at run time, and the
+//! PJRT tests / examples skip themselves when artifacts are absent.
 
 use crate::config::Config;
-use anyhow::{Context, Result};
+use anyhow::Result;
+#[cfg(not(feature = "pjrt"))]
+use anyhow::{bail, Context};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 use std::path::{Path, PathBuf};
+
+#[cfg(not(feature = "pjrt"))]
+const UNAVAILABLE: &str = "PJRT runtime unavailable: bitnet was built without the `pjrt` \
+     feature (requires the `xla` crate; see rust/Cargo.toml)";
 
 /// A loaded PJRT CPU client.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
+    #[cfg(not(feature = "pjrt"))]
+    _unconstructable: (),
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
+    /// Create the CPU PJRT client.
     pub fn new() -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Runtime { client })
     }
 
+    /// Platform name reported by the client (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -43,38 +64,37 @@ impl Runtime {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Stub: always errors (built without the `pjrt` feature).
+    pub fn new() -> Result<Runtime> {
+        bail!(UNAVAILABLE);
+    }
+
+    /// Stub platform name.
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Stub: always errors (built without the `pjrt` feature).
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let _ = path;
+        bail!(UNAVAILABLE);
+    }
+}
+
 /// A compiled artifact ready to execute.
 pub struct Executable {
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
+    /// Artifact name (file stem).
     pub name: String,
 }
 
 impl Executable {
+    /// Human-readable identity string.
     pub fn describe(&self) -> String {
         format!("executable '{}'", self.name)
-    }
-
-    /// Execute with f32 inputs of the given shapes. The artifact is lowered
-    /// with `return_tuple=True`, so the single output literal is a tuple;
-    /// each element comes back as a flat f32 vector.
-    pub fn execute_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, dims)| {
-                let n: usize = dims.iter().product();
-                anyhow::ensure!(n == data.len(), "shape {:?} vs {} values", dims, data.len());
-                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-                Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
-            })
-            .collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()
-            .context("fetching result")?;
-        let parts = result.to_tuple().context("untupling result")?;
-        parts
-            .into_iter()
-            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}")))
-            .collect()
     }
 
     /// Execute with deterministic pseudo-random inputs per the manifest
@@ -98,11 +118,48 @@ impl Executable {
     }
 }
 
+#[cfg(feature = "pjrt")]
+impl Executable {
+    /// Execute with f32 inputs of the given shapes. The artifact is lowered
+    /// with `return_tuple=True`, so the single output literal is a tuple;
+    /// each element comes back as a flat f32 vector.
+    pub fn execute_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let n: usize = dims.iter().product();
+                anyhow::ensure!(n == data.len(), "shape {:?} vs {} values", dims, data.len());
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let parts = result.to_tuple().context("untupling result")?;
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}")))
+            .collect()
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Executable {
+    /// Stub: always errors (built without the `pjrt` feature).
+    pub fn execute_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let _ = inputs;
+        bail!(UNAVAILABLE);
+    }
+}
+
 /// Input-shape metadata for one artifact, read from
 /// `artifacts/manifest.toml` (written by `python/compile/aot.py`).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ManifestEntry {
+    /// Artifact name (manifest section / file stem).
     pub name: String,
+    /// One shape per positional input.
     pub input_shapes: Vec<Vec<usize>>,
 }
 
@@ -141,6 +198,15 @@ mod tests {
         assert_eq!(parse_shapes("512;256x512").unwrap(), vec![vec![512], vec![256, 512]]);
         assert_eq!(parse_shapes("4").unwrap(), vec![vec![4]]);
         assert!(parse_shapes("a").is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_unavailable() {
+        let Err(err) = Runtime::new() else {
+            panic!("stub Runtime::new must error");
+        };
+        assert!(format!("{err}").contains("pjrt"), "{err}");
     }
 
     // PJRT-backed tests live in rust/tests/runtime_pjrt.rs (they need the

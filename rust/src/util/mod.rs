@@ -1,14 +1,15 @@
 //! Small shared substrates: IEEE-754 half-precision conversion, a seedable
-//! PRNG (no external deps are available offline), and summary statistics.
-//!
-//! These exist because the offline crate set is limited to `xla`, `anyhow`
-//! and `thiserror`; everything else in the stack is built from scratch.
+//! PRNG, summary statistics and a minimal JSON reader/writer (the build
+//! runs offline with no registry access, so these are built from scratch;
+//! the only external crate is the vendored `anyhow` stand-in).
 
 pub mod f16;
+pub mod json;
 pub mod rng;
 pub mod stats;
 
 pub use f16::{f16_to_f32, f32_to_f16};
+pub use json::Json;
 pub use rng::Rng;
 pub use stats::Summary;
 

@@ -1,0 +1,142 @@
+//! Auto-tuned dispatch integration tests: profile round-trip through disk
+//! (save → load → identical dispatch decisions) and the correctness smoke
+//! test that `Auto` dispatch is bit-identical to `Fixed` for the lossless
+//! kernels (TL1_1, TL2_1, I2_S).
+
+use bitnet::kernels::tuner::{tune, Measurement, TuneConfig, TuningEntry};
+use bitnet::kernels::{Dispatch, QuantType, TuningProfile};
+use bitnet::model::{ModelConfig, Transformer};
+use bitnet::model::weights::Checkpoint;
+
+fn entry(m: usize, k: usize, n: usize, best: QuantType) -> TuningEntry {
+    TuningEntry {
+        m,
+        k,
+        n,
+        best,
+        measurements: vec![Measurement {
+            qtype: best,
+            us_per_matmul: 10.0,
+            gweights_per_s: (m * k) as f64 / 10.0e-6 / 1e9,
+        }],
+    }
+}
+
+/// A hand-built profile covering every projection shape of the tiny
+/// preset, pinning each to a chosen lossless kernel.
+fn tiny_profile(best_for_all: QuantType) -> TuningProfile {
+    let cfg = ModelConfig::tiny();
+    let mut p = TuningProfile::empty(QuantType::I2S, 1);
+    for (m, k) in bitnet::kernels::tuner::shapes_for_model(&cfg) {
+        p.entries.push(entry(m, k, 1, best_for_all));
+    }
+    p
+}
+
+#[test]
+fn profile_round_trip_preserves_dispatch_decisions() {
+    let cfg = ModelConfig::tiny();
+    let shapes = bitnet::kernels::tuner::shapes_for_model(&cfg);
+    let mut profile = TuningProfile::empty(QuantType::I2S, 2);
+    // Mix of winners across shapes and batches.
+    let kinds = [QuantType::Tl20, QuantType::Tl11, QuantType::Tq20, QuantType::I2S];
+    for (i, &(m, k)) in shapes.iter().enumerate() {
+        profile.entries.push(entry(m, k, 1, kinds[i % kinds.len()]));
+        profile.entries.push(entry(m, k, 4, kinds[(i + 1) % kinds.len()]));
+    }
+
+    let dir = std::env::temp_dir().join("bitnet_tuning_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("profile.json");
+    profile.save(&path).unwrap();
+    let loaded = TuningProfile::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+
+    assert_eq!(loaded, profile, "profile must round-trip losslessly");
+    // The contract that matters: identical selections for every shape at
+    // every batch size, including fallback shapes missing from the profile.
+    for &(m, k) in &shapes {
+        for n in [1usize, 2, 4, 8, 64] {
+            assert_eq!(loaded.select(m, k, n), profile.select(m, k, n), "{m}x{k} n={n}");
+        }
+    }
+    assert_eq!(loaded.select(12345, 678, 1), profile.select(12345, 678, 1));
+}
+
+#[test]
+fn auto_dispatch_is_bit_identical_to_fixed_for_lossless_kernels() {
+    let cfg = ModelConfig::tiny();
+    let ck = Checkpoint::synthetic(&cfg, 99);
+    let tokens = [3u32, 1, 4, 1, 5, 9, 2, 6];
+    for qt in [QuantType::I2S, QuantType::Tl11, QuantType::Tl21] {
+        let fixed = Transformer::from_checkpoint_dispatch(&ck, Dispatch::Fixed(qt), 1);
+        let auto =
+            Transformer::from_checkpoint_dispatch(&ck, Dispatch::Auto(tiny_profile(qt)), 1);
+        assert_eq!(auto.qtype, qt, "representative kernel under auto");
+        let mut s1 = fixed.new_session(32);
+        let mut s2 = auto.new_session(32);
+        let l1 = fixed.prefill(&mut s1, &tokens);
+        let l2 = auto.prefill(&mut s2, &tokens);
+        assert_eq!(l1, l2, "{qt:?}: auto vs fixed logits must be bit-identical");
+    }
+}
+
+#[test]
+fn auto_dispatch_mixing_lossless_kernels_matches_fixed_i2s() {
+    // Different lossless kernels per shape still produce the exact I2_S
+    // logits — the model-level Figure-2 property, now via dispatch.
+    let cfg = ModelConfig::tiny();
+    let ck = Checkpoint::synthetic(&cfg, 7);
+    let mut profile = TuningProfile::empty(QuantType::I2S, 1);
+    let lossless = [QuantType::I2S, QuantType::Tl11, QuantType::Tl21];
+    for (i, (m, k)) in bitnet::kernels::tuner::shapes_for_model(&cfg).into_iter().enumerate() {
+        profile.entries.push(entry(m, k, 1, lossless[i % lossless.len()]));
+    }
+    let auto = Transformer::from_checkpoint_dispatch(&ck, Dispatch::Auto(profile), 1);
+    // The mix really is a mix.
+    let kernels: std::collections::HashSet<_> =
+        auto.kernel_summary().into_iter().map(|(_, _, q)| q).collect();
+    assert!(kernels.len() > 1, "expected heterogeneous dispatch, got {kernels:?}");
+
+    let fixed = Transformer::from_checkpoint_dispatch(&ck, Dispatch::Fixed(QuantType::I2S), 1);
+    let tokens = [5u32, 10, 400, 3, 77];
+    let mut s1 = fixed.new_session(32);
+    let mut s2 = auto.new_session(32);
+    assert_eq!(fixed.prefill(&mut s1, &tokens), auto.prefill(&mut s2, &tokens));
+}
+
+#[test]
+fn real_tune_run_yields_usable_profile() {
+    // End-to-end: micro-benchmark two kernels on the tiny shapes with a
+    // minimal budget, save, load, and pack a model through the result.
+    let cfg = ModelConfig::tiny();
+    let tcfg = TuneConfig {
+        shapes: bitnet::kernels::tuner::shapes_for_model(&cfg),
+        batches: vec![1],
+        threads: 1,
+        candidates: vec![QuantType::I2S, QuantType::Tl21],
+        default: QuantType::I2S,
+        min_iters: 1,
+        min_seconds: 0.002,
+    };
+    let profile = tune(&tcfg, None);
+    assert_eq!(profile.entries.len(), tcfg.shapes.len());
+
+    let dir = std::env::temp_dir().join("bitnet_tuning_test_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tuned.json");
+    profile.save(&path).unwrap();
+    let loaded = TuningProfile::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+
+    let ck = Checkpoint::synthetic(&cfg, 1);
+    let model = Transformer::from_checkpoint_dispatch(&ck, Dispatch::Auto(loaded), 1);
+    let mut s = model.new_session(16);
+    let logits = model.prefill(&mut s, &[1, 2, 3]);
+    assert!(logits.iter().all(|v| v.is_finite()));
+    // Both candidates are lossless, so whatever won, logits must equal
+    // the fixed I2_S reference.
+    let fixed = Transformer::from_checkpoint_dispatch(&ck, Dispatch::Fixed(QuantType::I2S), 1);
+    let mut sf = fixed.new_session(16);
+    assert_eq!(fixed.prefill(&mut sf, &[1, 2, 3]), logits);
+}
