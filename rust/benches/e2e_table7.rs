@@ -8,12 +8,15 @@
 //! cross-checked end-to-end by examples/serve_e2e.rs.
 //!
 //! Env: BENCH_THREADS (default: all cores), BENCH_FAST=1 (smaller
-//! calibration shape).
+//! calibration shape), BENCH_JSON=path (additionally write the rates and
+//! per-size tokens/s as a JSON document — what CI uploads as the
+//! `BENCH_e2e.json` perf-trajectory artifact).
 
 use bitnet::kernels::QuantType;
 use bitnet::model::ModelConfig;
 use bitnet::perf::calibrate::{calibrate_kernel, tokens_per_second, KernelRate};
 use bitnet::threadpool::ThreadPool;
+use bitnet::util::Json;
 
 fn main() {
     let threads: usize = std::env::var("BENCH_THREADS")
@@ -90,4 +93,47 @@ fn main() {
         }
     }
     let _ = vals;
+
+    // Machine-readable trajectory: one JSON document per run so CI can
+    // archive the perf history (`BENCH_e2e.json` artifact).
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let rate_objs: Vec<Json> = rates
+            .iter()
+            .map(|r| {
+                Json::Obj(vec![
+                    ("kernel".into(), Json::Str(r.qtype.name().into())),
+                    ("weight_gb_per_s".into(), Json::Num(r.weight_bytes_per_s / 1e9)),
+                    ("gweights_per_s".into(), Json::Num(r.weights_per_s / 1e9)),
+                    ("bpw".into(), Json::Num(r.bpw)),
+                ])
+            })
+            .collect();
+        let size_objs: Vec<Json> = rows
+            .iter()
+            .map(|(cfg, vals)| {
+                let mut fields = vec![("size".to_string(), Json::Str(cfg.name.into()))];
+                for (qt, v) in kernels.iter().zip(vals.iter()) {
+                    let cell = match v {
+                        Some(tps) => Json::Num(*tps),
+                        None => Json::Null,
+                    };
+                    fields.push((qt.name().to_string(), cell));
+                }
+                Json::Obj(fields)
+            })
+            .collect();
+        let doc = Json::Obj(vec![
+            ("bench".into(), Json::Str("e2e_table7".into())),
+            ("threads".into(), Json::Num(threads as f64)),
+            ("fast".into(), Json::Bool(fast)),
+            (
+                "calibration_shape".into(),
+                Json::Arr(vec![Json::Num(m as f64), Json::Num(k as f64)]),
+            ),
+            ("rates".into(), Json::Arr(rate_objs)),
+            ("tokens_per_s".into(), Json::Arr(size_objs)),
+        ]);
+        std::fs::write(&path, doc.to_string_pretty()).expect("write BENCH_JSON");
+        println!("# wrote {path}");
+    }
 }

@@ -60,13 +60,23 @@ impl Engine {
         let (tx, rx) = channel();
         let metrics = Arc::new(EngineMetrics::new());
         let m2 = Arc::clone(&metrics);
+        // Materialize the packings the plan selects for the decode
+        // regimes this engine will actually run (single-sequence and
+        // full-batch width), so the first requests don't pay repack
+        // latency mid-stream. Prefill chunks still pack lazily (prompt
+        // lengths aren't known yet).
+        model.prepack(&[1, config.max_batch.max(1)]);
+        // Packing/prepack-time fallbacks are visible immediately, not
+        // only after the first served request.
+        metrics.dispatch_fallbacks.store(model.plan.fallbacks(), Ordering::Relaxed);
+        metrics.dispatch_degraded.store(model.plan.degraded(), Ordering::Relaxed);
         let kernel_info = {
             let shapes: Vec<String> = model
                 .kernel_summary()
                 .into_iter()
                 .map(|(m, k, q)| format!("{m}x{k}->{}", q.name()))
                 .collect();
-            format!("{}: {}", model.dispatch.describe(), shapes.join(" "))
+            format!("{}: {}", model.plan.describe(), shapes.join(" "))
         };
         let worker = std::thread::Builder::new()
             .name("bitnet-engine".into())
@@ -179,6 +189,10 @@ fn run_loop(
         if plan.prefill.is_empty() && plan.decode.is_empty() {
             continue;
         }
+        metrics.peak_batch.fetch_max(plan.decode_width() as u64, Ordering::Relaxed);
+        if let Some(&chunk) = plan.prefill_chunks.iter().max() {
+            metrics.peak_prefill_chunk.fetch_max(chunk as u64, Ordering::Relaxed);
+        }
 
         // Prefill newly admitted requests (chunked prompt GEMM); the first
         // sampled token comes from the prefill logits.
@@ -237,6 +251,13 @@ fn run_loop(
                 metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
             }
         }
+
+        // Mirror the model's dispatch-observability counters (untuned-
+        // shape fallbacks and winners that could not run — see
+        // kernels::tuner::DispatchPlan) after the step's forwards;
+        // Engine::start seeds the same counters for packing/prepack time.
+        metrics.dispatch_fallbacks.store(model.plan.fallbacks(), Ordering::Relaxed);
+        metrics.dispatch_degraded.store(model.plan.degraded(), Ordering::Relaxed);
 
         // Emit completions.
         for (id, reason) in finished {

@@ -44,13 +44,32 @@ impl SeqState {
     }
 }
 
-/// What the engine should do this step.
+/// What the engine should do this step. Besides the request ids, the
+/// plan carries the *shape* of the step — prefill chunk sizes and the
+/// decode batch width — which is exactly what phase-aware kernel
+/// dispatch keys on (a prefill chunk of 100 tokens and a decode batch
+/// of 4 hit different tuned regimes; see `kernels::tuner::DispatchPlan`).
 #[derive(Debug, Default, PartialEq, Eq)]
 pub struct StepPlan {
     /// Newly admitted requests to prefill (in order).
     pub prefill: Vec<u64>,
+    /// Prefill chunk size (prompt tokens) per admitted request, parallel
+    /// to `prefill` — the GEMM batch width each prefill will run at.
+    pub prefill_chunks: Vec<usize>,
     /// Running sequences to decode as one batch.
     pub decode: Vec<u64>,
+}
+
+impl StepPlan {
+    /// The decode GEMM batch width of this step.
+    pub fn decode_width(&self) -> usize {
+        self.decode.len()
+    }
+
+    /// Total prompt tokens this step will prefill.
+    pub fn prefill_tokens(&self) -> usize {
+        self.prefill_chunks.iter().sum()
+    }
 }
 
 /// The scheduler.
@@ -112,6 +131,7 @@ impl Scheduler {
             let mut seq = self.waiting.pop_front().unwrap();
             seq.phase = Phase::Prefill;
             plan.prefill.push(seq.id);
+            plan.prefill_chunks.push(seq.prompt_len);
             self.running.push(seq);
         }
         for s in self.running.iter_mut() {
@@ -194,6 +214,23 @@ mod tests {
         let p2 = sch.step(&mut pool);
         assert_eq!(p2.prefill, vec![2]);
         assert_eq!(p2.decode, vec![1, 2]);
+    }
+
+    #[test]
+    fn step_plan_reports_phase_shapes() {
+        let mut pool = KvPool::new(16 * 100);
+        let mut sch = Scheduler::new(4);
+        sch.submit(seq(1, 5, 4), &pool);
+        sch.submit(seq(2, 9, 4), &pool);
+        let plan = sch.step(&mut pool);
+        assert_eq!(plan.prefill_chunks, vec![5, 9]);
+        assert_eq!(plan.prefill_tokens(), 14);
+        assert_eq!(plan.decode_width(), 2);
+        // Next step: no admissions, pure decode batch.
+        let plan = sch.step(&mut pool);
+        assert!(plan.prefill.is_empty() && plan.prefill_chunks.is_empty());
+        assert_eq!(plan.prefill_tokens(), 0);
+        assert_eq!(plan.decode_width(), 2);
     }
 
     #[test]

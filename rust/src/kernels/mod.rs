@@ -28,7 +28,7 @@ pub mod tl1;
 pub mod tl2;
 pub mod tuner;
 
-pub use tuner::{Dispatch, TuningProfile};
+pub use tuner::{Dispatch, DispatchPlan, Role, TuningProfile};
 
 use crate::threadpool::ThreadPool;
 use quant::{ActBlocked, ActInt8, TernaryWeights};

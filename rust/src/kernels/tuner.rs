@@ -29,10 +29,89 @@ use crate::perf::calibrate::{calibrate_kernel_shape, KernelRate};
 use crate::threadpool::ThreadPool;
 use crate::util::Json;
 use anyhow::{bail, Context, Result};
+use std::collections::HashSet;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
-/// Profile file format version (bump on breaking schema changes).
-pub const PROFILE_VERSION: u64 = 1;
+/// Profile file format version written by [`TuningProfile::to_json`]
+/// (bump on breaking schema changes). Older versions in
+/// [`SUPPORTED_PROFILE_VERSIONS`] still load, with the fields they lack
+/// defaulting to empty — see `docs/tuning.md` for the migration table.
+pub const PROFILE_VERSION: u64 = 2;
+
+/// Profile versions [`TuningProfile::from_json`] accepts. v1 files (PR 1)
+/// carry only the per-shape `entries`; v2 adds optional `overrides` and
+/// `e2e` sections.
+pub const SUPPORTED_PROFILE_VERSIONS: [u64; 2] = [1, 2];
+
+/// The projection a ternary matmul serves inside a transformer layer —
+/// the per-layer dispatch key alongside the (m, k, n) shape. `Qkv`
+/// covers the three attention input projections (wq/wk/wv always share
+/// a phase regime); the rest are one projection each.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Role {
+    /// Attention input projections wq/wk/wv.
+    Qkv,
+    /// Attention output projection wo.
+    O,
+    /// FFN gate projection.
+    Gate,
+    /// FFN up projection.
+    Up,
+    /// FFN down projection.
+    Down,
+}
+
+impl Role {
+    /// Every role, in layer-forward order.
+    pub const ALL: [Role; 5] = [Role::Qkv, Role::O, Role::Gate, Role::Up, Role::Down];
+
+    /// Profile-facing name (the `role` field of an override entry).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Role::Qkv => "qkv",
+            Role::O => "o",
+            Role::Gate => "gate",
+            Role::Up => "up",
+            Role::Down => "down",
+        }
+    }
+
+    /// Parse a profile-facing role name.
+    pub fn parse(s: &str) -> Option<Role> {
+        Role::ALL.iter().copied().find(|r| r.name().eq_ignore_ascii_case(s))
+    }
+}
+
+/// A v2-profile per-layer override: pin `(layer, role)` at batch `n` to a
+/// specific kernel, taking precedence over the per-shape `entries`. Batch
+/// resolution follows the same largest-tuned-n ≤ n rule as shape entries.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerOverride {
+    /// Zero-based transformer layer index.
+    pub layer: usize,
+    /// Which projection of that layer.
+    pub role: Role,
+    /// Activation batch rows this override was chosen for.
+    pub n: usize,
+    /// The kernel to run.
+    pub qtype: QuantType,
+}
+
+/// One end-to-end layer-composition measurement recorded by
+/// `bitnet tune --e2e` (informational: per-shape winners can compose
+/// differently than they measure in isolation — cache pressure from one
+/// layer's tables evicts the next layer's weights).
+#[derive(Clone, Debug, PartialEq)]
+pub struct E2eEntry {
+    /// What was measured, e.g. `auto` or `fixed(I2_S)`.
+    pub label: String,
+    /// Prefill throughput, prompt tokens per second.
+    pub prefill_tok_s: f64,
+    /// Decode throughput, generated tokens per second.
+    pub decode_tok_s: f64,
+}
 
 /// One timed kernel on one shape.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -72,12 +151,24 @@ pub struct TuningProfile {
     pub default: QuantType,
     /// Per-shape winners.
     pub entries: Vec<TuningEntry>,
+    /// v2: per-layer overrides, consulted before `entries` when the
+    /// caller knows its (layer, role) position ([`TuningProfile::select_for`]).
+    pub overrides: Vec<LayerOverride>,
+    /// v2: end-to-end layer-composition measurements (`tune --e2e`),
+    /// informational.
+    pub e2e: Vec<E2eEntry>,
 }
 
 impl TuningProfile {
     /// An empty profile that always falls back to `default`.
     pub fn empty(default: QuantType, threads: usize) -> TuningProfile {
-        TuningProfile { threads, default, entries: Vec::new() }
+        TuningProfile {
+            threads,
+            default,
+            entries: Vec::new(),
+            overrides: Vec::new(),
+            e2e: Vec::new(),
+        }
     }
 
     /// Select the kernel for an `m`×`k` matmul at batch size `n`.
@@ -89,6 +180,13 @@ impl TuningProfile {
     /// 2. if every tuned batch for (m, k) exceeds `n`, the smallest one;
     /// 3. if (m, k) was never tuned at all, [`TuningProfile::default`].
     pub fn select(&self, m: usize, k: usize, n: usize) -> QuantType {
+        self.select_traced(m, k, n).0
+    }
+
+    /// [`TuningProfile::select`], also reporting whether resolution fell
+    /// through to the untuned `default` (true = case 3, a fallback worth
+    /// surfacing — see [`DispatchPlan`]).
+    pub fn select_traced(&self, m: usize, k: usize, n: usize) -> (QuantType, bool) {
         let mut below: Option<&TuningEntry> = None;
         let mut above: Option<&TuningEntry> = None;
         for e in self.entries.iter().filter(|e| e.m == m && e.k == k) {
@@ -100,7 +198,39 @@ impl TuningProfile {
                 above = Some(e);
             }
         }
-        below.or(above).map(|e| e.best).unwrap_or(self.default)
+        match below.or(above) {
+            Some(e) => (e.best, false),
+            None => (self.default, true),
+        }
+    }
+
+    /// Layer-aware selection: per-layer `overrides` for (layer, role)
+    /// resolve first (same largest-tuned-n ≤ n batch rule), then the
+    /// per-shape `entries`, then `default`. The bool reports a default
+    /// fallback exactly as in [`TuningProfile::select_traced`].
+    pub fn select_for(
+        &self,
+        layer: usize,
+        role: Role,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> (QuantType, bool) {
+        let mut below: Option<&LayerOverride> = None;
+        let mut above: Option<&LayerOverride> = None;
+        for o in self.overrides.iter().filter(|o| o.layer == layer && o.role == role) {
+            if o.n <= n {
+                if below.map_or(true, |b| o.n > b.n) {
+                    below = Some(o);
+                }
+            } else if above.map_or(true, |a| o.n < a.n) {
+                above = Some(o);
+            }
+        }
+        if let Some(o) = below.or(above) {
+            return (o.qtype, false);
+        }
+        self.select_traced(m, k, n)
     }
 
     /// Serialize to the JSON profile schema.
@@ -129,19 +259,56 @@ impl TuningProfile {
                 ])
             })
             .collect();
-        Json::Obj(vec![
+        let mut fields = vec![
             ("version".into(), Json::Num(PROFILE_VERSION as f64)),
             ("threads".into(), Json::Num(self.threads as f64)),
             ("default".into(), Json::Str(self.default.name().into())),
             ("entries".into(), Json::Arr(entries)),
-        ])
+        ];
+        if !self.overrides.is_empty() {
+            let os = self
+                .overrides
+                .iter()
+                .map(|o| {
+                    Json::Obj(vec![
+                        ("layer".into(), Json::Num(o.layer as f64)),
+                        ("role".into(), Json::Str(o.role.name().into())),
+                        ("n".into(), Json::Num(o.n as f64)),
+                        ("kernel".into(), Json::Str(o.qtype.name().into())),
+                    ])
+                })
+                .collect();
+            fields.push(("overrides".into(), Json::Arr(os)));
+        }
+        if !self.e2e.is_empty() {
+            let es = self
+                .e2e
+                .iter()
+                .map(|e| {
+                    Json::Obj(vec![
+                        ("label".into(), Json::Str(e.label.clone())),
+                        ("prefill_tok_s".into(), Json::Num(e.prefill_tok_s)),
+                        ("decode_tok_s".into(), Json::Num(e.decode_tok_s)),
+                    ])
+                })
+                .collect();
+            fields.push(("e2e".into(), Json::Arr(es)));
+        }
+        Json::Obj(fields)
     }
 
-    /// Parse from the JSON profile schema.
+    /// Parse from the JSON profile schema. Every version listed in
+    /// [`SUPPORTED_PROFILE_VERSIONS`] loads; v1 files migrate by leaving
+    /// the sections they predate (`overrides`, `e2e`) empty. Anything
+    /// else is a clear error, not a field-order guess.
     pub fn from_json(v: &Json) -> Result<TuningProfile> {
         let version = v.get("version").and_then(Json::as_usize).context("profile: version")?;
-        if version as u64 != PROFILE_VERSION {
-            bail!("unsupported profile version {version} (expected {PROFILE_VERSION})");
+        if !SUPPORTED_PROFILE_VERSIONS.contains(&(version as u64)) {
+            bail!(
+                "unsupported profile version {version} (supported: {:?}); \
+                 regenerate with `bitnet tune --out <path>`",
+                SUPPORTED_PROFILE_VERSIONS
+            );
         }
         let threads = v.get("threads").and_then(Json::as_usize).context("profile: threads")?;
         let default = parse_qtype(v.get("default").and_then(Json::as_str).context("profile: default")?)?;
@@ -184,7 +351,54 @@ impl TuningProfile {
                 measurements,
             });
         }
-        Ok(TuningProfile { threads, default, entries })
+        let mut overrides = Vec::new();
+        if let Some(os) = v.get("overrides").and_then(Json::as_array) {
+            for (i, o) in os.iter().enumerate() {
+                let role_name = o
+                    .get("role")
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("override {i}: role"))?;
+                let role = Role::parse(role_name)
+                    .with_context(|| format!("override {i}: unknown role {role_name:?}"))?;
+                overrides.push(LayerOverride {
+                    layer: o
+                        .get("layer")
+                        .and_then(Json::as_usize)
+                        .with_context(|| format!("override {i}: layer"))?,
+                    role,
+                    n: o
+                        .get("n")
+                        .and_then(Json::as_usize)
+                        .with_context(|| format!("override {i}: n"))?,
+                    qtype: parse_qtype(
+                        o.get("kernel")
+                            .and_then(Json::as_str)
+                            .with_context(|| format!("override {i}: kernel"))?,
+                    )?,
+                });
+            }
+        }
+        let mut e2e = Vec::new();
+        if let Some(es) = v.get("e2e").and_then(Json::as_array) {
+            for (i, e) in es.iter().enumerate() {
+                e2e.push(E2eEntry {
+                    label: e
+                        .get("label")
+                        .and_then(Json::as_str)
+                        .with_context(|| format!("e2e {i}: label"))?
+                        .to_string(),
+                    prefill_tok_s: e
+                        .get("prefill_tok_s")
+                        .and_then(Json::as_f64)
+                        .with_context(|| format!("e2e {i}: prefill_tok_s"))?,
+                    decode_tok_s: e
+                        .get("decode_tok_s")
+                        .and_then(Json::as_f64)
+                        .with_context(|| format!("e2e {i}: decode_tok_s"))?,
+                });
+            }
+        }
+        Ok(TuningProfile { threads, default, entries, overrides, e2e })
     }
 
     /// Write the profile to a JSON file.
@@ -224,6 +438,23 @@ impl Dispatch {
         }
     }
 
+    /// Layer-aware selection (see [`TuningProfile::select_for`]). The
+    /// bool reports that an `Auto` profile had no entry for the shape and
+    /// fell back to its default; `Fixed` never falls back.
+    pub fn select_for(
+        &self,
+        layer: usize,
+        role: Role,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> (QuantType, bool) {
+        match self {
+            Dispatch::Fixed(q) => (*q, false),
+            Dispatch::Auto(p) => p.select_for(layer, role, m, k, n),
+        }
+    }
+
     /// A representative kernel (what `Transformer::qtype` reports): the
     /// fixed kernel, or the profile's selection for the given shape.
     pub fn representative(&self, m: usize, k: usize) -> QuantType {
@@ -235,12 +466,122 @@ impl Dispatch {
         match self {
             Dispatch::Fixed(q) => format!("fixed({})", q.name()),
             Dispatch::Auto(p) => format!(
-                "auto({} tuned shapes, default {}, tuned @ {} threads)",
+                "auto({} tuned shapes, {} layer overrides, default {}, tuned @ {} threads)",
                 p.entries.len(),
+                p.overrides.len(),
                 p.default.name(),
                 p.threads
             ),
         }
+    }
+}
+
+/// The per-call kernel resolver the model's hot path consults: wraps a
+/// [`Dispatch`] policy with the call-site context (layer index, [`Role`],
+/// effective batch `n`) and observability — untuned-shape fallbacks are
+/// counted (surfaced as `dispatch_fallbacks` in the engine metrics) and,
+/// in verbose mode, logged once per (m, k, n) instead of silently
+/// inheriting the profile default.
+///
+/// Construction-time packing picks each layer's *primary* kernel through
+/// the same plan at n=1; `forward_batch` re-resolves per call with the
+/// real batch width, which is what routes prefill (n = chunk length) and
+/// batched decode (n = batch width) to different kernels than
+/// single-sequence decode (n=1) — the paper's prefill/decode split.
+pub struct DispatchPlan {
+    dispatch: Dispatch,
+    verbose: bool,
+    fallback_count: AtomicU64,
+    degraded_count: AtomicU64,
+    /// (m, k, n) shapes whose fallback was already logged (verbose only).
+    logged: Mutex<HashSet<(usize, usize, usize)>>,
+    /// (m, k, n) shapes whose degradation was already logged (verbose only).
+    logged_degraded: Mutex<HashSet<(usize, usize, usize)>>,
+}
+
+impl DispatchPlan {
+    /// Wrap a dispatch policy (non-verbose).
+    pub fn new(dispatch: Dispatch) -> DispatchPlan {
+        DispatchPlan {
+            dispatch,
+            verbose: false,
+            fallback_count: AtomicU64::new(0),
+            degraded_count: AtomicU64::new(0),
+            logged: Mutex::new(HashSet::new()),
+            logged_degraded: Mutex::new(HashSet::new()),
+        }
+    }
+
+    /// Enable once-per-shape fallback logging to stderr.
+    pub fn with_verbose(mut self, verbose: bool) -> DispatchPlan {
+        self.verbose = verbose;
+        self
+    }
+
+    /// The wrapped policy.
+    pub fn dispatch(&self) -> &Dispatch {
+        &self.dispatch
+    }
+
+    /// One-line human description for logs (delegates to the policy).
+    pub fn describe(&self) -> String {
+        self.dispatch.describe()
+    }
+
+    /// Resolve the kernel for one matmul call, recording fallbacks.
+    pub fn select(&self, layer: usize, role: Role, m: usize, k: usize, n: usize) -> QuantType {
+        let (q, fell_back) = self.dispatch.select_for(layer, role, m, k, n);
+        if fell_back {
+            self.fallback_count.fetch_add(1, Ordering::Relaxed);
+            if self.verbose {
+                let mut logged = self.logged.lock().unwrap();
+                if logged.insert((m, k, n)) {
+                    eprintln!(
+                        "dispatch: no tuned entry for {m}x{k} n={n}; falling back to {} \
+                         (re-run `bitnet tune` to cover this shape)",
+                        q.name()
+                    );
+                }
+            }
+        }
+        q
+    }
+
+    /// How many selections fell back to the profile default so far.
+    pub fn fallbacks(&self) -> u64 {
+        self.fallback_count.load(Ordering::Relaxed)
+    }
+
+    /// Record that a routed call could not run its resolved kernel
+    /// (`want`) and degraded to `ran` — alternate budget exhausted, K
+    /// alignment mismatch, or a non-reconstructable primary. Counted so
+    /// "tuned winner is live" is never silently untrue, logged once per
+    /// (m, k, n) in verbose mode.
+    pub fn note_degraded(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        want: QuantType,
+        ran: QuantType,
+    ) {
+        self.degraded_count.fetch_add(1, Ordering::Relaxed);
+        if self.verbose {
+            let mut logged = self.logged_degraded.lock().unwrap();
+            if logged.insert((m, k, n)) {
+                eprintln!(
+                    "dispatch: {m}x{k} n={n} resolved to {} but ran {} \
+                     (alternate budget or K alignment)",
+                    want.name(),
+                    ran.name()
+                );
+            }
+        }
+    }
+
+    /// How many routed calls degraded from their resolved kernel so far.
+    pub fn degraded(&self) -> u64 {
+        self.degraded_count.load(Ordering::Relaxed)
     }
 }
 
@@ -356,7 +697,73 @@ pub fn tune(cfg: &TuneConfig, mut progress: Option<&mut dyn FnMut(&str)>) -> Tun
             entries.push(TuningEntry { m, k, n, best, measurements });
         }
     }
-    TuningProfile { threads: cfg.threads.max(1), default: cfg.default, entries }
+    TuningProfile {
+        threads: cfg.threads.max(1),
+        default: cfg.default,
+        entries,
+        overrides: Vec::new(),
+        e2e: Vec::new(),
+    }
+}
+
+/// Measure layer-composition effects end to end (`bitnet tune --e2e`):
+/// build the preset model under `Auto(profile)` and under
+/// `Fixed(profile.default)`, then time one prefill chunk of
+/// `prefill_tokens` and `decode_tokens` single-sequence decode steps.
+/// Per-shape micro-benchmarks can mislead in composition (one layer's
+/// LUT tables evict the next layer's weights); this is the check that
+/// the tuned profile actually wins on the full stack. Alternates are
+/// prepacked before timing so repack cost isn't billed to the first call.
+///
+/// Synthesizes the model in memory, so it is restricted to runnable
+/// presets (tiny / 100M).
+pub fn measure_e2e(
+    profile: &TuningProfile,
+    cfg: &crate::model::ModelConfig,
+    threads: usize,
+    prefill_tokens: usize,
+    decode_tokens: usize,
+) -> Result<Vec<E2eEntry>> {
+    if cfg.param_count() > 300_000_000 {
+        bail!(
+            "tune --e2e synthesizes the whole model in memory; preset {} is too large \
+             (use --preset tiny or 100M)",
+            cfg.name
+        );
+    }
+    let prefill_tokens = prefill_tokens.clamp(1, (cfg.max_seq_len / 2).max(1));
+    // The decode loop advances the session past the prefill chunk; keep
+    // the sum inside max_seq_len or Session::append would overflow.
+    let decode_tokens = decode_tokens.min(cfg.max_seq_len.saturating_sub(prefill_tokens + 1));
+    let ck = crate::model::weights::Checkpoint::synthetic(cfg, 0xE2E);
+    let candidates = [
+        ("auto".to_string(), Dispatch::Auto(profile.clone())),
+        (format!("fixed({})", profile.default.name()), Dispatch::Fixed(profile.default)),
+    ];
+    let prompt: Vec<u32> = (0..prefill_tokens)
+        .map(|i| (3 + i % cfg.vocab_size.saturating_sub(3).max(1)) as u32)
+        .collect();
+    let mut out = Vec::new();
+    for (label, dispatch) in candidates {
+        let model = crate::model::Transformer::from_checkpoint_dispatch(&ck, dispatch, threads);
+        model.prepack(&[1, prompt.len()]);
+        let mut session = model.new_session(prompt.len() + decode_tokens + 1);
+        let t0 = std::time::Instant::now();
+        let _ = model.prefill(&mut session, &prompt);
+        let prefill_s = t0.elapsed().as_secs_f64();
+        let tok = 3 % cfg.vocab_size as u32;
+        let t1 = std::time::Instant::now();
+        for _ in 0..decode_tokens {
+            let _ = model.decode_step(&mut session, tok);
+        }
+        let decode_s = t1.elapsed().as_secs_f64();
+        out.push(E2eEntry {
+            label,
+            prefill_tok_s: prompt.len() as f64 / prefill_s.max(1e-9),
+            decode_tok_s: decode_tokens as f64 / decode_s.max(1e-9),
+        });
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -370,13 +777,12 @@ mod tests {
     #[test]
     fn select_prefers_largest_tuned_batch_not_above_n() {
         let p = TuningProfile {
-            threads: 2,
-            default: QuantType::I2S,
             entries: vec![
                 entry(256, 256, 1, QuantType::Tl20),
                 entry(256, 256, 4, QuantType::Tq20),
                 entry(256, 256, 16, QuantType::F16),
             ],
+            ..TuningProfile::empty(QuantType::I2S, 2)
         };
         assert_eq!(p.select(256, 256, 1), QuantType::Tl20);
         assert_eq!(p.select(256, 256, 3), QuantType::Tl20);
@@ -388,9 +794,8 @@ mod tests {
     #[test]
     fn select_falls_back_to_smallest_batch_then_default() {
         let p = TuningProfile {
-            threads: 1,
-            default: QuantType::I2S,
             entries: vec![entry(64, 512, 8, QuantType::Tl10)],
+            ..TuningProfile::empty(QuantType::I2S, 1)
         };
         // Tuned batches all exceed n → smallest tuned batch.
         assert_eq!(p.select(64, 512, 1), QuantType::Tl10);
@@ -422,6 +827,17 @@ mod tests {
                     },
                 ],
             }],
+            overrides: vec![LayerOverride {
+                layer: 3,
+                role: Role::Down,
+                n: 4,
+                qtype: QuantType::Tl20,
+            }],
+            e2e: vec![E2eEntry {
+                label: "auto".into(),
+                prefill_tok_s: 123.5,
+                decode_tok_s: 45.25,
+            }],
         };
         let back = TuningProfile::from_json(&p.to_json()).unwrap();
         assert_eq!(back, p);
@@ -436,10 +852,76 @@ mod tests {
         assert!(TuningProfile::from_json(&Json::parse("{}").unwrap()).is_err());
         let wrong_version =
             r#"{"version": 99, "threads": 1, "default": "I2_S", "entries": []}"#;
-        assert!(TuningProfile::from_json(&Json::parse(wrong_version).unwrap()).is_err());
+        let err = TuningProfile::from_json(&Json::parse(wrong_version).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("supported"), "{err:#}");
         let bad_kernel =
             r#"{"version": 1, "threads": 1, "default": "NOPE", "entries": []}"#;
         assert!(TuningProfile::from_json(&Json::parse(bad_kernel).unwrap()).is_err());
+        let bad_role = r#"{"version": 2, "threads": 1, "default": "I2_S", "entries": [],
+            "overrides": [{"layer": 0, "role": "sideways", "n": 1, "kernel": "I2_S"}]}"#;
+        assert!(TuningProfile::from_json(&Json::parse(bad_role).unwrap()).is_err());
+    }
+
+    #[test]
+    fn v1_profiles_still_load() {
+        // A verbatim PR-1 (version 1) profile: no overrides/e2e sections.
+        let v1 = r#"{
+            "version": 1, "threads": 2, "default": "I2_S",
+            "entries": [{"m": 256, "k": 256, "n": 1, "best": "TL2_0", "measurements": []}]
+        }"#;
+        let p = TuningProfile::from_json(&Json::parse(v1).unwrap()).unwrap();
+        assert_eq!(p.select(256, 256, 1), QuantType::Tl20);
+        assert!(p.overrides.is_empty() && p.e2e.is_empty());
+        // Re-saving migrates to the current version.
+        let resaved = p.to_json();
+        assert_eq!(resaved.get("version").and_then(Json::as_usize), Some(PROFILE_VERSION as usize));
+    }
+
+    #[test]
+    fn layer_overrides_take_precedence_with_batch_resolution() {
+        let mut p = TuningProfile::empty(QuantType::I2S, 1);
+        p.entries.push(entry(256, 256, 1, QuantType::Tl20));
+        p.overrides.push(LayerOverride { layer: 1, role: Role::Qkv, n: 1, qtype: QuantType::Tl11 });
+        p.overrides.push(LayerOverride { layer: 1, role: Role::Qkv, n: 8, qtype: QuantType::Tl21 });
+        // Overridden layer/role: batch rule applies over the overrides.
+        assert_eq!(p.select_for(1, Role::Qkv, 256, 256, 1), (QuantType::Tl11, false));
+        assert_eq!(p.select_for(1, Role::Qkv, 256, 256, 6), (QuantType::Tl11, false));
+        assert_eq!(p.select_for(1, Role::Qkv, 256, 256, 8), (QuantType::Tl21, false));
+        // Other layers / roles fall through to the shape entries…
+        assert_eq!(p.select_for(0, Role::Qkv, 256, 256, 1), (QuantType::Tl20, false));
+        assert_eq!(p.select_for(1, Role::O, 256, 256, 1), (QuantType::Tl20, false));
+        // …and untuned shapes to the default, flagged as a fallback.
+        assert_eq!(p.select_for(0, Role::Down, 512, 512, 1), (QuantType::I2S, true));
+    }
+
+    #[test]
+    fn dispatch_plan_counts_fallbacks() {
+        let mut p = TuningProfile::empty(QuantType::I2S, 1);
+        p.entries.push(entry(256, 256, 1, QuantType::Tl20));
+        let plan = DispatchPlan::new(Dispatch::Auto(p));
+        assert_eq!(plan.select(0, Role::Qkv, 256, 256, 1), QuantType::Tl20);
+        assert_eq!(plan.fallbacks(), 0);
+        assert_eq!(plan.select(0, Role::Qkv, 512, 512, 1), QuantType::I2S);
+        assert_eq!(plan.select(0, Role::Qkv, 512, 512, 1), QuantType::I2S);
+        assert_eq!(plan.fallbacks(), 2);
+        // Fixed never falls back.
+        let fixed = DispatchPlan::new(Dispatch::Fixed(QuantType::Tl21));
+        assert_eq!(fixed.select(9, Role::Up, 1, 1, 1), QuantType::Tl21);
+        assert_eq!(fixed.fallbacks(), 0);
+        // Degradations (resolved winner couldn't run) count separately.
+        assert_eq!(fixed.degraded(), 0);
+        fixed.note_degraded(256, 256, 8, QuantType::Tl21, QuantType::I2S);
+        assert_eq!(fixed.degraded(), 1);
+        assert_eq!(fixed.fallbacks(), 0);
+    }
+
+    #[test]
+    fn role_names_round_trip() {
+        for r in Role::ALL {
+            assert_eq!(Role::parse(r.name()), Some(r));
+        }
+        assert_eq!(Role::parse("QKV"), Some(Role::Qkv));
+        assert_eq!(Role::parse("nope"), None);
     }
 
     #[test]

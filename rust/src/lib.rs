@@ -48,7 +48,7 @@ pub mod threadpool;
 pub mod tokenizer;
 pub mod util;
 
-pub use kernels::{Dispatch, QuantType, TuningProfile};
+pub use kernels::{Dispatch, DispatchPlan, QuantType, Role, TuningProfile};
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

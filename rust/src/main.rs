@@ -17,7 +17,7 @@ use bitnet::cli::Args;
 use bitnet::config::{Config, LaunchConfig};
 use bitnet::coordinator::{Engine, EngineConfig, Request};
 use bitnet::kernels::tuner::{self, TuneConfig, TuningProfile};
-use bitnet::kernels::{library_table, Dispatch, QuantType};
+use bitnet::kernels::{library_table, Dispatch, DispatchPlan, QuantType};
 use bitnet::model::{ModelConfig, SamplingParams, Transformer};
 use bitnet::model::weights::Checkpoint;
 use bitnet::tokenizer::{synthetic_corpus, Tokenizer};
@@ -39,16 +39,22 @@ const USAGE: &str = "usage: bitnet <info|gen-model|run|serve|tune|pjrt> [options
   serve     --preset tiny --kernel TL2_0 --threads 2 --requests 16 --max-batch 8
             [--qtype auto --tune-profile profile.json]
   tune      --out profile.json [--preset tiny] [--threads 1] [--batches 1,4]
-            [--kernels I2_S,TL1_0,…|all] [--measure-ms 60] [--verbose]
+            [--kernels I2_S,TL1_0,…|all] [--measure-ms 60] [--e2e] [--verbose]
             (default candidates: compact ternary kernels; `all` adds the
-             dense/general baselines)
+             dense/general baselines; --e2e additionally measures the
+             tuned profile end to end against the fixed default and
+             records the result in the profile's `e2e` section)
   pjrt      --artifact artifacts/ternary_matmul.hlo.txt
 
   --qtype is an alias of --kernel; the value `auto` selects the kernel
-  per projection shape from the --tune-profile file (see docs/tuning.md).";
+  per projection shape, per layer and per batch width from the
+  --tune-profile file (v1 and v2 profiles load; see docs/tuning.md).
+  Under auto, prefill chunks and batched decode re-dispatch per call
+  using the profile's n>1 entries — `--verbose` prints the per-layer,
+  per-phase winners.";
 
 fn run() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["help", "verbose"])?;
+    let args = Args::parse(std::env::args().skip(1), &["help", "verbose", "e2e"])?;
     if args.has_flag("help") || args.subcommand.is_none() {
         println!("{USAGE}");
         return Ok(());
@@ -117,6 +123,7 @@ fn build_dispatch(lc: &LaunchConfig) -> Result<Dispatch> {
 
 fn build_model(lc: &LaunchConfig, verbose: bool) -> Result<Transformer> {
     let dispatch = build_dispatch(lc)?;
+    let plan = DispatchPlan::new(dispatch).with_verbose(verbose);
     let ck = match &lc.model_path {
         Some(path) => bitnet::modelio::load(&PathBuf::from(path))?,
         None => {
@@ -125,18 +132,23 @@ fn build_model(lc: &LaunchConfig, verbose: bool) -> Result<Transformer> {
             Checkpoint::synthetic(&cfg, lc.seed)
         }
     };
-    let model = Transformer::from_checkpoint_dispatch(&ck, dispatch, lc.threads);
+    let model = Transformer::from_checkpoint_plan(&ck, plan, lc.threads);
     eprintln!(
         "model {} ({:.1}M params, {:.1}M ternary) dispatch {} threads {}",
         ck.config.name,
         ck.config.param_count() as f64 / 1e6,
         ck.config.ternary_param_count() as f64 / 1e6,
-        model.dispatch.describe(),
+        model.plan.describe(),
         lc.threads
     );
     if verbose {
         for (m, k, q) in model.kernel_summary() {
-            eprintln!("dispatch: {m}x{k} -> {}", q.name());
+            eprintln!("dispatch: {m}x{k} -> {} (n=1 primary)", q.name());
+        }
+        // Per-layer, per-phase winners (decode n=1 vs a representative
+        // prefill chunk): the phase-aware picture behind the primaries.
+        for line in model.plan_summary(lc.max_batch.max(8)) {
+            eprintln!("plan: {line}");
         }
     }
     Ok(model)
@@ -321,11 +333,30 @@ fn cmd_tune(args: &Args) -> Result<()> {
     );
     let verbose = args.has_flag("verbose");
     let mut log = |s: &str| eprintln!("{s}");
-    let profile = tuner::tune(&cfg, if verbose { Some(&mut log) } else { None });
+    let mut profile = tuner::tune(&cfg, if verbose { Some(&mut log) } else { None });
     for e in &profile.entries {
         println!("{}x{} n={}: {}", e.m, e.k, e.n, e.best.name());
     }
+    // Persist the sweep before any optional post-processing: a failed
+    // --e2e step (e.g. an unhostable preset) must not discard minutes of
+    // completed measurements.
     profile.save(&out)?;
+    if args.has_flag("e2e") {
+        // Layer-composition check: per-shape winners can compose
+        // differently than they measure in isolation, so time the tuned
+        // profile against the fixed default on the full model and record
+        // both in the profile's `e2e` section.
+        eprintln!("measuring end-to-end layer composition on preset {preset}...");
+        let entries = tuner::measure_e2e(&profile, &model_cfg, threads, 32, 64)?;
+        for e in &entries {
+            println!(
+                "e2e {}: prefill {:.1} tok/s, decode {:.1} tok/s",
+                e.label, e.prefill_tok_s, e.decode_tok_s
+            );
+        }
+        profile.e2e = entries;
+        profile.save(&out)?;
+    }
     println!("wrote {} ({} entries)", out.display(), profile.entries.len());
     Ok(())
 }

@@ -85,6 +85,19 @@ pub struct EngineMetrics {
     pub decode_steps: AtomicU64,
     /// Sum of batch sizes over decode steps (mean batch = this / steps).
     pub batched_tokens: AtomicU64,
+    /// Widest decode batch any step ran (phase-aware dispatch keys on it).
+    pub peak_batch: AtomicU64,
+    /// Longest prefill chunk (prompt tokens) any step ran — the other
+    /// phase-aware dispatch key (prefill GEMM batch width).
+    pub peak_prefill_chunk: AtomicU64,
+    /// Kernel selections that found no tuned profile entry for their
+    /// (m, k, n) and fell back to the profile default — nonzero means the
+    /// tuning profile doesn't cover the serving workload (re-tune).
+    pub dispatch_fallbacks: AtomicU64,
+    /// Routed calls that resolved a tuned winner but could not run it
+    /// (alternate budget / K alignment) and degraded to the primary —
+    /// nonzero means a tuned winner is not actually live.
+    pub dispatch_degraded: AtomicU64,
     pub step_latency: LatencyHistogram,
     pub ttft: LatencyHistogram,
 }
@@ -106,7 +119,7 @@ impl EngineMetrics {
     /// Human-readable one-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "req {}/{} done, {} rejected | tokens {}+{} | steps {} (mean batch {:.2}) | step mean {:.1}µs p99 {}µs | ttft mean {:.1}µs",
+            "req {}/{} done, {} rejected | tokens {}+{} | steps {} (mean batch {:.2}, peak {}) | step mean {:.1}µs p99 {}µs | ttft mean {:.1}µs | dispatch fallbacks {} degraded {}",
             self.requests_completed.load(Ordering::Relaxed),
             self.requests_submitted.load(Ordering::Relaxed),
             self.requests_rejected.load(Ordering::Relaxed),
@@ -114,9 +127,12 @@ impl EngineMetrics {
             self.generated_tokens.load(Ordering::Relaxed),
             self.decode_steps.load(Ordering::Relaxed),
             self.mean_batch(),
+            self.peak_batch.load(Ordering::Relaxed),
             self.step_latency.mean_us(),
             self.step_latency.quantile_us(0.99),
             self.ttft.mean_us(),
+            self.dispatch_fallbacks.load(Ordering::Relaxed),
+            self.dispatch_degraded.load(Ordering::Relaxed),
         )
     }
 }

@@ -4,14 +4,39 @@
 //! so each kernel applies its own scheme (per-tensor for the lossless
 //! kernels, per-block for the llama.cpp baselines — exactly the
 //! distinction Figure 2 of the paper illustrates).
+//!
+//! Since PR 2 the layer is a **multi-packed container**: one *primary*
+//! packing (chosen at construction for the n=1 decode regime) plus up to
+//! [`MAX_ALTERNATES`] alternate packings, materialized lazily the first
+//! time a [`crate::kernels::DispatchPlan`] routes a call to a different
+//! kernel — e.g. TL2 for compute-bound prefill chunks while I2_S serves
+//! memory-bound decode. Alternates are repacked from the primary tensor
+//! (exact for ternary-native kernels, which round-trip `dequantize`), so
+//! the unpacked weights are never retained. The resident memory cost is
+//! reported by [`BitLinear::weight_bytes`].
 
 use crate::kernels::quant::TernaryWeights;
+use crate::kernels::tuner::{DispatchPlan, Role};
 use crate::kernels::{kernel_for, matmul, Dispatch, Kernel, QTensor, QuantType};
 use crate::threadpool::ThreadPool;
+use std::sync::{Arc, RwLock};
+
+/// Cap on alternate packings held per projection — the "repack
+/// threshold" bounding multi-packing memory: primary + at most this many
+/// alternates (2 covers the decode / prefill / wide-batch regimes).
+/// Selections that would exceed the cap run on the primary instead and
+/// are *not* an error (speed degrades gracefully, memory stays bounded).
+pub const MAX_ALTERNATES: usize = 2;
 
 pub struct BitLinear {
+    /// The primary packing (decode-regime kernel).
     pub qtensor: QTensor,
     kernel: &'static dyn Kernel,
+    /// Lazily materialized alternate packings, at most [`MAX_ALTERNATES`].
+    alternates: RwLock<Vec<(QuantType, Arc<QTensor>)>>,
+    /// The absmean weight scale of the source tensor, kept so alternates
+    /// repack with exactly the scale the primary was packed with.
+    weight_scale: f32,
     /// Output features (rows).
     pub m: usize,
     /// Input features (cols).
@@ -31,7 +56,14 @@ impl BitLinear {
             w.k,
             info.k_multiple
         );
-        BitLinear { qtensor: kernel.quantize(w), kernel, m: w.m, k: w.k }
+        BitLinear {
+            qtensor: kernel.quantize(w),
+            kernel,
+            alternates: RwLock::new(Vec::new()),
+            weight_scale: w.scale,
+            m: w.m,
+            k: w.k,
+        }
     }
 
     /// Pack ternary weights with the kernel a [`Dispatch`] policy selects
@@ -42,11 +74,85 @@ impl BitLinear {
         Self::new(w, dispatch.select(w.m, w.k, 1))
     }
 
+    /// The primary kernel (what n=1 decode runs unless overridden).
     pub fn qtype(&self) -> QuantType {
         self.kernel.info().qtype
     }
 
-    /// Single-row forward: `out = W · x`.
+    /// Every kernel with a materialized packing: the primary first, then
+    /// the alternates in the order they were first used.
+    pub fn packed_kernels(&self) -> Vec<QuantType> {
+        let mut out = vec![self.qtype()];
+        for (q, _) in self.alternates.read().unwrap().iter() {
+            out.push(*q);
+        }
+        out
+    }
+
+    /// Reconstruct the unpacked ternary weights from the primary packing.
+    /// Exact for ternary-native kernels (`dequantize` returns q·scale
+    /// bit-for-bit); `None` when the primary cannot represent arbitrary
+    /// ternary weights exactly (general llama.cpp formats).
+    fn reconstruct(&self) -> Option<TernaryWeights> {
+        if !self.kernel.info().ternary_native {
+            return None;
+        }
+        let deq = self.kernel.dequantize(&self.qtensor);
+        let s = self.weight_scale;
+        let q: Vec<i8> = if s == 0.0 {
+            vec![0i8; self.m * self.k]
+        } else {
+            deq.iter().map(|&v| (v / s).round().clamp(-1.0, 1.0) as i8).collect()
+        };
+        Some(TernaryWeights::from_ternary(q, self.m, self.k, s))
+    }
+
+    /// The alternate tensor for `qtype`, packing it on first use. `None`
+    /// means "run the primary": `qtype` *is* the primary, the kernel's K
+    /// alignment doesn't fit, the primary can't be reconstructed, or the
+    /// [`MAX_ALTERNATES`] budget is exhausted.
+    fn alternate_for(&self, qtype: QuantType) -> Option<Arc<QTensor>> {
+        if qtype == self.qtype() {
+            return None;
+        }
+        {
+            let alts = self.alternates.read().unwrap();
+            if let Some((_, t)) = alts.iter().find(|(q, _)| *q == qtype) {
+                return Some(Arc::clone(t));
+            }
+            if alts.len() >= MAX_ALTERNATES {
+                return None;
+            }
+        }
+        if self.k % kernel_for(qtype).info().k_multiple != 0 {
+            return None;
+        }
+        let w = self.reconstruct()?;
+        let packed = Arc::new(kernel_for(qtype).quantize(&w));
+        let mut alts = self.alternates.write().unwrap();
+        // Re-check under the write lock: another thread may have packed
+        // (or filled the budget) while we quantized.
+        if let Some((_, t)) = alts.iter().find(|(q, _)| *q == qtype) {
+            return Some(Arc::clone(t));
+        }
+        if alts.len() >= MAX_ALTERNATES {
+            return None;
+        }
+        alts.push((qtype, Arc::clone(&packed)));
+        Some(packed)
+    }
+
+    /// Eagerly materialize the packing for `qtype` (no-op when it is the
+    /// primary or cannot be packed); returns the kernel that will
+    /// actually serve calls asking for `qtype`.
+    pub fn prepack(&self, qtype: QuantType) -> QuantType {
+        match self.alternate_for(qtype) {
+            Some(t) => t.qtype,
+            None => self.qtype(),
+        }
+    }
+
+    /// Single-row forward: `out = W · x` (always the primary packing).
     pub fn forward(&self, x: &[f32], out: &mut [f32]) {
         debug_assert_eq!(x.len(), self.k);
         debug_assert_eq!(out.len(), self.m);
@@ -54,13 +160,69 @@ impl BitLinear {
         self.kernel.gemv(&self.qtensor, &p, out);
     }
 
-    /// Batched forward over `n` activation rows, parallelized on `pool`.
+    /// Batched forward over `n` activation rows, parallelized on `pool`
+    /// (always the primary packing).
     pub fn forward_batch(&self, x: &[f32], n: usize, out: &mut [f32], pool: &ThreadPool) {
         matmul(self.kernel, &self.qtensor, x, n, out, pool);
     }
 
-    /// Weight bytes this layer streams per token (memory-bound decode cost).
+    /// Batched forward routed through `qtype`, packing it on first use
+    /// and falling back to the primary when it cannot be packed. Returns
+    /// the kernel that actually ran.
+    pub fn forward_batch_with(
+        &self,
+        qtype: QuantType,
+        x: &[f32],
+        n: usize,
+        out: &mut [f32],
+        pool: &ThreadPool,
+    ) -> QuantType {
+        match self.alternate_for(qtype) {
+            Some(t) => {
+                matmul(kernel_for(t.qtype), &t, x, n, out, pool);
+                t.qtype
+            }
+            None => {
+                matmul(self.kernel, &self.qtensor, x, n, out, pool);
+                self.qtype()
+            }
+        }
+    }
+
+    /// Plan-routed batched forward: resolve (layer, role, m, k, n)
+    /// through the [`DispatchPlan`] — the per-call decision that routes
+    /// prefill chunks and batched decode to their measured winners.
+    /// Returns the kernel that actually ran.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_batch_planned(
+        &self,
+        plan: &DispatchPlan,
+        layer: usize,
+        role: Role,
+        x: &[f32],
+        n: usize,
+        out: &mut [f32],
+        pool: &ThreadPool,
+    ) -> QuantType {
+        let want = plan.select(layer, role, self.m, self.k, n);
+        let ran = self.forward_batch_with(want, x, n, out, pool);
+        if ran != want {
+            plan.note_degraded(self.m, self.k, n, want, ran);
+        }
+        ran
+    }
+
+    /// Resident packed weight bytes: the primary plus every materialized
+    /// alternate — the bounded memory cost of multi-packing.
     pub fn weight_bytes(&self) -> usize {
+        let alts: usize =
+            self.alternates.read().unwrap().iter().map(|(_, t)| t.weight_bytes()).sum();
+        self.qtensor.weight_bytes() + alts
+    }
+
+    /// Packed bytes of the primary tensor alone — what one n=1 decode
+    /// GEMV streams (the memory-bound decode cost).
+    pub fn primary_weight_bytes(&self) -> usize {
         self.qtensor.weight_bytes()
     }
 }
@@ -127,6 +289,63 @@ mod tests {
         let fixed = BitLinear::from_dispatch(&w, &Dispatch::Fixed(QuantType::Tl21));
         assert_eq!(fixed.qtype(), QuantType::Tl21);
         assert_eq!(auto.qtensor.data, fixed.qtensor.data, "identical packing");
+    }
+
+    #[test]
+    fn alternate_repack_is_bit_identical_to_direct_packing() {
+        // Repacking from the primary must equal packing from the source
+        // weights — the property that keeps lossless multi-pack lossless.
+        let (m, k) = (16, 256);
+        let w = random_ternary(m, k, 8);
+        let layer = BitLinear::new(&w, QuantType::I2S);
+        let pool = ThreadPool::new(1);
+        let mut rng = Rng::new(9);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        let mut out_alt = vec![0f32; m];
+        let ran = layer.forward_batch_with(QuantType::Tl21, &x, 1, &mut out_alt, &pool);
+        assert_eq!(ran, QuantType::Tl21);
+        assert_eq!(layer.packed_kernels(), vec![QuantType::I2S, QuantType::Tl21]);
+        let direct = BitLinear::new(&w, QuantType::Tl21);
+        let mut out_direct = vec![0f32; m];
+        direct.forward(&x, &mut out_direct);
+        assert_eq!(out_alt, out_direct);
+        // Resident bytes now include both packings, and the primary
+        // stream cost is unchanged.
+        assert_eq!(
+            layer.weight_bytes(),
+            layer.primary_weight_bytes() + direct.primary_weight_bytes()
+        );
+    }
+
+    #[test]
+    fn alternate_budget_is_bounded() {
+        let (m, k) = (8, 256);
+        let w = random_ternary(m, k, 11);
+        let layer = BitLinear::new(&w, QuantType::I2S);
+        // Two alternates fit …
+        assert_eq!(layer.prepack(QuantType::Tl21), QuantType::Tl21);
+        assert_eq!(layer.prepack(QuantType::Tl11), QuantType::Tl11);
+        // … the third exceeds MAX_ALTERNATES and degrades to the primary.
+        assert_eq!(layer.prepack(QuantType::Tl20), QuantType::I2S);
+        // Cached alternates and the primary itself still resolve.
+        assert_eq!(layer.prepack(QuantType::Tl21), QuantType::Tl21);
+        assert_eq!(layer.prepack(QuantType::I2S), QuantType::I2S);
+        assert_eq!(layer.packed_kernels().len(), 1 + MAX_ALTERNATES);
+    }
+
+    #[test]
+    fn incompatible_alternate_degrades_to_primary() {
+        // K=128 fits I2_S but not TQ2_0 (K % 256); the routed call must
+        // run on the primary instead of panicking.
+        let (m, k) = (8, 128);
+        let w = random_ternary(m, k, 12);
+        let layer = BitLinear::new(&w, QuantType::I2S);
+        let pool = ThreadPool::new(1);
+        let x = vec![0.5f32; k];
+        let mut out = vec![0f32; m];
+        let ran = layer.forward_batch_with(QuantType::Tq20, &x, 1, &mut out, &pool);
+        assert_eq!(ran, QuantType::I2S);
+        assert_eq!(layer.packed_kernels(), vec![QuantType::I2S]);
     }
 
     #[test]

@@ -15,7 +15,8 @@ use super::config::ModelConfig;
 use super::ops::{rmsnorm, rope, softmax, swiglu};
 use super::weights::Checkpoint;
 use crate::kernels::baselines::f16_mad::dot_f16;
-use crate::kernels::{Dispatch, QuantType};
+use crate::kernels::tuner::{DispatchPlan, Role};
+use crate::kernels::{kernel_for, Dispatch, QuantType};
 use crate::threadpool::ThreadPool;
 use crate::util::f32_to_f16;
 
@@ -125,8 +126,10 @@ pub struct Transformer {
     /// Representative kernel: the fixed kernel, or (under `Auto`
     /// dispatch) the profile's pick for the h×h attention projections.
     pub qtype: QuantType,
-    /// The policy every ternary projection was packed with.
-    pub dispatch: Dispatch,
+    /// The per-call kernel resolver every ternary projection routes
+    /// through — packing picked the n=1 primary; `forward_batch`
+    /// re-resolves per call with the real (layer, role, batch) context.
+    pub plan: DispatchPlan,
     pub tok_embed: Vec<f32>,
     pub layers: Vec<Layer>,
     pub final_norm: Vec<f32>,
@@ -149,18 +152,57 @@ impl Transformer {
         dispatch: Dispatch,
         n_threads: usize,
     ) -> Transformer {
+        Self::from_checkpoint_plan(ck, DispatchPlan::new(dispatch), n_threads)
+    }
+
+    /// Pack a checkpoint under a full [`DispatchPlan`]. Each projection's
+    /// *primary* packing is the plan's pick for its (layer, role, m, k)
+    /// at n=1 (the decode regime); other regimes pack alternates lazily
+    /// on first routed call (or eagerly via [`Transformer::prepack`]).
+    pub fn from_checkpoint_plan(
+        ck: &Checkpoint,
+        plan: DispatchPlan,
+        n_threads: usize,
+    ) -> Transformer {
         let cfg = ck.config.clone();
+        let primary = |li: usize, role: Role, w: &crate::kernels::quant::TernaryWeights| {
+            let want = plan.select(li, role, w.m, w.k, 1);
+            let qtype = if w.k % kernel_for(want).info().k_multiple == 0 {
+                want
+            } else if let Dispatch::Auto(p) = plan.dispatch() {
+                // A hand-written profile entry/override can name a kernel
+                // whose K alignment doesn't fit this projection; degrade
+                // to the profile default (like the lazy-alternate path)
+                // instead of panicking mid-construction.
+                eprintln!(
+                    "dispatch: layer {li} {} {}x{}: {} needs K % {} == 0; using default {}",
+                    role.name(),
+                    w.m,
+                    w.k,
+                    want.name(),
+                    kernel_for(want).info().k_multiple,
+                    p.default.name()
+                );
+                p.default
+            } else {
+                // Fixed dispatch keeps the explicit, loud misconfiguration
+                // panic (BitLinear::new asserts).
+                want
+            };
+            BitLinear::new(w, qtype)
+        };
         let layers = ck
             .layers
             .iter()
-            .map(|l| Layer {
-                wq: BitLinear::from_dispatch(&l.wq, &dispatch),
-                wk: BitLinear::from_dispatch(&l.wk, &dispatch),
-                wv: BitLinear::from_dispatch(&l.wv, &dispatch),
-                wo: BitLinear::from_dispatch(&l.wo, &dispatch),
-                w_gate: BitLinear::from_dispatch(&l.w_gate, &dispatch),
-                w_up: BitLinear::from_dispatch(&l.w_up, &dispatch),
-                w_down: BitLinear::from_dispatch(&l.w_down, &dispatch),
+            .enumerate()
+            .map(|(li, l)| Layer {
+                wq: primary(li, Role::Qkv, &l.wq),
+                wk: primary(li, Role::Qkv, &l.wk),
+                wv: primary(li, Role::Qkv, &l.wv),
+                wo: primary(li, Role::O, &l.wo),
+                w_gate: primary(li, Role::Gate, &l.w_gate),
+                w_up: primary(li, Role::Up, &l.w_up),
+                w_down: primary(li, Role::Down, &l.w_down),
                 attn_norm: l.attn_norm.clone(),
                 ffn_norm: l.ffn_norm.clone(),
             })
@@ -170,8 +212,8 @@ impl Transformer {
             tok_embed: ck.tok_embed.clone(),
             final_norm: ck.final_norm.clone(),
             layers,
-            qtype: dispatch.representative(cfg.hidden, cfg.hidden),
-            dispatch,
+            qtype: plan.dispatch().representative(cfg.hidden, cfg.hidden),
+            plan,
             cfg,
             pool: ThreadPool::new(n_threads.max(1)),
         }
@@ -182,13 +224,14 @@ impl Transformer {
         Self::from_checkpoint(&Checkpoint::synthetic(cfg, seed), qtype, 1)
     }
 
-    /// The distinct (m, k) projection shapes of this model and the kernel
-    /// each was packed with — what `--verbose` prints so an operator can
-    /// see auto-dispatch decisions.
+    /// The distinct (m, k, primary kernel) combinations across **all**
+    /// layers — what `--verbose` prints so an operator can audit
+    /// auto-dispatch decisions. Per-layer overrides make layers diverge,
+    /// so a shape can legitimately appear once per kernel it runs under.
     pub fn kernel_summary(&self) -> Vec<(usize, usize, QuantType)> {
         let mut out: Vec<(usize, usize, QuantType)> = Vec::new();
-        if let Some(l) = self.layers.first() {
-            for lin in [&l.wq, &l.wk, &l.wv, &l.wo, &l.w_gate, &l.w_up, &l.w_down] {
+        for layer in &self.layers {
+            for (_, lin) in Self::role_layers(layer) {
                 let item = (lin.m, lin.k, lin.qtype());
                 if !out.contains(&item) {
                     out.push(item);
@@ -203,22 +246,103 @@ impl Transformer {
         Session::new(self.cfg.n_layers, self.cfg.kv_dim(), capacity.min(self.cfg.max_seq_len))
     }
 
-    /// Total packed weight bytes streamed per decoded token.
+    /// One layer's projections with the [`Role`] each plays — the order
+    /// and grouping the dispatch plan keys on.
+    fn role_layers(layer: &Layer) -> [(Role, &BitLinear); 7] {
+        [
+            (Role::Qkv, &layer.wq),
+            (Role::Qkv, &layer.wk),
+            (Role::Qkv, &layer.wv),
+            (Role::O, &layer.wo),
+            (Role::Gate, &layer.w_gate),
+            (Role::Up, &layer.w_up),
+            (Role::Down, &layer.w_down),
+        ]
+    }
+
+    /// Eagerly materialize every packing the plan can select at the
+    /// given batch widths (e.g. `[1, max_batch]` before serving), so the
+    /// first routed request doesn't pay the repack latency.
+    pub fn prepack(&self, batches: &[usize]) {
+        for (li, layer) in self.layers.iter().enumerate() {
+            for (role, lin) in Self::role_layers(layer) {
+                for &n in batches {
+                    let n = n.max(1);
+                    let want = self.plan.select(li, role, lin.m, lin.k, n);
+                    let got = lin.prepack(want);
+                    if got != want {
+                        self.plan.note_degraded(lin.m, lin.k, n, want, got);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Per-layer, per-phase kernel winners under the plan: one line per
+    /// run of layers with identical picks, showing each role's decode
+    /// (n=1) vs prefill (n=`prefill_n`) kernel as `role=dec/pre`
+    /// (collapsed to `role=k` when the phases agree). What `--verbose`
+    /// prints so an operator can audit phase-aware dispatch.
+    pub fn plan_summary(&self, prefill_n: usize) -> Vec<String> {
+        let sig = |li: usize| -> String {
+            Self::role_layers(&self.layers[li])
+                .iter()
+                .map(|&(role, lin)| {
+                    let (d, _) = self.plan.dispatch().select_for(li, role, lin.m, lin.k, 1);
+                    let (p, _) =
+                        self.plan.dispatch().select_for(li, role, lin.m, lin.k, prefill_n.max(2));
+                    if d == p {
+                        format!("{}={}", role.name(), d.name())
+                    } else {
+                        format!("{}={}/{}", role.name(), d.name(), p.name())
+                    }
+                })
+                .collect::<Vec<_>>()
+                .join(" ")
+        };
+        let mut out = Vec::new();
+        if self.layers.is_empty() {
+            return out;
+        }
+        let mut start = 0usize;
+        let mut cur = sig(0);
+        for li in 1..=self.layers.len() {
+            let next = if li < self.layers.len() { sig(li) } else { String::new() };
+            if li == self.layers.len() || next != cur {
+                if start == li - 1 {
+                    out.push(format!("layer {}: {}", start, cur));
+                } else {
+                    out.push(format!("layers {}-{}: {}", start, li - 1, cur));
+                }
+                start = li;
+                cur = next;
+            }
+        }
+        out
+    }
+
+    /// Packed weight bytes streamed per decoded token (primary packings
+    /// only — what one n=1 decode step reads).
     pub fn weight_bytes_per_token(&self) -> usize {
-        let per_layer: usize = self
+        let layers: usize = self
             .layers
-            .first()
+            .iter()
             .map(|l| {
-                l.wq.weight_bytes()
-                    + l.wk.weight_bytes()
-                    + l.wv.weight_bytes()
-                    + l.wo.weight_bytes()
-                    + l.w_gate.weight_bytes()
-                    + l.w_up.weight_bytes()
-                    + l.w_down.weight_bytes()
+                Self::role_layers(l).iter().map(|(_, lin)| lin.primary_weight_bytes()).sum::<usize>()
             })
-            .unwrap_or(0);
-        per_layer * self.layers.len() + self.lm_head.weight_bytes()
+            .sum();
+        layers + self.lm_head.weight_bytes()
+    }
+
+    /// Total resident packed weight bytes, including every materialized
+    /// alternate — the bounded memory cost of multi-packed dispatch.
+    pub fn resident_weight_bytes(&self) -> usize {
+        let layers: usize = self
+            .layers
+            .iter()
+            .map(|l| Self::role_layers(l).iter().map(|(_, lin)| lin.weight_bytes()).sum::<usize>())
+            .sum();
+        layers + self.lm_head.weight_bytes()
     }
 
     /// Prefill `tokens` into `session` as one chunk; returns the logits of
@@ -304,9 +428,14 @@ impl Transformer {
         let mut q = vec![0f32; n * h];
         let mut k = vec![0f32; n * kvd];
         let mut v = vec![0f32; n * kvd];
-        layer.wq.forward_batch(&normed, n, &mut q, &self.pool);
-        layer.wk.forward_batch(&normed, n, &mut k, &self.pool);
-        layer.wv.forward_batch(&normed, n, &mut v, &self.pool);
+        // Phase-aware dispatch: every projection re-resolves its kernel
+        // per call with the effective batch width (prefill chunk length
+        // or decode batch), so one layer can run different kernels across
+        // phases (paper §3: TL1/TL2 for compute-bound prefill, I2_S for
+        // memory-bound decode).
+        layer.wq.forward_batch_planned(&self.plan, li, Role::Qkv, &normed, n, &mut q, &self.pool);
+        layer.wk.forward_batch_planned(&self.plan, li, Role::Qkv, &normed, n, &mut k, &self.pool);
+        layer.wv.forward_batch_planned(&self.plan, li, Role::Qkv, &normed, n, &mut v, &self.pool);
         for i in 0..n {
             rope(&mut q[i * h..(i + 1) * h], cfg.n_heads, hd, positions[i], cfg.rope_theta);
             rope(&mut k[i * kvd..(i + 1) * kvd], cfg.n_kv_heads, hd, positions[i], cfg.rope_theta);
@@ -340,7 +469,7 @@ impl Transformer {
             }
         }
         let mut proj = vec![0f32; n * h];
-        layer.wo.forward_batch(&attn_out, n, &mut proj, &self.pool);
+        layer.wo.forward_batch_planned(&self.plan, li, Role::O, &attn_out, n, &mut proj, &self.pool);
         for (x, p) in xs.iter_mut().zip(proj.iter()) {
             *x += p;
         }
@@ -352,12 +481,12 @@ impl Transformer {
         let f = cfg.ffn;
         let mut gate = vec![0f32; n * f];
         let mut up = vec![0f32; n * f];
-        layer.w_gate.forward_batch(&normed, n, &mut gate, &self.pool);
-        layer.w_up.forward_batch(&normed, n, &mut up, &self.pool);
+        layer.w_gate.forward_batch_planned(&self.plan, li, Role::Gate, &normed, n, &mut gate, &self.pool);
+        layer.w_up.forward_batch_planned(&self.plan, li, Role::Up, &normed, n, &mut up, &self.pool);
         let mut act = vec![0f32; n * f];
         swiglu(&gate, &up, &mut act);
         let mut down = vec![0f32; n * h];
-        layer.w_down.forward_batch(&act, n, &mut down, &self.pool);
+        layer.w_down.forward_batch_planned(&self.plan, li, Role::Down, &act, n, &mut down, &self.pool);
         for (x, d) in xs.iter_mut().zip(down.iter()) {
             *x += d;
         }

@@ -1,8 +1,12 @@
 //! Serving-path integration: the engine under load, end to end, plus
-//! failure injection (rejections, cancellations on shutdown).
+//! failure injection (rejections, cancellations on shutdown) and
+//! phase-aware dispatch through the coordinator (prefill chunks and
+//! batched decode routing to different tuned kernels mid-serve).
 
 use bitnet::coordinator::{Engine, EngineConfig, FinishReason, Request};
-use bitnet::kernels::QuantType;
+use bitnet::kernels::tuner::{shapes_for_model, TuningEntry};
+use bitnet::kernels::{Dispatch, QuantType, TuningProfile};
+use bitnet::model::weights::Checkpoint;
 use bitnet::model::{ModelConfig, SamplingParams, Transformer};
 use bitnet::util::Rng;
 use std::sync::atomic::Ordering;
@@ -96,6 +100,79 @@ fn eos_stops_generation() {
         .wait();
     assert_eq!(reason, FinishReason::Eos);
     assert!(tokens.len() < 50);
+}
+
+#[test]
+fn phase_aware_auto_engine_matches_fixed_engine_outputs() {
+    // A profile with distinct decode (n=1 → I2_S) and batched (n=4 →
+    // TL2_1) winners, served through the full coordinator: prefill
+    // chunks and multi-sequence decode steps route to the batched
+    // winner, single-sequence decode to the primary — and because both
+    // kernels are lossless, greedy outputs must equal the fixed I2_S
+    // engine exactly, whatever batch compositions the scheduler forms.
+    let cfg = ModelConfig::tiny();
+    let mut profile = TuningProfile::empty(QuantType::I2S, 1);
+    for (m, k) in shapes_for_model(&cfg) {
+        for (n, qt) in [(1usize, QuantType::I2S), (4, QuantType::Tl21)] {
+            profile.entries.push(TuningEntry { m, k, n, best: qt, measurements: Vec::new() });
+        }
+    }
+    let auto_model = Transformer::from_checkpoint_dispatch(
+        &Checkpoint::synthetic(&cfg, 42),
+        Dispatch::Auto(profile),
+        1,
+    );
+    let eng_auto = Engine::start(
+        auto_model,
+        EngineConfig { max_batch: 4, kv_budget_tokens: 4096, eos_token: 1, seed: 5 },
+    );
+    let eng_fixed = engine(QuantType::I2S, 4, 4096);
+    let prompts: Vec<Vec<u32>> = vec![vec![4, 5, 6], vec![7, 8], vec![9, 10, 11, 12], vec![200]];
+    let ha: Vec<_> =
+        prompts.iter().map(|p| eng_auto.submit(Request::greedy(p.clone(), 8))).collect();
+    let hf: Vec<_> =
+        prompts.iter().map(|p| eng_fixed.submit(Request::greedy(p.clone(), 8))).collect();
+    let out_auto: Vec<Vec<u32>> = ha.into_iter().map(|h| h.wait().0).collect();
+    let out_fixed: Vec<Vec<u32>> = hf.into_iter().map(|h| h.wait().0).collect();
+    assert_eq!(out_auto, out_fixed, "lossless phase-aware dispatch must not change outputs");
+    assert_eq!(
+        eng_auto.metrics.dispatch_fallbacks.load(Ordering::Relaxed),
+        0,
+        "profile covers every serving shape"
+    );
+    assert_eq!(
+        eng_auto.metrics.dispatch_degraded.load(Ordering::Relaxed),
+        0,
+        "every resolved winner must actually run (one alternate fits the budget)"
+    );
+    assert!(eng_auto.metrics.peak_batch.load(Ordering::Relaxed) >= 1);
+    // The longest prompt was 4 tokens — the prefill-phase dispatch key.
+    assert_eq!(eng_auto.metrics.peak_prefill_chunk.load(Ordering::Relaxed), 4);
+}
+
+#[test]
+fn uncovered_profile_surfaces_dispatch_fallbacks_in_metrics() {
+    // An empty Auto profile silently served everything on the default
+    // kernel before PR 2; now every such selection is counted.
+    let cfg = ModelConfig::tiny();
+    let profile = TuningProfile::empty(QuantType::I2S, 1);
+    let model = Transformer::from_checkpoint_dispatch(
+        &Checkpoint::synthetic(&cfg, 42),
+        Dispatch::Auto(profile),
+        1,
+    );
+    let eng = Engine::start(
+        model,
+        EngineConfig { max_batch: 2, kv_budget_tokens: 2048, eos_token: 1, seed: 5 },
+    );
+    let (tokens, reason, _) = eng.submit(Request::greedy(vec![5, 6, 7], 4)).wait();
+    assert_eq!(reason, FinishReason::Length);
+    assert_eq!(tokens.len(), 4);
+    assert!(
+        eng.metrics.dispatch_fallbacks.load(Ordering::Relaxed) > 0,
+        "empty profile must surface fallbacks in metrics"
+    );
+    assert!(eng.metrics.summary().contains("dispatch fallbacks"));
 }
 
 #[test]

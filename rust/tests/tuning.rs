@@ -1,12 +1,20 @@
 //! Auto-tuned dispatch integration tests: profile round-trip through disk
-//! (save → load → identical dispatch decisions) and the correctness smoke
+//! (save → load → identical dispatch decisions), the correctness smoke
 //! test that `Auto` dispatch is bit-identical to `Fixed` for the lossless
-//! kernels (TL1_1, TL2_1, I2_S).
+//! kernels (TL1_1, TL2_1, I2_S), and the phase-aware multi-packed path:
+//! distinct prefill (n>1) and decode (n=1) winners routing one BitLinear
+//! through different kernels per phase, per-layer overrides, v1 profile
+//! migration, and fallback accounting.
 
-use bitnet::kernels::tuner::{tune, Measurement, TuneConfig, TuningEntry};
-use bitnet::kernels::{Dispatch, QuantType, TuningProfile};
-use bitnet::model::{ModelConfig, Transformer};
+use bitnet::kernels::quant::TernaryWeights;
+use bitnet::kernels::tuner::{
+    measure_e2e, tune, LayerOverride, Measurement, Role, TuneConfig, TuningEntry,
+};
+use bitnet::kernels::{kernel_for, Dispatch, QuantType, TuningProfile};
 use bitnet::model::weights::Checkpoint;
+use bitnet::model::{BitLinear, ModelConfig, Transformer};
+use bitnet::threadpool::ThreadPool;
+use bitnet::util::Rng;
 
 fn entry(m: usize, k: usize, n: usize, best: QuantType) -> TuningEntry {
     TuningEntry {
@@ -103,6 +111,173 @@ fn auto_dispatch_mixing_lossless_kernels_matches_fixed_i2s() {
     let mut s1 = fixed.new_session(32);
     let mut s2 = auto.new_session(32);
     assert_eq!(fixed.prefill(&mut s1, &tokens), auto.prefill(&mut s2, &tokens));
+}
+
+#[test]
+fn forward_batch_n1_is_bit_identical_to_forward_for_every_kernel() {
+    // The phase-aware router treats n=1 as "decode" and n>1 as "prefill/
+    // batched"; the two code paths must agree exactly at the boundary.
+    let (m, k) = (32, 768);
+    let mut rng = Rng::new(21);
+    let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+    let w = TernaryWeights::from_ternary(q, m, k, 0.0625);
+    let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+    let pool = ThreadPool::new(2);
+    for qt in QuantType::ALL {
+        if k % kernel_for(qt).info().k_multiple != 0 {
+            continue;
+        }
+        let layer = BitLinear::new(&w, qt);
+        let mut single = vec![0f32; m];
+        layer.forward(&x, &mut single);
+        let mut batched = vec![0f32; m];
+        layer.forward_batch(&x, 1, &mut batched, &pool);
+        assert_eq!(single, batched, "{qt:?}: forward vs forward_batch(n=1)");
+        let mut routed = vec![0f32; m];
+        let ran = layer.forward_batch_with(qt, &x, 1, &mut routed, &pool);
+        assert_eq!(ran, qt, "{qt:?}: routed call must run the requested kernel");
+        assert_eq!(single, routed, "{qt:?}: forward vs routed forward_batch_with(n=1)");
+    }
+}
+
+#[test]
+fn distinct_phase_winners_route_one_bitlinear_through_two_kernels_losslessly() {
+    // The acceptance criterion: a profile whose decode (n=1) winner is
+    // I2_S and whose prefill (n=8) winner is TL2_1 must run the SAME
+    // BitLinear through both kernels across a prefill→decode run, with
+    // logits bit-identical to the Fixed I2_S baseline (both lossless).
+    let cfg = ModelConfig::tiny();
+    let ck = Checkpoint::synthetic(&cfg, 31);
+    let mut profile = TuningProfile::empty(QuantType::I2S, 1);
+    for (m, k) in bitnet::kernels::tuner::shapes_for_model(&cfg) {
+        profile.entries.push(entry(m, k, 1, QuantType::I2S));
+        profile.entries.push(entry(m, k, 8, QuantType::Tl21));
+    }
+    let auto = Transformer::from_checkpoint_dispatch(&ck, Dispatch::Auto(profile), 1);
+    let fixed = Transformer::from_checkpoint_dispatch(&ck, Dispatch::Fixed(QuantType::I2S), 1);
+    let tokens = [3u32, 1, 4, 1, 5, 9, 2, 6]; // 8-token chunk → the n=8 regime
+    let mut sa = auto.new_session(32);
+    let mut sf = fixed.new_session(32);
+    let mut la = auto.prefill(&mut sa, &tokens);
+    let mut lf = fixed.prefill(&mut sf, &tokens);
+    assert_eq!(la, lf, "prefill logits must be bit-identical");
+    for step in 0..4u32 {
+        la = auto.decode_step(&mut sa, 7 + step);
+        lf = fixed.decode_step(&mut sf, 7 + step);
+        assert_eq!(la, lf, "decode step {step}");
+    }
+    // Every projection served decode on its I2_S primary and prefill on
+    // a lazily packed TL2_1 alternate.
+    for (li, layer) in auto.layers.iter().enumerate() {
+        let packed = layer.wq.packed_kernels();
+        assert_eq!(layer.wq.qtype(), QuantType::I2S, "layer {li} primary is the decode winner");
+        assert!(
+            packed.contains(&QuantType::Tl21),
+            "layer {li} must have packed the prefill winner, got {packed:?}"
+        );
+    }
+    // Memory cost of multi-packing is reported and bounded: resident
+    // bytes exceed the per-token stream, but by at most the alternates.
+    assert!(auto.resident_weight_bytes() > auto.weight_bytes_per_token());
+    assert_eq!(
+        fixed.resident_weight_bytes(),
+        fixed.weight_bytes_per_token(),
+        "fixed dispatch packs nothing extra"
+    );
+    assert_eq!(auto.plan.fallbacks(), 0, "profile covers every shape");
+}
+
+#[test]
+fn per_layer_overrides_pin_layers_to_distinct_kernels() {
+    let cfg = ModelConfig::tiny();
+    let ck = Checkpoint::synthetic(&cfg, 47);
+    // Shape entries say I2_S everywhere; overrides pin layer 1's FFN to
+    // TL1_1 at every batch width.
+    let mut profile = tiny_profile(QuantType::I2S);
+    for role in [Role::Gate, Role::Up, Role::Down] {
+        profile.overrides.push(LayerOverride { layer: 1, role, n: 1, qtype: QuantType::Tl11 });
+    }
+    let auto = Transformer::from_checkpoint_dispatch(&ck, Dispatch::Auto(profile), 1);
+    assert_eq!(auto.layers[1].w_gate.qtype(), QuantType::Tl11, "override applies");
+    assert_eq!(auto.layers[0].w_gate.qtype(), QuantType::I2S, "other layers untouched");
+    assert_eq!(auto.layers[1].wq.qtype(), QuantType::I2S, "other roles untouched");
+    // All-lossless mix: logits stay bit-identical to fixed I2_S across a
+    // prefill→decode run.
+    let fixed = Transformer::from_checkpoint_dispatch(&ck, Dispatch::Fixed(QuantType::I2S), 1);
+    let tokens = [5u32, 10, 400, 3, 77];
+    let mut sa = auto.new_session(32);
+    let mut sf = fixed.new_session(32);
+    assert_eq!(auto.prefill(&mut sa, &tokens), fixed.prefill(&mut sf, &tokens));
+    assert_eq!(auto.decode_step(&mut sa, 9), fixed.decode_step(&mut sf, 9));
+}
+
+#[test]
+fn incompatible_override_degrades_to_default_instead_of_panicking() {
+    // K=384 fits I2_S (K % 128) but not TQ2_0 (K % 256): an override
+    // naming TQ2_0 for the down projection must degrade to the profile
+    // default at construction, not panic.
+    let cfg = ModelConfig {
+        name: "micro",
+        hidden: 128,
+        ffn: 384,
+        n_layers: 1,
+        n_heads: 2,
+        n_kv_heads: 2,
+        vocab_size: 64,
+        max_seq_len: 32,
+        rope_theta: 10000.0,
+        rms_eps: 1e-5,
+    };
+    let ck = Checkpoint::synthetic(&cfg, 3);
+    let mut profile = TuningProfile::empty(QuantType::I2S, 1);
+    profile.overrides.push(LayerOverride {
+        layer: 0,
+        role: Role::Down,
+        n: 1,
+        qtype: QuantType::Tq20,
+    });
+    let model = Transformer::from_checkpoint_dispatch(&ck, Dispatch::Auto(profile), 1);
+    assert_eq!(model.layers[0].w_down.qtype(), QuantType::I2S, "degrade to profile default");
+    let mut s = model.new_session(16);
+    assert!(model.prefill(&mut s, &[1, 2, 3]).iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn v1_profile_files_load_with_migration() {
+    let dir = std::env::temp_dir().join("bitnet_tuning_test_v1");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("v1.json");
+    std::fs::write(
+        &path,
+        r#"{"version": 1, "threads": 1, "default": "I2_S",
+            "entries": [{"m": 256, "k": 256, "n": 1, "best": "TL2_1", "measurements": []}]}"#,
+    )
+    .unwrap();
+    let p = TuningProfile::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(p.select(256, 256, 1), QuantType::Tl21);
+    assert!(p.overrides.is_empty() && p.e2e.is_empty(), "v1 migrates to empty v2 sections");
+
+    // Unknown versions fail with a clear error, not field-order luck.
+    let path2 = dir.join("v99.json");
+    std::fs::write(&path2, r#"{"version": 99, "threads": 1, "default": "I2_S", "entries": []}"#)
+        .unwrap();
+    let err = TuningProfile::load(&path2).unwrap_err();
+    std::fs::remove_file(&path2).unwrap();
+    assert!(format!("{err:#}").contains("supported"), "{err:#}");
+}
+
+#[test]
+fn measure_e2e_reports_both_candidates_and_refuses_huge_presets() {
+    let profile = tiny_profile(QuantType::Tl21);
+    let cfg = ModelConfig::tiny();
+    let entries = measure_e2e(&profile, &cfg, 1, 8, 4).unwrap();
+    assert_eq!(entries.len(), 2);
+    assert_eq!(entries[0].label, "auto");
+    assert!(entries[1].label.contains("I2_S"), "{}", entries[1].label);
+    assert!(entries.iter().all(|e| e.prefill_tok_s > 0.0 && e.decode_tok_s > 0.0));
+    // Oversized presets refuse rather than synthesize billions of params.
+    assert!(measure_e2e(&profile, &ModelConfig::b7(), 1, 4, 2).is_err());
 }
 
 #[test]
