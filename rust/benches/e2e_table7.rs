@@ -12,11 +12,87 @@
 //! per-size tokens/s as a JSON document — what CI uploads as the
 //! `BENCH_e2e.json` perf-trajectory artifact).
 
-use bitnet::kernels::QuantType;
-use bitnet::model::ModelConfig;
+use bitnet::kernels::quant::TernaryWeights;
+use bitnet::kernels::{kernel_for, matmul, matmul_prepared, PreparedActivations, QuantType};
+use bitnet::model::weights::Checkpoint;
+use bitnet::model::{ModelConfig, Transformer};
 use bitnet::perf::calibrate::{calibrate_kernel, tokens_per_second, KernelRate};
 use bitnet::threadpool::ThreadPool;
-use bitnet::util::Json;
+use bitnet::util::{Json, Rng};
+use std::time::Instant;
+
+/// Measure real end-to-end prefill and decode throughput (tok/s) of a
+/// synthetic model under one kernel — the phase split the prepare-once
+/// pipeline targets (preprocessing reuse pays off mostly in prefill).
+fn measure_model_e2e(
+    qt: QuantType,
+    cfg: &ModelConfig,
+    threads: usize,
+    prefill_tokens: usize,
+    decode_tokens: usize,
+) -> (f64, f64) {
+    let model = Transformer::from_checkpoint(&Checkpoint::synthetic(cfg, 0xE2E), qt, threads);
+    let prompt: Vec<u32> = (0..prefill_tokens)
+        .map(|i| (3 + i % cfg.vocab_size.saturating_sub(3).max(1)) as u32)
+        .collect();
+    let mut session = model.new_session(prefill_tokens + decode_tokens + 1);
+    let t0 = Instant::now();
+    let _ = model.prefill(&mut session, &prompt);
+    let prefill_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let t1 = Instant::now();
+    for _ in 0..decode_tokens {
+        let _ = model.decode_step(&mut session, 3);
+    }
+    let decode_s = t1.elapsed().as_secs_f64().max(1e-9);
+    (prefill_tokens as f64 / prefill_s, decode_tokens as f64 / decode_s)
+}
+
+/// Measure the prepare-reuse win directly: three projections consuming
+/// one input, per-projection preparation (`matmul`) vs one shared
+/// preparation (`PreparedActivations` + `matmul_prepared`). Returns
+/// (legacy_us, shared_us) per matmul.
+fn measure_prepare_reuse(
+    qt: QuantType,
+    m: usize,
+    k: usize,
+    n: usize,
+    reps: usize,
+    pool: &ThreadPool,
+) -> (f64, f64) {
+    let kern = kernel_for(qt);
+    let mut rng = Rng::new(0xBEEF);
+    let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+    let t = TernaryWeights::from_ternary(q, m, k, 0.05);
+    let packed = kern.quantize(&t);
+    let x: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+    let mut out = vec![0f32; n * m];
+    // Legacy pattern: every projection prepares for itself.
+    matmul(kern, &packed, &x, n, &mut out, pool); // warm
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for _ in 0..3 {
+            matmul(kern, &packed, &x, n, &mut out, pool);
+        }
+    }
+    let legacy = t0.elapsed().as_secs_f64() / (reps * 3) as f64;
+    // Prepare-once pattern: qkv share one preparation.
+    let mut acts = PreparedActivations::new();
+    acts.begin_input();
+    {
+        let batch = acts.get_or_prepare(kern, &x, k, n, pool);
+        matmul_prepared(kern, &packed, batch, &x, n, &mut out, pool); // warm
+    }
+    let t1 = Instant::now();
+    for _ in 0..reps {
+        acts.begin_input();
+        for _ in 0..3 {
+            let batch = acts.get_or_prepare(kern, &x, k, n, pool);
+            matmul_prepared(kern, &packed, batch, &x, n, &mut out, pool);
+        }
+    }
+    let shared = t1.elapsed().as_secs_f64() / (reps * 3) as f64;
+    (legacy * 1e6, shared * 1e6)
+}
 
 fn main() {
     let threads: usize = std::env::var("BENCH_THREADS")
@@ -94,6 +170,41 @@ fn main() {
     }
     let _ = vals;
 
+    // Prepare-reuse microbenchmark: the shared-prepare pipeline vs
+    // per-projection preparation on a prefill-shaped chunk. LUT kernels
+    // (TL1/TL2) amortize their table build, so this is where the
+    // prepare-once refactor's prefill win shows up.
+    let (pm, pk, pn, reps) = if fast { (1024, 2048, 32, 3) } else { (4096, 4096, 64, 5) };
+    println!("\n# Prepare reuse (3 projections/input, {pm}x{pk} n={pn}):");
+    let reuse_kernels = [QuantType::Tl10, QuantType::Tl20, QuantType::Tl21, QuantType::I2S];
+    let mut reuse_rows = Vec::new();
+    for qt in reuse_kernels {
+        let (legacy_us, shared_us) = measure_prepare_reuse(qt, pm, pk, pn, reps, &pool);
+        let speedup = legacy_us / shared_us.max(1e-9);
+        println!(
+            "#   {:<6} per-call {legacy_us:>10.1} µs/matmul | shared {shared_us:>10.1} µs/matmul | {speedup:.2}x",
+            qt.name()
+        );
+        reuse_rows.push((qt, legacy_us, shared_us, speedup));
+    }
+
+    // Measured end-to-end phase split (real transformer forward, not the
+    // composed estimate above): prefill tok/s vs decode tok/s per kernel.
+    let (e2e_cfg, e2e_prefill, e2e_decode) =
+        if fast { (ModelConfig::tiny(), 64, 32) } else { (ModelConfig::m100(), 128, 64) };
+    println!("\n# Measured e2e on preset {} ({threads} threads):", e2e_cfg.name);
+    let e2e_kernels = [QuantType::I2S, QuantType::Tl10, QuantType::Tl20, QuantType::Tq20];
+    let mut e2e_rows = Vec::new();
+    for qt in e2e_kernels {
+        let (prefill_tps, decode_tps) =
+            measure_model_e2e(qt, &e2e_cfg, threads, e2e_prefill, e2e_decode);
+        println!(
+            "#   {:<6} prefill {prefill_tps:>8.1} tok/s | decode {decode_tps:>8.1} tok/s",
+            qt.name()
+        );
+        e2e_rows.push((qt, prefill_tps, decode_tps));
+    }
+
     // Machine-readable trajectory: one JSON document per run so CI can
     // archive the perf history (`BENCH_e2e.json` artifact).
     if let Ok(path) = std::env::var("BENCH_JSON") {
@@ -122,6 +233,27 @@ fn main() {
                 Json::Obj(fields)
             })
             .collect();
+        let reuse_objs: Vec<Json> = reuse_rows
+            .iter()
+            .map(|(qt, legacy_us, shared_us, speedup)| {
+                Json::Obj(vec![
+                    ("kernel".into(), Json::Str(qt.name().into())),
+                    ("per_call_us_per_matmul".into(), Json::Num(*legacy_us)),
+                    ("shared_us_per_matmul".into(), Json::Num(*shared_us)),
+                    ("speedup".into(), Json::Num(*speedup)),
+                ])
+            })
+            .collect();
+        let e2e_objs: Vec<Json> = e2e_rows
+            .iter()
+            .map(|(qt, prefill_tps, decode_tps)| {
+                Json::Obj(vec![
+                    ("kernel".into(), Json::Str(qt.name().into())),
+                    ("prefill_tok_s".into(), Json::Num(*prefill_tps)),
+                    ("decode_tok_s".into(), Json::Num(*decode_tps)),
+                ])
+            })
+            .collect();
         let doc = Json::Obj(vec![
             ("bench".into(), Json::Str("e2e_table7".into())),
             ("threads".into(), Json::Num(threads as f64)),
@@ -132,6 +264,8 @@ fn main() {
             ),
             ("rates".into(), Json::Arr(rate_objs)),
             ("tokens_per_s".into(), Json::Arr(size_objs)),
+            ("prepare_reuse".into(), Json::Arr(reuse_objs)),
+            ("e2e_measured".into(), Json::Arr(e2e_objs)),
         ]);
         std::fs::write(&path, doc.to_string_pretty()).expect("write BENCH_JSON");
         println!("# wrote {path}");

@@ -70,6 +70,7 @@ impl Engine {
         // only after the first served request.
         metrics.dispatch_fallbacks.store(model.plan.fallbacks(), Ordering::Relaxed);
         metrics.dispatch_degraded.store(model.plan.degraded(), Ordering::Relaxed);
+        mirror_prepare_stats(&model, &metrics);
         let kernel_info = {
             let shapes: Vec<String> = model
                 .kernel_summary()
@@ -104,6 +105,17 @@ impl Drop for Engine {
             let _ = w.join();
         }
     }
+}
+
+/// Copy the model's prepare-once cache counters into the engine metrics
+/// (the workspace lives behind the model's mutex; metrics are the
+/// lock-free read side).
+fn mirror_prepare_stats(model: &Transformer, metrics: &EngineMetrics) {
+    let ps = model.prepare_stats();
+    metrics.prepare_cache_hits.store(ps.hits, Ordering::Relaxed);
+    metrics.prepare_cache_misses.store(ps.misses, Ordering::Relaxed);
+    metrics.prepare_buffer_allocs.store(ps.buffer_allocs, Ordering::Relaxed);
+    metrics.prepare_buffer_reuses.store(ps.buffer_reuses, Ordering::Relaxed);
 }
 
 /// Engine-side per-request state.
@@ -258,6 +270,7 @@ fn run_loop(
         // Engine::start seeds the same counters for packing/prepack time.
         metrics.dispatch_fallbacks.store(model.plan.fallbacks(), Ordering::Relaxed);
         metrics.dispatch_degraded.store(model.plan.degraded(), Ordering::Relaxed);
+        mirror_prepare_stats(&model, &metrics);
 
         // Emit completions.
         for (id, reason) in finished {
@@ -380,6 +393,21 @@ mod tests {
         let engine = tiny_engine(2);
         let (_, reason, _) = engine.submit(Request::greedy(vec![], 4)).wait();
         assert_eq!(reason, FinishReason::Rejected);
+    }
+
+    #[test]
+    fn prepare_cache_metrics_are_populated() {
+        let engine = tiny_engine(2);
+        let (tokens, _, _) = engine.submit(Request::greedy(vec![5, 6, 7], 4)).wait();
+        assert_eq!(tokens.len(), 4);
+        let hits = engine.metrics.prepare_cache_hits.load(Ordering::Relaxed);
+        let misses = engine.metrics.prepare_cache_misses.load(Ordering::Relaxed);
+        // Every layer input prepares once (miss) and wk/wv + up share it
+        // (hits): 4 misses / 3 hits per layer per step.
+        assert!(misses > 0, "prepare misses should be mirrored");
+        assert!(hits > 0, "prepare hits should be mirrored (qkv/gate+up sharing)");
+        assert_eq!(hits % 3, 0, "3 hits per layer per step, got {hits}");
+        assert_eq!(misses % 4, 0, "4 misses per layer per step, got {misses}");
     }
 
     #[test]

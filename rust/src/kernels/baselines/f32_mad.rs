@@ -4,7 +4,9 @@
 //! charts for big models — the Table 7 "N/A" rows).
 
 use crate::kernels::quant::TernaryWeights;
-use crate::kernels::{Kernel, KernelClass, KernelInfo, Prepared, QTensor, QuantType};
+use crate::kernels::{
+    Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
+};
 
 pub struct F32Kernel;
 
@@ -38,14 +40,19 @@ impl Kernel for F32Kernel {
             .collect()
     }
 
-    fn prepare(&self, x: &[f32], k: usize) -> Prepared {
-        assert_eq!(x.len(), k);
-        Prepared::Raw(x.to_vec())
+    fn prepare_kind(&self, _k: usize) -> PrepareKind {
+        PrepareKind::Raw
     }
 
-    fn gemv_rows(&self, t: &QTensor, p: &Prepared, out: &mut [f32], rows: std::ops::Range<usize>) {
+    /// No preprocessing: the batched path borrows the raw activation row
+    /// (no copy); only the standalone `prepare` clones.
+    fn prepare_row_into(&self, x: &[f32], k: usize, _dst: PreparedRowMut<'_>) {
+        debug_assert_eq!(x.len(), k);
+    }
+
+    fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
         let x = match p {
-            Prepared::Raw(x) => x,
+            PreparedRow::Raw(x) => x,
             _ => panic!("F32 expects raw activations"),
         };
         let row_bytes = t.k * 4;

@@ -11,8 +11,10 @@
 //! *multi-step dequantization* (two scale levels + min offset) costs extra
 //! latency on ternary models — visible in the kernel benches.
 
-use crate::kernels::quant::{quantize_act_blocked, TernaryWeights};
-use crate::kernels::{Kernel, KernelClass, KernelInfo, Prepared, QTensor, QuantType};
+use crate::kernels::quant::{quantize_act_blocked_into, TernaryWeights};
+use crate::kernels::{
+    Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
+};
 use crate::util::{f16_to_f32, f32_to_f16};
 
 pub struct Q2KKernel;
@@ -76,17 +78,24 @@ impl Kernel for Q2KKernel {
         out
     }
 
-    fn prepare(&self, x: &[f32], k: usize) -> Prepared {
-        assert_eq!(x.len(), k);
-        Prepared::Blocked(quantize_act_blocked(x, QK))
+    fn prepare_kind(&self, _k: usize) -> PrepareKind {
+        PrepareKind::Blocked { block_len: QK }
     }
 
-    fn gemv_rows(&self, t: &QTensor, p: &Prepared, out: &mut [f32], rows: std::ops::Range<usize>) {
-        let act = match p {
-            Prepared::Blocked(a) => a,
+    fn prepare_row_into(&self, x: &[f32], k: usize, dst: PreparedRowMut<'_>) {
+        debug_assert_eq!(x.len(), k);
+        match dst {
+            PreparedRowMut::Blocked { q, d, bsums } => quantize_act_blocked_into(x, QK, q, d, bsums),
+            _ => panic!("Q2_K expects a blocked destination"),
+        }
+    }
+
+    fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
+        let (actq, actd, _abs, block_len) = match p {
+            PreparedRow::Blocked { q, d, bsums, block_len } => (q, d, bsums, block_len),
             _ => panic!("Q2_K expects Q8_K activations"),
         };
-        assert_eq!(act.block_len, QK);
+        assert_eq!(block_len, QK);
         let blocks_per_row = t.k / QK;
         let row_bytes = blocks_per_row * BLOCK_BYTES;
         for (o, r) in out.iter_mut().zip(rows) {
@@ -95,7 +104,7 @@ impl Kernel for Q2KKernel {
                 let blk = &t.data[r * row_bytes + b * BLOCK_BYTES..][..BLOCK_BYTES];
                 let d = f16_to_f32(u16::from_le_bytes([blk[80], blk[81]]));
                 let dmin = f16_to_f32(u16::from_le_bytes([blk[82], blk[83]]));
-                let aq = &act.q[b * QK..(b + 1) * QK];
+                let aq = &actq[b * QK..(b + 1) * QK];
                 // The multi-step path: per sub-block integer dot with a
                 // 4-bit scale, plus a min-offset correction using the
                 // sub-block activation sum.
@@ -119,7 +128,7 @@ impl Kernel for Q2KKernel {
                     isum += sc * ssum;
                     msum += mn * asum;
                 }
-                sum += (d * isum as f32 - dmin * msum as f32) * act.d[b];
+                sum += (d * isum as f32 - dmin * msum as f32) * actd[b];
             }
             *o = sum;
         }

@@ -6,8 +6,10 @@
 //! *store* a ternary model (wastefully) but is neither element-wise nor
 //! lossless.
 
-use crate::kernels::quant::{quantize_act_blocked, TernaryWeights};
-use crate::kernels::{Kernel, KernelClass, KernelInfo, Prepared, QTensor, QuantType};
+use crate::kernels::quant::{quantize_act_blocked_into, TernaryWeights};
+use crate::kernels::{
+    Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
+};
 use crate::util::{f16_to_f32, f32_to_f16};
 
 pub struct Q40Kernel;
@@ -68,17 +70,24 @@ impl Kernel for Q40Kernel {
         out
     }
 
-    fn prepare(&self, x: &[f32], k: usize) -> Prepared {
-        assert_eq!(x.len(), k);
-        Prepared::Blocked(quantize_act_blocked(x, QK))
+    fn prepare_kind(&self, _k: usize) -> PrepareKind {
+        PrepareKind::Blocked { block_len: QK }
     }
 
-    fn gemv_rows(&self, t: &QTensor, p: &Prepared, out: &mut [f32], rows: std::ops::Range<usize>) {
-        let act = match p {
-            Prepared::Blocked(a) => a,
+    fn prepare_row_into(&self, x: &[f32], k: usize, dst: PreparedRowMut<'_>) {
+        debug_assert_eq!(x.len(), k);
+        match dst {
+            PreparedRowMut::Blocked { q, d, bsums } => quantize_act_blocked_into(x, QK, q, d, bsums),
+            _ => panic!("Q4_0 expects a blocked destination"),
+        }
+    }
+
+    fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
+        let (actq, actd, bsums, block_len) = match p {
+            PreparedRow::Blocked { q, d, bsums, block_len } => (q, d, bsums, block_len),
             _ => panic!("Q4_0 expects Q8_0 blocked activations"),
         };
-        assert_eq!(act.block_len, QK);
+        assert_eq!(block_len, QK);
         let blocks_per_row = t.k / QK;
         let row_bytes = blocks_per_row * BLOCK_BYTES;
         for (o, r) in out.iter_mut().zip(rows) {
@@ -86,7 +95,7 @@ impl Kernel for Q40Kernel {
             for b in 0..blocks_per_row {
                 let blk = &t.data[r * row_bytes + b * BLOCK_BYTES..][..BLOCK_BYTES];
                 let d = f16_to_f32(u16::from_le_bytes([blk[0], blk[1]]));
-                let aq = &act.q[b * QK..(b + 1) * QK];
+                let aq = &actq[b * QK..(b + 1) * QK];
                 // Σ (q-8)·a = Σ q·a − 8·Σa, with Σa precomputed per block.
                 let mut isum = 0i32;
                 for i in 0..QK / 2 {
@@ -94,8 +103,8 @@ impl Kernel for Q40Kernel {
                     isum += ((byte & 0xf) as i32) * aq[i] as i32;
                     isum += ((byte >> 4) as i32) * aq[i + QK / 2] as i32;
                 }
-                isum -= 8 * act.bsums[b];
-                sum += isum as f32 * d * act.d[b];
+                isum -= 8 * bsums[b];
+                sum += isum as f32 * d * actd[b];
             }
             *o = sum;
         }

@@ -15,9 +15,11 @@
 //! Like T-MAC, tables are requantized to int8 (with per-block scales),
 //! so the kernel is *not* lossless (§3.2.1).
 
-use crate::kernels::quant::{quantize_act_int8, TernaryWeights};
-use crate::kernels::tl1::{requantize_tables, LUT_BLOCK_GROUPS, LUT_W};
-use crate::kernels::{Kernel, KernelClass, KernelInfo, Prepared, QTensor, QuantType};
+use crate::kernels::quant::{quantize_act_int8_into, TernaryWeights};
+use crate::kernels::tl1::{requantize_tables_into, LUT_BLOCK_GROUPS, LUT_W};
+use crate::kernels::{
+    Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
+};
 
 pub struct TmacKernel;
 
@@ -69,24 +71,28 @@ impl Kernel for TmacKernel {
         out
     }
 
-    fn prepare(&self, x: &[f32], k: usize) -> Prepared {
-        assert_eq!(x.len(), k);
-        let act = quantize_act_int8(x);
-        let tables = build_subset_tables(&act.q);
-        let (t8, scales) = requantize_tables(&tables, LUT_BLOCK_GROUPS);
-        Prepared::BitLut {
-            tables: t8,
-            block_scales: scales,
-            block_groups: LUT_BLOCK_GROUPS,
-            scale: act.scale,
-            act_sum: act.sum,
+    fn prepare_kind(&self, k: usize) -> PrepareKind {
+        PrepareKind::BitLut { groups: k / 4, block_groups: LUT_BLOCK_GROUPS }
+    }
+
+    fn prepare_row_into(&self, x: &[f32], k: usize, dst: PreparedRowMut<'_>) {
+        debug_assert_eq!(x.len(), k);
+        match dst {
+            PreparedRowMut::BitLut { aq, tmp16, tables, block_scales, scale, act_sum } => {
+                let (s, sum) = quantize_act_int8_into(x, aq);
+                build_subset_tables_into(aq, tmp16);
+                requantize_tables_into(tmp16, LUT_BLOCK_GROUPS, tables, block_scales);
+                *scale = s;
+                *act_sum = sum;
+            }
+            _ => panic!("TMAC expects a bit-wise LUT destination"),
         }
     }
 
-    fn gemv_rows(&self, t: &QTensor, p: &Prepared, out: &mut [f32], rows: std::ops::Range<usize>) {
+    fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
         let (tables, block_scales, block_groups, scale, act_sum) = match p {
-            Prepared::BitLut { tables, block_scales, block_groups, scale, act_sum } => {
-                (tables, block_scales, *block_groups, *scale, *act_sum)
+            PreparedRow::BitLut { tables, block_scales, block_groups, scale, act_sum } => {
+                (tables, block_scales, block_groups, scale, act_sum)
             }
             _ => panic!("TMAC expects a bit-wise LUT activation"),
         };
@@ -129,9 +135,18 @@ impl Kernel for TmacKernel {
 /// activations, `table[s] = Σ_{j: s_j=1} a[4g+j]`, computed incrementally
 /// (2^g adds instead of g·2^g).
 pub fn build_subset_tables(aq: &[i8]) -> Vec<i16> {
+    let mut tables = vec![0i16; (aq.len() / 4) * LUT_W];
+    build_subset_tables_into(aq, &mut tables);
+    tables
+}
+
+/// Allocation-free [`build_subset_tables`]: fills the caller-owned table
+/// buffer (`(aq.len()/4) * LUT_W` entries).
+pub fn build_subset_tables_into(aq: &[i8], tables: &mut [i16]) {
     debug_assert_eq!(aq.len() % 4, 0);
     let groups = aq.len() / 4;
-    let mut tables = vec![0i16; groups * LUT_W];
+    debug_assert_eq!(tables.len(), groups * LUT_W);
+    tables.fill(0);
     for g in 0..groups {
         let t = &mut tables[g * LUT_W..(g + 1) * LUT_W];
         for j in 0..4 {
@@ -142,7 +157,6 @@ pub fn build_subset_tables(aq: &[i8]) -> Vec<i16> {
             }
         }
     }
-    tables
 }
 
 #[cfg(test)]

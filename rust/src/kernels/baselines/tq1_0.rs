@@ -13,8 +13,10 @@
 //! `b *= 3` yields the next trit in the top bits — one multiply and shift
 //! per weight instead of div/mod.
 
-use crate::kernels::quant::{quantize_act_blocked, TernaryWeights};
-use crate::kernels::{Kernel, KernelClass, KernelInfo, Prepared, QTensor, QuantType};
+use crate::kernels::quant::{quantize_act_blocked_into, TernaryWeights};
+use crate::kernels::{
+    Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
+};
 use crate::util::{f16_to_f32, f32_to_f16};
 
 pub struct Tq10Kernel;
@@ -97,17 +99,24 @@ impl Kernel for Tq10Kernel {
         out
     }
 
-    fn prepare(&self, x: &[f32], k: usize) -> Prepared {
-        assert_eq!(x.len(), k);
-        Prepared::Blocked(quantize_act_blocked(x, QK))
+    fn prepare_kind(&self, _k: usize) -> PrepareKind {
+        PrepareKind::Blocked { block_len: QK }
     }
 
-    fn gemv_rows(&self, t: &QTensor, p: &Prepared, out: &mut [f32], rows: std::ops::Range<usize>) {
-        let act = match p {
-            Prepared::Blocked(a) => a,
+    fn prepare_row_into(&self, x: &[f32], k: usize, dst: PreparedRowMut<'_>) {
+        debug_assert_eq!(x.len(), k);
+        match dst {
+            PreparedRowMut::Blocked { q, d, bsums } => quantize_act_blocked_into(x, QK, q, d, bsums),
+            _ => panic!("TQ1_0 expects a blocked destination"),
+        }
+    }
+
+    fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
+        let (actq, actd, bsums, block_len) = match p {
+            PreparedRow::Blocked { q, d, bsums, block_len } => (q, d, bsums, block_len),
             _ => panic!("TQ1_0 expects Q8_K activations"),
         };
-        assert_eq!(act.block_len, QK);
+        assert_eq!(block_len, QK);
         let blocks_per_row = t.k / QK;
         let row_bytes = blocks_per_row * BLOCK_BYTES;
         for (o, r) in out.iter_mut().zip(rows) {
@@ -115,7 +124,7 @@ impl Kernel for Tq10Kernel {
             for b in 0..blocks_per_row {
                 let blk = &t.data[r * row_bytes + b * BLOCK_BYTES..][..BLOCK_BYTES];
                 let d = f16_to_f32(u16::from_le_bytes([blk[52], blk[53]]));
-                let aq = &act.q[b * QK..(b + 1) * QK];
+                let aq = &actq[b * QK..(b + 1) * QK];
                 let mut isum = 0i32;
                 // 5-trit bytes: the multiply-shift decode is the hot loop.
                 for (i, &byte) in blk[..48].iter().enumerate() {
@@ -138,8 +147,8 @@ impl Kernel for Tq10Kernel {
                         q &= 0xff;
                     }
                 }
-                isum -= act.bsums[b];
-                sum += isum as f32 * d * act.d[b];
+                isum -= bsums[b];
+                sum += isum as f32 * d * actd[b];
             }
             *o = sum;
         }

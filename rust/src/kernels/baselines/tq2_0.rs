@@ -4,8 +4,10 @@
 //! lossless for BitNet b1.58 (§2.3): the per-block activation scales
 //! diverge from the per-tensor training scheme.
 
-use crate::kernels::quant::{quantize_act_blocked, TernaryWeights};
-use crate::kernels::{Kernel, KernelClass, KernelInfo, Prepared, QTensor, QuantType};
+use crate::kernels::quant::{quantize_act_blocked_into, TernaryWeights};
+use crate::kernels::{
+    Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
+};
 use crate::util::{f16_to_f32, f32_to_f16};
 
 pub struct Tq20Kernel;
@@ -73,17 +75,24 @@ impl Kernel for Tq20Kernel {
         out
     }
 
-    fn prepare(&self, x: &[f32], k: usize) -> Prepared {
-        assert_eq!(x.len(), k);
-        Prepared::Blocked(quantize_act_blocked(x, QK))
+    fn prepare_kind(&self, _k: usize) -> PrepareKind {
+        PrepareKind::Blocked { block_len: QK }
     }
 
-    fn gemv_rows(&self, t: &QTensor, p: &Prepared, out: &mut [f32], rows: std::ops::Range<usize>) {
-        let act = match p {
-            Prepared::Blocked(a) => a,
+    fn prepare_row_into(&self, x: &[f32], k: usize, dst: PreparedRowMut<'_>) {
+        debug_assert_eq!(x.len(), k);
+        match dst {
+            PreparedRowMut::Blocked { q, d, bsums } => quantize_act_blocked_into(x, QK, q, d, bsums),
+            _ => panic!("TQ2_0 expects a blocked destination"),
+        }
+    }
+
+    fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
+        let (actq, actd, bsums, block_len) = match p {
+            PreparedRow::Blocked { q, d, bsums, block_len } => (q, d, bsums, block_len),
             _ => panic!("TQ2_0 expects Q8_K activations"),
         };
-        assert_eq!(act.block_len, QK);
+        assert_eq!(block_len, QK);
         let blocks_per_row = t.k / QK;
         let row_bytes = blocks_per_row * BLOCK_BYTES;
         for (o, r) in out.iter_mut().zip(rows) {
@@ -91,7 +100,7 @@ impl Kernel for Tq20Kernel {
             for b in 0..blocks_per_row {
                 let blk = &t.data[r * row_bytes + b * BLOCK_BYTES..][..BLOCK_BYTES];
                 let d = f16_to_f32(u16::from_le_bytes([blk[QK / 4], blk[QK / 4 + 1]]));
-                let aq = &act.q[b * QK..(b + 1) * QK];
+                let aq = &actq[b * QK..(b + 1) * QK];
                 // Σ a·(code−1) = Σ a·code − Σa (per block).
                 let mut isum = 0i32;
                 for (byte_i, quad) in aq.chunks_exact(4).enumerate() {
@@ -101,8 +110,8 @@ impl Kernel for Tq20Kernel {
                     isum += (((byte >> 4) & 0x3) as i32) * quad[2] as i32;
                     isum += (((byte >> 6) & 0x3) as i32) * quad[3] as i32;
                 }
-                isum -= act.bsums[b];
-                sum += isum as f32 * d * act.d[b];
+                isum -= bsums[b];
+                sum += isum as f32 * d * actd[b];
             }
             *o = sum;
         }

@@ -16,9 +16,11 @@
 //! low-bit LLMs in general.
 
 use super::lut::{code_count, decode_code, mirror_join, mirror_split, sign_apply_i32};
-use super::quant::{quantize_act_int8, TernaryWeights};
+use super::quant::{quantize_act_int8_into, TernaryWeights};
 use super::tl1::LUT_W;
-use super::{Kernel, KernelClass, KernelInfo, Prepared, QTensor, QuantType};
+use super::{
+    Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
+};
 
 /// Generic element-wise LUT kernel over a symmetric integer alphabet.
 pub struct ElutKernel {
@@ -143,18 +145,26 @@ impl Kernel for ElutKernel {
         out
     }
 
-    fn prepare(&self, x: &[f32], k: usize) -> Prepared {
-        assert_eq!(x.len(), k);
-        let act = quantize_act_int8(x);
+    fn prepare_kind(&self, k: usize) -> PrepareKind {
+        PrepareKind::LutI16 { groups: k / self.g }
+    }
+
+    fn prepare_row_into(&self, x: &[f32], k: usize, dst: PreparedRowMut<'_>) {
+        debug_assert_eq!(x.len(), k);
+        let PreparedRowMut::LutI16 { aq, tables, scale } = dst else {
+            panic!("ELUT expects a LutI16 destination");
+        };
+        let (s, _) = quantize_act_int8_into(x, aq);
+        *scale = s;
         let groups = k / self.g;
         let entries = if self.mirror {
             super::lut::half_code_count(self.c, self.g)
         } else {
             code_count(self.c, self.g)
         };
-        let mut tables = vec![0i16; groups * LUT_W];
+        tables.fill(0);
         for gi in 0..groups {
-            let a = &act.q[gi * self.g..(gi + 1) * self.g];
+            let a = &aq[gi * self.g..(gi + 1) * self.g];
             let t = &mut tables[gi * LUT_W..gi * LUT_W + entries];
             for (slot_i, slot) in t.iter_mut().enumerate() {
                 let code =
@@ -167,12 +177,11 @@ impl Kernel for ElutKernel {
                     .sum();
             }
         }
-        Prepared::LutI16 { tables, scale: act.scale }
     }
 
-    fn gemv_rows(&self, t: &QTensor, p: &Prepared, out: &mut [f32], rows: std::ops::Range<usize>) {
+    fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
         let (tables, scale) = match p {
-            Prepared::LutI16 { tables, scale } => (tables, scale),
+            PreparedRow::LutI16 { tables, scale } => (tables, scale),
             _ => panic!("ELUT expects LutI16 activations"),
         };
         let groups = t.k / self.g;
@@ -209,7 +218,7 @@ impl Kernel for ElutKernel {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernels::quant::training_scheme_ref_row;
+    use crate::kernels::quant::{quantize_act_int8, training_scheme_ref_row};
     use crate::util::Rng;
 
     fn random_ternary(m: usize, k: usize, seed: u64) -> TernaryWeights {

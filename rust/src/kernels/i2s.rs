@@ -9,8 +9,10 @@
 //! steps and accumulates in i32 (no overflow: |a|≤127, |w|≤1,
 //! K·127 < 2^31 for any realistic K).
 
-use super::quant::{quantize_act_int8, TernaryWeights};
-use super::{Kernel, KernelClass, KernelInfo, Prepared, QTensor, QuantType};
+use super::quant::{quantize_act_int8_into, TernaryWeights};
+use super::{
+    Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
+};
 
 pub struct I2SKernel;
 
@@ -67,22 +69,33 @@ impl Kernel for I2SKernel {
         out
     }
 
-    fn prepare(&self, x: &[f32], k: usize) -> Prepared {
-        assert_eq!(x.len(), k);
-        Prepared::Int8(quantize_act_int8(x))
+    fn prepare_kind(&self, _k: usize) -> PrepareKind {
+        PrepareKind::Int8
     }
 
-    fn gemv_rows(&self, t: &QTensor, p: &Prepared, out: &mut [f32], rows: std::ops::Range<usize>) {
-        let act = match p {
-            Prepared::Int8(a) => a,
+    fn prepare_row_into(&self, x: &[f32], k: usize, dst: PreparedRowMut<'_>) {
+        debug_assert_eq!(x.len(), k);
+        match dst {
+            PreparedRowMut::Int8 { q, scale, sum } => {
+                let (s, sm) = quantize_act_int8_into(x, q);
+                *scale = s;
+                *sum = sm;
+            }
+            _ => panic!("I2_S expects a per-tensor int8 destination"),
+        }
+    }
+
+    fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
+        let (q, scale, sum) = match p {
+            PreparedRow::Int8 { q, scale, sum } => (q, scale, sum),
             _ => panic!("I2_S expects per-tensor int8 activations"),
         };
-        debug_assert_eq!(act.q.len(), t.k);
+        debug_assert_eq!(q.len(), t.k);
         let row_bytes = t.k / WPB;
-        let combined = t.scale / act.scale;
+        let combined = t.scale / scale;
         for (o, r) in out.iter_mut().zip(rows) {
             let wrow = &t.data[r * row_bytes..(r + 1) * row_bytes];
-            *o = gemv_row_i2s(wrow, &act.q, act.sum) as f32 * combined;
+            *o = gemv_row_i2s(wrow, q, sum) as f32 * combined;
         }
     }
 }
@@ -117,6 +130,7 @@ fn gemv_row_i2s(wrow: &[u8], aq: &[i8], act_sum: i32) -> i32 {
 mod tests {
     use super::*;
     use crate::kernels::quant::training_scheme_ref_row;
+    use crate::kernels::Prepared;
     use crate::util::Rng;
 
     fn random_ternary(m: usize, k: usize, seed: u64) -> TernaryWeights {

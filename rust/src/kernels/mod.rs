@@ -17,6 +17,23 @@
 //! All kernels consume the same [`quant::TernaryWeights`] (or raw f32 for
 //! the general-purpose baselines) and produce f32 outputs, so they are
 //! interchangeable inside the model and the quality/speed harnesses.
+//!
+//! ## Two-phase mpGEMM (Algorithms 1–2)
+//!
+//! Every kernel splits into a **preprocessing** phase (activation
+//! quantization + LUT construction) and an **accumulation** phase. Since
+//! the prepare-once refactor the preprocessing artifact is first-class:
+//!
+//! * [`PreparedBatch`] holds all `n` activation rows of one matmul input,
+//!   prepared in parallel into flat, reusable buffers
+//!   ([`PreparedBatch::build`] recycles capacity across calls — decode
+//!   steady state allocates nothing).
+//! * [`PreparedActivations`] caches batches per [`QuantType`] for one
+//!   layer input, so projections that share an input (wq/wk/wv, gate/up)
+//!   pay preprocessing **once**, not once per projection.
+//! * [`matmul_prepared`] runs accumulation as a single 2-D tiled
+//!   fork/join over (activation rows × weight rows) instead of one
+//!   fork/join barrier per activation row.
 
 pub mod baselines;
 pub mod counters;
@@ -136,11 +153,14 @@ impl QuantType {
     }
 }
 
-/// Prepared (quantized / tabulated) activations. Built once per activation
-/// row, reused across all M weight rows — the "preprocessing stage" of
-/// Algorithms 1 and 2.
+/// Prepared (quantized / tabulated) activations for **one** row, owned —
+/// the "preprocessing stage" artifact of Algorithms 1 and 2 in its
+/// standalone form (single-row decode, tests, examples). The batched hot
+/// path stores the same data flat in a [`PreparedBatch`] and hands
+/// kernels borrowed [`PreparedRow`] views instead.
 pub enum Prepared {
-    /// No quantization (F32/F16 baselines).
+    /// No quantization (F32/F16 baselines). Owned copy; the batched path
+    /// borrows the caller's row instead (see [`PreparedRow::Raw`]).
     Raw(Vec<f32>),
     /// Per-tensor int8 (BitNet training scheme).
     Int8(ActInt8),
@@ -155,6 +175,109 @@ pub enum Prepared {
     /// Bit-wise LUT (T-MAC stand-in): int8 tables over 4-activation groups
     /// + per-block scales + activation sum for offset correction.
     BitLut { tables: Vec<i8>, block_scales: Vec<f32>, block_groups: usize, scale: f32, act_sum: i32 },
+}
+
+impl Prepared {
+    /// Borrowed view of this prepared row — what [`Kernel::gemv_rows`]
+    /// consumes (the batched path produces these without owning copies).
+    pub fn as_row(&self) -> PreparedRow<'_> {
+        match self {
+            Prepared::Raw(x) => PreparedRow::Raw(x),
+            Prepared::Int8(a) => PreparedRow::Int8 { q: &a.q, scale: a.scale, sum: a.sum },
+            Prepared::Blocked(a) => {
+                PreparedRow::Blocked { q: &a.q, d: &a.d, bsums: &a.bsums, block_len: a.block_len }
+            }
+            Prepared::LutI16 { tables, scale } => {
+                PreparedRow::LutI16 { tables, scale: *scale }
+            }
+            Prepared::LutI8 { tables, block_scales, block_groups, scale } => PreparedRow::LutI8 {
+                tables,
+                block_scales,
+                block_groups: *block_groups,
+                scale: *scale,
+            },
+            Prepared::BitLut { tables, block_scales, block_groups, scale, act_sum } => {
+                PreparedRow::BitLut {
+                    tables,
+                    block_scales,
+                    block_groups: *block_groups,
+                    scale: *scale,
+                    act_sum: *act_sum,
+                }
+            }
+        }
+    }
+}
+
+/// Borrowed view of one prepared activation row — the accumulation-phase
+/// input. The F32/F16 `Raw` case borrows the caller's activation slice
+/// directly (no copy in the hot path).
+#[derive(Clone, Copy)]
+pub enum PreparedRow<'p> {
+    /// Raw f32 activations (F32/F16 baselines).
+    Raw(&'p [f32]),
+    /// Per-tensor int8 quants + scale + Σq.
+    Int8 { q: &'p [i8], scale: f32, sum: i32 },
+    /// Per-block int8 quants with per-block dequant scales and sums.
+    Blocked { q: &'p [i8], d: &'p [f32], bsums: &'p [i32], block_len: usize },
+    /// Element-wise int16 LUT (lossless TL path).
+    LutI16 { tables: &'p [i16], scale: f32 },
+    /// Element-wise int8 LUT with per-block requantization scales.
+    LutI8 { tables: &'p [i8], block_scales: &'p [f32], block_groups: usize, scale: f32 },
+    /// Bit-wise int8 LUT (T-MAC) + activation sum for offset correction.
+    BitLut { tables: &'p [i8], block_scales: &'p [f32], block_groups: usize, scale: f32, act_sum: i32 },
+}
+
+/// Mutable, preallocated destination for one row's preprocessing —
+/// [`Kernel::prepare_row_into`] writes here instead of allocating. The
+/// LUT variants carry scratch areas (`aq` for the quantized activations,
+/// `tmp16` for pre-requantization tables) so no kernel needs a heap
+/// allocation on the prepare path.
+pub enum PreparedRowMut<'p> {
+    /// F32/F16: nothing to store (accumulation borrows the raw row).
+    Raw,
+    /// Per-tensor int8 destination.
+    Int8 { q: &'p mut [i8], scale: &'p mut f32, sum: &'p mut i32 },
+    /// Per-block int8 destination.
+    Blocked { q: &'p mut [i8], d: &'p mut [f32], bsums: &'p mut [i32] },
+    /// int16 LUT destination (`aq` is scratch for the quantized row).
+    LutI16 { aq: &'p mut [i8], tables: &'p mut [i16], scale: &'p mut f32 },
+    /// int8 LUT destination (`tmp16` is scratch for the int16 tables
+    /// before requantization).
+    LutI8 {
+        aq: &'p mut [i8],
+        tmp16: &'p mut [i16],
+        tables: &'p mut [i8],
+        block_scales: &'p mut [f32],
+        scale: &'p mut f32,
+    },
+    /// Bit-wise LUT destination (T-MAC).
+    BitLut {
+        aq: &'p mut [i8],
+        tmp16: &'p mut [i16],
+        tables: &'p mut [i8],
+        block_scales: &'p mut [f32],
+        scale: &'p mut f32,
+        act_sum: &'p mut i32,
+    },
+}
+
+/// The shape class of a kernel's preprocessing artifact for a given K —
+/// what sizes the reusable [`PreparedBatch`] buffers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrepareKind {
+    /// No storage (F32/F16 borrow the raw row).
+    Raw,
+    /// Per-tensor int8: k quants + scale + sum per row.
+    Int8,
+    /// Per-block int8: k quants + k/block_len scales/sums per row.
+    Blocked { block_len: usize },
+    /// int16 LUT: `groups` tables of [`tl1::LUT_W`] entries per row.
+    LutI16 { groups: usize },
+    /// int8 LUT: as `LutI16` plus ⌈groups/block_groups⌉ block scales.
+    LutI8 { groups: usize, block_groups: usize },
+    /// Bit-wise int8 LUT (T-MAC): as `LutI8` plus the activation sum.
+    BitLut { groups: usize, block_groups: usize },
 }
 
 /// A packed weight tensor in some kernel's storage format.
@@ -191,18 +314,107 @@ pub trait Kernel: Send + Sync {
     /// Reconstruct effective f32 weights (tests, quality eval).
     fn dequantize(&self, t: &QTensor) -> Vec<f32>;
 
+    /// The preprocessing artifact shape for reduction dim `k` — drives
+    /// [`PreparedBatch`] buffer sizing.
+    fn prepare_kind(&self, k: usize) -> PrepareKind;
+
     /// Quantize activations and (for LUT kernels) build lookup tables —
-    /// Algorithm 1/2 "preprocessing" phase. `x.len() == k`.
-    fn prepare(&self, x: &[f32], k: usize) -> Prepared;
+    /// Algorithm 1/2 "preprocessing" phase — writing into caller-owned
+    /// storage (`dst` matches [`Kernel::prepare_kind`]). Performs no heap
+    /// allocation. `x.len() == k`.
+    fn prepare_row_into(&self, x: &[f32], k: usize, dst: PreparedRowMut<'_>);
+
+    /// Standalone (allocating) preprocessing of one row. Convenience for
+    /// tests and single-row paths; the batched hot path goes through
+    /// [`PreparedBatch::build`] instead.
+    fn prepare(&self, x: &[f32], k: usize) -> Prepared {
+        assert_eq!(x.len(), k);
+        match self.prepare_kind(k) {
+            PrepareKind::Raw => Prepared::Raw(x.to_vec()),
+            PrepareKind::Int8 => {
+                let mut q = vec![0i8; k];
+                let (mut scale, mut sum) = (0f32, 0i32);
+                self.prepare_row_into(
+                    x,
+                    k,
+                    PreparedRowMut::Int8 { q: &mut q, scale: &mut scale, sum: &mut sum },
+                );
+                Prepared::Int8(ActInt8 { q, scale, sum })
+            }
+            PrepareKind::Blocked { block_len } => {
+                let blocks = k / block_len;
+                let mut q = vec![0i8; k];
+                let mut d = vec![0f32; blocks];
+                let mut bsums = vec![0i32; blocks];
+                self.prepare_row_into(
+                    x,
+                    k,
+                    PreparedRowMut::Blocked { q: &mut q, d: &mut d, bsums: &mut bsums },
+                );
+                Prepared::Blocked(ActBlocked { q, d, bsums, block_len })
+            }
+            PrepareKind::LutI16 { groups } => {
+                let mut aq = vec![0i8; k];
+                let mut tables = vec![0i16; groups * tl1::LUT_W];
+                let mut scale = 0f32;
+                self.prepare_row_into(
+                    x,
+                    k,
+                    PreparedRowMut::LutI16 { aq: &mut aq, tables: &mut tables, scale: &mut scale },
+                );
+                Prepared::LutI16 { tables, scale }
+            }
+            PrepareKind::LutI8 { groups, block_groups } => {
+                let mut aq = vec![0i8; k];
+                let mut tmp16 = vec![0i16; groups * tl1::LUT_W];
+                let mut tables = vec![0i8; groups * tl1::LUT_W];
+                let mut block_scales = vec![0f32; crate::util::ceil_div(groups, block_groups)];
+                let mut scale = 0f32;
+                self.prepare_row_into(
+                    x,
+                    k,
+                    PreparedRowMut::LutI8 {
+                        aq: &mut aq,
+                        tmp16: &mut tmp16,
+                        tables: &mut tables,
+                        block_scales: &mut block_scales,
+                        scale: &mut scale,
+                    },
+                );
+                Prepared::LutI8 { tables, block_scales, block_groups, scale }
+            }
+            PrepareKind::BitLut { groups, block_groups } => {
+                let mut aq = vec![0i8; k];
+                let mut tmp16 = vec![0i16; groups * tl1::LUT_W];
+                let mut tables = vec![0i8; groups * tl1::LUT_W];
+                let mut block_scales = vec![0f32; crate::util::ceil_div(groups, block_groups)];
+                let mut scale = 0f32;
+                let mut act_sum = 0i32;
+                self.prepare_row_into(
+                    x,
+                    k,
+                    PreparedRowMut::BitLut {
+                        aq: &mut aq,
+                        tmp16: &mut tmp16,
+                        tables: &mut tables,
+                        block_scales: &mut block_scales,
+                        scale: &mut scale,
+                        act_sum: &mut act_sum,
+                    },
+                );
+                Prepared::BitLut { tables, block_scales, block_groups, scale, act_sum }
+            }
+        }
+    }
 
     /// Compute `out[r] = Σ_k x[k] * W[r,k]` for `r` in `rows` —
     /// Algorithm 1/2 "accumulation" phase.
-    fn gemv_rows(&self, t: &QTensor, p: &Prepared, out: &mut [f32], rows: std::ops::Range<usize>);
+    fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>);
 
     /// Full single-row GEMV.
     fn gemv(&self, t: &QTensor, p: &Prepared, out: &mut [f32]) {
         assert_eq!(out.len(), t.m);
-        self.gemv_rows(t, p, out, 0..t.m);
+        self.gemv_rows(t, p.as_row(), out, 0..t.m);
     }
 }
 
@@ -231,9 +443,672 @@ pub fn library_table() -> Vec<KernelInfo> {
     QuantType::ALL.iter().map(|&q| kernel_for(q).info()).collect()
 }
 
+// ---------------------------------------------------------------------------
+// Batched preprocessing: flat per-batch storage + per-input cache
+// ---------------------------------------------------------------------------
+
+/// All `n` activation rows of one matmul input, preprocessed into flat
+/// recyclable buffers. Built in parallel by [`PreparedBatch::build`];
+/// [`PreparedBatch::row`] hands out borrowed [`PreparedRow`] views for
+/// the accumulation phase. Rebuilding with the same shape class reuses
+/// every buffer (zero heap allocation in steady state).
+pub struct PreparedBatch {
+    qtype: QuantType,
+    k: usize,
+    n: usize,
+    kind: BatchKind,
+}
+
+enum BatchKind {
+    /// Never built.
+    Empty,
+    /// F32/F16: rows are borrowed from the caller's activations.
+    Raw,
+    Int8 {
+        q: Vec<i8>,
+        scales: Vec<f32>,
+        sums: Vec<i32>,
+    },
+    Blocked {
+        q: Vec<i8>,
+        d: Vec<f32>,
+        bsums: Vec<i32>,
+        block_len: usize,
+    },
+    LutI16 {
+        aq: Vec<i8>,
+        tables: Vec<i16>,
+        scales: Vec<f32>,
+        stride: usize,
+    },
+    LutI8 {
+        aq: Vec<i8>,
+        tmp16: Vec<i16>,
+        tables: Vec<i8>,
+        block_scales: Vec<f32>,
+        scales: Vec<f32>,
+        stride: usize,
+        sblocks: usize,
+        block_groups: usize,
+    },
+    BitLut {
+        aq: Vec<i8>,
+        tmp16: Vec<i16>,
+        tables: Vec<i8>,
+        block_scales: Vec<f32>,
+        scales: Vec<f32>,
+        act_sums: Vec<i32>,
+        stride: usize,
+        sblocks: usize,
+        block_groups: usize,
+    },
+}
+
+/// Resize to `len` preserving capacity where possible; counts a fresh
+/// allocation when capacity must grow. Existing contents are left in
+/// place (every consumer fully overwrites its region during
+/// `prepare_row_into`), so the steady-state rebuild writes nothing here
+/// — no redundant memset in the hot path.
+fn ensure_len<T: Copy + Default>(v: &mut Vec<T>, len: usize, allocs: &mut u64) {
+    if v.capacity() < len {
+        *allocs += 1;
+    }
+    v.resize(len, T::default());
+}
+
+impl PreparedBatch {
+    /// An empty batch (no buffers yet); [`PreparedBatch::build`] sizes it.
+    pub fn new() -> PreparedBatch {
+        PreparedBatch { qtype: QuantType::F32, k: 0, n: 0, kind: BatchKind::Empty }
+    }
+
+    /// The kernel this batch was prepared for.
+    pub fn qtype(&self) -> QuantType {
+        self.qtype
+    }
+
+    /// Activation rows held.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Reduction dimension.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// (Re)build this batch for `kernel` over the `n`×`k` activations
+    /// `x`, preparing rows in parallel on `pool`. Buffers are reused
+    /// whenever the shape class matches; returns the number of fresh
+    /// buffer allocations (0 in steady state).
+    pub fn build(
+        &mut self,
+        kernel: &dyn Kernel,
+        x: &[f32],
+        k: usize,
+        n: usize,
+        pool: &ThreadPool,
+    ) -> u64 {
+        assert_eq!(x.len(), n * k);
+        let mut allocs = 0u64;
+        // Row chunks double as the scratch-region count: chunk c owns
+        // scratch region c (aq/tmp16), so scratch scales with the worker
+        // count, not with n.
+        let chunks = (pool.size() * 2).min(n).max(1);
+        self.ensure_kind(kernel.prepare_kind(k), k, n, chunks, &mut allocs);
+        self.qtype = kernel.info().qtype;
+        self.k = k;
+        self.n = n;
+        if n == 0 {
+            return allocs;
+        }
+        let rows_per = crate::util::ceil_div(n, chunks);
+        match &mut self.kind {
+            BatchKind::Empty => unreachable!("ensure_kind materializes a kind"),
+            BatchKind::Raw => {}
+            BatchKind::Int8 { q, scales, sums } => {
+                let qp = SendMut(q.as_mut_ptr());
+                let sp = SendMut(scales.as_mut_ptr());
+                let up = SendMut(sums.as_mut_ptr());
+                pool.parallel_for(chunks, |c| {
+                    let (qp, sp, up) = (&qp, &sp, &up);
+                    let lo = c * rows_per;
+                    if lo >= n {
+                        return;
+                    }
+                    let hi = ((c + 1) * rows_per).min(n);
+                    for i in lo..hi {
+                        // SAFETY: each row i writes disjoint ranges.
+                        let q = unsafe { std::slice::from_raw_parts_mut(qp.0.add(i * k), k) };
+                        let scale = unsafe { &mut *sp.0.add(i) };
+                        let sum = unsafe { &mut *up.0.add(i) };
+                        kernel.prepare_row_into(
+                            &x[i * k..(i + 1) * k],
+                            k,
+                            PreparedRowMut::Int8 { q, scale, sum },
+                        );
+                    }
+                });
+            }
+            BatchKind::Blocked { q, d, bsums, block_len } => {
+                let nb = k / *block_len;
+                let qp = SendMut(q.as_mut_ptr());
+                let dp = SendMut(d.as_mut_ptr());
+                let bp = SendMut(bsums.as_mut_ptr());
+                pool.parallel_for(chunks, |c| {
+                    let (qp, dp, bp) = (&qp, &dp, &bp);
+                    let lo = c * rows_per;
+                    if lo >= n {
+                        return;
+                    }
+                    let hi = ((c + 1) * rows_per).min(n);
+                    for i in lo..hi {
+                        // SAFETY: each row i writes disjoint ranges.
+                        let q = unsafe { std::slice::from_raw_parts_mut(qp.0.add(i * k), k) };
+                        let d = unsafe { std::slice::from_raw_parts_mut(dp.0.add(i * nb), nb) };
+                        let bsums =
+                            unsafe { std::slice::from_raw_parts_mut(bp.0.add(i * nb), nb) };
+                        kernel.prepare_row_into(
+                            &x[i * k..(i + 1) * k],
+                            k,
+                            PreparedRowMut::Blocked { q, d, bsums },
+                        );
+                    }
+                });
+            }
+            BatchKind::LutI16 { aq, tables, scales, stride } => {
+                let stride = *stride;
+                let ap = SendMut(aq.as_mut_ptr());
+                let tp = SendMut(tables.as_mut_ptr());
+                let sp = SendMut(scales.as_mut_ptr());
+                pool.parallel_for(chunks, |c| {
+                    let (ap, tp, sp) = (&ap, &tp, &sp);
+                    let lo = c * rows_per;
+                    if lo >= n {
+                        return;
+                    }
+                    let hi = ((c + 1) * rows_per).min(n);
+                    for i in lo..hi {
+                        // SAFETY: each row i writes disjoint output ranges;
+                        // scratch region c belongs to this chunk alone.
+                        let aq = unsafe { std::slice::from_raw_parts_mut(ap.0.add(c * k), k) };
+                        let tables = unsafe {
+                            std::slice::from_raw_parts_mut(tp.0.add(i * stride), stride)
+                        };
+                        let scale = unsafe { &mut *sp.0.add(i) };
+                        kernel.prepare_row_into(
+                            &x[i * k..(i + 1) * k],
+                            k,
+                            PreparedRowMut::LutI16 { aq, tables, scale },
+                        );
+                    }
+                });
+            }
+            BatchKind::LutI8 { aq, tmp16, tables, block_scales, scales, stride, sblocks, .. } => {
+                let (stride, sblocks) = (*stride, *sblocks);
+                let ap = SendMut(aq.as_mut_ptr());
+                let mp = SendMut(tmp16.as_mut_ptr());
+                let tp = SendMut(tables.as_mut_ptr());
+                let bp = SendMut(block_scales.as_mut_ptr());
+                let sp = SendMut(scales.as_mut_ptr());
+                pool.parallel_for(chunks, |c| {
+                    let (ap, mp, tp, bp, sp) = (&ap, &mp, &tp, &bp, &sp);
+                    let lo = c * rows_per;
+                    if lo >= n {
+                        return;
+                    }
+                    let hi = ((c + 1) * rows_per).min(n);
+                    for i in lo..hi {
+                        // SAFETY: each row i writes disjoint output ranges;
+                        // scratch region c belongs to this chunk alone.
+                        let aq = unsafe { std::slice::from_raw_parts_mut(ap.0.add(c * k), k) };
+                        let tmp16 = unsafe {
+                            std::slice::from_raw_parts_mut(mp.0.add(c * stride), stride)
+                        };
+                        let tables = unsafe {
+                            std::slice::from_raw_parts_mut(tp.0.add(i * stride), stride)
+                        };
+                        let block_scales = unsafe {
+                            std::slice::from_raw_parts_mut(bp.0.add(i * sblocks), sblocks)
+                        };
+                        let scale = unsafe { &mut *sp.0.add(i) };
+                        kernel.prepare_row_into(
+                            &x[i * k..(i + 1) * k],
+                            k,
+                            PreparedRowMut::LutI8 { aq, tmp16, tables, block_scales, scale },
+                        );
+                    }
+                });
+            }
+            BatchKind::BitLut {
+                aq,
+                tmp16,
+                tables,
+                block_scales,
+                scales,
+                act_sums,
+                stride,
+                sblocks,
+                ..
+            } => {
+                let (stride, sblocks) = (*stride, *sblocks);
+                let ap = SendMut(aq.as_mut_ptr());
+                let mp = SendMut(tmp16.as_mut_ptr());
+                let tp = SendMut(tables.as_mut_ptr());
+                let bp = SendMut(block_scales.as_mut_ptr());
+                let sp = SendMut(scales.as_mut_ptr());
+                let up = SendMut(act_sums.as_mut_ptr());
+                pool.parallel_for(chunks, |c| {
+                    let (ap, mp, tp, bp, sp, up) = (&ap, &mp, &tp, &bp, &sp, &up);
+                    let lo = c * rows_per;
+                    if lo >= n {
+                        return;
+                    }
+                    let hi = ((c + 1) * rows_per).min(n);
+                    for i in lo..hi {
+                        // SAFETY: each row i writes disjoint output ranges;
+                        // scratch region c belongs to this chunk alone.
+                        let aq = unsafe { std::slice::from_raw_parts_mut(ap.0.add(c * k), k) };
+                        let tmp16 = unsafe {
+                            std::slice::from_raw_parts_mut(mp.0.add(c * stride), stride)
+                        };
+                        let tables = unsafe {
+                            std::slice::from_raw_parts_mut(tp.0.add(i * stride), stride)
+                        };
+                        let block_scales = unsafe {
+                            std::slice::from_raw_parts_mut(bp.0.add(i * sblocks), sblocks)
+                        };
+                        let scale = unsafe { &mut *sp.0.add(i) };
+                        let act_sum = unsafe { &mut *up.0.add(i) };
+                        kernel.prepare_row_into(
+                            &x[i * k..(i + 1) * k],
+                            k,
+                            PreparedRowMut::BitLut {
+                                aq,
+                                tmp16,
+                                tables,
+                                block_scales,
+                                scale,
+                                act_sum,
+                            },
+                        );
+                    }
+                });
+            }
+        }
+        allocs
+    }
+
+    /// Switch/resize the storage to `want`, reusing buffers when the
+    /// shape class matches. `scratch_rows` is the number of concurrent
+    /// build chunks — per-row scratch (`aq`, `tmp16`) is sized by it, not
+    /// by `n`, so transient workspace stays O(threads) after a long
+    /// prefill chunk.
+    fn ensure_kind(
+        &mut self,
+        want: PrepareKind,
+        k: usize,
+        n: usize,
+        scratch_rows: usize,
+        allocs: &mut u64,
+    ) {
+        match want {
+            PrepareKind::Raw => {
+                if !matches!(self.kind, BatchKind::Raw) {
+                    self.kind = BatchKind::Raw;
+                }
+            }
+            PrepareKind::Int8 => {
+                if !matches!(self.kind, BatchKind::Int8 { .. }) {
+                    *allocs += 1;
+                    self.kind =
+                        BatchKind::Int8 { q: Vec::new(), scales: Vec::new(), sums: Vec::new() };
+                }
+                if let BatchKind::Int8 { q, scales, sums } = &mut self.kind {
+                    ensure_len(q, n * k, allocs);
+                    ensure_len(scales, n, allocs);
+                    ensure_len(sums, n, allocs);
+                }
+            }
+            PrepareKind::Blocked { block_len } => {
+                if !matches!(&self.kind, BatchKind::Blocked { block_len: bl, .. } if *bl == block_len)
+                {
+                    *allocs += 1;
+                    self.kind = BatchKind::Blocked {
+                        q: Vec::new(),
+                        d: Vec::new(),
+                        bsums: Vec::new(),
+                        block_len,
+                    };
+                }
+                let nb = n * (k / block_len);
+                if let BatchKind::Blocked { q, d, bsums, .. } = &mut self.kind {
+                    ensure_len(q, n * k, allocs);
+                    ensure_len(d, nb, allocs);
+                    ensure_len(bsums, nb, allocs);
+                }
+            }
+            PrepareKind::LutI16 { groups } => {
+                let stride = groups * tl1::LUT_W;
+                if !matches!(self.kind, BatchKind::LutI16 { .. }) {
+                    *allocs += 1;
+                    self.kind = BatchKind::LutI16 {
+                        aq: Vec::new(),
+                        tables: Vec::new(),
+                        scales: Vec::new(),
+                        stride,
+                    };
+                }
+                if let BatchKind::LutI16 { aq, tables, scales, stride: s } = &mut self.kind {
+                    *s = stride;
+                    ensure_len(aq, scratch_rows * k, allocs);
+                    ensure_len(tables, n * stride, allocs);
+                    ensure_len(scales, n, allocs);
+                }
+            }
+            PrepareKind::LutI8 { groups, block_groups } => {
+                let stride = groups * tl1::LUT_W;
+                let sblocks = crate::util::ceil_div(groups, block_groups);
+                if !matches!(&self.kind, BatchKind::LutI8 { block_groups: bg, .. } if *bg == block_groups)
+                {
+                    *allocs += 1;
+                    self.kind = BatchKind::LutI8 {
+                        aq: Vec::new(),
+                        tmp16: Vec::new(),
+                        tables: Vec::new(),
+                        block_scales: Vec::new(),
+                        scales: Vec::new(),
+                        stride,
+                        sblocks,
+                        block_groups,
+                    };
+                }
+                if let BatchKind::LutI8 {
+                    aq,
+                    tmp16,
+                    tables,
+                    block_scales,
+                    scales,
+                    stride: st,
+                    sblocks: sb,
+                    ..
+                } = &mut self.kind
+                {
+                    *st = stride;
+                    *sb = sblocks;
+                    ensure_len(aq, scratch_rows * k, allocs);
+                    ensure_len(tmp16, scratch_rows * stride, allocs);
+                    ensure_len(tables, n * stride, allocs);
+                    ensure_len(block_scales, n * sblocks, allocs);
+                    ensure_len(scales, n, allocs);
+                }
+            }
+            PrepareKind::BitLut { groups, block_groups } => {
+                let stride = groups * tl1::LUT_W;
+                let sblocks = crate::util::ceil_div(groups, block_groups);
+                if !matches!(&self.kind, BatchKind::BitLut { block_groups: bg, .. } if *bg == block_groups)
+                {
+                    *allocs += 1;
+                    self.kind = BatchKind::BitLut {
+                        aq: Vec::new(),
+                        tmp16: Vec::new(),
+                        tables: Vec::new(),
+                        block_scales: Vec::new(),
+                        scales: Vec::new(),
+                        act_sums: Vec::new(),
+                        stride,
+                        sblocks,
+                        block_groups,
+                    };
+                }
+                if let BatchKind::BitLut {
+                    aq,
+                    tmp16,
+                    tables,
+                    block_scales,
+                    scales,
+                    act_sums,
+                    stride: st,
+                    sblocks: sb,
+                    ..
+                } = &mut self.kind
+                {
+                    *st = stride;
+                    *sb = sblocks;
+                    ensure_len(aq, scratch_rows * k, allocs);
+                    ensure_len(tmp16, scratch_rows * stride, allocs);
+                    ensure_len(tables, n * stride, allocs);
+                    ensure_len(block_scales, n * sblocks, allocs);
+                    ensure_len(scales, n, allocs);
+                    ensure_len(act_sums, n, allocs);
+                }
+            }
+        }
+    }
+
+    /// Borrowed view of prepared row `i`. `x` must be the activation
+    /// matrix the batch was built from (the Raw kind borrows its rows).
+    pub fn row<'p>(&'p self, i: usize, x: &'p [f32]) -> PreparedRow<'p> {
+        assert!(i < self.n, "row {i} out of {n}", n = self.n);
+        let k = self.k;
+        match &self.kind {
+            BatchKind::Empty => panic!("PreparedBatch::row before build"),
+            BatchKind::Raw => PreparedRow::Raw(&x[i * k..(i + 1) * k]),
+            BatchKind::Int8 { q, scales, sums } => PreparedRow::Int8 {
+                q: &q[i * k..(i + 1) * k],
+                scale: scales[i],
+                sum: sums[i],
+            },
+            BatchKind::Blocked { q, d, bsums, block_len } => {
+                let nb = k / block_len;
+                PreparedRow::Blocked {
+                    q: &q[i * k..(i + 1) * k],
+                    d: &d[i * nb..(i + 1) * nb],
+                    bsums: &bsums[i * nb..(i + 1) * nb],
+                    block_len: *block_len,
+                }
+            }
+            BatchKind::LutI16 { tables, scales, stride, .. } => PreparedRow::LutI16 {
+                tables: &tables[i * stride..(i + 1) * stride],
+                scale: scales[i],
+            },
+            BatchKind::LutI8 { tables, block_scales, scales, stride, sblocks, block_groups, .. } => {
+                PreparedRow::LutI8 {
+                    tables: &tables[i * stride..(i + 1) * stride],
+                    block_scales: &block_scales[i * sblocks..(i + 1) * sblocks],
+                    block_groups: *block_groups,
+                    scale: scales[i],
+                }
+            }
+            BatchKind::BitLut {
+                tables,
+                block_scales,
+                scales,
+                act_sums,
+                stride,
+                sblocks,
+                block_groups,
+                ..
+            } => PreparedRow::BitLut {
+                tables: &tables[i * stride..(i + 1) * stride],
+                block_scales: &block_scales[i * sblocks..(i + 1) * sblocks],
+                block_groups: *block_groups,
+                scale: scales[i],
+                act_sum: act_sums[i],
+            },
+        }
+    }
+}
+
+impl Default for PreparedBatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Prepare-cache counters (cumulative; snapshot via
+/// [`PreparedActivations::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrepareStats {
+    /// Requests served from an already-prepared batch (a projection
+    /// sharing its input with an earlier one, e.g. wk/wv after wq).
+    pub hits: u64,
+    /// Requests that ran preprocessing (once per input × kernel).
+    pub misses: u64,
+    /// Fresh buffer allocations across all builds (0 growth = steady
+    /// state is allocation-free).
+    pub buffer_allocs: u64,
+    /// Builds that fully reused existing buffer capacity.
+    pub buffer_reuses: u64,
+}
+
+struct ActSlot {
+    qtype: QuantType,
+    /// Generation the slot's batch was built for.
+    generation: u64,
+    built: bool,
+    batch: PreparedBatch,
+}
+
+/// Per-input cache of [`PreparedBatch`]es, keyed by [`QuantType`] —
+/// dispatch can pick different winners per role, so heterogeneous
+/// packings coexist. Call [`PreparedActivations::begin_input`] once per
+/// new layer input (e.g. the normed hidden state wq/wk/wv share), then
+/// [`PreparedActivations::get_or_prepare`] from every consuming
+/// projection: the first call prepares, the rest hit the cache. Slots
+/// (and their buffers) persist across inputs, so decode steady state
+/// performs zero heap allocations in the prepare path.
+pub struct PreparedActivations {
+    generation: u64,
+    slots: Vec<ActSlot>,
+    stats: PrepareStats,
+}
+
+impl PreparedActivations {
+    pub fn new() -> PreparedActivations {
+        PreparedActivations { generation: 0, slots: Vec::new(), stats: PrepareStats::default() }
+    }
+
+    /// Invalidate cached batches: the next `get_or_prepare` per kernel
+    /// re-prepares (into the same buffers). Call once per layer input.
+    pub fn begin_input(&mut self) {
+        self.generation += 1;
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> PrepareStats {
+        self.stats
+    }
+
+    /// The prepared batch for `kernel` over the current input `x`
+    /// (`n`×`k`), preparing it on first request since the last
+    /// [`PreparedActivations::begin_input`].
+    pub fn get_or_prepare(
+        &mut self,
+        kernel: &dyn Kernel,
+        x: &[f32],
+        k: usize,
+        n: usize,
+        pool: &ThreadPool,
+    ) -> &PreparedBatch {
+        let qtype = kernel.info().qtype;
+        let idx = match self.slots.iter().position(|s| s.qtype == qtype) {
+            Some(i) => i,
+            None => {
+                self.slots.push(ActSlot {
+                    qtype,
+                    generation: 0,
+                    built: false,
+                    batch: PreparedBatch::new(),
+                });
+                self.slots.len() - 1
+            }
+        };
+        let generation = self.generation;
+        let slot = &mut self.slots[idx];
+        if slot.built && slot.generation == generation && slot.batch.k() == k && slot.batch.n() == n
+        {
+            self.stats.hits += 1;
+        } else {
+            let allocs = slot.batch.build(kernel, x, k, n, pool);
+            slot.generation = generation;
+            slot.built = true;
+            self.stats.misses += 1;
+            if allocs == 0 {
+                self.stats.buffer_reuses += 1;
+            } else {
+                self.stats.buffer_allocs += allocs;
+            }
+        }
+        &self.slots[idx].batch
+    }
+}
+
+impl Default for PreparedActivations {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Accumulation over an already-prepared batch: one 2-D tiled fork/join
+/// over (activation-row chunks × weight-row chunks), so an n-row matmul
+/// pays a single barrier instead of n. `x` must be the activation matrix
+/// the batch was built from.
+pub fn matmul_prepared(
+    kernel: &dyn Kernel,
+    t: &QTensor,
+    batch: &PreparedBatch,
+    x: &[f32],
+    n: usize,
+    out: &mut [f32],
+    pool: &ThreadPool,
+) {
+    assert_eq!(batch.n(), n, "batch rows");
+    assert_eq!(batch.k(), t.k, "batch K");
+    assert_eq!(batch.qtype(), kernel.info().qtype, "batch kernel");
+    assert_eq!(x.len(), n * t.k);
+    assert_eq!(out.len(), n * t.m);
+    let m = t.m;
+    if n == 0 || m == 0 {
+        return;
+    }
+    // Tile the (n × m) output: ~4 tiles per thread for load balance, with
+    // activation-row tiles first (better weight reuse within a tile).
+    let target = (pool.size() * 4).max(1);
+    let a_tiles = n.min(target);
+    let w_tiles = crate::util::ceil_div(target, a_tiles).min(m).max(1);
+    let rows_per_a = crate::util::ceil_div(n, a_tiles);
+    let rows_per_w = crate::util::ceil_div(m, w_tiles);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    pool.parallel_for(a_tiles * w_tiles, |c| {
+        // Capture the whole wrapper (edition-2021 closures would
+        // otherwise capture the raw-pointer field, which is !Sync).
+        let out_ptr = &out_ptr;
+        let ai = c / w_tiles;
+        let wi = c % w_tiles;
+        let a_lo = ai * rows_per_a;
+        let w_lo = wi * rows_per_w;
+        if a_lo >= n || w_lo >= m {
+            return;
+        }
+        let a_hi = ((ai + 1) * rows_per_a).min(n);
+        let w_hi = ((wi + 1) * rows_per_w).min(m);
+        for i in a_lo..a_hi {
+            let row = batch.row(i, x);
+            // SAFETY: tiles write disjoint ranges of out.
+            let slice = unsafe {
+                std::slice::from_raw_parts_mut(out_ptr.0.add(i * m + w_lo), w_hi - w_lo)
+            };
+            kernel.gemv_rows(t, row, slice, w_lo..w_hi);
+        }
+    });
+}
+
 /// Multi-row, multi-threaded matmul: `out[(n, m)] = X[(n, k)] · Wᵀ`.
-/// Preprocessing runs once per activation row; accumulation is chunked
-/// over weight rows across the pool (llama.cpp parallelizes the same way).
+/// Convenience wrapper that builds a fresh [`PreparedBatch`] and runs
+/// [`matmul_prepared`]; callers with an input shared across projections
+/// (or a steady-state loop) should hold a [`PreparedActivations`] and
+/// call the two phases explicitly to amortize preprocessing.
 pub fn matmul(
     kernel: &dyn Kernel,
     t: &QTensor,
@@ -244,28 +1119,9 @@ pub fn matmul(
 ) {
     assert_eq!(x.len(), n * t.k);
     assert_eq!(out.len(), n * t.m);
-    let m = t.m;
-    // Row chunking: aim for ~4 chunks per thread for load balance.
-    let chunks = (pool.size() * 4).min(m.max(1));
-    let rows_per = crate::util::ceil_div(m, chunks);
-    for i in 0..n {
-        let p = kernel.prepare(&x[i * t.k..(i + 1) * t.k], t.k);
-        let out_row = &mut out[i * m..(i + 1) * m];
-        // SAFETY: chunks write disjoint ranges of out_row.
-        let out_ptr = SendPtr(out_row.as_mut_ptr());
-        pool.parallel_for(chunks, |c| {
-            // Capture the whole wrapper (edition-2021 closures would
-            // otherwise capture the raw-pointer field, which is !Sync).
-            let out_ptr = &out_ptr;
-            let lo = c * rows_per;
-            if lo >= m {
-                return;
-            }
-            let hi = ((c + 1) * rows_per).min(m);
-            let slice = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(lo), hi - lo) };
-            kernel.gemv_rows(t, &p, slice, lo..hi);
-        });
-    }
+    let mut batch = PreparedBatch::new();
+    batch.build(kernel, x, t.k, n, pool);
+    matmul_prepared(kernel, t, &batch, x, n, out, pool);
 }
 
 /// Pointer wrapper to move a raw pointer into the pool closure.
@@ -273,6 +1129,12 @@ pub fn matmul(
 struct SendPtr(*mut f32);
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
+
+/// Typed variant of [`SendPtr`] for the batch-build buffers.
+#[derive(Clone, Copy)]
+struct SendMut<T>(*mut T);
+unsafe impl<T> Send for SendMut<T> {}
+unsafe impl<T> Sync for SendMut<T> {}
 
 #[cfg(test)]
 mod tests {
@@ -383,7 +1245,8 @@ mod tests {
         }
     }
 
-    /// matmul (threaded) must equal gemv row-by-row (serial).
+    /// matmul (threaded, batched prepare) must equal gemv row-by-row
+    /// (serial, per-row prepare).
     #[test]
     fn threaded_matmul_matches_serial() {
         let (m, k, n) = (48, 256, 3);
@@ -406,6 +1269,46 @@ mod tests {
                 assert_eq!(&out_par[i * m..(i + 1) * m], &out_ser[..], "{qt:?} row {i}");
             }
         }
+    }
+
+    /// The prepare cache shares one batch across consumers of the same
+    /// input and invalidates on `begin_input`.
+    #[test]
+    fn prepared_activations_cache_hits_and_invalidates() {
+        let (m, k, n) = (16, 256, 2);
+        let t = random_ternary(m, k, 15);
+        let kern = kernel_for(QuantType::Tl21);
+        let packed = kern.quantize(&t);
+        let pool = ThreadPool::new(2);
+        let mut rng = Rng::new(16);
+        let x: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+        let mut acts = PreparedActivations::new();
+        acts.begin_input();
+        let mut out_a = vec![0f32; n * m];
+        {
+            let batch = acts.get_or_prepare(kern, &x, k, n, &pool);
+            matmul_prepared(kern, &packed, batch, &x, n, &mut out_a, &pool);
+        }
+        let mut out_b = vec![0f32; n * m];
+        {
+            let batch = acts.get_or_prepare(kern, &x, k, n, &pool);
+            matmul_prepared(kern, &packed, batch, &x, n, &mut out_b, &pool);
+        }
+        assert_eq!(out_a, out_b);
+        assert_eq!(acts.stats().misses, 1, "one prepare per input");
+        assert_eq!(acts.stats().hits, 1, "second consumer hits");
+        // A new input invalidates; the rebuild reuses the buffers.
+        acts.begin_input();
+        let x2: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+        {
+            let batch = acts.get_or_prepare(kern, &x2, k, n, &pool);
+            matmul_prepared(kern, &packed, batch, &x2, n, &mut out_b, &pool);
+        }
+        assert_eq!(acts.stats().misses, 2);
+        assert_eq!(acts.stats().buffer_reuses, 1, "steady-state rebuild is allocation-free");
+        let mut out_ref = vec![0f32; n * m];
+        matmul(kern, &packed, &x2, n, &mut out_ref, &pool);
+        assert_eq!(out_b, out_ref);
     }
 
     #[test]

@@ -74,18 +74,26 @@ pub struct ActInt8 {
 /// round-to-nearest; we use Rust `round` = half-away-from-zero and mirror
 /// the same function on the Python side so the two stacks agree bit-for-bit).
 pub fn quantize_act_int8(x: &[f32]) -> ActInt8 {
+    let mut q = vec![0i8; x.len()];
+    let (scale, sum) = quantize_act_int8_into(x, &mut q);
+    ActInt8 { q, scale, sum }
+}
+
+/// Allocation-free [`quantize_act_int8`]: writes the quants into the
+/// caller-owned `q` (same length as `x`) and returns `(scale, Σq)` —
+/// bit-identical math to the allocating form (the lossless kernels
+/// depend on it).
+pub fn quantize_act_int8_into(x: &[f32], q: &mut [i8]) -> (f32, i32) {
+    assert_eq!(q.len(), x.len());
     let max_abs = x.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-5);
     let scale = 127.0 / max_abs;
     let mut sum = 0i32;
-    let q: Vec<i8> = x
-        .iter()
-        .map(|&v| {
-            let qv = (v * scale).round().clamp(-127.0, 127.0) as i8;
-            sum += qv as i32;
-            qv
-        })
-        .collect();
-    ActInt8 { q, scale, sum }
+    for (qv, &v) in q.iter_mut().zip(x.iter()) {
+        let t = (v * scale).round().clamp(-127.0, 127.0) as i8;
+        *qv = t;
+        sum += t as i32;
+    }
+    (scale, sum)
 }
 
 /// llama.cpp-style per-block int8 activations. Block length 256 (`Q8_K`)
@@ -103,16 +111,38 @@ pub struct ActBlocked {
 /// Quantize activations into per-block int8 with the given block length.
 /// `x.len()` must be a multiple of `block_len`.
 pub fn quantize_act_blocked(x: &[f32], block_len: usize) -> ActBlocked {
-    assert!(block_len > 0 && x.len() % block_len == 0, "len {} % block {}", x.len(), block_len);
-    let n_blocks = x.len() / block_len;
+    let n_blocks = x.len() / block_len.max(1);
     let mut q = vec![0i8; x.len()];
     let mut d = vec![0f32; n_blocks];
     let mut bsums = vec![0i32; n_blocks];
+    quantize_act_blocked_into(x, block_len, &mut q, &mut d, &mut bsums);
+    ActBlocked { q, d, bsums, block_len }
+}
+
+/// Allocation-free [`quantize_act_blocked`]: writes into caller-owned
+/// buffers (which may hold stale data from a previous batch — every slot
+/// is overwritten, including all-zero blocks).
+pub fn quantize_act_blocked_into(
+    x: &[f32],
+    block_len: usize,
+    q: &mut [i8],
+    d: &mut [f32],
+    bsums: &mut [i32],
+) {
+    assert!(block_len > 0 && x.len() % block_len == 0, "len {} % block {}", x.len(), block_len);
+    let n_blocks = x.len() / block_len;
+    assert_eq!(q.len(), x.len());
+    assert_eq!(d.len(), n_blocks);
+    assert_eq!(bsums.len(), n_blocks);
     for b in 0..n_blocks {
         let xs = &x[b * block_len..(b + 1) * block_len];
         let max_abs = xs.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
         if max_abs == 0.0 {
-            continue; // all-zero block: d stays 0, q stays 0
+            // All-zero block: clear explicitly (the buffer is reused).
+            d[b] = 0.0;
+            bsums[b] = 0;
+            q[b * block_len..(b + 1) * block_len].fill(0);
+            continue;
         }
         // Round-trip the scale through f16, as llama.cpp stores block scales
         // in f16 — part of why the blocked path is not lossless.
@@ -127,7 +157,6 @@ pub fn quantize_act_blocked(x: &[f32], block_len: usize) -> ActBlocked {
         }
         bsums[b] = sum;
     }
-    ActBlocked { q, d, bsums, block_len }
 }
 
 /// The integer-exact "training scheme" reference result for one GEMV row:

@@ -15,8 +15,10 @@
 //!   bit-identical to the BitNet b1.58 training computation.
 
 use super::lut::{decode_code, requantize_lut_block};
-use super::quant::{quantize_act_int8, ActInt8, TernaryWeights};
-use super::{Kernel, KernelClass, KernelInfo, Prepared, QTensor, QuantType};
+use super::quant::{quantize_act_int8_into, TernaryWeights};
+use super::{
+    Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
+};
 
 /// Table entries per group (9 used, padded to 16 = one 128-bit SIMD
 /// register of int8, the `vpshufb`/`vqtbl1q_u8` width).
@@ -49,9 +51,19 @@ pub fn pack_row_tl1(row: &[i8], out: &mut [u8]) {
 /// Build the int16 pair-sum tables for a quantized activation vector:
 /// `tables[g*16 + c] = aq[2g]·w0(c) + aq[2g+1]·w1(c)`.
 pub fn build_tables_tl1(aq: &[i8]) -> Vec<i16> {
+    let mut tables = vec![0i16; (aq.len() / 2) * LUT_W];
+    build_tables_tl1_into(aq, &mut tables);
+    tables
+}
+
+/// Allocation-free [`build_tables_tl1`]: fills the caller-owned table
+/// buffer (`(aq.len()/2) * LUT_W` entries), zeroing the padding slots so
+/// requantization over reused buffers stays deterministic.
+pub fn build_tables_tl1_into(aq: &[i8], tables: &mut [i16]) {
     debug_assert_eq!(aq.len() % 2, 0);
     let groups = aq.len() / 2;
-    let mut tables = vec![0i16; groups * LUT_W];
+    debug_assert_eq!(tables.len(), groups * LUT_W);
+    tables.fill(0);
     for g in 0..groups {
         let a0 = aq[2 * g] as i16;
         let a1 = aq[2 * g + 1] as i16;
@@ -65,7 +77,6 @@ pub fn build_tables_tl1(aq: &[i8]) -> Vec<i16> {
             }
         }
     }
-    tables
 }
 
 /// Requantize i16 tables to i8 per block of `block_groups` groups.
@@ -75,27 +86,26 @@ pub fn requantize_tables(
 ) -> (Vec<i8>, Vec<f32>) {
     let per_block = block_groups * LUT_W;
     let mut out = vec![0i8; tables.len()];
-    let mut scales = Vec::with_capacity(crate::util::ceil_div(tables.len(), per_block));
-    for (src, dst) in tables.chunks(per_block).zip(out.chunks_mut(per_block)) {
-        scales.push(requantize_lut_block(src, dst));
-    }
+    let mut scales = vec![0f32; crate::util::ceil_div(tables.len(), per_block)];
+    requantize_tables_into(tables, block_groups, &mut out, &mut scales);
     (out, scales)
 }
 
-impl<const LOSSLESS: bool> Tl1Kernel<LOSSLESS> {
-    fn prepare_act(&self, act: ActInt8) -> Prepared {
-        let tables = build_tables_tl1(&act.q);
-        if LOSSLESS {
-            Prepared::LutI16 { tables, scale: act.scale }
-        } else {
-            let (t8, scales) = requantize_tables(&tables, LUT_BLOCK_GROUPS);
-            Prepared::LutI8 {
-                tables: t8,
-                block_scales: scales,
-                block_groups: LUT_BLOCK_GROUPS,
-                scale: act.scale,
-            }
-        }
+/// Allocation-free [`requantize_tables`]: `out` matches `tables`,
+/// `scales` holds one entry per block of `block_groups` groups.
+pub fn requantize_tables_into(
+    tables: &[i16],
+    block_groups: usize,
+    out: &mut [i8],
+    scales: &mut [f32],
+) {
+    let per_block = block_groups * LUT_W;
+    debug_assert_eq!(out.len(), tables.len());
+    debug_assert_eq!(scales.len(), crate::util::ceil_div(tables.len(), per_block));
+    for ((src, dst), s) in
+        tables.chunks(per_block).zip(out.chunks_mut(per_block)).zip(scales.iter_mut())
+    {
+        *s = requantize_lut_block(src, dst);
     }
 }
 
@@ -146,26 +156,48 @@ impl<const LOSSLESS: bool> Kernel for Tl1Kernel<LOSSLESS> {
         out
     }
 
-    fn prepare(&self, x: &[f32], k: usize) -> Prepared {
-        assert_eq!(x.len(), k);
-        self.prepare_act(quantize_act_int8(x))
+    fn prepare_kind(&self, k: usize) -> PrepareKind {
+        let groups = k / 2;
+        if LOSSLESS {
+            PrepareKind::LutI16 { groups }
+        } else {
+            PrepareKind::LutI8 { groups, block_groups: LUT_BLOCK_GROUPS }
+        }
     }
 
-    fn gemv_rows(&self, t: &QTensor, p: &Prepared, out: &mut [f32], rows: std::ops::Range<usize>) {
+    fn prepare_row_into(&self, x: &[f32], k: usize, dst: PreparedRowMut<'_>) {
+        debug_assert_eq!(x.len(), k);
+        match dst {
+            PreparedRowMut::LutI16 { aq, tables, scale } => {
+                let (s, _) = quantize_act_int8_into(x, aq);
+                build_tables_tl1_into(aq, tables);
+                *scale = s;
+            }
+            PreparedRowMut::LutI8 { aq, tmp16, tables, block_scales, scale } => {
+                let (s, _) = quantize_act_int8_into(x, aq);
+                build_tables_tl1_into(aq, tmp16);
+                requantize_tables_into(tmp16, LUT_BLOCK_GROUPS, tables, block_scales);
+                *scale = s;
+            }
+            _ => panic!("TL1 expects a LUT destination"),
+        }
+    }
+
+    fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
         let row_bytes = t.k / 4;
         match p {
-            Prepared::LutI16 { tables, scale } => {
+            PreparedRow::LutI16 { tables, scale } => {
                 let combined = t.scale / scale;
                 for (o, r) in out.iter_mut().zip(rows) {
                     let wrow = &t.data[r * row_bytes..(r + 1) * row_bytes];
                     *o = gemv_row_lut16(wrow, tables) as f32 * combined;
                 }
             }
-            Prepared::LutI8 { tables, block_scales, block_groups, scale } => {
+            PreparedRow::LutI8 { tables, block_scales, block_groups, scale } => {
                 let combined = t.scale / scale;
                 for (o, r) in out.iter_mut().zip(rows) {
                     let wrow = &t.data[r * row_bytes..(r + 1) * row_bytes];
-                    *o = gemv_row_lut8(wrow, tables, block_scales, *block_groups) * combined;
+                    *o = gemv_row_lut8(wrow, tables, block_scales, block_groups) * combined;
                 }
             }
             _ => panic!("TL1 expects a LUT-prepared activation"),
@@ -220,7 +252,7 @@ pub fn gemv_row_lut8(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernels::quant::training_scheme_ref_row;
+    use crate::kernels::quant::{quantize_act_int8, training_scheme_ref_row};
     use crate::util::Rng;
 
     fn random_ternary(m: usize, k: usize, seed: u64) -> TernaryWeights {

@@ -17,9 +17,13 @@
 //! (int16 tables via pack-and-unpack, lossless).
 
 use super::lut::{decode_code, mirror_join, mirror_split};
-use super::quant::{quantize_act_int8, ActInt8, TernaryWeights};
-use super::tl1::{build_tables_tl1, pack_row_tl1, requantize_tables, LUT_BLOCK_GROUPS, LUT_W};
-use super::{Kernel, KernelClass, KernelInfo, Prepared, QTensor, QuantType};
+use super::quant::{quantize_act_int8_into, TernaryWeights};
+use super::tl1::{
+    build_tables_tl1_into, pack_row_tl1, requantize_tables_into, LUT_BLOCK_GROUPS, LUT_W,
+};
+use super::{
+    Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
+};
 
 const TERNARY: [i8; 3] = [-1, 0, 1];
 
@@ -101,8 +105,17 @@ pub fn pack_row_tl2(row: &[i8], layout: &Tl2Layout, out: &mut [u8]) {
 /// tables for the tail. The concatenation keeps every group at 16 entries
 /// so the `_0` requantization blocks stay uniform.
 pub fn build_tables_tl2(aq: &[i8], layout: &Tl2Layout) -> Vec<i16> {
+    let mut tables = vec![0i16; (layout.n3() + layout.n2()) * LUT_W];
+    build_tables_tl2_into(aq, layout, &mut tables);
+    tables
+}
+
+/// Allocation-free [`build_tables_tl2`]: fills the caller-owned table
+/// buffer (`(n3 + n2) * LUT_W` entries), zeroing the padding slots.
+pub fn build_tables_tl2_into(aq: &[i8], layout: &Tl2Layout, tables: &mut [i16]) {
     let n3 = layout.n3();
-    let mut tables = vec![0i16; (n3 + layout.n2()) * LUT_W];
+    debug_assert_eq!(tables.len(), (n3 + layout.n2()) * LUT_W);
+    tables.fill(0);
     for g in 0..n3 {
         let a0 = aq[3 * g] as i16;
         let a1 = aq[3 * g + 1] as i16;
@@ -115,10 +128,8 @@ pub fn build_tables_tl2(aq: &[i8], layout: &Tl2Layout) -> Vec<i16> {
         }
     }
     if layout.two_k > 0 {
-        let tail = build_tables_tl1(&aq[layout.three_k..]);
-        tables[n3 * LUT_W..].copy_from_slice(&tail);
+        build_tables_tl1_into(&aq[layout.three_k..], &mut tables[n3 * LUT_W..]);
     }
-    tables
 }
 
 /// TL2 kernel; `LOSSLESS = false` → TL2_0, `true` → TL2_1.
@@ -182,40 +193,51 @@ impl<const LOSSLESS: bool> Kernel for Tl2Kernel<LOSSLESS> {
         out
     }
 
-    fn prepare(&self, x: &[f32], k: usize) -> Prepared {
-        assert_eq!(x.len(), k);
-        let act: ActInt8 = quantize_act_int8(x);
+    fn prepare_kind(&self, k: usize) -> PrepareKind {
         let layout = Tl2Layout::new(k);
-        let tables = build_tables_tl2(&act.q, &layout);
+        let groups = layout.n3() + layout.n2();
         if LOSSLESS {
-            Prepared::LutI16 { tables, scale: act.scale }
+            PrepareKind::LutI16 { groups }
         } else {
-            let (t8, scales) = requantize_tables(&tables, LUT_BLOCK_GROUPS);
-            Prepared::LutI8 {
-                tables: t8,
-                block_scales: scales,
-                block_groups: LUT_BLOCK_GROUPS,
-                scale: act.scale,
-            }
+            PrepareKind::LutI8 { groups, block_groups: LUT_BLOCK_GROUPS }
         }
     }
 
-    fn gemv_rows(&self, t: &QTensor, p: &Prepared, out: &mut [f32], rows: std::ops::Range<usize>) {
+    fn prepare_row_into(&self, x: &[f32], k: usize, dst: PreparedRowMut<'_>) {
+        debug_assert_eq!(x.len(), k);
+        let layout = Tl2Layout::new(k);
+        match dst {
+            PreparedRowMut::LutI16 { aq, tables, scale } => {
+                let (s, _) = quantize_act_int8_into(x, aq);
+                build_tables_tl2_into(aq, &layout, tables);
+                *scale = s;
+            }
+            PreparedRowMut::LutI8 { aq, tmp16, tables, block_scales, scale } => {
+                let (s, _) = quantize_act_int8_into(x, aq);
+                build_tables_tl2_into(aq, &layout, tmp16);
+                requantize_tables_into(tmp16, LUT_BLOCK_GROUPS, tables, block_scales);
+                *scale = s;
+            }
+            _ => panic!("TL2 expects a LUT destination"),
+        }
+    }
+
+    fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
         let layout = Tl2Layout::new(t.k);
         let row_bytes = layout.row_bytes();
         match p {
-            Prepared::LutI16 { tables, scale } => {
+            PreparedRow::LutI16 { tables, scale } => {
                 let combined = t.scale / scale;
                 for (o, r) in out.iter_mut().zip(rows) {
                     let row = &t.data[r * row_bytes..(r + 1) * row_bytes];
                     *o = gemv_row_tl2_i16(row, &layout, tables) as f32 * combined;
                 }
             }
-            Prepared::LutI8 { tables, block_scales, block_groups, scale } => {
+            PreparedRow::LutI8 { tables, block_scales, block_groups, scale } => {
                 let combined = t.scale / scale;
                 for (o, r) in out.iter_mut().zip(rows) {
                     let row = &t.data[r * row_bytes..(r + 1) * row_bytes];
-                    *o = gemv_row_tl2_i8(row, &layout, tables, block_scales, *block_groups)
+                    *o = gemv_row_tl2_i8(row, &layout, tables, block_scales, block_groups)
                         * combined;
                 }
             }
@@ -331,7 +353,7 @@ pub fn gemv_row_tl2_i8(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernels::quant::training_scheme_ref_row;
+    use crate::kernels::quant::{quantize_act_int8, training_scheme_ref_row};
     use crate::util::Rng;
 
     fn random_ternary(m: usize, k: usize, seed: u64) -> TernaryWeights {

@@ -225,6 +225,16 @@ fn cmd_run(args: &Args) -> Result<()> {
         decode_time.as_secs_f64() * 1e3,
         max_new as f64 / decode_time.as_secs_f64()
     );
+    if args.has_flag("verbose") {
+        // Prepare-once observability: one miss per layer input × kernel,
+        // hits for every projection that shared it (wk/wv, up); buffer
+        // allocs must flatline once shapes are warm.
+        let ps = model.prepare_stats();
+        eprintln!(
+            "prepare cache: {} hits / {} misses | buffers: {} reused, {} alloc'd",
+            ps.hits, ps.misses, ps.buffer_reuses, ps.buffer_allocs
+        );
+    }
     Ok(())
 }
 

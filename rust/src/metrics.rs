@@ -98,6 +98,19 @@ pub struct EngineMetrics {
     /// (alternate budget / K alignment) and degraded to the primary —
     /// nonzero means a tuned winner is not actually live.
     pub dispatch_degraded: AtomicU64,
+    /// Prepare-once cache: projections that reused an input's prepared
+    /// batch instead of re-running preprocessing (wk/wv after wq, up
+    /// after gate). High hit counts = amortization is working.
+    pub prepare_cache_hits: AtomicU64,
+    /// Prepare-once cache: preprocessing runs (one per layer input ×
+    /// kernel, not one per projection).
+    pub prepare_cache_misses: AtomicU64,
+    /// Fresh prepare-buffer allocations. This stops growing once shapes
+    /// are warm — steady-state decode is allocation-free in the prepare
+    /// path.
+    pub prepare_buffer_allocs: AtomicU64,
+    /// Prepare builds that fully reused existing buffer capacity.
+    pub prepare_buffer_reuses: AtomicU64,
     pub step_latency: LatencyHistogram,
     pub ttft: LatencyHistogram,
 }
@@ -119,7 +132,7 @@ impl EngineMetrics {
     /// Human-readable one-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "req {}/{} done, {} rejected | tokens {}+{} | steps {} (mean batch {:.2}, peak {}) | step mean {:.1}µs p99 {}µs | ttft mean {:.1}µs | dispatch fallbacks {} degraded {}",
+            "req {}/{} done, {} rejected | tokens {}+{} | steps {} (mean batch {:.2}, peak {}) | step mean {:.1}µs p99 {}µs | ttft mean {:.1}µs | dispatch fallbacks {} degraded {} | prepare {} hits / {} misses (buffers {} reused, {} alloc'd)",
             self.requests_completed.load(Ordering::Relaxed),
             self.requests_submitted.load(Ordering::Relaxed),
             self.requests_rejected.load(Ordering::Relaxed),
@@ -133,6 +146,10 @@ impl EngineMetrics {
             self.ttft.mean_us(),
             self.dispatch_fallbacks.load(Ordering::Relaxed),
             self.dispatch_degraded.load(Ordering::Relaxed),
+            self.prepare_cache_hits.load(Ordering::Relaxed),
+            self.prepare_cache_misses.load(Ordering::Relaxed),
+            self.prepare_buffer_reuses.load(Ordering::Relaxed),
+            self.prepare_buffer_allocs.load(Ordering::Relaxed),
         )
     }
 }

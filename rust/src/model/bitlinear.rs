@@ -17,7 +17,9 @@
 
 use crate::kernels::quant::TernaryWeights;
 use crate::kernels::tuner::{DispatchPlan, Role};
-use crate::kernels::{kernel_for, matmul, Dispatch, Kernel, QTensor, QuantType};
+use crate::kernels::{
+    kernel_for, matmul, matmul_prepared, Dispatch, Kernel, PreparedActivations, QTensor, QuantType,
+};
 use crate::threadpool::ThreadPool;
 use std::sync::{Arc, RwLock};
 
@@ -212,6 +214,40 @@ impl BitLinear {
         ran
     }
 
+    /// Plan-routed batched forward through a shared [`PreparedActivations`]
+    /// cache — the prepare-once hot path. The first projection consuming a
+    /// given layer input prepares it for its resolved kernel; subsequent
+    /// projections sharing the input (wq/wk/wv, gate/up) reuse the batch
+    /// and pay only accumulation. Returns the kernel that actually ran.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_batch_cached(
+        &self,
+        plan: &DispatchPlan,
+        layer: usize,
+        role: Role,
+        x: &[f32],
+        n: usize,
+        out: &mut [f32],
+        pool: &ThreadPool,
+        acts: &mut PreparedActivations,
+    ) -> QuantType {
+        debug_assert_eq!(x.len(), n * self.k);
+        debug_assert_eq!(out.len(), n * self.m);
+        let want = plan.select(layer, role, self.m, self.k, n);
+        let alt = self.alternate_for(want);
+        let (kernel, tensor): (&'static dyn Kernel, &QTensor) = match alt.as_deref() {
+            Some(t) => (kernel_for(t.qtype), t),
+            None => (self.kernel, &self.qtensor),
+        };
+        let ran = tensor.qtype;
+        if ran != want {
+            plan.note_degraded(self.m, self.k, n, want, ran);
+        }
+        let batch = acts.get_or_prepare(kernel, x, self.k, n, pool);
+        matmul_prepared(kernel, tensor, batch, x, n, out, pool);
+        ran
+    }
+
     /// Resident packed weight bytes: the primary plus every materialized
     /// alternate — the bounded memory cost of multi-packing.
     pub fn weight_bytes(&self) -> usize {
@@ -353,5 +389,31 @@ mod tests {
     fn rejects_misaligned_k() {
         let w = random_ternary(4, 100, 5);
         BitLinear::new(&w, QuantType::I2S);
+    }
+
+    #[test]
+    fn cached_forward_matches_planned_forward() {
+        let (m, k, n) = (16, 256, 3);
+        let w = random_ternary(m, k, 20);
+        let layer = BitLinear::new(&w, QuantType::Tl21);
+        let plan = DispatchPlan::new(Dispatch::Fixed(QuantType::Tl21));
+        let pool = ThreadPool::new(2);
+        let mut rng = Rng::new(21);
+        let x: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+        let mut out_plan = vec![0f32; n * m];
+        layer.forward_batch_planned(&plan, 0, Role::Qkv, &x, n, &mut out_plan, &pool);
+        let mut acts = PreparedActivations::new();
+        acts.begin_input();
+        let mut out_cached = vec![0f32; n * m];
+        let ran = layer
+            .forward_batch_cached(&plan, 0, Role::Qkv, &x, n, &mut out_cached, &pool, &mut acts);
+        assert_eq!(ran, QuantType::Tl21);
+        assert_eq!(out_plan, out_cached);
+        // A second projection consuming the same input hits the cache and
+        // produces identical output.
+        let mut out2 = vec![0f32; n * m];
+        layer.forward_batch_cached(&plan, 0, Role::Qkv, &x, n, &mut out2, &pool, &mut acts);
+        assert_eq!((acts.stats().misses, acts.stats().hits), (1, 1));
+        assert_eq!(out2, out_cached);
     }
 }

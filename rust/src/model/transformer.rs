@@ -16,9 +16,10 @@ use super::ops::{rmsnorm, rope, softmax, swiglu};
 use super::weights::Checkpoint;
 use crate::kernels::baselines::f16_mad::dot_f16;
 use crate::kernels::tuner::{DispatchPlan, Role};
-use crate::kernels::{kernel_for, Dispatch, QuantType};
+use crate::kernels::{kernel_for, Dispatch, PrepareStats, PreparedActivations, QuantType};
 use crate::threadpool::ThreadPool;
 use crate::util::f32_to_f16;
+use std::sync::Mutex;
 
 /// High-precision (f16-stored) dense layer for the LM head.
 pub struct DenseF16 {
@@ -135,6 +136,11 @@ pub struct Transformer {
     pub final_norm: Vec<f32>,
     pub lm_head: DenseF16,
     pub pool: ThreadPool,
+    /// Persistent prepare-once workspace: per-input activation batches
+    /// shared across the projections consuming each layer input (wq/wk/wv
+    /// share one, gate/up share one), with buffers recycled across calls
+    /// so steady-state decode allocates nothing in the prepare path.
+    prepare_ws: Mutex<PreparedActivations>,
 }
 
 impl Transformer {
@@ -216,7 +222,15 @@ impl Transformer {
             plan,
             cfg,
             pool: ThreadPool::new(n_threads.max(1)),
+            prepare_ws: Mutex::new(PreparedActivations::new()),
         }
+    }
+
+    /// Prepare-cache counter snapshot (hits/misses/buffer reuse) — the
+    /// observability behind the "prepare runs once per role-group" and
+    /// "steady-state decode is allocation-free" guarantees.
+    pub fn prepare_stats(&self) -> PrepareStats {
+        self.prepare_ws.lock().unwrap().stats()
     }
 
     /// Synthetic model shortcut (tests, examples, benches).
@@ -432,10 +446,20 @@ impl Transformer {
         // per call with the effective batch width (prefill chunk length
         // or decode batch), so one layer can run different kernels across
         // phases (paper §3: TL1/TL2 for compute-bound prefill, I2_S for
-        // memory-bound decode).
-        layer.wq.forward_batch_planned(&self.plan, li, Role::Qkv, &normed, n, &mut q, &self.pool);
-        layer.wk.forward_batch_planned(&self.plan, li, Role::Qkv, &normed, n, &mut k, &self.pool);
-        layer.wv.forward_batch_planned(&self.plan, li, Role::Qkv, &normed, n, &mut v, &self.pool);
+        // memory-bound decode). Projections sharing an input also share
+        // its preprocessing through the prepare-once workspace: wq/wk/wv
+        // consume one prepared batch, gate/up another (Algorithms 1–2
+        // preprocessing runs once per role-group, not per projection).
+        // The workspace lock is scoped to each projection group so the
+        // attention/FFN compute between them never sits inside the
+        // critical section (concurrent forward passes stay parallel).
+        {
+            let mut acts = self.prepare_ws.lock().unwrap();
+            acts.begin_input();
+            layer.wq.forward_batch_cached(&self.plan, li, Role::Qkv, &normed, n, &mut q, &self.pool, &mut acts);
+            layer.wk.forward_batch_cached(&self.plan, li, Role::Qkv, &normed, n, &mut k, &self.pool, &mut acts);
+            layer.wv.forward_batch_cached(&self.plan, li, Role::Qkv, &normed, n, &mut v, &self.pool, &mut acts);
+        }
         for i in 0..n {
             rope(&mut q[i * h..(i + 1) * h], cfg.n_heads, hd, positions[i], cfg.rope_theta);
             rope(&mut k[i * kvd..(i + 1) * kvd], cfg.n_kv_heads, hd, positions[i], cfg.rope_theta);
@@ -469,7 +493,11 @@ impl Transformer {
             }
         }
         let mut proj = vec![0f32; n * h];
-        layer.wo.forward_batch_planned(&self.plan, li, Role::O, &attn_out, n, &mut proj, &self.pool);
+        {
+            let mut acts = self.prepare_ws.lock().unwrap();
+            acts.begin_input();
+            layer.wo.forward_batch_cached(&self.plan, li, Role::O, &attn_out, n, &mut proj, &self.pool, &mut acts);
+        }
         for (x, p) in xs.iter_mut().zip(proj.iter()) {
             *x += p;
         }
@@ -481,12 +509,20 @@ impl Transformer {
         let f = cfg.ffn;
         let mut gate = vec![0f32; n * f];
         let mut up = vec![0f32; n * f];
-        layer.w_gate.forward_batch_planned(&self.plan, li, Role::Gate, &normed, n, &mut gate, &self.pool);
-        layer.w_up.forward_batch_planned(&self.plan, li, Role::Up, &normed, n, &mut up, &self.pool);
+        {
+            let mut acts = self.prepare_ws.lock().unwrap();
+            acts.begin_input();
+            layer.w_gate.forward_batch_cached(&self.plan, li, Role::Gate, &normed, n, &mut gate, &self.pool, &mut acts);
+            layer.w_up.forward_batch_cached(&self.plan, li, Role::Up, &normed, n, &mut up, &self.pool, &mut acts);
+        }
         let mut act = vec![0f32; n * f];
         swiglu(&gate, &up, &mut act);
         let mut down = vec![0f32; n * h];
-        layer.w_down.forward_batch_planned(&self.plan, li, Role::Down, &act, n, &mut down, &self.pool);
+        {
+            let mut acts = self.prepare_ws.lock().unwrap();
+            acts.begin_input();
+            layer.w_down.forward_batch_cached(&self.plan, li, Role::Down, &act, n, &mut down, &self.pool, &mut acts);
+        }
         for (x, d) in xs.iter_mut().zip(down.iter()) {
             *x += d;
         }

@@ -1,0 +1,181 @@
+//! Prepare-once pipeline tests: the shared-preparation path
+//! (`PreparedActivations` + `matmul_prepared`) must be bit-identical to
+//! per-call preparation for every kernel and batch shape, lossless
+//! kernels must stay training-scheme exact through it, preprocessing
+//! must run once per consuming role-group (not once per projection), and
+//! steady-state decode must not allocate in the prepare path.
+
+use bitnet::kernels::quant::{quantize_act_int8, training_scheme_ref_row, TernaryWeights};
+use bitnet::kernels::{kernel_for, matmul, matmul_prepared, PreparedActivations, QuantType};
+use bitnet::model::{ModelConfig, Transformer};
+use bitnet::threadpool::ThreadPool;
+use bitnet::util::Rng;
+
+fn random_ternary(m: usize, k: usize, seed: u64) -> TernaryWeights {
+    let mut rng = Rng::new(seed);
+    let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+    TernaryWeights::from_ternary(q, m, k, 0.05)
+}
+
+/// Property: for all 14 kernels × {n=1, 8, 33}, one shared preparation
+/// consumed by multiple matmuls equals per-call preparation bit-for-bit.
+#[test]
+fn shared_prepare_is_bit_identical_to_per_call_prepare() {
+    // K = 768 satisfies every kernel's K-multiple (128 | 768, 256 | 768,
+    // 32/16/8/4 | 768), so all 14 kernels run on the same shape.
+    let (m, k) = (48, 768);
+    let pool = ThreadPool::new(4);
+    for qt in QuantType::ALL {
+        let kern = kernel_for(qt);
+        assert_eq!(k % kern.info().k_multiple, 0, "{qt:?}: test shape must fit every kernel");
+        let t = random_ternary(m, k, 7);
+        let packed = kern.quantize(&t);
+        for n in [1usize, 8, 33] {
+            let mut rng = Rng::new(100 + n as u64);
+            let x: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+            // Shared path: prepare once, consume twice (the wq/wk pattern).
+            let mut acts = PreparedActivations::new();
+            acts.begin_input();
+            let mut out_a = vec![0f32; n * m];
+            {
+                let batch = acts.get_or_prepare(kern, &x, k, n, &pool);
+                matmul_prepared(kern, &packed, batch, &x, n, &mut out_a, &pool);
+            }
+            let mut out_b = vec![0f32; n * m];
+            {
+                let batch = acts.get_or_prepare(kern, &x, k, n, &pool);
+                matmul_prepared(kern, &packed, batch, &x, n, &mut out_b, &pool);
+            }
+            let s = acts.stats();
+            assert_eq!(s.misses, 1, "{qt:?} n={n}: prepare must run exactly once");
+            assert_eq!(s.hits, 1, "{qt:?} n={n}: second consumer must hit the cache");
+            assert_eq!(out_a, out_b, "{qt:?} n={n}: shared batch must be deterministic");
+            // Reference: per-row standalone prepare + serial gemv.
+            for i in 0..n {
+                let p = kern.prepare(&x[i * k..(i + 1) * k], k);
+                let mut out_ref = vec![0f32; m];
+                kern.gemv(&packed, &p, &mut out_ref);
+                assert_eq!(
+                    &out_a[i * m..(i + 1) * m],
+                    &out_ref[..],
+                    "{qt:?} n={n} row {i}: shared vs per-call prepare"
+                );
+            }
+        }
+    }
+}
+
+/// Rebuilding a warm cache for new inputs of the same shape must reuse
+/// every buffer (the allocation-free steady state) and stay correct.
+#[test]
+fn warm_cache_rebuilds_without_allocation_for_all_kernels() {
+    let (m, k, n) = (16, 768, 4);
+    let pool = ThreadPool::new(2);
+    for qt in QuantType::ALL {
+        let kern = kernel_for(qt);
+        let t = random_ternary(m, k, 11);
+        let packed = kern.quantize(&t);
+        let mut acts = PreparedActivations::new();
+        let mut rng = Rng::new(12);
+        let mut out = vec![0f32; n * m];
+        let mut reference = vec![0f32; n * m];
+        let mut allocs_after_first = 0u64;
+        for step in 0..3 {
+            let x: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+            acts.begin_input();
+            {
+                let batch = acts.get_or_prepare(kern, &x, k, n, &pool);
+                matmul_prepared(kern, &packed, batch, &x, n, &mut out, &pool);
+            }
+            if step == 0 {
+                allocs_after_first = acts.stats().buffer_allocs;
+            }
+            matmul(kern, &packed, &x, n, &mut reference, &pool);
+            assert_eq!(out, reference, "{qt:?} step {step}");
+        }
+        let s = acts.stats();
+        assert_eq!(s.misses, 3, "{qt:?}: one prepare per input");
+        assert_eq!(
+            s.buffer_allocs, allocs_after_first,
+            "{qt:?}: every rebuild after the first must reuse buffers"
+        );
+        assert!(s.buffer_reuses >= 2, "{qt:?}: warm rebuilds count as reuses");
+    }
+}
+
+/// The lossless kernels (I2_S, TL1_1, TL2_1) must stay bit-identical to
+/// the integer training-scheme reference (the dequantized-f32-equivalent
+/// computation) through the shared-prepare path.
+#[test]
+fn lossless_kernels_stay_bit_exact_through_shared_path() {
+    let (m, k) = (32, 768);
+    let pool = ThreadPool::new(3);
+    for qt in [QuantType::I2S, QuantType::Tl11, QuantType::Tl21] {
+        let kern = kernel_for(qt);
+        let t = random_ternary(m, k, 21);
+        let packed = kern.quantize(&t);
+        for n in [1usize, 5] {
+            let mut rng = Rng::new(33 + n as u64);
+            let x: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+            let mut acts = PreparedActivations::new();
+            acts.begin_input();
+            let mut out = vec![0f32; n * m];
+            let batch = acts.get_or_prepare(kern, &x, k, n, &pool);
+            matmul_prepared(kern, &packed, batch, &x, n, &mut out, &pool);
+            for i in 0..n {
+                let act = quantize_act_int8(&x[i * k..(i + 1) * k]);
+                for r in 0..m {
+                    assert_eq!(
+                        out[i * m + r],
+                        training_scheme_ref_row(t.row(r), t.scale, &act),
+                        "{qt:?} n={n} row ({i},{r})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// For a given layer input, preparation runs exactly once per consuming
+/// role-group: qkv = 1 prepare (wk/wv hit), gate+up = 1 prepare (up
+/// hits), o and down 1 each — 4 misses and 3 hits per layer per step,
+/// not 7 prepares.
+#[test]
+fn prepare_runs_once_per_role_group() {
+    let model = Transformer::synthetic(&ModelConfig::tiny(), QuantType::I2S, 5);
+    let layers = model.cfg.n_layers as u64;
+    let mut s = model.new_session(64);
+    let _ = model.prefill(&mut s, &[1, 2, 3, 4]);
+    let ps = model.prepare_stats();
+    assert_eq!(ps.misses, 4 * layers, "one prepare per role-group per layer");
+    assert_eq!(ps.hits, 3 * layers, "wk/wv and up share their inputs' preparation");
+    let logits = model.decode_step(&mut s, 7);
+    assert_eq!(logits.len(), model.cfg.vocab_size);
+    let ps = model.prepare_stats();
+    assert_eq!(ps.misses, 8 * layers);
+    assert_eq!(ps.hits, 6 * layers);
+}
+
+/// Steady-state decode must not allocate in the prepare path: once the
+/// decode shapes are warm, the buffer-allocation counter flatlines.
+#[test]
+fn decode_steady_state_is_allocation_free_in_prepare_path() {
+    for qt in [QuantType::I2S, QuantType::Tl20, QuantType::Tl21] {
+        let model = Transformer::synthetic(&ModelConfig::tiny(), qt, 6);
+        let mut s = model.new_session(64);
+        let _ = model.prefill(&mut s, &[3, 1, 4]);
+        // Warm the decode shapes (n=1 inputs at hidden and ffn widths).
+        let _ = model.decode_step(&mut s, 1);
+        let _ = model.decode_step(&mut s, 2);
+        let warm = model.prepare_stats();
+        for t in 3..10u32 {
+            let _ = model.decode_step(&mut s, t);
+        }
+        let ps = model.prepare_stats();
+        assert_eq!(
+            ps.buffer_allocs, warm.buffer_allocs,
+            "{qt:?}: steady-state decode must not allocate in the prepare path"
+        );
+        assert!(ps.buffer_reuses > warm.buffer_reuses, "{qt:?}: builds keep reusing buffers");
+    }
+}
