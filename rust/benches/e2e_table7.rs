@@ -12,6 +12,7 @@
 //! per-size tokens/s as a JSON document — what CI uploads as the
 //! `BENCH_e2e.json` perf-trajectory artifact).
 
+use bitnet::coordinator::{Engine, EngineConfig, Request, ServingTrace};
 use bitnet::kernels::quant::TernaryWeights;
 use bitnet::kernels::{kernel_for, matmul, matmul_prepared, PreparedActivations, QuantType};
 use bitnet::model::weights::Checkpoint;
@@ -20,6 +21,31 @@ use bitnet::perf::calibrate::{calibrate_kernel, tokens_per_second, KernelRate};
 use bitnet::threadpool::ThreadPool;
 use bitnet::util::{Json, Rng};
 use std::time::Instant;
+
+/// Run a short synthetic serving workload through the engine and return
+/// the shape trace it recorded — the `tune --trace` input, reported here
+/// so the perf trajectory shows which GEMM shapes serving actually ran
+/// (and CI exercises the record path every build).
+fn record_serving_trace(cfg: &ModelConfig, requests: usize) -> ServingTrace {
+    let model = Transformer::synthetic(cfg, QuantType::I2S, 0xACE);
+    let engine = Engine::start(
+        model,
+        EngineConfig { max_batch: 4, kv_budget_tokens: 4096, eos_token: 1, seed: 7 },
+    );
+    let mut rng = Rng::new(0xACE);
+    let handles: Vec<_> = (0..requests)
+        .map(|_| {
+            let len = 2 + rng.next_below(10);
+            let prompt: Vec<u32> =
+                (0..len).map(|_| 3 + rng.next_below(cfg.vocab_size - 3) as u32).collect();
+            engine.submit(Request::greedy(prompt, 2 + rng.next_below(8)))
+        })
+        .collect();
+    for h in handles {
+        let _ = h.wait();
+    }
+    engine.trace_snapshot()
+}
 
 /// Measure real end-to-end prefill and decode throughput (tok/s) of a
 /// synthetic model under one kernel — the phase split the prepare-once
@@ -205,6 +231,16 @@ fn main() {
         e2e_rows.push((qt, prefill_tps, decode_tps));
     }
 
+    // Serving-shape trace: run a short engine workload and report the
+    // GEMM shape histogram it exhibits — the input `tune --trace` closes
+    // the tuning loop with.
+    let trace_requests = if fast { 8 } else { 16 };
+    let trace = record_serving_trace(&ModelConfig::tiny(), trace_requests);
+    println!("\n# Serving trace ({trace_requests} requests on tiny): {}", trace.summary());
+    for (n, w) in trace.weighted_batches() {
+        println!("#   batch width {n:>3}: {:>5.1}% of traffic", w * 100.0);
+    }
+
     // Machine-readable trajectory: one JSON document per run so CI can
     // archive the perf history (`BENCH_e2e.json` artifact).
     if let Ok(path) = std::env::var("BENCH_JSON") {
@@ -266,6 +302,7 @@ fn main() {
             ("tokens_per_s".into(), Json::Arr(size_objs)),
             ("prepare_reuse".into(), Json::Arr(reuse_objs)),
             ("e2e_measured".into(), Json::Arr(e2e_objs)),
+            ("serving_trace".into(), trace.to_json()),
         ]);
         std::fs::write(&path, doc.to_string_pretty()).expect("write BENCH_JSON");
         println!("# wrote {path}");

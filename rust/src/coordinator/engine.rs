@@ -7,6 +7,7 @@
 use super::kv_pool::KvPool;
 use super::request::{Event, FinishReason, Request, RequestHandle, RequestStats};
 use super::scheduler::{Phase, Scheduler, SeqState};
+use super::trace::{ServingTrace, TraceRecorder};
 use crate::metrics::EngineMetrics;
 use crate::model::{sample, Session, Transformer};
 use crate::util::Rng;
@@ -51,6 +52,10 @@ pub struct Engine {
     /// — recorded at startup so serving logs can attribute throughput to
     /// kernel selection.
     pub kernel_info: String,
+    /// The serving-shape trace the step loop records (prefill chunk
+    /// lengths, decode batch widths): the input `tune --trace` consumes.
+    /// Always on — one lock per step, far off the GEMM path.
+    trace: Arc<TraceRecorder>,
     worker: Option<JoinHandle<()>>,
 }
 
@@ -79,11 +84,19 @@ impl Engine {
                 .collect();
             format!("{}: {}", model.plan.describe(), shapes.join(" "))
         };
+        let trace = Arc::new(TraceRecorder::new());
+        let t2 = Arc::clone(&trace);
         let worker = std::thread::Builder::new()
             .name("bitnet-engine".into())
-            .spawn(move || run_loop(model, config, rx, m2))
+            .spawn(move || run_loop(model, config, rx, m2, t2))
             .expect("spawn engine thread");
-        Engine { cmd: tx, next_id: 0.into(), metrics, kernel_info, worker: Some(worker) }
+        Engine { cmd: tx, next_id: 0.into(), metrics, kernel_info, trace, worker: Some(worker) }
+    }
+
+    /// Copy of the serving-shape trace recorded so far (persist it with
+    /// [`ServingTrace::save`]; `serve --record-trace <path>` does).
+    pub fn trace_snapshot(&self) -> ServingTrace {
+        self.trace.snapshot()
     }
 
     /// Submit a request; returns a streaming handle.
@@ -134,6 +147,7 @@ fn run_loop(
     config: EngineConfig,
     rx: Receiver<Command>,
     metrics: Arc<EngineMetrics>,
+    trace: Arc<TraceRecorder>,
 ) {
     let mut pool = KvPool::new(config.kv_budget_tokens);
     let mut scheduler = Scheduler::new(config.max_batch);
@@ -211,6 +225,10 @@ fn run_loop(
         for id in &plan.prefill {
             let l = live.get_mut(id).expect("live entry for admitted seq");
             let logits = model.prefill(&mut l.session, &l.req.prompt.clone());
+            // The prompt is in the KV cache *now* — this notification,
+            // not admission planning, is what flips Prefill → Decoding
+            // (so `current_tokens` never claims unprefilled occupancy).
+            scheduler.on_prefilled(*id);
             let tok = sample(&logits, &l.req.sampling, &mut rng);
             l.prefilled_at = Some(Instant::now());
             metrics.ttft.record(l.submitted.elapsed());
@@ -263,6 +281,13 @@ fn run_loop(
                 metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
             }
         }
+
+        // Serving-shape trace: the GEMM widths this step actually ran
+        // (the decode width can shrink below the plan's when sequences
+        // retired before the batched GEMM).
+        let (trace_steps, trace_shapes) = trace.record_step(&plan, decode_ids.len());
+        metrics.trace_steps.store(trace_steps, Ordering::Relaxed);
+        metrics.trace_shapes.store(trace_shapes, Ordering::Relaxed);
 
         // Mirror the model's dispatch-observability counters (untuned-
         // shape fallbacks and winners that could not run — see

@@ -24,8 +24,12 @@ pub struct KvPool {
 
 impl KvPool {
     /// Pool sized for `max_tokens` total KV tokens across all sequences.
+    /// The page count rounds *up*: flooring would silently discard up to
+    /// `PAGE_TOKENS - 1` tokens of budget the caller paid for (e.g.
+    /// `KvPool::new(100)` serving only 96), so the invariant is
+    /// `total_pages * PAGE_TOKENS >= max_tokens`.
     pub fn new(max_tokens: usize) -> KvPool {
-        let total_pages = max_tokens / PAGE_TOKENS;
+        let total_pages = Self::pages_for(max_tokens);
         KvPool {
             total_pages,
             free_pages: (0..total_pages as u32).rev().collect(),
@@ -104,6 +108,23 @@ mod tests {
         assert_eq!(KvPool::pages_for(1), 1);
         assert_eq!(KvPool::pages_for(16), 1);
         assert_eq!(KvPool::pages_for(17), 2);
+    }
+
+    #[test]
+    fn budget_rounds_up_not_down() {
+        // 100 tokens needs 7 pages (112 tokens); flooring to 6 would
+        // strand 4 tokens of paid-for budget.
+        let mut pool = KvPool::new(100);
+        assert_eq!(pool.total_pages(), 7);
+        assert!(
+            pool.total_pages() * PAGE_TOKENS >= 100,
+            "invariant: page capacity covers the requested budget"
+        );
+        assert!(pool.can_admit(100));
+        assert!(pool.reserve(1, 100), "the full paid-for budget is reservable");
+        // Exact multiples and zero stay exact.
+        assert_eq!(KvPool::new(160).total_pages(), 10);
+        assert_eq!(KvPool::new(0).total_pages(), 0);
     }
 
     #[test]

@@ -12,6 +12,8 @@ pub mod engine;
 pub mod kv_pool;
 pub mod request;
 pub mod scheduler;
+pub mod trace;
 
 pub use engine::{Engine, EngineConfig};
 pub use request::{Event, FinishReason, Request, RequestHandle};
+pub use trace::{ServingTrace, TraceRecorder};

@@ -34,7 +34,8 @@ impl SeqState {
     pub fn worst_case_tokens(&self) -> usize {
         self.prompt_len + self.max_new_tokens
     }
-    /// Tokens currently in the KV cache.
+    /// KV tokens committed so far (prompt once prefilled, plus sampled
+    /// tokens — see [`Scheduler::kv_tokens_in_cache`]).
     pub fn current_tokens(&self) -> usize {
         match self.phase {
             Phase::Waiting => 0,
@@ -109,6 +110,30 @@ impl Scheduler {
         }
     }
 
+    /// Notification from the engine that `id`'s prompt is now in the KV
+    /// cache. The `Prefill → Decoding` flip happens here — *after* the
+    /// engine actually ran the prefill — not at planning time: flipping
+    /// inside [`Scheduler::step`] made `current_tokens()` claim KV
+    /// occupancy for prompts that were not yet prefilled, misreporting
+    /// cache pressure for the duration of the step.
+    pub fn on_prefilled(&mut self, id: u64) {
+        if let Some(s) =
+            self.running.iter_mut().find(|s| s.id == id && s.phase == Phase::Prefill)
+        {
+            s.phase = Phase::Decoding;
+        }
+    }
+
+    /// KV tokens committed across every running sequence: resident
+    /// prompt tokens plus every sampled token (the most recent of which
+    /// is appended to the cache at the *next* decode step — committed
+    /// occupancy, which is what capacity accounting needs, can lead
+    /// physical residency by one token per decoding sequence).
+    /// Admitted-but-unprefilled sequences contribute zero.
+    pub fn kv_tokens_in_cache(&self) -> usize {
+        self.running.iter().map(|s| s.current_tokens()).sum()
+    }
+
     /// Remove a finished sequence and release its pages.
     pub fn finish(&mut self, id: u64, pool: &mut KvPool) {
         self.running.retain(|s| s.id != id);
@@ -134,10 +159,10 @@ impl Scheduler {
             plan.prefill_chunks.push(seq.prompt_len);
             self.running.push(seq);
         }
-        for s in self.running.iter_mut() {
-            if s.phase == Phase::Prefill {
-                s.phase = Phase::Decoding;
-            }
+        // Every running sequence decodes this step; newly admitted ones
+        // stay in `Phase::Prefill` until the engine reports the prefill
+        // actually happened (`on_prefilled`).
+        for s in self.running.iter() {
             plan.decode.push(s.id);
         }
         plan
@@ -231,6 +256,31 @@ mod tests {
         assert!(plan.prefill.is_empty() && plan.prefill_chunks.is_empty());
         assert_eq!(plan.prefill_tokens(), 0);
         assert_eq!(plan.decode_width(), 2);
+    }
+
+    #[test]
+    fn phase_flips_on_engine_notification_not_at_planning() {
+        let mut pool = KvPool::new(16 * 100);
+        let mut sch = Scheduler::new(4);
+        sch.submit(seq(1, 10, 4), &pool);
+        let plan = sch.step(&mut pool);
+        assert_eq!(plan.prefill, vec![1]);
+        assert_eq!(plan.decode, vec![1], "admitted sequence still decodes this step");
+        // Planning must NOT claim KV occupancy for a prompt the engine
+        // has not prefilled yet.
+        assert_eq!(sch.kv_tokens_in_cache(), 0, "prefill not yet executed");
+        sch.on_prefilled(1);
+        assert_eq!(sch.kv_tokens_in_cache(), 10, "prompt resident after prefill");
+        sch.on_token(1);
+        // Committed occupancy: the sampled token is counted now (it
+        // enters the cache at the next decode step).
+        assert_eq!(sch.kv_tokens_in_cache(), 11);
+        // Later steps leave the phase alone.
+        let plan = sch.step(&mut pool);
+        assert!(plan.prefill.is_empty());
+        assert_eq!(sch.kv_tokens_in_cache(), 11);
+        // Unknown ids are a no-op.
+        sch.on_prefilled(99);
     }
 
     #[test]

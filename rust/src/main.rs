@@ -15,8 +15,8 @@
 use anyhow::{bail, Context, Result};
 use bitnet::cli::Args;
 use bitnet::config::{Config, LaunchConfig};
-use bitnet::coordinator::{Engine, EngineConfig, Request};
-use bitnet::kernels::tuner::{self, TuneConfig, TuningProfile};
+use bitnet::coordinator::{Engine, EngineConfig, Request, ServingTrace};
+use bitnet::kernels::tuner::{self, OverrideSearchConfig, TuneConfig, TuningProfile};
 use bitnet::kernels::{library_table, Dispatch, DispatchPlan, QuantType};
 use bitnet::model::{ModelConfig, SamplingParams, Transformer};
 use bitnet::model::weights::Checkpoint;
@@ -35,10 +35,13 @@ const USAGE: &str = "usage: bitnet <info|gen-model|run|serve|tune|pjrt> [options
   gen-model --preset tiny --seed 42 --out model.btnz
   run       --preset tiny --kernel I2_S --threads 1 --prompt 'text' --max-new 32
             [--model model.btnz] [--temperature 0.0]
-            [--qtype auto --tune-profile profile.json] [--verbose]
+            [--qtype auto --tune-profile profile.json]
+            [--record-trace trace.json] [--verbose]
   serve     --preset tiny --kernel TL2_0 --threads 2 --requests 16 --max-batch 8
             [--qtype auto --tune-profile profile.json]
+            [--record-trace trace.json]
   tune      --out profile.json [--preset tiny] [--threads 1] [--batches 1,4]
+            [--trace trace.json] [--trace-widths 16] [--search-overrides]
             [--kernels I2_S,TL1_0,…|all] [--measure-ms 60] [--e2e] [--verbose]
             (default candidates: compact ternary kernels; `all` adds the
              dense/general baselines; --e2e additionally measures the
@@ -51,10 +54,17 @@ const USAGE: &str = "usage: bitnet <info|gen-model|run|serve|tune|pjrt> [options
   --tune-profile file (v1 and v2 profiles load; see docs/tuning.md).
   Under auto, prefill chunks and batched decode re-dispatch per call
   using the profile's n>1 entries — `--verbose` prints the per-layer,
-  per-phase winners.";
+  per-phase winners.
+
+  Trace-driven tuning closes the loop: `run`/`serve --record-trace`
+  persist the shape histogram the workload exhibited; `tune --trace`
+  sweeps exactly those shapes (replacing --batches) weighted by their
+  observed frequency; `tune --search-overrides` additionally sweeps
+  first/last-vs-middle per-layer kernel compositions end to end and
+  writes the winning LayerOverride rows into the profile.";
 
 fn run() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["help", "verbose", "e2e"])?;
+    let args = Args::parse(std::env::args().skip(1), &["help", "verbose", "e2e", "search-overrides"])?;
     if args.has_flag("help") || args.subcommand.is_none() {
         println!("{USAGE}");
         return Ok(());
@@ -235,6 +245,18 @@ fn cmd_run(args: &Args) -> Result<()> {
             ps.hits, ps.misses, ps.buffer_reuses, ps.buffer_allocs
         );
     }
+    if let Some(tp) = args.get("record-trace") {
+        // Single-request run: one prefill chunk of the prompt length,
+        // then `max_new` single-sequence decode steps.
+        let mut trace = ServingTrace::new();
+        trace.record_prefill(prompt.len());
+        for _ in 0..max_new {
+            trace.record_decode(1);
+        }
+        trace.steps = 1 + max_new as u64;
+        trace.save(Path::new(tp))?;
+        eprintln!("wrote trace {tp} ({})", trace.summary());
+    }
     Ok(())
 }
 
@@ -280,6 +302,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.has_flag("verbose") {
         println!("kernels: {}", engine.kernel_info);
     }
+    if let Some(tp) = args.get("record-trace") {
+        let trace = engine.trace_snapshot();
+        trace.save(Path::new(tp))?;
+        eprintln!("wrote trace {tp} ({})", trace.summary());
+    }
     Ok(())
 }
 
@@ -292,6 +319,30 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let out = PathBuf::from(args.get_or("out", "profile.json"));
     let threads = args.get_usize("threads", 1)?;
     let measure_ms = args.get_usize("measure-ms", 60)?;
+    // Trace-driven mode: sweep the shapes a recorded serving run actually
+    // exhibited, weighted by frequency — no fixed --batches fallback.
+    let trace: Option<ServingTrace> = match args.get("trace") {
+        Some(tp) => {
+            if args.get("batches").is_some() {
+                bail!(
+                    "--trace replaces the --batches sweep with the trace's observed \
+                     shapes; pass one or the other"
+                );
+            }
+            let t = ServingTrace::load(Path::new(tp))?;
+            if t.is_empty() {
+                bail!(
+                    "trace {tp} records no shapes; re-record with \
+                     `run`/`serve --record-trace` on a real workload"
+                );
+            }
+            Some(t)
+        }
+        None => None,
+    };
+    if trace.is_none() && args.get("trace-widths").is_some() {
+        bail!("--trace-widths caps the --trace sweep; it does nothing without --trace");
+    }
     let batches: Vec<usize> = args
         .get_or("batches", "1,4")
         .split(',')
@@ -302,7 +353,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
             Err(_) => Err(anyhow::anyhow!("--batches expects integers, got {s:?}")),
         })
         .collect::<Result<_>>()?;
-    if batches.is_empty() {
+    if trace.is_none() && batches.is_empty() {
         bail!("--batches must name at least one batch size (e.g. --batches 1,4)");
     }
     // Default candidates are the compact ternary serving kernels; the
@@ -324,15 +375,49 @@ fn cmd_tune(args: &Args) -> Result<()> {
     if candidates.is_empty() {
         bail!("--kernels must name at least one kernel");
     }
-    let cfg = TuneConfig {
+    let mut cfg = TuneConfig {
         shapes: tuner::shapes_for_model(&model_cfg),
         batches,
         threads,
         candidates,
-        default: QuantType::I2S,
         min_iters: 3,
         min_seconds: measure_ms as f64 / 1e3,
+        ..TuneConfig::default()
     };
+    if let Some(t) = &trace {
+        // Cap the sweep at the heaviest observed widths: a long-tail
+        // workload where nearly every prompt length is distinct would
+        // otherwise multiply tuning cost per unique length. Never
+        // silent — the dropped traffic share is printed.
+        let max_widths = args.get_usize("trace-widths", 16)?;
+        if max_widths == 0 {
+            bail!(
+                "--trace-widths must be >= 1 (the cap guards against long-tail traces; \
+                 pass a large value to keep more of the tail)"
+            );
+        }
+        let (widths, dropped) = t.top_weighted_batches(max_widths);
+        cfg.set_weighted_batches(&widths);
+        eprintln!("trace-driven sweep: {}", t.summary());
+        if dropped > 0 {
+            let kept: f64 = widths.iter().map(|(_, w)| w).sum();
+            eprintln!(
+                "capping sweep to the {} heaviest widths (--trace-widths {max_widths}); \
+                 {dropped} long-tail widths carrying {:.1}% of traffic dropped",
+                widths.len(),
+                (1.0 - kept) * 100.0
+            );
+        }
+        eprintln!(
+            "observed batch widths: {}",
+            cfg.batches
+                .iter()
+                .zip(cfg.batch_weights.iter())
+                .map(|(n, w)| format!("{n} ({:.0}%)", w * 100.0))
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    }
     eprintln!(
         "tuning preset {} ({} shapes x {} batches, {} candidate kernels, {} threads)",
         preset,
@@ -351,13 +436,33 @@ fn cmd_tune(args: &Args) -> Result<()> {
     // --e2e step (e.g. an unhostable preset) must not discard minutes of
     // completed measurements.
     profile.save(&out)?;
+    // Shapes for every e2e measurement below (--e2e and
+    // --search-overrides): the trace's modal prefill chunk and decode
+    // width when one was given — so both e2e sections measure at the
+    // same, workload-observed shapes — else the defaults.
+    let search_defaults = OverrideSearchConfig::default();
+    let e2e_prefill = trace
+        .as_ref()
+        .and_then(|t| t.modal_prefill_chunk())
+        .unwrap_or(search_defaults.prefill_tokens);
+    let e2e_width = trace
+        .as_ref()
+        .and_then(|t| t.modal_decode_width())
+        .unwrap_or(search_defaults.decode_width);
     if args.has_flag("e2e") {
         // Layer-composition check: per-shape winners can compose
         // differently than they measure in isolation, so time the tuned
         // profile against the fixed default on the full model and record
         // both in the profile's `e2e` section.
         eprintln!("measuring end-to-end layer composition on preset {preset}...");
-        let entries = tuner::measure_e2e(&profile, &model_cfg, threads, 32, 64)?;
+        let entries = tuner::measure_e2e(
+            &profile,
+            &model_cfg,
+            threads,
+            e2e_prefill,
+            search_defaults.decode_tokens,
+            e2e_width,
+        )?;
         for e in &entries {
             println!(
                 "e2e {}: prefill {:.1} tok/s, decode {:.1} tok/s",
@@ -367,7 +472,39 @@ fn cmd_tune(args: &Args) -> Result<()> {
         profile.e2e = entries;
         profile.save(&out)?;
     }
-    println!("wrote {} ({} entries)", out.display(), profile.entries.len());
+    if args.has_flag("search-overrides") {
+        // Automatic per-layer override search: sweep first/last-vs-middle
+        // kernel compositions end to end and keep the winner. The phase
+        // blend scoring the sweep comes from the trace when one was
+        // given (real traffic), else an even split.
+        eprintln!("searching per-layer override compositions on preset {preset}...");
+        // Compositions are measured at the same shapes as --e2e above
+        // (trace-derived when available) and scored by the trace's
+        // phase blend; without a trace, an even split.
+        let scfg = OverrideSearchConfig {
+            prefill_weight: trace.as_ref().map(|t| t.prefill_token_fraction()).unwrap_or(0.5),
+            prefill_tokens: e2e_prefill,
+            decode_width: e2e_width,
+            ..search_defaults
+        };
+        let outcome = tuner::search_overrides(&profile, &model_cfg, threads, &scfg, Some(&mut log))?;
+        println!(
+            "override search: winner {} ({} override rows; uniform {:.1} vs best {:.1} tok/s blended)",
+            outcome.winner,
+            outcome.overrides.len(),
+            outcome.uniform_score,
+            outcome.best_score
+        );
+        profile.overrides = outcome.overrides;
+        profile.e2e.extend(outcome.measurements);
+        profile.save(&out)?;
+    }
+    println!(
+        "wrote {} ({} entries, {} overrides)",
+        out.display(),
+        profile.entries.len(),
+        profile.overrides.len()
+    );
     Ok(())
 }
 

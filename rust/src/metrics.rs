@@ -111,6 +111,13 @@ pub struct EngineMetrics {
     pub prepare_buffer_allocs: AtomicU64,
     /// Prepare builds that fully reused existing buffer capacity.
     pub prepare_buffer_reuses: AtomicU64,
+    /// Engine steps recorded into the serving-shape trace (the histogram
+    /// `tune --trace` consumes; steps that ran no GEMM don't count).
+    pub trace_steps: AtomicU64,
+    /// Distinct GEMM batch shapes (prefill chunk lengths + decode
+    /// widths) the trace has observed — a small number that stops
+    /// growing means the tuning sweep derived from this trace is cheap.
+    pub trace_shapes: AtomicU64,
     pub step_latency: LatencyHistogram,
     pub ttft: LatencyHistogram,
 }
@@ -132,7 +139,7 @@ impl EngineMetrics {
     /// Human-readable one-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "req {}/{} done, {} rejected | tokens {}+{} | steps {} (mean batch {:.2}, peak {}) | step mean {:.1}µs p99 {}µs | ttft mean {:.1}µs | dispatch fallbacks {} degraded {} | prepare {} hits / {} misses (buffers {} reused, {} alloc'd)",
+            "req {}/{} done, {} rejected | tokens {}+{} | steps {} (mean batch {:.2}, peak {}) | step mean {:.1}µs p99 {}µs | ttft mean {:.1}µs | dispatch fallbacks {} degraded {} | prepare {} hits / {} misses (buffers {} reused, {} alloc'd) | trace {} steps / {} shapes",
             self.requests_completed.load(Ordering::Relaxed),
             self.requests_submitted.load(Ordering::Relaxed),
             self.requests_rejected.load(Ordering::Relaxed),
@@ -150,6 +157,8 @@ impl EngineMetrics {
             self.prepare_cache_misses.load(Ordering::Relaxed),
             self.prepare_buffer_reuses.load(Ordering::Relaxed),
             self.prepare_buffer_allocs.load(Ordering::Relaxed),
+            self.trace_steps.load(Ordering::Relaxed),
+            self.trace_shapes.load(Ordering::Relaxed),
         )
     }
 }

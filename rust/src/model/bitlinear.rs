@@ -317,6 +317,7 @@ mod tests {
             m,
             k,
             n: 1,
+            weight: 1.0,
             best: QuantType::Tl21,
             measurements: Vec::new(),
         });

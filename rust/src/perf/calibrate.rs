@@ -90,7 +90,12 @@ pub fn calibrate_kernel_shape(
         let batch = acts.get_or_prepare(kern, &x, k, n, pool);
         matmul_prepared(kern, &packed, batch, &x, n, &mut out, pool);
     }
-    // Measure at least `min_iters` and at least `min_seconds`.
+    // Measure at least `min_iters` and at least `min_seconds` — but
+    // always at least one iteration: with `min_iters == 0` and a tiny
+    // `min_seconds` the loop could exit untaken, and the resulting 0/0
+    // rate (NaN `weights_per_s`) would silently poison every downstream
+    // comparison (NaN never sorts as a winner, NaN never loses one).
+    let min_iters = min_iters.max(1);
     let t0 = Instant::now();
     let mut iters = 0usize;
     while iters < min_iters || t0.elapsed().as_secs_f64() < min_seconds {
@@ -142,6 +147,18 @@ mod tests {
         assert!(r.weights_per_s > 0.0, "{:?}", r);
         assert!(r.secs_per_matmul(128, 256) > 0.0);
         assert!((r.bpw - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn zero_iteration_budget_still_measures_once() {
+        // Regression: min_iters = 0 with a zero time budget used to exit
+        // the timing loop untaken, dividing by zero iterations and
+        // handing the tuner NaN rates.
+        let pool = ThreadPool::new(1);
+        let r = calibrate_kernel_shape(QuantType::I2S, 16, 128, 1, &pool, 0, 0.0);
+        assert!(r.weights_per_s.is_finite() && r.weights_per_s > 0.0, "{:?}", r);
+        assert!(r.weight_bytes_per_s.is_finite() && r.weight_bytes_per_s > 0.0, "{:?}", r);
+        assert!(r.secs_per_matmul(16, 128).is_finite());
     }
 
     #[test]

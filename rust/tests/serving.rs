@@ -114,7 +114,14 @@ fn phase_aware_auto_engine_matches_fixed_engine_outputs() {
     let mut profile = TuningProfile::empty(QuantType::I2S, 1);
     for (m, k) in shapes_for_model(&cfg) {
         for (n, qt) in [(1usize, QuantType::I2S), (4, QuantType::Tl21)] {
-            profile.entries.push(TuningEntry { m, k, n, best: qt, measurements: Vec::new() });
+            profile.entries.push(TuningEntry {
+                m,
+                k,
+                n,
+                weight: 1.0,
+                best: qt,
+                measurements: Vec::new(),
+            });
         }
     }
     let auto_model = Transformer::from_checkpoint_dispatch(
@@ -173,6 +180,50 @@ fn uncovered_profile_surfaces_dispatch_fallbacks_in_metrics() {
         "empty profile must surface fallbacks in metrics"
     );
     assert!(eng.metrics.summary().contains("dispatch fallbacks"));
+}
+
+#[test]
+fn engine_records_serving_trace() {
+    // The engine's step loop records the shape histogram `tune --trace`
+    // consumes: every prompt length shows up as a prefill chunk, decode
+    // widths stay within the batch cap, and the counters mirror into
+    // the lock-free metrics.
+    let eng = engine(QuantType::I2S, 4, 4096);
+    let prompts: Vec<Vec<u32>> = vec![vec![4, 5, 6], vec![7, 8], vec![9, 10, 11, 12]];
+    let handles: Vec<_> =
+        prompts.iter().map(|p| eng.submit(Request::greedy(p.clone(), 6))).collect();
+    for h in handles {
+        let (_, reason, _) = h.wait();
+        assert_eq!(reason, FinishReason::Length);
+    }
+    let trace = eng.trace_snapshot();
+    assert!(trace.steps > 0, "steps with GEMM work must be recorded");
+    for p in &prompts {
+        assert!(
+            trace.prefill_chunks.contains_key(&p.len()),
+            "prefill chunk {} missing from {trace:?}",
+            p.len()
+        );
+    }
+    assert_eq!(
+        trace.prefill_chunks.values().sum::<u64>(),
+        prompts.len() as u64,
+        "one prefill event per admitted request"
+    );
+    assert!(!trace.decode_widths.is_empty());
+    assert!(trace.decode_widths.keys().all(|&w| (1..=4).contains(&w)));
+    // The tuner-facing view is a proper distribution over observed widths.
+    let wb = trace.weighted_batches();
+    assert!(!wb.is_empty());
+    let total: f64 = wb.iter().map(|(_, w)| w).sum();
+    assert!((total - 1.0).abs() < 1e-9, "weights must sum to 1, got {total}");
+    // Mirrored into the engine metrics and visible in the summary line.
+    assert_eq!(eng.metrics.trace_steps.load(Ordering::Relaxed), trace.steps);
+    assert_eq!(
+        eng.metrics.trace_shapes.load(Ordering::Relaxed),
+        trace.distinct_shapes() as u64
+    );
+    assert!(eng.metrics.summary().contains("trace"));
 }
 
 #[test]

@@ -6,9 +6,11 @@
 //! through different kernels per phase, per-layer overrides, v1 profile
 //! migration, and fallback accounting.
 
+use bitnet::coordinator::ServingTrace;
 use bitnet::kernels::quant::TernaryWeights;
 use bitnet::kernels::tuner::{
-    measure_e2e, tune, LayerOverride, Measurement, Role, TuneConfig, TuningEntry,
+    measure_e2e, search_overrides, tune, LayerOverride, Measurement, OverrideSearchConfig, Role,
+    TuneConfig, TuningEntry,
 };
 use bitnet::kernels::{kernel_for, Dispatch, QuantType, TuningProfile};
 use bitnet::model::weights::Checkpoint;
@@ -21,6 +23,7 @@ fn entry(m: usize, k: usize, n: usize, best: QuantType) -> TuningEntry {
         m,
         k,
         n,
+        weight: 1.0,
         best,
         measurements: vec![Measurement {
             qtype: best,
@@ -271,13 +274,216 @@ fn v1_profile_files_load_with_migration() {
 fn measure_e2e_reports_both_candidates_and_refuses_huge_presets() {
     let profile = tiny_profile(QuantType::Tl21);
     let cfg = ModelConfig::tiny();
-    let entries = measure_e2e(&profile, &cfg, 1, 8, 4).unwrap();
+    let entries = measure_e2e(&profile, &cfg, 1, 8, 4, 1).unwrap();
     assert_eq!(entries.len(), 2);
     assert_eq!(entries[0].label, "auto");
     assert!(entries[1].label.contains("I2_S"), "{}", entries[1].label);
     assert!(entries.iter().all(|e| e.prefill_tok_s > 0.0 && e.decode_tok_s > 0.0));
     // Oversized presets refuse rather than synthesize billions of params.
-    assert!(measure_e2e(&profile, &ModelConfig::b7(), 1, 4, 2).is_err());
+    assert!(measure_e2e(&profile, &ModelConfig::b7(), 1, 4, 2, 1).is_err());
+}
+
+#[test]
+fn trace_round_trip_drives_tuned_shapes() {
+    // The tentpole acceptance path: record a serving trace, persist it,
+    // and tune from it — the profile's tuned (m, k, n) set must be
+    // exactly the model's projection shapes × the trace's observed
+    // batch widths, no fixed --batches fallback, with each entry
+    // carrying its width's observed traffic fraction.
+    let mut trace = ServingTrace::new();
+    for _ in 0..2 {
+        trace.record_prefill(6);
+    }
+    trace.record_prefill(3);
+    for _ in 0..10 {
+        trace.record_decode(1);
+    }
+    for _ in 0..5 {
+        trace.record_decode(2);
+    }
+    trace.steps = 18;
+
+    let dir = std::env::temp_dir().join("bitnet_trace_roundtrip_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.json");
+    trace.save(&path).unwrap();
+    let loaded = ServingTrace::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(loaded, trace, "trace must round-trip losslessly");
+
+    let cfg = ModelConfig::tiny();
+    let mut tcfg = TuneConfig {
+        shapes: bitnet::kernels::tuner::shapes_for_model(&cfg),
+        candidates: vec![QuantType::I2S],
+        min_iters: 1,
+        min_seconds: 0.0,
+        ..TuneConfig::default()
+    };
+    tcfg.set_weighted_batches(&loaded.weighted_batches());
+    assert_eq!(tcfg.batches, vec![1, 2, 3, 6], "observed widths, ascending");
+    let profile = tune(&tcfg, None);
+
+    let tuned: std::collections::BTreeSet<(usize, usize, usize)> =
+        profile.entries.iter().map(|e| (e.m, e.k, e.n)).collect();
+    let expected: std::collections::BTreeSet<(usize, usize, usize)> = tcfg
+        .shapes
+        .iter()
+        .flat_map(|&(m, k)| [1usize, 2, 3, 6].into_iter().map(move |n| (m, k, n)))
+        .collect();
+    assert_eq!(tuned, expected, "tuned shapes must equal trace widths × model shapes");
+    for e in &profile.entries {
+        let want = match e.n {
+            1 => 10.0 / 18.0,
+            2 => 5.0 / 18.0,
+            3 => 1.0 / 18.0,
+            6 => 2.0 / 18.0,
+            other => panic!("unexpected tuned width {other}"),
+        };
+        assert!((e.weight - want).abs() < 1e-12, "n={}: weight {} want {want}", e.n, e.weight);
+    }
+    // The weighted entries survive the disk round trip.
+    let path2 = dir.join("profile.json");
+    profile.save(&path2).unwrap();
+    let back = TuningProfile::load(&path2).unwrap();
+    std::fs::remove_file(&path2).unwrap();
+    assert_eq!(back, profile);
+}
+
+#[test]
+fn override_search_skips_compositions_identical_to_uniform() {
+    // A homogeneous profile (one kernel wins everywhere, also the
+    // default) leaves the search nothing real to try: every composition
+    // pins exactly what uniform already selects, so nothing beyond the
+    // baseline may be measured — timing noise must never install no-op
+    // override rows.
+    let cfg = ModelConfig::tiny();
+    let profile = tiny_profile(QuantType::I2S); // default is I2_S too
+    let search = OverrideSearchConfig {
+        prefill_tokens: 4,
+        decode_tokens: 4,
+        decode_width: 1,
+        prefill_weight: 0.5,
+        candidates: vec![QuantType::I2S],
+        min_gain: 0.0,
+    };
+    let mut lines = Vec::new();
+    let mut sink = |s: &str| lines.push(s.to_string());
+    let outcome = search_overrides(&profile, &cfg, 1, &search, Some(&mut sink)).unwrap();
+    assert!(outcome.overrides.is_empty(), "no-op compositions must not be emitted");
+    assert_eq!(outcome.winner, "uniform");
+    assert_eq!(outcome.measurements.len(), 1, "only the uniform baseline gets timed");
+    assert!(
+        lines.iter().any(|l| l.contains("matches the uniform assignment")),
+        "skips must be visible: {lines:?}"
+    );
+}
+
+#[test]
+fn override_search_probes_widths_beyond_n1() {
+    // An n=1 override row shadows dispatch at every width, so a
+    // candidate that matches uniform at n=1 but differs at the measured
+    // prefill width is a REAL composition — it must be timed, not
+    // skipped as a no-op.
+    let cfg = ModelConfig::tiny();
+    let mut profile = tiny_profile(QuantType::I2S); // n=1 winners: I2_S
+    for (m, k) in bitnet::kernels::tuner::shapes_for_model(&cfg) {
+        profile.entries.push(entry(m, k, 8, QuantType::Tl21)); // n=8: TL2_1
+    }
+    let search = OverrideSearchConfig {
+        prefill_tokens: 8,
+        decode_tokens: 4,
+        decode_width: 1,
+        prefill_weight: 0.5,
+        // I2_S matches uniform at n=1 everywhere but pins prefill (n=8)
+        // away from TL2_1 — a genuinely different composition.
+        candidates: vec![QuantType::I2S],
+        min_gain: 0.0,
+    };
+    let mut lines = Vec::new();
+    let mut sink = |s: &str| lines.push(s.to_string());
+    let outcome = search_overrides(&profile, &cfg, 1, &search, Some(&mut sink)).unwrap();
+    assert!(
+        outcome.measurements.len() > 1,
+        "edges=I2_S differs from uniform at the measured prefill width and must be timed: {lines:?}"
+    );
+}
+
+#[test]
+fn measure_dispatch_e2e_supports_batched_decode_width() {
+    use bitnet::kernels::tuner::measure_dispatch_e2e;
+    let cfg = ModelConfig::tiny();
+    let e = measure_dispatch_e2e(
+        "w2",
+        Dispatch::Auto(tiny_profile(QuantType::I2S)),
+        &cfg,
+        1,
+        4,
+        4,
+        2,
+    )
+    .unwrap();
+    assert_eq!(e.label, "w2");
+    assert!(e.prefill_tok_s > 0.0 && e.decode_tok_s > 0.0, "{e:?}");
+}
+
+#[test]
+fn override_search_never_emits_a_losing_composition() {
+    // Property over several profile variants: the search either emits
+    // nothing (uniform won) or emits a composition that beat uniform in
+    // its own measure_e2e run — and the emitted rows always load.
+    let cfg = ModelConfig::tiny();
+    for uniform_kernel in [QuantType::I2S, QuantType::Tl21] {
+        let profile = tiny_profile(uniform_kernel);
+        let search = OverrideSearchConfig {
+            prefill_tokens: 8,
+            decode_tokens: 8,
+            decode_width: 1,
+            prefill_weight: 0.5,
+            candidates: vec![QuantType::I2S, QuantType::Tl21],
+            // Zero margin: the property under test is the exact
+            // never-lose contract, not the noise gate.
+            min_gain: 0.0,
+        };
+        let mut lines = Vec::new();
+        let mut sink = |s: &str| lines.push(s.to_string());
+        let outcome = search_overrides(&profile, &cfg, 1, &search, Some(&mut sink)).unwrap();
+        assert!(
+            outcome.measurements.iter().any(|e| e.label == "uniform"),
+            "uniform baseline must be measured"
+        );
+        assert!(outcome.best_score >= outcome.uniform_score);
+        assert!(
+            lines.iter().any(|l| l.contains("winner") || l.contains("uniform assignment wins")),
+            "decision must be visible in progress output: {lines:?}"
+        );
+        if outcome.overrides.is_empty() {
+            assert_eq!(outcome.winner, "uniform");
+            assert_eq!(outcome.best_score, outcome.uniform_score);
+        } else {
+            assert!(
+                outcome.best_score > outcome.uniform_score,
+                "emitted overrides must have beaten uniform: {} vs {}",
+                outcome.best_score,
+                outcome.uniform_score
+            );
+            assert!(
+                outcome.measurements.iter().any(|e| e.label == outcome.winner),
+                "winner {} must be among the measurements",
+                outcome.winner
+            );
+            for o in &outcome.overrides {
+                assert!(o.layer < cfg.n_layers, "override row names a real layer");
+                assert_eq!(o.n, 1, "search pins at n=1 (extends to all widths)");
+            }
+            // The winning composition actually packs and runs.
+            let mut p2 = profile.clone();
+            p2.overrides = outcome.overrides.clone();
+            let ck = Checkpoint::synthetic(&cfg, 11);
+            let model = Transformer::from_checkpoint_dispatch(&ck, Dispatch::Auto(p2), 1);
+            let mut s = model.new_session(16);
+            assert!(model.prefill(&mut s, &[1, 2, 3]).iter().all(|v| v.is_finite()));
+        }
+    }
 }
 
 #[test]
@@ -288,11 +494,10 @@ fn real_tune_run_yields_usable_profile() {
     let tcfg = TuneConfig {
         shapes: bitnet::kernels::tuner::shapes_for_model(&cfg),
         batches: vec![1],
-        threads: 1,
         candidates: vec![QuantType::I2S, QuantType::Tl21],
-        default: QuantType::I2S,
         min_iters: 1,
         min_seconds: 0.002,
+        ..TuneConfig::default()
     };
     let profile = tune(&tcfg, None);
     assert_eq!(profile.entries.len(), tcfg.shapes.len());
