@@ -40,7 +40,7 @@ fn main() {
 
     let engine = Engine::start(
         model,
-        EngineConfig { max_batch: 8, kv_budget_tokens: 16384, eos_token: 1, seed: 0 },
+        EngineConfig { max_batch: 8, kv_budget_tokens: 16384, eos_token: 1, seed: 0, ..Default::default() },
     );
 
     // Workload: 24 requests, prompts of 8–32 tokens, 24 new tokens each.

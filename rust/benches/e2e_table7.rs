@@ -12,7 +12,7 @@
 //! per-size tokens/s as a JSON document — what CI uploads as the
 //! `BENCH_e2e.json` perf-trajectory artifact).
 
-use bitnet::coordinator::{Engine, EngineConfig, Request, ServingTrace};
+use bitnet::coordinator::{Engine, EngineConfig, KvDtype, Request, ServingTrace};
 use bitnet::kernels::quant::TernaryWeights;
 use bitnet::kernels::{kernel_for, matmul, matmul_prepared, PreparedActivations, QuantType};
 use bitnet::model::weights::Checkpoint;
@@ -30,7 +30,7 @@ fn record_serving_trace(cfg: &ModelConfig, requests: usize) -> ServingTrace {
     let model = Transformer::synthetic(cfg, QuantType::I2S, 0xACE);
     let engine = Engine::start(
         model,
-        EngineConfig { max_batch: 4, kv_budget_tokens: 4096, eos_token: 1, seed: 7 },
+        EngineConfig { max_batch: 4, kv_budget_tokens: 4096, eos_token: 1, seed: 7, ..Default::default() },
     );
     let mut rng = Rng::new(0xACE);
     let handles: Vec<_> = (0..requests)
@@ -45,6 +45,50 @@ fn record_serving_trace(cfg: &ModelConfig, requests: usize) -> ServingTrace {
         let _ = h.wait();
     }
     engine.trace_snapshot()
+}
+
+/// KV-memory counters from a tight-budget serving workload under one KV
+/// dtype: (resident bytes, budget bytes, peak pages, total pages,
+/// preemptions). The budget is deliberately small so the run exercises
+/// watermark admission and LIFO preemption; resident bytes show the lazy
+/// arena's real footprint (f16 should be half of f32).
+fn measure_kv_memory(
+    cfg: &ModelConfig,
+    dtype: KvDtype,
+    requests: usize,
+) -> (u64, u64, u64, u64, u64) {
+    use std::sync::atomic::Ordering;
+    let model = Transformer::synthetic(cfg, QuantType::I2S, 0xACE);
+    let engine = Engine::start(
+        model,
+        EngineConfig {
+            max_batch: 4,
+            kv_budget_tokens: 128,
+            eos_token: 1,
+            seed: 7,
+            kv_dtype: dtype,
+        },
+    );
+    let mut rng = Rng::new(0xACE);
+    let handles: Vec<_> = (0..requests)
+        .map(|_| {
+            let len = 4 + rng.next_below(12);
+            let prompt: Vec<u32> =
+                (0..len).map(|_| 3 + rng.next_below(cfg.vocab_size - 3) as u32).collect();
+            engine.submit(Request::greedy(prompt, 24))
+        })
+        .collect();
+    for h in handles {
+        let _ = h.wait();
+    }
+    let m = &engine.metrics;
+    (
+        m.kv_resident_bytes.load(Ordering::Relaxed),
+        m.kv_capacity_bytes.load(Ordering::Relaxed),
+        m.kv_pages_peak.load(Ordering::Relaxed),
+        m.kv_pages_total.load(Ordering::Relaxed),
+        m.kv_preemptions.load(Ordering::Relaxed),
+    )
 }
 
 /// Measure real end-to-end prefill and decode throughput (tok/s) of a
@@ -241,6 +285,22 @@ fn main() {
         println!("#   batch width {n:>3}: {:>5.1}% of traffic", w * 100.0);
     }
 
+    // KV arena memory under pressure: the same tight-budget workload in
+    // f32 vs f16 pages — resident bytes (lazy minting), peak pages and
+    // preemption counts the watermark scheduler incurred.
+    let kv_requests = if fast { 6 } else { 12 };
+    println!("\n# KV memory ({kv_requests} requests on tiny, 128-token budget):");
+    let mut kv_rows = Vec::new();
+    for dtype in [KvDtype::F32, KvDtype::F16] {
+        let (resident, budget, peak, total, preempt) =
+            measure_kv_memory(&ModelConfig::tiny(), dtype, kv_requests);
+        println!(
+            "#   {:<4} resident {resident:>8} / {budget:>8} budget bytes | pages peak {peak}/{total} | {preempt} preemptions",
+            dtype.name()
+        );
+        kv_rows.push((dtype, resident, budget, peak, total, preempt));
+    }
+
     // Machine-readable trajectory: one JSON document per run so CI can
     // archive the perf history (`BENCH_e2e.json` artifact).
     if let Ok(path) = std::env::var("BENCH_JSON") {
@@ -290,6 +350,19 @@ fn main() {
                 ])
             })
             .collect();
+        let kv_objs: Vec<Json> = kv_rows
+            .iter()
+            .map(|(dtype, resident, budget, peak, total, preempt)| {
+                Json::Obj(vec![
+                    ("dtype".into(), Json::Str(dtype.name().into())),
+                    ("resident_bytes".into(), Json::Num(*resident as f64)),
+                    ("budget_bytes".into(), Json::Num(*budget as f64)),
+                    ("peak_pages".into(), Json::Num(*peak as f64)),
+                    ("total_pages".into(), Json::Num(*total as f64)),
+                    ("preemptions".into(), Json::Num(*preempt as f64)),
+                ])
+            })
+            .collect();
         let doc = Json::Obj(vec![
             ("bench".into(), Json::Str("e2e_table7".into())),
             ("threads".into(), Json::Num(threads as f64)),
@@ -303,6 +376,7 @@ fn main() {
             ("prepare_reuse".into(), Json::Arr(reuse_objs)),
             ("e2e_measured".into(), Json::Arr(e2e_objs)),
             ("serving_trace".into(), trace.to_json()),
+            ("kv_memory".into(), Json::Arr(kv_objs)),
         ]);
         std::fs::write(&path, doc.to_string_pretty()).expect("write BENCH_JSON");
         println!("# wrote {path}");

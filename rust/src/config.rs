@@ -163,6 +163,10 @@ pub struct LaunchConfig {
     pub threads: usize,
     pub max_batch: usize,
     pub kv_budget_tokens: usize,
+    /// KV-cache element type: `"f32"` (bit-exact default) or `"f16"`
+    /// (half the resident KV bytes; config key `engine.kv_dtype`, CLI
+    /// `--kv-dtype`).
+    pub kv_dtype: String,
     pub seed: u64,
 }
 
@@ -176,6 +180,7 @@ impl Default for LaunchConfig {
             threads: 1,
             max_batch: 8,
             kv_budget_tokens: 8192,
+            kv_dtype: "f32".into(),
             seed: 0,
         }
     }
@@ -194,6 +199,7 @@ impl LaunchConfig {
             threads: cfg.get_usize("engine.threads", d.threads),
             max_batch: cfg.get_usize("engine.max_batch", d.max_batch),
             kv_budget_tokens: cfg.get_usize("engine.kv_budget_tokens", d.kv_budget_tokens),
+            kv_dtype: cfg.get_str("engine.kv_dtype", &d.kv_dtype),
             seed: cfg.get_usize("engine.seed", d.seed as usize) as u64,
         }
     }
@@ -243,6 +249,7 @@ stream = true
         assert_eq!(lc.kernel, "TL2_0");
         assert_eq!(lc.max_batch, 16);
         assert_eq!(lc.kv_budget_tokens, 32768);
+        assert_eq!(lc.kv_dtype, "f32", "kv_dtype defaults to the bit-exact f32");
         assert_eq!(lc.tune_profile.as_deref(), Some("profile.json"));
         assert_eq!(LaunchConfig::default().tune_profile, None);
     }

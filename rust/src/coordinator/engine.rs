@@ -4,7 +4,7 @@
 //! running sequence (continuous batching), prefill is chunked per admitted
 //! request — the standard split the paper's serving setting assumes.
 
-use super::kv_pool::KvPool;
+use super::kv_pool::{KvArena, KvDtype};
 use super::request::{Event, FinishReason, Request, RequestHandle, RequestStats};
 use super::scheduler::{Phase, Scheduler, SeqState};
 use super::trace::{ServingTrace, TraceRecorder};
@@ -14,7 +14,7 @@ use crate::util::Rng;
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -29,11 +29,21 @@ pub struct EngineConfig {
     pub eos_token: u32,
     /// Sampling RNG seed (deterministic serving runs).
     pub seed: u64,
+    /// Element type the KV arena stores (`F16` halves resident KV bytes
+    /// at a small quality cost; `F32` is bit-exact with the pre-paged
+    /// layout).
+    pub kv_dtype: KvDtype,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { max_batch: 8, kv_budget_tokens: 8192, eos_token: 1, seed: 0 }
+        EngineConfig {
+            max_batch: 8,
+            kv_budget_tokens: 8192,
+            eos_token: 1,
+            seed: 0,
+            kv_dtype: KvDtype::F32,
+        }
     }
 }
 
@@ -120,6 +130,18 @@ impl Drop for Engine {
     }
 }
 
+/// Copy the KV arena's page/byte/preemption counters into the lock-free
+/// engine metrics (one lock per step, far off the GEMM path).
+fn mirror_kv_stats(arena: &Arc<Mutex<KvArena>>, metrics: &EngineMetrics) {
+    let a = arena.lock().unwrap();
+    metrics.kv_pages_used.store(a.used_pages() as u64, Ordering::Relaxed);
+    metrics.kv_pages_peak.store(a.peak_used_pages() as u64, Ordering::Relaxed);
+    metrics.kv_pages_total.store(a.total_pages() as u64, Ordering::Relaxed);
+    metrics.kv_resident_bytes.store(a.resident_bytes() as u64, Ordering::Relaxed);
+    metrics.kv_capacity_bytes.store(a.capacity_bytes() as u64, Ordering::Relaxed);
+    metrics.kv_preemptions.store(a.preemptions(), Ordering::Relaxed);
+}
+
 /// Copy the model's prepare-once cache counters into the engine metrics
 /// (the workspace lives behind the model's mutex; metrics are the
 /// lock-free read side).
@@ -149,10 +171,19 @@ fn run_loop(
     metrics: Arc<EngineMetrics>,
     trace: Arc<TraceRecorder>,
 ) {
-    let mut pool = KvPool::new(config.kv_budget_tokens);
+    // The one KV arena every serving session shares: the scheduler
+    // reserves pages in it, sessions read/write through it, and its
+    // counters are mirrored into the engine metrics each step.
+    let arena = Arc::new(Mutex::new(KvArena::new(
+        model.cfg.n_layers,
+        model.cfg.kv_dim(),
+        config.kv_budget_tokens,
+        config.kv_dtype,
+    )));
     let mut scheduler = Scheduler::new(config.max_batch);
     let mut live: HashMap<u64, Live> = HashMap::new();
     let mut rng = Rng::new(config.seed);
+    mirror_kv_stats(&arena, &metrics);
 
     'outer: loop {
         // Drain commands. Block when idle (no running/waiting work).
@@ -181,7 +212,9 @@ fn run_loop(
                         generated: 0,
                         phase: Phase::Waiting,
                     };
-                    if req.prompt.is_empty() || !scheduler.submit(seq, &pool) {
+                    let accepted =
+                        !req.prompt.is_empty() && scheduler.submit(seq, &arena.lock().unwrap());
+                    if !accepted {
                         metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
                         let _ = events.send(Event::Done {
                             request_id: id,
@@ -191,7 +224,8 @@ fn run_loop(
                         continue;
                     }
                     metrics.prompt_tokens.fetch_add(prompt_len as u64, Ordering::Relaxed);
-                    let session = model.new_session(prompt_len + req.max_new_tokens);
+                    let session =
+                        model.new_session_shared(&arena, id, prompt_len + req.max_new_tokens);
                     live.insert(
                         id,
                         Live {
@@ -211,7 +245,10 @@ fn run_loop(
             }
         }
 
-        let plan = scheduler.step(&mut pool);
+        let plan = {
+            let mut a = arena.lock().unwrap();
+            scheduler.step(&mut a)
+        };
         if plan.prefill.is_empty() && plan.decode.is_empty() {
             continue;
         }
@@ -220,23 +257,48 @@ fn run_loop(
             metrics.peak_prefill_chunk.fetch_max(chunk as u64, Ordering::Relaxed);
         }
 
+        // Preempted sequences lost their pages (released by the
+        // scheduler): reset their page-table views so re-admission
+        // re-prefills from position 0.
+        for id in &plan.preempted {
+            if let Some(l) = live.get_mut(id) {
+                l.session.clear();
+            }
+        }
+
         // Prefill newly admitted requests (chunked prompt GEMM); the first
-        // sampled token comes from the prefill logits.
+        // sampled token comes from the prefill logits. Re-admissions after
+        // a preemption rebuild the cache instead: prompt plus every
+        // generated token except the last (which the next decode step
+        // appends) — already-emitted tokens are never re-sampled.
         for id in &plan.prefill {
             let l = live.get_mut(id).expect("live entry for admitted seq");
-            let logits = model.prefill(&mut l.session, &l.req.prompt.clone());
-            // The prompt is in the KV cache *now* — this notification,
-            // not admission planning, is what flips Prefill → Decoding
-            // (so `current_tokens` never claims unprefilled occupancy).
-            scheduler.on_prefilled(*id);
-            let tok = sample(&logits, &l.req.sampling, &mut rng);
-            l.prefilled_at = Some(Instant::now());
-            metrics.ttft.record(l.submitted.elapsed());
-            l.last_token = tok;
-            l.generated.push(tok);
-            let _ = l.events.send(Event::Token { request_id: *id, token: tok });
-            scheduler.on_token(*id);
-            metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
+            if l.generated.is_empty() {
+                let logits = model.prefill(&mut l.session, &l.req.prompt.clone());
+                // The prompt is in the KV cache *now* — this notification,
+                // not admission planning, is what flips Prefill → Decoding
+                // (so `current_tokens` never claims unprefilled occupancy).
+                scheduler.on_prefilled(*id);
+                let tok = sample(&logits, &l.req.sampling, &mut rng);
+                l.prefilled_at = Some(Instant::now());
+                metrics.ttft.record(l.submitted.elapsed());
+                l.last_token = tok;
+                l.generated.push(tok);
+                let _ = l.events.send(Event::Token { request_id: *id, token: tok });
+                scheduler.on_token(*id);
+                if l.req.stop_on_eos && tok == config.eos_token {
+                    // Retired at the next step's retire scan: stop the
+                    // scheduler reserving (or preempting) for a decode
+                    // append that will never run.
+                    scheduler.on_stop(*id);
+                }
+                metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
+            } else {
+                let mut tokens = l.req.prompt.clone();
+                tokens.extend_from_slice(&l.generated[..l.generated.len() - 1]);
+                let _ = model.prefill(&mut l.session, &tokens);
+                scheduler.on_prefilled(*id);
+            }
         }
 
         // Retire sequences that already hit a stop condition.
@@ -278,6 +340,9 @@ fn run_loop(
                 l.generated.push(tok);
                 let _ = l.events.send(Event::Token { request_id: id, token: tok });
                 scheduler.on_token(id);
+                if l.req.stop_on_eos && tok == config.eos_token {
+                    scheduler.on_stop(id);
+                }
                 metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
             }
         }
@@ -297,9 +362,16 @@ fn run_loop(
         metrics.dispatch_degraded.store(model.plan.degraded(), Ordering::Relaxed);
         mirror_prepare_stats(&model, &metrics);
 
+        // Release finished sequences' pages, then mirror the arena state
+        // *before* any Done event goes out: a client woken by Done must
+        // observe post-release occupancy in the metrics.
+        for (id, _) in &finished {
+            scheduler.finish(*id, &mut arena.lock().unwrap());
+        }
+        mirror_kv_stats(&arena, &metrics);
+
         // Emit completions.
         for (id, reason) in finished {
-            scheduler.finish(id, &mut pool);
             if let Some(l) = live.remove(&id) {
                 let stats = RequestStats {
                     queue_wait: l
@@ -340,7 +412,7 @@ mod tests {
         let model = Transformer::synthetic(&ModelConfig::tiny(), QuantType::I2S, 3);
         Engine::start(
             model,
-            EngineConfig { max_batch, kv_budget_tokens: 2048, eos_token: 1, seed: 7 },
+            EngineConfig { max_batch, kv_budget_tokens: 2048, eos_token: 1, seed: 7, ..Default::default() },
         )
     }
 
@@ -406,7 +478,7 @@ mod tests {
         let model = Transformer::synthetic(&ModelConfig::tiny(), QuantType::I2S, 3);
         let engine = Engine::start(
             model,
-            EngineConfig { max_batch: 2, kv_budget_tokens: 64, eos_token: 1, seed: 0 },
+            EngineConfig { max_batch: 2, kv_budget_tokens: 64, eos_token: 1, seed: 0, ..Default::default() },
         );
         let h = engine.submit(Request::greedy((0..100).collect(), 50));
         let (_, reason, _) = h.wait();

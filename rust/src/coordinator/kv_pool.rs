@@ -1,100 +1,426 @@
-//! Paged KV-cache accounting (vLLM-style block allocator).
+//! Paged KV-cache arena (vLLM-style block allocator that **owns the
+//! bytes**).
 //!
-//! The pool divides the engine's KV budget into fixed-size pages of
-//! [`PAGE_TOKENS`] tokens and tracks which sequence holds which pages.
-//! The scheduler admits a request only when its worst-case page demand
-//! (prompt + max_new_tokens) fits — preventing mid-decode OOM-evictions.
-//! Sessions grow page-by-page as they decode, so freed capacity from
-//! finished sequences is immediately reusable (continuous batching).
+//! The arena divides the engine's KV budget into fixed-size pages of
+//! [`PAGE_TOKENS`] tokens and backs them with real storage: one K slab and
+//! one V slab per transformer layer, page-granular, in
+//! [`KvDtype::F32`] (bit-exact with the pre-paged contiguous layout) or
+//! [`KvDtype::F16`] (half the resident bytes, `--kv-dtype f16`). A page id
+//! addresses the same page-sized region in every layer's slabs, so a
+//! sequence needs exactly one page table however deep the model is.
+//!
+//! Memory is **lazy**: slabs grow only when a page id is minted for the
+//! first time, so resident bytes track the *peak pages actually used*,
+//! not the worst-case budget. Freed pages are recycled before new ones
+//! are minted (continuous batching keeps the footprint near the working
+//! set).
+//!
+//! The arena is also the admission-control ledger the
+//! [`super::scheduler::Scheduler`] consults: `reserve`/`release` move
+//! pages between the free list and per-sequence page tables, and
+//! preemptions (watermark admission ran out of room mid-decode) are
+//! counted here for the engine metrics.
 
+use crate::util::f16::f16_to_f32_fast;
+use crate::util::{ceil_div, f32_to_f16};
 use std::collections::HashMap;
 
 /// Tokens per KV page.
 pub const PAGE_TOKENS: usize = 16;
 
-/// Page-granular KV budget manager.
-pub struct KvPool {
-    total_pages: usize,
-    free_pages: Vec<u32>,
-    /// seq id → held pages.
-    held: HashMap<u64, Vec<u32>>,
-    /// High-water mark for metrics.
-    peak_used: usize,
+/// Element type a KV page stores.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvDtype {
+    /// 4 bytes/element; bit-exact with the pre-paged contiguous cache.
+    F32,
+    /// 2 bytes/element; K/V rows round-trip through IEEE binary16 on
+    /// append (half the resident bytes, small perplexity cost).
+    F16,
 }
 
-impl KvPool {
-    /// Pool sized for `max_tokens` total KV tokens across all sequences.
-    /// The page count rounds *up*: flooring would silently discard up to
-    /// `PAGE_TOKENS - 1` tokens of budget the caller paid for (e.g.
-    /// `KvPool::new(100)` serving only 96), so the invariant is
-    /// `total_pages * PAGE_TOKENS >= max_tokens`.
-    pub fn new(max_tokens: usize) -> KvPool {
-        let total_pages = Self::pages_for(max_tokens);
-        KvPool {
-            total_pages,
-            free_pages: (0..total_pages as u32).rev().collect(),
-            held: HashMap::new(),
-            peak_used: 0,
+impl KvDtype {
+    /// Parse a CLI/config value (`f32` | `f16`, case-insensitive).
+    pub fn parse(s: &str) -> Option<KvDtype> {
+        if s.eq_ignore_ascii_case("f32") {
+            Some(KvDtype::F32)
+        } else if s.eq_ignore_ascii_case("f16") {
+            Some(KvDtype::F16)
+        } else {
+            None
         }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::F16 => "f16",
+        }
+    }
+
+    pub fn elem_bytes(self) -> usize {
+        match self {
+            KvDtype::F32 => 4,
+            KvDtype::F16 => 2,
+        }
+    }
+}
+
+/// One layer's K (or V) storage: page-granular, grown lazily as pages are
+/// minted.
+enum Slab {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+}
+
+impl Slab {
+    fn new(dtype: KvDtype) -> Slab {
+        match dtype {
+            KvDtype::F32 => Slab::F32(Vec::new()),
+            KvDtype::F16 => Slab::F16(Vec::new()),
+        }
+    }
+
+    fn grow(&mut self, elems: usize) {
+        match self {
+            Slab::F32(v) => v.resize(v.len() + elems, 0.0),
+            Slab::F16(v) => v.resize(v.len() + elems, 0),
+        }
+    }
+
+    fn byte_len(&self) -> usize {
+        match self {
+            Slab::F32(v) => v.len() * 4,
+            Slab::F16(v) => v.len() * 2,
+        }
+    }
+
+    fn write_row(&mut self, off: usize, row: &[f32]) {
+        match self {
+            Slab::F32(v) => v[off..off + row.len()].copy_from_slice(row),
+            Slab::F16(v) => {
+                for (dst, &src) in v[off..off + row.len()].iter_mut().zip(row.iter()) {
+                    *dst = f32_to_f16(src);
+                }
+            }
+        }
+    }
+
+    /// The first `tn` rows of `page` as f32: borrowed straight from an
+    /// F32 slab, or decoded into `scratch` for F16 (one decode per page
+    /// per query row — the inner attention dot always runs over a
+    /// contiguous f32 slice).
+    fn page_rows<'a>(
+        &'a self,
+        page: u32,
+        page_elems: usize,
+        row_elems: usize,
+        tn: usize,
+        scratch: &'a mut Vec<f32>,
+    ) -> &'a [f32] {
+        let base = page as usize * page_elems;
+        match self {
+            Slab::F32(v) => &v[base..base + tn * row_elems],
+            Slab::F16(v) => {
+                scratch.clear();
+                scratch.extend(v[base..base + tn * row_elems].iter().map(|&b| f16_to_f32_fast(b)));
+                &scratch[..]
+            }
+        }
+    }
+}
+
+/// Page-granular KV arena: budget ledger + page tables + backing slabs.
+pub struct KvArena {
+    n_layers: usize,
+    kv_dim: usize,
+    dtype: KvDtype,
+    page_tokens: usize,
+    total_pages: usize,
+    /// Recycled page ids (released before `next_page` reached the cap).
+    free_pages: Vec<u32>,
+    /// Page ids minted so far == pages of slab storage actually resident.
+    next_page: u32,
+    /// seq id → page table (the indirection attention reads through).
+    tables: HashMap<u64, Vec<u32>>,
+    peak_used: usize,
+    preemptions: u64,
+    k_slabs: Vec<Slab>,
+    v_slabs: Vec<Slab>,
+}
+
+impl KvArena {
+    /// Arena sized for `max_tokens` total KV tokens across all sequences.
+    /// The page count rounds *up*: flooring would silently discard up to
+    /// `PAGE_TOKENS - 1` tokens of budget the caller paid for (e.g. a
+    /// 100-token budget serving only 96), so the invariant is
+    /// `total_pages * PAGE_TOKENS >= max_tokens`. No slab memory is
+    /// allocated here — pages mint lazily on first reserve.
+    pub fn new(n_layers: usize, kv_dim: usize, max_tokens: usize, dtype: KvDtype) -> KvArena {
+        Self::with_page_tokens(n_layers, kv_dim, max_tokens, dtype, PAGE_TOKENS)
+    }
+
+    /// [`KvArena::new`] with an explicit page size (tests: `page_tokens`
+    /// larger than every sequence degenerates to the contiguous layout,
+    /// the bit-identity reference).
+    pub fn with_page_tokens(
+        n_layers: usize,
+        kv_dim: usize,
+        max_tokens: usize,
+        dtype: KvDtype,
+        page_tokens: usize,
+    ) -> KvArena {
+        assert!(page_tokens > 0, "page size must be positive");
+        KvArena {
+            n_layers,
+            kv_dim,
+            dtype,
+            page_tokens,
+            total_pages: ceil_div(max_tokens, page_tokens),
+            free_pages: Vec::new(),
+            next_page: 0,
+            tables: HashMap::new(),
+            peak_used: 0,
+            preemptions: 0,
+            k_slabs: (0..n_layers).map(|_| Slab::new(dtype)).collect(),
+            v_slabs: (0..n_layers).map(|_| Slab::new(dtype)).collect(),
+        }
+    }
+
+    /// A zero-layer arena: pure page accounting, no backing bytes
+    /// (scheduler unit tests and page-math property tests).
+    pub fn accounting(max_tokens: usize) -> KvArena {
+        Self::new(0, 0, max_tokens, KvDtype::F32)
     }
 
     pub fn total_pages(&self) -> usize {
         self.total_pages
     }
 
-    pub fn free_page_count(&self) -> usize {
-        self.free_pages.len()
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
     }
 
+    pub fn dtype(&self) -> KvDtype {
+        self.dtype
+    }
+
+    /// Pages still allocatable (recycled free-list entries plus pages the
+    /// budget allows but that were never minted).
+    pub fn free_page_count(&self) -> usize {
+        self.total_pages - self.used_pages()
+    }
+
+    /// Pages currently held by sequences.
     pub fn used_pages(&self) -> usize {
-        self.total_pages - self.free_pages.len()
+        self.next_page as usize - self.free_pages.len()
     }
 
     pub fn peak_used_pages(&self) -> usize {
         self.peak_used
     }
 
-    /// Pages needed to hold `tokens` tokens.
-    pub fn pages_for(tokens: usize) -> usize {
-        crate::util::ceil_div(tokens, PAGE_TOKENS)
+    /// Sequences preempted because a growth reservation found the arena
+    /// exhausted (see [`super::scheduler::Scheduler::step`]).
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions
     }
 
-    /// Can a sequence with this worst-case token demand be admitted now?
-    pub fn can_admit(&self, worst_case_tokens: usize) -> bool {
-        Self::pages_for(worst_case_tokens) <= self.free_pages.len()
+    /// Count one preemption (called by the scheduler when it evicts).
+    pub fn note_preemption(&mut self) {
+        self.preemptions += 1;
+    }
+
+    /// Pages needed to hold `tokens` tokens.
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        ceil_div(tokens, self.page_tokens)
+    }
+
+    /// Can a sequence with this token demand be granted pages right now?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.pages_for(tokens) <= self.free_page_count()
+    }
+
+    /// Bytes of slab storage actually resident (minted pages only —
+    /// grows to the peak working set, never to the unused budget).
+    pub fn resident_bytes(&self) -> usize {
+        self.k_slabs.iter().chain(self.v_slabs.iter()).map(Slab::byte_len).sum()
+    }
+
+    /// Bytes the full page budget would occupy if every page were minted.
+    pub fn capacity_bytes(&self) -> usize {
+        self.total_pages * self.page_bytes()
+    }
+
+    /// Bytes one page occupies across all layers (K and V).
+    fn page_bytes(&self) -> usize {
+        self.page_tokens * self.kv_dim * self.dtype.elem_bytes() * 2 * self.n_layers
     }
 
     /// Reserve pages for `seq` to cover `tokens` tokens total (idempotent
     /// growth: only the delta beyond current holdings is allocated).
-    /// Returns false (no change) if the pool cannot satisfy the demand.
+    /// Returns false (no change) if the arena cannot satisfy the demand.
     pub fn reserve(&mut self, seq: u64, tokens: usize) -> bool {
-        let want = Self::pages_for(tokens);
-        let have = self.held.get(&seq).map_or(0, |v| v.len());
+        let want = self.pages_for(tokens);
+        let have = self.tables.get(&seq).map_or(0, |v| v.len());
         if want <= have {
             return true;
         }
         let need = want - have;
-        if need > self.free_pages.len() {
+        if need > self.free_page_count() {
             return false;
         }
-        let entry = self.held.entry(seq).or_default();
+        let mut minted = Vec::with_capacity(need);
         for _ in 0..need {
-            entry.push(self.free_pages.pop().unwrap());
+            minted.push(self.alloc_page().expect("free_page_count checked above"));
         }
-        self.peak_used = self.peak_used.max(self.total_pages - self.free_pages.len());
+        self.tables.entry(seq).or_default().extend(minted);
+        self.peak_used = self.peak_used.max(self.used_pages());
         true
     }
 
-    /// Release all pages held by `seq`.
+    fn alloc_page(&mut self) -> Option<u32> {
+        if let Some(p) = self.free_pages.pop() {
+            return Some(p);
+        }
+        if (self.next_page as usize) < self.total_pages {
+            let p = self.next_page;
+            self.next_page += 1;
+            let elems = self.page_tokens * self.kv_dim;
+            for slab in self.k_slabs.iter_mut().chain(self.v_slabs.iter_mut()) {
+                slab.grow(elems);
+            }
+            Some(p)
+        } else {
+            None
+        }
+    }
+
+    /// Release all pages held by `seq` (finish or preemption). The slab
+    /// memory stays minted for reuse; only the ids return to the free
+    /// list.
     pub fn release(&mut self, seq: u64) {
-        if let Some(pages) = self.held.remove(&seq) {
+        if let Some(pages) = self.tables.remove(&seq) {
             self.free_pages.extend(pages);
         }
     }
 
     /// Pages held by `seq`.
     pub fn held_pages(&self, seq: u64) -> usize {
-        self.held.get(&seq).map_or(0, |v| v.len())
+        self.tables.get(&seq).map_or(0, |v| v.len())
+    }
+
+    /// Bytes of KV storage backing `seq`'s held pages — what the
+    /// sequence actually occupies, not its worst-case reservation.
+    pub fn held_bytes(&self, seq: u64) -> usize {
+        self.held_pages(seq) * self.page_bytes()
+    }
+
+    /// Write the K and V rows for token position `pos` of `seq` in
+    /// `layer`. The covering page must already be reserved.
+    pub fn append(&mut self, seq: u64, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        debug_assert_eq!(k.len(), self.kv_dim);
+        debug_assert_eq!(v.len(), self.kv_dim);
+        let page = self.page_of(seq, pos);
+        let off = (page as usize * self.page_tokens + pos % self.page_tokens) * self.kv_dim;
+        self.k_slabs[layer].write_row(off, k);
+        self.v_slabs[layer].write_row(off, v);
+    }
+
+    fn page_of(&self, seq: u64, pos: usize) -> u32 {
+        let table = self.tables.get(&seq).expect("reserve pages before append/attend");
+        *table.get(pos / self.page_tokens).unwrap_or_else(|| {
+            panic!("KV arena: pos {pos} beyond {} reserved pages", table.len())
+        })
+    }
+
+    /// K/V row for `pos` of `seq` in `layer`, decoded to f32 (debug/test
+    /// accessor — the hot path reads whole pages via [`KvArena::attend`]).
+    pub fn kv_row(&self, seq: u64, layer: usize, pos: usize) -> (Vec<f32>, Vec<f32>) {
+        let page = self.page_of(seq, pos);
+        let page_elems = self.page_tokens * self.kv_dim;
+        let row = pos % self.page_tokens;
+        let mut ks = Vec::new();
+        let mut vs = Vec::new();
+        let k = self.k_slabs[layer].page_rows(page, page_elems, self.kv_dim, row + 1, &mut ks);
+        let k = k[row * self.kv_dim..(row + 1) * self.kv_dim].to_vec();
+        let v = self.v_slabs[layer].page_rows(page, page_elems, self.kv_dim, row + 1, &mut vs);
+        let v = v[row * self.kv_dim..(row + 1) * self.kv_dim].to_vec();
+        (k, v)
+    }
+
+    /// Scaled-dot-product attention for one query row against `seq`'s
+    /// cache in `layer`: context positions `0..ctx_len`, grouped-query
+    /// heads, accumulated into `out` (assumed zeroed, `n_heads *
+    /// head_dim`).
+    ///
+    /// The gather is tiled per page so the inner dot product always runs
+    /// over a contiguous slice; per (head, position) arithmetic and
+    /// accumulation order are identical to the pre-paged contiguous
+    /// layout, so F32 results are bit-identical to it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attend(
+        &self,
+        seq: u64,
+        layer: usize,
+        q: &[f32],
+        ctx_len: usize,
+        n_heads: usize,
+        n_kv_heads: usize,
+        head_dim: usize,
+        scale: f32,
+        out: &mut [f32],
+    ) {
+        if ctx_len == 0 {
+            return;
+        }
+        let kvd = self.kv_dim;
+        let page_elems = self.page_tokens * kvd;
+        let group = n_heads / n_kv_heads;
+        let table = self.tables.get(&seq).expect("reserve pages before append/attend");
+        let mut scores = vec![0f32; n_heads * ctx_len];
+        let mut scratch: Vec<f32> = Vec::new();
+        let mut t0 = 0usize;
+        for &page in table.iter() {
+            if t0 >= ctx_len {
+                break;
+            }
+            let tn = self.page_tokens.min(ctx_len - t0);
+            let kp = self.k_slabs[layer].page_rows(page, page_elems, kvd, tn, &mut scratch);
+            for head in 0..n_heads {
+                let kv_head = head / group;
+                let qh = &q[head * head_dim..(head + 1) * head_dim];
+                for t in 0..tn {
+                    let kt = &kp[t * kvd + kv_head * head_dim..t * kvd + (kv_head + 1) * head_dim];
+                    scores[head * ctx_len + t0 + t] =
+                        qh.iter().zip(kt).map(|(a, b)| a * b).sum::<f32>() * scale;
+                }
+            }
+            t0 += tn;
+        }
+        assert!(t0 >= ctx_len, "attend: page table covers {t0} of {ctx_len} context tokens");
+        for head in 0..n_heads {
+            crate::model::ops::softmax(&mut scores[head * ctx_len..(head + 1) * ctx_len]);
+        }
+        let mut t0 = 0usize;
+        for &page in table.iter() {
+            if t0 >= ctx_len {
+                break;
+            }
+            let tn = self.page_tokens.min(ctx_len - t0);
+            let vp = self.v_slabs[layer].page_rows(page, page_elems, kvd, tn, &mut scratch);
+            for head in 0..n_heads {
+                let kv_head = head / group;
+                let oh = &mut out[head * head_dim..(head + 1) * head_dim];
+                for t in 0..tn {
+                    let w = scores[head * ctx_len + t0 + t];
+                    let vt = &vp[t * kvd + kv_head * head_dim..t * kvd + (kv_head + 1) * head_dim];
+                    for (o, &vv) in oh.iter_mut().zip(vt) {
+                        *o += w * vv;
+                    }
+                }
+            }
+            t0 += tn;
+        }
     }
 }
 
@@ -104,76 +430,148 @@ mod tests {
 
     #[test]
     fn pages_for_rounds_up() {
-        assert_eq!(KvPool::pages_for(0), 0);
-        assert_eq!(KvPool::pages_for(1), 1);
-        assert_eq!(KvPool::pages_for(16), 1);
-        assert_eq!(KvPool::pages_for(17), 2);
+        let arena = KvArena::accounting(0);
+        assert_eq!(arena.pages_for(0), 0);
+        assert_eq!(arena.pages_for(1), 1);
+        assert_eq!(arena.pages_for(16), 1);
+        assert_eq!(arena.pages_for(17), 2);
     }
 
     #[test]
     fn budget_rounds_up_not_down() {
         // 100 tokens needs 7 pages (112 tokens); flooring to 6 would
         // strand 4 tokens of paid-for budget.
-        let mut pool = KvPool::new(100);
-        assert_eq!(pool.total_pages(), 7);
+        let mut arena = KvArena::accounting(100);
+        assert_eq!(arena.total_pages(), 7);
         assert!(
-            pool.total_pages() * PAGE_TOKENS >= 100,
+            arena.total_pages() * PAGE_TOKENS >= 100,
             "invariant: page capacity covers the requested budget"
         );
-        assert!(pool.can_admit(100));
-        assert!(pool.reserve(1, 100), "the full paid-for budget is reservable");
+        assert!(arena.can_admit(100));
+        assert!(arena.reserve(1, 100), "the full paid-for budget is reservable");
         // Exact multiples and zero stay exact.
-        assert_eq!(KvPool::new(160).total_pages(), 10);
-        assert_eq!(KvPool::new(0).total_pages(), 0);
+        assert_eq!(KvArena::accounting(160).total_pages(), 10);
+        assert_eq!(KvArena::accounting(0).total_pages(), 0);
     }
 
     #[test]
     fn reserve_and_release_cycle() {
-        let mut pool = KvPool::new(160); // 10 pages
-        assert!(pool.reserve(1, 50)); // 4 pages
-        assert_eq!(pool.held_pages(1), 4);
-        assert_eq!(pool.free_page_count(), 6);
-        assert!(pool.reserve(2, 96)); // 6 pages
-        assert_eq!(pool.free_page_count(), 0);
-        assert!(!pool.can_admit(1));
-        pool.release(1);
-        assert_eq!(pool.free_page_count(), 4);
-        assert!(pool.can_admit(64));
-        assert!(!pool.can_admit(65));
+        let mut arena = KvArena::accounting(160); // 10 pages
+        assert!(arena.reserve(1, 50)); // 4 pages
+        assert_eq!(arena.held_pages(1), 4);
+        assert_eq!(arena.free_page_count(), 6);
+        assert!(arena.reserve(2, 96)); // 6 pages
+        assert_eq!(arena.free_page_count(), 0);
+        assert!(!arena.can_admit(1));
+        arena.release(1);
+        assert_eq!(arena.free_page_count(), 4);
+        assert!(arena.can_admit(64));
+        assert!(!arena.can_admit(65));
     }
 
     #[test]
     fn growth_is_incremental() {
-        let mut pool = KvPool::new(160);
-        assert!(pool.reserve(7, 16)); // 1 page
-        assert!(pool.reserve(7, 17)); // grow to 2
-        assert_eq!(pool.held_pages(7), 2);
-        assert!(pool.reserve(7, 10)); // shrink requests are no-ops
-        assert_eq!(pool.held_pages(7), 2);
+        let mut arena = KvArena::accounting(160);
+        assert!(arena.reserve(7, 16)); // 1 page
+        assert!(arena.reserve(7, 17)); // grow to 2
+        assert_eq!(arena.held_pages(7), 2);
+        assert!(arena.reserve(7, 10)); // shrink requests are no-ops
+        assert_eq!(arena.held_pages(7), 2);
     }
 
     #[test]
     fn reserve_fails_atomically() {
-        let mut pool = KvPool::new(32); // 2 pages
-        assert!(pool.reserve(1, 16));
-        assert!(!pool.reserve(2, 32), "2 pages not available");
-        assert_eq!(pool.held_pages(2), 0, "failed reserve must not leak");
-        assert_eq!(pool.free_page_count(), 1);
+        let mut arena = KvArena::accounting(32); // 2 pages
+        assert!(arena.reserve(1, 16));
+        assert!(!arena.reserve(2, 32), "2 pages not available");
+        assert_eq!(arena.held_pages(2), 0, "failed reserve must not leak");
+        assert_eq!(arena.free_page_count(), 1);
     }
 
     #[test]
     fn peak_tracking() {
-        let mut pool = KvPool::new(160);
-        pool.reserve(1, 80);
-        pool.release(1);
-        pool.reserve(2, 16);
-        assert_eq!(pool.peak_used_pages(), 5);
+        let mut arena = KvArena::accounting(160);
+        arena.reserve(1, 80);
+        arena.release(1);
+        arena.reserve(2, 16);
+        assert_eq!(arena.peak_used_pages(), 5);
     }
 
     #[test]
     fn release_unknown_seq_is_noop() {
-        let mut pool = KvPool::new(64);
-        pool.release(99);
-        assert_eq!(pool.free_page_count(), 4);
+        let mut arena = KvArena::accounting(64);
+        arena.release(99);
+        assert_eq!(arena.free_page_count(), 4);
+    }
+
+    #[test]
+    fn slabs_mint_lazily_and_recycle() {
+        // 2 layers, kv_dim 4 → one page (16 tokens) costs
+        // 16 tokens * 4 elems * 4 B * 2 (K+V) * 2 layers = 1024 B.
+        let page_bytes = 16 * 4 * 4 * 2 * 2;
+        let mut arena = KvArena::new(2, 4, 64, KvDtype::F32);
+        assert_eq!(arena.total_pages(), 4);
+        assert_eq!(arena.resident_bytes(), 0, "no pages minted up front");
+        assert_eq!(arena.capacity_bytes(), 4 * page_bytes);
+        assert!(arena.reserve(1, 10));
+        assert_eq!(arena.resident_bytes(), page_bytes);
+        assert_eq!(arena.held_bytes(1), page_bytes);
+        assert!(arena.reserve(1, 30)); // second page
+        assert_eq!(arena.resident_bytes(), 2 * page_bytes);
+        arena.release(1);
+        assert_eq!(arena.held_bytes(1), 0);
+        // Recycled pages keep their storage: resident bytes don't move.
+        assert!(arena.reserve(2, 32));
+        assert_eq!(arena.resident_bytes(), 2 * page_bytes);
+        assert!(arena.resident_bytes() <= arena.capacity_bytes());
+    }
+
+    #[test]
+    fn f16_pages_halve_resident_bytes() {
+        let mut a32 = KvArena::new(2, 4, 64, KvDtype::F32);
+        let mut a16 = KvArena::new(2, 4, 64, KvDtype::F16);
+        assert!(a32.reserve(1, 32));
+        assert!(a16.reserve(1, 32));
+        assert_eq!(a16.resident_bytes() * 2, a32.resident_bytes());
+        assert_eq!(a16.capacity_bytes() * 2, a32.capacity_bytes());
+    }
+
+    #[test]
+    fn append_read_round_trip_across_page_boundary() {
+        let kvd = 4;
+        let mut arena = KvArena::new(1, kvd, 64, KvDtype::F32);
+        assert!(arena.reserve(9, 20)); // 2 pages: positions 0..=19
+        for pos in [0usize, 15, 16, 19] {
+            let k: Vec<f32> = (0..kvd).map(|i| (pos * 10 + i) as f32).collect();
+            let v: Vec<f32> = (0..kvd).map(|i| -((pos * 10 + i) as f32)).collect();
+            arena.append(9, 0, pos, &k, &v);
+            let (rk, rv) = arena.kv_row(9, 0, pos);
+            assert_eq!(rk, k, "K row at pos {pos}");
+            assert_eq!(rv, v, "V row at pos {pos}");
+        }
+    }
+
+    #[test]
+    fn f16_rows_round_trip_within_half_precision() {
+        let kvd = 8;
+        let mut arena = KvArena::new(1, kvd, 32, KvDtype::F16);
+        assert!(arena.reserve(1, 17));
+        let k: Vec<f32> = (0..kvd).map(|i| 0.37 * (i as f32 + 1.0)).collect();
+        let v: Vec<f32> = (0..kvd).map(|i| -1.625 * (i as f32 + 1.0)).collect();
+        arena.append(1, 0, 16, &k, &v);
+        let (rk, rv) = arena.kv_row(1, 0, 16);
+        for (a, b) in rk.iter().zip(k.iter()).chain(rv.iter().zip(v.iter())) {
+            let ulp = (b.abs() / 1024.0).max(6e-8);
+            assert!((a - b).abs() <= ulp, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn preemption_counter() {
+        let mut arena = KvArena::accounting(16);
+        assert_eq!(arena.preemptions(), 0);
+        arena.note_preemption();
+        arena.note_preemption();
+        assert_eq!(arena.preemptions(), 2);
     }
 }

@@ -1,7 +1,8 @@
 //! Layer-3 coordinator: the serving system around the kernel library —
-//! request router, paged KV accounting, continuous-batching scheduler and
-//! the engine event loop (the role llama.cpp's `server` / vLLM's router
-//! play for the paper's system).
+//! request router, the paged KV arena that owns the cache bytes
+//! ([`kv_pool::KvArena`]), a continuous-batching scheduler with watermark
+//! admission and LIFO preemption, and the engine event loop (the role
+//! llama.cpp's `server` / vLLM's router play for the paper's system).
 //!
 //! Threading model: one engine thread owns the model and all sessions;
 //! clients submit [`request::Request`]s over a channel and stream
@@ -15,5 +16,6 @@ pub mod scheduler;
 pub mod trace;
 
 pub use engine::{Engine, EngineConfig};
+pub use kv_pool::{KvArena, KvDtype, PAGE_TOKENS};
 pub use request::{Event, FinishReason, Request, RequestHandle};
 pub use trace::{ServingTrace, TraceRecorder};

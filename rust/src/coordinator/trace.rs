@@ -21,6 +21,12 @@ use std::sync::Mutex;
 /// on breaking schema changes).
 pub const TRACE_VERSION: u64 = 1;
 
+/// L1-distance threshold above which `run`/`serve` warn that live
+/// traffic has drifted from the shapes the loaded profile was tuned at
+/// (see [`ServingTrace::drift_l1`]; the distance lives in `[0, 2]`, so
+/// 0.5 means a quarter of the probability mass moved).
+pub const DRIFT_WARN_L1: f64 = 0.5;
+
 /// A recorded serving-shape histogram. Keys are GEMM batch widths (rows
 /// of the activation batch): prompt tokens per prefill call, sequences
 /// per batched decode call. `BTreeMap` keeps iteration (and the JSON on
@@ -183,6 +189,37 @@ impl ServingTrace {
         }
     }
 
+    /// L1 distance in `[0, 2]` between this trace's batch-width
+    /// distribution ([`ServingTrace::weighted_batches`]) and a tuning
+    /// profile's recorded per-width traffic weights
+    /// (`TuningProfile::weighted_widths`). Both sides are normalized
+    /// over the union of widths, so mass on widths only one side knows
+    /// about counts in full — a workload running shapes the profile
+    /// never measured *is* drift. `run`/`serve` compare the live trace
+    /// against the loaded profile and suggest a re-tune above
+    /// [`DRIFT_WARN_L1`].
+    pub fn drift_l1(&self, profile_widths: &[(usize, f64)]) -> f64 {
+        let live = self.weighted_batches();
+        let total_p: f64 = profile_widths.iter().map(|&(_, w)| w).sum();
+        let mut widths: Vec<usize> = live
+            .iter()
+            .map(|&(n, _)| n)
+            .chain(profile_widths.iter().map(|&(n, _)| n))
+            .collect();
+        widths.sort_unstable();
+        widths.dedup();
+        let weight_of = |v: &[(usize, f64)], n: usize| {
+            v.iter().find(|&&(m, _)| m == n).map_or(0.0, |&(_, w)| w)
+        };
+        widths
+            .iter()
+            .map(|&n| {
+                let p = if total_p > 0.0 { weight_of(profile_widths, n) / total_p } else { 0.0 };
+                (weight_of(&live, n) - p).abs()
+            })
+            .sum()
+    }
+
     /// One-line human summary for logs.
     pub fn summary(&self) -> String {
         format!(
@@ -318,6 +355,7 @@ mod tests {
             prefill: (0..chunks.len() as u64).collect(),
             prefill_chunks: chunks,
             decode,
+            preempted: Vec::new(),
         }
     }
 
@@ -401,6 +439,33 @@ mod tests {
         assert_eq!(top.iter().map(|&(n, _)| n).collect::<Vec<_>>(), vec![1, 4]);
         let kept: f64 = top.iter().map(|(_, w)| w).sum();
         assert!((kept - 16.0 / 20.0).abs() < 1e-12, "{kept}");
+    }
+
+    #[test]
+    fn drift_is_zero_for_matching_distributions() {
+        let mut t = ServingTrace::new();
+        for _ in 0..3 {
+            t.record_decode(1);
+        }
+        t.record_prefill(8);
+        // Profile weights proportional to the trace (un-normalized on
+        // purpose: drift_l1 normalizes the profile side).
+        let widths = vec![(1usize, 7.5), (8usize, 2.5)];
+        assert!(t.drift_l1(&widths) < 1e-12);
+    }
+
+    #[test]
+    fn drift_counts_disjoint_mass_in_full() {
+        let mut t = ServingTrace::new();
+        t.record_decode(4); // all live traffic at width 4
+        let widths = vec![(1usize, 1.0)]; // profile tuned only width 1
+        let d = t.drift_l1(&widths);
+        assert!((d - 2.0).abs() < 1e-12, "fully disjoint → L1 of 2, got {d}");
+        assert!(d > DRIFT_WARN_L1);
+        // Half the live mass moved off the tuned width: L1 = 1.0.
+        t.record_decode(1);
+        let d = t.drift_l1(&widths);
+        assert!((d - 1.0).abs() < 1e-12, "{d}");
     }
 
     #[test]

@@ -178,6 +178,31 @@ impl TuningProfile {
         }
     }
 
+    /// The per-batch-width traffic fractions this profile was tuned at:
+    /// one row per distinct `n` across `entries` (the `weight` field is
+    /// per width, so the first entry at each width carries it), widths
+    /// ascending, normalized to sum to 1. Fixed `--batches` sweeps store
+    /// weight 1.0 per width and normalize to uniform. Empty for a
+    /// profile with no entries. `run`/`serve` compare this against the
+    /// live `ServingTrace` to warn when traffic drifts from what was
+    /// tuned (`ServingTrace::drift_l1`).
+    pub fn weighted_widths(&self) -> Vec<(usize, f64)> {
+        let mut per_n: Vec<(usize, f64)> = Vec::new();
+        for e in &self.entries {
+            if !per_n.iter().any(|&(n, _)| n == e.n) {
+                per_n.push((e.n, e.weight));
+            }
+        }
+        per_n.sort_unstable_by_key(|&(n, _)| n);
+        let total: f64 = per_n.iter().map(|&(_, w)| w).sum();
+        if total > 0.0 {
+            for e in per_n.iter_mut() {
+                e.1 /= total;
+            }
+        }
+        per_n
+    }
+
     /// Select the kernel for an `m`×`k` matmul at batch size `n`.
     ///
     /// Resolution order (documented contract, see docs/tuning.md):

@@ -15,7 +15,8 @@
 use anyhow::{bail, Context, Result};
 use bitnet::cli::Args;
 use bitnet::config::{Config, LaunchConfig};
-use bitnet::coordinator::{Engine, EngineConfig, Request, ServingTrace};
+use bitnet::coordinator::trace::DRIFT_WARN_L1;
+use bitnet::coordinator::{Engine, EngineConfig, KvDtype, Request, ServingTrace};
 use bitnet::kernels::tuner::{self, OverrideSearchConfig, TuneConfig, TuningProfile};
 use bitnet::kernels::{library_table, Dispatch, DispatchPlan, QuantType};
 use bitnet::model::{ModelConfig, SamplingParams, Transformer};
@@ -36,9 +37,10 @@ const USAGE: &str = "usage: bitnet <info|gen-model|run|serve|tune|pjrt> [options
   run       --preset tiny --kernel I2_S --threads 1 --prompt 'text' --max-new 32
             [--model model.btnz] [--temperature 0.0]
             [--qtype auto --tune-profile profile.json]
-            [--record-trace trace.json] [--verbose]
+            [--kv-dtype f32|f16] [--record-trace trace.json] [--verbose]
   serve     --preset tiny --kernel TL2_0 --threads 2 --requests 16 --max-batch 8
             [--qtype auto --tune-profile profile.json]
+            [--kv-dtype f32|f16] [--kv-budget 8192]
             [--record-trace trace.json]
   tune      --out profile.json [--preset tiny] [--threads 1] [--batches 1,4]
             [--trace trace.json] [--trace-widths 16] [--search-overrides]
@@ -61,7 +63,14 @@ const USAGE: &str = "usage: bitnet <info|gen-model|run|serve|tune|pjrt> [options
   sweeps exactly those shapes (replacing --batches) weighted by their
   observed frequency; `tune --search-overrides` additionally sweeps
   first/last-vs-middle per-layer kernel compositions end to end and
-  writes the winning LayerOverride rows into the profile.";
+  writes the winning LayerOverride rows into the profile. Under auto
+  dispatch, run/serve compare the live shape histogram against the
+  profile's tuned widths and warn when traffic has drifted (re-tune).
+
+  KV memory is paged: --kv-budget caps total KV tokens across
+  sequences, --kv-dtype f16 halves resident KV bytes (f32 stays
+  bit-exact); the scheduler admits on prompt-fit and preempts
+  LIFO under pressure. See docs/serving.md.";
 
 fn run() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1), &["help", "verbose", "e2e", "search-overrides"])?;
@@ -104,8 +113,47 @@ fn launch_config(args: &Args) -> Result<LaunchConfig> {
     }
     lc.threads = args.get_usize("threads", lc.threads)?;
     lc.max_batch = args.get_usize("max-batch", lc.max_batch)?;
+    lc.kv_budget_tokens = args.get_usize("kv-budget", lc.kv_budget_tokens)?;
+    if let Some(d) = args.get("kv-dtype") {
+        lc.kv_dtype = d.to_string();
+    }
     lc.seed = args.get_usize("seed", lc.seed as usize)? as u64;
     Ok(lc)
+}
+
+/// Resolve the `--kv-dtype`/config value into a [`KvDtype`].
+fn build_kv_dtype(lc: &LaunchConfig) -> Result<KvDtype> {
+    KvDtype::parse(&lc.kv_dtype)
+        .with_context(|| format!("unknown --kv-dtype {:?} (expected f32 or f16)", lc.kv_dtype))
+}
+
+/// Warn when the shapes a run actually exhibited drifted from the widths
+/// its tuning profile was measured at (ROADMAP: re-tune triggers from
+/// serving). `profile_widths` comes from
+/// `TuningProfile::weighted_widths()` captured at profile load; empty
+/// when dispatch is fixed or the profile has no entries.
+fn warn_on_trace_drift(profile_widths: &[(usize, f64)], trace: &ServingTrace) {
+    if profile_widths.is_empty() || trace.is_empty() {
+        return;
+    }
+    let drift = trace.drift_l1(profile_widths);
+    if drift > DRIFT_WARN_L1 {
+        eprintln!(
+            "warning: live serving shapes drifted from the tuning profile \
+             (L1 distance {drift:.2} > {DRIFT_WARN_L1}): the profile was measured at batch \
+             widths this workload no longer runs; re-record with --record-trace and re-run \
+             `bitnet tune --trace <trace.json>`"
+        );
+    }
+}
+
+/// The tuned batch-width distribution to check serving drift against —
+/// captured before the model moves into the engine.
+fn profile_widths_of(model: &Transformer) -> Vec<(usize, f64)> {
+    match model.plan.dispatch() {
+        Dispatch::Auto(profile) => profile.weighted_widths(),
+        Dispatch::Fixed(_) => Vec::new(),
+    }
 }
 
 /// Resolve the `--kernel`/`--qtype` value into a dispatch policy.
@@ -207,9 +255,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     let max_new = args.get_usize("max-new", 32)?;
     let temperature: f32 = args.get_or("temperature", "0.0").parse().context("--temperature")?;
 
+    let kv_dtype = build_kv_dtype(&lc)?;
     let tok = Tokenizer::train(&synthetic_corpus(5000, 1), model.cfg.vocab_size.min(2048));
     let prompt = tok.encode(&prompt_text);
-    let mut session = model.new_session(prompt.len() + max_new);
+    let mut session = model.new_session_dtype(prompt.len() + max_new, kv_dtype);
 
     let t0 = std::time::Instant::now();
     let mut logits = model.prefill(&mut session, &prompt);
@@ -244,16 +293,27 @@ fn cmd_run(args: &Args) -> Result<()> {
             "prepare cache: {} hits / {} misses | buffers: {} reused, {} alloc'd",
             ps.hits, ps.misses, ps.buffer_reuses, ps.buffer_allocs
         );
+        // KV arena stats: pages actually held and their resident bytes
+        // (lazy minting — not the worst-case capacity).
+        eprintln!(
+            "kv arena: {} pages held, {} KV bytes resident ({} dtype)",
+            session.held_pages(),
+            session.kv_bytes(),
+            kv_dtype.name()
+        );
     }
+    // The shape histogram this run exhibited: one prefill chunk of the
+    // prompt length, then `max_new` single-sequence decode steps — used
+    // for the profile-drift check and, with --record-trace, persisted
+    // for `tune --trace`.
+    let mut trace = ServingTrace::new();
+    trace.record_prefill(prompt.len());
+    for _ in 0..max_new {
+        trace.record_decode(1);
+    }
+    trace.steps = 1 + max_new as u64;
+    warn_on_trace_drift(&profile_widths_of(&model), &trace);
     if let Some(tp) = args.get("record-trace") {
-        // Single-request run: one prefill chunk of the prompt length,
-        // then `max_new` single-sequence decode steps.
-        let mut trace = ServingTrace::new();
-        trace.record_prefill(prompt.len());
-        for _ in 0..max_new {
-            trace.record_decode(1);
-        }
-        trace.steps = 1 + max_new as u64;
         trace.save(Path::new(tp))?;
         eprintln!("wrote trace {tp} ({})", trace.summary());
     }
@@ -264,8 +324,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let lc = launch_config(args)?;
     let n_requests = args.get_usize("requests", 16)?;
     let max_new = args.get_usize("max-new", 16)?;
+    let kv_dtype = build_kv_dtype(&lc)?;
     let model = build_model(&lc, args.has_flag("verbose"))?;
     let vocab = model.cfg.vocab_size as u32;
+    let profile_widths = profile_widths_of(&model);
     let engine = Engine::start(
         model,
         EngineConfig {
@@ -273,6 +335,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             kv_budget_tokens: lc.kv_budget_tokens,
             eos_token: 1,
             seed: lc.seed,
+            kv_dtype,
         },
     );
     let mut rng = bitnet::util::Rng::new(lc.seed + 1);
@@ -299,11 +362,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
         total_tokens as f64 / wall.as_secs_f64()
     );
     println!("engine: {}", engine.metrics.summary());
+    // KV arena footprint: resident bytes track the peak pages actually
+    // minted, never the worst-case budget — enforced here so the CI
+    // serve smoke fails loudly if paging ever regresses to eager
+    // worst-case allocation.
+    let resident = engine.metrics.kv_resident_bytes.load(std::sync::atomic::Ordering::Relaxed);
+    let budget = engine.metrics.kv_capacity_bytes.load(std::sync::atomic::Ordering::Relaxed);
+    let preemptions = engine.metrics.kv_preemptions.load(std::sync::atomic::Ordering::Relaxed);
+    println!(
+        "kv arena: {kv} dtype, {resident} of {budget} budget bytes resident, {preemptions} preemptions",
+        kv = kv_dtype.name()
+    );
+    if resident > budget {
+        bail!("KV arena resident bytes {resident} exceed the {budget}-byte budget");
+    }
     if args.has_flag("verbose") {
         println!("kernels: {}", engine.kernel_info);
     }
+    let trace = engine.trace_snapshot();
+    warn_on_trace_drift(&profile_widths, &trace);
     if let Some(tp) = args.get("record-trace") {
-        let trace = engine.trace_snapshot();
         trace.save(Path::new(tp))?;
         eprintln!("wrote trace {tp} ({})", trace.summary());
     }

@@ -118,6 +118,22 @@ pub struct EngineMetrics {
     /// widths) the trace has observed — a small number that stops
     /// growing means the tuning sweep derived from this trace is cheap.
     pub trace_shapes: AtomicU64,
+    /// KV arena pages currently held by running sequences.
+    pub kv_pages_used: AtomicU64,
+    /// High-water mark of held KV pages — with lazy minting this is also
+    /// (pages-wise) the resident slab footprint.
+    pub kv_pages_peak: AtomicU64,
+    /// Total pages the KV budget allows (`kv_budget_tokens`, rounded up).
+    pub kv_pages_total: AtomicU64,
+    /// Bytes of KV slab storage actually allocated (minted pages only —
+    /// proportional to the peak working set, not the worst-case budget).
+    pub kv_resident_bytes: AtomicU64,
+    /// Bytes the full KV page budget would occupy if every page minted.
+    pub kv_capacity_bytes: AtomicU64,
+    /// Sequences preempted back to Waiting because a decode-growth page
+    /// reservation found the arena exhausted (they re-prefill on
+    /// re-admission) — the price of watermark over worst-case admission.
+    pub kv_preemptions: AtomicU64,
     pub step_latency: LatencyHistogram,
     pub ttft: LatencyHistogram,
 }
@@ -139,7 +155,7 @@ impl EngineMetrics {
     /// Human-readable one-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "req {}/{} done, {} rejected | tokens {}+{} | steps {} (mean batch {:.2}, peak {}) | step mean {:.1}µs p99 {}µs | ttft mean {:.1}µs | dispatch fallbacks {} degraded {} | prepare {} hits / {} misses (buffers {} reused, {} alloc'd) | trace {} steps / {} shapes",
+            "req {}/{} done, {} rejected | tokens {}+{} | steps {} (mean batch {:.2}, peak {}) | step mean {:.1}µs p99 {}µs | ttft mean {:.1}µs | dispatch fallbacks {} degraded {} | prepare {} hits / {} misses (buffers {} reused, {} alloc'd) | trace {} steps / {} shapes | kv {}/{} pages (peak {}) {} KiB resident, {} preemptions",
             self.requests_completed.load(Ordering::Relaxed),
             self.requests_submitted.load(Ordering::Relaxed),
             self.requests_rejected.load(Ordering::Relaxed),
@@ -159,6 +175,11 @@ impl EngineMetrics {
             self.prepare_buffer_allocs.load(Ordering::Relaxed),
             self.trace_steps.load(Ordering::Relaxed),
             self.trace_shapes.load(Ordering::Relaxed),
+            self.kv_pages_used.load(Ordering::Relaxed),
+            self.kv_pages_total.load(Ordering::Relaxed),
+            self.kv_pages_peak.load(Ordering::Relaxed),
+            self.kv_resident_bytes.load(Ordering::Relaxed) / 1024,
+            self.kv_preemptions.load(Ordering::Relaxed),
         )
     }
 }

@@ -12,14 +12,15 @@
 
 use super::bitlinear::BitLinear;
 use super::config::ModelConfig;
-use super::ops::{rmsnorm, rope, softmax, swiglu};
+use super::ops::{rmsnorm, rope, swiglu};
 use super::weights::Checkpoint;
+use crate::coordinator::kv_pool::{KvArena, KvDtype};
 use crate::kernels::baselines::f16_mad::dot_f16;
 use crate::kernels::tuner::{DispatchPlan, Role};
 use crate::kernels::{kernel_for, Dispatch, PrepareStats, PreparedActivations, QuantType};
 use crate::threadpool::ThreadPool;
 use crate::util::f32_to_f16;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// High-precision (f16-stored) dense layer for the LM head.
 pub struct DenseF16 {
@@ -82,42 +83,106 @@ pub struct Layer {
     pub ffn_norm: Vec<f32>,
 }
 
-/// Per-sequence inference state: position + per-layer KV cache.
+/// Per-sequence inference state: a **page-table view** into a
+/// [`KvArena`] — position plus a sequence id whose pages live in the
+/// arena. The session owns no KV buffers itself: standalone sessions
+/// ([`Session::new`]) carry a private arena sized for their capacity,
+/// serving sessions ([`Session::shared`]) all point at the engine's one
+/// shared arena, where the scheduler reserves their pages.
 pub struct Session {
     pub pos: usize,
     pub capacity: usize,
-    kv_dim: usize,
-    /// One (k, v) pair of `capacity × kv_dim` buffers per layer.
-    k_cache: Vec<Vec<f32>>,
-    v_cache: Vec<Vec<f32>>,
+    seq: u64,
+    arena: Arc<Mutex<KvArena>>,
 }
 
 impl Session {
+    /// Standalone session backed by a private f32 arena sized for
+    /// `capacity` tokens (the non-serving paths: `run`, eval, tests).
     pub fn new(n_layers: usize, kv_dim: usize, capacity: usize) -> Session {
-        Session {
-            pos: 0,
-            capacity,
-            kv_dim,
-            k_cache: (0..n_layers).map(|_| vec![0f32; capacity * kv_dim]).collect(),
-            v_cache: (0..n_layers).map(|_| vec![0f32; capacity * kv_dim]).collect(),
-        }
+        Self::with_dtype(n_layers, kv_dim, capacity, KvDtype::F32)
+    }
+
+    /// Standalone session with an explicit KV element type
+    /// (`--kv-dtype f16` halves resident KV bytes).
+    pub fn with_dtype(
+        n_layers: usize,
+        kv_dim: usize,
+        capacity: usize,
+        dtype: KvDtype,
+    ) -> Session {
+        let arena = KvArena::new(n_layers, kv_dim, capacity, dtype);
+        Session { pos: 0, capacity, seq: 0, arena: Arc::new(Mutex::new(arena)) }
+    }
+
+    /// A view into a shared arena: pages for `seq` are reserved there by
+    /// the serving scheduler (or lazily on append when standalone code
+    /// drives a shared arena directly).
+    pub fn shared(arena: Arc<Mutex<KvArena>>, seq: u64, capacity: usize) -> Session {
+        Session { pos: 0, capacity, seq, arena }
     }
 
     fn append(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
         assert!(pos < self.capacity, "KV cache overflow at pos {pos}");
-        let d = self.kv_dim;
-        self.k_cache[layer][pos * d..(pos + 1) * d].copy_from_slice(k);
-        self.v_cache[layer][pos * d..(pos + 1) * d].copy_from_slice(v);
+        let mut arena = self.arena.lock().unwrap();
+        // Idempotent for already-reserved pages (the serving scheduler
+        // reserves ahead of every step); mints lazily for standalone
+        // sessions growing into their private arena.
+        assert!(arena.reserve(self.seq, pos + 1), "KV arena exhausted at pos {pos}");
+        arena.append(self.seq, layer, pos, k, v);
     }
 
-    /// Bytes held by the KV cache (coordinator accounting).
+    /// Attention for one query row over this session's cached context
+    /// (positions `0..ctx_len`) in `layer`; see [`KvArena::attend`].
+    #[allow(clippy::too_many_arguments)]
+    fn attend(
+        &self,
+        layer: usize,
+        q: &[f32],
+        ctx_len: usize,
+        n_heads: usize,
+        n_kv_heads: usize,
+        head_dim: usize,
+        scale: f32,
+        out: &mut [f32],
+    ) {
+        self.arena
+            .lock()
+            .unwrap()
+            .attend(self.seq, layer, q, ctx_len, n_heads, n_kv_heads, head_dim, scale, out);
+    }
+
+    /// Bytes of KV storage actually resident for this sequence (held
+    /// pages × page bytes × dtype width) — not the worst-case capacity,
+    /// which the pre-paged layout eagerly allocated and reported.
     pub fn kv_bytes(&self) -> usize {
-        self.k_cache.iter().chain(self.v_cache.iter()).map(|v| v.len() * 4).sum()
+        self.arena.lock().unwrap().held_bytes(self.seq)
     }
 
-    /// Reset for reuse.
+    /// Pages this sequence currently holds in its arena.
+    pub fn held_pages(&self) -> usize {
+        self.arena.lock().unwrap().held_pages(self.seq)
+    }
+
+    /// Reset the position for reuse (appends overwrite from 0). Page
+    /// ownership is untouched: in serving, the scheduler releases pages
+    /// at preemption/finish — and may have *re-reserved* them for a
+    /// same-step re-admission by the time the engine resets the session,
+    /// so releasing here would drop a live reservation. Standalone
+    /// sessions simply keep their pages and overwrite them.
     pub fn clear(&mut self) {
         self.pos = 0;
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        // Return pages to a shared arena when the engine retires the
+        // session without an explicit release; harmless double-release
+        // otherwise (release of an unknown seq is a no-op).
+        if let Ok(mut arena) = self.arena.lock() {
+            arena.release(self.seq);
+        }
     }
 }
 
@@ -257,7 +322,29 @@ impl Transformer {
     }
 
     pub fn new_session(&self, capacity: usize) -> Session {
-        Session::new(self.cfg.n_layers, self.cfg.kv_dim(), capacity.min(self.cfg.max_seq_len))
+        self.new_session_dtype(capacity, KvDtype::F32)
+    }
+
+    /// Standalone session with an explicit KV element type.
+    pub fn new_session_dtype(&self, capacity: usize, dtype: KvDtype) -> Session {
+        Session::with_dtype(
+            self.cfg.n_layers,
+            self.cfg.kv_dim(),
+            capacity.min(self.cfg.max_seq_len),
+            dtype,
+        )
+    }
+
+    /// Serving session: a page-table view into the engine's shared
+    /// arena, which must have been built for this model's layer count
+    /// and KV dim (see `coordinator::engine`).
+    pub fn new_session_shared(
+        &self,
+        arena: &Arc<Mutex<KvArena>>,
+        seq: u64,
+        capacity: usize,
+    ) -> Session {
+        Session::shared(Arc::clone(arena), seq, capacity.min(self.cfg.max_seq_len))
     }
 
     /// One layer's projections with the [`Role`] each plays — the order
@@ -432,7 +519,6 @@ impl Transformer {
         let h = cfg.hidden;
         let hd = cfg.head_dim();
         let kvd = cfg.kv_dim();
-        let group = cfg.n_heads / cfg.n_kv_heads;
 
         // ---- Attention ----
         let mut normed = vec![0f32; n * h];
@@ -466,31 +552,24 @@ impl Transformer {
             let s = if prefill { &mut *sessions[0] } else { &mut *sessions[i] };
             s.append(li, positions[i], &k[i * kvd..(i + 1) * kvd], &v[i * kvd..(i + 1) * kvd]);
         }
-        // Scaled dot-product attention per row against its session's cache.
+        // Scaled dot-product attention per row against its session's
+        // cache, read through the page table (gathers tiled per page so
+        // the inner dot stays contiguous; see KvArena::attend).
         let mut attn_out = vec![0f32; n * h];
         let scale = 1.0 / (hd as f32).sqrt();
         for i in 0..n {
             let s: &Session = if prefill { &*sessions[0] } else { &*sessions[i] };
             let ctx_len = positions[i] + 1; // causal: everything ≤ this position
-            let kc = &s.k_cache[li];
-            let vc = &s.v_cache[li];
-            for head in 0..cfg.n_heads {
-                let kv_head = head / group;
-                let qh = &q[i * h + head * hd..i * h + (head + 1) * hd];
-                let mut scores = vec![0f32; ctx_len];
-                for (t, sc) in scores.iter_mut().enumerate() {
-                    let kt = &kc[t * kvd + kv_head * hd..t * kvd + (kv_head + 1) * hd];
-                    *sc = qh.iter().zip(kt).map(|(a, b)| a * b).sum::<f32>() * scale;
-                }
-                softmax(&mut scores);
-                let out = &mut attn_out[i * h + head * hd..i * h + (head + 1) * hd];
-                for (t, &w) in scores.iter().enumerate() {
-                    let vt = &vc[t * kvd + kv_head * hd..t * kvd + (kv_head + 1) * hd];
-                    for (o, &vv) in out.iter_mut().zip(vt) {
-                        *o += w * vv;
-                    }
-                }
-            }
+            s.attend(
+                li,
+                &q[i * h..(i + 1) * h],
+                ctx_len,
+                cfg.n_heads,
+                cfg.n_kv_heads,
+                hd,
+                scale,
+                &mut attn_out[i * h..(i + 1) * h],
+            );
         }
         let mut proj = vec![0f32; n * h];
         {

@@ -1,0 +1,167 @@
+//! Paged-KV correctness: the arena-backed cache must be invisible to the
+//! math. F32 paging is bit-identical to the contiguous layout across
+//! every serving shape (single sequence, chunked prefill, batched decode,
+//! sequences straddling page boundaries); f16 pages stay within a tight
+//! perplexity bound; and the watermark scheduler's preemption round-trip
+//! (preempt → re-admit → re-prefill) reproduces the exact greedy tokens
+//! an unconstrained budget produces.
+
+use bitnet::coordinator::{Engine, EngineConfig, FinishReason, KvArena, KvDtype, Request};
+use bitnet::eval::{eval_token_stream, log_softmax_at, perplexity};
+use bitnet::kernels::QuantType;
+use bitnet::model::{ModelConfig, Session, Transformer};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+fn tiny_model() -> Transformer {
+    Transformer::synthetic(&ModelConfig::tiny(), QuantType::I2S, 42)
+}
+
+/// Every logits vector a fixed workload produces when the shared arena
+/// uses `page_tokens`-sized pages: three sequences prefilled as chunks
+/// (lengths 17/16/5 — straddling, exactly filling, and inside the
+/// default page), 20 batched decode steps, plus a single-sequence (n=1)
+/// prefill + decode tail. All sessions share one arena, so their page
+/// tables interleave.
+fn logits_suite(model: &Transformer, page_tokens: usize) -> Vec<Vec<f32>> {
+    let arena = Arc::new(Mutex::new(KvArena::with_page_tokens(
+        model.cfg.n_layers,
+        model.cfg.kv_dim(),
+        16384,
+        KvDtype::F32,
+        page_tokens,
+    )));
+    let prompts: [&[u32]; 3] = [
+        &[3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5, 8, 9, 7, 9, 3, 2],
+        &[2, 7, 1, 8, 2, 8, 1, 8, 2, 8, 4, 5, 9, 0, 4, 5],
+        &[1, 6, 1, 8, 0],
+    ];
+    let mut sessions: Vec<Session> =
+        (0..prompts.len()).map(|i| model.new_session_shared(&arena, i as u64, 64)).collect();
+    let mut out = Vec::new();
+    for (s, p) in sessions.iter_mut().zip(prompts.iter()) {
+        out.push(model.prefill(s, p));
+    }
+    let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+    for step in 0..20u32 {
+        let tokens = [5 + step % 400, 7 + step % 300, 11 + step % 200];
+        out.extend(model.decode_batch(&mut refs, &tokens));
+    }
+    drop(refs);
+    // n=1 regime in the same arena (its pages land after the batch's).
+    let mut solo = model.new_session_shared(&arena, 99, 64);
+    out.push(model.prefill(&mut solo, &[42, 43, 44]));
+    for step in 0..18u32 {
+        out.push(model.decode_step(&mut solo, 50 + step));
+    }
+    out
+}
+
+#[test]
+fn paged_f32_is_bit_identical_to_contiguous_layout() {
+    let model = tiny_model();
+    // page_tokens larger than any sequence degenerates to one page per
+    // sequence — exactly the pre-paged contiguous layout. Page sizes 1
+    // and 3 force maximal straddling; 16 is the production default.
+    let reference = logits_suite(&model, 4096);
+    for page_tokens in [1usize, 3, 16] {
+        let paged = logits_suite(&model, page_tokens);
+        assert_eq!(paged.len(), reference.len());
+        for (i, (a, b)) in paged.iter().zip(reference.iter()).enumerate() {
+            assert_eq!(a, b, "logits {i} diverge at page_tokens={page_tokens}");
+        }
+    }
+}
+
+/// Teacher-forced perplexity with a session of the given KV dtype
+/// (mirrors `eval::perplexity`, which always uses the f32 default).
+fn ppl_with_dtype(model: &Transformer, tokens: &[u32], dtype: KvDtype) -> f64 {
+    let mut session = model.new_session_dtype(tokens.len(), dtype);
+    let mut nll = 0f64;
+    let mut count = 0usize;
+    let mut logits = model.prefill(&mut session, &tokens[..1]);
+    for w in tokens.windows(2) {
+        nll += -log_softmax_at(&logits, w[1] as usize);
+        count += 1;
+        logits = model.decode_step(&mut session, w[1]);
+    }
+    (nll / count as f64).exp()
+}
+
+#[test]
+fn f16_kv_perplexity_stays_close() {
+    let model = tiny_model();
+    let tokens = eval_token_stream(512, 40, 11);
+    let p32 = ppl_with_dtype(&model, &tokens, KvDtype::F32);
+    // The f32 dtype path is the same arena code: must match the eval
+    // harness bit for bit.
+    assert_eq!(p32, perplexity(&model, &tokens));
+    let p16 = ppl_with_dtype(&model, &tokens, KvDtype::F16);
+    let rel = (p16 - p32).abs() / p32;
+    assert!(rel < 0.05, "f16 KV perplexity {p16} vs f32 {p32} (rel {rel})");
+}
+
+/// Serve `prompts` greedily under a KV budget; returns every output
+/// token stream plus the preemption count and peak decode width.
+fn run_budget(budget_tokens: usize, prompts: &[Vec<u32>], max_new: usize) -> (Vec<Vec<u32>>, u64, u64) {
+    let model = tiny_model();
+    let engine = Engine::start(
+        model,
+        EngineConfig {
+            max_batch: 4,
+            kv_budget_tokens: budget_tokens,
+            eos_token: 1,
+            seed: 5,
+            ..Default::default()
+        },
+    );
+    let handles: Vec<_> =
+        prompts.iter().map(|p| engine.submit(Request::greedy(p.clone(), max_new))).collect();
+    let outs: Vec<Vec<u32>> = handles
+        .into_iter()
+        .map(|h| {
+            let (tokens, reason, _) = h.wait();
+            assert_eq!(reason, FinishReason::Length);
+            tokens
+        })
+        .collect();
+    let preemptions = engine.metrics.kv_preemptions.load(Ordering::Relaxed);
+    let peak_batch = engine.metrics.peak_batch.load(Ordering::Relaxed);
+    (outs, preemptions, peak_batch)
+}
+
+fn pressure_prompts() -> Vec<Vec<u32>> {
+    vec![(3..19).collect(), (103..119).collect()]
+}
+
+#[test]
+fn watermark_admission_runs_concurrency_worst_case_cannot() {
+    // Two 16-token prompts generating 33 tokens each under a 64-token
+    // (4-page) budget: worst-case admission (prompt + max_new = 49
+    // tokens = 4 pages per sequence) could only ever run them one at a
+    // time. Watermark admission holds both in flight.
+    let arena = KvArena::accounting(64);
+    assert!(
+        2 * arena.pages_for(16 + 33) > arena.total_pages(),
+        "workload must not fit under worst-case reservation"
+    );
+    let (outs, preemptions, peak_batch) = run_budget(64, &pressure_prompts(), 33);
+    assert!(outs.iter().all(|t| t.len() == 33), "every sequence completes");
+    assert!(peak_batch >= 2, "watermark admission must co-run both (peak {peak_batch})");
+    // Combined demand peaks at 6 pages > 4: the scheduler must have
+    // preempted (and recovered) at least once.
+    assert!(preemptions >= 1, "pressure workload must exercise preemption");
+}
+
+#[test]
+fn preemption_round_trip_reproduces_unconstrained_tokens() {
+    // Same workload with a roomy budget: no preemption, the reference
+    // output. The tight run preempts, re-admits, re-prefills — and must
+    // emit exactly the same greedy tokens.
+    let prompts = pressure_prompts();
+    let (reference, p0, _) = run_budget(4096, &prompts, 33);
+    assert_eq!(p0, 0, "roomy budget must not preempt");
+    let (tight, p1, _) = run_budget(64, &prompts, 33);
+    assert!(p1 >= 1, "tight budget must preempt");
+    assert_eq!(tight, reference, "preemption round-trip must not change outputs");
+}

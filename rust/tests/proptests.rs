@@ -2,7 +2,7 @@
 //! offline): randomized inputs over many iterations, asserting invariants
 //! of the kernel library and the coordinator state machines.
 
-use bitnet::coordinator::kv_pool::KvPool;
+use bitnet::coordinator::kv_pool::KvArena;
 use bitnet::coordinator::scheduler::{Phase, Scheduler, SeqState};
 use bitnet::kernels::quant::TernaryWeights;
 use bitnet::kernels::{kernel_for, QuantType};
@@ -94,13 +94,13 @@ fn prop_sign_flip_negates() {
     }
 }
 
-/// KvPool invariant: pages are conserved under random reserve/release.
+/// KvArena invariant: pages are conserved under random reserve/release.
 #[test]
 fn prop_kv_pool_page_conservation() {
     let mut rng = Rng::new(400);
     for _ in 0..20 {
         let total_pages = 8 + rng.next_below(64);
-        let mut pool = KvPool::new(total_pages * 16);
+        let mut pool = KvArena::accounting(total_pages * 16);
         let mut active: Vec<u64> = Vec::new();
         for step in 0..200u64 {
             if rng.next_f32() < 0.6 {
@@ -118,15 +118,17 @@ fn prop_kv_pool_page_conservation() {
     }
 }
 
-/// Scheduler invariant: running set never exceeds max_batch; every
-/// admitted sequence's worst case is fully reserved; all sequences
-/// eventually complete.
+/// Scheduler invariant under watermark admission: running set never
+/// exceeds max_batch; sequences grow page-by-page as they decode (the
+/// driver mirrors the engine's on_prefilled notifications so growth and
+/// LIFO preemption actually engage); all accepted sequences eventually
+/// complete and every page is released.
 #[test]
 fn prop_scheduler_liveness_and_caps() {
     let mut rng = Rng::new(500);
     for trial in 0..15 {
         let max_batch = 1 + rng.next_below(6);
-        let mut pool = KvPool::new(16 * (16 + rng.next_below(64)));
+        let mut pool = KvArena::accounting(16 * (16 + rng.next_below(64)));
         let mut sch = Scheduler::new(max_batch);
         let n_reqs = 10 + rng.next_below(20);
         let mut accepted = 0usize;
@@ -146,6 +148,12 @@ fn prop_scheduler_liveness_and_caps() {
                 break;
             }
             assert!(plan.decode.len() <= max_batch, "trial {trial}");
+            // Mirror the engine: admitted (or re-admitted) prompts are
+            // prefilled this step, flipping Prefill → Decoding so the
+            // next step's growth reservations run for them.
+            for id in &plan.prefill {
+                sch.on_prefilled(*id);
+            }
             for id in plan.decode.clone() {
                 let left = remaining.entry(id).or_insert_with(|| 1 + rng.next_below(30));
                 sch.on_token(id);
@@ -159,6 +167,9 @@ fn prop_scheduler_liveness_and_caps() {
         assert_eq!(completed, accepted, "all accepted sequences complete (trial {trial})");
         assert_eq!(pool.used_pages(), 0, "all pages released (trial {trial})");
     }
+    // (Deterministic preemption coverage lives in the scheduler's own
+    // preemption_never_deadlocks test; these random trials may or may
+    // not hit memory pressure depending on the draw.)
 }
 
 /// Tokenizer invariant: encode→decode identity over random byte soup.

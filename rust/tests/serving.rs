@@ -15,7 +15,7 @@ fn engine(qt: QuantType, max_batch: usize, kv_tokens: usize) -> Engine {
     let model = Transformer::synthetic(&ModelConfig::tiny(), qt, 42);
     Engine::start(
         model,
-        EngineConfig { max_batch, kv_budget_tokens: kv_tokens, eos_token: 1, seed: 5 },
+        EngineConfig { max_batch, kv_budget_tokens: kv_tokens, eos_token: 1, seed: 5, ..Default::default() },
     )
 }
 
@@ -49,7 +49,8 @@ fn sustained_load_all_requests_complete() {
 
 #[test]
 fn kv_pressure_serializes_but_completes() {
-    // Budget fits ~1 request at a time; everything must still finish.
+    // Tight budget; everything must still finish, and the engine must
+    // report page-level KV occupancy that stays inside the budget.
     let eng = engine(QuantType::I2S, 8, 64);
     let handles: Vec<_> = (0..5)
         .map(|i| eng.submit(Request::greedy(vec![i + 3, 4, 5], 8)))
@@ -59,6 +60,18 @@ fn kv_pressure_serializes_but_completes() {
         assert_eq!(reason, FinishReason::Length);
         assert_eq!(tokens.len(), 8);
     }
+    let m = &eng.metrics;
+    let total = m.kv_pages_total.load(Ordering::Relaxed);
+    let peak = m.kv_pages_peak.load(Ordering::Relaxed);
+    assert_eq!(total, 4, "64-token budget is 4 pages");
+    assert!(peak >= 1 && peak <= total, "peak pages {peak} within budget {total}");
+    assert_eq!(m.kv_pages_used.load(Ordering::Relaxed), 0, "all pages released at the end");
+    assert!(
+        m.kv_resident_bytes.load(Ordering::Relaxed)
+            <= m.kv_capacity_bytes.load(Ordering::Relaxed),
+        "lazy minting never exceeds the budget"
+    );
+    assert!(m.summary().contains("kv "), "summary reports the arena");
 }
 
 #[test]
@@ -93,7 +106,7 @@ fn eos_stops_generation() {
     let model = Transformer::synthetic(&ModelConfig::tiny(), QuantType::I2S, 42);
     let eng2 = Engine::start(
         model,
-        EngineConfig { max_batch: 1, kv_budget_tokens: 4096, eos_token: greedy_tok, seed: 5 },
+        EngineConfig { max_batch: 1, kv_budget_tokens: 4096, eos_token: greedy_tok, seed: 5, ..Default::default() },
     );
     let (tokens, reason, _) = eng2
         .submit(Request { prompt: vec![10, 11], max_new_tokens: 50, sampling: SamplingParams::greedy(), stop_on_eos: true })
@@ -131,7 +144,7 @@ fn phase_aware_auto_engine_matches_fixed_engine_outputs() {
     );
     let eng_auto = Engine::start(
         auto_model,
-        EngineConfig { max_batch: 4, kv_budget_tokens: 4096, eos_token: 1, seed: 5 },
+        EngineConfig { max_batch: 4, kv_budget_tokens: 4096, eos_token: 1, seed: 5, ..Default::default() },
     );
     let eng_fixed = engine(QuantType::I2S, 4, 4096);
     let prompts: Vec<Vec<u32>> = vec![vec![4, 5, 6], vec![7, 8], vec![9, 10, 11, 12], vec![200]];
@@ -170,7 +183,7 @@ fn uncovered_profile_surfaces_dispatch_fallbacks_in_metrics() {
     );
     let eng = Engine::start(
         model,
-        EngineConfig { max_batch: 2, kv_budget_tokens: 2048, eos_token: 1, seed: 5 },
+        EngineConfig { max_batch: 2, kv_budget_tokens: 2048, eos_token: 1, seed: 5, ..Default::default() },
     );
     let (tokens, reason, _) = eng.submit(Request::greedy(vec![5, 6, 7], 4)).wait();
     assert_eq!(reason, FinishReason::Length);
