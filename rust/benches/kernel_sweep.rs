@@ -1,19 +1,52 @@
 //! Raw kernel GEMV sweep: every kernel × a ladder of matmul shapes (the
-//! per-projection shapes behind Table 7). The generic profiling entry
-//! point for the §Perf optimization loop.
+//! per-projection shapes behind Table 7), timed at every SIMD tier the
+//! kernel implements so the scalar→vector speedup is measured rather
+//! than assumed. The generic profiling entry point for the §Perf
+//! optimization loop.
+//!
+//! With `BENCH_JSON=path` set, the per-level rates merge into the shared
+//! bench document under the `"kernel_sweep_simd"` key; other sections of
+//! an existing file are preserved. (`e2e_table7` rewrites the whole
+//! file, so it must run before the merging benches.)
 
 use bitnet::kernels::quant::TernaryWeights;
-use bitnet::kernels::{kernel_for, QuantType};
+use bitnet::kernels::{kernel_for, simd, QuantType, SimdLevel};
 use bitnet::perf::bench::{bench, black_box};
-use bitnet::util::Rng;
+use bitnet::util::{Json, Rng};
 use std::time::Duration;
+
+/// Read-modify-write `BENCH_JSON`: replace `key` in the top-level object
+/// (an unparsable or missing file starts a fresh document).
+fn merge_into_bench_json(key: &str, value: Json) {
+    let path = match std::env::var("BENCH_JSON") {
+        Ok(p) => p,
+        Err(_) => return,
+    };
+    let mut pairs = match std::fs::read_to_string(&path).ok().and_then(|t| Json::parse(&t).ok())
+    {
+        Some(Json::Obj(pairs)) => pairs,
+        _ => Vec::new(),
+    };
+    pairs.retain(|(k, _)| k != key);
+    pairs.push((key.to_string(), value));
+    std::fs::write(&path, Json::Obj(pairs).to_string_pretty()).expect("write BENCH_JSON");
+    println!("# wrote {path} ({key})");
+}
 
 fn main() {
     let fast = std::env::var("BENCH_FAST").is_ok();
     let shapes: &[(usize, usize)] =
         if fast { &[(1024, 1024)] } else { &[(1024, 1024), (4096, 4096), (8704, 3328)] };
-    println!("# kernel GEMV sweep (single thread)");
-    println!("{:<9} {:>12} {:>12} {:>14} {:>12}", "kernel", "M", "K", "µs/GEMV", "Gweight/s");
+    let levels = simd::available_levels();
+    println!(
+        "# kernel GEMV sweep (single thread; SIMD tiers: {})",
+        levels.iter().map(|l| l.name()).collect::<Vec<_>>().join("/")
+    );
+    println!(
+        "{:<9} {:>8} {:>8} {:>8} {:>12} {:>12} {:>10}",
+        "kernel", "M", "K", "simd", "µs/GEMV", "Gweight/s", "vs scalar"
+    );
+    let mut records = Vec::new();
     for &(m, k) in shapes {
         let mut rng = Rng::new(3);
         let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
@@ -27,23 +60,50 @@ fn main() {
             let packed = kern.quantize(&t);
             let p = kern.prepare(&x, k);
             let mut out = vec![0f32; m];
-            let r = bench(
-                kern.info().name,
-                Duration::from_millis(30),
-                Duration::from_millis(if fast { 100 } else { 250 }),
-                || {
-                    kern.gemv(&packed, &p, &mut out);
-                    black_box(&out);
-                },
-            );
-            println!(
-                "{:<9} {:>12} {:>12} {:>14.1} {:>12.3}",
-                kern.info().name,
-                m,
-                k,
-                r.seconds.mean * 1e6,
-                (m * k) as f64 / r.seconds.mean / 1e9
-            );
+            let mut scalar_mean = f64::NAN;
+            for &level in &levels {
+                if !kern.simd_levels().contains(&level) {
+                    continue;
+                }
+                let r = simd::with_level(level, || {
+                    bench(
+                        kern.info().name,
+                        Duration::from_millis(30),
+                        Duration::from_millis(if fast { 100 } else { 250 }),
+                        || {
+                            kern.gemv(&packed, &p, &mut out);
+                            black_box(&out);
+                        },
+                    )
+                });
+                let mean = r.seconds.mean;
+                let speedup = if level == SimdLevel::Scalar {
+                    scalar_mean = mean;
+                    1.0
+                } else {
+                    scalar_mean / mean
+                };
+                println!(
+                    "{:<9} {:>8} {:>8} {:>8} {:>12.1} {:>12.3} {:>9.2}x",
+                    kern.info().name,
+                    m,
+                    k,
+                    level.name(),
+                    mean * 1e6,
+                    (m * k) as f64 / mean / 1e9,
+                    speedup
+                );
+                records.push(Json::Obj(vec![
+                    ("kernel".into(), Json::Str(kern.info().name.into())),
+                    ("m".into(), Json::Num(m as f64)),
+                    ("k".into(), Json::Num(k as f64)),
+                    ("simd".into(), Json::Str(level.name().into())),
+                    ("us_per_gemv".into(), Json::Num(mean * 1e6)),
+                    ("gweights_per_s".into(), Json::Num((m * k) as f64 / mean / 1e9)),
+                    ("speedup_vs_scalar".into(), Json::Num(speedup)),
+                ]));
+            }
         }
     }
+    merge_into_bench_json("kernel_sweep_simd", Json::Arr(records));
 }

@@ -2,9 +2,20 @@
 //! latency. Emulates W-byte shuffles for W ∈ {16, 32, 64, 128} and
 //! reports per-lookup latency plus the group size g each width enables
 //! (C^g/2 entries ≤ W) and the resulting accumulation-complexity factor.
+//!
+//! A second section measures the *real* TL LUT-gather hot loop — the
+//! same GEMV timed under the forced-scalar tier and under the host's
+//! vector tier (AVX2/NEON) — so the scalar→vector speedup in
+//! BENCH_e2e.json is an observation, not an emulation. With
+//! `BENCH_JSON=path` set, the measurement merges into the shared bench
+//! document under the `"lut_gather_measured"` key.
 
-use bitnet::perf::bench::{bench_quick, black_box};
+use bitnet::kernels::quant::TernaryWeights;
+use bitnet::kernels::{kernel_for, simd, QuantType, SimdLevel};
+use bitnet::perf::bench::{bench, bench_quick, black_box};
 use bitnet::perf::simd::shuffle_w;
+use bitnet::util::{Json, Rng};
+use std::time::Duration;
 
 const N: usize = 4096;
 
@@ -24,7 +35,112 @@ fn run<const W: usize>() -> (usize, f64) {
     (W, r.seconds.mean / N as f64 * 1e9)
 }
 
+/// Read-modify-write `BENCH_JSON`: replace `key` in the top-level object
+/// (an unparsable or missing file starts a fresh document).
+fn merge_into_bench_json(key: &str, value: Json) {
+    let path = match std::env::var("BENCH_JSON") {
+        Ok(p) => p,
+        Err(_) => return,
+    };
+    let mut pairs = match std::fs::read_to_string(&path).ok().and_then(|t| Json::parse(&t).ok())
+    {
+        Some(Json::Obj(pairs)) => pairs,
+        _ => Vec::new(),
+    };
+    pairs.retain(|(k, _)| k != key);
+    pairs.push((key.to_string(), value));
+    std::fs::write(&path, Json::Obj(pairs).to_string_pretty()).expect("write BENCH_JSON");
+    println!("# wrote {path} ({key})");
+}
+
+/// Time one kernel's GEMV at a forced SIMD tier (µs per GEMV).
+fn time_gemv_at(
+    kern: &'static dyn bitnet::kernels::Kernel,
+    packed: &bitnet::kernels::QTensor,
+    p: &bitnet::kernels::Prepared,
+    out: &mut [f32],
+    level: SimdLevel,
+    fast: bool,
+) -> f64 {
+    simd::with_level(level, || {
+        bench(
+            kern.info().name,
+            Duration::from_millis(20),
+            Duration::from_millis(if fast { 80 } else { 200 }),
+            || {
+                kern.gemv(packed, p, out);
+                black_box(&*out);
+            },
+        )
+        .seconds
+        .mean
+            * 1e6
+    })
+}
+
+fn measured_lut_gather(fast: bool) -> Vec<Json> {
+    let (m, k) = (1024usize, 1024usize);
+    let vector = simd::available_levels().into_iter().find(|&l| l != SimdLevel::Scalar);
+    println!("\n# measured TL LUT gather: real GEMV, forced scalar vs vector tier (M=K=1024)");
+    println!(
+        "{:<9} {:>14} {:>8} {:>14} {:>10}",
+        "kernel", "scalar µs", "tier", "vector µs", "speedup"
+    );
+    let mut records = Vec::new();
+    for qt in [QuantType::Tl10, QuantType::Tl20, QuantType::Elut5] {
+        let kern = kernel_for(qt);
+        let mut rng = Rng::new(7);
+        let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+        let t = TernaryWeights::from_ternary(q, m, k, 0.05);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        let packed = kern.quantize(&t);
+        let p = kern.prepare(&x, k);
+        let mut out = vec![0f32; m];
+        let scalar_us = time_gemv_at(kern, &packed, &p, &mut out, SimdLevel::Scalar, fast);
+        let vec_level = vector.filter(|l| kern.simd_levels().contains(l));
+        let (vec_cell, speedup_cell, tier_name) = match vec_level {
+            Some(level) => {
+                let vec_us = time_gemv_at(kern, &packed, &p, &mut out, level, fast);
+                (Json::Num(vec_us), Json::Num(scalar_us / vec_us), level.name())
+            }
+            None => (Json::Null, Json::Null, "-"),
+        };
+        match (&vec_cell, &speedup_cell) {
+            (Json::Num(v), Json::Num(s)) => println!(
+                "{:<9} {:>14.1} {:>8} {:>14.1} {:>9.2}x",
+                kern.info().name,
+                scalar_us,
+                tier_name,
+                v,
+                s
+            ),
+            _ => println!(
+                "{:<9} {:>14.1} {:>8} {:>14} {:>10}",
+                kern.info().name,
+                scalar_us,
+                tier_name,
+                "-",
+                "-"
+            ),
+        }
+        records.push(Json::Obj(vec![
+            ("kernel".into(), Json::Str(kern.info().name.into())),
+            ("m".into(), Json::Num(m as f64)),
+            ("k".into(), Json::Num(k as f64)),
+            ("scalar_us_per_gemv".into(), Json::Num(scalar_us)),
+            ("vector_level".into(), Json::Str(tier_name.into())),
+            ("vector_us_per_gemv".into(), vec_cell),
+            ("speedup".into(), speedup_cell),
+        ]));
+    }
+    if vector.is_none() {
+        println!("# (no vector tier on this host — scalar only)");
+    }
+    records
+}
+
 fn main() {
+    let fast = std::env::var("BENCH_FAST").is_ok();
     println!("# Figure 11 reproduction — emulated register width vs lookup latency");
     println!(
         "{:>7} {:>12} {:>12} {:>6} {:>18}",
@@ -45,4 +161,7 @@ fn main() {
     }
     println!("# expected shape: ns/lookup grows sub-linearly with W while max g grows,");
     println!("# so wider registers reduce total accumulation work until C^g ≈ M (§C.3).");
+
+    let records = measured_lut_gather(fast);
+    merge_into_bench_json("lut_gather_measured", Json::Arr(records));
 }

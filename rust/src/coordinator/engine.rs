@@ -86,6 +86,7 @@ impl Engine {
         metrics.dispatch_fallbacks.store(model.plan.fallbacks(), Ordering::Relaxed);
         metrics.dispatch_degraded.store(model.plan.degraded(), Ordering::Relaxed);
         mirror_prepare_stats(&model, &metrics);
+        metrics.mirror_simd();
         let kernel_info = {
             let shapes: Vec<String> = model
                 .kernel_summary()
@@ -361,6 +362,7 @@ fn run_loop(
         metrics.dispatch_fallbacks.store(model.plan.fallbacks(), Ordering::Relaxed);
         metrics.dispatch_degraded.store(model.plan.degraded(), Ordering::Relaxed);
         mirror_prepare_stats(&model, &metrics);
+        metrics.mirror_simd();
 
         // Release finished sequences' pages, then mirror the arena state
         // *before* any Done event goes out: a client woken by Done must

@@ -117,6 +117,8 @@ impl Kernel for Q2KKernel {
                     let mut asum = 0i32;
                     let qbase = 16 + s * SUB / 4;
                     for j4 in 0..SUB / 4 {
+                        // SAFETY: qbase + j4 < 16 + SUB·SUB/4 ≤ BLOCK_BYTES,
+                        // and `blk` is exactly one BLOCK_BYTES slice.
                         let byte = unsafe { *blk.get_unchecked(qbase + j4) };
                         let a = &aq[s * SUB + j4 * 4..];
                         ssum += ((byte & 0x3) as i32) * a[0] as i32;

@@ -112,10 +112,16 @@ impl Kernel for TmacKernel {
                 let base = blk * block_groups * LUT_W;
                 let mut g = 0usize;
                 for (&b0, &b1) in c0.iter().zip(c1.iter()) {
+                    // SAFETY: tables holds block_groups LUT_W-entry tables
+                    // per block and nibble codes are < LUT_W, so every
+                    // index below is in bounds.
                     let t0a = unsafe { *tables.get_unchecked(base + g * LUT_W + (b0 & 0xf) as usize) };
+                    // SAFETY: as above.
                     let t1a = unsafe { *tables.get_unchecked(base + g * LUT_W + (b1 & 0xf) as usize) };
+                    // SAFETY: as above.
                     let t0b =
                         unsafe { *tables.get_unchecked(base + (g + 1) * LUT_W + (b0 >> 4) as usize) };
+                    // SAFETY: as above.
                     let t1b =
                         unsafe { *tables.get_unchecked(base + (g + 1) * LUT_W + (b1 >> 4) as usize) };
                     acc0 += t0a as i32 + t0b as i32;

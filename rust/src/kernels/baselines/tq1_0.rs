@@ -133,6 +133,8 @@ impl Kernel for Tq10Kernel {
                     for j in 0..5 {
                         q = q.wrapping_mul(3);
                         let trit = ((q >> 8) & 0x3) as i32; // 0, 1, 2
+                        // SAFETY: base + j < 48·5 = 240 ≤ QK and aq holds
+                        // one QK-entry block.
                         isum += trit * unsafe { *aq.get_unchecked(base + j) } as i32;
                         q &= 0xff;
                     }
@@ -143,6 +145,8 @@ impl Kernel for Tq10Kernel {
                     for j in 0..4 {
                         q = q.wrapping_mul(3);
                         let trit = ((q >> 8) & 0x3) as i32;
+                        // SAFETY: base + j < 240 + 4·4 = 256 = QK and aq
+                        // holds one QK-entry block.
                         isum += trit * unsafe { *aq.get_unchecked(base + j) } as i32;
                         q &= 0xff;
                     }

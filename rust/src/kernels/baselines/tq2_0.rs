@@ -104,6 +104,8 @@ impl Kernel for Tq20Kernel {
                 // Σ a·(code−1) = Σ a·code − Σa (per block).
                 let mut isum = 0i32;
                 for (byte_i, quad) in aq.chunks_exact(4).enumerate() {
+                    // SAFETY: aq has QK entries so byte_i < QK/4, and the
+                    // block stores QK/4 packed bytes before the scale.
                     let byte = unsafe { *blk.get_unchecked(byte_i) };
                     isum += ((byte & 0x3) as i32) * quad[0] as i32;
                     isum += (((byte >> 2) & 0x3) as i32) * quad[1] as i32;

@@ -17,6 +17,7 @@
 
 use super::lut::{code_count, decode_code, mirror_join, mirror_split, sign_apply_i32};
 use super::quant::{quantize_act_int8_into, TernaryWeights};
+use super::simd::{self, SimdLevel};
 use super::tl1::LUT_W;
 use super::{
     Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
@@ -179,6 +180,10 @@ impl Kernel for ElutKernel {
         }
     }
 
+    fn simd_levels(&self) -> &'static [SimdLevel] {
+        simd::KERNEL_LEVELS
+    }
+
     fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
         let (tables, scale) = match p {
             PreparedRow::LutI16 { tables, scale } => (tables, scale),
@@ -187,32 +192,82 @@ impl Kernel for ElutKernel {
         let groups = t.k / self.g;
         let row_bytes = self.row_bytes(t.k);
         let combined = t.scale / scale;
-        for (o, r) in out.iter_mut().zip(rows) {
-            let row = &t.data[r * row_bytes..(r + 1) * row_bytes];
-            let (idx_plane, sign_plane) = row.split_at(groups / 2);
-            let mut acc = 0i32;
-            if self.mirror {
-                for gi in 0..groups {
-                    let byte = unsafe { *idx_plane.get_unchecked(gi / 2) };
-                    let nib = if gi % 2 == 0 { byte & 0xf } else { byte >> 4 };
-                    let sign = (unsafe { *sign_plane.get_unchecked(gi / 8) } >> (gi % 8)) & 1;
-                    let v = unsafe { *tables.get_unchecked(gi * LUT_W + nib as usize) } as i32;
-                    acc += sign_apply_i32(v, sign);
+        let level = simd::active_level();
+        simd::note_call(level);
+        if self.mirror {
+            let idx_bytes = groups / 2;
+            #[cfg(target_arch = "x86_64")]
+            if level == SimdLevel::Avx2 {
+                // SAFETY: AVX2 verified by the active dispatch level;
+                // buffer shapes are guaranteed by quantize/prepare.
+                unsafe {
+                    simd::avx2::gemv_rows_elut5(&t.data, idx_bytes, tables, combined, out, rows);
                 }
-            } else {
-                let mut gi = 0usize;
-                for &byte in idx_plane {
-                    acc += unsafe { *tables.get_unchecked(gi * LUT_W + (byte & 0xf) as usize) }
-                        as i32;
-                    acc += unsafe {
-                        *tables.get_unchecked((gi + 1) * LUT_W + (byte >> 4) as usize)
-                    } as i32;
-                    gi += 2;
-                }
+                return;
             }
-            *o = acc as f32 * combined;
+            #[cfg(target_arch = "aarch64")]
+            if level == SimdLevel::Neon {
+                // SAFETY: NEON verified by the active dispatch level;
+                // buffer shapes are guaranteed by quantize/prepare.
+                unsafe {
+                    simd::neon::gemv_rows_elut5(&t.data, idx_bytes, tables, combined, out, rows);
+                }
+                return;
+            }
+            for (o, r) in out.iter_mut().zip(rows) {
+                let row = &t.data[r * row_bytes..(r + 1) * row_bytes];
+                *o = gemv_row_elut5(row, idx_bytes, tables) as f32 * combined;
+            }
+        } else {
+            // Non-mirrored rows are one nibble plane with a full 16-entry
+            // table per group — byte-for-byte the TL1 lossless loop.
+            #[cfg(target_arch = "x86_64")]
+            if level == SimdLevel::Avx2 {
+                // SAFETY: AVX2 verified by the active dispatch level;
+                // buffer shapes are guaranteed by quantize/prepare.
+                unsafe {
+                    simd::avx2::gemv_rows_lut16(&t.data, row_bytes, tables, combined, out, rows);
+                }
+                return;
+            }
+            #[cfg(target_arch = "aarch64")]
+            if level == SimdLevel::Neon {
+                // SAFETY: NEON verified by the active dispatch level;
+                // buffer shapes are guaranteed by quantize/prepare.
+                unsafe {
+                    simd::neon::gemv_rows_lut16(&t.data, row_bytes, tables, combined, out, rows);
+                }
+                return;
+            }
+            for (o, r) in out.iter_mut().zip(rows) {
+                let row = &t.data[r * row_bytes..(r + 1) * row_bytes];
+                *o = super::tl1::gemv_row_lut16(row, tables) as f32 * combined;
+            }
         }
     }
+}
+
+/// Scalar accumulation for one mirror-consolidated ELUT row (ELUT_C5):
+/// `idx_bytes` nibble bytes followed by `idx_bytes / 4` sign bytes, one
+/// group per nibble, 1 sign bit per group.
+#[inline]
+pub fn gemv_row_elut5(row: &[u8], idx_bytes: usize, tables: &[i16]) -> i32 {
+    let (idx_plane, sign_plane) = row.split_at(idx_bytes);
+    let groups = idx_bytes * 2;
+    let mut acc = 0i32;
+    for gi in 0..groups {
+        // SAFETY: the planes hold groups/2 index bytes and groups/8 sign
+        // bytes, tables holds one LUT_W-entry table per group, and nibble
+        // codes are < LUT_W.
+        let byte = unsafe { *idx_plane.get_unchecked(gi / 2) };
+        let nib = if gi % 2 == 0 { byte & 0xf } else { byte >> 4 };
+        // SAFETY: as above.
+        let sign = (unsafe { *sign_plane.get_unchecked(gi / 8) } >> (gi % 8)) & 1;
+        // SAFETY: as above.
+        let v = unsafe { *tables.get_unchecked(gi * LUT_W + nib as usize) } as i32;
+        acc += sign_apply_i32(v, sign);
+    }
+    acc
 }
 
 #[cfg(test)]

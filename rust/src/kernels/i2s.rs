@@ -10,6 +10,7 @@
 //! K·127 < 2^31 for any realistic K).
 
 use super::quant::{quantize_act_int8_into, TernaryWeights};
+use super::simd::{self, SimdLevel};
 use super::{
     Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
 };
@@ -85,6 +86,10 @@ impl Kernel for I2SKernel {
         }
     }
 
+    fn simd_levels(&self) -> &'static [SimdLevel] {
+        simd::KERNEL_LEVELS
+    }
+
     fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
         let (q, scale, sum) = match p {
             PreparedRow::Int8 { q, scale, sum } => (q, scale, sum),
@@ -93,6 +98,26 @@ impl Kernel for I2SKernel {
         debug_assert_eq!(q.len(), t.k);
         let row_bytes = t.k / WPB;
         let combined = t.scale / scale;
+        let level = simd::active_level();
+        simd::note_call(level);
+        #[cfg(target_arch = "x86_64")]
+        if level == SimdLevel::Avx2 {
+            // SAFETY: AVX2 verified by the active dispatch level; the
+            // packed rows match `q.len() / 4` bytes and `sum` is Σq.
+            unsafe {
+                simd::avx2::gemv_rows_i2s(&t.data, q, sum, combined, out, rows);
+            }
+            return;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if level == SimdLevel::Neon {
+            // SAFETY: NEON verified by the active dispatch level; the
+            // packed rows match `q.len() / 4` bytes and `sum` is Σq.
+            unsafe {
+                simd::neon::gemv_rows_i2s(&t.data, q, sum, combined, out, rows);
+            }
+            return;
+        }
         for (o, r) in out.iter_mut().zip(rows) {
             let wrow = &t.data[r * row_bytes..(r + 1) * row_bytes];
             *o = gemv_row_i2s(wrow, q, sum) as f32 * combined;

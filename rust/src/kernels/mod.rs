@@ -41,10 +41,12 @@ pub mod elut;
 pub mod i2s;
 pub mod lut;
 pub mod quant;
+pub mod simd;
 pub mod tl1;
 pub mod tl2;
 pub mod tuner;
 
+pub use simd::SimdLevel;
 pub use tuner::{Dispatch, DispatchPlan, Role, TuningProfile};
 
 use crate::threadpool::ThreadPool;
@@ -407,6 +409,15 @@ pub trait Kernel: Send + Sync {
         }
     }
 
+    /// The SIMD tiers this kernel has explicit implementations for on
+    /// the compile target. Scalar-only by default; the vectorized
+    /// kernels (TL1/TL2/I2_S/ELUT) override with [`simd::KERNEL_LEVELS`].
+    /// The tuner measures each tier in here that the host can run.
+    fn simd_levels(&self) -> &'static [SimdLevel] {
+        const SCALAR_ONLY: &[SimdLevel] = &[SimdLevel::Scalar];
+        SCALAR_ONLY
+    }
+
     /// Compute `out[r] = Σ_k x[k] * W[r,k]` for `r` in `rows` —
     /// Algorithm 1/2 "accumulation" phase.
     fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>);
@@ -580,7 +591,9 @@ impl PreparedBatch {
                     for i in lo..hi {
                         // SAFETY: each row i writes disjoint ranges.
                         let q = unsafe { std::slice::from_raw_parts_mut(qp.0.add(i * k), k) };
+                        // SAFETY: as above.
                         let scale = unsafe { &mut *sp.0.add(i) };
+                        // SAFETY: as above.
                         let sum = unsafe { &mut *up.0.add(i) };
                         kernel.prepare_row_into(
                             &x[i * k..(i + 1) * k],
@@ -605,7 +618,9 @@ impl PreparedBatch {
                     for i in lo..hi {
                         // SAFETY: each row i writes disjoint ranges.
                         let q = unsafe { std::slice::from_raw_parts_mut(qp.0.add(i * k), k) };
+                        // SAFETY: as above.
                         let d = unsafe { std::slice::from_raw_parts_mut(dp.0.add(i * nb), nb) };
+                        // SAFETY: as above.
                         let bsums =
                             unsafe { std::slice::from_raw_parts_mut(bp.0.add(i * nb), nb) };
                         kernel.prepare_row_into(
@@ -632,9 +647,11 @@ impl PreparedBatch {
                         // SAFETY: each row i writes disjoint output ranges;
                         // scratch region c belongs to this chunk alone.
                         let aq = unsafe { std::slice::from_raw_parts_mut(ap.0.add(c * k), k) };
+                        // SAFETY: as above.
                         let tables = unsafe {
                             std::slice::from_raw_parts_mut(tp.0.add(i * stride), stride)
                         };
+                        // SAFETY: as above.
                         let scale = unsafe { &mut *sp.0.add(i) };
                         kernel.prepare_row_into(
                             &x[i * k..(i + 1) * k],
@@ -662,15 +679,19 @@ impl PreparedBatch {
                         // SAFETY: each row i writes disjoint output ranges;
                         // scratch region c belongs to this chunk alone.
                         let aq = unsafe { std::slice::from_raw_parts_mut(ap.0.add(c * k), k) };
+                        // SAFETY: as above.
                         let tmp16 = unsafe {
                             std::slice::from_raw_parts_mut(mp.0.add(c * stride), stride)
                         };
+                        // SAFETY: as above.
                         let tables = unsafe {
                             std::slice::from_raw_parts_mut(tp.0.add(i * stride), stride)
                         };
+                        // SAFETY: as above.
                         let block_scales = unsafe {
                             std::slice::from_raw_parts_mut(bp.0.add(i * sblocks), sblocks)
                         };
+                        // SAFETY: as above.
                         let scale = unsafe { &mut *sp.0.add(i) };
                         kernel.prepare_row_into(
                             &x[i * k..(i + 1) * k],
@@ -709,16 +730,21 @@ impl PreparedBatch {
                         // SAFETY: each row i writes disjoint output ranges;
                         // scratch region c belongs to this chunk alone.
                         let aq = unsafe { std::slice::from_raw_parts_mut(ap.0.add(c * k), k) };
+                        // SAFETY: as above.
                         let tmp16 = unsafe {
                             std::slice::from_raw_parts_mut(mp.0.add(c * stride), stride)
                         };
+                        // SAFETY: as above.
                         let tables = unsafe {
                             std::slice::from_raw_parts_mut(tp.0.add(i * stride), stride)
                         };
+                        // SAFETY: as above.
                         let block_scales = unsafe {
                             std::slice::from_raw_parts_mut(bp.0.add(i * sblocks), sblocks)
                         };
+                        // SAFETY: as above.
                         let scale = unsafe { &mut *sp.0.add(i) };
+                        // SAFETY: as above.
                         let act_sum = unsafe { &mut *up.0.add(i) };
                         kernel.prepare_row_into(
                             &x[i * k..(i + 1) * k],
@@ -1127,13 +1153,19 @@ pub fn matmul(
 /// Pointer wrapper to move a raw pointer into the pool closure.
 #[derive(Clone, Copy)]
 struct SendPtr(*mut f32);
+// SAFETY: the pointer targets a buffer owned by the caller that outlives
+// the parallel region, and tasks write disjoint ranges of it.
 unsafe impl Send for SendPtr {}
+// SAFETY: as above.
 unsafe impl Sync for SendPtr {}
 
 /// Typed variant of [`SendPtr`] for the batch-build buffers.
 #[derive(Clone, Copy)]
 struct SendMut<T>(*mut T);
+// SAFETY: the pointer targets a buffer owned by the caller that outlives
+// the parallel region, and tasks write disjoint ranges of it.
 unsafe impl<T> Send for SendMut<T> {}
+// SAFETY: as above.
 unsafe impl<T> Sync for SendMut<T> {}
 
 #[cfg(test)]

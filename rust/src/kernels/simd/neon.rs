@@ -1,0 +1,523 @@
+//! NEON vector paths for the ternary mpGEMM kernels (AArch64).
+//!
+//! Mirrors [`super::avx2`] with `vqtbl1q_u8` as the 16-wide table
+//! gather (the `tbl` instruction of the paper's §3.1.2). int16 tables
+//! are split into low/high byte planes with `vuzp1q_u8`/`vuzp2q_u8`
+//! (on little-endian AArch64 the even bytes of an `i16` stream are the
+//! low bytes), gathered per plane, and re-interleaved with
+//! `vzip1q_u8`/`vzip2q_u8`. The I2_S path keeps the scalar body under
+//! `target_feature(enable = "neon")` so LLVM auto-vectorizes the
+//! widening multiply-add.
+//!
+//! The bit-identity contract of [`super::avx2`] applies unchanged:
+//! integer accumulation throughout, float folds in scalar block order.
+
+use std::ops::Range;
+
+use crate::kernels::tl1::{self, LUT_W};
+use crate::kernels::tl2::{self, Tl2Layout};
+
+use core::arch::aarch64::*;
+
+/// Rows processed per vector pass: one `tbl` lane per output row.
+pub const ROW_TILE: usize = 16;
+
+/// Gather the byte at packed-row offset `b` from 16 consecutive weight
+/// rows starting at `r0`.
+///
+/// # Safety
+/// `data` must hold at least `(r0 + 16) * row_bytes` bytes and
+/// `b < row_bytes`.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn gather16(data: &[u8], row_bytes: usize, r0: usize, b: usize) -> [u8; 16] {
+    debug_assert!((r0 + ROW_TILE) * row_bytes <= data.len());
+    let mut idx = [0u8; 16];
+    for (r, slot) in idx.iter_mut().enumerate() {
+        *slot = *data.get_unchecked((r0 + r) * row_bytes + b);
+    }
+    idx
+}
+
+/// Split 16 packed code bytes into their low and high nibbles.
+///
+/// # Safety
+/// Requires NEON.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn nibbles(bytes: &[u8; 16]) -> (uint8x16_t, uint8x16_t) {
+    let v = vld1q_u8(bytes.as_ptr());
+    let mask = vdupq_n_u8(0x0f);
+    (vandq_u8(v, mask), vandq_u8(vshrq_n_u8::<4>(v), mask))
+}
+
+/// 16 parallel lookups into a 16-entry int8 table (one `tbl`).
+///
+/// # Safety
+/// Requires NEON; `table` must point at 16 readable `i8` values.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn lut16_i8(table: *const i8, nib: uint8x16_t) -> [i8; 16] {
+    let t = vld1q_u8(table as *const u8);
+    let mut out = [0i8; 16];
+    vst1q_u8(out.as_mut_ptr() as *mut u8, vqtbl1q_u8(t, nib));
+    out
+}
+
+/// 16 parallel lookups into a 16-entry int16 table via byte-plane
+/// unzip, two `tbl`s, and a zip back into 16-bit entries.
+///
+/// # Safety
+/// Requires NEON; `table` must point at 16 readable `i16` values.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn lut16_i16(table: *const i16, nib: uint8x16_t) -> [i16; 16] {
+    let a = vld1q_u8(table as *const u8); // entries 0..8 as bytes
+    let b = vld1q_u8((table as *const u8).add(16)); // entries 8..16
+    let lo_plane = vuzp1q_u8(a, b); // even bytes = i16 low bytes (LE)
+    let hi_plane = vuzp2q_u8(a, b); // odd bytes = i16 high bytes
+    let lo = vqtbl1q_u8(lo_plane, nib);
+    let hi = vqtbl1q_u8(hi_plane, nib);
+    let mut out = [0i16; 16];
+    let p = out.as_mut_ptr() as *mut u8;
+    vst1q_u8(p, vzip1q_u8(lo, hi));
+    vst1q_u8(p.add(16), vzip2q_u8(lo, hi));
+    out
+}
+
+/// Pair lookup for one packed byte (int16 tables), 16 rows at once.
+///
+/// # Safety
+/// Requires NEON; `t0` and `t1` must each point at 16 readable `i16`s.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn lut_pair_i16(t0: *const i16, t1: *const i16, bytes: &[u8; 16]) -> ([i16; 16], [i16; 16]) {
+    let (lo, hi) = nibbles(bytes);
+    (lut16_i16(t0, lo), lut16_i16(t1, hi))
+}
+
+/// Pair lookup for one packed byte (int8 tables), 16 rows at once.
+///
+/// # Safety
+/// Requires NEON; `t0` and `t1` must each point at 16 readable `i8`s.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn lut_pair_i8(t0: *const i8, t1: *const i8, bytes: &[u8; 16]) -> ([i8; 16], [i8; 16]) {
+    let (lo, hi) = nibbles(bytes);
+    (lut16_i8(t0, lo), lut16_i8(t1, hi))
+}
+
+/// NEON accumulation over int16 LUTs with two groups per byte — the
+/// shared hot loop of TL1_1 and ELUT_C4.
+///
+/// # Safety
+/// Caller must have verified NEON at run time. `data` must hold
+/// `rows.end` packed rows of `row_bytes` bytes; `tables` must hold
+/// `2 * row_bytes` tables of [`LUT_W`] `i16` entries; `out.len()` must
+/// equal `rows.len()`.
+#[target_feature(enable = "neon")]
+pub unsafe fn gemv_rows_lut16(
+    data: &[u8],
+    row_bytes: usize,
+    tables: &[i16],
+    combined: f32,
+    out: &mut [f32],
+    rows: Range<usize>,
+) {
+    debug_assert_eq!(out.len(), rows.len());
+    let n = rows.len();
+    let full = n - n % ROW_TILE;
+    let mut i = 0usize;
+    while i < full {
+        let base = rows.start + i;
+        let mut acc = [0i32; ROW_TILE];
+        for b in 0..row_bytes {
+            let idx = gather16(data, row_bytes, base, b);
+            let t0 = tables.as_ptr().add(2 * b * LUT_W);
+            let t1 = tables.as_ptr().add((2 * b + 1) * LUT_W);
+            let (v0, v1) = lut_pair_i16(t0, t1, &idx);
+            for r in 0..ROW_TILE {
+                acc[r] += v0[r] as i32 + v1[r] as i32;
+            }
+        }
+        for r in 0..ROW_TILE {
+            out[i + r] = acc[r] as f32 * combined;
+        }
+        i += ROW_TILE;
+    }
+    for r in i..n {
+        let row = rows.start + r;
+        let wrow = &data[row * row_bytes..(row + 1) * row_bytes];
+        out[r] = tl1::gemv_row_lut16(wrow, tables) as f32 * combined;
+    }
+}
+
+/// NEON accumulation over int8 LUTs with per-block scales — TL1_0's
+/// hot loop. Block flush order matches the scalar path exactly.
+///
+/// # Safety
+/// Caller must have verified NEON at run time. `data` must hold
+/// `rows.end` packed rows of `row_bytes` bytes; `tables`/`block_scales`
+/// must match `row_bytes` and `block_groups` as produced by the TL1
+/// prepare path; `out.len()` must equal `rows.len()`.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+pub unsafe fn gemv_rows_lut8(
+    data: &[u8],
+    row_bytes: usize,
+    tables: &[i8],
+    block_scales: &[f32],
+    block_groups: usize,
+    combined: f32,
+    out: &mut [f32],
+    rows: Range<usize>,
+) {
+    debug_assert_eq!(out.len(), rows.len());
+    let bytes_per_block = block_groups / 2;
+    let n = rows.len();
+    let full = n - n % ROW_TILE;
+    let mut i = 0usize;
+    while i < full {
+        let base = rows.start + i;
+        let mut facc = [0f32; ROW_TILE];
+        let mut b = 0usize;
+        let mut blk = 0usize;
+        while b < row_bytes {
+            let blk_bytes = bytes_per_block.min(row_bytes - b);
+            let tbase = blk * block_groups * LUT_W;
+            let mut acc = [0i32; ROW_TILE];
+            for bb in 0..blk_bytes {
+                let idx = gather16(data, row_bytes, base, b + bb);
+                let t0 = tables.as_ptr().add(tbase + 2 * bb * LUT_W);
+                let t1 = tables.as_ptr().add(tbase + (2 * bb + 1) * LUT_W);
+                let (v0, v1) = lut_pair_i8(t0, t1, &idx);
+                for r in 0..ROW_TILE {
+                    acc[r] += v0[r] as i32 + v1[r] as i32;
+                }
+            }
+            let bs = block_scales[blk];
+            for r in 0..ROW_TILE {
+                facc[r] += acc[r] as f32 * bs;
+            }
+            b += blk_bytes;
+            blk += 1;
+        }
+        for r in 0..ROW_TILE {
+            out[i + r] = facc[r] * combined;
+        }
+        i += ROW_TILE;
+    }
+    for r in i..n {
+        let row = rows.start + r;
+        let wrow = &data[row * row_bytes..(row + 1) * row_bytes];
+        out[r] = tl1::gemv_row_lut8(wrow, tables, block_scales, block_groups) * combined;
+    }
+}
+
+/// NEON TL2 lossless accumulation (mirror sign plane + TL1 tail).
+///
+/// # Safety
+/// Caller must have verified NEON at run time. `data` must hold
+/// `rows.end` packed TL2 rows matching `layout`; `tables` must hold
+/// `(n3 + n2) * LUT_W` `i16` entries; `out.len()` must equal
+/// `rows.len()`.
+#[target_feature(enable = "neon")]
+pub unsafe fn gemv_rows_tl2_i16(
+    data: &[u8],
+    layout: &Tl2Layout,
+    tables: &[i16],
+    combined: f32,
+    out: &mut [f32],
+    rows: Range<usize>,
+) {
+    debug_assert_eq!(out.len(), rows.len());
+    let row_bytes = layout.row_bytes();
+    let n3 = layout.n3();
+    let tl1_off = layout.idx_bytes + layout.sign_bytes;
+    let n = rows.len();
+    let full = n - n % ROW_TILE;
+    let mut i = 0usize;
+    while i < full {
+        let base = rows.start + i;
+        let mut acc = [0i32; ROW_TILE];
+        for s in 0..layout.sign_bytes {
+            let sb = gather16(data, row_bytes, base, layout.idx_bytes + s);
+            let g = 8 * s;
+            for j in 0..4 {
+                let idx = gather16(data, row_bytes, base, 4 * s + j);
+                let t0 = tables.as_ptr().add((g + 2 * j) * LUT_W);
+                let t1 = tables.as_ptr().add((g + 2 * j + 1) * LUT_W);
+                let (v0, v1) = lut_pair_i16(t0, t1, &idx);
+                for r in 0..ROW_TILE {
+                    let m0 = -(((sb[r] >> (2 * j)) & 1) as i32);
+                    let m1 = -(((sb[r] >> (2 * j + 1)) & 1) as i32);
+                    acc[r] += ((v0[r] as i32) ^ m0) - m0;
+                    acc[r] += ((v1[r] as i32) ^ m1) - m1;
+                }
+            }
+        }
+        for bb in 0..layout.tl1_bytes {
+            let idx = gather16(data, row_bytes, base, tl1_off + bb);
+            let t0 = tables.as_ptr().add((n3 + 2 * bb) * LUT_W);
+            let t1 = tables.as_ptr().add((n3 + 2 * bb + 1) * LUT_W);
+            let (v0, v1) = lut_pair_i16(t0, t1, &idx);
+            for r in 0..ROW_TILE {
+                acc[r] += v0[r] as i32 + v1[r] as i32;
+            }
+        }
+        for r in 0..ROW_TILE {
+            out[i + r] = acc[r] as f32 * combined;
+        }
+        i += ROW_TILE;
+    }
+    for r in i..n {
+        let row = rows.start + r;
+        let wrow = &data[row * row_bytes..(row + 1) * row_bytes];
+        out[r] = tl2::gemv_row_tl2_i16(wrow, layout, tables) as f32 * combined;
+    }
+}
+
+/// NEON TL2 fast-path accumulation (int8 tables, per-block scales),
+/// replicating the scalar flush schedule byte for byte.
+///
+/// # Safety
+/// Caller must have verified NEON at run time. `data` must hold
+/// `rows.end` packed TL2 rows matching `layout`; `tables`/`block_scales`
+/// must match the TL2 `_0` prepare path with `block_groups` groups per
+/// scale; `out.len()` must equal `rows.len()`.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+pub unsafe fn gemv_rows_tl2_i8(
+    data: &[u8],
+    layout: &Tl2Layout,
+    tables: &[i8],
+    block_scales: &[f32],
+    block_groups: usize,
+    combined: f32,
+    out: &mut [f32],
+    rows: Range<usize>,
+) {
+    debug_assert_eq!(out.len(), rows.len());
+    let row_bytes = layout.row_bytes();
+    let n3 = layout.n3();
+    let tl1_off = layout.idx_bytes + layout.sign_bytes;
+    let n = rows.len();
+    let full = n - n % ROW_TILE;
+    let mut i = 0usize;
+    while i < full {
+        let base = rows.start + i;
+        let mut facc = [0f32; ROW_TILE];
+        let mut acc = [0i32; ROW_TILE];
+        let mut blk = 0usize;
+        let mut in_blk = 0usize;
+        for s in 0..layout.sign_bytes {
+            let sb = gather16(data, row_bytes, base, layout.idx_bytes + s);
+            let g = 8 * s;
+            for j in 0..4 {
+                let idx = gather16(data, row_bytes, base, 4 * s + j);
+                let t0 = tables.as_ptr().add((g + 2 * j) * LUT_W);
+                let t1 = tables.as_ptr().add((g + 2 * j + 1) * LUT_W);
+                let (v0, v1) = lut_pair_i8(t0, t1, &idx);
+                for r in 0..ROW_TILE {
+                    let m0 = -(((sb[r] >> (2 * j)) & 1) as i32);
+                    let m1 = -(((sb[r] >> (2 * j + 1)) & 1) as i32);
+                    acc[r] += ((v0[r] as i32) ^ m0) - m0;
+                    acc[r] += ((v1[r] as i32) ^ m1) - m1;
+                }
+            }
+            in_blk += 8;
+            if in_blk == block_groups {
+                let bs = block_scales[blk];
+                for r in 0..ROW_TILE {
+                    facc[r] += acc[r] as f32 * bs;
+                }
+                acc = [0i32; ROW_TILE];
+                blk += 1;
+                in_blk = 0;
+            }
+        }
+        for bb in 0..layout.tl1_bytes {
+            let idx = gather16(data, row_bytes, base, tl1_off + bb);
+            let t0 = tables.as_ptr().add((n3 + 2 * bb) * LUT_W);
+            let t1 = tables.as_ptr().add((n3 + 2 * bb + 1) * LUT_W);
+            let (v0, v1) = lut_pair_i8(t0, t1, &idx);
+            for r in 0..ROW_TILE {
+                acc[r] += v0[r] as i32 + v1[r] as i32;
+            }
+            in_blk += 2;
+            if in_blk == block_groups {
+                let bs = block_scales[blk];
+                for r in 0..ROW_TILE {
+                    facc[r] += acc[r] as f32 * bs;
+                }
+                acc = [0i32; ROW_TILE];
+                blk += 1;
+                in_blk = 0;
+            }
+        }
+        if in_blk > 0 {
+            let bs = block_scales[blk];
+            for r in 0..ROW_TILE {
+                facc[r] += acc[r] as f32 * bs;
+            }
+        }
+        for r in 0..ROW_TILE {
+            out[i + r] = facc[r] * combined;
+        }
+        i += ROW_TILE;
+    }
+    for r in i..n {
+        let row = rows.start + r;
+        let wrow = &data[row * row_bytes..(row + 1) * row_bytes];
+        out[r] = tl2::gemv_row_tl2_i8(wrow, layout, tables, block_scales, block_groups) * combined;
+    }
+}
+
+/// NEON ELUT_C5 accumulation: mirror-consolidated int16 tables with one
+/// group per nibble and a 1-bit sign plane.
+///
+/// # Safety
+/// Caller must have verified NEON at run time. `data` must hold
+/// `rows.end` packed ELUT_C5 rows (`idx_bytes` nibble bytes followed by
+/// `idx_bytes / 4` sign bytes per row); `tables` must hold
+/// `2 * idx_bytes` tables of [`LUT_W`] `i16` entries; `out.len()` must
+/// equal `rows.len()`.
+#[target_feature(enable = "neon")]
+pub unsafe fn gemv_rows_elut5(
+    data: &[u8],
+    idx_bytes: usize,
+    tables: &[i16],
+    combined: f32,
+    out: &mut [f32],
+    rows: Range<usize>,
+) {
+    debug_assert_eq!(out.len(), rows.len());
+    debug_assert_eq!(idx_bytes % 4, 0);
+    let row_bytes = idx_bytes + idx_bytes / 4;
+    let n = rows.len();
+    let full = n - n % ROW_TILE;
+    let mut i = 0usize;
+    while i < full {
+        let base = rows.start + i;
+        let mut acc = [0i32; ROW_TILE];
+        for b in 0..idx_bytes {
+            let idx = gather16(data, row_bytes, base, b);
+            let sb = gather16(data, row_bytes, base, idx_bytes + b / 4);
+            let bit0 = 2 * (b % 4);
+            let t0 = tables.as_ptr().add(2 * b * LUT_W);
+            let t1 = tables.as_ptr().add((2 * b + 1) * LUT_W);
+            let (v0, v1) = lut_pair_i16(t0, t1, &idx);
+            for r in 0..ROW_TILE {
+                let m0 = -(((sb[r] >> bit0) & 1) as i32);
+                let m1 = -(((sb[r] >> (bit0 + 1)) & 1) as i32);
+                acc[r] += ((v0[r] as i32) ^ m0) - m0;
+                acc[r] += ((v1[r] as i32) ^ m1) - m1;
+            }
+        }
+        for r in 0..ROW_TILE {
+            out[i + r] = acc[r] as f32 * combined;
+        }
+        i += ROW_TILE;
+    }
+    for r in i..n {
+        let row = rows.start + r;
+        let wrow = &data[row * row_bytes..(row + 1) * row_bytes];
+        out[r] = crate::kernels::elut::gemv_row_elut5(wrow, idx_bytes, tables) as f32 * combined;
+    }
+}
+
+/// NEON I2_S row accumulation. The scalar body under
+/// `target_feature(enable = "neon")` lets LLVM emit the widening
+/// multiply-accumulate (`smlal`-family) pattern.
+///
+/// # Safety
+/// Caller must have verified NEON at run time. `wrow.len() * 4` must
+/// equal `aq.len()`, and `act_sum` must be the sum of `aq`.
+#[target_feature(enable = "neon")]
+pub unsafe fn gemv_row_i2s(wrow: &[u8], aq: &[i8], act_sum: i32) -> i32 {
+    debug_assert_eq!(wrow.len() * 4, aq.len());
+    let mut acc = 0i32;
+    let mut k = 0usize;
+    for b4 in wrow.chunks_exact(4) {
+        let a = &aq[k..k + 16];
+        let mut local = 0i32;
+        for (bi, &byte) in b4.iter().enumerate() {
+            let base = bi * 4;
+            local += (byte & 0x3) as i32 * a[base] as i32;
+            local += ((byte >> 2) & 0x3) as i32 * a[base + 1] as i32;
+            local += ((byte >> 4) & 0x3) as i32 * a[base + 2] as i32;
+            local += ((byte >> 6) & 0x3) as i32 * a[base + 3] as i32;
+        }
+        acc += local;
+        k += 16;
+    }
+    for &byte in wrow.chunks_exact(4).remainder() {
+        for j in 0..4 {
+            acc += ((byte >> (2 * j)) & 0x3) as i32 * aq[k + j] as i32;
+        }
+        k += 4;
+    }
+    acc - act_sum
+}
+
+/// NEON I2_S over a row range (the `gemv_rows` shape).
+///
+/// # Safety
+/// Caller must have verified NEON at run time. `data` must hold
+/// `rows.end` packed rows of `aq.len() / 4` bytes; `act_sum` must be
+/// the sum of `aq`; `out.len()` must equal `rows.len()`.
+#[target_feature(enable = "neon")]
+pub unsafe fn gemv_rows_i2s(
+    data: &[u8],
+    aq: &[i8],
+    act_sum: i32,
+    combined: f32,
+    out: &mut [f32],
+    rows: Range<usize>,
+) {
+    let row_bytes = aq.len() / 4;
+    for (o, r) in out.iter_mut().zip(rows) {
+        let wrow = &data[r * row_bytes..(r + 1) * row_bytes];
+        *o = gemv_row_i2s(wrow, aq, act_sum) as f32 * combined;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_neon() -> bool {
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+
+    #[test]
+    fn lut16_i8_matches_scalar_lookup() {
+        if !have_neon() {
+            return;
+        }
+        let table: [i8; 16] = core::array::from_fn(|i| (i as i8) * 3 - 20);
+        let bytes: [u8; 16] =
+            core::array::from_fn(|i| ((i * 7) % 16) as u8 | (((i * 3) % 14) as u8) << 4);
+        // SAFETY: NEON presence checked above; table/bytes are 16 wide.
+        let (v0, v1) = unsafe { lut_pair_i8(table.as_ptr(), table.as_ptr(), &bytes) };
+        for i in 0..16 {
+            assert_eq!(v0[i], table[(bytes[i] & 0xf) as usize], "lo {i}");
+            assert_eq!(v1[i], table[(bytes[i] >> 4) as usize], "hi {i}");
+        }
+    }
+
+    #[test]
+    fn lut16_i16_matches_scalar_lookup() {
+        if !have_neon() {
+            return;
+        }
+        let table: [i16; 16] = core::array::from_fn(|i| (i as i16) * -2500 + 7);
+        let bytes: [u8; 16] = core::array::from_fn(|i| (i as u8) | ((15 - i as u8) << 4));
+        // SAFETY: NEON presence checked above; table/bytes are 16 wide.
+        let (v0, v1) = unsafe { lut_pair_i16(table.as_ptr(), table.as_ptr(), &bytes) };
+        for i in 0..16 {
+            assert_eq!(v0[i], table[(bytes[i] & 0xf) as usize], "lo {i}");
+            assert_eq!(v1[i], table[(bytes[i] >> 4) as usize], "hi {i}");
+        }
+    }
+}

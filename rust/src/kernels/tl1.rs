@@ -16,6 +16,7 @@
 
 use super::lut::{decode_code, requantize_lut_block};
 use super::quant::{quantize_act_int8_into, TernaryWeights};
+use super::simd::{self, SimdLevel};
 use super::{
     Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
 };
@@ -183,11 +184,35 @@ impl<const LOSSLESS: bool> Kernel for Tl1Kernel<LOSSLESS> {
         }
     }
 
+    fn simd_levels(&self) -> &'static [SimdLevel] {
+        simd::KERNEL_LEVELS
+    }
+
     fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
         let row_bytes = t.k / 4;
+        let level = simd::active_level();
+        simd::note_call(level);
         match p {
             PreparedRow::LutI16 { tables, scale } => {
                 let combined = t.scale / scale;
+                #[cfg(target_arch = "x86_64")]
+                if level == SimdLevel::Avx2 {
+                    // SAFETY: AVX2 verified by the active dispatch level;
+                    // buffer shapes are guaranteed by quantize/prepare.
+                    unsafe {
+                        simd::avx2::gemv_rows_lut16(&t.data, row_bytes, tables, combined, out, rows);
+                    }
+                    return;
+                }
+                #[cfg(target_arch = "aarch64")]
+                if level == SimdLevel::Neon {
+                    // SAFETY: NEON verified by the active dispatch level;
+                    // buffer shapes are guaranteed by quantize/prepare.
+                    unsafe {
+                        simd::neon::gemv_rows_lut16(&t.data, row_bytes, tables, combined, out, rows);
+                    }
+                    return;
+                }
                 for (o, r) in out.iter_mut().zip(rows) {
                     let wrow = &t.data[r * row_bytes..(r + 1) * row_bytes];
                     *o = gemv_row_lut16(wrow, tables) as f32 * combined;
@@ -195,6 +220,42 @@ impl<const LOSSLESS: bool> Kernel for Tl1Kernel<LOSSLESS> {
             }
             PreparedRow::LutI8 { tables, block_scales, block_groups, scale } => {
                 let combined = t.scale / scale;
+                #[cfg(target_arch = "x86_64")]
+                if level == SimdLevel::Avx2 {
+                    // SAFETY: AVX2 verified by the active dispatch level;
+                    // buffer shapes are guaranteed by quantize/prepare.
+                    unsafe {
+                        simd::avx2::gemv_rows_lut8(
+                            &t.data,
+                            row_bytes,
+                            tables,
+                            block_scales,
+                            block_groups,
+                            combined,
+                            out,
+                            rows,
+                        );
+                    }
+                    return;
+                }
+                #[cfg(target_arch = "aarch64")]
+                if level == SimdLevel::Neon {
+                    // SAFETY: NEON verified by the active dispatch level;
+                    // buffer shapes are guaranteed by quantize/prepare.
+                    unsafe {
+                        simd::neon::gemv_rows_lut8(
+                            &t.data,
+                            row_bytes,
+                            tables,
+                            block_scales,
+                            block_groups,
+                            combined,
+                            out,
+                            rows,
+                        );
+                    }
+                    return;
+                }
                 for (o, r) in out.iter_mut().zip(rows) {
                     let wrow = &t.data[r * row_bytes..(r + 1) * row_bytes];
                     *o = gemv_row_lut8(wrow, tables, block_scales, block_groups) * combined;
@@ -215,7 +276,10 @@ pub fn gemv_row_lut16(wrow: &[u8], tables: &[i16]) -> i32 {
     for &byte in wrow {
         let c0 = (byte & 0xf) as usize;
         let c1 = (byte >> 4) as usize;
+        // SAFETY: tables holds 2 groups of LUT_W entries per packed byte
+        // and nibble codes are < LUT_W, so both indices are in bounds.
         acc += unsafe { *tables.get_unchecked(g * LUT_W + c0) } as i32;
+        // SAFETY: as above.
         acc += unsafe { *tables.get_unchecked((g + 1) * LUT_W + c1) } as i32;
         g += 2;
     }
@@ -240,7 +304,11 @@ pub fn gemv_row_lut8(
         for &byte in bytes {
             let c0 = (byte & 0xf) as usize;
             let c1 = (byte >> 4) as usize;
+            // SAFETY: tables holds 2 groups of LUT_W entries per packed
+            // byte and nibble codes are < LUT_W; `base` advances by one
+            // whole block per chunk, so both indices are in bounds.
             acc += unsafe { *tables.get_unchecked(base + g * LUT_W + c0) } as i32;
+            // SAFETY: as above.
             acc += unsafe { *tables.get_unchecked(base + (g + 1) * LUT_W + c1) } as i32;
             g += 2;
         }

@@ -18,6 +18,7 @@
 
 use super::lut::{decode_code, mirror_join, mirror_split};
 use super::quant::{quantize_act_int8_into, TernaryWeights};
+use super::simd::{self, SimdLevel};
 use super::tl1::{
     build_tables_tl1_into, pack_row_tl1, requantize_tables_into, LUT_BLOCK_GROUPS, LUT_W,
 };
@@ -222,12 +223,36 @@ impl<const LOSSLESS: bool> Kernel for Tl2Kernel<LOSSLESS> {
         }
     }
 
+    fn simd_levels(&self) -> &'static [SimdLevel] {
+        simd::KERNEL_LEVELS
+    }
+
     fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
         let layout = Tl2Layout::new(t.k);
         let row_bytes = layout.row_bytes();
+        let level = simd::active_level();
+        simd::note_call(level);
         match p {
             PreparedRow::LutI16 { tables, scale } => {
                 let combined = t.scale / scale;
+                #[cfg(target_arch = "x86_64")]
+                if level == SimdLevel::Avx2 {
+                    // SAFETY: AVX2 verified by the active dispatch level;
+                    // buffer shapes are guaranteed by quantize/prepare.
+                    unsafe {
+                        simd::avx2::gemv_rows_tl2_i16(&t.data, &layout, tables, combined, out, rows);
+                    }
+                    return;
+                }
+                #[cfg(target_arch = "aarch64")]
+                if level == SimdLevel::Neon {
+                    // SAFETY: NEON verified by the active dispatch level;
+                    // buffer shapes are guaranteed by quantize/prepare.
+                    unsafe {
+                        simd::neon::gemv_rows_tl2_i16(&t.data, &layout, tables, combined, out, rows);
+                    }
+                    return;
+                }
                 for (o, r) in out.iter_mut().zip(rows) {
                     let row = &t.data[r * row_bytes..(r + 1) * row_bytes];
                     *o = gemv_row_tl2_i16(row, &layout, tables) as f32 * combined;
@@ -235,6 +260,42 @@ impl<const LOSSLESS: bool> Kernel for Tl2Kernel<LOSSLESS> {
             }
             PreparedRow::LutI8 { tables, block_scales, block_groups, scale } => {
                 let combined = t.scale / scale;
+                #[cfg(target_arch = "x86_64")]
+                if level == SimdLevel::Avx2 {
+                    // SAFETY: AVX2 verified by the active dispatch level;
+                    // buffer shapes are guaranteed by quantize/prepare.
+                    unsafe {
+                        simd::avx2::gemv_rows_tl2_i8(
+                            &t.data,
+                            &layout,
+                            tables,
+                            block_scales,
+                            block_groups,
+                            combined,
+                            out,
+                            rows,
+                        );
+                    }
+                    return;
+                }
+                #[cfg(target_arch = "aarch64")]
+                if level == SimdLevel::Neon {
+                    // SAFETY: NEON verified by the active dispatch level;
+                    // buffer shapes are guaranteed by quantize/prepare.
+                    unsafe {
+                        simd::neon::gemv_rows_tl2_i8(
+                            &t.data,
+                            &layout,
+                            tables,
+                            block_scales,
+                            block_groups,
+                            combined,
+                            out,
+                            rows,
+                        );
+                    }
+                    return;
+                }
                 for (o, r) in out.iter_mut().zip(rows) {
                     let row = &t.data[r * row_bytes..(r + 1) * row_bytes];
                     *o = gemv_row_tl2_i8(row, &layout, tables, block_scales, block_groups)
@@ -265,9 +326,13 @@ pub fn gemv_row_tl2_i16(row: &[u8], layout: &Tl2Layout, tables: &[i16]) -> i32 {
         let ib = g / 2;
         let tb = g * LUT_W;
         for j in 0..4 {
+            // SAFETY: each sign byte covers 4 index bytes and 8 tables;
+            // the layout sizes both planes and nibble codes are < LUT_W.
             let byte = unsafe { *idx_plane.get_unchecked(ib + j) };
             let t0 = tb + 2 * j * LUT_W;
+            // SAFETY: as above.
             let v0 = unsafe { *tables.get_unchecked(t0 + (byte & 0xf) as usize) } as i32;
+            // SAFETY: as above.
             let v1 = unsafe { *tables.get_unchecked(t0 + LUT_W + (byte >> 4) as usize) } as i32;
             accs[((sbyte >> (2 * j)) & 1) as usize] += v0;
             accs[((sbyte >> (2 * j + 1)) & 1) as usize] += v1;
@@ -278,7 +343,10 @@ pub fn gemv_row_tl2_i16(row: &[u8], layout: &Tl2Layout, tables: &[i16]) -> i32 {
     // TL1 tail (tables offset by the n3 g=3 tables).
     let mut gg = n3;
     for &byte in tl1_tail {
+        // SAFETY: the tail holds n2 groups of LUT_W entries after the n3
+        // g=3 tables; nibble codes are < LUT_W.
         acc += unsafe { *tables.get_unchecked(gg * LUT_W + (byte & 0xf) as usize) } as i32;
+        // SAFETY: as above.
         acc += unsafe { *tables.get_unchecked((gg + 1) * LUT_W + (byte >> 4) as usize) } as i32;
         gg += 2;
     }
@@ -313,9 +381,13 @@ pub fn gemv_row_tl2_i8(
         let ib = g / 2;
         let tb = g * LUT_W;
         for j in 0..4 {
+            // SAFETY: each sign byte covers 4 index bytes and 8 tables;
+            // the layout sizes both planes and nibble codes are < LUT_W.
             let byte = unsafe { *idx_plane.get_unchecked(ib + j) };
             let t0 = tb + 2 * j * LUT_W;
+            // SAFETY: as above.
             let v0 = unsafe { *tables.get_unchecked(t0 + (byte & 0xf) as usize) } as i32;
+            // SAFETY: as above.
             let v1 = unsafe { *tables.get_unchecked(t0 + LUT_W + (byte >> 4) as usize) } as i32;
             accs[((sbyte >> (2 * j)) & 1) as usize] += v0;
             accs[((sbyte >> (2 * j + 1)) & 1) as usize] += v1;
@@ -333,7 +405,10 @@ pub fn gemv_row_tl2_i8(
     let mut acc = accs[0] - accs[1];
     let mut gg = n3;
     for &byte in tl1_tail {
+        // SAFETY: the tail holds n2 groups of LUT_W entries after the n3
+        // g=3 tables; nibble codes are < LUT_W.
         acc += unsafe { *tables.get_unchecked(gg * LUT_W + (byte & 0xf) as usize) } as i32;
+        // SAFETY: as above.
         acc += unsafe { *tables.get_unchecked((gg + 1) * LUT_W + (byte >> 4) as usize) } as i32;
         gg += 2;
         in_blk += 2;

@@ -24,6 +24,7 @@
 //! `docs/tuning.md`.
 #![deny(missing_docs)]
 
+use super::simd::{self, SimdLevel};
 use super::{kernel_for, QuantType};
 use crate::perf::calibrate::{calibrate_kernel_shape, KernelRate};
 use crate::threadpool::ThreadPool;
@@ -38,12 +39,14 @@ use std::sync::Mutex;
 /// (bump on breaking schema changes). Older versions in
 /// [`SUPPORTED_PROFILE_VERSIONS`] still load, with the fields they lack
 /// defaulting to empty — see `docs/tuning.md` for the migration table.
-pub const PROFILE_VERSION: u64 = 2;
+pub const PROFILE_VERSION: u64 = 3;
 
 /// Profile versions [`TuningProfile::from_json`] accepts. v1 files (PR 1)
 /// carry only the per-shape `entries`; v2 adds optional `overrides` and
-/// `e2e` sections.
-pub const SUPPORTED_PROFILE_VERSIONS: [u64; 2] = [1, 2];
+/// `e2e` sections; v3 records the SIMD level each measurement ran at and
+/// the level the per-shape winner used (older files load with every
+/// level defaulting to `scalar`).
+pub const SUPPORTED_PROFILE_VERSIONS: [u64; 3] = [1, 2, 3];
 
 /// The projection a ternary matmul serves inside a transformer layer —
 /// the per-layer dispatch key alongside the (m, k, n) shape. `Qkv`
@@ -118,6 +121,9 @@ pub struct E2eEntry {
 pub struct Measurement {
     /// The kernel measured.
     pub qtype: QuantType,
+    /// The SIMD dispatch level the kernel ran at (v3 profiles; older
+    /// files load as `scalar`).
+    pub simd: SimdLevel,
     /// Mean wall time of one matmul call, microseconds.
     pub us_per_matmul: f64,
     /// Weights streamed per second (`m·k / secs_per_call`), in units of
@@ -143,6 +149,9 @@ pub struct TuningEntry {
     pub weight: f64,
     /// The fastest measured kernel for this shape.
     pub best: QuantType,
+    /// The SIMD level `best` won at. Selection degrades when the serving
+    /// host can't run it — see [`TuningProfile::select_traced`].
+    pub best_simd: SimdLevel,
     /// All measurements, fastest first (kept for inspection/debugging).
     pub measurements: Vec<Measurement>,
 }
@@ -217,7 +226,15 @@ impl TuningProfile {
 
     /// [`TuningProfile::select`], also reporting whether resolution fell
     /// through to the untuned `default` (true = case 3, a fallback worth
-    /// surfacing — see [`DispatchPlan`]).
+    /// surfacing — see [`DispatchPlan`]) **or** degraded because the
+    /// entry's winner was measured at a SIMD level this host cannot run
+    /// (a profile tuned on an AVX2 box loaded on a machine without it,
+    /// or under a forced `--simd scalar`). A degraded entry re-ranks to
+    /// the fastest of its measurements taken at a usable level, keeping
+    /// the choice measured rather than guessed; it falls back to the
+    /// recorded winner's kernel only when no usable measurement exists
+    /// (hand-edited profiles) — the kernel itself still runs, just on
+    /// its scalar path.
     pub fn select_traced(&self, m: usize, k: usize, n: usize) -> (QuantType, bool) {
         let mut below: Option<&TuningEntry> = None;
         let mut above: Option<&TuningEntry> = None;
@@ -231,7 +248,22 @@ impl TuningProfile {
             }
         }
         match below.or(above) {
-            Some(e) => (e.best, false),
+            Some(e) => {
+                if simd::usable(e.best_simd) {
+                    (e.best, false)
+                } else {
+                    let degraded = e
+                        .measurements
+                        .iter()
+                        .filter(|m| simd::usable(m.simd))
+                        .min_by(|a, b| {
+                            a.us_per_matmul.partial_cmp(&b.us_per_matmul).expect("finite")
+                        })
+                        .map(|m| m.qtype)
+                        .unwrap_or(e.best);
+                    (degraded, true)
+                }
+            }
             None => (self.default, true),
         }
     }
@@ -277,6 +309,7 @@ impl TuningProfile {
                     .map(|m| {
                         Json::Obj(vec![
                             ("kernel".into(), Json::Str(m.qtype.name().into())),
+                            ("simd".into(), Json::Str(m.simd.name().into())),
                             ("us_per_matmul".into(), Json::Num(m.us_per_matmul)),
                             ("gweights_per_s".into(), Json::Num(m.gweights_per_s)),
                         ])
@@ -288,6 +321,7 @@ impl TuningProfile {
                     ("n".into(), Json::Num(e.n as f64)),
                     ("weight".into(), Json::Num(e.weight)),
                     ("best".into(), Json::Str(e.best.name().into())),
+                    ("best_simd".into(), Json::Str(e.best_simd.name().into())),
                     ("measurements".into(), Json::Arr(ms)),
                 ])
             })
@@ -371,6 +405,7 @@ impl TuningProfile {
                     };
                     measurements.push(Measurement {
                         qtype: parse_qtype(kname)?,
+                        simd: parse_simd(m.get("simd").and_then(Json::as_str), i)?,
                         us_per_matmul: us,
                         gweights_per_s: gw,
                     });
@@ -384,6 +419,7 @@ impl TuningProfile {
                 // tuning (and hand-edited ones) default to weight 1.0.
                 weight: e.get("weight").and_then(Json::as_f64).unwrap_or(1.0),
                 best,
+                best_simd: parse_simd(e.get("best_simd").and_then(Json::as_str), i)?,
                 measurements,
             });
         }
@@ -454,6 +490,16 @@ impl TuningProfile {
 
 fn parse_qtype(name: &str) -> Result<QuantType> {
     QuantType::parse(name).with_context(|| format!("unknown kernel {name:?} in profile"))
+}
+
+/// Parse an optional profile SIMD-level field: absent (v1/v2 files)
+/// defaults to `scalar`; present but unknown is a clear error.
+fn parse_simd(name: Option<&str>, entry: usize) -> Result<SimdLevel> {
+    match name {
+        None => Ok(SimdLevel::Scalar),
+        Some(s) => SimdLevel::parse(s)
+            .with_context(|| format!("entry {entry}: unknown simd level {s:?} in profile")),
+    }
 }
 
 /// How a model picks the kernel for each of its ternary projections.
@@ -726,25 +772,40 @@ pub fn tune(cfg: &TuneConfig, mut progress: Option<&mut dyn FnMut(&str)>) -> Tun
             }
             let mut measurements: Vec<Measurement> = Vec::new();
             for &qt in &cfg.candidates {
-                if k % kernel_for(qt).info().k_multiple != 0 {
+                let kern = kernel_for(qt);
+                if k % kern.info().k_multiple != 0 {
                     continue;
                 }
-                let rate: KernelRate =
-                    calibrate_kernel_shape(qt, m, k, n, &pool, cfg.min_iters, cfg.min_seconds);
-                let meas = Measurement {
-                    qtype: qt,
-                    us_per_matmul: rate.secs_per_matmul(m, k) * 1e6,
-                    gweights_per_s: rate.weights_per_s / 1e9,
-                };
-                if let Some(p) = progress.as_mut() {
-                    p(&format!(
-                        "tune {m}x{k} n={n} {:<9} {:>10.1} µs/matmul ({:.2} Gw/s)",
-                        qt.name(),
-                        meas.us_per_matmul,
-                        meas.gweights_per_s
-                    ));
+                // Measure each kernel once per SIMD tier it implements
+                // and this host can run — the per-shape winner is a
+                // (kernel, level) pair, not just a kernel, and the
+                // scalar row is what profile degradation falls back to
+                // on hosts that lack the winning vector tier.
+                let kernel_levels = kern.simd_levels();
+                for level in simd::available_levels() {
+                    if !kernel_levels.contains(&level) {
+                        continue;
+                    }
+                    let rate: KernelRate = simd::with_level(level, || {
+                        calibrate_kernel_shape(qt, m, k, n, &pool, cfg.min_iters, cfg.min_seconds)
+                    });
+                    let meas = Measurement {
+                        qtype: qt,
+                        simd: level,
+                        us_per_matmul: rate.secs_per_matmul(m, k) * 1e6,
+                        gweights_per_s: rate.weights_per_s / 1e9,
+                    };
+                    if let Some(p) = progress.as_mut() {
+                        p(&format!(
+                            "tune {m}x{k} n={n} {:<9} [{:<6}] {:>10.1} µs/matmul ({:.2} Gw/s)",
+                            qt.name(),
+                            level.name(),
+                            meas.us_per_matmul,
+                            meas.gweights_per_s
+                        ));
+                    }
+                    measurements.push(meas);
                 }
-                measurements.push(meas);
             }
             if measurements.is_empty() {
                 continue;
@@ -752,21 +813,23 @@ pub fn tune(cfg: &TuneConfig, mut progress: Option<&mut dyn FnMut(&str)>) -> Tun
             measurements
                 .sort_by(|a, b| a.us_per_matmul.partial_cmp(&b.us_per_matmul).expect("finite"));
             let best = measurements[0].qtype;
+            let best_simd = measurements[0].simd;
             if let Some(p) = progress.as_mut() {
                 // Weighted (trace-driven) sweeps annotate each winner
                 // with its traffic share — even a single-width trace
                 // whose share is exactly 100%.
                 if cfg.batch_weights.is_empty() {
-                    p(&format!("tune {m}x{k} n={n} -> best {}", best.name()));
+                    p(&format!("tune {m}x{k} n={n} -> best {} [{}]", best.name(), best_simd.name()));
                 } else {
                     p(&format!(
-                        "tune {m}x{k} n={n} -> best {} ({:.1}% of traced traffic)",
+                        "tune {m}x{k} n={n} -> best {} [{}] ({:.1}% of traced traffic)",
                         best.name(),
+                        best_simd.name(),
                         weight * 100.0
                     ));
                 }
             }
-            entries.push(TuningEntry { m, k, n, weight, best, measurements });
+            entries.push(TuningEntry { m, k, n, weight, best, best_simd, measurements });
         }
     }
     TuningProfile {
@@ -1212,7 +1275,15 @@ mod tests {
     use super::*;
 
     fn entry(m: usize, k: usize, n: usize, best: QuantType) -> TuningEntry {
-        TuningEntry { m, k, n, weight: 1.0, best, measurements: Vec::new() }
+        TuningEntry {
+            m,
+            k,
+            n,
+            weight: 1.0,
+            best,
+            best_simd: SimdLevel::Scalar,
+            measurements: Vec::new(),
+        }
     }
 
     #[test]
@@ -1256,14 +1327,17 @@ mod tests {
                 n: 1,
                 weight: 0.625,
                 best: QuantType::Tl21,
+                best_simd: SimdLevel::Avx2,
                 measurements: vec![
                     Measurement {
                         qtype: QuantType::Tl21,
+                        simd: SimdLevel::Avx2,
                         us_per_matmul: 12.5,
                         gweights_per_s: 15.7,
                     },
                     Measurement {
                         qtype: QuantType::I2S,
+                        simd: SimdLevel::Scalar,
                         us_per_matmul: 14.0,
                         gweights_per_s: 14.0,
                     },
@@ -1355,6 +1429,104 @@ mod tests {
         fixed.note_degraded(256, 256, 8, QuantType::Tl21, QuantType::I2S);
         assert_eq!(fixed.degraded(), 1);
         assert_eq!(fixed.fallbacks(), 0);
+    }
+
+    #[test]
+    fn vector_winner_degrades_to_usable_measurement() {
+        let mut e = entry(256, 256, 1, QuantType::Tl11);
+        e.best_simd = SimdLevel::Avx2;
+        e.measurements = vec![
+            Measurement {
+                qtype: QuantType::Tl11,
+                simd: SimdLevel::Avx2,
+                us_per_matmul: 10.0,
+                gweights_per_s: 20.0,
+            },
+            Measurement {
+                qtype: QuantType::Tq20,
+                simd: SimdLevel::Scalar,
+                us_per_matmul: 15.0,
+                gweights_per_s: 13.0,
+            },
+            Measurement {
+                qtype: QuantType::Tl11,
+                simd: SimdLevel::Scalar,
+                us_per_matmul: 18.0,
+                gweights_per_s: 11.0,
+            },
+        ];
+        let p = TuningProfile {
+            entries: vec![e],
+            ..TuningProfile::empty(QuantType::I2S, 1)
+        };
+        // Forced scalar: the AVX2 winner is unusable, so resolution
+        // re-ranks to the fastest scalar measurement and reports the
+        // degrade as a fallback.
+        simd::with_level(SimdLevel::Scalar, || {
+            assert_eq!(p.select_traced(256, 256, 1), (QuantType::Tq20, true));
+        });
+
+        // No usable measurement recorded (hand-edited profile): keep the
+        // winner's kernel — it still runs, on its scalar path.
+        let mut bare = entry(64, 128, 1, QuantType::Tl10);
+        bare.best_simd = SimdLevel::Neon;
+        let p2 = TuningProfile {
+            entries: vec![bare],
+            ..TuningProfile::empty(QuantType::I2S, 1)
+        };
+        simd::with_level(SimdLevel::Scalar, || {
+            assert_eq!(p2.select_traced(64, 128, 1), (QuantType::Tl10, true));
+        });
+    }
+
+    #[test]
+    fn dispatch_plan_counts_simd_degrades_as_fallbacks() {
+        let mut e = entry(256, 256, 1, QuantType::Tl11);
+        e.best_simd = SimdLevel::Avx2;
+        e.measurements = vec![Measurement {
+            qtype: QuantType::I2S,
+            simd: SimdLevel::Scalar,
+            us_per_matmul: 15.0,
+            gweights_per_s: 13.0,
+        }];
+        let p = TuningProfile {
+            entries: vec![e],
+            ..TuningProfile::empty(QuantType::Tl20, 1)
+        };
+        let plan = DispatchPlan::new(Dispatch::Auto(p));
+        simd::with_level(SimdLevel::Scalar, || {
+            assert_eq!(plan.select(0, Role::Qkv, 256, 256, 1), QuantType::I2S);
+        });
+        assert_eq!(plan.fallbacks(), 1);
+    }
+
+    #[test]
+    fn tune_measures_every_usable_simd_level() {
+        let cfg = TuneConfig {
+            shapes: vec![(16, 128)],
+            batches: vec![1],
+            candidates: vec![QuantType::I2S],
+            min_iters: 1,
+            min_seconds: 0.001,
+            ..TuneConfig::default()
+        };
+        let profile = tune(&cfg, None);
+        assert_eq!(profile.entries.len(), 1);
+        let e = &profile.entries[0];
+        // Every measurement ran at a level the kernel implements, at
+        // most once per level, and the recorded winner is the fastest.
+        assert!(!e.measurements.is_empty());
+        let kern_levels = kernel_for(QuantType::I2S).simd_levels();
+        let mut seen: Vec<SimdLevel> = Vec::new();
+        for m in &e.measurements {
+            assert!(kern_levels.contains(&m.simd));
+            assert!(!seen.contains(&m.simd), "duplicate level {:?}", m.simd);
+            seen.push(m.simd);
+        }
+        assert_eq!((e.best, e.best_simd), (e.measurements[0].qtype, e.measurements[0].simd));
+        // The profile round-trips with the level fields intact.
+        let back = TuningProfile::from_json(&profile.to_json()).unwrap();
+        assert_eq!(back, profile);
     }
 
     #[test]
@@ -1482,7 +1654,9 @@ mod tests {
         let e = &profile.entries[0];
         assert_eq!((e.m, e.k, e.n), (64, 256, 1));
         assert!(cfg.candidates.contains(&e.best));
-        assert_eq!(e.measurements.len(), 2);
+        // At least one measurement per candidate (more when the host runs
+        // a vector tier: one row per usable SIMD level).
+        assert!(e.measurements.len() >= 2, "{:?}", e.measurements);
         assert!(e.measurements[0].us_per_matmul <= e.measurements[1].us_per_matmul);
         assert!(!lines.is_empty());
         // Selection from a freshly tuned profile resolves to the winner.

@@ -19,6 +19,15 @@
 //! Python never runs on the request path: artifacts are built once by
 //! `make artifacts`; the serving binary is self-contained.
 //!
+//! ## Unsafe policy
+//!
+//! `unsafe` is confined to three audited sites: the explicit SIMD
+//! implementations under `kernels/simd/` (intrinsics + documented
+//! `# Safety` contracts), the bounds-free LUT reads in the scalar kernel
+//! hot loops, and the disjoint-write pointer fan-out of the threaded
+//! matmul. Every block carries a `// SAFETY:` comment; the
+//! `undocumented_unsafe_blocks` clippy lint keeps it that way.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -34,17 +43,28 @@
 //! assert_eq!(logits.len(), cfg.vocab_size);
 //! ```
 
+#![warn(clippy::undocumented_unsafe_blocks)]
+
+#[deny(unsafe_code)]
 pub mod cli;
+#[deny(unsafe_code)]
 pub mod config;
+#[deny(unsafe_code)]
 pub mod coordinator;
+#[deny(unsafe_code)]
 pub mod eval;
 pub mod kernels;
+#[deny(unsafe_code)]
 pub mod metrics;
 pub mod model;
+#[deny(unsafe_code)]
 pub mod modelio;
+#[deny(unsafe_code)]
 pub mod perf;
+#[deny(unsafe_code)]
 pub mod runtime;
 pub mod threadpool;
+#[deny(unsafe_code)]
 pub mod tokenizer;
 pub mod util;
 

@@ -18,7 +18,7 @@ use bitnet::config::{Config, LaunchConfig};
 use bitnet::coordinator::trace::DRIFT_WARN_L1;
 use bitnet::coordinator::{Engine, EngineConfig, KvDtype, Request, ServingTrace};
 use bitnet::kernels::tuner::{self, OverrideSearchConfig, TuneConfig, TuningProfile};
-use bitnet::kernels::{library_table, Dispatch, DispatchPlan, QuantType};
+use bitnet::kernels::{library_table, simd, Dispatch, DispatchPlan, QuantType, SimdLevel};
 use bitnet::model::{ModelConfig, SamplingParams, Transformer};
 use bitnet::model::weights::Checkpoint;
 use bitnet::tokenizer::{synthetic_corpus, Tokenizer};
@@ -70,13 +70,40 @@ const USAGE: &str = "usage: bitnet <info|gen-model|run|serve|tune|pjrt> [options
   KV memory is paged: --kv-budget caps total KV tokens across
   sequences, --kv-dtype f16 halves resident KV bytes (f32 stays
   bit-exact); the scheduler admits on prompt-fit and preempts
-  LIFO under pressure. See docs/serving.md.";
+  LIFO under pressure. See docs/serving.md.
+
+  --simd auto|scalar|avx2|neon (any subcommand) pins the kernels'
+  SIMD dispatch tier; `auto` (the default) probes the CPU. Unsupported
+  requests clamp to what the host can run, with a warning. The scalar
+  and vector paths are bit-identical (docs/kernels.md); `tune` measures
+  every usable tier and records the winner's tier in the profile, and
+  profiles tuned with a vector winner degrade to their fastest usable
+  measurement on hosts without it (counted in dispatch fallbacks).
+  RUST_PALLAS_SIMD=<tier> is the env equivalent (tests/CI).";
 
 fn run() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1), &["help", "verbose", "e2e", "search-overrides"])?;
     if args.has_flag("help") || args.subcommand.is_none() {
         println!("{USAGE}");
         return Ok(());
+    }
+    // Pin the SIMD dispatch tier before any kernel work (packing,
+    // tuning and serving all route through it). "auto" leaves the
+    // lazy CPU-detection default in place.
+    if let Some(s) = args.get("simd") {
+        if !s.eq_ignore_ascii_case("auto") {
+            let level = SimdLevel::parse(s).with_context(|| {
+                format!("unknown --simd level {s:?} (expected auto, scalar, avx2 or neon)")
+            })?;
+            let applied = simd::set_level(level);
+            if applied != level {
+                eprintln!(
+                    "warning: --simd {} is not available on this host; running at {}",
+                    level.name(),
+                    applied.name()
+                );
+            }
+        }
     }
     match args.subcommand.as_deref().unwrap() {
         "info" => cmd_info(),
@@ -192,12 +219,13 @@ fn build_model(lc: &LaunchConfig, verbose: bool) -> Result<Transformer> {
     };
     let model = Transformer::from_checkpoint_plan(&ck, plan, lc.threads);
     eprintln!(
-        "model {} ({:.1}M params, {:.1}M ternary) dispatch {} threads {}",
+        "model {} ({:.1}M params, {:.1}M ternary) dispatch {} threads {} simd {}",
         ck.config.name,
         ck.config.param_count() as f64 / 1e6,
         ck.config.ternary_param_count() as f64 / 1e6,
         model.plan.describe(),
-        lc.threads
+        lc.threads,
+        simd::active_level().name()
     );
     if verbose {
         for (m, k, q) in model.kernel_summary() {

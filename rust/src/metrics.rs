@@ -134,6 +134,14 @@ pub struct EngineMetrics {
     /// reservation found the arena exhausted (they re-prefill on
     /// re-admission) — the price of watermark over worst-case admission.
     pub kv_preemptions: AtomicU64,
+    /// The SIMD dispatch tier the kernels run at, as
+    /// `crate::kernels::SimdLevel as u8` (0 scalar, 1 avx2, 2 neon) —
+    /// mirrored at snapshot time ([`EngineMetrics::mirror_simd`]).
+    pub simd_level: AtomicU64,
+    /// Cumulative `gemv_rows` dispatches per SIMD tier, indexed
+    /// `[scalar, avx2, neon]`. Mirrored from the kernel layer's global
+    /// counters, so the numbers are process-wide, not per engine.
+    pub simd_calls: [AtomicU64; 3],
     pub step_latency: LatencyHistogram,
     pub ttft: LatencyHistogram,
 }
@@ -141,6 +149,29 @@ pub struct EngineMetrics {
 impl EngineMetrics {
     pub fn new() -> EngineMetrics {
         EngineMetrics::default()
+    }
+
+    /// Copy the kernel layer's process-wide SIMD dispatch state (active
+    /// level + per-level call counters) into this snapshot — the same
+    /// mirror pattern as the prepare-cache and KV-arena counters: the
+    /// hot path touches only the kernel-layer atomics, the engine copies
+    /// them here once per step.
+    pub fn mirror_simd(&self) {
+        self.simd_level
+            .store(crate::kernels::simd::active_level() as u8 as u64, Ordering::Relaxed);
+        let counts = crate::kernels::simd::call_counts();
+        for (slot, c) in self.simd_calls.iter().zip(counts) {
+            slot.store(c, Ordering::Relaxed);
+        }
+    }
+
+    /// The mirrored SIMD tier's display name (see [`EngineMetrics::mirror_simd`]).
+    pub fn simd_level_name(&self) -> &'static str {
+        match self.simd_level.load(Ordering::Relaxed) {
+            1 => "avx2",
+            2 => "neon",
+            _ => "scalar",
+        }
     }
 
     pub fn mean_batch(&self) -> f64 {
@@ -155,7 +186,7 @@ impl EngineMetrics {
     /// Human-readable one-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "req {}/{} done, {} rejected | tokens {}+{} | steps {} (mean batch {:.2}, peak {}) | step mean {:.1}µs p99 {}µs | ttft mean {:.1}µs | dispatch fallbacks {} degraded {} | prepare {} hits / {} misses (buffers {} reused, {} alloc'd) | trace {} steps / {} shapes | kv {}/{} pages (peak {}) {} KiB resident, {} preemptions",
+            "req {}/{} done, {} rejected | tokens {}+{} | steps {} (mean batch {:.2}, peak {}) | step mean {:.1}µs p99 {}µs | ttft mean {:.1}µs | dispatch fallbacks {} degraded {} | simd {} (calls scalar/avx2/neon {}/{}/{}) | prepare {} hits / {} misses (buffers {} reused, {} alloc'd) | trace {} steps / {} shapes | kv {}/{} pages (peak {}) {} KiB resident, {} preemptions",
             self.requests_completed.load(Ordering::Relaxed),
             self.requests_submitted.load(Ordering::Relaxed),
             self.requests_rejected.load(Ordering::Relaxed),
@@ -169,6 +200,10 @@ impl EngineMetrics {
             self.ttft.mean_us(),
             self.dispatch_fallbacks.load(Ordering::Relaxed),
             self.dispatch_degraded.load(Ordering::Relaxed),
+            self.simd_level_name(),
+            self.simd_calls[0].load(Ordering::Relaxed),
+            self.simd_calls[1].load(Ordering::Relaxed),
+            self.simd_calls[2].load(Ordering::Relaxed),
             self.prepare_cache_hits.load(Ordering::Relaxed),
             self.prepare_cache_misses.load(Ordering::Relaxed),
             self.prepare_buffer_reuses.load(Ordering::Relaxed),
@@ -208,6 +243,16 @@ mod tests {
         let h = LatencyHistogram::new();
         assert_eq!(h.quantile_us(0.99), 0);
         assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn simd_mirror_reports_a_known_level() {
+        let m = EngineMetrics::new();
+        assert_eq!(m.simd_level_name(), "scalar", "unmirrored default");
+        m.mirror_simd();
+        assert!(["scalar", "avx2", "neon"].contains(&m.simd_level_name()));
+        // The summary line renders the mirrored state.
+        assert!(m.summary().contains("simd "));
     }
 
     #[test]

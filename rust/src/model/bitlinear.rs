@@ -319,6 +319,7 @@ mod tests {
             n: 1,
             weight: 1.0,
             best: QuantType::Tl21,
+            best_simd: crate::kernels::SimdLevel::Scalar,
             measurements: Vec::new(),
         });
         let auto = BitLinear::from_dispatch(&w, &Dispatch::Auto(profile));

@@ -53,6 +53,8 @@ impl DenseF16 {
                 return;
             }
             let hi = ((c + 1) * rows_per).min(self.m);
+            // SAFETY: chunks cover disjoint [lo, hi) row ranges of `out`,
+            // so each parallel task writes a non-overlapping slice.
             let slice = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(lo), hi - lo) };
             for (o, r) in slice.iter_mut().zip(lo..hi) {
                 *o = dot_f16(&self.data[r * row_bytes..(r + 1) * row_bytes], x);
@@ -67,7 +69,10 @@ impl DenseF16 {
 
 #[derive(Clone, Copy)]
 struct SendPtr(*mut f32);
+// SAFETY: the pointer targets a buffer that outlives the parallel_for
+// call, and tasks write disjoint ranges of it.
 unsafe impl Send for SendPtr {}
+// SAFETY: as above.
 unsafe impl Sync for SendPtr {}
 
 /// Packed weights for one layer.

@@ -92,7 +92,9 @@ impl ThreadPool {
         // for the duration of this call; we block until all chunks complete
         // before returning, so the borrow cannot dangle.
         let f_ref: &(dyn Fn(usize) + Send + Sync) = &f;
-        // Erase the lifetime. Guarded by the completion wait below.
+        // SAFETY: the lifetime is erased only for the duration of this
+        // call; the completion wait below blocks until every chunk has run,
+        // so workers never touch the closure after `f` is dropped.
         let f_static: &'static (dyn Fn(usize) + Send + Sync) =
             unsafe { std::mem::transmute(f_ref) };
         let job: Job = Arc::new(move |c| f_static(c));

@@ -4,8 +4,11 @@
 
 use bitnet::coordinator::kv_pool::KvArena;
 use bitnet::coordinator::scheduler::{Phase, Scheduler, SeqState};
-use bitnet::kernels::quant::TernaryWeights;
-use bitnet::kernels::{kernel_for, QuantType};
+use bitnet::kernels::quant::{quantize_act_int8, training_scheme_ref_row, TernaryWeights};
+use bitnet::kernels::{
+    kernel_for, matmul_prepared, simd, PreparedActivations, QuantType, SimdLevel,
+};
+use bitnet::threadpool::ThreadPool;
 use bitnet::util::Rng;
 
 fn random_ternary(rng: &mut Rng, m: usize, k: usize) -> TernaryWeights {
@@ -90,6 +93,89 @@ fn prop_sign_flip_negates() {
             // requantizes tables so allow its block-scale noise.
             let tol = if kern.info().lossless { 0.0 } else { 0.1f32.max(0.05 * oa[r].abs()) };
             assert!((oa[r] + ob[r]).abs() <= tol, "{qt:?} row {r}: {} vs {}", oa[r], ob[r]);
+        }
+    }
+}
+
+/// Invariant: every kernel computes bit-identical results at every SIMD
+/// tier this host offers, across random shapes, weights, activations,
+/// and batch widths — the scalar path is the executable specification
+/// and the vector paths may not diverge from it by a single bit.
+#[test]
+fn prop_scalar_simd_equivalence_random_shapes() {
+    let mut rng = Rng::new(800);
+    let pool = ThreadPool::new(2);
+    let levels = simd::available_levels();
+    for trial in 0..12 {
+        let m = 1 + rng.next_below(40);
+        let n = 1 + rng.next_below(6);
+        for qt in QuantType::ALL {
+            let kern = kernel_for(qt);
+            // `.max(4)` keeps K sane for the k_multiple = 1 baselines
+            // while staying aligned for everyone (4, 8, 16, 128, 256
+            // all divide their own max(4, ·)).
+            let kmul = kern.info().k_multiple.max(4);
+            let k = kmul * (1 + rng.next_below(24));
+            let t = random_ternary(&mut rng, m, k);
+            let packed = kern.quantize(&t);
+            let x: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+            let run = |level: SimdLevel| {
+                simd::with_level(level, || {
+                    let mut acts = PreparedActivations::new();
+                    acts.begin_input();
+                    let mut out = vec![0f32; n * m];
+                    let batch = acts.get_or_prepare(kern, &x, k, n, &pool);
+                    matmul_prepared(kern, &packed, batch, &x, n, &mut out, &pool);
+                    out
+                })
+            };
+            let reference = run(SimdLevel::Scalar);
+            for &level in &levels {
+                assert_eq!(
+                    run(level),
+                    reference,
+                    "{qt:?} trial {trial} ({m},{k},{n}) at {}",
+                    level.name()
+                );
+            }
+        }
+    }
+}
+
+/// Invariant: the lossless kernels stay bit-exact against the integer
+/// training-scheme reference *through every vector path*, across random
+/// shapes — SIMD LUT gathers and maddubs-style accumulation must
+/// reproduce the exact blockwise integer sums, not just approximate
+/// them.
+#[test]
+fn prop_lossless_exact_through_vector_paths() {
+    let mut rng = Rng::new(900);
+    let levels = simd::available_levels();
+    for trial in 0..10 {
+        let m = 1 + rng.next_below(16);
+        for qt in [QuantType::I2S, QuantType::Tl11, QuantType::Tl21] {
+            let kern = kernel_for(qt);
+            let k = kern.info().k_multiple.max(4) * (1 + rng.next_below(12));
+            let t = random_ternary(&mut rng, m, k);
+            let packed = kern.quantize(&t);
+            let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+            let act = quantize_act_int8(&x);
+            for &level in &levels {
+                let out = simd::with_level(level, || {
+                    let p = kern.prepare(&x, k);
+                    let mut out = vec![0f32; m];
+                    kern.gemv(&packed, &p, &mut out);
+                    out
+                });
+                for r in 0..m {
+                    assert_eq!(
+                        out[r],
+                        training_scheme_ref_row(t.row(r), t.scale, &act),
+                        "{qt:?} trial {trial} row {r} at {}",
+                        level.name()
+                    );
+                }
+            }
         }
     }
 }

@@ -5,7 +5,7 @@
 
 use bitnet::coordinator::{Engine, EngineConfig, FinishReason, Request};
 use bitnet::kernels::tuner::{shapes_for_model, TuningEntry};
-use bitnet::kernels::{Dispatch, QuantType, TuningProfile};
+use bitnet::kernels::{Dispatch, QuantType, SimdLevel, TuningProfile};
 use bitnet::model::weights::Checkpoint;
 use bitnet::model::{ModelConfig, SamplingParams, Transformer};
 use bitnet::util::Rng;
@@ -133,6 +133,7 @@ fn phase_aware_auto_engine_matches_fixed_engine_outputs() {
                 n,
                 weight: 1.0,
                 best: qt,
+                best_simd: SimdLevel::Scalar,
                 measurements: Vec::new(),
             });
         }

@@ -1,0 +1,214 @@
+//! Scalar≡SIMD differential harness: every kernel, at every SIMD tier
+//! this host can run, must produce *bit-identical* output to the
+//! forced-scalar path — through both the standalone `gemv` path and the
+//! prepare-once `matmul_prepared` path. The shapes are adversarial on
+//! purpose: K at the kernel's minimum (shorter than one vector
+//! register's worth of work), K an odd multiple of the alignment (so
+//! every remainder loop runs), M not a multiple of the 16-row SIMD tile,
+//! and degenerate all-zero / all-(±1) weight matrices.
+//!
+//! Every computation in this binary runs inside `simd::with_level`,
+//! which serializes on the kernel layer's force lock — so concurrent
+//! tests never observe each other's forced tier.
+
+use bitnet::kernels::quant::{quantize_act_int8, training_scheme_ref_row, TernaryWeights};
+use bitnet::kernels::{
+    kernel_for, matmul_prepared, simd, Kernel, PreparedActivations, QTensor, QuantType, SimdLevel,
+};
+use bitnet::threadpool::ThreadPool;
+use bitnet::util::Rng;
+
+fn random_ternary(m: usize, k: usize, seed: u64) -> TernaryWeights {
+    let mut rng = Rng::new(seed);
+    let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+    TernaryWeights::from_ternary(q, m, k, 0.05)
+}
+
+/// Standalone prepare + gemv under a forced SIMD tier.
+fn gemv_at(
+    kern: &'static dyn Kernel,
+    packed: &QTensor,
+    x: &[f32],
+    m: usize,
+    k: usize,
+    level: SimdLevel,
+) -> Vec<f32> {
+    simd::with_level(level, || {
+        let p = kern.prepare(x, k);
+        let mut out = vec![0f32; m];
+        kern.gemv(packed, &p, &mut out);
+        out
+    })
+}
+
+/// Prepare-once path (`PreparedBatch::build` → `prepare_row_into` →
+/// `matmul_prepared`) under a forced SIMD tier.
+fn matmul_prepared_at(
+    kern: &'static dyn Kernel,
+    packed: &QTensor,
+    x: &[f32],
+    (m, k, n): (usize, usize, usize),
+    pool: &ThreadPool,
+    level: SimdLevel,
+) -> Vec<f32> {
+    simd::with_level(level, || {
+        let mut acts = PreparedActivations::new();
+        acts.begin_input();
+        let mut out = vec![0f32; n * m];
+        let batch = acts.get_or_prepare(kern, x, k, n, pool);
+        matmul_prepared(kern, packed, batch, x, n, &mut out, pool);
+        out
+    })
+}
+
+/// The SIMD tiers to exercise. Scalar is included so the harness is
+/// self-checking (scalar ≡ scalar) even on hosts with no vector unit.
+fn levels() -> Vec<SimdLevel> {
+    simd::available_levels()
+}
+
+/// Every kernel × every tier × adversarial (m, k): single row, M=17
+/// (not a multiple of the 16-row tile), K at the kernel's minimum
+/// alignment (shorter than one register of work for the vector paths),
+/// and K an odd multiple (×13) so remainder loops run.
+#[test]
+fn gemv_bit_identical_across_simd_levels() {
+    for qt in QuantType::ALL {
+        let kern = kernel_for(qt);
+        let kmul = kern.info().k_multiple;
+        for (m, k) in [(1usize, kmul.max(4)), (17, kmul * 13), (48, 768)] {
+            assert_eq!(k % kmul, 0, "{qt:?}: test shape must fit the kernel");
+            let t = random_ternary(m, k, 7 + m as u64);
+            let packed = kern.quantize(&t);
+            let mut rng = Rng::new(900 + k as u64);
+            let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+            let reference = gemv_at(kern, &packed, &x, m, k, SimdLevel::Scalar);
+            assert!(reference.iter().all(|v| v.is_finite()), "{qt:?} ({m},{k}): finite");
+            for level in levels() {
+                let out = gemv_at(kern, &packed, &x, m, k, level);
+                assert_eq!(
+                    out,
+                    reference,
+                    "{qt:?} ({m},{k}) at {}: gemv must be bit-identical to scalar",
+                    level.name()
+                );
+            }
+        }
+    }
+}
+
+/// The batched prepare-once path at n ∈ {1, 8, 33} — the same contract,
+/// through `PreparedBatch` and the tiled parallel accumulator.
+#[test]
+fn matmul_prepared_bit_identical_across_simd_levels() {
+    let (m, k) = (48, 768);
+    let pool = ThreadPool::new(4);
+    for qt in QuantType::ALL {
+        let kern = kernel_for(qt);
+        let t = random_ternary(m, k, 19);
+        let packed = kern.quantize(&t);
+        for n in [1usize, 8, 33] {
+            let mut rng = Rng::new(50 + n as u64);
+            let x: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+            let reference =
+                matmul_prepared_at(kern, &packed, &x, (m, k, n), &pool, SimdLevel::Scalar);
+            for level in levels() {
+                let out = matmul_prepared_at(kern, &packed, &x, (m, k, n), &pool, level);
+                assert_eq!(
+                    out,
+                    reference,
+                    "{qt:?} n={n} at {}: matmul_prepared must be bit-identical to scalar",
+                    level.name()
+                );
+            }
+        }
+    }
+}
+
+/// Degenerate weight matrices: all-zero and all-(+1)/all-(−1). These hit
+/// the LUT paths with constant indices and the I2_S path with codes at
+/// both extremes of the 2-bit range.
+#[test]
+fn degenerate_weights_bit_identical_across_levels() {
+    let (m, k) = (8, 768);
+    for qt in QuantType::ALL {
+        let kern = kernel_for(qt);
+        for (label, w) in [("zero", 0i8), ("plus", 1), ("minus", -1)] {
+            let t = TernaryWeights::from_ternary(vec![w; m * k], m, k, 0.05);
+            let packed = kern.quantize(&t);
+            let mut rng = Rng::new(77);
+            let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+            let reference = gemv_at(kern, &packed, &x, m, k, SimdLevel::Scalar);
+            for level in levels() {
+                let out = gemv_at(kern, &packed, &x, m, k, level);
+                assert_eq!(out, reference, "{qt:?} all-{label} at {}", level.name());
+            }
+        }
+    }
+}
+
+/// Fixed-seed tail regression: K chosen as k_multiple × 37 — odd, not a
+/// multiple of any 8/16/32-group blocking — so every kernel's final
+/// scale block is short and every vector path runs its remainder loop.
+/// n = 3 routes through `prepare_row_into` with that short final block.
+#[test]
+fn tail_blocks_pinned_by_fixed_seed_cases() {
+    let pool = ThreadPool::new(2);
+    for qt in QuantType::ALL {
+        let kern = kernel_for(qt);
+        let kmul = kern.info().k_multiple;
+        let (m, k, n) = (17usize, kmul.max(4) * 37, 3usize);
+        let t = random_ternary(m, k, 123);
+        let packed = kern.quantize(&t);
+        let mut rng = Rng::new(321);
+        let x: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+        let reference = matmul_prepared_at(kern, &packed, &x, (m, k, n), &pool, SimdLevel::Scalar);
+        // Cross-check the scalar shared path against per-row standalone
+        // prepare before comparing tiers, so a tail bug shared by every
+        // tier cannot hide.
+        simd::with_level(SimdLevel::Scalar, || {
+            for i in 0..n {
+                let p = kern.prepare(&x[i * k..(i + 1) * k], k);
+                let mut per_row = vec![0f32; m];
+                kern.gemv(&packed, &p, &mut per_row);
+                assert_eq!(
+                    &reference[i * m..(i + 1) * m],
+                    &per_row[..],
+                    "{qt:?} k={k} row {i}: shared vs per-row prepare (scalar)"
+                );
+            }
+        });
+        for level in levels() {
+            let out = matmul_prepared_at(kern, &packed, &x, (m, k, n), &pool, level);
+            assert_eq!(out, reference, "{qt:?} k={k} tail at {}", level.name());
+        }
+    }
+}
+
+/// The lossless kernels must stay bit-exact against the integer
+/// training-scheme reference *through every vector path*, not just
+/// match scalar: LUT gathers and maddubs-style accumulation must
+/// reproduce the exact per-block integer sums.
+#[test]
+fn lossless_kernels_training_scheme_exact_at_every_level() {
+    let (m, k) = (16, 768);
+    for qt in [QuantType::I2S, QuantType::Tl11, QuantType::Tl21] {
+        let kern = kernel_for(qt);
+        let t = random_ternary(m, k, 41);
+        let packed = kern.quantize(&t);
+        let mut rng = Rng::new(42);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        let act = quantize_act_int8(&x);
+        for level in levels() {
+            let out = gemv_at(kern, &packed, &x, m, k, level);
+            for r in 0..m {
+                assert_eq!(
+                    out[r],
+                    training_scheme_ref_row(t.row(r), t.scale, &act),
+                    "{qt:?} row {r} at {}: training-scheme exactness",
+                    level.name()
+                );
+            }
+        }
+    }
+}

@@ -12,7 +12,7 @@ use bitnet::kernels::tuner::{
     measure_e2e, search_overrides, tune, LayerOverride, Measurement, OverrideSearchConfig, Role,
     TuneConfig, TuningEntry,
 };
-use bitnet::kernels::{kernel_for, Dispatch, QuantType, TuningProfile};
+use bitnet::kernels::{kernel_for, Dispatch, QuantType, SimdLevel, TuningProfile};
 use bitnet::model::weights::Checkpoint;
 use bitnet::model::{BitLinear, ModelConfig, Transformer};
 use bitnet::threadpool::ThreadPool;
@@ -25,8 +25,10 @@ fn entry(m: usize, k: usize, n: usize, best: QuantType) -> TuningEntry {
         n,
         weight: 1.0,
         best,
+        best_simd: SimdLevel::Scalar,
         measurements: vec![Measurement {
             qtype: best,
+            simd: SimdLevel::Scalar,
             us_per_matmul: 10.0,
             gweights_per_s: (m * k) as f64 / 10.0e-6 / 1e9,
         }],
@@ -268,6 +270,69 @@ fn v1_profile_files_load_with_migration() {
     let err = TuningProfile::load(&path2).unwrap_err();
     std::fs::remove_file(&path2).unwrap();
     assert!(format!("{err:#}").contains("supported"), "{err:#}");
+}
+
+#[test]
+fn vector_winning_profile_degrades_under_forced_scalar() {
+    // A profile tuned on an AVX2 host (best_simd = avx2 everywhere) is
+    // force-loaded on a machine that can only run scalar: every
+    // selection must degrade to the best *usable* measurement's kernel
+    // — not silently serve the vector winner's kernel on the assumption
+    // the vector path exists — and each degrade must be counted in the
+    // dispatch-fallback accounting.
+    use bitnet::kernels::simd;
+    let cfg = ModelConfig::tiny();
+    let mut profile = TuningProfile::empty(QuantType::I2S, 1);
+    for (m, k) in bitnet::kernels::tuner::shapes_for_model(&cfg) {
+        profile.entries.push(TuningEntry {
+            m,
+            k,
+            n: 1,
+            weight: 1.0,
+            best: QuantType::Tl21,
+            best_simd: SimdLevel::Avx2,
+            measurements: vec![
+                Measurement {
+                    qtype: QuantType::Tl21,
+                    simd: SimdLevel::Avx2,
+                    us_per_matmul: 5.0,
+                    gweights_per_s: (m * k) as f64 / 5.0e-6 / 1e9,
+                },
+                Measurement {
+                    qtype: QuantType::I2S,
+                    simd: SimdLevel::Scalar,
+                    us_per_matmul: 9.0,
+                    gweights_per_s: (m * k) as f64 / 9.0e-6 / 1e9,
+                },
+            ],
+        });
+    }
+    // The v3 per-level fields survive the disk round trip.
+    let dir = std::env::temp_dir().join("bitnet_tuning_test_simd");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("vector_profile.json");
+    profile.save(&path).unwrap();
+    let loaded = TuningProfile::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(loaded, profile, "best_simd / per-measurement simd must round-trip");
+
+    simd::with_level(SimdLevel::Scalar, || {
+        let ck = Checkpoint::synthetic(&cfg, 13);
+        let model = Transformer::from_checkpoint_dispatch(&ck, Dispatch::Auto(loaded), 1);
+        for (li, layer) in model.layers.iter().enumerate() {
+            assert_eq!(
+                layer.wq.qtype(),
+                QuantType::I2S,
+                "layer {li}: the scalar measurement's kernel must win under forced scalar"
+            );
+        }
+        assert!(
+            model.plan.fallbacks() > 0,
+            "every degraded selection must surface in the fallback count"
+        );
+        let mut s = model.new_session(16);
+        assert!(model.prefill(&mut s, &[1, 2, 3]).iter().all(|v| v.is_finite()));
+    });
 }
 
 #[test]
