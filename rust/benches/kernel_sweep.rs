@@ -10,6 +10,7 @@
 //! file, so it must run before the merging benches.)
 
 use bitnet::kernels::quant::TernaryWeights;
+use bitnet::kernels::sparse::{self, SparseMode};
 use bitnet::kernels::{kernel_for, simd, QuantType, SimdLevel};
 use bitnet::perf::bench::{bench, black_box};
 use bitnet::util::{Json, Rng};
@@ -106,4 +107,93 @@ fn main() {
         }
     }
     merge_into_bench_json("kernel_sweep_simd", Json::Arr(records));
+
+    // ── Sparse block-skip vs dense ─────────────────────────────────────
+    // A 60%-zero-block tensor (384-column stripes, 3 of every 5 zeroed —
+    // 384 is a common multiple of every sparse kernel's block span, so
+    // the stripes elide for all of them), timed through both layouts at
+    // scalar and the best vector tier. Results are bit-identical by
+    // construction (tests/simd_identity.rs); this measures what the
+    // elision *buys*.
+    println!("\n# sparse block-skip vs dense (384-column zero stripes, 3 of 5 zeroed)");
+    println!(
+        "{:<9} {:>8} {:>8} {:>8} {:>12} {:>12} {:>10} {:>10}",
+        "kernel", "M", "K", "simd", "dense µs", "sparse µs", "speedup", "zero-blk%"
+    );
+    let sparse_shapes: &[(usize, usize)] =
+        if fast { &[(1024, 1920)] } else { &[(1024, 1920), (4096, 3840)] };
+    let mut sparse_records = Vec::new();
+    for &(m, k) in sparse_shapes {
+        let mut rng = Rng::new(7);
+        let q: Vec<i8> = (0..m * k)
+            .map(|i| {
+                let s = (i % k) / 384;
+                if s * 3 % 5 < 3 {
+                    0
+                } else {
+                    rng.next_ternary() as i8
+                }
+            })
+            .collect();
+        let t = TernaryWeights::from_ternary(q, m, k, 0.05);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        for qt in [QuantType::Tl11, QuantType::Tl21, QuantType::I2S, QuantType::Elut5] {
+            let kern = kernel_for(qt);
+            if k % kern.info().k_multiple != 0 {
+                continue;
+            }
+            let dense = sparse::with_mode(SparseMode::Off, || kern.quantize(&t));
+            let sp = sparse::with_mode(SparseMode::On, || kern.quantize(&t));
+            let zero_frac = sp.sparse.as_ref().map_or(0.0, |i| i.zero_block_fraction());
+            let p = kern.prepare(&x, k);
+            let mut out = vec![0f32; m];
+            for &level in &levels {
+                if !kern.simd_levels().contains(&level) {
+                    continue;
+                }
+                // Scalar + the best vector tier only: the middle tiers
+                // add sweep time without changing the story.
+                if level != SimdLevel::Scalar && Some(&level) != levels.last() {
+                    continue;
+                }
+                let warm = Duration::from_millis(30);
+                let dur = Duration::from_millis(if fast { 100 } else { 250 });
+                let rd = simd::with_level(level, || {
+                    bench(kern.info().name, warm, dur, || {
+                        kern.gemv(&dense, &p, &mut out);
+                        black_box(&out);
+                    })
+                });
+                let rs = simd::with_level(level, || {
+                    bench(kern.info().name, warm, dur, || {
+                        kern.gemv(&sp, &p, &mut out);
+                        black_box(&out);
+                    })
+                });
+                let speedup = rd.seconds.mean / rs.seconds.mean;
+                println!(
+                    "{:<9} {:>8} {:>8} {:>8} {:>12.1} {:>12.1} {:>9.2}x {:>9.1}%",
+                    kern.info().name,
+                    m,
+                    k,
+                    level.name(),
+                    rd.seconds.mean * 1e6,
+                    rs.seconds.mean * 1e6,
+                    speedup,
+                    100.0 * zero_frac
+                );
+                sparse_records.push(Json::Obj(vec![
+                    ("kernel".into(), Json::Str(kern.info().name.into())),
+                    ("m".into(), Json::Num(m as f64)),
+                    ("k".into(), Json::Num(k as f64)),
+                    ("simd".into(), Json::Str(level.name().into())),
+                    ("dense_us_per_gemv".into(), Json::Num(rd.seconds.mean * 1e6)),
+                    ("sparse_us_per_gemv".into(), Json::Num(rs.seconds.mean * 1e6)),
+                    ("sparse_speedup".into(), Json::Num(speedup)),
+                    ("zero_block_fraction".into(), Json::Num(zero_frac)),
+                ]));
+            }
+        }
+    }
+    merge_into_bench_json("sparsity", Json::Arr(sparse_records));
 }

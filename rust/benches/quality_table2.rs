@@ -5,6 +5,7 @@
 //! reference, which is corpus-independent).
 
 use bitnet::eval::{cloze_choice, eval_token_stream, perplexity, synthetic_cloze_set};
+use bitnet::kernels::sparse::{self, SparseMode};
 use bitnet::kernels::QuantType;
 use bitnet::model::{ModelConfig, Transformer};
 
@@ -63,6 +64,24 @@ fn main() {
             acc(&cloze_b, &ref_b),
             note
         );
+    }
+    // Sparse block-skip variants: forcing the layout on at pack time
+    // must not move a single bit through the lossless kernels — the
+    // elided blocks contribute exactly zero, so perplexity equals the
+    // integer reference *exactly*, not approximately. A divergence here
+    // is a kernel bug, so this lane asserts rather than annotates.
+    println!("# sparse block-skip variants (packing forced on):");
+    for qt in [QuantType::Tl11, QuantType::Tl21, QuantType::I2S] {
+        let model = sparse::with_mode(SparseMode::On, || Transformer::synthetic(&cfg, qt, 7));
+        let ppl = perplexity(&model, &tokens);
+        assert_eq!(
+            ppl,
+            int_ref_ppl,
+            "{}: the sparse layout must stay exactly lossless",
+            qt.name()
+        );
+        let name = format!("{}+sp", qt.name());
+        println!("{name:<9} {ppl:>11.4}  lossless (sparse == dense bitwise)");
     }
     println!("# Float16-path reference perplexity: {ref_ppl:.4}");
 }

@@ -31,7 +31,7 @@ impl Kernel for F16Kernel {
             let h = f32_to_f16(q as f32 * w.scale);
             chunk.copy_from_slice(&h.to_le_bytes());
         }
-        QTensor { qtype: QuantType::F16, m: w.m, k: w.k, data, scale: w.scale }
+        QTensor { qtype: QuantType::F16, m: w.m, k: w.k, data, scale: w.scale, sparse: None }
     }
 
     fn dequantize(&self, t: &QTensor) -> Vec<f32> {

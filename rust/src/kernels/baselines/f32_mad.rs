@@ -30,7 +30,7 @@ impl Kernel for F32Kernel {
         for (chunk, v) in data.chunks_exact_mut(4).zip(deq.iter()) {
             chunk.copy_from_slice(&v.to_le_bytes());
         }
-        QTensor { qtype: QuantType::F32, m: w.m, k: w.k, data, scale: w.scale }
+        QTensor { qtype: QuantType::F32, m: w.m, k: w.k, data, scale: w.scale, sparse: None }
     }
 
     fn dequantize(&self, t: &QTensor) -> Vec<f32> {

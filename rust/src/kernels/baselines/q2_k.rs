@@ -52,7 +52,7 @@ impl Kernel for Q2KKernel {
                 pack_block_q2_k(xs, blk);
             }
         }
-        QTensor { qtype: QuantType::Q2K, m, k, data, scale: w.scale }
+        QTensor { qtype: QuantType::Q2K, m, k, data, scale: w.scale, sparse: None }
     }
 
     fn dequantize(&self, t: &QTensor) -> Vec<f32> {

@@ -47,7 +47,7 @@ impl Kernel for Q40Kernel {
                 pack_block_q4_0(xs, out);
             }
         }
-        QTensor { qtype: QuantType::Q40, m, k, data, scale: w.scale }
+        QTensor { qtype: QuantType::Q40, m, k, data, scale: w.scale, sparse: None }
     }
 
     fn dequantize(&self, t: &QTensor) -> Vec<f32> {

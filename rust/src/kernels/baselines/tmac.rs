@@ -52,7 +52,7 @@ impl Kernel for TmacKernel {
                 p1[i / 8] |= ((code >> 1) & 1) << (i % 8);
             }
         }
-        QTensor { qtype: QuantType::Tmac, m, k, data, scale: w.scale }
+        QTensor { qtype: QuantType::Tmac, m, k, data, scale: w.scale, sparse: None }
     }
 
     fn dequantize(&self, t: &QTensor) -> Vec<f32> {

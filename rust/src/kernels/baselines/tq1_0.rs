@@ -65,7 +65,7 @@ impl Kernel for Tq10Kernel {
                 blk[52..].copy_from_slice(&dbits);
             }
         }
-        QTensor { qtype: QuantType::Tq10, m, k, data, scale: w.scale }
+        QTensor { qtype: QuantType::Tq10, m, k, data, scale: w.scale, sparse: None }
     }
 
     fn dequantize(&self, t: &QTensor) -> Vec<f32> {

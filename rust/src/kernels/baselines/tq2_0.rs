@@ -53,7 +53,7 @@ impl Kernel for Tq20Kernel {
                 blk[QK / 4..].copy_from_slice(&dbits);
             }
         }
-        QTensor { qtype: QuantType::Tq20, m, k, data, scale: w.scale }
+        QTensor { qtype: QuantType::Tq20, m, k, data, scale: w.scale, sparse: None }
     }
 
     fn dequantize(&self, t: &QTensor) -> Vec<f32> {

@@ -18,7 +18,8 @@
 use super::lut::{code_count, decode_code, mirror_join, mirror_split, sign_apply_i32};
 use super::quant::{quantize_act_int8_into, TernaryWeights};
 use super::simd::{self, SimdLevel};
-use super::tl1::LUT_W;
+use super::sparse;
+use super::tl1::{LUT_W, SPARSE_BLOCK_WEIGHTS};
 use super::{
     Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
 };
@@ -120,7 +121,9 @@ impl Kernel for ElutKernel {
                 }
             }
         }
-        QTensor { qtype: self.qtype, m, k, data, scale: w.scale }
+        let bounds = sparse::uniform_bounds(k, SPARSE_BLOCK_WEIGHTS);
+        let sparse = sparse::maybe_index(&w.q, m, k, &bounds);
+        QTensor { qtype: self.qtype, m, k, data, scale: w.scale, sparse }
     }
 
     fn dequantize(&self, t: &QTensor) -> Vec<f32> {
@@ -184,6 +187,10 @@ impl Kernel for ElutKernel {
         simd::KERNEL_LEVELS
     }
 
+    fn sparse_capable(&self) -> bool {
+        true
+    }
+
     fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
         let (tables, scale) = match p {
             PreparedRow::LutI16 { tables, scale } => (tables, scale),
@@ -196,6 +203,38 @@ impl Kernel for ElutKernel {
         simd::note_call(level);
         if self.mirror {
             let idx_bytes = groups / 2;
+            if let Some(idx) = &t.sparse {
+                #[cfg(target_arch = "x86_64")]
+                if level == SimdLevel::Avx2 {
+                    // SAFETY: AVX2 verified by the active dispatch level;
+                    // buffer shapes are guaranteed by quantize/prepare.
+                    unsafe {
+                        simd::avx2::gemv_rows_elut5_sparse(
+                            &t.data, idx_bytes, tables, combined, out, rows, idx,
+                        );
+                    }
+                    return;
+                }
+                #[cfg(target_arch = "aarch64")]
+                if level == SimdLevel::Neon {
+                    // SAFETY: NEON verified by the active dispatch level;
+                    // buffer shapes are guaranteed by quantize/prepare.
+                    unsafe {
+                        simd::neon::gemv_rows_elut5_sparse(
+                            &t.data, idx_bytes, tables, combined, out, rows, idx,
+                        );
+                    }
+                    return;
+                }
+                let mut elided = 0u64;
+                for (o, r) in out.iter_mut().zip(rows) {
+                    let row = &t.data[r * row_bytes..(r + 1) * row_bytes];
+                    *o = gemv_row_elut5_sparse(row, idx_bytes, tables, idx, r, &mut elided) as f32
+                        * combined;
+                }
+                sparse::note_elided(level, elided);
+                return;
+            }
             #[cfg(target_arch = "x86_64")]
             if level == SimdLevel::Avx2 {
                 // SAFETY: AVX2 verified by the active dispatch level;
@@ -221,6 +260,38 @@ impl Kernel for ElutKernel {
         } else {
             // Non-mirrored rows are one nibble plane with a full 16-entry
             // table per group — byte-for-byte the TL1 lossless loop.
+            if let Some(idx) = &t.sparse {
+                #[cfg(target_arch = "x86_64")]
+                if level == SimdLevel::Avx2 {
+                    // SAFETY: AVX2 verified by the active dispatch level;
+                    // buffer shapes are guaranteed by quantize/prepare.
+                    unsafe {
+                        simd::avx2::gemv_rows_lut16_sparse(
+                            &t.data, row_bytes, tables, combined, out, rows, idx,
+                        );
+                    }
+                    return;
+                }
+                #[cfg(target_arch = "aarch64")]
+                if level == SimdLevel::Neon {
+                    // SAFETY: NEON verified by the active dispatch level;
+                    // buffer shapes are guaranteed by quantize/prepare.
+                    unsafe {
+                        simd::neon::gemv_rows_lut16_sparse(
+                            &t.data, row_bytes, tables, combined, out, rows, idx,
+                        );
+                    }
+                    return;
+                }
+                let mut elided = 0u64;
+                for (o, r) in out.iter_mut().zip(rows) {
+                    let row = &t.data[r * row_bytes..(r + 1) * row_bytes];
+                    *o = super::tl1::gemv_row_lut16_sparse(row, tables, idx, r, &mut elided) as f32
+                        * combined;
+                }
+                sparse::note_elided(level, elided);
+                return;
+            }
             #[cfg(target_arch = "x86_64")]
             if level == SimdLevel::Avx2 {
                 // SAFETY: AVX2 verified by the active dispatch level;
@@ -266,6 +337,47 @@ pub fn gemv_row_elut5(row: &[u8], idx_bytes: usize, tables: &[i16]) -> i32 {
         // SAFETY: as above.
         let v = unsafe { *tables.get_unchecked(gi * LUT_W + nib as usize) } as i32;
         acc += sign_apply_i32(v, sign);
+    }
+    acc
+}
+
+/// Sparse [`gemv_row_elut5`]: blocks are [`SPARSE_BLOCK_WEIGHTS`] weights
+/// = 32 groups; K % 16 == 0 keeps every block's sign bits byte-aligned.
+/// A zero block's groups all carry the zero-pair code, whose table entry
+/// is exactly 0 (and `sign_apply_i32(0, s)` is 0), so skipping them
+/// leaves the i32 accumulator bit-identical.
+#[inline]
+pub fn gemv_row_elut5_sparse(
+    row: &[u8],
+    idx_bytes: usize,
+    tables: &[i16],
+    sidx: &sparse::SparseIndex,
+    wr: usize,
+    elided: &mut u64,
+) -> i32 {
+    const BLOCK_GROUPS: usize = SPARSE_BLOCK_WEIGHTS / 2;
+    let (idx_plane, sign_plane) = row.split_at(idx_bytes);
+    let groups = idx_bytes * 2;
+    let mut acc = 0i32;
+    for blk in 0..sidx.blocks_per_row() {
+        if !sidx.is_nonzero(wr, blk) {
+            *elided += 1;
+            continue;
+        }
+        let g0 = blk * BLOCK_GROUPS;
+        let g1 = (g0 + BLOCK_GROUPS).min(groups);
+        for gi in g0..g1 {
+            // SAFETY: the planes hold groups/2 index bytes and groups/8
+            // sign bytes, tables holds one LUT_W-entry table per group,
+            // and nibble codes are < LUT_W.
+            let byte = unsafe { *idx_plane.get_unchecked(gi / 2) };
+            let nib = if gi % 2 == 0 { byte & 0xf } else { byte >> 4 };
+            // SAFETY: as above.
+            let sign = (unsafe { *sign_plane.get_unchecked(gi / 8) } >> (gi % 8)) & 1;
+            // SAFETY: as above.
+            let v = unsafe { *tables.get_unchecked(gi * LUT_W + nib as usize) } as i32;
+            acc += sign_apply_i32(v, sign);
+        }
     }
     acc
 }

@@ -11,6 +11,7 @@
 
 use super::quant::{quantize_act_int8_into, TernaryWeights};
 use super::simd::{self, SimdLevel};
+use super::sparse;
 use super::{
     Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
 };
@@ -19,6 +20,9 @@ pub struct I2SKernel;
 
 /// Weights per packed byte.
 const WPB: usize = 4;
+
+/// Weights per sparse-elision block: one K-alignment unit (32 bytes).
+pub const SPARSE_BLOCK_WEIGHTS: usize = 128;
 
 impl Kernel for I2SKernel {
     fn info(&self) -> KernelInfo {
@@ -52,7 +56,9 @@ impl Kernel for I2SKernel {
                 dst[b] = byte;
             }
         }
-        QTensor { qtype: QuantType::I2S, m, k, data, scale: w.scale }
+        let bounds = sparse::uniform_bounds(k, SPARSE_BLOCK_WEIGHTS);
+        let sparse = sparse::maybe_index(&w.q, m, k, &bounds);
+        QTensor { qtype: QuantType::I2S, m, k, data, scale: w.scale, sparse }
     }
 
     fn dequantize(&self, t: &QTensor) -> Vec<f32> {
@@ -90,6 +96,10 @@ impl Kernel for I2SKernel {
         simd::KERNEL_LEVELS
     }
 
+    fn sparse_capable(&self) -> bool {
+        true
+    }
+
     fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
         let (q, scale, sum) = match p {
             PreparedRow::Int8 { q, scale, sum } => (q, scale, sum),
@@ -100,6 +110,33 @@ impl Kernel for I2SKernel {
         let combined = t.scale / scale;
         let level = simd::active_level();
         simd::note_call(level);
+        if let Some(idx) = &t.sparse {
+            #[cfg(target_arch = "x86_64")]
+            if level == SimdLevel::Avx2 {
+                // SAFETY: AVX2 verified by the active dispatch level; the
+                // packed rows match `q.len() / 4` bytes.
+                unsafe {
+                    simd::avx2::gemv_rows_i2s_sparse(&t.data, q, combined, out, rows, idx);
+                }
+                return;
+            }
+            #[cfg(target_arch = "aarch64")]
+            if level == SimdLevel::Neon {
+                // SAFETY: NEON verified by the active dispatch level; the
+                // packed rows match `q.len() / 4` bytes.
+                unsafe {
+                    simd::neon::gemv_rows_i2s_sparse(&t.data, q, combined, out, rows, idx);
+                }
+                return;
+            }
+            let mut elided = 0u64;
+            for (o, r) in out.iter_mut().zip(rows) {
+                let wrow = &t.data[r * row_bytes..(r + 1) * row_bytes];
+                *o = gemv_row_i2s_sparse(wrow, q, idx, r, &mut elided) as f32 * combined;
+            }
+            sparse::note_elided(level, elided);
+            return;
+        }
         #[cfg(target_arch = "x86_64")]
         if level == SimdLevel::Avx2 {
             // SAFETY: AVX2 verified by the active dispatch level; the
@@ -149,6 +186,47 @@ fn gemv_row_i2s(wrow: &[u8], aq: &[i8], act_sum: i32) -> i32 {
         k += 16;
     }
     acc - act_sum
+}
+
+/// Sparse inner loop: accumulate `Σ a·(code − 1)` = `Σ a·w` directly
+/// over nonzero blocks only. A zero block contributes exactly 0 to that
+/// sum, and both this form and the dense `Σ a·code − Σ a` compute the
+/// same exact i32 (no overflow either way), so skipping zero blocks —
+/// with no activation-sum bookkeeping at all — stays bit-identical to
+/// [`gemv_row_i2s`].
+#[inline]
+fn gemv_row_i2s_sparse(
+    wrow: &[u8],
+    aq: &[i8],
+    idx: &sparse::SparseIndex,
+    row: usize,
+    elided: &mut u64,
+) -> i32 {
+    const BLOCK_BYTES: usize = SPARSE_BLOCK_WEIGHTS / WPB;
+    let mut acc = 0i32;
+    for blk in 0..idx.blocks_per_row() {
+        if !idx.is_nonzero(row, blk) {
+            *elided += 1;
+            continue;
+        }
+        let b0 = blk * BLOCK_BYTES;
+        let b1 = (b0 + BLOCK_BYTES).min(wrow.len());
+        let mut k = b0 * WPB;
+        for b4 in wrow[b0..b1].chunks_exact(4) {
+            let a = &aq[k..k + 16];
+            let mut local = 0i32;
+            for (bi, &byte) in b4.iter().enumerate() {
+                let base = bi * 4;
+                local += ((byte & 0x3) as i32 - 1) * a[base] as i32;
+                local += (((byte >> 2) & 0x3) as i32 - 1) * a[base + 1] as i32;
+                local += (((byte >> 4) & 0x3) as i32 - 1) * a[base + 2] as i32;
+                local += (((byte >> 6) & 0x3) as i32 - 1) * a[base + 3] as i32;
+            }
+            acc += local;
+            k += 16;
+        }
+    }
+    acc
 }
 
 #[cfg(test)]

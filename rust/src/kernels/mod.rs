@@ -42,6 +42,7 @@ pub mod i2s;
 pub mod lut;
 pub mod quant;
 pub mod simd;
+pub mod sparse;
 pub mod tl1;
 pub mod tl2;
 pub mod tuner;
@@ -291,6 +292,12 @@ pub struct QTensor {
     pub data: Vec<u8>,
     /// Per-tensor weight scale (absmean `s`), where applicable.
     pub scale: f32,
+    /// Block-skip layout for sparsity-aware elision: present when the
+    /// kernel measured enough zero blocks at pack time (or the mode
+    /// forced it). The dense packed bytes above are unchanged; kernels
+    /// that understand the index elide zero blocks in `gemv_rows`,
+    /// everything else (dequantize, dense consumers) ignores it.
+    pub sparse: Option<sparse::SparseIndex>,
 }
 
 impl QTensor {
@@ -416,6 +423,14 @@ pub trait Kernel: Send + Sync {
     fn simd_levels(&self) -> &'static [SimdLevel] {
         const SCALAR_ONLY: &[SimdLevel] = &[SimdLevel::Scalar];
         SCALAR_ONLY
+    }
+
+    /// Whether this kernel can emit (and elide through) the block-skip
+    /// sparse layout at pack time. The ternary LUT/I2_S kernels
+    /// override to `true`; the tuner only measures the sparse axis for
+    /// kernels that report it.
+    fn sparse_capable(&self) -> bool {
+        false
     }
 
     /// Compute `out[r] = Σ_k x[k] * W[r,k]` for `r` in `rows` —

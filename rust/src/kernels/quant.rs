@@ -83,8 +83,31 @@ pub fn quantize_act_int8(x: &[f32]) -> ActInt8 {
 /// caller-owned `q` (same length as `x`) and returns `(scale, Σq)` —
 /// bit-identical math to the allocating form (the lossless kernels
 /// depend on it).
+///
+/// Dispatches to the AVX2/NEON rounding kernels when the active SIMD
+/// level allows; those paths are bit-identical to the scalar loop for
+/// finite inputs (`rust/tests/simd_identity.rs` covers the whole
+/// prepare-then-gemv pipeline at every level).
 pub fn quantize_act_int8_into(x: &[f32], q: &mut [i8]) -> (f32, i32) {
     assert_eq!(q.len(), x.len());
+    #[cfg(target_arch = "x86_64")]
+    if super::simd::active_level() == super::simd::SimdLevel::Avx2 {
+        // SAFETY: AVX2 verified by the active dispatch level; the
+        // lengths were asserted equal above.
+        return unsafe { super::simd::avx2::quantize_act_int8(x, q) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if super::simd::active_level() == super::simd::SimdLevel::Neon {
+        // SAFETY: NEON verified by the active dispatch level; the
+        // lengths were asserted equal above.
+        return unsafe { super::simd::neon::quantize_act_int8(x, q) };
+    }
+    quantize_act_int8_scalar(x, q)
+}
+
+/// The scalar reference body of [`quantize_act_int8_into`] — the
+/// bit-identity anchor the vector paths are tested against.
+fn quantize_act_int8_scalar(x: &[f32], q: &mut [i8]) -> (f32, i32) {
     let max_abs = x.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-5);
     let scale = 127.0 / max_abs;
     let mut sum = 0i32;
@@ -219,6 +242,27 @@ mod tests {
             assert!((back - xv).abs() <= 0.5 * step + 1e-6, "{xv} vs {back}");
         }
         assert_eq!(a.sum, a.q.iter().map(|&v| v as i32).sum::<i32>());
+    }
+
+    #[test]
+    fn act_quant_vector_paths_match_scalar_bitwise() {
+        use crate::kernels::simd::{self, SimdLevel};
+        // A max of exactly 127.0 makes scale == 1.0, so the planted *.5
+        // values are exact rounding ties — the inputs where a
+        // nearest-even vector rounding would diverge from Rust's
+        // half-away-from-zero `round`.
+        let mut x = vec![127.0f32, -0.5, 0.5, 2.5, -2.5, 3.5, -3.5, 1.25, -126.5];
+        let mut rng = Rng::new(11);
+        x.extend((0..250).map(|_| rng.next_gaussian() * 20.0));
+        let mut want = vec![0i8; x.len()];
+        let want_meta =
+            simd::with_level(SimdLevel::Scalar, || quantize_act_int8_into(&x, &mut want));
+        for level in simd::available_levels() {
+            let mut got = vec![0i8; x.len()];
+            let got_meta = simd::with_level(level, || quantize_act_int8_into(&x, &mut got));
+            assert_eq!(got_meta, want_meta, "scale/sum @ {}", level.name());
+            assert_eq!(got, want, "quants @ {}", level.name());
+        }
     }
 
     #[test]

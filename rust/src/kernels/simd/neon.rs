@@ -14,6 +14,8 @@
 
 use std::ops::Range;
 
+use crate::kernels::simd::SimdLevel;
+use crate::kernels::sparse::{self, SparseIndex, TileBits};
 use crate::kernels::tl1::{self, LUT_W};
 use crate::kernels::tl2::{self, Tl2Layout};
 
@@ -480,6 +482,531 @@ pub unsafe fn gemv_rows_i2s(
         let wrow = &data[r * row_bytes..(r + 1) * row_bytes];
         *o = gemv_row_i2s(wrow, aq, act_sum) as f32 * combined;
     }
+}
+
+/// NEON activation quantization: absmax reduction, then round-clamp-pack
+/// to int8 — the prepare-phase half of every lossless kernel.
+///
+/// Bit-identical to the scalar `quantize_act_int8_into` for finite
+/// inputs: f32 `max` is order-free over non-negative finite values, the
+/// `v * scale` multiply is the same single f32 op, and `vrndaq_f32`
+/// (FRINTA) rounds half away from zero — exactly Rust's `round`. The
+/// `vcvtq_s32_f32` truncation sees an integral value, so it is exact.
+///
+/// # Safety
+/// Caller must have verified NEON at run time and pass `q.len() ==
+/// x.len()`.
+#[target_feature(enable = "neon")]
+pub unsafe fn quantize_act_int8(x: &[f32], q: &mut [i8]) -> (f32, i32) {
+    debug_assert_eq!(q.len(), x.len());
+    let mut vmax = vdupq_n_f32(0.0);
+    let mut i = 0usize;
+    while i + 4 <= x.len() {
+        vmax = vmaxq_f32(vmax, vabsq_f32(vld1q_f32(x.as_ptr().add(i))));
+        i += 4;
+    }
+    let mut max_abs = vmaxvq_f32(vmax);
+    for &v in &x[i..] {
+        max_abs = max_abs.max(v.abs());
+    }
+    let max_abs = max_abs.max(1e-5);
+    let scale = 127.0 / max_abs;
+
+    let vscale = vdupq_n_f32(scale);
+    let lim = vdupq_n_f32(127.0);
+    let nlim = vdupq_n_f32(-127.0);
+    let mut vsum = vdupq_n_s32(0);
+    let mut i = 0usize;
+    while i + 8 <= x.len() {
+        let r0 = vrndaq_f32(vmulq_f32(vld1q_f32(x.as_ptr().add(i)), vscale));
+        let r1 = vrndaq_f32(vmulq_f32(vld1q_f32(x.as_ptr().add(i + 4)), vscale));
+        let c0 = vminq_f32(vmaxq_f32(r0, nlim), lim);
+        let c1 = vminq_f32(vmaxq_f32(r1, nlim), lim);
+        let q0 = vcvtq_s32_f32(c0);
+        let q1 = vcvtq_s32_f32(c1);
+        vsum = vaddq_s32(vsum, vaddq_s32(q0, q1));
+        // Values are in [-127, 127], so the narrowing moves are exact.
+        let w16 = vcombine_s16(vmovn_s32(q0), vmovn_s32(q1));
+        vst1_s8(q.as_mut_ptr().add(i), vmovn_s16(w16));
+        i += 8;
+    }
+    let mut sum = vaddvq_s32(vsum);
+    for (qv, &v) in q[i..].iter_mut().zip(x[i..].iter()) {
+        let t = (v * scale).round().clamp(-127.0, 127.0) as i8;
+        *qv = t;
+        sum += t as i32;
+    }
+    (scale, sum)
+}
+
+/// Sparse [`gemv_rows_lut16`]: the 16-row tile skips a weight block only
+/// when every row in the tile has the block's bit clear (one OR over the
+/// tile's bitmap words, recomputed lazily per 64 blocks). Rows whose
+/// individual block is zero but whose tile-mates are not still run the
+/// dense lookups — contributions of exactly 0 — so the result stays
+/// bit-identical to the dense and scalar-sparse paths.
+///
+/// # Safety
+/// Same contract as [`gemv_rows_lut16`]; `sidx` must have been built for
+/// this tensor's rows with [`tl1::SPARSE_BLOCK_WEIGHTS`]-weight blocks.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+pub unsafe fn gemv_rows_lut16_sparse(
+    data: &[u8],
+    row_bytes: usize,
+    tables: &[i16],
+    combined: f32,
+    out: &mut [f32],
+    rows: Range<usize>,
+    sidx: &SparseIndex,
+) {
+    debug_assert_eq!(out.len(), rows.len());
+    const BLOCK_BYTES: usize = tl1::SPARSE_BLOCK_WEIGHTS / 4;
+    let nblocks = sidx.blocks_per_row();
+    let n = rows.len();
+    let full = n - n % ROW_TILE;
+    let mut elided = 0u64;
+    let mut i = 0usize;
+    while i < full {
+        let base = rows.start + i;
+        let mut bits = TileBits::new(sidx, base, ROW_TILE);
+        let mut acc = [0i32; ROW_TILE];
+        for blk in 0..nblocks {
+            if !bits.any_nonzero(blk) {
+                elided += ROW_TILE as u64;
+                continue;
+            }
+            let b0 = blk * BLOCK_BYTES;
+            let b1 = (b0 + BLOCK_BYTES).min(row_bytes);
+            for b in b0..b1 {
+                let idx = gather16(data, row_bytes, base, b);
+                let t0 = tables.as_ptr().add(2 * b * LUT_W);
+                let t1 = tables.as_ptr().add((2 * b + 1) * LUT_W);
+                let (v0, v1) = lut_pair_i16(t0, t1, &idx);
+                for r in 0..ROW_TILE {
+                    acc[r] += v0[r] as i32 + v1[r] as i32;
+                }
+            }
+        }
+        for r in 0..ROW_TILE {
+            out[i + r] = acc[r] as f32 * combined;
+        }
+        i += ROW_TILE;
+    }
+    for r in i..n {
+        let row = rows.start + r;
+        let wrow = &data[row * row_bytes..(row + 1) * row_bytes];
+        out[r] =
+            tl1::gemv_row_lut16_sparse(wrow, tables, sidx, row, &mut elided) as f32 * combined;
+    }
+    sparse::note_elided(SimdLevel::Neon, elided);
+}
+
+/// Sparse [`gemv_rows_lut8`]: the elision block *is* the requantization
+/// scale block, so a tile-skipped block also skips its `0 · block_scale`
+/// folds (`+0.0` — block scales are non-negative), keeping the f32
+/// accumulators bit-identical to the dense flush schedule.
+///
+/// # Safety
+/// Same contract as [`gemv_rows_lut8`]; `sidx` blocks must coincide with
+/// the requantization scale blocks (`block_groups` groups each).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+pub unsafe fn gemv_rows_lut8_sparse(
+    data: &[u8],
+    row_bytes: usize,
+    tables: &[i8],
+    block_scales: &[f32],
+    block_groups: usize,
+    combined: f32,
+    out: &mut [f32],
+    rows: Range<usize>,
+    sidx: &SparseIndex,
+) {
+    debug_assert_eq!(out.len(), rows.len());
+    let bytes_per_block = block_groups / 2;
+    let nblocks = sidx.blocks_per_row();
+    let n = rows.len();
+    let full = n - n % ROW_TILE;
+    let mut elided = 0u64;
+    let mut i = 0usize;
+    while i < full {
+        let base = rows.start + i;
+        let mut bits = TileBits::new(sidx, base, ROW_TILE);
+        let mut facc = [0f32; ROW_TILE];
+        for blk in 0..nblocks {
+            if !bits.any_nonzero(blk) {
+                elided += ROW_TILE as u64;
+                continue;
+            }
+            let b0 = blk * bytes_per_block;
+            let blk_bytes = bytes_per_block.min(row_bytes - b0);
+            let tbase = blk * block_groups * LUT_W;
+            let mut acc = [0i32; ROW_TILE];
+            for bb in 0..blk_bytes {
+                let idx = gather16(data, row_bytes, base, b0 + bb);
+                let t0 = tables.as_ptr().add(tbase + 2 * bb * LUT_W);
+                let t1 = tables.as_ptr().add(tbase + (2 * bb + 1) * LUT_W);
+                let (v0, v1) = lut_pair_i8(t0, t1, &idx);
+                for r in 0..ROW_TILE {
+                    acc[r] += v0[r] as i32 + v1[r] as i32;
+                }
+            }
+            let bs = block_scales[blk];
+            for r in 0..ROW_TILE {
+                facc[r] += acc[r] as f32 * bs;
+            }
+        }
+        for r in 0..ROW_TILE {
+            out[i + r] = facc[r] * combined;
+        }
+        i += ROW_TILE;
+    }
+    for r in i..n {
+        let row = rows.start + r;
+        let wrow = &data[row * row_bytes..(row + 1) * row_bytes];
+        out[r] =
+            tl1::gemv_row_lut8_sparse(wrow, tables, block_scales, block_groups, sidx, row, &mut elided)
+                * combined;
+    }
+    sparse::note_elided(SimdLevel::Neon, elided);
+}
+
+/// Sparse [`gemv_rows_tl2_i16`]: blocks stride the unified group
+/// sequence ([`Tl2Layout::sparse_bounds`]); block boundaries land on
+/// whole sign bytes in the g=3 region and whole tail bytes in the TL1
+/// region, so a nonzero block replays the dense gather schedule exactly
+/// over its byte range.
+///
+/// # Safety
+/// Same contract as [`gemv_rows_tl2_i16`]; `sidx` must use the blocks of
+/// [`Tl2Layout::sparse_bounds`].
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+pub unsafe fn gemv_rows_tl2_i16_sparse(
+    data: &[u8],
+    layout: &Tl2Layout,
+    tables: &[i16],
+    combined: f32,
+    out: &mut [f32],
+    rows: Range<usize>,
+    sidx: &SparseIndex,
+) {
+    debug_assert_eq!(out.len(), rows.len());
+    let row_bytes = layout.row_bytes();
+    let n3 = layout.n3();
+    let groups = n3 + layout.n2();
+    let tl1_off = layout.idx_bytes + layout.sign_bytes;
+    let nblocks = sidx.blocks_per_row();
+    let n = rows.len();
+    let full = n - n % ROW_TILE;
+    let mut elided = 0u64;
+    let mut i = 0usize;
+    while i < full {
+        let base = rows.start + i;
+        let mut bits = TileBits::new(sidx, base, ROW_TILE);
+        let mut acc = [0i32; ROW_TILE];
+        for blk in 0..nblocks {
+            if !bits.any_nonzero(blk) {
+                elided += ROW_TILE as u64;
+                continue;
+            }
+            let g0 = blk * tl1::LUT_BLOCK_GROUPS;
+            let g1 = (g0 + tl1::LUT_BLOCK_GROUPS).min(groups);
+            let mut g = g0;
+            while g < g1.min(n3) {
+                let s = g / 8;
+                let sb = gather16(data, row_bytes, base, layout.idx_bytes + s);
+                for j in 0..4 {
+                    let idx = gather16(data, row_bytes, base, 4 * s + j);
+                    let t0 = tables.as_ptr().add((g + 2 * j) * LUT_W);
+                    let t1 = tables.as_ptr().add((g + 2 * j + 1) * LUT_W);
+                    let (v0, v1) = lut_pair_i16(t0, t1, &idx);
+                    for r in 0..ROW_TILE {
+                        let m0 = -(((sb[r] >> (2 * j)) & 1) as i32);
+                        let m1 = -(((sb[r] >> (2 * j + 1)) & 1) as i32);
+                        acc[r] += ((v0[r] as i32) ^ m0) - m0;
+                        acc[r] += ((v1[r] as i32) ^ m1) - m1;
+                    }
+                }
+                g += 8;
+            }
+            let mut tg = g.max(n3) - n3;
+            let tg_end = g1.saturating_sub(n3);
+            while tg < tg_end {
+                let bb = tg / 2;
+                let idx = gather16(data, row_bytes, base, tl1_off + bb);
+                let t0 = tables.as_ptr().add((n3 + 2 * bb) * LUT_W);
+                let t1 = tables.as_ptr().add((n3 + 2 * bb + 1) * LUT_W);
+                let (v0, v1) = lut_pair_i16(t0, t1, &idx);
+                for r in 0..ROW_TILE {
+                    acc[r] += v0[r] as i32 + v1[r] as i32;
+                }
+                tg += 2;
+            }
+        }
+        for r in 0..ROW_TILE {
+            out[i + r] = acc[r] as f32 * combined;
+        }
+        i += ROW_TILE;
+    }
+    for r in i..n {
+        let row = rows.start + r;
+        let wrow = &data[row * row_bytes..(row + 1) * row_bytes];
+        out[r] = tl2::gemv_row_tl2_i16_sparse(wrow, layout, tables, sidx, row, &mut elided) as f32
+            * combined;
+    }
+    sparse::note_elided(SimdLevel::Neon, elided);
+}
+
+/// Sparse [`gemv_rows_tl2_i8`]: the elision block *is* the scale block,
+/// so each nonzero block runs the dense gathers over its group range and
+/// folds one scale; skipped blocks drop a `+0.0` fold.
+///
+/// # Safety
+/// Same contract as [`gemv_rows_tl2_i8`]; `sidx` must use the blocks of
+/// [`Tl2Layout::sparse_bounds`] with `block_groups` groups per block.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+pub unsafe fn gemv_rows_tl2_i8_sparse(
+    data: &[u8],
+    layout: &Tl2Layout,
+    tables: &[i8],
+    block_scales: &[f32],
+    block_groups: usize,
+    combined: f32,
+    out: &mut [f32],
+    rows: Range<usize>,
+    sidx: &SparseIndex,
+) {
+    debug_assert_eq!(out.len(), rows.len());
+    debug_assert_eq!(block_groups % 8, 0, "blocks must cover whole sign bytes");
+    let row_bytes = layout.row_bytes();
+    let n3 = layout.n3();
+    let groups = n3 + layout.n2();
+    let tl1_off = layout.idx_bytes + layout.sign_bytes;
+    let nblocks = sidx.blocks_per_row();
+    let n = rows.len();
+    let full = n - n % ROW_TILE;
+    let mut elided = 0u64;
+    let mut i = 0usize;
+    while i < full {
+        let base = rows.start + i;
+        let mut bits = TileBits::new(sidx, base, ROW_TILE);
+        let mut facc = [0f32; ROW_TILE];
+        for blk in 0..nblocks {
+            if !bits.any_nonzero(blk) {
+                elided += ROW_TILE as u64;
+                continue;
+            }
+            let g0 = blk * block_groups;
+            let g1 = (g0 + block_groups).min(groups);
+            let mut acc = [0i32; ROW_TILE];
+            let mut g = g0;
+            while g < g1.min(n3) {
+                let s = g / 8;
+                let sb = gather16(data, row_bytes, base, layout.idx_bytes + s);
+                for j in 0..4 {
+                    let idx = gather16(data, row_bytes, base, 4 * s + j);
+                    let t0 = tables.as_ptr().add((g + 2 * j) * LUT_W);
+                    let t1 = tables.as_ptr().add((g + 2 * j + 1) * LUT_W);
+                    let (v0, v1) = lut_pair_i8(t0, t1, &idx);
+                    for r in 0..ROW_TILE {
+                        let m0 = -(((sb[r] >> (2 * j)) & 1) as i32);
+                        let m1 = -(((sb[r] >> (2 * j + 1)) & 1) as i32);
+                        acc[r] += ((v0[r] as i32) ^ m0) - m0;
+                        acc[r] += ((v1[r] as i32) ^ m1) - m1;
+                    }
+                }
+                g += 8;
+            }
+            let mut tg = g.max(n3) - n3;
+            let tg_end = g1.saturating_sub(n3);
+            while tg < tg_end {
+                let bb = tg / 2;
+                let idx = gather16(data, row_bytes, base, tl1_off + bb);
+                let t0 = tables.as_ptr().add((n3 + 2 * bb) * LUT_W);
+                let t1 = tables.as_ptr().add((n3 + 2 * bb + 1) * LUT_W);
+                let (v0, v1) = lut_pair_i8(t0, t1, &idx);
+                for r in 0..ROW_TILE {
+                    acc[r] += v0[r] as i32 + v1[r] as i32;
+                }
+                tg += 2;
+            }
+            let bs = block_scales[blk];
+            for r in 0..ROW_TILE {
+                facc[r] += acc[r] as f32 * bs;
+            }
+        }
+        for r in 0..ROW_TILE {
+            out[i + r] = facc[r] * combined;
+        }
+        i += ROW_TILE;
+    }
+    for r in i..n {
+        let row = rows.start + r;
+        let wrow = &data[row * row_bytes..(row + 1) * row_bytes];
+        out[r] = tl2::gemv_row_tl2_i8_sparse(
+            wrow,
+            layout,
+            tables,
+            block_scales,
+            block_groups,
+            sidx,
+            row,
+            &mut elided,
+        ) * combined;
+    }
+    sparse::note_elided(SimdLevel::Neon, elided);
+}
+
+/// Sparse [`gemv_rows_elut5`]: one block covers 16 index bytes (32
+/// groups), so the `b % 4` sign-byte addressing of the dense loop is
+/// preserved inside every block (`b0` is a multiple of 4).
+///
+/// # Safety
+/// Same contract as [`gemv_rows_elut5`]; `sidx` must use
+/// [`tl1::SPARSE_BLOCK_WEIGHTS`]-weight blocks.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+pub unsafe fn gemv_rows_elut5_sparse(
+    data: &[u8],
+    idx_bytes: usize,
+    tables: &[i16],
+    combined: f32,
+    out: &mut [f32],
+    rows: Range<usize>,
+    sidx: &SparseIndex,
+) {
+    debug_assert_eq!(out.len(), rows.len());
+    const BLOCK_IDX_BYTES: usize = tl1::SPARSE_BLOCK_WEIGHTS / 4;
+    let row_bytes = idx_bytes + idx_bytes / 4;
+    let nblocks = sidx.blocks_per_row();
+    let n = rows.len();
+    let full = n - n % ROW_TILE;
+    let mut elided = 0u64;
+    let mut i = 0usize;
+    while i < full {
+        let base = rows.start + i;
+        let mut bits = TileBits::new(sidx, base, ROW_TILE);
+        let mut acc = [0i32; ROW_TILE];
+        for blk in 0..nblocks {
+            if !bits.any_nonzero(blk) {
+                elided += ROW_TILE as u64;
+                continue;
+            }
+            let b0 = blk * BLOCK_IDX_BYTES;
+            let b1 = (b0 + BLOCK_IDX_BYTES).min(idx_bytes);
+            for b in b0..b1 {
+                let idx = gather16(data, row_bytes, base, b);
+                let sb = gather16(data, row_bytes, base, idx_bytes + b / 4);
+                let bit0 = 2 * (b % 4);
+                let t0 = tables.as_ptr().add(2 * b * LUT_W);
+                let t1 = tables.as_ptr().add((2 * b + 1) * LUT_W);
+                let (v0, v1) = lut_pair_i16(t0, t1, &idx);
+                for r in 0..ROW_TILE {
+                    let m0 = -(((sb[r] >> bit0) & 1) as i32);
+                    let m1 = -(((sb[r] >> (bit0 + 1)) & 1) as i32);
+                    acc[r] += ((v0[r] as i32) ^ m0) - m0;
+                    acc[r] += ((v1[r] as i32) ^ m1) - m1;
+                }
+            }
+        }
+        for r in 0..ROW_TILE {
+            out[i + r] = acc[r] as f32 * combined;
+        }
+        i += ROW_TILE;
+    }
+    for r in i..n {
+        let row = rows.start + r;
+        let wrow = &data[row * row_bytes..(row + 1) * row_bytes];
+        out[r] = crate::kernels::elut::gemv_row_elut5_sparse(
+            wrow,
+            idx_bytes,
+            tables,
+            sidx,
+            row,
+            &mut elided,
+        ) as f32
+            * combined;
+    }
+    sparse::note_elided(SimdLevel::Neon, elided);
+}
+
+/// Sparse NEON I2_S row: nonzero blocks accumulate `Σ a·(code − 1)`
+/// directly, so no `act_sum` correction is needed and skipped blocks
+/// contribute exactly nothing; the scalar body under `target_feature`
+/// keeps LLVM's widening multiply-accumulate pattern. Exact i32 — equal
+/// to the dense `Σ a·code − act_sum` by construction.
+///
+/// # Safety
+/// Caller must have verified NEON at run time. `wrow.len() * 4` must
+/// equal `aq.len()` and `sidx` must use
+/// [`crate::kernels::i2s::SPARSE_BLOCK_WEIGHTS`]-weight blocks.
+#[target_feature(enable = "neon")]
+unsafe fn gemv_row_i2s_sparse(
+    wrow: &[u8],
+    aq: &[i8],
+    sidx: &SparseIndex,
+    row: usize,
+    elided: &mut u64,
+) -> i32 {
+    debug_assert_eq!(wrow.len() * 4, aq.len());
+    const BLOCK_BYTES: usize = crate::kernels::i2s::SPARSE_BLOCK_WEIGHTS / 4;
+    let mut acc = 0i32;
+    for blk in 0..sidx.blocks_per_row() {
+        if !sidx.is_nonzero(row, blk) {
+            *elided += 1;
+            continue;
+        }
+        let b0 = blk * BLOCK_BYTES;
+        let b1 = (b0 + BLOCK_BYTES).min(wrow.len());
+        let mut k = b0 * 4;
+        for b4 in wrow[b0..b1].chunks_exact(4) {
+            let a = &aq[k..k + 16];
+            let mut local = 0i32;
+            for (bi, &byte) in b4.iter().enumerate() {
+                let base = bi * 4;
+                local += ((byte & 0x3) as i32 - 1) * a[base] as i32;
+                local += (((byte >> 2) & 0x3) as i32 - 1) * a[base + 1] as i32;
+                local += (((byte >> 4) & 0x3) as i32 - 1) * a[base + 2] as i32;
+                local += (((byte >> 6) & 0x3) as i32 - 1) * a[base + 3] as i32;
+            }
+            acc += local;
+            k += 16;
+        }
+        for &byte in wrow[b0..b1].chunks_exact(4).remainder() {
+            for j in 0..4 {
+                acc += (((byte >> (2 * j)) & 0x3) as i32 - 1) * aq[k + j] as i32;
+            }
+            k += 4;
+        }
+    }
+    acc
+}
+
+/// Sparse NEON I2_S over a row range.
+///
+/// # Safety
+/// Caller must have verified NEON at run time. `data` must hold
+/// `rows.end` packed rows of `aq.len() / 4` bytes; `out.len()` must
+/// equal `rows.len()`; `sidx` must match the tensor's packing.
+#[target_feature(enable = "neon")]
+pub unsafe fn gemv_rows_i2s_sparse(
+    data: &[u8],
+    aq: &[i8],
+    combined: f32,
+    out: &mut [f32],
+    rows: Range<usize>,
+    sidx: &SparseIndex,
+) {
+    let row_bytes = aq.len() / 4;
+    let mut elided = 0u64;
+    for (o, r) in out.iter_mut().zip(rows) {
+        let wrow = &data[r * row_bytes..(r + 1) * row_bytes];
+        *o = gemv_row_i2s_sparse(wrow, aq, sidx, r, &mut elided) as f32 * combined;
+    }
+    sparse::note_elided(SimdLevel::Neon, elided);
 }
 
 #[cfg(test)]

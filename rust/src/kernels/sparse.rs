@@ -1,0 +1,431 @@
+//! Sparsity-aware zero-block elision for the ternary kernels.
+//!
+//! BitNet b1.58 weights are ternary, so roughly a third of all weights
+//! are exact zeros — and a zero weight contributes exactly nothing to
+//! any of this library's integer accumulators (the LUT tables map the
+//! all-zero code to entry 0; I2_S folds the `code − 1` offset so a zero
+//! weight multiplies by 0). TENET (PAPERS.md) shows that skipping that
+//! sparsity inside LUT-centric kernels is a first-order win. This
+//! module makes the skip a *packing* decision:
+//!
+//! * At pack time every ternary kernel measures its per-row-block zero
+//!   fraction and, when the tensor clears [`SPARSE_THRESHOLD`] (or the
+//!   mode forces it), attaches a [`SparseIndex`] — one bit per
+//!   scale-block-aligned weight block per row — to the packed
+//!   [`super::QTensor`]. The dense packed bytes are unchanged; the
+//!   index is purely additive, so dequantize and every dense consumer
+//!   are untouched.
+//! * `gemv_rows` consults the index and elides zero blocks entirely: no
+//!   LUT gather, no accumulate, no per-block scale fold. Because a zero
+//!   block's integer block sum is exactly 0 (and the `_0` variants'
+//!   float fold of `0 · block_scale` adds `+0.0`, which can never
+//!   change an accumulator that is itself never `-0.0` — block scales
+//!   are non-negative and integer zero converts to `+0.0`), the sparse
+//!   path is **bit-identical** to the dense path by construction.
+//!   `rust/tests/simd_identity.rs` locks the claim down across kernel ×
+//!   SIMD tier × adversarial shapes.
+//! * The block granularity equals the kernel's scale-block granularity
+//!   (32 LUT groups for the TL family — 64 weights at g=2, the unified
+//!   trio/pair group sequence for TL2 — and one 128-weight alignment
+//!   unit for I2_S), so a skipped block skips a whole scale fold too.
+//!
+//! Process-wide mode plumbing mirrors [`super::simd`]: the
+//! `RUST_PALLAS_SPARSE` environment variable (`auto`/`on`/`off`) and
+//! the CLI `--sparse` flag pick the [`SparseMode`]; tests and the tuner
+//! force a mode for a scoped region with [`with_mode`]. When nesting
+//! with [`super::simd::with_level`], always take [`with_mode`] as the
+//! *outer* scope — both serialize on process-wide locks and a
+//! consistent order keeps concurrent forcing callers deadlock-free.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Mutex;
+
+use super::simd::SimdLevel;
+
+/// Minimum zero-*block* fraction (not zero-weight fraction) a tensor
+/// must measure at pack time for [`SparseMode::Auto`] to emit the
+/// block-skip layout. Below it, the bitmap scan would cost more than
+/// the elided work saves; iid ternary tensors (zero blocks ≈ never)
+/// stay dense automatically.
+pub const SPARSE_THRESHOLD: f64 = 0.5;
+
+/// Whether the ternary kernels emit the block-skip layout at pack time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SparseMode {
+    /// Measure per-tensor sparsity and decide by [`SPARSE_THRESHOLD`].
+    Auto = 0,
+    /// Always emit the block-skip layout (tests, tuner measurements).
+    On = 1,
+    /// Never emit it — every tensor packs dense (the forced-dense CI
+    /// lane, and the degrade target for sparse-tuned profiles).
+    Off = 2,
+}
+
+impl SparseMode {
+    /// Every mode.
+    pub const ALL: [SparseMode; 3] = [SparseMode::Auto, SparseMode::On, SparseMode::Off];
+
+    /// Stable lowercase name (used in metrics, plan summaries, the CLI).
+    pub fn name(self) -> &'static str {
+        match self {
+            SparseMode::Auto => "auto",
+            SparseMode::On => "on",
+            SparseMode::Off => "off",
+        }
+    }
+
+    /// Parse a [`name`](Self::name); `None` for unknown strings.
+    pub fn parse(s: &str) -> Option<SparseMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(SparseMode::Auto),
+            "on" => Some(SparseMode::On),
+            "off" => Some(SparseMode::Off),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> SparseMode {
+        match v {
+            1 => SparseMode::On,
+            2 => SparseMode::Off,
+            _ => SparseMode::Auto,
+        }
+    }
+}
+
+const UNSET: u8 = 0xff;
+static ACTIVE: AtomicU8 = AtomicU8::new(UNSET);
+static FORCE_LOCK: Mutex<()> = Mutex::new(());
+/// Blocks elided by `gemv_rows`, indexed `[scalar, avx2, neon]` like
+/// [`super::simd::call_counts`].
+static ELIDED: [AtomicU64; 3] = [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+
+fn init_from_env() -> SparseMode {
+    match std::env::var("RUST_PALLAS_SPARSE") {
+        Ok(s) => SparseMode::parse(&s).unwrap_or(SparseMode::Auto),
+        Err(_) => SparseMode::Auto,
+    }
+}
+
+/// The mode pack-time decisions consult right now. Lazily initialized
+/// from `RUST_PALLAS_SPARSE` on first use.
+pub fn mode() -> SparseMode {
+    let v = ACTIVE.load(Ordering::Relaxed);
+    if v != UNSET {
+        return SparseMode::from_u8(v);
+    }
+    let init = init_from_env();
+    // Keep whatever a racing set_mode installed first.
+    let _ = ACTIVE.compare_exchange(UNSET, init as u8, Ordering::Relaxed, Ordering::Relaxed);
+    SparseMode::from_u8(ACTIVE.load(Ordering::Relaxed))
+}
+
+/// Set the process-wide mode (the CLI `--sparse` flag).
+pub fn set_mode(m: SparseMode) {
+    ACTIVE.store(m as u8, Ordering::Relaxed);
+}
+
+/// Whether sparse packing is permitted at all under the current mode —
+/// false exactly under a forced `off`, which is what profile
+/// degradation checks (a sparse-tuned winner cannot be honored when
+/// every tensor packs dense).
+pub fn enabled() -> bool {
+    mode() != SparseMode::Off
+}
+
+/// Run `f` with the mode forced to `m`, restoring the previous mode
+/// afterwards — panic-safe, serialized process-wide. Take this *outside*
+/// [`super::simd::with_level`] when nesting (see module docs).
+pub fn with_mode<R>(m: SparseMode, f: impl FnOnce() -> R) -> R {
+    let _guard = FORCE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    struct Restore(u8);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            ACTIVE.store(self.0, Ordering::Relaxed);
+        }
+    }
+    let _restore = Restore(mode() as u8);
+    ACTIVE.store(m as u8, Ordering::Relaxed);
+    f()
+}
+
+/// Record `n` weight blocks elided by a `gemv_rows` call at `level`.
+#[inline]
+pub fn note_elided(level: SimdLevel, n: u64) {
+    if n > 0 {
+        ELIDED[level as usize].fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Cumulative elided-block counts, indexed `[scalar, avx2, neon]`.
+pub fn elided_counts() -> [u64; 3] {
+    [
+        ELIDED[0].load(Ordering::Relaxed),
+        ELIDED[1].load(Ordering::Relaxed),
+        ELIDED[2].load(Ordering::Relaxed),
+    ]
+}
+
+/// The block-skip layout: one bit per (row, weight block), set when the
+/// block holds at least one nonzero weight. Blocks are the kernel's
+/// scale blocks, described at build time as per-row weight ranges, so
+/// `gemv_rows` can skip gather + accumulate + scale fold for clear bits.
+/// Rows are stored as consecutive little-endian `u64` words (bit `b` of
+/// word `b / 64`), sized identically for every row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseIndex {
+    blocks_per_row: usize,
+    words_per_row: usize,
+    words: Vec<u64>,
+    nonzero_blocks: usize,
+}
+
+impl SparseIndex {
+    /// Scan the `m`×`k` ternary matrix `q` (row-major) and build the
+    /// bitmap. `bounds[b]` is the in-row weight range of block `b`; the
+    /// ranges must tile `0..k` in order (the kernel's scale-block
+    /// schedule).
+    pub fn build(q: &[i8], m: usize, k: usize, bounds: &[Range<usize>]) -> SparseIndex {
+        assert_eq!(q.len(), m * k);
+        debug_assert!(bounds.last().map_or(k == 0, |r| r.end == k));
+        let blocks_per_row = bounds.len();
+        let words_per_row = blocks_per_row.div_ceil(64).max(1);
+        let mut words = vec![0u64; m * words_per_row];
+        let mut nonzero_blocks = 0usize;
+        for r in 0..m {
+            let row = &q[r * k..(r + 1) * k];
+            let w = &mut words[r * words_per_row..(r + 1) * words_per_row];
+            for (b, range) in bounds.iter().enumerate() {
+                if row[range.clone()].iter().any(|&v| v != 0) {
+                    w[b / 64] |= 1u64 << (b % 64);
+                    nonzero_blocks += 1;
+                }
+            }
+        }
+        SparseIndex { blocks_per_row, words_per_row, words, nonzero_blocks }
+    }
+
+    /// Blocks per weight row.
+    pub fn blocks_per_row(&self) -> usize {
+        self.blocks_per_row
+    }
+
+    /// Total blocks with at least one nonzero weight.
+    pub fn nonzero_blocks(&self) -> usize {
+        self.nonzero_blocks
+    }
+
+    /// Total blocks across all rows.
+    pub fn total_blocks(&self) -> usize {
+        if self.words_per_row == 0 {
+            return 0;
+        }
+        (self.words.len() / self.words_per_row) * self.blocks_per_row
+    }
+
+    /// Fraction of blocks that are entirely zero (what the pack-time
+    /// threshold compares).
+    pub fn zero_block_fraction(&self) -> f64 {
+        let total = self.total_blocks();
+        if total == 0 {
+            return 0.0;
+        }
+        1.0 - self.nonzero_blocks as f64 / total as f64
+    }
+
+    /// Bytes of bitmap storage (observability; not counted in
+    /// [`super::QTensor::weight_bytes`] — the accumulate phase reads it
+    /// once per row, not per block).
+    pub fn index_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    /// Whether block `blk` of row `row` holds any nonzero weight.
+    #[inline]
+    pub fn is_nonzero(&self, row: usize, blk: usize) -> bool {
+        let w = self.words[row * self.words_per_row + blk / 64];
+        (w >> (blk % 64)) & 1 != 0
+    }
+
+    /// One bitmap word of one row (`wi` indexes 64-block word groups).
+    #[inline]
+    pub fn row_word(&self, row: usize, wi: usize) -> u64 {
+        self.words[row * self.words_per_row + wi]
+    }
+
+    /// OR of bitmap word `wi` across `rows` consecutive rows starting at
+    /// `r0` — the vector tile's skip test: a block elides for the whole
+    /// tile only when every row's bit is clear.
+    #[inline]
+    pub fn tile_or_word(&self, r0: usize, rows: usize, wi: usize) -> u64 {
+        let mut or = 0u64;
+        for r in r0..r0 + rows {
+            or |= self.words[r * self.words_per_row + wi];
+        }
+        or
+    }
+}
+
+/// Lazily-computed OR of a row tile's bitmap words — the vector paths'
+/// skip test. A block elides for a whole 16-row tile only when every
+/// row's bit is clear; the OR word is recomputed only when the block's
+/// word index changes, so the hot loop stays allocation-free and reads
+/// each bitmap word once per tile.
+pub struct TileBits<'a> {
+    idx: &'a SparseIndex,
+    r0: usize,
+    rows: usize,
+    cur_wi: usize,
+    cur_or: u64,
+}
+
+impl<'a> TileBits<'a> {
+    /// Skip test over `rows` consecutive weight rows starting at `r0`.
+    pub fn new(idx: &'a SparseIndex, r0: usize, rows: usize) -> TileBits<'a> {
+        TileBits { idx, r0, rows, cur_wi: usize::MAX, cur_or: 0 }
+    }
+
+    /// Whether any of the tile's rows has a nonzero block `blk`.
+    #[inline]
+    pub fn any_nonzero(&mut self, blk: usize) -> bool {
+        let wi = blk / 64;
+        if wi != self.cur_wi {
+            self.cur_wi = wi;
+            self.cur_or = self.idx.tile_or_word(self.r0, self.rows, wi);
+        }
+        (self.cur_or >> (blk % 64)) & 1 != 0
+    }
+}
+
+/// Uniform block bounds: `k` split into `block_weights`-sized chunks
+/// (last chunk possibly short) — the schedule of every kernel except
+/// TL2, whose unified trio/pair group sequence computes its own bounds.
+pub fn uniform_bounds(k: usize, block_weights: usize) -> Vec<Range<usize>> {
+    let mut bounds = Vec::with_capacity(k.div_ceil(block_weights));
+    let mut start = 0usize;
+    while start < k {
+        let end = (start + block_weights).min(k);
+        bounds.push(start..end);
+        start = end;
+    }
+    bounds
+}
+
+/// Pack-time decision: build the index and attach it when the current
+/// [`mode`] says so — always under `On`, never under `Off`, and only
+/// past [`SPARSE_THRESHOLD`] under `Auto`. The ternary kernels call
+/// this from `quantize`.
+pub fn maybe_index(q: &[i8], m: usize, k: usize, bounds: &[Range<usize>]) -> Option<SparseIndex> {
+    match mode() {
+        SparseMode::Off => None,
+        SparseMode::On => Some(SparseIndex::build(q, m, k, bounds)),
+        SparseMode::Auto => {
+            let idx = SparseIndex::build(q, m, k, bounds);
+            (idx.zero_block_fraction() >= SPARSE_THRESHOLD).then_some(idx)
+        }
+    }
+}
+
+/// Measured zero-weight fraction of a ternary matrix (observability:
+/// `BitLinear` records it for `plan_summary`; the *block* fraction in
+/// [`SparseIndex::zero_block_fraction`] is what gates the layout).
+pub fn zero_fraction(q: &[i8]) -> f64 {
+    if q.is_empty() {
+        return 0.0;
+    }
+    q.iter().filter(|&&v| v == 0).count() as f64 / q.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_names_round_trip() {
+        for m in SparseMode::ALL {
+            assert_eq!(SparseMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(SparseMode::parse("ON"), Some(SparseMode::On));
+        assert_eq!(SparseMode::parse("dense"), None);
+    }
+
+    #[test]
+    fn with_mode_forces_and_restores() {
+        let before = mode();
+        with_mode(SparseMode::Off, || {
+            assert_eq!(mode(), SparseMode::Off);
+            assert!(!enabled());
+        });
+        assert_eq!(mode(), before);
+    }
+
+    #[test]
+    fn index_tracks_zero_blocks_exactly() {
+        // 2 rows × 8 weights, blocks of 4: row 0 = [zeros | nonzero],
+        // row 1 = [nonzero | zeros].
+        let q: Vec<i8> = vec![0, 0, 0, 0, 1, 0, -1, 0, 0, 1, 0, 0, 0, 0, 0, 0];
+        let idx = SparseIndex::build(&q, 2, 8, &uniform_bounds(8, 4));
+        assert_eq!(idx.blocks_per_row(), 2);
+        assert_eq!(idx.total_blocks(), 4);
+        assert_eq!(idx.nonzero_blocks(), 2);
+        assert!((idx.zero_block_fraction() - 0.5).abs() < 1e-12);
+        assert!(!idx.is_nonzero(0, 0));
+        assert!(idx.is_nonzero(0, 1));
+        assert!(idx.is_nonzero(1, 0));
+        assert!(!idx.is_nonzero(1, 1));
+        // Tile OR: block 0 nonzero somewhere in rows 0..2, block 1 too.
+        assert_eq!(idx.tile_or_word(0, 2, 0) & 0b11, 0b11);
+    }
+
+    #[test]
+    fn index_handles_many_blocks_across_words() {
+        // 130 blocks of 1 weight → 3 bitmap words per row.
+        let mut q = vec![0i8; 130];
+        q[0] = 1;
+        q[64] = -1;
+        q[129] = 1;
+        let idx = SparseIndex::build(&q, 1, 130, &uniform_bounds(130, 1));
+        assert_eq!(idx.nonzero_blocks(), 3);
+        assert!(idx.is_nonzero(0, 0));
+        assert!(idx.is_nonzero(0, 64));
+        assert!(idx.is_nonzero(0, 129));
+        assert!(!idx.is_nonzero(0, 1));
+        assert!(!idx.is_nonzero(0, 128));
+    }
+
+    #[test]
+    fn maybe_index_obeys_mode_and_threshold() {
+        // 75% zero blocks: clears Auto's 0.5 threshold.
+        let sparse_q: Vec<i8> = vec![1, 0, 0, 0, 0, 0, 0, 0];
+        // 0% zero blocks: stays dense under Auto.
+        let dense_q: Vec<i8> = vec![1, -1, 1, -1, 1, -1, 1, -1];
+        let bounds = uniform_bounds(8, 2);
+        with_mode(SparseMode::Auto, || {
+            assert!(maybe_index(&sparse_q, 1, 8, &bounds).is_some());
+            assert!(maybe_index(&dense_q, 1, 8, &bounds).is_none());
+        });
+        with_mode(SparseMode::On, || {
+            assert!(maybe_index(&dense_q, 1, 8, &bounds).is_some());
+        });
+        with_mode(SparseMode::Off, || {
+            assert!(maybe_index(&sparse_q, 1, 8, &bounds).is_none());
+        });
+    }
+
+    #[test]
+    fn elided_counter_accumulates() {
+        let before = elided_counts();
+        note_elided(SimdLevel::Scalar, 5);
+        note_elided(SimdLevel::Scalar, 0); // no-op
+        let after = elided_counts();
+        assert!(after[0] >= before[0] + 5);
+    }
+
+    #[test]
+    fn zero_fraction_measures_weights() {
+        assert_eq!(zero_fraction(&[]), 0.0);
+        assert!((zero_fraction(&[0, 1, 0, -1]) - 0.5).abs() < 1e-12);
+    }
+}

@@ -17,6 +17,7 @@
 use super::lut::{decode_code, requantize_lut_block};
 use super::quant::{quantize_act_int8_into, TernaryWeights};
 use super::simd::{self, SimdLevel};
+use super::sparse;
 use super::{
     Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
 };
@@ -27,6 +28,11 @@ pub const LUT_W: usize = 16;
 /// Number of weight pairs (groups) sharing one int8 requantization scale
 /// in the `_0` fast path.
 pub const LUT_BLOCK_GROUPS: usize = 32;
+
+/// Weights per sparse-elision block: one `_0` scale block (32 groups ×
+/// g=2), so a skipped block skips its whole scale fold too. Shared by
+/// TL1 and the ELUT kernels that reuse the TL1 accumulation paths.
+pub const SPARSE_BLOCK_WEIGHTS: usize = 2 * LUT_BLOCK_GROUPS;
 
 const TERNARY: [i8; 3] = [-1, 0, 1];
 
@@ -132,12 +138,15 @@ impl<const LOSSLESS: bool> Kernel for Tl1Kernel<LOSSLESS> {
         for r in 0..m {
             pack_row_tl1(w.row(r), &mut data[r * row_bytes..(r + 1) * row_bytes]);
         }
+        let bounds = sparse::uniform_bounds(k, SPARSE_BLOCK_WEIGHTS);
+        let sparse = sparse::maybe_index(&w.q, m, k, &bounds);
         QTensor {
             qtype: self.info().qtype,
             m,
             k,
             data,
             scale: w.scale,
+            sparse,
         }
     }
 
@@ -188,6 +197,10 @@ impl<const LOSSLESS: bool> Kernel for Tl1Kernel<LOSSLESS> {
         simd::KERNEL_LEVELS
     }
 
+    fn sparse_capable(&self) -> bool {
+        true
+    }
+
     fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
         let row_bytes = t.k / 4;
         let level = simd::active_level();
@@ -195,6 +208,38 @@ impl<const LOSSLESS: bool> Kernel for Tl1Kernel<LOSSLESS> {
         match p {
             PreparedRow::LutI16 { tables, scale } => {
                 let combined = t.scale / scale;
+                if let Some(idx) = &t.sparse {
+                    #[cfg(target_arch = "x86_64")]
+                    if level == SimdLevel::Avx2 {
+                        // SAFETY: AVX2 verified by the active dispatch level;
+                        // buffer shapes are guaranteed by quantize/prepare.
+                        unsafe {
+                            simd::avx2::gemv_rows_lut16_sparse(
+                                &t.data, row_bytes, tables, combined, out, rows, idx,
+                            );
+                        }
+                        return;
+                    }
+                    #[cfg(target_arch = "aarch64")]
+                    if level == SimdLevel::Neon {
+                        // SAFETY: NEON verified by the active dispatch level;
+                        // buffer shapes are guaranteed by quantize/prepare.
+                        unsafe {
+                            simd::neon::gemv_rows_lut16_sparse(
+                                &t.data, row_bytes, tables, combined, out, rows, idx,
+                            );
+                        }
+                        return;
+                    }
+                    let mut elided = 0u64;
+                    for (o, r) in out.iter_mut().zip(rows) {
+                        let wrow = &t.data[r * row_bytes..(r + 1) * row_bytes];
+                        *o = gemv_row_lut16_sparse(wrow, tables, idx, r, &mut elided) as f32
+                            * combined;
+                    }
+                    sparse::note_elided(level, elided);
+                    return;
+                }
                 #[cfg(target_arch = "x86_64")]
                 if level == SimdLevel::Avx2 {
                     // SAFETY: AVX2 verified by the active dispatch level;
@@ -220,6 +265,61 @@ impl<const LOSSLESS: bool> Kernel for Tl1Kernel<LOSSLESS> {
             }
             PreparedRow::LutI8 { tables, block_scales, block_groups, scale } => {
                 let combined = t.scale / scale;
+                if let Some(idx) = &t.sparse {
+                    #[cfg(target_arch = "x86_64")]
+                    if level == SimdLevel::Avx2 {
+                        // SAFETY: AVX2 verified by the active dispatch level;
+                        // buffer shapes are guaranteed by quantize/prepare.
+                        unsafe {
+                            simd::avx2::gemv_rows_lut8_sparse(
+                                &t.data,
+                                row_bytes,
+                                tables,
+                                block_scales,
+                                block_groups,
+                                combined,
+                                out,
+                                rows,
+                                idx,
+                            );
+                        }
+                        return;
+                    }
+                    #[cfg(target_arch = "aarch64")]
+                    if level == SimdLevel::Neon {
+                        // SAFETY: NEON verified by the active dispatch level;
+                        // buffer shapes are guaranteed by quantize/prepare.
+                        unsafe {
+                            simd::neon::gemv_rows_lut8_sparse(
+                                &t.data,
+                                row_bytes,
+                                tables,
+                                block_scales,
+                                block_groups,
+                                combined,
+                                out,
+                                rows,
+                                idx,
+                            );
+                        }
+                        return;
+                    }
+                    let mut elided = 0u64;
+                    for (o, r) in out.iter_mut().zip(rows) {
+                        let wrow = &t.data[r * row_bytes..(r + 1) * row_bytes];
+                        *o = gemv_row_lut8_sparse(
+                            wrow,
+                            tables,
+                            block_scales,
+                            block_groups,
+                            idx,
+                            r,
+                            &mut elided,
+                        ) * combined;
+                    }
+                    sparse::note_elided(level, elided);
+                    return;
+                }
                 #[cfg(target_arch = "x86_64")]
                 if level == SimdLevel::Avx2 {
                     // SAFETY: AVX2 verified by the active dispatch level;
@@ -298,6 +398,84 @@ pub fn gemv_row_lut8(
     let mut facc = 0f32;
     let bytes_per_block = block_groups / 2; // 2 groups per byte
     for (blk, bytes) in wrow.chunks(bytes_per_block).enumerate() {
+        let mut acc = 0i32;
+        let base = blk * block_groups * LUT_W;
+        let mut g = 0usize;
+        for &byte in bytes {
+            let c0 = (byte & 0xf) as usize;
+            let c1 = (byte >> 4) as usize;
+            // SAFETY: tables holds 2 groups of LUT_W entries per packed
+            // byte and nibble codes are < LUT_W; `base` advances by one
+            // whole block per chunk, so both indices are in bounds.
+            acc += unsafe { *tables.get_unchecked(base + g * LUT_W + c0) } as i32;
+            // SAFETY: as above.
+            acc += unsafe { *tables.get_unchecked(base + (g + 1) * LUT_W + c1) } as i32;
+            g += 2;
+        }
+        facc += acc as f32 * block_scales[blk];
+    }
+    facc
+}
+
+/// Sparse [`gemv_row_lut16`]: iterate [`SPARSE_BLOCK_WEIGHTS`]-sized
+/// blocks and skip those the index marks all-zero (their table entries
+/// would all be the zero-pair code, entry exactly 0, so skipping them
+/// leaves the i32 accumulator bit-identical). `elided` counts skipped
+/// blocks.
+#[inline]
+pub fn gemv_row_lut16_sparse(
+    wrow: &[u8],
+    tables: &[i16],
+    idx: &sparse::SparseIndex,
+    row: usize,
+    elided: &mut u64,
+) -> i32 {
+    const BLOCK_BYTES: usize = SPARSE_BLOCK_WEIGHTS / 4;
+    let mut acc = 0i32;
+    for blk in 0..idx.blocks_per_row() {
+        if !idx.is_nonzero(row, blk) {
+            *elided += 1;
+            continue;
+        }
+        let b0 = blk * BLOCK_BYTES;
+        let b1 = (b0 + BLOCK_BYTES).min(wrow.len());
+        let mut g = b0 * 2;
+        for &byte in &wrow[b0..b1] {
+            let c0 = (byte & 0xf) as usize;
+            let c1 = (byte >> 4) as usize;
+            // SAFETY: tables holds 2 groups of LUT_W entries per packed
+            // byte and nibble codes are < LUT_W, so both indices are in
+            // bounds.
+            acc += unsafe { *tables.get_unchecked(g * LUT_W + c0) } as i32;
+            // SAFETY: as above.
+            acc += unsafe { *tables.get_unchecked((g + 1) * LUT_W + c1) } as i32;
+            g += 2;
+        }
+    }
+    acc
+}
+
+/// Sparse [`gemv_row_lut8`]: the elision block *is* the requantization
+/// scale block, so a skipped block also skips its `0 · block_scale`
+/// fold — which is `+0.0` (block scales are non-negative), so the f32
+/// accumulator stays bit-identical to the dense path.
+#[inline]
+pub fn gemv_row_lut8_sparse(
+    wrow: &[u8],
+    tables: &[i8],
+    block_scales: &[f32],
+    block_groups: usize,
+    idx: &sparse::SparseIndex,
+    row: usize,
+    elided: &mut u64,
+) -> f32 {
+    let mut facc = 0f32;
+    let bytes_per_block = block_groups / 2; // 2 groups per byte
+    for (blk, bytes) in wrow.chunks(bytes_per_block).enumerate() {
+        if !idx.is_nonzero(row, blk) {
+            *elided += 1;
+            continue;
+        }
         let mut acc = 0i32;
         let base = blk * block_groups * LUT_W;
         let mut g = 0usize;

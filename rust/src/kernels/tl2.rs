@@ -16,9 +16,10 @@
 //! Variants: **TL2_0** (int8-requantized tables, fast) and **TL2_1**
 //! (int16 tables via pack-and-unpack, lossless).
 
-use super::lut::{decode_code, mirror_join, mirror_split};
+use super::lut::{decode_code, mirror_join, mirror_split, sign_apply_i32};
 use super::quant::{quantize_act_int8_into, TernaryWeights};
 use super::simd::{self, SimdLevel};
+use super::sparse;
 use super::tl1::{
     build_tables_tl1_into, pack_row_tl1, requantize_tables_into, LUT_BLOCK_GROUPS, LUT_W,
 };
@@ -75,6 +76,34 @@ impl Tl2Layout {
     /// Number of g=2 tail groups.
     pub fn n2(&self) -> usize {
         self.two_k / 2
+    }
+
+    /// First weight index of unified group `g` (g=3 region first, then
+    /// the g=2 tail; `g == n3` maps to `three_k` from either side).
+    fn group_weight(&self, g: usize) -> usize {
+        let n3 = self.n3();
+        if g <= n3 {
+            3 * g
+        } else {
+            self.three_k + 2 * (g - n3)
+        }
+    }
+
+    /// Per-block weight ranges for the sparse index: blocks stride the
+    /// unified group sequence in [`LUT_BLOCK_GROUPS`]-group steps — the
+    /// same schedule as the `_0` requantization scale blocks, so one
+    /// elided block skips exactly one scale fold. A block may span the
+    /// g=3 → tail boundary; the range covers both regions' weights.
+    pub fn sparse_bounds(&self) -> Vec<std::ops::Range<usize>> {
+        let groups = self.n3() + self.n2();
+        let mut bounds = Vec::with_capacity(groups.div_ceil(LUT_BLOCK_GROUPS));
+        let mut g = 0usize;
+        while g < groups {
+            let g1 = (g + LUT_BLOCK_GROUPS).min(groups);
+            bounds.push(self.group_weight(g)..self.group_weight(g1));
+            g = g1;
+        }
+        bounds
     }
 }
 
@@ -164,7 +193,9 @@ impl<const LOSSLESS: bool> Kernel for Tl2Kernel<LOSSLESS> {
         for r in 0..w.m {
             pack_row_tl2(w.row(r), &layout, &mut data[r * row_bytes..(r + 1) * row_bytes]);
         }
-        QTensor { qtype: self.info().qtype, m: w.m, k: w.k, data, scale: w.scale }
+        let bounds = layout.sparse_bounds();
+        let sparse = sparse::maybe_index(&w.q, w.m, w.k, &bounds);
+        QTensor { qtype: self.info().qtype, m: w.m, k: w.k, data, scale: w.scale, sparse }
     }
 
     fn dequantize(&self, t: &QTensor) -> Vec<f32> {
@@ -227,6 +258,10 @@ impl<const LOSSLESS: bool> Kernel for Tl2Kernel<LOSSLESS> {
         simd::KERNEL_LEVELS
     }
 
+    fn sparse_capable(&self) -> bool {
+        true
+    }
+
     fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
         let layout = Tl2Layout::new(t.k);
         let row_bytes = layout.row_bytes();
@@ -235,6 +270,39 @@ impl<const LOSSLESS: bool> Kernel for Tl2Kernel<LOSSLESS> {
         match p {
             PreparedRow::LutI16 { tables, scale } => {
                 let combined = t.scale / scale;
+                if let Some(idx) = &t.sparse {
+                    #[cfg(target_arch = "x86_64")]
+                    if level == SimdLevel::Avx2 {
+                        // SAFETY: AVX2 verified by the active dispatch level;
+                        // buffer shapes are guaranteed by quantize/prepare.
+                        unsafe {
+                            simd::avx2::gemv_rows_tl2_i16_sparse(
+                                &t.data, &layout, tables, combined, out, rows, idx,
+                            );
+                        }
+                        return;
+                    }
+                    #[cfg(target_arch = "aarch64")]
+                    if level == SimdLevel::Neon {
+                        // SAFETY: NEON verified by the active dispatch level;
+                        // buffer shapes are guaranteed by quantize/prepare.
+                        unsafe {
+                            simd::neon::gemv_rows_tl2_i16_sparse(
+                                &t.data, &layout, tables, combined, out, rows, idx,
+                            );
+                        }
+                        return;
+                    }
+                    let mut elided = 0u64;
+                    for (o, r) in out.iter_mut().zip(rows) {
+                        let row = &t.data[r * row_bytes..(r + 1) * row_bytes];
+                        *o = gemv_row_tl2_i16_sparse(row, &layout, tables, idx, r, &mut elided)
+                            as f32
+                            * combined;
+                    }
+                    sparse::note_elided(level, elided);
+                    return;
+                }
                 #[cfg(target_arch = "x86_64")]
                 if level == SimdLevel::Avx2 {
                     // SAFETY: AVX2 verified by the active dispatch level;
@@ -260,6 +328,62 @@ impl<const LOSSLESS: bool> Kernel for Tl2Kernel<LOSSLESS> {
             }
             PreparedRow::LutI8 { tables, block_scales, block_groups, scale } => {
                 let combined = t.scale / scale;
+                if let Some(idx) = &t.sparse {
+                    #[cfg(target_arch = "x86_64")]
+                    if level == SimdLevel::Avx2 {
+                        // SAFETY: AVX2 verified by the active dispatch level;
+                        // buffer shapes are guaranteed by quantize/prepare.
+                        unsafe {
+                            simd::avx2::gemv_rows_tl2_i8_sparse(
+                                &t.data,
+                                &layout,
+                                tables,
+                                block_scales,
+                                block_groups,
+                                combined,
+                                out,
+                                rows,
+                                idx,
+                            );
+                        }
+                        return;
+                    }
+                    #[cfg(target_arch = "aarch64")]
+                    if level == SimdLevel::Neon {
+                        // SAFETY: NEON verified by the active dispatch level;
+                        // buffer shapes are guaranteed by quantize/prepare.
+                        unsafe {
+                            simd::neon::gemv_rows_tl2_i8_sparse(
+                                &t.data,
+                                &layout,
+                                tables,
+                                block_scales,
+                                block_groups,
+                                combined,
+                                out,
+                                rows,
+                                idx,
+                            );
+                        }
+                        return;
+                    }
+                    let mut elided = 0u64;
+                    for (o, r) in out.iter_mut().zip(rows) {
+                        let row = &t.data[r * row_bytes..(r + 1) * row_bytes];
+                        *o = gemv_row_tl2_i8_sparse(
+                            row,
+                            &layout,
+                            tables,
+                            block_scales,
+                            block_groups,
+                            idx,
+                            r,
+                            &mut elided,
+                        ) * combined;
+                    }
+                    sparse::note_elided(level, elided);
+                    return;
+                }
                 #[cfg(target_arch = "x86_64")]
                 if level == SimdLevel::Avx2 {
                     // SAFETY: AVX2 verified by the active dispatch level;
@@ -420,6 +544,111 @@ pub fn gemv_row_tl2_i8(
         }
     }
     if in_blk > 0 {
+        facc += acc as f32 * block_scales[blk];
+    }
+    facc
+}
+
+/// Accumulate one unified group (g=3 region or TL1 tail) of a TL2 row
+/// into `acc` — the group-addressed body shared by the sparse walkers.
+/// Generic over the table element so the i16 and i8 variants share it.
+#[inline(always)]
+fn tl2_group_acc<T: Copy + Into<i32>>(
+    g: usize,
+    n3: usize,
+    idx_plane: &[u8],
+    sign_plane: &[u8],
+    tl1_tail: &[u8],
+    tables: &[T],
+    acc: &mut i32,
+) {
+    if g < n3 {
+        // SAFETY: the layout sizes the planes for n3 groups (2 per index
+        // byte, 8 per sign byte), tables holds one LUT_W-entry table per
+        // group, and nibble codes are < LUT_W.
+        let byte = unsafe { *idx_plane.get_unchecked(g / 2) };
+        let nib = if g % 2 == 0 { byte & 0xf } else { byte >> 4 };
+        // SAFETY: as above.
+        let sign = (unsafe { *sign_plane.get_unchecked(g / 8) } >> (g % 8)) & 1;
+        // SAFETY: as above.
+        let v: i32 = unsafe { *tables.get_unchecked(g * LUT_W + nib as usize) }.into();
+        *acc += sign_apply_i32(v, sign);
+    } else {
+        let tg = g - n3;
+        // SAFETY: the tail holds n2 groups (2 per byte) with one
+        // LUT_W-entry table per group after the n3 g=3 tables.
+        let byte = unsafe { *tl1_tail.get_unchecked(tg / 2) };
+        let nib = if tg % 2 == 0 { byte & 0xf } else { byte >> 4 };
+        // SAFETY: as above.
+        *acc += unsafe { *tables.get_unchecked(g * LUT_W + nib as usize) }.into();
+    }
+}
+
+/// Sparse [`gemv_row_tl2_i16`]: blocks stride the unified group sequence
+/// (see [`Tl2Layout::sparse_bounds`]); a skipped block's groups all hold
+/// the zero code, whose table entry is exactly 0 under either sign, so
+/// the i32 accumulator stays bit-identical to the dense dual-accumulator
+/// schedule (integer addition is order-free).
+#[inline]
+pub fn gemv_row_tl2_i16_sparse(
+    row: &[u8],
+    layout: &Tl2Layout,
+    tables: &[i16],
+    sidx: &sparse::SparseIndex,
+    wr: usize,
+    elided: &mut u64,
+) -> i32 {
+    let (idx_plane, rest) = row.split_at(layout.idx_bytes);
+    let (sign_plane, tl1_tail) = rest.split_at(layout.sign_bytes);
+    let n3 = layout.n3();
+    let groups = n3 + layout.n2();
+    let mut acc = 0i32;
+    for blk in 0..sidx.blocks_per_row() {
+        if !sidx.is_nonzero(wr, blk) {
+            *elided += 1;
+            continue;
+        }
+        let g0 = blk * LUT_BLOCK_GROUPS;
+        let g1 = (g0 + LUT_BLOCK_GROUPS).min(groups);
+        for g in g0..g1 {
+            tl2_group_acc(g, n3, idx_plane, sign_plane, tl1_tail, tables, &mut acc);
+        }
+    }
+    acc
+}
+
+/// Sparse [`gemv_row_tl2_i8`]: the elision block *is* the requantization
+/// scale block, so a skipped block also skips its `0 · block_scale`
+/// fold (`+0.0`, bit-safe — block scales are non-negative and the f32
+/// accumulator is never `-0.0`).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn gemv_row_tl2_i8_sparse(
+    row: &[u8],
+    layout: &Tl2Layout,
+    tables: &[i8],
+    block_scales: &[f32],
+    block_groups: usize,
+    sidx: &sparse::SparseIndex,
+    wr: usize,
+    elided: &mut u64,
+) -> f32 {
+    let (idx_plane, rest) = row.split_at(layout.idx_bytes);
+    let (sign_plane, tl1_tail) = rest.split_at(layout.sign_bytes);
+    let n3 = layout.n3();
+    let groups = n3 + layout.n2();
+    let mut facc = 0f32;
+    for blk in 0..sidx.blocks_per_row() {
+        if !sidx.is_nonzero(wr, blk) {
+            *elided += 1;
+            continue;
+        }
+        let g0 = blk * block_groups;
+        let g1 = (g0 + block_groups).min(groups);
+        let mut acc = 0i32;
+        for g in g0..g1 {
+            tl2_group_acc(g, n3, idx_plane, sign_plane, tl1_tail, tables, &mut acc);
+        }
         facc += acc as f32 * block_scales[blk];
     }
     facc

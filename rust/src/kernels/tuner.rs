@@ -25,8 +25,9 @@
 #![deny(missing_docs)]
 
 use super::simd::{self, SimdLevel};
+use super::sparse::{self, SparseMode};
 use super::{kernel_for, QuantType};
-use crate::perf::calibrate::{calibrate_kernel_shape, KernelRate};
+use crate::perf::calibrate::{calibrate_kernel_shape, calibrate_kernel_shape_sparse, KernelRate};
 use crate::threadpool::ThreadPool;
 use crate::util::Json;
 use anyhow::{bail, Context, Result};
@@ -39,14 +40,17 @@ use std::sync::Mutex;
 /// (bump on breaking schema changes). Older versions in
 /// [`SUPPORTED_PROFILE_VERSIONS`] still load, with the fields they lack
 /// defaulting to empty — see `docs/tuning.md` for the migration table.
-pub const PROFILE_VERSION: u64 = 3;
+pub const PROFILE_VERSION: u64 = 4;
 
 /// Profile versions [`TuningProfile::from_json`] accepts. v1 files (PR 1)
 /// carry only the per-shape `entries`; v2 adds optional `overrides` and
 /// `e2e` sections; v3 records the SIMD level each measurement ran at and
 /// the level the per-shape winner used (older files load with every
-/// level defaulting to `scalar`).
-pub const SUPPORTED_PROFILE_VERSIONS: [u64; 3] = [1, 2, 3];
+/// level defaulting to `scalar`); v4 records whether each measurement ran
+/// the block-skip sparse layout and whether the per-shape winner did
+/// (older files load with `sparse`/`best_sparse` defaulting to false —
+/// every pre-v4 measurement was dense by construction).
+pub const SUPPORTED_PROFILE_VERSIONS: [u64; 4] = [1, 2, 3, 4];
 
 /// The projection a ternary matmul serves inside a transformer layer —
 /// the per-layer dispatch key alongside the (m, k, n) shape. `Qkv`
@@ -124,6 +128,12 @@ pub struct Measurement {
     /// The SIMD dispatch level the kernel ran at (v3 profiles; older
     /// files load as `scalar`).
     pub simd: SimdLevel,
+    /// Whether the kernel ran its block-skip sparse layout on the
+    /// calibration tensor (v4 profiles; older files load as false).
+    /// Sparse measurements use a ~60%-zero-block synthetic tensor, so
+    /// they record what the kernel does when elision has real work to
+    /// skip — see `docs/tuning.md`.
+    pub sparse: bool,
     /// Mean wall time of one matmul call, microseconds.
     pub us_per_matmul: f64,
     /// Weights streamed per second (`m·k / secs_per_call`), in units of
@@ -152,6 +162,11 @@ pub struct TuningEntry {
     /// The SIMD level `best` won at. Selection degrades when the serving
     /// host can't run it — see [`TuningProfile::select_traced`].
     pub best_simd: SimdLevel,
+    /// Whether `best` won on its block-skip sparse layout. Selection
+    /// degrades when sparse packing is disabled on the serving host
+    /// (`RUST_PALLAS_SPARSE=off` / `--sparse off`) — see
+    /// [`TuningProfile::select_traced`].
+    pub best_sparse: bool,
     /// All measurements, fastest first (kept for inspection/debugging).
     pub measurements: Vec<Measurement>,
 }
@@ -229,12 +244,16 @@ impl TuningProfile {
     /// surfacing — see [`DispatchPlan`]) **or** degraded because the
     /// entry's winner was measured at a SIMD level this host cannot run
     /// (a profile tuned on an AVX2 box loaded on a machine without it,
-    /// or under a forced `--simd scalar`). A degraded entry re-ranks to
-    /// the fastest of its measurements taken at a usable level, keeping
-    /// the choice measured rather than guessed; it falls back to the
-    /// recorded winner's kernel only when no usable measurement exists
+    /// or under a forced `--simd scalar`), **or** because the winner was
+    /// measured on its block-skip sparse layout but sparse packing is
+    /// disabled here (`RUST_PALLAS_SPARSE=off` / `--sparse off` — no
+    /// tensor will carry the index the winner was tuned with). A
+    /// degraded entry re-ranks to the fastest of its measurements that
+    /// are both usable (SIMD) and runnable (dense when sparse is off),
+    /// keeping the choice measured rather than guessed; it falls back to
+    /// the recorded winner's kernel only when no such measurement exists
     /// (hand-edited profiles) — the kernel itself still runs, just on
-    /// its scalar path.
+    /// its scalar/dense path.
     pub fn select_traced(&self, m: usize, k: usize, n: usize) -> (QuantType, bool) {
         let mut below: Option<&TuningEntry> = None;
         let mut above: Option<&TuningEntry> = None;
@@ -249,13 +268,14 @@ impl TuningProfile {
         }
         match below.or(above) {
             Some(e) => {
-                if simd::usable(e.best_simd) {
+                let sparse_ok = !e.best_sparse || sparse::enabled();
+                if simd::usable(e.best_simd) && sparse_ok {
                     (e.best, false)
                 } else {
                     let degraded = e
                         .measurements
                         .iter()
-                        .filter(|m| simd::usable(m.simd))
+                        .filter(|m| simd::usable(m.simd) && (!m.sparse || sparse::enabled()))
                         .min_by(|a, b| {
                             a.us_per_matmul.partial_cmp(&b.us_per_matmul).expect("finite")
                         })
@@ -310,6 +330,7 @@ impl TuningProfile {
                         Json::Obj(vec![
                             ("kernel".into(), Json::Str(m.qtype.name().into())),
                             ("simd".into(), Json::Str(m.simd.name().into())),
+                            ("sparse".into(), Json::Bool(m.sparse)),
                             ("us_per_matmul".into(), Json::Num(m.us_per_matmul)),
                             ("gweights_per_s".into(), Json::Num(m.gweights_per_s)),
                         ])
@@ -322,6 +343,7 @@ impl TuningProfile {
                     ("weight".into(), Json::Num(e.weight)),
                     ("best".into(), Json::Str(e.best.name().into())),
                     ("best_simd".into(), Json::Str(e.best_simd.name().into())),
+                    ("best_sparse".into(), Json::Bool(e.best_sparse)),
                     ("measurements".into(), Json::Arr(ms)),
                 ])
             })
@@ -406,6 +428,9 @@ impl TuningProfile {
                     measurements.push(Measurement {
                         qtype: parse_qtype(kname)?,
                         simd: parse_simd(m.get("simd").and_then(Json::as_str), i)?,
+                        // Optional field: pre-v4 measurements were all
+                        // dense.
+                        sparse: m.get("sparse").and_then(Json::as_bool).unwrap_or(false),
                         us_per_matmul: us,
                         gweights_per_s: gw,
                     });
@@ -420,6 +445,8 @@ impl TuningProfile {
                 weight: e.get("weight").and_then(Json::as_f64).unwrap_or(1.0),
                 best,
                 best_simd: parse_simd(e.get("best_simd").and_then(Json::as_str), i)?,
+                // Optional field: pre-v4 winners were all dense.
+                best_sparse: e.get("best_sparse").and_then(Json::as_bool).unwrap_or(false),
                 measurements,
             });
         }
@@ -782,29 +809,74 @@ pub fn tune(cfg: &TuneConfig, mut progress: Option<&mut dyn FnMut(&str)>) -> Tun
                 // scalar row is what profile degradation falls back to
                 // on hosts that lack the winning vector tier.
                 let kernel_levels = kern.simd_levels();
+                // A kernel with a block-skip layout is additionally
+                // measured on a ~60%-zero-block synthetic tensor with
+                // sparse packing forced on — the sparse-vs-dense choice
+                // is a measured dispatch dimension, not a guess. Skipped
+                // entirely when sparse packing is disabled on this host
+                // (the measurement could never be served).
+                let sparse_variants: &[bool] = if kern.sparse_capable() && sparse::enabled() {
+                    &[false, true]
+                } else {
+                    &[false]
+                };
                 for level in simd::available_levels() {
                     if !kernel_levels.contains(&level) {
                         continue;
                     }
-                    let rate: KernelRate = simd::with_level(level, || {
-                        calibrate_kernel_shape(qt, m, k, n, &pool, cfg.min_iters, cfg.min_seconds)
-                    });
-                    let meas = Measurement {
-                        qtype: qt,
-                        simd: level,
-                        us_per_matmul: rate.secs_per_matmul(m, k) * 1e6,
-                        gweights_per_s: rate.weights_per_s / 1e9,
-                    };
-                    if let Some(p) = progress.as_mut() {
-                        p(&format!(
-                            "tune {m}x{k} n={n} {:<9} [{:<6}] {:>10.1} µs/matmul ({:.2} Gw/s)",
-                            qt.name(),
-                            level.name(),
-                            meas.us_per_matmul,
-                            meas.gweights_per_s
-                        ));
+                    for &sp in sparse_variants {
+                        // Lock ordering: sparse mode outside, SIMD level
+                        // inside (matches the kernel test suite).
+                        let rate: KernelRate = if sp {
+                            sparse::with_mode(SparseMode::On, || {
+                                simd::with_level(level, || {
+                                    calibrate_kernel_shape_sparse(
+                                        qt,
+                                        m,
+                                        k,
+                                        n,
+                                        &pool,
+                                        cfg.min_iters,
+                                        cfg.min_seconds,
+                                    )
+                                })
+                            })
+                        } else {
+                            // Forced dense so a process-wide `on` mode
+                            // can't silently turn this row sparse.
+                            sparse::with_mode(SparseMode::Off, || {
+                                simd::with_level(level, || {
+                                    calibrate_kernel_shape(
+                                        qt,
+                                        m,
+                                        k,
+                                        n,
+                                        &pool,
+                                        cfg.min_iters,
+                                        cfg.min_seconds,
+                                    )
+                                })
+                            })
+                        };
+                        let meas = Measurement {
+                            qtype: qt,
+                            simd: level,
+                            sparse: sp,
+                            us_per_matmul: rate.secs_per_matmul(m, k) * 1e6,
+                            gweights_per_s: rate.weights_per_s / 1e9,
+                        };
+                        if let Some(p) = progress.as_mut() {
+                            p(&format!(
+                                "tune {m}x{k} n={n} {:<9} [{:<6}]{} {:>10.1} µs/matmul ({:.2} Gw/s)",
+                                qt.name(),
+                                level.name(),
+                                if sp { " sparse" } else { "       " },
+                                meas.us_per_matmul,
+                                meas.gweights_per_s
+                            ));
+                        }
+                        measurements.push(meas);
                     }
-                    measurements.push(meas);
                 }
             }
             if measurements.is_empty() {
@@ -814,22 +886,28 @@ pub fn tune(cfg: &TuneConfig, mut progress: Option<&mut dyn FnMut(&str)>) -> Tun
                 .sort_by(|a, b| a.us_per_matmul.partial_cmp(&b.us_per_matmul).expect("finite"));
             let best = measurements[0].qtype;
             let best_simd = measurements[0].simd;
+            let best_sparse = measurements[0].sparse;
             if let Some(p) = progress.as_mut() {
                 // Weighted (trace-driven) sweeps annotate each winner
                 // with its traffic share — even a single-width trace
                 // whose share is exactly 100%.
+                let sparse_tag = if best_sparse { " sparse" } else { "" };
                 if cfg.batch_weights.is_empty() {
-                    p(&format!("tune {m}x{k} n={n} -> best {} [{}]", best.name(), best_simd.name()));
+                    p(&format!(
+                        "tune {m}x{k} n={n} -> best {} [{}]{sparse_tag}",
+                        best.name(),
+                        best_simd.name()
+                    ));
                 } else {
                     p(&format!(
-                        "tune {m}x{k} n={n} -> best {} [{}] ({:.1}% of traced traffic)",
+                        "tune {m}x{k} n={n} -> best {} [{}]{sparse_tag} ({:.1}% of traced traffic)",
                         best.name(),
                         best_simd.name(),
                         weight * 100.0
                     ));
                 }
             }
-            entries.push(TuningEntry { m, k, n, weight, best, best_simd, measurements });
+            entries.push(TuningEntry { m, k, n, weight, best, best_simd, best_sparse, measurements });
         }
     }
     TuningProfile {
@@ -1282,6 +1360,7 @@ mod tests {
             weight: 1.0,
             best,
             best_simd: SimdLevel::Scalar,
+            best_sparse: false,
             measurements: Vec::new(),
         }
     }
@@ -1328,16 +1407,19 @@ mod tests {
                 weight: 0.625,
                 best: QuantType::Tl21,
                 best_simd: SimdLevel::Avx2,
+                best_sparse: true,
                 measurements: vec![
                     Measurement {
                         qtype: QuantType::Tl21,
                         simd: SimdLevel::Avx2,
+                        sparse: true,
                         us_per_matmul: 12.5,
                         gweights_per_s: 15.7,
                     },
                     Measurement {
                         qtype: QuantType::I2S,
                         simd: SimdLevel::Scalar,
+                        sparse: false,
                         us_per_matmul: 14.0,
                         gweights_per_s: 14.0,
                     },
@@ -1439,18 +1521,21 @@ mod tests {
             Measurement {
                 qtype: QuantType::Tl11,
                 simd: SimdLevel::Avx2,
+                sparse: false,
                 us_per_matmul: 10.0,
                 gweights_per_s: 20.0,
             },
             Measurement {
                 qtype: QuantType::Tq20,
                 simd: SimdLevel::Scalar,
+                sparse: false,
                 us_per_matmul: 15.0,
                 gweights_per_s: 13.0,
             },
             Measurement {
                 qtype: QuantType::Tl11,
                 simd: SimdLevel::Scalar,
+                sparse: false,
                 us_per_matmul: 18.0,
                 gweights_per_s: 11.0,
             },
@@ -1480,12 +1565,53 @@ mod tests {
     }
 
     #[test]
+    fn sparse_winner_degrades_when_sparse_packing_is_off() {
+        let mut e = entry(256, 256, 1, QuantType::Tl10);
+        e.best_sparse = true;
+        e.measurements = vec![
+            Measurement {
+                qtype: QuantType::Tl10,
+                simd: SimdLevel::Scalar,
+                sparse: true,
+                us_per_matmul: 8.0,
+                gweights_per_s: 25.0,
+            },
+            Measurement {
+                qtype: QuantType::I2S,
+                simd: SimdLevel::Scalar,
+                sparse: false,
+                us_per_matmul: 12.0,
+                gweights_per_s: 16.0,
+            },
+            Measurement {
+                qtype: QuantType::Tl10,
+                simd: SimdLevel::Scalar,
+                sparse: false,
+                us_per_matmul: 14.0,
+                gweights_per_s: 14.0,
+            },
+        ];
+        let p = TuningProfile { entries: vec![e], ..TuningProfile::empty(QuantType::Tl20, 1) };
+        // Sparse packing enabled: the sparse-tuned winner is served.
+        sparse::with_mode(SparseMode::On, || {
+            assert_eq!(p.select_traced(256, 256, 1), (QuantType::Tl10, false));
+        });
+        // Sparse packing disabled: no tensor carries the block-skip
+        // index the winner was tuned with, so resolution re-ranks to the
+        // fastest dense measurement and reports the degrade.
+        sparse::with_mode(SparseMode::Off, || {
+            assert_eq!(p.select_traced(256, 256, 1), (QuantType::I2S, true));
+        });
+    }
+
+    #[test]
     fn dispatch_plan_counts_simd_degrades_as_fallbacks() {
         let mut e = entry(256, 256, 1, QuantType::Tl11);
         e.best_simd = SimdLevel::Avx2;
         e.measurements = vec![Measurement {
             qtype: QuantType::I2S,
             simd: SimdLevel::Scalar,
+            sparse: false,
             us_per_matmul: 15.0,
             gweights_per_s: 13.0,
         }];
@@ -1514,16 +1640,37 @@ mod tests {
         assert_eq!(profile.entries.len(), 1);
         let e = &profile.entries[0];
         // Every measurement ran at a level the kernel implements, at
-        // most once per level, and the recorded winner is the fastest.
+        // most once per (level, sparse) variant, and the recorded winner
+        // is the fastest.
         assert!(!e.measurements.is_empty());
         let kern_levels = kernel_for(QuantType::I2S).simd_levels();
-        let mut seen: Vec<SimdLevel> = Vec::new();
+        let mut seen: Vec<(SimdLevel, bool)> = Vec::new();
         for m in &e.measurements {
             assert!(kern_levels.contains(&m.simd));
-            assert!(!seen.contains(&m.simd), "duplicate level {:?}", m.simd);
-            seen.push(m.simd);
+            assert!(
+                !seen.contains(&(m.simd, m.sparse)),
+                "duplicate variant {:?} sparse={}",
+                m.simd,
+                m.sparse
+            );
+            seen.push((m.simd, m.sparse));
         }
-        assert_eq!((e.best, e.best_simd), (e.measurements[0].qtype, e.measurements[0].simd));
+        // A dense row always exists, and every sparse row is paired with
+        // a dense row at the same level. (Whether sparse rows exist at
+        // all depends on the process-wide sparse mode, which concurrent
+        // `with_mode` tests may be forcing — don't re-read it here.)
+        assert!(e.measurements.iter().any(|m| !m.sparse));
+        for m in e.measurements.iter().filter(|m| m.sparse) {
+            assert!(
+                e.measurements.iter().any(|d| d.simd == m.simd && !d.sparse),
+                "sparse measurement at {:?} lacks its dense counterpart",
+                m.simd
+            );
+        }
+        assert_eq!(
+            (e.best, e.best_simd, e.best_sparse),
+            (e.measurements[0].qtype, e.measurements[0].simd, e.measurements[0].sparse)
+        );
         // The profile round-trips with the level fields intact.
         let back = TuningProfile::from_json(&profile.to_json()).unwrap();
         assert_eq!(back, profile);

@@ -18,7 +18,10 @@ use bitnet::config::{Config, LaunchConfig};
 use bitnet::coordinator::trace::DRIFT_WARN_L1;
 use bitnet::coordinator::{Engine, EngineConfig, KvDtype, Request, ServingTrace};
 use bitnet::kernels::tuner::{self, OverrideSearchConfig, TuneConfig, TuningProfile};
-use bitnet::kernels::{library_table, simd, Dispatch, DispatchPlan, QuantType, SimdLevel};
+use bitnet::kernels::{
+    library_table, simd, sparse, Dispatch, DispatchPlan, QuantType, SimdLevel,
+};
+use bitnet::kernels::sparse::SparseMode;
 use bitnet::model::{ModelConfig, SamplingParams, Transformer};
 use bitnet::model::weights::Checkpoint;
 use bitnet::tokenizer::{synthetic_corpus, Tokenizer};
@@ -79,7 +82,15 @@ const USAGE: &str = "usage: bitnet <info|gen-model|run|serve|tune|pjrt> [options
   every usable tier and records the winner's tier in the profile, and
   profiles tuned with a vector winner degrade to their fastest usable
   measurement on hosts without it (counted in dispatch fallbacks).
-  RUST_PALLAS_SIMD=<tier> is the env equivalent (tests/CI).";
+  RUST_PALLAS_SIMD=<tier> is the env equivalent (tests/CI).
+
+  --sparse auto|on|off (any subcommand) controls the block-skip sparse
+  layout the ternary kernels emit at pack time: `auto` (the default)
+  measures each tensor's zero-block fraction and packs sparse past the
+  threshold, `on` forces the layout, `off` packs everything dense.
+  Sparse and dense results are bit-identical; elided-block counts per
+  SIMD tier appear in the engine metrics and under `run --verbose`.
+  RUST_PALLAS_SPARSE=<mode> is the env equivalent (tests/CI).";
 
 fn run() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1), &["help", "verbose", "e2e", "search-overrides"])?;
@@ -104,6 +115,13 @@ fn run() -> Result<()> {
                 );
             }
         }
+    }
+    // Pick the sparse packing mode before any tensor packs (overrides
+    // the RUST_PALLAS_SPARSE env default).
+    if let Some(s) = args.get("sparse") {
+        let mode = SparseMode::parse(s)
+            .with_context(|| format!("unknown --sparse mode {s:?} (expected auto, on or off)"))?;
+        sparse::set_mode(mode);
     }
     match args.subcommand.as_deref().unwrap() {
         "info" => cmd_info(),
@@ -328,6 +346,17 @@ fn cmd_run(args: &Args) -> Result<()> {
             session.held_pages(),
             session.kv_bytes(),
             kv_dtype.name()
+        );
+        // Block-skip elision: weight blocks the sparse layout skipped,
+        // per SIMD tier. All zeros = every tensor packed dense (iid
+        // ternary under --sparse auto, or a forced off).
+        let el = sparse::elided_counts();
+        eprintln!(
+            "sparse ({}): elided blocks scalar/avx2/neon {}/{}/{}",
+            sparse::mode().name(),
+            el[0],
+            el[1],
+            el[2]
         );
     }
     // The shape histogram this run exhibited: one prefill chunk of the

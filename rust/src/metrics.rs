@@ -142,6 +142,12 @@ pub struct EngineMetrics {
     /// `[scalar, avx2, neon]`. Mirrored from the kernel layer's global
     /// counters, so the numbers are process-wide, not per engine.
     pub simd_calls: [AtomicU64; 3],
+    /// Cumulative weight blocks elided by the block-skip sparse layout,
+    /// per SIMD tier, indexed `[scalar, avx2, neon]`. Mirrored from
+    /// `crate::kernels::sparse::elided_counts` like `simd_calls` —
+    /// zero everywhere means no tensor packed sparse (iid-dense weights
+    /// or a forced `--sparse off`).
+    pub sparse_elided: [AtomicU64; 3],
     pub step_latency: LatencyHistogram,
     pub ttft: LatencyHistogram,
 }
@@ -163,6 +169,15 @@ impl EngineMetrics {
         for (slot, c) in self.simd_calls.iter().zip(counts) {
             slot.store(c, Ordering::Relaxed);
         }
+        let elided = crate::kernels::sparse::elided_counts();
+        for (slot, c) in self.sparse_elided.iter().zip(elided) {
+            slot.store(c, Ordering::Relaxed);
+        }
+    }
+
+    /// Total elided weight blocks across SIMD tiers (mirrored state).
+    pub fn sparse_elided_total(&self) -> u64 {
+        self.sparse_elided.iter().map(|c| c.load(Ordering::Relaxed)).sum()
     }
 
     /// The mirrored SIMD tier's display name (see [`EngineMetrics::mirror_simd`]).
@@ -186,7 +201,7 @@ impl EngineMetrics {
     /// Human-readable one-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "req {}/{} done, {} rejected | tokens {}+{} | steps {} (mean batch {:.2}, peak {}) | step mean {:.1}µs p99 {}µs | ttft mean {:.1}µs | dispatch fallbacks {} degraded {} | simd {} (calls scalar/avx2/neon {}/{}/{}) | prepare {} hits / {} misses (buffers {} reused, {} alloc'd) | trace {} steps / {} shapes | kv {}/{} pages (peak {}) {} KiB resident, {} preemptions",
+            "req {}/{} done, {} rejected | tokens {}+{} | steps {} (mean batch {:.2}, peak {}) | step mean {:.1}µs p99 {}µs | ttft mean {:.1}µs | dispatch fallbacks {} degraded {} | simd {} (calls scalar/avx2/neon {}/{}/{}) | sparse elided scalar/avx2/neon {}/{}/{} | prepare {} hits / {} misses (buffers {} reused, {} alloc'd) | trace {} steps / {} shapes | kv {}/{} pages (peak {}) {} KiB resident, {} preemptions",
             self.requests_completed.load(Ordering::Relaxed),
             self.requests_submitted.load(Ordering::Relaxed),
             self.requests_rejected.load(Ordering::Relaxed),
@@ -204,6 +219,9 @@ impl EngineMetrics {
             self.simd_calls[0].load(Ordering::Relaxed),
             self.simd_calls[1].load(Ordering::Relaxed),
             self.simd_calls[2].load(Ordering::Relaxed),
+            self.sparse_elided[0].load(Ordering::Relaxed),
+            self.sparse_elided[1].load(Ordering::Relaxed),
+            self.sparse_elided[2].load(Ordering::Relaxed),
             self.prepare_cache_hits.load(Ordering::Relaxed),
             self.prepare_cache_misses.load(Ordering::Relaxed),
             self.prepare_buffer_reuses.load(Ordering::Relaxed),
@@ -253,6 +271,18 @@ mod tests {
         assert!(["scalar", "avx2", "neon"].contains(&m.simd_level_name()));
         // The summary line renders the mirrored state.
         assert!(m.summary().contains("simd "));
+        assert!(m.summary().contains("sparse elided "));
+    }
+
+    #[test]
+    fn sparse_elided_mirror_tracks_kernel_counters() {
+        use crate::kernels::{sparse, SimdLevel};
+        let m = EngineMetrics::new();
+        m.mirror_simd();
+        let before = m.sparse_elided_total();
+        sparse::note_elided(SimdLevel::Scalar, 7);
+        m.mirror_simd();
+        assert!(m.sparse_elided_total() >= before + 7);
     }
 
     #[test]

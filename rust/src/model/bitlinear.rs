@@ -39,6 +39,11 @@ pub struct BitLinear {
     /// The absmean weight scale of the source tensor, kept so alternates
     /// repack with exactly the scale the primary was packed with.
     weight_scale: f32,
+    /// Zero-weight fraction of the source ternary tensor, measured once
+    /// at pack time (the sparsity observability hook — ternary BitNet
+    /// weights are ~1/3 exact zeros, but only *block-structured* zeros
+    /// let the kernels elide work).
+    pub zero_fraction: f64,
     /// Output features (rows).
     pub m: usize,
     /// Input features (cols).
@@ -63,9 +68,24 @@ impl BitLinear {
             kernel,
             alternates: RwLock::new(Vec::new()),
             weight_scale: w.scale,
+            zero_fraction: crate::kernels::sparse::zero_fraction(&w.q),
             m: w.m,
             k: w.k,
         }
+    }
+
+    /// Whether the primary packing carries the block-skip sparse layout
+    /// (pack-time decision: [`crate::kernels::sparse::SparseMode`] and,
+    /// under `Auto`, the measured zero-*block* fraction against
+    /// [`crate::kernels::sparse::SPARSE_THRESHOLD`]).
+    pub fn sparse_layout(&self) -> bool {
+        self.qtensor.sparse.is_some()
+    }
+
+    /// The zero-block fraction the primary packing's sparse index
+    /// measured, `None` when it packed dense.
+    pub fn zero_block_fraction(&self) -> Option<f64> {
+        self.qtensor.sparse.as_ref().map(|s| s.zero_block_fraction())
     }
 
     /// Pack ternary weights with the kernel a [`Dispatch`] policy selects
@@ -320,6 +340,7 @@ mod tests {
             weight: 1.0,
             best: QuantType::Tl21,
             best_simd: crate::kernels::SimdLevel::Scalar,
+            best_sparse: false,
             measurements: Vec::new(),
         });
         let auto = BitLinear::from_dispatch(&w, &Dispatch::Auto(profile));
@@ -384,6 +405,31 @@ mod tests {
         let ran = layer.forward_batch_with(QuantType::Tq20, &x, 1, &mut out, &pool);
         assert_eq!(ran, QuantType::I2S);
         assert_eq!(layer.packed_kernels(), vec![QuantType::I2S]);
+    }
+
+    #[test]
+    fn sparsity_is_measured_and_iid_stays_dense() {
+        use crate::kernels::sparse::{self, SparseMode};
+        let (m, k) = (8, 256);
+        let w = random_ternary(m, k, 30);
+        sparse::with_mode(SparseMode::Auto, || {
+            let layer = BitLinear::new(&w, QuantType::I2S);
+            // iid ternary is ~1/3 zeros by weight…
+            assert!(
+                layer.zero_fraction > 0.1 && layer.zero_fraction < 0.6,
+                "{}",
+                layer.zero_fraction
+            );
+            // …but essentially never forms a whole zero block, so the
+            // pack-time decision keeps the dense layout automatically.
+            assert!(!layer.sparse_layout());
+            assert_eq!(layer.zero_block_fraction(), None);
+        });
+        sparse::with_mode(SparseMode::On, || {
+            let forced = BitLinear::new(&w, QuantType::I2S);
+            assert!(forced.sparse_layout());
+            assert_eq!(forced.zero_block_fraction(), Some(0.0));
+        });
     }
 
     #[test]

@@ -424,6 +424,30 @@ impl Transformer {
                 cur = next;
             }
         }
+        // Pack-time sparsity: measured weight-level zero fraction
+        // (weighted by parameter count) and how many projections' primary
+        // packing carries the block-skip layout.
+        let mut weights = 0f64;
+        let mut zeros = 0f64;
+        let mut sparse_ct = 0usize;
+        let mut total = 0usize;
+        for layer in &self.layers {
+            for (_, lin) in Self::role_layers(layer) {
+                let params = (lin.m * lin.k) as f64;
+                weights += params;
+                zeros += params * lin.zero_fraction;
+                total += 1;
+                if lin.sparse_layout() {
+                    sparse_ct += 1;
+                }
+            }
+        }
+        if weights > 0.0 {
+            out.push(format!(
+                "sparsity: {:.1}% zero weights; block-skip layout on {sparse_ct}/{total} projections",
+                100.0 * zeros / weights
+            ));
+        }
         out
     }
 

@@ -76,9 +76,65 @@ pub fn calibrate_kernel_shape(
     min_iters: usize,
     min_seconds: f64,
 ) -> KernelRate {
-    let kern = kernel_for(qtype);
     let mut rng = Rng::new(0xCA11);
     let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+    calibrate_with_weights(qtype, q, m, k, n, pool, min_iters, min_seconds)
+}
+
+/// [`calibrate_kernel_shape`] on a *block-sparse* synthetic tensor: whole
+/// column stripes are zeroed (the same columns across every row, ~60% of
+/// the columns) so the kernel's block-skip layout has real blocks to
+/// elide — iid ternary essentially never forms a whole zero block, so
+/// the dense calibration tensor measures only the sparse path's
+/// overhead, never its savings. Stripes are 384 columns wide where `k`
+/// allows (384 is a common multiple of every kernel's block span: 64 for
+/// TL1/ELUT, 128 for I2_S, 96 for TL2's three-weight region), narrowing
+/// for small `k` so the pattern still alternates. The caller decides the
+/// packing mode (the tuner forces [`crate::kernels::sparse::SparseMode::On`]
+/// around this call).
+pub fn calibrate_kernel_shape_sparse(
+    qtype: QuantType,
+    m: usize,
+    k: usize,
+    n: usize,
+    pool: &ThreadPool,
+    min_iters: usize,
+    min_seconds: f64,
+) -> KernelRate {
+    let mut rng = Rng::new(0xCA11);
+    let stripe = [384usize, 128, 64].into_iter().find(|&s| k >= 5 * s).unwrap_or(64);
+    let q: Vec<i8> = (0..m * k)
+        .map(|i| {
+            // Stripe s is zeroed when s*3 mod 5 < 3: a period-5 pattern
+            // zeroing 3 of every 5 stripes (60%), interleaved so zero
+            // and nonzero stripes alternate rather than clump.
+            let s = (i % k) / stripe;
+            if s * 3 % 5 < 3 {
+                0
+            } else {
+                rng.next_ternary() as i8
+            }
+        })
+        .collect();
+    calibrate_with_weights(qtype, q, m, k, n, pool, min_iters, min_seconds)
+}
+
+/// Shared measurement body: pack `q` (an `m`×`k` ternary tensor) with
+/// `qtype` under the ambient sparse mode and time the prepare-amortized
+/// matmul loop.
+#[allow(clippy::too_many_arguments)]
+fn calibrate_with_weights(
+    qtype: QuantType,
+    q: Vec<i8>,
+    m: usize,
+    k: usize,
+    n: usize,
+    pool: &ThreadPool,
+    min_iters: usize,
+    min_seconds: f64,
+) -> KernelRate {
+    let kern = kernel_for(qtype);
+    let mut rng = Rng::new(0xAC71);
     let t = TernaryWeights::from_ternary(q, m, k, 0.05);
     let packed = kern.quantize(&t);
     let x: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
@@ -159,6 +215,24 @@ mod tests {
         assert!(r.weights_per_s.is_finite() && r.weights_per_s > 0.0, "{:?}", r);
         assert!(r.weight_bytes_per_s.is_finite() && r.weight_bytes_per_s > 0.0, "{:?}", r);
         assert!(r.secs_per_matmul(16, 128).is_finite());
+    }
+
+    #[test]
+    fn sparse_calibration_produces_sane_rates() {
+        use crate::kernels::sparse::{self, SparseMode};
+        let pool = ThreadPool::new(1);
+        // k = 1920 is the smallest k that keeps the full 384-column
+        // stripes; the mode is forced exactly as the tuner forces it.
+        let r = sparse::with_mode(SparseMode::On, || {
+            calibrate_kernel_shape_sparse(QuantType::I2S, 32, 1920, 1, &pool, 1, 0.0)
+        });
+        assert!(r.weights_per_s.is_finite() && r.weights_per_s > 0.0, "{:?}", r);
+        assert!((r.bpw - 2.0).abs() < 0.25, "{:?}", r);
+        // The forced-dense variant of the same tensor also measures.
+        let d = sparse::with_mode(SparseMode::Off, || {
+            calibrate_kernel_shape_sparse(QuantType::I2S, 32, 1920, 1, &pool, 1, 0.0)
+        });
+        assert!(d.weights_per_s.is_finite() && d.weights_per_s > 0.0, "{:?}", d);
     }
 
     #[test]

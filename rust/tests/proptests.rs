@@ -5,8 +5,9 @@
 use bitnet::coordinator::kv_pool::KvArena;
 use bitnet::coordinator::scheduler::{Phase, Scheduler, SeqState};
 use bitnet::kernels::quant::{quantize_act_int8, training_scheme_ref_row, TernaryWeights};
+use bitnet::kernels::sparse::{self, SparseMode};
 use bitnet::kernels::{
-    kernel_for, matmul_prepared, simd, PreparedActivations, QuantType, SimdLevel,
+    kernel_for, matmul_prepared, simd, Kernel, PreparedActivations, QTensor, QuantType, SimdLevel,
 };
 use bitnet::threadpool::ThreadPool;
 use bitnet::util::Rng;
@@ -172,6 +173,159 @@ fn prop_lossless_exact_through_vector_paths() {
                         out[r],
                         training_scheme_ref_row(t.row(r), t.scale, &act),
                         "{qt:?} trial {trial} row {r} at {}",
+                        level.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Batched matmul through the prepare-once path under a forced SIMD
+/// tier (the sparse invariants' shared runner).
+fn run_prepared(
+    kern: &'static dyn Kernel,
+    packed: &QTensor,
+    x: &[f32],
+    (m, k, n): (usize, usize, usize),
+    pool: &ThreadPool,
+    level: SimdLevel,
+) -> Vec<f32> {
+    simd::with_level(level, || {
+        let mut acts = PreparedActivations::new();
+        acts.begin_input();
+        let mut out = vec![0f32; n * m];
+        let batch = acts.get_or_prepare(kern, x, k, n, pool);
+        matmul_prepared(kern, packed, batch, x, n, &mut out, pool);
+        out
+    })
+}
+
+/// Invariant: the block-skip layout never changes a single output bit —
+/// sparse ≡ dense ≡ scalar across random block-zero patterns, shapes,
+/// batch widths, kernels, and SIMD tiers. Zeros come in 384-column
+/// stripes (a common multiple of every sparse kernel's block span: 64
+/// for TL1/ELUT, 128 for I2_S, 96 for TL2's trio region), the same
+/// columns in every row, so whole blocks actually elide in the vector
+/// tile paths too.
+#[test]
+fn prop_sparse_dense_equivalence_random_patterns() {
+    let mut rng = Rng::new(1000);
+    let pool = ThreadPool::new(2);
+    let levels = simd::available_levels();
+    for trial in 0..8 {
+        let m = 1 + rng.next_below(40);
+        let n = 1 + rng.next_below(4);
+        let stripes = 2 + rng.next_below(4);
+        let k = 384 * stripes;
+        let zero: Vec<bool> = (0..stripes).map(|_| rng.next_f32() < 0.6).collect();
+        let q: Vec<i8> = (0..m * k)
+            .map(|i| if zero[(i % k) / 384] { 0 } else { rng.next_ternary() as i8 })
+            .collect();
+        let t = TernaryWeights::from_ternary(q, m, k, 0.05);
+        let x: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+        for qt in QuantType::ALL {
+            let kern = kernel_for(qt);
+            if !kern.sparse_capable() {
+                continue;
+            }
+            let dense = sparse::with_mode(SparseMode::Off, || kern.quantize(&t));
+            let sp = sparse::with_mode(SparseMode::On, || kern.quantize(&t));
+            assert!(sp.sparse.is_some(), "{qt:?} trial {trial}: forced-on must attach the index");
+            let reference = run_prepared(kern, &dense, &x, (m, k, n), &pool, SimdLevel::Scalar);
+            for &level in &levels {
+                assert_eq!(
+                    run_prepared(kern, &dense, &x, (m, k, n), &pool, level),
+                    reference,
+                    "{qt:?} trial {trial} ({m},{k},{n}) dense at {}",
+                    level.name()
+                );
+                assert_eq!(
+                    run_prepared(kern, &sp, &x, (m, k, n), &pool, level),
+                    reference,
+                    "{qt:?} trial {trial} ({m},{k},{n}) at {}: sparse ≡ dense ≡ scalar",
+                    level.name()
+                );
+            }
+        }
+    }
+}
+
+/// Degenerate sparsity invariants: an all-zero tensor (every block
+/// elides), a zero-free tensor (nothing elides, `Auto` keeps it dense),
+/// and a single nonzero weight per 384-column stripe (almost every
+/// block elides; each surviving block holds exactly one nonzero). In
+/// every case the packed bytes dequantize exactly through *both*
+/// layouts and gemv stays bit-identical to the dense scalar reference
+/// at every tier.
+#[test]
+fn prop_degenerate_sparsity_layouts() {
+    let mut rng = Rng::new(1100);
+    let (m, k) = (9usize, 1152usize); // 3 stripes of 384
+    let stripes = k / 384;
+    let scale = bitnet::util::f16_to_f32(bitnet::util::f32_to_f16(0.05));
+    for trial in 0..4 {
+        // One nonzero column per stripe, shared by every row.
+        let cols: Vec<usize> =
+            (0..stripes).map(|s| s * 384 + rng.next_below(384)).collect();
+        let single: Vec<i8> = (0..m * k)
+            .map(|i| if cols.contains(&(i % k)) { 1 - 2 * ((i / k) % 2) as i8 } else { 0 })
+            .collect();
+        let zero_free: Vec<i8> =
+            (0..m * k).map(|_| if rng.next_f32() < 0.5 { 1 } else { -1 }).collect();
+        let cases: [(&str, Vec<i8>); 3] = [
+            ("all-zero", vec![0i8; m * k]),
+            ("zero-free", zero_free),
+            ("single-per-stripe", single),
+        ];
+        for (label, q) in cases {
+            let t = TernaryWeights::from_ternary(q, m, k, scale);
+            let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+            for qt in QuantType::ALL {
+                let kern = kernel_for(qt);
+                if !kern.sparse_capable() {
+                    continue;
+                }
+                let dense = sparse::with_mode(SparseMode::Off, || kern.quantize(&t));
+                let sp = sparse::with_mode(SparseMode::On, || kern.quantize(&t));
+                let auto = sparse::with_mode(SparseMode::Auto, || kern.quantize(&t));
+                // The index is additive: both layouts dequantize exactly.
+                let want = t.dequantize();
+                assert_eq!(kern.dequantize(&dense), want, "{qt:?} {label} trial {trial}");
+                assert_eq!(kern.dequantize(&sp), want, "{qt:?} {label} trial {trial} (sparse)");
+                let idx = sp.sparse.as_ref().expect("forced-on must attach the index");
+                match label {
+                    "all-zero" => {
+                        assert_eq!(idx.nonzero_blocks(), 0, "{qt:?}");
+                        assert!((idx.zero_block_fraction() - 1.0).abs() < 1e-12, "{qt:?}");
+                        assert!(auto.sparse.is_some(), "{qt:?}: all-zero clears any threshold");
+                    }
+                    "zero-free" => {
+                        assert_eq!(idx.nonzero_blocks(), idx.total_blocks(), "{qt:?}");
+                        assert!(auto.sparse.is_none(), "{qt:?}: zero-free must stay dense");
+                    }
+                    _ => {
+                        // Each lone nonzero lands in exactly one block.
+                        assert_eq!(idx.nonzero_blocks(), m * stripes, "{qt:?}");
+                    }
+                }
+                let reference = simd::with_level(SimdLevel::Scalar, || {
+                    let p = kern.prepare(&x, k);
+                    let mut out = vec![0f32; m];
+                    kern.gemv(&dense, &p, &mut out);
+                    out
+                });
+                for &level in &simd::available_levels() {
+                    let out = simd::with_level(level, || {
+                        let p = kern.prepare(&x, k);
+                        let mut out = vec![0f32; m];
+                        kern.gemv(&sp, &p, &mut out);
+                        out
+                    });
+                    assert_eq!(
+                        out,
+                        reference,
+                        "{qt:?} {label} trial {trial} at {}",
                         level.name()
                     );
                 }

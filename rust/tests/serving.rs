@@ -134,6 +134,7 @@ fn phase_aware_auto_engine_matches_fixed_engine_outputs() {
                 weight: 1.0,
                 best: qt,
                 best_simd: SimdLevel::Scalar,
+                best_sparse: false,
                 measurements: Vec::new(),
             });
         }

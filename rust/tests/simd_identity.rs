@@ -5,13 +5,16 @@
 //! purpose: K at the kernel's minimum (shorter than one vector
 //! register's worth of work), K an odd multiple of the alignment (so
 //! every remainder loop runs), M not a multiple of the 16-row SIMD tile,
-//! and degenerate all-zero / all-(±1) weight matrices.
+//! and degenerate all-zero / all-(±1) weight matrices. The block-skip
+//! sparse layout is held to the same bar: sparse ≡ dense ≡ scalar,
+//! bit for bit, at every tier.
 //!
 //! Every computation in this binary runs inside `simd::with_level`,
 //! which serializes on the kernel layer's force lock — so concurrent
 //! tests never observe each other's forced tier.
 
 use bitnet::kernels::quant::{quantize_act_int8, training_scheme_ref_row, TernaryWeights};
+use bitnet::kernels::sparse::{self, SparseMode, SPARSE_THRESHOLD};
 use bitnet::kernels::{
     kernel_for, matmul_prepared, simd, Kernel, PreparedActivations, QTensor, QuantType, SimdLevel,
 };
@@ -21,6 +24,29 @@ use bitnet::util::Rng;
 fn random_ternary(m: usize, k: usize, seed: u64) -> TernaryWeights {
     let mut rng = Rng::new(seed);
     let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+    TernaryWeights::from_ternary(q, m, k, 0.05)
+}
+
+/// Ternary weights with whole 384-column stripes zeroed — the *same*
+/// columns in every row, so multi-row vector tiles can elide too. 384
+/// is a common multiple of every sparse kernel's block span (64 for
+/// TL1/ELUT, 128 for I2_S, 96 for TL2's trio region), so each zeroed
+/// stripe is a run of entirely-zero blocks for every kernel. Stripes
+/// `s` with `s * 3 % 5 < 3` are zeroed: 3 of every 5 ⇒ 60% zero blocks
+/// when `k` is a multiple of 1920, enough to clear the pack threshold.
+fn block_sparse_ternary(m: usize, k: usize, seed: u64) -> TernaryWeights {
+    assert_eq!(k % 384, 0, "stripes must tile k");
+    let mut rng = Rng::new(seed);
+    let q: Vec<i8> = (0..m * k)
+        .map(|i| {
+            let s = (i % k) / 384;
+            if s * 3 % 5 < 3 {
+                0
+            } else {
+                rng.next_ternary() as i8
+            }
+        })
+        .collect();
     TernaryWeights::from_ternary(q, m, k, 0.05)
 }
 
@@ -211,4 +237,147 @@ fn lossless_kernels_training_scheme_exact_at_every_level() {
             }
         }
     }
+}
+
+/// The tentpole contract: for every sparse-capable kernel, the
+/// block-skip layout is bit-identical to the dense layout at every SIMD
+/// tier — same packed bytes, same outputs, only the zero blocks'
+/// gather/accumulate/scale-fold elided. Shapes cover a single row, a
+/// 17-row matrix (one short vector tile), and a 48-row matrix over a
+/// 60%-zero-block stripe pattern.
+#[test]
+fn sparse_layout_bit_identical_to_dense_across_levels() {
+    for qt in QuantType::ALL {
+        let kern = kernel_for(qt);
+        if !kern.sparse_capable() {
+            continue;
+        }
+        for (m, k) in [(1usize, 384usize), (17, 768), (48, 1920)] {
+            assert_eq!(k % kern.info().k_multiple, 0, "{qt:?}: test shape must fit the kernel");
+            let t = block_sparse_ternary(m, k, 11 + m as u64);
+            let dense = sparse::with_mode(SparseMode::Off, || kern.quantize(&t));
+            let sp = sparse::with_mode(SparseMode::On, || kern.quantize(&t));
+            assert!(dense.sparse.is_none(), "{qt:?}: forced-off packing must stay dense");
+            let idx = sp.sparse.as_ref().expect("forced-on packing must attach the index");
+            assert!(
+                idx.nonzero_blocks() < idx.total_blocks(),
+                "{qt:?} ({m},{k}): stripes must form whole zero blocks"
+            );
+            assert_eq!(
+                dense.data, sp.data,
+                "{qt:?} ({m},{k}): the index is purely additive — packed bytes unchanged"
+            );
+            let mut rng = Rng::new(400 + k as u64);
+            let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+            let reference = gemv_at(kern, &dense, &x, m, k, SimdLevel::Scalar);
+            for level in levels() {
+                let out_dense = gemv_at(kern, &dense, &x, m, k, level);
+                let out_sparse = gemv_at(kern, &sp, &x, m, k, level);
+                assert_eq!(
+                    out_dense,
+                    reference,
+                    "{qt:?} ({m},{k}) dense at {}",
+                    level.name()
+                );
+                assert_eq!(
+                    out_sparse,
+                    reference,
+                    "{qt:?} ({m},{k}) at {}: block-skip must be bit-identical to dense scalar",
+                    level.name()
+                );
+            }
+        }
+    }
+}
+
+/// The same contract through the batched prepare-once path: row-range
+/// partitioning across pool threads, 16-row vector tiles with their
+/// tile-OR skip test, and remainder rows — sparse ≡ dense scalar at
+/// every tier and batch width.
+#[test]
+fn matmul_prepared_sparse_identical_to_dense() {
+    let (m, k) = (48, 1920);
+    let pool = ThreadPool::new(4);
+    for qt in QuantType::ALL {
+        let kern = kernel_for(qt);
+        if !kern.sparse_capable() {
+            continue;
+        }
+        let t = block_sparse_ternary(m, k, 21);
+        let dense = sparse::with_mode(SparseMode::Off, || kern.quantize(&t));
+        let sp = sparse::with_mode(SparseMode::On, || kern.quantize(&t));
+        assert!(sp.sparse.is_some());
+        for n in [1usize, 8, 33] {
+            let mut rng = Rng::new(60 + n as u64);
+            let x: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+            let reference =
+                matmul_prepared_at(kern, &dense, &x, (m, k, n), &pool, SimdLevel::Scalar);
+            for level in levels() {
+                let out = matmul_prepared_at(kern, &sp, &x, (m, k, n), &pool, level);
+                assert_eq!(
+                    out,
+                    reference,
+                    "{qt:?} n={n} at {}: sparse matmul_prepared must match dense scalar",
+                    level.name()
+                );
+            }
+        }
+    }
+}
+
+/// Pack-time gating: iid ternary (~1/3 zero *weights* but essentially
+/// zero whole zero *blocks*) must stay dense under `Auto`, while the
+/// 60%-zero-block stripe tensor must clear [`SPARSE_THRESHOLD`] and get
+/// the layout automatically — the below-threshold fallback the issue
+/// requires, asserted per kernel.
+#[test]
+fn pack_time_threshold_gates_the_layout() {
+    for qt in QuantType::ALL {
+        let kern = kernel_for(qt);
+        if !kern.sparse_capable() {
+            continue;
+        }
+        let iid = random_ternary(8, 1920, 33);
+        let packed = sparse::with_mode(SparseMode::Auto, || kern.quantize(&iid));
+        assert!(
+            packed.sparse.is_none(),
+            "{qt:?}: iid ternary has no whole zero blocks — auto must keep it dense"
+        );
+        let blocked = block_sparse_ternary(8, 1920, 34);
+        let packed = sparse::with_mode(SparseMode::Auto, || kern.quantize(&blocked));
+        let idx = packed
+            .sparse
+            .as_ref()
+            .expect("60% zero blocks must clear the auto threshold");
+        assert!(
+            idx.zero_block_fraction() >= SPARSE_THRESHOLD,
+            "{qt:?}: measured fraction {} below threshold yet the layout attached",
+            idx.zero_block_fraction()
+        );
+    }
+}
+
+/// The scalar sparse path must actually *count* what it skips: one
+/// full-matrix gemv over the striped tensor elides at least the
+/// tensor's total zero blocks (the counter is global and monotonic, so
+/// concurrent tests can only push it higher).
+#[test]
+fn scalar_sparse_gemv_reports_elided_blocks() {
+    let (m, k) = (4, 1920);
+    let kern = kernel_for(QuantType::I2S);
+    let t = block_sparse_ternary(m, k, 5);
+    let sp = sparse::with_mode(SparseMode::On, || kern.quantize(&t));
+    let idx = sp.sparse.as_ref().expect("forced-on packing must attach the index");
+    let zero_blocks = (idx.total_blocks() - idx.nonzero_blocks()) as u64;
+    assert!(zero_blocks > 0, "striped tensor must have zero blocks");
+    let mut rng = Rng::new(88);
+    let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+    let before = sparse::elided_counts()[SimdLevel::Scalar as usize];
+    let _ = gemv_at(kern, &sp, &x, m, k, SimdLevel::Scalar);
+    let after = sparse::elided_counts()[SimdLevel::Scalar as usize];
+    assert!(
+        after - before >= zero_blocks,
+        "scalar sparse gemv must report its elided blocks: +{} < {zero_blocks}",
+        after - before
+    );
 }

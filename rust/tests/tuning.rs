@@ -26,9 +26,11 @@ fn entry(m: usize, k: usize, n: usize, best: QuantType) -> TuningEntry {
         weight: 1.0,
         best,
         best_simd: SimdLevel::Scalar,
+        best_sparse: false,
         measurements: vec![Measurement {
             qtype: best,
             simd: SimdLevel::Scalar,
+            sparse: false,
             us_per_matmul: 10.0,
             gweights_per_s: (m * k) as f64 / 10.0e-6 / 1e9,
         }],
@@ -291,16 +293,19 @@ fn vector_winning_profile_degrades_under_forced_scalar() {
             weight: 1.0,
             best: QuantType::Tl21,
             best_simd: SimdLevel::Avx2,
+            best_sparse: false,
             measurements: vec![
                 Measurement {
                     qtype: QuantType::Tl21,
                     simd: SimdLevel::Avx2,
+                    sparse: false,
                     us_per_matmul: 5.0,
                     gweights_per_s: (m * k) as f64 / 5.0e-6 / 1e9,
                 },
                 Measurement {
                     qtype: QuantType::I2S,
                     simd: SimdLevel::Scalar,
+                    sparse: false,
                     us_per_matmul: 9.0,
                     gweights_per_s: (m * k) as f64 / 9.0e-6 / 1e9,
                 },
@@ -330,6 +335,95 @@ fn vector_winning_profile_degrades_under_forced_scalar() {
             model.plan.fallbacks() > 0,
             "every degraded selection must surface in the fallback count"
         );
+        let mut s = model.new_session(16);
+        assert!(model.prefill(&mut s, &[1, 2, 3]).iter().all(|v| v.is_finite()));
+    });
+}
+
+#[test]
+fn v3_profile_files_load_with_dense_defaults() {
+    // A verbatim v3 file (per-measurement simd levels, no sparse
+    // fields): everything loads with the sparse dimension defaulting to
+    // dense, and re-saving migrates to the current version.
+    let dir = std::env::temp_dir().join("bitnet_tuning_test_v3");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("v3.json");
+    std::fs::write(
+        &path,
+        r#"{"version": 3, "threads": 1, "default": "I2_S",
+            "entries": [{"m": 256, "k": 256, "n": 1, "best": "TL1_1", "best_simd": "avx2",
+                "measurements": [{"kernel": "TL1_1", "simd": "avx2",
+                                  "us_per_matmul": 7.0, "gweights_per_s": 9.4}]}]}"#,
+    )
+    .unwrap();
+    let p = TuningProfile::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(p.entries.len(), 1);
+    assert!(!p.entries[0].best_sparse, "v3 winners migrate as dense");
+    assert!(p.entries[0].measurements.iter().all(|m| !m.sparse));
+    let resaved = p.to_json().to_string_pretty();
+    assert!(resaved.contains("\"best_sparse\""), "re-save writes the v4 field");
+}
+
+#[test]
+fn sparse_tuned_profile_degrades_when_sparse_packing_is_off() {
+    // A profile whose winners were measured on the block-skip sparse
+    // layout is served on a host with sparse packing disabled
+    // (RUST_PALLAS_SPARSE=off / --sparse off): every tensor packs dense,
+    // so selection must re-rank to the best dense measurement and count
+    // the degrade — not silently serve the sparse-tuned winner.
+    use bitnet::kernels::sparse::{self, SparseMode};
+    let cfg = ModelConfig::tiny();
+    let mut profile = TuningProfile::empty(QuantType::I2S, 1);
+    for (m, k) in bitnet::kernels::tuner::shapes_for_model(&cfg) {
+        profile.entries.push(TuningEntry {
+            m,
+            k,
+            n: 1,
+            weight: 1.0,
+            best: QuantType::Tl11,
+            best_simd: SimdLevel::Scalar,
+            best_sparse: true,
+            measurements: vec![
+                Measurement {
+                    qtype: QuantType::Tl11,
+                    simd: SimdLevel::Scalar,
+                    sparse: true,
+                    us_per_matmul: 4.0,
+                    gweights_per_s: (m * k) as f64 / 4.0e-6 / 1e9,
+                },
+                Measurement {
+                    qtype: QuantType::I2S,
+                    simd: SimdLevel::Scalar,
+                    sparse: false,
+                    us_per_matmul: 9.0,
+                    gweights_per_s: (m * k) as f64 / 9.0e-6 / 1e9,
+                },
+            ],
+        });
+    }
+    // The v4 sparse fields survive the disk round trip.
+    let dir = std::env::temp_dir().join("bitnet_tuning_test_sparse");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("sparse_profile.json");
+    profile.save(&path).unwrap();
+    let loaded = TuningProfile::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(loaded, profile, "best_sparse / per-measurement sparse must round-trip");
+
+    let (m0, k0) = bitnet::kernels::tuner::shapes_for_model(&cfg)[0];
+    sparse::with_mode(SparseMode::On, || {
+        assert_eq!(loaded.select(m0, k0, 1), QuantType::Tl11, "sparse winner serves when permitted");
+    });
+    sparse::with_mode(SparseMode::Off, || {
+        assert_eq!(loaded.select(m0, k0, 1), QuantType::I2S, "re-rank to the dense measurement");
+        let ck = Checkpoint::synthetic(&cfg, 13);
+        let model = Transformer::from_checkpoint_dispatch(&ck, Dispatch::Auto(loaded), 1);
+        for (li, layer) in model.layers.iter().enumerate() {
+            assert_eq!(layer.wq.qtype(), QuantType::I2S, "layer {li} degraded to dense winner");
+            assert!(!layer.wq.sparse_layout(), "layer {li}: no tensor packs sparse under off");
+        }
+        assert!(model.plan.fallbacks() > 0, "degrades must surface in the fallback count");
         let mut s = model.new_session(16);
         assert!(model.prefill(&mut s, &[1, 2, 3]).iter().all(|v| v.is_finite()));
     });
