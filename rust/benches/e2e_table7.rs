@@ -67,6 +67,7 @@ fn measure_kv_memory(
             eos_token: 1,
             seed: 7,
             kv_dtype: dtype,
+            ..Default::default()
         },
     );
     let mut rng = Rng::new(0xACE);
@@ -88,6 +89,54 @@ fn measure_kv_memory(
         m.kv_pages_peak.load(Ordering::Relaxed),
         m.kv_pages_total.load(Ordering::Relaxed),
         m.kv_preemptions.load(Ordering::Relaxed),
+    )
+}
+
+/// Prefix-cache counters from a shared-system-prompt workload under the
+/// same tight KV budget, sharing off vs on: (prefill tokens computed,
+/// prefix hit tokens, peak decode batch, COW splits). The seed request
+/// runs alone so its prompt pages are indexed before the followers
+/// submit; with sharing on, the followers map the system pages instead
+/// of recomputing them — fewer prefill tokens and a wider co-run batch
+/// out of the identical page budget.
+fn measure_prefix_cache(
+    cfg: &ModelConfig,
+    prefix_cache: bool,
+    followers: usize,
+) -> (u64, u64, u64, u64) {
+    use std::sync::atomic::Ordering;
+    let model = Transformer::synthetic(cfg, QuantType::I2S, 0xACE);
+    let engine = Engine::start(
+        model,
+        EngineConfig {
+            max_batch: 4,
+            kv_budget_tokens: 128,
+            eos_token: 1,
+            seed: 7,
+            prefix_cache,
+            ..Default::default()
+        },
+    );
+    let system: Vec<u32> = (0u32..64).map(|i| 3 + (i * 7) % 500).collect();
+    let mut seed_prompt = system.clone();
+    seed_prompt.extend_from_slice(&[501, 502]);
+    let _ = engine.submit(Request::greedy(seed_prompt, 6)).wait();
+    let handles: Vec<_> = (0..followers as u32)
+        .map(|i| {
+            let mut p = system.clone();
+            p.extend_from_slice(&[3 + i, 9 + i]);
+            engine.submit(Request::greedy(p, 6))
+        })
+        .collect();
+    for h in handles {
+        let _ = h.wait();
+    }
+    let m = &engine.metrics;
+    (
+        m.prefill_tokens_computed.load(Ordering::Relaxed),
+        m.prefix_hit_tokens.load(Ordering::Relaxed),
+        m.peak_batch.load(Ordering::Relaxed),
+        m.kv_cow_splits.load(Ordering::Relaxed),
     )
 }
 
@@ -301,6 +350,21 @@ fn main() {
         kv_rows.push((dtype, resident, budget, peak, total, preempt));
     }
 
+    // Prefix sharing: the same tight page budget serving a 64-token
+    // shared system prompt, cache off vs on. The win is twofold: the
+    // shared prefix prefills once instead of per-request, and mapped
+    // pages shrink each follower's footprint so more of them co-run.
+    println!("\n# Prefix cache (64-token shared system prompt, 4 followers, 128-token budget):");
+    let mut pc_rows = Vec::new();
+    for on in [false, true] {
+        let (computed, hit, peak, cow) = measure_prefix_cache(&ModelConfig::tiny(), on, 4);
+        println!(
+            "#   {:<3} prefill computed {computed:>5} tok | prefix hits {hit:>5} tok | peak batch {peak} | cow splits {cow}",
+            if on { "on" } else { "off" }
+        );
+        pc_rows.push((on, computed, hit, peak, cow));
+    }
+
     // Machine-readable trajectory: one JSON document per run so CI can
     // archive the perf history (`BENCH_e2e.json` artifact).
     if let Ok(path) = std::env::var("BENCH_JSON") {
@@ -363,6 +427,18 @@ fn main() {
                 ])
             })
             .collect();
+        let pc_objs: Vec<Json> = pc_rows
+            .iter()
+            .map(|(on, computed, hit, peak, cow)| {
+                Json::Obj(vec![
+                    ("prefix_cache".into(), Json::Bool(*on)),
+                    ("prefill_tokens_computed".into(), Json::Num(*computed as f64)),
+                    ("prefix_hit_tokens".into(), Json::Num(*hit as f64)),
+                    ("peak_batch".into(), Json::Num(*peak as f64)),
+                    ("cow_splits".into(), Json::Num(*cow as f64)),
+                ])
+            })
+            .collect();
         let doc = Json::Obj(vec![
             ("bench".into(), Json::Str("e2e_table7".into())),
             ("threads".into(), Json::Num(threads as f64)),
@@ -377,6 +453,7 @@ fn main() {
             ("e2e_measured".into(), Json::Arr(e2e_objs)),
             ("serving_trace".into(), trace.to_json()),
             ("kv_memory".into(), Json::Arr(kv_objs)),
+            ("prefix_cache".into(), Json::Arr(pc_objs)),
         ]);
         std::fs::write(&path, doc.to_string_pretty()).expect("write BENCH_JSON");
         println!("# wrote {path}");

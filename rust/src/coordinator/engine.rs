@@ -2,11 +2,15 @@
 //! scheduler; clients submit requests over a channel and stream token
 //! events back. Decode runs as one batched GEMM per step over every
 //! running sequence (continuous batching), prefill is chunked per admitted
-//! request — the standard split the paper's serving setting assumes.
+//! request — the standard split the paper's serving setting assumes. With
+//! the prefix cache enabled, submitted prompts map their longest indexed
+//! prefix straight out of the KV arena (copy-on-write pages) and only the
+//! divergent tail is prefilled; with a prefill-chunk cap, long prompts
+//! stream into the cache across steps instead of admitting all-or-nothing.
 
 use super::kv_pool::{KvArena, KvDtype};
 use super::request::{Event, FinishReason, Request, RequestHandle, RequestStats};
-use super::scheduler::{Phase, Scheduler, SeqState};
+use super::scheduler::{Scheduler, SeqState};
 use super::trace::{ServingTrace, TraceRecorder};
 use crate::metrics::EngineMetrics;
 use crate::model::{sample, Session, Transformer};
@@ -33,6 +37,22 @@ pub struct EngineConfig {
     /// at a small quality cost; `F32` is bit-exact with the pre-paged
     /// layout).
     pub kv_dtype: KvDtype,
+    /// Share KV pages across sequences with a common prompt prefix: on
+    /// submit, the longest page-granular prefix already in the arena's
+    /// radix index is mapped copy-on-write into the new sequence and only
+    /// the divergent tail is prefilled; completed fresh prompts are
+    /// indexed for later arrivals. Off by default — sharing keeps pages
+    /// resident for reuse, which callers that assert an empty arena
+    /// between workloads must opt into.
+    pub prefix_cache: bool,
+    /// Prefill chunk cap in tokens; 0 = whole-prompt chunks. A page-sized
+    /// cap (e.g. 16) lets long prompts admit as soon as one chunk fits
+    /// and stream across steps instead of waiting for every page at once.
+    pub prefill_chunk: usize,
+    /// Tuning-profile shape weights for the per-step trace-drift metric
+    /// (`ServingTrace::drift_l1`): empty disables the computation (the
+    /// common case for fixed-kernel runs, which have no profile).
+    pub profile_widths: Vec<(usize, f64)>,
 }
 
 impl Default for EngineConfig {
@@ -43,6 +63,9 @@ impl Default for EngineConfig {
             eos_token: 1,
             seed: 0,
             kv_dtype: KvDtype::F32,
+            prefix_cache: false,
+            prefill_chunk: 0,
+            profile_widths: Vec::new(),
         }
     }
 }
@@ -131,8 +154,8 @@ impl Drop for Engine {
     }
 }
 
-/// Copy the KV arena's page/byte/preemption counters into the lock-free
-/// engine metrics (one lock per step, far off the GEMM path).
+/// Copy the KV arena's page/byte/preemption/prefix counters into the
+/// lock-free engine metrics (one lock per step, far off the GEMM path).
 fn mirror_kv_stats(arena: &Arc<Mutex<KvArena>>, metrics: &EngineMetrics) {
     let a = arena.lock().unwrap();
     metrics.kv_pages_used.store(a.used_pages() as u64, Ordering::Relaxed);
@@ -141,6 +164,8 @@ fn mirror_kv_stats(arena: &Arc<Mutex<KvArena>>, metrics: &EngineMetrics) {
     metrics.kv_resident_bytes.store(a.resident_bytes() as u64, Ordering::Relaxed);
     metrics.kv_capacity_bytes.store(a.capacity_bytes() as u64, Ordering::Relaxed);
     metrics.kv_preemptions.store(a.preemptions(), Ordering::Relaxed);
+    metrics.prefix_hit_tokens.store(a.prefix_hit_tokens(), Ordering::Relaxed);
+    metrics.kv_cow_splits.store(a.cow_splits(), Ordering::Relaxed);
 }
 
 /// Copy the model's prepare-once cache counters into the engine metrics
@@ -182,6 +207,7 @@ fn run_loop(
         config.kv_dtype,
     )));
     let mut scheduler = Scheduler::new(config.max_batch);
+    scheduler.prefill_chunk = config.prefill_chunk;
     let mut live: HashMap<u64, Live> = HashMap::new();
     let mut rng = Rng::new(config.seed);
     mirror_kv_stats(&arena, &metrics);
@@ -206,15 +232,21 @@ fn run_loop(
                 Command::Shutdown => break 'outer,
                 Command::Submit(id, req, events) => {
                     let prompt_len = req.prompt.len().max(1);
-                    let seq = SeqState {
-                        id,
-                        prompt_len,
-                        max_new_tokens: req.max_new_tokens,
-                        generated: 0,
-                        phase: Phase::Waiting,
+                    let mut seq = SeqState::new(id, prompt_len, req.max_new_tokens);
+                    let accepted = !req.prompt.is_empty() && {
+                        let mut a = arena.lock().unwrap();
+                        let fits = a.pages_for(seq.worst_case_tokens()) <= a.total_pages();
+                        if fits && config.prefix_cache {
+                            // Map the longest indexed prefix into this
+                            // sequence's page table (shared, refcounted)
+                            // before admission planning: the scheduler's
+                            // first chunk starts at the divergence point
+                            // and the mapped tokens are never recomputed.
+                            seq.prefix_tokens = a.map_prefix(id, &req.prompt);
+                            seq.prefilled = seq.prefix_tokens;
+                        }
+                        fits && scheduler.submit(seq.clone(), &a)
                     };
-                    let accepted =
-                        !req.prompt.is_empty() && scheduler.submit(seq, &arena.lock().unwrap());
                     if !accepted {
                         metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
                         let _ = events.send(Event::Done {
@@ -225,8 +257,11 @@ fn run_loop(
                         continue;
                     }
                     metrics.prompt_tokens.fetch_add(prompt_len as u64, Ordering::Relaxed);
-                    let session =
+                    let mut session =
                         model.new_session_shared(&arena, id, prompt_len + req.max_new_tokens);
+                    // The mapped prefix is already cache-resident: the
+                    // session resumes mid-prompt.
+                    session.pos = seq.prefix_tokens;
                     live.insert(
                         id,
                         Live {
@@ -259,7 +294,8 @@ fn run_loop(
         }
 
         // Preempted sequences lost their pages (released by the
-        // scheduler): reset their page-table views so re-admission
+        // scheduler — shared prefix pages survive through the index or
+        // other referents): reset their page-table views so re-admission
         // re-prefills from position 0.
         for id in &plan.preempted {
             if let Some(l) = live.get_mut(id) {
@@ -267,39 +303,61 @@ fn run_loop(
             }
         }
 
-        // Prefill newly admitted requests (chunked prompt GEMM); the first
-        // sampled token comes from the prefill logits. Re-admissions after
-        // a preemption rebuild the cache instead: prompt plus every
-        // generated token except the last (which the next decode step
-        // appends) — already-emitted tokens are never re-sampled.
-        for id in &plan.prefill {
+        // Run this step's prefill chunks. Fresh prompts stream from the
+        // divergence point (`session.pos`: past the mapped prefix and any
+        // chunks from earlier steps); the chunk that completes the prompt
+        // yields the logits the first sampled token comes from.
+        // Re-admissions after a preemption rebuild the cache instead:
+        // prompt plus every generated token except the last (which the
+        // next decode step appends) — already-emitted tokens are never
+        // re-sampled.
+        for (id, &chunk) in plan.prefill.iter().zip(plan.prefill_chunks.iter()) {
             let l = live.get_mut(id).expect("live entry for admitted seq");
-            if l.generated.is_empty() {
-                let logits = model.prefill(&mut l.session, &l.req.prompt.clone());
-                // The prompt is in the KV cache *now* — this notification,
-                // not admission planning, is what flips Prefill → Decoding
-                // (so `current_tokens` never claims unprefilled occupancy).
-                scheduler.on_prefilled(*id);
-                let tok = sample(&logits, &l.req.sampling, &mut rng);
-                l.prefilled_at = Some(Instant::now());
-                metrics.ttft.record(l.submitted.elapsed());
-                l.last_token = tok;
-                l.generated.push(tok);
-                let _ = l.events.send(Event::Token { request_id: *id, token: tok });
-                scheduler.on_token(*id);
-                if l.req.stop_on_eos && tok == config.eos_token {
-                    // Retired at the next step's retire scan: stop the
-                    // scheduler reserving (or preempting) for a decode
-                    // append that will never run.
-                    scheduler.on_stop(*id);
-                }
-                metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
+            let fresh = l.generated.is_empty();
+            let target: Vec<u32> = if fresh {
+                l.req.prompt.clone()
             } else {
-                let mut tokens = l.req.prompt.clone();
-                tokens.extend_from_slice(&l.generated[..l.generated.len() - 1]);
-                let _ = model.prefill(&mut l.session, &tokens);
-                scheduler.on_prefilled(*id);
+                let mut t = l.req.prompt.clone();
+                t.extend_from_slice(&l.generated[..l.generated.len() - 1]);
+                t
+            };
+            let start = l.session.pos;
+            let end = (start + chunk).min(target.len());
+            let logits = model.prefill(&mut l.session, &target[start..end]);
+            metrics.prefill_tokens_computed.fetch_add((end - start) as u64, Ordering::Relaxed);
+            if end < target.len() {
+                // Mid-prompt chunk: more stream next step.
+                scheduler.on_prefill_progress(*id, end - start);
+                continue;
             }
+            // The full prompt is in the KV cache *now* — this
+            // notification, not admission planning, is what flips
+            // Prefill → Decoding (so `current_tokens` never claims
+            // unprefilled occupancy).
+            scheduler.on_prefilled(*id);
+            if !fresh {
+                continue;
+            }
+            if config.prefix_cache {
+                // Index the completed prompt's full pages so later
+                // arrivals with the same prefix map them instead of
+                // recomputing.
+                arena.lock().unwrap().register_prefix(*id, &l.req.prompt);
+            }
+            let tok = sample(&logits, &l.req.sampling, &mut rng);
+            l.prefilled_at = Some(Instant::now());
+            metrics.ttft.record(l.submitted.elapsed());
+            l.last_token = tok;
+            l.generated.push(tok);
+            let _ = l.events.send(Event::Token { request_id: *id, token: tok });
+            scheduler.on_token(*id);
+            if l.req.stop_on_eos && tok == config.eos_token {
+                // Retired at the next step's retire scan: stop the
+                // scheduler reserving (or preempting) for a decode
+                // append that will never run.
+                scheduler.on_stop(*id);
+            }
+            metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
         }
 
         // Retire sequences that already hit a stop condition.
@@ -354,6 +412,12 @@ fn run_loop(
         let (trace_steps, trace_shapes) = trace.record_step(&plan, decode_ids.len());
         metrics.trace_steps.store(trace_steps, Ordering::Relaxed);
         metrics.trace_shapes.store(trace_shapes, Ordering::Relaxed);
+        if !config.profile_widths.is_empty() {
+            // Numeric tune-vs-serve drift, live per step (the one-shot
+            // end-of-run warning in `main` uses the same quantity).
+            let drift = trace.snapshot().drift_l1(&config.profile_widths);
+            metrics.drift_l1_milli.store((drift * 1000.0).round() as u64, Ordering::Relaxed);
+        }
 
         // Mirror the model's dispatch-observability counters (untuned-
         // shape fallbacks and winners that could not run — see
@@ -473,6 +537,61 @@ mod tests {
             prompts.iter().map(|p| engine.submit(Request::greedy(p.clone(), 6))).collect();
         let batched: Vec<Vec<u32>> = handles.into_iter().map(|h| h.wait().0).collect();
         assert_eq!(sequential, batched);
+    }
+
+    #[test]
+    fn chunked_prefill_matches_whole_prompt_output() {
+        // Streaming the prompt into the cache page-by-page must not
+        // change greedy outputs (same GEMMs, different step boundaries).
+        let prompt: Vec<u32> = (0..45).map(|i| (i * 7) % 512).collect();
+        let whole = {
+            let engine = tiny_engine(2);
+            engine.submit(Request::greedy(prompt.clone(), 8)).wait().0
+        };
+        for chunk in [16, 48] {
+            let model = Transformer::synthetic(&ModelConfig::tiny(), QuantType::I2S, 3);
+            let engine = Engine::start(
+                model,
+                EngineConfig {
+                    max_batch: 2,
+                    kv_budget_tokens: 2048,
+                    seed: 7,
+                    prefill_chunk: chunk,
+                    ..Default::default()
+                },
+            );
+            let chunked = engine.submit(Request::greedy(prompt.clone(), 8)).wait().0;
+            assert_eq!(whole, chunked, "chunk={chunk} diverged");
+        }
+    }
+
+    #[test]
+    fn prefix_cache_reuses_shared_prompt() {
+        // Two identical prompts: the second maps the first's pages and
+        // prefills only the final token; outputs stay identical.
+        let prompt: Vec<u32> = (0..40).map(|i| (i * 3) % 512).collect();
+        let model = Transformer::synthetic(&ModelConfig::tiny(), QuantType::I2S, 3);
+        let engine = Engine::start(
+            model,
+            EngineConfig {
+                max_batch: 2,
+                kv_budget_tokens: 2048,
+                seed: 7,
+                prefix_cache: true,
+                ..Default::default()
+            },
+        );
+        let a = engine.submit(Request::greedy(prompt.clone(), 6)).wait().0;
+        let b = engine.submit(Request::greedy(prompt.clone(), 6)).wait().0;
+        assert_eq!(a, b, "shared-prefix decode must be bit-identical");
+        let hit = engine.metrics.prefix_hit_tokens.load(Ordering::Relaxed);
+        assert!(hit > 0, "second request should map the indexed prefix");
+        let computed = engine.metrics.prefill_tokens_computed.load(Ordering::Relaxed);
+        assert_eq!(
+            computed as usize,
+            prompt.len() + (prompt.len() - hit as usize),
+            "only the unmapped tail of the second prompt was recomputed"
+        );
     }
 
     #[test]

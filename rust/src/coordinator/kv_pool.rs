@@ -15,6 +15,23 @@
 //! are minted (continuous batching keeps the footprint near the working
 //! set).
 //!
+//! Pages are **refcounted with copy-on-write semantics**: several page
+//! tables (and the prompt index below) can map the same physical page,
+//! release decrements, and only the last referent returns the page to the
+//! free list. A write into a page mapped more than once first splits it —
+//! allocates a private page and copies the K/V bytes across every layer —
+//! so shared history is never clobbered ([`KvArena::reserve_for_write`]
+//! does this eagerly at admission; [`KvArena::append`] keeps a lazy
+//! safety net).
+//!
+//! On top of COW sits a **radix prompt index**: a page-granular trie over
+//! token-id chunks ([`KvArena::register_prefix`] inserts a finished
+//! prompt's full pages, [`KvArena::map_prefix`] maps the longest indexed
+//! prefix of a new prompt into a fresh sequence's table, sharing the
+//! pages instead of re-prefilling them). Index-held pages are evicted
+//! LRU-leaf-first when an allocation would otherwise fail, so the index
+//! is a cache, not a leak: admission always wins over retained prefixes.
+//!
 //! The arena is also the admission-control ledger the
 //! [`super::scheduler::Scheduler`] consults: `reserve`/`release` move
 //! pages between the free list and per-sequence page tables, and
@@ -105,6 +122,17 @@ impl Slab {
         }
     }
 
+    /// Raw copy of one page's elements (COW split): bit-exact for both
+    /// dtypes — f16 pages copy their stored binary16 words, no re-round.
+    fn copy_page(&mut self, src: u32, dst: u32, page_elems: usize) {
+        let s = src as usize * page_elems;
+        let d = dst as usize * page_elems;
+        match self {
+            Slab::F32(v) => v.copy_within(s..s + page_elems, d),
+            Slab::F16(v) => v.copy_within(s..s + page_elems, d),
+        }
+    }
+
     /// The first `tn` rows of `page` as f32: borrowed straight from an
     /// F32 slab, or decoded into `scratch` for F16 (one decode per page
     /// per query row — the inner attention dot always runs over a
@@ -129,21 +157,91 @@ impl Slab {
     }
 }
 
-/// Page-granular KV arena: budget ledger + page tables + backing slabs.
+/// One node of the radix prompt index: a full page's worth of token ids
+/// (`key`) plus the physical page holding their K/V rows. The node holds
+/// one refcount on `page` for as long as it is live.
+struct TrieNode {
+    key: Vec<u32>,
+    page: u32,
+    parent: usize,
+    children: Vec<usize>,
+    /// Logical LRU clock value of the last lookup/insert touching this
+    /// node (no wall clock: deterministic under test).
+    touch: u64,
+    live: bool,
+}
+
+/// Page-granular trie over prompt token ids. Node 0 is the root (no key,
+/// no page, never evicted); nodes are slab-allocated with slot reuse.
+struct PrefixIndex {
+    nodes: Vec<TrieNode>,
+    free_slots: Vec<usize>,
+    clock: u64,
+}
+
+impl PrefixIndex {
+    fn new() -> PrefixIndex {
+        PrefixIndex {
+            nodes: vec![TrieNode {
+                key: Vec::new(),
+                page: u32::MAX,
+                parent: 0,
+                children: Vec::new(),
+                touch: 0,
+                live: true,
+            }],
+            free_slots: Vec::new(),
+            clock: 0,
+        }
+    }
+
+    /// The child of `node` whose key matches `chunk`, if indexed.
+    fn child_matching(&self, node: usize, chunk: &[u32]) -> Option<usize> {
+        self.nodes[node].children.iter().copied().find(|&c| self.nodes[c].key.as_slice() == chunk)
+    }
+
+    fn alloc_node(&mut self, node: TrieNode) -> usize {
+        if let Some(slot) = self.free_slots.pop() {
+            self.nodes[slot] = node;
+            slot
+        } else {
+            self.nodes.push(node);
+            self.nodes.len() - 1
+        }
+    }
+
+    /// Live nodes (== pages the index holds a refcount on).
+    fn live_nodes(&self) -> usize {
+        self.nodes.iter().skip(1).filter(|n| n.live).count()
+    }
+}
+
+/// Page-granular KV arena: budget ledger + refcounted page tables +
+/// prompt index + backing slabs.
 pub struct KvArena {
     n_layers: usize,
     kv_dim: usize,
     dtype: KvDtype,
     page_tokens: usize,
     total_pages: usize,
-    /// Recycled page ids (released before `next_page` reached the cap).
+    /// Recycled page ids (refcount reached zero before `next_page`
+    /// reached the cap). Popped before minting, so balanced churn never
+    /// grows the slabs.
     free_pages: Vec<u32>,
     /// Page ids minted so far == pages of slab storage actually resident.
     next_page: u32,
     /// seq id → page table (the indirection attention reads through).
+    /// Entries may alias across tables (shared prefixes) — `refcounts`
+    /// tracks how many referents each physical page has.
     tables: HashMap<u64, Vec<u32>>,
+    /// Referents per minted page id: one per page-table entry mapping it
+    /// plus one per live trie node holding it. Zero ⇔ on the free list.
+    refcounts: Vec<u32>,
+    prefix: PrefixIndex,
     peak_used: usize,
     preemptions: u64,
+    prefix_hit_tokens: u64,
+    cow_splits: u64,
     k_slabs: Vec<Slab>,
     v_slabs: Vec<Slab>,
 }
@@ -179,8 +277,12 @@ impl KvArena {
             free_pages: Vec::new(),
             next_page: 0,
             tables: HashMap::new(),
+            refcounts: Vec::new(),
+            prefix: PrefixIndex::new(),
             peak_used: 0,
             preemptions: 0,
+            prefix_hit_tokens: 0,
+            cow_splits: 0,
             k_slabs: (0..n_layers).map(|_| Slab::new(dtype)).collect(),
             v_slabs: (0..n_layers).map(|_| Slab::new(dtype)).collect(),
         }
@@ -205,12 +307,15 @@ impl KvArena {
     }
 
     /// Pages still allocatable (recycled free-list entries plus pages the
-    /// budget allows but that were never minted).
+    /// budget allows but that were never minted). Index-held pages are
+    /// *not* free here — they become reclaimable through eviction when an
+    /// allocation actually needs them (see [`KvArena::reserve`]).
     pub fn free_page_count(&self) -> usize {
         self.total_pages - self.used_pages()
     }
 
-    /// Pages currently held by sequences.
+    /// Pages currently held by at least one referent (sequence tables
+    /// and/or the prompt index).
     pub fn used_pages(&self) -> usize {
         self.next_page as usize - self.free_pages.len()
     }
@@ -228,6 +333,22 @@ impl KvArena {
     /// Count one preemption (called by the scheduler when it evicts).
     pub fn note_preemption(&mut self) {
         self.preemptions += 1;
+    }
+
+    /// Cumulative prompt tokens served out of the prefix index instead of
+    /// being re-prefilled ([`KvArena::map_prefix`] hits).
+    pub fn prefix_hit_tokens(&self) -> u64 {
+        self.prefix_hit_tokens
+    }
+
+    /// Cumulative copy-on-write page splits (writes into shared pages).
+    pub fn cow_splits(&self) -> u64 {
+        self.cow_splits
+    }
+
+    /// Pages currently held by the prompt index (one per live trie node).
+    pub fn prefix_index_pages(&self) -> usize {
+        self.prefix.live_nodes()
     }
 
     /// Pages needed to hold `tokens` tokens.
@@ -258,7 +379,8 @@ impl KvArena {
 
     /// Reserve pages for `seq` to cover `tokens` tokens total (idempotent
     /// growth: only the delta beyond current holdings is allocated).
-    /// Returns false (no change) if the arena cannot satisfy the demand.
+    /// Returns false (no change) if the arena cannot satisfy the demand
+    /// even after evicting index-only pages.
     pub fn reserve(&mut self, seq: u64, tokens: usize) -> bool {
         let want = self.pages_for(tokens);
         let have = self.tables.get(&seq).map_or(0, |v| v.len());
@@ -266,25 +388,181 @@ impl KvArena {
             return true;
         }
         let need = want - have;
-        if need > self.free_page_count() {
+        if !self.ensure_free(need) {
             return false;
         }
         let mut minted = Vec::with_capacity(need);
         for _ in 0..need {
-            minted.push(self.alloc_page().expect("free_page_count checked above"));
+            minted.push(self.alloc_page().expect("ensure_free checked above"));
         }
         self.tables.entry(seq).or_default().extend(minted);
         self.peak_used = self.peak_used.max(self.used_pages());
         true
     }
 
+    /// [`KvArena::reserve`] plus eager copy-on-write: after covering
+    /// `tokens`, every shared page overlapping the write range
+    /// `write_from..tokens` is split to a private copy, so the upcoming
+    /// prefill chunk / decode append can write without clobbering other
+    /// referents. Atomic like `reserve`: fails without side effects when
+    /// growth + splits can't all be satisfied.
+    pub fn reserve_for_write(&mut self, seq: u64, tokens: usize, write_from: usize) -> bool {
+        let want = self.pages_for(tokens);
+        let have = self.tables.get(&seq).map_or(0, |v| v.len());
+        let grow = want.saturating_sub(have);
+        let mut splits = 0usize;
+        if tokens > write_from {
+            if let Some(table) = self.tables.get(&seq) {
+                let first = write_from / self.page_tokens;
+                let last = (tokens - 1) / self.page_tokens;
+                for pi in first..=last.min(table.len().saturating_sub(1)) {
+                    if self.refcounts[table[pi] as usize] > 1 {
+                        splits += 1;
+                    }
+                }
+            }
+        }
+        if !self.ensure_free(grow + splits) {
+            return false;
+        }
+        for _ in 0..grow {
+            let p = self.alloc_page().expect("ensure_free checked above");
+            self.tables.entry(seq).or_default().push(p);
+        }
+        if tokens > write_from && self.tables.contains_key(&seq) {
+            let first = write_from / self.page_tokens;
+            let last = (tokens - 1) / self.page_tokens;
+            for pi in first..=last {
+                self.split_if_shared(seq, pi);
+            }
+        }
+        self.peak_used = self.peak_used.max(self.used_pages());
+        true
+    }
+
+    /// Map the longest indexed prefix of `prompt` into `seq`'s (empty)
+    /// page table, sharing the physical pages (refcount++), and return
+    /// how many prompt tokens are now cache-resident. Capped at
+    /// `prompt.len() - 1` so at least one tail token is always prefilled
+    /// (the engine needs the final position's logits — and an identical
+    /// prompt resubmission therefore exercises a genuine COW split).
+    /// Mapping never allocates, so it cannot fail.
+    pub fn map_prefix(&mut self, seq: u64, prompt: &[u32]) -> usize {
+        if prompt.len() <= 1 {
+            return 0;
+        }
+        self.prefix.clock += 1;
+        let clock = self.prefix.clock;
+        let mut node = 0usize;
+        let mut matched: Vec<u32> = Vec::new();
+        for chunk in prompt.chunks_exact(self.page_tokens) {
+            let Some(child) = self.prefix.child_matching(node, chunk) else { break };
+            self.prefix.nodes[child].touch = clock;
+            matched.push(self.prefix.nodes[child].page);
+            node = child;
+        }
+        if matched.is_empty() {
+            return 0;
+        }
+        let shared = (matched.len() * self.page_tokens).min(prompt.len() - 1);
+        let need_pages = ceil_div(shared, self.page_tokens);
+        let table = self.tables.entry(seq).or_default();
+        debug_assert!(table.is_empty(), "map_prefix must run before any reservation for seq");
+        for &p in &matched[..need_pages] {
+            self.refcounts[p as usize] += 1;
+            table.push(p);
+        }
+        self.prefix_hit_tokens += shared as u64;
+        shared
+    }
+
+    /// Index `seq`'s prefilled prompt: insert one trie node per *full*
+    /// page of `prompt` (partial tail pages keep being written by decode
+    /// and are never shared), deduplicating against existing nodes. Each
+    /// newly inserted node takes a refcount on the sequence's page, so
+    /// the prefix outlives the sequence.
+    pub fn register_prefix(&mut self, seq: u64, prompt: &[u32]) {
+        let Some(table) = self.tables.get(&seq).cloned() else { return };
+        self.prefix.clock += 1;
+        let clock = self.prefix.clock;
+        let mut node = 0usize;
+        for (pi, chunk) in prompt.chunks_exact(self.page_tokens).enumerate() {
+            if pi >= table.len() {
+                break;
+            }
+            node = match self.prefix.child_matching(node, chunk) {
+                Some(c) => {
+                    self.prefix.nodes[c].touch = clock;
+                    c
+                }
+                None => {
+                    let page = table[pi];
+                    self.refcounts[page as usize] += 1;
+                    let fresh = self.prefix.alloc_node(TrieNode {
+                        key: chunk.to_vec(),
+                        page,
+                        parent: node,
+                        children: Vec::new(),
+                        touch: clock,
+                        live: true,
+                    });
+                    self.prefix.nodes[node].children.push(fresh);
+                    fresh
+                }
+            };
+        }
+    }
+
+    /// Free pages until `need` are allocatable, evicting LRU index-only
+    /// leaves (refcount 1 ⇒ no live sequence maps the page). Interior
+    /// nodes become leaves as their children go, so whole stale branches
+    /// drain back-to-front. False ⇔ demand exceeds what eviction can
+    /// reclaim.
+    fn ensure_free(&mut self, need: usize) -> bool {
+        while self.free_page_count() < need {
+            if !self.evict_prefix_leaf() {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Evict the least-recently-touched index leaf whose page has no
+    /// other referent, returning its page to the free list.
+    fn evict_prefix_leaf(&mut self) -> bool {
+        let mut best: Option<(usize, u64)> = None;
+        for (i, n) in self.prefix.nodes.iter().enumerate().skip(1) {
+            if !n.live || !n.children.is_empty() || self.refcounts[n.page as usize] != 1 {
+                continue;
+            }
+            let older = match best {
+                Some((_, t)) => n.touch < t,
+                None => true,
+            };
+            if older {
+                best = Some((i, n.touch));
+            }
+        }
+        let Some((i, _)) = best else { return false };
+        let parent = self.prefix.nodes[i].parent;
+        let page = self.prefix.nodes[i].page;
+        self.prefix.nodes[parent].children.retain(|&c| c != i);
+        self.prefix.nodes[i].live = false;
+        self.prefix.nodes[i].key = Vec::new();
+        self.prefix.free_slots.push(i);
+        self.dec_ref(page);
+        true
+    }
+
     fn alloc_page(&mut self) -> Option<u32> {
         if let Some(p) = self.free_pages.pop() {
+            self.refcounts[p as usize] = 1;
             return Some(p);
         }
         if (self.next_page as usize) < self.total_pages {
             let p = self.next_page;
             self.next_page += 1;
+            self.refcounts.push(1);
             let elems = self.page_tokens * self.kv_dim;
             for slab in self.k_slabs.iter_mut().chain(self.v_slabs.iter_mut()) {
                 slab.grow(elems);
@@ -295,12 +573,43 @@ impl KvArena {
         }
     }
 
-    /// Release all pages held by `seq` (finish or preemption). The slab
-    /// memory stays minted for reuse; only the ids return to the free
-    /// list.
+    /// Drop one referent of `page`; the last referent returns it to the
+    /// free list (the slab memory stays minted for reuse).
+    fn dec_ref(&mut self, page: u32) {
+        let rc = &mut self.refcounts[page as usize];
+        debug_assert!(*rc > 0, "double free of page {page}");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free_pages.push(page);
+        }
+    }
+
+    /// If `seq`'s `pi`-th page is shared, split it: allocate a private
+    /// page, copy the K/V bytes across every layer, and swap the table
+    /// entry. The caller must have ensured a page is allocatable.
+    fn split_if_shared(&mut self, seq: u64, pi: usize) {
+        let old = self.tables[&seq][pi];
+        if self.refcounts[old as usize] <= 1 {
+            return;
+        }
+        let fresh = self.alloc_page().expect("caller reserves headroom for COW splits");
+        let elems = self.page_tokens * self.kv_dim;
+        for slab in self.k_slabs.iter_mut().chain(self.v_slabs.iter_mut()) {
+            slab.copy_page(old, fresh, elems);
+        }
+        self.refcounts[old as usize] -= 1;
+        self.tables.get_mut(&seq).expect("table exists")[pi] = fresh;
+        self.cow_splits += 1;
+    }
+
+    /// Release all pages held by `seq` (finish or preemption): each
+    /// mapping drops one refcount; pages shared with other sequences or
+    /// the prompt index stay live.
     pub fn release(&mut self, seq: u64) {
         if let Some(pages) = self.tables.remove(&seq) {
-            self.free_pages.extend(pages);
+            for p in pages {
+                self.dec_ref(p);
+            }
         }
     }
 
@@ -316,10 +625,18 @@ impl KvArena {
     }
 
     /// Write the K and V rows for token position `pos` of `seq` in
-    /// `layer`. The covering page must already be reserved.
+    /// `layer`. The covering page must already be reserved. Writes into a
+    /// shared page split it first (lazy COW safety net — the serving
+    /// scheduler splits eagerly via [`KvArena::reserve_for_write`], so
+    /// this path allocating is the exception, not the rule).
     pub fn append(&mut self, seq: u64, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
         debug_assert_eq!(k.len(), self.kv_dim);
         debug_assert_eq!(v.len(), self.kv_dim);
+        let page = self.page_of(seq, pos);
+        if self.refcounts[page as usize] > 1 {
+            assert!(self.ensure_free(1), "KV arena exhausted during COW split at pos {pos}");
+            self.split_if_shared(seq, pos / self.page_tokens);
+        }
         let page = self.page_of(seq, pos);
         let off = (page as usize * self.page_tokens + pos % self.page_tokens) * self.kv_dim;
         self.k_slabs[layer].write_row(off, k);
@@ -356,7 +673,9 @@ impl KvArena {
     /// The gather is tiled per page so the inner dot product always runs
     /// over a contiguous slice; per (head, position) arithmetic and
     /// accumulation order are identical to the pre-paged contiguous
-    /// layout, so F32 results are bit-identical to it.
+    /// layout, so F32 results are bit-identical to it. The read is pure
+    /// page-table indirection, so shared (COW) pages are read bit-
+    /// identically to private ones.
     #[allow(clippy::too_many_arguments)]
     pub fn attend(
         &self,
@@ -527,6 +846,26 @@ mod tests {
     }
 
     #[test]
+    fn balanced_churn_reuses_pages_before_minting() {
+        // Preemption/on_stop churn regression: pages freed by one
+        // sequence must be recycled by the next reservation, so resident
+        // bytes stay flat when allocation and release are balanced.
+        let page_bytes = 16 * 4 * 4 * 2 * 2;
+        let mut arena = KvArena::new(2, 4, 16 * 64, KvDtype::F32); // 64-page budget
+        for round in 0..20u64 {
+            assert!(arena.reserve(round, 48)); // 3 pages
+            arena.release(round);
+            assert_eq!(
+                arena.resident_bytes(),
+                3 * page_bytes,
+                "round {round}: churn must recycle, not mint"
+            );
+        }
+        assert_eq!(arena.peak_used_pages(), 3);
+        assert_eq!(arena.used_pages(), 0);
+    }
+
+    #[test]
     fn f16_pages_halve_resident_bytes() {
         let mut a32 = KvArena::new(2, 4, 64, KvDtype::F32);
         let mut a16 = KvArena::new(2, 4, 64, KvDtype::F16);
@@ -573,5 +912,136 @@ mod tests {
         arena.note_preemption();
         arena.note_preemption();
         assert_eq!(arena.preemptions(), 2);
+    }
+
+    fn prompt(len: usize, salt: u32) -> Vec<u32> {
+        (0..len as u32).map(|i| i * 3 + salt).collect()
+    }
+
+    #[test]
+    fn register_then_map_shares_pages() {
+        let mut arena = KvArena::accounting(160); // 10 pages
+        let p = prompt(40, 0); // 2 full pages + 8-token tail
+        assert!(arena.reserve(1, 40)); // 3 pages
+        arena.register_prefix(1, &p);
+        assert_eq!(arena.prefix_index_pages(), 2, "only full pages are indexed");
+        assert_eq!(arena.used_pages(), 3);
+        arena.release(1);
+        // Index refs keep the two full pages live; the tail page freed.
+        assert_eq!(arena.used_pages(), 2);
+        let shared = arena.map_prefix(2, &p);
+        assert_eq!(shared, 32, "both indexed pages map");
+        assert_eq!(arena.held_pages(2), 2);
+        assert_eq!(arena.used_pages(), 2, "mapping shares, it does not allocate");
+        assert_eq!(arena.prefix_hit_tokens(), 32);
+        // A divergent prompt shares only the matching chunk.
+        let mut q = prompt(40, 0);
+        q[20] = 9999; // second chunk differs
+        let shared = arena.map_prefix(3, &q);
+        assert_eq!(shared, 16);
+        arena.release(2);
+        arena.release(3);
+        assert_eq!(arena.used_pages(), 2, "index still holds its pages");
+    }
+
+    #[test]
+    fn map_prefix_caps_at_prompt_minus_one() {
+        // Identical prompt resubmission: the final token must stay
+        // prefillable, so one page stays partially shared → COW later.
+        let mut arena = KvArena::accounting(160);
+        let p = prompt(32, 5); // exactly 2 pages
+        assert!(arena.reserve(1, 32));
+        arena.register_prefix(1, &p);
+        let shared = arena.map_prefix(2, &p);
+        assert_eq!(shared, 31, "capped at prompt_len - 1");
+        assert_eq!(arena.held_pages(2), 2, "the covering page still maps");
+    }
+
+    #[test]
+    fn cow_split_preserves_shared_history() {
+        let kvd = 4;
+        let mut arena = KvArena::new(1, kvd, 16 * 8, KvDtype::F32);
+        let p = prompt(32, 1);
+        assert!(arena.reserve(1, 32));
+        for pos in 0..32 {
+            let k: Vec<f32> = (0..kvd).map(|i| (pos * 100 + i) as f32).collect();
+            let v: Vec<f32> = (0..kvd).map(|i| -((pos * 100 + i) as f32)).collect();
+            arena.append(1, 0, pos, &k, &v);
+        }
+        arena.register_prefix(1, &p);
+        // Seq 2 maps 31 tokens shared; writing position 31 (same prompt's
+        // last token) lands in shared page 1 → COW split.
+        let shared = arena.map_prefix(2, &p);
+        assert_eq!(shared, 31);
+        assert!(arena.reserve_for_write(2, 33, 31));
+        assert_eq!(arena.cow_splits(), 1, "the written shared page split");
+        let k2: Vec<f32> = vec![7.0; kvd];
+        let v2: Vec<f32> = vec![-7.0; kvd];
+        arena.append(2, 0, 31, &k2, &v2);
+        // Seq 1's history at pos 31 is untouched; seq 2 reads its own
+        // write there but seq 1's data in the still-shared region.
+        let (k1, _) = arena.kv_row(1, 0, 31);
+        assert_eq!(k1[0], 3100.0, "donor page unchanged after the split");
+        let (k2r, _) = arena.kv_row(2, 0, 31);
+        assert_eq!(k2r, k2);
+        let (kshared, _) = arena.kv_row(2, 0, 15);
+        assert_eq!(kshared[0], 1500.0, "unsplit prefix pages read the donor bytes");
+    }
+
+    #[test]
+    fn lazy_append_split_is_a_safety_net() {
+        let kvd = 4;
+        let mut arena = KvArena::new(1, kvd, 16 * 8, KvDtype::F32);
+        let p = prompt(32, 2);
+        assert!(arena.reserve(1, 32));
+        for pos in 0..32 {
+            let k: Vec<f32> = (0..kvd).map(|i| (pos + i) as f32).collect();
+            arena.append(1, 0, pos, &k.clone(), &k);
+        }
+        arena.register_prefix(1, &p);
+        let shared = arena.map_prefix(2, &p);
+        assert_eq!(shared, 31);
+        // Plain reserve (no eager split) then a direct append into the
+        // shared page: the lazy path must split rather than clobber.
+        assert!(arena.reserve(2, 32));
+        let row = vec![42.0; kvd];
+        arena.append(2, 0, 31, &row, &row);
+        assert_eq!(arena.cow_splits(), 1);
+        let (k1, _) = arena.kv_row(1, 0, 31);
+        assert_eq!(k1[0], 31.0, "donor row survives the lazy split");
+    }
+
+    #[test]
+    fn index_pages_evict_lru_under_pressure() {
+        let mut arena = KvArena::accounting(16 * 4); // 4 pages
+        let p = prompt(64, 3); // 4 full pages
+        assert!(arena.reserve(1, 64));
+        arena.register_prefix(1, &p);
+        arena.release(1);
+        assert_eq!(arena.used_pages(), 4, "index holds the whole arena");
+        assert_eq!(arena.free_page_count(), 0);
+        // A 2-page reservation must evict two LRU leaves (the chain
+        // drains deepest-first) rather than fail.
+        assert!(arena.reserve(2, 32));
+        assert_eq!(arena.prefix_index_pages(), 2);
+        // And the surviving prefix still maps.
+        arena.release(2);
+        let shared = arena.map_prefix(3, &p);
+        assert_eq!(shared, 32, "the undrained half of the chain still hits");
+    }
+
+    #[test]
+    fn eviction_cannot_reclaim_pages_mapped_by_live_sequences() {
+        let mut arena = KvArena::accounting(16 * 2); // 2 pages
+        let p = prompt(32, 4);
+        assert!(arena.reserve(1, 32));
+        arena.register_prefix(1, &p);
+        // Seq 1 still live: its pages have refcount 2 (table + index) and
+        // must not be reclaimable for seq 2.
+        assert!(!arena.reserve(2, 32), "live sequences' pages are not evictable");
+        arena.release(1);
+        // Now the index is the sole referent → evictable.
+        assert!(arena.reserve(2, 32));
+        assert_eq!(arena.prefix_index_pages(), 0);
     }
 }

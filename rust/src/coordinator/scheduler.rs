@@ -5,16 +5,24 @@
 //!
 //! Policy (vLLM-style FCFS with recompute preemption):
 //! * finished sequences release their pages immediately;
-//! * **watermark admission**: a waiting request admits when its prefill
-//!   chunk (plus this step's decode append) fits the arena *now* — not
-//!   when its worst-case `prompt + max_new_tokens` demand does, so the
-//!   same budget holds strictly more sequences in flight;
+//! * **chunked watermark admission**: a waiting request admits when its
+//!   *next prefill chunk* (plus, if that chunk completes the prompt, this
+//!   step's decode append) fits the arena *now* — not when its worst-case
+//!   `prompt + max_new_tokens` demand does. With a chunk cap
+//!   ([`Scheduler::prefill_chunk`]) long prompts stream across steps:
+//!   admit on the first page-sized chunk, reserve one more chunk per step
+//!   until the prompt is resident, and only then join the decode batch;
+//! * prompt tokens already mapped from the arena's prefix index
+//!   ([`SeqState::prefix_tokens`]) are never re-prefilled — the first
+//!   chunk starts at the divergence point;
 //! * running sequences grow page-by-page as they decode; when a growth
 //!   reservation finds the arena exhausted, the **newest-admitted**
 //!   running sequence is preempted back to `Waiting` (LIFO — the oldest
-//!   always progresses, which is the no-deadlock guarantee), its pages
-//!   freed immediately, its cache re-prefilled on re-admission;
-//! * decode runs as one batch over everything in the running set.
+//!   always progresses, which is the no-deadlock guarantee), its page
+//!   refcounts dropped immediately (prefix-shared pages survive via their
+//!   other referents), its cache re-prefilled on re-admission;
+//! * decode runs as one batch over every running sequence whose prompt is
+//!   resident or completes this step; mid-prefill sequences wait.
 
 use super::kv_pool::KvArena;
 use std::collections::VecDeque;
@@ -27,27 +35,55 @@ pub struct SeqState {
     pub max_new_tokens: usize,
     pub generated: usize,
     pub phase: Phase,
+    /// Prompt tokens already cache-resident via prefix-index mapping (set
+    /// at submit time by the engine; forfeited on preemption — the
+    /// re-admission re-prefills from position 0, since the index may have
+    /// evicted those pages meanwhile).
+    pub prefix_tokens: usize,
+    /// Prompt/resume tokens *confirmed* in the KV cache, driven by the
+    /// engine's `on_prefill_progress`/`on_prefilled` notifications
+    /// (starts at `prefix_tokens`: mapped pages are already resident).
+    pub prefilled: usize,
+    /// Prompt/resume tokens *planned* for prefill so far, advanced at
+    /// planning time. Runs ahead of `prefilled` within a step; keeping
+    /// the two separate is what stops [`Scheduler::step`] from re-planning
+    /// a chunk the engine has not acknowledged yet.
+    pub planned: usize,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Phase {
     Waiting,
-    /// Admitted; prompt not yet prefilled.
+    /// Admitted; prompt not yet fully prefilled (chunks may stream across
+    /// several steps).
     Prefill,
     Decoding,
 }
 
 impl SeqState {
+    pub fn new(id: u64, prompt_len: usize, max_new_tokens: usize) -> SeqState {
+        SeqState {
+            id,
+            prompt_len,
+            max_new_tokens,
+            generated: 0,
+            phase: Phase::Waiting,
+            prefix_tokens: 0,
+            prefilled: 0,
+            planned: 0,
+        }
+    }
+
     /// Worst-case KV tokens this sequence can ever hold.
     pub fn worst_case_tokens(&self) -> usize {
         self.prompt_len + self.max_new_tokens
     }
-    /// KV tokens committed so far (prompt once prefilled, plus sampled
-    /// tokens — see [`Scheduler::kv_tokens_in_cache`]).
+    /// KV tokens committed so far (streamed prefill progress, plus
+    /// sampled tokens once decoding — see [`Scheduler::kv_tokens_in_cache`]).
     pub fn current_tokens(&self) -> usize {
         match self.phase {
             Phase::Waiting => 0,
-            Phase::Prefill => 0,
+            Phase::Prefill => self.prefilled,
             Phase::Decoding => self.prompt_len + self.generated,
         }
     }
@@ -67,15 +103,17 @@ impl SeqState {
 /// of 4 hit different tuned regimes; see `kernels::tuner::DispatchPlan`).
 #[derive(Debug, Default, PartialEq, Eq)]
 pub struct StepPlan {
-    /// Newly admitted requests to prefill (in order). Re-admissions of
-    /// preempted sequences appear here too, with their longer resume
+    /// Requests to run a prefill chunk for this step (in order): newly
+    /// admitted ones, streamed continuations of earlier admissions, and
+    /// re-admissions of preempted sequences with their longer resume
     /// chunks.
     pub prefill: Vec<u64>,
-    /// Prefill chunk size (tokens entering the cache) per admitted
-    /// request, parallel to `prefill` — the GEMM batch width each
-    /// prefill will run at.
+    /// Prefill chunk size (tokens entering the cache) per entry of
+    /// `prefill`, parallel to it — the GEMM batch width each prefill
+    /// chunk will run at.
     pub prefill_chunks: Vec<usize>,
-    /// Running sequences to decode as one batch.
+    /// Running sequences to decode as one batch. Mid-prefill sequences
+    /// (prompt still incomplete after this step's chunk) are excluded.
     pub decode: Vec<u64>,
     /// Sequences evicted from the running set this step (pages already
     /// released); the engine must reset their sessions so re-admission
@@ -98,15 +136,33 @@ impl StepPlan {
 /// The scheduler.
 pub struct Scheduler {
     pub max_batch: usize,
+    /// Prefill chunk cap in tokens; 0 = unlimited, i.e. whole-prompt
+    /// chunks (the pre-streaming behavior).
+    pub prefill_chunk: usize,
     waiting: VecDeque<SeqState>,
     /// Admission order: index 0 is the oldest-admitted sequence — the one
     /// preemption never evicts while anything newer is running.
     running: Vec<SeqState>,
 }
 
+/// Page-budget work one running sequence needs this step.
+enum Work {
+    /// Decoding: reserve the page this step's decode append commits.
+    DecodeGrow { tokens: usize },
+    /// Mid-prefill: reserve (and plan) the next streamed chunk.
+    Chunk { chunk: usize, completes: bool, write_from: usize },
+    /// Nothing to reserve (retiring, or awaiting a prefill notification).
+    None,
+}
+
 impl Scheduler {
     pub fn new(max_batch: usize) -> Scheduler {
-        Scheduler { max_batch: max_batch.max(1), waiting: VecDeque::new(), running: Vec::new() }
+        Scheduler {
+            max_batch: max_batch.max(1),
+            prefill_chunk: 0,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+        }
     }
 
     /// Enqueue a new request. Returns false if it can *never* run
@@ -136,17 +192,30 @@ impl Scheduler {
         }
     }
 
-    /// Notification from the engine that `id`'s prompt is now in the KV
-    /// cache. The `Prefill → Decoding` flip happens here — *after* the
-    /// engine actually ran the prefill — not at planning time: flipping
-    /// inside [`Scheduler::step`] made `current_tokens()` claim KV
-    /// occupancy for prompts that were not yet prefilled, misreporting
+    /// Notification from the engine that `id`'s prompt is now fully in
+    /// the KV cache. The `Prefill → Decoding` flip happens here — *after*
+    /// the engine actually ran the final chunk — not at planning time:
+    /// flipping inside [`Scheduler::step`] made `current_tokens()` claim
+    /// KV occupancy for prompts that were not yet prefilled, misreporting
     /// cache pressure for the duration of the step.
     pub fn on_prefilled(&mut self, id: u64) {
         if let Some(s) =
             self.running.iter_mut().find(|s| s.id == id && s.phase == Phase::Prefill)
         {
+            s.prefilled = s.resume_tokens();
+            s.planned = s.prefilled;
             s.phase = Phase::Decoding;
+        }
+    }
+
+    /// Notification that the engine ran a partial prefill chunk of
+    /// `tokens` for `id` (streamed admission); the sequence stays in
+    /// `Phase::Prefill` until [`Scheduler::on_prefilled`].
+    pub fn on_prefill_progress(&mut self, id: u64, tokens: usize) {
+        if let Some(s) =
+            self.running.iter_mut().find(|s| s.id == id && s.phase == Phase::Prefill)
+        {
+            s.prefilled += tokens;
         }
     }
 
@@ -166,12 +235,15 @@ impl Scheduler {
     /// is appended to the cache at the *next* decode step — committed
     /// occupancy, which is what capacity accounting needs, can lead
     /// physical residency by one token per decoding sequence).
-    /// Admitted-but-unprefilled sequences contribute zero.
+    /// Mid-prefill sequences contribute their confirmed chunks (and
+    /// mapped prefix tokens) only.
     pub fn kv_tokens_in_cache(&self) -> usize {
         self.running.iter().map(|s| s.current_tokens()).sum()
     }
 
-    /// Remove a finished sequence and release its pages.
+    /// Remove a finished sequence and release its pages (refcount
+    /// decrements — prefix-shared pages stay live for the index or other
+    /// referents).
     pub fn finish(&mut self, id: u64, arena: &mut KvArena) {
         self.running.retain(|s| s.id != id);
         arena.release(id);
@@ -185,65 +257,157 @@ impl Scheduler {
         arena.release(victim.id);
         arena.note_preemption();
         victim.phase = Phase::Waiting;
+        victim.prefix_tokens = 0;
+        victim.prefilled = 0;
+        victim.planned = 0;
         let id = victim.id;
         plan.preempted.push(id);
         self.waiting.push_front(victim);
         id
     }
 
+    /// Admission found the arena exhausted with *nothing running*: no
+    /// future decode will free pages, so the only reclaimable capacity is
+    /// prefix mappings held by waiting sequences — their pages pin index
+    /// nodes at refcount ≥ 2, which the arena's own LRU eviction must not
+    /// touch. Drop one (newest-queued first, the head's own mapping
+    /// last); the dropped sequence re-prefills from scratch when it
+    /// admits. This restores the pre-sharing progress guarantee: once
+    /// every waiting mapping is gone, only index-held pages remain and
+    /// the arena can evict those itself. Returns false when there was
+    /// nothing left to drop.
+    fn drop_one_waiting_mapping(&mut self, arena: &mut KvArena, plan: &mut StepPlan) -> bool {
+        for s in self.waiting.iter_mut().rev() {
+            if s.prefix_tokens > 0 {
+                arena.release(s.id);
+                s.prefix_tokens = 0;
+                s.prefilled = 0;
+                s.planned = 0;
+                plan.preempted.push(s.id);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// The next prefill chunk for `remaining` unprefilled tokens, under
+    /// the configured cap.
+    fn chunk_of(&self, remaining: usize) -> usize {
+        if self.prefill_chunk == 0 {
+            remaining
+        } else {
+            remaining.min(self.prefill_chunk)
+        }
+    }
+
     /// Plan one engine step.
     ///
-    /// 1. **Growth**, oldest-admitted first: every decoding sequence
-    ///    reserves the page its decode append commits this step. When
-    ///    the arena is exhausted, the newest running sequence is
-    ///    preempted (possibly the grower itself — FCFS: older always
-    ///    beats newer) until the reservation fits. Progress guarantee:
-    ///    the oldest sequence can always grow by evicting everything
-    ///    newer, because [`Scheduler::submit`] bounded its worst case by
-    ///    the whole arena.
-    /// 2. **Watermark admission**, FCFS: the waiting head admits when
-    ///    its (re)prefill chunk plus one decode append fits *now*.
-    ///    Head-of-line blocking is intentional (fairness): if the head
-    ///    doesn't fit, nothing behind it jumps.
-    /// 3. Every running sequence decodes this step; newly admitted ones
-    ///    stay in `Phase::Prefill` until the engine reports the prefill
-    ///    actually happened (`on_prefilled`).
+    /// 1. **Growth and prefill streaming**, oldest-admitted first: every
+    ///    decoding sequence reserves the page its decode append commits
+    ///    this step (a write into a prefix-shared page splits it — the
+    ///    reservation covers the private copy too); every mid-prefill
+    ///    sequence reserves and plans its next chunk. When the arena is
+    ///    exhausted, the newest running sequence is preempted (possibly
+    ///    the grower itself — FCFS: older always beats newer) until the
+    ///    reservation fits. Progress guarantee: the oldest sequence can
+    ///    always grow by evicting everything newer (the arena itself
+    ///    evicts index-only pages), because [`Scheduler::submit`] bounded
+    ///    its worst case by the whole arena.
+    /// 2. **Watermark admission**, FCFS: the waiting head admits when its
+    ///    first (re)prefill chunk — plus, if that chunk completes the
+    ///    prompt, one decode append — fits *now*. Head-of-line blocking
+    ///    is intentional (fairness): if the head doesn't fit, nothing
+    ///    behind it jumps.
+    /// 3. Sequences decode this step iff their prompt is resident or its
+    ///    final chunk runs this step; newly admitted ones stay in
+    ///    `Phase::Prefill` until the engine reports the prefill actually
+    ///    happened (`on_prefilled`).
     pub fn step(&mut self, arena: &mut KvArena) -> StepPlan {
         let mut plan = StepPlan::default();
         let mut i = 0;
         while i < self.running.len() {
             let s = &self.running[i];
-            // Sequences the engine retires this step (budget reached)
-            // and admitted-but-unprefilled ones don't append.
-            if s.phase != Phase::Decoding || s.generated >= s.max_new_tokens {
-                i += 1;
-                continue;
-            }
-            loop {
-                let s = &self.running[i];
-                if arena.reserve(s.id, s.prompt_len + s.generated) {
+            let work = match s.phase {
+                // Sequences the engine retires this step (budget reached)
+                // don't append.
+                Phase::Decoding if s.generated < s.max_new_tokens => {
+                    Work::DecodeGrow { tokens: s.prompt_len + s.generated }
+                }
+                Phase::Prefill if s.planned < s.resume_tokens() => {
+                    let target = s.resume_tokens();
+                    let chunk = self.chunk_of(target - s.planned);
+                    Work::Chunk {
+                        chunk,
+                        completes: s.planned + chunk >= target,
+                        write_from: s.planned,
+                    }
+                }
+                // Waiting-in-running can't happen; fully planned Prefill
+                // sequences are awaiting their on_prefilled notification.
+                _ => Work::None,
+            };
+            match work {
+                Work::None => {
                     i += 1;
-                    break;
                 }
-                self.preempt_newest(arena, &mut plan);
-                if self.running.len() == i {
-                    break; // the grower itself was evicted
-                }
+                Work::DecodeGrow { tokens } => loop {
+                    let id = self.running[i].id;
+                    if arena.reserve_for_write(id, tokens, tokens.saturating_sub(1)) {
+                        i += 1;
+                        break;
+                    }
+                    self.preempt_newest(arena, &mut plan);
+                    if self.running.len() == i {
+                        break; // the grower itself was evicted
+                    }
+                },
+                Work::Chunk { chunk, completes, write_from } => loop {
+                    let id = self.running[i].id;
+                    let reserve_to = write_from + chunk + usize::from(completes);
+                    if arena.reserve_for_write(id, reserve_to, write_from) {
+                        let s = &mut self.running[i];
+                        s.planned += chunk;
+                        plan.prefill.push(id);
+                        plan.prefill_chunks.push(chunk);
+                        i += 1;
+                        break;
+                    }
+                    self.preempt_newest(arena, &mut plan);
+                    if self.running.len() == i {
+                        break; // the mid-prefill sequence itself was evicted
+                    }
+                },
             }
         }
         while self.running.len() < self.max_batch {
             let Some(head) = self.waiting.front() else { break };
-            if !arena.reserve(head.id, head.resume_tokens() + 1) {
+            let target = head.resume_tokens();
+            let done = head.prefix_tokens;
+            let chunk = self.chunk_of(target - done);
+            let completes = done + chunk >= target;
+            let reserve_to = done + chunk + usize::from(completes);
+            if !arena.reserve_for_write(head.id, reserve_to, done) {
+                if self.running.is_empty() && self.drop_one_waiting_mapping(arena, &mut plan) {
+                    continue; // re-plan the head with the freed pages
+                }
                 break;
             }
             let mut seq = self.waiting.pop_front().unwrap();
             seq.phase = Phase::Prefill;
+            seq.prefilled = done;
+            seq.planned = done + chunk;
             plan.prefill.push(seq.id);
-            plan.prefill_chunks.push(seq.resume_tokens());
+            plan.prefill_chunks.push(chunk);
             self.running.push(seq);
         }
         for s in self.running.iter() {
-            plan.decode.push(s.id);
+            // Mid-prefill sequences have nothing to decode yet; those
+            // whose final chunk runs this step join the batch (the engine
+            // samples their first token off the prefill logits).
+            let mid_prefill = s.phase == Phase::Prefill && s.planned < s.resume_tokens();
+            if !mid_prefill {
+                plan.decode.push(s.id);
+            }
         }
         plan
     }
@@ -254,7 +418,7 @@ mod tests {
     use super::*;
 
     fn seq(id: u64, prompt: usize, max_new: usize) -> SeqState {
-        SeqState { id, prompt_len: prompt, max_new_tokens: max_new, generated: 0, phase: Phase::Waiting }
+        SeqState::new(id, prompt, max_new)
     }
 
     #[test]
@@ -300,6 +464,85 @@ mod tests {
         sch.finish(1, &mut arena);
         let plan = sch.step(&mut arena);
         assert_eq!(plan.prefill, vec![2]);
+    }
+
+    #[test]
+    fn chunked_prefill_streams_across_steps() {
+        let mut arena = KvArena::accounting(16 * 100);
+        let mut sch = Scheduler::new(4);
+        sch.prefill_chunk = 16; // one page per step
+        sch.submit(seq(1, 40, 4), &arena);
+        // Step 1: admit on the first chunk only; no decode yet.
+        let plan = sch.step(&mut arena);
+        assert_eq!(plan.prefill, vec![1]);
+        assert_eq!(plan.prefill_chunks, vec![16]);
+        assert!(plan.decode.is_empty(), "mid-prefill sequences don't decode");
+        sch.on_prefill_progress(1, 16);
+        assert_eq!(sch.kv_tokens_in_cache(), 16);
+        // Step 2: second chunk.
+        let plan = sch.step(&mut arena);
+        assert_eq!(plan.prefill_chunks, vec![16]);
+        assert!(plan.decode.is_empty());
+        sch.on_prefill_progress(1, 16);
+        // Step 3: final 8-token chunk completes the prompt → decodes.
+        let plan = sch.step(&mut arena);
+        assert_eq!(plan.prefill_chunks, vec![8]);
+        assert_eq!(plan.decode, vec![1], "completion chunk joins the decode batch");
+        sch.on_prefilled(1);
+        assert_eq!(sch.kv_tokens_in_cache(), 40);
+        sch.on_token(1);
+        // Steady decode from here.
+        let plan = sch.step(&mut arena);
+        assert!(plan.prefill.is_empty());
+        assert_eq!(plan.decode, vec![1]);
+    }
+
+    #[test]
+    fn chunked_admission_admits_long_prompt_page_by_page() {
+        // 4-page arena, 62-token prompt: all-or-nothing admission needed
+        // every page up front; chunked admission starts on one.
+        let mut arena = KvArena::accounting(16 * 4);
+        let mut sch = Scheduler::new(4);
+        sch.prefill_chunk = 16;
+        sch.submit(seq(1, 62, 2), &arena);
+        let plan = sch.step(&mut arena);
+        assert_eq!(plan.prefill_chunks, vec![16]);
+        assert_eq!(arena.held_pages(1), 1, "admitted on a single page");
+        sch.on_prefill_progress(1, 16);
+        for expect in [16, 16, 14] {
+            let plan = sch.step(&mut arena);
+            assert_eq!(plan.prefill_chunks, vec![expect]);
+            if expect == 14 {
+                sch.on_prefilled(1);
+            } else {
+                sch.on_prefill_progress(1, expect);
+            }
+        }
+        assert_eq!(sch.kv_tokens_in_cache(), 62);
+    }
+
+    #[test]
+    fn prefix_mapped_tokens_skip_prefill() {
+        let mut arena = KvArena::accounting(16 * 100);
+        let mut sch = Scheduler::new(4);
+        let prompt: Vec<u32> = (0..40).collect();
+        // Engine-side: a finished sequence indexed its prompt pages, and
+        // map_prefix put 32 of the 40 prompt tokens in this one's table.
+        assert!(arena.reserve(900, 40));
+        arena.register_prefix(900, &prompt);
+        arena.release(900);
+        let shared = arena.map_prefix(1, &prompt);
+        assert_eq!(shared, 32);
+        let mut s = seq(1, 40, 4);
+        s.prefix_tokens = shared;
+        sch.submit(s, &arena);
+        let plan = sch.step(&mut arena);
+        assert_eq!(plan.prefill, vec![1]);
+        assert_eq!(plan.prefill_chunks, vec![8], "only the divergent tail prefills");
+        assert_eq!(plan.decode, vec![1], "tail chunk completes the prompt");
+        assert_eq!(sch.kv_tokens_in_cache(), 32, "mapped tokens resident before the chunk runs");
+        sch.on_prefilled(1);
+        assert_eq!(sch.kv_tokens_in_cache(), 40);
     }
 
     #[test]
@@ -438,6 +681,77 @@ mod tests {
     }
 
     #[test]
+    fn preempted_midprefill_sequence_restarts_clean() {
+        let mut arena = KvArena::accounting(16 * 3); // 3 pages
+        let mut sch = Scheduler::new(4);
+        sch.prefill_chunk = 16;
+        // 1 decodes; 2 streams a long prompt behind it.
+        sch.submit(seq(1, 8, 40), &arena);
+        sch.submit(seq(2, 30, 2), &arena);
+        let plan = sch.step(&mut arena);
+        assert_eq!(plan.prefill, vec![1, 2]);
+        assert_eq!(plan.prefill_chunks, vec![8, 16]);
+        sch.on_prefilled(1);
+        sch.on_prefill_progress(2, 16);
+        // Drive 1's decode growth until it claims 2's pages: at 3 pages
+        // total, 1 growing past 16 and then past 32 tokens forces the
+        // mid-prefill 2 out (LIFO).
+        for _ in 0..26 {
+            sch.on_token(1);
+            sch.step(&mut arena);
+        }
+        assert!(arena.preemptions() >= 1);
+        assert_eq!(sch.waiting_len(), 1);
+        assert_eq!(arena.held_pages(2), 0);
+        // 2 lost its streamed progress: re-admission replans from zero.
+        sch.finish(1, &mut arena);
+        let plan = sch.step(&mut arena);
+        assert_eq!(plan.prefill, vec![2]);
+        assert_eq!(plan.prefill_chunks, vec![16], "restart from the first chunk");
+        sch.on_prefill_progress(2, 16);
+        let plan = sch.step(&mut arena);
+        assert_eq!(plan.prefill_chunks, vec![14]);
+        sch.on_prefilled(2);
+        assert_eq!(sch.kv_tokens_in_cache(), 30);
+    }
+
+    #[test]
+    fn stalled_admission_drops_waiting_prefix_mappings() {
+        // Two disjoint 2-page prefixes fill a 4-page arena; both waiting
+        // sequences map one each at submit. The head's tail chunk needs a
+        // page, nothing is running to free one, and the mapped pages pin
+        // their index nodes above the arena's eviction threshold — the
+        // scheduler must shed a waiting mapping rather than stall forever.
+        let mut arena = KvArena::accounting(16 * 4);
+        let prompt_a: Vec<u32> = (0..40).collect();
+        let prompt_b: Vec<u32> = (500..540).collect();
+        for (seed, p) in [(900u64, &prompt_a), (901, &prompt_b)] {
+            // Register exactly the two-page prefix (32 tokens) so both
+            // fit the 4-page arena fully indexed.
+            assert!(arena.reserve(seed, 32));
+            arena.register_prefix(seed, &p[..32]);
+            arena.release(seed);
+        }
+        let mut sch = Scheduler::new(4);
+        let mut s1 = seq(1, 40, 8);
+        s1.prefix_tokens = arena.map_prefix(1, &prompt_a);
+        let mut s2 = seq(2, 40, 8);
+        s2.prefix_tokens = arena.map_prefix(2, &prompt_b);
+        assert_eq!((s1.prefix_tokens, s2.prefix_tokens), (32, 32));
+        assert!(sch.submit(s1, &arena));
+        assert!(sch.submit(s2, &arena));
+        let plan = sch.step(&mut arena);
+        // 2's mapping was dropped (newest first); 1 kept its prefix and
+        // admitted on the 8-token divergent tail.
+        assert_eq!(plan.preempted, vec![2]);
+        assert_eq!(plan.prefill, vec![1]);
+        assert_eq!(plan.prefill_chunks, vec![8]);
+        assert_eq!(sch.waiting_len(), 1, "2 waits for pages, mapping gone");
+        assert_eq!(arena.held_pages(2), 0);
+        assert_eq!(sch.kv_tokens_in_cache(), 32, "1's mapped prefix survived");
+    }
+
+    #[test]
     fn stop_notification_prevents_growth_and_preemption() {
         let mut arena = KvArena::accounting(16 * 2); // 2 pages
         let mut sch = Scheduler::new(4);
@@ -509,6 +823,53 @@ mod tests {
         }
         assert_eq!(completed, 6, "all sequences complete despite preemption");
         assert!(arena.preemptions() > 0, "the workload must exercise preemption");
+        assert_eq!(arena.used_pages(), 0, "all pages released at the end");
+    }
+
+    #[test]
+    fn chunked_preemption_never_deadlocks() {
+        // Same churn workload with streamed 16-token chunks: chunked
+        // admission must preserve the progress guarantee.
+        let mut arena = KvArena::accounting(16 * 3); // 3 pages
+        let mut sch = Scheduler::new(4);
+        sch.prefill_chunk = 16;
+        let mut target = std::collections::HashMap::new();
+        for id in 0..5u64 {
+            let max_new = 6 + (id as usize % 3) * 8;
+            assert!(sch.submit(seq(id, 20, max_new), &arena));
+            target.insert(id, max_new);
+        }
+        let mut gen: std::collections::HashMap<u64, usize> = Default::default();
+        let mut completed = 0usize;
+        for _ in 0..10_000 {
+            let plan = sch.step(&mut arena);
+            if plan.decode.is_empty() && plan.prefill.is_empty() {
+                break;
+            }
+            for (id, chunk) in plan.prefill.iter().zip(&plan.prefill_chunks) {
+                if plan.decode.contains(id) {
+                    sch.on_prefilled(*id);
+                    let g = gen.entry(*id).or_insert(0);
+                    if *g == 0 {
+                        *g = 1;
+                        sch.on_token(*id);
+                    }
+                } else {
+                    sch.on_prefill_progress(*id, *chunk);
+                }
+            }
+            for id in plan.decode.clone() {
+                let g = gen.entry(id).or_insert(0);
+                if *g >= target[&id] {
+                    sch.finish(id, &mut arena);
+                    completed += 1;
+                } else if !plan.preempted.contains(&id) {
+                    *g += 1;
+                    sch.on_token(id);
+                }
+            }
+        }
+        assert_eq!(completed, 5, "all sequences complete despite chunked churn");
         assert_eq!(arena.used_pages(), 0, "all pages released at the end");
     }
 }

@@ -155,6 +155,7 @@ impl Kernel for ElutKernel {
 
     fn prepare_row_into(&self, x: &[f32], k: usize, dst: PreparedRowMut<'_>) {
         debug_assert_eq!(x.len(), k);
+        self.weights_per_byte_checks();
         let PreparedRowMut::LutI16 { aq, tables, scale } = dst else {
             panic!("ELUT expects a LutI16 destination");
         };
@@ -166,19 +167,40 @@ impl Kernel for ElutKernel {
         } else {
             code_count(self.c, self.g)
         };
+        // Per-slot weight patterns (padding slots stay zero), decoded
+        // once per call and shared by the scalar loop and the vector
+        // builders so every tier tabulates the same enumeration.
+        let mut w0 = [0i16; LUT_W];
+        let mut w1 = [0i16; LUT_W];
+        for slot_i in 0..entries {
+            let code = if self.mirror { mirror_join(0, slot_i, self.c, self.g) } else { slot_i };
+            let w = decode_code(code, self.c, self.g, self.alphabet);
+            w0[slot_i] = w[0] as i16;
+            w1[slot_i] = w[1] as i16;
+        }
+        #[cfg(target_arch = "x86_64")]
+        if simd::active_level() == SimdLevel::Avx2 {
+            // SAFETY: AVX2 verified by the active dispatch level; `aq`
+            // holds g=2 quants per group and `tables` one LUT_W-entry
+            // table per group.
+            unsafe { simd::avx2::build_lut16_pair_tables(aq, &w0, &w1, tables) };
+            return;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if simd::active_level() == SimdLevel::Neon {
+            // SAFETY: NEON verified by the active dispatch level; `aq`
+            // holds g=2 quants per group and `tables` one LUT_W-entry
+            // table per group.
+            unsafe { simd::neon::build_lut16_pair_tables(aq, &w0, &w1, tables) };
+            return;
+        }
         tables.fill(0);
         for gi in 0..groups {
-            let a = &aq[gi * self.g..(gi + 1) * self.g];
+            let a0 = aq[self.g * gi] as i16;
+            let a1 = aq[self.g * gi + 1] as i16;
             let t = &mut tables[gi * LUT_W..gi * LUT_W + entries];
             for (slot_i, slot) in t.iter_mut().enumerate() {
-                let code =
-                    if self.mirror { mirror_join(0, slot_i, self.c, self.g) } else { slot_i };
-                let w = decode_code(code, self.c, self.g, self.alphabet);
-                *slot = w
-                    .iter()
-                    .zip(a.iter())
-                    .map(|(&wv, &av)| wv as i16 * av as i16)
-                    .sum();
+                *slot = a0 * w0[slot_i] + a1 * w1[slot_i];
             }
         }
     }

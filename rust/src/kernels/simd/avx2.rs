@@ -1108,6 +1108,68 @@ pub unsafe fn gemv_rows_i2s_sparse(
     sparse::note_elided(SimdLevel::Avx2, elided);
 }
 
+/// Vectorized LUT table build for the g=2 kernels (prepare phase): for
+/// each activation pair `(a0, a1) = (aq[2g], aq[2g+1])` fill the whole
+/// 16-entry table `tables[g·16 + c] = a0·w0[c] + a1·w1[c]` with one
+/// 256-bit multiply-add pass. Padding slots carry zero weight patterns,
+/// so the result equals the scalar fill-then-write loop bit for bit —
+/// all arithmetic is exact in i16 (|a| ≤ 128, |w| ≤ 2 ⇒ |entry| ≤ 512).
+///
+/// # Safety
+/// Caller must have verified AVX2 at run time. `aq.len()` must be even
+/// and `tables.len()` must equal `(aq.len() / 2) * LUT_W`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn build_lut16_pair_tables(
+    aq: &[i8],
+    w0: &[i16; LUT_W],
+    w1: &[i16; LUT_W],
+    tables: &mut [i16],
+) {
+    debug_assert_eq!(aq.len() % 2, 0);
+    debug_assert_eq!(tables.len(), aq.len() / 2 * LUT_W);
+    let vw0 = _mm256_loadu_si256(w0.as_ptr() as *const __m256i);
+    let vw1 = _mm256_loadu_si256(w1.as_ptr() as *const __m256i);
+    let out = tables.as_mut_ptr();
+    for (g, pair) in aq.chunks_exact(2).enumerate() {
+        let a0 = _mm256_set1_epi16(pair[0] as i16);
+        let a1 = _mm256_set1_epi16(pair[1] as i16);
+        let sum = _mm256_add_epi16(_mm256_mullo_epi16(a0, vw0), _mm256_mullo_epi16(a1, vw1));
+        _mm256_storeu_si256(out.add(g * LUT_W) as *mut __m256i, sum);
+    }
+}
+
+/// [`build_lut16_pair_tables`] for g=3 trios (the TL2 mirror region):
+/// `tables[g·16 + h] = a0·w0[h] + a1·w1[h] + a2·w2[h]`.
+///
+/// # Safety
+/// Caller must have verified AVX2 at run time. `aq.len()` must be a
+/// multiple of 3 and `tables.len()` must equal `(aq.len() / 3) * LUT_W`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn build_lut16_trio_tables(
+    aq: &[i8],
+    w0: &[i16; LUT_W],
+    w1: &[i16; LUT_W],
+    w2: &[i16; LUT_W],
+    tables: &mut [i16],
+) {
+    debug_assert_eq!(aq.len() % 3, 0);
+    debug_assert_eq!(tables.len(), aq.len() / 3 * LUT_W);
+    let vw0 = _mm256_loadu_si256(w0.as_ptr() as *const __m256i);
+    let vw1 = _mm256_loadu_si256(w1.as_ptr() as *const __m256i);
+    let vw2 = _mm256_loadu_si256(w2.as_ptr() as *const __m256i);
+    let out = tables.as_mut_ptr();
+    for (g, trio) in aq.chunks_exact(3).enumerate() {
+        let a0 = _mm256_set1_epi16(trio[0] as i16);
+        let a1 = _mm256_set1_epi16(trio[1] as i16);
+        let a2 = _mm256_set1_epi16(trio[2] as i16);
+        let sum = _mm256_add_epi16(
+            _mm256_add_epi16(_mm256_mullo_epi16(a0, vw0), _mm256_mullo_epi16(a1, vw1)),
+            _mm256_mullo_epi16(a2, vw2),
+        );
+        _mm256_storeu_si256(out.add(g * LUT_W) as *mut __m256i, sum);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1009,6 +1009,73 @@ pub unsafe fn gemv_rows_i2s_sparse(
     sparse::note_elided(SimdLevel::Neon, elided);
 }
 
+/// Vectorized LUT table build for the g=2 kernels (prepare phase): for
+/// each activation pair `(a0, a1) = (aq[2g], aq[2g+1])` fill the whole
+/// 16-entry table `tables[g·16 + c] = a0·w0[c] + a1·w1[c]` with two
+/// 8-lane multiply-add passes. Padding slots carry zero weight
+/// patterns, so the result equals the scalar fill-then-write loop bit
+/// for bit — all arithmetic is exact in i16 (|a| ≤ 128, |w| ≤ 2 ⇒
+/// |entry| ≤ 512).
+///
+/// # Safety
+/// Caller must have verified NEON at run time. `aq.len()` must be even
+/// and `tables.len()` must equal `(aq.len() / 2) * LUT_W`.
+#[target_feature(enable = "neon")]
+pub unsafe fn build_lut16_pair_tables(
+    aq: &[i8],
+    w0: &[i16; LUT_W],
+    w1: &[i16; LUT_W],
+    tables: &mut [i16],
+) {
+    debug_assert_eq!(aq.len() % 2, 0);
+    debug_assert_eq!(tables.len(), aq.len() / 2 * LUT_W);
+    let w0a = vld1q_s16(w0.as_ptr());
+    let w0b = vld1q_s16(w0.as_ptr().add(8));
+    let w1a = vld1q_s16(w1.as_ptr());
+    let w1b = vld1q_s16(w1.as_ptr().add(8));
+    let out = tables.as_mut_ptr();
+    for (g, pair) in aq.chunks_exact(2).enumerate() {
+        let a0 = vdupq_n_s16(pair[0] as i16);
+        let a1 = vdupq_n_s16(pair[1] as i16);
+        vst1q_s16(out.add(g * LUT_W), vmlaq_s16(vmulq_s16(a0, w0a), a1, w1a));
+        vst1q_s16(out.add(g * LUT_W + 8), vmlaq_s16(vmulq_s16(a0, w0b), a1, w1b));
+    }
+}
+
+/// [`build_lut16_pair_tables`] for g=3 trios (the TL2 mirror region):
+/// `tables[g·16 + h] = a0·w0[h] + a1·w1[h] + a2·w2[h]`.
+///
+/// # Safety
+/// Caller must have verified NEON at run time. `aq.len()` must be a
+/// multiple of 3 and `tables.len()` must equal `(aq.len() / 3) * LUT_W`.
+#[target_feature(enable = "neon")]
+pub unsafe fn build_lut16_trio_tables(
+    aq: &[i8],
+    w0: &[i16; LUT_W],
+    w1: &[i16; LUT_W],
+    w2: &[i16; LUT_W],
+    tables: &mut [i16],
+) {
+    debug_assert_eq!(aq.len() % 3, 0);
+    debug_assert_eq!(tables.len(), aq.len() / 3 * LUT_W);
+    let w0a = vld1q_s16(w0.as_ptr());
+    let w0b = vld1q_s16(w0.as_ptr().add(8));
+    let w1a = vld1q_s16(w1.as_ptr());
+    let w1b = vld1q_s16(w1.as_ptr().add(8));
+    let w2a = vld1q_s16(w2.as_ptr());
+    let w2b = vld1q_s16(w2.as_ptr().add(8));
+    let out = tables.as_mut_ptr();
+    for (g, trio) in aq.chunks_exact(3).enumerate() {
+        let a0 = vdupq_n_s16(trio[0] as i16);
+        let a1 = vdupq_n_s16(trio[1] as i16);
+        let a2 = vdupq_n_s16(trio[2] as i16);
+        let lo = vmlaq_s16(vmlaq_s16(vmulq_s16(a0, w0a), a1, w1a), a2, w2a);
+        let hi = vmlaq_s16(vmlaq_s16(vmulq_s16(a0, w0b), a1, w1b), a2, w2b);
+        vst1q_s16(out.add(g * LUT_W), lo);
+        vst1q_s16(out.add(g * LUT_W + 8), hi);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -36,6 +36,14 @@ pub const SPARSE_BLOCK_WEIGHTS: usize = 2 * LUT_BLOCK_GROUPS;
 
 const TERNARY: [i8; 3] = [-1, 0, 1];
 
+/// Per-slot weight patterns of the Table-5 pair enumeration: slot `c`
+/// holds `(w0, w1)` of code `c = 3·(w0+1) + (w1+1)` for `c < 9`; the
+/// padding slots stay zero so the vector table builders reproduce the
+/// scalar fill-then-write layout exactly.
+const PAIR_W0: [i16; LUT_W] = [-1, -1, -1, 0, 0, 0, 1, 1, 1, 0, 0, 0, 0, 0, 0, 0];
+/// See [`PAIR_W0`].
+const PAIR_W1: [i16; LUT_W] = [-1, 0, 1, -1, 0, 1, -1, 0, 1, 0, 0, 0, 0, 0, 0, 0];
+
 /// TL1 kernel; `LOSSLESS = false` → TL1_0, `true` → TL1_1.
 pub struct Tl1Kernel<const LOSSLESS: bool>;
 
@@ -70,6 +78,20 @@ pub fn build_tables_tl1_into(aq: &[i8], tables: &mut [i16]) {
     debug_assert_eq!(aq.len() % 2, 0);
     let groups = aq.len() / 2;
     debug_assert_eq!(tables.len(), groups * LUT_W);
+    #[cfg(target_arch = "x86_64")]
+    if simd::active_level() == SimdLevel::Avx2 {
+        // SAFETY: AVX2 verified by the active dispatch level; `aq` holds
+        // 2 quants per group and `tables` one LUT_W-entry table per group.
+        unsafe { simd::avx2::build_lut16_pair_tables(aq, &PAIR_W0, &PAIR_W1, tables) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if simd::active_level() == SimdLevel::Neon {
+        // SAFETY: NEON verified by the active dispatch level; `aq` holds
+        // 2 quants per group and `tables` one LUT_W-entry table per group.
+        unsafe { simd::neon::build_lut16_pair_tables(aq, &PAIR_W0, &PAIR_W1, tables) };
+        return;
+    }
     tables.fill(0);
     for g in 0..groups {
         let a0 = aq[2 * g] as i16;
@@ -532,6 +554,23 @@ mod tests {
             row = [0, 0, pair[0], pair[1]];
             pack_row_tl1(&row, &mut out);
             assert_eq!(out[0] >> 4, code, "pack high nibble {pair:?}");
+        }
+    }
+
+    /// The vector builders' pattern constants must enumerate exactly the
+    /// Table-5 code order the scalar loop produces, with zeroed padding.
+    #[test]
+    fn pair_patterns_match_code_enumeration() {
+        let mut c = 0usize;
+        for w0 in TERNARY {
+            for w1 in TERNARY {
+                assert_eq!(PAIR_W0[c], w0 as i16, "slot {c}");
+                assert_eq!(PAIR_W1[c], w1 as i16, "slot {c}");
+                c += 1;
+            }
+        }
+        for slot in c..LUT_W {
+            assert_eq!((PAIR_W0[slot], PAIR_W1[slot]), (0, 0), "padding slot {slot}");
         }
     }
 

@@ -145,20 +145,60 @@ pub fn build_tables_tl2(aq: &[i8], layout: &Tl2Layout) -> Vec<i16> {
 pub fn build_tables_tl2_into(aq: &[i8], layout: &Tl2Layout, tables: &mut [i16]) {
     let n3 = layout.n3();
     debug_assert_eq!(tables.len(), (n3 + layout.n2()) * LUT_W);
-    tables.fill(0);
-    for g in 0..n3 {
-        let a0 = aq[3 * g] as i16;
-        let a1 = aq[3 * g + 1] as i16;
-        let a2 = aq[3 * g + 2] as i16;
-        let t = &mut tables[g * LUT_W..g * LUT_W + 14];
-        for (half, slot) in t.iter_mut().enumerate() {
-            let code = mirror_join(0, half, 3, 3);
-            let w = decode_code(code, 3, 3, &TERNARY);
-            *slot = a0 * w[0] as i16 + a1 * w[1] as i16 + a2 * w[2] as i16;
-        }
-    }
+    build_trio_region(&aq[..layout.three_k], &mut tables[..n3 * LUT_W]);
     if layout.two_k > 0 {
         build_tables_tl1_into(&aq[layout.three_k..], &mut tables[n3 * LUT_W..]);
+    }
+}
+
+/// Per-slot weight patterns of the positive-half g=3 enumeration (paper
+/// Table 6): slot `h` holds the trio decoded from
+/// `mirror_join(0, h, 3, 3)`; padding slots 14/15 stay zero. Derived
+/// once from the same decode the pack/unpack paths use, so the scalar
+/// and vector table builders provably tabulate the same enumeration.
+fn trio_patterns() -> (&'static [i16; LUT_W], &'static [i16; LUT_W], &'static [i16; LUT_W]) {
+    static PATTERNS: std::sync::OnceLock<([i16; LUT_W], [i16; LUT_W], [i16; LUT_W])> =
+        std::sync::OnceLock::new();
+    let (w0, w1, w2) = PATTERNS.get_or_init(|| {
+        let mut p = ([0i16; LUT_W], [0i16; LUT_W], [0i16; LUT_W]);
+        for half in 0..14 {
+            let w = decode_code(mirror_join(0, half, 3, 3), 3, 3, &TERNARY);
+            p.0[half] = w[0] as i16;
+            p.1[half] = w[1] as i16;
+            p.2[half] = w[2] as i16;
+        }
+        p
+    });
+    (w0, w1, w2)
+}
+
+/// Tabulate the g=3 mirror-consolidated region: one 16-entry table per
+/// activation trio over the positive-half enumeration.
+fn build_trio_region(aq: &[i8], tables: &mut [i16]) {
+    debug_assert_eq!(aq.len() % 3, 0);
+    debug_assert_eq!(tables.len(), (aq.len() / 3) * LUT_W);
+    let (w0, w1, w2) = trio_patterns();
+    #[cfg(target_arch = "x86_64")]
+    if simd::active_level() == SimdLevel::Avx2 {
+        // SAFETY: AVX2 verified by the active dispatch level; the trio
+        // count and table length match the builder's shape contract.
+        unsafe { simd::avx2::build_lut16_trio_tables(aq, w0, w1, w2, tables) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if simd::active_level() == SimdLevel::Neon {
+        // SAFETY: NEON verified by the active dispatch level; the trio
+        // count and table length match the builder's shape contract.
+        unsafe { simd::neon::build_lut16_trio_tables(aq, w0, w1, w2, tables) };
+        return;
+    }
+    tables.fill(0);
+    for (g, trio) in aq.chunks_exact(3).enumerate() {
+        let (a0, a1, a2) = (trio[0] as i16, trio[1] as i16, trio[2] as i16);
+        let t = &mut tables[g * LUT_W..(g + 1) * LUT_W];
+        for half in 0..14 {
+            t[half] = a0 * w0[half] + a1 * w1[half] + a2 * w2[half];
+        }
     }
 }
 

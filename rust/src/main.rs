@@ -44,6 +44,7 @@ const USAGE: &str = "usage: bitnet <info|gen-model|run|serve|tune|pjrt> [options
   serve     --preset tiny --kernel TL2_0 --threads 2 --requests 16 --max-batch 8
             [--qtype auto --tune-profile profile.json]
             [--kv-dtype f32|f16] [--kv-budget 8192]
+            [--prefix-cache on|off] [--prefill-chunk N] [--shared-prefix N]
             [--record-trace trace.json]
   tune      --out profile.json [--preset tiny] [--threads 1] [--batches 1,4]
             [--trace trace.json] [--trace-widths 16] [--search-overrides]
@@ -73,7 +74,13 @@ const USAGE: &str = "usage: bitnet <info|gen-model|run|serve|tune|pjrt> [options
   KV memory is paged: --kv-budget caps total KV tokens across
   sequences, --kv-dtype f16 halves resident KV bytes (f32 stays
   bit-exact); the scheduler admits on prompt-fit and preempts
-  LIFO under pressure. See docs/serving.md.
+  LIFO under pressure. --prefix-cache on shares KV pages across
+  sequences with a common prompt prefix (copy-on-write, radix
+  prompt index); --prefill-chunk N streams long prompts into the
+  cache N tokens per step instead of admitting all-or-nothing;
+  --shared-prefix N prepends an N-token synthetic system prompt
+  to every serve request (prefix-sharing workloads).
+  See docs/serving.md.
 
   --simd auto|scalar|avx2|neon (any subcommand) pins the kernels'
   SIMD dispatch tier; `auto` (the default) probes the CPU. Unsupported
@@ -382,6 +389,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 16)?;
     let max_new = args.get_usize("max-new", 16)?;
     let kv_dtype = build_kv_dtype(&lc)?;
+    let prefix_cache = match args.get_or("prefix-cache", "off").as_str() {
+        "on" => true,
+        "off" => false,
+        other => bail!("unknown --prefix-cache {other:?} (expected on or off)"),
+    };
+    let prefill_chunk = args.get_usize("prefill-chunk", 0)?;
+    let shared_prefix = args.get_usize("shared-prefix", 0)?;
     let model = build_model(&lc, args.has_flag("verbose"))?;
     let vocab = model.cfg.vocab_size as u32;
     let profile_widths = profile_widths_of(&model);
@@ -393,14 +407,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
             eos_token: 1,
             seed: lc.seed,
             kv_dtype,
+            prefix_cache,
+            prefill_chunk,
+            profile_widths: profile_widths.clone(),
         },
     );
     let mut rng = bitnet::util::Rng::new(lc.seed + 1);
+    // The shared-prefix workload: every request opens with the same
+    // deterministic N-token "system prompt" before its random tail —
+    // the traffic shape prefix caching is built for.
+    let system: Vec<u32> =
+        (0..shared_prefix).map(|i| 3 + (i * 17 + 5) as u32 % (vocab - 3)).collect();
     let t0 = std::time::Instant::now();
     let handles: Vec<_> = (0..n_requests)
         .map(|_| {
             let len = 4 + rng.next_below(12);
-            let prompt: Vec<u32> = (0..len).map(|_| 3 + rng.next_below(vocab as usize - 3) as u32).collect();
+            let mut prompt = system.clone();
+            prompt.extend((0..len).map(|_| 3 + rng.next_below(vocab as usize - 3) as u32));
             engine.submit(Request::greedy(prompt, max_new))
         })
         .collect();
@@ -432,6 +455,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     if resident > budget {
         bail!("KV arena resident bytes {resident} exceed the {budget}-byte budget");
+    }
+    let ord = std::sync::atomic::Ordering::Relaxed;
+    let hit = engine.metrics.prefix_hit_tokens.load(ord);
+    let computed = engine.metrics.prefill_tokens_computed.load(ord);
+    let splits = engine.metrics.kv_cow_splits.load(ord);
+    println!(
+        "prefix cache: {}, {hit} hit tokens, {computed} prefill tokens computed, {splits} cow splits",
+        if prefix_cache { "on" } else { "off" }
+    );
+    // The CI prefix-cache smoke invariant: with sharing on and every
+    // request opening with the same system prompt, the index must serve
+    // hits — zero means the radix lookup or registration regressed.
+    if prefix_cache && shared_prefix > 0 && hit == 0 {
+        bail!("--prefix-cache on with --shared-prefix {shared_prefix} served zero hit tokens");
     }
     if args.has_flag("verbose") {
         println!("kernels: {}", engine.kernel_info);

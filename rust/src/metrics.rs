@@ -134,6 +134,21 @@ pub struct EngineMetrics {
     /// reservation found the arena exhausted (they re-prefill on
     /// re-admission) — the price of watermark over worst-case admission.
     pub kv_preemptions: AtomicU64,
+    /// Prompt tokens that actually went through a prefill GEMM (streamed
+    /// chunks and preemption re-prefills included). With prefix sharing
+    /// this runs *below* `prompt_tokens`: the gap is work the radix index
+    /// saved.
+    pub prefill_tokens_computed: AtomicU64,
+    /// Prompt tokens served straight from the arena's radix prefix index
+    /// (mapped copy-on-write instead of recomputed).
+    pub prefix_hit_tokens: AtomicU64,
+    /// Shared pages privately copied because a sequence wrote into them
+    /// (copy-on-write splits).
+    pub kv_cow_splits: AtomicU64,
+    /// Tune-vs-serve shape drift (`ServingTrace::drift_l1` against the
+    /// active tuning profile), stored ×1000 (milli-units) so the hot path
+    /// stays integer-atomic. Zero when no profile is loaded.
+    pub drift_l1_milli: AtomicU64,
     /// The SIMD dispatch tier the kernels run at, as
     /// `crate::kernels::SimdLevel as u8` (0 scalar, 1 avx2, 2 neon) —
     /// mirrored at snapshot time ([`EngineMetrics::mirror_simd`]).
@@ -189,6 +204,12 @@ impl EngineMetrics {
         }
     }
 
+    /// The mirrored tune-vs-serve shape drift as its natural f64 (see
+    /// `drift_l1_milli` for the storage encoding).
+    pub fn drift_l1(&self) -> f64 {
+        self.drift_l1_milli.load(Ordering::Relaxed) as f64 / 1000.0
+    }
+
     pub fn mean_batch(&self) -> f64 {
         let steps = self.decode_steps.load(Ordering::Relaxed);
         if steps == 0 {
@@ -201,7 +222,7 @@ impl EngineMetrics {
     /// Human-readable one-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "req {}/{} done, {} rejected | tokens {}+{} | steps {} (mean batch {:.2}, peak {}) | step mean {:.1}µs p99 {}µs | ttft mean {:.1}µs | dispatch fallbacks {} degraded {} | simd {} (calls scalar/avx2/neon {}/{}/{}) | sparse elided scalar/avx2/neon {}/{}/{} | prepare {} hits / {} misses (buffers {} reused, {} alloc'd) | trace {} steps / {} shapes | kv {}/{} pages (peak {}) {} KiB resident, {} preemptions",
+            "req {}/{} done, {} rejected | tokens {}+{} | steps {} (mean batch {:.2}, peak {}) | step mean {:.1}µs p99 {}µs | ttft mean {:.1}µs | dispatch fallbacks {} degraded {} | simd {} (calls scalar/avx2/neon {}/{}/{}) | sparse elided scalar/avx2/neon {}/{}/{} | prepare {} hits / {} misses (buffers {} reused, {} alloc'd) | trace {} steps / {} shapes (drift {:.3}) | kv {}/{} pages (peak {}) {} KiB resident, {} preemptions | prefix {} hit / {} computed tokens, {} cow splits",
             self.requests_completed.load(Ordering::Relaxed),
             self.requests_submitted.load(Ordering::Relaxed),
             self.requests_rejected.load(Ordering::Relaxed),
@@ -228,11 +249,15 @@ impl EngineMetrics {
             self.prepare_buffer_allocs.load(Ordering::Relaxed),
             self.trace_steps.load(Ordering::Relaxed),
             self.trace_shapes.load(Ordering::Relaxed),
+            self.drift_l1(),
             self.kv_pages_used.load(Ordering::Relaxed),
             self.kv_pages_total.load(Ordering::Relaxed),
             self.kv_pages_peak.load(Ordering::Relaxed),
             self.kv_resident_bytes.load(Ordering::Relaxed) / 1024,
             self.kv_preemptions.load(Ordering::Relaxed),
+            self.prefix_hit_tokens.load(Ordering::Relaxed),
+            self.prefill_tokens_computed.load(Ordering::Relaxed),
+            self.kv_cow_splits.load(Ordering::Relaxed),
         )
     }
 }
@@ -283,6 +308,19 @@ mod tests {
         sparse::note_elided(SimdLevel::Scalar, 7);
         m.mirror_simd();
         assert!(m.sparse_elided_total() >= before + 7);
+    }
+
+    #[test]
+    fn drift_and_prefix_metrics_render_in_summary() {
+        let m = EngineMetrics::new();
+        m.drift_l1_milli.store(125, Ordering::Relaxed);
+        m.prefix_hit_tokens.store(32, Ordering::Relaxed);
+        m.prefill_tokens_computed.store(48, Ordering::Relaxed);
+        m.kv_cow_splits.store(2, Ordering::Relaxed);
+        assert_eq!(m.drift_l1(), 0.125);
+        let s = m.summary();
+        assert!(s.contains("drift 0.125"), "{s}");
+        assert!(s.contains("prefix 32 hit / 48 computed tokens, 2 cow splits"), "{s}");
     }
 
     #[test]

@@ -1,0 +1,229 @@
+//! End-to-end prefix-sharing and chunked-prefill tests against the
+//! serving engine: the acceptance criteria of the COW + radix-index PR.
+//!
+//! * A shared system prompt must let the same KV budget co-run at least
+//!   2x the sequences of the no-sharing engine, with the shared prefix
+//!   prefilled exactly once (the prefill-token counter proves it).
+//! * Every sequence's tokens must be bit-identical to its unshared run —
+//!   including after copy-on-write splits and preemption round-trips.
+//! * Chunked prefill must be bit-identical to whole-prompt prefill for
+//!   every chunk size and KV dtype, including re-prefill after a
+//!   preemption.
+//!
+//! Greedy outputs are batch-composition-invariant (pinned by
+//! `serving::batched_output_matches_sequential_output`), so the output
+//! assertions here are robust to submit-timing races; the concurrency
+//! and accounting assertions are made deterministic by waiting out the
+//! seed request before the sharers are submitted (prompts are indexed at
+//! prefill completion, so a prefix can only be mapped after its donor
+//! finished prefilling).
+
+use bitnet::coordinator::{Engine, EngineConfig, KvDtype, Request};
+use bitnet::kernels::QuantType;
+use bitnet::model::{ModelConfig, Transformer};
+use std::sync::atomic::Ordering;
+
+fn tiny_model() -> Transformer {
+    Transformer::synthetic(&ModelConfig::tiny(), QuantType::I2S, 5)
+}
+
+/// 8-page arena, 66-token prompts sharing a 64-token (4 full pages)
+/// system prefix, 6 new tokens each: unshared, every sequence needs 5
+/// pages (67-token watermark) so the arena serializes them; shared, the
+/// 4 index pages plus one private tail page each co-run all four
+/// followers.
+#[test]
+fn shared_system_prompt_doubles_admitted_concurrency() {
+    let system: Vec<u32> = (0u32..64).map(|i| (i * 7 + 3) % 512).collect();
+    let prompts: Vec<Vec<u32>> = (0u32..5)
+        .map(|i| {
+            let mut p = system.clone();
+            p.extend_from_slice(&[400 + i, 300 + i]);
+            p
+        })
+        .collect();
+    let run = |prefix_cache: bool, prefill_chunk: usize| {
+        let engine = Engine::start(
+            tiny_model(),
+            EngineConfig {
+                max_batch: 4,
+                kv_budget_tokens: 128,
+                seed: 7,
+                prefix_cache,
+                prefill_chunk,
+                ..Default::default()
+            },
+        );
+        // The seed request runs alone: its prompt pages enter the radix
+        // index when its prefill completes, before any sharer submits.
+        let mut outs = vec![engine.submit(Request::greedy(prompts[0].clone(), 6)).wait().0];
+        let handles: Vec<_> =
+            prompts[1..].iter().map(|p| engine.submit(Request::greedy(p.clone(), 6))).collect();
+        outs.extend(handles.into_iter().map(|h| h.wait().0));
+        let m = &engine.metrics;
+        (
+            outs,
+            m.peak_batch.load(Ordering::Relaxed),
+            m.prefill_tokens_computed.load(Ordering::Relaxed),
+            m.prefix_hit_tokens.load(Ordering::Relaxed),
+        )
+    };
+
+    let (outs_off, peak_off, computed_off, hit_off) = run(false, 0);
+    assert_eq!(hit_off, 0);
+    assert_eq!(computed_off, 5 * 66, "no sharing: every prompt prefills in full");
+    assert_eq!(peak_off, 1, "5 pages per sequence serialize an 8-page arena");
+
+    let (outs_on, peak_on, computed_on, hit_on) = run(true, 0);
+    assert_eq!(outs_on, outs_off, "sharing must not change any sequence's tokens");
+    assert_eq!(hit_on, 4 * 64, "each follower maps the 4 indexed system pages");
+    assert_eq!(computed_on, 66 + 4 * 2, "the shared prefix prefilled exactly once");
+    assert!(
+        peak_on >= 2 * peak_off,
+        "same budget must co-run >= 2x the sequences (got {peak_on} vs {peak_off})"
+    );
+
+    // Chunked streaming composes with sharing: same tokens, and still a
+    // single prefill of the shared prefix.
+    let (outs_chunked, _, computed_chunked, hit_chunked) = run(true, 16);
+    assert_eq!(outs_chunked, outs_off);
+    assert_eq!((computed_chunked, hit_chunked), (66 + 4 * 2, 4 * 64));
+}
+
+/// Identical resubmission maps 31 of 32 tokens (the cap keeps the last
+/// token prefillable), so its first write lands in a shared page and
+/// must COW-split it; a prompt diverging mid-page shares only the fully
+/// matching page. Both must decode bit-identically to fresh engines.
+#[test]
+fn cow_splits_and_divergence_keep_outputs_bit_identical() {
+    let prompt: Vec<u32> = (0u32..32).map(|i| (i * 11 + 2) % 512).collect();
+    let mut diverging = prompt.clone();
+    for t in diverging[16..].iter_mut() {
+        *t += 100; // second page differs, first page matches
+    }
+    let fresh = |p: &[u32]| {
+        let engine = Engine::start(
+            tiny_model(),
+            EngineConfig { max_batch: 2, seed: 7, prefix_cache: true, ..Default::default() },
+        );
+        engine.submit(Request::greedy(p.to_vec(), 6)).wait().0
+    };
+    let (a_ref, c_ref) = (fresh(&prompt), fresh(&diverging));
+
+    let engine = Engine::start(
+        tiny_model(),
+        EngineConfig { max_batch: 2, seed: 7, prefix_cache: true, ..Default::default() },
+    );
+    let a = engine.submit(Request::greedy(prompt.clone(), 6)).wait().0;
+    let b = engine.submit(Request::greedy(prompt.clone(), 6)).wait().0;
+    let c = engine.submit(Request::greedy(diverging.clone(), 6)).wait().0;
+    assert_eq!(a, a_ref);
+    assert_eq!(b, a_ref, "resubmission decodes bit-identically off shared pages");
+    assert_eq!(c, c_ref, "mid-prompt divergence maps only the matching page");
+
+    let m = &engine.metrics;
+    assert!(
+        m.kv_cow_splits.load(Ordering::Relaxed) >= 1,
+        "writing the last prompt token into a shared page must split it"
+    );
+    assert_eq!(m.prefix_hit_tokens.load(Ordering::Relaxed), 31 + 16);
+    assert_eq!(m.prefill_tokens_computed.load(Ordering::Relaxed), 32 + 1 + 16);
+}
+
+/// Two sharers of a one-page system prompt in a 4-page arena: their
+/// decode growth exhausts the arena, the newest is preempted (losing its
+/// mapping) and re-prefills from scratch on re-admission — and every
+/// token stream still matches a roomy unshared engine.
+#[test]
+fn preempted_sharer_reprefills_and_matches_unshared_outputs() {
+    let system: Vec<u32> = (0u32..16).map(|i| (i * 5 + 1) % 512).collect();
+    let prompts: Vec<Vec<u32>> = [[200u32, 201], [210, 211], [220, 221]]
+        .iter()
+        .map(|tail| {
+            let mut p = system.clone();
+            p.extend_from_slice(tail);
+            p
+        })
+        .collect();
+    let reference: Vec<Vec<u32>> = {
+        let engine = Engine::start(
+            tiny_model(),
+            EngineConfig { max_batch: 2, seed: 7, ..Default::default() },
+        );
+        prompts.iter().map(|p| engine.submit(Request::greedy(p.clone(), 20)).wait().0).collect()
+    };
+
+    let engine = Engine::start(
+        tiny_model(),
+        EngineConfig {
+            max_batch: 2,
+            kv_budget_tokens: 64, // 4 pages
+            seed: 7,
+            prefix_cache: true,
+            ..Default::default()
+        },
+    );
+    let first = engine.submit(Request::greedy(prompts[0].clone(), 20)).wait().0;
+    let handles: Vec<_> =
+        prompts[1..].iter().map(|p| engine.submit(Request::greedy(p.clone(), 20))).collect();
+    let rest: Vec<Vec<u32>> = handles.into_iter().map(|h| h.wait().0).collect();
+    assert_eq!(first, reference[0]);
+    assert_eq!(rest, reference[1..], "preempted sharer must reproduce its unshared tokens");
+
+    let m = &engine.metrics;
+    assert!(
+        m.kv_preemptions.load(Ordering::Relaxed) >= 1,
+        "growth past the 4-page arena must preempt one sharer"
+    );
+    assert_eq!(
+        m.prefix_hit_tokens.load(Ordering::Relaxed),
+        2 * 16,
+        "both sharers mapped the system page at submit; re-admission re-prefills instead"
+    );
+}
+
+/// One run of the preemption-pressure workload: two 16-token prompts,
+/// 33 new tokens each, under `budget` KV tokens with the given prefill
+/// chunk and page dtype.
+fn run_pressure(budget: usize, chunk: usize, dtype: KvDtype) -> (Vec<Vec<u32>>, u64) {
+    let engine = Engine::start(
+        tiny_model(),
+        EngineConfig {
+            max_batch: 4,
+            kv_budget_tokens: budget,
+            seed: 7,
+            kv_dtype: dtype,
+            prefill_chunk: chunk,
+            ..Default::default()
+        },
+    );
+    let prompts: Vec<Vec<u32>> = vec![(3..19).collect(), (103..119).collect()];
+    let handles: Vec<_> =
+        prompts.iter().map(|p| engine.submit(Request::greedy(p.clone(), 33))).collect();
+    let outs = handles.into_iter().map(|h| h.wait().0).collect();
+    (outs, engine.metrics.kv_preemptions.load(Ordering::Relaxed))
+}
+
+/// Chunked prefill must be bit-identical to whole-prompt prefill for
+/// every chunk size (one page, three pages, unbounded) and both KV
+/// dtypes — under an arena tight enough that preemption forces chunked
+/// *re*-prefill too.
+#[test]
+fn chunked_prefill_bit_identical_across_chunk_sizes_and_dtypes() {
+    for dtype in [KvDtype::F32, KvDtype::F16] {
+        let (reference, _) = run_pressure(4096, 0, dtype);
+        for chunk in [0usize, 16, 48] {
+            let (outs, preemptions) = run_pressure(64, chunk, dtype);
+            assert_eq!(
+                outs,
+                reference,
+                "chunk={chunk} dtype={} diverged from whole-prompt prefill",
+                dtype.name()
+            );
+            assert!(
+                preemptions >= 1,
+                "the 4-page arena must exercise re-prefill after preemption (chunk={chunk})"
+            );
+        }
+    }
+}

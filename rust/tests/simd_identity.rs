@@ -211,6 +211,56 @@ fn tail_blocks_pinned_by_fixed_seed_cases() {
     }
 }
 
+/// The prepare-phase LUT table build is vectorized too, so it gets its
+/// own lockdown: compare the prepared activation buffers themselves
+/// (int16 tables for the lossless kernels, int8 tables + block scales
+/// for the requantized ones) between forced-scalar and every tier, so a
+/// compensating accumulation bug cannot mask a table-builder bug. K
+/// shapes hit the kernel minimum, an odd ×13 multiple, and a large
+/// multi-block row (1920 also exercises TL2's trio/tail split).
+#[test]
+fn lut_table_build_bit_identical_across_simd_levels() {
+    use bitnet::kernels::Prepared;
+    let luts = [
+        QuantType::Tl10,
+        QuantType::Tl11,
+        QuantType::Tl20,
+        QuantType::Tl21,
+        QuantType::Elut4,
+        QuantType::Elut5,
+    ];
+    for qt in luts {
+        let kern = kernel_for(qt);
+        let kmul = kern.info().k_multiple;
+        for k in [kmul.max(4), kmul * 13, 1920] {
+            let mut rng = Rng::new(1000 + k as u64);
+            let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+            let reference = simd::with_level(SimdLevel::Scalar, || kern.prepare(&x, k));
+            for level in levels() {
+                let p = simd::with_level(level, || kern.prepare(&x, k));
+                match (&reference, &p) {
+                    (
+                        Prepared::LutI16 { tables: ta, scale: sa },
+                        Prepared::LutI16 { tables: tb, scale: sb },
+                    ) => {
+                        assert_eq!(sa, sb, "{qt:?} k={k} at {}: act scale", level.name());
+                        assert_eq!(ta, tb, "{qt:?} k={k} at {}: int16 tables", level.name());
+                    }
+                    (
+                        Prepared::LutI8 { tables: ta, block_scales: ba, scale: sa, .. },
+                        Prepared::LutI8 { tables: tb, block_scales: bb, scale: sb, .. },
+                    ) => {
+                        assert_eq!(sa, sb, "{qt:?} k={k} at {}: act scale", level.name());
+                        assert_eq!(ba, bb, "{qt:?} k={k} at {}: block scales", level.name());
+                        assert_eq!(ta, tb, "{qt:?} k={k} at {}: int8 tables", level.name());
+                    }
+                    _ => panic!("{qt:?}: prepared kinds must match across tiers"),
+                }
+            }
+        }
+    }
+}
+
 /// The lossless kernels must stay bit-exact against the integer
 /// training-scheme reference *through every vector path*, not just
 /// match scalar: LUT gathers and maddubs-style accumulation must
