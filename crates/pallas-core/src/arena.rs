@@ -1,0 +1,1175 @@
+//! Paged KV-cache arena (vLLM-style block allocator that **owns the
+//! bytes**).
+//!
+//! The arena divides the engine's KV budget into fixed-size pages of
+//! [`PAGE_TOKENS`] tokens and backs them with real storage: one K slab and
+//! one V slab per transformer layer, page-granular, in
+//! [`KvDtype::F32`] (bit-exact with the pre-paged contiguous layout) or
+//! [`KvDtype::F16`] (half the resident bytes, `--kv-dtype f16`). A page id
+//! addresses the same page-sized region in every layer's slabs, so a
+//! sequence needs exactly one page table however deep the model is.
+//!
+//! Memory is **lazy**: slabs grow only when a page id is minted for the
+//! first time, so resident bytes track the *peak pages actually used*,
+//! not the worst-case budget. Freed pages are recycled before new ones
+//! are minted (continuous batching keeps the footprint near the working
+//! set).
+//!
+//! Each page is its own allocation, so with NUMA placement installed
+//! ([`KvArena::set_placement`]) minting zeroes — first-touches — a
+//! page's bytes from a thread pinned to the owning node
+//! (`page % n_nodes`), and [`KvArena::resident_bytes_by_node`] reports
+//! where the working set actually lives. Placement only moves bytes
+//! between memory controllers; reads, writes and COW copies are
+//! bit-identical with or without it.
+//!
+//! Pages are **refcounted with copy-on-write semantics**: several page
+//! tables (and the prompt index below) can map the same physical page,
+//! release decrements, and only the last referent returns the page to the
+//! free list. A write into a page mapped more than once first splits it —
+//! allocates a private page and copies the K/V bytes across every layer —
+//! so shared history is never clobbered ([`KvArena::reserve_for_write`]
+//! does this eagerly at admission; [`KvArena::append`] keeps a lazy
+//! safety net).
+//!
+//! On top of COW sits a **radix prompt index**: a page-granular trie over
+//! token-id chunks ([`KvArena::register_prefix`] inserts a finished
+//! prompt's full pages, [`KvArena::map_prefix`] maps the longest indexed
+//! prefix of a new prompt into a fresh sequence's table, sharing the
+//! pages instead of re-prefilling them). Index-held pages are evicted
+//! LRU-leaf-first when an allocation would otherwise fail, so the index
+//! is a cache, not a leak: admission always wins over retained prefixes.
+//!
+//! The arena sits below both the model layer (`pallas_model::Session`
+//! appends and attends through it) and the serving scheduler
+//! (`pallas_serve::coordinator::scheduler::Scheduler`), which uses it as
+//! the admission-control ledger: `reserve`/`release` move
+//! pages between the free list and per-sequence page tables, and
+//! preemptions (watermark admission ran out of room mid-decode) are
+//! counted here for the engine metrics.
+
+use crate::threadpool::ThreadPool;
+use crate::util::f16::f16_to_f32_fast;
+use crate::util::{ceil_div, f32_to_f16};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Tokens per KV page.
+pub const PAGE_TOKENS: usize = 16;
+
+/// Element type a KV page stores.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvDtype {
+    /// 4 bytes/element; bit-exact with the pre-paged contiguous cache.
+    F32,
+    /// 2 bytes/element; K/V rows round-trip through IEEE binary16 on
+    /// append (half the resident bytes, small perplexity cost).
+    F16,
+}
+
+impl KvDtype {
+    /// Parse a CLI/config value (`f32` | `f16`, case-insensitive).
+    pub fn parse(s: &str) -> Option<KvDtype> {
+        if s.eq_ignore_ascii_case("f32") {
+            Some(KvDtype::F32)
+        } else if s.eq_ignore_ascii_case("f16") {
+            Some(KvDtype::F16)
+        } else {
+            None
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::F16 => "f16",
+        }
+    }
+
+    pub fn elem_bytes(self) -> usize {
+        match self {
+            KvDtype::F32 => 4,
+            KvDtype::F16 => 2,
+        }
+    }
+}
+
+/// The backing storage of one physical page in one layer's K (or V)
+/// slab. Each page is its own allocation (rather than a region of one
+/// big `Vec`) so minting can zero — and therefore first-touch — the
+/// bytes from a thread pinned to the NUMA node that owns the page; every
+/// access is page-local, so the split costs nothing on the read path.
+#[derive(Clone)]
+enum PageStore {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+}
+
+impl PageStore {
+    /// Allocate and zero a page's elements. The zeroing pass is the
+    /// first touch: run it on the owning node's thread and the kernel
+    /// backs the page with that node's memory.
+    fn zeroed(dtype: KvDtype, elems: usize) -> PageStore {
+        match dtype {
+            KvDtype::F32 => PageStore::F32(vec![0.0; elems]),
+            KvDtype::F16 => PageStore::F16(vec![0; elems]),
+        }
+    }
+
+    fn byte_len(&self) -> usize {
+        match self {
+            PageStore::F32(v) => v.len() * 4,
+            PageStore::F16(v) => v.len() * 2,
+        }
+    }
+}
+
+/// One layer's K (or V) storage: page-granular, grown lazily as pages are
+/// minted. `pages[p]` backs physical page id `p`.
+struct Slab {
+    pages: Vec<PageStore>,
+}
+
+impl Slab {
+    fn new() -> Slab {
+        Slab { pages: Vec::new() }
+    }
+
+    fn byte_len(&self) -> usize {
+        self.pages.iter().map(PageStore::byte_len).sum()
+    }
+
+    /// Write one row at element offset `off` inside `page`.
+    fn write_row(&mut self, page: u32, off: usize, row: &[f32]) {
+        match &mut self.pages[page as usize] {
+            PageStore::F32(v) => v[off..off + row.len()].copy_from_slice(row),
+            PageStore::F16(v) => {
+                for (dst, &src) in v[off..off + row.len()].iter_mut().zip(row.iter()) {
+                    *dst = f32_to_f16(src);
+                }
+            }
+        }
+    }
+
+    /// Raw copy of one page's elements (COW split): bit-exact for both
+    /// dtypes — f16 pages copy their stored binary16 words, no re-round.
+    /// Copies element-wise into `dst`'s existing allocation, so the
+    /// destination page keeps its first-touch placement.
+    fn copy_page(&mut self, src: u32, dst: u32) {
+        let (s, d) = (src as usize, dst as usize);
+        if s == d {
+            return;
+        }
+        let (head, tail) = self.pages.split_at_mut(s.max(d));
+        let (src_p, dst_p) = if s < d { (&head[s], &mut tail[0]) } else { (&tail[0], &mut head[d]) };
+        match (src_p, dst_p) {
+            (PageStore::F32(a), PageStore::F32(b)) => b.copy_from_slice(a),
+            (PageStore::F16(a), PageStore::F16(b)) => b.copy_from_slice(a),
+            _ => unreachable!("slab pages share one dtype"),
+        }
+    }
+
+    /// The first `tn` rows of `page` as f32: borrowed straight from an
+    /// F32 page, or decoded into `scratch` for F16 (one decode per page
+    /// per query row — the inner attention dot always runs over a
+    /// contiguous f32 slice).
+    fn page_rows<'a>(
+        &'a self,
+        page: u32,
+        row_elems: usize,
+        tn: usize,
+        scratch: &'a mut Vec<f32>,
+    ) -> &'a [f32] {
+        match &self.pages[page as usize] {
+            PageStore::F32(v) => &v[..tn * row_elems],
+            PageStore::F16(v) => {
+                scratch.clear();
+                scratch.extend(v[..tn * row_elems].iter().map(|&b| f16_to_f32_fast(b)));
+                &scratch[..]
+            }
+        }
+    }
+}
+
+/// One node of the radix prompt index: a full page's worth of token ids
+/// (`key`) plus the physical page holding their K/V rows. The node holds
+/// one refcount on `page` for as long as it is live.
+struct TrieNode {
+    key: Vec<u32>,
+    page: u32,
+    parent: usize,
+    children: Vec<usize>,
+    /// Logical LRU clock value of the last lookup/insert touching this
+    /// node (no wall clock: deterministic under test).
+    touch: u64,
+    live: bool,
+}
+
+/// Page-granular trie over prompt token ids. Node 0 is the root (no key,
+/// no page, never evicted); nodes are slab-allocated with slot reuse.
+struct PrefixIndex {
+    nodes: Vec<TrieNode>,
+    free_slots: Vec<usize>,
+    clock: u64,
+}
+
+impl PrefixIndex {
+    fn new() -> PrefixIndex {
+        PrefixIndex {
+            nodes: vec![TrieNode {
+                key: Vec::new(),
+                page: u32::MAX,
+                parent: 0,
+                children: Vec::new(),
+                touch: 0,
+                live: true,
+            }],
+            free_slots: Vec::new(),
+            clock: 0,
+        }
+    }
+
+    /// The child of `node` whose key matches `chunk`, if indexed.
+    fn child_matching(&self, node: usize, chunk: &[u32]) -> Option<usize> {
+        self.nodes[node].children.iter().copied().find(|&c| self.nodes[c].key.as_slice() == chunk)
+    }
+
+    fn alloc_node(&mut self, node: TrieNode) -> usize {
+        if let Some(slot) = self.free_slots.pop() {
+            self.nodes[slot] = node;
+            slot
+        } else {
+            self.nodes.push(node);
+            self.nodes.len() - 1
+        }
+    }
+
+    /// Live nodes (== pages the index holds a refcount on).
+    fn live_nodes(&self) -> usize {
+        self.nodes.iter().skip(1).filter(|n| n.live).count()
+    }
+}
+
+/// Page-granular KV arena: budget ledger + refcounted page tables +
+/// prompt index + backing slabs.
+pub struct KvArena {
+    n_layers: usize,
+    kv_dim: usize,
+    dtype: KvDtype,
+    page_tokens: usize,
+    total_pages: usize,
+    /// Recycled page ids (refcount reached zero before `next_page`
+    /// reached the cap). Popped before minting, so balanced churn never
+    /// grows the slabs.
+    free_pages: Vec<u32>,
+    /// Page ids minted so far == pages of slab storage actually resident.
+    next_page: u32,
+    /// seq id → page table (the indirection attention reads through).
+    /// Entries may alias across tables (shared prefixes) — `refcounts`
+    /// tracks how many referents each physical page has.
+    tables: HashMap<u64, Vec<u32>>,
+    /// Referents per minted page id: one per page-table entry mapping it
+    /// plus one per live trie node holding it. Zero ⇔ on the free list.
+    refcounts: Vec<u32>,
+    prefix: PrefixIndex,
+    peak_used: usize,
+    preemptions: u64,
+    prefix_hit_tokens: u64,
+    cow_splits: u64,
+    k_slabs: Vec<Slab>,
+    v_slabs: Vec<Slab>,
+    /// NUMA placement: when set (multi-node pool), page `p`'s slabs are
+    /// zeroed — first-touched — on node `p % n_nodes` via
+    /// [`ThreadPool::run_on_node`].
+    placement: Option<Arc<ThreadPool>>,
+    /// Bytes of slab storage minted on each node (single entry when no
+    /// placement is installed).
+    node_resident: Vec<usize>,
+}
+
+impl KvArena {
+    /// Arena sized for `max_tokens` total KV tokens across all sequences.
+    /// The page count rounds *up*: flooring would silently discard up to
+    /// `PAGE_TOKENS - 1` tokens of budget the caller paid for (e.g. a
+    /// 100-token budget serving only 96), so the invariant is
+    /// `total_pages * PAGE_TOKENS >= max_tokens`. No slab memory is
+    /// allocated here — pages mint lazily on first reserve.
+    pub fn new(n_layers: usize, kv_dim: usize, max_tokens: usize, dtype: KvDtype) -> KvArena {
+        Self::with_page_tokens(n_layers, kv_dim, max_tokens, dtype, PAGE_TOKENS)
+    }
+
+    /// [`KvArena::new`] with an explicit page size (tests: `page_tokens`
+    /// larger than every sequence degenerates to the contiguous layout,
+    /// the bit-identity reference).
+    pub fn with_page_tokens(
+        n_layers: usize,
+        kv_dim: usize,
+        max_tokens: usize,
+        dtype: KvDtype,
+        page_tokens: usize,
+    ) -> KvArena {
+        assert!(page_tokens > 0, "page size must be positive");
+        KvArena {
+            n_layers,
+            kv_dim,
+            dtype,
+            page_tokens,
+            total_pages: ceil_div(max_tokens, page_tokens),
+            free_pages: Vec::new(),
+            next_page: 0,
+            tables: HashMap::new(),
+            refcounts: Vec::new(),
+            prefix: PrefixIndex::new(),
+            peak_used: 0,
+            preemptions: 0,
+            prefix_hit_tokens: 0,
+            cow_splits: 0,
+            k_slabs: (0..n_layers).map(|_| Slab::new()).collect(),
+            v_slabs: (0..n_layers).map(|_| Slab::new()).collect(),
+            placement: None,
+            node_resident: vec![0],
+        }
+    }
+
+    /// Install NUMA placement: pages minted from now on are interleaved
+    /// across `pool`'s nodes (`page % n_nodes`) and their slabs zeroed on
+    /// the owning node, so each node's attention reads hit local memory.
+    /// Call before the first reservation (already-minted pages keep
+    /// whatever placement they got). No-op storage-wise on single-node
+    /// pools — the arena stays bit-identical either way; placement only
+    /// moves where page bytes live.
+    pub fn set_placement(&mut self, pool: Arc<ThreadPool>) {
+        self.node_resident = vec![0; pool.n_nodes().max(1)];
+        if pool.n_nodes() > 1 {
+            self.placement = Some(pool);
+        } else {
+            self.placement = None;
+        }
+    }
+
+    /// Bytes of slab storage minted on each NUMA node (one entry when no
+    /// multi-node placement is installed). Sums to
+    /// [`KvArena::resident_bytes`].
+    pub fn resident_bytes_by_node(&self) -> &[usize] {
+        &self.node_resident
+    }
+
+    /// A zero-layer arena: pure page accounting, no backing bytes
+    /// (scheduler unit tests and page-math property tests).
+    pub fn accounting(max_tokens: usize) -> KvArena {
+        Self::new(0, 0, max_tokens, KvDtype::F32)
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    pub fn dtype(&self) -> KvDtype {
+        self.dtype
+    }
+
+    /// Pages still allocatable (recycled free-list entries plus pages the
+    /// budget allows but that were never minted). Index-held pages are
+    /// *not* free here — they become reclaimable through eviction when an
+    /// allocation actually needs them (see [`KvArena::reserve`]).
+    pub fn free_page_count(&self) -> usize {
+        self.total_pages - self.used_pages()
+    }
+
+    /// Pages currently held by at least one referent (sequence tables
+    /// and/or the prompt index).
+    pub fn used_pages(&self) -> usize {
+        self.next_page as usize - self.free_pages.len()
+    }
+
+    pub fn peak_used_pages(&self) -> usize {
+        self.peak_used
+    }
+
+    /// Sequences preempted because a growth reservation found the arena
+    /// exhausted (see `pallas_serve::coordinator::scheduler::Scheduler::step`).
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions
+    }
+
+    /// Count one preemption (called by the scheduler when it evicts).
+    pub fn note_preemption(&mut self) {
+        self.preemptions += 1;
+    }
+
+    /// Cumulative prompt tokens served out of the prefix index instead of
+    /// being re-prefilled ([`KvArena::map_prefix`] hits).
+    pub fn prefix_hit_tokens(&self) -> u64 {
+        self.prefix_hit_tokens
+    }
+
+    /// Cumulative copy-on-write page splits (writes into shared pages).
+    pub fn cow_splits(&self) -> u64 {
+        self.cow_splits
+    }
+
+    /// Pages currently held by the prompt index (one per live trie node).
+    pub fn prefix_index_pages(&self) -> usize {
+        self.prefix.live_nodes()
+    }
+
+    /// Pages needed to hold `tokens` tokens.
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        ceil_div(tokens, self.page_tokens)
+    }
+
+    /// Can a sequence with this token demand be granted pages right now?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.pages_for(tokens) <= self.free_page_count()
+    }
+
+    /// Bytes of slab storage actually resident (minted pages only —
+    /// grows to the peak working set, never to the unused budget).
+    pub fn resident_bytes(&self) -> usize {
+        self.k_slabs.iter().chain(self.v_slabs.iter()).map(Slab::byte_len).sum()
+    }
+
+    /// Bytes the full page budget would occupy if every page were minted.
+    pub fn capacity_bytes(&self) -> usize {
+        self.total_pages * self.page_bytes()
+    }
+
+    /// Bytes one page occupies across all layers (K and V).
+    fn page_bytes(&self) -> usize {
+        self.page_tokens * self.kv_dim * self.dtype.elem_bytes() * 2 * self.n_layers
+    }
+
+    /// Reserve pages for `seq` to cover `tokens` tokens total (idempotent
+    /// growth: only the delta beyond current holdings is allocated).
+    /// Returns false (no change) if the arena cannot satisfy the demand
+    /// even after evicting index-only pages.
+    pub fn reserve(&mut self, seq: u64, tokens: usize) -> bool {
+        let want = self.pages_for(tokens);
+        let have = self.tables.get(&seq).map_or(0, |v| v.len());
+        if want <= have {
+            return true;
+        }
+        let need = want - have;
+        if !self.ensure_free(need) {
+            return false;
+        }
+        let mut minted = Vec::with_capacity(need);
+        for _ in 0..need {
+            minted.push(self.alloc_page().expect("ensure_free checked above"));
+        }
+        self.tables.entry(seq).or_default().extend(minted);
+        self.peak_used = self.peak_used.max(self.used_pages());
+        true
+    }
+
+    /// [`KvArena::reserve`] plus eager copy-on-write: after covering
+    /// `tokens`, every shared page overlapping the write range
+    /// `write_from..tokens` is split to a private copy, so the upcoming
+    /// prefill chunk / decode append can write without clobbering other
+    /// referents. Atomic like `reserve`: fails without side effects when
+    /// growth + splits can't all be satisfied.
+    pub fn reserve_for_write(&mut self, seq: u64, tokens: usize, write_from: usize) -> bool {
+        let want = self.pages_for(tokens);
+        let have = self.tables.get(&seq).map_or(0, |v| v.len());
+        let grow = want.saturating_sub(have);
+        let mut splits = 0usize;
+        if tokens > write_from {
+            if let Some(table) = self.tables.get(&seq) {
+                let first = write_from / self.page_tokens;
+                let last = (tokens - 1) / self.page_tokens;
+                for pi in first..=last.min(table.len().saturating_sub(1)) {
+                    if self.refcounts[table[pi] as usize] > 1 {
+                        splits += 1;
+                    }
+                }
+            }
+        }
+        if !self.ensure_free(grow + splits) {
+            return false;
+        }
+        for _ in 0..grow {
+            let p = self.alloc_page().expect("ensure_free checked above");
+            self.tables.entry(seq).or_default().push(p);
+        }
+        if tokens > write_from && self.tables.contains_key(&seq) {
+            let first = write_from / self.page_tokens;
+            let last = (tokens - 1) / self.page_tokens;
+            for pi in first..=last {
+                self.split_if_shared(seq, pi);
+            }
+        }
+        self.peak_used = self.peak_used.max(self.used_pages());
+        true
+    }
+
+    /// Map the longest indexed prefix of `prompt` into `seq`'s (empty)
+    /// page table, sharing the physical pages (refcount++), and return
+    /// how many prompt tokens are now cache-resident. Capped at
+    /// `prompt.len() - 1` so at least one tail token is always prefilled
+    /// (the engine needs the final position's logits — and an identical
+    /// prompt resubmission therefore exercises a genuine COW split).
+    /// Mapping never allocates, so it cannot fail.
+    pub fn map_prefix(&mut self, seq: u64, prompt: &[u32]) -> usize {
+        if prompt.len() <= 1 {
+            return 0;
+        }
+        self.prefix.clock += 1;
+        let clock = self.prefix.clock;
+        let mut node = 0usize;
+        let mut matched: Vec<u32> = Vec::new();
+        for chunk in prompt.chunks_exact(self.page_tokens) {
+            let Some(child) = self.prefix.child_matching(node, chunk) else { break };
+            self.prefix.nodes[child].touch = clock;
+            matched.push(self.prefix.nodes[child].page);
+            node = child;
+        }
+        if matched.is_empty() {
+            return 0;
+        }
+        let shared = (matched.len() * self.page_tokens).min(prompt.len() - 1);
+        let need_pages = ceil_div(shared, self.page_tokens);
+        let table = self.tables.entry(seq).or_default();
+        debug_assert!(table.is_empty(), "map_prefix must run before any reservation for seq");
+        for &p in &matched[..need_pages] {
+            self.refcounts[p as usize] += 1;
+            table.push(p);
+        }
+        self.prefix_hit_tokens += shared as u64;
+        shared
+    }
+
+    /// Index `seq`'s prefilled prompt: insert one trie node per *full*
+    /// page of `prompt` (partial tail pages keep being written by decode
+    /// and are never shared), deduplicating against existing nodes. Each
+    /// newly inserted node takes a refcount on the sequence's page, so
+    /// the prefix outlives the sequence.
+    pub fn register_prefix(&mut self, seq: u64, prompt: &[u32]) {
+        let Some(table) = self.tables.get(&seq).cloned() else { return };
+        self.prefix.clock += 1;
+        let clock = self.prefix.clock;
+        let mut node = 0usize;
+        for (pi, chunk) in prompt.chunks_exact(self.page_tokens).enumerate() {
+            if pi >= table.len() {
+                break;
+            }
+            node = match self.prefix.child_matching(node, chunk) {
+                Some(c) => {
+                    self.prefix.nodes[c].touch = clock;
+                    c
+                }
+                None => {
+                    let page = table[pi];
+                    self.refcounts[page as usize] += 1;
+                    let fresh = self.prefix.alloc_node(TrieNode {
+                        key: chunk.to_vec(),
+                        page,
+                        parent: node,
+                        children: Vec::new(),
+                        touch: clock,
+                        live: true,
+                    });
+                    self.prefix.nodes[node].children.push(fresh);
+                    fresh
+                }
+            };
+        }
+    }
+
+    /// Free pages until `need` are allocatable, evicting LRU index-only
+    /// leaves (refcount 1 ⇒ no live sequence maps the page). Interior
+    /// nodes become leaves as their children go, so whole stale branches
+    /// drain back-to-front. False ⇔ demand exceeds what eviction can
+    /// reclaim.
+    fn ensure_free(&mut self, need: usize) -> bool {
+        while self.free_page_count() < need {
+            if !self.evict_prefix_leaf() {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Evict the least-recently-touched index leaf whose page has no
+    /// other referent, returning its page to the free list.
+    fn evict_prefix_leaf(&mut self) -> bool {
+        let mut best: Option<(usize, u64)> = None;
+        for (i, n) in self.prefix.nodes.iter().enumerate().skip(1) {
+            if !n.live || !n.children.is_empty() || self.refcounts[n.page as usize] != 1 {
+                continue;
+            }
+            let older = match best {
+                Some((_, t)) => n.touch < t,
+                None => true,
+            };
+            if older {
+                best = Some((i, n.touch));
+            }
+        }
+        let Some((i, _)) = best else { return false };
+        let parent = self.prefix.nodes[i].parent;
+        let page = self.prefix.nodes[i].page;
+        self.prefix.nodes[parent].children.retain(|&c| c != i);
+        self.prefix.nodes[i].live = false;
+        self.prefix.nodes[i].key = Vec::new();
+        self.prefix.free_slots.push(i);
+        self.dec_ref(page);
+        true
+    }
+
+    fn alloc_page(&mut self) -> Option<u32> {
+        if let Some(p) = self.free_pages.pop() {
+            self.refcounts[p as usize] = 1;
+            return Some(p);
+        }
+        if (self.next_page as usize) < self.total_pages {
+            let p = self.next_page;
+            self.next_page += 1;
+            self.refcounts.push(1);
+            self.mint_page_storage(p);
+            Some(p)
+        } else {
+            None
+        }
+    }
+
+    /// Allocate (and zero) page `p`'s backing stores across every layer's
+    /// K and V slab. With placement installed, the zeroing runs on the
+    /// owning node's thread so first-touch lands the bytes there.
+    fn mint_page_storage(&mut self, p: u32) {
+        let elems = self.page_tokens * self.kv_dim;
+        let n_stores = 2 * self.n_layers;
+        let dtype = self.dtype;
+        let page_bytes = self.page_bytes();
+        let mut fresh: Vec<PageStore> = Vec::with_capacity(n_stores);
+        let node = match &self.placement {
+            Some(pool) => {
+                let node = p as usize % pool.n_nodes();
+                pool.run_on_node(node, || {
+                    for _ in 0..n_stores {
+                        fresh.push(PageStore::zeroed(dtype, elems));
+                    }
+                });
+                node
+            }
+            None => {
+                for _ in 0..n_stores {
+                    fresh.push(PageStore::zeroed(dtype, elems));
+                }
+                0
+            }
+        };
+        if let Some(r) = self.node_resident.get_mut(node) {
+            *r += page_bytes;
+        }
+        let mut it = fresh.into_iter();
+        for slab in self.k_slabs.iter_mut().chain(self.v_slabs.iter_mut()) {
+            slab.pages.push(it.next().expect("minted 2*n_layers stores"));
+        }
+    }
+
+    /// Drop one referent of `page`; the last referent returns it to the
+    /// free list (the slab memory stays minted for reuse).
+    fn dec_ref(&mut self, page: u32) {
+        let rc = &mut self.refcounts[page as usize];
+        debug_assert!(*rc > 0, "double free of page {page}");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free_pages.push(page);
+        }
+    }
+
+    /// If `seq`'s `pi`-th page is shared, split it: allocate a private
+    /// page, copy the K/V bytes across every layer, and swap the table
+    /// entry. The caller must have ensured a page is allocatable.
+    fn split_if_shared(&mut self, seq: u64, pi: usize) {
+        let old = self.tables[&seq][pi];
+        if self.refcounts[old as usize] <= 1 {
+            return;
+        }
+        let fresh = self.alloc_page().expect("caller reserves headroom for COW splits");
+        for slab in self.k_slabs.iter_mut().chain(self.v_slabs.iter_mut()) {
+            slab.copy_page(old, fresh);
+        }
+        self.refcounts[old as usize] -= 1;
+        self.tables.get_mut(&seq).expect("table exists")[pi] = fresh;
+        self.cow_splits += 1;
+    }
+
+    /// Release all pages held by `seq` (finish or preemption): each
+    /// mapping drops one refcount; pages shared with other sequences or
+    /// the prompt index stay live.
+    pub fn release(&mut self, seq: u64) {
+        if let Some(pages) = self.tables.remove(&seq) {
+            for p in pages {
+                self.dec_ref(p);
+            }
+        }
+    }
+
+    /// Pages held by `seq`.
+    pub fn held_pages(&self, seq: u64) -> usize {
+        self.tables.get(&seq).map_or(0, |v| v.len())
+    }
+
+    /// Bytes of KV storage backing `seq`'s held pages — what the
+    /// sequence actually occupies, not its worst-case reservation.
+    pub fn held_bytes(&self, seq: u64) -> usize {
+        self.held_pages(seq) * self.page_bytes()
+    }
+
+    /// Write the K and V rows for token position `pos` of `seq` in
+    /// `layer`. The covering page must already be reserved. Writes into a
+    /// shared page split it first (lazy COW safety net — the serving
+    /// scheduler splits eagerly via [`KvArena::reserve_for_write`], so
+    /// this path allocating is the exception, not the rule).
+    pub fn append(&mut self, seq: u64, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        debug_assert_eq!(k.len(), self.kv_dim);
+        debug_assert_eq!(v.len(), self.kv_dim);
+        let page = self.page_of(seq, pos);
+        if self.refcounts[page as usize] > 1 {
+            assert!(self.ensure_free(1), "KV arena exhausted during COW split at pos {pos}");
+            self.split_if_shared(seq, pos / self.page_tokens);
+        }
+        let page = self.page_of(seq, pos);
+        let off = (pos % self.page_tokens) * self.kv_dim;
+        self.k_slabs[layer].write_row(page, off, k);
+        self.v_slabs[layer].write_row(page, off, v);
+    }
+
+    fn page_of(&self, seq: u64, pos: usize) -> u32 {
+        let table = self.tables.get(&seq).expect("reserve pages before append/attend");
+        *table.get(pos / self.page_tokens).unwrap_or_else(|| {
+            panic!("KV arena: pos {pos} beyond {} reserved pages", table.len())
+        })
+    }
+
+    /// K/V row for `pos` of `seq` in `layer`, decoded to f32 (debug/test
+    /// accessor — the hot path reads whole pages via [`KvArena::attend`]).
+    pub fn kv_row(&self, seq: u64, layer: usize, pos: usize) -> (Vec<f32>, Vec<f32>) {
+        let page = self.page_of(seq, pos);
+        let row = pos % self.page_tokens;
+        let mut ks = Vec::new();
+        let mut vs = Vec::new();
+        let k = self.k_slabs[layer].page_rows(page, self.kv_dim, row + 1, &mut ks);
+        let k = k[row * self.kv_dim..(row + 1) * self.kv_dim].to_vec();
+        let v = self.v_slabs[layer].page_rows(page, self.kv_dim, row + 1, &mut vs);
+        let v = v[row * self.kv_dim..(row + 1) * self.kv_dim].to_vec();
+        (k, v)
+    }
+
+    /// Scaled-dot-product attention for one query row against `seq`'s
+    /// cache in `layer`: context positions `0..ctx_len`, grouped-query
+    /// heads, accumulated into `out` (assumed zeroed, `n_heads *
+    /// head_dim`).
+    ///
+    /// The gather is tiled per page so the inner dot product always runs
+    /// over a contiguous slice; per (head, position) arithmetic and
+    /// accumulation order are identical to the pre-paged contiguous
+    /// layout, so F32 results are bit-identical to it. The read is pure
+    /// page-table indirection, so shared (COW) pages are read bit-
+    /// identically to private ones.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attend(
+        &self,
+        seq: u64,
+        layer: usize,
+        q: &[f32],
+        ctx_len: usize,
+        n_heads: usize,
+        n_kv_heads: usize,
+        head_dim: usize,
+        scale: f32,
+        out: &mut [f32],
+    ) {
+        if ctx_len == 0 {
+            return;
+        }
+        let kvd = self.kv_dim;
+        let group = n_heads / n_kv_heads;
+        let table = self.tables.get(&seq).expect("reserve pages before append/attend");
+        let mut scores = vec![0f32; n_heads * ctx_len];
+        let mut scratch: Vec<f32> = Vec::new();
+        let mut t0 = 0usize;
+        for &page in table.iter() {
+            if t0 >= ctx_len {
+                break;
+            }
+            let tn = self.page_tokens.min(ctx_len - t0);
+            let kp = self.k_slabs[layer].page_rows(page, kvd, tn, &mut scratch);
+            for head in 0..n_heads {
+                let kv_head = head / group;
+                let qh = &q[head * head_dim..(head + 1) * head_dim];
+                for t in 0..tn {
+                    let kt = &kp[t * kvd + kv_head * head_dim..t * kvd + (kv_head + 1) * head_dim];
+                    scores[head * ctx_len + t0 + t] =
+                        qh.iter().zip(kt).map(|(a, b)| a * b).sum::<f32>() * scale;
+                }
+            }
+            t0 += tn;
+        }
+        assert!(t0 >= ctx_len, "attend: page table covers {t0} of {ctx_len} context tokens");
+        for head in 0..n_heads {
+            crate::util::softmax(&mut scores[head * ctx_len..(head + 1) * ctx_len]);
+        }
+        let mut t0 = 0usize;
+        for &page in table.iter() {
+            if t0 >= ctx_len {
+                break;
+            }
+            let tn = self.page_tokens.min(ctx_len - t0);
+            let vp = self.v_slabs[layer].page_rows(page, kvd, tn, &mut scratch);
+            for head in 0..n_heads {
+                let kv_head = head / group;
+                let oh = &mut out[head * head_dim..(head + 1) * head_dim];
+                for t in 0..tn {
+                    let w = scores[head * ctx_len + t0 + t];
+                    let vt = &vp[t * kvd + kv_head * head_dim..t * kvd + (kv_head + 1) * head_dim];
+                    for (o, &vv) in oh.iter_mut().zip(vt) {
+                        *o += w * vv;
+                    }
+                }
+            }
+            t0 += tn;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pages_for_rounds_up() {
+        let arena = KvArena::accounting(0);
+        assert_eq!(arena.pages_for(0), 0);
+        assert_eq!(arena.pages_for(1), 1);
+        assert_eq!(arena.pages_for(16), 1);
+        assert_eq!(arena.pages_for(17), 2);
+    }
+
+    #[test]
+    fn budget_rounds_up_not_down() {
+        // 100 tokens needs 7 pages (112 tokens); flooring to 6 would
+        // strand 4 tokens of paid-for budget.
+        let mut arena = KvArena::accounting(100);
+        assert_eq!(arena.total_pages(), 7);
+        assert!(
+            arena.total_pages() * PAGE_TOKENS >= 100,
+            "invariant: page capacity covers the requested budget"
+        );
+        assert!(arena.can_admit(100));
+        assert!(arena.reserve(1, 100), "the full paid-for budget is reservable");
+        // Exact multiples and zero stay exact.
+        assert_eq!(KvArena::accounting(160).total_pages(), 10);
+        assert_eq!(KvArena::accounting(0).total_pages(), 0);
+    }
+
+    #[test]
+    fn reserve_and_release_cycle() {
+        let mut arena = KvArena::accounting(160); // 10 pages
+        assert!(arena.reserve(1, 50)); // 4 pages
+        assert_eq!(arena.held_pages(1), 4);
+        assert_eq!(arena.free_page_count(), 6);
+        assert!(arena.reserve(2, 96)); // 6 pages
+        assert_eq!(arena.free_page_count(), 0);
+        assert!(!arena.can_admit(1));
+        arena.release(1);
+        assert_eq!(arena.free_page_count(), 4);
+        assert!(arena.can_admit(64));
+        assert!(!arena.can_admit(65));
+    }
+
+    #[test]
+    fn growth_is_incremental() {
+        let mut arena = KvArena::accounting(160);
+        assert!(arena.reserve(7, 16)); // 1 page
+        assert!(arena.reserve(7, 17)); // grow to 2
+        assert_eq!(arena.held_pages(7), 2);
+        assert!(arena.reserve(7, 10)); // shrink requests are no-ops
+        assert_eq!(arena.held_pages(7), 2);
+    }
+
+    #[test]
+    fn reserve_fails_atomically() {
+        let mut arena = KvArena::accounting(32); // 2 pages
+        assert!(arena.reserve(1, 16));
+        assert!(!arena.reserve(2, 32), "2 pages not available");
+        assert_eq!(arena.held_pages(2), 0, "failed reserve must not leak");
+        assert_eq!(arena.free_page_count(), 1);
+    }
+
+    #[test]
+    fn peak_tracking() {
+        let mut arena = KvArena::accounting(160);
+        arena.reserve(1, 80);
+        arena.release(1);
+        arena.reserve(2, 16);
+        assert_eq!(arena.peak_used_pages(), 5);
+    }
+
+    #[test]
+    fn release_unknown_seq_is_noop() {
+        let mut arena = KvArena::accounting(64);
+        arena.release(99);
+        assert_eq!(arena.free_page_count(), 4);
+    }
+
+    #[test]
+    fn slabs_mint_lazily_and_recycle() {
+        // 2 layers, kv_dim 4 → one page (16 tokens) costs
+        // 16 tokens * 4 elems * 4 B * 2 (K+V) * 2 layers = 1024 B.
+        let page_bytes = 16 * 4 * 4 * 2 * 2;
+        let mut arena = KvArena::new(2, 4, 64, KvDtype::F32);
+        assert_eq!(arena.total_pages(), 4);
+        assert_eq!(arena.resident_bytes(), 0, "no pages minted up front");
+        assert_eq!(arena.capacity_bytes(), 4 * page_bytes);
+        assert!(arena.reserve(1, 10));
+        assert_eq!(arena.resident_bytes(), page_bytes);
+        assert_eq!(arena.held_bytes(1), page_bytes);
+        assert!(arena.reserve(1, 30)); // second page
+        assert_eq!(arena.resident_bytes(), 2 * page_bytes);
+        arena.release(1);
+        assert_eq!(arena.held_bytes(1), 0);
+        // Recycled pages keep their storage: resident bytes don't move.
+        assert!(arena.reserve(2, 32));
+        assert_eq!(arena.resident_bytes(), 2 * page_bytes);
+        assert!(arena.resident_bytes() <= arena.capacity_bytes());
+    }
+
+    #[test]
+    fn balanced_churn_reuses_pages_before_minting() {
+        // Preemption/on_stop churn regression: pages freed by one
+        // sequence must be recycled by the next reservation, so resident
+        // bytes stay flat when allocation and release are balanced.
+        let page_bytes = 16 * 4 * 4 * 2 * 2;
+        let mut arena = KvArena::new(2, 4, 16 * 64, KvDtype::F32); // 64-page budget
+        for round in 0..20u64 {
+            assert!(arena.reserve(round, 48)); // 3 pages
+            arena.release(round);
+            assert_eq!(
+                arena.resident_bytes(),
+                3 * page_bytes,
+                "round {round}: churn must recycle, not mint"
+            );
+        }
+        assert_eq!(arena.peak_used_pages(), 3);
+        assert_eq!(arena.used_pages(), 0);
+    }
+
+    #[test]
+    fn f16_pages_halve_resident_bytes() {
+        let mut a32 = KvArena::new(2, 4, 64, KvDtype::F32);
+        let mut a16 = KvArena::new(2, 4, 64, KvDtype::F16);
+        assert!(a32.reserve(1, 32));
+        assert!(a16.reserve(1, 32));
+        assert_eq!(a16.resident_bytes() * 2, a32.resident_bytes());
+        assert_eq!(a16.capacity_bytes() * 2, a32.capacity_bytes());
+    }
+
+    #[test]
+    fn append_read_round_trip_across_page_boundary() {
+        let kvd = 4;
+        let mut arena = KvArena::new(1, kvd, 64, KvDtype::F32);
+        assert!(arena.reserve(9, 20)); // 2 pages: positions 0..=19
+        for pos in [0usize, 15, 16, 19] {
+            let k: Vec<f32> = (0..kvd).map(|i| (pos * 10 + i) as f32).collect();
+            let v: Vec<f32> = (0..kvd).map(|i| -((pos * 10 + i) as f32)).collect();
+            arena.append(9, 0, pos, &k, &v);
+            let (rk, rv) = arena.kv_row(9, 0, pos);
+            assert_eq!(rk, k, "K row at pos {pos}");
+            assert_eq!(rv, v, "V row at pos {pos}");
+        }
+    }
+
+    #[test]
+    fn f16_rows_round_trip_within_half_precision() {
+        let kvd = 8;
+        let mut arena = KvArena::new(1, kvd, 32, KvDtype::F16);
+        assert!(arena.reserve(1, 17));
+        let k: Vec<f32> = (0..kvd).map(|i| 0.37 * (i as f32 + 1.0)).collect();
+        let v: Vec<f32> = (0..kvd).map(|i| -1.625 * (i as f32 + 1.0)).collect();
+        arena.append(1, 0, 16, &k, &v);
+        let (rk, rv) = arena.kv_row(1, 0, 16);
+        for (a, b) in rk.iter().zip(k.iter()).chain(rv.iter().zip(v.iter())) {
+            let ulp = (b.abs() / 1024.0).max(6e-8);
+            assert!((a - b).abs() <= ulp, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn preemption_counter() {
+        let mut arena = KvArena::accounting(16);
+        assert_eq!(arena.preemptions(), 0);
+        arena.note_preemption();
+        arena.note_preemption();
+        assert_eq!(arena.preemptions(), 2);
+    }
+
+    fn prompt(len: usize, salt: u32) -> Vec<u32> {
+        (0..len as u32).map(|i| i * 3 + salt).collect()
+    }
+
+    #[test]
+    fn register_then_map_shares_pages() {
+        let mut arena = KvArena::accounting(160); // 10 pages
+        let p = prompt(40, 0); // 2 full pages + 8-token tail
+        assert!(arena.reserve(1, 40)); // 3 pages
+        arena.register_prefix(1, &p);
+        assert_eq!(arena.prefix_index_pages(), 2, "only full pages are indexed");
+        assert_eq!(arena.used_pages(), 3);
+        arena.release(1);
+        // Index refs keep the two full pages live; the tail page freed.
+        assert_eq!(arena.used_pages(), 2);
+        let shared = arena.map_prefix(2, &p);
+        assert_eq!(shared, 32, "both indexed pages map");
+        assert_eq!(arena.held_pages(2), 2);
+        assert_eq!(arena.used_pages(), 2, "mapping shares, it does not allocate");
+        assert_eq!(arena.prefix_hit_tokens(), 32);
+        // A divergent prompt shares only the matching chunk.
+        let mut q = prompt(40, 0);
+        q[20] = 9999; // second chunk differs
+        let shared = arena.map_prefix(3, &q);
+        assert_eq!(shared, 16);
+        arena.release(2);
+        arena.release(3);
+        assert_eq!(arena.used_pages(), 2, "index still holds its pages");
+    }
+
+    #[test]
+    fn map_prefix_caps_at_prompt_minus_one() {
+        // Identical prompt resubmission: the final token must stay
+        // prefillable, so one page stays partially shared → COW later.
+        let mut arena = KvArena::accounting(160);
+        let p = prompt(32, 5); // exactly 2 pages
+        assert!(arena.reserve(1, 32));
+        arena.register_prefix(1, &p);
+        let shared = arena.map_prefix(2, &p);
+        assert_eq!(shared, 31, "capped at prompt_len - 1");
+        assert_eq!(arena.held_pages(2), 2, "the covering page still maps");
+    }
+
+    #[test]
+    fn cow_split_preserves_shared_history() {
+        let kvd = 4;
+        let mut arena = KvArena::new(1, kvd, 16 * 8, KvDtype::F32);
+        let p = prompt(32, 1);
+        assert!(arena.reserve(1, 32));
+        for pos in 0..32 {
+            let k: Vec<f32> = (0..kvd).map(|i| (pos * 100 + i) as f32).collect();
+            let v: Vec<f32> = (0..kvd).map(|i| -((pos * 100 + i) as f32)).collect();
+            arena.append(1, 0, pos, &k, &v);
+        }
+        arena.register_prefix(1, &p);
+        // Seq 2 maps 31 tokens shared; writing position 31 (same prompt's
+        // last token) lands in shared page 1 → COW split.
+        let shared = arena.map_prefix(2, &p);
+        assert_eq!(shared, 31);
+        assert!(arena.reserve_for_write(2, 33, 31));
+        assert_eq!(arena.cow_splits(), 1, "the written shared page split");
+        let k2: Vec<f32> = vec![7.0; kvd];
+        let v2: Vec<f32> = vec![-7.0; kvd];
+        arena.append(2, 0, 31, &k2, &v2);
+        // Seq 1's history at pos 31 is untouched; seq 2 reads its own
+        // write there but seq 1's data in the still-shared region.
+        let (k1, _) = arena.kv_row(1, 0, 31);
+        assert_eq!(k1[0], 3100.0, "donor page unchanged after the split");
+        let (k2r, _) = arena.kv_row(2, 0, 31);
+        assert_eq!(k2r, k2);
+        let (kshared, _) = arena.kv_row(2, 0, 15);
+        assert_eq!(kshared[0], 1500.0, "unsplit prefix pages read the donor bytes");
+    }
+
+    #[test]
+    fn lazy_append_split_is_a_safety_net() {
+        let kvd = 4;
+        let mut arena = KvArena::new(1, kvd, 16 * 8, KvDtype::F32);
+        let p = prompt(32, 2);
+        assert!(arena.reserve(1, 32));
+        for pos in 0..32 {
+            let k: Vec<f32> = (0..kvd).map(|i| (pos + i) as f32).collect();
+            arena.append(1, 0, pos, &k.clone(), &k);
+        }
+        arena.register_prefix(1, &p);
+        let shared = arena.map_prefix(2, &p);
+        assert_eq!(shared, 31);
+        // Plain reserve (no eager split) then a direct append into the
+        // shared page: the lazy path must split rather than clobber.
+        assert!(arena.reserve(2, 32));
+        let row = vec![42.0; kvd];
+        arena.append(2, 0, 31, &row, &row);
+        assert_eq!(arena.cow_splits(), 1);
+        let (k1, _) = arena.kv_row(1, 0, 31);
+        assert_eq!(k1[0], 31.0, "donor row survives the lazy split");
+    }
+
+    #[test]
+    fn index_pages_evict_lru_under_pressure() {
+        let mut arena = KvArena::accounting(16 * 4); // 4 pages
+        let p = prompt(64, 3); // 4 full pages
+        assert!(arena.reserve(1, 64));
+        arena.register_prefix(1, &p);
+        arena.release(1);
+        assert_eq!(arena.used_pages(), 4, "index holds the whole arena");
+        assert_eq!(arena.free_page_count(), 0);
+        // A 2-page reservation must evict two LRU leaves (the chain
+        // drains deepest-first) rather than fail.
+        assert!(arena.reserve(2, 32));
+        assert_eq!(arena.prefix_index_pages(), 2);
+        // And the surviving prefix still maps.
+        arena.release(2);
+        let shared = arena.map_prefix(3, &p);
+        assert_eq!(shared, 32, "the undrained half of the chain still hits");
+    }
+
+    #[test]
+    fn placement_interleaves_pages_and_round_trips() {
+        use crate::topology::Topology;
+        let kvd = 4;
+        let pool = Arc::new(ThreadPool::with_topology(4, Topology::mock(2)));
+        let mut arena = KvArena::new(1, kvd, 16 * 4, KvDtype::F32);
+        arena.set_placement(Arc::clone(&pool));
+        assert!(arena.reserve(1, 64)); // 4 pages → 2 per node
+        let by_node = arena.resident_bytes_by_node();
+        assert_eq!(by_node.len(), 2);
+        assert_eq!(by_node.iter().sum::<usize>(), arena.resident_bytes());
+        assert!(by_node.iter().all(|&b| b > 0), "pages interleave across nodes: {by_node:?}");
+        // Reads and writes through placed pages are the same bytes.
+        for pos in [0usize, 17, 33, 63] {
+            let k: Vec<f32> = (0..kvd).map(|i| (pos * 10 + i) as f32).collect();
+            let v: Vec<f32> = (0..kvd).map(|i| -((pos * 10 + i) as f32)).collect();
+            arena.append(1, 0, pos, &k, &v);
+            let (rk, rv) = arena.kv_row(1, 0, pos);
+            assert_eq!(rk, k, "K row at pos {pos}");
+            assert_eq!(rv, v, "V row at pos {pos}");
+        }
+    }
+
+    #[test]
+    fn single_node_placement_is_inert() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut arena = KvArena::new(1, 4, 64, KvDtype::F32);
+        arena.set_placement(pool);
+        assert!(arena.reserve(1, 32));
+        assert_eq!(arena.resident_bytes_by_node().len(), 1);
+        assert_eq!(arena.resident_bytes_by_node()[0], arena.resident_bytes());
+    }
+
+    #[test]
+    fn eviction_cannot_reclaim_pages_mapped_by_live_sequences() {
+        let mut arena = KvArena::accounting(16 * 2); // 2 pages
+        let p = prompt(32, 4);
+        assert!(arena.reserve(1, 32));
+        arena.register_prefix(1, &p);
+        // Seq 1 still live: its pages have refcount 2 (table + index) and
+        // must not be reclaimable for seq 2.
+        assert!(!arena.reserve(2, 32), "live sequences' pages are not evictable");
+        arena.release(1);
+        // Now the index is the sole referent → evictable.
+        assert!(arena.reserve(2, 32));
+        assert_eq!(arena.prefix_index_pages(), 0);
+    }
+}

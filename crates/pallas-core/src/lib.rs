@@ -1,0 +1,27 @@
+//! # pallas-core — foundation layer of the Bitnet.cpp reproduction
+//!
+//! The bottom crate of the `rust_pallas` workspace: small utilities
+//! ([`util`]: f16 conversion, JSON, RNG, stats), the fork-join
+//! [`threadpool`] with NUMA-aware per-node chunk queues, the
+//! [`topology`] module that discovers (or mocks) the host's NUMA
+//! layout, and the paged KV [`arena`] that both the model layer
+//! (`pallas-model::Session`) and the serving scheduler
+//! (`pallas-serve::coordinator`) allocate from.
+//!
+//! Nothing here depends on kernels, the model, or the serving stack —
+//! the workspace dependency graph is strictly acyclic:
+//! `pallas-core ← pallas-kernels ← pallas-model ← pallas-serve`,
+//! with the `rust_pallas` facade (lib name `bitnet`) re-exporting
+//! every layer under its historical paths.
+
+#![warn(clippy::undocumented_unsafe_blocks)]
+
+#[deny(unsafe_code)]
+pub mod arena;
+pub mod threadpool;
+pub mod topology;
+#[deny(unsafe_code)]
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,619 @@
+//! Persistent worker pool with a fork-join `parallel_for`, modeled on
+//! ggml's compute threadpool: the same fixed set of threads executes every
+//! mpGEMM row-range, so the thread-sweep experiments (paper Fig. 8 / Fig.
+//! 10) measure kernel scaling rather than thread-spawn overhead.
+//!
+//! Design: N-1 parked workers plus the caller. A job is a closure over
+//! chunk indices plus per-node chunk queues drained by atomic cursors
+//! (work stealing by atomic fetch_add), so uneven rows still balance.
+//! The caller participates, then waits on a completion latch.
+//!
+//! NUMA layering (see [`crate::topology`]): a pool built with
+//! [`ThreadPool::with_topology`] splits its threads into per-node worker
+//! groups, pinned to their node's CPUs on real (non-mock) topologies.
+//! [`ThreadPool::parallel_for`] keeps a single shared queue — every
+//! thread pulls from one cursor exactly as before the NUMA work, so
+//! existing callers see identical scheduling. Placement-aware callers use
+//! [`ThreadPool::parallel_for_placed`], which routes each chunk to the
+//! queue of the node that owns it; a worker crosses node boundaries only
+//! after its own queue drains (counted in [`NumaStats::steals`]).
+//! [`ThreadPool::run_on_node`] runs a closure on a thread of a specific
+//! node so slab allocations are first-touched by their owner. None of
+//! this changes what any chunk computes — placement only decides *where*
+//! a chunk runs — so results are bit-identical to a single-node pool.
+//!
+//! Re-entrancy: a `parallel_for` issued from inside a pool job (same
+//! thread already executing a chunk) runs the nested job inline on the
+//! calling thread instead of deadlocking on the submission lock. This
+//! used to be a `debug_assert` only — release builds deadlocked.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+use crate::topology::{self, Topology};
+
+thread_local! {
+    /// Set while this thread is executing chunks of a pool job; nested
+    /// `parallel_for` / `run_on_node` calls detect it and run inline.
+    static IN_POOL_JOB: Cell<bool> = const { Cell::new(false) };
+}
+
+/// One node's share of a job: chunk ids plus a claim cursor.
+struct ChunkQueue {
+    /// Explicit chunk ids (placed jobs); `None` means the identity
+    /// mapping `0..len` (plain jobs, which use a single shared queue).
+    ids: Option<Vec<usize>>,
+    len: usize,
+    cursor: AtomicUsize,
+}
+
+impl ChunkQueue {
+    fn identity(len: usize) -> ChunkQueue {
+        ChunkQueue { ids: None, len, cursor: AtomicUsize::new(0) }
+    }
+
+    fn explicit(ids: Vec<usize>) -> ChunkQueue {
+        let len = ids.len();
+        ChunkQueue { ids: Some(ids), len, cursor: AtomicUsize::new(0) }
+    }
+
+    /// Claim the next chunk, or `None` when the queue is drained.
+    fn next(&self) -> Option<usize> {
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= self.len {
+            return None;
+        }
+        Some(match &self.ids {
+            Some(v) => v[i],
+            None => i,
+        })
+    }
+}
+
+/// An in-flight job. The `'static` on `f` is a lifetime erasure upheld by
+/// the submitter, which blocks until every chunk completes before
+/// returning (so the borrowed closure outlives all uses).
+struct JobData {
+    f: &'static (dyn Fn(usize) + Send + Sync),
+    /// One queue per node (plain jobs: a single queue shared by all).
+    queues: Vec<ChunkQueue>,
+    total: usize,
+    /// Placed jobs allow cross-node stealing once a worker's own queue
+    /// drains; strict jobs ([`ThreadPool::run_on_node`]) do not.
+    steal: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    work_ready: Condvar,
+    work_done: Condvar,
+    /// Chunks executed by threads of each node (all jobs).
+    node_chunks: Vec<AtomicU64>,
+    /// Chunks a thread executed from another node's queue.
+    steals: AtomicU64,
+    /// Node of each thread slot; slot 0 is the caller.
+    node_of_worker: Vec<usize>,
+    /// Whether any thread slot (including the caller) belongs to node g.
+    has_worker: Vec<bool>,
+}
+
+struct State {
+    job: Option<Arc<JobData>>,
+    /// Monotonic id so workers can tell jobs apart.
+    epoch: u64,
+    /// Chunks finished so far in the current job.
+    finished: usize,
+    shutdown: bool,
+}
+
+/// Per-node execution counters, surfaced in the engine summary and the
+/// bench JSON `numa` section.
+#[derive(Clone, Debug)]
+pub struct NumaStats {
+    /// Number of NUMA nodes the pool was built over.
+    pub nodes: usize,
+    /// Whether the topology is a `RUST_PALLAS_NUMA_MOCK` mock.
+    pub mocked: bool,
+    /// Chunks executed by each node's threads since pool creation.
+    pub chunks: Vec<u64>,
+    /// Chunks executed from a foreign node's queue (placed jobs only).
+    pub steals: u64,
+}
+
+/// A fixed-size pool. `size` counts the caller: `ThreadPool::new(1)` runs
+/// everything inline with zero synchronization.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+    topo: Arc<Topology>,
+    /// Serializes submitters (engine thread vs. tuner thread): held for
+    /// the full submit-participate-wait span of one job.
+    submit: Mutex<()>,
+}
+
+impl ThreadPool {
+    /// Create a single-node pool that uses `size` threads in total
+    /// (including the caller's thread). `size` is clamped to at least 1.
+    pub fn new(size: usize) -> ThreadPool {
+        ThreadPool::with_topology(size, Topology::single())
+    }
+
+    /// Create a pool whose threads are split into per-node worker groups
+    /// over `topo` (contiguous balanced split, caller = slot 0). On real
+    /// multi-node topologies each group is pinned to its node's CPUs;
+    /// mock topologies place but never pin.
+    pub fn with_topology(size: usize, topo: Arc<Topology>) -> ThreadPool {
+        let size = size.max(1);
+        let n_nodes = topo.n_nodes();
+        let node_of_worker: Vec<usize> =
+            (0..size).map(|i| topo.node_of_row(i, size)).collect();
+        let mut has_worker = vec![false; n_nodes];
+        for &g in &node_of_worker {
+            has_worker[g] = true;
+        }
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { job: None, epoch: 0, finished: 0, shutdown: false }),
+            work_ready: Condvar::new(),
+            work_done: Condvar::new(),
+            node_chunks: (0..n_nodes).map(|_| AtomicU64::new(0)).collect(),
+            steals: AtomicU64::new(0),
+            node_of_worker,
+            has_worker,
+        });
+        let workers = (1..size)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                let node = shared.node_of_worker[i];
+                let pin = if !topo.is_mocked() && n_nodes > 1 {
+                    Some(topo.cpus(node).to_vec())
+                } else {
+                    None
+                };
+                std::thread::spawn(move || {
+                    if let Some(cpus) = pin {
+                        topology::pin_current_thread(&cpus);
+                    }
+                    worker_loop(shared, node)
+                })
+            })
+            .collect();
+        ThreadPool { shared, workers, size, topo, submit: Mutex::new(()) }
+    }
+
+    /// Number of threads (including the caller).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// The topology this pool was built over.
+    pub fn topology(&self) -> &Arc<Topology> {
+        &self.topo
+    }
+
+    /// Number of NUMA nodes the pool spans (1 for plain pools).
+    pub fn n_nodes(&self) -> usize {
+        self.topo.n_nodes()
+    }
+
+    /// Snapshot of the per-node execution counters.
+    pub fn numa_stats(&self) -> NumaStats {
+        NumaStats {
+            nodes: self.topo.n_nodes(),
+            mocked: self.topo.is_mocked(),
+            chunks: self.shared.node_chunks.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            steals: self.shared.steals.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Run `f(chunk)` for every `chunk in 0..n_chunks`, distributing chunks
+    /// across all threads; returns when every chunk has completed. A single
+    /// queue feeds every thread regardless of node — scheduling is
+    /// identical to the pre-NUMA pool. Re-entrant calls (from inside a
+    /// pool job, on any pool) run inline on the calling thread.
+    pub fn parallel_for<F>(&self, n_chunks: usize, f: F)
+    where
+        F: Fn(usize) + Send + Sync,
+    {
+        if n_chunks == 0 {
+            return;
+        }
+        if IN_POOL_JOB.with(Cell::get) || self.size == 1 || n_chunks == 1 {
+            for c in 0..n_chunks {
+                f(c);
+            }
+            return;
+        }
+        self.execute(&f, vec![ChunkQueue::identity(n_chunks)], n_chunks, true);
+    }
+
+    /// Placement-aware `parallel_for`: chunk `c` is queued on node
+    /// `node_of(c) % n_nodes`, and each node's threads drain their own
+    /// queue before stealing from others (steals are counted). Chunk
+    /// results are identical to [`ThreadPool::parallel_for`] — only the
+    /// executing thread (and thus memory locality) changes. Degenerates
+    /// to the plain path on single-node pools.
+    pub fn parallel_for_placed<F, N>(&self, n_chunks: usize, node_of: N, f: F)
+    where
+        F: Fn(usize) + Send + Sync,
+        N: Fn(usize) -> usize,
+    {
+        let n_nodes = self.topo.n_nodes();
+        if n_nodes <= 1 {
+            return self.parallel_for(n_chunks, f);
+        }
+        if n_chunks == 0 {
+            return;
+        }
+        if IN_POOL_JOB.with(Cell::get) || self.size == 1 || n_chunks == 1 {
+            for c in 0..n_chunks {
+                f(c);
+            }
+            return;
+        }
+        let mut ids: Vec<Vec<usize>> = vec![Vec::new(); n_nodes];
+        for c in 0..n_chunks {
+            ids[node_of(c) % n_nodes].push(c);
+        }
+        let queues: Vec<ChunkQueue> = ids.into_iter().map(ChunkQueue::explicit).collect();
+        self.execute(&f, queues, n_chunks, true);
+    }
+
+    /// Run `f` once on a thread belonging to `node` (modulo the node
+    /// count) and wait for it — used to first-touch weight and KV slabs
+    /// from their owning node. Runs inline on the caller when the pool is
+    /// single-node, the target is the caller's node, the target has no
+    /// worker threads, or we are already inside a pool job.
+    pub fn run_on_node<F>(&self, node: usize, f: F)
+    where
+        F: FnOnce() + Send,
+    {
+        let n_nodes = self.topo.n_nodes();
+        let node = node % n_nodes.max(1);
+        let inline = IN_POOL_JOB.with(Cell::get)
+            || self.size == 1
+            || n_nodes <= 1
+            || node == self.shared.node_of_worker[0]
+            || !self.shared.has_worker[node];
+        if inline {
+            f();
+            return;
+        }
+        let slot = Mutex::new(Some(f));
+        let call = |_c: usize| {
+            if let Some(g) = slot.lock().unwrap().take() {
+                g();
+            }
+        };
+        let mut ids: Vec<Vec<usize>> = vec![Vec::new(); n_nodes];
+        ids[node].push(0);
+        let queues: Vec<ChunkQueue> = ids.into_iter().map(ChunkQueue::explicit).collect();
+        // Strict (no-steal) single-chunk job: only `node`'s workers can
+        // claim it, so the closure runs — and first-touches — there.
+        self.execute(&call, queues, 1, false);
+    }
+
+    /// Submit a job, participate as slot 0, and wait for completion.
+    fn execute(&self, f: &(dyn Fn(usize) + Send + Sync), queues: Vec<ChunkQueue>, total: usize, steal: bool) {
+        // SAFETY: the lifetime is erased only for the duration of this
+        // call; the completion wait below blocks until every chunk has
+        // run, so workers never touch the closure after `f` is dropped.
+        let f_static: &'static (dyn Fn(usize) + Send + Sync) =
+            unsafe { std::mem::transmute(f) };
+        let job = Arc::new(JobData { f: f_static, queues, total, steal });
+        let _submit = self.submit.lock().unwrap();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(Arc::clone(&job));
+            st.finished = 0;
+            st.epoch += 1;
+            self.shared.work_ready.notify_all();
+        }
+        // The caller participates in the same job.
+        IN_POOL_JOB.with(|b| b.set(true));
+        let done = run_participant(&self.shared, &job, self.shared.node_of_worker[0], true);
+        IN_POOL_JOB.with(|b| b.set(false));
+        // Credit the caller's chunks and wait for the stragglers.
+        let mut st = self.shared.state.lock().unwrap();
+        st.finished += done;
+        while st.finished < job.total {
+            st = self.shared.work_done.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+}
+
+/// Global pool shared by the engine, the tuner and ad-hoc callers, so one
+/// process never layers competing worker sets (satellite of the NUMA
+/// work: `tune` used to spawn a fresh pool per invocation while each
+/// `Transformer` held its own). The first caller's thread count sizes it;
+/// later callers receive the same pool regardless of their argument. The
+/// topology is resolved once via [`topology::resolved_mode`] /
+/// [`Topology::detect`].
+pub fn shared_pool(threads: usize) -> Arc<ThreadPool> {
+    static SHARED_POOL: OnceLock<Arc<ThreadPool>> = OnceLock::new();
+    Arc::clone(SHARED_POOL.get_or_init(|| {
+        let topo = Topology::detect(topology::resolved_mode());
+        Arc::new(ThreadPool::with_topology(threads.max(1), topo))
+    }))
+}
+
+/// Execute one thread slot's share of `job`: drain the slot's own queue,
+/// then (caller only) queues of nodes with no threads, then steal from
+/// other nodes if the job allows. Returns chunks executed.
+fn run_participant(shared: &Shared, job: &JobData, node: usize, is_caller: bool) -> usize {
+    let nq = job.queues.len();
+    let my_q = if node < nq { node } else { 0 };
+    let mut done = 0usize;
+    while let Some(c) = job.queues[my_q].next() {
+        (job.f)(c);
+        done += 1;
+    }
+    if is_caller {
+        // Strict jobs must still complete if a queue's node has no
+        // threads (more nodes than threads): the submitter adopts those
+        // orphan queues. Not counted as steals — no owner lost work.
+        for (g, q) in job.queues.iter().enumerate() {
+            if g == my_q || shared.has_worker.get(g).copied().unwrap_or(false) {
+                continue;
+            }
+            while let Some(c) = q.next() {
+                (job.f)(c);
+                done += 1;
+            }
+        }
+    }
+    if job.steal && nq > 1 {
+        for off in 1..nq {
+            let g = (my_q + off) % nq;
+            let mut stolen = 0usize;
+            while let Some(c) = job.queues[g].next() {
+                (job.f)(c);
+                stolen += 1;
+            }
+            if stolen > 0 {
+                shared.steals.fetch_add(stolen as u64, Ordering::Relaxed);
+                done += stolen;
+            }
+        }
+    }
+    if done > 0 {
+        shared.node_chunks[node].fetch_add(done as u64, Ordering::Relaxed);
+    }
+    done
+}
+
+fn worker_loop(shared: Arc<Shared>, node: usize) {
+    let mut last_epoch = 0u64;
+    loop {
+        // Wait for a new job (or shutdown).
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(job) = st.job.clone() {
+                    if st.epoch != last_epoch {
+                        last_epoch = st.epoch;
+                        break job;
+                    }
+                }
+                st = shared.work_ready.wait(st).unwrap();
+            }
+        };
+        IN_POOL_JOB.with(|b| b.set(true));
+        let done = run_participant(&shared, &job, node, false);
+        IN_POOL_JOB.with(|b| b.set(false));
+        let mut st = shared.state.lock().unwrap();
+        st.finished += done;
+        if st.finished >= job.total {
+            shared.work_done.notify_all();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_ready.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_chunk_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for(hits.len(), |c| {
+            hits[c].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "chunk {i}");
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_is_inline() {
+        let pool = ThreadPool::new(1);
+        let mut sum = 0u64;
+        // Mutable capture works because size-1 pools run inline; use a cell
+        // via atomics to keep the closure Fn.
+        let total = AtomicU64::new(0);
+        pool.parallel_for(10, |c| {
+            total.fetch_add(c as u64, Ordering::SeqCst);
+        });
+        sum += total.load(Ordering::SeqCst);
+        assert_eq!(sum, 45);
+    }
+
+    #[test]
+    fn reusable_across_jobs() {
+        let pool = ThreadPool::new(3);
+        for round in 0..50 {
+            let total = AtomicU64::new(0);
+            pool.parallel_for(64, |c| {
+                total.fetch_add((c + round) as u64, Ordering::SeqCst);
+            });
+            let expect: u64 = (0..64).map(|c| (c + round) as u64).sum();
+            assert_eq!(total.load(Ordering::SeqCst), expect);
+        }
+    }
+
+    #[test]
+    fn zero_chunks_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.parallel_for(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn more_threads_than_chunks() {
+        let pool = ThreadPool::new(8);
+        let total = AtomicU64::new(0);
+        pool.parallel_for(3, |c| {
+            total.fetch_add(c as u64 + 1, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 6);
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        let pool = ThreadPool::new(4);
+        let data: Vec<f64> = (0..10_000).map(|i| i as f64).collect();
+        let chunks = 16;
+        let partial: Vec<Mutex<f64>> = (0..chunks).map(|_| Mutex::new(0.0)).collect();
+        let per = data.len() / chunks;
+        pool.parallel_for(chunks, |c| {
+            let s: f64 = data[c * per..(c + 1) * per].iter().sum();
+            *partial[c].lock().unwrap() = s;
+        });
+        let total: f64 = partial.iter().map(|m| *m.lock().unwrap()).sum();
+        assert_eq!(total, data.iter().sum::<f64>());
+    }
+
+    #[test]
+    fn nested_parallel_for_runs_inline() {
+        // Regression: a parallel_for issued from inside a pool job used to
+        // trip a debug_assert (and deadlock in release) — now it runs the
+        // nested job inline on the calling thread.
+        let pool = ThreadPool::new(4);
+        let inner_hits = AtomicU64::new(0);
+        let outer_hits = AtomicU64::new(0);
+        pool.parallel_for(8, |_| {
+            outer_hits.fetch_add(1, Ordering::SeqCst);
+            pool.parallel_for(4, |_| {
+                inner_hits.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(outer_hits.load(Ordering::SeqCst), 8);
+        assert_eq!(inner_hits.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn placed_runs_every_chunk_exactly_once() {
+        let pool = ThreadPool::with_topology(4, Topology::mock(2));
+        assert_eq!(pool.n_nodes(), 2);
+        let hits: Vec<AtomicU64> = (0..64).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for_placed(hits.len(), |c| c / 32, |c| {
+            hits[c].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "chunk {i}");
+        }
+        let stats = pool.numa_stats();
+        assert_eq!(stats.nodes, 2);
+        assert!(stats.mocked);
+        assert_eq!(stats.chunks.iter().sum::<u64>(), 64);
+    }
+
+    #[test]
+    fn placed_skewed_queue_completes_via_stealing() {
+        // All chunks on node 1: node 0's threads drain nothing of their
+        // own, then steal — the job must still complete exactly once per
+        // chunk and any cross-node execution is counted.
+        let pool = ThreadPool::with_topology(4, Topology::mock(2));
+        let hits: Vec<AtomicU64> = (0..32).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for_placed(hits.len(), |_| 1, |c| {
+            hits[c].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "chunk {i}");
+        }
+        let stats = pool.numa_stats();
+        assert_eq!(stats.chunks.iter().sum::<u64>(), 32);
+    }
+
+    #[test]
+    fn placed_balanced_pairs_run_on_their_own_nodes() {
+        // One chunk per node, each spinning until both have started: the
+        // two chunks must run concurrently on distinct threads, so each
+        // node executes exactly its own chunk and nothing is stolen.
+        let pool = ThreadPool::with_topology(2, Topology::mock(2));
+        let started = AtomicU64::new(0);
+        pool.parallel_for_placed(2, |c| c, |_| {
+            started.fetch_add(1, Ordering::SeqCst);
+            let mut spins = 0u64;
+            while started.load(Ordering::SeqCst) < 2 && spins < 1_000_000_000 {
+                std::hint::spin_loop();
+                spins += 1;
+            }
+        });
+        let stats = pool.numa_stats();
+        assert_eq!(stats.chunks, vec![1, 1]);
+        assert_eq!(stats.steals, 0);
+    }
+
+    #[test]
+    fn run_on_node_executes_exactly_once() {
+        let pool = ThreadPool::with_topology(4, Topology::mock(2));
+        for node in 0..4 {
+            let ran = AtomicU64::new(0);
+            pool.run_on_node(node, || {
+                ran.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(ran.load(Ordering::SeqCst), 1, "node {node}");
+        }
+        // Inline fallbacks: single-thread pool and single-node topology.
+        let inline_pool = ThreadPool::new(1);
+        let ran = AtomicU64::new(0);
+        inline_pool.run_on_node(7, || {
+            ran.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn run_on_node_moves_off_caller_for_foreign_nodes() {
+        let pool = ThreadPool::with_topology(4, Topology::mock(2));
+        let caller = std::thread::current().id();
+        let same = Mutex::new(None);
+        pool.run_on_node(1, || {
+            *same.lock().unwrap() = Some(std::thread::current().id() == caller);
+        });
+        assert_eq!(*same.lock().unwrap(), Some(false));
+    }
+
+    #[test]
+    fn shared_pool_returns_one_instance() {
+        let a = shared_pool(2);
+        let b = shared_pool(5);
+        assert!(Arc::ptr_eq(&a, &b));
+        let total = AtomicU64::new(0);
+        a.parallel_for(16, |c| {
+            total.fetch_add(c as u64, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 120);
+    }
+}

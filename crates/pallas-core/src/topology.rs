@@ -1,0 +1,350 @@
+//! NUMA topology discovery and placement policy.
+//!
+//! On multi-socket hosts the memory-bandwidth-bound mpGEMM only scales
+//! if threads, weight slabs and KV pages are partitioned per NUMA node
+//! instead of contending on one memory controller. This module is the
+//! single source of truth for that partitioning:
+//!
+//! * [`Topology::detect`] reads `/sys/devices/system/node` (Linux) and
+//!   falls back to a single node anywhere else;
+//! * `RUST_PALLAS_NUMA_MOCK=N` synthesizes an `N`-node topology on any
+//!   host, so placement logic and its tests run on single-socket CI
+//!   boxes (mock topologies never pin threads);
+//! * the mode is `--numa auto|off` on the CLI or `RUST_PALLAS_NUMA`
+//!   in the environment (`off`/`0`/`false` disable placement); `off`
+//!   always yields the single-node topology, which makes the NUMA-aware
+//!   paths byte-for-byte the pre-NUMA code paths;
+//! * [`Topology::row_ranges`] is the one row-partitioning rule shared
+//!   by weight localization, `matmul_prepared` routing and the
+//!   thread-pool's worker-to-node assignment, so "the node that owns
+//!   the rows" means the same thing everywhere.
+//!
+//! Placement never changes *what* is accumulated — only where rows run
+//! and which node's memory backs them — so results stay bit-identical
+//! to `--numa off` by construction.
+
+use std::ops::Range;
+use std::sync::{Arc, OnceLock};
+
+/// Whether NUMA-aware placement is enabled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NumaMode {
+    /// Use the detected (or mocked) topology; single-node hosts behave
+    /// exactly as `Off`.
+    Auto,
+    /// Force the single-node topology: no pinning, no placement, no
+    /// per-node queues.
+    Off,
+}
+
+impl NumaMode {
+    /// Parse a CLI/env value (`auto` | `off`; `0`/`false`/`no` also
+    /// disable, matching the other `RUST_PALLAS_*` switches).
+    pub fn parse(s: &str) -> Option<NumaMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" | "on" | "1" | "true" => Some(NumaMode::Auto),
+            "off" | "0" | "false" | "no" => Some(NumaMode::Off),
+            _ => None,
+        }
+    }
+}
+
+/// Process-wide mode override installed by the CLI (`--numa`), consulted
+/// by [`resolved_mode`] ahead of the environment.
+static MODE_OVERRIDE: OnceLock<NumaMode> = OnceLock::new();
+
+/// Install the CLI's `--numa` choice. First caller wins (the shared pool
+/// snapshots the topology when it is first built, so a later flip could
+/// not take effect anyway); returns whether this call installed it.
+pub fn set_mode(mode: NumaMode) -> bool {
+    MODE_OVERRIDE.set(mode).is_ok()
+}
+
+/// The effective NUMA mode: CLI override if installed, else
+/// `RUST_PALLAS_NUMA`, else `Auto`.
+pub fn resolved_mode() -> NumaMode {
+    if let Some(&m) = MODE_OVERRIDE.get() {
+        return m;
+    }
+    match std::env::var("RUST_PALLAS_NUMA") {
+        Ok(v) => NumaMode::parse(&v).unwrap_or(NumaMode::Auto),
+        Err(_) => NumaMode::Auto,
+    }
+}
+
+/// The host's NUMA layout (or a mock of one): which CPUs belong to each
+/// node. Immutable once built; shared via `Arc` between the thread pool,
+/// the KV arena and weight localization so they agree on ownership.
+#[derive(Debug)]
+pub struct Topology {
+    /// CPU ids per node. Always at least one entry; single-node
+    /// topologies may have an empty CPU list (nothing consults it).
+    nodes: Vec<Vec<usize>>,
+    /// True for `RUST_PALLAS_NUMA_MOCK` topologies: placement and
+    /// counters behave as if multi-node, but threads are never pinned
+    /// (the CPUs don't really form separate nodes).
+    mocked: bool,
+}
+
+impl Topology {
+    /// The trivial single-node topology (placement disabled).
+    pub fn single() -> Arc<Topology> {
+        Arc::new(Topology { nodes: vec![Vec::new()], mocked: false })
+    }
+
+    /// A synthetic `n`-node topology splitting the host's CPUs into `n`
+    /// contiguous groups. Used by `RUST_PALLAS_NUMA_MOCK` and tests;
+    /// never pins threads.
+    pub fn mock(n: usize) -> Arc<Topology> {
+        let n = n.max(1);
+        let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+        let cores = cores.max(n);
+        let nodes = (0..n)
+            .map(|g| (g * cores / n..(g + 1) * cores / n).collect())
+            .collect();
+        Arc::new(Topology { nodes, mocked: true })
+    }
+
+    /// Detect the host topology under `mode`: `Off` is always single
+    /// node; `RUST_PALLAS_NUMA_MOCK=N` (N ≥ 2) synthesizes N nodes;
+    /// otherwise `/sys/devices/system/node/node*/cpulist` is parsed,
+    /// falling back to a single node when absent or malformed.
+    pub fn detect(mode: NumaMode) -> Arc<Topology> {
+        if mode == NumaMode::Off {
+            return Topology::single();
+        }
+        if let Ok(v) = std::env::var("RUST_PALLAS_NUMA_MOCK") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n >= 2 {
+                    return Topology::mock(n);
+                }
+            }
+            return Topology::single();
+        }
+        match Topology::from_sysfs("/sys/devices/system/node") {
+            Some(t) if t.nodes.len() >= 2 => Arc::new(t),
+            _ => Topology::single(),
+        }
+    }
+
+    /// Parse `node*/cpulist` entries under `root`. Returns `None` when
+    /// the directory is missing or no node exposes any CPU.
+    fn from_sysfs(root: &str) -> Option<Topology> {
+        let mut ids: Vec<usize> = Vec::new();
+        for entry in std::fs::read_dir(root).ok()? {
+            let name = entry.ok()?.file_name();
+            let name = name.to_str()?;
+            if let Some(num) = name.strip_prefix("node") {
+                if let Ok(id) = num.parse::<usize>() {
+                    ids.push(id);
+                }
+            }
+        }
+        ids.sort_unstable();
+        let mut nodes = Vec::new();
+        for id in ids {
+            let list = std::fs::read_to_string(format!("{root}/node{id}/cpulist")).ok()?;
+            let cpus = parse_cpulist(&list);
+            // CPU-less nodes (e.g. CXL memory-only) can't run workers;
+            // skip them rather than assigning them empty worker groups.
+            if !cpus.is_empty() {
+                nodes.push(cpus);
+            }
+        }
+        if nodes.is_empty() {
+            return None;
+        }
+        Some(Topology { nodes, mocked: false })
+    }
+
+    /// Number of NUMA nodes (≥ 1).
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Whether this topology came from `RUST_PALLAS_NUMA_MOCK` /
+    /// [`Topology::mock`] (placement runs, pinning doesn't).
+    pub fn is_mocked(&self) -> bool {
+        self.mocked
+    }
+
+    /// CPU ids of `node` (empty for the trivial single-node topology).
+    pub fn cpus(&self, node: usize) -> &[usize] {
+        &self.nodes[node]
+    }
+
+    /// Partition `0..m` into one contiguous range per node — the single
+    /// row-ownership rule shared by weight localization,
+    /// `matmul_prepared` routing and worker assignment. Ranges are
+    /// balanced to within one row; when `m < n_nodes` the tail ranges
+    /// are empty.
+    pub fn row_ranges(&self, m: usize) -> Vec<Range<usize>> {
+        let n = self.nodes.len();
+        (0..n).map(|g| g * m / n..(g + 1) * m / n).collect()
+    }
+
+    /// The node owning `row` under [`Topology::row_ranges`]`(m)`.
+    pub fn node_of_row(&self, row: usize, m: usize) -> usize {
+        debug_assert!(row < m);
+        let n = self.nodes.len();
+        if m == 0 {
+            return 0;
+        }
+        // Inverse of `start = g*m/n`: the last g with g*m/n <= row.
+        let g = ((row + 1) * n - 1) / m.max(1);
+        g.min(n - 1)
+    }
+}
+
+/// Parse a sysfs cpulist like `0-3,8,10-11` into CPU ids.
+fn parse_cpulist(s: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for part in s.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((a, b)) = part.split_once('-') {
+            if let (Ok(a), Ok(b)) = (a.trim().parse::<usize>(), b.trim().parse::<usize>()) {
+                for c in a..=b {
+                    out.push(c);
+                }
+            }
+        } else if let Ok(c) = part.parse::<usize>() {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Best-effort: restrict the calling thread to `cpus` so its first-touch
+/// allocations land on the owning node. Raw `sched_setaffinity` syscall
+/// (no libc in the offline build); returns whether the kernel accepted
+/// the mask. No-op (false) on non-Linux targets, empty masks and CPUs
+/// above 1023.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn pin_current_thread(cpus: &[usize]) -> bool {
+    let mut mask = [0u64; 16]; // 1024-CPU mask, zeroed
+    let mut any = false;
+    for &c in cpus {
+        if c < 1024 {
+            mask[c / 64] |= 1u64 << (c % 64);
+            any = true;
+        }
+    }
+    if !any {
+        return false;
+    }
+    let size = core::mem::size_of_val(&mask);
+    let ret: isize;
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: sched_setaffinity(pid=0, cpusetsize, mask*) only *reads*
+    // `size` bytes from `mask`, which is a live, properly-sized stack
+    // buffer for the whole syscall; pid 0 targets the calling thread, so
+    // no other process state is touched. rcx/r11 are declared clobbered
+    // as the syscall ABI requires.
+    unsafe {
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") 203isize => ret, // __NR_sched_setaffinity
+            in("rdi") 0usize,
+            in("rsi") size,
+            in("rdx") mask.as_ptr(),
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack, preserves_flags, readonly),
+        );
+    }
+    #[cfg(target_arch = "aarch64")]
+    // SAFETY: same contract as the x86_64 arm — the kernel reads `size`
+    // bytes from the live `mask` buffer and alters only this thread's
+    // affinity (pid 0 = caller).
+    unsafe {
+        let mut x0: isize = 0; // pid 0 = calling thread
+        core::arch::asm!(
+            "svc 0",
+            in("x8") 122usize, // __NR_sched_setaffinity
+            inlateout("x0") x0,
+            in("x1") size,
+            in("x2") mask.as_ptr(),
+            options(nostack, preserves_flags, readonly),
+        );
+        ret = x0;
+    }
+    ret == 0
+}
+
+/// Non-Linux / exotic-arch fallback: affinity is a locality hint, not a
+/// correctness requirement, so silently do nothing.
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+pub fn pin_current_thread(_cpus: &[usize]) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_cpulist_forms() {
+        assert_eq!(parse_cpulist("0-3"), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpulist("0,2,4"), vec![0, 2, 4]);
+        assert_eq!(parse_cpulist("0-1,8-9\n"), vec![0, 1, 8, 9]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn mode_parse() {
+        assert_eq!(NumaMode::parse("auto"), Some(NumaMode::Auto));
+        assert_eq!(NumaMode::parse("OFF"), Some(NumaMode::Off));
+        assert_eq!(NumaMode::parse("0"), Some(NumaMode::Off));
+        assert_eq!(NumaMode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn single_topology_is_one_node() {
+        let t = Topology::single();
+        assert_eq!(t.n_nodes(), 1);
+        assert!(!t.is_mocked());
+        assert_eq!(t.row_ranges(10), vec![0..10]);
+        assert_eq!(t.node_of_row(9, 10), 0);
+    }
+
+    #[test]
+    fn mock_topology_partitions_rows() {
+        let t = Topology::mock(2);
+        assert_eq!(t.n_nodes(), 2);
+        assert!(t.is_mocked());
+        let r = t.row_ranges(10);
+        assert_eq!(r, vec![0..5, 5..10]);
+        // Ranges tile 0..m and node_of_row inverts them.
+        for m in [1usize, 2, 3, 7, 10, 64, 1000] {
+            let ranges = t.row_ranges(m);
+            assert_eq!(ranges.first().unwrap().start, 0);
+            assert_eq!(ranges.last().unwrap().end, m);
+            for g in 1..ranges.len() {
+                assert_eq!(ranges[g].start, ranges[g - 1].end);
+            }
+            for row in 0..m {
+                let g = t.node_of_row(row, m);
+                assert!(ranges[g].contains(&row), "row {row} of {m} -> node {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn mock_rounds_node_count_up_to_one() {
+        assert_eq!(Topology::mock(0).n_nodes(), 1);
+    }
+
+    #[test]
+    fn row_ranges_with_fewer_rows_than_nodes() {
+        let t = Topology::mock(4);
+        let r = t.row_ranges(2);
+        assert_eq!(r.iter().map(|x| x.len()).sum::<usize>(), 2);
+        for row in 0..2 {
+            let g = t.node_of_row(row, 2);
+            assert!(r[g].contains(&row));
+        }
+    }
+}

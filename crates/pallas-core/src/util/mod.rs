@@ -1,0 +1,66 @@
+//! Small shared substrates: IEEE-754 half-precision conversion, a seedable
+//! PRNG, summary statistics and a minimal JSON reader/writer (the build
+//! runs offline with no registry access, so these are built from scratch;
+//! the only external crate is the vendored `anyhow` stand-in).
+
+pub mod f16;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use f16::{f16_to_f32, f32_to_f16};
+pub use json::Json;
+pub use rng::Rng;
+pub use stats::Summary;
+
+/// Ceiling division for usize.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub fn round_up(a: usize, b: usize) -> usize {
+    ceil_div(a, b) * b
+}
+
+/// Numerically-stable in-place softmax. Shared by the transformer's
+/// attention ops (`model::ops` re-exports it) and the KV arena's fused
+/// attend — one implementation, so the two paths stay bit-identical.
+pub fn softmax(x: &mut [f32]) {
+    if x.is_empty() {
+        return;
+    }
+    let max = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0f32;
+    for v in x.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 32), 0);
+        assert_eq!(round_up(1, 32), 32);
+        assert_eq!(round_up(32, 32), 32);
+        assert_eq!(round_up(33, 32), 64);
+    }
+}

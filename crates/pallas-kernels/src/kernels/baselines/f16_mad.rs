@@ -1,0 +1,114 @@
+//! F16 MAD kernel — the paper's "Float16" baseline (llama.cpp `F16`):
+//! weights stored as IEEE half (16 bpw), widened to f32 in the inner loop
+//! and multiply-added against raw f32 activations.
+
+use crate::kernels::quant::TernaryWeights;
+use crate::kernels::{
+    Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
+};
+use pallas_core::util::f16::f16_to_f32_fast;
+use pallas_core::util::{f16_to_f32, f32_to_f16};
+
+pub struct F16Kernel;
+
+impl Kernel for F16Kernel {
+    fn info(&self) -> KernelInfo {
+        KernelInfo {
+            qtype: QuantType::F16,
+            name: "F16",
+            class: KernelClass::MadBased,
+            element_wise: false,
+            bpw: 16.0,
+            lossless: false,
+            k_multiple: 1,
+            ternary_native: true, // ternary·scale values are exactly representable in f16
+        }
+    }
+
+    fn quantize(&self, w: &TernaryWeights) -> QTensor {
+        let mut data = vec![0u8; w.m * w.k * 2];
+        for (chunk, &q) in data.chunks_exact_mut(2).zip(w.q.iter()) {
+            let h = f32_to_f16(q as f32 * w.scale);
+            chunk.copy_from_slice(&h.to_le_bytes());
+        }
+        QTensor { qtype: QuantType::F16, m: w.m, k: w.k, data, scale: w.scale, sparse: None }
+    }
+
+    fn dequantize(&self, t: &QTensor) -> Vec<f32> {
+        t.data
+            .chunks_exact(2)
+            .map(|c| f16_to_f32(u16::from_le_bytes([c[0], c[1]])))
+            .collect()
+    }
+
+    fn prepare_kind(&self, _k: usize) -> PrepareKind {
+        PrepareKind::Raw
+    }
+
+    /// No preprocessing: the batched path borrows the raw activation row
+    /// (no copy); only the standalone `prepare` clones.
+    fn prepare_row_into(&self, x: &[f32], k: usize, _dst: PreparedRowMut<'_>) {
+        debug_assert_eq!(x.len(), k);
+    }
+
+    fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
+        let x = match p {
+            PreparedRow::Raw(x) => x,
+            _ => panic!("F16 expects raw activations"),
+        };
+        let row_bytes = t.k * 2;
+        for (o, r) in out.iter_mut().zip(rows) {
+            let wrow = &t.data[r * row_bytes..(r + 1) * row_bytes];
+            *o = dot_f16(wrow, x);
+        }
+    }
+}
+
+/// Inner loop: widen f16→f32 (table-driven, see util::f16 §Perf note)
+/// and FMA, 4 accumulators to break the dependency chain (mirrors
+/// llama.cpp's `ggml_vec_dot_f16` + `ggml_table_f32_f16`).
+#[inline]
+pub fn dot_f16(wrow: &[u8], x: &[f32]) -> f32 {
+    let mut acc = [0f32; 4];
+    for (i, c) in wrow.chunks_exact(2).enumerate() {
+        let w = f16_to_f32_fast(u16::from_le_bytes([c[0], c[1]]));
+        acc[i & 3] += w * x[i];
+    }
+    acc[0] + acc[1] + acc[2] + acc[3]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use pallas_core::util::Rng;
+
+    #[test]
+    fn ternary_values_survive_f16() {
+        let mut rng = Rng::new(2);
+        let q: Vec<i8> = (0..256).map(|_| rng.next_ternary() as i8).collect();
+        let t = TernaryWeights::from_ternary(q, 2, 128, 0.03125); // exact power of 2
+        let kern = F16Kernel;
+        let packed = kern.quantize(&t);
+        assert_eq!(packed.bits_per_weight(), 16.0);
+        assert_eq!(kern.dequantize(&packed), t.dequantize());
+    }
+
+    #[test]
+    fn gemv_matches_f64_reference() {
+        let mut rng = Rng::new(3);
+        let q: Vec<i8> = (0..8 * 96).map(|_| rng.next_ternary() as i8).collect();
+        let t = TernaryWeights::from_ternary(q, 8, 96, 0.0417);
+        let x: Vec<f32> = (0..96).map(|_| rng.next_gaussian()).collect();
+        let kern = F16Kernel;
+        let packed = kern.quantize(&t);
+        let p = kern.prepare(&x, 96);
+        let mut out = vec![0f32; 8];
+        kern.gemv(&packed, &p, &mut out);
+        let wd = kern.dequantize(&packed);
+        for r in 0..8 {
+            let want: f64 =
+                (0..96).map(|i| wd[r * 96 + i] as f64 * x[i] as f64).sum();
+            assert!((out[r] as f64 - want).abs() < 1e-3, "row {r}");
+        }
+    }
+}

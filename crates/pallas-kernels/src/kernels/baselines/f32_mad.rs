@@ -1,0 +1,103 @@
+//! F32 reference MAD kernel: dense f32 weights, raw f32 activations.
+//! This is the "full-precision path" quality evals compare against and the
+//! slowest speed baseline (16→32-bit storage puts it off the paper's
+//! charts for big models — the Table 7 "N/A" rows).
+
+use crate::kernels::quant::TernaryWeights;
+use crate::kernels::{
+    Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
+};
+
+pub struct F32Kernel;
+
+impl Kernel for F32Kernel {
+    fn info(&self) -> KernelInfo {
+        KernelInfo {
+            qtype: QuantType::F32,
+            name: "F32",
+            class: KernelClass::MadBased,
+            element_wise: false,
+            bpw: 32.0,
+            lossless: false, // full precision but NOT the training-scheme integer path
+            k_multiple: 1,
+            ternary_native: true,
+        }
+    }
+
+    fn quantize(&self, w: &TernaryWeights) -> QTensor {
+        let deq = w.dequantize();
+        let mut data = vec![0u8; deq.len() * 4];
+        for (chunk, v) in data.chunks_exact_mut(4).zip(deq.iter()) {
+            chunk.copy_from_slice(&v.to_le_bytes());
+        }
+        QTensor { qtype: QuantType::F32, m: w.m, k: w.k, data, scale: w.scale, sparse: None }
+    }
+
+    fn dequantize(&self, t: &QTensor) -> Vec<f32> {
+        t.data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    fn prepare_kind(&self, _k: usize) -> PrepareKind {
+        PrepareKind::Raw
+    }
+
+    /// No preprocessing: the batched path borrows the raw activation row
+    /// (no copy); only the standalone `prepare` clones.
+    fn prepare_row_into(&self, x: &[f32], k: usize, _dst: PreparedRowMut<'_>) {
+        debug_assert_eq!(x.len(), k);
+    }
+
+    fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
+        let x = match p {
+            PreparedRow::Raw(x) => x,
+            _ => panic!("F32 expects raw activations"),
+        };
+        let row_bytes = t.k * 4;
+        for (o, r) in out.iter_mut().zip(rows) {
+            let wrow = &t.data[r * row_bytes..(r + 1) * row_bytes];
+            *o = dot_f32_bytes(wrow, x);
+        }
+    }
+}
+
+/// 4-way unrolled f32 dot product over little-endian weight bytes.
+#[inline]
+pub fn dot_f32_bytes(wrow: &[u8], x: &[f32]) -> f32 {
+    let mut acc = [0f32; 4];
+    for (i, c) in wrow.chunks_exact(4).enumerate() {
+        let w = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        acc[i & 3] += w * x[i];
+    }
+    acc[0] + acc[1] + acc[2] + acc[3]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use pallas_core::util::Rng;
+
+    #[test]
+    fn exact_on_dequantized_weights() {
+        let mut rng = Rng::new(1);
+        let q: Vec<i8> = (0..4 * 64).map(|_| rng.next_ternary() as i8).collect();
+        let t = TernaryWeights::from_ternary(q, 4, 64, 0.5);
+        let x: Vec<f32> = (0..64).map(|_| rng.next_gaussian()).collect();
+        let kern = F32Kernel;
+        let packed = kern.quantize(&t);
+        assert_eq!(kern.dequantize(&packed), t.dequantize());
+        let p = kern.prepare(&x, 64);
+        let mut out = vec![0f32; 4];
+        kern.gemv(&packed, &p, &mut out);
+        let wd = t.dequantize();
+        for r in 0..4 {
+            let mut acc = [0f32; 4];
+            for i in 0..64 {
+                acc[i & 3] += wd[r * 64 + i] * x[i];
+            }
+            assert_eq!(out[r], acc[0] + acc[1] + acc[2] + acc[3]);
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! llama.cpp **Q2_K**: 2-bit K-quants. Super-blocks of 256 weights with 16
+//! sub-blocks of 16; each sub-block has a 4-bit scale and a 4-bit min,
+//! both further scaled by two f16 super-block factors `d` and `dmin`:
+//!
+//! `w ≈ d·sc·q − dmin·mn`
+//!
+//! Layout per super-block: 16 scale/min bytes + 64 quant bytes + 2×f16 =
+//! 84 bytes → **2.625 bpw**.
+//!
+//! The paper (§2.3) cites Q2_K as the bit-wise MAD representative whose
+//! *multi-step dequantization* (two scale levels + min offset) costs extra
+//! latency on ternary models — visible in the kernel benches.
+
+use crate::kernels::quant::{quantize_act_blocked_into, TernaryWeights};
+use crate::kernels::{
+    Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
+};
+use pallas_core::util::{f16_to_f32, f32_to_f16};
+
+pub struct Q2KKernel;
+
+pub const QK: usize = 256;
+pub const SUB: usize = 16; // sub-block length
+/// 16 scale bytes + 64 quant bytes + d + dmin.
+pub const BLOCK_BYTES: usize = 16 + QK / 4 + 4;
+
+impl Kernel for Q2KKernel {
+    fn info(&self) -> KernelInfo {
+        KernelInfo {
+            qtype: QuantType::Q2K,
+            name: "Q2_K",
+            class: KernelClass::MadBased,
+            element_wise: false,
+            bpw: BLOCK_BYTES as f64 * 8.0 / QK as f64, // 2.625
+            lossless: false,
+            k_multiple: QK,
+            ternary_native: false,
+        }
+    }
+
+    fn quantize(&self, w: &TernaryWeights) -> QTensor {
+        let (m, k) = (w.m, w.k);
+        assert_eq!(k % QK, 0, "Q2_K requires K % 256 == 0");
+        let blocks_per_row = k / QK;
+        let row_bytes = blocks_per_row * BLOCK_BYTES;
+        let mut data = vec![0u8; m * row_bytes];
+        let deq = w.dequantize();
+        for r in 0..m {
+            for b in 0..blocks_per_row {
+                let xs = &deq[r * k + b * QK..r * k + (b + 1) * QK];
+                let blk = &mut data[r * row_bytes + b * BLOCK_BYTES..][..BLOCK_BYTES];
+                pack_block_q2_k(xs, blk);
+            }
+        }
+        QTensor { qtype: QuantType::Q2K, m, k, data, scale: w.scale, sparse: None }
+    }
+
+    fn dequantize(&self, t: &QTensor) -> Vec<f32> {
+        let blocks_per_row = t.k / QK;
+        let row_bytes = blocks_per_row * BLOCK_BYTES;
+        let mut out = Vec::with_capacity(t.m * t.k);
+        for r in 0..t.m {
+            for b in 0..blocks_per_row {
+                let blk = &t.data[r * row_bytes + b * BLOCK_BYTES..][..BLOCK_BYTES];
+                let d = f16_to_f32(u16::from_le_bytes([blk[80], blk[81]]));
+                let dmin = f16_to_f32(u16::from_le_bytes([blk[82], blk[83]]));
+                for s in 0..SUB {
+                    let sc = (blk[s] & 0xf) as f32;
+                    let mn = (blk[s] >> 4) as f32;
+                    for j in 0..SUB {
+                        let idx = s * SUB + j;
+                        let q = (blk[16 + idx / 4] >> (2 * (idx % 4))) & 0x3;
+                        out.push(d * sc * q as f32 - dmin * mn);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn prepare_kind(&self, _k: usize) -> PrepareKind {
+        PrepareKind::Blocked { block_len: QK }
+    }
+
+    fn prepare_row_into(&self, x: &[f32], k: usize, dst: PreparedRowMut<'_>) {
+        debug_assert_eq!(x.len(), k);
+        match dst {
+            PreparedRowMut::Blocked { q, d, bsums } => quantize_act_blocked_into(x, QK, q, d, bsums),
+            _ => panic!("Q2_K expects a blocked destination"),
+        }
+    }
+
+    fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
+        let (actq, actd, _abs, block_len) = match p {
+            PreparedRow::Blocked { q, d, bsums, block_len } => (q, d, bsums, block_len),
+            _ => panic!("Q2_K expects Q8_K activations"),
+        };
+        assert_eq!(block_len, QK);
+        let blocks_per_row = t.k / QK;
+        let row_bytes = blocks_per_row * BLOCK_BYTES;
+        for (o, r) in out.iter_mut().zip(rows) {
+            let mut sum = 0f32;
+            for b in 0..blocks_per_row {
+                let blk = &t.data[r * row_bytes + b * BLOCK_BYTES..][..BLOCK_BYTES];
+                let d = f16_to_f32(u16::from_le_bytes([blk[80], blk[81]]));
+                let dmin = f16_to_f32(u16::from_le_bytes([blk[82], blk[83]]));
+                let aq = &actq[b * QK..(b + 1) * QK];
+                // The multi-step path: per sub-block integer dot with a
+                // 4-bit scale, plus a min-offset correction using the
+                // sub-block activation sum.
+                let mut isum = 0i32; // Σ sc·(q·a) over sub-blocks
+                let mut msum = 0i32; // Σ mn·Σa over sub-blocks
+                for s in 0..SUB {
+                    let sc = (blk[s] & 0xf) as i32;
+                    let mn = (blk[s] >> 4) as i32;
+                    let mut ssum = 0i32;
+                    let mut asum = 0i32;
+                    let qbase = 16 + s * SUB / 4;
+                    for j4 in 0..SUB / 4 {
+                        // SAFETY: qbase + j4 < 16 + SUB·SUB/4 ≤ BLOCK_BYTES,
+                        // and `blk` is exactly one BLOCK_BYTES slice.
+                        let byte = unsafe { *blk.get_unchecked(qbase + j4) };
+                        let a = &aq[s * SUB + j4 * 4..];
+                        ssum += ((byte & 0x3) as i32) * a[0] as i32;
+                        ssum += (((byte >> 2) & 0x3) as i32) * a[1] as i32;
+                        ssum += (((byte >> 4) & 0x3) as i32) * a[2] as i32;
+                        ssum += (((byte >> 6) & 0x3) as i32) * a[3] as i32;
+                        asum += a[0] as i32 + a[1] as i32 + a[2] as i32 + a[3] as i32;
+                    }
+                    isum += sc * ssum;
+                    msum += mn * asum;
+                }
+                sum += (d * isum as f32 - dmin * msum as f32) * actd[b];
+            }
+            *o = sum;
+        }
+    }
+}
+
+/// Quantize one 256-value super-block to Q2_K (simplified llama.cpp
+/// algorithm: per-sub-block affine fit to [0,3], 4-bit scale/min grid).
+pub fn pack_block_q2_k(xs: &[f32], blk: &mut [u8]) {
+    debug_assert_eq!(xs.len(), QK);
+    debug_assert_eq!(blk.len(), BLOCK_BYTES);
+    // Per-sub-block float scale/min, with a small scale search like
+    // llama.cpp's make_qkx2_quants (a fixed (max−min)/3 fit is very lossy
+    // on ternary data: the zero level falls between grid points).
+    let mut scales = [0f32; SUB];
+    let mut mins = [0f32; SUB];
+    for s in 0..SUB {
+        let sub = &xs[s * SUB..(s + 1) * SUB];
+        let min = sub.iter().cloned().fold(f32::INFINITY, f32::min).min(0.0);
+        let max = sub.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let range = (max - min).max(0.0);
+        let mut best = (f32::INFINITY, 0f32);
+        for steps in 1..=6 {
+            let scale = range / (steps as f32 * 0.5 + 0.5); // range/1 .. range/3.5
+            if scale <= 0.0 {
+                best = (0.0, 0.0);
+                break;
+            }
+            let sse: f32 = sub
+                .iter()
+                .map(|&v| {
+                    let q = (((v - min) / scale).round()).clamp(0.0, 3.0);
+                    let back = q * scale + min;
+                    (back - v) * (back - v)
+                })
+                .sum();
+            if sse < best.0 {
+                best = (sse, scale);
+            }
+        }
+        scales[s] = best.1;
+        mins[s] = -min;
+    }
+    let max_scale = scales.iter().cloned().fold(0f32, f32::max);
+    let max_min = mins.iter().cloned().fold(0f32, f32::max);
+    let d = f16_to_f32(f32_to_f16(if max_scale > 0.0 { max_scale / 15.0 } else { 0.0 }));
+    let dmin = f16_to_f32(f32_to_f16(if max_min > 0.0 { max_min / 15.0 } else { 0.0 }));
+    blk[80..82].copy_from_slice(&f32_to_f16(d).to_le_bytes());
+    blk[82..84].copy_from_slice(&f32_to_f16(dmin).to_le_bytes());
+    for s in 0..SUB {
+        let sc4 = if d > 0.0 { ((scales[s] / d).round() as i32).clamp(0, 15) } else { 0 };
+        let mn4 = if dmin > 0.0 { ((mins[s] / dmin).round() as i32).clamp(0, 15) } else { 0 };
+        blk[s] = (sc4 as u8) | ((mn4 as u8) << 4);
+        let eff_scale = d * sc4 as f32;
+        let eff_min = dmin * mn4 as f32;
+        let sub = &xs[s * SUB..(s + 1) * SUB];
+        for (j, &v) in sub.iter().enumerate() {
+            let q = if eff_scale > 0.0 {
+                (((v + eff_min) / eff_scale).round() as i32).clamp(0, 3)
+            } else {
+                0
+            };
+            let idx = s * SUB + j;
+            blk[16 + idx / 4] |= (q as u8) << (2 * (idx % 4));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use pallas_core::util::Rng;
+
+    fn random_ternary(m: usize, k: usize, seed: u64) -> TernaryWeights {
+        let mut rng = Rng::new(seed);
+        let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+        TernaryWeights::from_ternary(q, m, k, 0.0625)
+    }
+
+    #[test]
+    fn bpw_is_2_625() {
+        let t = random_ternary(2, 512, 1);
+        let packed = Q2KKernel.quantize(&t);
+        assert!((packed.bits_per_weight() - 2.625).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dequant_error_bounded_on_ternary() {
+        let t = random_ternary(2, 256, 2);
+        let packed = Q2KKernel.quantize(&t);
+        let back = Q2KKernel.dequantize(&packed);
+        let want = t.dequantize();
+        // K-quants on ternary data land within one quantization step.
+        for (g, w) in back.iter().zip(want.iter()) {
+            assert!((g - w).abs() < 0.08 * 0.0625 * 3.0 + 0.02, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn gemv_close_to_dense() {
+        let (m, k) = (8, 512);
+        let t = random_ternary(m, k, 3);
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        let packed = Q2KKernel.quantize(&t);
+        let p = Q2KKernel.prepare(&x, k);
+        let mut out = vec![0f32; m];
+        Q2KKernel.gemv(&packed, &p, &mut out);
+        // gemv must agree with its own dequantization (the format loss is
+        // accounted separately in dequant_error_bounded_on_ternary).
+        let wd = Q2KKernel.dequantize(&packed);
+        for r in 0..m {
+            let want: f32 = (0..k).map(|i| wd[r * k + i] * x[i]).sum();
+            assert!((out[r] - want).abs() < 0.05 * want.abs().max(1.0), "row {r}: {} vs {want}", out[r]);
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! llama.cpp **Q4_0**: general-purpose 4-bit format. Blocks of 32 weights:
+//! one f16 scale `d` + 16 bytes of nibbles, `w ≈ (q - 8) * d` → 18 bytes /
+//! 32 weights = 4.5 bpw. Activations quantized per-32 block (`Q8_0`).
+//!
+//! The paper uses Q4_0 as the "general kernel" column of Table 7: it can
+//! *store* a ternary model (wastefully) but is neither element-wise nor
+//! lossless.
+
+use crate::kernels::quant::{quantize_act_blocked_into, TernaryWeights};
+use crate::kernels::{
+    Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
+};
+use pallas_core::util::{f16_to_f32, f32_to_f16};
+
+pub struct Q40Kernel;
+
+/// Block length.
+pub const QK: usize = 32;
+/// Bytes per packed block: f16 d + 16 nibble bytes.
+pub const BLOCK_BYTES: usize = 2 + QK / 2;
+
+impl Kernel for Q40Kernel {
+    fn info(&self) -> KernelInfo {
+        KernelInfo {
+            qtype: QuantType::Q40,
+            name: "Q4_0",
+            class: KernelClass::MadBased,
+            element_wise: false,
+            bpw: BLOCK_BYTES as f64 * 8.0 / QK as f64, // 4.5
+            lossless: false,
+            k_multiple: QK,
+            ternary_native: false, // general format; ternary round-trips only approximately
+        }
+    }
+
+    fn quantize(&self, w: &TernaryWeights) -> QTensor {
+        let (m, k) = (w.m, w.k);
+        assert_eq!(k % QK, 0, "Q4_0 requires K % 32 == 0");
+        let blocks_per_row = k / QK;
+        let row_bytes = blocks_per_row * BLOCK_BYTES;
+        let mut data = vec![0u8; m * row_bytes];
+        let deq = w.dequantize();
+        for r in 0..m {
+            for b in 0..blocks_per_row {
+                let xs = &deq[r * k + b * QK..r * k + (b + 1) * QK];
+                let out = &mut data[r * row_bytes + b * BLOCK_BYTES..][..BLOCK_BYTES];
+                pack_block_q4_0(xs, out);
+            }
+        }
+        QTensor { qtype: QuantType::Q40, m, k, data, scale: w.scale, sparse: None }
+    }
+
+    fn dequantize(&self, t: &QTensor) -> Vec<f32> {
+        let blocks_per_row = t.k / QK;
+        let row_bytes = blocks_per_row * BLOCK_BYTES;
+        let mut out = Vec::with_capacity(t.m * t.k);
+        for r in 0..t.m {
+            for b in 0..blocks_per_row {
+                let blk = &t.data[r * row_bytes + b * BLOCK_BYTES..][..BLOCK_BYTES];
+                let d = f16_to_f32(u16::from_le_bytes([blk[0], blk[1]]));
+                // llama.cpp layout: nibble i low = weight i, high = weight i+16
+                for i in 0..QK / 2 {
+                    out.push(((blk[2 + i] & 0xf) as i32 - 8) as f32 * d);
+                }
+                for i in 0..QK / 2 {
+                    out.push(((blk[2 + i] >> 4) as i32 - 8) as f32 * d);
+                }
+            }
+        }
+        out
+    }
+
+    fn prepare_kind(&self, _k: usize) -> PrepareKind {
+        PrepareKind::Blocked { block_len: QK }
+    }
+
+    fn prepare_row_into(&self, x: &[f32], k: usize, dst: PreparedRowMut<'_>) {
+        debug_assert_eq!(x.len(), k);
+        match dst {
+            PreparedRowMut::Blocked { q, d, bsums } => quantize_act_blocked_into(x, QK, q, d, bsums),
+            _ => panic!("Q4_0 expects a blocked destination"),
+        }
+    }
+
+    fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
+        let (actq, actd, bsums, block_len) = match p {
+            PreparedRow::Blocked { q, d, bsums, block_len } => (q, d, bsums, block_len),
+            _ => panic!("Q4_0 expects Q8_0 blocked activations"),
+        };
+        assert_eq!(block_len, QK);
+        let blocks_per_row = t.k / QK;
+        let row_bytes = blocks_per_row * BLOCK_BYTES;
+        for (o, r) in out.iter_mut().zip(rows) {
+            let mut sum = 0f32;
+            for b in 0..blocks_per_row {
+                let blk = &t.data[r * row_bytes + b * BLOCK_BYTES..][..BLOCK_BYTES];
+                let d = f16_to_f32(u16::from_le_bytes([blk[0], blk[1]]));
+                let aq = &actq[b * QK..(b + 1) * QK];
+                // Σ (q-8)·a = Σ q·a − 8·Σa, with Σa precomputed per block.
+                let mut isum = 0i32;
+                for i in 0..QK / 2 {
+                    let byte = blk[2 + i];
+                    isum += ((byte & 0xf) as i32) * aq[i] as i32;
+                    isum += ((byte >> 4) as i32) * aq[i + QK / 2] as i32;
+                }
+                isum -= 8 * bsums[b];
+                sum += isum as f32 * d * actd[b];
+            }
+            *o = sum;
+        }
+    }
+}
+
+/// Quantize one block of 32 f32 values to Q4_0 (llama.cpp reference
+/// algorithm: d = max-by-|magnitude| / -8).
+pub fn pack_block_q4_0(xs: &[f32], out: &mut [u8]) {
+    debug_assert_eq!(xs.len(), QK);
+    let mut amax = 0f32;
+    let mut max = 0f32;
+    for &v in xs {
+        if v.abs() > amax {
+            amax = v.abs();
+            max = v;
+        }
+    }
+    let d = max / -8.0;
+    let dbits = f32_to_f16(d);
+    out[0..2].copy_from_slice(&dbits.to_le_bytes());
+    let df = f16_to_f32(dbits);
+    let id = if df != 0.0 { 1.0 / df } else { 0.0 };
+    for i in 0..QK / 2 {
+        let q0 = ((xs[i] * id + 8.5) as i32).clamp(0, 15) as u8;
+        let q1 = ((xs[i + QK / 2] * id + 8.5) as i32).clamp(0, 15) as u8;
+        out[2 + i] = q0 | (q1 << 4);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use pallas_core::util::Rng;
+
+    #[test]
+    fn bpw_is_4_5() {
+        let mut rng = Rng::new(1);
+        let q: Vec<i8> = (0..4 * 128).map(|_| rng.next_ternary() as i8).collect();
+        let t = TernaryWeights::from_ternary(q, 4, 128, 0.05);
+        let packed = Q40Kernel.quantize(&t);
+        assert_eq!(packed.bits_per_weight(), 4.5);
+    }
+
+    #[test]
+    fn round_trip_error_small() {
+        let mut rng = Rng::new(2);
+        let xs: Vec<f32> = (0..QK).map(|_| rng.next_gaussian()).collect();
+        let mut blk = [0u8; BLOCK_BYTES];
+        pack_block_q4_0(&xs, &mut blk);
+        let d = f16_to_f32(u16::from_le_bytes([blk[0], blk[1]]));
+        let step = d.abs();
+        for i in 0..QK / 2 {
+            let lo = ((blk[2 + i] & 0xf) as i32 - 8) as f32 * d;
+            let hi = ((blk[2 + i] >> 4) as i32 - 8) as f32 * d;
+            assert!((lo - xs[i]).abs() <= step + 1e-4);
+            assert!((hi - xs[i + QK / 2]).abs() <= step + 1e-4);
+        }
+    }
+
+    #[test]
+    fn gemv_close_to_dense() {
+        let mut rng = Rng::new(3);
+        let q: Vec<i8> = (0..16 * 256).map(|_| rng.next_ternary() as i8).collect();
+        let t = TernaryWeights::from_ternary(q, 16, 256, 0.07);
+        let x: Vec<f32> = (0..256).map(|_| rng.next_gaussian()).collect();
+        let kern = Q40Kernel;
+        let packed = kern.quantize(&t);
+        let p = kern.prepare(&x, 256);
+        let mut out = vec![0f32; 16];
+        kern.gemv(&packed, &p, &mut out);
+        let wd = t.dequantize();
+        for r in 0..16 {
+            let want: f32 = (0..256).map(|i| wd[r * 256 + i] * x[i]).sum();
+            assert!((out[r] - want).abs() < 0.2 + 0.05 * want.abs(), "row {r}: {} vs {want}", out[r]);
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! T-MAC-style **bit-wise LUT** kernel (Wei et al. 2024) — the prior LUT
+//! state of the art the paper's TL kernels improve upon.
+//!
+//! Ternary weights are stored as 2-bit codes `w+1 ∈ {0,1,2}` split into two
+//! bit-planes (bpw 2 — the spatial inefficiency §2.3 calls out). Each plane
+//! is processed in groups of g=4 bits; a 16-entry LUT per group of 4
+//! activations holds the subset sums `Σ a_j·bit_j`; results from the two
+//! planes combine as `R = 2·Σ(a·b1) + Σ(a·b0) − Σa` (paper Fig. 4 (2):
+//! lookup, then *bit-shift and accumulate*).
+//!
+//! Cost per weight: 2 lookups / 4 weights = 0.5, vs TL2's 1/3 — and 2 bpw
+//! of traffic vs TL2's 1.67. Element-wise beats bit-wise on both axes,
+//! which is the paper's Appendix A.3 claim; the benches measure it.
+//!
+//! Like T-MAC, tables are requantized to int8 (with per-block scales),
+//! so the kernel is *not* lossless (§3.2.1).
+
+use crate::kernels::quant::{quantize_act_int8_into, TernaryWeights};
+use crate::kernels::tl1::{requantize_tables_into, LUT_BLOCK_GROUPS, LUT_W};
+use crate::kernels::{
+    Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
+};
+
+pub struct TmacKernel;
+
+impl Kernel for TmacKernel {
+    fn info(&self) -> KernelInfo {
+        KernelInfo {
+            qtype: QuantType::Tmac,
+            name: "TMAC",
+            class: KernelClass::LutBased,
+            element_wise: false,
+            bpw: 2.0,
+            lossless: false,
+            k_multiple: 8,
+            ternary_native: true,
+        }
+    }
+
+    fn quantize(&self, w: &TernaryWeights) -> QTensor {
+        let (m, k) = (w.m, w.k);
+        assert_eq!(k % 8, 0, "TMAC requires K % 8 == 0");
+        let plane_bytes = k / 8;
+        let row_bytes = 2 * plane_bytes;
+        let mut data = vec![0u8; m * row_bytes];
+        for r in 0..m {
+            let row = w.row(r);
+            let (p0, p1) = data[r * row_bytes..(r + 1) * row_bytes].split_at_mut(plane_bytes);
+            for (i, &t) in row.iter().enumerate() {
+                let code = (t + 1) as u8; // 0..2
+                p0[i / 8] |= (code & 1) << (i % 8);
+                p1[i / 8] |= ((code >> 1) & 1) << (i % 8);
+            }
+        }
+        QTensor { qtype: QuantType::Tmac, m, k, data, scale: w.scale, sparse: None }
+    }
+
+    fn dequantize(&self, t: &QTensor) -> Vec<f32> {
+        let plane_bytes = t.k / 8;
+        let row_bytes = 2 * plane_bytes;
+        let mut out = Vec::with_capacity(t.m * t.k);
+        for r in 0..t.m {
+            let (p0, p1) = t.data[r * row_bytes..(r + 1) * row_bytes].split_at(plane_bytes);
+            for i in 0..t.k {
+                let b0 = (p0[i / 8] >> (i % 8)) & 1;
+                let b1 = (p1[i / 8] >> (i % 8)) & 1;
+                let code = (b1 << 1) | b0;
+                out.push((code as i32 - 1) as f32 * t.scale);
+            }
+        }
+        out
+    }
+
+    fn prepare_kind(&self, k: usize) -> PrepareKind {
+        PrepareKind::BitLut { groups: k / 4, block_groups: LUT_BLOCK_GROUPS }
+    }
+
+    fn prepare_row_into(&self, x: &[f32], k: usize, dst: PreparedRowMut<'_>) {
+        debug_assert_eq!(x.len(), k);
+        match dst {
+            PreparedRowMut::BitLut { aq, tmp16, tables, block_scales, scale, act_sum } => {
+                let (s, sum) = quantize_act_int8_into(x, aq);
+                build_subset_tables_into(aq, tmp16);
+                requantize_tables_into(tmp16, LUT_BLOCK_GROUPS, tables, block_scales);
+                *scale = s;
+                *act_sum = sum;
+            }
+            _ => panic!("TMAC expects a bit-wise LUT destination"),
+        }
+    }
+
+    fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
+        let (tables, block_scales, block_groups, scale, act_sum) = match p {
+            PreparedRow::BitLut { tables, block_scales, block_groups, scale, act_sum } => {
+                (tables, block_scales, block_groups, scale, act_sum)
+            }
+            _ => panic!("TMAC expects a bit-wise LUT activation"),
+        };
+        let plane_bytes = t.k / 8;
+        let row_bytes = 2 * plane_bytes;
+        let combined = t.scale / scale;
+        for (o, r) in out.iter_mut().zip(rows) {
+            let (p0, p1) = t.data[r * row_bytes..(r + 1) * row_bytes].split_at(plane_bytes);
+            let mut facc = 0f32;
+            // One scale block covers `block_groups` 4-activation groups =
+            // block_groups/2 plane bytes.
+            let bytes_per_block = block_groups / 2;
+            let mut blk = 0usize;
+            for (c0, c1) in p0.chunks(bytes_per_block).zip(p1.chunks(bytes_per_block)) {
+                let mut acc0 = 0i32;
+                let mut acc1 = 0i32;
+                let base = blk * block_groups * LUT_W;
+                let mut g = 0usize;
+                for (&b0, &b1) in c0.iter().zip(c1.iter()) {
+                    // SAFETY: tables holds block_groups LUT_W-entry tables
+                    // per block and nibble codes are < LUT_W, so every
+                    // index below is in bounds.
+                    let t0a = unsafe { *tables.get_unchecked(base + g * LUT_W + (b0 & 0xf) as usize) };
+                    // SAFETY: as above.
+                    let t1a = unsafe { *tables.get_unchecked(base + g * LUT_W + (b1 & 0xf) as usize) };
+                    // SAFETY: as above.
+                    let t0b =
+                        unsafe { *tables.get_unchecked(base + (g + 1) * LUT_W + (b0 >> 4) as usize) };
+                    // SAFETY: as above.
+                    let t1b =
+                        unsafe { *tables.get_unchecked(base + (g + 1) * LUT_W + (b1 >> 4) as usize) };
+                    acc0 += t0a as i32 + t0b as i32;
+                    acc1 += t1a as i32 + t1b as i32;
+                    g += 2;
+                }
+                // Bit-shift and accumulate: plane 1 carries weight 2.
+                facc += (acc0 + 2 * acc1) as f32 * block_scales[blk];
+                blk += 1;
+            }
+            *o = (facc - act_sum as f32) * combined;
+        }
+    }
+}
+
+/// Build the bit-wise subset-sum tables: one 16-entry table per group of 4
+/// activations, `table[s] = Σ_{j: s_j=1} a[4g+j]`, computed incrementally
+/// (2^g adds instead of g·2^g).
+pub fn build_subset_tables(aq: &[i8]) -> Vec<i16> {
+    let mut tables = vec![0i16; (aq.len() / 4) * LUT_W];
+    build_subset_tables_into(aq, &mut tables);
+    tables
+}
+
+/// Allocation-free [`build_subset_tables`]: fills the caller-owned table
+/// buffer (`(aq.len()/4) * LUT_W` entries).
+pub fn build_subset_tables_into(aq: &[i8], tables: &mut [i16]) {
+    debug_assert_eq!(aq.len() % 4, 0);
+    let groups = aq.len() / 4;
+    debug_assert_eq!(tables.len(), groups * LUT_W);
+    tables.fill(0);
+    for g in 0..groups {
+        let t = &mut tables[g * LUT_W..(g + 1) * LUT_W];
+        for j in 0..4 {
+            let a = aq[4 * g + j] as i16;
+            let stride = 1usize << j;
+            for s in 0..stride {
+                t[s | stride] = t[s] + a;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use pallas_core::util::Rng;
+
+    fn random_ternary(m: usize, k: usize, seed: u64) -> TernaryWeights {
+        let mut rng = Rng::new(seed);
+        let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+        TernaryWeights::from_ternary(q, m, k, 0.05)
+    }
+
+    #[test]
+    fn subset_tables_enumerate_sums() {
+        let aq = [1i8, 10, 100, -50];
+        let t = build_subset_tables(&aq);
+        assert_eq!(t[0b0000], 0);
+        assert_eq!(t[0b0001], 1);
+        assert_eq!(t[0b0010], 10);
+        assert_eq!(t[0b0100], 100);
+        assert_eq!(t[0b1000], -50);
+        assert_eq!(t[0b1111], 61);
+        assert_eq!(t[0b1010], -40);
+    }
+
+    #[test]
+    fn bit_planes_round_trip() {
+        let t = random_ternary(4, 128, 1);
+        let packed = TmacKernel.quantize(&t);
+        assert_eq!(packed.bits_per_weight(), 2.0);
+        assert_eq!(TmacKernel.dequantize(&packed), t.dequantize());
+    }
+
+    #[test]
+    fn gemv_close_to_dense() {
+        let (m, k) = (16, 1024);
+        let t = random_ternary(m, k, 2);
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        let packed = TmacKernel.quantize(&t);
+        let p = TmacKernel.prepare(&x, k);
+        let mut out = vec![0f32; m];
+        TmacKernel.gemv(&packed, &p, &mut out);
+        let wd = t.dequantize();
+        for r in 0..m {
+            let want: f32 = (0..k).map(|i| wd[r * k + i] * x[i]).sum();
+            assert!((out[r] - want).abs() < 0.05 * want.abs().max(1.0), "row {r}: {} vs {want}", out[r]);
+        }
+    }
+
+    #[test]
+    fn partial_trailing_block() {
+        // 24 groups (not a multiple of LUT_BLOCK_GROUPS=32).
+        let k = 96;
+        let t = random_ternary(4, k, 4);
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        let packed = TmacKernel.quantize(&t);
+        let p = TmacKernel.prepare(&x, k);
+        let mut out = vec![0f32; 4];
+        TmacKernel.gemv(&packed, &p, &mut out);
+        let wd = t.dequantize();
+        for r in 0..4 {
+            let want: f32 = (0..k).map(|i| wd[r * k + i] * x[i]).sum();
+            assert!((out[r] - want).abs() < 0.08 * want.abs().max(1.0), "row {r}");
+        }
+    }
+}

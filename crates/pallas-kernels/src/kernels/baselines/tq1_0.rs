@@ -1,0 +1,257 @@
+//! llama.cpp **TQ1_0**: the densest ternary MAD format — base-3 packing,
+//! 5 trits per byte. Blocks of 256 weights:
+//!
+//! * 48 bytes × 5 trits  = 240 weights
+//! * 4 bytes  × 4 trits  = 16 weights
+//! * 2 bytes f16 scale
+//!
+//! 54 bytes / 256 weights = **1.6875 bpw** — the bpw twin of TL2 that the
+//! paper benchmarks MAD-vs-LUT against (§4.1.2, Appendix B.3).
+//!
+//! Decoding uses llama.cpp's fixed-point multiply trick: a byte `b`
+//! encoding trits `t0..t4` is stored pre-scaled so that iterating
+//! `b *= 3` yields the next trit in the top bits — one multiply and shift
+//! per weight instead of div/mod.
+
+use crate::kernels::quant::{quantize_act_blocked_into, TernaryWeights};
+use crate::kernels::{
+    Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
+};
+use pallas_core::util::{f16_to_f32, f32_to_f16};
+
+pub struct Tq10Kernel;
+
+pub const QK: usize = 256;
+/// 48 five-trit bytes + 4 four-trit bytes + f16 scale.
+pub const BLOCK_BYTES: usize = 48 + 4 + 2;
+
+/// Powers of three for trit packing.
+const POW3: [u16; 6] = [1, 3, 9, 27, 81, 243];
+
+impl Kernel for Tq10Kernel {
+    fn info(&self) -> KernelInfo {
+        KernelInfo {
+            qtype: QuantType::Tq10,
+            name: "TQ1_0",
+            class: KernelClass::MadBased,
+            element_wise: true,
+            bpw: BLOCK_BYTES as f64 * 8.0 / QK as f64, // 1.6875
+            lossless: false,
+            k_multiple: QK,
+            ternary_native: true,
+        }
+    }
+
+    fn quantize(&self, w: &TernaryWeights) -> QTensor {
+        let (m, k) = (w.m, w.k);
+        assert_eq!(k % QK, 0, "TQ1_0 requires K % 256 == 0");
+        let blocks_per_row = k / QK;
+        let row_bytes = blocks_per_row * BLOCK_BYTES;
+        let mut data = vec![0u8; m * row_bytes];
+        let dbits = f32_to_f16(w.scale).to_le_bytes();
+        for r in 0..m {
+            let row = w.row(r);
+            for b in 0..blocks_per_row {
+                let src = &row[b * QK..(b + 1) * QK];
+                let blk = &mut data[r * row_bytes + b * BLOCK_BYTES..][..BLOCK_BYTES];
+                // 48 bytes of 5 trits (weights 0..240)
+                for (i, chunk) in src[..240].chunks_exact(5).enumerate() {
+                    blk[i] = pack_trits(chunk);
+                }
+                // 4 bytes of 4 trits (weights 240..256)
+                for (i, chunk) in src[240..].chunks_exact(4).enumerate() {
+                    blk[48 + i] = pack_trits(chunk);
+                }
+                blk[52..].copy_from_slice(&dbits);
+            }
+        }
+        QTensor { qtype: QuantType::Tq10, m, k, data, scale: w.scale, sparse: None }
+    }
+
+    fn dequantize(&self, t: &QTensor) -> Vec<f32> {
+        let blocks_per_row = t.k / QK;
+        let row_bytes = blocks_per_row * BLOCK_BYTES;
+        let mut out = Vec::with_capacity(t.m * t.k);
+        for r in 0..t.m {
+            for b in 0..blocks_per_row {
+                let blk = &t.data[r * row_bytes + b * BLOCK_BYTES..][..BLOCK_BYTES];
+                let d = f16_to_f32(u16::from_le_bytes([blk[52], blk[53]]));
+                for &byte in &blk[..48] {
+                    let mut q = byte as u16;
+                    for _ in 0..5 {
+                        q *= 3;
+                        out.push((((q >> 8) & 0x3) as i32 - 1) as f32 * d);
+                        q &= 0xff;
+                    }
+                }
+                for &byte in &blk[48..52] {
+                    // 4-trit bytes are packed as ceil(v·256/3⁴); the same
+                    // ×3 pop-from-top trick walks their digits.
+                    let mut q = byte as u16;
+                    for _ in 0..4 {
+                        q *= 3;
+                        out.push((((q >> 8) & 0x3) as i32 - 1) as f32 * d);
+                        q &= 0xff;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn prepare_kind(&self, _k: usize) -> PrepareKind {
+        PrepareKind::Blocked { block_len: QK }
+    }
+
+    fn prepare_row_into(&self, x: &[f32], k: usize, dst: PreparedRowMut<'_>) {
+        debug_assert_eq!(x.len(), k);
+        match dst {
+            PreparedRowMut::Blocked { q, d, bsums } => quantize_act_blocked_into(x, QK, q, d, bsums),
+            _ => panic!("TQ1_0 expects a blocked destination"),
+        }
+    }
+
+    fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
+        let (actq, actd, bsums, block_len) = match p {
+            PreparedRow::Blocked { q, d, bsums, block_len } => (q, d, bsums, block_len),
+            _ => panic!("TQ1_0 expects Q8_K activations"),
+        };
+        assert_eq!(block_len, QK);
+        let blocks_per_row = t.k / QK;
+        let row_bytes = blocks_per_row * BLOCK_BYTES;
+        for (o, r) in out.iter_mut().zip(rows) {
+            let mut sum = 0f32;
+            for b in 0..blocks_per_row {
+                let blk = &t.data[r * row_bytes + b * BLOCK_BYTES..][..BLOCK_BYTES];
+                let d = f16_to_f32(u16::from_le_bytes([blk[52], blk[53]]));
+                let aq = &actq[b * QK..(b + 1) * QK];
+                let mut isum = 0i32;
+                // 5-trit bytes: the multiply-shift decode is the hot loop.
+                for (i, &byte) in blk[..48].iter().enumerate() {
+                    let mut q = byte as u16;
+                    let base = i * 5;
+                    for j in 0..5 {
+                        q = q.wrapping_mul(3);
+                        let trit = ((q >> 8) & 0x3) as i32; // 0, 1, 2
+                        // SAFETY: base + j < 48·5 = 240 ≤ QK and aq holds
+                        // one QK-entry block.
+                        isum += trit * unsafe { *aq.get_unchecked(base + j) } as i32;
+                        q &= 0xff;
+                    }
+                }
+                for (i, &byte) in blk[48..52].iter().enumerate() {
+                    let mut q = byte as u16;
+                    let base = 240 + i * 4;
+                    for j in 0..4 {
+                        q = q.wrapping_mul(3);
+                        let trit = ((q >> 8) & 0x3) as i32;
+                        // SAFETY: base + j < 240 + 4·4 = 256 = QK and aq
+                        // holds one QK-entry block.
+                        isum += trit * unsafe { *aq.get_unchecked(base + j) } as i32;
+                        q &= 0xff;
+                    }
+                }
+                isum -= bsums[b];
+                sum += isum as f32 * d * actd[b];
+            }
+            *o = sum;
+        }
+    }
+}
+
+/// Pack up to 5 trits into one byte in llama.cpp's fixed-point encoding:
+/// value = Σ tᵢ·3^(4−i) for 5 trits (or Σ tᵢ·3^(3−i) for 4), then scaled
+/// by 256/3^n (rounded up) so repeated ×3 pops trits from the top byte.
+pub fn pack_trits(trits: &[i8]) -> u8 {
+    let n = trits.len();
+    debug_assert!(n == 4 || n == 5);
+    let mut v = 0u32;
+    for (i, &t) in trits.iter().enumerate() {
+        v += ((t + 1) as u32) * POW3[n - 1 - i] as u32;
+    }
+    // ceil(v * 256 / 3^n): the canonical llama.cpp TQ1_0 fixed-point form.
+    ((v * 256 + (POW3[n] as u32 - 1)) / POW3[n] as u32) as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use pallas_core::util::Rng;
+
+    fn random_ternary(m: usize, k: usize, seed: u64) -> TernaryWeights {
+        let mut rng = Rng::new(seed);
+        let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+        TernaryWeights::from_ternary(q, m, k, 0.0625)
+    }
+
+    #[test]
+    fn pack_trits_decodes_by_multiply_shift() {
+        // Every 5-trit pattern must decode exactly via the ×3 trick.
+        for pattern in 0..3usize.pow(5) {
+            let mut trits = [0i8; 5];
+            let mut rest = pattern;
+            for d in (0..5).rev() {
+                trits[d] = (rest % 3) as i8 - 1;
+                rest /= 3;
+            }
+            let byte = pack_trits(&trits);
+            let mut q = byte as u16;
+            for (j, &want) in trits.iter().enumerate() {
+                q = q.wrapping_mul(3);
+                let got = ((q >> 8) & 0x3) as i32 - 1;
+                assert_eq!(got, want as i32, "pattern {pattern} trit {j}");
+                q &= 0xff;
+            }
+        }
+    }
+
+    #[test]
+    fn pack_4_trits_decodes() {
+        for pattern in 0..3usize.pow(4) {
+            let mut trits = [0i8; 4];
+            let mut rest = pattern;
+            for d in (0..4).rev() {
+                trits[d] = (rest % 3) as i8 - 1;
+                rest /= 3;
+            }
+            let byte = pack_trits(&trits);
+            let mut q = byte as u16;
+            for (j, &want) in trits.iter().enumerate() {
+                q = q.wrapping_mul(3);
+                assert_eq!(((q >> 8) & 0x3) as i32 - 1, want as i32, "pattern {pattern} trit {j}");
+                q &= 0xff;
+            }
+        }
+    }
+
+    #[test]
+    fn bpw_is_1_69() {
+        let t = random_ternary(2, 512, 1);
+        let packed = Tq10Kernel.quantize(&t);
+        assert!((packed.bits_per_weight() - 1.6875).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ternary_round_trip_exact() {
+        let t = random_ternary(3, 512, 2);
+        let packed = Tq10Kernel.quantize(&t);
+        assert_eq!(Tq10Kernel.dequantize(&packed), t.dequantize());
+    }
+
+    #[test]
+    fn gemv_close_to_dense() {
+        let (m, k) = (8, 768);
+        let t = random_ternary(m, k, 3);
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        let packed = Tq10Kernel.quantize(&t);
+        let p = Tq10Kernel.prepare(&x, k);
+        let mut out = vec![0f32; m];
+        Tq10Kernel.gemv(&packed, &p, &mut out);
+        let wd = t.dequantize();
+        for r in 0..m {
+            let want: f32 = (0..k).map(|i| wd[r * k + i] * x[i]).sum();
+            assert!((out[r] - want).abs() < 0.02 * want.abs().max(1.0), "row {r}");
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! llama.cpp **TQ2_0**: element-wise MAD ternary format. Blocks of 256
+//! weights: 64 bytes of 2-bit codes + f16 scale = 66 bytes → 2.06 bpw.
+//! Activations are per-block Q8_K — which is exactly why it is *not*
+//! lossless for BitNet b1.58 (§2.3): the per-block activation scales
+//! diverge from the per-tensor training scheme.
+
+use crate::kernels::quant::{quantize_act_blocked_into, TernaryWeights};
+use crate::kernels::{
+    Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
+};
+use pallas_core::util::{f16_to_f32, f32_to_f16};
+
+pub struct Tq20Kernel;
+
+/// Block length (matches Q8_K activation blocks).
+pub const QK: usize = 256;
+/// 2-bit codes (4/byte) + f16 scale.
+pub const BLOCK_BYTES: usize = QK / 4 + 2;
+
+impl Kernel for Tq20Kernel {
+    fn info(&self) -> KernelInfo {
+        KernelInfo {
+            qtype: QuantType::Tq20,
+            name: "TQ2_0",
+            class: KernelClass::MadBased,
+            element_wise: true,
+            bpw: BLOCK_BYTES as f64 * 8.0 / QK as f64, // 2.0625
+            lossless: false,
+            // Paper §3.2.2: "TQ2_0 only supports multiples of 256".
+            k_multiple: QK,
+            ternary_native: true,
+        }
+    }
+
+    fn quantize(&self, w: &TernaryWeights) -> QTensor {
+        let (m, k) = (w.m, w.k);
+        assert_eq!(k % QK, 0, "TQ2_0 requires K % 256 == 0");
+        let blocks_per_row = k / QK;
+        let row_bytes = blocks_per_row * BLOCK_BYTES;
+        let mut data = vec![0u8; m * row_bytes];
+        let dbits = f32_to_f16(w.scale).to_le_bytes();
+        for r in 0..m {
+            let row = w.row(r);
+            for b in 0..blocks_per_row {
+                let blk = &mut data[r * row_bytes + b * BLOCK_BYTES..][..BLOCK_BYTES];
+                for (byte_i, quad) in row[b * QK..(b + 1) * QK].chunks_exact(4).enumerate() {
+                    let mut byte = 0u8;
+                    for (j, &t) in quad.iter().enumerate() {
+                        byte |= (((t + 1) as u8) & 0x3) << (2 * j);
+                    }
+                    blk[byte_i] = byte;
+                }
+                blk[QK / 4..].copy_from_slice(&dbits);
+            }
+        }
+        QTensor { qtype: QuantType::Tq20, m, k, data, scale: w.scale, sparse: None }
+    }
+
+    fn dequantize(&self, t: &QTensor) -> Vec<f32> {
+        let blocks_per_row = t.k / QK;
+        let row_bytes = blocks_per_row * BLOCK_BYTES;
+        let mut out = Vec::with_capacity(t.m * t.k);
+        for r in 0..t.m {
+            for b in 0..blocks_per_row {
+                let blk = &t.data[r * row_bytes + b * BLOCK_BYTES..][..BLOCK_BYTES];
+                let d = f16_to_f32(u16::from_le_bytes([blk[QK / 4], blk[QK / 4 + 1]]));
+                for byte_i in 0..QK / 4 {
+                    let byte = blk[byte_i];
+                    for j in 0..4 {
+                        out.push((((byte >> (2 * j)) & 0x3) as i32 - 1) as f32 * d);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn prepare_kind(&self, _k: usize) -> PrepareKind {
+        PrepareKind::Blocked { block_len: QK }
+    }
+
+    fn prepare_row_into(&self, x: &[f32], k: usize, dst: PreparedRowMut<'_>) {
+        debug_assert_eq!(x.len(), k);
+        match dst {
+            PreparedRowMut::Blocked { q, d, bsums } => quantize_act_blocked_into(x, QK, q, d, bsums),
+            _ => panic!("TQ2_0 expects a blocked destination"),
+        }
+    }
+
+    fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
+        let (actq, actd, bsums, block_len) = match p {
+            PreparedRow::Blocked { q, d, bsums, block_len } => (q, d, bsums, block_len),
+            _ => panic!("TQ2_0 expects Q8_K activations"),
+        };
+        assert_eq!(block_len, QK);
+        let blocks_per_row = t.k / QK;
+        let row_bytes = blocks_per_row * BLOCK_BYTES;
+        for (o, r) in out.iter_mut().zip(rows) {
+            let mut sum = 0f32;
+            for b in 0..blocks_per_row {
+                let blk = &t.data[r * row_bytes + b * BLOCK_BYTES..][..BLOCK_BYTES];
+                let d = f16_to_f32(u16::from_le_bytes([blk[QK / 4], blk[QK / 4 + 1]]));
+                let aq = &actq[b * QK..(b + 1) * QK];
+                // Σ a·(code−1) = Σ a·code − Σa (per block).
+                let mut isum = 0i32;
+                for (byte_i, quad) in aq.chunks_exact(4).enumerate() {
+                    // SAFETY: aq has QK entries so byte_i < QK/4, and the
+                    // block stores QK/4 packed bytes before the scale.
+                    let byte = unsafe { *blk.get_unchecked(byte_i) };
+                    isum += ((byte & 0x3) as i32) * quad[0] as i32;
+                    isum += (((byte >> 2) & 0x3) as i32) * quad[1] as i32;
+                    isum += (((byte >> 4) & 0x3) as i32) * quad[2] as i32;
+                    isum += (((byte >> 6) & 0x3) as i32) * quad[3] as i32;
+                }
+                isum -= bsums[b];
+                sum += isum as f32 * d * actd[b];
+            }
+            *o = sum;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use pallas_core::util::Rng;
+
+    fn random_ternary(m: usize, k: usize, seed: u64) -> TernaryWeights {
+        let mut rng = Rng::new(seed);
+        let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+        TernaryWeights::from_ternary(q, m, k, 0.0625) // power of two → exact f16
+    }
+
+    #[test]
+    fn bpw_is_2_06() {
+        let t = random_ternary(2, 512, 1);
+        let packed = Tq20Kernel.quantize(&t);
+        assert!((packed.bits_per_weight() - 2.0625).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ternary_round_trip_exact() {
+        let t = random_ternary(3, 256, 2);
+        let packed = Tq20Kernel.quantize(&t);
+        assert_eq!(Tq20Kernel.dequantize(&packed), t.dequantize());
+    }
+
+    #[test]
+    fn gemv_close_to_dense() {
+        let (m, k) = (8, 512);
+        let t = random_ternary(m, k, 3);
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        let packed = Tq20Kernel.quantize(&t);
+        let p = Tq20Kernel.prepare(&x, k);
+        let mut out = vec![0f32; m];
+        Tq20Kernel.gemv(&packed, &p, &mut out);
+        let wd = t.dequantize();
+        for r in 0..m {
+            let want: f32 = (0..k).map(|i| wd[r * k + i] * x[i]).sum();
+            assert!((out[r] - want).abs() < 0.02 * want.abs().max(1.0), "row {r}");
+        }
+    }
+
+    #[test]
+    fn not_lossless_vs_training_scheme() {
+        // Activations whose dynamic range varies across 256-blocks make the
+        // per-block path diverge from the per-tensor training scheme.
+        use crate::kernels::quant::{quantize_act_int8, training_scheme_ref_row};
+        let (m, k) = (4, 512);
+        let t = random_ternary(m, k, 5);
+        let mut rng = Rng::new(6);
+        let mut x: Vec<f32> = (0..k).map(|_| rng.next_gaussian() * 0.05).collect();
+        x[10] = 4.0; // spike only in block 0
+        let act = quantize_act_int8(&x);
+        let packed = Tq20Kernel.quantize(&t);
+        let p = Tq20Kernel.prepare(&x, k);
+        let mut out = vec![0f32; m];
+        Tq20Kernel.gemv(&packed, &p, &mut out);
+        let any_diff = (0..m).any(|r| {
+            out[r] != training_scheme_ref_row(t.row(r), t.scale, &act)
+        });
+        assert!(any_diff, "TQ2_0 should NOT reproduce the training scheme bit-for-bit");
+    }
+}

@@ -1,0 +1,484 @@
+//! **ELUT** — the element-wise lookup-table mpGEMM generalized beyond
+//! ternary weights (paper Appendix A–C): arbitrary weight cardinality C,
+//! group size g, with mirror consolidation applied whenever the full code
+//! space `C^g` exceeds the 16-entry shuffle width but the half space fits.
+//!
+//! Two instantiations ship as kernels:
+//!
+//! * **ELUT_C4** — C=4 (alphabet −2,−1,0,1), g=2 → full 16-entry table,
+//!   2.0 bpw (paper Table 3 row C=4).
+//! * **ELUT_C5** — C=5 (alphabet −2..2), g=2 → mirror-consolidated
+//!   13-entry table + sign plane, 2.5 bpw (paper Table 3 row C=5).
+//!
+//! Ternary weights embed exactly into both alphabets, so these kernels are
+//! drop-in (and, with int16 tables, training-scheme exact) on BitNet
+//! models — empirical backing for the appendix claim that ELUT extends to
+//! low-bit LLMs in general.
+
+use super::lut::{code_count, decode_code, mirror_join, mirror_split, sign_apply_i32};
+use super::quant::{quantize_act_int8_into, TernaryWeights};
+use super::simd::{self, SimdLevel};
+use super::sparse;
+use super::tl1::{LUT_W, SPARSE_BLOCK_WEIGHTS};
+use super::{
+    Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
+};
+
+/// Generic element-wise LUT kernel over a symmetric integer alphabet.
+pub struct ElutKernel {
+    pub qtype: QuantType,
+    pub name: &'static str,
+    /// Weight cardinality C.
+    pub c: usize,
+    /// Group size g.
+    pub g: usize,
+    /// The weight alphabet, ascending, `alphabet[i] = -alphabet[c-1-i]`
+    /// when `mirror` is set.
+    pub alphabet: &'static [i8],
+    /// Mirror consolidation (sign plane + half table).
+    pub mirror: bool,
+}
+
+/// C=4 instantiation (full table, no mirror).
+pub static ELUT4: ElutKernel = ElutKernel {
+    qtype: QuantType::Elut4,
+    name: "ELUT_C4",
+    c: 4,
+    g: 2,
+    alphabet: &[-2, -1, 0, 1],
+    mirror: false,
+};
+
+/// C=5 instantiation (mirror-consolidated).
+pub static ELUT5: ElutKernel = ElutKernel {
+    qtype: QuantType::Elut5,
+    name: "ELUT_C5",
+    c: 5,
+    g: 2,
+    alphabet: &[-2, -1, 0, 1, 2],
+    mirror: true,
+};
+
+impl ElutKernel {
+    fn weights_per_byte_checks(&self) {
+        debug_assert_eq!(self.g, 2, "shipped instantiations use g=2");
+    }
+
+    /// Bytes per row: nibble plane (+ sign plane when mirrored).
+    fn row_bytes(&self, k: usize) -> usize {
+        let groups = k / self.g;
+        let idx = groups / 2; // 2 nibbles per byte
+        if self.mirror {
+            idx + groups / 8
+        } else {
+            idx
+        }
+    }
+}
+
+impl Kernel for ElutKernel {
+    fn info(&self) -> KernelInfo {
+        KernelInfo {
+            qtype: self.qtype,
+            name: self.name,
+            class: KernelClass::LutBased,
+            element_wise: true,
+            bpw: super::lut::elementwise_bpw(self.c, self.g),
+            // int16 tables + per-tensor int8 activations ⇒ training-scheme
+            // exact on any weights the alphabet represents (incl. ternary).
+            lossless: true,
+            k_multiple: if self.mirror { 16 } else { 4 },
+            ternary_native: true,
+        }
+    }
+
+    fn quantize(&self, w: &TernaryWeights) -> QTensor {
+        self.weights_per_byte_checks();
+        let (m, k) = (w.m, w.k);
+        assert_eq!(k % self.info().k_multiple, 0, "{} K alignment", self.name);
+        let row_bytes = self.row_bytes(k);
+        let groups = k / self.g;
+        let mut data = vec![0u8; m * row_bytes];
+        for r in 0..m {
+            let row = w.row(r);
+            let out = &mut data[r * row_bytes..(r + 1) * row_bytes];
+            let (idx_plane, sign_plane) = out.split_at_mut(groups / 2);
+            for (gi, pair) in row.chunks_exact(self.g).enumerate() {
+                let code = super::lut::encode_code(pair, self.c, self.alphabet);
+                let (sign, idx) = if self.mirror {
+                    mirror_split(code, self.c, self.g)
+                } else {
+                    (0, code)
+                };
+                debug_assert!(idx < 16);
+                if gi % 2 == 0 {
+                    idx_plane[gi / 2] = idx as u8;
+                } else {
+                    idx_plane[gi / 2] |= (idx as u8) << 4;
+                }
+                if self.mirror {
+                    sign_plane[gi / 8] |= sign << (gi % 8);
+                }
+            }
+        }
+        let bounds = sparse::uniform_bounds(k, SPARSE_BLOCK_WEIGHTS);
+        let sparse = sparse::maybe_index(&w.q, m, k, &bounds);
+        QTensor { qtype: self.qtype, m, k, data, scale: w.scale, sparse }
+    }
+
+    fn dequantize(&self, t: &QTensor) -> Vec<f32> {
+        let groups = t.k / self.g;
+        let row_bytes = self.row_bytes(t.k);
+        let mut out = Vec::with_capacity(t.m * t.k);
+        for r in 0..t.m {
+            let row = &t.data[r * row_bytes..(r + 1) * row_bytes];
+            let (idx_plane, sign_plane) = row.split_at(groups / 2);
+            for gi in 0..groups {
+                let nib = if gi % 2 == 0 { idx_plane[gi / 2] & 0xf } else { idx_plane[gi / 2] >> 4 };
+                let code = if self.mirror {
+                    let sign = (sign_plane[gi / 8] >> (gi % 8)) & 1;
+                    mirror_join(sign, nib as usize, self.c, self.g)
+                } else {
+                    nib as usize
+                };
+                for w in decode_code(code, self.c, self.g, self.alphabet) {
+                    out.push(w as f32 * t.scale);
+                }
+            }
+        }
+        out
+    }
+
+    fn prepare_kind(&self, k: usize) -> PrepareKind {
+        PrepareKind::LutI16 { groups: k / self.g }
+    }
+
+    fn prepare_row_into(&self, x: &[f32], k: usize, dst: PreparedRowMut<'_>) {
+        debug_assert_eq!(x.len(), k);
+        self.weights_per_byte_checks();
+        let PreparedRowMut::LutI16 { aq, tables, scale } = dst else {
+            panic!("ELUT expects a LutI16 destination");
+        };
+        let (s, _) = quantize_act_int8_into(x, aq);
+        *scale = s;
+        let groups = k / self.g;
+        let entries = if self.mirror {
+            super::lut::half_code_count(self.c, self.g)
+        } else {
+            code_count(self.c, self.g)
+        };
+        // Per-slot weight patterns (padding slots stay zero), decoded
+        // once per call and shared by the scalar loop and the vector
+        // builders so every tier tabulates the same enumeration.
+        let mut w0 = [0i16; LUT_W];
+        let mut w1 = [0i16; LUT_W];
+        for slot_i in 0..entries {
+            let code = if self.mirror { mirror_join(0, slot_i, self.c, self.g) } else { slot_i };
+            let w = decode_code(code, self.c, self.g, self.alphabet);
+            w0[slot_i] = w[0] as i16;
+            w1[slot_i] = w[1] as i16;
+        }
+        #[cfg(target_arch = "x86_64")]
+        if simd::active_level() == SimdLevel::Avx2 {
+            // SAFETY: AVX2 verified by the active dispatch level; `aq`
+            // holds g=2 quants per group and `tables` one LUT_W-entry
+            // table per group.
+            unsafe { simd::avx2::build_lut16_pair_tables(aq, &w0, &w1, tables) };
+            return;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if simd::active_level() == SimdLevel::Neon {
+            // SAFETY: NEON verified by the active dispatch level; `aq`
+            // holds g=2 quants per group and `tables` one LUT_W-entry
+            // table per group.
+            unsafe { simd::neon::build_lut16_pair_tables(aq, &w0, &w1, tables) };
+            return;
+        }
+        tables.fill(0);
+        for gi in 0..groups {
+            let a0 = aq[self.g * gi] as i16;
+            let a1 = aq[self.g * gi + 1] as i16;
+            let t = &mut tables[gi * LUT_W..gi * LUT_W + entries];
+            for (slot_i, slot) in t.iter_mut().enumerate() {
+                *slot = a0 * w0[slot_i] + a1 * w1[slot_i];
+            }
+        }
+    }
+
+    fn simd_levels(&self) -> &'static [SimdLevel] {
+        simd::KERNEL_LEVELS
+    }
+
+    fn sparse_capable(&self) -> bool {
+        true
+    }
+
+    fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
+        let (tables, scale) = match p {
+            PreparedRow::LutI16 { tables, scale } => (tables, scale),
+            _ => panic!("ELUT expects LutI16 activations"),
+        };
+        let groups = t.k / self.g;
+        let row_bytes = self.row_bytes(t.k);
+        let combined = t.scale / scale;
+        let level = simd::active_level();
+        simd::note_call(level);
+        if self.mirror {
+            let idx_bytes = groups / 2;
+            if let Some(idx) = &t.sparse {
+                #[cfg(target_arch = "x86_64")]
+                if level == SimdLevel::Avx2 {
+                    // SAFETY: AVX2 verified by the active dispatch level;
+                    // buffer shapes are guaranteed by quantize/prepare.
+                    unsafe {
+                        simd::avx2::gemv_rows_elut5_sparse(
+                            &t.data, idx_bytes, tables, combined, out, rows, idx,
+                        );
+                    }
+                    return;
+                }
+                #[cfg(target_arch = "aarch64")]
+                if level == SimdLevel::Neon {
+                    // SAFETY: NEON verified by the active dispatch level;
+                    // buffer shapes are guaranteed by quantize/prepare.
+                    unsafe {
+                        simd::neon::gemv_rows_elut5_sparse(
+                            &t.data, idx_bytes, tables, combined, out, rows, idx,
+                        );
+                    }
+                    return;
+                }
+                let mut elided = 0u64;
+                for (o, r) in out.iter_mut().zip(rows) {
+                    let row = &t.data[r * row_bytes..(r + 1) * row_bytes];
+                    *o = gemv_row_elut5_sparse(row, idx_bytes, tables, idx, r, &mut elided) as f32
+                        * combined;
+                }
+                sparse::note_elided(level, elided);
+                return;
+            }
+            #[cfg(target_arch = "x86_64")]
+            if level == SimdLevel::Avx2 {
+                // SAFETY: AVX2 verified by the active dispatch level;
+                // buffer shapes are guaranteed by quantize/prepare.
+                unsafe {
+                    simd::avx2::gemv_rows_elut5(&t.data, idx_bytes, tables, combined, out, rows);
+                }
+                return;
+            }
+            #[cfg(target_arch = "aarch64")]
+            if level == SimdLevel::Neon {
+                // SAFETY: NEON verified by the active dispatch level;
+                // buffer shapes are guaranteed by quantize/prepare.
+                unsafe {
+                    simd::neon::gemv_rows_elut5(&t.data, idx_bytes, tables, combined, out, rows);
+                }
+                return;
+            }
+            for (o, r) in out.iter_mut().zip(rows) {
+                let row = &t.data[r * row_bytes..(r + 1) * row_bytes];
+                *o = gemv_row_elut5(row, idx_bytes, tables) as f32 * combined;
+            }
+        } else {
+            // Non-mirrored rows are one nibble plane with a full 16-entry
+            // table per group — byte-for-byte the TL1 lossless loop.
+            if let Some(idx) = &t.sparse {
+                #[cfg(target_arch = "x86_64")]
+                if level == SimdLevel::Avx2 {
+                    // SAFETY: AVX2 verified by the active dispatch level;
+                    // buffer shapes are guaranteed by quantize/prepare.
+                    unsafe {
+                        simd::avx2::gemv_rows_lut16_sparse(
+                            &t.data, row_bytes, tables, combined, out, rows, idx,
+                        );
+                    }
+                    return;
+                }
+                #[cfg(target_arch = "aarch64")]
+                if level == SimdLevel::Neon {
+                    // SAFETY: NEON verified by the active dispatch level;
+                    // buffer shapes are guaranteed by quantize/prepare.
+                    unsafe {
+                        simd::neon::gemv_rows_lut16_sparse(
+                            &t.data, row_bytes, tables, combined, out, rows, idx,
+                        );
+                    }
+                    return;
+                }
+                let mut elided = 0u64;
+                for (o, r) in out.iter_mut().zip(rows) {
+                    let row = &t.data[r * row_bytes..(r + 1) * row_bytes];
+                    *o = super::tl1::gemv_row_lut16_sparse(row, tables, idx, r, &mut elided) as f32
+                        * combined;
+                }
+                sparse::note_elided(level, elided);
+                return;
+            }
+            #[cfg(target_arch = "x86_64")]
+            if level == SimdLevel::Avx2 {
+                // SAFETY: AVX2 verified by the active dispatch level;
+                // buffer shapes are guaranteed by quantize/prepare.
+                unsafe {
+                    simd::avx2::gemv_rows_lut16(&t.data, row_bytes, tables, combined, out, rows);
+                }
+                return;
+            }
+            #[cfg(target_arch = "aarch64")]
+            if level == SimdLevel::Neon {
+                // SAFETY: NEON verified by the active dispatch level;
+                // buffer shapes are guaranteed by quantize/prepare.
+                unsafe {
+                    simd::neon::gemv_rows_lut16(&t.data, row_bytes, tables, combined, out, rows);
+                }
+                return;
+            }
+            for (o, r) in out.iter_mut().zip(rows) {
+                let row = &t.data[r * row_bytes..(r + 1) * row_bytes];
+                *o = super::tl1::gemv_row_lut16(row, tables) as f32 * combined;
+            }
+        }
+    }
+}
+
+/// Scalar accumulation for one mirror-consolidated ELUT row (ELUT_C5):
+/// `idx_bytes` nibble bytes followed by `idx_bytes / 4` sign bytes, one
+/// group per nibble, 1 sign bit per group.
+#[inline]
+pub fn gemv_row_elut5(row: &[u8], idx_bytes: usize, tables: &[i16]) -> i32 {
+    let (idx_plane, sign_plane) = row.split_at(idx_bytes);
+    let groups = idx_bytes * 2;
+    let mut acc = 0i32;
+    for gi in 0..groups {
+        // SAFETY: the planes hold groups/2 index bytes and groups/8 sign
+        // bytes, tables holds one LUT_W-entry table per group, and nibble
+        // codes are < LUT_W.
+        let byte = unsafe { *idx_plane.get_unchecked(gi / 2) };
+        let nib = if gi % 2 == 0 { byte & 0xf } else { byte >> 4 };
+        // SAFETY: as above.
+        let sign = (unsafe { *sign_plane.get_unchecked(gi / 8) } >> (gi % 8)) & 1;
+        // SAFETY: as above.
+        let v = unsafe { *tables.get_unchecked(gi * LUT_W + nib as usize) } as i32;
+        acc += sign_apply_i32(v, sign);
+    }
+    acc
+}
+
+/// Sparse [`gemv_row_elut5`]: blocks are [`SPARSE_BLOCK_WEIGHTS`] weights
+/// = 32 groups; K % 16 == 0 keeps every block's sign bits byte-aligned.
+/// A zero block's groups all carry the zero-pair code, whose table entry
+/// is exactly 0 (and `sign_apply_i32(0, s)` is 0), so skipping them
+/// leaves the i32 accumulator bit-identical.
+#[inline]
+pub fn gemv_row_elut5_sparse(
+    row: &[u8],
+    idx_bytes: usize,
+    tables: &[i16],
+    sidx: &sparse::SparseIndex,
+    wr: usize,
+    elided: &mut u64,
+) -> i32 {
+    const BLOCK_GROUPS: usize = SPARSE_BLOCK_WEIGHTS / 2;
+    let (idx_plane, sign_plane) = row.split_at(idx_bytes);
+    let groups = idx_bytes * 2;
+    let mut acc = 0i32;
+    for blk in 0..sidx.blocks_per_row() {
+        if !sidx.is_nonzero(wr, blk) {
+            *elided += 1;
+            continue;
+        }
+        let g0 = blk * BLOCK_GROUPS;
+        let g1 = (g0 + BLOCK_GROUPS).min(groups);
+        for gi in g0..g1 {
+            // SAFETY: the planes hold groups/2 index bytes and groups/8
+            // sign bytes, tables holds one LUT_W-entry table per group,
+            // and nibble codes are < LUT_W.
+            let byte = unsafe { *idx_plane.get_unchecked(gi / 2) };
+            let nib = if gi % 2 == 0 { byte & 0xf } else { byte >> 4 };
+            // SAFETY: as above.
+            let sign = (unsafe { *sign_plane.get_unchecked(gi / 8) } >> (gi % 8)) & 1;
+            // SAFETY: as above.
+            let v = unsafe { *tables.get_unchecked(gi * LUT_W + nib as usize) } as i32;
+            acc += sign_apply_i32(v, sign);
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::quant::{quantize_act_int8, training_scheme_ref_row};
+    use pallas_core::util::Rng;
+
+    fn random_ternary(m: usize, k: usize, seed: u64) -> TernaryWeights {
+        let mut rng = Rng::new(seed);
+        let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+        TernaryWeights::from_ternary(q, m, k, 0.033)
+    }
+
+    #[test]
+    fn bpw_matches_table3() {
+        let t = random_ternary(4, 1024, 1);
+        let p4 = ELUT4.quantize(&t);
+        assert_eq!(p4.bits_per_weight(), 2.0);
+        let p5 = ELUT5.quantize(&t);
+        assert_eq!(p5.bits_per_weight(), 2.5);
+    }
+
+    #[test]
+    fn ternary_embeds_exactly() {
+        let t = random_ternary(4, 256, 2);
+        for kern in [&ELUT4, &ELUT5] {
+            let packed = kern.quantize(&t);
+            assert_eq!(kern.dequantize(&packed), t.dequantize(), "{}", kern.name);
+        }
+    }
+
+    #[test]
+    fn training_scheme_exact_on_ternary() {
+        let (m, k) = (8, 512);
+        let t = random_ternary(m, k, 3);
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        let act = quantize_act_int8(&x);
+        for kern in [&ELUT4, &ELUT5] {
+            let packed = kern.quantize(&t);
+            let p = kern.prepare(&x, k);
+            let mut out = vec![0f32; m];
+            kern.gemv(&packed, &p, &mut out);
+            for r in 0..m {
+                assert_eq!(
+                    out[r],
+                    training_scheme_ref_row(t.row(r), t.scale, &act),
+                    "{} row {r}",
+                    kern.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mirror_table_is_half_size() {
+        use crate::kernels::lut::half_code_count;
+        assert_eq!(half_code_count(5, 2), 13);
+        assert!(half_code_count(5, 2) <= 16, "fits one shuffle register");
+        assert_eq!(code_count(4, 2), 16);
+    }
+
+    /// C=5 can represent a 2-bit-symmetric model that ternary cannot;
+    /// exercise non-ternary alphabet values through the full path.
+    #[test]
+    fn wider_alphabet_round_trip() {
+        let mut rng = Rng::new(5);
+        let k = 64;
+        let q: Vec<i8> = (0..4 * k).map(|_| (rng.next_below(5) as i8) - 2).collect();
+        // Bypass TernaryWeights' debug assertion by building the struct
+        // directly (alphabet values -2..2 are legal for ELUT5).
+        let t = TernaryWeights { q: q.clone(), m: 4, k, scale: 0.1 };
+        let packed = ELUT5.quantize(&t);
+        let back = ELUT5.dequantize(&packed);
+        for (i, (&want, got)) in q.iter().zip(back.iter()).enumerate() {
+            assert_eq!(*got, want as f32 * 0.1, "idx {i}");
+        }
+    }
+}

@@ -1,0 +1,311 @@
+//! **I2_S** — "Int2 with a Scale" (paper §3.2.2): element-wise MAD-based
+//! kernel that stores ternary weights as 2-bit codes with a single
+//! per-tensor scale, and consumes *per-tensor* int8 activations — exactly
+//! the BitNet b1.58 training computation, hence **lossless**.
+//!
+//! Layout: row-major, 4 weights per byte, code `w+1 ∈ {0,1,2}` in 2 bits
+//! (little-end first within the byte). The paper requires K to be a
+//! multiple of 128; the implementation unrolls in 16-weight (4-byte)
+//! steps and accumulates in i32 (no overflow: |a|≤127, |w|≤1,
+//! K·127 < 2^31 for any realistic K).
+
+use super::quant::{quantize_act_int8_into, TernaryWeights};
+use super::simd::{self, SimdLevel};
+use super::sparse;
+use super::{
+    Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
+};
+
+pub struct I2SKernel;
+
+/// Weights per packed byte.
+const WPB: usize = 4;
+
+/// Weights per sparse-elision block: one K-alignment unit (32 bytes).
+pub const SPARSE_BLOCK_WEIGHTS: usize = 128;
+
+impl Kernel for I2SKernel {
+    fn info(&self) -> KernelInfo {
+        KernelInfo {
+            qtype: QuantType::I2S,
+            name: "I2_S",
+            class: KernelClass::MadBased,
+            element_wise: true,
+            bpw: 2.0,
+            lossless: true,
+            // Paper: "supports mpGEMM dimensions K that are multiples of
+            // 128, while TQ2_0 only supports multiples of 256".
+            k_multiple: 128,
+            ternary_native: true,
+        }
+    }
+
+    fn quantize(&self, w: &TernaryWeights) -> QTensor {
+        let (m, k) = (w.m, w.k);
+        assert_eq!(k % self.info().k_multiple, 0, "I2_S requires K % 128 == 0");
+        let row_bytes = k / WPB;
+        let mut data = vec![0u8; m * row_bytes];
+        for r in 0..m {
+            let src = w.row(r);
+            let dst = &mut data[r * row_bytes..(r + 1) * row_bytes];
+            for (b, chunk) in src.chunks_exact(WPB).enumerate() {
+                let mut byte = 0u8;
+                for (j, &t) in chunk.iter().enumerate() {
+                    byte |= (((t + 1) as u8) & 0x3) << (2 * j);
+                }
+                dst[b] = byte;
+            }
+        }
+        let bounds = sparse::uniform_bounds(k, SPARSE_BLOCK_WEIGHTS);
+        let sparse = sparse::maybe_index(&w.q, m, k, &bounds);
+        QTensor { qtype: QuantType::I2S, m, k, data, scale: w.scale, sparse }
+    }
+
+    fn dequantize(&self, t: &QTensor) -> Vec<f32> {
+        let row_bytes = t.k / WPB;
+        let mut out = Vec::with_capacity(t.m * t.k);
+        for r in 0..t.m {
+            for b in 0..row_bytes {
+                let byte = t.data[r * row_bytes + b];
+                for j in 0..WPB {
+                    let code = (byte >> (2 * j)) & 0x3;
+                    out.push((code as i32 - 1) as f32 * t.scale);
+                }
+            }
+        }
+        out
+    }
+
+    fn prepare_kind(&self, _k: usize) -> PrepareKind {
+        PrepareKind::Int8
+    }
+
+    fn prepare_row_into(&self, x: &[f32], k: usize, dst: PreparedRowMut<'_>) {
+        debug_assert_eq!(x.len(), k);
+        match dst {
+            PreparedRowMut::Int8 { q, scale, sum } => {
+                let (s, sm) = quantize_act_int8_into(x, q);
+                *scale = s;
+                *sum = sm;
+            }
+            _ => panic!("I2_S expects a per-tensor int8 destination"),
+        }
+    }
+
+    fn simd_levels(&self) -> &'static [SimdLevel] {
+        simd::KERNEL_LEVELS
+    }
+
+    fn sparse_capable(&self) -> bool {
+        true
+    }
+
+    fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
+        let (q, scale, sum) = match p {
+            PreparedRow::Int8 { q, scale, sum } => (q, scale, sum),
+            _ => panic!("I2_S expects per-tensor int8 activations"),
+        };
+        debug_assert_eq!(q.len(), t.k);
+        let row_bytes = t.k / WPB;
+        let combined = t.scale / scale;
+        let level = simd::active_level();
+        simd::note_call(level);
+        if let Some(idx) = &t.sparse {
+            #[cfg(target_arch = "x86_64")]
+            if level == SimdLevel::Avx2 {
+                // SAFETY: AVX2 verified by the active dispatch level; the
+                // packed rows match `q.len() / 4` bytes.
+                unsafe {
+                    simd::avx2::gemv_rows_i2s_sparse(&t.data, q, combined, out, rows, idx);
+                }
+                return;
+            }
+            #[cfg(target_arch = "aarch64")]
+            if level == SimdLevel::Neon {
+                // SAFETY: NEON verified by the active dispatch level; the
+                // packed rows match `q.len() / 4` bytes.
+                unsafe {
+                    simd::neon::gemv_rows_i2s_sparse(&t.data, q, combined, out, rows, idx);
+                }
+                return;
+            }
+            let mut elided = 0u64;
+            for (o, r) in out.iter_mut().zip(rows) {
+                let wrow = &t.data[r * row_bytes..(r + 1) * row_bytes];
+                *o = gemv_row_i2s_sparse(wrow, q, idx, r, &mut elided) as f32 * combined;
+            }
+            sparse::note_elided(level, elided);
+            return;
+        }
+        #[cfg(target_arch = "x86_64")]
+        if level == SimdLevel::Avx2 {
+            // SAFETY: AVX2 verified by the active dispatch level; the
+            // packed rows match `q.len() / 4` bytes and `sum` is Σq.
+            unsafe {
+                simd::avx2::gemv_rows_i2s(&t.data, q, sum, combined, out, rows);
+            }
+            return;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if level == SimdLevel::Neon {
+            // SAFETY: NEON verified by the active dispatch level; the
+            // packed rows match `q.len() / 4` bytes and `sum` is Σq.
+            unsafe {
+                simd::neon::gemv_rows_i2s(&t.data, q, sum, combined, out, rows);
+            }
+            return;
+        }
+        for (o, r) in out.iter_mut().zip(rows) {
+            let wrow = &t.data[r * row_bytes..(r + 1) * row_bytes];
+            *o = gemv_row_i2s(wrow, q, sum) as f32 * combined;
+        }
+    }
+}
+
+/// Inner loop: `Σ a[k] * (code[k] - 1)` = `Σ a·code - Σ a`.
+/// Computing `Σ a·code` with unsigned codes and subtracting the
+/// activation sum once mirrors the AVX2 `maddubs` (u8×i8) structure the
+/// paper's implementation uses, and lets the compiler vectorize the body.
+#[inline]
+fn gemv_row_i2s(wrow: &[u8], aq: &[i8], act_sum: i32) -> i32 {
+    let mut acc = 0i32;
+    // 4 bytes (16 weights) per step; chunks_exact guarantees alignment of
+    // the loop body so LLVM unrolls/vectorizes it.
+    let mut k = 0usize;
+    for b4 in wrow.chunks_exact(4) {
+        let a = &aq[k..k + 16];
+        let mut local = 0i32;
+        for (bi, &byte) in b4.iter().enumerate() {
+            let base = bi * 4;
+            local += (byte & 0x3) as i32 * a[base] as i32;
+            local += ((byte >> 2) & 0x3) as i32 * a[base + 1] as i32;
+            local += ((byte >> 4) & 0x3) as i32 * a[base + 2] as i32;
+            local += ((byte >> 6) & 0x3) as i32 * a[base + 3] as i32;
+        }
+        acc += local;
+        k += 16;
+    }
+    acc - act_sum
+}
+
+/// Sparse inner loop: accumulate `Σ a·(code − 1)` = `Σ a·w` directly
+/// over nonzero blocks only. A zero block contributes exactly 0 to that
+/// sum, and both this form and the dense `Σ a·code − Σ a` compute the
+/// same exact i32 (no overflow either way), so skipping zero blocks —
+/// with no activation-sum bookkeeping at all — stays bit-identical to
+/// [`gemv_row_i2s`].
+#[inline]
+fn gemv_row_i2s_sparse(
+    wrow: &[u8],
+    aq: &[i8],
+    idx: &sparse::SparseIndex,
+    row: usize,
+    elided: &mut u64,
+) -> i32 {
+    const BLOCK_BYTES: usize = SPARSE_BLOCK_WEIGHTS / WPB;
+    let mut acc = 0i32;
+    for blk in 0..idx.blocks_per_row() {
+        if !idx.is_nonzero(row, blk) {
+            *elided += 1;
+            continue;
+        }
+        let b0 = blk * BLOCK_BYTES;
+        let b1 = (b0 + BLOCK_BYTES).min(wrow.len());
+        let mut k = b0 * WPB;
+        for b4 in wrow[b0..b1].chunks_exact(4) {
+            let a = &aq[k..k + 16];
+            let mut local = 0i32;
+            for (bi, &byte) in b4.iter().enumerate() {
+                let base = bi * 4;
+                local += ((byte & 0x3) as i32 - 1) * a[base] as i32;
+                local += (((byte >> 2) & 0x3) as i32 - 1) * a[base + 1] as i32;
+                local += (((byte >> 4) & 0x3) as i32 - 1) * a[base + 2] as i32;
+                local += (((byte >> 6) & 0x3) as i32 - 1) * a[base + 3] as i32;
+            }
+            acc += local;
+            k += 16;
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::quant::training_scheme_ref_row;
+    use crate::kernels::Prepared;
+    use pallas_core::util::Rng;
+
+    fn random_ternary(m: usize, k: usize, seed: u64) -> TernaryWeights {
+        let mut rng = Rng::new(seed);
+        let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+        TernaryWeights::from_ternary(q, m, k, 0.031)
+    }
+
+    #[test]
+    fn pack_unpack_identity() {
+        let t = random_ternary(8, 256, 1);
+        let k = I2SKernel;
+        let packed = k.quantize(&t);
+        assert_eq!(packed.bits_per_weight(), 2.0);
+        let back = k.dequantize(&packed);
+        let want = t.dequantize();
+        assert_eq!(back, want);
+    }
+
+    #[test]
+    fn matches_training_scheme_bit_for_bit() {
+        let (m, kk) = (16, 1024);
+        let t = random_ternary(m, kk, 2);
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..kk).map(|_| rng.next_gaussian()).collect();
+        let kern = I2SKernel;
+        let packed = kern.quantize(&t);
+        let p = kern.prepare(&x, kk);
+        let act = match &p {
+            Prepared::Int8(a) => a.clone(),
+            _ => unreachable!(),
+        };
+        let mut out = vec![0f32; m];
+        kern.gemv(&packed, &p, &mut out);
+        for r in 0..m {
+            let want = training_scheme_ref_row(t.row(r), t.scale, &act);
+            assert_eq!(out[r], want, "row {r} must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn all_zero_weights_give_zero() {
+        let t = TernaryWeights::from_ternary(vec![0i8; 4 * 128], 4, 128, 1.0);
+        let kern = I2SKernel;
+        let packed = kern.quantize(&t);
+        let x: Vec<f32> = (0..128).map(|i| i as f32).collect();
+        let p = kern.prepare(&x, 128);
+        let mut out = vec![7f32; 4];
+        kern.gemv(&packed, &p, &mut out);
+        assert_eq!(out, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn extreme_activations_no_overflow() {
+        // Worst case: all |a| = 127, all w = ±1, K large.
+        let kk = 8192;
+        let q: Vec<i8> = (0..kk).map(|i| if i % 2 == 0 { 1 } else { -1 }).collect();
+        let t = TernaryWeights::from_ternary(q, 1, kk, 1.0);
+        let x: Vec<f32> = (0..kk).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let kern = I2SKernel;
+        let packed = kern.quantize(&t);
+        let p = kern.prepare(&x, kk);
+        let mut out = vec![0f32; 1];
+        kern.gemv(&packed, &p, &mut out);
+        // Σ xq*wq = 127*8192 (every term +127·1 or −127·−1), scale 1/127
+        assert_eq!(out[0], 8192.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "K % 128")]
+    fn rejects_unaligned_k() {
+        let t = random_ternary(2, 100, 4);
+        I2SKernel.quantize(&t);
+    }
+}

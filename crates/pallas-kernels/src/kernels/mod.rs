@@ -1,0 +1,1526 @@
+//! The ternary mpGEMM library — the paper's core contribution (§3, Table 1)
+//! plus every baseline the evaluation compares against (§4, Table 7).
+//!
+//! | kernel | class | unit | bpw | lossless |
+//! |--------|-------|------|-----|----------|
+//! | `TL1_0`/`TL1_1` | LUT  | element-wise | 2.00 | ✗ / ✓ |
+//! | `TL2_0`/`TL2_1` | LUT  | element-wise | 1.67 | ✗ / ✓ |
+//! | `I2_S`          | MAD  | element-wise | 2.00 | ✓ |
+//! | `TMAC` (stand-in)| LUT | bit-wise     | 2.00 | ✗ |
+//! | `TQ1_0`         | MAD  | element-wise | 1.69 | ✗ |
+//! | `TQ2_0`         | MAD  | element-wise | 2.06 | ✗ |
+//! | `Q4_0`          | MAD  | bit-wise     | 4.50 | ✗ |
+//! | `Q2_K`          | MAD  | bit-wise     | 2.63 | ✗ |
+//! | `F16`           | MAD  | —            | 16.0 | — (full-precision baseline) |
+//! | `ELUT4`/`ELUT5` | LUT  | element-wise | 2.00/2.50 | ✗ (appendix A extension) |
+//!
+//! All kernels consume the same [`quant::TernaryWeights`] (or raw f32 for
+//! the general-purpose baselines) and produce f32 outputs, so they are
+//! interchangeable inside the model and the quality/speed harnesses.
+//!
+//! ## Two-phase mpGEMM (Algorithms 1–2)
+//!
+//! Every kernel splits into a **preprocessing** phase (activation
+//! quantization + LUT construction) and an **accumulation** phase. Since
+//! the prepare-once refactor the preprocessing artifact is first-class:
+//!
+//! * [`PreparedBatch`] holds all `n` activation rows of one matmul input,
+//!   prepared in parallel into flat, reusable buffers
+//!   ([`PreparedBatch::build`] recycles capacity across calls — decode
+//!   steady state allocates nothing).
+//! * [`PreparedActivations`] caches batches per [`QuantType`] for one
+//!   layer input, so projections that share an input (wq/wk/wv, gate/up)
+//!   pay preprocessing **once**, not once per projection.
+//! * [`matmul_prepared`] runs accumulation as a single 2-D tiled
+//!   fork/join over (activation rows × weight rows) instead of one
+//!   fork/join barrier per activation row.
+
+pub mod baselines;
+pub mod counters;
+pub mod elut;
+pub mod i2s;
+pub mod lut;
+pub mod quant;
+pub mod simd;
+pub mod sparse;
+pub mod tl1;
+pub mod tl2;
+pub mod tuner;
+
+pub use simd::SimdLevel;
+pub use tuner::{Dispatch, DispatchPlan, Role, TuningProfile};
+
+use pallas_core::threadpool::ThreadPool;
+use quant::{ActBlocked, ActInt8, TernaryWeights};
+
+/// Every quantization type / kernel in the library (paper Table 1 +
+/// baselines + appendix ELUT extension).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum QuantType {
+    /// f32 reference MAD path (stands in for llama.cpp Float32).
+    F32,
+    /// f16-stored weights, f32 MAD — the paper's "Float16" baseline.
+    F16,
+    /// llama.cpp Q4_0: 4-bit blocks of 32, general-purpose.
+    Q40,
+    /// llama.cpp Q2_K: 2-bit K-quants, multi-step dequant (§2.3).
+    Q2K,
+    /// llama.cpp TQ1_0: base-3 packed ternary, bpw 1.69, element-wise MAD.
+    Tq10,
+    /// llama.cpp TQ2_0: 2-bit ternary, bpw 2.06, element-wise MAD.
+    Tq20,
+    /// T-MAC style bit-wise LUT (2-bit, g=4, int8-requantized tables).
+    Tmac,
+    /// Paper TL1, int8-requantized LUT (fast, near-lossless).
+    Tl10,
+    /// Paper TL1, pack-and-unpack int16 LUT (lossless).
+    Tl11,
+    /// Paper TL2, mirror-consolidated g=3, int8 LUT (fast, bpw 1.67).
+    Tl20,
+    /// Paper TL2, int16 LUT (lossless, bpw 1.67).
+    Tl21,
+    /// Paper I2_S: element-wise MAD, per-tensor scales (lossless).
+    I2S,
+    /// Appendix ELUT with weight cardinality C=4 (alphabet ±1, ±3).
+    Elut4,
+    /// Appendix ELUT with weight cardinality C=5 (alphabet -2..2).
+    Elut5,
+}
+
+/// Computational strategy (paper §2.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelClass {
+    MadBased,
+    LutBased,
+}
+
+/// Metadata describing a kernel (regenerates paper Table 1).
+#[derive(Clone, Debug)]
+pub struct KernelInfo {
+    pub qtype: QuantType,
+    /// Paper-facing name, e.g. "TL2_0".
+    pub name: &'static str,
+    pub class: KernelClass,
+    /// Element-wise kernels exploit weight cardinality; bit-wise do not.
+    pub element_wise: bool,
+    /// Nominal bits per weight of the storage format.
+    pub bpw: f64,
+    /// Exactly reproduces the BitNet b1.58 training-scheme computation.
+    pub lossless: bool,
+    /// K must be a multiple of this for the kernel to apply.
+    pub k_multiple: usize,
+    /// Supports arbitrary ternary weights (false for general formats that
+    /// merely *store* ternary models, e.g. Q4_0).
+    pub ternary_native: bool,
+}
+
+impl QuantType {
+    pub const ALL: [QuantType; 14] = [
+        QuantType::F32,
+        QuantType::F16,
+        QuantType::Q40,
+        QuantType::Q2K,
+        QuantType::Tq10,
+        QuantType::Tq20,
+        QuantType::Tmac,
+        QuantType::Tl10,
+        QuantType::Tl11,
+        QuantType::Tl20,
+        QuantType::Tl21,
+        QuantType::I2S,
+        QuantType::Elut4,
+        QuantType::Elut5,
+    ];
+
+    /// The set the paper's Table 7 sweeps (ternary-relevant kernels).
+    pub const TABLE7: [QuantType; 8] = [
+        QuantType::F16,
+        QuantType::Q40,
+        QuantType::Tmac,
+        QuantType::Tq10,
+        QuantType::Tq20,
+        QuantType::Tl10,
+        QuantType::Tl20,
+        QuantType::I2S,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        kernel_for(*self).info().name
+    }
+
+    pub fn parse(s: &str) -> Option<QuantType> {
+        QuantType::ALL
+            .iter()
+            .copied()
+            .find(|q| q.name().eq_ignore_ascii_case(s))
+    }
+}
+
+/// Prepared (quantized / tabulated) activations for **one** row, owned —
+/// the "preprocessing stage" artifact of Algorithms 1 and 2 in its
+/// standalone form (single-row decode, tests, examples). The batched hot
+/// path stores the same data flat in a [`PreparedBatch`] and hands
+/// kernels borrowed [`PreparedRow`] views instead.
+pub enum Prepared {
+    /// No quantization (F32/F16 baselines). Owned copy; the batched path
+    /// borrows the caller's row instead (see [`PreparedRow::Raw`]).
+    Raw(Vec<f32>),
+    /// Per-tensor int8 (BitNet training scheme).
+    Int8(ActInt8),
+    /// Per-block int8 (llama.cpp Q8_0 / Q8_K).
+    Blocked(ActBlocked),
+    /// Element-wise LUT, int16 entries (lossless TL path). `tables` holds
+    /// `k/g` tables of 16 entries each; `scale` is the activation scale.
+    LutI16 { tables: Vec<i16>, scale: f32 },
+    /// Element-wise LUT requantized to int8 with one scale per k-block
+    /// (fast TL path). `block_groups` = LUT groups per scale block.
+    LutI8 { tables: Vec<i8>, block_scales: Vec<f32>, block_groups: usize, scale: f32 },
+    /// Bit-wise LUT (T-MAC stand-in): int8 tables over 4-activation groups
+    /// + per-block scales + activation sum for offset correction.
+    BitLut { tables: Vec<i8>, block_scales: Vec<f32>, block_groups: usize, scale: f32, act_sum: i32 },
+}
+
+impl Prepared {
+    /// Borrowed view of this prepared row — what [`Kernel::gemv_rows`]
+    /// consumes (the batched path produces these without owning copies).
+    pub fn as_row(&self) -> PreparedRow<'_> {
+        match self {
+            Prepared::Raw(x) => PreparedRow::Raw(x),
+            Prepared::Int8(a) => PreparedRow::Int8 { q: &a.q, scale: a.scale, sum: a.sum },
+            Prepared::Blocked(a) => {
+                PreparedRow::Blocked { q: &a.q, d: &a.d, bsums: &a.bsums, block_len: a.block_len }
+            }
+            Prepared::LutI16 { tables, scale } => {
+                PreparedRow::LutI16 { tables, scale: *scale }
+            }
+            Prepared::LutI8 { tables, block_scales, block_groups, scale } => PreparedRow::LutI8 {
+                tables,
+                block_scales,
+                block_groups: *block_groups,
+                scale: *scale,
+            },
+            Prepared::BitLut { tables, block_scales, block_groups, scale, act_sum } => {
+                PreparedRow::BitLut {
+                    tables,
+                    block_scales,
+                    block_groups: *block_groups,
+                    scale: *scale,
+                    act_sum: *act_sum,
+                }
+            }
+        }
+    }
+}
+
+/// Borrowed view of one prepared activation row — the accumulation-phase
+/// input. The F32/F16 `Raw` case borrows the caller's activation slice
+/// directly (no copy in the hot path).
+#[derive(Clone, Copy)]
+pub enum PreparedRow<'p> {
+    /// Raw f32 activations (F32/F16 baselines).
+    Raw(&'p [f32]),
+    /// Per-tensor int8 quants + scale + Σq.
+    Int8 { q: &'p [i8], scale: f32, sum: i32 },
+    /// Per-block int8 quants with per-block dequant scales and sums.
+    Blocked { q: &'p [i8], d: &'p [f32], bsums: &'p [i32], block_len: usize },
+    /// Element-wise int16 LUT (lossless TL path).
+    LutI16 { tables: &'p [i16], scale: f32 },
+    /// Element-wise int8 LUT with per-block requantization scales.
+    LutI8 { tables: &'p [i8], block_scales: &'p [f32], block_groups: usize, scale: f32 },
+    /// Bit-wise int8 LUT (T-MAC) + activation sum for offset correction.
+    BitLut { tables: &'p [i8], block_scales: &'p [f32], block_groups: usize, scale: f32, act_sum: i32 },
+}
+
+/// Mutable, preallocated destination for one row's preprocessing —
+/// [`Kernel::prepare_row_into`] writes here instead of allocating. The
+/// LUT variants carry scratch areas (`aq` for the quantized activations,
+/// `tmp16` for pre-requantization tables) so no kernel needs a heap
+/// allocation on the prepare path.
+pub enum PreparedRowMut<'p> {
+    /// F32/F16: nothing to store (accumulation borrows the raw row).
+    Raw,
+    /// Per-tensor int8 destination.
+    Int8 { q: &'p mut [i8], scale: &'p mut f32, sum: &'p mut i32 },
+    /// Per-block int8 destination.
+    Blocked { q: &'p mut [i8], d: &'p mut [f32], bsums: &'p mut [i32] },
+    /// int16 LUT destination (`aq` is scratch for the quantized row).
+    LutI16 { aq: &'p mut [i8], tables: &'p mut [i16], scale: &'p mut f32 },
+    /// int8 LUT destination (`tmp16` is scratch for the int16 tables
+    /// before requantization).
+    LutI8 {
+        aq: &'p mut [i8],
+        tmp16: &'p mut [i16],
+        tables: &'p mut [i8],
+        block_scales: &'p mut [f32],
+        scale: &'p mut f32,
+    },
+    /// Bit-wise LUT destination (T-MAC).
+    BitLut {
+        aq: &'p mut [i8],
+        tmp16: &'p mut [i16],
+        tables: &'p mut [i8],
+        block_scales: &'p mut [f32],
+        scale: &'p mut f32,
+        act_sum: &'p mut i32,
+    },
+}
+
+/// The shape class of a kernel's preprocessing artifact for a given K —
+/// what sizes the reusable [`PreparedBatch`] buffers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrepareKind {
+    /// No storage (F32/F16 borrow the raw row).
+    Raw,
+    /// Per-tensor int8: k quants + scale + sum per row.
+    Int8,
+    /// Per-block int8: k quants + k/block_len scales/sums per row.
+    Blocked { block_len: usize },
+    /// int16 LUT: `groups` tables of [`tl1::LUT_W`] entries per row.
+    LutI16 { groups: usize },
+    /// int8 LUT: as `LutI16` plus ⌈groups/block_groups⌉ block scales.
+    LutI8 { groups: usize, block_groups: usize },
+    /// Bit-wise int8 LUT (T-MAC): as `LutI8` plus the activation sum.
+    BitLut { groups: usize, block_groups: usize },
+}
+
+/// A packed weight tensor in some kernel's storage format.
+pub struct QTensor {
+    pub qtype: QuantType,
+    pub m: usize,
+    pub k: usize,
+    /// Packed bytes, layout private to the kernel (row-major by weight row).
+    pub data: Vec<u8>,
+    /// Per-tensor weight scale (absmean `s`), where applicable.
+    pub scale: f32,
+    /// Block-skip layout for sparsity-aware elision: present when the
+    /// kernel measured enough zero blocks at pack time (or the mode
+    /// forced it). The dense packed bytes above are unchanged; kernels
+    /// that understand the index elide zero blocks in `gemv_rows`,
+    /// everything else (dequantize, dense consumers) ignores it.
+    pub sparse: Option<sparse::SparseIndex>,
+}
+
+impl QTensor {
+    /// Achieved bits per weight of this packed tensor (regenerates the bpw
+    /// column of Table 1 / Table 3 from real storage, not constants).
+    pub fn bits_per_weight(&self) -> f64 {
+        (self.data.len() as f64 * 8.0) / (self.m * self.k) as f64
+    }
+
+    /// Bytes that one GEMV must read from the weight side.
+    pub fn weight_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// NUMA-localize the packed bytes: rebuild `data` so each node's row
+    /// share ([`pallas_core::topology::Topology::row_ranges`], the same
+    /// split [`matmul_prepared`] routes by) is first-touched — and thus
+    /// physically backed — by that node. The bytes are copied verbatim,
+    /// so every kernel reads exactly the values it packed; no-op on
+    /// single-node pools, rowless tensors, or layouts whose packed bytes
+    /// don't divide evenly by row (none of ours today).
+    pub fn numa_localize(&mut self, pool: &ThreadPool) {
+        let n_nodes = pool.n_nodes();
+        if n_nodes <= 1 || self.m == 0 || self.data.is_empty() || self.data.len() % self.m != 0 {
+            return;
+        }
+        let row_bytes = self.data.len() / self.m;
+        let mut fresh: Vec<u8> = Vec::with_capacity(self.data.len());
+        let dst = SendMut(fresh.as_mut_ptr());
+        let src = &self.data;
+        for (node, r) in pool.topology().row_ranges(self.m).iter().enumerate() {
+            let lo = r.start * row_bytes;
+            let hi = r.end * row_bytes;
+            if lo == hi {
+                continue;
+            }
+            pool.run_on_node(node, || {
+                let dst = &dst;
+                // SAFETY: `dst` points into `fresh`'s reserved (uninit)
+                // capacity of `data.len()` bytes; each node writes the
+                // disjoint `lo..hi` range, and `run_on_node` completes
+                // before `fresh` is touched again or dropped.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(src.as_ptr().add(lo), dst.0.add(lo), hi - lo);
+                }
+            });
+        }
+        // SAFETY: the loop above wrote every byte of `0..data.len()` —
+        // the row ranges tile `0..m` exactly — so the buffer is fully
+        // initialized.
+        unsafe {
+            fresh.set_len(self.data.len());
+        }
+        self.data = fresh;
+    }
+}
+
+/// The kernel interface. One implementation per [`QuantType`].
+pub trait Kernel: Send + Sync {
+    fn info(&self) -> KernelInfo;
+
+    /// Pack ternary weights into this kernel's storage format.
+    fn quantize(&self, w: &TernaryWeights) -> QTensor;
+
+    /// Reconstruct effective f32 weights (tests, quality eval).
+    fn dequantize(&self, t: &QTensor) -> Vec<f32>;
+
+    /// The preprocessing artifact shape for reduction dim `k` — drives
+    /// [`PreparedBatch`] buffer sizing.
+    fn prepare_kind(&self, k: usize) -> PrepareKind;
+
+    /// Quantize activations and (for LUT kernels) build lookup tables —
+    /// Algorithm 1/2 "preprocessing" phase — writing into caller-owned
+    /// storage (`dst` matches [`Kernel::prepare_kind`]). Performs no heap
+    /// allocation. `x.len() == k`.
+    fn prepare_row_into(&self, x: &[f32], k: usize, dst: PreparedRowMut<'_>);
+
+    /// Standalone (allocating) preprocessing of one row. Convenience for
+    /// tests and single-row paths; the batched hot path goes through
+    /// [`PreparedBatch::build`] instead.
+    fn prepare(&self, x: &[f32], k: usize) -> Prepared {
+        assert_eq!(x.len(), k);
+        match self.prepare_kind(k) {
+            PrepareKind::Raw => Prepared::Raw(x.to_vec()),
+            PrepareKind::Int8 => {
+                let mut q = vec![0i8; k];
+                let (mut scale, mut sum) = (0f32, 0i32);
+                self.prepare_row_into(
+                    x,
+                    k,
+                    PreparedRowMut::Int8 { q: &mut q, scale: &mut scale, sum: &mut sum },
+                );
+                Prepared::Int8(ActInt8 { q, scale, sum })
+            }
+            PrepareKind::Blocked { block_len } => {
+                let blocks = k / block_len;
+                let mut q = vec![0i8; k];
+                let mut d = vec![0f32; blocks];
+                let mut bsums = vec![0i32; blocks];
+                self.prepare_row_into(
+                    x,
+                    k,
+                    PreparedRowMut::Blocked { q: &mut q, d: &mut d, bsums: &mut bsums },
+                );
+                Prepared::Blocked(ActBlocked { q, d, bsums, block_len })
+            }
+            PrepareKind::LutI16 { groups } => {
+                let mut aq = vec![0i8; k];
+                let mut tables = vec![0i16; groups * tl1::LUT_W];
+                let mut scale = 0f32;
+                self.prepare_row_into(
+                    x,
+                    k,
+                    PreparedRowMut::LutI16 { aq: &mut aq, tables: &mut tables, scale: &mut scale },
+                );
+                Prepared::LutI16 { tables, scale }
+            }
+            PrepareKind::LutI8 { groups, block_groups } => {
+                let mut aq = vec![0i8; k];
+                let mut tmp16 = vec![0i16; groups * tl1::LUT_W];
+                let mut tables = vec![0i8; groups * tl1::LUT_W];
+                let mut block_scales = vec![0f32; pallas_core::util::ceil_div(groups, block_groups)];
+                let mut scale = 0f32;
+                self.prepare_row_into(
+                    x,
+                    k,
+                    PreparedRowMut::LutI8 {
+                        aq: &mut aq,
+                        tmp16: &mut tmp16,
+                        tables: &mut tables,
+                        block_scales: &mut block_scales,
+                        scale: &mut scale,
+                    },
+                );
+                Prepared::LutI8 { tables, block_scales, block_groups, scale }
+            }
+            PrepareKind::BitLut { groups, block_groups } => {
+                let mut aq = vec![0i8; k];
+                let mut tmp16 = vec![0i16; groups * tl1::LUT_W];
+                let mut tables = vec![0i8; groups * tl1::LUT_W];
+                let mut block_scales = vec![0f32; pallas_core::util::ceil_div(groups, block_groups)];
+                let mut scale = 0f32;
+                let mut act_sum = 0i32;
+                self.prepare_row_into(
+                    x,
+                    k,
+                    PreparedRowMut::BitLut {
+                        aq: &mut aq,
+                        tmp16: &mut tmp16,
+                        tables: &mut tables,
+                        block_scales: &mut block_scales,
+                        scale: &mut scale,
+                        act_sum: &mut act_sum,
+                    },
+                );
+                Prepared::BitLut { tables, block_scales, block_groups, scale, act_sum }
+            }
+        }
+    }
+
+    /// The SIMD tiers this kernel has explicit implementations for on
+    /// the compile target. Scalar-only by default; the vectorized
+    /// kernels (TL1/TL2/I2_S/ELUT) override with [`simd::KERNEL_LEVELS`].
+    /// The tuner measures each tier in here that the host can run.
+    fn simd_levels(&self) -> &'static [SimdLevel] {
+        const SCALAR_ONLY: &[SimdLevel] = &[SimdLevel::Scalar];
+        SCALAR_ONLY
+    }
+
+    /// Whether this kernel can emit (and elide through) the block-skip
+    /// sparse layout at pack time. The ternary LUT/I2_S kernels
+    /// override to `true`; the tuner only measures the sparse axis for
+    /// kernels that report it.
+    fn sparse_capable(&self) -> bool {
+        false
+    }
+
+    /// Compute `out[r] = Σ_k x[k] * W[r,k]` for `r` in `rows` —
+    /// Algorithm 1/2 "accumulation" phase.
+    fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>);
+
+    /// Full single-row GEMV.
+    fn gemv(&self, t: &QTensor, p: &Prepared, out: &mut [f32]) {
+        assert_eq!(out.len(), t.m);
+        self.gemv_rows(t, p.as_row(), out, 0..t.m);
+    }
+}
+
+/// Look up the kernel implementation for a quant type.
+pub fn kernel_for(q: QuantType) -> &'static dyn Kernel {
+    match q {
+        QuantType::F32 => &baselines::f32_mad::F32Kernel,
+        QuantType::F16 => &baselines::f16_mad::F16Kernel,
+        QuantType::Q40 => &baselines::q4_0::Q40Kernel,
+        QuantType::Q2K => &baselines::q2_k::Q2KKernel,
+        QuantType::Tq10 => &baselines::tq1_0::Tq10Kernel,
+        QuantType::Tq20 => &baselines::tq2_0::Tq20Kernel,
+        QuantType::Tmac => &baselines::tmac::TmacKernel,
+        QuantType::Tl10 => &tl1::TL1_0,
+        QuantType::Tl11 => &tl1::TL1_1,
+        QuantType::Tl20 => &tl2::TL2_0,
+        QuantType::Tl21 => &tl2::TL2_1,
+        QuantType::I2S => &i2s::I2SKernel,
+        QuantType::Elut4 => &elut::ELUT4,
+        QuantType::Elut5 => &elut::ELUT5,
+    }
+}
+
+/// All kernel infos (regenerates paper Table 1).
+pub fn library_table() -> Vec<KernelInfo> {
+    QuantType::ALL.iter().map(|&q| kernel_for(q).info()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Batched preprocessing: flat per-batch storage + per-input cache
+// ---------------------------------------------------------------------------
+
+/// All `n` activation rows of one matmul input, preprocessed into flat
+/// recyclable buffers. Built in parallel by [`PreparedBatch::build`];
+/// [`PreparedBatch::row`] hands out borrowed [`PreparedRow`] views for
+/// the accumulation phase. Rebuilding with the same shape class reuses
+/// every buffer (zero heap allocation in steady state).
+pub struct PreparedBatch {
+    qtype: QuantType,
+    k: usize,
+    n: usize,
+    kind: BatchKind,
+}
+
+enum BatchKind {
+    /// Never built.
+    Empty,
+    /// F32/F16: rows are borrowed from the caller's activations.
+    Raw,
+    Int8 {
+        q: Vec<i8>,
+        scales: Vec<f32>,
+        sums: Vec<i32>,
+    },
+    Blocked {
+        q: Vec<i8>,
+        d: Vec<f32>,
+        bsums: Vec<i32>,
+        block_len: usize,
+    },
+    LutI16 {
+        aq: Vec<i8>,
+        tables: Vec<i16>,
+        scales: Vec<f32>,
+        stride: usize,
+    },
+    LutI8 {
+        aq: Vec<i8>,
+        tmp16: Vec<i16>,
+        tables: Vec<i8>,
+        block_scales: Vec<f32>,
+        scales: Vec<f32>,
+        stride: usize,
+        sblocks: usize,
+        block_groups: usize,
+    },
+    BitLut {
+        aq: Vec<i8>,
+        tmp16: Vec<i16>,
+        tables: Vec<i8>,
+        block_scales: Vec<f32>,
+        scales: Vec<f32>,
+        act_sums: Vec<i32>,
+        stride: usize,
+        sblocks: usize,
+        block_groups: usize,
+    },
+}
+
+/// Resize to `len` preserving capacity where possible; counts a fresh
+/// allocation when capacity must grow. Existing contents are left in
+/// place (every consumer fully overwrites its region during
+/// `prepare_row_into`), so the steady-state rebuild writes nothing here
+/// — no redundant memset in the hot path.
+fn ensure_len<T: Copy + Default>(v: &mut Vec<T>, len: usize, allocs: &mut u64) {
+    if v.capacity() < len {
+        *allocs += 1;
+    }
+    v.resize(len, T::default());
+}
+
+impl PreparedBatch {
+    /// An empty batch (no buffers yet); [`PreparedBatch::build`] sizes it.
+    pub fn new() -> PreparedBatch {
+        PreparedBatch { qtype: QuantType::F32, k: 0, n: 0, kind: BatchKind::Empty }
+    }
+
+    /// The kernel this batch was prepared for.
+    pub fn qtype(&self) -> QuantType {
+        self.qtype
+    }
+
+    /// Activation rows held.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Reduction dimension.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// (Re)build this batch for `kernel` over the `n`×`k` activations
+    /// `x`, preparing rows in parallel on `pool`. Buffers are reused
+    /// whenever the shape class matches; returns the number of fresh
+    /// buffer allocations (0 in steady state).
+    pub fn build(
+        &mut self,
+        kernel: &dyn Kernel,
+        x: &[f32],
+        k: usize,
+        n: usize,
+        pool: &ThreadPool,
+    ) -> u64 {
+        assert_eq!(x.len(), n * k);
+        let mut allocs = 0u64;
+        // Row chunks double as the scratch-region count: chunk c owns
+        // scratch region c (aq/tmp16), so scratch scales with the worker
+        // count, not with n.
+        let chunks = (pool.size() * 2).min(n).max(1);
+        self.ensure_kind(kernel.prepare_kind(k), k, n, chunks, &mut allocs);
+        self.qtype = kernel.info().qtype;
+        self.k = k;
+        self.n = n;
+        if n == 0 {
+            return allocs;
+        }
+        let rows_per = pallas_core::util::ceil_div(n, chunks);
+        match &mut self.kind {
+            BatchKind::Empty => unreachable!("ensure_kind materializes a kind"),
+            BatchKind::Raw => {}
+            BatchKind::Int8 { q, scales, sums } => {
+                let qp = SendMut(q.as_mut_ptr());
+                let sp = SendMut(scales.as_mut_ptr());
+                let up = SendMut(sums.as_mut_ptr());
+                pool.parallel_for(chunks, |c| {
+                    let (qp, sp, up) = (&qp, &sp, &up);
+                    let lo = c * rows_per;
+                    if lo >= n {
+                        return;
+                    }
+                    let hi = ((c + 1) * rows_per).min(n);
+                    for i in lo..hi {
+                        // SAFETY: each row i writes disjoint ranges.
+                        let q = unsafe { std::slice::from_raw_parts_mut(qp.0.add(i * k), k) };
+                        // SAFETY: as above.
+                        let scale = unsafe { &mut *sp.0.add(i) };
+                        // SAFETY: as above.
+                        let sum = unsafe { &mut *up.0.add(i) };
+                        kernel.prepare_row_into(
+                            &x[i * k..(i + 1) * k],
+                            k,
+                            PreparedRowMut::Int8 { q, scale, sum },
+                        );
+                    }
+                });
+            }
+            BatchKind::Blocked { q, d, bsums, block_len } => {
+                let nb = k / *block_len;
+                let qp = SendMut(q.as_mut_ptr());
+                let dp = SendMut(d.as_mut_ptr());
+                let bp = SendMut(bsums.as_mut_ptr());
+                pool.parallel_for(chunks, |c| {
+                    let (qp, dp, bp) = (&qp, &dp, &bp);
+                    let lo = c * rows_per;
+                    if lo >= n {
+                        return;
+                    }
+                    let hi = ((c + 1) * rows_per).min(n);
+                    for i in lo..hi {
+                        // SAFETY: each row i writes disjoint ranges.
+                        let q = unsafe { std::slice::from_raw_parts_mut(qp.0.add(i * k), k) };
+                        // SAFETY: as above.
+                        let d = unsafe { std::slice::from_raw_parts_mut(dp.0.add(i * nb), nb) };
+                        // SAFETY: as above.
+                        let bsums =
+                            unsafe { std::slice::from_raw_parts_mut(bp.0.add(i * nb), nb) };
+                        kernel.prepare_row_into(
+                            &x[i * k..(i + 1) * k],
+                            k,
+                            PreparedRowMut::Blocked { q, d, bsums },
+                        );
+                    }
+                });
+            }
+            BatchKind::LutI16 { aq, tables, scales, stride } => {
+                let stride = *stride;
+                let ap = SendMut(aq.as_mut_ptr());
+                let tp = SendMut(tables.as_mut_ptr());
+                let sp = SendMut(scales.as_mut_ptr());
+                pool.parallel_for(chunks, |c| {
+                    let (ap, tp, sp) = (&ap, &tp, &sp);
+                    let lo = c * rows_per;
+                    if lo >= n {
+                        return;
+                    }
+                    let hi = ((c + 1) * rows_per).min(n);
+                    for i in lo..hi {
+                        // SAFETY: each row i writes disjoint output ranges;
+                        // scratch region c belongs to this chunk alone.
+                        let aq = unsafe { std::slice::from_raw_parts_mut(ap.0.add(c * k), k) };
+                        // SAFETY: as above.
+                        let tables = unsafe {
+                            std::slice::from_raw_parts_mut(tp.0.add(i * stride), stride)
+                        };
+                        // SAFETY: as above.
+                        let scale = unsafe { &mut *sp.0.add(i) };
+                        kernel.prepare_row_into(
+                            &x[i * k..(i + 1) * k],
+                            k,
+                            PreparedRowMut::LutI16 { aq, tables, scale },
+                        );
+                    }
+                });
+            }
+            BatchKind::LutI8 { aq, tmp16, tables, block_scales, scales, stride, sblocks, .. } => {
+                let (stride, sblocks) = (*stride, *sblocks);
+                let ap = SendMut(aq.as_mut_ptr());
+                let mp = SendMut(tmp16.as_mut_ptr());
+                let tp = SendMut(tables.as_mut_ptr());
+                let bp = SendMut(block_scales.as_mut_ptr());
+                let sp = SendMut(scales.as_mut_ptr());
+                pool.parallel_for(chunks, |c| {
+                    let (ap, mp, tp, bp, sp) = (&ap, &mp, &tp, &bp, &sp);
+                    let lo = c * rows_per;
+                    if lo >= n {
+                        return;
+                    }
+                    let hi = ((c + 1) * rows_per).min(n);
+                    for i in lo..hi {
+                        // SAFETY: each row i writes disjoint output ranges;
+                        // scratch region c belongs to this chunk alone.
+                        let aq = unsafe { std::slice::from_raw_parts_mut(ap.0.add(c * k), k) };
+                        // SAFETY: as above.
+                        let tmp16 = unsafe {
+                            std::slice::from_raw_parts_mut(mp.0.add(c * stride), stride)
+                        };
+                        // SAFETY: as above.
+                        let tables = unsafe {
+                            std::slice::from_raw_parts_mut(tp.0.add(i * stride), stride)
+                        };
+                        // SAFETY: as above.
+                        let block_scales = unsafe {
+                            std::slice::from_raw_parts_mut(bp.0.add(i * sblocks), sblocks)
+                        };
+                        // SAFETY: as above.
+                        let scale = unsafe { &mut *sp.0.add(i) };
+                        kernel.prepare_row_into(
+                            &x[i * k..(i + 1) * k],
+                            k,
+                            PreparedRowMut::LutI8 { aq, tmp16, tables, block_scales, scale },
+                        );
+                    }
+                });
+            }
+            BatchKind::BitLut {
+                aq,
+                tmp16,
+                tables,
+                block_scales,
+                scales,
+                act_sums,
+                stride,
+                sblocks,
+                ..
+            } => {
+                let (stride, sblocks) = (*stride, *sblocks);
+                let ap = SendMut(aq.as_mut_ptr());
+                let mp = SendMut(tmp16.as_mut_ptr());
+                let tp = SendMut(tables.as_mut_ptr());
+                let bp = SendMut(block_scales.as_mut_ptr());
+                let sp = SendMut(scales.as_mut_ptr());
+                let up = SendMut(act_sums.as_mut_ptr());
+                pool.parallel_for(chunks, |c| {
+                    let (ap, mp, tp, bp, sp, up) = (&ap, &mp, &tp, &bp, &sp, &up);
+                    let lo = c * rows_per;
+                    if lo >= n {
+                        return;
+                    }
+                    let hi = ((c + 1) * rows_per).min(n);
+                    for i in lo..hi {
+                        // SAFETY: each row i writes disjoint output ranges;
+                        // scratch region c belongs to this chunk alone.
+                        let aq = unsafe { std::slice::from_raw_parts_mut(ap.0.add(c * k), k) };
+                        // SAFETY: as above.
+                        let tmp16 = unsafe {
+                            std::slice::from_raw_parts_mut(mp.0.add(c * stride), stride)
+                        };
+                        // SAFETY: as above.
+                        let tables = unsafe {
+                            std::slice::from_raw_parts_mut(tp.0.add(i * stride), stride)
+                        };
+                        // SAFETY: as above.
+                        let block_scales = unsafe {
+                            std::slice::from_raw_parts_mut(bp.0.add(i * sblocks), sblocks)
+                        };
+                        // SAFETY: as above.
+                        let scale = unsafe { &mut *sp.0.add(i) };
+                        // SAFETY: as above.
+                        let act_sum = unsafe { &mut *up.0.add(i) };
+                        kernel.prepare_row_into(
+                            &x[i * k..(i + 1) * k],
+                            k,
+                            PreparedRowMut::BitLut {
+                                aq,
+                                tmp16,
+                                tables,
+                                block_scales,
+                                scale,
+                                act_sum,
+                            },
+                        );
+                    }
+                });
+            }
+        }
+        allocs
+    }
+
+    /// Switch/resize the storage to `want`, reusing buffers when the
+    /// shape class matches. `scratch_rows` is the number of concurrent
+    /// build chunks — per-row scratch (`aq`, `tmp16`) is sized by it, not
+    /// by `n`, so transient workspace stays O(threads) after a long
+    /// prefill chunk.
+    fn ensure_kind(
+        &mut self,
+        want: PrepareKind,
+        k: usize,
+        n: usize,
+        scratch_rows: usize,
+        allocs: &mut u64,
+    ) {
+        match want {
+            PrepareKind::Raw => {
+                if !matches!(self.kind, BatchKind::Raw) {
+                    self.kind = BatchKind::Raw;
+                }
+            }
+            PrepareKind::Int8 => {
+                if !matches!(self.kind, BatchKind::Int8 { .. }) {
+                    *allocs += 1;
+                    self.kind =
+                        BatchKind::Int8 { q: Vec::new(), scales: Vec::new(), sums: Vec::new() };
+                }
+                if let BatchKind::Int8 { q, scales, sums } = &mut self.kind {
+                    ensure_len(q, n * k, allocs);
+                    ensure_len(scales, n, allocs);
+                    ensure_len(sums, n, allocs);
+                }
+            }
+            PrepareKind::Blocked { block_len } => {
+                if !matches!(&self.kind, BatchKind::Blocked { block_len: bl, .. } if *bl == block_len)
+                {
+                    *allocs += 1;
+                    self.kind = BatchKind::Blocked {
+                        q: Vec::new(),
+                        d: Vec::new(),
+                        bsums: Vec::new(),
+                        block_len,
+                    };
+                }
+                let nb = n * (k / block_len);
+                if let BatchKind::Blocked { q, d, bsums, .. } = &mut self.kind {
+                    ensure_len(q, n * k, allocs);
+                    ensure_len(d, nb, allocs);
+                    ensure_len(bsums, nb, allocs);
+                }
+            }
+            PrepareKind::LutI16 { groups } => {
+                let stride = groups * tl1::LUT_W;
+                if !matches!(self.kind, BatchKind::LutI16 { .. }) {
+                    *allocs += 1;
+                    self.kind = BatchKind::LutI16 {
+                        aq: Vec::new(),
+                        tables: Vec::new(),
+                        scales: Vec::new(),
+                        stride,
+                    };
+                }
+                if let BatchKind::LutI16 { aq, tables, scales, stride: s } = &mut self.kind {
+                    *s = stride;
+                    ensure_len(aq, scratch_rows * k, allocs);
+                    ensure_len(tables, n * stride, allocs);
+                    ensure_len(scales, n, allocs);
+                }
+            }
+            PrepareKind::LutI8 { groups, block_groups } => {
+                let stride = groups * tl1::LUT_W;
+                let sblocks = pallas_core::util::ceil_div(groups, block_groups);
+                if !matches!(&self.kind, BatchKind::LutI8 { block_groups: bg, .. } if *bg == block_groups)
+                {
+                    *allocs += 1;
+                    self.kind = BatchKind::LutI8 {
+                        aq: Vec::new(),
+                        tmp16: Vec::new(),
+                        tables: Vec::new(),
+                        block_scales: Vec::new(),
+                        scales: Vec::new(),
+                        stride,
+                        sblocks,
+                        block_groups,
+                    };
+                }
+                if let BatchKind::LutI8 {
+                    aq,
+                    tmp16,
+                    tables,
+                    block_scales,
+                    scales,
+                    stride: st,
+                    sblocks: sb,
+                    ..
+                } = &mut self.kind
+                {
+                    *st = stride;
+                    *sb = sblocks;
+                    ensure_len(aq, scratch_rows * k, allocs);
+                    ensure_len(tmp16, scratch_rows * stride, allocs);
+                    ensure_len(tables, n * stride, allocs);
+                    ensure_len(block_scales, n * sblocks, allocs);
+                    ensure_len(scales, n, allocs);
+                }
+            }
+            PrepareKind::BitLut { groups, block_groups } => {
+                let stride = groups * tl1::LUT_W;
+                let sblocks = pallas_core::util::ceil_div(groups, block_groups);
+                if !matches!(&self.kind, BatchKind::BitLut { block_groups: bg, .. } if *bg == block_groups)
+                {
+                    *allocs += 1;
+                    self.kind = BatchKind::BitLut {
+                        aq: Vec::new(),
+                        tmp16: Vec::new(),
+                        tables: Vec::new(),
+                        block_scales: Vec::new(),
+                        scales: Vec::new(),
+                        act_sums: Vec::new(),
+                        stride,
+                        sblocks,
+                        block_groups,
+                    };
+                }
+                if let BatchKind::BitLut {
+                    aq,
+                    tmp16,
+                    tables,
+                    block_scales,
+                    scales,
+                    act_sums,
+                    stride: st,
+                    sblocks: sb,
+                    ..
+                } = &mut self.kind
+                {
+                    *st = stride;
+                    *sb = sblocks;
+                    ensure_len(aq, scratch_rows * k, allocs);
+                    ensure_len(tmp16, scratch_rows * stride, allocs);
+                    ensure_len(tables, n * stride, allocs);
+                    ensure_len(block_scales, n * sblocks, allocs);
+                    ensure_len(scales, n, allocs);
+                    ensure_len(act_sums, n, allocs);
+                }
+            }
+        }
+    }
+
+    /// Borrowed view of prepared row `i`. `x` must be the activation
+    /// matrix the batch was built from (the Raw kind borrows its rows).
+    pub fn row<'p>(&'p self, i: usize, x: &'p [f32]) -> PreparedRow<'p> {
+        assert!(i < self.n, "row {i} out of {n}", n = self.n);
+        let k = self.k;
+        match &self.kind {
+            BatchKind::Empty => panic!("PreparedBatch::row before build"),
+            BatchKind::Raw => PreparedRow::Raw(&x[i * k..(i + 1) * k]),
+            BatchKind::Int8 { q, scales, sums } => PreparedRow::Int8 {
+                q: &q[i * k..(i + 1) * k],
+                scale: scales[i],
+                sum: sums[i],
+            },
+            BatchKind::Blocked { q, d, bsums, block_len } => {
+                let nb = k / block_len;
+                PreparedRow::Blocked {
+                    q: &q[i * k..(i + 1) * k],
+                    d: &d[i * nb..(i + 1) * nb],
+                    bsums: &bsums[i * nb..(i + 1) * nb],
+                    block_len: *block_len,
+                }
+            }
+            BatchKind::LutI16 { tables, scales, stride, .. } => PreparedRow::LutI16 {
+                tables: &tables[i * stride..(i + 1) * stride],
+                scale: scales[i],
+            },
+            BatchKind::LutI8 { tables, block_scales, scales, stride, sblocks, block_groups, .. } => {
+                PreparedRow::LutI8 {
+                    tables: &tables[i * stride..(i + 1) * stride],
+                    block_scales: &block_scales[i * sblocks..(i + 1) * sblocks],
+                    block_groups: *block_groups,
+                    scale: scales[i],
+                }
+            }
+            BatchKind::BitLut {
+                tables,
+                block_scales,
+                scales,
+                act_sums,
+                stride,
+                sblocks,
+                block_groups,
+                ..
+            } => PreparedRow::BitLut {
+                tables: &tables[i * stride..(i + 1) * stride],
+                block_scales: &block_scales[i * sblocks..(i + 1) * sblocks],
+                block_groups: *block_groups,
+                scale: scales[i],
+                act_sum: act_sums[i],
+            },
+        }
+    }
+}
+
+impl Default for PreparedBatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Prepare-cache counters (cumulative; snapshot via
+/// [`PreparedActivations::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrepareStats {
+    /// Requests served from an already-prepared batch (a projection
+    /// sharing its input with an earlier one, e.g. wk/wv after wq).
+    pub hits: u64,
+    /// Requests that ran preprocessing (once per input × kernel).
+    pub misses: u64,
+    /// Fresh buffer allocations across all builds (0 growth = steady
+    /// state is allocation-free).
+    pub buffer_allocs: u64,
+    /// Builds that fully reused existing buffer capacity.
+    pub buffer_reuses: u64,
+}
+
+struct ActSlot {
+    qtype: QuantType,
+    /// Generation the slot's batch was built for.
+    generation: u64,
+    built: bool,
+    batch: PreparedBatch,
+}
+
+/// Per-input cache of [`PreparedBatch`]es, keyed by [`QuantType`] —
+/// dispatch can pick different winners per role, so heterogeneous
+/// packings coexist. Call [`PreparedActivations::begin_input`] once per
+/// new layer input (e.g. the normed hidden state wq/wk/wv share), then
+/// [`PreparedActivations::get_or_prepare`] from every consuming
+/// projection: the first call prepares, the rest hit the cache. Slots
+/// (and their buffers) persist across inputs, so decode steady state
+/// performs zero heap allocations in the prepare path.
+pub struct PreparedActivations {
+    generation: u64,
+    slots: Vec<ActSlot>,
+    stats: PrepareStats,
+}
+
+impl PreparedActivations {
+    pub fn new() -> PreparedActivations {
+        PreparedActivations { generation: 0, slots: Vec::new(), stats: PrepareStats::default() }
+    }
+
+    /// Invalidate cached batches: the next `get_or_prepare` per kernel
+    /// re-prepares (into the same buffers). Call once per layer input.
+    pub fn begin_input(&mut self) {
+        self.generation += 1;
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> PrepareStats {
+        self.stats
+    }
+
+    /// The prepared batch for `kernel` over the current input `x`
+    /// (`n`×`k`), preparing it on first request since the last
+    /// [`PreparedActivations::begin_input`].
+    pub fn get_or_prepare(
+        &mut self,
+        kernel: &dyn Kernel,
+        x: &[f32],
+        k: usize,
+        n: usize,
+        pool: &ThreadPool,
+    ) -> &PreparedBatch {
+        let qtype = kernel.info().qtype;
+        let idx = match self.slots.iter().position(|s| s.qtype == qtype) {
+            Some(i) => i,
+            None => {
+                self.slots.push(ActSlot {
+                    qtype,
+                    generation: 0,
+                    built: false,
+                    batch: PreparedBatch::new(),
+                });
+                self.slots.len() - 1
+            }
+        };
+        let generation = self.generation;
+        let slot = &mut self.slots[idx];
+        if slot.built && slot.generation == generation && slot.batch.k() == k && slot.batch.n() == n
+        {
+            self.stats.hits += 1;
+        } else {
+            let allocs = slot.batch.build(kernel, x, k, n, pool);
+            slot.generation = generation;
+            slot.built = true;
+            self.stats.misses += 1;
+            if allocs == 0 {
+                self.stats.buffer_reuses += 1;
+            } else {
+                self.stats.buffer_allocs += allocs;
+            }
+        }
+        &self.slots[idx].batch
+    }
+}
+
+impl Default for PreparedActivations {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Accumulation over an already-prepared batch: one 2-D tiled fork/join
+/// over (activation-row chunks × weight-row chunks), so an n-row matmul
+/// pays a single barrier instead of n. `x` must be the activation matrix
+/// the batch was built from.
+pub fn matmul_prepared(
+    kernel: &dyn Kernel,
+    t: &QTensor,
+    batch: &PreparedBatch,
+    x: &[f32],
+    n: usize,
+    out: &mut [f32],
+    pool: &ThreadPool,
+) {
+    assert_eq!(batch.n(), n, "batch rows");
+    assert_eq!(batch.k(), t.k, "batch K");
+    assert_eq!(batch.qtype(), kernel.info().qtype, "batch kernel");
+    assert_eq!(x.len(), n * t.k);
+    assert_eq!(out.len(), n * t.m);
+    let m = t.m;
+    if n == 0 || m == 0 {
+        return;
+    }
+    // Tile the (n × m) output: ~4 tiles per thread for load balance, with
+    // activation-row tiles first (better weight reuse within a tile).
+    let target = (pool.size() * 4).max(1);
+    let a_tiles = n.min(target);
+    let w_tiles = pallas_core::util::ceil_div(target, a_tiles).min(m).max(1);
+    let rows_per_a = pallas_core::util::ceil_div(n, a_tiles);
+    let rows_per_w = pallas_core::util::ceil_div(m, w_tiles);
+    if pool.n_nodes() > 1 {
+        return matmul_prepared_placed(kernel, t, batch, x, n, out, pool, a_tiles, w_tiles);
+    }
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    pool.parallel_for(a_tiles * w_tiles, |c| {
+        // Capture the whole wrapper (edition-2021 closures would
+        // otherwise capture the raw-pointer field, which is !Sync).
+        let out_ptr = &out_ptr;
+        let ai = c / w_tiles;
+        let wi = c % w_tiles;
+        let a_lo = ai * rows_per_a;
+        let w_lo = wi * rows_per_w;
+        if a_lo >= n || w_lo >= m {
+            return;
+        }
+        let a_hi = ((ai + 1) * rows_per_a).min(n);
+        let w_hi = ((wi + 1) * rows_per_w).min(m);
+        for i in a_lo..a_hi {
+            let row = batch.row(i, x);
+            // SAFETY: tiles write disjoint ranges of out.
+            let slice = unsafe {
+                std::slice::from_raw_parts_mut(out_ptr.0.add(i * m + w_lo), w_hi - w_lo)
+            };
+            kernel.gemv_rows(t, row, slice, w_lo..w_hi);
+        }
+    });
+}
+
+/// NUMA-routed accumulation: weight-row tiles are cut *within* each
+/// node's row share ([`pallas_core::topology::Topology::row_ranges`] —
+/// the same split [`QTensor::numa_localize`] first-touched by) and each
+/// chunk is queued on the node owning its rows, so the weight-side
+/// stream reads local memory. Every output element is still produced by
+/// exactly one `gemv_rows` call with the same k-accumulation order, so
+/// results are bit-identical to the unplaced path.
+#[allow(clippy::too_many_arguments)]
+fn matmul_prepared_placed(
+    kernel: &dyn Kernel,
+    t: &QTensor,
+    batch: &PreparedBatch,
+    x: &[f32],
+    n: usize,
+    out: &mut [f32],
+    pool: &ThreadPool,
+    a_tiles: usize,
+    w_tiles: usize,
+) {
+    let m = t.m;
+    let n_nodes = pool.n_nodes();
+    let per_node = pallas_core::util::ceil_div(w_tiles, n_nodes).max(1);
+    // (w_lo, w_hi, node) tiles, node-aligned.
+    let mut wtiles: Vec<(usize, usize, usize)> = Vec::new();
+    for (node, r) in pool.topology().row_ranges(m).iter().enumerate() {
+        if r.is_empty() {
+            continue;
+        }
+        let tiles = per_node.min(r.len());
+        let rows = pallas_core::util::ceil_div(r.len(), tiles);
+        let mut lo = r.start;
+        while lo < r.end {
+            let hi = (lo + rows).min(r.end);
+            wtiles.push((lo, hi, node));
+            lo = hi;
+        }
+    }
+    let rows_per_a = pallas_core::util::ceil_div(n, a_tiles);
+    let n_wtiles = wtiles.len();
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    pool.parallel_for_placed(
+        a_tiles * n_wtiles,
+        |c| wtiles[c % n_wtiles].2,
+        |c| {
+            // Capture the whole wrapper (edition-2021 closures would
+            // otherwise capture the raw-pointer field, which is !Sync).
+            let out_ptr = &out_ptr;
+            let (w_lo, w_hi, _) = wtiles[c % n_wtiles];
+            let ai = c / n_wtiles;
+            let a_lo = ai * rows_per_a;
+            if a_lo >= n {
+                return;
+            }
+            let a_hi = ((ai + 1) * rows_per_a).min(n);
+            for i in a_lo..a_hi {
+                let row = batch.row(i, x);
+                // SAFETY: tiles write disjoint ranges of out.
+                let slice = unsafe {
+                    std::slice::from_raw_parts_mut(out_ptr.0.add(i * m + w_lo), w_hi - w_lo)
+                };
+                kernel.gemv_rows(t, row, slice, w_lo..w_hi);
+            }
+        },
+    );
+}
+
+/// Multi-row, multi-threaded matmul: `out[(n, m)] = X[(n, k)] · Wᵀ`.
+/// Convenience wrapper that builds a fresh [`PreparedBatch`] and runs
+/// [`matmul_prepared`]; callers with an input shared across projections
+/// (or a steady-state loop) should hold a [`PreparedActivations`] and
+/// call the two phases explicitly to amortize preprocessing.
+pub fn matmul(
+    kernel: &dyn Kernel,
+    t: &QTensor,
+    x: &[f32],
+    n: usize,
+    out: &mut [f32],
+    pool: &ThreadPool,
+) {
+    assert_eq!(x.len(), n * t.k);
+    assert_eq!(out.len(), n * t.m);
+    let mut batch = PreparedBatch::new();
+    batch.build(kernel, x, t.k, n, pool);
+    matmul_prepared(kernel, t, &batch, x, n, out, pool);
+}
+
+/// Pointer wrapper to move a raw pointer into the pool closure.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+// SAFETY: the pointer targets a buffer owned by the caller that outlives
+// the parallel region, and tasks write disjoint ranges of it.
+unsafe impl Send for SendPtr {}
+// SAFETY: as above.
+unsafe impl Sync for SendPtr {}
+
+/// Typed variant of [`SendPtr`] for the batch-build buffers.
+#[derive(Clone, Copy)]
+struct SendMut<T>(*mut T);
+// SAFETY: the pointer targets a buffer owned by the caller that outlives
+// the parallel region, and tasks write disjoint ranges of it.
+unsafe impl<T> Send for SendMut<T> {}
+// SAFETY: as above.
+unsafe impl<T> Sync for SendMut<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use pallas_core::util::Rng;
+
+    /// Reference f64 GEMV over dequantized weights and raw activations.
+    fn dense_ref(w: &[f32], m: usize, k: usize, x: &[f32]) -> Vec<f32> {
+        (0..m)
+            .map(|r| {
+                w[r * k..(r + 1) * k]
+                    .iter()
+                    .zip(x.iter())
+                    .map(|(&wv, &xv)| wv as f64 * xv as f64)
+                    .sum::<f64>() as f32
+            })
+            .collect()
+    }
+
+    fn random_ternary(m: usize, k: usize, seed: u64) -> TernaryWeights {
+        let mut rng = Rng::new(seed);
+        let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+        TernaryWeights::from_ternary(q, m, k, 0.0625)
+    }
+
+    /// NUMA routing + weight localization must be bit-identical to the
+    /// plain path for every kernel: same values, different placement.
+    #[test]
+    fn numa_placed_matmul_is_bit_identical() {
+        use pallas_core::topology::Topology;
+        let (m, k, n) = (96, 512, 3);
+        let t = random_ternary(m, k, 21);
+        let mut rng = Rng::new(22);
+        let x: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+        let plain = ThreadPool::new(4);
+        let placed = ThreadPool::with_topology(4, Topology::mock(2));
+        for qt in QuantType::ALL {
+            let kern = kernel_for(qt);
+            if k % kern.info().k_multiple != 0 {
+                continue;
+            }
+            let packed = kern.quantize(&t);
+            let mut localized = kern.quantize(&t);
+            localized.numa_localize(&placed);
+            assert_eq!(localized.data, packed.data, "{qt:?}: localize must not alter bytes");
+            let mut out_plain = vec![0f32; n * m];
+            matmul(kern, &packed, &x, n, &mut out_plain, &plain);
+            let mut out_placed = vec![0f32; n * m];
+            matmul(kern, &localized, &x, n, &mut out_placed, &placed);
+            assert_eq!(
+                out_plain.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                out_placed.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{qt:?}: NUMA-placed matmul diverged"
+            );
+        }
+        let stats = placed.numa_stats();
+        assert!(stats.chunks.iter().sum::<u64>() > 0);
+    }
+
+    /// Every kernel must approximate the dense reference within a
+    /// quantization-error bound on random ternary weights.
+    #[test]
+    fn all_kernels_match_dense_reference() {
+        let (m, k) = (64, 512);
+        let t = random_ternary(m, k, 9);
+        let wd = t.dequantize();
+        let mut rng = Rng::new(10);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        let reference = dense_ref(&wd, m, k, &x);
+        let ref_norm = reference.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+
+        for qt in QuantType::ALL {
+            let kern = kernel_for(qt);
+            if k % kern.info().k_multiple != 0 {
+                continue;
+            }
+            let qt_tensor = kern.quantize(&t);
+            let p = kern.prepare(&x, k);
+            let mut out = vec![0f32; m];
+            kern.gemv(&qt_tensor, &p, &mut out);
+            let err = out
+                .iter()
+                .zip(reference.iter())
+                .map(|(a, b)| ((*a - *b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            let rel = err / ref_norm.max(1e-12);
+            // Int8 activation quantization alone gives ~1e-3 relative error;
+            // blocky baselines (Q2_K) are the loosest.
+            let bound = match qt {
+                QuantType::Q2K => 0.12,
+                // Q4_0's asymmetric grid maps the −amax side to ±7/8 of
+                // its value — up to ~12% error on exact-ternary data.
+                QuantType::Q40 => 0.12,
+                QuantType::Elut4 | QuantType::Elut5 => 0.08,
+                // Bit-wise LUT requantizes subset-sum tables whose dynamic
+                // range (up to 4·127) is wider than TL's pair/trio sums.
+                QuantType::Tmac => 0.04,
+                _ => 0.02,
+            };
+            assert!(rel < bound, "{}: rel err {rel:.5} >= {bound}", kern.info().name);
+        }
+    }
+
+    /// Storage bpw must match the nominal Table-1 values.
+    #[test]
+    fn bpw_matches_table1() {
+        let t = random_ternary(32, 3072, 11);
+        for qt in QuantType::ALL {
+            let kern = kernel_for(qt);
+            if t.k % kern.info().k_multiple != 0 {
+                continue;
+            }
+            let packed = kern.quantize(&t);
+            let got = packed.bits_per_weight();
+            let want = kern.info().bpw;
+            assert!(
+                (got - want).abs() / want < 0.02,
+                "{}: measured bpw {got:.3} vs nominal {want:.3}",
+                kern.info().name
+            );
+        }
+    }
+
+    /// dequantize(quantize(w)) must preserve ternary values exactly for all
+    /// ternary-native kernels.
+    #[test]
+    fn ternary_native_round_trip() {
+        let t = random_ternary(16, 768, 12);
+        for qt in QuantType::ALL {
+            let kern = kernel_for(qt);
+            let info = kern.info();
+            if !info.ternary_native || t.k % info.k_multiple != 0 {
+                continue;
+            }
+            let packed = kern.quantize(&t);
+            let back = kern.dequantize(&packed);
+            let want = t.dequantize();
+            for (i, (a, b)) in back.iter().zip(want.iter()).enumerate() {
+                assert!((a - b).abs() < 1e-6, "{} idx {i}: {a} vs {b}", info.name);
+            }
+        }
+    }
+
+    /// matmul (threaded, batched prepare) must equal gemv row-by-row
+    /// (serial, per-row prepare).
+    #[test]
+    fn threaded_matmul_matches_serial() {
+        let (m, k, n) = (48, 256, 3);
+        let t = random_ternary(m, k, 13);
+        let mut rng = Rng::new(14);
+        let x: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+        let pool = ThreadPool::new(4);
+        for qt in [QuantType::I2S, QuantType::Tl20, QuantType::Tq20, QuantType::F16] {
+            let kern = kernel_for(qt);
+            if k % kern.info().k_multiple != 0 {
+                continue;
+            }
+            let packed = kern.quantize(&t);
+            let mut out_par = vec![0f32; n * m];
+            matmul(kern, &packed, &x, n, &mut out_par, &pool);
+            for i in 0..n {
+                let p = kern.prepare(&x[i * k..(i + 1) * k], k);
+                let mut out_ser = vec![0f32; m];
+                kern.gemv(&packed, &p, &mut out_ser);
+                assert_eq!(&out_par[i * m..(i + 1) * m], &out_ser[..], "{qt:?} row {i}");
+            }
+        }
+    }
+
+    /// The prepare cache shares one batch across consumers of the same
+    /// input and invalidates on `begin_input`.
+    #[test]
+    fn prepared_activations_cache_hits_and_invalidates() {
+        let (m, k, n) = (16, 256, 2);
+        let t = random_ternary(m, k, 15);
+        let kern = kernel_for(QuantType::Tl21);
+        let packed = kern.quantize(&t);
+        let pool = ThreadPool::new(2);
+        let mut rng = Rng::new(16);
+        let x: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+        let mut acts = PreparedActivations::new();
+        acts.begin_input();
+        let mut out_a = vec![0f32; n * m];
+        {
+            let batch = acts.get_or_prepare(kern, &x, k, n, &pool);
+            matmul_prepared(kern, &packed, batch, &x, n, &mut out_a, &pool);
+        }
+        let mut out_b = vec![0f32; n * m];
+        {
+            let batch = acts.get_or_prepare(kern, &x, k, n, &pool);
+            matmul_prepared(kern, &packed, batch, &x, n, &mut out_b, &pool);
+        }
+        assert_eq!(out_a, out_b);
+        assert_eq!(acts.stats().misses, 1, "one prepare per input");
+        assert_eq!(acts.stats().hits, 1, "second consumer hits");
+        // A new input invalidates; the rebuild reuses the buffers.
+        acts.begin_input();
+        let x2: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+        {
+            let batch = acts.get_or_prepare(kern, &x2, k, n, &pool);
+            matmul_prepared(kern, &packed, batch, &x2, n, &mut out_b, &pool);
+        }
+        assert_eq!(acts.stats().misses, 2);
+        assert_eq!(acts.stats().buffer_reuses, 1, "steady-state rebuild is allocation-free");
+        let mut out_ref = vec![0f32; n * m];
+        matmul(kern, &packed, &x2, n, &mut out_ref, &pool);
+        assert_eq!(out_b, out_ref);
+    }
+
+    #[test]
+    fn quant_type_parse_round_trip() {
+        for qt in QuantType::ALL {
+            assert_eq!(QuantType::parse(qt.name()), Some(qt));
+        }
+        assert_eq!(QuantType::parse("tl2_0"), Some(QuantType::Tl20));
+        assert_eq!(QuantType::parse("nope"), None);
+    }
+
+    #[test]
+    fn library_table_has_expected_properties() {
+        let table = library_table();
+        assert_eq!(table.len(), QuantType::ALL.len());
+        let tl2 = table.iter().find(|i| i.name == "TL2_0").unwrap();
+        assert!(tl2.element_wise && tl2.class == KernelClass::LutBased && !tl2.lossless);
+        let i2s = table.iter().find(|i| i.name == "I2_S").unwrap();
+        assert!(i2s.lossless && i2s.class == KernelClass::MadBased);
+        let tmac = table.iter().find(|i| i.name == "TMAC").unwrap();
+        assert!(!tmac.element_wise);
+    }
+}

@@ -1,0 +1,1237 @@
+//! AVX2 vector paths for the ternary mpGEMM kernels.
+//!
+//! Two instruction families carry the speedup (paper §3.1.2, Table 4):
+//!
+//! * **LUT gathers** — `_mm_shuffle_epi8` performs 16 parallel lookups
+//!   into one register-resident 16-entry table. The tables are laid out
+//!   per group (the register-length tiling of §3.1.2), so a single
+//!   shuffle cannot serve two groups; instead the accumulation is tiled
+//!   over **16 output rows at a time**: for each packed byte position
+//!   the 16 rows' code bytes are gathered into one vector, and the two
+//!   groups that byte covers are resolved with two shuffles. int16
+//!   (lossless) tables are split on the fly into low/high byte planes —
+//!   the pack-and-unpack technique of §3.2.1 — so each half is again
+//!   one shuffle wide.
+//! * **Widening MADs** — I2_S expands 2-bit codes to unsigned bytes and
+//!   feeds `_mm256_maddubs_epi16` (u8×i8 → pairwise i16; products are
+//!   ≤ 3·127 so the pairwise sum cannot saturate), then widens through
+//!   `_mm256_madd_epi16` into i32 accumulators.
+//!
+//! **Bit-identity contract**: every function here returns exactly what
+//! the scalar path returns. All integer accumulation is
+//! reassociation-free by construction; the only floating-point folds
+//! (per-block scales in the `_0` variants, the final `combined` factor)
+//! happen in the same order, with the same `as f32` conversions and
+//! separate mul/add (Rust does not contract into FMA), as the scalar
+//! code. `rust/tests/simd_identity.rs` enforces the contract.
+//!
+//! Row tiles smaller than 16 fall back to the scalar per-row routines,
+//! which keeps every (m, k, n) shape exact without padded loads.
+
+use std::ops::Range;
+
+use crate::kernels::simd::SimdLevel;
+use crate::kernels::sparse::{self, SparseIndex, TileBits};
+use crate::kernels::tl1::{self, LUT_W};
+use crate::kernels::tl2::{self, Tl2Layout};
+
+#[cfg(target_arch = "x86_64")]
+use core::arch::x86_64::*;
+
+/// Rows processed per vector pass: one `pshufb` lane per output row.
+pub const ROW_TILE: usize = 16;
+
+/// Gather the byte at packed-row offset `b` from 16 consecutive weight
+/// rows starting at `r0`.
+///
+/// # Safety
+/// `data` must hold at least `(r0 + 16) * row_bytes` bytes and
+/// `b < row_bytes`.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn gather16(data: &[u8], row_bytes: usize, r0: usize, b: usize) -> [u8; 16] {
+    debug_assert!((r0 + ROW_TILE) * row_bytes <= data.len());
+    let mut idx = [0u8; 16];
+    for (r, slot) in idx.iter_mut().enumerate() {
+        *slot = *data.get_unchecked((r0 + r) * row_bytes + b);
+    }
+    idx
+}
+
+/// Split 16 packed code bytes into their low and high nibbles.
+///
+/// # Safety
+/// Requires AVX2.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn nibbles(bytes: &[u8; 16]) -> (__m128i, __m128i) {
+    let v = _mm_loadu_si128(bytes.as_ptr() as *const __m128i);
+    let mask = _mm_set1_epi8(0x0f);
+    let lo = _mm_and_si128(v, mask);
+    let hi = _mm_and_si128(_mm_srli_epi16::<4>(v), mask);
+    (lo, hi)
+}
+
+/// 16 parallel lookups into a 16-entry int8 table (one `vpshufb`).
+/// Codes are < 16, so the shuffle's sign-bit zeroing never triggers.
+///
+/// # Safety
+/// Requires AVX2; `table` must point at 16 readable `i8` values.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn lut16_i8(table: *const i8, nib: __m128i) -> [i8; 16] {
+    let t = _mm_loadu_si128(table as *const __m128i);
+    let mut out = [0i8; 16];
+    _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, _mm_shuffle_epi8(t, nib));
+    out
+}
+
+/// 16 parallel lookups into a 16-entry int16 table: the table is split
+/// into low/high byte planes (pack), each plane is one shuffle, and the
+/// bytes are re-interleaved (unpack) into the 16-bit entries.
+///
+/// # Safety
+/// Requires AVX2; `table` must point at 16 readable `i16` values.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn lut16_i16(table: *const i16, nib: __m128i) -> [i16; 16] {
+    let a = _mm_loadu_si128(table as *const __m128i); // entries 0..8
+    let b = _mm_loadu_si128((table as *const __m128i).add(1)); // entries 8..16
+    let ff = _mm_set1_epi16(0x00ff);
+    // Low/high byte planes; values are masked to 0..=255 before the
+    // unsigned-saturating pack, so the pack is exact.
+    let lo_plane = _mm_packus_epi16(_mm_and_si128(a, ff), _mm_and_si128(b, ff));
+    let hi_plane = _mm_packus_epi16(_mm_srli_epi16::<8>(a), _mm_srli_epi16::<8>(b));
+    let lo = _mm_shuffle_epi8(lo_plane, nib);
+    let hi = _mm_shuffle_epi8(hi_plane, nib);
+    let mut out = [0i16; 16];
+    let p = out.as_mut_ptr() as *mut __m128i;
+    _mm_storeu_si128(p, _mm_unpacklo_epi8(lo, hi));
+    _mm_storeu_si128(p.add(1), _mm_unpackhi_epi8(lo, hi));
+    out
+}
+
+/// Pair lookup for one packed byte: low nibble into `tables[g]`, high
+/// nibble into `tables[g+1]`, for 16 rows at once (int16 tables).
+///
+/// # Safety
+/// Requires AVX2; `t0` and `t1` must each point at 16 readable `i16`s.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn lut_pair_i16(t0: *const i16, t1: *const i16, bytes: &[u8; 16]) -> ([i16; 16], [i16; 16]) {
+    let (lo, hi) = nibbles(bytes);
+    (lut16_i16(t0, lo), lut16_i16(t1, hi))
+}
+
+/// Pair lookup for one packed byte (int8 tables).
+///
+/// # Safety
+/// Requires AVX2; `t0` and `t1` must each point at 16 readable `i8`s.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn lut_pair_i8(t0: *const i8, t1: *const i8, bytes: &[u8; 16]) -> ([i8; 16], [i8; 16]) {
+    let (lo, hi) = nibbles(bytes);
+    (lut16_i8(t0, lo), lut16_i8(t1, hi))
+}
+
+/// AVX2 accumulation over int16 LUTs with two groups per byte — the
+/// shared hot loop of TL1_1 and ELUT_C4.
+///
+/// # Safety
+/// Caller must have verified AVX2 at run time. `data` must hold
+/// `rows.end` packed rows of `row_bytes` bytes; `tables` must hold
+/// `2 * row_bytes` tables of [`LUT_W`] `i16` entries; `out.len()` must
+/// equal `rows.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn gemv_rows_lut16(
+    data: &[u8],
+    row_bytes: usize,
+    tables: &[i16],
+    combined: f32,
+    out: &mut [f32],
+    rows: Range<usize>,
+) {
+    debug_assert_eq!(out.len(), rows.len());
+    debug_assert!(tables.len() >= 2 * row_bytes * LUT_W);
+    let n = rows.len();
+    let full = n - n % ROW_TILE;
+    let mut i = 0usize;
+    while i < full {
+        let base = rows.start + i;
+        let mut acc = [0i32; ROW_TILE];
+        for b in 0..row_bytes {
+            let idx = gather16(data, row_bytes, base, b);
+            let t0 = tables.as_ptr().add(2 * b * LUT_W);
+            let t1 = tables.as_ptr().add((2 * b + 1) * LUT_W);
+            let (v0, v1) = lut_pair_i16(t0, t1, &idx);
+            for r in 0..ROW_TILE {
+                acc[r] += v0[r] as i32 + v1[r] as i32;
+            }
+        }
+        for r in 0..ROW_TILE {
+            out[i + r] = acc[r] as f32 * combined;
+        }
+        i += ROW_TILE;
+    }
+    for r in i..n {
+        let row = rows.start + r;
+        let wrow = &data[row * row_bytes..(row + 1) * row_bytes];
+        out[r] = tl1::gemv_row_lut16(wrow, tables) as f32 * combined;
+    }
+}
+
+/// AVX2 accumulation over int8 LUTs with per-block scales — TL1_0's hot
+/// loop. Block flush order matches the scalar path exactly.
+///
+/// # Safety
+/// Caller must have verified AVX2 at run time. `data` must hold
+/// `rows.end` packed rows of `row_bytes` bytes; `tables`/`block_scales`
+/// must match `row_bytes` and `block_groups` as produced by the TL1
+/// prepare path; `out.len()` must equal `rows.len()`.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub unsafe fn gemv_rows_lut8(
+    data: &[u8],
+    row_bytes: usize,
+    tables: &[i8],
+    block_scales: &[f32],
+    block_groups: usize,
+    combined: f32,
+    out: &mut [f32],
+    rows: Range<usize>,
+) {
+    debug_assert_eq!(out.len(), rows.len());
+    let bytes_per_block = block_groups / 2;
+    let n = rows.len();
+    let full = n - n % ROW_TILE;
+    let mut i = 0usize;
+    while i < full {
+        let base = rows.start + i;
+        let mut facc = [0f32; ROW_TILE];
+        let mut b = 0usize;
+        let mut blk = 0usize;
+        while b < row_bytes {
+            let blk_bytes = bytes_per_block.min(row_bytes - b);
+            let tbase = blk * block_groups * LUT_W;
+            let mut acc = [0i32; ROW_TILE];
+            for bb in 0..blk_bytes {
+                let idx = gather16(data, row_bytes, base, b + bb);
+                let t0 = tables.as_ptr().add(tbase + 2 * bb * LUT_W);
+                let t1 = tables.as_ptr().add(tbase + (2 * bb + 1) * LUT_W);
+                let (v0, v1) = lut_pair_i8(t0, t1, &idx);
+                for r in 0..ROW_TILE {
+                    acc[r] += v0[r] as i32 + v1[r] as i32;
+                }
+            }
+            let bs = block_scales[blk];
+            for r in 0..ROW_TILE {
+                facc[r] += acc[r] as f32 * bs;
+            }
+            b += blk_bytes;
+            blk += 1;
+        }
+        for r in 0..ROW_TILE {
+            out[i + r] = facc[r] * combined;
+        }
+        i += ROW_TILE;
+    }
+    for r in i..n {
+        let row = rows.start + r;
+        let wrow = &data[row * row_bytes..(row + 1) * row_bytes];
+        out[r] = tl1::gemv_row_lut8(wrow, tables, block_scales, block_groups) * combined;
+    }
+}
+
+/// AVX2 TL2 lossless accumulation: g=3 region with the mirror sign
+/// plane (conditional negate under a mask — integer-equal to the scalar
+/// dual-accumulator form), then the TL1 g=2 tail.
+///
+/// # Safety
+/// Caller must have verified AVX2 at run time. `data` must hold
+/// `rows.end` packed TL2 rows matching `layout`; `tables` must hold
+/// `(n3 + n2) * LUT_W` `i16` entries; `out.len()` must equal
+/// `rows.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn gemv_rows_tl2_i16(
+    data: &[u8],
+    layout: &Tl2Layout,
+    tables: &[i16],
+    combined: f32,
+    out: &mut [f32],
+    rows: Range<usize>,
+) {
+    debug_assert_eq!(out.len(), rows.len());
+    let row_bytes = layout.row_bytes();
+    let n3 = layout.n3();
+    let tl1_off = layout.idx_bytes + layout.sign_bytes;
+    let n = rows.len();
+    let full = n - n % ROW_TILE;
+    let mut i = 0usize;
+    while i < full {
+        let base = rows.start + i;
+        let mut acc = [0i32; ROW_TILE];
+        for s in 0..layout.sign_bytes {
+            let sb = gather16(data, row_bytes, base, layout.idx_bytes + s);
+            let g = 8 * s;
+            for j in 0..4 {
+                let idx = gather16(data, row_bytes, base, 4 * s + j);
+                let t0 = tables.as_ptr().add((g + 2 * j) * LUT_W);
+                let t1 = tables.as_ptr().add((g + 2 * j + 1) * LUT_W);
+                let (v0, v1) = lut_pair_i16(t0, t1, &idx);
+                for r in 0..ROW_TILE {
+                    let m0 = -(((sb[r] >> (2 * j)) & 1) as i32);
+                    let m1 = -(((sb[r] >> (2 * j + 1)) & 1) as i32);
+                    acc[r] += ((v0[r] as i32) ^ m0) - m0;
+                    acc[r] += ((v1[r] as i32) ^ m1) - m1;
+                }
+            }
+        }
+        for bb in 0..layout.tl1_bytes {
+            let idx = gather16(data, row_bytes, base, tl1_off + bb);
+            let t0 = tables.as_ptr().add((n3 + 2 * bb) * LUT_W);
+            let t1 = tables.as_ptr().add((n3 + 2 * bb + 1) * LUT_W);
+            let (v0, v1) = lut_pair_i16(t0, t1, &idx);
+            for r in 0..ROW_TILE {
+                acc[r] += v0[r] as i32 + v1[r] as i32;
+            }
+        }
+        for r in 0..ROW_TILE {
+            out[i + r] = acc[r] as f32 * combined;
+        }
+        i += ROW_TILE;
+    }
+    for r in i..n {
+        let row = rows.start + r;
+        let wrow = &data[row * row_bytes..(row + 1) * row_bytes];
+        out[r] = tl2::gemv_row_tl2_i16(wrow, layout, tables) as f32 * combined;
+    }
+}
+
+/// AVX2 TL2 fast-path accumulation (int8 tables, per-block scales).
+/// Blocks flush at sign-byte boundaries in the g=3 region, the TL1 tail
+/// continues the open block, and a trailing partial block flushes last —
+/// byte-for-byte the scalar flush schedule.
+///
+/// # Safety
+/// Caller must have verified AVX2 at run time. `data` must hold
+/// `rows.end` packed TL2 rows matching `layout`; `tables`/`block_scales`
+/// must match the TL2 `_0` prepare path with `block_groups` groups per
+/// scale; `out.len()` must equal `rows.len()`.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub unsafe fn gemv_rows_tl2_i8(
+    data: &[u8],
+    layout: &Tl2Layout,
+    tables: &[i8],
+    block_scales: &[f32],
+    block_groups: usize,
+    combined: f32,
+    out: &mut [f32],
+    rows: Range<usize>,
+) {
+    debug_assert_eq!(out.len(), rows.len());
+    let row_bytes = layout.row_bytes();
+    let n3 = layout.n3();
+    let tl1_off = layout.idx_bytes + layout.sign_bytes;
+    let n = rows.len();
+    let full = n - n % ROW_TILE;
+    let mut i = 0usize;
+    while i < full {
+        let base = rows.start + i;
+        let mut facc = [0f32; ROW_TILE];
+        let mut acc = [0i32; ROW_TILE];
+        let mut blk = 0usize;
+        let mut in_blk = 0usize;
+        for s in 0..layout.sign_bytes {
+            let sb = gather16(data, row_bytes, base, layout.idx_bytes + s);
+            let g = 8 * s;
+            for j in 0..4 {
+                let idx = gather16(data, row_bytes, base, 4 * s + j);
+                let t0 = tables.as_ptr().add((g + 2 * j) * LUT_W);
+                let t1 = tables.as_ptr().add((g + 2 * j + 1) * LUT_W);
+                let (v0, v1) = lut_pair_i8(t0, t1, &idx);
+                for r in 0..ROW_TILE {
+                    let m0 = -(((sb[r] >> (2 * j)) & 1) as i32);
+                    let m1 = -(((sb[r] >> (2 * j + 1)) & 1) as i32);
+                    acc[r] += ((v0[r] as i32) ^ m0) - m0;
+                    acc[r] += ((v1[r] as i32) ^ m1) - m1;
+                }
+            }
+            in_blk += 8;
+            if in_blk == block_groups {
+                let bs = block_scales[blk];
+                for r in 0..ROW_TILE {
+                    facc[r] += acc[r] as f32 * bs;
+                }
+                acc = [0i32; ROW_TILE];
+                blk += 1;
+                in_blk = 0;
+            }
+        }
+        for bb in 0..layout.tl1_bytes {
+            let idx = gather16(data, row_bytes, base, tl1_off + bb);
+            let t0 = tables.as_ptr().add((n3 + 2 * bb) * LUT_W);
+            let t1 = tables.as_ptr().add((n3 + 2 * bb + 1) * LUT_W);
+            let (v0, v1) = lut_pair_i8(t0, t1, &idx);
+            for r in 0..ROW_TILE {
+                acc[r] += v0[r] as i32 + v1[r] as i32;
+            }
+            in_blk += 2;
+            if in_blk == block_groups {
+                let bs = block_scales[blk];
+                for r in 0..ROW_TILE {
+                    facc[r] += acc[r] as f32 * bs;
+                }
+                acc = [0i32; ROW_TILE];
+                blk += 1;
+                in_blk = 0;
+            }
+        }
+        if in_blk > 0 {
+            let bs = block_scales[blk];
+            for r in 0..ROW_TILE {
+                facc[r] += acc[r] as f32 * bs;
+            }
+        }
+        for r in 0..ROW_TILE {
+            out[i + r] = facc[r] * combined;
+        }
+        i += ROW_TILE;
+    }
+    for r in i..n {
+        let row = rows.start + r;
+        let wrow = &data[row * row_bytes..(row + 1) * row_bytes];
+        out[r] = tl2::gemv_row_tl2_i8(wrow, layout, tables, block_scales, block_groups) * combined;
+    }
+}
+
+/// AVX2 ELUT_C5 accumulation: mirror-consolidated int16 tables with one
+/// group per nibble and a 1-bit sign plane.
+///
+/// # Safety
+/// Caller must have verified AVX2 at run time. `data` must hold
+/// `rows.end` packed ELUT_C5 rows (`idx_bytes` nibble bytes followed by
+/// `idx_bytes / 4` sign bytes per row); `tables` must hold
+/// `2 * idx_bytes` tables of [`LUT_W`] `i16` entries; `out.len()` must
+/// equal `rows.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn gemv_rows_elut5(
+    data: &[u8],
+    idx_bytes: usize,
+    tables: &[i16],
+    combined: f32,
+    out: &mut [f32],
+    rows: Range<usize>,
+) {
+    debug_assert_eq!(out.len(), rows.len());
+    debug_assert_eq!(idx_bytes % 4, 0, "K % 16 == 0 keeps the sign plane byte-aligned");
+    let row_bytes = idx_bytes + idx_bytes / 4;
+    let n = rows.len();
+    let full = n - n % ROW_TILE;
+    let mut i = 0usize;
+    while i < full {
+        let base = rows.start + i;
+        let mut acc = [0i32; ROW_TILE];
+        for b in 0..idx_bytes {
+            let idx = gather16(data, row_bytes, base, b);
+            let sb = gather16(data, row_bytes, base, idx_bytes + b / 4);
+            let bit0 = 2 * (b % 4);
+            let t0 = tables.as_ptr().add(2 * b * LUT_W);
+            let t1 = tables.as_ptr().add((2 * b + 1) * LUT_W);
+            let (v0, v1) = lut_pair_i16(t0, t1, &idx);
+            for r in 0..ROW_TILE {
+                let m0 = -(((sb[r] >> bit0) & 1) as i32);
+                let m1 = -(((sb[r] >> (bit0 + 1)) & 1) as i32);
+                acc[r] += ((v0[r] as i32) ^ m0) - m0;
+                acc[r] += ((v1[r] as i32) ^ m1) - m1;
+            }
+        }
+        for r in 0..ROW_TILE {
+            out[i + r] = acc[r] as f32 * combined;
+        }
+        i += ROW_TILE;
+    }
+    for r in i..n {
+        let row = rows.start + r;
+        let wrow = &data[row * row_bytes..(row + 1) * row_bytes];
+        out[r] = crate::kernels::elut::gemv_row_elut5(wrow, idx_bytes, tables) as f32 * combined;
+    }
+}
+
+/// AVX2 I2_S row accumulation: 2-bit codes expanded to unsigned bytes,
+/// one `maddubs` + one `madd` per 32 weights, `Σ a·code − Σ a` overall.
+///
+/// # Safety
+/// Caller must have verified AVX2 at run time. `wrow.len() * 4` must
+/// equal `aq.len()`, and `act_sum` must be the sum of `aq`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn gemv_row_i2s(wrow: &[u8], aq: &[i8], act_sum: i32) -> i32 {
+    debug_assert_eq!(wrow.len() * 4, aq.len());
+    // Deinterleave control: within each 16-activation half, activations
+    // are regrouped by in-byte weight position (j = 0,1,2,3) so they
+    // line up with the mask-expanded code bytes below.
+    let ctrl = _mm256_setr_epi8(
+        0, 4, 8, 12, 1, 5, 9, 13, 2, 6, 10, 14, 3, 7, 11, 15, 0, 4, 8, 12, 1, 5, 9, 13, 2, 6, 10,
+        14, 3, 7, 11, 15,
+    );
+    let ones = _mm256_set1_epi16(1);
+    let mut accv = _mm256_setzero_si256();
+    let mut chunks = wrow.chunks_exact(8);
+    let mut k = 0usize;
+    for ch in &mut chunks {
+        let w0 = u32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+        let w1 = u32::from_le_bytes([ch[4], ch[5], ch[6], ch[7]]);
+        let m = 0x0303_0303u32;
+        // Lane l of the low half holds the codes for weight position
+        // l within each of w0's four bytes; the high half mirrors w1.
+        let codes = _mm256_set_epi32(
+            ((w1 >> 6) & m) as i32,
+            ((w1 >> 4) & m) as i32,
+            ((w1 >> 2) & m) as i32,
+            (w1 & m) as i32,
+            ((w0 >> 6) & m) as i32,
+            ((w0 >> 4) & m) as i32,
+            ((w0 >> 2) & m) as i32,
+            (w0 & m) as i32,
+        );
+        let acts = _mm256_loadu_si256(aq.as_ptr().add(k) as *const __m256i);
+        let acts = _mm256_shuffle_epi8(acts, ctrl);
+        // u8 codes (≤3) × i8 activations: pairwise i16 sums ≤ 762, no
+        // saturation; widen to i32 via madd against ones.
+        let prod = _mm256_maddubs_epi16(codes, acts);
+        accv = _mm256_add_epi32(accv, _mm256_madd_epi16(prod, ones));
+        k += 32;
+    }
+    let lo = _mm256_castsi256_si128(accv);
+    let hi = _mm256_extracti128_si256::<1>(accv);
+    let s = _mm_add_epi32(lo, hi);
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0x4e>(s));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0xb1>(s));
+    let mut acc = _mm_cvtsi128_si32(s);
+    for &byte in chunks.remainder() {
+        for j in 0..4 {
+            acc += ((byte >> (2 * j)) & 0x3) as i32 * *aq.get_unchecked(k + j) as i32;
+        }
+        k += 4;
+    }
+    acc - act_sum
+}
+
+/// AVX2 I2_S over a row range (the `gemv_rows` shape).
+///
+/// # Safety
+/// Caller must have verified AVX2 at run time. `data` must hold
+/// `rows.end` packed rows of `aq.len() / 4` bytes; `act_sum` must be
+/// the sum of `aq`; `out.len()` must equal `rows.len()`.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub unsafe fn gemv_rows_i2s(
+    data: &[u8],
+    aq: &[i8],
+    act_sum: i32,
+    combined: f32,
+    out: &mut [f32],
+    rows: Range<usize>,
+) {
+    let row_bytes = aq.len() / 4;
+    for (o, r) in out.iter_mut().zip(rows) {
+        let wrow = &data[r * row_bytes..(r + 1) * row_bytes];
+        *o = gemv_row_i2s(wrow, aq, act_sum) as f32 * combined;
+    }
+}
+
+/// AVX2 activation quantization: absmax reduction, then round-clamp-pack
+/// to int8 — the prepare-phase half of every lossless kernel.
+///
+/// Bit-identical to the scalar `quantize_act_int8_into` for finite
+/// inputs: f32 `max` is order-free over non-negative finite values, the
+/// `v * scale` multiply is the same single f32 op, and round-half-away-
+/// from-zero is emulated exactly as truncate plus a conditional ±1 when
+/// `|frac| >= 0.5` (`_mm256_round_ps`'s nearest mode is round-to-even,
+/// which would NOT match Rust's `round`). The final `cvtps` sees an
+/// integral value, so its nearest-even mode is exact too.
+///
+/// # Safety
+/// Caller must have verified AVX2 at run time and pass `q.len() ==
+/// x.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn quantize_act_int8(x: &[f32], q: &mut [i8]) -> (f32, i32) {
+    debug_assert_eq!(q.len(), x.len());
+    let sign_mask = _mm256_set1_ps(-0.0);
+    let mut vmax = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 8 <= x.len() {
+        let v = _mm256_loadu_ps(x.as_ptr().add(i));
+        vmax = _mm256_max_ps(vmax, _mm256_andnot_ps(sign_mask, v));
+        i += 8;
+    }
+    let mut lanes = [0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), vmax);
+    let mut max_abs = lanes.iter().fold(0.0f32, |a, &v| a.max(v));
+    for &v in &x[i..] {
+        max_abs = max_abs.max(v.abs());
+    }
+    let max_abs = max_abs.max(1e-5);
+    let scale = 127.0 / max_abs;
+
+    let vscale = _mm256_set1_ps(scale);
+    let lim = _mm256_set1_ps(127.0);
+    let nlim = _mm256_set1_ps(-127.0);
+    let half = _mm256_set1_ps(0.5);
+    let one = _mm256_set1_ps(1.0);
+    let mut vsum = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i + 8 <= x.len() {
+        let v = _mm256_mul_ps(_mm256_loadu_ps(x.as_ptr().add(i)), vscale);
+        // Round half away from zero: trunc, then +-1 where |frac| >= 0.5.
+        let t = _mm256_round_ps::<{ _MM_FROUND_TO_ZERO | _MM_FROUND_NO_EXC }>(v);
+        let frac = _mm256_sub_ps(v, t);
+        let afrac = _mm256_andnot_ps(sign_mask, frac);
+        let ge = _mm256_cmp_ps::<_CMP_GE_OQ>(afrac, half);
+        let signed_one = _mm256_or_ps(one, _mm256_and_ps(sign_mask, v));
+        let r = _mm256_add_ps(t, _mm256_and_ps(ge, signed_one));
+        let r = _mm256_min_ps(_mm256_max_ps(r, nlim), lim);
+        let qi = _mm256_cvtps_epi32(r);
+        vsum = _mm256_add_epi32(vsum, qi);
+        let lo = _mm256_castsi256_si128(qi);
+        let hi = _mm256_extracti128_si256::<1>(qi);
+        // Values are in [-127, 127], so neither saturating pack clips.
+        let w16 = _mm_packs_epi32(lo, hi);
+        let b8 = _mm_packs_epi16(w16, w16);
+        _mm_storel_epi64(q.as_mut_ptr().add(i) as *mut __m128i, b8);
+        i += 8;
+    }
+    let mut sums = [0i32; 8];
+    _mm256_storeu_si256(sums.as_mut_ptr() as *mut __m256i, vsum);
+    let mut sum: i32 = sums.iter().sum();
+    for (qv, &v) in q[i..].iter_mut().zip(x[i..].iter()) {
+        let t = (v * scale).round().clamp(-127.0, 127.0) as i8;
+        *qv = t;
+        sum += t as i32;
+    }
+    (scale, sum)
+}
+
+/// Sparse [`gemv_rows_lut16`]: the 16-row tile skips a weight block only
+/// when *every* row in the tile has the block's bit clear (one OR over
+/// the tile's bitmap words, recomputed lazily per 64 blocks). Rows whose
+/// individual block is zero but whose tile-mates are not still run the
+/// dense lookups — their contributions are exactly 0, so the result
+/// stays bit-identical to both the dense and the scalar-sparse paths.
+///
+/// # Safety
+/// Same contract as [`gemv_rows_lut16`]; `sidx` must have been built for
+/// this tensor's rows with [`tl1::SPARSE_BLOCK_WEIGHTS`]-weight blocks.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub unsafe fn gemv_rows_lut16_sparse(
+    data: &[u8],
+    row_bytes: usize,
+    tables: &[i16],
+    combined: f32,
+    out: &mut [f32],
+    rows: Range<usize>,
+    sidx: &SparseIndex,
+) {
+    debug_assert_eq!(out.len(), rows.len());
+    const BLOCK_BYTES: usize = tl1::SPARSE_BLOCK_WEIGHTS / 4;
+    let nblocks = sidx.blocks_per_row();
+    let n = rows.len();
+    let full = n - n % ROW_TILE;
+    let mut elided = 0u64;
+    let mut i = 0usize;
+    while i < full {
+        let base = rows.start + i;
+        let mut bits = TileBits::new(sidx, base, ROW_TILE);
+        let mut acc = [0i32; ROW_TILE];
+        for blk in 0..nblocks {
+            if !bits.any_nonzero(blk) {
+                elided += ROW_TILE as u64;
+                continue;
+            }
+            let b0 = blk * BLOCK_BYTES;
+            let b1 = (b0 + BLOCK_BYTES).min(row_bytes);
+            for b in b0..b1 {
+                let idx = gather16(data, row_bytes, base, b);
+                let t0 = tables.as_ptr().add(2 * b * LUT_W);
+                let t1 = tables.as_ptr().add((2 * b + 1) * LUT_W);
+                let (v0, v1) = lut_pair_i16(t0, t1, &idx);
+                for r in 0..ROW_TILE {
+                    acc[r] += v0[r] as i32 + v1[r] as i32;
+                }
+            }
+        }
+        for r in 0..ROW_TILE {
+            out[i + r] = acc[r] as f32 * combined;
+        }
+        i += ROW_TILE;
+    }
+    for r in i..n {
+        let row = rows.start + r;
+        let wrow = &data[row * row_bytes..(row + 1) * row_bytes];
+        out[r] =
+            tl1::gemv_row_lut16_sparse(wrow, tables, sidx, row, &mut elided) as f32 * combined;
+    }
+    sparse::note_elided(SimdLevel::Avx2, elided);
+}
+
+/// Sparse [`gemv_rows_lut8`]: the elision block *is* the requantization
+/// scale block, so a tile-skipped block also skips its `0 · block_scale`
+/// folds (`+0.0` — block scales are non-negative), keeping the f32
+/// accumulators bit-identical to the dense flush schedule.
+///
+/// # Safety
+/// Same contract as [`gemv_rows_lut8`]; `sidx` blocks must coincide with
+/// the requantization scale blocks (`block_groups` groups each).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub unsafe fn gemv_rows_lut8_sparse(
+    data: &[u8],
+    row_bytes: usize,
+    tables: &[i8],
+    block_scales: &[f32],
+    block_groups: usize,
+    combined: f32,
+    out: &mut [f32],
+    rows: Range<usize>,
+    sidx: &SparseIndex,
+) {
+    debug_assert_eq!(out.len(), rows.len());
+    let bytes_per_block = block_groups / 2;
+    let nblocks = sidx.blocks_per_row();
+    let n = rows.len();
+    let full = n - n % ROW_TILE;
+    let mut elided = 0u64;
+    let mut i = 0usize;
+    while i < full {
+        let base = rows.start + i;
+        let mut bits = TileBits::new(sidx, base, ROW_TILE);
+        let mut facc = [0f32; ROW_TILE];
+        for blk in 0..nblocks {
+            if !bits.any_nonzero(blk) {
+                elided += ROW_TILE as u64;
+                continue;
+            }
+            let b0 = blk * bytes_per_block;
+            let blk_bytes = bytes_per_block.min(row_bytes - b0);
+            let tbase = blk * block_groups * LUT_W;
+            let mut acc = [0i32; ROW_TILE];
+            for bb in 0..blk_bytes {
+                let idx = gather16(data, row_bytes, base, b0 + bb);
+                let t0 = tables.as_ptr().add(tbase + 2 * bb * LUT_W);
+                let t1 = tables.as_ptr().add(tbase + (2 * bb + 1) * LUT_W);
+                let (v0, v1) = lut_pair_i8(t0, t1, &idx);
+                for r in 0..ROW_TILE {
+                    acc[r] += v0[r] as i32 + v1[r] as i32;
+                }
+            }
+            let bs = block_scales[blk];
+            for r in 0..ROW_TILE {
+                facc[r] += acc[r] as f32 * bs;
+            }
+        }
+        for r in 0..ROW_TILE {
+            out[i + r] = facc[r] * combined;
+        }
+        i += ROW_TILE;
+    }
+    for r in i..n {
+        let row = rows.start + r;
+        let wrow = &data[row * row_bytes..(row + 1) * row_bytes];
+        out[r] =
+            tl1::gemv_row_lut8_sparse(wrow, tables, block_scales, block_groups, sidx, row, &mut elided)
+                * combined;
+    }
+    sparse::note_elided(SimdLevel::Avx2, elided);
+}
+
+/// Sparse [`gemv_rows_tl2_i16`]: blocks stride the unified group
+/// sequence ([`Tl2Layout::sparse_bounds`]). Block boundaries land on
+/// whole sign bytes in the g=3 region (`LUT_BLOCK_GROUPS` is a multiple
+/// of 8 and `n3` is a multiple of 8) and on whole tail bytes in the TL1
+/// region, so a nonzero block replays the dense gather schedule exactly
+/// over its byte range — including blocks that span the g=3 → tail
+/// boundary.
+///
+/// # Safety
+/// Same contract as [`gemv_rows_tl2_i16`]; `sidx` must use the blocks of
+/// [`Tl2Layout::sparse_bounds`].
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub unsafe fn gemv_rows_tl2_i16_sparse(
+    data: &[u8],
+    layout: &Tl2Layout,
+    tables: &[i16],
+    combined: f32,
+    out: &mut [f32],
+    rows: Range<usize>,
+    sidx: &SparseIndex,
+) {
+    debug_assert_eq!(out.len(), rows.len());
+    let row_bytes = layout.row_bytes();
+    let n3 = layout.n3();
+    let groups = n3 + layout.n2();
+    let tl1_off = layout.idx_bytes + layout.sign_bytes;
+    let nblocks = sidx.blocks_per_row();
+    let n = rows.len();
+    let full = n - n % ROW_TILE;
+    let mut elided = 0u64;
+    let mut i = 0usize;
+    while i < full {
+        let base = rows.start + i;
+        let mut bits = TileBits::new(sidx, base, ROW_TILE);
+        let mut acc = [0i32; ROW_TILE];
+        for blk in 0..nblocks {
+            if !bits.any_nonzero(blk) {
+                elided += ROW_TILE as u64;
+                continue;
+            }
+            let g0 = blk * tl1::LUT_BLOCK_GROUPS;
+            let g1 = (g0 + tl1::LUT_BLOCK_GROUPS).min(groups);
+            let mut g = g0;
+            while g < g1.min(n3) {
+                let s = g / 8;
+                let sb = gather16(data, row_bytes, base, layout.idx_bytes + s);
+                for j in 0..4 {
+                    let idx = gather16(data, row_bytes, base, 4 * s + j);
+                    let t0 = tables.as_ptr().add((g + 2 * j) * LUT_W);
+                    let t1 = tables.as_ptr().add((g + 2 * j + 1) * LUT_W);
+                    let (v0, v1) = lut_pair_i16(t0, t1, &idx);
+                    for r in 0..ROW_TILE {
+                        let m0 = -(((sb[r] >> (2 * j)) & 1) as i32);
+                        let m1 = -(((sb[r] >> (2 * j + 1)) & 1) as i32);
+                        acc[r] += ((v0[r] as i32) ^ m0) - m0;
+                        acc[r] += ((v1[r] as i32) ^ m1) - m1;
+                    }
+                }
+                g += 8;
+            }
+            let mut tg = g.max(n3) - n3;
+            let tg_end = g1.saturating_sub(n3);
+            while tg < tg_end {
+                let bb = tg / 2;
+                let idx = gather16(data, row_bytes, base, tl1_off + bb);
+                let t0 = tables.as_ptr().add((n3 + 2 * bb) * LUT_W);
+                let t1 = tables.as_ptr().add((n3 + 2 * bb + 1) * LUT_W);
+                let (v0, v1) = lut_pair_i16(t0, t1, &idx);
+                for r in 0..ROW_TILE {
+                    acc[r] += v0[r] as i32 + v1[r] as i32;
+                }
+                tg += 2;
+            }
+        }
+        for r in 0..ROW_TILE {
+            out[i + r] = acc[r] as f32 * combined;
+        }
+        i += ROW_TILE;
+    }
+    for r in i..n {
+        let row = rows.start + r;
+        let wrow = &data[row * row_bytes..(row + 1) * row_bytes];
+        out[r] = tl2::gemv_row_tl2_i16_sparse(wrow, layout, tables, sidx, row, &mut elided) as f32
+            * combined;
+    }
+    sparse::note_elided(SimdLevel::Avx2, elided);
+}
+
+/// Sparse [`gemv_rows_tl2_i8`]: the elision block *is* the scale block
+/// (`block_groups == LUT_BLOCK_GROUPS`), so each nonzero block runs the
+/// dense gathers over its group range and folds one scale; skipped
+/// blocks drop a `+0.0` fold, keeping f32 bit-identity.
+///
+/// # Safety
+/// Same contract as [`gemv_rows_tl2_i8`]; `sidx` must use the blocks of
+/// [`Tl2Layout::sparse_bounds`] with `block_groups` groups per block.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub unsafe fn gemv_rows_tl2_i8_sparse(
+    data: &[u8],
+    layout: &Tl2Layout,
+    tables: &[i8],
+    block_scales: &[f32],
+    block_groups: usize,
+    combined: f32,
+    out: &mut [f32],
+    rows: Range<usize>,
+    sidx: &SparseIndex,
+) {
+    debug_assert_eq!(out.len(), rows.len());
+    debug_assert_eq!(block_groups % 8, 0, "blocks must cover whole sign bytes");
+    let row_bytes = layout.row_bytes();
+    let n3 = layout.n3();
+    let groups = n3 + layout.n2();
+    let tl1_off = layout.idx_bytes + layout.sign_bytes;
+    let nblocks = sidx.blocks_per_row();
+    let n = rows.len();
+    let full = n - n % ROW_TILE;
+    let mut elided = 0u64;
+    let mut i = 0usize;
+    while i < full {
+        let base = rows.start + i;
+        let mut bits = TileBits::new(sidx, base, ROW_TILE);
+        let mut facc = [0f32; ROW_TILE];
+        for blk in 0..nblocks {
+            if !bits.any_nonzero(blk) {
+                elided += ROW_TILE as u64;
+                continue;
+            }
+            let g0 = blk * block_groups;
+            let g1 = (g0 + block_groups).min(groups);
+            let mut acc = [0i32; ROW_TILE];
+            let mut g = g0;
+            while g < g1.min(n3) {
+                let s = g / 8;
+                let sb = gather16(data, row_bytes, base, layout.idx_bytes + s);
+                for j in 0..4 {
+                    let idx = gather16(data, row_bytes, base, 4 * s + j);
+                    let t0 = tables.as_ptr().add((g + 2 * j) * LUT_W);
+                    let t1 = tables.as_ptr().add((g + 2 * j + 1) * LUT_W);
+                    let (v0, v1) = lut_pair_i8(t0, t1, &idx);
+                    for r in 0..ROW_TILE {
+                        let m0 = -(((sb[r] >> (2 * j)) & 1) as i32);
+                        let m1 = -(((sb[r] >> (2 * j + 1)) & 1) as i32);
+                        acc[r] += ((v0[r] as i32) ^ m0) - m0;
+                        acc[r] += ((v1[r] as i32) ^ m1) - m1;
+                    }
+                }
+                g += 8;
+            }
+            let mut tg = g.max(n3) - n3;
+            let tg_end = g1.saturating_sub(n3);
+            while tg < tg_end {
+                let bb = tg / 2;
+                let idx = gather16(data, row_bytes, base, tl1_off + bb);
+                let t0 = tables.as_ptr().add((n3 + 2 * bb) * LUT_W);
+                let t1 = tables.as_ptr().add((n3 + 2 * bb + 1) * LUT_W);
+                let (v0, v1) = lut_pair_i8(t0, t1, &idx);
+                for r in 0..ROW_TILE {
+                    acc[r] += v0[r] as i32 + v1[r] as i32;
+                }
+                tg += 2;
+            }
+            let bs = block_scales[blk];
+            for r in 0..ROW_TILE {
+                facc[r] += acc[r] as f32 * bs;
+            }
+        }
+        for r in 0..ROW_TILE {
+            out[i + r] = facc[r] * combined;
+        }
+        i += ROW_TILE;
+    }
+    for r in i..n {
+        let row = rows.start + r;
+        let wrow = &data[row * row_bytes..(row + 1) * row_bytes];
+        out[r] = tl2::gemv_row_tl2_i8_sparse(
+            wrow,
+            layout,
+            tables,
+            block_scales,
+            block_groups,
+            sidx,
+            row,
+            &mut elided,
+        ) * combined;
+    }
+    sparse::note_elided(SimdLevel::Avx2, elided);
+}
+
+/// Sparse [`gemv_rows_elut5`]: one block covers 16 index bytes (32
+/// groups), so the `b % 4` sign-byte addressing of the dense loop is
+/// preserved inside every block (`b0` is a multiple of 4).
+///
+/// # Safety
+/// Same contract as [`gemv_rows_elut5`]; `sidx` must use
+/// [`tl1::SPARSE_BLOCK_WEIGHTS`]-weight blocks.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub unsafe fn gemv_rows_elut5_sparse(
+    data: &[u8],
+    idx_bytes: usize,
+    tables: &[i16],
+    combined: f32,
+    out: &mut [f32],
+    rows: Range<usize>,
+    sidx: &SparseIndex,
+) {
+    debug_assert_eq!(out.len(), rows.len());
+    const BLOCK_IDX_BYTES: usize = tl1::SPARSE_BLOCK_WEIGHTS / 4;
+    let row_bytes = idx_bytes + idx_bytes / 4;
+    let nblocks = sidx.blocks_per_row();
+    let n = rows.len();
+    let full = n - n % ROW_TILE;
+    let mut elided = 0u64;
+    let mut i = 0usize;
+    while i < full {
+        let base = rows.start + i;
+        let mut bits = TileBits::new(sidx, base, ROW_TILE);
+        let mut acc = [0i32; ROW_TILE];
+        for blk in 0..nblocks {
+            if !bits.any_nonzero(blk) {
+                elided += ROW_TILE as u64;
+                continue;
+            }
+            let b0 = blk * BLOCK_IDX_BYTES;
+            let b1 = (b0 + BLOCK_IDX_BYTES).min(idx_bytes);
+            for b in b0..b1 {
+                let idx = gather16(data, row_bytes, base, b);
+                let sb = gather16(data, row_bytes, base, idx_bytes + b / 4);
+                let bit0 = 2 * (b % 4);
+                let t0 = tables.as_ptr().add(2 * b * LUT_W);
+                let t1 = tables.as_ptr().add((2 * b + 1) * LUT_W);
+                let (v0, v1) = lut_pair_i16(t0, t1, &idx);
+                for r in 0..ROW_TILE {
+                    let m0 = -(((sb[r] >> bit0) & 1) as i32);
+                    let m1 = -(((sb[r] >> (bit0 + 1)) & 1) as i32);
+                    acc[r] += ((v0[r] as i32) ^ m0) - m0;
+                    acc[r] += ((v1[r] as i32) ^ m1) - m1;
+                }
+            }
+        }
+        for r in 0..ROW_TILE {
+            out[i + r] = acc[r] as f32 * combined;
+        }
+        i += ROW_TILE;
+    }
+    for r in i..n {
+        let row = rows.start + r;
+        let wrow = &data[row * row_bytes..(row + 1) * row_bytes];
+        out[r] = crate::kernels::elut::gemv_row_elut5_sparse(
+            wrow,
+            idx_bytes,
+            tables,
+            sidx,
+            row,
+            &mut elided,
+        ) as f32
+            * combined;
+    }
+    sparse::note_elided(SimdLevel::Avx2, elided);
+}
+
+/// Sparse AVX2 I2_S row: nonzero blocks accumulate `Σ a·(code − 1)`
+/// directly — `maddubs(codes, acts) − maddubs(1, acts)` per 8-byte
+/// chunk — so no `act_sum` correction is needed and skipped blocks
+/// contribute exactly nothing. The pairwise i16 difference is bounded
+/// by 2·(3·127) + 2·127 < i16::MAX, so nothing saturates, and the
+/// overall i32 sum equals the dense `Σ a·code − act_sum` exactly.
+///
+/// # Safety
+/// Caller must have verified AVX2 at run time. `wrow.len() * 4` must
+/// equal `aq.len()` and `sidx` must use
+/// [`crate::kernels::i2s::SPARSE_BLOCK_WEIGHTS`]-weight blocks.
+#[target_feature(enable = "avx2")]
+unsafe fn gemv_row_i2s_sparse(
+    wrow: &[u8],
+    aq: &[i8],
+    sidx: &SparseIndex,
+    row: usize,
+    elided: &mut u64,
+) -> i32 {
+    debug_assert_eq!(wrow.len() * 4, aq.len());
+    const BLOCK_BYTES: usize = crate::kernels::i2s::SPARSE_BLOCK_WEIGHTS / 4;
+    let ctrl = _mm256_setr_epi8(
+        0, 4, 8, 12, 1, 5, 9, 13, 2, 6, 10, 14, 3, 7, 11, 15, 0, 4, 8, 12, 1, 5, 9, 13, 2, 6, 10,
+        14, 3, 7, 11, 15,
+    );
+    let ones = _mm256_set1_epi16(1);
+    let ones8 = _mm256_set1_epi8(1);
+    let mut accv = _mm256_setzero_si256();
+    let mut acc = 0i32;
+    for blk in 0..sidx.blocks_per_row() {
+        if !sidx.is_nonzero(row, blk) {
+            *elided += 1;
+            continue;
+        }
+        let b0 = blk * BLOCK_BYTES;
+        let b1 = (b0 + BLOCK_BYTES).min(wrow.len());
+        let mut chunks = wrow[b0..b1].chunks_exact(8);
+        let mut k = b0 * 4;
+        for ch in &mut chunks {
+            let w0 = u32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+            let w1 = u32::from_le_bytes([ch[4], ch[5], ch[6], ch[7]]);
+            let m = 0x0303_0303u32;
+            let codes = _mm256_set_epi32(
+                ((w1 >> 6) & m) as i32,
+                ((w1 >> 4) & m) as i32,
+                ((w1 >> 2) & m) as i32,
+                (w1 & m) as i32,
+                ((w0 >> 6) & m) as i32,
+                ((w0 >> 4) & m) as i32,
+                ((w0 >> 2) & m) as i32,
+                (w0 & m) as i32,
+            );
+            let acts = _mm256_loadu_si256(aq.as_ptr().add(k) as *const __m256i);
+            let acts = _mm256_shuffle_epi8(acts, ctrl);
+            let prod = _mm256_maddubs_epi16(codes, acts);
+            let asum = _mm256_maddubs_epi16(ones8, acts);
+            let diff = _mm256_sub_epi16(prod, asum);
+            accv = _mm256_add_epi32(accv, _mm256_madd_epi16(diff, ones));
+            k += 32;
+        }
+        for &byte in chunks.remainder() {
+            for j in 0..4 {
+                acc += (((byte >> (2 * j)) & 0x3) as i32 - 1) * *aq.get_unchecked(k + j) as i32;
+            }
+            k += 4;
+        }
+    }
+    let lo = _mm256_castsi256_si128(accv);
+    let hi = _mm256_extracti128_si256::<1>(accv);
+    let s = _mm_add_epi32(lo, hi);
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0x4e>(s));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0xb1>(s));
+    acc + _mm_cvtsi128_si32(s)
+}
+
+/// Sparse AVX2 I2_S over a row range.
+///
+/// # Safety
+/// Caller must have verified AVX2 at run time. `data` must hold
+/// `rows.end` packed rows of `aq.len() / 4` bytes; `out.len()` must
+/// equal `rows.len()`; `sidx` must match the tensor's packing.
+#[target_feature(enable = "avx2")]
+pub unsafe fn gemv_rows_i2s_sparse(
+    data: &[u8],
+    aq: &[i8],
+    combined: f32,
+    out: &mut [f32],
+    rows: Range<usize>,
+    sidx: &SparseIndex,
+) {
+    let row_bytes = aq.len() / 4;
+    let mut elided = 0u64;
+    for (o, r) in out.iter_mut().zip(rows) {
+        let wrow = &data[r * row_bytes..(r + 1) * row_bytes];
+        *o = gemv_row_i2s_sparse(wrow, aq, sidx, r, &mut elided) as f32 * combined;
+    }
+    sparse::note_elided(SimdLevel::Avx2, elided);
+}
+
+/// Vectorized LUT table build for the g=2 kernels (prepare phase): for
+/// each activation pair `(a0, a1) = (aq[2g], aq[2g+1])` fill the whole
+/// 16-entry table `tables[g·16 + c] = a0·w0[c] + a1·w1[c]` with one
+/// 256-bit multiply-add pass. Padding slots carry zero weight patterns,
+/// so the result equals the scalar fill-then-write loop bit for bit —
+/// all arithmetic is exact in i16 (|a| ≤ 128, |w| ≤ 2 ⇒ |entry| ≤ 512).
+///
+/// # Safety
+/// Caller must have verified AVX2 at run time. `aq.len()` must be even
+/// and `tables.len()` must equal `(aq.len() / 2) * LUT_W`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn build_lut16_pair_tables(
+    aq: &[i8],
+    w0: &[i16; LUT_W],
+    w1: &[i16; LUT_W],
+    tables: &mut [i16],
+) {
+    debug_assert_eq!(aq.len() % 2, 0);
+    debug_assert_eq!(tables.len(), aq.len() / 2 * LUT_W);
+    let vw0 = _mm256_loadu_si256(w0.as_ptr() as *const __m256i);
+    let vw1 = _mm256_loadu_si256(w1.as_ptr() as *const __m256i);
+    let out = tables.as_mut_ptr();
+    for (g, pair) in aq.chunks_exact(2).enumerate() {
+        let a0 = _mm256_set1_epi16(pair[0] as i16);
+        let a1 = _mm256_set1_epi16(pair[1] as i16);
+        let sum = _mm256_add_epi16(_mm256_mullo_epi16(a0, vw0), _mm256_mullo_epi16(a1, vw1));
+        _mm256_storeu_si256(out.add(g * LUT_W) as *mut __m256i, sum);
+    }
+}
+
+/// [`build_lut16_pair_tables`] for g=3 trios (the TL2 mirror region):
+/// `tables[g·16 + h] = a0·w0[h] + a1·w1[h] + a2·w2[h]`.
+///
+/// # Safety
+/// Caller must have verified AVX2 at run time. `aq.len()` must be a
+/// multiple of 3 and `tables.len()` must equal `(aq.len() / 3) * LUT_W`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn build_lut16_trio_tables(
+    aq: &[i8],
+    w0: &[i16; LUT_W],
+    w1: &[i16; LUT_W],
+    w2: &[i16; LUT_W],
+    tables: &mut [i16],
+) {
+    debug_assert_eq!(aq.len() % 3, 0);
+    debug_assert_eq!(tables.len(), aq.len() / 3 * LUT_W);
+    let vw0 = _mm256_loadu_si256(w0.as_ptr() as *const __m256i);
+    let vw1 = _mm256_loadu_si256(w1.as_ptr() as *const __m256i);
+    let vw2 = _mm256_loadu_si256(w2.as_ptr() as *const __m256i);
+    let out = tables.as_mut_ptr();
+    for (g, trio) in aq.chunks_exact(3).enumerate() {
+        let a0 = _mm256_set1_epi16(trio[0] as i16);
+        let a1 = _mm256_set1_epi16(trio[1] as i16);
+        let a2 = _mm256_set1_epi16(trio[2] as i16);
+        let sum = _mm256_add_epi16(
+            _mm256_add_epi16(_mm256_mullo_epi16(a0, vw0), _mm256_mullo_epi16(a1, vw1)),
+            _mm256_mullo_epi16(a2, vw2),
+        );
+        _mm256_storeu_si256(out.add(g * LUT_W) as *mut __m256i, sum);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_avx2() -> bool {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+
+    #[test]
+    fn lut16_i8_matches_scalar_lookup() {
+        if !have_avx2() {
+            return;
+        }
+        let table: [i8; 16] = core::array::from_fn(|i| (i as i8) * 3 - 20);
+        let bytes: [u8; 16] = core::array::from_fn(|i| ((i * 7) % 16) as u8 | (((i * 3) % 14) as u8) << 4);
+        // SAFETY: AVX2 presence checked above; table/bytes are 16 wide.
+        let (v0, v1) = unsafe { lut_pair_i8(table.as_ptr(), table.as_ptr(), &bytes) };
+        for i in 0..16 {
+            assert_eq!(v0[i], table[(bytes[i] & 0xf) as usize], "lo {i}");
+            assert_eq!(v1[i], table[(bytes[i] >> 4) as usize], "hi {i}");
+        }
+    }
+
+    #[test]
+    fn lut16_i16_matches_scalar_lookup() {
+        if !have_avx2() {
+            return;
+        }
+        // Entries spanning the full i16 range, including negatives.
+        let table: [i16; 16] = core::array::from_fn(|i| (i as i16) * -2500 + 7);
+        let bytes: [u8; 16] = core::array::from_fn(|i| (i as u8) | ((15 - i as u8) << 4));
+        // SAFETY: AVX2 presence checked above; table/bytes are 16 wide.
+        let (v0, v1) = unsafe { lut_pair_i16(table.as_ptr(), table.as_ptr(), &bytes) };
+        for i in 0..16 {
+            assert_eq!(v0[i], table[(bytes[i] & 0xf) as usize], "lo {i}");
+            assert_eq!(v1[i], table[(bytes[i] >> 4) as usize], "hi {i}");
+        }
+    }
+
+    #[test]
+    fn i2s_row_matches_reference() {
+        if !have_avx2() {
+            return;
+        }
+        let mut rng = pallas_core::util::Rng::new(9);
+        for trial in 0..8 {
+            let k = 128 * (1 + trial % 3);
+            let w: Vec<i8> = (0..k).map(|_| rng.next_ternary() as i8).collect();
+            let aq: Vec<i8> = (0..k).map(|_| (rng.next_below(255) as i32 - 127) as i8).collect();
+            let mut wrow = vec![0u8; k / 4];
+            for (b, quad) in w.chunks_exact(4).enumerate() {
+                let mut byte = 0u8;
+                for (j, &t) in quad.iter().enumerate() {
+                    byte |= (((t + 1) as u8) & 0x3) << (2 * j);
+                }
+                wrow[b] = byte;
+            }
+            let act_sum: i32 = aq.iter().map(|&a| a as i32).sum();
+            let want: i32 = w.iter().zip(aq.iter()).map(|(&wv, &av)| wv as i32 * av as i32).sum();
+            // SAFETY: AVX2 presence checked above; wrow.len()*4 == aq.len().
+            let got = unsafe { gemv_row_i2s(&wrow, &aq, act_sum) };
+            assert_eq!(got, want, "trial {trial}");
+        }
+    }
+}

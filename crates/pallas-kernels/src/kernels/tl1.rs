@@ -1,0 +1,658 @@
+//! **TL1** — element-wise LUT-based ternary kernel with group size g=2
+//! (paper §3.1.1, Algorithm 3, Table 5).
+//!
+//! Every pair of ternary weights is packed into a 4-bit code
+//! `c = 3·(w0+1) + (w1+1) ∈ 0..9` (bpw = 2). The activation-side
+//! preprocessing enumerates all 9 pair sums `a0·w0 + a1·w1` into a
+//! 16-entry table per weight pair position; accumulation is one table
+//! lookup per 2 weights instead of 2 multiply-adds.
+//!
+//! Two variants (paper §3.2.1):
+//! * **TL1_0** — tables requantized to int8 with one scale per block of
+//!   [`LUT_BLOCK_GROUPS`] groups (T-MAC-style). Fast, *near*-lossless.
+//! * **TL1_1** — tables kept in int16 via the pack-and-unpack technique
+//!   (two byte-table lookups reconstruct the 16-bit entry). Lossless:
+//!   bit-identical to the BitNet b1.58 training computation.
+
+use super::lut::{decode_code, requantize_lut_block};
+use super::quant::{quantize_act_int8_into, TernaryWeights};
+use super::simd::{self, SimdLevel};
+use super::sparse;
+use super::{
+    Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
+};
+
+/// Table entries per group (9 used, padded to 16 = one 128-bit SIMD
+/// register of int8, the `vpshufb`/`vqtbl1q_u8` width).
+pub const LUT_W: usize = 16;
+/// Number of weight pairs (groups) sharing one int8 requantization scale
+/// in the `_0` fast path.
+pub const LUT_BLOCK_GROUPS: usize = 32;
+
+/// Weights per sparse-elision block: one `_0` scale block (32 groups ×
+/// g=2), so a skipped block skips its whole scale fold too. Shared by
+/// TL1 and the ELUT kernels that reuse the TL1 accumulation paths.
+pub const SPARSE_BLOCK_WEIGHTS: usize = 2 * LUT_BLOCK_GROUPS;
+
+const TERNARY: [i8; 3] = [-1, 0, 1];
+
+/// Per-slot weight patterns of the Table-5 pair enumeration: slot `c`
+/// holds `(w0, w1)` of code `c = 3·(w0+1) + (w1+1)` for `c < 9`; the
+/// padding slots stay zero so the vector table builders reproduce the
+/// scalar fill-then-write layout exactly.
+const PAIR_W0: [i16; LUT_W] = [-1, -1, -1, 0, 0, 0, 1, 1, 1, 0, 0, 0, 0, 0, 0, 0];
+/// See [`PAIR_W0`].
+const PAIR_W1: [i16; LUT_W] = [-1, 0, 1, -1, 0, 1, -1, 0, 1, 0, 0, 0, 0, 0, 0, 0];
+
+/// TL1 kernel; `LOSSLESS = false` → TL1_0, `true` → TL1_1.
+pub struct Tl1Kernel<const LOSSLESS: bool>;
+
+/// TL1_0: int8-requantized LUT (fast path).
+pub static TL1_0: Tl1Kernel<false> = Tl1Kernel::<false>;
+/// TL1_1: int16 LUT via pack-and-unpack (lossless path).
+pub static TL1_1: Tl1Kernel<true> = Tl1Kernel::<true>;
+
+/// Pack one row of ternary weights into 4-bit TL1 codes (2 per byte).
+pub fn pack_row_tl1(row: &[i8], out: &mut [u8]) {
+    debug_assert_eq!(row.len() % 4, 0);
+    debug_assert_eq!(out.len(), row.len() / 4);
+    for (b, quad) in row.chunks_exact(4).enumerate() {
+        let c0 = (3 * (quad[0] + 1) + (quad[1] + 1)) as u8;
+        let c1 = (3 * (quad[2] + 1) + (quad[3] + 1)) as u8;
+        out[b] = c0 | (c1 << 4);
+    }
+}
+
+/// Build the int16 pair-sum tables for a quantized activation vector:
+/// `tables[g*16 + c] = aq[2g]·w0(c) + aq[2g+1]·w1(c)`.
+pub fn build_tables_tl1(aq: &[i8]) -> Vec<i16> {
+    let mut tables = vec![0i16; (aq.len() / 2) * LUT_W];
+    build_tables_tl1_into(aq, &mut tables);
+    tables
+}
+
+/// Allocation-free [`build_tables_tl1`]: fills the caller-owned table
+/// buffer (`(aq.len()/2) * LUT_W` entries), zeroing the padding slots so
+/// requantization over reused buffers stays deterministic.
+pub fn build_tables_tl1_into(aq: &[i8], tables: &mut [i16]) {
+    debug_assert_eq!(aq.len() % 2, 0);
+    let groups = aq.len() / 2;
+    debug_assert_eq!(tables.len(), groups * LUT_W);
+    #[cfg(target_arch = "x86_64")]
+    if simd::active_level() == SimdLevel::Avx2 {
+        // SAFETY: AVX2 verified by the active dispatch level; `aq` holds
+        // 2 quants per group and `tables` one LUT_W-entry table per group.
+        unsafe { simd::avx2::build_lut16_pair_tables(aq, &PAIR_W0, &PAIR_W1, tables) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if simd::active_level() == SimdLevel::Neon {
+        // SAFETY: NEON verified by the active dispatch level; `aq` holds
+        // 2 quants per group and `tables` one LUT_W-entry table per group.
+        unsafe { simd::neon::build_lut16_pair_tables(aq, &PAIR_W0, &PAIR_W1, tables) };
+        return;
+    }
+    tables.fill(0);
+    for g in 0..groups {
+        let a0 = aq[2 * g] as i16;
+        let a1 = aq[2 * g + 1] as i16;
+        let t = &mut tables[g * LUT_W..g * LUT_W + 9];
+        // Enumerate codes in Table-5 order: c = 3*(w0+1) + (w1+1).
+        let mut c = 0;
+        for w0 in TERNARY {
+            for w1 in TERNARY {
+                t[c] = a0 * w0 as i16 + a1 * w1 as i16;
+                c += 1;
+            }
+        }
+    }
+}
+
+/// Requantize i16 tables to i8 per block of `block_groups` groups.
+pub fn requantize_tables(
+    tables: &[i16],
+    block_groups: usize,
+) -> (Vec<i8>, Vec<f32>) {
+    let per_block = block_groups * LUT_W;
+    let mut out = vec![0i8; tables.len()];
+    let mut scales = vec![0f32; pallas_core::util::ceil_div(tables.len(), per_block)];
+    requantize_tables_into(tables, block_groups, &mut out, &mut scales);
+    (out, scales)
+}
+
+/// Allocation-free [`requantize_tables`]: `out` matches `tables`,
+/// `scales` holds one entry per block of `block_groups` groups.
+pub fn requantize_tables_into(
+    tables: &[i16],
+    block_groups: usize,
+    out: &mut [i8],
+    scales: &mut [f32],
+) {
+    let per_block = block_groups * LUT_W;
+    debug_assert_eq!(out.len(), tables.len());
+    debug_assert_eq!(scales.len(), pallas_core::util::ceil_div(tables.len(), per_block));
+    for ((src, dst), s) in
+        tables.chunks(per_block).zip(out.chunks_mut(per_block)).zip(scales.iter_mut())
+    {
+        *s = requantize_lut_block(src, dst);
+    }
+}
+
+impl<const LOSSLESS: bool> Kernel for Tl1Kernel<LOSSLESS> {
+    fn info(&self) -> KernelInfo {
+        KernelInfo {
+            qtype: if LOSSLESS { QuantType::Tl11 } else { QuantType::Tl10 },
+            name: if LOSSLESS { "TL1_1" } else { "TL1_0" },
+            class: KernelClass::LutBased,
+            element_wise: true,
+            bpw: 2.0,
+            lossless: LOSSLESS,
+            k_multiple: 4,
+            ternary_native: true,
+        }
+    }
+
+    fn quantize(&self, w: &TernaryWeights) -> QTensor {
+        let (m, k) = (w.m, w.k);
+        assert_eq!(k % 4, 0, "TL1 requires K % 4 == 0");
+        let row_bytes = k / 4;
+        let mut data = vec![0u8; m * row_bytes];
+        for r in 0..m {
+            pack_row_tl1(w.row(r), &mut data[r * row_bytes..(r + 1) * row_bytes]);
+        }
+        let bounds = sparse::uniform_bounds(k, SPARSE_BLOCK_WEIGHTS);
+        let sparse = sparse::maybe_index(&w.q, m, k, &bounds);
+        QTensor {
+            qtype: self.info().qtype,
+            m,
+            k,
+            data,
+            scale: w.scale,
+            sparse,
+        }
+    }
+
+    fn dequantize(&self, t: &QTensor) -> Vec<f32> {
+        let row_bytes = t.k / 4;
+        let mut out = Vec::with_capacity(t.m * t.k);
+        for r in 0..t.m {
+            for b in 0..row_bytes {
+                let byte = t.data[r * row_bytes + b];
+                for code in [byte & 0xf, byte >> 4] {
+                    for w in decode_code(code as usize, 3, 2, &TERNARY) {
+                        out.push(w as f32 * t.scale);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn prepare_kind(&self, k: usize) -> PrepareKind {
+        let groups = k / 2;
+        if LOSSLESS {
+            PrepareKind::LutI16 { groups }
+        } else {
+            PrepareKind::LutI8 { groups, block_groups: LUT_BLOCK_GROUPS }
+        }
+    }
+
+    fn prepare_row_into(&self, x: &[f32], k: usize, dst: PreparedRowMut<'_>) {
+        debug_assert_eq!(x.len(), k);
+        match dst {
+            PreparedRowMut::LutI16 { aq, tables, scale } => {
+                let (s, _) = quantize_act_int8_into(x, aq);
+                build_tables_tl1_into(aq, tables);
+                *scale = s;
+            }
+            PreparedRowMut::LutI8 { aq, tmp16, tables, block_scales, scale } => {
+                let (s, _) = quantize_act_int8_into(x, aq);
+                build_tables_tl1_into(aq, tmp16);
+                requantize_tables_into(tmp16, LUT_BLOCK_GROUPS, tables, block_scales);
+                *scale = s;
+            }
+            _ => panic!("TL1 expects a LUT destination"),
+        }
+    }
+
+    fn simd_levels(&self) -> &'static [SimdLevel] {
+        simd::KERNEL_LEVELS
+    }
+
+    fn sparse_capable(&self) -> bool {
+        true
+    }
+
+    fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
+        let row_bytes = t.k / 4;
+        let level = simd::active_level();
+        simd::note_call(level);
+        match p {
+            PreparedRow::LutI16 { tables, scale } => {
+                let combined = t.scale / scale;
+                if let Some(idx) = &t.sparse {
+                    #[cfg(target_arch = "x86_64")]
+                    if level == SimdLevel::Avx2 {
+                        // SAFETY: AVX2 verified by the active dispatch level;
+                        // buffer shapes are guaranteed by quantize/prepare.
+                        unsafe {
+                            simd::avx2::gemv_rows_lut16_sparse(
+                                &t.data, row_bytes, tables, combined, out, rows, idx,
+                            );
+                        }
+                        return;
+                    }
+                    #[cfg(target_arch = "aarch64")]
+                    if level == SimdLevel::Neon {
+                        // SAFETY: NEON verified by the active dispatch level;
+                        // buffer shapes are guaranteed by quantize/prepare.
+                        unsafe {
+                            simd::neon::gemv_rows_lut16_sparse(
+                                &t.data, row_bytes, tables, combined, out, rows, idx,
+                            );
+                        }
+                        return;
+                    }
+                    let mut elided = 0u64;
+                    for (o, r) in out.iter_mut().zip(rows) {
+                        let wrow = &t.data[r * row_bytes..(r + 1) * row_bytes];
+                        *o = gemv_row_lut16_sparse(wrow, tables, idx, r, &mut elided) as f32
+                            * combined;
+                    }
+                    sparse::note_elided(level, elided);
+                    return;
+                }
+                #[cfg(target_arch = "x86_64")]
+                if level == SimdLevel::Avx2 {
+                    // SAFETY: AVX2 verified by the active dispatch level;
+                    // buffer shapes are guaranteed by quantize/prepare.
+                    unsafe {
+                        simd::avx2::gemv_rows_lut16(&t.data, row_bytes, tables, combined, out, rows);
+                    }
+                    return;
+                }
+                #[cfg(target_arch = "aarch64")]
+                if level == SimdLevel::Neon {
+                    // SAFETY: NEON verified by the active dispatch level;
+                    // buffer shapes are guaranteed by quantize/prepare.
+                    unsafe {
+                        simd::neon::gemv_rows_lut16(&t.data, row_bytes, tables, combined, out, rows);
+                    }
+                    return;
+                }
+                for (o, r) in out.iter_mut().zip(rows) {
+                    let wrow = &t.data[r * row_bytes..(r + 1) * row_bytes];
+                    *o = gemv_row_lut16(wrow, tables) as f32 * combined;
+                }
+            }
+            PreparedRow::LutI8 { tables, block_scales, block_groups, scale } => {
+                let combined = t.scale / scale;
+                if let Some(idx) = &t.sparse {
+                    #[cfg(target_arch = "x86_64")]
+                    if level == SimdLevel::Avx2 {
+                        // SAFETY: AVX2 verified by the active dispatch level;
+                        // buffer shapes are guaranteed by quantize/prepare.
+                        unsafe {
+                            simd::avx2::gemv_rows_lut8_sparse(
+                                &t.data,
+                                row_bytes,
+                                tables,
+                                block_scales,
+                                block_groups,
+                                combined,
+                                out,
+                                rows,
+                                idx,
+                            );
+                        }
+                        return;
+                    }
+                    #[cfg(target_arch = "aarch64")]
+                    if level == SimdLevel::Neon {
+                        // SAFETY: NEON verified by the active dispatch level;
+                        // buffer shapes are guaranteed by quantize/prepare.
+                        unsafe {
+                            simd::neon::gemv_rows_lut8_sparse(
+                                &t.data,
+                                row_bytes,
+                                tables,
+                                block_scales,
+                                block_groups,
+                                combined,
+                                out,
+                                rows,
+                                idx,
+                            );
+                        }
+                        return;
+                    }
+                    let mut elided = 0u64;
+                    for (o, r) in out.iter_mut().zip(rows) {
+                        let wrow = &t.data[r * row_bytes..(r + 1) * row_bytes];
+                        *o = gemv_row_lut8_sparse(
+                            wrow,
+                            tables,
+                            block_scales,
+                            block_groups,
+                            idx,
+                            r,
+                            &mut elided,
+                        ) * combined;
+                    }
+                    sparse::note_elided(level, elided);
+                    return;
+                }
+                #[cfg(target_arch = "x86_64")]
+                if level == SimdLevel::Avx2 {
+                    // SAFETY: AVX2 verified by the active dispatch level;
+                    // buffer shapes are guaranteed by quantize/prepare.
+                    unsafe {
+                        simd::avx2::gemv_rows_lut8(
+                            &t.data,
+                            row_bytes,
+                            tables,
+                            block_scales,
+                            block_groups,
+                            combined,
+                            out,
+                            rows,
+                        );
+                    }
+                    return;
+                }
+                #[cfg(target_arch = "aarch64")]
+                if level == SimdLevel::Neon {
+                    // SAFETY: NEON verified by the active dispatch level;
+                    // buffer shapes are guaranteed by quantize/prepare.
+                    unsafe {
+                        simd::neon::gemv_rows_lut8(
+                            &t.data,
+                            row_bytes,
+                            tables,
+                            block_scales,
+                            block_groups,
+                            combined,
+                            out,
+                            rows,
+                        );
+                    }
+                    return;
+                }
+                for (o, r) in out.iter_mut().zip(rows) {
+                    let wrow = &t.data[r * row_bytes..(r + 1) * row_bytes];
+                    *o = gemv_row_lut8(wrow, tables, block_scales, block_groups) * combined;
+                }
+            }
+            _ => panic!("TL1 expects a LUT-prepared activation"),
+        }
+    }
+}
+
+/// Lossless accumulation: i32 sum of i16 table entries, one lookup per
+/// packed nibble. Codes stream linearly; the table for group g sits at
+/// `tables[g*16..]`, i.e. the LUT-centric layout of §3.1.2.
+#[inline]
+pub fn gemv_row_lut16(wrow: &[u8], tables: &[i16]) -> i32 {
+    let mut acc = 0i32;
+    let mut g = 0usize;
+    for &byte in wrow {
+        let c0 = (byte & 0xf) as usize;
+        let c1 = (byte >> 4) as usize;
+        // SAFETY: tables holds 2 groups of LUT_W entries per packed byte
+        // and nibble codes are < LUT_W, so both indices are in bounds.
+        acc += unsafe { *tables.get_unchecked(g * LUT_W + c0) } as i32;
+        // SAFETY: as above.
+        acc += unsafe { *tables.get_unchecked((g + 1) * LUT_W + c1) } as i32;
+        g += 2;
+    }
+    acc
+}
+
+/// Fast-path accumulation: int8 table entries summed per scale-block in
+/// i32, then folded into f32 with the block scale.
+#[inline]
+pub fn gemv_row_lut8(
+    wrow: &[u8],
+    tables: &[i8],
+    block_scales: &[f32],
+    block_groups: usize,
+) -> f32 {
+    let mut facc = 0f32;
+    let bytes_per_block = block_groups / 2; // 2 groups per byte
+    for (blk, bytes) in wrow.chunks(bytes_per_block).enumerate() {
+        let mut acc = 0i32;
+        let base = blk * block_groups * LUT_W;
+        let mut g = 0usize;
+        for &byte in bytes {
+            let c0 = (byte & 0xf) as usize;
+            let c1 = (byte >> 4) as usize;
+            // SAFETY: tables holds 2 groups of LUT_W entries per packed
+            // byte and nibble codes are < LUT_W; `base` advances by one
+            // whole block per chunk, so both indices are in bounds.
+            acc += unsafe { *tables.get_unchecked(base + g * LUT_W + c0) } as i32;
+            // SAFETY: as above.
+            acc += unsafe { *tables.get_unchecked(base + (g + 1) * LUT_W + c1) } as i32;
+            g += 2;
+        }
+        facc += acc as f32 * block_scales[blk];
+    }
+    facc
+}
+
+/// Sparse [`gemv_row_lut16`]: iterate [`SPARSE_BLOCK_WEIGHTS`]-sized
+/// blocks and skip those the index marks all-zero (their table entries
+/// would all be the zero-pair code, entry exactly 0, so skipping them
+/// leaves the i32 accumulator bit-identical). `elided` counts skipped
+/// blocks.
+#[inline]
+pub fn gemv_row_lut16_sparse(
+    wrow: &[u8],
+    tables: &[i16],
+    idx: &sparse::SparseIndex,
+    row: usize,
+    elided: &mut u64,
+) -> i32 {
+    const BLOCK_BYTES: usize = SPARSE_BLOCK_WEIGHTS / 4;
+    let mut acc = 0i32;
+    for blk in 0..idx.blocks_per_row() {
+        if !idx.is_nonzero(row, blk) {
+            *elided += 1;
+            continue;
+        }
+        let b0 = blk * BLOCK_BYTES;
+        let b1 = (b0 + BLOCK_BYTES).min(wrow.len());
+        let mut g = b0 * 2;
+        for &byte in &wrow[b0..b1] {
+            let c0 = (byte & 0xf) as usize;
+            let c1 = (byte >> 4) as usize;
+            // SAFETY: tables holds 2 groups of LUT_W entries per packed
+            // byte and nibble codes are < LUT_W, so both indices are in
+            // bounds.
+            acc += unsafe { *tables.get_unchecked(g * LUT_W + c0) } as i32;
+            // SAFETY: as above.
+            acc += unsafe { *tables.get_unchecked((g + 1) * LUT_W + c1) } as i32;
+            g += 2;
+        }
+    }
+    acc
+}
+
+/// Sparse [`gemv_row_lut8`]: the elision block *is* the requantization
+/// scale block, so a skipped block also skips its `0 · block_scale`
+/// fold — which is `+0.0` (block scales are non-negative), so the f32
+/// accumulator stays bit-identical to the dense path.
+#[inline]
+pub fn gemv_row_lut8_sparse(
+    wrow: &[u8],
+    tables: &[i8],
+    block_scales: &[f32],
+    block_groups: usize,
+    idx: &sparse::SparseIndex,
+    row: usize,
+    elided: &mut u64,
+) -> f32 {
+    let mut facc = 0f32;
+    let bytes_per_block = block_groups / 2; // 2 groups per byte
+    for (blk, bytes) in wrow.chunks(bytes_per_block).enumerate() {
+        if !idx.is_nonzero(row, blk) {
+            *elided += 1;
+            continue;
+        }
+        let mut acc = 0i32;
+        let base = blk * block_groups * LUT_W;
+        let mut g = 0usize;
+        for &byte in bytes {
+            let c0 = (byte & 0xf) as usize;
+            let c1 = (byte >> 4) as usize;
+            // SAFETY: tables holds 2 groups of LUT_W entries per packed
+            // byte and nibble codes are < LUT_W; `base` advances by one
+            // whole block per chunk, so both indices are in bounds.
+            acc += unsafe { *tables.get_unchecked(base + g * LUT_W + c0) } as i32;
+            // SAFETY: as above.
+            acc += unsafe { *tables.get_unchecked(base + (g + 1) * LUT_W + c1) } as i32;
+            g += 2;
+        }
+        facc += acc as f32 * block_scales[blk];
+    }
+    facc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::quant::{quantize_act_int8, training_scheme_ref_row};
+    use pallas_core::util::Rng;
+
+    fn random_ternary(m: usize, k: usize, seed: u64) -> TernaryWeights {
+        let mut rng = Rng::new(seed);
+        let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+        TernaryWeights::from_ternary(q, m, k, 0.05)
+    }
+
+    /// Paper Table 5: the pack/unpack enumeration for every pair.
+    #[test]
+    fn table5_pack_unpack() {
+        let expected: [( [i8; 2], u8); 9] = [
+            ([-1, -1], 0b0000),
+            ([-1, 0], 0b0001),
+            ([-1, 1], 0b0010),
+            ([0, -1], 0b0011),
+            ([0, 0], 0b0100),
+            ([0, 1], 0b0101),
+            ([1, -1], 0b0110),
+            ([1, 0], 0b0111),
+            ([1, 1], 0b1000),
+        ];
+        for (pair, code) in expected {
+            let mut row = [pair[0], pair[1], 0, 0];
+            let mut out = [0u8; 1];
+            pack_row_tl1(&row, &mut out);
+            assert_eq!(out[0] & 0xf, code, "pack {pair:?}");
+            // And the decode direction:
+            let d = decode_code(code as usize, 3, 2, &TERNARY);
+            assert_eq!(&d[..], &pair[..], "unpack {code:#06b}");
+            row = [0, 0, pair[0], pair[1]];
+            pack_row_tl1(&row, &mut out);
+            assert_eq!(out[0] >> 4, code, "pack high nibble {pair:?}");
+        }
+    }
+
+    /// The vector builders' pattern constants must enumerate exactly the
+    /// Table-5 code order the scalar loop produces, with zeroed padding.
+    #[test]
+    fn pair_patterns_match_code_enumeration() {
+        let mut c = 0usize;
+        for w0 in TERNARY {
+            for w1 in TERNARY {
+                assert_eq!(PAIR_W0[c], w0 as i16, "slot {c}");
+                assert_eq!(PAIR_W1[c], w1 as i16, "slot {c}");
+                c += 1;
+            }
+        }
+        for slot in c..LUT_W {
+            assert_eq!((PAIR_W0[slot], PAIR_W1[slot]), (0, 0), "padding slot {slot}");
+        }
+    }
+
+    #[test]
+    fn tables_enumerate_pair_sums() {
+        let aq = [3i8, -5, 100, 2];
+        let t = build_tables_tl1(&aq);
+        // group 0, code for (1, -1) = 3*2+0 = 6 → 3*1 + (-5)*(-1) = 8
+        assert_eq!(t[6], 8);
+        // group 1, code for (-1, 1) = 0*3+2 = 2 → -100 + 2 = -98
+        assert_eq!(t[LUT_W + 2], -98);
+        // all-zero code (0,0) = 4 → 0
+        assert_eq!(t[4], 0);
+    }
+
+    #[test]
+    fn tl1_1_is_bit_identical_to_training_scheme() {
+        let (m, k) = (24, 768);
+        let t = random_ternary(m, k, 21);
+        let mut rng = Rng::new(22);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        let packed = TL1_1.quantize(&t);
+        let p = TL1_1.prepare(&x, k);
+        let act = quantize_act_int8(&x);
+        let mut out = vec![0f32; m];
+        TL1_1.gemv(&packed, &p, &mut out);
+        for r in 0..m {
+            assert_eq!(out[r], training_scheme_ref_row(t.row(r), t.scale, &act), "row {r}");
+        }
+    }
+
+    #[test]
+    fn tl1_0_close_but_not_exact() {
+        let (m, k) = (32, 1024);
+        let t = random_ternary(m, k, 31);
+        let mut rng = Rng::new(32);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        let act = quantize_act_int8(&x);
+        let packed = TL1_0.quantize(&t);
+        let p = TL1_0.prepare(&x, k);
+        let mut out = vec![0f32; m];
+        TL1_0.gemv(&packed, &p, &mut out);
+        // L2-relative error across the row vector: per-row relative error
+        // is meaningless on near-zero dot products.
+        let mut err2 = 0f64;
+        let mut ref2 = 0f64;
+        let mut any_diff = false;
+        for r in 0..m {
+            let want = training_scheme_ref_row(t.row(r), t.scale, &act) as f64;
+            err2 += ((out[r] as f64) - want).powi(2);
+            ref2 += want * want;
+            any_diff |= out[r] as f64 != want;
+        }
+        let rel = (err2 / ref2.max(1e-12)).sqrt();
+        assert!(rel < 0.05, "requantized LUT should be close: {rel}");
+        assert!(any_diff, "TL1_0 should NOT be bit-exact (it requantizes the LUT)");
+    }
+
+    #[test]
+    fn dequantize_round_trip() {
+        let t = random_ternary(4, 64, 41);
+        let packed = TL1_0.quantize(&t);
+        assert_eq!(packed.bits_per_weight(), 2.0);
+        assert_eq!(TL1_0.dequantize(&packed), t.dequantize());
+    }
+
+    #[test]
+    fn k_not_multiple_of_block_still_works() {
+        // K/2 groups not a multiple of LUT_BLOCK_GROUPS exercises the
+        // trailing partial block in the `_0` path.
+        let k = 4 * 9; // 18 groups < 32
+        let t = random_ternary(8, k, 51);
+        let mut rng = Rng::new(52);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        let packed = TL1_0.quantize(&t);
+        let p = TL1_0.prepare(&x, k);
+        let mut out = vec![0f32; 8];
+        TL1_0.gemv(&packed, &p, &mut out);
+        let wd = t.dequantize();
+        for r in 0..8 {
+            let want: f32 = wd[r * k..(r + 1) * k].iter().zip(&x).map(|(w, a)| w * a).sum();
+            assert!((out[r] - want).abs() < 0.05 * want.abs().max(1.0), "row {r}");
+        }
+    }
+}

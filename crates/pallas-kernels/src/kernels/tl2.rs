@@ -1,0 +1,825 @@
+//! **TL2** — element-wise LUT-based ternary kernel with group size g=3,
+//! element-wise mirror consolidation, signed-unsigned weight splitting and
+//! block-fitting weight splitting (paper §3.1, Algorithm 4, Tables 6).
+//!
+//! Storage per group of 3 ternary weights: a **4-bit index** into the
+//! 14-entry mirror-consolidated table plus a **1-bit sign** stored in a
+//! separate plane (signed-unsigned weight splitting, Fig. 5), i.e.
+//! 5 bits / 3 weights = **1.67 bpw** — below the 2-bit alignment floor of
+//! bit-wise methods.
+//!
+//! Because most model dimensions K are not multiples of 3, the row is
+//! split *block-fitting* style (Fig. 6): `ThreeK = ⌊K/BK3⌋·BK3` leading
+//! weights use g=3, and the `TwoK = K−ThreeK` tail is computed with the
+//! TL1 (g=2) scheme — no padding, no misaligned blocks.
+//!
+//! Variants: **TL2_0** (int8-requantized tables, fast) and **TL2_1**
+//! (int16 tables via pack-and-unpack, lossless).
+
+use super::lut::{decode_code, mirror_join, mirror_split, sign_apply_i32};
+use super::quant::{quantize_act_int8_into, TernaryWeights};
+use super::simd::{self, SimdLevel};
+use super::sparse;
+use super::tl1::{
+    build_tables_tl1_into, pack_row_tl1, requantize_tables_into, LUT_BLOCK_GROUPS, LUT_W,
+};
+use super::{
+    Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
+};
+
+const TERNARY: [i8; 3] = [-1, 0, 1];
+
+/// Granularity of the g=3 region: ThreeK is a multiple of BK3 so the index
+/// plane (2 groups/byte) and the sign plane (8 groups/byte) both stay
+/// byte-aligned — the paper's "block-fitting" constraint.
+pub const BK3: usize = 24;
+
+/// Geometry of one TL2 row for a given K.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tl2Layout {
+    /// Leading weights handled with g=3.
+    pub three_k: usize,
+    /// Trailing weights handled with g=2 (TL1 scheme).
+    pub two_k: usize,
+    /// Bytes of the 4-bit index plane.
+    pub idx_bytes: usize,
+    /// Bytes of the 1-bit sign plane.
+    pub sign_bytes: usize,
+    /// Bytes of the TL1 tail.
+    pub tl1_bytes: usize,
+}
+
+impl Tl2Layout {
+    pub fn new(k: usize) -> Tl2Layout {
+        assert_eq!(k % 4, 0, "TL2 requires K % 4 == 0");
+        let three_k = (k / BK3) * BK3;
+        let two_k = k - three_k;
+        debug_assert_eq!(two_k % 4, 0);
+        Tl2Layout {
+            three_k,
+            two_k,
+            idx_bytes: three_k / 6,   // 2 nibble codes per byte, 3 weights per code
+            sign_bytes: three_k / 24, // 8 sign bits per byte
+            tl1_bytes: two_k / 4,
+        }
+    }
+
+    pub fn row_bytes(&self) -> usize {
+        self.idx_bytes + self.sign_bytes + self.tl1_bytes
+    }
+
+    /// Number of g=3 groups.
+    pub fn n3(&self) -> usize {
+        self.three_k / 3
+    }
+
+    /// Number of g=2 tail groups.
+    pub fn n2(&self) -> usize {
+        self.two_k / 2
+    }
+
+    /// First weight index of unified group `g` (g=3 region first, then
+    /// the g=2 tail; `g == n3` maps to `three_k` from either side).
+    fn group_weight(&self, g: usize) -> usize {
+        let n3 = self.n3();
+        if g <= n3 {
+            3 * g
+        } else {
+            self.three_k + 2 * (g - n3)
+        }
+    }
+
+    /// Per-block weight ranges for the sparse index: blocks stride the
+    /// unified group sequence in [`LUT_BLOCK_GROUPS`]-group steps — the
+    /// same schedule as the `_0` requantization scale blocks, so one
+    /// elided block skips exactly one scale fold. A block may span the
+    /// g=3 → tail boundary; the range covers both regions' weights.
+    pub fn sparse_bounds(&self) -> Vec<std::ops::Range<usize>> {
+        let groups = self.n3() + self.n2();
+        let mut bounds = Vec::with_capacity(groups.div_ceil(LUT_BLOCK_GROUPS));
+        let mut g = 0usize;
+        while g < groups {
+            let g1 = (g + LUT_BLOCK_GROUPS).min(groups);
+            bounds.push(self.group_weight(g)..self.group_weight(g1));
+            g = g1;
+        }
+        bounds
+    }
+}
+
+/// Pack one ternary row into (index plane, sign plane, TL1 tail).
+pub fn pack_row_tl2(row: &[i8], layout: &Tl2Layout, out: &mut [u8]) {
+    debug_assert_eq!(row.len(), layout.three_k + layout.two_k);
+    debug_assert_eq!(out.len(), layout.row_bytes());
+    let (idx_plane, rest) = out.split_at_mut(layout.idx_bytes);
+    let (sign_plane, tl1_tail) = rest.split_at_mut(layout.sign_bytes);
+
+    for (g, trio) in row[..layout.three_k].chunks_exact(3).enumerate() {
+        let code = ((trio[0] + 1) as usize) * 9 + ((trio[1] + 1) as usize) * 3 + (trio[2] + 1) as usize;
+        let (sign, half) = mirror_split(code, 3, 3);
+        debug_assert!(half < 14);
+        if g % 2 == 0 {
+            idx_plane[g / 2] = half as u8;
+        } else {
+            idx_plane[g / 2] |= (half as u8) << 4;
+        }
+        sign_plane[g / 8] |= sign << (g % 8);
+    }
+    if layout.two_k > 0 {
+        pack_row_tl1(&row[layout.three_k..], tl1_tail);
+    }
+}
+
+/// Build the int16 tables for TL2: one 16-entry table per g=3 group over
+/// the *unsigned* (positive-half) enumeration, followed by the TL1 pair
+/// tables for the tail. The concatenation keeps every group at 16 entries
+/// so the `_0` requantization blocks stay uniform.
+pub fn build_tables_tl2(aq: &[i8], layout: &Tl2Layout) -> Vec<i16> {
+    let mut tables = vec![0i16; (layout.n3() + layout.n2()) * LUT_W];
+    build_tables_tl2_into(aq, layout, &mut tables);
+    tables
+}
+
+/// Allocation-free [`build_tables_tl2`]: fills the caller-owned table
+/// buffer (`(n3 + n2) * LUT_W` entries), zeroing the padding slots.
+pub fn build_tables_tl2_into(aq: &[i8], layout: &Tl2Layout, tables: &mut [i16]) {
+    let n3 = layout.n3();
+    debug_assert_eq!(tables.len(), (n3 + layout.n2()) * LUT_W);
+    build_trio_region(&aq[..layout.three_k], &mut tables[..n3 * LUT_W]);
+    if layout.two_k > 0 {
+        build_tables_tl1_into(&aq[layout.three_k..], &mut tables[n3 * LUT_W..]);
+    }
+}
+
+/// Per-slot weight patterns of the positive-half g=3 enumeration (paper
+/// Table 6): slot `h` holds the trio decoded from
+/// `mirror_join(0, h, 3, 3)`; padding slots 14/15 stay zero. Derived
+/// once from the same decode the pack/unpack paths use, so the scalar
+/// and vector table builders provably tabulate the same enumeration.
+fn trio_patterns() -> (&'static [i16; LUT_W], &'static [i16; LUT_W], &'static [i16; LUT_W]) {
+    static PATTERNS: std::sync::OnceLock<([i16; LUT_W], [i16; LUT_W], [i16; LUT_W])> =
+        std::sync::OnceLock::new();
+    let (w0, w1, w2) = PATTERNS.get_or_init(|| {
+        let mut p = ([0i16; LUT_W], [0i16; LUT_W], [0i16; LUT_W]);
+        for half in 0..14 {
+            let w = decode_code(mirror_join(0, half, 3, 3), 3, 3, &TERNARY);
+            p.0[half] = w[0] as i16;
+            p.1[half] = w[1] as i16;
+            p.2[half] = w[2] as i16;
+        }
+        p
+    });
+    (w0, w1, w2)
+}
+
+/// Tabulate the g=3 mirror-consolidated region: one 16-entry table per
+/// activation trio over the positive-half enumeration.
+fn build_trio_region(aq: &[i8], tables: &mut [i16]) {
+    debug_assert_eq!(aq.len() % 3, 0);
+    debug_assert_eq!(tables.len(), (aq.len() / 3) * LUT_W);
+    let (w0, w1, w2) = trio_patterns();
+    #[cfg(target_arch = "x86_64")]
+    if simd::active_level() == SimdLevel::Avx2 {
+        // SAFETY: AVX2 verified by the active dispatch level; the trio
+        // count and table length match the builder's shape contract.
+        unsafe { simd::avx2::build_lut16_trio_tables(aq, w0, w1, w2, tables) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if simd::active_level() == SimdLevel::Neon {
+        // SAFETY: NEON verified by the active dispatch level; the trio
+        // count and table length match the builder's shape contract.
+        unsafe { simd::neon::build_lut16_trio_tables(aq, w0, w1, w2, tables) };
+        return;
+    }
+    tables.fill(0);
+    for (g, trio) in aq.chunks_exact(3).enumerate() {
+        let (a0, a1, a2) = (trio[0] as i16, trio[1] as i16, trio[2] as i16);
+        let t = &mut tables[g * LUT_W..(g + 1) * LUT_W];
+        for half in 0..14 {
+            t[half] = a0 * w0[half] + a1 * w1[half] + a2 * w2[half];
+        }
+    }
+}
+
+/// TL2 kernel; `LOSSLESS = false` → TL2_0, `true` → TL2_1.
+pub struct Tl2Kernel<const LOSSLESS: bool>;
+
+/// TL2_0: int8-requantized LUT, bpw 1.67 (the paper's headline kernel).
+pub static TL2_0: Tl2Kernel<false> = Tl2Kernel::<false>;
+/// TL2_1: int16 LUT, lossless, bpw 1.67.
+pub static TL2_1: Tl2Kernel<true> = Tl2Kernel::<true>;
+
+impl<const LOSSLESS: bool> Kernel for Tl2Kernel<LOSSLESS> {
+    fn info(&self) -> KernelInfo {
+        KernelInfo {
+            qtype: if LOSSLESS { QuantType::Tl21 } else { QuantType::Tl20 },
+            name: if LOSSLESS { "TL2_1" } else { "TL2_0" },
+            class: KernelClass::LutBased,
+            element_wise: true,
+            bpw: 5.0 / 3.0,
+            lossless: LOSSLESS,
+            // Block-fitting weight splitting handles any K % 4 == 0: the
+            // g=3 region covers ⌊K/24⌋·24 and the TL1 tail the rest.
+            k_multiple: 4,
+            ternary_native: true,
+        }
+    }
+
+    fn quantize(&self, w: &TernaryWeights) -> QTensor {
+        let layout = Tl2Layout::new(w.k);
+        let row_bytes = layout.row_bytes();
+        let mut data = vec![0u8; w.m * row_bytes];
+        for r in 0..w.m {
+            pack_row_tl2(w.row(r), &layout, &mut data[r * row_bytes..(r + 1) * row_bytes]);
+        }
+        let bounds = layout.sparse_bounds();
+        let sparse = sparse::maybe_index(&w.q, w.m, w.k, &bounds);
+        QTensor { qtype: self.info().qtype, m: w.m, k: w.k, data, scale: w.scale, sparse }
+    }
+
+    fn dequantize(&self, t: &QTensor) -> Vec<f32> {
+        let layout = Tl2Layout::new(t.k);
+        let row_bytes = layout.row_bytes();
+        let mut out = Vec::with_capacity(t.m * t.k);
+        for r in 0..t.m {
+            let row = &t.data[r * row_bytes..(r + 1) * row_bytes];
+            let (idx_plane, rest) = row.split_at(layout.idx_bytes);
+            let (sign_plane, tl1_tail) = rest.split_at(layout.sign_bytes);
+            for g in 0..layout.n3() {
+                let nib = if g % 2 == 0 { idx_plane[g / 2] & 0xf } else { idx_plane[g / 2] >> 4 };
+                let sign = (sign_plane[g / 8] >> (g % 8)) & 1;
+                let code = mirror_join(sign, nib as usize, 3, 3);
+                for w in decode_code(code, 3, 3, &TERNARY) {
+                    out.push(w as f32 * t.scale);
+                }
+            }
+            for &byte in tl1_tail {
+                for code in [byte & 0xf, byte >> 4] {
+                    for w in decode_code(code as usize, 3, 2, &TERNARY) {
+                        out.push(w as f32 * t.scale);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn prepare_kind(&self, k: usize) -> PrepareKind {
+        let layout = Tl2Layout::new(k);
+        let groups = layout.n3() + layout.n2();
+        if LOSSLESS {
+            PrepareKind::LutI16 { groups }
+        } else {
+            PrepareKind::LutI8 { groups, block_groups: LUT_BLOCK_GROUPS }
+        }
+    }
+
+    fn prepare_row_into(&self, x: &[f32], k: usize, dst: PreparedRowMut<'_>) {
+        debug_assert_eq!(x.len(), k);
+        let layout = Tl2Layout::new(k);
+        match dst {
+            PreparedRowMut::LutI16 { aq, tables, scale } => {
+                let (s, _) = quantize_act_int8_into(x, aq);
+                build_tables_tl2_into(aq, &layout, tables);
+                *scale = s;
+            }
+            PreparedRowMut::LutI8 { aq, tmp16, tables, block_scales, scale } => {
+                let (s, _) = quantize_act_int8_into(x, aq);
+                build_tables_tl2_into(aq, &layout, tmp16);
+                requantize_tables_into(tmp16, LUT_BLOCK_GROUPS, tables, block_scales);
+                *scale = s;
+            }
+            _ => panic!("TL2 expects a LUT destination"),
+        }
+    }
+
+    fn simd_levels(&self) -> &'static [SimdLevel] {
+        simd::KERNEL_LEVELS
+    }
+
+    fn sparse_capable(&self) -> bool {
+        true
+    }
+
+    fn gemv_rows(&self, t: &QTensor, p: PreparedRow<'_>, out: &mut [f32], rows: std::ops::Range<usize>) {
+        let layout = Tl2Layout::new(t.k);
+        let row_bytes = layout.row_bytes();
+        let level = simd::active_level();
+        simd::note_call(level);
+        match p {
+            PreparedRow::LutI16 { tables, scale } => {
+                let combined = t.scale / scale;
+                if let Some(idx) = &t.sparse {
+                    #[cfg(target_arch = "x86_64")]
+                    if level == SimdLevel::Avx2 {
+                        // SAFETY: AVX2 verified by the active dispatch level;
+                        // buffer shapes are guaranteed by quantize/prepare.
+                        unsafe {
+                            simd::avx2::gemv_rows_tl2_i16_sparse(
+                                &t.data, &layout, tables, combined, out, rows, idx,
+                            );
+                        }
+                        return;
+                    }
+                    #[cfg(target_arch = "aarch64")]
+                    if level == SimdLevel::Neon {
+                        // SAFETY: NEON verified by the active dispatch level;
+                        // buffer shapes are guaranteed by quantize/prepare.
+                        unsafe {
+                            simd::neon::gemv_rows_tl2_i16_sparse(
+                                &t.data, &layout, tables, combined, out, rows, idx,
+                            );
+                        }
+                        return;
+                    }
+                    let mut elided = 0u64;
+                    for (o, r) in out.iter_mut().zip(rows) {
+                        let row = &t.data[r * row_bytes..(r + 1) * row_bytes];
+                        *o = gemv_row_tl2_i16_sparse(row, &layout, tables, idx, r, &mut elided)
+                            as f32
+                            * combined;
+                    }
+                    sparse::note_elided(level, elided);
+                    return;
+                }
+                #[cfg(target_arch = "x86_64")]
+                if level == SimdLevel::Avx2 {
+                    // SAFETY: AVX2 verified by the active dispatch level;
+                    // buffer shapes are guaranteed by quantize/prepare.
+                    unsafe {
+                        simd::avx2::gemv_rows_tl2_i16(&t.data, &layout, tables, combined, out, rows);
+                    }
+                    return;
+                }
+                #[cfg(target_arch = "aarch64")]
+                if level == SimdLevel::Neon {
+                    // SAFETY: NEON verified by the active dispatch level;
+                    // buffer shapes are guaranteed by quantize/prepare.
+                    unsafe {
+                        simd::neon::gemv_rows_tl2_i16(&t.data, &layout, tables, combined, out, rows);
+                    }
+                    return;
+                }
+                for (o, r) in out.iter_mut().zip(rows) {
+                    let row = &t.data[r * row_bytes..(r + 1) * row_bytes];
+                    *o = gemv_row_tl2_i16(row, &layout, tables) as f32 * combined;
+                }
+            }
+            PreparedRow::LutI8 { tables, block_scales, block_groups, scale } => {
+                let combined = t.scale / scale;
+                if let Some(idx) = &t.sparse {
+                    #[cfg(target_arch = "x86_64")]
+                    if level == SimdLevel::Avx2 {
+                        // SAFETY: AVX2 verified by the active dispatch level;
+                        // buffer shapes are guaranteed by quantize/prepare.
+                        unsafe {
+                            simd::avx2::gemv_rows_tl2_i8_sparse(
+                                &t.data,
+                                &layout,
+                                tables,
+                                block_scales,
+                                block_groups,
+                                combined,
+                                out,
+                                rows,
+                                idx,
+                            );
+                        }
+                        return;
+                    }
+                    #[cfg(target_arch = "aarch64")]
+                    if level == SimdLevel::Neon {
+                        // SAFETY: NEON verified by the active dispatch level;
+                        // buffer shapes are guaranteed by quantize/prepare.
+                        unsafe {
+                            simd::neon::gemv_rows_tl2_i8_sparse(
+                                &t.data,
+                                &layout,
+                                tables,
+                                block_scales,
+                                block_groups,
+                                combined,
+                                out,
+                                rows,
+                                idx,
+                            );
+                        }
+                        return;
+                    }
+                    let mut elided = 0u64;
+                    for (o, r) in out.iter_mut().zip(rows) {
+                        let row = &t.data[r * row_bytes..(r + 1) * row_bytes];
+                        *o = gemv_row_tl2_i8_sparse(
+                            row,
+                            &layout,
+                            tables,
+                            block_scales,
+                            block_groups,
+                            idx,
+                            r,
+                            &mut elided,
+                        ) * combined;
+                    }
+                    sparse::note_elided(level, elided);
+                    return;
+                }
+                #[cfg(target_arch = "x86_64")]
+                if level == SimdLevel::Avx2 {
+                    // SAFETY: AVX2 verified by the active dispatch level;
+                    // buffer shapes are guaranteed by quantize/prepare.
+                    unsafe {
+                        simd::avx2::gemv_rows_tl2_i8(
+                            &t.data,
+                            &layout,
+                            tables,
+                            block_scales,
+                            block_groups,
+                            combined,
+                            out,
+                            rows,
+                        );
+                    }
+                    return;
+                }
+                #[cfg(target_arch = "aarch64")]
+                if level == SimdLevel::Neon {
+                    // SAFETY: NEON verified by the active dispatch level;
+                    // buffer shapes are guaranteed by quantize/prepare.
+                    unsafe {
+                        simd::neon::gemv_rows_tl2_i8(
+                            &t.data,
+                            &layout,
+                            tables,
+                            block_scales,
+                            block_groups,
+                            combined,
+                            out,
+                            rows,
+                        );
+                    }
+                    return;
+                }
+                for (o, r) in out.iter_mut().zip(rows) {
+                    let row = &t.data[r * row_bytes..(r + 1) * row_bytes];
+                    *o = gemv_row_tl2_i8(row, &layout, tables, block_scales, block_groups)
+                        * combined;
+                }
+            }
+            _ => panic!("TL2 expects a LUT-prepared activation"),
+        }
+    }
+}
+
+/// Lossless accumulation over the split row: g=3 lookups with the 1-bit
+/// sign operation, then the TL1 tail.
+///
+/// §Perf: signs are handled with two accumulators (`accs[sign]`) instead
+/// of a per-element conditional negate — one indexed add replaces the
+/// add+xor of Eq. 5 and removes a data dependency on the sign bit.
+#[inline]
+pub fn gemv_row_tl2_i16(row: &[u8], layout: &Tl2Layout, tables: &[i16]) -> i32 {
+    let (idx_plane, rest) = row.split_at(layout.idx_bytes);
+    let (sign_plane, tl1_tail) = rest.split_at(layout.sign_bytes);
+    let n3 = layout.n3();
+    let mut accs = [0i32; 2];
+    // 8 groups per sign byte, 2 groups per index byte → process 8 at a time.
+    let mut g = 0usize;
+    for &sbyte in sign_plane {
+        // 4 index bytes cover the same 8 groups.
+        let ib = g / 2;
+        let tb = g * LUT_W;
+        for j in 0..4 {
+            // SAFETY: each sign byte covers 4 index bytes and 8 tables;
+            // the layout sizes both planes and nibble codes are < LUT_W.
+            let byte = unsafe { *idx_plane.get_unchecked(ib + j) };
+            let t0 = tb + 2 * j * LUT_W;
+            // SAFETY: as above.
+            let v0 = unsafe { *tables.get_unchecked(t0 + (byte & 0xf) as usize) } as i32;
+            // SAFETY: as above.
+            let v1 = unsafe { *tables.get_unchecked(t0 + LUT_W + (byte >> 4) as usize) } as i32;
+            accs[((sbyte >> (2 * j)) & 1) as usize] += v0;
+            accs[((sbyte >> (2 * j + 1)) & 1) as usize] += v1;
+        }
+        g += 8;
+    }
+    let mut acc = accs[0] - accs[1];
+    // TL1 tail (tables offset by the n3 g=3 tables).
+    let mut gg = n3;
+    for &byte in tl1_tail {
+        // SAFETY: the tail holds n2 groups of LUT_W entries after the n3
+        // g=3 tables; nibble codes are < LUT_W.
+        acc += unsafe { *tables.get_unchecked(gg * LUT_W + (byte & 0xf) as usize) } as i32;
+        // SAFETY: as above.
+        acc += unsafe { *tables.get_unchecked((gg + 1) * LUT_W + (byte >> 4) as usize) } as i32;
+        gg += 2;
+    }
+    acc
+}
+
+/// Fast-path accumulation with int8 tables and per-block scales. Group
+/// indexing is uniform across the g=3 region and the TL1 tail (16 entries
+/// per group), so blocks of `block_groups` groups stride both regions.
+#[inline]
+pub fn gemv_row_tl2_i8(
+    row: &[u8],
+    layout: &Tl2Layout,
+    tables: &[i8],
+    block_scales: &[f32],
+    block_groups: usize,
+) -> f32 {
+    let (idx_plane, rest) = row.split_at(layout.idx_bytes);
+    let (sign_plane, tl1_tail) = rest.split_at(layout.sign_bytes);
+    let n3 = layout.n3();
+    debug_assert_eq!(n3 % 8, 0, "ThreeK multiple of 24 → n3 multiple of 8");
+    debug_assert_eq!(block_groups % 8, 0, "scale blocks align to sign bytes");
+    let mut facc = 0f32;
+    let mut accs = [0i32; 2];
+    let mut blk = 0usize;
+    let mut in_blk = 0usize;
+    // §Perf: 8 groups per iteration (one sign byte, four index bytes),
+    // dual accumulators instead of per-element sign_apply, block flush
+    // only at sign-byte boundaries (LUT_BLOCK_GROUPS is a multiple of 8).
+    let mut g = 0usize;
+    for &sbyte in sign_plane {
+        let ib = g / 2;
+        let tb = g * LUT_W;
+        for j in 0..4 {
+            // SAFETY: each sign byte covers 4 index bytes and 8 tables;
+            // the layout sizes both planes and nibble codes are < LUT_W.
+            let byte = unsafe { *idx_plane.get_unchecked(ib + j) };
+            let t0 = tb + 2 * j * LUT_W;
+            // SAFETY: as above.
+            let v0 = unsafe { *tables.get_unchecked(t0 + (byte & 0xf) as usize) } as i32;
+            // SAFETY: as above.
+            let v1 = unsafe { *tables.get_unchecked(t0 + LUT_W + (byte >> 4) as usize) } as i32;
+            accs[((sbyte >> (2 * j)) & 1) as usize] += v0;
+            accs[((sbyte >> (2 * j + 1)) & 1) as usize] += v1;
+        }
+        g += 8;
+        in_blk += 8;
+        if in_blk == block_groups {
+            facc += (accs[0] - accs[1]) as f32 * block_scales[blk];
+            accs = [0; 2];
+            blk += 1;
+            in_blk = 0;
+        }
+    }
+    // TL1 tail (no sign plane): continue filling the current block.
+    let mut acc = accs[0] - accs[1];
+    let mut gg = n3;
+    for &byte in tl1_tail {
+        // SAFETY: the tail holds n2 groups of LUT_W entries after the n3
+        // g=3 tables; nibble codes are < LUT_W.
+        acc += unsafe { *tables.get_unchecked(gg * LUT_W + (byte & 0xf) as usize) } as i32;
+        // SAFETY: as above.
+        acc += unsafe { *tables.get_unchecked((gg + 1) * LUT_W + (byte >> 4) as usize) } as i32;
+        gg += 2;
+        in_blk += 2;
+        if in_blk == block_groups {
+            facc += acc as f32 * block_scales[blk];
+            acc = 0;
+            blk += 1;
+            in_blk = 0;
+        }
+    }
+    if in_blk > 0 {
+        facc += acc as f32 * block_scales[blk];
+    }
+    facc
+}
+
+/// Accumulate one unified group (g=3 region or TL1 tail) of a TL2 row
+/// into `acc` — the group-addressed body shared by the sparse walkers.
+/// Generic over the table element so the i16 and i8 variants share it.
+#[inline(always)]
+fn tl2_group_acc<T: Copy + Into<i32>>(
+    g: usize,
+    n3: usize,
+    idx_plane: &[u8],
+    sign_plane: &[u8],
+    tl1_tail: &[u8],
+    tables: &[T],
+    acc: &mut i32,
+) {
+    if g < n3 {
+        // SAFETY: the layout sizes the planes for n3 groups (2 per index
+        // byte, 8 per sign byte), tables holds one LUT_W-entry table per
+        // group, and nibble codes are < LUT_W.
+        let byte = unsafe { *idx_plane.get_unchecked(g / 2) };
+        let nib = if g % 2 == 0 { byte & 0xf } else { byte >> 4 };
+        // SAFETY: as above.
+        let sign = (unsafe { *sign_plane.get_unchecked(g / 8) } >> (g % 8)) & 1;
+        // SAFETY: as above.
+        let v: i32 = unsafe { *tables.get_unchecked(g * LUT_W + nib as usize) }.into();
+        *acc += sign_apply_i32(v, sign);
+    } else {
+        let tg = g - n3;
+        // SAFETY: the tail holds n2 groups (2 per byte) with one
+        // LUT_W-entry table per group after the n3 g=3 tables.
+        let byte = unsafe { *tl1_tail.get_unchecked(tg / 2) };
+        let nib = if tg % 2 == 0 { byte & 0xf } else { byte >> 4 };
+        // SAFETY: as above.
+        *acc += unsafe { *tables.get_unchecked(g * LUT_W + nib as usize) }.into();
+    }
+}
+
+/// Sparse [`gemv_row_tl2_i16`]: blocks stride the unified group sequence
+/// (see [`Tl2Layout::sparse_bounds`]); a skipped block's groups all hold
+/// the zero code, whose table entry is exactly 0 under either sign, so
+/// the i32 accumulator stays bit-identical to the dense dual-accumulator
+/// schedule (integer addition is order-free).
+#[inline]
+pub fn gemv_row_tl2_i16_sparse(
+    row: &[u8],
+    layout: &Tl2Layout,
+    tables: &[i16],
+    sidx: &sparse::SparseIndex,
+    wr: usize,
+    elided: &mut u64,
+) -> i32 {
+    let (idx_plane, rest) = row.split_at(layout.idx_bytes);
+    let (sign_plane, tl1_tail) = rest.split_at(layout.sign_bytes);
+    let n3 = layout.n3();
+    let groups = n3 + layout.n2();
+    let mut acc = 0i32;
+    for blk in 0..sidx.blocks_per_row() {
+        if !sidx.is_nonzero(wr, blk) {
+            *elided += 1;
+            continue;
+        }
+        let g0 = blk * LUT_BLOCK_GROUPS;
+        let g1 = (g0 + LUT_BLOCK_GROUPS).min(groups);
+        for g in g0..g1 {
+            tl2_group_acc(g, n3, idx_plane, sign_plane, tl1_tail, tables, &mut acc);
+        }
+    }
+    acc
+}
+
+/// Sparse [`gemv_row_tl2_i8`]: the elision block *is* the requantization
+/// scale block, so a skipped block also skips its `0 · block_scale`
+/// fold (`+0.0`, bit-safe — block scales are non-negative and the f32
+/// accumulator is never `-0.0`).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn gemv_row_tl2_i8_sparse(
+    row: &[u8],
+    layout: &Tl2Layout,
+    tables: &[i8],
+    block_scales: &[f32],
+    block_groups: usize,
+    sidx: &sparse::SparseIndex,
+    wr: usize,
+    elided: &mut u64,
+) -> f32 {
+    let (idx_plane, rest) = row.split_at(layout.idx_bytes);
+    let (sign_plane, tl1_tail) = rest.split_at(layout.sign_bytes);
+    let n3 = layout.n3();
+    let groups = n3 + layout.n2();
+    let mut facc = 0f32;
+    for blk in 0..sidx.blocks_per_row() {
+        if !sidx.is_nonzero(wr, blk) {
+            *elided += 1;
+            continue;
+        }
+        let g0 = blk * block_groups;
+        let g1 = (g0 + block_groups).min(groups);
+        let mut acc = 0i32;
+        for g in g0..g1 {
+            tl2_group_acc(g, n3, idx_plane, sign_plane, tl1_tail, tables, &mut acc);
+        }
+        facc += acc as f32 * block_scales[blk];
+    }
+    facc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::quant::{quantize_act_int8, training_scheme_ref_row};
+    use pallas_core::util::Rng;
+
+    fn random_ternary(m: usize, k: usize, seed: u64) -> TernaryWeights {
+        let mut rng = Rng::new(seed);
+        let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+        TernaryWeights::from_ternary(q, m, k, 0.042)
+    }
+
+    #[test]
+    fn layout_block_fitting() {
+        // K=4096: ThreeK=4080, TwoK=16 (paper Fig. 6: no padding needed).
+        let l = Tl2Layout::new(4096);
+        assert_eq!(l.three_k, 4080);
+        assert_eq!(l.two_k, 16);
+        assert_eq!(l.row_bytes(), 4080 / 6 + 4080 / 24 + 4);
+        // bpw ≈ 1.668
+        let bpw = l.row_bytes() as f64 * 8.0 / 4096.0;
+        assert!((bpw - 5.0 / 3.0).abs() < 0.01, "bpw {bpw}");
+        // K divisible by 24: no tail at all.
+        let l2 = Tl2Layout::new(3072);
+        assert_eq!(l2.two_k, 0);
+        assert_eq!(l2.tl1_bytes, 0);
+    }
+
+    /// Paper Table 6 spot checks: sign/index assignments.
+    #[test]
+    fn table6_sign_index() {
+        let case = |w: [i8; 3]| {
+            let code =
+                ((w[0] + 1) as usize) * 9 + ((w[1] + 1) as usize) * 3 + (w[2] + 1) as usize;
+            mirror_split(code, 3, 3)
+        };
+        assert_eq!(case([-1, -1, -1]), (1, 13));
+        assert_eq!(case([-1, -1, 0]), (1, 12));
+        assert_eq!(case([-1, -1, 1]), (1, 11));
+        assert_eq!(case([-1, 0, -1]), (1, 10));
+        assert_eq!(case([0, 0, 0]), (0, 0));
+        assert_eq!(case([1, 0, 1]), (0, 10));
+        assert_eq!(case([1, 1, -1]), (0, 11));
+        assert_eq!(case([1, 1, 0]), (0, 12));
+        assert_eq!(case([1, 1, 1]), (0, 13));
+    }
+
+    #[test]
+    fn pack_dequantize_round_trip() {
+        for k in [24, 48, 96, 100, 1024, 4096] {
+            let t = random_ternary(3, k, k as u64);
+            let packed = TL2_0.quantize(&t);
+            assert_eq!(TL2_0.dequantize(&packed), t.dequantize(), "k={k}");
+        }
+    }
+
+    #[test]
+    fn bpw_is_sub_2() {
+        let t = random_ternary(8, 4096, 7);
+        let packed = TL2_0.quantize(&t);
+        let bpw = packed.bits_per_weight();
+        assert!(bpw < 1.7, "TL2 bpw {bpw} must beat the 2-bit floor");
+    }
+
+    #[test]
+    fn tl2_1_is_bit_identical_to_training_scheme() {
+        for k in [96, 768, 1000] {
+            let m = 16;
+            let t = random_ternary(m, k, 100 + k as u64);
+            let mut rng = Rng::new(200 + k as u64);
+            let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+            let act = quantize_act_int8(&x);
+            let packed = TL2_1.quantize(&t);
+            let p = TL2_1.prepare(&x, k);
+            let mut out = vec![0f32; m];
+            TL2_1.gemv(&packed, &p, &mut out);
+            for r in 0..m {
+                assert_eq!(
+                    out[r],
+                    training_scheme_ref_row(t.row(r), t.scale, &act),
+                    "k={k} row {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tl2_0_close_but_not_exact() {
+        let (m, k) = (32, 2048);
+        let t = random_ternary(m, k, 301);
+        let mut rng = Rng::new(302);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        let act = quantize_act_int8(&x);
+        let packed = TL2_0.quantize(&t);
+        let p = TL2_0.prepare(&x, k);
+        let mut out = vec![0f32; m];
+        TL2_0.gemv(&packed, &p, &mut out);
+        let mut err2 = 0f64;
+        let mut ref2 = 0f64;
+        let mut any_diff = false;
+        for r in 0..m {
+            let want = training_scheme_ref_row(t.row(r), t.scale, &act) as f64;
+            err2 += ((out[r] as f64) - want).powi(2);
+            ref2 += want * want;
+            any_diff |= out[r] as f64 != want;
+        }
+        let rel = (err2 / ref2.max(1e-12)).sqrt();
+        assert!(rel < 0.05, "{rel}");
+        assert!(any_diff, "TL2_0 should NOT be bit-exact (it requantizes the LUT)");
+    }
+
+    #[test]
+    fn tl2_variants_agree_closely() {
+        let (m, k) = (16, 960);
+        let t = random_ternary(m, k, 401);
+        let mut rng = Rng::new(402);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        let p0 = TL2_0.prepare(&x, k);
+        let p1 = TL2_1.prepare(&x, k);
+        let q0 = TL2_0.quantize(&t);
+        let q1 = TL2_1.quantize(&t);
+        let (mut o0, mut o1) = (vec![0f32; m], vec![0f32; m]);
+        TL2_0.gemv(&q0, &p0, &mut o0);
+        TL2_1.gemv(&q1, &p1, &mut o1);
+        for r in 0..m {
+            assert!((o0[r] - o1[r]).abs() < 0.03 * o1[r].abs().max(1.0), "row {r}");
+        }
+    }
+}

@@ -1,0 +1,1350 @@
+//! Auto-tuned kernel dispatch (upstream bitnet.cpp's `kernel_tuning`
+//! utility, reconstructed): micro-benchmark every applicable kernel for
+//! the matmul shapes a model actually runs, persist the winners in a
+//! [`TuningProfile`], and route every `model::BitLinear` through
+//! a [`Dispatch`] policy that either pins one kernel (`Fixed`) or selects
+//! per shape from the profile (`Auto`).
+//!
+//! Why this exists: the paper's speedups (§4, Table 7) come from picking
+//! the right mpGEMM kernel per machine *and* per matrix shape — TL2's
+//! 1.67 bpw wins when decode is memory-bound, I2_S/TL1 win where the
+//! LUT preprocessing dominates, and the crossover moves with m, k, batch
+//! size and thread count. Upstream reports 20–30% extra throughput from
+//! hardware-specific selection; this module makes that selection
+//! measured rather than guessed.
+//!
+//! Flow:
+//! 1. `bitnet tune --preset <p> --out profile.json` runs [`tune`] over the
+//!    preset's projection shapes and writes the profile (JSON via
+//!    [`pallas_core::util::Json`]).
+//! 2. `bitnet run --qtype auto --tune-profile profile.json` loads it into
+//!    `Dispatch::Auto`, and each layer packs with the per-shape winner.
+//!
+//! Fallback semantics are documented on [`TuningProfile::select`] and in
+//! `docs/tuning.md`.
+#![deny(missing_docs)]
+
+use super::simd::{self, SimdLevel};
+use super::sparse::{self, SparseMode};
+use super::{kernel_for, QuantType};
+use crate::perf::calibrate::{calibrate_kernel_shape, calibrate_kernel_shape_sparse, KernelRate};
+use pallas_core::util::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::HashSet;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Profile file format version written by [`TuningProfile::to_json`]
+/// (bump on breaking schema changes). Older versions in
+/// [`SUPPORTED_PROFILE_VERSIONS`] still load, with the fields they lack
+/// defaulting to empty — see `docs/tuning.md` for the migration table.
+pub const PROFILE_VERSION: u64 = 4;
+
+/// Profile versions [`TuningProfile::from_json`] accepts. v1 files (PR 1)
+/// carry only the per-shape `entries`; v2 adds optional `overrides` and
+/// `e2e` sections; v3 records the SIMD level each measurement ran at and
+/// the level the per-shape winner used (older files load with every
+/// level defaulting to `scalar`); v4 records whether each measurement ran
+/// the block-skip sparse layout and whether the per-shape winner did
+/// (older files load with `sparse`/`best_sparse` defaulting to false —
+/// every pre-v4 measurement was dense by construction).
+pub const SUPPORTED_PROFILE_VERSIONS: [u64; 4] = [1, 2, 3, 4];
+
+/// The projection a ternary matmul serves inside a transformer layer —
+/// the per-layer dispatch key alongside the (m, k, n) shape. `Qkv`
+/// covers the three attention input projections (wq/wk/wv always share
+/// a phase regime); the rest are one projection each.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Role {
+    /// Attention input projections wq/wk/wv.
+    Qkv,
+    /// Attention output projection wo.
+    O,
+    /// FFN gate projection.
+    Gate,
+    /// FFN up projection.
+    Up,
+    /// FFN down projection.
+    Down,
+}
+
+impl Role {
+    /// Every role, in layer-forward order.
+    pub const ALL: [Role; 5] = [Role::Qkv, Role::O, Role::Gate, Role::Up, Role::Down];
+
+    /// Profile-facing name (the `role` field of an override entry).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Role::Qkv => "qkv",
+            Role::O => "o",
+            Role::Gate => "gate",
+            Role::Up => "up",
+            Role::Down => "down",
+        }
+    }
+
+    /// Parse a profile-facing role name.
+    pub fn parse(s: &str) -> Option<Role> {
+        Role::ALL.iter().copied().find(|r| r.name().eq_ignore_ascii_case(s))
+    }
+}
+
+/// A v2-profile per-layer override: pin `(layer, role)` at batch `n` to a
+/// specific kernel, taking precedence over the per-shape `entries`. Batch
+/// resolution follows the same largest-tuned-n ≤ n rule as shape entries.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerOverride {
+    /// Zero-based transformer layer index.
+    pub layer: usize,
+    /// Which projection of that layer.
+    pub role: Role,
+    /// Activation batch rows this override was chosen for.
+    pub n: usize,
+    /// The kernel to run.
+    pub qtype: QuantType,
+}
+
+/// One end-to-end layer-composition measurement recorded by
+/// `bitnet tune --e2e` (informational: per-shape winners can compose
+/// differently than they measure in isolation — cache pressure from one
+/// layer's tables evicts the next layer's weights).
+#[derive(Clone, Debug, PartialEq)]
+pub struct E2eEntry {
+    /// What was measured, e.g. `auto` or `fixed(I2_S)`.
+    pub label: String,
+    /// Prefill throughput, prompt tokens per second.
+    pub prefill_tok_s: f64,
+    /// Decode throughput, generated tokens per second.
+    pub decode_tok_s: f64,
+}
+
+/// One timed kernel on one shape.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Measurement {
+    /// The kernel measured.
+    pub qtype: QuantType,
+    /// The SIMD dispatch level the kernel ran at (v3 profiles; older
+    /// files load as `scalar`).
+    pub simd: SimdLevel,
+    /// Whether the kernel ran its block-skip sparse layout on the
+    /// calibration tensor (v4 profiles; older files load as false).
+    /// Sparse measurements use a ~60%-zero-block synthetic tensor, so
+    /// they record what the kernel does when elision has real work to
+    /// skip — see `docs/tuning.md`.
+    pub sparse: bool,
+    /// Mean wall time of one matmul call, microseconds.
+    pub us_per_matmul: f64,
+    /// Weights streamed per second (`m·k / secs_per_call`), in units of
+    /// 1e9 weights — the tuner's ranking metric (higher is better).
+    pub gweights_per_s: f64,
+}
+
+/// Tuning result for one (m, k, batch) matmul shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuningEntry {
+    /// Output features (weight rows).
+    pub m: usize,
+    /// Input features (weight cols / reduction dim).
+    pub k: usize,
+    /// Activation batch rows the measurement used.
+    pub n: usize,
+    /// Fraction of observed traffic this batch width served when the
+    /// sweep was trace-driven (`tune --trace`); 1.0 for the fixed
+    /// `--batches` sweep, where every width is tuned unconditionally.
+    /// Informational: the per-shape winner is the winner regardless of
+    /// frequency — the field records which entries carry real traffic
+    /// (and how much was dropped by a `--trace-widths` cap).
+    pub weight: f64,
+    /// The fastest measured kernel for this shape.
+    pub best: QuantType,
+    /// The SIMD level `best` won at. Selection degrades when the serving
+    /// host can't run it — see [`TuningProfile::select_traced`].
+    pub best_simd: SimdLevel,
+    /// Whether `best` won on its block-skip sparse layout. Selection
+    /// degrades when sparse packing is disabled on the serving host
+    /// (`RUST_PALLAS_SPARSE=off` / `--sparse off`) — see
+    /// [`TuningProfile::select_traced`].
+    pub best_sparse: bool,
+    /// All measurements, fastest first (kept for inspection/debugging).
+    pub measurements: Vec<Measurement>,
+}
+
+/// A machine- and shape-specific kernel selection table, serializable to
+/// a JSON profile file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuningProfile {
+    /// Thread count the measurements were taken with (selection quality
+    /// degrades if the serving thread count differs; the CLI warns).
+    pub threads: usize,
+    /// Fallback kernel for shapes absent from the profile.
+    pub default: QuantType,
+    /// Per-shape winners.
+    pub entries: Vec<TuningEntry>,
+    /// v2: per-layer overrides, consulted before `entries` when the
+    /// caller knows its (layer, role) position ([`TuningProfile::select_for`]).
+    pub overrides: Vec<LayerOverride>,
+    /// v2: end-to-end layer-composition measurements (`tune --e2e`),
+    /// informational.
+    pub e2e: Vec<E2eEntry>,
+}
+
+impl TuningProfile {
+    /// An empty profile that always falls back to `default`.
+    pub fn empty(default: QuantType, threads: usize) -> TuningProfile {
+        TuningProfile {
+            threads,
+            default,
+            entries: Vec::new(),
+            overrides: Vec::new(),
+            e2e: Vec::new(),
+        }
+    }
+
+    /// The per-batch-width traffic fractions this profile was tuned at:
+    /// one row per distinct `n` across `entries` (the `weight` field is
+    /// per width, so the first entry at each width carries it), widths
+    /// ascending, normalized to sum to 1. Fixed `--batches` sweeps store
+    /// weight 1.0 per width and normalize to uniform. Empty for a
+    /// profile with no entries. `run`/`serve` compare this against the
+    /// live `ServingTrace` to warn when traffic drifts from what was
+    /// tuned (`ServingTrace::drift_l1`).
+    pub fn weighted_widths(&self) -> Vec<(usize, f64)> {
+        let mut per_n: Vec<(usize, f64)> = Vec::new();
+        for e in &self.entries {
+            if !per_n.iter().any(|&(n, _)| n == e.n) {
+                per_n.push((e.n, e.weight));
+            }
+        }
+        per_n.sort_unstable_by_key(|&(n, _)| n);
+        let total: f64 = per_n.iter().map(|&(_, w)| w).sum();
+        if total > 0.0 {
+            for e in per_n.iter_mut() {
+                e.1 /= total;
+            }
+        }
+        per_n
+    }
+
+    /// Select the kernel for an `m`×`k` matmul at batch size `n`.
+    ///
+    /// Resolution order (documented contract, see docs/tuning.md):
+    /// 1. the entry matching (m, k) with the **largest tuned batch ≤ n**
+    ///    (decode at n=1 uses the n=1 entry; a batch of 6 uses the n=4
+    ///    entry when 1 and 4 were tuned);
+    /// 2. if every tuned batch for (m, k) exceeds `n`, the smallest one;
+    /// 3. if (m, k) was never tuned at all, [`TuningProfile::default`].
+    pub fn select(&self, m: usize, k: usize, n: usize) -> QuantType {
+        self.select_traced(m, k, n).0
+    }
+
+    /// [`TuningProfile::select`], also reporting whether resolution fell
+    /// through to the untuned `default` (true = case 3, a fallback worth
+    /// surfacing — see [`DispatchPlan`]) **or** degraded because the
+    /// entry's winner was measured at a SIMD level this host cannot run
+    /// (a profile tuned on an AVX2 box loaded on a machine without it,
+    /// or under a forced `--simd scalar`), **or** because the winner was
+    /// measured on its block-skip sparse layout but sparse packing is
+    /// disabled here (`RUST_PALLAS_SPARSE=off` / `--sparse off` — no
+    /// tensor will carry the index the winner was tuned with). A
+    /// degraded entry re-ranks to the fastest of its measurements that
+    /// are both usable (SIMD) and runnable (dense when sparse is off),
+    /// keeping the choice measured rather than guessed; it falls back to
+    /// the recorded winner's kernel only when no such measurement exists
+    /// (hand-edited profiles) — the kernel itself still runs, just on
+    /// its scalar/dense path.
+    pub fn select_traced(&self, m: usize, k: usize, n: usize) -> (QuantType, bool) {
+        let mut below: Option<&TuningEntry> = None;
+        let mut above: Option<&TuningEntry> = None;
+        for e in self.entries.iter().filter(|e| e.m == m && e.k == k) {
+            if e.n <= n {
+                if below.map_or(true, |b| e.n > b.n) {
+                    below = Some(e);
+                }
+            } else if above.map_or(true, |a| e.n < a.n) {
+                above = Some(e);
+            }
+        }
+        match below.or(above) {
+            Some(e) => {
+                let sparse_ok = !e.best_sparse || sparse::enabled();
+                if simd::usable(e.best_simd) && sparse_ok {
+                    (e.best, false)
+                } else {
+                    let degraded = e
+                        .measurements
+                        .iter()
+                        .filter(|m| simd::usable(m.simd) && (!m.sparse || sparse::enabled()))
+                        .min_by(|a, b| {
+                            a.us_per_matmul.partial_cmp(&b.us_per_matmul).expect("finite")
+                        })
+                        .map(|m| m.qtype)
+                        .unwrap_or(e.best);
+                    (degraded, true)
+                }
+            }
+            None => (self.default, true),
+        }
+    }
+
+    /// Layer-aware selection: per-layer `overrides` for (layer, role)
+    /// resolve first (same largest-tuned-n ≤ n batch rule), then the
+    /// per-shape `entries`, then `default`. The bool reports a default
+    /// fallback exactly as in [`TuningProfile::select_traced`].
+    pub fn select_for(
+        &self,
+        layer: usize,
+        role: Role,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> (QuantType, bool) {
+        let mut below: Option<&LayerOverride> = None;
+        let mut above: Option<&LayerOverride> = None;
+        for o in self.overrides.iter().filter(|o| o.layer == layer && o.role == role) {
+            if o.n <= n {
+                if below.map_or(true, |b| o.n > b.n) {
+                    below = Some(o);
+                }
+            } else if above.map_or(true, |a| o.n < a.n) {
+                above = Some(o);
+            }
+        }
+        if let Some(o) = below.or(above) {
+            return (o.qtype, false);
+        }
+        self.select_traced(m, k, n)
+    }
+
+    /// Serialize to the JSON profile schema.
+    pub fn to_json(&self) -> Json {
+        let entries = self
+            .entries
+            .iter()
+            .map(|e| {
+                let ms = e
+                    .measurements
+                    .iter()
+                    .map(|m| {
+                        Json::Obj(vec![
+                            ("kernel".into(), Json::Str(m.qtype.name().into())),
+                            ("simd".into(), Json::Str(m.simd.name().into())),
+                            ("sparse".into(), Json::Bool(m.sparse)),
+                            ("us_per_matmul".into(), Json::Num(m.us_per_matmul)),
+                            ("gweights_per_s".into(), Json::Num(m.gweights_per_s)),
+                        ])
+                    })
+                    .collect();
+                Json::Obj(vec![
+                    ("m".into(), Json::Num(e.m as f64)),
+                    ("k".into(), Json::Num(e.k as f64)),
+                    ("n".into(), Json::Num(e.n as f64)),
+                    ("weight".into(), Json::Num(e.weight)),
+                    ("best".into(), Json::Str(e.best.name().into())),
+                    ("best_simd".into(), Json::Str(e.best_simd.name().into())),
+                    ("best_sparse".into(), Json::Bool(e.best_sparse)),
+                    ("measurements".into(), Json::Arr(ms)),
+                ])
+            })
+            .collect();
+        let mut fields = vec![
+            ("version".into(), Json::Num(PROFILE_VERSION as f64)),
+            ("threads".into(), Json::Num(self.threads as f64)),
+            ("default".into(), Json::Str(self.default.name().into())),
+            ("entries".into(), Json::Arr(entries)),
+        ];
+        if !self.overrides.is_empty() {
+            let os = self
+                .overrides
+                .iter()
+                .map(|o| {
+                    Json::Obj(vec![
+                        ("layer".into(), Json::Num(o.layer as f64)),
+                        ("role".into(), Json::Str(o.role.name().into())),
+                        ("n".into(), Json::Num(o.n as f64)),
+                        ("kernel".into(), Json::Str(o.qtype.name().into())),
+                    ])
+                })
+                .collect();
+            fields.push(("overrides".into(), Json::Arr(os)));
+        }
+        if !self.e2e.is_empty() {
+            let es = self
+                .e2e
+                .iter()
+                .map(|e| {
+                    Json::Obj(vec![
+                        ("label".into(), Json::Str(e.label.clone())),
+                        ("prefill_tok_s".into(), Json::Num(e.prefill_tok_s)),
+                        ("decode_tok_s".into(), Json::Num(e.decode_tok_s)),
+                    ])
+                })
+                .collect();
+            fields.push(("e2e".into(), Json::Arr(es)));
+        }
+        Json::Obj(fields)
+    }
+
+    /// Parse from the JSON profile schema. Every version listed in
+    /// [`SUPPORTED_PROFILE_VERSIONS`] loads; v1 files migrate by leaving
+    /// the sections they predate (`overrides`, `e2e`) empty. Anything
+    /// else is a clear error, not a field-order guess.
+    pub fn from_json(v: &Json) -> Result<TuningProfile> {
+        let version = v.get("version").and_then(Json::as_usize).context("profile: version")?;
+        if !SUPPORTED_PROFILE_VERSIONS.contains(&(version as u64)) {
+            bail!(
+                "unsupported profile version {version} (supported: {:?}); \
+                 regenerate with `bitnet tune --out <path>`",
+                SUPPORTED_PROFILE_VERSIONS
+            );
+        }
+        let threads = v.get("threads").and_then(Json::as_usize).context("profile: threads")?;
+        let default = parse_qtype(v.get("default").and_then(Json::as_str).context("profile: default")?)?;
+        let mut entries = Vec::new();
+        for (i, e) in v
+            .get("entries")
+            .and_then(Json::as_array)
+            .context("profile: entries")?
+            .iter()
+            .enumerate()
+        {
+            let field = |name: &str| {
+                e.get(name).and_then(Json::as_usize).with_context(|| format!("entry {i}: {name}"))
+            };
+            let best = parse_qtype(
+                e.get("best").and_then(Json::as_str).with_context(|| format!("entry {i}: best"))?,
+            )?;
+            let mut measurements = Vec::new();
+            if let Some(ms) = e.get("measurements").and_then(Json::as_array) {
+                for m in ms {
+                    let (Some(kname), Some(us), Some(gw)) = (
+                        m.get("kernel").and_then(Json::as_str),
+                        m.get("us_per_matmul").and_then(Json::as_f64),
+                        m.get("gweights_per_s").and_then(Json::as_f64),
+                    ) else {
+                        bail!("entry {i}: malformed measurement");
+                    };
+                    measurements.push(Measurement {
+                        qtype: parse_qtype(kname)?,
+                        simd: parse_simd(m.get("simd").and_then(Json::as_str), i)?,
+                        // Optional field: pre-v4 measurements were all
+                        // dense.
+                        sparse: m.get("sparse").and_then(Json::as_bool).unwrap_or(false),
+                        us_per_matmul: us,
+                        gweights_per_s: gw,
+                    });
+                }
+            }
+            entries.push(TuningEntry {
+                m: field("m")?,
+                k: field("k")?,
+                n: field("n")?,
+                // Optional field: profiles written before trace-driven
+                // tuning (and hand-edited ones) default to weight 1.0.
+                weight: e.get("weight").and_then(Json::as_f64).unwrap_or(1.0),
+                best,
+                best_simd: parse_simd(e.get("best_simd").and_then(Json::as_str), i)?,
+                // Optional field: pre-v4 winners were all dense.
+                best_sparse: e.get("best_sparse").and_then(Json::as_bool).unwrap_or(false),
+                measurements,
+            });
+        }
+        let mut overrides = Vec::new();
+        if let Some(os) = v.get("overrides").and_then(Json::as_array) {
+            for (i, o) in os.iter().enumerate() {
+                let role_name = o
+                    .get("role")
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("override {i}: role"))?;
+                let role = Role::parse(role_name)
+                    .with_context(|| format!("override {i}: unknown role {role_name:?}"))?;
+                overrides.push(LayerOverride {
+                    layer: o
+                        .get("layer")
+                        .and_then(Json::as_usize)
+                        .with_context(|| format!("override {i}: layer"))?,
+                    role,
+                    n: o
+                        .get("n")
+                        .and_then(Json::as_usize)
+                        .with_context(|| format!("override {i}: n"))?,
+                    qtype: parse_qtype(
+                        o.get("kernel")
+                            .and_then(Json::as_str)
+                            .with_context(|| format!("override {i}: kernel"))?,
+                    )?,
+                });
+            }
+        }
+        let mut e2e = Vec::new();
+        if let Some(es) = v.get("e2e").and_then(Json::as_array) {
+            for (i, e) in es.iter().enumerate() {
+                e2e.push(E2eEntry {
+                    label: e
+                        .get("label")
+                        .and_then(Json::as_str)
+                        .with_context(|| format!("e2e {i}: label"))?
+                        .to_string(),
+                    prefill_tok_s: e
+                        .get("prefill_tok_s")
+                        .and_then(Json::as_f64)
+                        .with_context(|| format!("e2e {i}: prefill_tok_s"))?,
+                    decode_tok_s: e
+                        .get("decode_tok_s")
+                        .and_then(Json::as_f64)
+                        .with_context(|| format!("e2e {i}: decode_tok_s"))?,
+                });
+            }
+        }
+        Ok(TuningProfile { threads, default, entries, overrides, e2e })
+    }
+
+    /// Write the profile to a JSON file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing profile {}", path.display()))
+    }
+
+    /// Load a profile from a JSON file.
+    pub fn load(path: &Path) -> Result<TuningProfile> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading profile {}", path.display()))?;
+        let v = Json::parse(&text).with_context(|| format!("parsing profile {}", path.display()))?;
+        Self::from_json(&v)
+    }
+}
+
+fn parse_qtype(name: &str) -> Result<QuantType> {
+    QuantType::parse(name).with_context(|| format!("unknown kernel {name:?} in profile"))
+}
+
+/// Parse an optional profile SIMD-level field: absent (v1/v2 files)
+/// defaults to `scalar`; present but unknown is a clear error.
+fn parse_simd(name: Option<&str>, entry: usize) -> Result<SimdLevel> {
+    match name {
+        None => Ok(SimdLevel::Scalar),
+        Some(s) => SimdLevel::parse(s)
+            .with_context(|| format!("entry {entry}: unknown simd level {s:?} in profile")),
+    }
+}
+
+/// How a model picks the kernel for each of its ternary projections.
+#[derive(Clone, Debug)]
+pub enum Dispatch {
+    /// Every projection uses this kernel (the pre-tuner behavior).
+    Fixed(QuantType),
+    /// Per-shape selection from a measured profile.
+    Auto(TuningProfile),
+}
+
+impl Dispatch {
+    /// The kernel for an `m`×`k` projection at decode batch `n`.
+    pub fn select(&self, m: usize, k: usize, n: usize) -> QuantType {
+        match self {
+            Dispatch::Fixed(q) => *q,
+            Dispatch::Auto(p) => p.select(m, k, n),
+        }
+    }
+
+    /// Layer-aware selection (see [`TuningProfile::select_for`]). The
+    /// bool reports that an `Auto` profile had no entry for the shape and
+    /// fell back to its default; `Fixed` never falls back.
+    pub fn select_for(
+        &self,
+        layer: usize,
+        role: Role,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> (QuantType, bool) {
+        match self {
+            Dispatch::Fixed(q) => (*q, false),
+            Dispatch::Auto(p) => p.select_for(layer, role, m, k, n),
+        }
+    }
+
+    /// A representative kernel (what `Transformer::qtype` reports): the
+    /// fixed kernel, or the profile's selection for the given shape.
+    pub fn representative(&self, m: usize, k: usize) -> QuantType {
+        self.select(m, k, 1)
+    }
+
+    /// One-line human description for logs.
+    pub fn describe(&self) -> String {
+        match self {
+            Dispatch::Fixed(q) => format!("fixed({})", q.name()),
+            Dispatch::Auto(p) => format!(
+                "auto({} tuned shapes, {} layer overrides, default {}, tuned @ {} threads)",
+                p.entries.len(),
+                p.overrides.len(),
+                p.default.name(),
+                p.threads
+            ),
+        }
+    }
+}
+
+/// The per-call kernel resolver the model's hot path consults: wraps a
+/// [`Dispatch`] policy with the call-site context (layer index, [`Role`],
+/// effective batch `n`) and observability — untuned-shape fallbacks are
+/// counted (surfaced as `dispatch_fallbacks` in the engine metrics) and,
+/// in verbose mode, logged once per (m, k, n) instead of silently
+/// inheriting the profile default.
+///
+/// Construction-time packing picks each layer's *primary* kernel through
+/// the same plan at n=1; `forward_batch` re-resolves per call with the
+/// real batch width, which is what routes prefill (n = chunk length) and
+/// batched decode (n = batch width) to different kernels than
+/// single-sequence decode (n=1) — the paper's prefill/decode split.
+pub struct DispatchPlan {
+    dispatch: Dispatch,
+    verbose: bool,
+    fallback_count: AtomicU64,
+    degraded_count: AtomicU64,
+    /// (m, k, n) shapes whose fallback was already logged (verbose only).
+    logged: Mutex<HashSet<(usize, usize, usize)>>,
+    /// (m, k, n) shapes whose degradation was already logged (verbose only).
+    logged_degraded: Mutex<HashSet<(usize, usize, usize)>>,
+}
+
+impl DispatchPlan {
+    /// Wrap a dispatch policy (non-verbose).
+    pub fn new(dispatch: Dispatch) -> DispatchPlan {
+        DispatchPlan {
+            dispatch,
+            verbose: false,
+            fallback_count: AtomicU64::new(0),
+            degraded_count: AtomicU64::new(0),
+            logged: Mutex::new(HashSet::new()),
+            logged_degraded: Mutex::new(HashSet::new()),
+        }
+    }
+
+    /// Enable once-per-shape fallback logging to stderr.
+    pub fn with_verbose(mut self, verbose: bool) -> DispatchPlan {
+        self.verbose = verbose;
+        self
+    }
+
+    /// The wrapped policy.
+    pub fn dispatch(&self) -> &Dispatch {
+        &self.dispatch
+    }
+
+    /// One-line human description for logs (delegates to the policy).
+    pub fn describe(&self) -> String {
+        self.dispatch.describe()
+    }
+
+    /// Resolve the kernel for one matmul call, recording fallbacks.
+    pub fn select(&self, layer: usize, role: Role, m: usize, k: usize, n: usize) -> QuantType {
+        let (q, fell_back) = self.dispatch.select_for(layer, role, m, k, n);
+        if fell_back {
+            self.fallback_count.fetch_add(1, Ordering::Relaxed);
+            if self.verbose {
+                let mut logged = self.logged.lock().unwrap();
+                if logged.insert((m, k, n)) {
+                    eprintln!(
+                        "dispatch: no tuned entry for {m}x{k} n={n}; falling back to {} \
+                         (re-run `bitnet tune` to cover this shape)",
+                        q.name()
+                    );
+                }
+            }
+        }
+        q
+    }
+
+    /// How many selections fell back to the profile default so far.
+    pub fn fallbacks(&self) -> u64 {
+        self.fallback_count.load(Ordering::Relaxed)
+    }
+
+    /// Record that a routed call could not run its resolved kernel
+    /// (`want`) and degraded to `ran` — alternate budget exhausted, K
+    /// alignment mismatch, or a non-reconstructable primary. Counted so
+    /// "tuned winner is live" is never silently untrue, logged once per
+    /// (m, k, n) in verbose mode.
+    pub fn note_degraded(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        want: QuantType,
+        ran: QuantType,
+    ) {
+        self.degraded_count.fetch_add(1, Ordering::Relaxed);
+        if self.verbose {
+            let mut logged = self.logged_degraded.lock().unwrap();
+            if logged.insert((m, k, n)) {
+                eprintln!(
+                    "dispatch: {m}x{k} n={n} resolved to {} but ran {} \
+                     (alternate budget or K alignment)",
+                    want.name(),
+                    ran.name()
+                );
+            }
+        }
+    }
+
+    /// How many routed calls degraded from their resolved kernel so far.
+    pub fn degraded(&self) -> u64 {
+        self.degraded_count.load(Ordering::Relaxed)
+    }
+}
+
+/// What [`tune`] measures.
+#[derive(Clone, Debug)]
+pub struct TuneConfig {
+    /// (m, k) matmul shapes to tune (see [`shapes_for_model`]).
+    pub shapes: Vec<(usize, usize)>,
+    /// Activation batch sizes to tune each shape at.
+    pub batches: Vec<usize>,
+    /// Traffic weight per entry of `batches`, parallel to it (empty =
+    /// every batch weighs 1.0, the fixed-sweep behavior). Trace-driven
+    /// sweeps ([`TuneConfig::set_weighted_batches`]) fill this with each
+    /// width's observed frequency, which `tune` records into the
+    /// profile's entries.
+    pub batch_weights: Vec<f64>,
+    /// Thread-pool size to measure with (match the serving `--threads`).
+    pub threads: usize,
+    /// Candidate kernels; non-applicable ones (k % k_multiple != 0) are
+    /// skipped per shape.
+    pub candidates: Vec<QuantType>,
+    /// Fallback kernel recorded in the profile.
+    pub default: QuantType,
+    /// Minimum timed iterations per (kernel, shape).
+    pub min_iters: usize,
+    /// Minimum measurement wall time per (kernel, shape), seconds.
+    pub min_seconds: f64,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        TuneConfig {
+            shapes: Vec::new(),
+            batches: vec![1, 4],
+            batch_weights: Vec::new(),
+            threads: 1,
+            candidates: default_candidates(),
+            default: QuantType::I2S,
+            min_iters: 3,
+            min_seconds: 0.06,
+        }
+    }
+}
+
+impl TuneConfig {
+    /// Replace the batch sweep with observed `(width, weight)` pairs —
+    /// the trace-driven mode (`tune --trace`): the sweep runs at exactly
+    /// the GEMM batch widths a recorded serving trace exhibits (see
+    /// `coordinator::trace::ServingTrace::weighted_batches`), no fixed
+    /// `--batches` fallback.
+    pub fn set_weighted_batches(&mut self, batches: &[(usize, f64)]) {
+        self.batches = batches.iter().map(|&(n, _)| n).collect();
+        self.batch_weights = batches.iter().map(|&(_, w)| w).collect();
+    }
+
+    /// The weight for `batches[i]` (1.0 when no weights were supplied).
+    fn batch_weight(&self, i: usize) -> f64 {
+        self.batch_weights.get(i).copied().unwrap_or(1.0)
+    }
+}
+
+/// The default candidate set: compact ternary-native serving kernels
+/// (storage ≤ 4 bpw). The dense baselines (F32/F16) and the general
+/// llama.cpp formats (Q4_0/Q2_K) are excluded on purpose — a dense MAD
+/// path can win a small cache-resident micro-benchmark, and silently
+/// packing a "ternary" model at 16–32 bpw would defeat the 1-bit
+/// serving premise. Measure them anyway with `--kernels`.
+pub fn default_candidates() -> Vec<QuantType> {
+    QuantType::ALL
+        .iter()
+        .copied()
+        .filter(|&q| {
+            let info = kernel_for(q).info();
+            info.ternary_native && info.bpw <= 4.0
+        })
+        .collect()
+}
+
+/// Micro-benchmark every applicable candidate on every (shape × batch)
+/// and return the winners as a [`TuningProfile`]. `progress` (when given)
+/// receives one line per measurement — the CLI wires it to stderr under
+/// `--verbose`.
+pub fn tune(cfg: &TuneConfig, mut progress: Option<&mut dyn FnMut(&str)>) -> TuningProfile {
+    // The process-wide pool, not a private one: tuning in a serving
+    // process used to layer a second worker set on top of the engine's,
+    // and the resulting oversubscription skewed the measurements the
+    // profile is built from.
+    let pool = pallas_core::threadpool::shared_pool(cfg.threads.max(1));
+    let mut entries = Vec::new();
+    for &(m, k) in &cfg.shapes {
+        for (bi, &n) in cfg.batches.iter().enumerate() {
+            let weight = cfg.batch_weight(bi);
+            if n == 0 {
+                // A zero-row matmul measures nothing; an n=0 entry would
+                // also shadow every real batch in `select` (e.n <= n).
+                if let Some(p) = progress.as_mut() {
+                    p(&format!("tune {m}x{k}: skipping batch 0 (no work to measure)"));
+                }
+                continue;
+            }
+            let mut measurements: Vec<Measurement> = Vec::new();
+            for &qt in &cfg.candidates {
+                let kern = kernel_for(qt);
+                if k % kern.info().k_multiple != 0 {
+                    continue;
+                }
+                // Measure each kernel once per SIMD tier it implements
+                // and this host can run — the per-shape winner is a
+                // (kernel, level) pair, not just a kernel, and the
+                // scalar row is what profile degradation falls back to
+                // on hosts that lack the winning vector tier.
+                let kernel_levels = kern.simd_levels();
+                // A kernel with a block-skip layout is additionally
+                // measured on a ~60%-zero-block synthetic tensor with
+                // sparse packing forced on — the sparse-vs-dense choice
+                // is a measured dispatch dimension, not a guess. Skipped
+                // entirely when sparse packing is disabled on this host
+                // (the measurement could never be served).
+                let sparse_variants: &[bool] = if kern.sparse_capable() && sparse::enabled() {
+                    &[false, true]
+                } else {
+                    &[false]
+                };
+                for level in simd::available_levels() {
+                    if !kernel_levels.contains(&level) {
+                        continue;
+                    }
+                    for &sp in sparse_variants {
+                        // Lock ordering: sparse mode outside, SIMD level
+                        // inside (matches the kernel test suite).
+                        let rate: KernelRate = if sp {
+                            sparse::with_mode(SparseMode::On, || {
+                                simd::with_level(level, || {
+                                    calibrate_kernel_shape_sparse(
+                                        qt,
+                                        m,
+                                        k,
+                                        n,
+                                        &pool,
+                                        cfg.min_iters,
+                                        cfg.min_seconds,
+                                    )
+                                })
+                            })
+                        } else {
+                            // Forced dense so a process-wide `on` mode
+                            // can't silently turn this row sparse.
+                            sparse::with_mode(SparseMode::Off, || {
+                                simd::with_level(level, || {
+                                    calibrate_kernel_shape(
+                                        qt,
+                                        m,
+                                        k,
+                                        n,
+                                        &pool,
+                                        cfg.min_iters,
+                                        cfg.min_seconds,
+                                    )
+                                })
+                            })
+                        };
+                        let meas = Measurement {
+                            qtype: qt,
+                            simd: level,
+                            sparse: sp,
+                            us_per_matmul: rate.secs_per_matmul(m, k) * 1e6,
+                            gweights_per_s: rate.weights_per_s / 1e9,
+                        };
+                        if let Some(p) = progress.as_mut() {
+                            p(&format!(
+                                "tune {m}x{k} n={n} {:<9} [{:<6}]{} {:>10.1} µs/matmul ({:.2} Gw/s)",
+                                qt.name(),
+                                level.name(),
+                                if sp { " sparse" } else { "       " },
+                                meas.us_per_matmul,
+                                meas.gweights_per_s
+                            ));
+                        }
+                        measurements.push(meas);
+                    }
+                }
+            }
+            if measurements.is_empty() {
+                continue;
+            }
+            measurements
+                .sort_by(|a, b| a.us_per_matmul.partial_cmp(&b.us_per_matmul).expect("finite"));
+            let best = measurements[0].qtype;
+            let best_simd = measurements[0].simd;
+            let best_sparse = measurements[0].sparse;
+            if let Some(p) = progress.as_mut() {
+                // Weighted (trace-driven) sweeps annotate each winner
+                // with its traffic share — even a single-width trace
+                // whose share is exactly 100%.
+                let sparse_tag = if best_sparse { " sparse" } else { "" };
+                if cfg.batch_weights.is_empty() {
+                    p(&format!(
+                        "tune {m}x{k} n={n} -> best {} [{}]{sparse_tag}",
+                        best.name(),
+                        best_simd.name()
+                    ));
+                } else {
+                    p(&format!(
+                        "tune {m}x{k} n={n} -> best {} [{}]{sparse_tag} ({:.1}% of traced traffic)",
+                        best.name(),
+                        best_simd.name(),
+                        weight * 100.0
+                    ));
+                }
+            }
+            entries.push(TuningEntry { m, k, n, weight, best, best_simd, best_sparse, measurements });
+        }
+    }
+    TuningProfile {
+        threads: cfg.threads.max(1),
+        default: cfg.default,
+        entries,
+        overrides: Vec::new(),
+        e2e: Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(m: usize, k: usize, n: usize, best: QuantType) -> TuningEntry {
+        TuningEntry {
+            m,
+            k,
+            n,
+            weight: 1.0,
+            best,
+            best_simd: SimdLevel::Scalar,
+            best_sparse: false,
+            measurements: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn select_prefers_largest_tuned_batch_not_above_n() {
+        let p = TuningProfile {
+            entries: vec![
+                entry(256, 256, 1, QuantType::Tl20),
+                entry(256, 256, 4, QuantType::Tq20),
+                entry(256, 256, 16, QuantType::F16),
+            ],
+            ..TuningProfile::empty(QuantType::I2S, 2)
+        };
+        assert_eq!(p.select(256, 256, 1), QuantType::Tl20);
+        assert_eq!(p.select(256, 256, 3), QuantType::Tl20);
+        assert_eq!(p.select(256, 256, 4), QuantType::Tq20);
+        assert_eq!(p.select(256, 256, 9), QuantType::Tq20);
+        assert_eq!(p.select(256, 256, 100), QuantType::F16);
+    }
+
+    #[test]
+    fn select_falls_back_to_smallest_batch_then_default() {
+        let p = TuningProfile {
+            entries: vec![entry(64, 512, 8, QuantType::Tl10)],
+            ..TuningProfile::empty(QuantType::I2S, 1)
+        };
+        // Tuned batches all exceed n → smallest tuned batch.
+        assert_eq!(p.select(64, 512, 1), QuantType::Tl10);
+        // Unknown shape → default.
+        assert_eq!(p.select(65, 512, 1), QuantType::I2S);
+        assert_eq!(p.select(64, 513, 4), QuantType::I2S);
+    }
+
+    #[test]
+    fn json_round_trip_is_lossless() {
+        let p = TuningProfile {
+            threads: 4,
+            default: QuantType::Tl20,
+            entries: vec![TuningEntry {
+                m: 768,
+                k: 256,
+                n: 1,
+                weight: 0.625,
+                best: QuantType::Tl21,
+                best_simd: SimdLevel::Avx2,
+                best_sparse: true,
+                measurements: vec![
+                    Measurement {
+                        qtype: QuantType::Tl21,
+                        simd: SimdLevel::Avx2,
+                        sparse: true,
+                        us_per_matmul: 12.5,
+                        gweights_per_s: 15.7,
+                    },
+                    Measurement {
+                        qtype: QuantType::I2S,
+                        simd: SimdLevel::Scalar,
+                        sparse: false,
+                        us_per_matmul: 14.0,
+                        gweights_per_s: 14.0,
+                    },
+                ],
+            }],
+            overrides: vec![LayerOverride {
+                layer: 3,
+                role: Role::Down,
+                n: 4,
+                qtype: QuantType::Tl20,
+            }],
+            e2e: vec![E2eEntry {
+                label: "auto".into(),
+                prefill_tok_s: 123.5,
+                decode_tok_s: 45.25,
+            }],
+        };
+        let back = TuningProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+        // And through the text form too.
+        let text = p.to_json().to_string_pretty();
+        let back2 = TuningProfile::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back2, p);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_profiles() {
+        assert!(TuningProfile::from_json(&Json::parse("{}").unwrap()).is_err());
+        let wrong_version =
+            r#"{"version": 99, "threads": 1, "default": "I2_S", "entries": []}"#;
+        let err = TuningProfile::from_json(&Json::parse(wrong_version).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("supported"), "{err:#}");
+        let bad_kernel =
+            r#"{"version": 1, "threads": 1, "default": "NOPE", "entries": []}"#;
+        assert!(TuningProfile::from_json(&Json::parse(bad_kernel).unwrap()).is_err());
+        let bad_role = r#"{"version": 2, "threads": 1, "default": "I2_S", "entries": [],
+            "overrides": [{"layer": 0, "role": "sideways", "n": 1, "kernel": "I2_S"}]}"#;
+        assert!(TuningProfile::from_json(&Json::parse(bad_role).unwrap()).is_err());
+    }
+
+    #[test]
+    fn v1_profiles_still_load() {
+        // A verbatim PR-1 (version 1) profile: no overrides/e2e sections.
+        let v1 = r#"{
+            "version": 1, "threads": 2, "default": "I2_S",
+            "entries": [{"m": 256, "k": 256, "n": 1, "best": "TL2_0", "measurements": []}]
+        }"#;
+        let p = TuningProfile::from_json(&Json::parse(v1).unwrap()).unwrap();
+        assert_eq!(p.select(256, 256, 1), QuantType::Tl20);
+        assert!(p.overrides.is_empty() && p.e2e.is_empty());
+        // Re-saving migrates to the current version.
+        let resaved = p.to_json();
+        assert_eq!(resaved.get("version").and_then(Json::as_usize), Some(PROFILE_VERSION as usize));
+    }
+
+    #[test]
+    fn layer_overrides_take_precedence_with_batch_resolution() {
+        let mut p = TuningProfile::empty(QuantType::I2S, 1);
+        p.entries.push(entry(256, 256, 1, QuantType::Tl20));
+        p.overrides.push(LayerOverride { layer: 1, role: Role::Qkv, n: 1, qtype: QuantType::Tl11 });
+        p.overrides.push(LayerOverride { layer: 1, role: Role::Qkv, n: 8, qtype: QuantType::Tl21 });
+        // Overridden layer/role: batch rule applies over the overrides.
+        assert_eq!(p.select_for(1, Role::Qkv, 256, 256, 1), (QuantType::Tl11, false));
+        assert_eq!(p.select_for(1, Role::Qkv, 256, 256, 6), (QuantType::Tl11, false));
+        assert_eq!(p.select_for(1, Role::Qkv, 256, 256, 8), (QuantType::Tl21, false));
+        // Other layers / roles fall through to the shape entries…
+        assert_eq!(p.select_for(0, Role::Qkv, 256, 256, 1), (QuantType::Tl20, false));
+        assert_eq!(p.select_for(1, Role::O, 256, 256, 1), (QuantType::Tl20, false));
+        // …and untuned shapes to the default, flagged as a fallback.
+        assert_eq!(p.select_for(0, Role::Down, 512, 512, 1), (QuantType::I2S, true));
+    }
+
+    #[test]
+    fn dispatch_plan_counts_fallbacks() {
+        let mut p = TuningProfile::empty(QuantType::I2S, 1);
+        p.entries.push(entry(256, 256, 1, QuantType::Tl20));
+        let plan = DispatchPlan::new(Dispatch::Auto(p));
+        assert_eq!(plan.select(0, Role::Qkv, 256, 256, 1), QuantType::Tl20);
+        assert_eq!(plan.fallbacks(), 0);
+        assert_eq!(plan.select(0, Role::Qkv, 512, 512, 1), QuantType::I2S);
+        assert_eq!(plan.select(0, Role::Qkv, 512, 512, 1), QuantType::I2S);
+        assert_eq!(plan.fallbacks(), 2);
+        // Fixed never falls back.
+        let fixed = DispatchPlan::new(Dispatch::Fixed(QuantType::Tl21));
+        assert_eq!(fixed.select(9, Role::Up, 1, 1, 1), QuantType::Tl21);
+        assert_eq!(fixed.fallbacks(), 0);
+        // Degradations (resolved winner couldn't run) count separately.
+        assert_eq!(fixed.degraded(), 0);
+        fixed.note_degraded(256, 256, 8, QuantType::Tl21, QuantType::I2S);
+        assert_eq!(fixed.degraded(), 1);
+        assert_eq!(fixed.fallbacks(), 0);
+    }
+
+    #[test]
+    fn vector_winner_degrades_to_usable_measurement() {
+        let mut e = entry(256, 256, 1, QuantType::Tl11);
+        e.best_simd = SimdLevel::Avx2;
+        e.measurements = vec![
+            Measurement {
+                qtype: QuantType::Tl11,
+                simd: SimdLevel::Avx2,
+                sparse: false,
+                us_per_matmul: 10.0,
+                gweights_per_s: 20.0,
+            },
+            Measurement {
+                qtype: QuantType::Tq20,
+                simd: SimdLevel::Scalar,
+                sparse: false,
+                us_per_matmul: 15.0,
+                gweights_per_s: 13.0,
+            },
+            Measurement {
+                qtype: QuantType::Tl11,
+                simd: SimdLevel::Scalar,
+                sparse: false,
+                us_per_matmul: 18.0,
+                gweights_per_s: 11.0,
+            },
+        ];
+        let p = TuningProfile {
+            entries: vec![e],
+            ..TuningProfile::empty(QuantType::I2S, 1)
+        };
+        // Forced scalar: the AVX2 winner is unusable, so resolution
+        // re-ranks to the fastest scalar measurement and reports the
+        // degrade as a fallback.
+        simd::with_level(SimdLevel::Scalar, || {
+            assert_eq!(p.select_traced(256, 256, 1), (QuantType::Tq20, true));
+        });
+
+        // No usable measurement recorded (hand-edited profile): keep the
+        // winner's kernel — it still runs, on its scalar path.
+        let mut bare = entry(64, 128, 1, QuantType::Tl10);
+        bare.best_simd = SimdLevel::Neon;
+        let p2 = TuningProfile {
+            entries: vec![bare],
+            ..TuningProfile::empty(QuantType::I2S, 1)
+        };
+        simd::with_level(SimdLevel::Scalar, || {
+            assert_eq!(p2.select_traced(64, 128, 1), (QuantType::Tl10, true));
+        });
+    }
+
+    #[test]
+    fn sparse_winner_degrades_when_sparse_packing_is_off() {
+        let mut e = entry(256, 256, 1, QuantType::Tl10);
+        e.best_sparse = true;
+        e.measurements = vec![
+            Measurement {
+                qtype: QuantType::Tl10,
+                simd: SimdLevel::Scalar,
+                sparse: true,
+                us_per_matmul: 8.0,
+                gweights_per_s: 25.0,
+            },
+            Measurement {
+                qtype: QuantType::I2S,
+                simd: SimdLevel::Scalar,
+                sparse: false,
+                us_per_matmul: 12.0,
+                gweights_per_s: 16.0,
+            },
+            Measurement {
+                qtype: QuantType::Tl10,
+                simd: SimdLevel::Scalar,
+                sparse: false,
+                us_per_matmul: 14.0,
+                gweights_per_s: 14.0,
+            },
+        ];
+        let p = TuningProfile { entries: vec![e], ..TuningProfile::empty(QuantType::Tl20, 1) };
+        // Sparse packing enabled: the sparse-tuned winner is served.
+        sparse::with_mode(SparseMode::On, || {
+            assert_eq!(p.select_traced(256, 256, 1), (QuantType::Tl10, false));
+        });
+        // Sparse packing disabled: no tensor carries the block-skip
+        // index the winner was tuned with, so resolution re-ranks to the
+        // fastest dense measurement and reports the degrade.
+        sparse::with_mode(SparseMode::Off, || {
+            assert_eq!(p.select_traced(256, 256, 1), (QuantType::I2S, true));
+        });
+    }
+
+    #[test]
+    fn dispatch_plan_counts_simd_degrades_as_fallbacks() {
+        let mut e = entry(256, 256, 1, QuantType::Tl11);
+        e.best_simd = SimdLevel::Avx2;
+        e.measurements = vec![Measurement {
+            qtype: QuantType::I2S,
+            simd: SimdLevel::Scalar,
+            sparse: false,
+            us_per_matmul: 15.0,
+            gweights_per_s: 13.0,
+        }];
+        let p = TuningProfile {
+            entries: vec![e],
+            ..TuningProfile::empty(QuantType::Tl20, 1)
+        };
+        let plan = DispatchPlan::new(Dispatch::Auto(p));
+        simd::with_level(SimdLevel::Scalar, || {
+            assert_eq!(plan.select(0, Role::Qkv, 256, 256, 1), QuantType::I2S);
+        });
+        assert_eq!(plan.fallbacks(), 1);
+    }
+
+    #[test]
+    fn tune_measures_every_usable_simd_level() {
+        let cfg = TuneConfig {
+            shapes: vec![(16, 128)],
+            batches: vec![1],
+            candidates: vec![QuantType::I2S],
+            min_iters: 1,
+            min_seconds: 0.001,
+            ..TuneConfig::default()
+        };
+        let profile = tune(&cfg, None);
+        assert_eq!(profile.entries.len(), 1);
+        let e = &profile.entries[0];
+        // Every measurement ran at a level the kernel implements, at
+        // most once per (level, sparse) variant, and the recorded winner
+        // is the fastest.
+        assert!(!e.measurements.is_empty());
+        let kern_levels = kernel_for(QuantType::I2S).simd_levels();
+        let mut seen: Vec<(SimdLevel, bool)> = Vec::new();
+        for m in &e.measurements {
+            assert!(kern_levels.contains(&m.simd));
+            assert!(
+                !seen.contains(&(m.simd, m.sparse)),
+                "duplicate variant {:?} sparse={}",
+                m.simd,
+                m.sparse
+            );
+            seen.push((m.simd, m.sparse));
+        }
+        // A dense row always exists, and every sparse row is paired with
+        // a dense row at the same level. (Whether sparse rows exist at
+        // all depends on the process-wide sparse mode, which concurrent
+        // `with_mode` tests may be forcing — don't re-read it here.)
+        assert!(e.measurements.iter().any(|m| !m.sparse));
+        for m in e.measurements.iter().filter(|m| m.sparse) {
+            assert!(
+                e.measurements.iter().any(|d| d.simd == m.simd && !d.sparse),
+                "sparse measurement at {:?} lacks its dense counterpart",
+                m.simd
+            );
+        }
+        assert_eq!(
+            (e.best, e.best_simd, e.best_sparse),
+            (e.measurements[0].qtype, e.measurements[0].simd, e.measurements[0].sparse)
+        );
+        // The profile round-trips with the level fields intact.
+        let back = TuningProfile::from_json(&profile.to_json()).unwrap();
+        assert_eq!(back, profile);
+    }
+
+    #[test]
+    fn role_names_round_trip() {
+        for r in Role::ALL {
+            assert_eq!(Role::parse(r.name()), Some(r));
+        }
+        assert_eq!(Role::parse("QKV"), Some(Role::Qkv));
+        assert_eq!(Role::parse("nope"), None);
+    }
+
+    #[test]
+    fn default_candidates_exclude_dense_and_general_formats() {
+        let c = default_candidates();
+        for q in [QuantType::I2S, QuantType::Tl20, QuantType::Tl11, QuantType::Tq10] {
+            assert!(c.contains(&q), "{q:?} should be a default candidate");
+        }
+        for q in [QuantType::F32, QuantType::F16, QuantType::Q40, QuantType::Q2K] {
+            assert!(!c.contains(&q), "{q:?} must not be packed by default auto-tuning");
+        }
+    }
+
+    #[test]
+    fn tune_skips_zero_batch() {
+        let cfg = TuneConfig {
+            shapes: vec![(16, 128)],
+            batches: vec![0, 1],
+            candidates: vec![QuantType::I2S],
+            min_iters: 1,
+            min_seconds: 0.001,
+            ..TuneConfig::default()
+        };
+        let profile = tune(&cfg, None);
+        assert_eq!(profile.entries.len(), 1);
+        assert_eq!(profile.entries[0].n, 1);
+    }
+
+    #[test]
+    fn weighted_batches_are_recorded_into_entries() {
+        let mut cfg = TuneConfig {
+            shapes: vec![(16, 128)],
+            candidates: vec![QuantType::I2S],
+            min_iters: 1,
+            min_seconds: 0.001,
+            ..TuneConfig::default()
+        };
+        cfg.set_weighted_batches(&[(1, 0.75), (2, 0.25)]);
+        assert_eq!(cfg.batches, vec![1, 2]);
+        let profile = tune(&cfg, None);
+        assert_eq!(profile.entries.len(), 2);
+        assert_eq!((profile.entries[0].n, profile.entries[0].weight), (1, 0.75));
+        assert_eq!((profile.entries[1].n, profile.entries[1].weight), (2, 0.25));
+        // Weights survive the JSON round trip.
+        let back = TuningProfile::from_json(&profile.to_json()).unwrap();
+        assert_eq!(back, profile);
+        // Fixed sweeps (no weights supplied) record the neutral 1.0.
+        let fixed = tune(
+            &TuneConfig {
+                shapes: vec![(16, 128)],
+                batches: vec![1],
+                candidates: vec![QuantType::I2S],
+                min_iters: 1,
+                min_seconds: 0.001,
+                ..TuneConfig::default()
+            },
+            None,
+        );
+        assert_eq!(fixed.entries[0].weight, 1.0);
+    }
+
+    #[test]
+    fn tune_produces_entries_with_winners() {
+        let cfg = TuneConfig {
+            shapes: vec![(64, 256)],
+            batches: vec![1],
+            candidates: vec![QuantType::I2S, QuantType::Tl10],
+            min_iters: 2,
+            min_seconds: 0.005,
+            ..TuneConfig::default()
+        };
+        let mut lines = Vec::new();
+        let mut sink = |s: &str| lines.push(s.to_string());
+        let profile = tune(&cfg, Some(&mut sink));
+        assert_eq!(profile.entries.len(), 1);
+        let e = &profile.entries[0];
+        assert_eq!((e.m, e.k, e.n), (64, 256, 1));
+        assert!(cfg.candidates.contains(&e.best));
+        // At least one measurement per candidate (more when the host runs
+        // a vector tier: one row per usable SIMD level).
+        assert!(e.measurements.len() >= 2, "{:?}", e.measurements);
+        assert!(e.measurements[0].us_per_matmul <= e.measurements[1].us_per_matmul);
+        assert!(!lines.is_empty());
+        // Selection from a freshly tuned profile resolves to the winner.
+        assert_eq!(profile.select(64, 256, 1), e.best);
+    }
+
+    #[test]
+    fn dispatch_policies_select_as_documented() {
+        let fixed = Dispatch::Fixed(QuantType::Tl21);
+        assert_eq!(fixed.select(10, 20, 1), QuantType::Tl21);
+        assert!(fixed.describe().contains("TL2_1"));
+
+        let mut p = TuningProfile::empty(QuantType::I2S, 1);
+        p.entries.push(entry(256, 768, 1, QuantType::Tl11));
+        let auto = Dispatch::Auto(p);
+        assert_eq!(auto.select(256, 768, 1), QuantType::Tl11);
+        assert_eq!(auto.select(512, 512, 1), QuantType::I2S, "missing shape → default");
+        assert!(auto.describe().contains("auto"));
+    }
+}

@@ -1,0 +1,25 @@
+//! # pallas-kernels — ternary mpGEMM kernel library
+//!
+//! The paper's TL1/TL2/I2_S kernels and every baseline they are
+//! compared against ([`kernels`]), plus the perf harnesses that
+//! calibrate and roofline them ([`perf`]). Sits directly above
+//! [`pallas_core`] (thread pool, utilities); knows nothing about the
+//! transformer or the serving stack.
+//!
+//! `unsafe` is confined to the explicit SIMD implementations under
+//! `kernels/simd/` (intrinsics + documented `# Safety` contracts), the
+//! bounds-free LUT reads in the scalar kernel hot loops, and the
+//! disjoint-write pointer fan-out of the threaded matmul. Every block
+//! carries a `// SAFETY:` comment; the `undocumented_unsafe_blocks`
+//! clippy lint keeps it that way.
+
+#![warn(clippy::undocumented_unsafe_blocks)]
+
+pub mod kernels;
+#[deny(unsafe_code)]
+pub mod perf;
+
+pub use kernels::{Dispatch, DispatchPlan, QuantType, Role, TuningProfile};
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,89 @@
+//! Memory-bandwidth meter — the PCM stand-in for the paper's Fig. 10
+//! (token throughput vs measured bandwidth as threads scale).
+//!
+//! The paper reads bandwidth counters from Intel PCM; no such counters are
+//! available here, so we measure two quantities ourselves:
+//! * [`stream_read_gbps`] — achievable read bandwidth at a given thread
+//!   count (a STREAM-like triad over a buffer ≫ LLC);
+//! * [`KernelTraffic`] — the bytes a kernel *must* move per token
+//!   (weights + LUT/activation traffic), which, divided by measured step
+//!   time, gives the achieved-bandwidth curve plotted side-by-side with
+//!   tokens/s.
+
+use pallas_core::threadpool::ThreadPool;
+use std::time::Instant;
+
+/// Measure sustained read bandwidth (GB/s) with `pool`'s threads, reading
+/// `mb` megabytes per pass, `passes` times.
+pub fn stream_read_gbps(pool: &ThreadPool, mb: usize, passes: usize) -> f64 {
+    let n = mb * 1024 * 1024 / 8;
+    let buf: Vec<u64> = (0..n as u64).collect();
+    let chunks = pool.size() * 4;
+    let per = n / chunks;
+    // One warm pass.
+    run_pass(pool, &buf, chunks, per);
+    let t0 = Instant::now();
+    for _ in 0..passes {
+        run_pass(pool, &buf, chunks, per);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    (mb * passes) as f64 / 1024.0 / secs
+}
+
+fn run_pass(pool: &ThreadPool, buf: &[u64], chunks: usize, per: usize) {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let sink = AtomicU64::new(0);
+    pool.parallel_for(chunks, |c| {
+        let lo = c * per;
+        let hi = ((c + 1) * per).min(buf.len());
+        let mut acc = 0u64;
+        for &v in &buf[lo..hi] {
+            acc = acc.wrapping_add(v);
+        }
+        sink.fetch_xor(acc, Ordering::Relaxed);
+    });
+    std::hint::black_box(sink.into_inner());
+}
+
+/// Byte traffic of one decode step under a kernel (per-token bound).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KernelTraffic {
+    /// Packed weight bytes streamed.
+    pub weight_bytes: u64,
+    /// Activation / LUT bytes touched.
+    pub act_bytes: u64,
+}
+
+impl KernelTraffic {
+    pub fn total(&self) -> u64 {
+        self.weight_bytes + self.act_bytes
+    }
+
+    /// Achieved bandwidth (GB/s) given a measured per-token time.
+    pub fn achieved_gbps(&self, token_seconds: f64) -> f64 {
+        if token_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.total() as f64 / 1e9 / token_seconds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_is_positive_and_sane() {
+        let pool = ThreadPool::new(2);
+        let gbps = stream_read_gbps(&pool, 32, 2);
+        assert!(gbps > 0.5, "gbps {gbps}");
+        assert!(gbps < 10_000.0, "gbps {gbps}");
+    }
+
+    #[test]
+    fn traffic_math() {
+        let t = KernelTraffic { weight_bytes: 1_000_000_000, act_bytes: 0 };
+        assert!((t.achieved_gbps(0.5) - 2.0).abs() < 1e-9);
+        assert_eq!(t.achieved_gbps(0.0), 0.0);
+    }
+}

@@ -1,0 +1,126 @@
+//! Mini-criterion: warmup + timed iterations + summary statistics, with a
+//! `black_box` to defeat dead-code elimination. All paper-table benches
+//! are built on this.
+
+use pallas_core::util::Summary;
+use std::time::{Duration, Instant};
+
+/// One benchmark's outcome.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time summary (seconds).
+    pub seconds: Summary,
+    pub iterations: usize,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        self.seconds.mean
+    }
+    pub fn p50_s(&self) -> f64 {
+        self.seconds.p50
+    }
+    /// Iterations per second at the mean.
+    pub fn throughput(&self) -> f64 {
+        if self.seconds.mean > 0.0 {
+            1.0 / self.seconds.mean
+        } else {
+            0.0
+        }
+    }
+    pub fn report(&self) -> String {
+        let m = self.seconds.mean;
+        let (scale, unit) = if m >= 1.0 {
+            (1.0, "s")
+        } else if m >= 1e-3 {
+            (1e3, "ms")
+        } else if m >= 1e-6 {
+            (1e6, "µs")
+        } else {
+            (1e9, "ns")
+        };
+        format!(
+            "{:<32} {:>9.3}{} ±{:>6.1}% (n={})",
+            self.name,
+            m * scale,
+            unit,
+            if m > 0.0 { self.seconds.std / m * 100.0 } else { 0.0 },
+            self.iterations
+        )
+    }
+}
+
+/// Prevent the optimizer from eliding a computation.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Run `f` repeatedly: warm up for `warmup`, then time iterations until
+/// `measure` wall time has elapsed (at least 3 iterations).
+pub fn bench<F: FnMut()>(name: &str, warmup: Duration, measure: Duration, mut f: F) -> BenchResult {
+    // Warmup.
+    let t0 = Instant::now();
+    while t0.elapsed() < warmup {
+        f();
+    }
+    // Measure.
+    let mut samples = Vec::new();
+    let t1 = Instant::now();
+    while t1.elapsed() < measure || samples.len() < 3 {
+        let s = Instant::now();
+        f();
+        samples.push(s.elapsed().as_secs_f64());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        seconds: Summary::from_samples(&samples),
+        iterations: samples.len(),
+    }
+}
+
+/// Convenience: short bench with default budgets (50ms warmup / 300ms
+/// measure) — the profile used by the paper-table benches so a full sweep
+/// stays in CI budget.
+pub fn bench_quick<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench(name, Duration::from_millis(50), Duration::from_millis(300), f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_a_known_sleep() {
+        let r = bench(
+            "sleep1ms",
+            Duration::from_millis(5),
+            Duration::from_millis(60),
+            || std::thread::sleep(Duration::from_millis(1)),
+        );
+        assert!(r.seconds.mean >= 0.001, "mean {}", r.seconds.mean);
+        assert!(r.seconds.mean < 0.01, "mean {}", r.seconds.mean);
+        assert!(r.iterations >= 3);
+    }
+
+    #[test]
+    fn throughput_inverts_mean() {
+        let r = bench_quick("noop", || {
+            black_box(1 + 1);
+        });
+        assert!(r.throughput() > 1000.0);
+    }
+
+    #[test]
+    fn report_formats() {
+        let r = bench_quick("fmt", || {
+            black_box(0);
+        });
+        let s = r.report();
+        assert!(s.contains("fmt"));
+    }
+}

@@ -1,0 +1,171 @@
+//! Quality-evaluation harness (paper Table 2 stand-in).
+//!
+//! We cannot download bitnet_b1_58-large or WikiText2 (see DESIGN.md
+//! §Substitutions); the Table-2 *claim* is equality/closeness to the
+//! full-precision path, which is checkable exactly on any corpus:
+//!
+//! * **perplexity** of the same synthetic model under each kernel over a
+//!   deterministic token stream — lossless kernels must match the
+//!   training-scheme reference to the last bit, `_0` kernels must be
+//!   within noise;
+//! * a **cloze accuracy** task (WinoGrande/HellaSwag stand-in): pick the
+//!   higher-likelihood continuation out of candidate pairs, scoring
+//!   agreement with the reference path.
+
+use crate::model::{Session, Transformer};
+
+/// Natural-log perplexity of `tokens` under `model` (teacher-forced).
+/// `tokens.len()` must be ≥ 2.
+pub fn perplexity(model: &Transformer, tokens: &[u32]) -> f64 {
+    assert!(tokens.len() >= 2, "need at least two tokens");
+    let mut session: Session = model.new_session(tokens.len());
+    let mut nll = 0f64;
+    let mut count = 0usize;
+    // Feed token t, score token t+1.
+    let mut logits = model.prefill(&mut session, &tokens[..1]);
+    for w in tokens.windows(2) {
+        let target = w[1] as usize;
+        nll += -log_softmax_at(&logits, target);
+        count += 1;
+        logits = model.decode_step(&mut session, w[1]);
+    }
+    (nll / count as f64).exp()
+}
+
+/// log softmax(logits)[target], computed in f64 for stability.
+pub fn log_softmax_at(logits: &[f32], target: usize) -> f64 {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let logsum: f64 = (logits.iter().map(|&v| ((v as f64) - max).exp()).sum::<f64>()).ln() + max;
+    logits[target] as f64 - logsum
+}
+
+/// One cloze item: a context and two candidate continuations, `correct`
+/// indexing the "right" one (as judged by the reference model).
+#[derive(Clone, Debug)]
+pub struct ClozeItem {
+    pub context: Vec<u32>,
+    pub candidates: [Vec<u32>; 2],
+}
+
+/// Score a candidate continuation: mean log-likelihood under the model.
+pub fn continuation_loglik(model: &Transformer, context: &[u32], cont: &[u32]) -> f64 {
+    let mut session = model.new_session(context.len() + cont.len());
+    let mut logits = model.prefill(&mut session, context);
+    let mut ll = 0f64;
+    for &t in cont {
+        ll += log_softmax_at(&logits, t as usize);
+        logits = model.decode_step(&mut session, t);
+    }
+    ll / cont.len().max(1) as f64
+}
+
+/// Pick the higher-likelihood candidate (0 or 1).
+pub fn cloze_choice(model: &Transformer, item: &ClozeItem) -> usize {
+    let a = continuation_loglik(model, &item.context, &item.candidates[0]);
+    let b = continuation_loglik(model, &item.context, &item.candidates[1]);
+    if a >= b {
+        0
+    } else {
+        1
+    }
+}
+
+/// Fraction of items where `model` agrees with `reference`.
+pub fn cloze_agreement(model: &Transformer, reference: &Transformer, items: &[ClozeItem]) -> f64 {
+    if items.is_empty() {
+        return 1.0;
+    }
+    let agree = items
+        .iter()
+        .filter(|it| cloze_choice(model, it) == cloze_choice(reference, it))
+        .count();
+    agree as f64 / items.len() as f64
+}
+
+/// Deterministic synthetic cloze set over the model's vocab.
+pub fn synthetic_cloze_set(vocab: usize, n_items: usize, seed: u64) -> Vec<ClozeItem> {
+    let mut rng = pallas_core::util::Rng::new(seed);
+    (0..n_items)
+        .map(|_| {
+            let ctx_len = 3 + rng.next_below(6);
+            let cont_len = 2 + rng.next_below(3);
+            let mut tok = || 3 + rng.next_below(vocab - 3) as u32;
+            let context: Vec<u32> = (0..ctx_len).map(|_| tok()).collect();
+            let a: Vec<u32> = (0..cont_len).map(|_| tok()).collect();
+            let b: Vec<u32> = (0..cont_len).map(|_| tok()).collect();
+            ClozeItem { context, candidates: [a, b] }
+        })
+        .collect()
+}
+
+/// Deterministic synthetic evaluation token stream (the WikiText2
+/// stand-in), produced by tokenizing the Zipf-ish corpus.
+pub fn eval_token_stream(vocab: usize, n_tokens: usize, seed: u64) -> Vec<u32> {
+    use crate::tokenizer::{synthetic_corpus, Tokenizer};
+    let tok = Tokenizer::train(&synthetic_corpus(4000, seed), vocab.min(2048));
+    let mut ids = tok.encode(&synthetic_corpus(n_tokens, seed + 1));
+    ids.truncate(n_tokens);
+    // Clamp into vocab in case the tokenizer's vocab exceeds the model's.
+    for id in ids.iter_mut() {
+        if *id as usize >= vocab {
+            *id = (*id as usize % (vocab - 3) + 3) as u32;
+        }
+    }
+    ids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use pallas_kernels::kernels::QuantType;
+    use crate::model::ModelConfig;
+
+    fn tiny(qt: QuantType) -> Transformer {
+        Transformer::synthetic(&ModelConfig::tiny(), qt, 5)
+    }
+
+    #[test]
+    fn log_softmax_is_normalized() {
+        let logits = vec![1.0f32, 2.0, 3.0];
+        let total: f64 = (0..3).map(|i| log_softmax_at(&logits, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn perplexity_bounded_by_vocab() {
+        let model = tiny(QuantType::I2S);
+        let tokens = eval_token_stream(512, 40, 1);
+        let ppl = perplexity(&model, &tokens);
+        assert!(ppl > 1.0, "{ppl}");
+        assert!(ppl < 512.0 * 4.0, "{ppl}"); // way below worst-case-ish
+    }
+
+    #[test]
+    fn lossless_kernels_identical_perplexity() {
+        let tokens = eval_token_stream(512, 30, 2);
+        let p_ref = perplexity(&tiny(QuantType::I2S), &tokens);
+        let p_tl1 = perplexity(&tiny(QuantType::Tl11), &tokens);
+        let p_tl2 = perplexity(&tiny(QuantType::Tl21), &tokens);
+        assert_eq!(p_ref, p_tl1, "TL1_1 must be bit-identical");
+        assert_eq!(p_ref, p_tl2, "TL2_1 must be bit-identical");
+    }
+
+    #[test]
+    fn fast_kernels_close_perplexity() {
+        let tokens = eval_token_stream(512, 30, 3);
+        let p_ref = perplexity(&tiny(QuantType::I2S), &tokens);
+        for qt in [QuantType::Tl10, QuantType::Tl20, QuantType::Tq20] {
+            let p = perplexity(&tiny(qt), &tokens);
+            let rel = (p - p_ref).abs() / p_ref;
+            assert!(rel < 0.05, "{qt:?}: ppl {p} vs ref {p_ref}");
+        }
+    }
+
+    #[test]
+    fn cloze_agreement_is_total_for_lossless() {
+        let items = synthetic_cloze_set(512, 8, 4);
+        let reference = tiny(QuantType::I2S);
+        let model = tiny(QuantType::Tl21);
+        assert_eq!(cloze_agreement(&model, &reference, &items), 1.0);
+    }
+}

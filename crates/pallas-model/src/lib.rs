@@ -1,0 +1,27 @@
+//! # pallas-model — BitNet b1.58 model layer
+//!
+//! The transformer ([`model`]: BitLinear, sessions, sampling), GGUF-style
+//! checkpoint IO ([`modelio`]), the byte-fallback BPE [`tokenizer`], the
+//! perplexity/task [`eval`] harness, and the end-to-end half of the
+//! auto-tuner ([`tuner_e2e`] — the part that has to build whole models,
+//! split out of `pallas_kernels::kernels::tuner` so the kernel crate
+//! never depends upward on this one).
+//!
+//! Sessions allocate KV pages from [`pallas_core::arena`] — the arena
+//! sits *below* this crate, so the model layer never reaches up into
+//! the serving coordinator.
+
+#![warn(clippy::undocumented_unsafe_blocks)]
+
+#[deny(unsafe_code)]
+pub mod eval;
+pub mod model;
+#[deny(unsafe_code)]
+pub mod modelio;
+#[deny(unsafe_code)]
+pub mod tokenizer;
+#[deny(unsafe_code)]
+pub mod tuner_e2e;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

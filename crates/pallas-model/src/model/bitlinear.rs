@@ -1,0 +1,467 @@
+//! **BitLinear**: the ternary linear layer of BitNet b1.58, dispatching
+//! its mpGEMM through any kernel in the library. Holds the packed weight
+//! tensor; activation quantization happens inside the kernel's `prepare`
+//! so each kernel applies its own scheme (per-tensor for the lossless
+//! kernels, per-block for the llama.cpp baselines — exactly the
+//! distinction Figure 2 of the paper illustrates).
+//!
+//! Since PR 2 the layer is a **multi-packed container**: one *primary*
+//! packing (chosen at construction for the n=1 decode regime) plus up to
+//! [`MAX_ALTERNATES`] alternate packings, materialized lazily the first
+//! time a [`pallas_kernels::kernels::DispatchPlan`] routes a call to a different
+//! kernel — e.g. TL2 for compute-bound prefill chunks while I2_S serves
+//! memory-bound decode. Alternates are repacked from the primary tensor
+//! (exact for ternary-native kernels, which round-trip `dequantize`), so
+//! the unpacked weights are never retained. The resident memory cost is
+//! reported by [`BitLinear::weight_bytes`].
+
+use pallas_kernels::kernels::quant::TernaryWeights;
+use pallas_kernels::kernels::tuner::{DispatchPlan, Role};
+use pallas_kernels::kernels::{
+    kernel_for, matmul, matmul_prepared, Dispatch, Kernel, PreparedActivations, QTensor, QuantType,
+};
+use pallas_core::threadpool::ThreadPool;
+use std::sync::{Arc, RwLock};
+
+/// Cap on alternate packings held per projection — the "repack
+/// threshold" bounding multi-packing memory: primary + at most this many
+/// alternates (2 covers the decode / prefill / wide-batch regimes).
+/// Selections that would exceed the cap run on the primary instead and
+/// are *not* an error (speed degrades gracefully, memory stays bounded).
+pub const MAX_ALTERNATES: usize = 2;
+
+pub struct BitLinear {
+    /// The primary packing (decode-regime kernel).
+    pub qtensor: QTensor,
+    kernel: &'static dyn Kernel,
+    /// Lazily materialized alternate packings, at most [`MAX_ALTERNATES`].
+    alternates: RwLock<Vec<(QuantType, Arc<QTensor>)>>,
+    /// The absmean weight scale of the source tensor, kept so alternates
+    /// repack with exactly the scale the primary was packed with.
+    weight_scale: f32,
+    /// Zero-weight fraction of the source ternary tensor, measured once
+    /// at pack time (the sparsity observability hook — ternary BitNet
+    /// weights are ~1/3 exact zeros, but only *block-structured* zeros
+    /// let the kernels elide work).
+    pub zero_fraction: f64,
+    /// Output features (rows).
+    pub m: usize,
+    /// Input features (cols).
+    pub k: usize,
+}
+
+impl BitLinear {
+    /// Pack ternary weights for the given kernel.
+    pub fn new(w: &TernaryWeights, qtype: QuantType) -> BitLinear {
+        let kernel = kernel_for(qtype);
+        let info = kernel.info();
+        assert_eq!(
+            w.k % info.k_multiple,
+            0,
+            "{}: K={} not a multiple of {}",
+            info.name,
+            w.k,
+            info.k_multiple
+        );
+        BitLinear {
+            qtensor: kernel.quantize(w),
+            kernel,
+            alternates: RwLock::new(Vec::new()),
+            weight_scale: w.scale,
+            zero_fraction: pallas_kernels::kernels::sparse::zero_fraction(&w.q),
+            m: w.m,
+            k: w.k,
+        }
+    }
+
+    /// Whether the primary packing carries the block-skip sparse layout
+    /// (pack-time decision: [`pallas_kernels::kernels::sparse::SparseMode`] and,
+    /// under `Auto`, the measured zero-*block* fraction against
+    /// [`pallas_kernels::kernels::sparse::SPARSE_THRESHOLD`]).
+    pub fn sparse_layout(&self) -> bool {
+        self.qtensor.sparse.is_some()
+    }
+
+    /// The zero-block fraction the primary packing's sparse index
+    /// measured, `None` when it packed dense.
+    pub fn zero_block_fraction(&self) -> Option<f64> {
+        self.qtensor.sparse.as_ref().map(|s| s.zero_block_fraction())
+    }
+
+    /// Pack ternary weights with the kernel a [`Dispatch`] policy selects
+    /// for this layer's (m, k) shape — `Fixed` pins one kernel, `Auto`
+    /// consults a measured [`pallas_kernels::kernels::TuningProfile`] (decode-path
+    /// batch of 1 is the selection key; see `docs/tuning.md`).
+    pub fn from_dispatch(w: &TernaryWeights, dispatch: &Dispatch) -> BitLinear {
+        Self::new(w, dispatch.select(w.m, w.k, 1))
+    }
+
+    /// The primary kernel (what n=1 decode runs unless overridden).
+    pub fn qtype(&self) -> QuantType {
+        self.kernel.info().qtype
+    }
+
+    /// Every kernel with a materialized packing: the primary first, then
+    /// the alternates in the order they were first used.
+    pub fn packed_kernels(&self) -> Vec<QuantType> {
+        let mut out = vec![self.qtype()];
+        for (q, _) in self.alternates.read().unwrap().iter() {
+            out.push(*q);
+        }
+        out
+    }
+
+    /// Reconstruct the unpacked ternary weights from the primary packing.
+    /// Exact for ternary-native kernels (`dequantize` returns q·scale
+    /// bit-for-bit); `None` when the primary cannot represent arbitrary
+    /// ternary weights exactly (general llama.cpp formats).
+    fn reconstruct(&self) -> Option<TernaryWeights> {
+        if !self.kernel.info().ternary_native {
+            return None;
+        }
+        let deq = self.kernel.dequantize(&self.qtensor);
+        let s = self.weight_scale;
+        let q: Vec<i8> = if s == 0.0 {
+            vec![0i8; self.m * self.k]
+        } else {
+            deq.iter().map(|&v| (v / s).round().clamp(-1.0, 1.0) as i8).collect()
+        };
+        Some(TernaryWeights::from_ternary(q, self.m, self.k, s))
+    }
+
+    /// The alternate tensor for `qtype`, packing it on first use. `None`
+    /// means "run the primary": `qtype` *is* the primary, the kernel's K
+    /// alignment doesn't fit, the primary can't be reconstructed, or the
+    /// [`MAX_ALTERNATES`] budget is exhausted.
+    fn alternate_for(&self, qtype: QuantType) -> Option<Arc<QTensor>> {
+        if qtype == self.qtype() {
+            return None;
+        }
+        {
+            let alts = self.alternates.read().unwrap();
+            if let Some((_, t)) = alts.iter().find(|(q, _)| *q == qtype) {
+                return Some(Arc::clone(t));
+            }
+            if alts.len() >= MAX_ALTERNATES {
+                return None;
+            }
+        }
+        if self.k % kernel_for(qtype).info().k_multiple != 0 {
+            return None;
+        }
+        let w = self.reconstruct()?;
+        let packed = Arc::new(kernel_for(qtype).quantize(&w));
+        let mut alts = self.alternates.write().unwrap();
+        // Re-check under the write lock: another thread may have packed
+        // (or filled the budget) while we quantized.
+        if let Some((_, t)) = alts.iter().find(|(q, _)| *q == qtype) {
+            return Some(Arc::clone(t));
+        }
+        if alts.len() >= MAX_ALTERNATES {
+            return None;
+        }
+        alts.push((qtype, Arc::clone(&packed)));
+        Some(packed)
+    }
+
+    /// Eagerly materialize the packing for `qtype` (no-op when it is the
+    /// primary or cannot be packed); returns the kernel that will
+    /// actually serve calls asking for `qtype`.
+    pub fn prepack(&self, qtype: QuantType) -> QuantType {
+        match self.alternate_for(qtype) {
+            Some(t) => t.qtype,
+            None => self.qtype(),
+        }
+    }
+
+    /// Single-row forward: `out = W · x` (always the primary packing).
+    pub fn forward(&self, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.k);
+        debug_assert_eq!(out.len(), self.m);
+        let p = self.kernel.prepare(x, self.k);
+        self.kernel.gemv(&self.qtensor, &p, out);
+    }
+
+    /// Batched forward over `n` activation rows, parallelized on `pool`
+    /// (always the primary packing).
+    pub fn forward_batch(&self, x: &[f32], n: usize, out: &mut [f32], pool: &ThreadPool) {
+        matmul(self.kernel, &self.qtensor, x, n, out, pool);
+    }
+
+    /// Batched forward routed through `qtype`, packing it on first use
+    /// and falling back to the primary when it cannot be packed. Returns
+    /// the kernel that actually ran.
+    pub fn forward_batch_with(
+        &self,
+        qtype: QuantType,
+        x: &[f32],
+        n: usize,
+        out: &mut [f32],
+        pool: &ThreadPool,
+    ) -> QuantType {
+        match self.alternate_for(qtype) {
+            Some(t) => {
+                matmul(kernel_for(t.qtype), &t, x, n, out, pool);
+                t.qtype
+            }
+            None => {
+                matmul(self.kernel, &self.qtensor, x, n, out, pool);
+                self.qtype()
+            }
+        }
+    }
+
+    /// Plan-routed batched forward: resolve (layer, role, m, k, n)
+    /// through the [`DispatchPlan`] — the per-call decision that routes
+    /// prefill chunks and batched decode to their measured winners.
+    /// Returns the kernel that actually ran.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_batch_planned(
+        &self,
+        plan: &DispatchPlan,
+        layer: usize,
+        role: Role,
+        x: &[f32],
+        n: usize,
+        out: &mut [f32],
+        pool: &ThreadPool,
+    ) -> QuantType {
+        let want = plan.select(layer, role, self.m, self.k, n);
+        let ran = self.forward_batch_with(want, x, n, out, pool);
+        if ran != want {
+            plan.note_degraded(self.m, self.k, n, want, ran);
+        }
+        ran
+    }
+
+    /// Plan-routed batched forward through a shared [`PreparedActivations`]
+    /// cache — the prepare-once hot path. The first projection consuming a
+    /// given layer input prepares it for its resolved kernel; subsequent
+    /// projections sharing the input (wq/wk/wv, gate/up) reuse the batch
+    /// and pay only accumulation. Returns the kernel that actually ran.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_batch_cached(
+        &self,
+        plan: &DispatchPlan,
+        layer: usize,
+        role: Role,
+        x: &[f32],
+        n: usize,
+        out: &mut [f32],
+        pool: &ThreadPool,
+        acts: &mut PreparedActivations,
+    ) -> QuantType {
+        debug_assert_eq!(x.len(), n * self.k);
+        debug_assert_eq!(out.len(), n * self.m);
+        let want = plan.select(layer, role, self.m, self.k, n);
+        let alt = self.alternate_for(want);
+        let (kernel, tensor): (&'static dyn Kernel, &QTensor) = match alt.as_deref() {
+            Some(t) => (kernel_for(t.qtype), t),
+            None => (self.kernel, &self.qtensor),
+        };
+        let ran = tensor.qtype;
+        if ran != want {
+            plan.note_degraded(self.m, self.k, n, want, ran);
+        }
+        let batch = acts.get_or_prepare(kernel, x, self.k, n, pool);
+        matmul_prepared(kernel, tensor, batch, x, n, out, pool);
+        ran
+    }
+
+    /// Resident packed weight bytes: the primary plus every materialized
+    /// alternate — the bounded memory cost of multi-packing.
+    pub fn weight_bytes(&self) -> usize {
+        let alts: usize =
+            self.alternates.read().unwrap().iter().map(|(_, t)| t.weight_bytes()).sum();
+        self.qtensor.weight_bytes() + alts
+    }
+
+    /// Packed bytes of the primary tensor alone — what one n=1 decode
+    /// GEMV streams (the memory-bound decode cost).
+    pub fn primary_weight_bytes(&self) -> usize {
+        self.qtensor.weight_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use pallas_core::util::Rng;
+
+    fn random_ternary(m: usize, k: usize, seed: u64) -> TernaryWeights {
+        let mut rng = Rng::new(seed);
+        let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+        TernaryWeights::from_ternary(q, m, k, 1.0 / (0.5 * k as f32).sqrt())
+    }
+
+    #[test]
+    fn forward_matches_dense() {
+        let (m, k) = (32, 256);
+        let w = random_ternary(m, k, 1);
+        let layer = BitLinear::new(&w, QuantType::I2S);
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        let mut out = vec![0f32; m];
+        layer.forward(&x, &mut out);
+        let wd = w.dequantize();
+        for r in 0..m {
+            let want: f32 = (0..k).map(|i| wd[r * k + i] * x[i]).sum();
+            assert!((out[r] - want).abs() < 0.05 * want.abs().max(1.0), "row {r}");
+        }
+    }
+
+    #[test]
+    fn batch_forward_consistent_with_single() {
+        let (m, k, n) = (16, 256, 4);
+        let w = random_ternary(m, k, 3);
+        let layer = BitLinear::new(&w, QuantType::Tl21);
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+        let pool = ThreadPool::new(2);
+        let mut out_b = vec![0f32; n * m];
+        layer.forward_batch(&x, n, &mut out_b, &pool);
+        for i in 0..n {
+            let mut out_s = vec![0f32; m];
+            layer.forward(&x[i * k..(i + 1) * k], &mut out_s);
+            assert_eq!(&out_b[i * m..(i + 1) * m], &out_s[..], "row {i}");
+        }
+    }
+
+    #[test]
+    fn dispatch_packing_matches_fixed() {
+        use pallas_kernels::kernels::TuningProfile;
+        let (m, k) = (16, 256);
+        let w = random_ternary(m, k, 6);
+        let mut profile = TuningProfile::empty(QuantType::I2S, 1);
+        profile.entries.push(pallas_kernels::kernels::tuner::TuningEntry {
+            m,
+            k,
+            n: 1,
+            weight: 1.0,
+            best: QuantType::Tl21,
+            best_simd: pallas_kernels::kernels::SimdLevel::Scalar,
+            best_sparse: false,
+            measurements: Vec::new(),
+        });
+        let auto = BitLinear::from_dispatch(&w, &Dispatch::Auto(profile));
+        assert_eq!(auto.qtype(), QuantType::Tl21);
+        let fixed = BitLinear::from_dispatch(&w, &Dispatch::Fixed(QuantType::Tl21));
+        assert_eq!(fixed.qtype(), QuantType::Tl21);
+        assert_eq!(auto.qtensor.data, fixed.qtensor.data, "identical packing");
+    }
+
+    #[test]
+    fn alternate_repack_is_bit_identical_to_direct_packing() {
+        // Repacking from the primary must equal packing from the source
+        // weights — the property that keeps lossless multi-pack lossless.
+        let (m, k) = (16, 256);
+        let w = random_ternary(m, k, 8);
+        let layer = BitLinear::new(&w, QuantType::I2S);
+        let pool = ThreadPool::new(1);
+        let mut rng = Rng::new(9);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        let mut out_alt = vec![0f32; m];
+        let ran = layer.forward_batch_with(QuantType::Tl21, &x, 1, &mut out_alt, &pool);
+        assert_eq!(ran, QuantType::Tl21);
+        assert_eq!(layer.packed_kernels(), vec![QuantType::I2S, QuantType::Tl21]);
+        let direct = BitLinear::new(&w, QuantType::Tl21);
+        let mut out_direct = vec![0f32; m];
+        direct.forward(&x, &mut out_direct);
+        assert_eq!(out_alt, out_direct);
+        // Resident bytes now include both packings, and the primary
+        // stream cost is unchanged.
+        assert_eq!(
+            layer.weight_bytes(),
+            layer.primary_weight_bytes() + direct.primary_weight_bytes()
+        );
+    }
+
+    #[test]
+    fn alternate_budget_is_bounded() {
+        let (m, k) = (8, 256);
+        let w = random_ternary(m, k, 11);
+        let layer = BitLinear::new(&w, QuantType::I2S);
+        // Two alternates fit …
+        assert_eq!(layer.prepack(QuantType::Tl21), QuantType::Tl21);
+        assert_eq!(layer.prepack(QuantType::Tl11), QuantType::Tl11);
+        // … the third exceeds MAX_ALTERNATES and degrades to the primary.
+        assert_eq!(layer.prepack(QuantType::Tl20), QuantType::I2S);
+        // Cached alternates and the primary itself still resolve.
+        assert_eq!(layer.prepack(QuantType::Tl21), QuantType::Tl21);
+        assert_eq!(layer.prepack(QuantType::I2S), QuantType::I2S);
+        assert_eq!(layer.packed_kernels().len(), 1 + MAX_ALTERNATES);
+    }
+
+    #[test]
+    fn incompatible_alternate_degrades_to_primary() {
+        // K=128 fits I2_S but not TQ2_0 (K % 256); the routed call must
+        // run on the primary instead of panicking.
+        let (m, k) = (8, 128);
+        let w = random_ternary(m, k, 12);
+        let layer = BitLinear::new(&w, QuantType::I2S);
+        let pool = ThreadPool::new(1);
+        let x = vec![0.5f32; k];
+        let mut out = vec![0f32; m];
+        let ran = layer.forward_batch_with(QuantType::Tq20, &x, 1, &mut out, &pool);
+        assert_eq!(ran, QuantType::I2S);
+        assert_eq!(layer.packed_kernels(), vec![QuantType::I2S]);
+    }
+
+    #[test]
+    fn sparsity_is_measured_and_iid_stays_dense() {
+        use pallas_kernels::kernels::sparse::{self, SparseMode};
+        let (m, k) = (8, 256);
+        let w = random_ternary(m, k, 30);
+        sparse::with_mode(SparseMode::Auto, || {
+            let layer = BitLinear::new(&w, QuantType::I2S);
+            // iid ternary is ~1/3 zeros by weight…
+            assert!(
+                layer.zero_fraction > 0.1 && layer.zero_fraction < 0.6,
+                "{}",
+                layer.zero_fraction
+            );
+            // …but essentially never forms a whole zero block, so the
+            // pack-time decision keeps the dense layout automatically.
+            assert!(!layer.sparse_layout());
+            assert_eq!(layer.zero_block_fraction(), None);
+        });
+        sparse::with_mode(SparseMode::On, || {
+            let forced = BitLinear::new(&w, QuantType::I2S);
+            assert!(forced.sparse_layout());
+            assert_eq!(forced.zero_block_fraction(), Some(0.0));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "not a multiple")]
+    fn rejects_misaligned_k() {
+        let w = random_ternary(4, 100, 5);
+        BitLinear::new(&w, QuantType::I2S);
+    }
+
+    #[test]
+    fn cached_forward_matches_planned_forward() {
+        let (m, k, n) = (16, 256, 3);
+        let w = random_ternary(m, k, 20);
+        let layer = BitLinear::new(&w, QuantType::Tl21);
+        let plan = DispatchPlan::new(Dispatch::Fixed(QuantType::Tl21));
+        let pool = ThreadPool::new(2);
+        let mut rng = Rng::new(21);
+        let x: Vec<f32> = (0..n * k).map(|_| rng.next_gaussian()).collect();
+        let mut out_plan = vec![0f32; n * m];
+        layer.forward_batch_planned(&plan, 0, Role::Qkv, &x, n, &mut out_plan, &pool);
+        let mut acts = PreparedActivations::new();
+        acts.begin_input();
+        let mut out_cached = vec![0f32; n * m];
+        let ran = layer
+            .forward_batch_cached(&plan, 0, Role::Qkv, &x, n, &mut out_cached, &pool, &mut acts);
+        assert_eq!(ran, QuantType::Tl21);
+        assert_eq!(out_plan, out_cached);
+        // A second projection consuming the same input hits the cache and
+        // produces identical output.
+        let mut out2 = vec![0f32; n * m];
+        layer.forward_batch_cached(&plan, 0, Role::Qkv, &x, n, &mut out2, &pool, &mut acts);
+        assert_eq!((acts.stats().misses, acts.stats().hits), (1, 1));
+        assert_eq!(out2, out_cached);
+    }
+}

@@ -1,0 +1,21 @@
+//! BitNet b1.58 transformer — the model the mpGEMM library serves.
+//!
+//! LLaMA-shaped architecture with **BitLinear** projections (ternary
+//! weights + per-tensor int8 activations) in every attention/FFN matmul;
+//! embeddings, norms and the LM head stay high-precision, matching the
+//! BitNet b1.58 recipe. All seven projections per layer dispatch through
+//! the pluggable [`pallas_kernels::kernels::Kernel`] interface, so one model runs
+//! under any of the paper's kernels — the basis of the speed (Table 7)
+//! and quality (Table 2) comparisons.
+
+pub mod bitlinear;
+pub mod config;
+pub mod ops;
+pub mod sampling;
+pub mod transformer;
+pub mod weights;
+
+pub use bitlinear::BitLinear;
+pub use config::ModelConfig;
+pub use sampling::{sample, SamplingParams};
+pub use transformer::{Session, Transformer};

@@ -1,0 +1,119 @@
+//! Non-matmul transformer ops: RMSNorm, RoPE, softmax, SiLU/SwiGLU.
+//! These stay in f32 on every kernel path (BitNet b1.58 keeps them
+//! high-precision), so the lossless-equality property of I2_S/TL*_1 is
+//! decided entirely by the BitLinear projections.
+
+/// RMSNorm: `out[i] = x[i] / rms(x) * gain[i]`.
+pub fn rmsnorm(x: &[f32], gain: &[f32], eps: f32, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), gain.len());
+    debug_assert_eq!(x.len(), out.len());
+    let ss: f32 = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ss + eps).sqrt();
+    for ((o, &xv), &g) in out.iter_mut().zip(x.iter()).zip(gain.iter()) {
+        *o = xv * inv * g;
+    }
+}
+
+/// In-place rotary position embedding over interleaved (even, odd) pairs
+/// of each head's dimensions, LLaMA convention.
+pub fn rope(x: &mut [f32], n_heads: usize, head_dim: usize, pos: usize, theta: f32) {
+    debug_assert_eq!(x.len(), n_heads * head_dim);
+    for h in 0..n_heads {
+        let head = &mut x[h * head_dim..(h + 1) * head_dim];
+        for i in 0..head_dim / 2 {
+            let freq = 1.0 / theta.powf(2.0 * i as f32 / head_dim as f32);
+            let angle = pos as f32 * freq;
+            let (sin, cos) = angle.sin_cos();
+            let (a, b) = (head[2 * i], head[2 * i + 1]);
+            head[2 * i] = a * cos - b * sin;
+            head[2 * i + 1] = a * sin + b * cos;
+        }
+    }
+}
+
+/// Numerically-stable in-place softmax. Lives in `pallas_core::util`
+/// since the crate split (the KV arena's fused attend uses the same
+/// implementation one layer below); re-exported here unchanged.
+pub use pallas_core::util::softmax;
+
+/// SiLU (swish) activation.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// SwiGLU combine: `out[i] = silu(gate[i]) * up[i]`.
+pub fn swiglu(gate: &[f32], up: &[f32], out: &mut [f32]) {
+    for ((o, &g), &u) in out.iter_mut().zip(gate.iter()).zip(up.iter()) {
+        *o = silu(g) * u;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmsnorm_unit_gain_normalizes() {
+        let x = vec![3.0f32, 4.0, 0.0, 0.0];
+        let gain = vec![1.0f32; 4];
+        let mut out = vec![0f32; 4];
+        rmsnorm(&x, &gain, 0.0, &mut out);
+        let rms: f32 = (out.iter().map(|v| v * v).sum::<f32>() / 4.0).sqrt();
+        assert!((rms - 1.0).abs() < 1e-5);
+        assert!((out[0] / out[1] - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_orders() {
+        let mut x = vec![1.0f32, 2.0, 3.0];
+        softmax(&mut x);
+        assert!((x.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(x[2] > x[1] && x[1] > x[0]);
+    }
+
+    #[test]
+    fn softmax_handles_large_values() {
+        let mut x = vec![1000.0f32, 1000.0];
+        softmax(&mut x);
+        assert!((x[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut x: Vec<f32> = (0..64).map(|i| (i as f32 * 0.3).sin()).collect();
+        let before: f32 = x.iter().map(|v| v * v).sum();
+        rope(&mut x, 2, 32, 17, 10000.0);
+        let after: f32 = x.iter().map(|v| v * v).sum();
+        assert!((before - after).abs() / before < 1e-5);
+    }
+
+    #[test]
+    fn rope_pos_zero_is_identity() {
+        let mut x: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let orig = x.clone();
+        rope(&mut x, 1, 32, 0, 10000.0);
+        assert_eq!(x, orig);
+    }
+
+    #[test]
+    fn rope_is_relative() {
+        // <RoPE(q, p), RoPE(k, p)> depends only on the content for equal
+        // positions: rotating both by the same angle preserves dot product.
+        let q: Vec<f32> = (0..8).map(|i| (i as f32).cos()).collect();
+        let k: Vec<f32> = (0..8).map(|i| (i as f32 * 0.7).sin()).collect();
+        let dot = |a: &[f32], b: &[f32]| a.iter().zip(b).map(|(x, y)| x * y).sum::<f32>();
+        let mut q1 = q.clone();
+        let mut k1 = k.clone();
+        rope(&mut q1, 1, 8, 5, 10000.0);
+        rope(&mut k1, 1, 8, 5, 10000.0);
+        assert!((dot(&q1, &k1) - dot(&q, &k)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn silu_properties() {
+        assert_eq!(silu(0.0), 0.0);
+        assert!(silu(10.0) > 9.99);
+        assert!(silu(-10.0).abs() < 1e-3);
+    }
+}

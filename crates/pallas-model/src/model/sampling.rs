@@ -1,0 +1,160 @@
+//! Token sampling: greedy / temperature / top-k / top-p, deterministic via
+//! the crate PRNG so serving runs are reproducible.
+
+use super::ops::softmax;
+use pallas_core::util::Rng;
+
+/// Sampling configuration for one request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SamplingParams {
+    /// 0.0 → greedy argmax.
+    pub temperature: f32,
+    /// 0 → disabled.
+    pub top_k: usize,
+    /// 1.0 → disabled.
+    pub top_p: f32,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { temperature: 0.0, top_k: 0, top_p: 1.0 }
+    }
+}
+
+impl SamplingParams {
+    pub fn greedy() -> Self {
+        Self::default()
+    }
+    pub fn with_temperature(t: f32) -> Self {
+        SamplingParams { temperature: t, ..Self::default() }
+    }
+}
+
+/// Sample a token id from raw logits.
+pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> u32 {
+    assert!(!logits.is_empty());
+    if params.temperature <= 0.0 {
+        return argmax(logits);
+    }
+    // Collect (logit, id), apply temperature.
+    let mut items: Vec<(f32, u32)> =
+        logits.iter().enumerate().map(|(i, &l)| (l / params.temperature, i as u32)).collect();
+    // Top-k filter.
+    if params.top_k > 0 && params.top_k < items.len() {
+        items.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        items.truncate(params.top_k);
+    } else {
+        items.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    }
+    let mut probs: Vec<f32> = items.iter().map(|it| it.0).collect();
+    softmax(&mut probs);
+    // Top-p (nucleus) filter over the sorted distribution.
+    if params.top_p < 1.0 {
+        let mut cum = 0f32;
+        let mut cut = probs.len();
+        for (i, &p) in probs.iter().enumerate() {
+            cum += p;
+            if cum >= params.top_p {
+                cut = i + 1;
+                break;
+            }
+        }
+        probs.truncate(cut);
+        items.truncate(cut);
+        let norm: f32 = probs.iter().sum();
+        for p in probs.iter_mut() {
+            *p /= norm;
+        }
+    }
+    // Inverse-CDF draw.
+    let r = rng.next_f32();
+    let mut cum = 0f32;
+    for (p, it) in probs.iter().zip(items.iter()) {
+        cum += p;
+        if r < cum {
+            return it.1;
+        }
+    }
+    items.last().unwrap().1
+}
+
+/// Greedy argmax (ties broken toward the lower id).
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let logits = vec![0.1, 5.0, -2.0, 4.9];
+        let mut rng = Rng::new(1);
+        assert_eq!(sample(&logits, &SamplingParams::greedy(), &mut rng), 1);
+    }
+
+    #[test]
+    fn temperature_zero_is_greedy() {
+        let logits = vec![1.0, 3.0, 2.0];
+        let mut rng = Rng::new(2);
+        for _ in 0..10 {
+            assert_eq!(sample(&logits, &SamplingParams::default(), &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn top_k_one_is_greedy() {
+        let logits = vec![1.0, 3.0, 2.0];
+        let p = SamplingParams { temperature: 1.0, top_k: 1, top_p: 1.0 };
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            assert_eq!(sample(&logits, &p, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn sampling_respects_distribution() {
+        // Token 0 has ~88% probability at T=1 (logit gap 2.0).
+        let logits = vec![2.0, 0.0];
+        let p = SamplingParams { temperature: 1.0, top_k: 0, top_p: 1.0 };
+        let mut rng = Rng::new(4);
+        let n = 5000;
+        let zeros = (0..n).filter(|_| sample(&logits, &p, &mut rng) == 0).count();
+        let frac = zeros as f64 / n as f64;
+        assert!((frac - 0.8808).abs() < 0.03, "frac {frac}");
+    }
+
+    #[test]
+    fn top_p_cuts_tail() {
+        // Three tokens with probs ~ .665/.245/.090; top_p=0.7 keeps ≤ 2.
+        let logits = vec![2.0, 1.0, 0.0];
+        let p = SamplingParams { temperature: 1.0, top_k: 0, top_p: 0.7 };
+        let mut rng = Rng::new(5);
+        for _ in 0..200 {
+            let t = sample(&logits, &p, &mut rng);
+            assert!(t != 2, "tail token must be filtered");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let logits: Vec<f32> = (0..100).map(|i| ((i * 37) % 13) as f32 * 0.3).collect();
+        let p = SamplingParams { temperature: 0.8, top_k: 40, top_p: 0.95 };
+        let a: Vec<u32> = {
+            let mut rng = Rng::new(9);
+            (0..50).map(|_| sample(&logits, &p, &mut rng)).collect()
+        };
+        let b: Vec<u32> = {
+            let mut rng = Rng::new(9);
+            (0..50).map(|_| sample(&logits, &p, &mut rng)).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

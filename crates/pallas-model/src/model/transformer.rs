@@ -1,0 +1,779 @@
+//! The BitNet b1.58 transformer forward pass, with a chunked (GEMM)
+//! prefill path and a batched decode path — the compute engine behind the
+//! serving coordinator.
+//!
+//! Key properties:
+//! * every projection goes through [`BitLinear`] → pluggable mpGEMM kernel;
+//! * decode over a continuous batch runs each projection as one GEMM over
+//!   the batch rows (weights streamed once per batch, the memory-bound win
+//!   of dynamic batching);
+//! * prefill processes the whole prompt as one chunk (compute-bound GEMM),
+//!   matching the paper's decode/prefill distinction (§Limitations).
+
+use super::bitlinear::BitLinear;
+use super::config::ModelConfig;
+use super::ops::{rmsnorm, rope, swiglu};
+use super::weights::Checkpoint;
+use pallas_core::arena::{KvArena, KvDtype};
+use pallas_kernels::kernels::baselines::f16_mad::dot_f16;
+use pallas_kernels::kernels::tuner::{DispatchPlan, Role};
+use pallas_kernels::kernels::{kernel_for, Dispatch, PrepareStats, PreparedActivations, QuantType};
+use pallas_core::threadpool::{shared_pool, ThreadPool};
+use pallas_core::util::f32_to_f16;
+use std::sync::{Arc, Mutex};
+
+/// High-precision (f16-stored) dense layer for the LM head.
+pub struct DenseF16 {
+    data: Vec<u8>,
+    pub m: usize,
+    pub k: usize,
+}
+
+impl DenseF16 {
+    pub fn new(w: &[f32], m: usize, k: usize) -> DenseF16 {
+        assert_eq!(w.len(), m * k);
+        let mut data = vec![0u8; m * k * 2];
+        for (chunk, &v) in data.chunks_exact_mut(2).zip(w.iter()) {
+            chunk.copy_from_slice(&f32_to_f16(v).to_le_bytes());
+        }
+        DenseF16 { data, m, k }
+    }
+
+    pub fn forward(&self, x: &[f32], out: &mut [f32], pool: &ThreadPool) {
+        assert_eq!(x.len(), self.k);
+        assert_eq!(out.len(), self.m);
+        let row_bytes = self.k * 2;
+        let chunks = (pool.size() * 4).min(self.m);
+        let rows_per = pallas_core::util::ceil_div(self.m, chunks);
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        pool.parallel_for(chunks, |c| {
+            let out_ptr = &out_ptr;
+            let lo = c * rows_per;
+            if lo >= self.m {
+                return;
+            }
+            let hi = ((c + 1) * rows_per).min(self.m);
+            // SAFETY: chunks cover disjoint [lo, hi) row ranges of `out`,
+            // so each parallel task writes a non-overlapping slice.
+            let slice = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(lo), hi - lo) };
+            for (o, r) in slice.iter_mut().zip(lo..hi) {
+                *o = dot_f16(&self.data[r * row_bytes..(r + 1) * row_bytes], x);
+            }
+        });
+    }
+
+    pub fn weight_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+// SAFETY: the pointer targets a buffer that outlives the parallel_for
+// call, and tasks write disjoint ranges of it.
+unsafe impl Send for SendPtr {}
+// SAFETY: as above.
+unsafe impl Sync for SendPtr {}
+
+/// Packed weights for one layer.
+pub struct Layer {
+    pub wq: BitLinear,
+    pub wk: BitLinear,
+    pub wv: BitLinear,
+    pub wo: BitLinear,
+    pub w_gate: BitLinear,
+    pub w_up: BitLinear,
+    pub w_down: BitLinear,
+    pub attn_norm: Vec<f32>,
+    pub ffn_norm: Vec<f32>,
+}
+
+/// Per-sequence inference state: a **page-table view** into a
+/// [`KvArena`] — position plus a sequence id whose pages live in the
+/// arena. The session owns no KV buffers itself: standalone sessions
+/// ([`Session::new`]) carry a private arena sized for their capacity,
+/// serving sessions ([`Session::shared`]) all point at the engine's one
+/// shared arena, where the scheduler reserves their pages.
+pub struct Session {
+    pub pos: usize,
+    pub capacity: usize,
+    seq: u64,
+    arena: Arc<Mutex<KvArena>>,
+}
+
+impl Session {
+    /// Standalone session backed by a private f32 arena sized for
+    /// `capacity` tokens (the non-serving paths: `run`, eval, tests).
+    pub fn new(n_layers: usize, kv_dim: usize, capacity: usize) -> Session {
+        Self::with_dtype(n_layers, kv_dim, capacity, KvDtype::F32)
+    }
+
+    /// Standalone session with an explicit KV element type
+    /// (`--kv-dtype f16` halves resident KV bytes).
+    pub fn with_dtype(
+        n_layers: usize,
+        kv_dim: usize,
+        capacity: usize,
+        dtype: KvDtype,
+    ) -> Session {
+        let arena = KvArena::new(n_layers, kv_dim, capacity, dtype);
+        Session { pos: 0, capacity, seq: 0, arena: Arc::new(Mutex::new(arena)) }
+    }
+
+    /// A view into a shared arena: pages for `seq` are reserved there by
+    /// the serving scheduler (or lazily on append when standalone code
+    /// drives a shared arena directly).
+    pub fn shared(arena: Arc<Mutex<KvArena>>, seq: u64, capacity: usize) -> Session {
+        Session { pos: 0, capacity, seq, arena }
+    }
+
+    fn append(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        assert!(pos < self.capacity, "KV cache overflow at pos {pos}");
+        let mut arena = self.arena.lock().unwrap();
+        // Idempotent for already-reserved pages (the serving scheduler
+        // reserves ahead of every step); mints lazily for standalone
+        // sessions growing into their private arena.
+        assert!(arena.reserve(self.seq, pos + 1), "KV arena exhausted at pos {pos}");
+        arena.append(self.seq, layer, pos, k, v);
+    }
+
+    /// Attention for one query row over this session's cached context
+    /// (positions `0..ctx_len`) in `layer`; see [`KvArena::attend`].
+    #[allow(clippy::too_many_arguments)]
+    fn attend(
+        &self,
+        layer: usize,
+        q: &[f32],
+        ctx_len: usize,
+        n_heads: usize,
+        n_kv_heads: usize,
+        head_dim: usize,
+        scale: f32,
+        out: &mut [f32],
+    ) {
+        self.arena
+            .lock()
+            .unwrap()
+            .attend(self.seq, layer, q, ctx_len, n_heads, n_kv_heads, head_dim, scale, out);
+    }
+
+    /// Bytes of KV storage actually resident for this sequence (held
+    /// pages × page bytes × dtype width) — not the worst-case capacity,
+    /// which the pre-paged layout eagerly allocated and reported.
+    pub fn kv_bytes(&self) -> usize {
+        self.arena.lock().unwrap().held_bytes(self.seq)
+    }
+
+    /// Pages this sequence currently holds in its arena.
+    pub fn held_pages(&self) -> usize {
+        self.arena.lock().unwrap().held_pages(self.seq)
+    }
+
+    /// Reset the position for reuse (appends overwrite from 0). Page
+    /// ownership is untouched: in serving, the scheduler releases pages
+    /// at preemption/finish — and may have *re-reserved* them for a
+    /// same-step re-admission by the time the engine resets the session,
+    /// so releasing here would drop a live reservation. Standalone
+    /// sessions simply keep their pages and overwrite them.
+    pub fn clear(&mut self) {
+        self.pos = 0;
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        // Return pages to a shared arena when the engine retires the
+        // session without an explicit release; harmless double-release
+        // otherwise (release of an unknown seq is a no-op).
+        if let Ok(mut arena) = self.arena.lock() {
+            arena.release(self.seq);
+        }
+    }
+}
+
+/// The packed model.
+pub struct Transformer {
+    pub cfg: ModelConfig,
+    /// Representative kernel: the fixed kernel, or (under `Auto`
+    /// dispatch) the profile's pick for the h×h attention projections.
+    pub qtype: QuantType,
+    /// The per-call kernel resolver every ternary projection routes
+    /// through — packing picked the n=1 primary; `forward_batch`
+    /// re-resolves per call with the real (layer, role, batch) context.
+    pub plan: DispatchPlan,
+    pub tok_embed: Vec<f32>,
+    pub layers: Vec<Layer>,
+    pub final_norm: Vec<f32>,
+    pub lm_head: DenseF16,
+    /// The compute pool. A handle to the process-wide
+    /// [`shared_pool`] by default ([`Transformer::from_checkpoint_plan`]),
+    /// so the engine, the tuner and every model instance fork onto one
+    /// worker set instead of layering competing pools; tests inject a
+    /// private pool via [`Transformer::from_checkpoint_plan_pool`].
+    pub pool: Arc<ThreadPool>,
+    /// Persistent prepare-once workspace: per-input activation batches
+    /// shared across the projections consuming each layer input (wq/wk/wv
+    /// share one, gate/up share one), with buffers recycled across calls
+    /// so steady-state decode allocates nothing in the prepare path.
+    prepare_ws: Mutex<PreparedActivations>,
+}
+
+impl Transformer {
+    /// Pack a checkpoint for the given kernel, with `n_threads` compute
+    /// threads.
+    pub fn from_checkpoint(ck: &Checkpoint, qtype: QuantType, n_threads: usize) -> Transformer {
+        Self::from_checkpoint_dispatch(ck, Dispatch::Fixed(qtype), n_threads)
+    }
+
+    /// Pack a checkpoint routing every projection through a [`Dispatch`]
+    /// policy — with `Dispatch::Auto` each (m, k) projection shape packs
+    /// with the kernel its tuning profile measured fastest.
+    pub fn from_checkpoint_dispatch(
+        ck: &Checkpoint,
+        dispatch: Dispatch,
+        n_threads: usize,
+    ) -> Transformer {
+        Self::from_checkpoint_plan(ck, DispatchPlan::new(dispatch), n_threads)
+    }
+
+    /// Pack a checkpoint under a full [`DispatchPlan`]. Each projection's
+    /// *primary* packing is the plan's pick for its (layer, role, m, k)
+    /// at n=1 (the decode regime); other regimes pack alternates lazily
+    /// on first routed call (or eagerly via [`Transformer::prepack`]).
+    pub fn from_checkpoint_plan(
+        ck: &Checkpoint,
+        plan: DispatchPlan,
+        n_threads: usize,
+    ) -> Transformer {
+        Self::from_checkpoint_plan_pool(ck, plan, shared_pool(n_threads.max(1)))
+    }
+
+    /// [`Transformer::from_checkpoint_plan`] with an explicit compute
+    /// pool. The NUMA-placement tests need a pool over a mock topology —
+    /// the process-wide [`shared_pool`] is sized and placed once, so a
+    /// test cannot re-seat it — and embedders may want an isolated pool.
+    /// On a multi-node pool, every primary packed tensor is
+    /// NUMA-localized so each node's row share lives in its memory.
+    pub fn from_checkpoint_plan_pool(
+        ck: &Checkpoint,
+        plan: DispatchPlan,
+        pool: Arc<ThreadPool>,
+    ) -> Transformer {
+        let cfg = ck.config.clone();
+        let primary = |li: usize, role: Role, w: &pallas_kernels::kernels::quant::TernaryWeights| {
+            let want = plan.select(li, role, w.m, w.k, 1);
+            let qtype = if w.k % kernel_for(want).info().k_multiple == 0 {
+                want
+            } else if let Dispatch::Auto(p) = plan.dispatch() {
+                // A hand-written profile entry/override can name a kernel
+                // whose K alignment doesn't fit this projection; degrade
+                // to the profile default (like the lazy-alternate path)
+                // instead of panicking mid-construction.
+                eprintln!(
+                    "dispatch: layer {li} {} {}x{}: {} needs K % {} == 0; using default {}",
+                    role.name(),
+                    w.m,
+                    w.k,
+                    want.name(),
+                    kernel_for(want).info().k_multiple,
+                    p.default.name()
+                );
+                p.default
+            } else {
+                // Fixed dispatch keeps the explicit, loud misconfiguration
+                // panic (BitLinear::new asserts).
+                want
+            };
+            BitLinear::new(w, qtype)
+        };
+        let mut layers: Vec<Layer> = ck
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(li, l)| Layer {
+                wq: primary(li, Role::Qkv, &l.wq),
+                wk: primary(li, Role::Qkv, &l.wk),
+                wv: primary(li, Role::Qkv, &l.wv),
+                wo: primary(li, Role::O, &l.wo),
+                w_gate: primary(li, Role::Gate, &l.w_gate),
+                w_up: primary(li, Role::Up, &l.w_up),
+                w_down: primary(li, Role::Down, &l.w_down),
+                attn_norm: l.attn_norm.clone(),
+                ffn_norm: l.ffn_norm.clone(),
+            })
+            .collect();
+        if pool.n_nodes() > 1 {
+            // First-touch each primary tensor's row shares from their
+            // owning nodes so the decode-path weight stream reads local
+            // memory (alternates pack lazily and keep default placement).
+            for layer in layers.iter_mut() {
+                for lin in [
+                    &mut layer.wq,
+                    &mut layer.wk,
+                    &mut layer.wv,
+                    &mut layer.wo,
+                    &mut layer.w_gate,
+                    &mut layer.w_up,
+                    &mut layer.w_down,
+                ] {
+                    lin.qtensor.numa_localize(&pool);
+                }
+            }
+        }
+        Transformer {
+            lm_head: DenseF16::new(&ck.lm_head, cfg.vocab_size, cfg.hidden),
+            tok_embed: ck.tok_embed.clone(),
+            final_norm: ck.final_norm.clone(),
+            layers,
+            qtype: plan.dispatch().representative(cfg.hidden, cfg.hidden),
+            plan,
+            cfg,
+            pool,
+            prepare_ws: Mutex::new(PreparedActivations::new()),
+        }
+    }
+
+    /// Prepare-cache counter snapshot (hits/misses/buffer reuse) — the
+    /// observability behind the "prepare runs once per role-group" and
+    /// "steady-state decode is allocation-free" guarantees.
+    pub fn prepare_stats(&self) -> PrepareStats {
+        self.prepare_ws.lock().unwrap().stats()
+    }
+
+    /// Synthetic model shortcut (tests, examples, benches).
+    pub fn synthetic(cfg: &ModelConfig, qtype: QuantType, seed: u64) -> Transformer {
+        Self::from_checkpoint(&Checkpoint::synthetic(cfg, seed), qtype, 1)
+    }
+
+    /// The distinct (m, k, primary kernel) combinations across **all**
+    /// layers — what `--verbose` prints so an operator can audit
+    /// auto-dispatch decisions. Per-layer overrides make layers diverge,
+    /// so a shape can legitimately appear once per kernel it runs under.
+    pub fn kernel_summary(&self) -> Vec<(usize, usize, QuantType)> {
+        let mut out: Vec<(usize, usize, QuantType)> = Vec::new();
+        for layer in &self.layers {
+            for (_, lin) in Self::role_layers(layer) {
+                let item = (lin.m, lin.k, lin.qtype());
+                if !out.contains(&item) {
+                    out.push(item);
+                }
+            }
+        }
+        out.sort_unstable_by_key(|&(m, k, _)| (m, k));
+        out
+    }
+
+    pub fn new_session(&self, capacity: usize) -> Session {
+        self.new_session_dtype(capacity, KvDtype::F32)
+    }
+
+    /// Standalone session with an explicit KV element type.
+    pub fn new_session_dtype(&self, capacity: usize, dtype: KvDtype) -> Session {
+        Session::with_dtype(
+            self.cfg.n_layers,
+            self.cfg.kv_dim(),
+            capacity.min(self.cfg.max_seq_len),
+            dtype,
+        )
+    }
+
+    /// Serving session: a page-table view into the engine's shared
+    /// arena, which must have been built for this model's layer count
+    /// and KV dim (see `coordinator::engine`).
+    pub fn new_session_shared(
+        &self,
+        arena: &Arc<Mutex<KvArena>>,
+        seq: u64,
+        capacity: usize,
+    ) -> Session {
+        Session::shared(Arc::clone(arena), seq, capacity.min(self.cfg.max_seq_len))
+    }
+
+    /// One layer's projections with the [`Role`] each plays — the order
+    /// and grouping the dispatch plan keys on.
+    fn role_layers(layer: &Layer) -> [(Role, &BitLinear); 7] {
+        [
+            (Role::Qkv, &layer.wq),
+            (Role::Qkv, &layer.wk),
+            (Role::Qkv, &layer.wv),
+            (Role::O, &layer.wo),
+            (Role::Gate, &layer.w_gate),
+            (Role::Up, &layer.w_up),
+            (Role::Down, &layer.w_down),
+        ]
+    }
+
+    /// Eagerly materialize every packing the plan can select at the
+    /// given batch widths (e.g. `[1, max_batch]` before serving), so the
+    /// first routed request doesn't pay the repack latency.
+    pub fn prepack(&self, batches: &[usize]) {
+        for (li, layer) in self.layers.iter().enumerate() {
+            for (role, lin) in Self::role_layers(layer) {
+                for &n in batches {
+                    let n = n.max(1);
+                    let want = self.plan.select(li, role, lin.m, lin.k, n);
+                    let got = lin.prepack(want);
+                    if got != want {
+                        self.plan.note_degraded(lin.m, lin.k, n, want, got);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Per-layer, per-phase kernel winners under the plan: one line per
+    /// run of layers with identical picks, showing each role's decode
+    /// (n=1) vs prefill (n=`prefill_n`) kernel as `role=dec/pre`
+    /// (collapsed to `role=k` when the phases agree). What `--verbose`
+    /// prints so an operator can audit phase-aware dispatch.
+    pub fn plan_summary(&self, prefill_n: usize) -> Vec<String> {
+        let sig = |li: usize| -> String {
+            Self::role_layers(&self.layers[li])
+                .iter()
+                .map(|&(role, lin)| {
+                    let (d, _) = self.plan.dispatch().select_for(li, role, lin.m, lin.k, 1);
+                    let (p, _) =
+                        self.plan.dispatch().select_for(li, role, lin.m, lin.k, prefill_n.max(2));
+                    if d == p {
+                        format!("{}={}", role.name(), d.name())
+                    } else {
+                        format!("{}={}/{}", role.name(), d.name(), p.name())
+                    }
+                })
+                .collect::<Vec<_>>()
+                .join(" ")
+        };
+        let mut out = Vec::new();
+        if self.layers.is_empty() {
+            return out;
+        }
+        let mut start = 0usize;
+        let mut cur = sig(0);
+        for li in 1..=self.layers.len() {
+            let next = if li < self.layers.len() { sig(li) } else { String::new() };
+            if li == self.layers.len() || next != cur {
+                if start == li - 1 {
+                    out.push(format!("layer {}: {}", start, cur));
+                } else {
+                    out.push(format!("layers {}-{}: {}", start, li - 1, cur));
+                }
+                start = li;
+                cur = next;
+            }
+        }
+        // Pack-time sparsity: measured weight-level zero fraction
+        // (weighted by parameter count) and how many projections' primary
+        // packing carries the block-skip layout.
+        let mut weights = 0f64;
+        let mut zeros = 0f64;
+        let mut sparse_ct = 0usize;
+        let mut total = 0usize;
+        for layer in &self.layers {
+            for (_, lin) in Self::role_layers(layer) {
+                let params = (lin.m * lin.k) as f64;
+                weights += params;
+                zeros += params * lin.zero_fraction;
+                total += 1;
+                if lin.sparse_layout() {
+                    sparse_ct += 1;
+                }
+            }
+        }
+        if weights > 0.0 {
+            out.push(format!(
+                "sparsity: {:.1}% zero weights; block-skip layout on {sparse_ct}/{total} projections",
+                100.0 * zeros / weights
+            ));
+        }
+        out
+    }
+
+    /// Packed weight bytes streamed per decoded token (primary packings
+    /// only — what one n=1 decode step reads).
+    pub fn weight_bytes_per_token(&self) -> usize {
+        let layers: usize = self
+            .layers
+            .iter()
+            .map(|l| {
+                Self::role_layers(l).iter().map(|(_, lin)| lin.primary_weight_bytes()).sum::<usize>()
+            })
+            .sum();
+        layers + self.lm_head.weight_bytes()
+    }
+
+    /// Total resident packed weight bytes, including every materialized
+    /// alternate — the bounded memory cost of multi-packed dispatch.
+    pub fn resident_weight_bytes(&self) -> usize {
+        let layers: usize = self
+            .layers
+            .iter()
+            .map(|l| Self::role_layers(l).iter().map(|(_, lin)| lin.weight_bytes()).sum::<usize>())
+            .sum();
+        layers + self.lm_head.weight_bytes()
+    }
+
+    /// Prefill `tokens` into `session` as one chunk; returns the logits of
+    /// the final position.
+    pub fn prefill(&self, session: &mut Session, tokens: &[u32]) -> Vec<f32> {
+        assert!(!tokens.is_empty());
+        let n = tokens.len();
+        let h = self.cfg.hidden;
+        let base_pos = session.pos;
+        // Embed the chunk.
+        let mut xs = vec![0f32; n * h];
+        for (i, &t) in tokens.iter().enumerate() {
+            xs[i * h..(i + 1) * h]
+                .copy_from_slice(&self.tok_embed[t as usize * h..(t as usize + 1) * h]);
+        }
+        let positions: Vec<usize> = (0..n).map(|i| base_pos + i).collect();
+        {
+            let mut refs = [&mut *session];
+            for (li, layer) in self.layers.iter().enumerate() {
+                self.block_chunk(layer, li, &mut xs, n, &positions, &mut refs, true);
+            }
+        }
+        session.pos = base_pos + n;
+        self.logits_for(&xs[(n - 1) * h..])
+    }
+
+    /// One decode step for a single sequence.
+    pub fn decode_step(&self, session: &mut Session, token: u32) -> Vec<f32> {
+        let mut sessions = [session];
+        let mut out = self.decode_batch(&mut sessions, &[token]);
+        out.pop().unwrap()
+    }
+
+    /// One decode step for a continuous batch: `tokens[i]` is appended to
+    /// `sessions[i]`. Each projection runs as a single GEMM over the batch.
+    /// Returns one logits vector per sequence.
+    pub fn decode_batch(&self, sessions: &mut [&mut Session], tokens: &[u32]) -> Vec<Vec<f32>> {
+        assert_eq!(sessions.len(), tokens.len());
+        let n = tokens.len();
+        let h = self.cfg.hidden;
+        let mut xs = vec![0f32; n * h];
+        for (i, &t) in tokens.iter().enumerate() {
+            xs[i * h..(i + 1) * h]
+                .copy_from_slice(&self.tok_embed[t as usize * h..(t as usize + 1) * h]);
+        }
+        let positions: Vec<usize> = sessions.iter().map(|s| s.pos).collect();
+        for (li, layer) in self.layers.iter().enumerate() {
+            self.block_chunk(layer, li, &mut xs, n, &positions, sessions, false);
+        }
+        for s in sessions.iter_mut() {
+            s.pos += 1;
+        }
+        (0..n).map(|i| self.logits_for(&xs[i * h..(i + 1) * h])).collect()
+    }
+
+    /// One transformer block over a chunk of `n` rows.
+    ///
+    /// `prefill` mode: all rows belong to `sessions[0]` at ascending
+    /// positions (causal attention inside the chunk). Batch mode: row `i`
+    /// belongs to `sessions[i]` at `positions[i]`.
+    #[allow(clippy::too_many_arguments)]
+    fn block_chunk(
+        &self,
+        layer: &Layer,
+        li: usize,
+        xs: &mut [f32],
+        n: usize,
+        positions: &[usize],
+        sessions: &mut [&mut Session],
+        prefill: bool,
+    ) {
+        let cfg = &self.cfg;
+        let h = cfg.hidden;
+        let hd = cfg.head_dim();
+        let kvd = cfg.kv_dim();
+
+        // ---- Attention ----
+        let mut normed = vec![0f32; n * h];
+        for i in 0..n {
+            rmsnorm(&xs[i * h..(i + 1) * h], &layer.attn_norm, cfg.rms_eps, &mut normed[i * h..(i + 1) * h]);
+        }
+        let mut q = vec![0f32; n * h];
+        let mut k = vec![0f32; n * kvd];
+        let mut v = vec![0f32; n * kvd];
+        // Phase-aware dispatch: every projection re-resolves its kernel
+        // per call with the effective batch width (prefill chunk length
+        // or decode batch), so one layer can run different kernels across
+        // phases (paper §3: TL1/TL2 for compute-bound prefill, I2_S for
+        // memory-bound decode). Projections sharing an input also share
+        // its preprocessing through the prepare-once workspace: wq/wk/wv
+        // consume one prepared batch, gate/up another (Algorithms 1–2
+        // preprocessing runs once per role-group, not per projection).
+        // The workspace lock is scoped to each projection group so the
+        // attention/FFN compute between them never sits inside the
+        // critical section (concurrent forward passes stay parallel).
+        {
+            let mut acts = self.prepare_ws.lock().unwrap();
+            acts.begin_input();
+            layer.wq.forward_batch_cached(&self.plan, li, Role::Qkv, &normed, n, &mut q, &self.pool, &mut acts);
+            layer.wk.forward_batch_cached(&self.plan, li, Role::Qkv, &normed, n, &mut k, &self.pool, &mut acts);
+            layer.wv.forward_batch_cached(&self.plan, li, Role::Qkv, &normed, n, &mut v, &self.pool, &mut acts);
+        }
+        for i in 0..n {
+            rope(&mut q[i * h..(i + 1) * h], cfg.n_heads, hd, positions[i], cfg.rope_theta);
+            rope(&mut k[i * kvd..(i + 1) * kvd], cfg.n_kv_heads, hd, positions[i], cfg.rope_theta);
+            let s = if prefill { &mut *sessions[0] } else { &mut *sessions[i] };
+            s.append(li, positions[i], &k[i * kvd..(i + 1) * kvd], &v[i * kvd..(i + 1) * kvd]);
+        }
+        // Scaled dot-product attention per row against its session's
+        // cache, read through the page table (gathers tiled per page so
+        // the inner dot stays contiguous; see KvArena::attend).
+        let mut attn_out = vec![0f32; n * h];
+        let scale = 1.0 / (hd as f32).sqrt();
+        for i in 0..n {
+            let s: &Session = if prefill { &*sessions[0] } else { &*sessions[i] };
+            let ctx_len = positions[i] + 1; // causal: everything ≤ this position
+            s.attend(
+                li,
+                &q[i * h..(i + 1) * h],
+                ctx_len,
+                cfg.n_heads,
+                cfg.n_kv_heads,
+                hd,
+                scale,
+                &mut attn_out[i * h..(i + 1) * h],
+            );
+        }
+        let mut proj = vec![0f32; n * h];
+        {
+            let mut acts = self.prepare_ws.lock().unwrap();
+            acts.begin_input();
+            layer.wo.forward_batch_cached(&self.plan, li, Role::O, &attn_out, n, &mut proj, &self.pool, &mut acts);
+        }
+        for (x, p) in xs.iter_mut().zip(proj.iter()) {
+            *x += p;
+        }
+
+        // ---- FFN (SwiGLU) ----
+        for i in 0..n {
+            rmsnorm(&xs[i * h..(i + 1) * h], &layer.ffn_norm, cfg.rms_eps, &mut normed[i * h..(i + 1) * h]);
+        }
+        let f = cfg.ffn;
+        let mut gate = vec![0f32; n * f];
+        let mut up = vec![0f32; n * f];
+        {
+            let mut acts = self.prepare_ws.lock().unwrap();
+            acts.begin_input();
+            layer.w_gate.forward_batch_cached(&self.plan, li, Role::Gate, &normed, n, &mut gate, &self.pool, &mut acts);
+            layer.w_up.forward_batch_cached(&self.plan, li, Role::Up, &normed, n, &mut up, &self.pool, &mut acts);
+        }
+        let mut act = vec![0f32; n * f];
+        swiglu(&gate, &up, &mut act);
+        let mut down = vec![0f32; n * h];
+        {
+            let mut acts = self.prepare_ws.lock().unwrap();
+            acts.begin_input();
+            layer.w_down.forward_batch_cached(&self.plan, li, Role::Down, &act, n, &mut down, &self.pool, &mut acts);
+        }
+        for (x, d) in xs.iter_mut().zip(down.iter()) {
+            *x += d;
+        }
+    }
+
+    fn logits_for(&self, x: &[f32]) -> Vec<f32> {
+        let h = self.cfg.hidden;
+        let mut normed = vec![0f32; h];
+        rmsnorm(&x[..h], &self.final_norm, self.cfg.rms_eps, &mut normed);
+        let mut logits = vec![0f32; self.cfg.vocab_size];
+        self.lm_head.forward(&normed, &mut logits, &self.pool);
+        logits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_model(qtype: QuantType) -> Transformer {
+        Transformer::synthetic(&ModelConfig::tiny(), qtype, 7)
+    }
+
+    #[test]
+    fn prefill_then_decode_matches_token_by_token() {
+        let model = tiny_model(QuantType::I2S);
+        let tokens = [5u32, 10, 400, 3, 77];
+        // Path A: chunked prefill.
+        let mut s1 = model.new_session(64);
+        let logits_a = model.prefill(&mut s1, &tokens);
+        // Path B: token-by-token prefill (chunks of one).
+        let mut s2 = model.new_session(64);
+        let mut logits_b = Vec::new();
+        for &t in &tokens {
+            logits_b = model.prefill(&mut s2, &[t]);
+        }
+        assert_eq!(s1.pos, s2.pos);
+        for (a, b) in logits_a.iter().zip(logits_b.iter()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn decode_batch_matches_individual_decode() {
+        let model = tiny_model(QuantType::Tl21);
+        let prompts: [&[u32]; 3] = [&[1, 2, 3], &[9, 8], &[100, 200, 300, 400]];
+        // Individual path.
+        let mut singles = Vec::new();
+        for p in prompts {
+            let mut s = model.new_session(64);
+            model.prefill(&mut s, p);
+            let l = model.decode_step(&mut s, 42);
+            singles.push(l);
+        }
+        // Batched path.
+        let mut sessions: Vec<Session> = prompts
+            .iter()
+            .map(|p| {
+                let mut s = model.new_session(64);
+                model.prefill(&mut s, p);
+                s
+            })
+            .collect();
+        let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+        let batched = model.decode_batch(&mut refs, &[42, 42, 42]);
+        for (i, (a, b)) in singles.iter().zip(batched.iter()).enumerate() {
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert!((x - y).abs() < 1e-4, "seq {i}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn logits_are_finite_and_varied() {
+        let model = tiny_model(QuantType::Tl20);
+        let mut s = model.new_session(32);
+        let logits = model.prefill(&mut s, &[1, 2, 3]);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        let min = logits.iter().cloned().fold(f32::INFINITY, f32::min);
+        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert!(max > min, "degenerate logits");
+    }
+
+    #[test]
+    fn lossless_kernels_agree_bitwise_on_logits() {
+        // The paper's Figure 2 property at model level: I2_S, TL1_1 and
+        // TL2_1 produce identical logits (same integer math everywhere).
+        let tokens = [3u32, 1, 4, 1, 5, 9, 2, 6];
+        let mut outs = Vec::new();
+        for qt in [QuantType::I2S, QuantType::Tl11, QuantType::Tl21] {
+            let model = tiny_model(qt);
+            let mut s = model.new_session(32);
+            let l = model.prefill(&mut s, &tokens);
+            outs.push(l);
+        }
+        assert_eq!(outs[0], outs[1], "I2_S vs TL1_1");
+        assert_eq!(outs[0], outs[2], "I2_S vs TL2_1");
+    }
+
+    #[test]
+    fn kv_overflow_panics() {
+        let model = tiny_model(QuantType::I2S);
+        let mut s = model.new_session(4);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            model.prefill(&mut s, &[1, 2, 3, 4, 5, 6]);
+        }));
+        assert!(result.is_err());
+    }
+}

@@ -1,0 +1,123 @@
+//! Synthetic BitNet b1.58 checkpoint generation.
+//!
+//! We do not have the proprietary 700M…100B checkpoints (see DESIGN.md
+//! §Substitutions); tokens/s depends on shapes and storage format, not
+//! trained values, so benchmarks and serving examples run on
+//! deterministic pseudo-random ternary weights. Scales are chosen to keep
+//! activations O(1) through depth (`scale = 1/√(0.5·K)` matches the ~50%
+//! non-zero density of `Rng::next_ternary`).
+
+use super::config::ModelConfig;
+use pallas_kernels::kernels::quant::TernaryWeights;
+use pallas_core::util::Rng;
+
+/// Unpacked weights for one transformer layer (ternary projections +
+/// f32 norm gains).
+pub struct LayerWeights {
+    pub wq: TernaryWeights,
+    pub wk: TernaryWeights,
+    pub wv: TernaryWeights,
+    pub wo: TernaryWeights,
+    pub w_gate: TernaryWeights,
+    pub w_up: TernaryWeights,
+    pub w_down: TernaryWeights,
+    pub attn_norm: Vec<f32>,
+    pub ffn_norm: Vec<f32>,
+}
+
+/// A full unpacked checkpoint (interchange form between the synthetic
+/// generator / BTNZ container and the packed `Transformer`).
+pub struct Checkpoint {
+    pub config: ModelConfig,
+    /// vocab × hidden token embedding (f32, high-precision per BitNet).
+    pub tok_embed: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+    pub final_norm: Vec<f32>,
+    /// vocab × hidden LM head, kept in f16-representable f32.
+    pub lm_head: Vec<f32>,
+}
+
+/// Deterministic ternary matrix with BitLinear-friendly scale.
+pub fn synth_ternary(rng: &mut Rng, m: usize, k: usize) -> TernaryWeights {
+    let q: Vec<i8> = (0..m * k).map(|_| rng.next_ternary() as i8).collect();
+    let scale = 1.0 / (0.5 * k as f32).sqrt();
+    TernaryWeights::from_ternary(q, m, k, scale)
+}
+
+impl Checkpoint {
+    /// Generate a synthetic checkpoint for `cfg`, fully determined by
+    /// `seed`.
+    pub fn synthetic(cfg: &ModelConfig, seed: u64) -> Checkpoint {
+        let mut rng = Rng::new(seed);
+        let h = cfg.hidden;
+        let kv = cfg.kv_dim();
+        let mut tok_embed = vec![0f32; cfg.vocab_size * h];
+        rng.fill_gaussian(&mut tok_embed, 1.0);
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                wq: synth_ternary(&mut rng, h, h),
+                wk: synth_ternary(&mut rng, kv, h),
+                wv: synth_ternary(&mut rng, kv, h),
+                wo: synth_ternary(&mut rng, h, h),
+                w_gate: synth_ternary(&mut rng, cfg.ffn, h),
+                w_up: synth_ternary(&mut rng, cfg.ffn, h),
+                w_down: synth_ternary(&mut rng, h, cfg.ffn),
+                attn_norm: vec![1.0; h],
+                ffn_norm: vec![1.0; h],
+            })
+            .collect();
+        let mut lm_head = vec![0f32; cfg.vocab_size * h];
+        // Small head scale keeps logits in a sane softmax range.
+        rng.fill_gaussian(&mut lm_head, 1.0 / (h as f32).sqrt());
+        Checkpoint {
+            config: cfg.clone(),
+            tok_embed,
+            layers,
+            final_norm: vec![1.0; h],
+            lm_head,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = ModelConfig::tiny();
+        let a = Checkpoint::synthetic(&cfg, 42);
+        let b = Checkpoint::synthetic(&cfg, 42);
+        assert_eq!(a.layers[0].wq.q, b.layers[0].wq.q);
+        assert_eq!(a.tok_embed, b.tok_embed);
+        let c = Checkpoint::synthetic(&cfg, 43);
+        assert_ne!(a.layers[0].wq.q, c.layers[0].wq.q);
+    }
+
+    #[test]
+    fn shapes_match_config() {
+        let cfg = ModelConfig::tiny();
+        let ck = Checkpoint::synthetic(&cfg, 1);
+        assert_eq!(ck.layers.len(), cfg.n_layers);
+        let l = &ck.layers[0];
+        assert_eq!(l.wq.m, cfg.hidden);
+        assert_eq!(l.wk.m, cfg.kv_dim());
+        assert_eq!(l.w_gate.m, cfg.ffn);
+        assert_eq!(l.w_down.k, cfg.ffn);
+        assert_eq!(ck.tok_embed.len(), cfg.vocab_size * cfg.hidden);
+    }
+
+    #[test]
+    fn weight_scale_preserves_variance() {
+        let mut rng = Rng::new(7);
+        let (m, k) = (256, 256);
+        let w = synth_ternary(&mut rng, m, k);
+        let wd = w.dequantize();
+        let x: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+        let y: Vec<f32> = (0..m)
+            .map(|r| (0..k).map(|i| wd[r * k + i] * x[i]).sum())
+            .collect();
+        let var = y.iter().map(|v| v * v).sum::<f32>() / m as f32;
+        assert!((0.5..2.0).contains(&var), "output variance {var}");
+    }
+}

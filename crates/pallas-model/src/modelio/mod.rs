@@ -1,0 +1,353 @@
+//! **BTNZ** — the model container format (a GGUF-like substrate built from
+//! scratch): a binary file holding the model config, ternary weights in a
+//! compact 2-bit stream plus the high-precision tensors, independent of
+//! any kernel's packing (kernels re-pack at load time, exactly as
+//! Bitnet.cpp converts checkpoints into its kernel formats).
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "BTNZ" | u32 version | config block | u32 n_tensors
+//! per tensor: u16 name_len | name | u8 dtype | u32 rows | u32 cols |
+//!             f32 scale | u64 payload_len | payload
+//! ```
+//! dtype 0 = ternary (2-bit packed, code w+1), dtype 1 = f32.
+
+use pallas_kernels::kernels::quant::TernaryWeights;
+use crate::model::config::ModelConfig;
+use crate::model::weights::{Checkpoint, LayerWeights};
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"BTNZ";
+const VERSION: u32 = 1;
+
+/// Serialize a checkpoint to a BTNZ file.
+pub fn save(ck: &Checkpoint, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    write_config(&mut w, &ck.config)?;
+
+    let n_tensors = 2 + ck.layers.len() * 9 + 1;
+    w.write_all(&(n_tensors as u32).to_le_bytes())?;
+
+    let cfg = &ck.config;
+    write_f32_tensor(&mut w, "tok_embed", &ck.tok_embed, cfg.vocab_size, cfg.hidden)?;
+    for (i, l) in ck.layers.iter().enumerate() {
+        let p = |s: &str| format!("layers.{i}.{s}");
+        write_ternary_tensor(&mut w, &p("wq"), &l.wq)?;
+        write_ternary_tensor(&mut w, &p("wk"), &l.wk)?;
+        write_ternary_tensor(&mut w, &p("wv"), &l.wv)?;
+        write_ternary_tensor(&mut w, &p("wo"), &l.wo)?;
+        write_ternary_tensor(&mut w, &p("w_gate"), &l.w_gate)?;
+        write_ternary_tensor(&mut w, &p("w_up"), &l.w_up)?;
+        write_ternary_tensor(&mut w, &p("w_down"), &l.w_down)?;
+        write_f32_tensor(&mut w, &p("attn_norm"), &l.attn_norm, 1, cfg.hidden)?;
+        write_f32_tensor(&mut w, &p("ffn_norm"), &l.ffn_norm, 1, cfg.hidden)?;
+    }
+    write_f32_tensor(&mut w, "final_norm", &ck.final_norm, 1, cfg.hidden)?;
+    write_f32_tensor(&mut w, "lm_head", &ck.lm_head, cfg.vocab_size, cfg.hidden)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a BTNZ file back into an unpacked checkpoint.
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let file =
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut r = std::io::BufReader::new(file);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a BTNZ file (magic {:?})", magic);
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported BTNZ version {version}");
+    }
+    let config = read_config(&mut r)?;
+    let n_tensors = read_u32(&mut r)? as usize;
+
+    let mut tensors = std::collections::HashMap::new();
+    for _ in 0..n_tensors {
+        let (name, t) = read_tensor(&mut r)?;
+        tensors.insert(name, t);
+    }
+
+    type Map = std::collections::HashMap<String, Tensor>;
+    fn take_f32(tensors: &mut Map, name: &str) -> Result<Vec<f32>> {
+        match tensors.remove(name) {
+            Some(Tensor::F32(v, _, _)) => Ok(v),
+            Some(_) => bail!("tensor {name} has wrong dtype"),
+            None => bail!("missing tensor {name}"),
+        }
+    }
+    fn take_ternary(tensors: &mut Map, name: &str) -> Result<TernaryWeights> {
+        match tensors.remove(name) {
+            Some(Tensor::Ternary(t)) => Ok(t),
+            Some(_) => bail!("tensor {name} has wrong dtype"),
+            None => bail!("missing tensor {name}"),
+        }
+    }
+
+    let tok_embed = take_f32(&mut tensors, "tok_embed")?;
+    let mut layers = Vec::with_capacity(config.n_layers);
+    for i in 0..config.n_layers {
+        let p = |s: &str| format!("layers.{i}.{s}");
+        layers.push(LayerWeights {
+            wq: take_ternary(&mut tensors, &p("wq"))?,
+            wk: take_ternary(&mut tensors, &p("wk"))?,
+            wv: take_ternary(&mut tensors, &p("wv"))?,
+            wo: take_ternary(&mut tensors, &p("wo"))?,
+            w_gate: take_ternary(&mut tensors, &p("w_gate"))?,
+            w_up: take_ternary(&mut tensors, &p("w_up"))?,
+            w_down: take_ternary(&mut tensors, &p("w_down"))?,
+            attn_norm: take_f32(&mut tensors, &p("attn_norm"))?,
+            ffn_norm: take_f32(&mut tensors, &p("ffn_norm"))?,
+        });
+    }
+    let final_norm = take_f32(&mut tensors, "final_norm")?;
+    let lm_head = take_f32(&mut tensors, "lm_head")?;
+    Ok(Checkpoint { config, tok_embed, layers, final_norm, lm_head })
+}
+
+enum Tensor {
+    Ternary(TernaryWeights),
+    F32(Vec<f32>, #[allow(dead_code)] usize, #[allow(dead_code)] usize),
+}
+
+fn write_config(w: &mut impl Write, cfg: &ModelConfig) -> Result<()> {
+    let name = cfg.name.as_bytes();
+    w.write_all(&(name.len() as u16).to_le_bytes())?;
+    w.write_all(name)?;
+    for v in [
+        cfg.hidden,
+        cfg.ffn,
+        cfg.n_layers,
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        cfg.vocab_size,
+        cfg.max_seq_len,
+    ] {
+        w.write_all(&(v as u32).to_le_bytes())?;
+    }
+    w.write_all(&cfg.rope_theta.to_le_bytes())?;
+    w.write_all(&cfg.rms_eps.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_config(r: &mut impl Read) -> Result<ModelConfig> {
+    let name_len = read_u16(r)? as usize;
+    let mut name = vec![0u8; name_len];
+    r.read_exact(&mut name)?;
+    let name_str = String::from_utf8(name).context("config name utf8")?;
+    let hidden = read_u32(r)? as usize;
+    let ffn = read_u32(r)? as usize;
+    let n_layers = read_u32(r)? as usize;
+    let n_heads = read_u32(r)? as usize;
+    let n_kv_heads = read_u32(r)? as usize;
+    let vocab_size = read_u32(r)? as usize;
+    let max_seq_len = read_u32(r)? as usize;
+    let rope_theta = read_f32(r)?;
+    let rms_eps = read_f32(r)?;
+    // Map back to a preset name when possible, else leak the name (configs
+    // are few and long-lived; this keeps ModelConfig.name a &'static str).
+    let name_static: &'static str = match ModelConfig::preset(&name_str) {
+        Some(p) => p.name,
+        None => Box::leak(name_str.into_boxed_str()),
+    };
+    Ok(ModelConfig {
+        name: name_static,
+        hidden,
+        ffn,
+        n_layers,
+        n_heads,
+        n_kv_heads,
+        vocab_size,
+        max_seq_len,
+        rope_theta,
+        rms_eps,
+    })
+}
+
+fn write_ternary_tensor(w: &mut impl Write, name: &str, t: &TernaryWeights) -> Result<()> {
+    write_tensor_header(w, name, 0, t.m, t.k, t.scale)?;
+    // 2-bit stream, 4 weights per byte.
+    let mut payload = vec![0u8; pallas_core::util::ceil_div(t.q.len(), 4)];
+    for (i, &q) in t.q.iter().enumerate() {
+        payload[i / 4] |= (((q + 1) as u8) & 0x3) << (2 * (i % 4));
+    }
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(&payload)?;
+    Ok(())
+}
+
+fn write_f32_tensor(w: &mut impl Write, name: &str, v: &[f32], rows: usize, cols: usize) -> Result<()> {
+    assert_eq!(v.len(), rows * cols, "{name}");
+    write_tensor_header(w, name, 1, rows, cols, 1.0)?;
+    w.write_all(&((v.len() * 4) as u64).to_le_bytes())?;
+    let mut bytes = Vec::with_capacity(v.len() * 4);
+    for &x in v {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&bytes)?;
+    Ok(())
+}
+
+fn write_tensor_header(
+    w: &mut impl Write,
+    name: &str,
+    dtype: u8,
+    rows: usize,
+    cols: usize,
+    scale: f32,
+) -> Result<()> {
+    let nb = name.as_bytes();
+    w.write_all(&(nb.len() as u16).to_le_bytes())?;
+    w.write_all(nb)?;
+    w.write_all(&[dtype])?;
+    w.write_all(&(rows as u32).to_le_bytes())?;
+    w.write_all(&(cols as u32).to_le_bytes())?;
+    w.write_all(&scale.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_tensor(r: &mut impl Read) -> Result<(String, Tensor)> {
+    let name_len = read_u16(r)? as usize;
+    let mut nb = vec![0u8; name_len];
+    r.read_exact(&mut nb)?;
+    let name = String::from_utf8(nb).context("tensor name utf8")?;
+    let mut dtype = [0u8; 1];
+    r.read_exact(&mut dtype)?;
+    let rows = read_u32(r)? as usize;
+    let cols = read_u32(r)? as usize;
+    let scale = read_f32(r)?;
+    let payload_len = read_u64(r)? as usize;
+    let mut payload = vec![0u8; payload_len];
+    r.read_exact(&mut payload)?;
+    let t = match dtype[0] {
+        0 => {
+            let n = rows * cols;
+            if payload_len != pallas_core::util::ceil_div(n, 4) {
+                bail!("{name}: ternary payload {payload_len} for {n} weights");
+            }
+            let mut q = Vec::with_capacity(n);
+            for i in 0..n {
+                let code = (payload[i / 4] >> (2 * (i % 4))) & 0x3;
+                q.push(code as i8 - 1);
+            }
+            Tensor::Ternary(TernaryWeights { q, m: rows, k: cols, scale })
+        }
+        1 => {
+            if payload_len != rows * cols * 4 {
+                bail!("{name}: f32 payload {payload_len} for {rows}x{cols}");
+            }
+            let v = payload
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Tensor::F32(v, rows, cols)
+        }
+        d => bail!("{name}: unknown dtype {d}"),
+    };
+    Ok((name, t))
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+fn read_f32(r: &mut impl Read) -> Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_round_trip() {
+        let cfg = ModelConfig::tiny();
+        let ck = Checkpoint::synthetic(&cfg, 11);
+        let dir = std::env::temp_dir().join("btnz_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.btnz");
+        save(&ck, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.config, cfg);
+        assert_eq!(back.tok_embed, ck.tok_embed);
+        assert_eq!(back.lm_head, ck.lm_head);
+        for (a, b) in back.layers.iter().zip(ck.layers.iter()) {
+            assert_eq!(a.wq.q, b.wq.q);
+            assert_eq!(a.wq.scale, b.wq.scale);
+            assert_eq!(a.w_down.q, b.w_down.q);
+            assert_eq!(a.attn_norm, b.attn_norm);
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn ternary_file_is_compact() {
+        // The ternary stream must be ~2 bits/weight, far below f32.
+        let cfg = ModelConfig::tiny();
+        let ck = Checkpoint::synthetic(&cfg, 12);
+        let dir = std::env::temp_dir().join("btnz_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny2.btnz");
+        save(&ck, &path).unwrap();
+        let file_bytes = std::fs::metadata(&path).unwrap().len();
+        let ternary_params = cfg.ternary_param_count();
+        let fp_params = cfg.param_count() - ternary_params;
+        // Expected: ternary at 0.25 B/param + fp at 4 B/param + slack.
+        let expect = ternary_params / 4 + fp_params * 4;
+        assert!(file_bytes < (expect as f64 * 1.05) as u64 + 4096, "{file_bytes} vs {expect}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("btnz_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.btnz");
+        std::fs::write(&path, b"NOPE everything else").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn loaded_model_runs_identically() {
+        use pallas_kernels::kernels::QuantType;
+        use crate::model::Transformer;
+        let cfg = ModelConfig::tiny();
+        let ck = Checkpoint::synthetic(&cfg, 13);
+        let dir = std::env::temp_dir().join("btnz_test4");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny4.btnz");
+        save(&ck, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        let m1 = Transformer::from_checkpoint(&ck, QuantType::I2S, 1);
+        let m2 = Transformer::from_checkpoint(&loaded, QuantType::I2S, 1);
+        let mut s1 = m1.new_session(16);
+        let mut s2 = m2.new_session(16);
+        let l1 = m1.prefill(&mut s1, &[1, 2, 3]);
+        let l2 = m2.prefill(&mut s2, &[1, 2, 3]);
+        assert_eq!(l1, l2);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,189 @@
+//! Tokenizer substrate: a byte-fallback tokenizer with a greedy
+//! longest-match merge vocabulary (BPE-like), built deterministically from
+//! a seed corpus. Real deployments would load a SentencePiece model; the
+//! serving path only needs *a* reversible token stream with a realistic
+//! vocab-id distribution.
+//!
+//! Token id layout: 0 = BOS, 1 = EOS, 2 = PAD, 3..259 = raw bytes,
+//! 259.. = learned merges.
+
+use std::collections::HashMap;
+
+pub const BOS: u32 = 0;
+pub const EOS: u32 = 1;
+pub const PAD: u32 = 2;
+const BYTE_BASE: u32 = 3;
+
+pub struct Tokenizer {
+    /// merge string → id.
+    merges: HashMap<Vec<u8>, u32>,
+    /// id → bytes (for decode).
+    pieces: Vec<Vec<u8>>,
+    /// Longest merge length (bounds the greedy scan).
+    max_piece: usize,
+    vocab_size: usize,
+}
+
+impl Tokenizer {
+    /// Build a tokenizer whose learned pieces are the most frequent
+    /// substrings (length 2..=8) of `corpus`, capped to `vocab_size`.
+    pub fn train(corpus: &str, vocab_size: usize) -> Tokenizer {
+        assert!(vocab_size > (BYTE_BASE as usize + 256), "vocab too small for byte fallback");
+        let bytes = corpus.as_bytes();
+        let mut freq: HashMap<&[u8], u64> = HashMap::new();
+        for len in 2..=8usize {
+            if bytes.len() < len {
+                break;
+            }
+            for w in bytes.windows(len) {
+                *freq.entry(w).or_insert(0) += 1;
+            }
+        }
+        // Score by frequency × length (prefer long, common pieces);
+        // deterministic tie-break on the bytes themselves.
+        let mut scored: Vec<(&[u8], u64)> = freq.into_iter().filter(|(_, c)| *c >= 2).collect();
+        scored.sort_by(|a, b| {
+            let sa = a.1 * a.0.len() as u64;
+            let sb = b.1 * b.0.len() as u64;
+            sb.cmp(&sa).then_with(|| a.0.cmp(b.0))
+        });
+
+        let budget = vocab_size - BYTE_BASE as usize - 256;
+        let mut merges = HashMap::new();
+        let mut pieces: Vec<Vec<u8>> = Vec::new();
+        // ids 0..259 reserved.
+        for (piece, _) in scored.into_iter().take(budget) {
+            let id = (BYTE_BASE as usize + 256 + pieces.len()) as u32;
+            merges.insert(piece.to_vec(), id);
+            pieces.push(piece.to_vec());
+        }
+        let max_piece = pieces.iter().map(|p| p.len()).max().unwrap_or(1);
+        Tokenizer { merges, pieces, max_piece, vocab_size }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size
+    }
+
+    /// Greedy longest-match encode with byte fallback; prepends BOS.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let bytes = text.as_bytes();
+        let mut out = vec![BOS];
+        let mut i = 0usize;
+        while i < bytes.len() {
+            let max_len = self.max_piece.min(bytes.len() - i);
+            let mut matched = false;
+            for len in (2..=max_len).rev() {
+                if let Some(&id) = self.merges.get(&bytes[i..i + len]) {
+                    out.push(id);
+                    i += len;
+                    matched = true;
+                    break;
+                }
+            }
+            if !matched {
+                out.push(BYTE_BASE + bytes[i] as u32);
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Decode ids back to text (lossy only on invalid UTF-8 boundaries).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if id < BYTE_BASE {
+                continue; // specials
+            }
+            if id < BYTE_BASE + 256 {
+                bytes.push((id - BYTE_BASE) as u8);
+            } else {
+                let pi = (id - BYTE_BASE - 256) as usize;
+                if let Some(p) = self.pieces.get(pi) {
+                    bytes.extend_from_slice(p);
+                }
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+/// Deterministic synthetic corpus for tokenizer training and eval —
+/// a Zipf-ish word soup so token frequencies look text-like.
+pub fn synthetic_corpus(words: usize, seed: u64) -> String {
+    use pallas_core::util::Rng;
+    const VOCAB: [&str; 48] = [
+        "the", "of", "and", "to", "in", "a", "is", "that", "for", "it", "model", "weight",
+        "ternary", "kernel", "lookup", "table", "edge", "inference", "quantization", "bit",
+        "matrix", "vector", "memory", "bandwidth", "compute", "thread", "token", "speed",
+        "lossless", "scale", "activation", "layer", "attention", "head", "cache", "batch",
+        "decode", "prefill", "latency", "throughput", "device", "cpu", "register", "simd",
+        "shuffle", "accumulate", "sign", "index",
+    ];
+    let mut rng = Rng::new(seed);
+    let mut out = String::new();
+    for i in 0..words {
+        if i > 0 {
+            out.push(' ');
+        }
+        // Zipf-ish: square the uniform draw to skew toward low indices.
+        let u = rng.next_f32();
+        let idx = ((u * u) * VOCAB.len() as f32) as usize;
+        out.push_str(VOCAB[idx.min(VOCAB.len() - 1)]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trained() -> Tokenizer {
+        Tokenizer::train(&synthetic_corpus(5000, 1), 512)
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let tok = trained();
+        for text in ["the ternary model", "lookup table kernel", "xyz unseen €", ""] {
+            let ids = tok.encode(text);
+            assert_eq!(tok.decode(&ids), text, "{text:?}");
+        }
+    }
+
+    #[test]
+    fn bos_is_prepended() {
+        let tok = trained();
+        assert_eq!(tok.encode("abc")[0], BOS);
+    }
+
+    #[test]
+    fn common_words_compress() {
+        let tok = trained();
+        let ids = tok.encode("the the the the");
+        // 15 bytes of text must compress below byte-level length + BOS.
+        assert!(ids.len() < 16, "got {} tokens", ids.len());
+    }
+
+    #[test]
+    fn ids_stay_in_vocab() {
+        let tok = trained();
+        let ids = tok.encode(&synthetic_corpus(1000, 2));
+        assert!(ids.iter().all(|&i| (i as usize) < tok.vocab_size()));
+    }
+
+    #[test]
+    fn byte_fallback_handles_arbitrary_bytes() {
+        let tok = trained();
+        let text = "\u{1F600} emoji + ümlaut";
+        assert_eq!(tok.decode(&tok.encode(text)), text);
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let a = Tokenizer::train(&synthetic_corpus(2000, 3), 400);
+        let b = Tokenizer::train(&synthetic_corpus(2000, 3), 400);
+        assert_eq!(a.encode("ternary lookup"), b.encode("ternary lookup"));
+    }
+}

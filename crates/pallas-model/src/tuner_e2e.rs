@@ -1,0 +1,529 @@
+//! End-to-end half of the auto-tuner: everything that has to build a
+//! whole [`crate::model::Transformer`] to measure — layer-composition e2e timing
+//! (`tune --e2e`), the automatic per-layer override search
+//! (`tune --search-overrides`) and the model-composed
+//! [`tokens_per_second`] estimate. Split out of
+//! [`pallas_kernels::kernels::tuner`] by the workspace crate split so
+//! the kernel crate never depends upward on the model crate; the
+//! `rust_pallas` facade grafts these back into `bitnet::kernels::tuner`
+//! and `bitnet::perf::calibrate`, so pre-split call sites compile
+//! unchanged.
+
+use anyhow::bail;
+use pallas_kernels::kernels::tuner::{Dispatch, E2eEntry, LayerOverride, Role, TuningProfile};
+use pallas_kernels::kernels::{kernel_for, QuantType};
+use pallas_kernels::perf::calibrate::KernelRate;
+
+use crate::Result;
+
+/// The unique ternary-projection shapes of a model config, as (m, k) —
+/// exactly the shapes [`crate::model::Transformer`] dispatches
+/// ([`crate::model::ModelConfig::gemv_shapes`], deduplicated).
+pub fn shapes_for_model(cfg: &crate::model::ModelConfig) -> Vec<(usize, usize)> {
+    let mut shapes = cfg.gemv_shapes();
+    shapes.sort_unstable();
+    shapes.dedup();
+    shapes
+}
+
+/// Measure layer-composition effects end to end (`bitnet tune --e2e`):
+/// build the preset model under `Auto(profile)` and under
+/// `Fixed(profile.default)`, then time one prefill chunk of
+/// `prefill_tokens` and `decode_tokens` decode steps at `decode_width`
+/// concurrent sequences (1 = single-sequence decode; `tune --trace`
+/// passes the trace's modal shapes so this section and the override
+/// search measure at the same, workload-observed shapes).
+/// Per-shape micro-benchmarks can mislead in composition (one layer's
+/// LUT tables evict the next layer's weights); this is the check that
+/// the tuned profile actually wins on the full stack. Alternates are
+/// prepacked before timing so repack cost isn't billed to the first call.
+///
+/// Synthesizes the model in memory, so it is restricted to runnable
+/// presets (tiny / 100M).
+pub fn measure_e2e(
+    profile: &TuningProfile,
+    cfg: &crate::model::ModelConfig,
+    threads: usize,
+    prefill_tokens: usize,
+    decode_tokens: usize,
+    decode_width: usize,
+) -> Result<Vec<E2eEntry>> {
+    ensure_hostable(cfg)?;
+    let ck = crate::model::weights::Checkpoint::synthetic(cfg, 0xE2E);
+    let candidates = [
+        ("auto".to_string(), Dispatch::Auto(profile.clone())),
+        (format!("fixed({})", profile.default.name()), Dispatch::Fixed(profile.default)),
+    ];
+    let mut out = Vec::new();
+    for (label, dispatch) in candidates {
+        out.push(measure_checkpoint_e2e(
+            &label,
+            dispatch,
+            &ck,
+            threads,
+            prefill_tokens,
+            decode_tokens,
+            decode_width,
+        )?);
+    }
+    Ok(out)
+}
+
+/// Refuse presets too large to synthesize in memory for an e2e timing
+/// run (shared guard of [`measure_e2e`], [`measure_dispatch_e2e`] and
+/// [`search_overrides`]).
+fn ensure_hostable(cfg: &crate::model::ModelConfig) -> Result<()> {
+    if cfg.param_count() > 300_000_000 {
+        bail!(
+            "e2e measurement synthesizes the whole model in memory; preset {} is too large \
+             (use --preset tiny or 100M)",
+            cfg.name
+        );
+    }
+    Ok(())
+}
+
+/// Time one dispatch policy end to end on a synthesized preset model:
+/// one prefill chunk of `prefill_tokens`, then `decode_tokens` decode
+/// steps over `decode_width` concurrent sequences (1 = single-sequence
+/// `decode_step`; wider runs the engine's batched `decode_batch` path,
+/// so trace-driven searches measure at the decode width the workload
+/// actually serves). Reported as an [`E2eEntry`], decode throughput in
+/// generated tokens/s across the batch. The shared measurement primitive
+/// behind [`measure_e2e`] and [`search_overrides`].
+///
+/// Synthesizes the model in memory, so it is restricted to runnable
+/// presets (tiny / 100M).
+pub fn measure_dispatch_e2e(
+    label: &str,
+    dispatch: Dispatch,
+    cfg: &crate::model::ModelConfig,
+    threads: usize,
+    prefill_tokens: usize,
+    decode_tokens: usize,
+    decode_width: usize,
+) -> Result<E2eEntry> {
+    ensure_hostable(cfg)?;
+    let ck = crate::model::weights::Checkpoint::synthetic(cfg, 0xE2E);
+    measure_checkpoint_e2e(label, dispatch, &ck, threads, prefill_tokens, decode_tokens, decode_width)
+}
+
+/// [`measure_dispatch_e2e`] over an already-synthesized checkpoint —
+/// the loop bodies of [`measure_e2e`] and [`search_overrides`] share one
+/// checkpoint across all their measurements instead of regenerating the
+/// model's random weights per candidate.
+fn measure_checkpoint_e2e(
+    label: &str,
+    dispatch: Dispatch,
+    ck: &crate::model::weights::Checkpoint,
+    threads: usize,
+    prefill_tokens: usize,
+    decode_tokens: usize,
+    decode_width: usize,
+) -> Result<E2eEntry> {
+    let cfg = &ck.config;
+    let width = decode_width.max(1);
+    let prefill_tokens = clamp_prefill_tokens(cfg, prefill_tokens);
+    // The decode loop advances the session past the prefill chunk; keep
+    // the sum inside max_seq_len or Session::append would overflow.
+    let decode_tokens = decode_tokens.min(cfg.max_seq_len.saturating_sub(prefill_tokens + 1));
+    let prompt: Vec<u32> = (0..prefill_tokens)
+        .map(|i| (3 + i % cfg.vocab_size.saturating_sub(3).max(1)) as u32)
+        .collect();
+    let model = crate::model::Transformer::from_checkpoint_dispatch(ck, dispatch, threads);
+    // Alternates are prepacked before timing so repack cost isn't billed
+    // to the first call.
+    model.prepack(&[1, width, prompt.len()]);
+    let mut sessions: Vec<crate::model::Session> = (0..width)
+        .map(|_| model.new_session(prompt.len() + decode_tokens + 1))
+        .collect();
+    // Only the first prefill is timed; the extra sessions exist to give
+    // the batched decode below same-length peers.
+    let t0 = std::time::Instant::now();
+    let _ = model.prefill(&mut sessions[0], &prompt);
+    let prefill_s = t0.elapsed().as_secs_f64();
+    for s in sessions.iter_mut().skip(1) {
+        let _ = model.prefill(s, &prompt);
+    }
+    let tok = 3 % cfg.vocab_size as u32;
+    let t1 = std::time::Instant::now();
+    if width == 1 {
+        for _ in 0..decode_tokens {
+            let _ = model.decode_step(&mut sessions[0], tok);
+        }
+    } else {
+        let tokens: Vec<u32> = vec![tok; width];
+        for _ in 0..decode_tokens {
+            let mut refs: Vec<&mut crate::model::Session> = sessions.iter_mut().collect();
+            let _ = model.decode_batch(&mut refs, &tokens);
+        }
+    }
+    let decode_s = t1.elapsed().as_secs_f64();
+    Ok(E2eEntry {
+        label: label.to_string(),
+        prefill_tok_s: prompt.len() as f64 / prefill_s.max(1e-9),
+        decode_tok_s: (decode_tokens * width) as f64 / decode_s.max(1e-9),
+    })
+}
+
+/// How [`search_overrides`] runs and scores its end-to-end sweep.
+#[derive(Clone, Debug)]
+pub struct OverrideSearchConfig {
+    /// Prefill chunk length each composition is timed at (`tune --trace`
+    /// sets it to the trace's modal chunk so the sweep measures a shape
+    /// the workload actually runs).
+    pub prefill_tokens: usize,
+    /// Decode steps each composition is timed over.
+    pub decode_tokens: usize,
+    /// Concurrent sequences each decode step runs
+    /// ([`measure_dispatch_e2e`]'s batched path when > 1; `tune --trace`
+    /// sets it to the trace's modal decode width).
+    pub decode_width: usize,
+    /// Phase blend for scoring: `score = pw·prefill_tok_s +
+    /// (1-pw)·decode_tok_s`. Defaults to 0.5; `tune --trace` sets it to
+    /// the trace's observed prefill token fraction so the winner reflects
+    /// real traffic.
+    pub prefill_weight: f64,
+    /// Kernels to try pinning on the edge/middle layers. Empty = derived
+    /// from the profile (its distinct per-shape winners plus its
+    /// default).
+    pub candidates: Vec<QuantType>,
+    /// Relative improvement over the uniform score a composition must
+    /// show to win (0.02 = 2%). Each composition is timed once, so a
+    /// strict `>` would let single-sample jitter install override rows
+    /// from compositions that are not actually faster; the margin is
+    /// the noise gate. Set 0.0 for the raw strict comparison.
+    pub min_gain: f64,
+}
+
+impl Default for OverrideSearchConfig {
+    fn default() -> Self {
+        OverrideSearchConfig {
+            prefill_tokens: 32,
+            decode_tokens: 64,
+            decode_width: 1,
+            prefill_weight: 0.5,
+            candidates: Vec::new(),
+            min_gain: 0.02,
+        }
+    }
+}
+
+/// What [`search_overrides`] decided.
+#[derive(Clone, Debug)]
+pub struct OverrideSearchOutcome {
+    /// The winning override rows — empty when no composition beat the
+    /// uniform assignment (install these as the profile's `overrides`).
+    pub overrides: Vec<LayerOverride>,
+    /// Label of the winning composition (`"uniform"` when none won).
+    pub winner: String,
+    /// Every composition's end-to-end measurement, uniform first (append
+    /// to the profile's `e2e` section for inspection).
+    pub measurements: Vec<E2eEntry>,
+    /// The uniform assignment's blended score (tok/s).
+    pub uniform_score: f64,
+    /// The best composition's blended score (tok/s) — equals
+    /// `uniform_score` when nothing beat it.
+    pub best_score: f64,
+}
+
+/// The prefill chunk length [`measure_dispatch_e2e`] will actually run
+/// for `cfg` (session capacity bounds the chunk to half the context) —
+/// shared with `search_overrides`' no-op filter, whose correctness
+/// depends on probing dispatch at exactly the measured widths.
+fn clamp_prefill_tokens(cfg: &crate::model::ModelConfig, tokens: usize) -> usize {
+    tokens.clamp(1, (cfg.max_seq_len / 2).max(1))
+}
+
+/// The (m, k) projection shapes a [`Role`] dispatches in `cfg` (qkv
+/// covers wq plus the possibly-narrower wk/wv).
+fn role_shapes(cfg: &crate::model::ModelConfig, role: Role) -> Vec<(usize, usize)> {
+    let h = cfg.hidden;
+    match role {
+        Role::Qkv => vec![(h, h), (cfg.kv_dim(), h)],
+        Role::O => vec![(h, h)],
+        Role::Gate | Role::Up => vec![(cfg.ffn, h)],
+        Role::Down => vec![(h, cfg.ffn)],
+    }
+}
+
+/// The per-layer override rows that pin `layers` × every role whose K
+/// dimension `qtype` can serve (misaligned roles are skipped rather than
+/// emitted as construction-time degrades) at batch `n = 1` — which the
+/// largest-tuned-n ≤ n rule extends to every batch width.
+fn composition_overrides(
+    cfg: &crate::model::ModelConfig,
+    layers: &[usize],
+    qtype: QuantType,
+) -> Vec<LayerOverride> {
+    let k_mult = kernel_for(qtype).info().k_multiple;
+    let mut rows = Vec::new();
+    for &layer in layers {
+        for role in Role::ALL {
+            // Reduction dim per role: every projection consumes the
+            // hidden state except `down`, which consumes the FFN width.
+            if role_shapes(cfg, role).iter().any(|&(_, k)| k % k_mult != 0) {
+                continue;
+            }
+            rows.push(LayerOverride { layer, role, n: 1, qtype });
+        }
+    }
+    rows
+}
+
+/// Automatic per-layer override search (`tune --search-overrides`): the
+/// edge layers (first and last) see different activation statistics and
+/// cache pressure than the middle of the stack, so the per-shape winner
+/// is not always the per-*position* winner. This sweeps edge-vs-middle
+/// kernel assignments end to end — for each candidate kernel, one
+/// composition pinning the first and last layers and (when the stack has
+/// a middle) one pinning everything in between — scores each against the
+/// uniform (no-override) assignment via [`measure_dispatch_e2e`], and
+/// returns the winning [`LayerOverride`] rows, or none when uniform wins.
+///
+/// The score blends the two phase throughputs by
+/// [`OverrideSearchConfig::prefill_weight`]; `progress` receives one line
+/// per measurement plus the final decision.
+pub fn search_overrides(
+    profile: &TuningProfile,
+    cfg: &crate::model::ModelConfig,
+    threads: usize,
+    search: &OverrideSearchConfig,
+    mut progress: Option<&mut dyn FnMut(&str)>,
+) -> Result<OverrideSearchOutcome> {
+    let pw = search.prefill_weight.clamp(0.0, 1.0);
+    let score = |e: &E2eEntry| pw * e.prefill_tok_s + (1.0 - pw) * e.decode_tok_s;
+    // A composition wins only when it clears the uniform score by the
+    // noise margin — each composition is timed once, and a strict `>`
+    // would let single-sample jitter promote a not-actually-faster one.
+    let min_gain = search.min_gain.max(0.0);
+    let mut say = |s: &str| {
+        if let Some(p) = progress.as_mut() {
+            p(s);
+        }
+    };
+
+    ensure_hostable(cfg)?;
+    // One synthesized checkpoint shared across every measurement in the
+    // sweep (regenerating the random weights per candidate would
+    // dominate the search's cost on the 100M preset).
+    let ck = crate::model::weights::Checkpoint::synthetic(cfg, 0xE2E);
+
+    // The baseline every composition must beat: the profile as-is but
+    // with no per-layer overrides (the uniform per-shape assignment).
+    let mut uniform_profile = profile.clone();
+    uniform_profile.overrides.clear();
+
+    let candidates: Vec<QuantType> = if search.candidates.is_empty() {
+        let mut c: Vec<QuantType> = profile.entries.iter().map(|e| e.best).collect();
+        c.push(profile.default);
+        c.sort_by_key(|q| q.name());
+        c.dedup();
+        c
+    } else {
+        search.candidates.clone()
+    };
+
+    let uniform = measure_checkpoint_e2e(
+        "uniform",
+        Dispatch::Auto(uniform_profile.clone()),
+        &ck,
+        threads,
+        search.prefill_tokens,
+        search.decode_tokens,
+        search.decode_width,
+    )?;
+    let uniform_score = score(&uniform);
+    say(&format!(
+        "override search: uniform prefill {:.1} decode {:.1} tok/s (score {:.1}, prefill weight {:.2})",
+        uniform.prefill_tok_s, uniform.decode_tok_s, uniform_score, pw
+    ));
+
+    // Edge layers vs middle layers: the first/last-vs-middle split the
+    // paper's composition effects concentrate on.
+    let last = cfg.n_layers.saturating_sub(1);
+    let edge_layers: Vec<usize> = if last == 0 { vec![0] } else { vec![0, last] };
+    let middle_layers: Vec<usize> = (1..last).collect();
+
+    // Batch widths the measurement actually exercises — the decode width
+    // (n=1 decode_step when 1, batched decode_batch otherwise) and the
+    // prefill chunk, clamped through the same helper the measurement
+    // uses. An n=1 override row shadows dispatch at *every* width, so a
+    // row counts as a no-op only when it matches uniform's selection at
+    // each of these: differing only at an unmeasured width (e.g. n=1
+    // when the traced decode runs at width 4) is invisible to the timing
+    // and must not let noise promote the composition.
+    let probe_widths: Vec<usize> = {
+        let mut w = vec![
+            search.decode_width.max(1),
+            clamp_prefill_tokens(cfg, search.prefill_tokens),
+        ];
+        w.sort_unstable();
+        w.dedup();
+        w
+    };
+
+    let mut measurements = vec![uniform];
+    let mut best: Option<(f64, String, Vec<LayerOverride>)> = None;
+    for &qt in &candidates {
+        let mut compositions: Vec<(String, Vec<usize>)> =
+            vec![(format!("edges={}", qt.name()), edge_layers.clone())];
+        if !middle_layers.is_empty() {
+            compositions.push((format!("middle={}", qt.name()), middle_layers.clone()));
+        }
+        for (label, layers) in compositions {
+            let all_rows = composition_overrides(cfg, &layers, qt);
+            if all_rows.is_empty() {
+                say(&format!("override search: {label}: no role fits this kernel's K alignment, skipped"));
+                continue;
+            }
+            // Drop rows that pin exactly what the uniform assignment
+            // already selects at every measured width — they change
+            // nothing the measurement can see, and a composition whose
+            // measured configuration is identical to uniform "beating"
+            // it would be pure timing noise installed as fake rows.
+            let rows: Vec<LayerOverride> = all_rows
+                .into_iter()
+                .filter(|o| {
+                    role_shapes(cfg, o.role).iter().any(|&(m, k)| {
+                        probe_widths.iter().any(|&n| {
+                            uniform_profile.select_for(o.layer, o.role, m, k, n).0 != o.qtype
+                        })
+                    })
+                })
+                .collect();
+            if rows.is_empty() {
+                say(&format!(
+                    "override search: {label}: matches the uniform assignment at every \
+                     measured width, skipped"
+                ));
+                continue;
+            }
+            let mut candidate_profile = uniform_profile.clone();
+            candidate_profile.overrides = rows.clone();
+            let e = measure_checkpoint_e2e(
+                &label,
+                Dispatch::Auto(candidate_profile),
+                &ck,
+                threads,
+                search.prefill_tokens,
+                search.decode_tokens,
+                search.decode_width,
+            )?;
+            let s = score(&e);
+            let wins = s > uniform_score * (1.0 + min_gain);
+            say(&format!(
+                "override search: {label}: prefill {:.1} decode {:.1} tok/s (score {:.1}{})",
+                e.prefill_tok_s,
+                e.decode_tok_s,
+                s,
+                if wins {
+                    ", beats uniform"
+                } else if s > uniform_score {
+                    ", within noise margin of uniform"
+                } else {
+                    ""
+                }
+            ));
+            measurements.push(e);
+            if wins && best.as_ref().map_or(true, |(bs, _, _)| s > *bs) {
+                best = Some((s, label, rows));
+            }
+        }
+    }
+
+    let outcome = match best {
+        Some((best_score, winner, overrides)) => {
+            say(&format!(
+                "override search: winner {winner} ({} override rows, {:+.1}% over uniform)",
+                overrides.len(),
+                (best_score / uniform_score.max(1e-9) - 1.0) * 100.0
+            ));
+            OverrideSearchOutcome { overrides, winner, measurements, uniform_score, best_score }
+        }
+        None => {
+            say("override search: uniform assignment wins, no overrides emitted");
+            OverrideSearchOutcome {
+                overrides: Vec::new(),
+                winner: "uniform".to_string(),
+                measurements,
+                uniform_score,
+                best_score: uniform_score,
+            }
+        }
+    };
+    Ok(outcome)
+}
+
+/// Estimated decode tokens/s for a model config under a calibrated rate:
+/// ternary projections at the measured kernel rate, LM head at the
+/// measured F16 rate, plus a fixed per-token overhead for attention/norms.
+pub fn tokens_per_second(
+    cfg: &crate::model::ModelConfig,
+    rate: &KernelRate,
+    f16_rate: &KernelRate,
+    overhead_s: f64,
+) -> f64 {
+    let ternary_bytes = cfg.ternary_param_count() as f64 * rate.bpw / 8.0;
+    let head_bytes = (cfg.vocab_size * cfg.hidden) as f64 * 2.0;
+    let t = ternary_bytes / rate.weight_bytes_per_s
+        + head_bytes / f16_rate.weight_bytes_per_s
+        + overhead_s;
+    1.0 / t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn composition_overrides_skip_misaligned_roles() {
+        // micro config: hidden=128 fits I2_S (K % 128) everywhere, but
+        // ffn=384 means `down` (k=ffn) misaligns for TQ2_0 (K % 256).
+        let cfg = crate::model::ModelConfig {
+            name: "micro",
+            hidden: 128,
+            ffn: 384,
+            n_layers: 3,
+            n_heads: 2,
+            n_kv_heads: 2,
+            vocab_size: 64,
+            max_seq_len: 32,
+            rope_theta: 10000.0,
+            rms_eps: 1e-5,
+        };
+        let rows = composition_overrides(&cfg, &[0, 2], QuantType::I2S);
+        assert_eq!(rows.len(), 2 * Role::ALL.len(), "I2_S fits every role");
+        assert!(rows.iter().all(|o| o.n == 1));
+        let rows = composition_overrides(&cfg, &[0], QuantType::Tq20);
+        // 384 % 256 != 0 → down skipped; 128 % 256 != 0 → everything
+        // whose k is `hidden` is skipped too.
+        assert!(rows.is_empty(), "{rows:?}");
+    }
+
+    #[test]
+    fn shapes_for_model_covers_all_projections() {
+        let cfg = crate::model::ModelConfig::tiny();
+        let shapes = shapes_for_model(&cfg);
+        assert!(shapes.contains(&(cfg.hidden, cfg.hidden)));
+        assert!(shapes.contains(&(cfg.kv_dim(), cfg.hidden)));
+        assert!(shapes.contains(&(cfg.ffn, cfg.hidden)));
+        assert!(shapes.contains(&(cfg.hidden, cfg.ffn)));
+        // Deduped and sorted.
+        let mut sorted = shapes.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(shapes, sorted);
+    }
+
+    #[test]
+    fn tokens_per_second_ordering() {
+        let cfg = crate::model::ModelConfig::b3_8();
+        let fast = KernelRate { qtype: QuantType::Tl20, weight_bytes_per_s: 1e10, weights_per_s: 5e10, bpw: 1.67 };
+        let slow = KernelRate { qtype: QuantType::F16, weight_bytes_per_s: 1e10, weights_per_s: 5e9, bpw: 16.0 };
+        let f16 = slow;
+        let a = tokens_per_second(&cfg, &fast, &f16, 0.0);
+        let b = tokens_per_second(&cfg, &slow, &f16, 0.0);
+        assert!(a > b * 5.0, "{a} vs {b}");
+    }
+}

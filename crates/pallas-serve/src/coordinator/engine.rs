@@ -1,0 +1,661 @@
+//! The serving engine: one background thread owns the model, sessions and
+//! scheduler; clients submit requests over a channel and stream token
+//! events back. Decode runs as one batched GEMM per step over every
+//! running sequence (continuous batching), prefill is chunked per admitted
+//! request — the standard split the paper's serving setting assumes. With
+//! the prefix cache enabled, submitted prompts map their longest indexed
+//! prefix straight out of the KV arena (copy-on-write pages) and only the
+//! divergent tail is prefilled; with a prefill-chunk cap, long prompts
+//! stream into the cache across steps instead of admitting all-or-nothing.
+
+use super::kv_pool::{KvArena, KvDtype};
+use super::request::{Event, FinishReason, Request, RequestHandle, RequestStats};
+use super::scheduler::{Scheduler, SeqState};
+use super::trace::{ServingTrace, TraceRecorder};
+use crate::metrics::EngineMetrics;
+use pallas_model::model::{sample, Session, Transformer};
+use pallas_core::util::Rng;
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Maximum sequences decoded per step.
+    pub max_batch: usize,
+    /// Total KV token budget across sequences.
+    pub kv_budget_tokens: usize,
+    /// EOS token id for `stop_on_eos`.
+    pub eos_token: u32,
+    /// Sampling RNG seed (deterministic serving runs).
+    pub seed: u64,
+    /// Element type the KV arena stores (`F16` halves resident KV bytes
+    /// at a small quality cost; `F32` is bit-exact with the pre-paged
+    /// layout).
+    pub kv_dtype: KvDtype,
+    /// Share KV pages across sequences with a common prompt prefix: on
+    /// submit, the longest page-granular prefix already in the arena's
+    /// radix index is mapped copy-on-write into the new sequence and only
+    /// the divergent tail is prefilled; completed fresh prompts are
+    /// indexed for later arrivals. Off by default — sharing keeps pages
+    /// resident for reuse, which callers that assert an empty arena
+    /// between workloads must opt into.
+    pub prefix_cache: bool,
+    /// Prefill chunk cap in tokens; 0 = whole-prompt chunks. A page-sized
+    /// cap (e.g. 16) lets long prompts admit as soon as one chunk fits
+    /// and stream across steps instead of waiting for every page at once.
+    pub prefill_chunk: usize,
+    /// Tuning-profile shape weights for the per-step trace-drift metric
+    /// (`ServingTrace::drift_l1`): empty disables the computation (the
+    /// common case for fixed-kernel runs, which have no profile).
+    pub profile_widths: Vec<(usize, f64)>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            max_batch: 8,
+            kv_budget_tokens: 8192,
+            eos_token: 1,
+            seed: 0,
+            kv_dtype: KvDtype::F32,
+            prefix_cache: false,
+            prefill_chunk: 0,
+            profile_widths: Vec::new(),
+        }
+    }
+}
+
+enum Command {
+    Submit(u64, Request, Sender<Event>),
+    Shutdown,
+}
+
+/// Public engine handle (cheap to clone submissions through).
+pub struct Engine {
+    cmd: Sender<Command>,
+    next_id: std::sync::atomic::AtomicU64,
+    pub metrics: Arc<EngineMetrics>,
+    /// The dispatch policy the model was packed with plus its per-shape
+    /// kernel picks (e.g. `fixed(I2_S)` or `auto(...): 256x256->TL2_0 ...`)
+    /// — recorded at startup so serving logs can attribute throughput to
+    /// kernel selection.
+    pub kernel_info: String,
+    /// The serving-shape trace the step loop records (prefill chunk
+    /// lengths, decode batch widths): the input `tune --trace` consumes.
+    /// Always on — one lock per step, far off the GEMM path.
+    trace: Arc<TraceRecorder>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Start the engine thread around a packed model.
+    pub fn start(model: Transformer, config: EngineConfig) -> Engine {
+        let (tx, rx) = channel();
+        let metrics = Arc::new(EngineMetrics::new());
+        let m2 = Arc::clone(&metrics);
+        // Materialize the packings the plan selects for the decode
+        // regimes this engine will actually run (single-sequence and
+        // full-batch width), so the first requests don't pay repack
+        // latency mid-stream. Prefill chunks still pack lazily (prompt
+        // lengths aren't known yet).
+        model.prepack(&[1, config.max_batch.max(1)]);
+        // Packing/prepack-time fallbacks are visible immediately, not
+        // only after the first served request.
+        metrics.dispatch_fallbacks.store(model.plan.fallbacks(), Ordering::Relaxed);
+        metrics.dispatch_degraded.store(model.plan.degraded(), Ordering::Relaxed);
+        mirror_prepare_stats(&model, &metrics);
+        metrics.mirror_simd();
+        let kernel_info = {
+            let shapes: Vec<String> = model
+                .kernel_summary()
+                .into_iter()
+                .map(|(m, k, q)| format!("{m}x{k}->{}", q.name()))
+                .collect();
+            format!("{}: {}", model.plan.describe(), shapes.join(" "))
+        };
+        let trace = Arc::new(TraceRecorder::new());
+        let t2 = Arc::clone(&trace);
+        let worker = std::thread::Builder::new()
+            .name("bitnet-engine".into())
+            .spawn(move || run_loop(model, config, rx, m2, t2))
+            .expect("spawn engine thread");
+        Engine { cmd: tx, next_id: 0.into(), metrics, kernel_info, trace, worker: Some(worker) }
+    }
+
+    /// Copy of the serving-shape trace recorded so far (persist it with
+    /// [`ServingTrace::save`]; `serve --record-trace <path>` does).
+    pub fn trace_snapshot(&self) -> ServingTrace {
+        self.trace.snapshot()
+    }
+
+    /// Submit a request; returns a streaming handle.
+    pub fn submit(&self, req: Request) -> RequestHandle {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        self.metrics.requests_submitted.fetch_add(1, Ordering::Relaxed);
+        // If the engine is gone the receiver hangs up immediately, which
+        // RequestHandle::wait maps to Cancelled.
+        let _ = self.cmd.send(Command::Submit(id, req, tx));
+        RequestHandle { id, events: rx }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.cmd.send(Command::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Copy the KV arena's page/byte/preemption/prefix counters into the
+/// lock-free engine metrics (one lock per step, far off the GEMM path).
+fn mirror_kv_stats(arena: &Arc<Mutex<KvArena>>, metrics: &EngineMetrics) {
+    let a = arena.lock().unwrap();
+    metrics.kv_pages_used.store(a.used_pages() as u64, Ordering::Relaxed);
+    metrics.kv_pages_peak.store(a.peak_used_pages() as u64, Ordering::Relaxed);
+    metrics.kv_pages_total.store(a.total_pages() as u64, Ordering::Relaxed);
+    metrics.kv_resident_bytes.store(a.resident_bytes() as u64, Ordering::Relaxed);
+    metrics.kv_capacity_bytes.store(a.capacity_bytes() as u64, Ordering::Relaxed);
+    metrics.kv_preemptions.store(a.preemptions(), Ordering::Relaxed);
+    metrics.prefix_hit_tokens.store(a.prefix_hit_tokens(), Ordering::Relaxed);
+    metrics.kv_cow_splits.store(a.cow_splits(), Ordering::Relaxed);
+}
+
+/// Copy the pool's per-node dispatch counters and the arena's per-node
+/// resident bytes into the engine metrics. On a single-node pool the
+/// summary renders "numa off" from the mirrored node count.
+fn mirror_numa_stats(model: &Transformer, arena: &Arc<Mutex<KvArena>>, metrics: &EngineMetrics) {
+    let stats = model.pool.numa_stats();
+    let a = arena.lock().unwrap();
+    metrics.mirror_numa(&stats, a.resident_bytes_by_node());
+}
+
+/// Copy the model's prepare-once cache counters into the engine metrics
+/// (the workspace lives behind the model's mutex; metrics are the
+/// lock-free read side).
+fn mirror_prepare_stats(model: &Transformer, metrics: &EngineMetrics) {
+    let ps = model.prepare_stats();
+    metrics.prepare_cache_hits.store(ps.hits, Ordering::Relaxed);
+    metrics.prepare_cache_misses.store(ps.misses, Ordering::Relaxed);
+    metrics.prepare_buffer_allocs.store(ps.buffer_allocs, Ordering::Relaxed);
+    metrics.prepare_buffer_reuses.store(ps.buffer_reuses, Ordering::Relaxed);
+}
+
+/// Engine-side per-request state.
+struct Live {
+    session: Session,
+    req: Request,
+    events: Sender<Event>,
+    submitted: Instant,
+    prefilled_at: Option<Instant>,
+    last_token: u32,
+    generated: Vec<u32>,
+}
+
+fn run_loop(
+    model: Transformer,
+    config: EngineConfig,
+    rx: Receiver<Command>,
+    metrics: Arc<EngineMetrics>,
+    trace: Arc<TraceRecorder>,
+) {
+    // The one KV arena every serving session shares: the scheduler
+    // reserves pages in it, sessions read/write through it, and its
+    // counters are mirrored into the engine metrics each step. On a
+    // multi-node pool, pages mint interleaved across nodes with their
+    // slabs first-touched by the owning node (single-node: inert).
+    let arena = Arc::new(Mutex::new({
+        let mut a = KvArena::new(
+            model.cfg.n_layers,
+            model.cfg.kv_dim(),
+            config.kv_budget_tokens,
+            config.kv_dtype,
+        );
+        a.set_placement(Arc::clone(&model.pool));
+        a
+    }));
+    let mut scheduler = Scheduler::new(config.max_batch);
+    scheduler.prefill_chunk = config.prefill_chunk;
+    let mut live: HashMap<u64, Live> = HashMap::new();
+    let mut rng = Rng::new(config.seed);
+    mirror_kv_stats(&arena, &metrics);
+    mirror_numa_stats(&model, &arena, &metrics);
+
+    'outer: loop {
+        // Drain commands. Block when idle (no running/waiting work).
+        let idle = scheduler.running_len() == 0 && scheduler.waiting_len() == 0;
+        loop {
+            let cmd = if idle && live.is_empty() {
+                match rx.recv() {
+                    Ok(c) => c,
+                    Err(_) => break 'outer,
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(c) => c,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => break 'outer,
+                }
+            };
+            match cmd {
+                Command::Shutdown => break 'outer,
+                Command::Submit(id, req, events) => {
+                    let prompt_len = req.prompt.len().max(1);
+                    let mut seq = SeqState::new(id, prompt_len, req.max_new_tokens);
+                    let accepted = !req.prompt.is_empty() && {
+                        let mut a = arena.lock().unwrap();
+                        let fits = a.pages_for(seq.worst_case_tokens()) <= a.total_pages();
+                        if fits && config.prefix_cache {
+                            // Map the longest indexed prefix into this
+                            // sequence's page table (shared, refcounted)
+                            // before admission planning: the scheduler's
+                            // first chunk starts at the divergence point
+                            // and the mapped tokens are never recomputed.
+                            seq.prefix_tokens = a.map_prefix(id, &req.prompt);
+                            seq.prefilled = seq.prefix_tokens;
+                        }
+                        fits && scheduler.submit(seq.clone(), &a)
+                    };
+                    if !accepted {
+                        metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
+                        let _ = events.send(Event::Done {
+                            request_id: id,
+                            reason: FinishReason::Rejected,
+                            stats: RequestStats::default(),
+                        });
+                        continue;
+                    }
+                    metrics.prompt_tokens.fetch_add(prompt_len as u64, Ordering::Relaxed);
+                    let mut session =
+                        model.new_session_shared(&arena, id, prompt_len + req.max_new_tokens);
+                    // The mapped prefix is already cache-resident: the
+                    // session resumes mid-prompt.
+                    session.pos = seq.prefix_tokens;
+                    live.insert(
+                        id,
+                        Live {
+                            session,
+                            req,
+                            events,
+                            submitted: Instant::now(),
+                            prefilled_at: None,
+                            last_token: 0,
+                            generated: Vec::new(),
+                        },
+                    );
+                }
+            }
+            if idle {
+                break; // got one command while idle; re-plan
+            }
+        }
+
+        let plan = {
+            let mut a = arena.lock().unwrap();
+            scheduler.step(&mut a)
+        };
+        if plan.prefill.is_empty() && plan.decode.is_empty() {
+            continue;
+        }
+        metrics.peak_batch.fetch_max(plan.decode_width() as u64, Ordering::Relaxed);
+        if let Some(&chunk) = plan.prefill_chunks.iter().max() {
+            metrics.peak_prefill_chunk.fetch_max(chunk as u64, Ordering::Relaxed);
+        }
+
+        // Preempted sequences lost their pages (released by the
+        // scheduler — shared prefix pages survive through the index or
+        // other referents): reset their page-table views so re-admission
+        // re-prefills from position 0.
+        for id in &plan.preempted {
+            if let Some(l) = live.get_mut(id) {
+                l.session.clear();
+            }
+        }
+
+        // Run this step's prefill chunks. Fresh prompts stream from the
+        // divergence point (`session.pos`: past the mapped prefix and any
+        // chunks from earlier steps); the chunk that completes the prompt
+        // yields the logits the first sampled token comes from.
+        // Re-admissions after a preemption rebuild the cache instead:
+        // prompt plus every generated token except the last (which the
+        // next decode step appends) — already-emitted tokens are never
+        // re-sampled.
+        for (id, &chunk) in plan.prefill.iter().zip(plan.prefill_chunks.iter()) {
+            let l = live.get_mut(id).expect("live entry for admitted seq");
+            let fresh = l.generated.is_empty();
+            let target: Vec<u32> = if fresh {
+                l.req.prompt.clone()
+            } else {
+                let mut t = l.req.prompt.clone();
+                t.extend_from_slice(&l.generated[..l.generated.len() - 1]);
+                t
+            };
+            let start = l.session.pos;
+            let end = (start + chunk).min(target.len());
+            let logits = model.prefill(&mut l.session, &target[start..end]);
+            metrics.prefill_tokens_computed.fetch_add((end - start) as u64, Ordering::Relaxed);
+            if end < target.len() {
+                // Mid-prompt chunk: more stream next step.
+                scheduler.on_prefill_progress(*id, end - start);
+                continue;
+            }
+            // The full prompt is in the KV cache *now* — this
+            // notification, not admission planning, is what flips
+            // Prefill → Decoding (so `current_tokens` never claims
+            // unprefilled occupancy).
+            scheduler.on_prefilled(*id);
+            if !fresh {
+                continue;
+            }
+            if config.prefix_cache {
+                // Index the completed prompt's full pages so later
+                // arrivals with the same prefix map them instead of
+                // recomputing.
+                arena.lock().unwrap().register_prefix(*id, &l.req.prompt);
+            }
+            let tok = sample(&logits, &l.req.sampling, &mut rng);
+            l.prefilled_at = Some(Instant::now());
+            metrics.ttft.record(l.submitted.elapsed());
+            l.last_token = tok;
+            l.generated.push(tok);
+            let _ = l.events.send(Event::Token { request_id: *id, token: tok });
+            scheduler.on_token(*id);
+            if l.req.stop_on_eos && tok == config.eos_token {
+                // Retired at the next step's retire scan: stop the
+                // scheduler reserving (or preempting) for a decode
+                // append that will never run.
+                scheduler.on_stop(*id);
+            }
+            metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
+        }
+
+        // Retire sequences that already hit a stop condition.
+        let mut finished: Vec<(u64, FinishReason)> = Vec::new();
+        for id in &plan.decode {
+            let l = &live[id];
+            if l.generated.len() >= l.req.max_new_tokens {
+                finished.push((*id, FinishReason::Length));
+            } else if l.req.stop_on_eos && l.last_token == config.eos_token {
+                finished.push((*id, FinishReason::Eos));
+            }
+        }
+        let decode_ids: Vec<u64> =
+            plan.decode.iter().copied().filter(|id| !finished.iter().any(|(f, _)| f == id)).collect();
+
+        // Batched decode step over every still-running sequence.
+        if !decode_ids.is_empty() {
+            let t0 = Instant::now();
+            let tokens: Vec<u32> = decode_ids.iter().map(|id| live[id].last_token).collect();
+            // Pull the sessions out to satisfy the borrow checker, then
+            // reinstall (cheap: Session is a couple of Vecs moved by ptr).
+            let mut entries: Vec<(u64, &mut Live)> = live
+                .iter_mut()
+                .filter(|(id, _)| decode_ids.contains(id))
+                .map(|(id, l)| (*id, l))
+                .collect();
+            entries.sort_by_key(|(id, _)| decode_ids.iter().position(|d| d == id).unwrap());
+            let mut sessions: Vec<&mut Session> =
+                entries.iter_mut().map(|(_, l)| &mut l.session).collect();
+            let logits = model.decode_batch(&mut sessions, &tokens);
+            drop(sessions);
+            metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+            metrics.batched_tokens.fetch_add(decode_ids.len() as u64, Ordering::Relaxed);
+            metrics.step_latency.record(t0.elapsed());
+
+            for ((id, l), lg) in entries.into_iter().zip(logits.iter()) {
+                let tok = sample(lg, &l.req.sampling, &mut rng);
+                l.last_token = tok;
+                l.generated.push(tok);
+                let _ = l.events.send(Event::Token { request_id: id, token: tok });
+                scheduler.on_token(id);
+                if l.req.stop_on_eos && tok == config.eos_token {
+                    scheduler.on_stop(id);
+                }
+                metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+
+        // Serving-shape trace: the GEMM widths this step actually ran
+        // (the decode width can shrink below the plan's when sequences
+        // retired before the batched GEMM).
+        let (trace_steps, trace_shapes) = trace.record_step(&plan, decode_ids.len());
+        metrics.trace_steps.store(trace_steps, Ordering::Relaxed);
+        metrics.trace_shapes.store(trace_shapes, Ordering::Relaxed);
+        if !config.profile_widths.is_empty() {
+            // Numeric tune-vs-serve drift, live per step (the one-shot
+            // end-of-run warning in `main` uses the same quantity).
+            let drift = trace.snapshot().drift_l1(&config.profile_widths);
+            metrics.drift_l1_milli.store((drift * 1000.0).round() as u64, Ordering::Relaxed);
+        }
+
+        // Mirror the model's dispatch-observability counters (untuned-
+        // shape fallbacks and winners that could not run — see
+        // kernels::tuner::DispatchPlan) after the step's forwards;
+        // Engine::start seeds the same counters for packing/prepack time.
+        metrics.dispatch_fallbacks.store(model.plan.fallbacks(), Ordering::Relaxed);
+        metrics.dispatch_degraded.store(model.plan.degraded(), Ordering::Relaxed);
+        mirror_prepare_stats(&model, &metrics);
+        metrics.mirror_simd();
+
+        // Release finished sequences' pages, then mirror the arena state
+        // *before* any Done event goes out: a client woken by Done must
+        // observe post-release occupancy in the metrics.
+        for (id, _) in &finished {
+            scheduler.finish(*id, &mut arena.lock().unwrap());
+        }
+        mirror_kv_stats(&arena, &metrics);
+        mirror_numa_stats(&model, &arena, &metrics);
+
+        // Emit completions.
+        for (id, reason) in finished {
+            if let Some(l) = live.remove(&id) {
+                let stats = RequestStats {
+                    queue_wait: l
+                        .prefilled_at
+                        .map(|t| t.duration_since(l.submitted))
+                        .unwrap_or_default(),
+                    ttft: l
+                        .prefilled_at
+                        .map(|t| t.duration_since(l.submitted))
+                        .unwrap_or_default(),
+                    prompt_tokens: l.req.prompt.len(),
+                    new_tokens: l.generated.len(),
+                    total: l.submitted.elapsed(),
+                };
+                metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+                let _ = l.events.send(Event::Done { request_id: id, reason, stats });
+            }
+        }
+    }
+
+    // Shutdown: cancel everything still live.
+    for (id, l) in live {
+        let _ = l.events.send(Event::Done {
+            request_id: id,
+            reason: FinishReason::Cancelled,
+            stats: RequestStats::default(),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use pallas_kernels::kernels::QuantType;
+    use pallas_model::model::{ModelConfig, SamplingParams};
+
+    fn tiny_engine(max_batch: usize) -> Engine {
+        let model = Transformer::synthetic(&ModelConfig::tiny(), QuantType::I2S, 3);
+        Engine::start(
+            model,
+            EngineConfig { max_batch, kv_budget_tokens: 2048, eos_token: 1, seed: 7, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let engine = tiny_engine(4);
+        assert!(engine.kernel_info.contains("fixed(I2_S)"), "{}", engine.kernel_info);
+        let h = engine.submit(Request::greedy(vec![5, 6, 7], 8));
+        let (tokens, reason, stats) = h.wait();
+        assert_eq!(tokens.len(), 8);
+        assert_eq!(reason, FinishReason::Length);
+        assert_eq!(stats.prompt_tokens, 3);
+        assert_eq!(stats.new_tokens, 8);
+    }
+
+    #[test]
+    fn greedy_is_deterministic_across_engines() {
+        let a = {
+            let engine = tiny_engine(4);
+            engine.submit(Request::greedy(vec![9, 9, 9], 6)).wait().0
+        };
+        let b = {
+            let engine = tiny_engine(4);
+            engine.submit(Request::greedy(vec![9, 9, 9], 6)).wait().0
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn concurrent_requests_all_complete() {
+        let engine = tiny_engine(3);
+        let handles: Vec<_> = (0..6)
+            .map(|i| engine.submit(Request::greedy(vec![i as u32 + 1, 2, 3], 5)))
+            .collect();
+        for h in handles {
+            let (tokens, reason, _) = h.wait();
+            assert_eq!(tokens.len(), 5);
+            assert_eq!(reason, FinishReason::Length);
+        }
+        assert!(engine.metrics.mean_batch() > 1.0, "batching should engage");
+    }
+
+    #[test]
+    fn batched_output_matches_sequential_output() {
+        // Continuous batching must not change greedy outputs.
+        let prompts: Vec<Vec<u32>> = vec![vec![4, 5], vec![6, 7, 8], vec![100]];
+        let sequential: Vec<Vec<u32>> = {
+            let engine = tiny_engine(1); // batch of 1 → sequential
+            prompts
+                .iter()
+                .map(|p| engine.submit(Request::greedy(p.clone(), 6)).wait().0)
+                .collect()
+        };
+        let engine = tiny_engine(4);
+        let handles: Vec<_> =
+            prompts.iter().map(|p| engine.submit(Request::greedy(p.clone(), 6))).collect();
+        let batched: Vec<Vec<u32>> = handles.into_iter().map(|h| h.wait().0).collect();
+        assert_eq!(sequential, batched);
+    }
+
+    #[test]
+    fn chunked_prefill_matches_whole_prompt_output() {
+        // Streaming the prompt into the cache page-by-page must not
+        // change greedy outputs (same GEMMs, different step boundaries).
+        let prompt: Vec<u32> = (0..45).map(|i| (i * 7) % 512).collect();
+        let whole = {
+            let engine = tiny_engine(2);
+            engine.submit(Request::greedy(prompt.clone(), 8)).wait().0
+        };
+        for chunk in [16, 48] {
+            let model = Transformer::synthetic(&ModelConfig::tiny(), QuantType::I2S, 3);
+            let engine = Engine::start(
+                model,
+                EngineConfig {
+                    max_batch: 2,
+                    kv_budget_tokens: 2048,
+                    seed: 7,
+                    prefill_chunk: chunk,
+                    ..Default::default()
+                },
+            );
+            let chunked = engine.submit(Request::greedy(prompt.clone(), 8)).wait().0;
+            assert_eq!(whole, chunked, "chunk={chunk} diverged");
+        }
+    }
+
+    #[test]
+    fn prefix_cache_reuses_shared_prompt() {
+        // Two identical prompts: the second maps the first's pages and
+        // prefills only the final token; outputs stay identical.
+        let prompt: Vec<u32> = (0..40).map(|i| (i * 3) % 512).collect();
+        let model = Transformer::synthetic(&ModelConfig::tiny(), QuantType::I2S, 3);
+        let engine = Engine::start(
+            model,
+            EngineConfig {
+                max_batch: 2,
+                kv_budget_tokens: 2048,
+                seed: 7,
+                prefix_cache: true,
+                ..Default::default()
+            },
+        );
+        let a = engine.submit(Request::greedy(prompt.clone(), 6)).wait().0;
+        let b = engine.submit(Request::greedy(prompt.clone(), 6)).wait().0;
+        assert_eq!(a, b, "shared-prefix decode must be bit-identical");
+        let hit = engine.metrics.prefix_hit_tokens.load(Ordering::Relaxed);
+        assert!(hit > 0, "second request should map the indexed prefix");
+        let computed = engine.metrics.prefill_tokens_computed.load(Ordering::Relaxed);
+        assert_eq!(
+            computed as usize,
+            prompt.len() + (prompt.len() - hit as usize),
+            "only the unmapped tail of the second prompt was recomputed"
+        );
+    }
+
+    #[test]
+    fn oversized_prompt_is_rejected() {
+        let model = Transformer::synthetic(&ModelConfig::tiny(), QuantType::I2S, 3);
+        let engine = Engine::start(
+            model,
+            EngineConfig { max_batch: 2, kv_budget_tokens: 64, eos_token: 1, seed: 0, ..Default::default() },
+        );
+        let h = engine.submit(Request::greedy((0..100).collect(), 50));
+        let (_, reason, _) = h.wait();
+        assert_eq!(reason, FinishReason::Rejected);
+    }
+
+    #[test]
+    fn empty_prompt_is_rejected() {
+        let engine = tiny_engine(2);
+        let (_, reason, _) = engine.submit(Request::greedy(vec![], 4)).wait();
+        assert_eq!(reason, FinishReason::Rejected);
+    }
+
+    #[test]
+    fn prepare_cache_metrics_are_populated() {
+        let engine = tiny_engine(2);
+        let (tokens, _, _) = engine.submit(Request::greedy(vec![5, 6, 7], 4)).wait();
+        assert_eq!(tokens.len(), 4);
+        let hits = engine.metrics.prepare_cache_hits.load(Ordering::Relaxed);
+        let misses = engine.metrics.prepare_cache_misses.load(Ordering::Relaxed);
+        // Every layer input prepares once (miss) and wk/wv + up share it
+        // (hits): 4 misses / 3 hits per layer per step.
+        assert!(misses > 0, "prepare misses should be mirrored");
+        assert!(hits > 0, "prepare hits should be mirrored (qkv/gate+up sharing)");
+        assert_eq!(hits % 3, 0, "3 hits per layer per step, got {hits}");
+        assert_eq!(misses % 4, 0, "4 misses per layer per step, got {misses}");
+    }
+
+    #[test]
+    fn sampled_generation_stays_in_vocab() {
+        let engine = tiny_engine(2);
+        let req = Request {
+            prompt: vec![1, 2],
+            max_new_tokens: 12,
+            sampling: SamplingParams { temperature: 1.0, top_k: 50, top_p: 0.95 },
+            stop_on_eos: false,
+        };
+        let (tokens, _, _) = engine.submit(req).wait();
+        assert_eq!(tokens.len(), 12);
+        assert!(tokens.iter().all(|&t| (t as usize) < 512));
+    }
+}

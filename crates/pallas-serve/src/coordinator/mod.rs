@@ -1,0 +1,31 @@
+//! Layer-3 coordinator: the serving system around the kernel library —
+//! request router, a continuous-batching scheduler with watermark
+//! admission and LIFO preemption, and the engine event loop (the role
+//! llama.cpp's `server` / vLLM's router play for the paper's system).
+//!
+//! The paged KV arena that owns the cache bytes lives one layer below
+//! since the crate split ([`pallas_core::arena`]) so `model::Session`
+//! and this scheduler share it without the model reaching up into the
+//! coordinator; [`kv_pool`] re-exports it under its historical path.
+//!
+//! Threading model: one engine thread owns the model and all sessions;
+//! clients submit [`request::Request`]s over a channel and stream
+//! [`request::Event`]s back. Python is never involved; the binary is
+//! self-contained after `make artifacts`.
+
+pub mod engine;
+pub mod request;
+pub mod scheduler;
+pub mod trace;
+
+/// Historical home of the KV arena — now a re-export of
+/// [`pallas_core::arena`] (the arena moved below both `model` and the
+/// scheduler in the workspace crate split).
+pub mod kv_pool {
+    pub use pallas_core::arena::*;
+}
+
+pub use engine::{Engine, EngineConfig};
+pub use kv_pool::{KvArena, KvDtype, PAGE_TOKENS};
+pub use request::{Event, FinishReason, Request, RequestHandle};
+pub use trace::{ServingTrace, TraceRecorder};

@@ -1,0 +1,94 @@
+//! Request/response types for the serving engine.
+
+use pallas_model::model::SamplingParams;
+use std::sync::mpsc::Receiver;
+use std::time::Duration;
+
+/// A generation request submitted to the engine.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub sampling: SamplingParams,
+    /// Stop on the EOS token id (engine-configured).
+    pub stop_on_eos: bool,
+}
+
+impl Request {
+    pub fn greedy(prompt: Vec<u32>, max_new_tokens: usize) -> Request {
+        Request {
+            prompt,
+            max_new_tokens,
+            sampling: SamplingParams::greedy(),
+            stop_on_eos: false,
+        }
+    }
+}
+
+/// Why a request finished.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit `max_new_tokens`.
+    Length,
+    /// Sampled the EOS token.
+    Eos,
+    /// Engine shut down before completion.
+    Cancelled,
+    /// Rejected at admission (prompt longer than KV budget).
+    Rejected,
+}
+
+/// Timing/throughput statistics reported with `Event::Done`.
+#[derive(Clone, Debug, Default)]
+pub struct RequestStats {
+    /// Queue wait before prefill started.
+    pub queue_wait: Duration,
+    /// Time to first token (submission → first decode token).
+    pub ttft: Duration,
+    /// Prompt length in tokens.
+    pub prompt_tokens: usize,
+    /// Generated tokens.
+    pub new_tokens: usize,
+    /// Total wall time from submission to completion.
+    pub total: Duration,
+}
+
+impl RequestStats {
+    /// Decode throughput in tokens/s (excludes prefill).
+    pub fn decode_tps(&self) -> f64 {
+        let decode_time = self.total.saturating_sub(self.ttft).as_secs_f64();
+        if decode_time <= 0.0 || self.new_tokens <= 1 {
+            return 0.0;
+        }
+        (self.new_tokens - 1) as f64 / decode_time
+    }
+}
+
+/// Streamed engine → client events.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// One generated token.
+    Token { request_id: u64, token: u32 },
+    /// Request finished; no more events follow.
+    Done { request_id: u64, reason: FinishReason, stats: RequestStats },
+}
+
+/// Client-side handle: the request id plus the event stream.
+pub struct RequestHandle {
+    pub id: u64,
+    pub events: Receiver<Event>,
+}
+
+impl RequestHandle {
+    /// Block until completion, collecting all generated tokens.
+    pub fn wait(self) -> (Vec<u32>, FinishReason, RequestStats) {
+        let mut tokens = Vec::new();
+        for ev in self.events.iter() {
+            match ev {
+                Event::Token { token, .. } => tokens.push(token),
+                Event::Done { reason, stats, .. } => return (tokens, reason, stats),
+            }
+        }
+        (tokens, FinishReason::Cancelled, RequestStats::default())
+    }
+}

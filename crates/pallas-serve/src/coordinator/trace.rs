@@ -1,0 +1,510 @@
+//! Serving-shape traces: the histogram of GEMM batch shapes a real run
+//! exhibits — prefill chunk lengths and decode batch widths, each with
+//! its occurrence count — recorded by the engine step loop and persisted
+//! as `trace.json` (`run`/`serve --record-trace`).
+//!
+//! Why this exists: the tuner's value depends on measuring the shapes the
+//! workload actually runs. A fixed `--batches 1,4` sweep tunes a guess;
+//! a recorded trace tunes the observed distribution, and its frequencies
+//! weight the resulting profile entries so they reflect real traffic
+//! (`tune --trace`, see `kernels::tuner` and docs/tuning.md).
+#![deny(missing_docs)]
+
+use super::scheduler::StepPlan;
+use pallas_core::util::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Trace file format version written by [`ServingTrace::to_json`] (bump
+/// on breaking schema changes).
+pub const TRACE_VERSION: u64 = 1;
+
+/// L1-distance threshold above which `run`/`serve` warn that live
+/// traffic has drifted from the shapes the loaded profile was tuned at
+/// (see [`ServingTrace::drift_l1`]; the distance lives in `[0, 2]`, so
+/// 0.5 means a quarter of the probability mass moved).
+pub const DRIFT_WARN_L1: f64 = 0.5;
+
+/// A recorded serving-shape histogram. Keys are GEMM batch widths (rows
+/// of the activation batch): prompt tokens per prefill call, sequences
+/// per batched decode call. `BTreeMap` keeps iteration (and the JSON on
+/// disk) deterministically ordered.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ServingTrace {
+    /// Engine steps that executed at least one GEMM.
+    pub steps: u64,
+    /// Prefill chunk length (prompt tokens) → occurrences.
+    pub prefill_chunks: BTreeMap<usize, u64>,
+    /// Decode batch width (sequences) → occurrences.
+    pub decode_widths: BTreeMap<usize, u64>,
+}
+
+impl ServingTrace {
+    /// An empty trace.
+    pub fn new() -> ServingTrace {
+        ServingTrace::default()
+    }
+
+    /// True when nothing was recorded (tuning from such a trace is an
+    /// error — there are no observed shapes to tune at).
+    pub fn is_empty(&self) -> bool {
+        self.prefill_chunks.is_empty() && self.decode_widths.is_empty()
+    }
+
+    /// Record one prefill call of `chunk` prompt tokens. Returns true if
+    /// this chunk length had not been seen before.
+    pub fn record_prefill(&mut self, chunk: usize) -> bool {
+        if chunk == 0 {
+            return false;
+        }
+        let c = self.prefill_chunks.entry(chunk).or_insert(0);
+        *c += 1;
+        *c == 1
+    }
+
+    /// Record one batched decode call over `width` sequences. Returns
+    /// true if this width had not been seen before.
+    pub fn record_decode(&mut self, width: usize) -> bool {
+        if width == 0 {
+            return false;
+        }
+        let c = self.decode_widths.entry(width).or_insert(0);
+        *c += 1;
+        *c == 1
+    }
+
+    /// Record the shapes of one planned engine step (`decode_width` is
+    /// the width the step actually decoded at, which can be smaller than
+    /// the plan's when sequences retired before the batched GEMM).
+    /// Returns how many *merged-distinct* shapes (see
+    /// [`ServingTrace::distinct_shapes`]) this step introduced, so
+    /// callers can maintain a running count without rescanning the
+    /// histograms every step.
+    pub fn record_step(&mut self, plan: &StepPlan, decode_width: usize) -> usize {
+        if plan.prefill_chunks.is_empty() && decode_width == 0 {
+            return 0;
+        }
+        self.steps += 1;
+        let mut new_shapes = 0;
+        for &chunk in &plan.prefill_chunks {
+            let merged_new = !self.prefill_chunks.contains_key(&chunk)
+                && !self.decode_widths.contains_key(&chunk);
+            // Both conditions matter: merged_new alone would count a
+            // zero-length chunk (absent from both maps, but rejected by
+            // record_prefill) as a new shape.
+            if self.record_prefill(chunk) && merged_new {
+                new_shapes += 1;
+            }
+        }
+        if decode_width > 0 {
+            let merged_new = !self.prefill_chunks.contains_key(&decode_width)
+                && !self.decode_widths.contains_key(&decode_width);
+            if self.record_decode(decode_width) && merged_new {
+                new_shapes += 1;
+            }
+        }
+        new_shapes
+    }
+
+    /// Total recorded GEMM calls (prefill + decode events).
+    pub fn total_events(&self) -> u64 {
+        self.prefill_chunks.values().sum::<u64>() + self.decode_widths.values().sum::<u64>()
+    }
+
+    /// Distinct shape keys observed (prefill chunk lengths plus decode
+    /// widths; a width that appears as both counts once).
+    pub fn distinct_shapes(&self) -> usize {
+        let mut keys: Vec<usize> =
+            self.prefill_chunks.keys().chain(self.decode_widths.keys()).copied().collect();
+        keys.sort_unstable();
+        keys.dedup();
+        keys.len()
+    }
+
+    /// The trace as a tuner batch sweep: every observed GEMM batch width
+    /// (prefill chunk lengths and decode widths merged), ascending, each
+    /// with its fraction of total recorded events as weight. Weights are
+    /// per *call*, not per token: one prefill chunk of 100 tokens and one
+    /// decode step over 4 sequences each streamed the weights once, which
+    /// is what the tuner's per-matmul rate ranks.
+    pub fn weighted_batches(&self) -> Vec<(usize, f64)> {
+        let total = self.total_events();
+        if total == 0 {
+            return Vec::new();
+        }
+        let mut merged: BTreeMap<usize, u64> = self.prefill_chunks.clone();
+        for (&w, &c) in &self.decode_widths {
+            *merged.entry(w).or_insert(0) += c;
+        }
+        merged.into_iter().map(|(n, c)| (n, c as f64 / total as f64)).collect()
+    }
+
+    /// [`ServingTrace::weighted_batches`] truncated to the `k`
+    /// highest-weight widths (ties keep the smaller width — the decode
+    /// regimes), returned ascending along with how many observed widths
+    /// were dropped. Weights keep their full-trace fractions, so a
+    /// truncated sweep's weights sum below 1 by exactly the dropped
+    /// traffic share — the caller should log the drop, never hide it.
+    /// Guards `tune --trace` against long-tail workloads where nearly
+    /// every prompt length is distinct and would each become a tuned
+    /// width.
+    pub fn top_weighted_batches(&self, k: usize) -> (Vec<(usize, f64)>, usize) {
+        let mut all = self.weighted_batches();
+        if k == 0 || all.len() <= k {
+            return (all, 0);
+        }
+        let dropped = all.len() - k;
+        all.sort_by(|a, b| b.1.partial_cmp(&a.1).expect("finite weight").then(a.0.cmp(&b.0)));
+        all.truncate(k);
+        all.sort_unstable_by_key(|&(n, _)| n);
+        (all, dropped)
+    }
+
+    /// The most frequently observed prefill chunk length (ties resolve
+    /// to the longest; `None` when no prefill was recorded) — the chunk
+    /// the override search times compositions at under `tune --trace`.
+    pub fn modal_prefill_chunk(&self) -> Option<usize> {
+        self.prefill_chunks.iter().max_by_key(|&(&n, &c)| (c, n)).map(|(&n, _)| n)
+    }
+
+    /// The most frequently observed decode batch width (ties resolve to
+    /// the widest; `None` when no decode was recorded).
+    pub fn modal_decode_width(&self) -> Option<usize> {
+        self.decode_widths.iter().max_by_key(|&(&n, &c)| (c, n)).map(|(&n, _)| n)
+    }
+
+    /// Fraction of recorded *tokens* that came from prefill (chunk
+    /// lengths weighted by count vs decode widths weighted by count) —
+    /// the phase blend the override search scores compositions with.
+    /// Returns 0.5 when the trace is empty (no evidence either way).
+    pub fn prefill_token_fraction(&self) -> f64 {
+        let prefill: u64 = self.prefill_chunks.iter().map(|(&n, &c)| n as u64 * c).sum();
+        let decode: u64 = self.decode_widths.iter().map(|(&n, &c)| n as u64 * c).sum();
+        if prefill + decode == 0 {
+            0.5
+        } else {
+            prefill as f64 / (prefill + decode) as f64
+        }
+    }
+
+    /// L1 distance in `[0, 2]` between this trace's batch-width
+    /// distribution ([`ServingTrace::weighted_batches`]) and a tuning
+    /// profile's recorded per-width traffic weights
+    /// (`TuningProfile::weighted_widths`). Both sides are normalized
+    /// over the union of widths, so mass on widths only one side knows
+    /// about counts in full — a workload running shapes the profile
+    /// never measured *is* drift. `run`/`serve` compare the live trace
+    /// against the loaded profile and suggest a re-tune above
+    /// [`DRIFT_WARN_L1`].
+    pub fn drift_l1(&self, profile_widths: &[(usize, f64)]) -> f64 {
+        let live = self.weighted_batches();
+        let total_p: f64 = profile_widths.iter().map(|&(_, w)| w).sum();
+        let mut widths: Vec<usize> = live
+            .iter()
+            .map(|&(n, _)| n)
+            .chain(profile_widths.iter().map(|&(n, _)| n))
+            .collect();
+        widths.sort_unstable();
+        widths.dedup();
+        let weight_of = |v: &[(usize, f64)], n: usize| {
+            v.iter().find(|&&(m, _)| m == n).map_or(0.0, |&(_, w)| w)
+        };
+        widths
+            .iter()
+            .map(|&n| {
+                let p = if total_p > 0.0 { weight_of(profile_widths, n) / total_p } else { 0.0 };
+                (weight_of(&live, n) - p).abs()
+            })
+            .sum()
+    }
+
+    /// One-line human summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} steps, {} prefill chunks ({} distinct), {} decode batches ({} distinct)",
+            self.steps,
+            self.prefill_chunks.values().sum::<u64>(),
+            self.prefill_chunks.len(),
+            self.decode_widths.values().sum::<u64>(),
+            self.decode_widths.len()
+        )
+    }
+
+    /// Serialize to the JSON trace schema.
+    pub fn to_json(&self) -> Json {
+        let hist = |map: &BTreeMap<usize, u64>| {
+            Json::Arr(
+                map.iter()
+                    .map(|(&n, &c)| {
+                        Json::Obj(vec![
+                            ("n".into(), Json::Num(n as f64)),
+                            ("count".into(), Json::Num(c as f64)),
+                        ])
+                    })
+                    .collect(),
+            )
+        };
+        Json::Obj(vec![
+            ("version".into(), Json::Num(TRACE_VERSION as f64)),
+            ("steps".into(), Json::Num(self.steps as f64)),
+            ("prefill_chunks".into(), hist(&self.prefill_chunks)),
+            ("decode_widths".into(), hist(&self.decode_widths)),
+        ])
+    }
+
+    /// Parse from the JSON trace schema (clear errors, no field-order
+    /// guessing — same contract as the tuning profile loader).
+    pub fn from_json(v: &Json) -> Result<ServingTrace> {
+        let version = v.get("version").and_then(Json::as_usize).context("trace: version")?;
+        if version as u64 != TRACE_VERSION {
+            bail!(
+                "unsupported trace version {version} (supported: {TRACE_VERSION}); \
+                 re-record with `--record-trace <path>`"
+            );
+        }
+        let steps = v.get("steps").and_then(Json::as_usize).context("trace: steps")? as u64;
+        let hist = |name: &str| -> Result<BTreeMap<usize, u64>> {
+            let mut map = BTreeMap::new();
+            for (i, e) in v
+                .get(name)
+                .and_then(Json::as_array)
+                .with_context(|| format!("trace: {name}"))?
+                .iter()
+                .enumerate()
+            {
+                let n = e
+                    .get("n")
+                    .and_then(Json::as_usize)
+                    .with_context(|| format!("trace {name}[{i}]: n"))?;
+                let count = e
+                    .get("count")
+                    .and_then(Json::as_usize)
+                    .with_context(|| format!("trace {name}[{i}]: count"))?;
+                if n == 0 || count == 0 {
+                    bail!("trace {name}[{i}]: zero shape or count");
+                }
+                if map.insert(n, count as u64).is_some() {
+                    bail!("trace {name}[{i}]: duplicate shape {n}");
+                }
+            }
+            Ok(map)
+        };
+        Ok(ServingTrace {
+            steps,
+            prefill_chunks: hist("prefill_chunks")?,
+            decode_widths: hist("decode_widths")?,
+        })
+    }
+
+    /// Write the trace to a JSON file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing trace {}", path.display()))
+    }
+
+    /// Load a trace from a JSON file.
+    pub fn load(path: &Path) -> Result<ServingTrace> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        let v = Json::parse(&text).with_context(|| format!("parsing trace {}", path.display()))?;
+        Self::from_json(&v)
+    }
+}
+
+/// Thread-safe trace accumulator shared between the engine thread (which
+/// records) and the client side (which snapshots / persists). Step-rate
+/// locking, not hot-path: one lock per engine step, far off the GEMM
+/// path. The distinct-shape total is maintained incrementally from
+/// [`ServingTrace::record_step`]'s return value rather than rescanned.
+#[derive(Default)]
+pub struct TraceRecorder {
+    /// The trace plus its running merged-distinct shape count.
+    inner: Mutex<(ServingTrace, u64)>,
+}
+
+impl TraceRecorder {
+    /// A fresh, empty recorder.
+    pub fn new() -> TraceRecorder {
+        TraceRecorder::default()
+    }
+
+    /// Record one executed engine step (see [`ServingTrace::record_step`]).
+    /// Returns the running `(steps, distinct shapes)` totals so callers
+    /// can mirror them into lock-free metrics without re-locking.
+    pub fn record_step(&self, plan: &StepPlan, decode_width: usize) -> (u64, u64) {
+        let mut guard = self.inner.lock().unwrap();
+        let (t, shapes) = &mut *guard;
+        *shapes += t.record_step(plan, decode_width) as u64;
+        (t.steps, *shapes)
+    }
+
+    /// Copy of everything recorded so far.
+    pub fn snapshot(&self) -> ServingTrace {
+        self.inner.lock().unwrap().0.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(chunks: Vec<usize>, decode: Vec<u64>) -> StepPlan {
+        StepPlan {
+            prefill: (0..chunks.len() as u64).collect(),
+            prefill_chunks: chunks,
+            decode,
+            preempted: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn records_step_shapes() {
+        let mut t = ServingTrace::new();
+        // Returns count newly-seen merged shapes: {5, 9, 2}, then none,
+        // then {1}.
+        assert_eq!(t.record_step(&plan(vec![5, 9], vec![1, 2]), 2), 3);
+        assert_eq!(t.record_step(&plan(vec![], vec![1, 2]), 2), 0);
+        assert_eq!(t.record_step(&plan(vec![5], vec![1]), 1), 1);
+        assert_eq!(t.steps, 3);
+        assert_eq!(t.prefill_chunks.get(&5), Some(&2));
+        assert_eq!(t.prefill_chunks.get(&9), Some(&1));
+        assert_eq!(t.decode_widths.get(&2), Some(&2));
+        assert_eq!(t.decode_widths.get(&1), Some(&1));
+        assert_eq!(t.total_events(), 6);
+        assert_eq!(t.distinct_shapes(), 4); // 5, 9, 2, 1
+    }
+
+    #[test]
+    fn empty_steps_are_not_counted() {
+        let mut t = ServingTrace::new();
+        t.record_step(&plan(vec![], vec![]), 0);
+        assert_eq!(t.steps, 0);
+        assert!(t.is_empty());
+        assert!(t.weighted_batches().is_empty());
+        assert_eq!(t.prefill_token_fraction(), 0.5);
+    }
+
+    #[test]
+    fn weighted_batches_merge_phases_and_sum_to_one() {
+        let mut t = ServingTrace::new();
+        for _ in 0..3 {
+            t.record_prefill(8);
+        }
+        t.record_prefill(2);
+        for _ in 0..4 {
+            t.record_decode(2);
+        }
+        // n=2 appears as both a prefill chunk and a decode width: merged.
+        let wb = t.weighted_batches();
+        assert_eq!(wb.len(), 2);
+        assert_eq!(wb[0].0, 2);
+        assert!((wb[0].1 - 5.0 / 8.0).abs() < 1e-12, "{wb:?}");
+        assert_eq!(wb[1].0, 8);
+        assert!((wb[1].1 - 3.0 / 8.0).abs() < 1e-12, "{wb:?}");
+        let total: f64 = wb.iter().map(|(_, w)| w).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        // Token-weighted phase fraction: 3*8 + 1*2 = 26 prefill tokens,
+        // 4*2 = 8 decode tokens.
+        assert!((t.prefill_token_fraction() - 26.0 / 34.0).abs() < 1e-12);
+        // Modal shapes: 8 is the most frequent chunk, 2 the only width.
+        assert_eq!(t.modal_prefill_chunk(), Some(8));
+        assert_eq!(t.modal_decode_width(), Some(2));
+        assert_eq!(ServingTrace::new().modal_prefill_chunk(), None);
+        assert_eq!(ServingTrace::new().modal_decode_width(), None);
+    }
+
+    #[test]
+    fn top_weighted_batches_keeps_heaviest_widths() {
+        let mut t = ServingTrace::new();
+        for _ in 0..10 {
+            t.record_decode(1);
+        }
+        for _ in 0..6 {
+            t.record_decode(4);
+        }
+        for _ in 0..3 {
+            t.record_prefill(32);
+        }
+        t.record_prefill(17); // long tail
+        // Full distribution: no truncation.
+        assert_eq!(t.top_weighted_batches(10), (t.weighted_batches(), 0));
+        assert_eq!(t.top_weighted_batches(0), (t.weighted_batches(), 0));
+        // Top 2 by weight: widths 1 (10/20) and 4 (6/20), ascending,
+        // with 2 tail widths dropped and weights keeping their
+        // full-trace fractions (sum < 1 by the dropped share).
+        let (top, dropped) = t.top_weighted_batches(2);
+        assert_eq!(dropped, 2);
+        assert_eq!(top.iter().map(|&(n, _)| n).collect::<Vec<_>>(), vec![1, 4]);
+        let kept: f64 = top.iter().map(|(_, w)| w).sum();
+        assert!((kept - 16.0 / 20.0).abs() < 1e-12, "{kept}");
+    }
+
+    #[test]
+    fn drift_is_zero_for_matching_distributions() {
+        let mut t = ServingTrace::new();
+        for _ in 0..3 {
+            t.record_decode(1);
+        }
+        t.record_prefill(8);
+        // Profile weights proportional to the trace (un-normalized on
+        // purpose: drift_l1 normalizes the profile side).
+        let widths = vec![(1usize, 7.5), (8usize, 2.5)];
+        assert!(t.drift_l1(&widths) < 1e-12);
+    }
+
+    #[test]
+    fn drift_counts_disjoint_mass_in_full() {
+        let mut t = ServingTrace::new();
+        t.record_decode(4); // all live traffic at width 4
+        let widths = vec![(1usize, 1.0)]; // profile tuned only width 1
+        let d = t.drift_l1(&widths);
+        assert!((d - 2.0).abs() < 1e-12, "fully disjoint → L1 of 2, got {d}");
+        assert!(d > DRIFT_WARN_L1);
+        // Half the live mass moved off the tuned width: L1 = 1.0.
+        t.record_decode(1);
+        let d = t.drift_l1(&widths);
+        assert!((d - 1.0).abs() < 1e-12, "{d}");
+    }
+
+    #[test]
+    fn json_round_trip_is_lossless() {
+        let mut t = ServingTrace::new();
+        t.record_step(&plan(vec![7, 31], vec![1, 2, 3]), 3);
+        t.record_step(&plan(vec![7], vec![1]), 1);
+        let back = ServingTrace::from_json(&t.to_json()).unwrap();
+        assert_eq!(back, t);
+        let text = t.to_json().to_string_pretty();
+        let back2 = ServingTrace::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back2, t);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_traces() {
+        assert!(ServingTrace::from_json(&Json::parse("{}").unwrap()).is_err());
+        let wrong_version =
+            r#"{"version": 9, "steps": 0, "prefill_chunks": [], "decode_widths": []}"#;
+        let err = ServingTrace::from_json(&Json::parse(wrong_version).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("supported"), "{err:#}");
+        let zero_shape = r#"{"version": 1, "steps": 1,
+            "prefill_chunks": [{"n": 0, "count": 3}], "decode_widths": []}"#;
+        assert!(ServingTrace::from_json(&Json::parse(zero_shape).unwrap()).is_err());
+        let dup = r#"{"version": 1, "steps": 1, "prefill_chunks": [],
+            "decode_widths": [{"n": 2, "count": 1}, {"n": 2, "count": 4}]}"#;
+        assert!(ServingTrace::from_json(&Json::parse(dup).unwrap()).is_err());
+    }
+
+    #[test]
+    fn recorder_reports_running_totals() {
+        let r = TraceRecorder::new();
+        assert_eq!(r.record_step(&plan(vec![5], vec![1]), 1), (1, 2));
+        assert_eq!(r.record_step(&plan(vec![5], vec![1, 2]), 2), (2, 3));
+        assert_eq!(r.record_step(&plan(vec![], vec![1]), 1), (3, 3));
+        // A step with no GEMM work leaves the totals untouched.
+        assert_eq!(r.record_step(&plan(vec![], vec![]), 0), (3, 3));
+        let snap = r.snapshot();
+        assert_eq!(snap.steps, 3);
+        assert_eq!(snap.distinct_shapes(), 3);
+    }
+}

@@ -1,0 +1,718 @@
+//! `bitnet` — the Bitnet.cpp-reproduction launcher.
+//!
+//! Subcommands:
+//!   info                         print the kernel library (paper Table 1)
+//!   gen-model                    generate a synthetic BTNZ checkpoint
+//!   run                          generate tokens from a prompt
+//!   serve                        run the batching engine on a synthetic workload
+//!   tune                         micro-benchmark kernels, write a tuning profile
+//!   pjrt                         execute an AOT artifact through PJRT
+//!
+//! Common options: --preset tiny|100M|700M|…, --kernel I2_S|TL2_0|…|auto
+//! (--qtype is an alias), --tune-profile profile.json, --threads N,
+//! --config path.toml. See README for examples.
+
+use anyhow::{bail, Context, Result};
+use crate::cli::Args;
+use crate::config::{Config, LaunchConfig};
+use crate::coordinator::trace::DRIFT_WARN_L1;
+use crate::coordinator::{Engine, EngineConfig, KvDtype, Request, ServingTrace};
+use pallas_kernels::kernels::tuner::{self, TuneConfig, TuningProfile};
+use pallas_model::tuner_e2e::{self, OverrideSearchConfig};
+use pallas_kernels::kernels::{
+    library_table, simd, sparse, Dispatch, DispatchPlan, QuantType, SimdLevel,
+};
+use pallas_kernels::kernels::sparse::SparseMode;
+use pallas_model::model::{ModelConfig, SamplingParams, Transformer};
+use pallas_model::model::weights::Checkpoint;
+use pallas_model::tokenizer::{synthetic_corpus, Tokenizer};
+use std::path::{Path, PathBuf};
+
+/// Binary entry point, called by the facade's `src/main.rs`.
+pub fn cli_main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "usage: bitnet <info|gen-model|run|serve|tune|pjrt> [options]
+  info
+  gen-model --preset tiny --seed 42 --out model.btnz
+  run       --preset tiny --kernel I2_S --threads 1 --prompt 'text' --max-new 32
+            [--model model.btnz] [--temperature 0.0]
+            [--qtype auto --tune-profile profile.json]
+            [--kv-dtype f32|f16] [--record-trace trace.json] [--verbose]
+  serve     --preset tiny --kernel TL2_0 --threads 2 --requests 16 --max-batch 8
+            [--qtype auto --tune-profile profile.json]
+            [--kv-dtype f32|f16] [--kv-budget 8192]
+            [--prefix-cache on|off] [--prefill-chunk N] [--shared-prefix N]
+            [--record-trace trace.json]
+  tune      --out profile.json [--preset tiny] [--threads 1] [--batches 1,4]
+            [--trace trace.json] [--trace-widths 16] [--search-overrides]
+            [--kernels I2_S,TL1_0,…|all] [--measure-ms 60] [--e2e] [--verbose]
+            (default candidates: compact ternary kernels; `all` adds the
+             dense/general baselines; --e2e additionally measures the
+             tuned profile end to end against the fixed default and
+             records the result in the profile's `e2e` section)
+  pjrt      --artifact artifacts/ternary_matmul.hlo.txt
+
+  --qtype is an alias of --kernel; the value `auto` selects the kernel
+  per projection shape, per layer and per batch width from the
+  --tune-profile file (v1 and v2 profiles load; see docs/tuning.md).
+  Under auto, prefill chunks and batched decode re-dispatch per call
+  using the profile's n>1 entries — `--verbose` prints the per-layer,
+  per-phase winners.
+
+  Trace-driven tuning closes the loop: `run`/`serve --record-trace`
+  persist the shape histogram the workload exhibited; `tune --trace`
+  sweeps exactly those shapes (replacing --batches) weighted by their
+  observed frequency; `tune --search-overrides` additionally sweeps
+  first/last-vs-middle per-layer kernel compositions end to end and
+  writes the winning LayerOverride rows into the profile. Under auto
+  dispatch, run/serve compare the live shape histogram against the
+  profile's tuned widths and warn when traffic has drifted (re-tune).
+
+  KV memory is paged: --kv-budget caps total KV tokens across
+  sequences, --kv-dtype f16 halves resident KV bytes (f32 stays
+  bit-exact); the scheduler admits on prompt-fit and preempts
+  LIFO under pressure. --prefix-cache on shares KV pages across
+  sequences with a common prompt prefix (copy-on-write, radix
+  prompt index); --prefill-chunk N streams long prompts into the
+  cache N tokens per step instead of admitting all-or-nothing;
+  --shared-prefix N prepends an N-token synthetic system prompt
+  to every serve request (prefix-sharing workloads).
+  See docs/serving.md.
+
+  --simd auto|scalar|avx2|neon (any subcommand) pins the kernels'
+  SIMD dispatch tier; `auto` (the default) probes the CPU. Unsupported
+  requests clamp to what the host can run, with a warning. The scalar
+  and vector paths are bit-identical (docs/kernels.md); `tune` measures
+  every usable tier and records the winner's tier in the profile, and
+  profiles tuned with a vector winner degrade to their fastest usable
+  measurement on hosts without it (counted in dispatch fallbacks).
+  RUST_PALLAS_SIMD=<tier> is the env equivalent (tests/CI).
+
+  --numa auto|off (any subcommand) controls NUMA-aware execution:
+  `auto` (the default) reads /sys/devices/system/node and, on a
+  multi-node host, pins per-node worker groups, first-touches weight
+  packs and KV pages on their owning node, and routes GEMM row ranges
+  to the node owning those rows; `off` (or any single-node host) runs
+  the pre-NUMA scheduling. Results are bit-identical either way; the
+  engine summary reports per-node chunk counts, resident KV bytes and
+  cross-node steals. RUST_PALLAS_NUMA=<mode> is the env equivalent and
+  RUST_PALLAS_NUMA_MOCK=<n> synthesizes an n-node topology without
+  pinning (tests/CI).
+
+  --sparse auto|on|off (any subcommand) controls the block-skip sparse
+  layout the ternary kernels emit at pack time: `auto` (the default)
+  measures each tensor's zero-block fraction and packs sparse past the
+  threshold, `on` forces the layout, `off` packs everything dense.
+  Sparse and dense results are bit-identical; elided-block counts per
+  SIMD tier appear in the engine metrics and under `run --verbose`.
+  RUST_PALLAS_SPARSE=<mode> is the env equivalent (tests/CI).";
+
+fn run() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["help", "verbose", "e2e", "search-overrides"])?;
+    if args.has_flag("help") || args.subcommand.is_none() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    // Pin the SIMD dispatch tier before any kernel work (packing,
+    // tuning and serving all route through it). "auto" leaves the
+    // lazy CPU-detection default in place.
+    if let Some(s) = args.get("simd") {
+        if !s.eq_ignore_ascii_case("auto") {
+            let level = SimdLevel::parse(s).with_context(|| {
+                format!("unknown --simd level {s:?} (expected auto, scalar, avx2 or neon)")
+            })?;
+            let applied = simd::set_level(level);
+            if applied != level {
+                eprintln!(
+                    "warning: --simd {} is not available on this host; running at {}",
+                    level.name(),
+                    applied.name()
+                );
+            }
+        }
+    }
+    // Pick the sparse packing mode before any tensor packs (overrides
+    // the RUST_PALLAS_SPARSE env default).
+    if let Some(s) = args.get("sparse") {
+        let mode = SparseMode::parse(s)
+            .with_context(|| format!("unknown --sparse mode {s:?} (expected auto, on or off)"))?;
+        sparse::set_mode(mode);
+    }
+    // Resolve NUMA placement before the shared pool exists (the first
+    // pool construction detects the topology; a later set_mode is a
+    // no-op). Overrides the RUST_PALLAS_NUMA env default.
+    if let Some(s) = args.get("numa") {
+        let mode = pallas_core::topology::NumaMode::parse(s)
+            .with_context(|| format!("unknown --numa mode {s:?} (expected auto or off)"))?;
+        pallas_core::topology::set_mode(mode);
+    }
+    match args.subcommand.as_deref().unwrap() {
+        "info" => cmd_info(),
+        "gen-model" => cmd_gen_model(&args),
+        "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
+        "tune" => cmd_tune(&args),
+        "pjrt" => cmd_pjrt(&args),
+        other => bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+fn launch_config(args: &Args) -> Result<LaunchConfig> {
+    let mut lc = match args.get("config") {
+        Some(path) => LaunchConfig::from_config(&Config::load(&PathBuf::from(path))?),
+        None => LaunchConfig::default(),
+    };
+    if let Some(p) = args.get("preset") {
+        lc.model_preset = p.to_string();
+    }
+    // --qtype is an alias of --kernel (last one on the command line wins
+    // is not supported by the mini-parser, so --qtype takes precedence).
+    if let Some(k) = args.get("kernel") {
+        lc.kernel = k.to_string();
+    }
+    if let Some(k) = args.get("qtype") {
+        lc.kernel = k.to_string();
+    }
+    if let Some(p) = args.get("tune-profile") {
+        lc.tune_profile = Some(p.to_string());
+    }
+    if let Some(m) = args.get("model") {
+        lc.model_path = Some(m.to_string());
+    }
+    lc.threads = args.get_usize("threads", lc.threads)?;
+    lc.max_batch = args.get_usize("max-batch", lc.max_batch)?;
+    lc.kv_budget_tokens = args.get_usize("kv-budget", lc.kv_budget_tokens)?;
+    if let Some(d) = args.get("kv-dtype") {
+        lc.kv_dtype = d.to_string();
+    }
+    lc.seed = args.get_usize("seed", lc.seed as usize)? as u64;
+    Ok(lc)
+}
+
+/// Resolve the `--kv-dtype`/config value into a [`KvDtype`].
+fn build_kv_dtype(lc: &LaunchConfig) -> Result<KvDtype> {
+    KvDtype::parse(&lc.kv_dtype)
+        .with_context(|| format!("unknown --kv-dtype {:?} (expected f32 or f16)", lc.kv_dtype))
+}
+
+/// Warn when the shapes a run actually exhibited drifted from the widths
+/// its tuning profile was measured at (ROADMAP: re-tune triggers from
+/// serving). `profile_widths` comes from
+/// `TuningProfile::weighted_widths()` captured at profile load; empty
+/// when dispatch is fixed or the profile has no entries.
+fn warn_on_trace_drift(profile_widths: &[(usize, f64)], trace: &ServingTrace) {
+    if profile_widths.is_empty() || trace.is_empty() {
+        return;
+    }
+    let drift = trace.drift_l1(profile_widths);
+    if drift > DRIFT_WARN_L1 {
+        eprintln!(
+            "warning: live serving shapes drifted from the tuning profile \
+             (L1 distance {drift:.2} > {DRIFT_WARN_L1}): the profile was measured at batch \
+             widths this workload no longer runs; re-record with --record-trace and re-run \
+             `bitnet tune --trace <trace.json>`"
+        );
+    }
+}
+
+/// The tuned batch-width distribution to check serving drift against —
+/// captured before the model moves into the engine.
+fn profile_widths_of(model: &Transformer) -> Vec<(usize, f64)> {
+    match model.plan.dispatch() {
+        Dispatch::Auto(profile) => profile.weighted_widths(),
+        Dispatch::Fixed(_) => Vec::new(),
+    }
+}
+
+/// Resolve the `--kernel`/`--qtype` value into a dispatch policy.
+fn build_dispatch(lc: &LaunchConfig) -> Result<Dispatch> {
+    if lc.kernel.eq_ignore_ascii_case("auto") {
+        let path = lc.tune_profile.as_deref().with_context(|| {
+            "--qtype auto requires --tune-profile <path> (generate one with `bitnet tune --out profile.json`)"
+                .to_string()
+        })?;
+        let profile = TuningProfile::load(Path::new(path))?;
+        if profile.threads != lc.threads {
+            eprintln!(
+                "warning: profile was tuned at {} threads but running with {} — \
+                 selections may be stale (re-run `bitnet tune --threads {}`)",
+                profile.threads, lc.threads, lc.threads
+            );
+        }
+        Ok(Dispatch::Auto(profile))
+    } else {
+        let qtype = QuantType::parse(&lc.kernel)
+            .with_context(|| format!("unknown kernel {:?}", lc.kernel))?;
+        Ok(Dispatch::Fixed(qtype))
+    }
+}
+
+fn build_model(lc: &LaunchConfig, verbose: bool) -> Result<Transformer> {
+    let dispatch = build_dispatch(lc)?;
+    let plan = DispatchPlan::new(dispatch).with_verbose(verbose);
+    let ck = match &lc.model_path {
+        Some(path) => pallas_model::modelio::load(&PathBuf::from(path))?,
+        None => {
+            let cfg = ModelConfig::preset(&lc.model_preset)
+                .with_context(|| format!("unknown preset {:?}", lc.model_preset))?;
+            Checkpoint::synthetic(&cfg, lc.seed)
+        }
+    };
+    let model = Transformer::from_checkpoint_plan(&ck, plan, lc.threads);
+    eprintln!(
+        "model {} ({:.1}M params, {:.1}M ternary) dispatch {} threads {} simd {}",
+        ck.config.name,
+        ck.config.param_count() as f64 / 1e6,
+        ck.config.ternary_param_count() as f64 / 1e6,
+        model.plan.describe(),
+        lc.threads,
+        simd::active_level().name()
+    );
+    if verbose {
+        for (m, k, q) in model.kernel_summary() {
+            eprintln!("dispatch: {m}x{k} -> {} (n=1 primary)", q.name());
+        }
+        // Per-layer, per-phase winners (decode n=1 vs a representative
+        // prefill chunk): the phase-aware picture behind the primaries.
+        for line in model.plan_summary(lc.max_batch.max(8)) {
+            eprintln!("plan: {line}");
+        }
+    }
+    Ok(model)
+}
+
+fn cmd_info() -> Result<()> {
+    println!("Bitnet.cpp ternary mpGEMM library (paper Table 1 + baselines)");
+    println!("{:<9} {:<10} {:<13} {:>6} {:>9} {:>7}", "kernel", "class", "unit", "bpw", "lossless", "K mult");
+    for info in library_table() {
+        println!(
+            "{:<9} {:<10} {:<13} {:>6.2} {:>9} {:>7}",
+            info.name,
+            match info.class {
+                pallas_kernels::kernels::KernelClass::LutBased => "LUT",
+                pallas_kernels::kernels::KernelClass::MadBased => "MAD",
+            },
+            if info.element_wise { "element-wise" } else { "bit-wise" },
+            info.bpw,
+            if info.lossless { "yes" } else { "no" },
+            info.k_multiple
+        );
+    }
+    Ok(())
+}
+
+fn cmd_gen_model(args: &Args) -> Result<()> {
+    let preset = args.get_or("preset", "tiny");
+    let seed = args.get_usize("seed", 42)? as u64;
+    let out = PathBuf::from(args.get_or("out", "model.btnz"));
+    let cfg = ModelConfig::preset(&preset).with_context(|| format!("unknown preset {preset:?}"))?;
+    let ck = Checkpoint::synthetic(&cfg, seed);
+    pallas_model::modelio::save(&ck, &out)?;
+    println!(
+        "wrote {} ({} params, {} bytes)",
+        out.display(),
+        cfg.param_count(),
+        std::fs::metadata(&out)?.len()
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let lc = launch_config(args)?;
+    let model = build_model(&lc, args.has_flag("verbose"))?;
+    let prompt_text = args.get_or("prompt", "the ternary model");
+    let max_new = args.get_usize("max-new", 32)?;
+    let temperature: f32 = args.get_or("temperature", "0.0").parse().context("--temperature")?;
+
+    let kv_dtype = build_kv_dtype(&lc)?;
+    let tok = Tokenizer::train(&synthetic_corpus(5000, 1), model.cfg.vocab_size.min(2048));
+    let prompt = tok.encode(&prompt_text);
+    let mut session = model.new_session_dtype(prompt.len() + max_new, kv_dtype);
+
+    let t0 = std::time::Instant::now();
+    let mut logits = model.prefill(&mut session, &prompt);
+    let prefill_time = t0.elapsed();
+
+    let params = SamplingParams { temperature, top_k: 40, top_p: 0.95 };
+    let mut rng = pallas_core::util::Rng::new(lc.seed);
+    let mut generated = Vec::new();
+    let t1 = std::time::Instant::now();
+    for _ in 0..max_new {
+        let next = pallas_model::model::sample(&logits, &params, &mut rng);
+        generated.push(next);
+        logits = model.decode_step(&mut session, next);
+    }
+    let decode_time = t1.elapsed();
+
+    println!("{}", tok.decode(&generated));
+    eprintln!(
+        "prefill {} tok in {:.1} ms | decode {} tok in {:.1} ms ({:.2} tok/s)",
+        prompt.len(),
+        prefill_time.as_secs_f64() * 1e3,
+        max_new,
+        decode_time.as_secs_f64() * 1e3,
+        max_new as f64 / decode_time.as_secs_f64()
+    );
+    if args.has_flag("verbose") {
+        // Prepare-once observability: one miss per layer input × kernel,
+        // hits for every projection that shared it (wk/wv, up); buffer
+        // allocs must flatline once shapes are warm.
+        let ps = model.prepare_stats();
+        eprintln!(
+            "prepare cache: {} hits / {} misses | buffers: {} reused, {} alloc'd",
+            ps.hits, ps.misses, ps.buffer_reuses, ps.buffer_allocs
+        );
+        // KV arena stats: pages actually held and their resident bytes
+        // (lazy minting — not the worst-case capacity).
+        eprintln!(
+            "kv arena: {} pages held, {} KV bytes resident ({} dtype)",
+            session.held_pages(),
+            session.kv_bytes(),
+            kv_dtype.name()
+        );
+        // Block-skip elision: weight blocks the sparse layout skipped,
+        // per SIMD tier. All zeros = every tensor packed dense (iid
+        // ternary under --sparse auto, or a forced off).
+        let el = sparse::elided_counts();
+        eprintln!(
+            "sparse ({}): elided blocks scalar/avx2/neon {}/{}/{}",
+            sparse::mode().name(),
+            el[0],
+            el[1],
+            el[2]
+        );
+    }
+    // The shape histogram this run exhibited: one prefill chunk of the
+    // prompt length, then `max_new` single-sequence decode steps — used
+    // for the profile-drift check and, with --record-trace, persisted
+    // for `tune --trace`.
+    let mut trace = ServingTrace::new();
+    trace.record_prefill(prompt.len());
+    for _ in 0..max_new {
+        trace.record_decode(1);
+    }
+    trace.steps = 1 + max_new as u64;
+    warn_on_trace_drift(&profile_widths_of(&model), &trace);
+    if let Some(tp) = args.get("record-trace") {
+        trace.save(Path::new(tp))?;
+        eprintln!("wrote trace {tp} ({})", trace.summary());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let lc = launch_config(args)?;
+    let n_requests = args.get_usize("requests", 16)?;
+    let max_new = args.get_usize("max-new", 16)?;
+    let kv_dtype = build_kv_dtype(&lc)?;
+    let prefix_cache = match args.get_or("prefix-cache", "off").as_str() {
+        "on" => true,
+        "off" => false,
+        other => bail!("unknown --prefix-cache {other:?} (expected on or off)"),
+    };
+    let prefill_chunk = args.get_usize("prefill-chunk", 0)?;
+    let shared_prefix = args.get_usize("shared-prefix", 0)?;
+    let model = build_model(&lc, args.has_flag("verbose"))?;
+    let vocab = model.cfg.vocab_size as u32;
+    let profile_widths = profile_widths_of(&model);
+    let engine = Engine::start(
+        model,
+        EngineConfig {
+            max_batch: lc.max_batch,
+            kv_budget_tokens: lc.kv_budget_tokens,
+            eos_token: 1,
+            seed: lc.seed,
+            kv_dtype,
+            prefix_cache,
+            prefill_chunk,
+            profile_widths: profile_widths.clone(),
+        },
+    );
+    let mut rng = pallas_core::util::Rng::new(lc.seed + 1);
+    // The shared-prefix workload: every request opens with the same
+    // deterministic N-token "system prompt" before its random tail —
+    // the traffic shape prefix caching is built for.
+    let system: Vec<u32> =
+        (0..shared_prefix).map(|i| 3 + (i * 17 + 5) as u32 % (vocab - 3)).collect();
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..n_requests)
+        .map(|_| {
+            let len = 4 + rng.next_below(12);
+            let mut prompt = system.clone();
+            prompt.extend((0..len).map(|_| 3 + rng.next_below(vocab as usize - 3) as u32));
+            engine.submit(Request::greedy(prompt, max_new))
+        })
+        .collect();
+    let mut total_tokens = 0usize;
+    for h in handles {
+        let (tokens, reason, stats) = h.wait();
+        total_tokens += tokens.len();
+        if args.has_flag("verbose") {
+            eprintln!("req done: {} tokens, {:?}, ttft {:.1}ms", tokens.len(), reason, stats.ttft.as_secs_f64() * 1e3);
+        }
+    }
+    let wall = t0.elapsed();
+    println!(
+        "served {n_requests} requests, {total_tokens} tokens in {:.2}s → {:.2} tok/s aggregate",
+        wall.as_secs_f64(),
+        total_tokens as f64 / wall.as_secs_f64()
+    );
+    println!("engine: {}", engine.metrics.summary());
+    // KV arena footprint: resident bytes track the peak pages actually
+    // minted, never the worst-case budget — enforced here so the CI
+    // serve smoke fails loudly if paging ever regresses to eager
+    // worst-case allocation.
+    let resident = engine.metrics.kv_resident_bytes.load(std::sync::atomic::Ordering::Relaxed);
+    let budget = engine.metrics.kv_capacity_bytes.load(std::sync::atomic::Ordering::Relaxed);
+    let preemptions = engine.metrics.kv_preemptions.load(std::sync::atomic::Ordering::Relaxed);
+    println!(
+        "kv arena: {kv} dtype, {resident} of {budget} budget bytes resident, {preemptions} preemptions",
+        kv = kv_dtype.name()
+    );
+    if resident > budget {
+        bail!("KV arena resident bytes {resident} exceed the {budget}-byte budget");
+    }
+    let ord = std::sync::atomic::Ordering::Relaxed;
+    let hit = engine.metrics.prefix_hit_tokens.load(ord);
+    let computed = engine.metrics.prefill_tokens_computed.load(ord);
+    let splits = engine.metrics.kv_cow_splits.load(ord);
+    println!(
+        "prefix cache: {}, {hit} hit tokens, {computed} prefill tokens computed, {splits} cow splits",
+        if prefix_cache { "on" } else { "off" }
+    );
+    // The CI prefix-cache smoke invariant: with sharing on and every
+    // request opening with the same system prompt, the index must serve
+    // hits — zero means the radix lookup or registration regressed.
+    if prefix_cache && shared_prefix > 0 && hit == 0 {
+        bail!("--prefix-cache on with --shared-prefix {shared_prefix} served zero hit tokens");
+    }
+    if args.has_flag("verbose") {
+        println!("kernels: {}", engine.kernel_info);
+    }
+    let trace = engine.trace_snapshot();
+    warn_on_trace_drift(&profile_widths, &trace);
+    if let Some(tp) = args.get("record-trace") {
+        trace.save(Path::new(tp))?;
+        eprintln!("wrote trace {tp} ({})", trace.summary());
+    }
+    Ok(())
+}
+
+/// Micro-benchmark every applicable kernel on the projection shapes of a
+/// model preset and write the winners to a JSON tuning profile.
+fn cmd_tune(args: &Args) -> Result<()> {
+    let preset = args.get_or("preset", "tiny");
+    let model_cfg = ModelConfig::preset(&preset)
+        .with_context(|| format!("unknown preset {preset:?}"))?;
+    let out = PathBuf::from(args.get_or("out", "profile.json"));
+    let threads = args.get_usize("threads", 1)?;
+    let measure_ms = args.get_usize("measure-ms", 60)?;
+    // Trace-driven mode: sweep the shapes a recorded serving run actually
+    // exhibited, weighted by frequency — no fixed --batches fallback.
+    let trace: Option<ServingTrace> = match args.get("trace") {
+        Some(tp) => {
+            if args.get("batches").is_some() {
+                bail!(
+                    "--trace replaces the --batches sweep with the trace's observed \
+                     shapes; pass one or the other"
+                );
+            }
+            let t = ServingTrace::load(Path::new(tp))?;
+            if t.is_empty() {
+                bail!(
+                    "trace {tp} records no shapes; re-record with \
+                     `run`/`serve --record-trace` on a real workload"
+                );
+            }
+            Some(t)
+        }
+        None => None,
+    };
+    if trace.is_none() && args.get("trace-widths").is_some() {
+        bail!("--trace-widths caps the --trace sweep; it does nothing without --trace");
+    }
+    let batches: Vec<usize> = args
+        .get_or("batches", "1,4")
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| match s.trim().parse::<usize>() {
+            Ok(0) => Err(anyhow::anyhow!("--batches entries must be >= 1, got 0")),
+            Ok(n) => Ok(n),
+            Err(_) => Err(anyhow::anyhow!("--batches expects integers, got {s:?}")),
+        })
+        .collect::<Result<_>>()?;
+    if trace.is_none() && batches.is_empty() {
+        bail!("--batches must name at least one batch size (e.g. --batches 1,4)");
+    }
+    // Default candidates are the compact ternary serving kernels; the
+    // dense/general baselines can win small cache-resident shapes and
+    // would silently pack the model at up to 32 bpw. `--kernels all`
+    // measures everything anyway.
+    let candidates: Vec<QuantType> = match args.get("kernels") {
+        None => tuner::default_candidates(),
+        Some(list) if list.eq_ignore_ascii_case("all") => QuantType::ALL.to_vec(),
+        Some(list) => list
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                QuantType::parse(s.trim())
+                    .with_context(|| format!("unknown kernel {s:?} in --kernels"))
+            })
+            .collect::<Result<_>>()?,
+    };
+    if candidates.is_empty() {
+        bail!("--kernels must name at least one kernel");
+    }
+    let mut cfg = TuneConfig {
+        shapes: tuner_e2e::shapes_for_model(&model_cfg),
+        batches,
+        threads,
+        candidates,
+        min_iters: 3,
+        min_seconds: measure_ms as f64 / 1e3,
+        ..TuneConfig::default()
+    };
+    if let Some(t) = &trace {
+        // Cap the sweep at the heaviest observed widths: a long-tail
+        // workload where nearly every prompt length is distinct would
+        // otherwise multiply tuning cost per unique length. Never
+        // silent — the dropped traffic share is printed.
+        let max_widths = args.get_usize("trace-widths", 16)?;
+        if max_widths == 0 {
+            bail!(
+                "--trace-widths must be >= 1 (the cap guards against long-tail traces; \
+                 pass a large value to keep more of the tail)"
+            );
+        }
+        let (widths, dropped) = t.top_weighted_batches(max_widths);
+        cfg.set_weighted_batches(&widths);
+        eprintln!("trace-driven sweep: {}", t.summary());
+        if dropped > 0 {
+            let kept: f64 = widths.iter().map(|(_, w)| w).sum();
+            eprintln!(
+                "capping sweep to the {} heaviest widths (--trace-widths {max_widths}); \
+                 {dropped} long-tail widths carrying {:.1}% of traffic dropped",
+                widths.len(),
+                (1.0 - kept) * 100.0
+            );
+        }
+        eprintln!(
+            "observed batch widths: {}",
+            cfg.batches
+                .iter()
+                .zip(cfg.batch_weights.iter())
+                .map(|(n, w)| format!("{n} ({:.0}%)", w * 100.0))
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    }
+    eprintln!(
+        "tuning preset {} ({} shapes x {} batches, {} candidate kernels, {} threads)",
+        preset,
+        cfg.shapes.len(),
+        cfg.batches.len(),
+        cfg.candidates.len(),
+        threads
+    );
+    let verbose = args.has_flag("verbose");
+    let mut log = |s: &str| eprintln!("{s}");
+    let mut profile = tuner::tune(&cfg, if verbose { Some(&mut log) } else { None });
+    for e in &profile.entries {
+        println!("{}x{} n={}: {}", e.m, e.k, e.n, e.best.name());
+    }
+    // Persist the sweep before any optional post-processing: a failed
+    // --e2e step (e.g. an unhostable preset) must not discard minutes of
+    // completed measurements.
+    profile.save(&out)?;
+    // Shapes for every e2e measurement below (--e2e and
+    // --search-overrides): the trace's modal prefill chunk and decode
+    // width when one was given — so both e2e sections measure at the
+    // same, workload-observed shapes — else the defaults.
+    let search_defaults = OverrideSearchConfig::default();
+    let e2e_prefill = trace
+        .as_ref()
+        .and_then(|t| t.modal_prefill_chunk())
+        .unwrap_or(search_defaults.prefill_tokens);
+    let e2e_width = trace
+        .as_ref()
+        .and_then(|t| t.modal_decode_width())
+        .unwrap_or(search_defaults.decode_width);
+    if args.has_flag("e2e") {
+        // Layer-composition check: per-shape winners can compose
+        // differently than they measure in isolation, so time the tuned
+        // profile against the fixed default on the full model and record
+        // both in the profile's `e2e` section.
+        eprintln!("measuring end-to-end layer composition on preset {preset}...");
+        let entries = tuner_e2e::measure_e2e(
+            &profile,
+            &model_cfg,
+            threads,
+            e2e_prefill,
+            search_defaults.decode_tokens,
+            e2e_width,
+        )?;
+        for e in &entries {
+            println!(
+                "e2e {}: prefill {:.1} tok/s, decode {:.1} tok/s",
+                e.label, e.prefill_tok_s, e.decode_tok_s
+            );
+        }
+        profile.e2e = entries;
+        profile.save(&out)?;
+    }
+    if args.has_flag("search-overrides") {
+        // Automatic per-layer override search: sweep first/last-vs-middle
+        // kernel compositions end to end and keep the winner. The phase
+        // blend scoring the sweep comes from the trace when one was
+        // given (real traffic), else an even split.
+        eprintln!("searching per-layer override compositions on preset {preset}...");
+        // Compositions are measured at the same shapes as --e2e above
+        // (trace-derived when available) and scored by the trace's
+        // phase blend; without a trace, an even split.
+        let scfg = OverrideSearchConfig {
+            prefill_weight: trace.as_ref().map(|t| t.prefill_token_fraction()).unwrap_or(0.5),
+            prefill_tokens: e2e_prefill,
+            decode_width: e2e_width,
+            ..search_defaults
+        };
+        let outcome = tuner_e2e::search_overrides(&profile, &model_cfg, threads, &scfg, Some(&mut log))?;
+        println!(
+            "override search: winner {} ({} override rows; uniform {:.1} vs best {:.1} tok/s blended)",
+            outcome.winner,
+            outcome.overrides.len(),
+            outcome.uniform_score,
+            outcome.best_score
+        );
+        profile.overrides = outcome.overrides;
+        profile.e2e.extend(outcome.measurements);
+        profile.save(&out)?;
+    }
+    println!(
+        "wrote {} ({} entries, {} overrides)",
+        out.display(),
+        profile.entries.len(),
+        profile.overrides.len()
+    );
+    Ok(())
+}
+
+fn cmd_pjrt(args: &Args) -> Result<()> {
+    let artifact = args.get_or("artifact", "artifacts/ternary_matmul.hlo.txt");
+    let rt = crate::runtime::Runtime::new()?;
+    let exe = rt.load_hlo_text(&PathBuf::from(&artifact))?;
+    println!("loaded {artifact}: {}", exe.describe());
+    // Smoke-execute with the manifest-declared shapes if present.
+    match crate::runtime::manifest_for(&PathBuf::from(&artifact)) {
+        Some(entry) => {
+            let outputs = exe.execute_random(&entry)?;
+            println!("executed: {} outputs, first values {:?}", outputs.len(), &outputs[0][..outputs[0].len().min(4)]);
+        }
+        None => println!("no manifest entry; skipping execution"),
+    }
+    Ok(())
+}

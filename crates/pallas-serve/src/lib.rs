@@ -1,0 +1,29 @@
+//! # pallas-serve — serving layer
+//!
+//! The continuous-batching engine and watermark scheduler
+//! ([`coordinator`]), engine [`metrics`], the PJRT-backed [`runtime`]
+//! (stub unless the `pjrt` feature is enabled), launch [`config`]
+//! presets, the minimal [`cli`] argument parser, and the `bitnet`
+//! binary's entry point ([`entry`]).
+//!
+//! Top of the workspace graph: depends on [`pallas_model`],
+//! [`pallas_kernels`] and [`pallas_core`]; nothing depends on it except
+//! the `rust_pallas` facade.
+
+#![warn(clippy::undocumented_unsafe_blocks)]
+
+#[deny(unsafe_code)]
+pub mod cli;
+#[deny(unsafe_code)]
+pub mod config;
+#[deny(unsafe_code)]
+pub mod coordinator;
+#[deny(unsafe_code)]
+pub mod entry;
+#[deny(unsafe_code)]
+pub mod metrics;
+#[deny(unsafe_code)]
+pub mod runtime;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

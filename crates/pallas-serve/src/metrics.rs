@@ -1,0 +1,407 @@
+//! Engine telemetry: counters and latency histograms, lock-free on the
+//! hot path (atomics), snapshotable for reporting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Fixed-bucket log-scale latency histogram (µs): 1µs .. ~17min.
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+const N_BUCKETS: usize = 30;
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: std::time::Duration) {
+        let us = d.as_micros() as u64;
+        let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(N_BUCKETS - 1);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of the
+    /// bucket containing the q-quantile).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us()
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Engine-wide metrics.
+#[derive(Default)]
+pub struct EngineMetrics {
+    pub requests_submitted: AtomicU64,
+    pub requests_completed: AtomicU64,
+    pub requests_rejected: AtomicU64,
+    pub prompt_tokens: AtomicU64,
+    pub generated_tokens: AtomicU64,
+    pub decode_steps: AtomicU64,
+    /// Sum of batch sizes over decode steps (mean batch = this / steps).
+    pub batched_tokens: AtomicU64,
+    /// Widest decode batch any step ran (phase-aware dispatch keys on it).
+    pub peak_batch: AtomicU64,
+    /// Longest prefill chunk (prompt tokens) any step ran — the other
+    /// phase-aware dispatch key (prefill GEMM batch width).
+    pub peak_prefill_chunk: AtomicU64,
+    /// Kernel selections that found no tuned profile entry for their
+    /// (m, k, n) and fell back to the profile default — nonzero means the
+    /// tuning profile doesn't cover the serving workload (re-tune).
+    pub dispatch_fallbacks: AtomicU64,
+    /// Routed calls that resolved a tuned winner but could not run it
+    /// (alternate budget / K alignment) and degraded to the primary —
+    /// nonzero means a tuned winner is not actually live.
+    pub dispatch_degraded: AtomicU64,
+    /// Prepare-once cache: projections that reused an input's prepared
+    /// batch instead of re-running preprocessing (wk/wv after wq, up
+    /// after gate). High hit counts = amortization is working.
+    pub prepare_cache_hits: AtomicU64,
+    /// Prepare-once cache: preprocessing runs (one per layer input ×
+    /// kernel, not one per projection).
+    pub prepare_cache_misses: AtomicU64,
+    /// Fresh prepare-buffer allocations. This stops growing once shapes
+    /// are warm — steady-state decode is allocation-free in the prepare
+    /// path.
+    pub prepare_buffer_allocs: AtomicU64,
+    /// Prepare builds that fully reused existing buffer capacity.
+    pub prepare_buffer_reuses: AtomicU64,
+    /// Engine steps recorded into the serving-shape trace (the histogram
+    /// `tune --trace` consumes; steps that ran no GEMM don't count).
+    pub trace_steps: AtomicU64,
+    /// Distinct GEMM batch shapes (prefill chunk lengths + decode
+    /// widths) the trace has observed — a small number that stops
+    /// growing means the tuning sweep derived from this trace is cheap.
+    pub trace_shapes: AtomicU64,
+    /// KV arena pages currently held by running sequences.
+    pub kv_pages_used: AtomicU64,
+    /// High-water mark of held KV pages — with lazy minting this is also
+    /// (pages-wise) the resident slab footprint.
+    pub kv_pages_peak: AtomicU64,
+    /// Total pages the KV budget allows (`kv_budget_tokens`, rounded up).
+    pub kv_pages_total: AtomicU64,
+    /// Bytes of KV slab storage actually allocated (minted pages only —
+    /// proportional to the peak working set, not the worst-case budget).
+    pub kv_resident_bytes: AtomicU64,
+    /// Bytes the full KV page budget would occupy if every page minted.
+    pub kv_capacity_bytes: AtomicU64,
+    /// Sequences preempted back to Waiting because a decode-growth page
+    /// reservation found the arena exhausted (they re-prefill on
+    /// re-admission) — the price of watermark over worst-case admission.
+    pub kv_preemptions: AtomicU64,
+    /// Prompt tokens that actually went through a prefill GEMM (streamed
+    /// chunks and preemption re-prefills included). With prefix sharing
+    /// this runs *below* `prompt_tokens`: the gap is work the radix index
+    /// saved.
+    pub prefill_tokens_computed: AtomicU64,
+    /// Prompt tokens served straight from the arena's radix prefix index
+    /// (mapped copy-on-write instead of recomputed).
+    pub prefix_hit_tokens: AtomicU64,
+    /// Shared pages privately copied because a sequence wrote into them
+    /// (copy-on-write splits).
+    pub kv_cow_splits: AtomicU64,
+    /// Tune-vs-serve shape drift (`ServingTrace::drift_l1` against the
+    /// active tuning profile), stored ×1000 (milli-units) so the hot path
+    /// stays integer-atomic. Zero when no profile is loaded.
+    pub drift_l1_milli: AtomicU64,
+    /// The SIMD dispatch tier the kernels run at, as
+    /// `pallas_kernels::kernels::SimdLevel as u8` (0 scalar, 1 avx2, 2 neon) —
+    /// mirrored at snapshot time ([`EngineMetrics::mirror_simd`]).
+    pub simd_level: AtomicU64,
+    /// Cumulative `gemv_rows` dispatches per SIMD tier, indexed
+    /// `[scalar, avx2, neon]`. Mirrored from the kernel layer's global
+    /// counters, so the numbers are process-wide, not per engine.
+    pub simd_calls: [AtomicU64; 3],
+    /// Cumulative weight blocks elided by the block-skip sparse layout,
+    /// per SIMD tier, indexed `[scalar, avx2, neon]`. Mirrored from
+    /// `pallas_kernels::kernels::sparse::elided_counts` like `simd_calls` —
+    /// zero everywhere means no tensor packed sparse (iid-dense weights
+    /// or a forced `--sparse off`).
+    pub sparse_elided: [AtomicU64; 3],
+    /// NUMA nodes the compute pool spans (1 ⇒ placement off).
+    pub numa_nodes: AtomicU64,
+    /// Pool chunks executed by each node's threads, indexed by node id
+    /// (capped at [`EngineMetrics::MAX_NUMA_NODES`]). Mirrored from
+    /// `ThreadPool::numa_stats` — every node having a nonzero count is
+    /// the observable proof that row partitions ran where their weights
+    /// live.
+    pub numa_chunks: [AtomicU64; EngineMetrics::MAX_NUMA_NODES],
+    /// Chunks a node executed from a foreign node's queue (cross-node
+    /// steals in placed jobs — occasional rebalancing is healthy, a
+    /// large share means the placement split is skewed).
+    pub numa_steals: AtomicU64,
+    /// KV slab bytes resident on each node (first-touch interleaving),
+    /// same indexing as `numa_chunks`.
+    pub numa_kv_bytes: [AtomicU64; EngineMetrics::MAX_NUMA_NODES],
+    pub step_latency: LatencyHistogram,
+    pub ttft: LatencyHistogram,
+}
+
+impl EngineMetrics {
+    /// Per-node counter slots (nodes beyond this are folded off the
+    /// report — commodity boards stop at 8 sockets).
+    pub const MAX_NUMA_NODES: usize = 8;
+
+    pub fn new() -> EngineMetrics {
+        EngineMetrics::default()
+    }
+
+    /// Copy the compute pool's per-node dispatch counters and the KV
+    /// arena's per-node resident bytes into this snapshot (same mirror
+    /// pattern as the SIMD and prepare-cache counters).
+    pub fn mirror_numa(&self, stats: &pallas_core::threadpool::NumaStats, kv_by_node: &[usize]) {
+        self.numa_nodes.store(stats.nodes as u64, Ordering::Relaxed);
+        self.numa_steals.store(stats.steals, Ordering::Relaxed);
+        for (i, slot) in self.numa_chunks.iter().enumerate() {
+            slot.store(stats.chunks.get(i).copied().unwrap_or(0), Ordering::Relaxed);
+        }
+        for (i, slot) in self.numa_kv_bytes.iter().enumerate() {
+            slot.store(kv_by_node.get(i).copied().unwrap_or(0) as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// The summary's NUMA segment: `numa off` on single-node pools, else
+    /// per-node chunk counts, per-node resident KV KiB and the steal
+    /// count.
+    fn numa_summary(&self) -> String {
+        let n = (self.numa_nodes.load(Ordering::Relaxed) as usize).min(Self::MAX_NUMA_NODES);
+        if n <= 1 {
+            return "numa off".to_string();
+        }
+        let chunks: Vec<String> = self.numa_chunks[..n]
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed).to_string())
+            .collect();
+        let kv: Vec<String> = self.numa_kv_bytes[..n]
+            .iter()
+            .map(|c| (c.load(Ordering::Relaxed) / 1024).to_string())
+            .collect();
+        format!(
+            "numa {n} nodes (chunks {}, kv KiB {}, steals {})",
+            chunks.join("/"),
+            kv.join("/"),
+            self.numa_steals.load(Ordering::Relaxed)
+        )
+    }
+
+    /// Copy the kernel layer's process-wide SIMD dispatch state (active
+    /// level + per-level call counters) into this snapshot — the same
+    /// mirror pattern as the prepare-cache and KV-arena counters: the
+    /// hot path touches only the kernel-layer atomics, the engine copies
+    /// them here once per step.
+    pub fn mirror_simd(&self) {
+        self.simd_level
+            .store(pallas_kernels::kernels::simd::active_level() as u8 as u64, Ordering::Relaxed);
+        let counts = pallas_kernels::kernels::simd::call_counts();
+        for (slot, c) in self.simd_calls.iter().zip(counts) {
+            slot.store(c, Ordering::Relaxed);
+        }
+        let elided = pallas_kernels::kernels::sparse::elided_counts();
+        for (slot, c) in self.sparse_elided.iter().zip(elided) {
+            slot.store(c, Ordering::Relaxed);
+        }
+    }
+
+    /// Total elided weight blocks across SIMD tiers (mirrored state).
+    pub fn sparse_elided_total(&self) -> u64 {
+        self.sparse_elided.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// The mirrored SIMD tier's display name (see [`EngineMetrics::mirror_simd`]).
+    pub fn simd_level_name(&self) -> &'static str {
+        match self.simd_level.load(Ordering::Relaxed) {
+            1 => "avx2",
+            2 => "neon",
+            _ => "scalar",
+        }
+    }
+
+    /// The mirrored tune-vs-serve shape drift as its natural f64 (see
+    /// `drift_l1_milli` for the storage encoding).
+    pub fn drift_l1(&self) -> f64 {
+        self.drift_l1_milli.load(Ordering::Relaxed) as f64 / 1000.0
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        let steps = self.decode_steps.load(Ordering::Relaxed);
+        if steps == 0 {
+            0.0
+        } else {
+            self.batched_tokens.load(Ordering::Relaxed) as f64 / steps as f64
+        }
+    }
+
+    /// Human-readable one-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "req {}/{} done, {} rejected | tokens {}+{} | steps {} (mean batch {:.2}, peak {}) | step mean {:.1}µs p99 {}µs | ttft mean {:.1}µs | dispatch fallbacks {} degraded {} | simd {} (calls scalar/avx2/neon {}/{}/{}) | sparse elided scalar/avx2/neon {}/{}/{} | prepare {} hits / {} misses (buffers {} reused, {} alloc'd) | trace {} steps / {} shapes (drift {:.3}) | kv {}/{} pages (peak {}) {} KiB resident, {} preemptions | prefix {} hit / {} computed tokens, {} cow splits | {}",
+            self.requests_completed.load(Ordering::Relaxed),
+            self.requests_submitted.load(Ordering::Relaxed),
+            self.requests_rejected.load(Ordering::Relaxed),
+            self.prompt_tokens.load(Ordering::Relaxed),
+            self.generated_tokens.load(Ordering::Relaxed),
+            self.decode_steps.load(Ordering::Relaxed),
+            self.mean_batch(),
+            self.peak_batch.load(Ordering::Relaxed),
+            self.step_latency.mean_us(),
+            self.step_latency.quantile_us(0.99),
+            self.ttft.mean_us(),
+            self.dispatch_fallbacks.load(Ordering::Relaxed),
+            self.dispatch_degraded.load(Ordering::Relaxed),
+            self.simd_level_name(),
+            self.simd_calls[0].load(Ordering::Relaxed),
+            self.simd_calls[1].load(Ordering::Relaxed),
+            self.simd_calls[2].load(Ordering::Relaxed),
+            self.sparse_elided[0].load(Ordering::Relaxed),
+            self.sparse_elided[1].load(Ordering::Relaxed),
+            self.sparse_elided[2].load(Ordering::Relaxed),
+            self.prepare_cache_hits.load(Ordering::Relaxed),
+            self.prepare_cache_misses.load(Ordering::Relaxed),
+            self.prepare_buffer_reuses.load(Ordering::Relaxed),
+            self.prepare_buffer_allocs.load(Ordering::Relaxed),
+            self.trace_steps.load(Ordering::Relaxed),
+            self.trace_shapes.load(Ordering::Relaxed),
+            self.drift_l1(),
+            self.kv_pages_used.load(Ordering::Relaxed),
+            self.kv_pages_total.load(Ordering::Relaxed),
+            self.kv_pages_peak.load(Ordering::Relaxed),
+            self.kv_resident_bytes.load(Ordering::Relaxed) / 1024,
+            self.kv_preemptions.load(Ordering::Relaxed),
+            self.prefix_hit_tokens.load(Ordering::Relaxed),
+            self.prefill_tokens_computed.load(Ordering::Relaxed),
+            self.kv_cow_splits.load(Ordering::Relaxed),
+            self.numa_summary(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn histogram_records_and_quantiles() {
+        let h = LatencyHistogram::new();
+        for us in [10u64, 20, 40, 80, 10_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean_us() > 2000.0);
+        assert_eq!(h.max_us(), 10_000);
+        // p50 bucket upper bound covers ≤ 40µs values.
+        assert!(h.quantile_us(0.5) <= 64);
+        assert!(h.quantile_us(1.0) >= 10_000 / 2);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn simd_mirror_reports_a_known_level() {
+        let m = EngineMetrics::new();
+        assert_eq!(m.simd_level_name(), "scalar", "unmirrored default");
+        m.mirror_simd();
+        assert!(["scalar", "avx2", "neon"].contains(&m.simd_level_name()));
+        // The summary line renders the mirrored state.
+        assert!(m.summary().contains("simd "));
+        assert!(m.summary().contains("sparse elided "));
+    }
+
+    #[test]
+    fn sparse_elided_mirror_tracks_kernel_counters() {
+        use pallas_kernels::kernels::{sparse, SimdLevel};
+        let m = EngineMetrics::new();
+        m.mirror_simd();
+        let before = m.sparse_elided_total();
+        sparse::note_elided(SimdLevel::Scalar, 7);
+        m.mirror_simd();
+        assert!(m.sparse_elided_total() >= before + 7);
+    }
+
+    #[test]
+    fn drift_and_prefix_metrics_render_in_summary() {
+        let m = EngineMetrics::new();
+        m.drift_l1_milli.store(125, Ordering::Relaxed);
+        m.prefix_hit_tokens.store(32, Ordering::Relaxed);
+        m.prefill_tokens_computed.store(48, Ordering::Relaxed);
+        m.kv_cow_splits.store(2, Ordering::Relaxed);
+        assert_eq!(m.drift_l1(), 0.125);
+        let s = m.summary();
+        assert!(s.contains("drift 0.125"), "{s}");
+        assert!(s.contains("prefix 32 hit / 48 computed tokens, 2 cow splits"), "{s}");
+    }
+
+    #[test]
+    fn numa_segment_renders_off_and_per_node() {
+        use pallas_core::threadpool::NumaStats;
+        let m = EngineMetrics::new();
+        assert!(m.summary().contains("numa off"), "unmirrored default");
+        m.mirror_numa(
+            &NumaStats { nodes: 2, mocked: true, chunks: vec![10, 7], steals: 3 },
+            &[2048, 1024],
+        );
+        let s = m.summary();
+        assert!(s.contains("numa 2 nodes (chunks 10/7, kv KiB 2/1, steals 3)"), "{s}");
+        // Back to a single-node pool: the segment collapses again.
+        m.mirror_numa(&NumaStats { nodes: 1, mocked: false, chunks: vec![4], steals: 0 }, &[64]);
+        assert!(m.summary().contains("numa off"));
+    }
+
+    #[test]
+    fn mean_batch_math() {
+        let m = EngineMetrics::new();
+        m.decode_steps.store(4, Ordering::Relaxed);
+        m.batched_tokens.store(10, Ordering::Relaxed);
+        assert_eq!(m.mean_batch(), 2.5);
+    }
+}

@@ -1,0 +1,214 @@
+//! PJRT runtime — loads the AOT artifacts produced by `python/compile/`
+//! (Layer 1 Pallas kernel + Layer 2 JAX model lowered to HLO text) and
+//! executes them on the `xla` crate's CPU PJRT client. This is the only
+//! bridge between the Rust request path and the Python build path; Python
+//! itself never runs at inference time.
+//!
+//! Interchange format is **HLO text** (not serialized protos): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The PJRT-backed implementation needs the `xla` crate, which is not
+//! available in the offline build image, so it is gated behind the
+//! **`pjrt` cargo feature** (add the `xla` dependency before enabling).
+//! Without the feature a stub with the identical API compiles in; every
+//! entry point returns an "unavailable" error at run time, and the
+//! PJRT tests / examples skip themselves when artifacts are absent.
+
+use crate::config::Config;
+use anyhow::Result;
+#[cfg(not(feature = "pjrt"))]
+use anyhow::{bail, Context};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use std::path::{Path, PathBuf};
+
+#[cfg(not(feature = "pjrt"))]
+const UNAVAILABLE: &str = "PJRT runtime unavailable: bitnet was built without the `pjrt` \
+     feature (requires the `xla` crate; see rust/Cargo.toml)";
+
+/// A loaded PJRT CPU client.
+pub struct Runtime {
+    #[cfg(feature = "pjrt")]
+    client: xla::PjRtClient,
+    #[cfg(not(feature = "pjrt"))]
+    _unconstructable: (),
+}
+
+#[cfg(feature = "pjrt")]
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn new() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    /// Platform name reported by the client (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("utf8 path")?)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+        })
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Stub: always errors (built without the `pjrt` feature).
+    pub fn new() -> Result<Runtime> {
+        bail!(UNAVAILABLE);
+    }
+
+    /// Stub platform name.
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Stub: always errors (built without the `pjrt` feature).
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let _ = path;
+        bail!(UNAVAILABLE);
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    #[cfg(feature = "pjrt")]
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact name (file stem).
+    pub name: String,
+}
+
+impl Executable {
+    /// Human-readable identity string.
+    pub fn describe(&self) -> String {
+        format!("executable '{}'", self.name)
+    }
+
+    /// Execute with deterministic pseudo-random inputs per the manifest
+    /// entry (CLI smoke path).
+    pub fn execute_random(&self, entry: &ManifestEntry) -> Result<Vec<Vec<f32>>> {
+        let mut rng = pallas_core::util::Rng::new(0xB17);
+        let buffers: Vec<Vec<f32>> = entry
+            .input_shapes
+            .iter()
+            .map(|dims| {
+                let n: usize = dims.iter().product();
+                (0..n).map(|_| rng.next_f32_signed()).collect()
+            })
+            .collect();
+        let inputs: Vec<(&[f32], &[usize])> = buffers
+            .iter()
+            .zip(entry.input_shapes.iter())
+            .map(|(b, d)| (b.as_slice(), d.as_slice()))
+            .collect();
+        self.execute_f32(&inputs)
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl Executable {
+    /// Execute with f32 inputs of the given shapes. The artifact is lowered
+    /// with `return_tuple=True`, so the single output literal is a tuple;
+    /// each element comes back as a flat f32 vector.
+    pub fn execute_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let n: usize = dims.iter().product();
+                anyhow::ensure!(n == data.len(), "shape {:?} vs {} values", dims, data.len());
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let parts = result.to_tuple().context("untupling result")?;
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}")))
+            .collect()
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Executable {
+    /// Stub: always errors (built without the `pjrt` feature).
+    pub fn execute_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let _ = inputs;
+        bail!(UNAVAILABLE);
+    }
+}
+
+/// Input-shape metadata for one artifact, read from
+/// `artifacts/manifest.toml` (written by `python/compile/aot.py`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    /// Artifact name (manifest section / file stem).
+    pub name: String,
+    /// One shape per positional input.
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+/// Parse a shape list like `"512;256x512"` → `[[512], [256, 512]]`.
+pub fn parse_shapes(spec: &str) -> Result<Vec<Vec<usize>>> {
+    spec.split(';')
+        .filter(|s| !s.trim().is_empty())
+        .map(|shape| {
+            shape
+                .trim()
+                .split('x')
+                .map(|d| d.trim().parse::<usize>().with_context(|| format!("bad dim in {shape:?}")))
+                .collect()
+        })
+        .collect()
+}
+
+/// Look up the manifest entry for an artifact path
+/// (`<dir>/manifest.toml`, section named after the file stem).
+pub fn manifest_for(artifact: &Path) -> Option<ManifestEntry> {
+    let stem = artifact.file_stem()?.to_string_lossy().into_owned();
+    // `foo.hlo.txt` → file_stem is `foo.hlo`; drop the inner extension too.
+    let stem = stem.strip_suffix(".hlo").unwrap_or(&stem).to_string();
+    let manifest_path: PathBuf = artifact.parent()?.join("manifest.toml");
+    let cfg = Config::load(&manifest_path).ok()?;
+    let spec = cfg.get(&format!("{stem}.inputs"))?.as_str()?.to_string();
+    Some(ManifestEntry { name: stem, input_shapes: parse_shapes(&spec).ok()? })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_spec_parses() {
+        assert_eq!(parse_shapes("512;256x512").unwrap(), vec![vec![512], vec![256, 512]]);
+        assert_eq!(parse_shapes("4").unwrap(), vec![vec![4]]);
+        assert!(parse_shapes("a").is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_unavailable() {
+        let Err(err) = Runtime::new() else {
+            panic!("stub Runtime::new must error");
+        };
+        assert!(format!("{err}").contains("pjrt"), "{err}");
+    }
+
+    // PJRT-backed tests live in rust/tests/runtime_pjrt.rs (they need the
+    // artifacts built by `make artifacts`).
+}

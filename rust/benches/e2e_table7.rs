@@ -12,14 +12,17 @@
 //! per-size tokens/s as a JSON document — what CI uploads as the
 //! `BENCH_e2e.json` perf-trajectory artifact).
 
-use bitnet::coordinator::{Engine, EngineConfig, KvDtype, Request, ServingTrace};
+use bitnet::coordinator::{Engine, EngineConfig, KvArena, KvDtype, Request, ServingTrace};
 use bitnet::kernels::quant::TernaryWeights;
 use bitnet::kernels::{kernel_for, matmul, matmul_prepared, PreparedActivations, QuantType};
 use bitnet::model::weights::Checkpoint;
 use bitnet::model::{ModelConfig, Transformer};
 use bitnet::perf::calibrate::{calibrate_kernel, tokens_per_second, KernelRate};
 use bitnet::threadpool::ThreadPool;
+use bitnet::topology::{NumaMode, Topology};
 use bitnet::util::{Json, Rng};
+use bitnet::{Dispatch, DispatchPlan};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Run a short synthetic serving workload through the engine and return
@@ -213,6 +216,45 @@ fn measure_prepare_reuse(
     (legacy * 1e6, shared * 1e6)
 }
 
+/// Decode throughput of one model on one pool, with the KV arena's
+/// page placement following the pool's topology — the measured half of
+/// the NUMA section. Returns (decode tok/s, per-node resident KV bytes).
+fn numa_run(
+    cfg: &ModelConfig,
+    pool: Arc<ThreadPool>,
+    prefill_tokens: usize,
+    decode_tokens: usize,
+) -> (f64, Vec<usize>) {
+    let plan = DispatchPlan::new(Dispatch::Fixed(QuantType::I2S));
+    let model = Transformer::from_checkpoint_plan_pool(
+        &Checkpoint::synthetic(cfg, 0xE2E),
+        plan,
+        Arc::clone(&pool),
+    );
+    let arena = Arc::new(Mutex::new({
+        let mut a = KvArena::new(
+            cfg.n_layers,
+            cfg.kv_dim(),
+            prefill_tokens + decode_tokens + 64,
+            KvDtype::F32,
+        );
+        a.set_placement(pool);
+        a
+    }));
+    let mut session = model.new_session_shared(&arena, 0, prefill_tokens + decode_tokens);
+    let prompt: Vec<u32> = (0..prefill_tokens)
+        .map(|i| (3 + i % cfg.vocab_size.saturating_sub(3).max(1)) as u32)
+        .collect();
+    let _ = model.prefill(&mut session, &prompt);
+    let t0 = Instant::now();
+    for _ in 0..decode_tokens {
+        let _ = model.decode_step(&mut session, 3);
+    }
+    let tok_s = decode_tokens as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    let kv = arena.lock().unwrap().resident_bytes_by_node().to_vec();
+    (tok_s, kv)
+}
+
 fn main() {
     let threads: usize = std::env::var("BENCH_THREADS")
         .ok()
@@ -365,6 +407,41 @@ fn main() {
         pc_rows.push((on, computed, hit, peak, cow));
     }
 
+    // NUMA placement: the same model and thread count on a single-node
+    // pool vs split across nodes (per-node worker groups, localized
+    // weights, placed GEMM routing, first-touched KV pages). Real
+    // topology when the host has one; otherwise a mock split — placement
+    // only, no pinning — so the partitioned code path is measured on any
+    // CI box. Results are bit-identical either way; this section tracks
+    // the throughput delta and the per-node counters.
+    let host = Topology::detect(NumaMode::Auto);
+    let numa_nodes = if host.n_nodes() > 1 { host.n_nodes() } else { 2 };
+    let numa_topo = if host.n_nodes() > 1 { host } else { Topology::mock(numa_nodes) };
+    let (numa_cfg, numa_prefill, numa_decode) =
+        if fast { (ModelConfig::tiny(), 32, 24) } else { (ModelConfig::m100(), 64, 48) };
+    let (numa_tok_s_1, _) =
+        numa_run(&numa_cfg, Arc::new(ThreadPool::new(threads)), numa_prefill, numa_decode);
+    let numa_pool = Arc::new(ThreadPool::with_topology(threads, numa_topo));
+    let (numa_tok_s_n, numa_kv_bytes) =
+        numa_run(&numa_cfg, Arc::clone(&numa_pool), numa_prefill, numa_decode);
+    let numa_stats = numa_pool.numa_stats();
+    println!(
+        "\n# NUMA ({} nodes{}, {threads} threads, preset {}):",
+        numa_stats.nodes,
+        if numa_stats.mocked { " mocked" } else { "" },
+        numa_cfg.name
+    );
+    println!(
+        "#   decode {numa_tok_s_1:>8.1} tok/s @ 1 node | {numa_tok_s_n:>8.1} tok/s @ {} nodes",
+        numa_stats.nodes
+    );
+    println!(
+        "#   per-node chunks {} | per-node kv bytes {} | cross-node steals {}",
+        numa_stats.chunks.iter().map(|c| c.to_string()).collect::<Vec<_>>().join("/"),
+        numa_kv_bytes.iter().map(|b| b.to_string()).collect::<Vec<_>>().join("/"),
+        numa_stats.steals
+    );
+
     // Machine-readable trajectory: one JSON document per run so CI can
     // archive the perf history (`BENCH_e2e.json` artifact).
     if let Ok(path) = std::env::var("BENCH_JSON") {
@@ -454,6 +531,25 @@ fn main() {
             ("serving_trace".into(), trace.to_json()),
             ("kv_memory".into(), Json::Arr(kv_objs)),
             ("prefix_cache".into(), Json::Arr(pc_objs)),
+            (
+                "numa".into(),
+                Json::Obj(vec![
+                    ("nodes".into(), Json::Num(numa_stats.nodes as f64)),
+                    ("mocked".into(), Json::Bool(numa_stats.mocked)),
+                    ("preset".into(), Json::Str(numa_cfg.name.into())),
+                    ("decode_tok_s_1node".into(), Json::Num(numa_tok_s_1)),
+                    ("decode_tok_s_nnodes".into(), Json::Num(numa_tok_s_n)),
+                    (
+                        "per_node_chunks".into(),
+                        Json::Arr(numa_stats.chunks.iter().map(|&c| Json::Num(c as f64)).collect()),
+                    ),
+                    (
+                        "per_node_kv_bytes".into(),
+                        Json::Arr(numa_kv_bytes.iter().map(|&b| Json::Num(b as f64)).collect()),
+                    ),
+                    ("cross_node_steals".into(), Json::Num(numa_stats.steals as f64)),
+                ]),
+            ),
         ]);
         std::fs::write(&path, doc.to_string_pretty()).expect("write BENCH_JSON");
         println!("# wrote {path}");

@@ -2,12 +2,40 @@
 //! (a: LUT vs MAD at equal bpw) and TL2_0 vs T-MAC (b: element-wise vs
 //! bit-wise LUT) on the 3.8B model shapes.
 //!
-//! Env: BENCH_MAX_THREADS (default min(8, cores)), BENCH_FAST=1.
+//! The NUMA coda re-runs the heaviest thread count with the same workers
+//! split across nodes (host topology when real, mock otherwise) and
+//! reports the placed-dispatch counters; with `BENCH_JSON=path` set, it
+//! merges into the shared bench document under the `"threads_fig8_numa"`
+//! key without disturbing other sections (`e2e_table7` rewrites the
+//! whole file, so it must run before the merging benches).
+//!
+//! Env: BENCH_MAX_THREADS (default min(8, cores)), BENCH_FAST=1,
+//! BENCH_JSON=path.
 
 use bitnet::kernels::QuantType;
 use bitnet::model::ModelConfig;
 use bitnet::perf::calibrate::{calibrate_kernel, tokens_per_second};
 use bitnet::threadpool::ThreadPool;
+use bitnet::topology::{NumaMode, Topology};
+use bitnet::util::Json;
+
+/// Read-modify-write `BENCH_JSON`: replace `key` in the top-level object
+/// (an unparsable or missing file starts a fresh document).
+fn merge_into_bench_json(key: &str, value: Json) {
+    let path = match std::env::var("BENCH_JSON") {
+        Ok(p) => p,
+        Err(_) => return,
+    };
+    let mut pairs = match std::fs::read_to_string(&path).ok().and_then(|t| Json::parse(&t).ok())
+    {
+        Some(Json::Obj(pairs)) => pairs,
+        _ => Vec::new(),
+    };
+    pairs.retain(|(k, _)| k != key);
+    pairs.push((key.to_string(), value));
+    std::fs::write(&path, Json::Obj(pairs).to_string_pretty()).expect("write BENCH_JSON");
+    println!("# wrote {path} ({key})");
+}
 
 fn main() {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
@@ -36,4 +64,46 @@ fn main() {
     }
     println!("# expected shape: TL2_0 > TQ1_0 at every thread count (a);");
     println!("# TL2_0 keeps scaling after TMAC saturates (b) — bpw 1.67 vs 2.0.");
+
+    // NUMA coda: the heaviest thread count again, workers split across
+    // nodes. Same GEMVs bit-for-bit — placement only changes which node
+    // streams which row range, which the per-node chunk counters attest.
+    let host = Topology::detect(NumaMode::Auto);
+    let topo = if host.n_nodes() > 1 { host } else { Topology::mock(2) };
+    let single = ThreadPool::new(max_threads);
+    let placed = ThreadPool::with_topology(max_threads, topo);
+    let f16_1 = calibrate_kernel(QuantType::F16, m / 4, k, &single, 2);
+    let r_1 = calibrate_kernel(QuantType::Tl20, m, k, &single, 2);
+    let tps_1 = tokens_per_second(&cfg, &r_1, &f16_1, 0.0);
+    let f16_n = calibrate_kernel(QuantType::F16, m / 4, k, &placed, 2);
+    let r_n = calibrate_kernel(QuantType::Tl20, m, k, &placed, 2);
+    let tps_n = tokens_per_second(&cfg, &r_n, &f16_n, 0.0);
+    let stats = placed.numa_stats();
+    println!(
+        "# NUMA ({} nodes{}, {max_threads} threads, TL2_0): {tps_1:.2} tok/s @ 1 node | {tps_n:.2} tok/s @ {} nodes",
+        stats.nodes,
+        if stats.mocked { " mocked" } else { "" },
+        stats.nodes
+    );
+    println!(
+        "#   per-node chunks {} | cross-node steals {}",
+        stats.chunks.iter().map(|c| c.to_string()).collect::<Vec<_>>().join("/"),
+        stats.steals
+    );
+    merge_into_bench_json(
+        "threads_fig8_numa",
+        Json::Obj(vec![
+            ("nodes".into(), Json::Num(stats.nodes as f64)),
+            ("mocked".into(), Json::Bool(stats.mocked)),
+            ("threads".into(), Json::Num(max_threads as f64)),
+            ("kernel".into(), Json::Str(QuantType::Tl20.name().into())),
+            ("tok_s_1node".into(), Json::Num(tps_1)),
+            ("tok_s_nnodes".into(), Json::Num(tps_n)),
+            (
+                "per_node_chunks".into(),
+                Json::Arr(stats.chunks.iter().map(|&c| Json::Num(c as f64)).collect()),
+            ),
+            ("cross_node_steals".into(), Json::Num(stats.steals as f64)),
+        ]),
+    );
 }

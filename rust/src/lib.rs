@@ -1,10 +1,10 @@
-//! # bitnet-rs — Bitnet.cpp reproduction
+//! # bitnet-rs — Bitnet.cpp reproduction (facade)
 //!
 //! A from-scratch reproduction of *"Bitnet.cpp: Efficient Edge Inference for
 //! Ternary LLMs"* (Wang et al., ACL 2025) as a three-layer Rust + JAX +
 //! Pallas stack:
 //!
-//! * **Layer 3 (this crate)** — the inference engine: a ternary mpGEMM
+//! * **Layer 3 (this workspace)** — the inference engine: a ternary mpGEMM
 //!   kernel library ([`kernels`]) with the paper's TL1/TL2/I2_S kernels and
 //!   every baseline it compares against, a BitNet b1.58 transformer
 //!   ([`model`]), a continuous-batching serving coordinator
@@ -19,14 +19,34 @@
 //! Python never runs on the request path: artifacts are built once by
 //! `make artifacts`; the serving binary is self-contained.
 //!
+//! ## Workspace layout
+//!
+//! Since the crate split, this package (`rust_pallas`, lib name `bitnet`)
+//! is a thin facade over four layered crates with an acyclic dependency
+//! graph (see `docs/architecture.md`):
+//!
+//! * `pallas-core` — util, f16, json, rng, thread pool, NUMA topology,
+//!   and the paged KV arena ([`bitnet::coordinator::kv_pool`] is a
+//!   re-export of `pallas_core::arena`).
+//! * `pallas-kernels` — `kernels/` (incl. sparse, tuner, counters, SIMD
+//!   backends) and the `perf/` calibration harnesses.
+//! * `pallas-model` — `model/`, `modelio`, `tokenizer`, `eval`, plus the
+//!   model-building half of the tuner (`tuner_e2e`).
+//! * `pallas-serve` — `coordinator/`, `metrics`, `runtime`, CLI + main.
+//!
+//! Every historical `bitnet::…` path keeps working through the
+//! re-exports below; downstream code does not need to know which crate
+//! an item landed in.
+//!
 //! ## Unsafe policy
 //!
-//! `unsafe` is confined to three audited sites: the explicit SIMD
-//! implementations under `kernels/simd/` (intrinsics + documented
-//! `# Safety` contracts), the bounds-free LUT reads in the scalar kernel
-//! hot loops, and the disjoint-write pointer fan-out of the threaded
-//! matmul. Every block carries a `// SAFETY:` comment; the
-//! `undocumented_unsafe_blocks` clippy lint keeps it that way.
+//! `unsafe` is confined to audited sites in `pallas-core` (thread-pool
+//! lifetime erasure, NUMA thread pinning) and `pallas-kernels` /
+//! `pallas-model` (SIMD intrinsics with documented `# Safety` contracts,
+//! bounds-free LUT reads in the kernel hot loops, the disjoint-write
+//! pointer fan-out of the threaded matmul). Every block carries a
+//! `// SAFETY:` comment; the `undocumented_unsafe_blocks` clippy lint
+//! keeps it that way.
 //!
 //! ## Quick start
 //!
@@ -44,29 +64,43 @@
 //! ```
 
 #![warn(clippy::undocumented_unsafe_blocks)]
+#![deny(unsafe_code)]
 
-#[deny(unsafe_code)]
-pub mod cli;
-#[deny(unsafe_code)]
-pub mod config;
-#[deny(unsafe_code)]
-pub mod coordinator;
-#[deny(unsafe_code)]
-pub mod eval;
-pub mod kernels;
-#[deny(unsafe_code)]
-pub mod metrics;
-pub mod model;
-#[deny(unsafe_code)]
-pub mod modelio;
-#[deny(unsafe_code)]
-pub mod perf;
-#[deny(unsafe_code)]
-pub mod runtime;
-pub mod threadpool;
-#[deny(unsafe_code)]
-pub mod tokenizer;
-pub mod util;
+pub use pallas_core::{threadpool, topology, util};
+pub use pallas_model::{eval, model, modelio, tokenizer};
+pub use pallas_serve::{cli, config, coordinator, metrics, runtime};
+
+/// The kernel library (`pallas_kernels::kernels`), with the tuner's
+/// model-building e2e half (`pallas_model::tuner_e2e`) grafted back into
+/// `kernels::tuner` so pre-split call sites compile unchanged.
+pub mod kernels {
+    pub use pallas_kernels::kernels::*;
+
+    /// Auto-tuner: micro-benchmark sweep (`pallas-kernels`) plus the
+    /// end-to-end measurement/override-search half that has to build
+    /// whole models (`pallas_model::tuner_e2e`).
+    pub mod tuner {
+        pub use pallas_kernels::kernels::tuner::*;
+        pub use pallas_model::tuner_e2e::{
+            measure_dispatch_e2e, measure_e2e, search_overrides, shapes_for_model,
+            OverrideSearchConfig, OverrideSearchOutcome,
+        };
+    }
+}
+
+/// Perf harnesses (`pallas_kernels::perf`), with the model-composed
+/// throughput estimate re-exported back into `perf::calibrate`.
+pub mod perf {
+    pub use pallas_kernels::perf::*;
+
+    /// Kernel calibration plus the model-level `tokens_per_second`
+    /// estimate (which lives in `pallas-model` since the crate split —
+    /// it needs `ModelConfig`).
+    pub mod calibrate {
+        pub use pallas_kernels::perf::calibrate::*;
+        pub use pallas_model::tuner_e2e::tokens_per_second;
+    }
+}
 
 pub use kernels::{Dispatch, DispatchPlan, QuantType, Role, TuningProfile};
 

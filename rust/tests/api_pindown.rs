@@ -1,0 +1,103 @@
+//! Pin down the `bitnet` facade's public surface after the workspace
+//! split: every pre-split path must keep resolving and composing, so
+//! downstream code (and the other tests in this directory) never learn
+//! which of the four layered crates an item landed in. Each assertion
+//! here is a path that existed before the split — if a re-export is
+//! dropped or renamed, this file stops compiling.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Type-position pins: referencing the path is the assertion.
+#[allow(dead_code, clippy::too_many_arguments)]
+fn type_pins(
+    _: &bitnet::model::Session,
+    _: &bitnet::model::Transformer,
+    _: &bitnet::model::ModelConfig,
+    _: &bitnet::model::weights::Checkpoint,
+    _: &dyn bitnet::kernels::Kernel,
+    _: bitnet::kernels::QuantType,
+    _: &bitnet::coordinator::Engine,
+    _: &bitnet::coordinator::EngineConfig,
+    _: &bitnet::coordinator::kv_pool::KvArena,
+    _: bitnet::coordinator::KvDtype,
+    _: &bitnet::coordinator::Request,
+    _: &bitnet::coordinator::ServingTrace,
+    _: &bitnet::threadpool::ThreadPool,
+    _: &bitnet::topology::Topology,
+    _: &bitnet::metrics::EngineMetrics,
+    _: &bitnet::TuningProfile,
+    _: bitnet::Role,
+    _: &bitnet::kernels::tuner::OverrideSearchConfig,
+) {
+}
+
+#[test]
+fn facade_fn_items_resolve() {
+    // Value-position pins: fn items through their historical paths. The
+    // tuner graft splices `pallas_model::tuner_e2e` back under
+    // `kernels::tuner`, and `perf::calibrate` regains the model-level
+    // throughput estimate — both must sit beside the kernels-crate half.
+    let _ = bitnet::kernels::tuner::tune;
+    let _ = bitnet::kernels::tuner::measure_e2e;
+    let _ = bitnet::kernels::tuner::measure_dispatch_e2e;
+    let _ = bitnet::kernels::tuner::search_overrides;
+    let _ = bitnet::kernels::tuner::shapes_for_model;
+    let _ = bitnet::perf::calibrate::tokens_per_second;
+    let _ = bitnet::kernels::kernel_for;
+    let _ = bitnet::kernels::library_table;
+    let _ = bitnet::kernels::simd::active_level;
+    let _ = bitnet::kernels::sparse::mode;
+    let _ = bitnet::coordinator::Engine::start;
+    let _ = bitnet::tokenizer::Tokenizer::train;
+    let _ = bitnet::modelio::load;
+    let _ = bitnet::util::Rng::new;
+    let _ = bitnet::topology::set_mode;
+    let _ = bitnet::threadpool::shared_pool;
+    let _: bitnet::Result<()> = Ok(());
+}
+
+#[test]
+fn facade_paths_compose_end_to_end() {
+    // The quick-start composition from the crate docs, spelled entirely
+    // in facade paths.
+    let cfg = bitnet::model::ModelConfig::tiny();
+    let model = bitnet::model::Transformer::synthetic(&cfg, bitnet::QuantType::I2S, 7);
+    let mut session: bitnet::model::Session = model.new_session(16);
+    let logits = model.prefill(&mut session, &[1, 2, 3]);
+    assert_eq!(logits.len(), cfg.vocab_size);
+    drop(session);
+
+    // The kernel library behind the trait object it always exposed.
+    let k: &'static dyn bitnet::kernels::Kernel =
+        bitnet::kernels::kernel_for(bitnet::kernels::QuantType::I2S);
+    assert!(k.info().k_multiple >= 1);
+
+    // kv_pool is the arena re-layered into pallas-core, re-exported at
+    // its pre-split coordinator path; sharing idiom unchanged.
+    let arena = bitnet::coordinator::kv_pool::KvArena::new(
+        1,
+        8,
+        4 * bitnet::coordinator::PAGE_TOKENS,
+        bitnet::coordinator::KvDtype::F32,
+    );
+    assert!(arena.total_pages() > 0);
+    let _shared: Arc<Mutex<bitnet::coordinator::KvArena>> = Arc::new(Mutex::new(arena));
+
+    // The engine consumes the model exactly as before the split.
+    let engine =
+        bitnet::coordinator::Engine::start(model, bitnet::coordinator::EngineConfig::default());
+    let (tokens, reason, _) =
+        engine.submit(bitnet::coordinator::Request::greedy(vec![4, 5], 2)).wait();
+    assert_eq!(tokens.len(), 2);
+    assert_eq!(reason, bitnet::coordinator::FinishReason::Length);
+
+    // Thread pool and topology at the facade root.
+    let pool = bitnet::threadpool::ThreadPool::new(2);
+    let sum = AtomicUsize::new(0);
+    pool.parallel_for(8, |i| {
+        sum.fetch_add(i, Ordering::Relaxed);
+    });
+    assert_eq!(sum.load(Ordering::Relaxed), 28);
+    assert_eq!(bitnet::topology::Topology::mock(2).n_nodes(), 2);
+}

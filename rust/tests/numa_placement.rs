@@ -1,0 +1,96 @@
+//! NUMA placement integration: under a mocked multi-node topology the
+//! whole model pipeline — per-node weight localization at load, placed
+//! matmul routing, node-grouped workers — must produce logits
+//! bit-identical to a plain single-node pool, while the per-node
+//! dispatch counters show every node executed its own row partition.
+//!
+//! Mock topologies (`Topology::mock`) place work but never pin threads,
+//! so these tests are host-independent and run on single-core CI.
+
+use bitnet::model::weights::Checkpoint;
+use bitnet::model::{ModelConfig, Transformer};
+use bitnet::threadpool::ThreadPool;
+use bitnet::topology::Topology;
+use bitnet::{Dispatch, DispatchPlan, QuantType};
+use std::sync::Arc;
+
+fn model_with_pool(ck: &Checkpoint, pool: Arc<ThreadPool>) -> Transformer {
+    let plan = DispatchPlan::new(Dispatch::Fixed(QuantType::I2S));
+    Transformer::from_checkpoint_plan_pool(ck, plan, pool)
+}
+
+fn argmax(v: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// Prefill `prompt`, then decode `steps` greedy tokens; return every
+/// logits vector produced along the way.
+fn run_pipeline(model: &Transformer, prompt: &[u32], steps: usize) -> Vec<Vec<f32>> {
+    let mut session = model.new_session(prompt.len() + steps + 1);
+    let mut out = vec![model.prefill(&mut session, prompt)];
+    for _ in 0..steps {
+        let tok = argmax(out.last().unwrap());
+        out.push(model.decode_step(&mut session, tok));
+    }
+    out
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn mock_two_node_logits_are_bit_identical() {
+    let cfg = ModelConfig::tiny();
+    let ck = Checkpoint::synthetic(&cfg, 42);
+    let prompt: Vec<u32> = (0..33).map(|i| (i * 7 + 3) % cfg.vocab_size as u32).collect();
+
+    let single = model_with_pool(&ck, Arc::new(ThreadPool::new(4)));
+    let numa_pool = Arc::new(ThreadPool::with_topology(4, Topology::mock(2)));
+    let numa = model_with_pool(&ck, Arc::clone(&numa_pool));
+
+    let a = run_pipeline(&single, &prompt, 6);
+    let b = run_pipeline(&numa, &prompt, 6);
+    assert_eq!(a.len(), b.len());
+    for (step, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(bits(x), bits(y), "logits diverged at step {step}");
+    }
+
+    // Every node ran its own partition of the placed GEMM rows.
+    let stats = numa_pool.numa_stats();
+    assert_eq!(stats.nodes, 2);
+    assert!(stats.mocked);
+    assert_eq!(stats.chunks.len(), 2);
+    for (node, &chunks) in stats.chunks.iter().enumerate() {
+        assert!(chunks > 0, "node {node} executed no chunks: {stats:?}");
+    }
+}
+
+#[test]
+fn uneven_three_node_split_stays_bit_identical() {
+    // Three nodes over four threads: row ranges are uneven and one node
+    // holds two workers — the routing math must still cover every row
+    // exactly once.
+    let cfg = ModelConfig::tiny();
+    let ck = Checkpoint::synthetic(&cfg, 7);
+    let prompt: Vec<u32> = (0..17).map(|i| (i * 11 + 5) % cfg.vocab_size as u32).collect();
+
+    let single = model_with_pool(&ck, Arc::new(ThreadPool::new(4)));
+    let numa_pool = Arc::new(ThreadPool::with_topology(4, Topology::mock(3)));
+    let numa = model_with_pool(&ck, Arc::clone(&numa_pool));
+
+    let a = run_pipeline(&single, &prompt, 4);
+    let b = run_pipeline(&numa, &prompt, 4);
+    for (step, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(bits(x), bits(y), "logits diverged at step {step}");
+    }
+    let stats = numa_pool.numa_stats();
+    assert_eq!(stats.nodes, 3);
+    assert!(stats.chunks.iter().sum::<u64>() > 0);
+}
