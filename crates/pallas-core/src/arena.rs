@@ -48,6 +48,7 @@
 //! preemptions (watermark admission ran out of room mid-decode) are
 //! counted here for the engine metrics.
 
+use crate::simd::ops;
 use crate::threadpool::ThreadPool;
 use crate::util::f16::f16_to_f32_fast;
 use crate::util::{ceil_div, f32_to_f16};
@@ -169,25 +170,58 @@ impl Slab {
         }
     }
 
-    /// The first `tn` rows of `page` as f32: borrowed straight from an
-    /// F32 page, or decoded into `scratch` for F16 (one decode per page
-    /// per query row — the inner attention dot always runs over a
-    /// contiguous f32 slice).
-    fn page_rows<'a>(
-        &'a self,
-        page: u32,
-        row_elems: usize,
-        tn: usize,
-        scratch: &'a mut Vec<f32>,
-    ) -> &'a [f32] {
+    /// One row of `page` decoded to f32 (debug/test accessor — the hot
+    /// path reads page elements in place via the fused attend loops).
+    fn row_f32(&self, page: u32, off: usize, row_elems: usize) -> Vec<f32> {
         match &self.pages[page as usize] {
-            PageStore::F32(v) => &v[..tn * row_elems],
+            PageStore::F32(v) => v[off..off + row_elems].to_vec(),
             PageStore::F16(v) => {
-                scratch.clear();
-                scratch.extend(v[..tn * row_elems].iter().map(|&b| f16_to_f32_fast(b)));
-                &scratch[..]
+                v[off..off + row_elems].iter().map(|&b| f16_to_f32_fast(b)).collect()
             }
         }
+    }
+}
+
+/// Reusable attention workspace: the per-call score buffer plus the
+/// counters the allocation-free steady-state test reads. One per
+/// session — sized by the largest `n_heads * ctx_len` seen, so it stops
+/// allocating once the context stops growing past previous peaks.
+#[derive(Debug, Default)]
+pub struct AttnWorkspace {
+    scores: Vec<f32>,
+    allocs: u64,
+    reuses: u64,
+}
+
+impl AttnWorkspace {
+    pub fn new() -> AttnWorkspace {
+        AttnWorkspace::default()
+    }
+
+    /// Times the score buffer had to grow (a heap allocation).
+    pub fn allocs(&self) -> u64 {
+        self.allocs
+    }
+
+    /// Times existing capacity was reused (steady-state calls).
+    pub fn reuses(&self) -> u64 {
+        self.reuses
+    }
+
+    /// A zeroed `n`-element score buffer, growing only on capacity miss.
+    /// Growth takes power-of-two headroom: decode lengthens the context
+    /// one token per step, so sizing to exactly `n` would re-allocate on
+    /// every step instead of O(log) times over a generation.
+    fn ensure(&mut self, n: usize) -> &mut [f32] {
+        if self.scores.capacity() < n {
+            self.allocs += 1;
+            self.scores = vec![0f32; n.next_power_of_two()];
+        } else {
+            self.reuses += 1;
+        }
+        self.scores.clear();
+        self.scores.resize(n, 0.0);
+        &mut self.scores[..n]
     }
 }
 
@@ -748,30 +782,21 @@ impl KvArena {
     }
 
     /// K/V row for `pos` of `seq` in `layer`, decoded to f32 (debug/test
-    /// accessor — the hot path reads whole pages via [`KvArena::attend`]).
+    /// accessor — the hot path reads page elements in place via
+    /// [`KvArena::attend_with`]).
     pub fn kv_row(&self, seq: u64, layer: usize, pos: usize) -> (Vec<f32>, Vec<f32>) {
         let page = self.page_of(seq, pos);
-        let row = pos % self.page_tokens;
-        let mut ks = Vec::new();
-        let mut vs = Vec::new();
-        let k = self.k_slabs[layer].page_rows(page, self.kv_dim, row + 1, &mut ks);
-        let k = k[row * self.kv_dim..(row + 1) * self.kv_dim].to_vec();
-        let v = self.v_slabs[layer].page_rows(page, self.kv_dim, row + 1, &mut vs);
-        let v = v[row * self.kv_dim..(row + 1) * self.kv_dim].to_vec();
-        (k, v)
+        let off = (pos % self.page_tokens) * self.kv_dim;
+        (
+            self.k_slabs[layer].row_f32(page, off, self.kv_dim),
+            self.v_slabs[layer].row_f32(page, off, self.kv_dim),
+        )
     }
 
-    /// Scaled-dot-product attention for one query row against `seq`'s
-    /// cache in `layer`: context positions `0..ctx_len`, grouped-query
-    /// heads, accumulated into `out` (assumed zeroed, `n_heads *
-    /// head_dim`).
-    ///
-    /// The gather is tiled per page so the inner dot product always runs
-    /// over a contiguous slice; per (head, position) arithmetic and
-    /// accumulation order are identical to the pre-paged contiguous
-    /// layout, so F32 results are bit-identical to it. The read is pure
-    /// page-table indirection, so shared (COW) pages are read bit-
-    /// identically to private ones.
+    /// [`KvArena::attend_with`] with a throwaway workspace and no pool —
+    /// the convenience entry point for tests and one-off callers. Hot
+    /// paths (`pallas_model::Session`) hold a persistent
+    /// [`AttnWorkspace`] instead so steady-state decode never allocates.
     #[allow(clippy::too_many_arguments)]
     pub fn attend(
         &self,
@@ -785,55 +810,127 @@ impl KvArena {
         scale: f32,
         out: &mut [f32],
     ) {
+        let mut ws = AttnWorkspace::new();
+        self.attend_with(
+            &mut ws, seq, layer, q, ctx_len, n_heads, n_kv_heads, head_dim, scale, out, None,
+        );
+    }
+
+    /// Scaled-dot-product attention for one query row against `seq`'s
+    /// cache in `layer`: context positions `0..ctx_len`, grouped-query
+    /// heads, accumulated into `out` (assumed zeroed, `n_heads *
+    /// head_dim`).
+    ///
+    /// The gather is tiled per page so the inner loops always run over
+    /// contiguous in-page slices; f16 pages decode **inside** the SIMD
+    /// dot/axpy loops ([`crate::simd::ops`]) — no scratch
+    /// materialization. Score and output element values are independent
+    /// of head order and of whether a pool is passed, and every reduction
+    /// uses the shared lane-blocked order, so results are bit-identical
+    /// across scalar/AVX2/NEON tiers, across thread counts, and across
+    /// page sizes (paged ≡ contiguous). The read is pure page-table
+    /// indirection, so shared (COW) pages read identically to private
+    /// ones.
+    ///
+    /// `ws` supplies the score buffer (allocation-free once warm); with
+    /// `pool` set, heads run in parallel on the shared NUMA-placed pool.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attend_with(
+        &self,
+        ws: &mut AttnWorkspace,
+        seq: u64,
+        layer: usize,
+        q: &[f32],
+        ctx_len: usize,
+        n_heads: usize,
+        n_kv_heads: usize,
+        head_dim: usize,
+        scale: f32,
+        out: &mut [f32],
+        pool: Option<&ThreadPool>,
+    ) {
         if ctx_len == 0 {
             return;
         }
         let kvd = self.kv_dim;
         let group = n_heads / n_kv_heads;
         let table = self.tables.get(&seq).expect("reserve pages before append/attend");
-        let mut scores = vec![0f32; n_heads * ctx_len];
-        let mut scratch: Vec<f32> = Vec::new();
-        let mut t0 = 0usize;
-        for &page in table.iter() {
-            if t0 >= ctx_len {
-                break;
-            }
-            let tn = self.page_tokens.min(ctx_len - t0);
-            let kp = self.k_slabs[layer].page_rows(page, kvd, tn, &mut scratch);
-            for head in 0..n_heads {
-                let kv_head = head / group;
-                let qh = &q[head * head_dim..(head + 1) * head_dim];
-                for t in 0..tn {
-                    let kt = &kp[t * kvd + kv_head * head_dim..t * kvd + (kv_head + 1) * head_dim];
-                    scores[head * ctx_len + t0 + t] =
-                        qh.iter().zip(kt).map(|(a, b)| a * b).sum::<f32>() * scale;
+        let covered = table.len() * self.page_tokens;
+        assert!(covered >= ctx_len, "attend: page table covers {covered} of {ctx_len} context tokens");
+        let page_tokens = self.page_tokens;
+        let k_slab = &self.k_slabs[layer];
+        let v_slab = &self.v_slabs[layer];
+        let scores = ws.ensure(n_heads * ctx_len);
+        let per_head = |head: usize, srow: &mut [f32], orow: &mut [f32]| {
+            let col = (head / group) * head_dim;
+            let qh = &q[head * head_dim..(head + 1) * head_dim];
+            let mut t0 = 0usize;
+            for &page in table.iter() {
+                if t0 >= ctx_len {
+                    break;
                 }
-            }
-            t0 += tn;
-        }
-        assert!(t0 >= ctx_len, "attend: page table covers {t0} of {ctx_len} context tokens");
-        for head in 0..n_heads {
-            crate::util::softmax(&mut scores[head * ctx_len..(head + 1) * ctx_len]);
-        }
-        let mut t0 = 0usize;
-        for &page in table.iter() {
-            if t0 >= ctx_len {
-                break;
-            }
-            let tn = self.page_tokens.min(ctx_len - t0);
-            let vp = self.v_slabs[layer].page_rows(page, kvd, tn, &mut scratch);
-            for head in 0..n_heads {
-                let kv_head = head / group;
-                let oh = &mut out[head * head_dim..(head + 1) * head_dim];
-                for t in 0..tn {
-                    let w = scores[head * ctx_len + t0 + t];
-                    let vt = &vp[t * kvd + kv_head * head_dim..t * kvd + (kv_head + 1) * head_dim];
-                    for (o, &vv) in oh.iter_mut().zip(vt) {
-                        *o += w * vv;
+                let tn = page_tokens.min(ctx_len - t0);
+                match &k_slab.pages[page as usize] {
+                    PageStore::F32(kp) => {
+                        for t in 0..tn {
+                            let kt = &kp[t * kvd + col..t * kvd + col + head_dim];
+                            srow[t0 + t] = ops::dot_f32(qh, kt) * scale;
+                        }
+                    }
+                    PageStore::F16(kp) => {
+                        for t in 0..tn {
+                            let kt = &kp[t * kvd + col..t * kvd + col + head_dim];
+                            srow[t0 + t] = ops::dot_f16(qh, kt) * scale;
+                        }
                     }
                 }
+                t0 += tn;
             }
-            t0 += tn;
+            crate::util::softmax(srow);
+            let mut t0 = 0usize;
+            for &page in table.iter() {
+                if t0 >= ctx_len {
+                    break;
+                }
+                let tn = page_tokens.min(ctx_len - t0);
+                match &v_slab.pages[page as usize] {
+                    PageStore::F32(vp) => {
+                        for t in 0..tn {
+                            let vt = &vp[t * kvd + col..t * kvd + col + head_dim];
+                            ops::axpy_f32(srow[t0 + t], vt, orow);
+                        }
+                    }
+                    PageStore::F16(vp) => {
+                        for t in 0..tn {
+                            let vt = &vp[t * kvd + col..t * kvd + col + head_dim];
+                            ops::axpy_f16(srow[t0 + t], vt, orow);
+                        }
+                    }
+                }
+                t0 += tn;
+            }
+        };
+        match pool {
+            // Head-parallel only when the fan-out can pay for the fork-
+            // join: a multi-thread pool and enough score work per job.
+            Some(p) if p.size() > 1 && n_heads > 1 && n_heads * ctx_len >= 512 => {
+                p.parallel_for_disjoint_rows2(
+                    n_heads,
+                    |h| p.topology().node_of_row(h, n_heads),
+                    scores,
+                    ctx_len,
+                    out,
+                    head_dim,
+                    per_head,
+                );
+            }
+            _ => {
+                for (head, (srow, orow)) in
+                    scores.chunks_mut(ctx_len).zip(out.chunks_mut(head_dim)).enumerate()
+                {
+                    per_head(head, srow, orow);
+                }
+            }
         }
     }
 }
@@ -1156,6 +1253,37 @@ mod tests {
         assert!(arena.reserve(1, 32));
         assert_eq!(arena.resident_bytes_by_node().len(), 1);
         assert_eq!(arena.resident_bytes_by_node()[0], arena.resident_bytes());
+    }
+
+    #[test]
+    fn attend_with_reuses_workspace_and_matches_attend() {
+        use crate::util::Rng;
+        let (n_heads, n_kv_heads, head_dim) = (4usize, 2usize, 8usize);
+        let kvd = n_kv_heads * head_dim;
+        for dtype in [KvDtype::F32, KvDtype::F16] {
+            let mut arena = KvArena::new(1, kvd, 64, dtype);
+            assert!(arena.reserve(1, 20)); // 2 pages
+            let mut rng = Rng::new(11);
+            for pos in 0..20 {
+                let k: Vec<f32> = (0..kvd).map(|_| rng.next_gaussian()).collect();
+                let v: Vec<f32> = (0..kvd).map(|_| rng.next_gaussian()).collect();
+                arena.append(1, 0, pos, &k, &v);
+            }
+            let q: Vec<f32> = (0..n_heads * head_dim).map(|_| rng.next_gaussian()).collect();
+            let scale = 1.0 / (head_dim as f32).sqrt();
+            let mut legacy = vec![0f32; n_heads * head_dim];
+            arena.attend(1, 0, &q, 20, n_heads, n_kv_heads, head_dim, scale, &mut legacy);
+            let mut ws = AttnWorkspace::new();
+            for round in 0..3 {
+                let mut out = vec![0f32; n_heads * head_dim];
+                arena.attend_with(
+                    &mut ws, 1, 0, &q, 20, n_heads, n_kv_heads, head_dim, scale, &mut out, None,
+                );
+                assert_eq!(out, legacy, "{} round {round}", dtype.name());
+            }
+            assert_eq!(ws.allocs(), 1, "only the first call may allocate");
+            assert_eq!(ws.reuses(), 2);
+        }
     }
 
     #[test]

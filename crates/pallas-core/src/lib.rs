@@ -1,12 +1,13 @@
 //! # pallas-core — foundation layer of the Bitnet.cpp reproduction
 //!
 //! The bottom crate of the `rust_pallas` workspace: small utilities
-//! ([`util`]: f16 conversion, JSON, RNG, stats), the fork-join
-//! [`threadpool`] with NUMA-aware per-node chunk queues, the
-//! [`topology`] module that discovers (or mocks) the host's NUMA
-//! layout, and the paged KV [`arena`] that both the model layer
-//! (`pallas-model::Session`) and the serving scheduler
-//! (`pallas-serve::coordinator`) allocate from.
+//! ([`util`]: f16 conversion, JSON, RNG, stats), the process-wide
+//! [`simd`] dispatch plus the lane-blocked vector float primitives the
+//! attention/ops hot paths run on, the fork-join [`threadpool`] with
+//! NUMA-aware per-node chunk queues, the [`topology`] module that
+//! discovers (or mocks) the host's NUMA layout, and the paged KV
+//! [`arena`] that both the model layer (`pallas-model::Session`) and the
+//! serving scheduler (`pallas-serve::coordinator`) allocate from.
 //!
 //! Nothing here depends on kernels, the model, or the serving stack —
 //! the workspace dependency graph is strictly acyclic:
@@ -18,6 +19,7 @@
 
 #[deny(unsafe_code)]
 pub mod arena;
+pub mod simd;
 pub mod threadpool;
 pub mod topology;
 #[deny(unsafe_code)]

@@ -1,0 +1,1194 @@
+//! Vectorized float primitives for the attention and model-op hot paths,
+//! bit-identical across tiers by a shared lane-blocked accumulation order.
+//!
+//! Float addition does not reassociate, so a naive sequential scalar sum
+//! and an 8-wide vector sum produce different bits. Every reduction here
+//! therefore uses **one** accumulation order in all tiers: element `i`
+//! lands in lane `i % LANES`, lanes are spilled to an array, and
+//! [`reduce_lanes`] folds the array in a fixed pairwise order. The scalar
+//! path runs that exact scheme with a `[f32; LANES]` accumulator; AVX2
+//! holds the lanes in one `__m256` (separate `mul`/`add` — never FMA,
+//! which would fuse the rounding step the scalar path performs); NEON
+//! holds them in two `float32x4_t`s covering lanes 0–3 and 4–7.
+//! Elementwise ops (axpy, scaling, rotation, SwiGLU) are bit-identical as
+//! long as each output element is computed by the same expression tree,
+//! which the per-tier implementations mirror operation for operation.
+//!
+//! f16 operands decode **inside** the loop: AVX2 uses the hardware
+//! `_mm256_cvtph_ps` widening when the CPU has F16C, else the 64K
+//! `f16_to_f32_fast` table — both are exact IEEE widenings, so the choice
+//! affects speed only, never bits. This is what lets the KV arena's
+//! attend read f16 pages without materializing an f32 scratch copy.
+//!
+//! Transcendentals (`exp`, `sin`, `cos`) always run scalar libm — a
+//! vector polynomial would change results — so softmax/SwiGLU/RoPE
+//! vectorize the arithmetic around them.
+
+use crate::util::f16::f16_to_f32_fast;
+
+use super::{active_level, SimdLevel};
+
+/// Accumulation lanes every reduction is blocked over (AVX2 register
+/// width; two NEON registers; a `[f32; 8]` in the scalar reference).
+pub const LANES: usize = 8;
+
+/// Fold the lane accumulators in a fixed pairwise order. Every tier ends
+/// its reductions here, so the final rounding sequence is shared.
+#[inline]
+fn reduce_lanes(acc: &[f32; LANES]) -> f32 {
+    let a = (acc[0] + acc[4]) + (acc[1] + acc[5]);
+    let b = (acc[2] + acc[6]) + (acc[3] + acc[7]);
+    a + b
+}
+
+/// Dot product of two f32 slices (lane-blocked order).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match active_level() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active_level() == Avx2 only after runtime AVX2 detection.
+        SimdLevel::Avx2 => unsafe { avx2::dot_f32(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: active_level() == Neon only after runtime NEON detection.
+        SimdLevel::Neon => unsafe { neon::dot_f32(a, b) },
+        _ => scalar::dot_f32(a, b),
+    }
+}
+
+/// Dot product of an f32 slice with an f16 (bit-pattern) slice, decode
+/// fused into the loop.
+#[inline]
+pub fn dot_f16(a: &[f32], b: &[u16]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match active_level() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active_level() == Avx2 only after runtime AVX2 detection.
+        SimdLevel::Avx2 => unsafe { avx2::dot_f16(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: active_level() == Neon only after runtime NEON detection.
+        SimdLevel::Neon => unsafe { neon::dot_f16(a, b) },
+        _ => scalar::dot_f16(a, b),
+    }
+}
+
+/// Dot product of little-endian f32 weight bytes with f32 activations
+/// (the F32 baseline kernel's inner loop).
+#[inline]
+pub fn dot_f32_le(w: &[u8], x: &[f32]) -> f32 {
+    debug_assert_eq!(w.len(), x.len() * 4);
+    match active_level() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active_level() == Avx2 only after runtime AVX2 detection.
+        SimdLevel::Avx2 => unsafe { avx2::dot_f32_le(w, x) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: active_level() == Neon only after runtime NEON detection.
+        SimdLevel::Neon => unsafe { neon::dot_f32_le(w, x) },
+        _ => scalar::dot_f32_le(w, x),
+    }
+}
+
+/// Dot product of little-endian f16 weight bytes with f32 activations
+/// (the F16 baseline kernel's and the LM head's inner loop).
+#[inline]
+pub fn dot_f16_le(w: &[u8], x: &[f32]) -> f32 {
+    debug_assert_eq!(w.len(), x.len() * 2);
+    match active_level() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active_level() == Avx2 only after runtime AVX2 detection.
+        SimdLevel::Avx2 => unsafe { avx2::dot_f16_le(w, x) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: active_level() == Neon only after runtime NEON detection.
+        SimdLevel::Neon => unsafe { neon::dot_f16_le(w, x) },
+        _ => scalar::dot_f16_le(w, x),
+    }
+}
+
+/// `y[i] += alpha * x[i]` (elementwise — bit-identical across tiers).
+#[inline]
+pub fn axpy_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    match active_level() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active_level() == Avx2 only after runtime AVX2 detection.
+        SimdLevel::Avx2 => unsafe { avx2::axpy_f32(alpha, x, y) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: active_level() == Neon only after runtime NEON detection.
+        SimdLevel::Neon => unsafe { neon::axpy_f32(alpha, x, y) },
+        _ => scalar::axpy_f32(alpha, x, y),
+    }
+}
+
+/// `y[i] += alpha * f16_decode(x[i])`, decode fused into the loop.
+#[inline]
+pub fn axpy_f16(alpha: f32, x: &[u16], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    match active_level() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active_level() == Avx2 only after runtime AVX2 detection.
+        SimdLevel::Avx2 => unsafe { avx2::axpy_f16(alpha, x, y) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: active_level() == Neon only after runtime NEON detection.
+        SimdLevel::Neon => unsafe { neon::axpy_f16(alpha, x, y) },
+        _ => scalar::axpy_f16(alpha, x, y),
+    }
+}
+
+/// Sum of squares (lane-blocked order) — the RMSNorm reduction.
+#[inline]
+pub fn sum_squares(x: &[f32]) -> f32 {
+    match active_level() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active_level() == Avx2 only after runtime AVX2 detection.
+        SimdLevel::Avx2 => unsafe { avx2::sum_squares(x) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: active_level() == Neon only after runtime NEON detection.
+        SimdLevel::Neon => unsafe { neon::sum_squares(x) },
+        _ => scalar::sum_squares(x),
+    }
+}
+
+/// Maximum element (`NEG_INFINITY` when empty). Max is order-free over
+/// the finite values attention produces, so tiers agree bit-for-bit.
+#[inline]
+pub fn max_val(x: &[f32]) -> f32 {
+    match active_level() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active_level() == Avx2 only after runtime AVX2 detection.
+        SimdLevel::Avx2 => unsafe { avx2::max_val(x) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: active_level() == Neon only after runtime NEON detection.
+        SimdLevel::Neon => unsafe { neon::max_val(x) },
+        _ => scalar::max_val(x),
+    }
+}
+
+/// Sum of elements (lane-blocked order) — the softmax normalizer.
+#[inline]
+pub fn sum(x: &[f32]) -> f32 {
+    match active_level() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active_level() == Avx2 only after runtime AVX2 detection.
+        SimdLevel::Avx2 => unsafe { avx2::sum(x) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: active_level() == Neon only after runtime NEON detection.
+        SimdLevel::Neon => unsafe { neon::sum(x) },
+        _ => scalar::sum(x),
+    }
+}
+
+/// `x[i] *= s` in place (elementwise).
+#[inline]
+pub fn scale(x: &mut [f32], s: f32) {
+    match active_level() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active_level() == Avx2 only after runtime AVX2 detection.
+        SimdLevel::Avx2 => unsafe { avx2::scale(x, s) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: active_level() == Neon only after runtime NEON detection.
+        SimdLevel::Neon => unsafe { neon::scale(x, s) },
+        _ => scalar::scale(x, s),
+    }
+}
+
+/// `out[i] = (x[i] * inv) * gain[i]` (the RMSNorm apply step; the
+/// parenthesization is part of the bit-identity contract).
+#[inline]
+pub fn scale_gain(x: &[f32], inv: f32, gain: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), gain.len());
+    debug_assert_eq!(x.len(), out.len());
+    match active_level() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active_level() == Avx2 only after runtime AVX2 detection.
+        SimdLevel::Avx2 => unsafe { avx2::scale_gain(x, inv, gain, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: active_level() == Neon only after runtime NEON detection.
+        SimdLevel::Neon => unsafe { neon::scale_gain(x, inv, gain, out) },
+        _ => scalar::scale_gain(x, inv, gain, out),
+    }
+}
+
+/// Rotate interleaved `(even, odd)` pairs: for pair `p` of `head`,
+/// `even' = even*cos[p] - odd*sin[p]`, `odd' = even*sin[p] + odd*cos[p]`
+/// (the RoPE inner step; `head.len() == 2 * sin.len()`).
+#[inline]
+pub fn rope_rotate(head: &mut [f32], sin: &[f32], cos: &[f32]) {
+    debug_assert_eq!(head.len(), 2 * sin.len());
+    debug_assert_eq!(sin.len(), cos.len());
+    match active_level() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active_level() == Avx2 only after runtime AVX2 detection.
+        SimdLevel::Avx2 => unsafe { avx2::rope_rotate(head, sin, cos) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: active_level() == Neon only after runtime NEON detection.
+        SimdLevel::Neon => unsafe { neon::rope_rotate(head, sin, cos) },
+        _ => scalar::rope_rotate(head, sin, cos),
+    }
+}
+
+/// SwiGLU combine: `out[i] = (gate[i] / (1 + exp(-gate[i]))) * up[i]`.
+/// `exp` stays scalar libm in every tier; the divide/add/multiply around
+/// it vectorize.
+#[inline]
+pub fn silu_mul(gate: &[f32], up: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(gate.len(), up.len());
+    debug_assert_eq!(gate.len(), out.len());
+    match active_level() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active_level() == Avx2 only after runtime AVX2 detection.
+        SimdLevel::Avx2 => unsafe { avx2::silu_mul(gate, up, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: active_level() == Neon only after runtime NEON detection.
+        SimdLevel::Neon => unsafe { neon::silu_mul(gate, up, out) },
+        _ => scalar::silu_mul(gate, up, out),
+    }
+}
+
+// ---- Scalar reference tier ---------------------------------------------
+//
+// The reference implementations every vector tier must match bit-for-bit.
+// Reductions run the same lane-blocked scheme the registers impose; the
+// elementwise loops spell out the exact expression trees the vector code
+// evaluates per element.
+
+mod scalar {
+    use super::{f16_to_f32_fast, reduce_lanes, LANES};
+
+    pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        let mut acc = [0f32; LANES];
+        for (i, (&av, &bv)) in a.iter().zip(b.iter()).enumerate() {
+            acc[i & (LANES - 1)] += av * bv;
+        }
+        reduce_lanes(&acc)
+    }
+
+    pub fn dot_f16(a: &[f32], b: &[u16]) -> f32 {
+        let mut acc = [0f32; LANES];
+        for (i, (&av, &bv)) in a.iter().zip(b.iter()).enumerate() {
+            acc[i & (LANES - 1)] += av * f16_to_f32_fast(bv);
+        }
+        reduce_lanes(&acc)
+    }
+
+    pub fn dot_f32_le(w: &[u8], x: &[f32]) -> f32 {
+        let mut acc = [0f32; LANES];
+        for (i, c) in w.chunks_exact(4).enumerate() {
+            let wv = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            acc[i & (LANES - 1)] += wv * x[i];
+        }
+        reduce_lanes(&acc)
+    }
+
+    pub fn dot_f16_le(w: &[u8], x: &[f32]) -> f32 {
+        let mut acc = [0f32; LANES];
+        for (i, c) in w.chunks_exact(2).enumerate() {
+            let wv = f16_to_f32_fast(u16::from_le_bytes([c[0], c[1]]));
+            acc[i & (LANES - 1)] += wv * x[i];
+        }
+        reduce_lanes(&acc)
+    }
+
+    pub fn axpy_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
+        for (yo, &xv) in y.iter_mut().zip(x.iter()) {
+            *yo += alpha * xv;
+        }
+    }
+
+    pub fn axpy_f16(alpha: f32, x: &[u16], y: &mut [f32]) {
+        for (yo, &xv) in y.iter_mut().zip(x.iter()) {
+            *yo += alpha * f16_to_f32_fast(xv);
+        }
+    }
+
+    pub fn sum_squares(x: &[f32]) -> f32 {
+        let mut acc = [0f32; LANES];
+        for (i, &v) in x.iter().enumerate() {
+            acc[i & (LANES - 1)] += v * v;
+        }
+        reduce_lanes(&acc)
+    }
+
+    pub fn max_val(x: &[f32]) -> f32 {
+        x.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    pub fn sum(x: &[f32]) -> f32 {
+        let mut acc = [0f32; LANES];
+        for (i, &v) in x.iter().enumerate() {
+            acc[i & (LANES - 1)] += v;
+        }
+        reduce_lanes(&acc)
+    }
+
+    pub fn scale(x: &mut [f32], s: f32) {
+        for v in x.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    pub fn scale_gain(x: &[f32], inv: f32, gain: &[f32], out: &mut [f32]) {
+        for ((o, &xv), &g) in out.iter_mut().zip(x.iter()).zip(gain.iter()) {
+            *o = (xv * inv) * g;
+        }
+    }
+
+    pub fn rope_rotate(head: &mut [f32], sin: &[f32], cos: &[f32]) {
+        for (pair, (&s, &c)) in head.chunks_exact_mut(2).zip(sin.iter().zip(cos.iter())) {
+            let (a, b) = (pair[0], pair[1]);
+            // The vector tiers compute `a*c + b*(-s)` / `b*c + a*s`; both
+            // are IEEE-identical to these expressions (negation is exact,
+            // addition commutes bitwise).
+            pair[0] = a * c - b * s;
+            pair[1] = a * s + b * c;
+        }
+    }
+
+    pub fn silu_mul(gate: &[f32], up: &[f32], out: &mut [f32]) {
+        for ((o, &g), &u) in out.iter_mut().zip(gate.iter()).zip(up.iter()) {
+            *o = (g / (1.0 + (-g).exp())) * u;
+        }
+    }
+}
+
+// ---- AVX2 tier ---------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{f16_to_f32_fast, reduce_lanes, LANES};
+    use core::arch::x86_64::*;
+    use std::sync::atomic::{AtomicU8, Ordering};
+
+    /// Whether the CPU has F16C (`vcvtph2ps`). A separate feature bit
+    /// from AVX2 — detected once, cached. Absence only costs speed: the
+    /// table decode below produces identical bits.
+    fn have_f16c() -> bool {
+        static STATE: AtomicU8 = AtomicU8::new(0);
+        match STATE.load(Ordering::Relaxed) {
+            1 => true,
+            2 => false,
+            _ => {
+                let have = std::arch::is_x86_feature_detected!("f16c");
+                STATE.store(if have { 1 } else { 2 }, Ordering::Relaxed);
+                have
+            }
+        }
+    }
+
+    /// Spill an 8-lane accumulator, fold the ≤7-element tail into its
+    /// lanes (element `full + j` belongs to lane `j` since `full` is a
+    /// multiple of [`LANES`]), and reduce in the shared order.
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn finish(acc: __m256, tail: impl Fn(usize) -> f32, full: usize, n: usize) -> f32 {
+        let mut lanes = [0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for j in full..n {
+            lanes[j - full] += tail(j);
+        }
+        reduce_lanes(&lanes)
+    }
+
+    /// # Safety
+    /// Requires AVX2 (callers dispatch on runtime detection).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let full = n & !(LANES - 1);
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < full {
+            let av = _mm256_loadu_ps(a.as_ptr().add(i));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(av, bv));
+            i += LANES;
+        }
+        finish(acc, |j| a[j] * b[j], full, n)
+    }
+
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_f16(a: &[f32], b: &[u16]) -> f32 {
+        if have_f16c() {
+            // SAFETY: F16C verified by have_f16c().
+            return dot_f16_f16c(a, b);
+        }
+        let n = a.len();
+        let full = n & !(LANES - 1);
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < full {
+            let av = _mm256_loadu_ps(a.as_ptr().add(i));
+            let bv = decode8(b.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(av, bv));
+            i += LANES;
+        }
+        finish(acc, |j| a[j] * f16_to_f32_fast(b[j]), full, n)
+    }
+
+    /// Table-decode 8 consecutive f16 words into a vector (the F16C-less
+    /// fallback; exact, like the hardware widening).
+    ///
+    /// # Safety
+    /// Requires AVX2; `p` must point at 8 readable `u16`s.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn decode8(p: *const u16) -> __m256 {
+        let mut tmp = [0f32; LANES];
+        for (j, t) in tmp.iter_mut().enumerate() {
+            *t = f16_to_f32_fast(*p.add(j));
+        }
+        _mm256_loadu_ps(tmp.as_ptr())
+    }
+
+    /// # Safety
+    /// Requires AVX2 and F16C.
+    #[target_feature(enable = "avx2", enable = "f16c")]
+    unsafe fn dot_f16_f16c(a: &[f32], b: &[u16]) -> f32 {
+        let n = a.len();
+        let full = n & !(LANES - 1);
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < full {
+            let av = _mm256_loadu_ps(a.as_ptr().add(i));
+            let hv = _mm_loadu_si128(b.as_ptr().add(i) as *const __m128i);
+            let bv = _mm256_cvtph_ps(hv);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(av, bv));
+            i += LANES;
+        }
+        finish(acc, |j| a[j] * f16_to_f32_fast(b[j]), full, n)
+    }
+
+    /// # Safety
+    /// Requires AVX2; `w.len() == x.len() * 4`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_f32_le(w: &[u8], x: &[f32]) -> f32 {
+        let n = x.len();
+        let full = n & !(LANES - 1);
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < full {
+            // x86-64 is little-endian: the byte stream *is* the f32 array.
+            let wv = _mm256_loadu_ps(w.as_ptr().add(i * 4) as *const f32);
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(wv, xv));
+            i += LANES;
+        }
+        finish(
+            acc,
+            |j| {
+                let c = &w[j * 4..j * 4 + 4];
+                f32::from_le_bytes([c[0], c[1], c[2], c[3]]) * x[j]
+            },
+            full,
+            n,
+        )
+    }
+
+    /// # Safety
+    /// Requires AVX2; `w.len() == x.len() * 2`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_f16_le(w: &[u8], x: &[f32]) -> f32 {
+        // Little-endian byte pairs are exactly the u16 stream; the loads
+        // below are unaligned, so no u16 alignment requirement exists.
+        if have_f16c() {
+            // SAFETY: F16C verified by have_f16c().
+            return dot_f16_le_f16c(w, x);
+        }
+        let n = x.len();
+        let full = n & !(LANES - 1);
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < full {
+            let mut tmp = [0f32; LANES];
+            for (j, t) in tmp.iter_mut().enumerate() {
+                let c = &w[(i + j) * 2..(i + j) * 2 + 2];
+                *t = f16_to_f32_fast(u16::from_le_bytes([c[0], c[1]]));
+            }
+            let wv = _mm256_loadu_ps(tmp.as_ptr());
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(wv, xv));
+            i += LANES;
+        }
+        finish(
+            acc,
+            |j| {
+                let c = &w[j * 2..j * 2 + 2];
+                f16_to_f32_fast(u16::from_le_bytes([c[0], c[1]])) * x[j]
+            },
+            full,
+            n,
+        )
+    }
+
+    /// # Safety
+    /// Requires AVX2 and F16C; `w.len() == x.len() * 2`.
+    #[target_feature(enable = "avx2", enable = "f16c")]
+    unsafe fn dot_f16_le_f16c(w: &[u8], x: &[f32]) -> f32 {
+        let n = x.len();
+        let full = n & !(LANES - 1);
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < full {
+            let hv = _mm_loadu_si128(w.as_ptr().add(i * 2) as *const __m128i);
+            let wv = _mm256_cvtph_ps(hv);
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(wv, xv));
+            i += LANES;
+        }
+        finish(
+            acc,
+            |j| {
+                let c = &w[j * 2..j * 2 + 2];
+                f16_to_f32_fast(u16::from_le_bytes([c[0], c[1]])) * x[j]
+            },
+            full,
+            n,
+        )
+    }
+
+    /// # Safety
+    /// Requires AVX2; `x.len() == y.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let full = n & !(LANES - 1);
+        let av = _mm256_set1_ps(alpha);
+        let mut i = 0;
+        while i < full {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(yv, _mm256_mul_ps(av, xv)));
+            i += LANES;
+        }
+        for j in full..n {
+            y[j] += alpha * x[j];
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2; `x.len() == y.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_f16(alpha: f32, x: &[u16], y: &mut [f32]) {
+        if have_f16c() {
+            // SAFETY: F16C verified by have_f16c().
+            return axpy_f16_f16c(alpha, x, y);
+        }
+        let n = x.len();
+        let full = n & !(LANES - 1);
+        let av = _mm256_set1_ps(alpha);
+        let mut i = 0;
+        while i < full {
+            let xv = decode8(x.as_ptr().add(i));
+            let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(yv, _mm256_mul_ps(av, xv)));
+            i += LANES;
+        }
+        for j in full..n {
+            y[j] += alpha * f16_to_f32_fast(x[j]);
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 and F16C; `x.len() == y.len()`.
+    #[target_feature(enable = "avx2", enable = "f16c")]
+    unsafe fn axpy_f16_f16c(alpha: f32, x: &[u16], y: &mut [f32]) {
+        let n = x.len();
+        let full = n & !(LANES - 1);
+        let av = _mm256_set1_ps(alpha);
+        let mut i = 0;
+        while i < full {
+            let hv = _mm_loadu_si128(x.as_ptr().add(i) as *const __m128i);
+            let xv = _mm256_cvtph_ps(hv);
+            let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(yv, _mm256_mul_ps(av, xv)));
+            i += LANES;
+        }
+        for j in full..n {
+            y[j] += alpha * f16_to_f32_fast(x[j]);
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sum_squares(x: &[f32]) -> f32 {
+        let n = x.len();
+        let full = n & !(LANES - 1);
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < full {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, xv));
+            i += LANES;
+        }
+        finish(acc, |j| x[j] * x[j], full, n)
+    }
+
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn max_val(x: &[f32]) -> f32 {
+        let n = x.len();
+        let full = n & !(LANES - 1);
+        let mut acc = _mm256_set1_ps(f32::NEG_INFINITY);
+        let mut i = 0;
+        while i < full {
+            acc = _mm256_max_ps(acc, _mm256_loadu_ps(x.as_ptr().add(i)));
+            i += LANES;
+        }
+        let mut lanes = [0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut m = lanes.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        for &v in &x[full..] {
+            m = m.max(v);
+        }
+        m
+    }
+
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sum(x: &[f32]) -> f32 {
+        let n = x.len();
+        let full = n & !(LANES - 1);
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < full {
+            acc = _mm256_add_ps(acc, _mm256_loadu_ps(x.as_ptr().add(i)));
+            i += LANES;
+        }
+        finish(acc, |j| x[j], full, n)
+    }
+
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale(x: &mut [f32], s: f32) {
+        let n = x.len();
+        let full = n & !(LANES - 1);
+        let sv = _mm256_set1_ps(s);
+        let mut i = 0;
+        while i < full {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(x.as_mut_ptr().add(i), _mm256_mul_ps(xv, sv));
+            i += LANES;
+        }
+        for v in &mut x[full..] {
+            *v *= s;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2; slices share one length.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_gain(x: &[f32], inv: f32, gain: &[f32], out: &mut [f32]) {
+        let n = x.len();
+        let full = n & !(LANES - 1);
+        let iv = _mm256_set1_ps(inv);
+        let mut i = 0;
+        while i < full {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            let gv = _mm256_loadu_ps(gain.as_ptr().add(i));
+            let r = _mm256_mul_ps(_mm256_mul_ps(xv, iv), gv);
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), r);
+            i += LANES;
+        }
+        for j in full..n {
+            out[j] = (x[j] * inv) * gain[j];
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2; `head.len() == 2 * sin.len() == 2 * cos.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn rope_rotate(head: &mut [f32], sin: &[f32], cos: &[f32]) {
+        let np = sin.len();
+        let full_pairs = np & !3; // 4 pairs = 8 floats per iteration
+        let mut p = 0;
+        while p < full_pairs {
+            // Duplicate each pair's sin/cos across its two lanes; negate
+            // the even lane's sin so one add computes both rotations:
+            //   even: a*c + b*(-s)   odd: b*c + a*s
+            let mut cd = [0f32; LANES];
+            let mut sd = [0f32; LANES];
+            for j in 0..4 {
+                cd[2 * j] = cos[p + j];
+                cd[2 * j + 1] = cos[p + j];
+                sd[2 * j] = -sin[p + j];
+                sd[2 * j + 1] = sin[p + j];
+            }
+            let xv = _mm256_loadu_ps(head.as_ptr().add(2 * p));
+            let swapped = _mm256_permute_ps::<0b1011_0001>(xv); // [b0 a0 b1 a1 ...]
+            let cv = _mm256_loadu_ps(cd.as_ptr());
+            let sv = _mm256_loadu_ps(sd.as_ptr());
+            let r = _mm256_add_ps(_mm256_mul_ps(xv, cv), _mm256_mul_ps(swapped, sv));
+            _mm256_storeu_ps(head.as_mut_ptr().add(2 * p), r);
+            p += 4;
+        }
+        for j in full_pairs..np {
+            let (a, b) = (head[2 * j], head[2 * j + 1]);
+            head[2 * j] = a * cos[j] - b * sin[j];
+            head[2 * j + 1] = a * sin[j] + b * cos[j];
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2; slices share one length.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn silu_mul(gate: &[f32], up: &[f32], out: &mut [f32]) {
+        let n = gate.len();
+        let full = n & !(LANES - 1);
+        let one = _mm256_set1_ps(1.0);
+        let mut i = 0;
+        while i < full {
+            // exp stays scalar libm (vectorizing it would change bits).
+            let mut e = [0f32; LANES];
+            for (j, ev) in e.iter_mut().enumerate() {
+                *ev = (-gate[i + j]).exp();
+            }
+            let gv = _mm256_loadu_ps(gate.as_ptr().add(i));
+            let uv = _mm256_loadu_ps(up.as_ptr().add(i));
+            let ev = _mm256_loadu_ps(e.as_ptr());
+            let den = _mm256_add_ps(one, ev);
+            let r = _mm256_mul_ps(_mm256_div_ps(gv, den), uv);
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), r);
+            i += LANES;
+        }
+        for j in full..n {
+            out[j] = (gate[j] / (1.0 + (-gate[j]).exp())) * up[j];
+        }
+    }
+}
+
+// ---- NEON tier ---------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{f16_to_f32_fast, reduce_lanes, LANES};
+    use core::arch::aarch64::*;
+
+    /// Spill the two 4-lane accumulators (lanes 0–3 / 4–7), fold the tail
+    /// into its lanes, and reduce in the shared order.
+    ///
+    /// # Safety
+    /// Requires NEON.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn finish(
+        lo: float32x4_t,
+        hi: float32x4_t,
+        tail: impl Fn(usize) -> f32,
+        full: usize,
+        n: usize,
+    ) -> f32 {
+        let mut lanes = [0f32; LANES];
+        vst1q_f32(lanes.as_mut_ptr(), lo);
+        vst1q_f32(lanes.as_mut_ptr().add(4), hi);
+        for j in full..n {
+            lanes[j - full] += tail(j);
+        }
+        reduce_lanes(&lanes)
+    }
+
+    /// # Safety
+    /// Requires NEON (callers dispatch on runtime detection).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let full = n & !(LANES - 1);
+        let mut lo = vdupq_n_f32(0.0);
+        let mut hi = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < full {
+            // Separate mul + add (never vfmaq: FMA would skip the
+            // intermediate rounding the scalar path performs).
+            lo = vaddq_f32(lo, vmulq_f32(vld1q_f32(a.as_ptr().add(i)), vld1q_f32(b.as_ptr().add(i))));
+            hi = vaddq_f32(
+                hi,
+                vmulq_f32(vld1q_f32(a.as_ptr().add(i + 4)), vld1q_f32(b.as_ptr().add(i + 4))),
+            );
+            i += LANES;
+        }
+        finish(lo, hi, |j| a[j] * b[j], full, n)
+    }
+
+    /// Table-decode 4 consecutive f16 words into a vector (exact IEEE
+    /// widening, same bits as the scalar path).
+    ///
+    /// # Safety
+    /// Requires NEON; `p` must point at 4 readable `u16`s.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn decode4(p: *const u16) -> float32x4_t {
+        let tmp = [
+            f16_to_f32_fast(*p),
+            f16_to_f32_fast(*p.add(1)),
+            f16_to_f32_fast(*p.add(2)),
+            f16_to_f32_fast(*p.add(3)),
+        ];
+        vld1q_f32(tmp.as_ptr())
+    }
+
+    /// # Safety
+    /// Requires NEON.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_f16(a: &[f32], b: &[u16]) -> f32 {
+        let n = a.len();
+        let full = n & !(LANES - 1);
+        let mut lo = vdupq_n_f32(0.0);
+        let mut hi = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < full {
+            lo = vaddq_f32(lo, vmulq_f32(vld1q_f32(a.as_ptr().add(i)), decode4(b.as_ptr().add(i))));
+            hi = vaddq_f32(
+                hi,
+                vmulq_f32(vld1q_f32(a.as_ptr().add(i + 4)), decode4(b.as_ptr().add(i + 4))),
+            );
+            i += LANES;
+        }
+        finish(lo, hi, |j| a[j] * f16_to_f32_fast(b[j]), full, n)
+    }
+
+    /// # Safety
+    /// Requires NEON; `w.len() == x.len() * 4`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_f32_le(w: &[u8], x: &[f32]) -> f32 {
+        let n = x.len();
+        let full = n & !(LANES - 1);
+        let mut lo = vdupq_n_f32(0.0);
+        let mut hi = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < full {
+            // AArch64 is little-endian: the byte stream is the f32 array
+            // (vld1q_f32 has no alignment requirement).
+            let w0 = vld1q_f32(w.as_ptr().add(i * 4) as *const f32);
+            let w1 = vld1q_f32(w.as_ptr().add((i + 4) * 4) as *const f32);
+            lo = vaddq_f32(lo, vmulq_f32(w0, vld1q_f32(x.as_ptr().add(i))));
+            hi = vaddq_f32(hi, vmulq_f32(w1, vld1q_f32(x.as_ptr().add(i + 4))));
+            i += LANES;
+        }
+        finish(
+            lo,
+            hi,
+            |j| {
+                let c = &w[j * 4..j * 4 + 4];
+                f32::from_le_bytes([c[0], c[1], c[2], c[3]]) * x[j]
+            },
+            full,
+            n,
+        )
+    }
+
+    /// # Safety
+    /// Requires NEON; `w.len() == x.len() * 2`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_f16_le(w: &[u8], x: &[f32]) -> f32 {
+        let n = x.len();
+        let full = n & !(LANES - 1);
+        let mut lo = vdupq_n_f32(0.0);
+        let mut hi = vdupq_n_f32(0.0);
+        let decode_at = |j: usize| {
+            let c = &w[j * 2..j * 2 + 2];
+            f16_to_f32_fast(u16::from_le_bytes([c[0], c[1]]))
+        };
+        let mut i = 0;
+        while i < full {
+            let w0 = [decode_at(i), decode_at(i + 1), decode_at(i + 2), decode_at(i + 3)];
+            let w1 = [decode_at(i + 4), decode_at(i + 5), decode_at(i + 6), decode_at(i + 7)];
+            lo = vaddq_f32(lo, vmulq_f32(vld1q_f32(w0.as_ptr()), vld1q_f32(x.as_ptr().add(i))));
+            hi = vaddq_f32(hi, vmulq_f32(vld1q_f32(w1.as_ptr()), vld1q_f32(x.as_ptr().add(i + 4))));
+            i += LANES;
+        }
+        finish(lo, hi, |j| decode_at(j) * x[j], full, n)
+    }
+
+    /// # Safety
+    /// Requires NEON; `x.len() == y.len()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let full = n & !3;
+        let av = vdupq_n_f32(alpha);
+        let mut i = 0;
+        while i < full {
+            let yv = vld1q_f32(y.as_ptr().add(i));
+            let xv = vld1q_f32(x.as_ptr().add(i));
+            vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(yv, vmulq_f32(av, xv)));
+            i += 4;
+        }
+        for j in full..n {
+            y[j] += alpha * x[j];
+        }
+    }
+
+    /// # Safety
+    /// Requires NEON; `x.len() == y.len()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_f16(alpha: f32, x: &[u16], y: &mut [f32]) {
+        let n = x.len();
+        let full = n & !3;
+        let av = vdupq_n_f32(alpha);
+        let mut i = 0;
+        while i < full {
+            let yv = vld1q_f32(y.as_ptr().add(i));
+            let xv = decode4(x.as_ptr().add(i));
+            vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(yv, vmulq_f32(av, xv)));
+            i += 4;
+        }
+        for j in full..n {
+            y[j] += alpha * f16_to_f32_fast(x[j]);
+        }
+    }
+
+    /// # Safety
+    /// Requires NEON.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sum_squares(x: &[f32]) -> f32 {
+        let n = x.len();
+        let full = n & !(LANES - 1);
+        let mut lo = vdupq_n_f32(0.0);
+        let mut hi = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < full {
+            let x0 = vld1q_f32(x.as_ptr().add(i));
+            let x1 = vld1q_f32(x.as_ptr().add(i + 4));
+            lo = vaddq_f32(lo, vmulq_f32(x0, x0));
+            hi = vaddq_f32(hi, vmulq_f32(x1, x1));
+            i += LANES;
+        }
+        finish(lo, hi, |j| x[j] * x[j], full, n)
+    }
+
+    /// # Safety
+    /// Requires NEON.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn max_val(x: &[f32]) -> f32 {
+        let n = x.len();
+        let full = n & !3;
+        let mut acc = vdupq_n_f32(f32::NEG_INFINITY);
+        let mut i = 0;
+        while i < full {
+            acc = vmaxq_f32(acc, vld1q_f32(x.as_ptr().add(i)));
+            i += 4;
+        }
+        let mut lanes = [0f32; 4];
+        vst1q_f32(lanes.as_mut_ptr(), acc);
+        let mut m = lanes.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        for &v in &x[full..] {
+            m = m.max(v);
+        }
+        m
+    }
+
+    /// # Safety
+    /// Requires NEON.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sum(x: &[f32]) -> f32 {
+        let n = x.len();
+        let full = n & !(LANES - 1);
+        let mut lo = vdupq_n_f32(0.0);
+        let mut hi = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < full {
+            lo = vaddq_f32(lo, vld1q_f32(x.as_ptr().add(i)));
+            hi = vaddq_f32(hi, vld1q_f32(x.as_ptr().add(i + 4)));
+            i += LANES;
+        }
+        finish(lo, hi, |j| x[j], full, n)
+    }
+
+    /// # Safety
+    /// Requires NEON.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale(x: &mut [f32], s: f32) {
+        let n = x.len();
+        let full = n & !3;
+        let sv = vdupq_n_f32(s);
+        let mut i = 0;
+        while i < full {
+            let xv = vld1q_f32(x.as_ptr().add(i));
+            vst1q_f32(x.as_mut_ptr().add(i), vmulq_f32(xv, sv));
+            i += 4;
+        }
+        for v in &mut x[full..] {
+            *v *= s;
+        }
+    }
+
+    /// # Safety
+    /// Requires NEON; slices share one length.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale_gain(x: &[f32], inv: f32, gain: &[f32], out: &mut [f32]) {
+        let n = x.len();
+        let full = n & !3;
+        let iv = vdupq_n_f32(inv);
+        let mut i = 0;
+        while i < full {
+            let xv = vld1q_f32(x.as_ptr().add(i));
+            let gv = vld1q_f32(gain.as_ptr().add(i));
+            vst1q_f32(out.as_mut_ptr().add(i), vmulq_f32(vmulq_f32(xv, iv), gv));
+            i += 4;
+        }
+        for j in full..n {
+            out[j] = (x[j] * inv) * gain[j];
+        }
+    }
+
+    /// # Safety
+    /// Requires NEON; `head.len() == 2 * sin.len() == 2 * cos.len()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn rope_rotate(head: &mut [f32], sin: &[f32], cos: &[f32]) {
+        let np = sin.len();
+        let full_pairs = np & !1; // 2 pairs = 4 floats per iteration
+        let mut p = 0;
+        while p < full_pairs {
+            // even: a*c + b*(-s)   odd: b*c + a*s (see the AVX2 tier).
+            let cd = [cos[p], cos[p], cos[p + 1], cos[p + 1]];
+            let sd = [-sin[p], sin[p], -sin[p + 1], sin[p + 1]];
+            let xv = vld1q_f32(head.as_ptr().add(2 * p));
+            let swapped = vrev64q_f32(xv); // [b0 a0 b1 a1]
+            let r = vaddq_f32(vmulq_f32(xv, vld1q_f32(cd.as_ptr())), vmulq_f32(swapped, vld1q_f32(sd.as_ptr())));
+            vst1q_f32(head.as_mut_ptr().add(2 * p), r);
+            p += 2;
+        }
+        for j in full_pairs..np {
+            let (a, b) = (head[2 * j], head[2 * j + 1]);
+            head[2 * j] = a * cos[j] - b * sin[j];
+            head[2 * j + 1] = a * sin[j] + b * cos[j];
+        }
+    }
+
+    /// # Safety
+    /// Requires NEON; slices share one length.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn silu_mul(gate: &[f32], up: &[f32], out: &mut [f32]) {
+        let n = gate.len();
+        let full = n & !3;
+        let one = vdupq_n_f32(1.0);
+        let mut i = 0;
+        while i < full {
+            // exp stays scalar libm (vectorizing it would change bits).
+            let e = [
+                (-gate[i]).exp(),
+                (-gate[i + 1]).exp(),
+                (-gate[i + 2]).exp(),
+                (-gate[i + 3]).exp(),
+            ];
+            let gv = vld1q_f32(gate.as_ptr().add(i));
+            let uv = vld1q_f32(up.as_ptr().add(i));
+            let den = vaddq_f32(one, vld1q_f32(e.as_ptr()));
+            vst1q_f32(out.as_mut_ptr().add(i), vmulq_f32(vdivq_f32(gv, den), uv));
+            i += 4;
+        }
+        for j in full..n {
+            out[j] = (gate[j] / (1.0 + (-gate[j]).exp())) * up[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{available_levels, with_level, SimdLevel};
+    use super::*;
+    use crate::util::{f32_to_f16, Rng};
+
+    fn vecf(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_gaussian()).collect()
+    }
+
+    /// Every primitive, every available level, across ragged lengths:
+    /// vector output must equal the scalar reference bit-for-bit.
+    #[test]
+    fn all_primitives_match_scalar_bitwise() {
+        let mut rng = Rng::new(42);
+        for n in [1usize, 7, 8, 9, 16, 63, 64, 65, 200] {
+            let a = vecf(&mut rng, n);
+            let b = vecf(&mut rng, n);
+            let h: Vec<u16> = b.iter().map(|&v| f32_to_f16(v)).collect();
+            let wb: Vec<u8> = b.iter().flat_map(|v| v.to_le_bytes()).collect();
+            let hb: Vec<u8> = h.iter().flat_map(|v| v.to_le_bytes()).collect();
+            let gain = vecf(&mut rng, n);
+            let np = n / 2;
+            let sin: Vec<f32> = (0..np).map(|i| (i as f32 * 0.37).sin()).collect();
+            let cos: Vec<f32> = (0..np).map(|i| (i as f32 * 0.37).cos()).collect();
+
+            let reference = with_level(SimdLevel::Scalar, || {
+                let mut y = gain.clone();
+                axpy_f32(0.7, &a, &mut y);
+                let mut y16 = gain.clone();
+                axpy_f16(0.7, &h, &mut y16);
+                let mut sc = a.clone();
+                scale(&mut sc, 1.25);
+                let mut sg = vec![0f32; n];
+                scale_gain(&a, 0.5, &gain, &mut sg);
+                let mut rot = a[..2 * np].to_vec();
+                rope_rotate(&mut rot, &sin, &cos);
+                let mut sm = vec![0f32; n];
+                silu_mul(&a, &b, &mut sm);
+                // Nested tuples: std only implements Eq/Debug up to arity 12.
+                (
+                    (
+                        dot_f32(&a, &b),
+                        dot_f16(&a, &h),
+                        dot_f32_le(&wb, &a),
+                        dot_f16_le(&hb, &a),
+                        sum_squares(&a),
+                        max_val(&a),
+                        sum(&a),
+                    ),
+                    (y, y16, sc, sg, rot, sm),
+                )
+            });
+            for level in available_levels() {
+                let got = with_level(level, || {
+                    let mut y = gain.clone();
+                    axpy_f32(0.7, &a, &mut y);
+                    let mut y16 = gain.clone();
+                    axpy_f16(0.7, &h, &mut y16);
+                    let mut sc = a.clone();
+                    scale(&mut sc, 1.25);
+                    let mut sg = vec![0f32; n];
+                    scale_gain(&a, 0.5, &gain, &mut sg);
+                    let mut rot = a[..2 * np].to_vec();
+                    rope_rotate(&mut rot, &sin, &cos);
+                    let mut sm = vec![0f32; n];
+                    silu_mul(&a, &b, &mut sm);
+                    (
+                        (
+                            dot_f32(&a, &b),
+                            dot_f16(&a, &h),
+                            dot_f32_le(&wb, &a),
+                            dot_f16_le(&hb, &a),
+                            sum_squares(&a),
+                            max_val(&a),
+                            sum(&a),
+                        ),
+                        (y, y16, sc, sg, rot, sm),
+                    )
+                });
+                assert_eq!(got, reference, "n={n} level={}", level.name());
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matches_f64_reference_closely() {
+        let mut rng = Rng::new(7);
+        let a = vecf(&mut rng, 301);
+        let b = vecf(&mut rng, 301);
+        let want: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        assert!((dot_f32(&a, &b) as f64 - want).abs() < 1e-3);
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        assert_eq!(dot_f32(&[], &[]), 0.0);
+        assert_eq!(sum(&[]), 0.0);
+        assert_eq!(max_val(&[]), f32::NEG_INFINITY);
+        assert_eq!(dot_f32(&[2.0], &[3.0]), 6.0);
+    }
+}

@@ -261,6 +261,51 @@ impl ThreadPool {
         self.execute(&f, queues, n_chunks, true);
     }
 
+    /// Fork-join over `n_rows` row pairs of two output buffers: row `r`
+    /// gets exclusive `&mut` access to `a[r * a_stride..][..a_stride]`
+    /// and `b[r * b_stride..][..b_stride]`. This is the safe
+    /// disjoint-write shim the `#[deny(unsafe_code)]` KV arena uses for
+    /// head-parallel attention (per-head score rows + per-head output
+    /// slices). Placement-aware like [`ThreadPool::parallel_for_placed`];
+    /// like it, what each row computes is placement-independent.
+    pub fn parallel_for_disjoint_rows2<N, F>(
+        &self,
+        n_rows: usize,
+        node_of: N,
+        a: &mut [f32],
+        a_stride: usize,
+        b: &mut [f32],
+        b_stride: usize,
+        f: F,
+    ) where
+        N: Fn(usize) -> usize,
+        F: Fn(usize, &mut [f32], &mut [f32]) + Send + Sync,
+    {
+        assert!(a.len() >= n_rows * a_stride, "rows2: a holds {} < {n_rows} x {a_stride}", a.len());
+        assert!(b.len() >= n_rows * b_stride, "rows2: b holds {} < {n_rows} x {b_stride}", b.len());
+        #[derive(Clone, Copy)]
+        struct SendPtr(*mut f32);
+        // SAFETY: every access through the pointer targets a distinct row
+        // (the pool claims each row id exactly once), so threads never
+        // alias each other's elements.
+        unsafe impl Send for SendPtr {}
+        // SAFETY: as above — concurrent uses touch disjoint rows only.
+        unsafe impl Sync for SendPtr {}
+        let ap = SendPtr(a.as_mut_ptr());
+        let bp = SendPtr(b.as_mut_ptr());
+        self.parallel_for_placed(n_rows, node_of, |r| {
+            // SAFETY: row `r` is claimed by exactly one thread per job,
+            // rows are disjoint by construction (stride-sized, in-bounds
+            // by the asserts above), and the submitter blocks until every
+            // row completes — so each `&mut` is exclusive and the borrows
+            // of `a`/`b` outlive all uses.
+            let ar = unsafe { std::slice::from_raw_parts_mut(ap.0.add(r * a_stride), a_stride) };
+            // SAFETY: as above, for `b`'s row `r`.
+            let br = unsafe { std::slice::from_raw_parts_mut(bp.0.add(r * b_stride), b_stride) };
+            f(r, ar, br);
+        });
+    }
+
     /// Run `f` once on a thread belonging to `node` (modulo the node
     /// count) and wait for it — used to first-touch weight and KV slabs
     /// from their owning node. Runs inline on the caller when the pool is
@@ -573,6 +618,29 @@ mod tests {
         let stats = pool.numa_stats();
         assert_eq!(stats.chunks, vec![1, 1]);
         assert_eq!(stats.steals, 0);
+    }
+
+    #[test]
+    fn disjoint_rows_pass_exclusive_row_slices() {
+        for threads in [1, 4] {
+            let pool = ThreadPool::new(threads);
+            let mut a = vec![0f32; 8 * 16];
+            let mut b = vec![0f32; 8 * 4];
+            pool.parallel_for_disjoint_rows2(8, |r| r, &mut a, 16, &mut b, 4, |r, ar, br| {
+                assert_eq!(ar.len(), 16);
+                assert_eq!(br.len(), 4);
+                for v in ar.iter_mut() {
+                    *v += 1.0 + r as f32;
+                }
+                for v in br.iter_mut() {
+                    *v -= 1.0 + r as f32;
+                }
+            });
+            for r in 0..8 {
+                assert!(a[r * 16..(r + 1) * 16].iter().all(|&v| v == 1.0 + r as f32));
+                assert!(b[r * 4..(r + 1) * 4].iter().all(|&v| v == -1.0 - r as f32));
+            }
+        }
     }
 
     #[test]

@@ -28,20 +28,20 @@ pub fn round_up(a: usize, b: usize) -> usize {
 /// Numerically-stable in-place softmax. Shared by the transformer's
 /// attention ops (`model::ops` re-exports it) and the KV arena's fused
 /// attend — one implementation, so the two paths stay bit-identical.
+///
+/// Built from the [`crate::simd::ops`] primitives: vector max, scalar
+/// libm `exp` (a vector polynomial would change bits), lane-blocked sum,
+/// vector scale — so the result is bit-identical across SIMD tiers.
 pub fn softmax(x: &mut [f32]) {
     if x.is_empty() {
         return;
     }
-    let max = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let mut sum = 0f32;
+    let max = crate::simd::ops::max_val(x);
     for v in x.iter_mut() {
         *v = (*v - max).exp();
-        sum += *v;
     }
-    let inv = 1.0 / sum;
-    for v in x.iter_mut() {
-        *v *= inv;
-    }
+    let inv = 1.0 / crate::simd::ops::sum(x);
+    crate::simd::ops::scale(x, inv);
 }
 
 #[cfg(test)]

@@ -4,9 +4,9 @@
 
 use crate::kernels::quant::TernaryWeights;
 use crate::kernels::{
-    Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
+    simd, Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor,
+    QuantType,
 };
-use pallas_core::util::f16::f16_to_f32_fast;
 use pallas_core::util::{f16_to_f32, f32_to_f16};
 
 pub struct F16Kernel;
@@ -56,6 +56,7 @@ impl Kernel for F16Kernel {
             PreparedRow::Raw(x) => x,
             _ => panic!("F16 expects raw activations"),
         };
+        simd::note_call(simd::active_level());
         let row_bytes = t.k * 2;
         for (o, r) in out.iter_mut().zip(rows) {
             let wrow = &t.data[r * row_bytes..(r + 1) * row_bytes];
@@ -64,17 +65,14 @@ impl Kernel for F16Kernel {
     }
 }
 
-/// Inner loop: widen f16→f32 (table-driven, see util::f16 §Perf note)
-/// and FMA, 4 accumulators to break the dependency chain (mirrors
-/// llama.cpp's `ggml_vec_dot_f16` + `ggml_table_f32_f16`).
+/// Inner loop: widen f16→f32 in the loop (F16C `vcvtph2ps` on AVX2, the
+/// 64K table elsewhere — both exact IEEE widenings) and multiply-add via
+/// the shared lane-blocked primitive, so every tier is bit-identical.
+/// Mirrors llama.cpp's `ggml_vec_dot_f16` (+ `ggml_table_f32_f16` for
+/// the table fallback). Also the LM head's inner loop (`DenseF16`).
 #[inline]
 pub fn dot_f16(wrow: &[u8], x: &[f32]) -> f32 {
-    let mut acc = [0f32; 4];
-    for (i, c) in wrow.chunks_exact(2).enumerate() {
-        let w = f16_to_f32_fast(u16::from_le_bytes([c[0], c[1]]));
-        acc[i & 3] += w * x[i];
-    }
-    acc[0] + acc[1] + acc[2] + acc[3]
+    pallas_core::simd::ops::dot_f16_le(wrow, x)
 }
 
 #[cfg(test)]

@@ -5,7 +5,8 @@
 
 use crate::kernels::quant::TernaryWeights;
 use crate::kernels::{
-    Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor, QuantType,
+    simd, Kernel, KernelClass, KernelInfo, PrepareKind, PreparedRow, PreparedRowMut, QTensor,
+    QuantType,
 };
 
 pub struct F32Kernel;
@@ -55,6 +56,7 @@ impl Kernel for F32Kernel {
             PreparedRow::Raw(x) => x,
             _ => panic!("F32 expects raw activations"),
         };
+        simd::note_call(simd::active_level());
         let row_bytes = t.k * 4;
         for (o, r) in out.iter_mut().zip(rows) {
             let wrow = &t.data[r * row_bytes..(r + 1) * row_bytes];
@@ -63,15 +65,12 @@ impl Kernel for F32Kernel {
     }
 }
 
-/// 4-way unrolled f32 dot product over little-endian weight bytes.
+/// f32 dot product over little-endian weight bytes — the shared
+/// lane-blocked primitive, so the vector tiers (AVX2/NEON loads straight
+/// off the byte stream) are bit-identical to the scalar reference.
 #[inline]
 pub fn dot_f32_bytes(wrow: &[u8], x: &[f32]) -> f32 {
-    let mut acc = [0f32; 4];
-    for (i, c) in wrow.chunks_exact(4).enumerate() {
-        let w = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
-        acc[i & 3] += w * x[i];
-    }
-    acc[0] + acc[1] + acc[2] + acc[3]
+    pallas_core::simd::ops::dot_f32_le(wrow, x)
 }
 
 #[cfg(test)]
@@ -93,11 +92,14 @@ mod tests {
         kern.gemv(&packed, &p, &mut out);
         let wd = t.dequantize();
         for r in 0..4 {
-            let mut acc = [0f32; 4];
+            // The shared 8-lane accumulation order of simd::ops.
+            let mut acc = [0f32; 8];
             for i in 0..64 {
-                acc[i & 3] += wd[r * 64 + i] * x[i];
+                acc[i & 7] += wd[r * 64 + i] * x[i];
             }
-            assert_eq!(out[r], acc[0] + acc[1] + acc[2] + acc[3]);
+            let a = (acc[0] + acc[4]) + (acc[1] + acc[5]);
+            let b = (acc[2] + acc[6]) + (acc[3] + acc[7]);
+            assert_eq!(out[r], a + b);
         }
     }
 }

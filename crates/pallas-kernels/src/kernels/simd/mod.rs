@@ -1,23 +1,15 @@
-//! Runtime SIMD dispatch for the mpGEMM kernel library.
+//! SIMD layer of the mpGEMM kernel library.
 //!
 //! The paper's speedups rest on two instruction families: 16-entry
 //! table *gathers* (`vpshufb` on AVX2, `tbl`/`vqtbl1q_u8` on NEON) for
 //! the LUT kernels, and widening `maddubs`-style multiply-adds for the
-//! MAD kernels. This module owns the process-wide decision of whether
-//! the explicit vector implementations ([`avx2`], [`neon`]) or the
-//! portable scalar loops run:
-//!
-//! * [`SimdLevel`] names the tiers; [`detect`] probes the CPU at run
-//!   time (`is_x86_feature_detected!` / `is_aarch64_feature_detected!`).
-//! * The active level initializes lazily from the `RUST_PALLAS_SIMD`
-//!   environment variable (`auto`/`scalar`/`avx2`/`neon`), defaulting
-//!   to the best detected tier; the CLI `--simd` flag calls
-//!   [`set_level`]. Requests the host cannot honor clamp to [`detect`].
-//! * Every vectorized kernel's `gemv_rows` reports through
-//!   [`note_call`], so `Engine::summary` can show per-level call counts.
-//! * Tests and the tuner force a level for a scoped region with
-//!   [`with_level`]; a process-wide mutex serializes forcing so
-//!   concurrent tests cannot observe each other's override.
+//! MAD kernels. The explicit vector implementations live in [`avx2`]
+//! and [`neon`]; which one runs is the process-wide dispatch decision
+//! owned by [`pallas_core::simd`] since the attention/ops vector layer
+//! joined the kernels as a dispatch consumer — everything is re-exported
+//! here under the historical paths ([`SimdLevel`], [`active_level`],
+//! [`with_level`], [`note_call`], …), so kernel code and embedders are
+//! unaffected by the move.
 //!
 //! The vector paths are **bit-identical** to the scalar ones by
 //! construction: all inner accumulation is integer (reassociation-safe),
@@ -25,59 +17,15 @@
 //! the `_0` LUT variants — replicate the scalar block order exactly
 //! (see `rust/tests/simd_identity.rs`).
 
-use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
-use std::sync::Mutex;
+pub use pallas_core::simd::{
+    active_level, available_levels, call_counts, clamp, detect, note_call, set_level, usable,
+    with_level, SimdLevel,
+};
 
 #[cfg(target_arch = "x86_64")]
 pub mod avx2;
 #[cfg(target_arch = "aarch64")]
 pub mod neon;
-
-/// A SIMD implementation tier. `Scalar` is always available; the vector
-/// tiers require both compile-target support and runtime CPU detection.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
-#[repr(u8)]
-pub enum SimdLevel {
-    /// Portable scalar loops (the reference implementation).
-    Scalar = 0,
-    /// x86-64 AVX2: `_mm_shuffle_epi8` LUT gathers, `maddubs` MADs.
-    Avx2 = 1,
-    /// AArch64 NEON: `vqtbl1q_u8` LUT gathers.
-    Neon = 2,
-}
-
-impl SimdLevel {
-    /// Every tier, scalar first.
-    pub const ALL: [SimdLevel; 3] = [SimdLevel::Scalar, SimdLevel::Avx2, SimdLevel::Neon];
-
-    /// Stable lowercase name (used in profiles, metrics and the CLI).
-    pub fn name(self) -> &'static str {
-        match self {
-            SimdLevel::Scalar => "scalar",
-            SimdLevel::Avx2 => "avx2",
-            SimdLevel::Neon => "neon",
-        }
-    }
-
-    /// Parse a [`name`](Self::name); `None` for unknown strings
-    /// (callers treat `"auto"` separately).
-    pub fn parse(s: &str) -> Option<SimdLevel> {
-        match s.to_ascii_lowercase().as_str() {
-            "scalar" => Some(SimdLevel::Scalar),
-            "avx2" => Some(SimdLevel::Avx2),
-            "neon" => Some(SimdLevel::Neon),
-            _ => None,
-        }
-    }
-
-    fn from_u8(v: u8) -> SimdLevel {
-        match v {
-            1 => SimdLevel::Avx2,
-            2 => SimdLevel::Neon,
-            _ => SimdLevel::Scalar,
-        }
-    }
-}
 
 /// The vector tiers the *compile target* can reach for the vectorized
 /// kernels (TL1/TL2/I2_S/ELUT). Scalar-only on other architectures.
@@ -91,165 +39,3 @@ pub const KERNEL_LEVELS: &[SimdLevel] = &[SimdLevel::Scalar, SimdLevel::Neon];
 /// kernels (TL1/TL2/I2_S/ELUT). Scalar-only on other architectures.
 #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
 pub const KERNEL_LEVELS: &[SimdLevel] = &[SimdLevel::Scalar];
-
-/// Probe the CPU for the best tier this binary can use.
-pub fn detect() -> SimdLevel {
-    #[cfg(target_arch = "x86_64")]
-    {
-        if std::arch::is_x86_feature_detected!("avx2") {
-            return SimdLevel::Avx2;
-        }
-    }
-    #[cfg(target_arch = "aarch64")]
-    {
-        if std::arch::is_aarch64_feature_detected!("neon") {
-            return SimdLevel::Neon;
-        }
-    }
-    SimdLevel::Scalar
-}
-
-/// Clamp a requested level to what this host actually supports:
-/// unsatisfiable requests (e.g. `avx2` on a non-AVX2 machine, `neon`
-/// on x86) degrade to [`detect`]'s answer, never the other way around.
-pub fn clamp(level: SimdLevel) -> SimdLevel {
-    if level == SimdLevel::Scalar || level == detect() {
-        level
-    } else {
-        detect()
-    }
-}
-
-const UNSET: u8 = 0xff;
-static ACTIVE: AtomicU8 = AtomicU8::new(UNSET);
-static FORCE_LOCK: Mutex<()> = Mutex::new(());
-static CALLS: [AtomicU64; 3] = [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
-
-fn init_from_env() -> SimdLevel {
-    match std::env::var("RUST_PALLAS_SIMD") {
-        Ok(s) => match SimdLevel::parse(&s) {
-            Some(level) => clamp(level),
-            None => detect(), // "auto" and unknown values alike
-        },
-        Err(_) => detect(),
-    }
-}
-
-/// The level the kernels dispatch on right now. Lazily initialized from
-/// `RUST_PALLAS_SIMD` (or CPU detection) on first use.
-pub fn active_level() -> SimdLevel {
-    let v = ACTIVE.load(Ordering::Relaxed);
-    if v != UNSET {
-        return SimdLevel::from_u8(v);
-    }
-    let init = init_from_env();
-    // Keep whatever a racing set_level installed first.
-    let _ = ACTIVE.compare_exchange(UNSET, init as u8, Ordering::Relaxed, Ordering::Relaxed);
-    SimdLevel::from_u8(ACTIVE.load(Ordering::Relaxed))
-}
-
-/// Set the process-wide dispatch level (the CLI `--simd` flag). Returns
-/// the level actually installed after host clamping.
-pub fn set_level(level: SimdLevel) -> SimdLevel {
-    let applied = clamp(level);
-    ACTIVE.store(applied as u8, Ordering::Relaxed);
-    applied
-}
-
-/// Whether `level` can run under the *current* dispatch state: scalar
-/// always can; a vector tier only when it is the active level. A forced
-/// scalar override (env/CLI) therefore makes vector tiers unusable —
-/// exactly the semantics profile degradation needs.
-pub fn usable(level: SimdLevel) -> bool {
-    level == SimdLevel::Scalar || level == active_level()
-}
-
-/// The levels worth measuring on this host right now: scalar, plus the
-/// active vector tier when one is enabled.
-pub fn available_levels() -> Vec<SimdLevel> {
-    let active = active_level();
-    if active == SimdLevel::Scalar {
-        vec![SimdLevel::Scalar]
-    } else {
-        vec![SimdLevel::Scalar, active]
-    }
-}
-
-/// Run `f` with the dispatch level forced to `level` (host-clamped),
-/// restoring the previous level afterwards — panic-safe, and serialized
-/// process-wide so concurrent forcing callers cannot interleave.
-pub fn with_level<R>(level: SimdLevel, f: impl FnOnce() -> R) -> R {
-    let _guard = FORCE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
-    struct Restore(u8);
-    impl Drop for Restore {
-        fn drop(&mut self) {
-            ACTIVE.store(self.0, Ordering::Relaxed);
-        }
-    }
-    let _restore = Restore(active_level() as u8);
-    ACTIVE.store(clamp(level) as u8, Ordering::Relaxed);
-    f()
-}
-
-/// Record one `gemv_rows` dispatch at `level` (vectorized kernels only).
-#[inline]
-pub fn note_call(level: SimdLevel) {
-    CALLS[level as usize].fetch_add(1, Ordering::Relaxed);
-}
-
-/// Cumulative `gemv_rows` dispatch counts, indexed `[scalar, avx2, neon]`.
-pub fn call_counts() -> [u64; 3] {
-    [
-        CALLS[0].load(Ordering::Relaxed),
-        CALLS[1].load(Ordering::Relaxed),
-        CALLS[2].load(Ordering::Relaxed),
-    ]
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn names_round_trip() {
-        for level in SimdLevel::ALL {
-            assert_eq!(SimdLevel::parse(level.name()), Some(level));
-        }
-        assert_eq!(SimdLevel::parse("AVX2"), Some(SimdLevel::Avx2));
-        assert_eq!(SimdLevel::parse("auto"), None);
-        assert_eq!(SimdLevel::parse("sse9"), None);
-    }
-
-    #[test]
-    fn clamp_never_exceeds_host() {
-        // Whatever the host, clamping the detected level is the identity
-        // and clamping Scalar is the identity.
-        assert_eq!(clamp(SimdLevel::Scalar), SimdLevel::Scalar);
-        assert_eq!(clamp(detect()), detect());
-        // Any request either sticks or degrades to the detected level.
-        for level in SimdLevel::ALL {
-            let c = clamp(level);
-            assert!(c == level || c == detect(), "{level:?} clamped to {c:?}");
-        }
-    }
-
-    #[test]
-    fn with_level_forces_and_restores() {
-        let before = active_level();
-        with_level(SimdLevel::Scalar, || {
-            assert_eq!(active_level(), SimdLevel::Scalar);
-            assert!(usable(SimdLevel::Scalar));
-            assert_eq!(available_levels(), vec![SimdLevel::Scalar]);
-        });
-        assert_eq!(active_level(), before);
-    }
-
-    #[test]
-    fn note_call_counts_monotonically() {
-        let before = call_counts();
-        note_call(SimdLevel::Scalar);
-        note_call(SimdLevel::Scalar);
-        let after = call_counts();
-        assert!(after[0] >= before[0] + 2);
-    }
-}

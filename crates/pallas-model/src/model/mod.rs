@@ -18,4 +18,4 @@ pub mod weights;
 pub use bitlinear::BitLinear;
 pub use config::ModelConfig;
 pub use sampling::{sample, SamplingParams};
-pub use transformer::{Session, Transformer};
+pub use transformer::{PhaseStats, Session, Transformer};

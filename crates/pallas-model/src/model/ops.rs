@@ -2,32 +2,52 @@
 //! These stay in f32 on every kernel path (BitNet b1.58 keeps them
 //! high-precision), so the lossless-equality property of I2_S/TL*_1 is
 //! decided entirely by the BitLinear projections.
+//!
+//! The arithmetic runs on the [`pallas_core::simd::ops`] primitives, so
+//! each op dispatches on the process-wide `SimdLevel` and is
+//! bit-identical across scalar/AVX2/NEON (the reductions share one
+//! lane-blocked order; transcendentals stay scalar libm in every tier).
+
+use pallas_core::simd::ops;
 
 /// RMSNorm: `out[i] = x[i] / rms(x) * gain[i]`.
 pub fn rmsnorm(x: &[f32], gain: &[f32], eps: f32, out: &mut [f32]) {
     debug_assert_eq!(x.len(), gain.len());
     debug_assert_eq!(x.len(), out.len());
-    let ss: f32 = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let ss = ops::sum_squares(x) / x.len() as f32;
     let inv = 1.0 / (ss + eps).sqrt();
-    for ((o, &xv), &g) in out.iter_mut().zip(x.iter()).zip(gain.iter()) {
-        *o = xv * inv * g;
-    }
+    ops::scale_gain(x, inv, gain, out);
 }
 
 /// In-place rotary position embedding over interleaved (even, odd) pairs
 /// of each head's dimensions, LLaMA convention.
+///
+/// The per-pair `sin`/`cos` tables depend on position only, so they are
+/// computed once per call into a stack block and reused across heads
+/// (the old per-head recompute did `n_heads` times the libm work), then
+/// each head rotates through the vectorized [`ops::rope_rotate`].
 pub fn rope(x: &mut [f32], n_heads: usize, head_dim: usize, pos: usize, theta: f32) {
     debug_assert_eq!(x.len(), n_heads * head_dim);
-    for h in 0..n_heads {
-        let head = &mut x[h * head_dim..(h + 1) * head_dim];
-        for i in 0..head_dim / 2 {
+    let half = head_dim / 2;
+    const BLOCK: usize = 64;
+    let mut sin = [0f32; BLOCK];
+    let mut cos = [0f32; BLOCK];
+    let mut p0 = 0usize;
+    while p0 < half {
+        let pn = BLOCK.min(half - p0);
+        for j in 0..pn {
+            let i = p0 + j;
             let freq = 1.0 / theta.powf(2.0 * i as f32 / head_dim as f32);
             let angle = pos as f32 * freq;
-            let (sin, cos) = angle.sin_cos();
-            let (a, b) = (head[2 * i], head[2 * i + 1]);
-            head[2 * i] = a * cos - b * sin;
-            head[2 * i + 1] = a * sin + b * cos;
+            let (s, c) = angle.sin_cos();
+            sin[j] = s;
+            cos[j] = c;
         }
+        for h in 0..n_heads {
+            let head = &mut x[h * head_dim + 2 * p0..h * head_dim + 2 * (p0 + pn)];
+            ops::rope_rotate(head, &sin[..pn], &cos[..pn]);
+        }
+        p0 += pn;
     }
 }
 
@@ -42,11 +62,12 @@ pub fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
-/// SwiGLU combine: `out[i] = silu(gate[i]) * up[i]`.
+/// SwiGLU combine: `out[i] = silu(gate[i]) * up[i]` (vectorized; `exp`
+/// stays scalar libm so every tier produces the same bits).
 pub fn swiglu(gate: &[f32], up: &[f32], out: &mut [f32]) {
-    for ((o, &g), &u) in out.iter_mut().zip(gate.iter()).zip(up.iter()) {
-        *o = silu(g) * u;
-    }
+    debug_assert_eq!(gate.len(), up.len());
+    debug_assert_eq!(gate.len(), out.len());
+    ops::silu_mul(gate, up, out);
 }
 
 #[cfg(test)]

@@ -14,13 +14,15 @@ use super::bitlinear::BitLinear;
 use super::config::ModelConfig;
 use super::ops::{rmsnorm, rope, swiglu};
 use super::weights::Checkpoint;
-use pallas_core::arena::{KvArena, KvDtype};
+use pallas_core::arena::{AttnWorkspace, KvArena, KvDtype};
 use pallas_kernels::kernels::baselines::f16_mad::dot_f16;
 use pallas_kernels::kernels::tuner::{DispatchPlan, Role};
 use pallas_kernels::kernels::{kernel_for, Dispatch, PrepareStats, PreparedActivations, QuantType};
 use pallas_core::threadpool::{shared_pool, ThreadPool};
 use pallas_core::util::f32_to_f16;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// High-precision (f16-stored) dense layer for the LM head.
 pub struct DenseF16 {
@@ -99,6 +101,11 @@ pub struct Session {
     pub capacity: usize,
     seq: u64,
     arena: Arc<Mutex<KvArena>>,
+    /// Persistent attention workspace (score buffer), reused across every
+    /// attend so steady-state decode attention allocates nothing. Behind
+    /// its own mutex because `attend` takes `&self` (the arena lock
+    /// protects KV pages, not per-session scratch).
+    attn_ws: Mutex<AttnWorkspace>,
 }
 
 impl Session {
@@ -117,14 +124,20 @@ impl Session {
         dtype: KvDtype,
     ) -> Session {
         let arena = KvArena::new(n_layers, kv_dim, capacity, dtype);
-        Session { pos: 0, capacity, seq: 0, arena: Arc::new(Mutex::new(arena)) }
+        Session {
+            pos: 0,
+            capacity,
+            seq: 0,
+            arena: Arc::new(Mutex::new(arena)),
+            attn_ws: Mutex::new(AttnWorkspace::new()),
+        }
     }
 
     /// A view into a shared arena: pages for `seq` are reserved there by
     /// the serving scheduler (or lazily on append when standalone code
     /// drives a shared arena directly).
     pub fn shared(arena: Arc<Mutex<KvArena>>, seq: u64, capacity: usize) -> Session {
-        Session { pos: 0, capacity, seq, arena }
+        Session { pos: 0, capacity, seq, arena, attn_ws: Mutex::new(AttnWorkspace::new()) }
     }
 
     fn append(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
@@ -138,7 +151,9 @@ impl Session {
     }
 
     /// Attention for one query row over this session's cached context
-    /// (positions `0..ctx_len`) in `layer`; see [`KvArena::attend`].
+    /// (positions `0..ctx_len`) in `layer`, through the session's
+    /// persistent workspace and (optionally) head-parallel on `pool`;
+    /// see [`KvArena::attend_with`].
     #[allow(clippy::too_many_arguments)]
     fn attend(
         &self,
@@ -150,11 +165,21 @@ impl Session {
         head_dim: usize,
         scale: f32,
         out: &mut [f32],
+        pool: Option<&ThreadPool>,
     ) {
-        self.arena
-            .lock()
-            .unwrap()
-            .attend(self.seq, layer, q, ctx_len, n_heads, n_kv_heads, head_dim, scale, out);
+        let mut ws = self.attn_ws.lock().unwrap();
+        self.arena.lock().unwrap().attend_with(
+            &mut ws, self.seq, layer, q, ctx_len, n_heads, n_kv_heads, head_dim, scale, out, pool,
+        );
+    }
+
+    /// Attention-workspace counters `(allocs, reuses)` — the observable
+    /// behind the "steady-state decode attention allocates nothing"
+    /// guarantee (allocs flatline once the context stops growing past
+    /// its previous peak; see `rust/tests/prepare.rs` style asserts).
+    pub fn attn_workspace_stats(&self) -> (u64, u64) {
+        let ws = self.attn_ws.lock().unwrap();
+        (ws.allocs(), ws.reuses())
     }
 
     /// Bytes of KV storage actually resident for this sequence (held
@@ -191,6 +216,30 @@ impl Drop for Session {
     }
 }
 
+/// Cumulative wall-clock split of the forward pass by phase: attention
+/// (the paged-KV fused attend), mpGEMM (every BitLinear projection and
+/// the f16 LM head, including their prepare-once preprocessing), and
+/// other ops (norms, RoPE, SwiGLU, residual/activation plumbing).
+/// Atomic so concurrent forward passes accumulate without a lock; the
+/// serving engine mirrors these into its metrics once per step.
+#[derive(Default)]
+pub struct PhaseStats {
+    attn_ns: AtomicU64,
+    gemm_ns: AtomicU64,
+    other_ns: AtomicU64,
+}
+
+impl PhaseStats {
+    /// `(attention, mpGEMM, other-ops)` microseconds accumulated so far.
+    pub fn snapshot_us(&self) -> (u64, u64, u64) {
+        (
+            self.attn_ns.load(Ordering::Relaxed) / 1_000,
+            self.gemm_ns.load(Ordering::Relaxed) / 1_000,
+            self.other_ns.load(Ordering::Relaxed) / 1_000,
+        )
+    }
+}
+
 /// The packed model.
 pub struct Transformer {
     pub cfg: ModelConfig,
@@ -216,6 +265,9 @@ pub struct Transformer {
     /// share one, gate/up share one), with buffers recycled across calls
     /// so steady-state decode allocates nothing in the prepare path.
     prepare_ws: Mutex<PreparedActivations>,
+    /// Per-phase time accounting for every forward pass (see
+    /// [`PhaseStats`]); read via [`Transformer::phase_us`].
+    pub phase: PhaseStats,
 }
 
 impl Transformer {
@@ -330,7 +382,15 @@ impl Transformer {
             cfg,
             pool,
             prepare_ws: Mutex::new(PreparedActivations::new()),
+            phase: PhaseStats::default(),
         }
+    }
+
+    /// Cumulative `(attention, mpGEMM, other-ops)` forward-pass
+    /// microseconds — the paper-style decode profile (`--verbose` and
+    /// the engine's phase metrics render this split).
+    pub fn phase_us(&self) -> (u64, u64, u64) {
+        self.phase.snapshot_us()
     }
 
     /// Prepare-cache counter snapshot (hits/misses/buffer reuse) — the
@@ -586,6 +646,15 @@ impl Transformer {
         let hd = cfg.head_dim();
         let kvd = cfg.kv_dim();
 
+        // Phase accounting: attention and mpGEMM segments are timed
+        // directly (the GEMM timers bracket the workspace lock, so
+        // prepare preprocessing and any lock wait count as projection
+        // cost); "other" is the block remainder (norms, RoPE, SwiGLU,
+        // residuals, KV appends).
+        let t_block = Instant::now();
+        let mut attn_ns = 0u64;
+        let mut gemm_ns = 0u64;
+
         // ---- Attention ----
         let mut normed = vec![0f32; n * h];
         for i in 0..n {
@@ -605,6 +674,7 @@ impl Transformer {
         // The workspace lock is scoped to each projection group so the
         // attention/FFN compute between them never sits inside the
         // critical section (concurrent forward passes stay parallel).
+        let t = Instant::now();
         {
             let mut acts = self.prepare_ws.lock().unwrap();
             acts.begin_input();
@@ -612,6 +682,7 @@ impl Transformer {
             layer.wk.forward_batch_cached(&self.plan, li, Role::Qkv, &normed, n, &mut k, &self.pool, &mut acts);
             layer.wv.forward_batch_cached(&self.plan, li, Role::Qkv, &normed, n, &mut v, &self.pool, &mut acts);
         }
+        gemm_ns += t.elapsed().as_nanos() as u64;
         for i in 0..n {
             rope(&mut q[i * h..(i + 1) * h], cfg.n_heads, hd, positions[i], cfg.rope_theta);
             rope(&mut k[i * kvd..(i + 1) * kvd], cfg.n_kv_heads, hd, positions[i], cfg.rope_theta);
@@ -619,10 +690,12 @@ impl Transformer {
             s.append(li, positions[i], &k[i * kvd..(i + 1) * kvd], &v[i * kvd..(i + 1) * kvd]);
         }
         // Scaled dot-product attention per row against its session's
-        // cache, read through the page table (gathers tiled per page so
-        // the inner dot stays contiguous; see KvArena::attend).
+        // cache, read through the page table with the f16→f32 decode
+        // fused into the SIMD dot/axpy loops, head-parallel on the
+        // compute pool (see KvArena::attend_with).
         let mut attn_out = vec![0f32; n * h];
         let scale = 1.0 / (hd as f32).sqrt();
+        let t = Instant::now();
         for i in 0..n {
             let s: &Session = if prefill { &*sessions[0] } else { &*sessions[i] };
             let ctx_len = positions[i] + 1; // causal: everything ≤ this position
@@ -635,14 +708,18 @@ impl Transformer {
                 hd,
                 scale,
                 &mut attn_out[i * h..(i + 1) * h],
+                Some(&self.pool),
             );
         }
+        attn_ns += t.elapsed().as_nanos() as u64;
         let mut proj = vec![0f32; n * h];
+        let t = Instant::now();
         {
             let mut acts = self.prepare_ws.lock().unwrap();
             acts.begin_input();
             layer.wo.forward_batch_cached(&self.plan, li, Role::O, &attn_out, n, &mut proj, &self.pool, &mut acts);
         }
+        gemm_ns += t.elapsed().as_nanos() as u64;
         for (x, p) in xs.iter_mut().zip(proj.iter()) {
             *x += p;
         }
@@ -654,23 +731,32 @@ impl Transformer {
         let f = cfg.ffn;
         let mut gate = vec![0f32; n * f];
         let mut up = vec![0f32; n * f];
+        let t = Instant::now();
         {
             let mut acts = self.prepare_ws.lock().unwrap();
             acts.begin_input();
             layer.w_gate.forward_batch_cached(&self.plan, li, Role::Gate, &normed, n, &mut gate, &self.pool, &mut acts);
             layer.w_up.forward_batch_cached(&self.plan, li, Role::Up, &normed, n, &mut up, &self.pool, &mut acts);
         }
+        gemm_ns += t.elapsed().as_nanos() as u64;
         let mut act = vec![0f32; n * f];
         swiglu(&gate, &up, &mut act);
         let mut down = vec![0f32; n * h];
+        let t = Instant::now();
         {
             let mut acts = self.prepare_ws.lock().unwrap();
             acts.begin_input();
             layer.w_down.forward_batch_cached(&self.plan, li, Role::Down, &act, n, &mut down, &self.pool, &mut acts);
         }
+        gemm_ns += t.elapsed().as_nanos() as u64;
         for (x, d) in xs.iter_mut().zip(down.iter()) {
             *x += d;
         }
+
+        let total_ns = t_block.elapsed().as_nanos() as u64;
+        self.phase.attn_ns.fetch_add(attn_ns, Ordering::Relaxed);
+        self.phase.gemm_ns.fetch_add(gemm_ns, Ordering::Relaxed);
+        self.phase.other_ns.fetch_add(total_ns.saturating_sub(attn_ns + gemm_ns), Ordering::Relaxed);
     }
 
     fn logits_for(&self, x: &[f32]) -> Vec<f32> {
@@ -678,7 +764,9 @@ impl Transformer {
         let mut normed = vec![0f32; h];
         rmsnorm(&x[..h], &self.final_norm, self.cfg.rms_eps, &mut normed);
         let mut logits = vec![0f32; self.cfg.vocab_size];
+        let t = Instant::now();
         self.lm_head.forward(&normed, &mut logits, &self.pool);
+        self.phase.gemm_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
         logits
     }
 }
@@ -765,6 +853,27 @@ mod tests {
         }
         assert_eq!(outs[0], outs[1], "I2_S vs TL1_1");
         assert_eq!(outs[0], outs[2], "I2_S vs TL2_1");
+    }
+
+    #[test]
+    fn phase_stats_and_attn_workspace_accumulate() {
+        let model = tiny_model(QuantType::I2S);
+        let mut s = model.new_session(64);
+        model.prefill(&mut s, &[1, 2, 3]);
+        for t in 0..5u32 {
+            model.decode_step(&mut s, 10 + t);
+        }
+        let (attn, gemm, other) = model.phase_us();
+        assert!(attn + gemm + other > 0, "no phase time recorded");
+        // The session workspace allocates O(log ctx) times (power-of-two
+        // growth) and reuses everywhere else: 2 layers × 8 steps of
+        // attends share one score buffer.
+        let (allocs, reuses) = s.attn_workspace_stats();
+        assert!(allocs >= 1, "first attend must size the workspace");
+        assert!(
+            reuses > allocs,
+            "steady-state attends must reuse capacity: {allocs} allocs / {reuses} reuses"
+        );
     }
 
     #[test]

@@ -109,6 +109,7 @@ impl Engine {
         metrics.dispatch_fallbacks.store(model.plan.fallbacks(), Ordering::Relaxed);
         metrics.dispatch_degraded.store(model.plan.degraded(), Ordering::Relaxed);
         mirror_prepare_stats(&model, &metrics);
+        metrics.mirror_phase(model.phase_us());
         metrics.mirror_simd();
         let kernel_info = {
             let shapes: Vec<String> = model
@@ -442,6 +443,7 @@ fn run_loop(
         metrics.dispatch_fallbacks.store(model.plan.fallbacks(), Ordering::Relaxed);
         metrics.dispatch_degraded.store(model.plan.degraded(), Ordering::Relaxed);
         mirror_prepare_stats(&model, &metrics);
+        metrics.mirror_phase(model.phase_us());
         metrics.mirror_simd();
 
         // Release finished sequences' pages, then mirror the arena state

@@ -26,6 +26,6 @@ pub mod kv_pool {
 }
 
 pub use engine::{Engine, EngineConfig};
-pub use kv_pool::{KvArena, KvDtype, PAGE_TOKENS};
+pub use kv_pool::{AttnWorkspace, KvArena, KvDtype, PAGE_TOKENS};
 pub use request::{Event, FinishReason, Request, RequestHandle};
 pub use trace::{ServingTrace, TraceRecorder};

@@ -337,6 +337,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let mut logits = model.prefill(&mut session, &prompt);
     let prefill_time = t0.elapsed();
+    let phase_prefill = model.phase_us();
 
     let params = SamplingParams { temperature, top_k: 40, top_p: 0.95 };
     let mut rng = pallas_core::util::Rng::new(lc.seed);
@@ -348,6 +349,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         logits = model.decode_step(&mut session, next);
     }
     let decode_time = t1.elapsed();
+    let phase_total = model.phase_us();
 
     println!("{}", tok.decode(&generated));
     eprintln!(
@@ -367,6 +369,27 @@ fn cmd_run(args: &Args) -> Result<()> {
             "prepare cache: {} hits / {} misses | buffers: {} reused, {} alloc'd",
             ps.hits, ps.misses, ps.buffer_reuses, ps.buffer_allocs
         );
+        // Per-phase decode profile: where each decode step's time went
+        // (paged-KV fused attention vs mpGEMM projections vs the other
+        // ops) — the decode-only delta between the two phase snapshots.
+        let steps = max_new.max(1) as u64;
+        let attn_us = phase_total.0.saturating_sub(phase_prefill.0);
+        let gemm_us = phase_total.1.saturating_sub(phase_prefill.1);
+        let other_us = phase_total.2.saturating_sub(phase_prefill.2);
+        eprintln!(
+            "decode phase: attention {}µs + mpGEMM {}µs + other ops {}µs per step (prefill totals {}/{}/{}µs)",
+            attn_us / steps,
+            gemm_us / steps,
+            other_us / steps,
+            phase_prefill.0,
+            phase_prefill.1,
+            phase_prefill.2
+        );
+        // Attention workspace: allocs flatline once the score buffer
+        // covers the longest context seen (steady-state decode attention
+        // is allocation-free).
+        let (ws_allocs, ws_reuses) = session.attn_workspace_stats();
+        eprintln!("attn workspace: {ws_allocs} allocs, {ws_reuses} reuses");
         // KV arena stats: pages actually held and their resident bytes
         // (lazy minting — not the worst-case capacity).
         eprintln!(
@@ -493,6 +516,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if args.has_flag("verbose") {
         println!("kernels: {}", engine.kernel_info);
+        println!(
+            "phase: attention {}µs, mpGEMM {}µs, other ops {}µs (cumulative)",
+            engine.metrics.phase_attn_us.load(ord),
+            engine.metrics.phase_gemm_us.load(ord),
+            engine.metrics.phase_other_us.load(ord)
+        );
     }
     let trace = engine.trace_snapshot();
     warn_on_trace_drift(&profile_widths, &trace);

@@ -178,6 +178,16 @@ pub struct EngineMetrics {
     /// KV slab bytes resident on each node (first-touch interleaving),
     /// same indexing as `numa_chunks`.
     pub numa_kv_bytes: [AtomicU64; EngineMetrics::MAX_NUMA_NODES],
+    /// Cumulative forward-pass attention microseconds (the paged-KV
+    /// fused attend), mirrored from the model's `PhaseStats` once per
+    /// step — the per-phase decode profile's attention share.
+    pub phase_attn_us: AtomicU64,
+    /// Cumulative mpGEMM microseconds (BitLinear projections, their
+    /// prepare-once preprocessing, and the f16 LM head).
+    pub phase_gemm_us: AtomicU64,
+    /// Cumulative other-ops microseconds (norms, RoPE, SwiGLU, KV
+    /// appends, residual plumbing).
+    pub phase_other_us: AtomicU64,
     pub step_latency: LatencyHistogram,
     pub ttft: LatencyHistogram,
 }
@@ -252,6 +262,31 @@ impl EngineMetrics {
         self.sparse_elided.iter().map(|c| c.load(Ordering::Relaxed)).sum()
     }
 
+    /// Copy the model's cumulative per-phase forward-pass split
+    /// (attention vs mpGEMM vs other ops, in µs) into this snapshot —
+    /// same mirror pattern as the SIMD and prepare-cache counters.
+    pub fn mirror_phase(&self, phase_us: (u64, u64, u64)) {
+        let (a, g, o) = phase_us;
+        self.phase_attn_us.store(a, Ordering::Relaxed);
+        self.phase_gemm_us.store(g, Ordering::Relaxed);
+        self.phase_other_us.store(o, Ordering::Relaxed);
+    }
+
+    /// The summary's phase segment: cumulative µs per phase plus each
+    /// phase's share of the accounted forward-pass time.
+    fn phase_summary(&self) -> String {
+        let a = self.phase_attn_us.load(Ordering::Relaxed);
+        let g = self.phase_gemm_us.load(Ordering::Relaxed);
+        let o = self.phase_other_us.load(Ordering::Relaxed);
+        let total = (a + g + o).max(1);
+        format!(
+            "phase µs attn/gemm/other {a}/{g}/{o} ({:.0}%/{:.0}%/{:.0}%)",
+            100.0 * a as f64 / total as f64,
+            100.0 * g as f64 / total as f64,
+            100.0 * o as f64 / total as f64
+        )
+    }
+
     /// The mirrored SIMD tier's display name (see [`EngineMetrics::mirror_simd`]).
     pub fn simd_level_name(&self) -> &'static str {
         match self.simd_level.load(Ordering::Relaxed) {
@@ -279,7 +314,7 @@ impl EngineMetrics {
     /// Human-readable one-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "req {}/{} done, {} rejected | tokens {}+{} | steps {} (mean batch {:.2}, peak {}) | step mean {:.1}µs p99 {}µs | ttft mean {:.1}µs | dispatch fallbacks {} degraded {} | simd {} (calls scalar/avx2/neon {}/{}/{}) | sparse elided scalar/avx2/neon {}/{}/{} | prepare {} hits / {} misses (buffers {} reused, {} alloc'd) | trace {} steps / {} shapes (drift {:.3}) | kv {}/{} pages (peak {}) {} KiB resident, {} preemptions | prefix {} hit / {} computed tokens, {} cow splits | {}",
+            "req {}/{} done, {} rejected | tokens {}+{} | steps {} (mean batch {:.2}, peak {}) | step mean {:.1}µs p99 {}µs | ttft mean {:.1}µs | {} | dispatch fallbacks {} degraded {} | simd {} (calls scalar/avx2/neon {}/{}/{}) | sparse elided scalar/avx2/neon {}/{}/{} | prepare {} hits / {} misses (buffers {} reused, {} alloc'd) | trace {} steps / {} shapes (drift {:.3}) | kv {}/{} pages (peak {}) {} KiB resident, {} preemptions | prefix {} hit / {} computed tokens, {} cow splits | {}",
             self.requests_completed.load(Ordering::Relaxed),
             self.requests_submitted.load(Ordering::Relaxed),
             self.requests_rejected.load(Ordering::Relaxed),
@@ -291,6 +326,7 @@ impl EngineMetrics {
             self.step_latency.mean_us(),
             self.step_latency.quantile_us(0.99),
             self.ttft.mean_us(),
+            self.phase_summary(),
             self.dispatch_fallbacks.load(Ordering::Relaxed),
             self.dispatch_degraded.load(Ordering::Relaxed),
             self.simd_level_name(),
@@ -395,6 +431,14 @@ mod tests {
         // Back to a single-node pool: the segment collapses again.
         m.mirror_numa(&NumaStats { nodes: 1, mocked: false, chunks: vec![4], steals: 0 }, &[64]);
         assert!(m.summary().contains("numa off"));
+    }
+
+    #[test]
+    fn phase_segment_renders_in_summary() {
+        let m = EngineMetrics::new();
+        m.mirror_phase((120, 300, 80));
+        let s = m.summary();
+        assert!(s.contains("phase µs attn/gemm/other 120/300/80 (24%/60%/16%)"), "{s}");
     }
 
     #[test]

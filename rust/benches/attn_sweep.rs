@@ -1,0 +1,203 @@
+//! Decode-attention sweep: the paged fused-attend hot loop (score dots +
+//! weighted-V accumulation, f16 decoded inside the vector loops) timed
+//! under the forced-scalar tier and under the host's vector tier
+//! (AVX2/NEON), across KV dtype × context length. A second section
+//! isolates what fusion buys on f16 pages: the fused decode-in-the-dot
+//! path against the decode-to-scratch-then-dot baseline it replaced.
+//!
+//! Serial (no pool) on purpose — this measures the per-core SIMD win;
+//! head-parallel scaling is `threads_fig8`'s department. With
+//! `BENCH_JSON=path` set, results merge into the shared bench document
+//! under the `"attention"` key. `BENCH_FAST=1` shortens runs (CI smoke).
+
+use bitnet::coordinator::kv_pool::{AttnWorkspace, KvArena, KvDtype};
+use bitnet::kernels::{simd, SimdLevel};
+use bitnet::perf::bench::{bench, black_box};
+use bitnet::simd::ops;
+use bitnet::util::f16::f16_to_f32_fast;
+use bitnet::util::{f32_to_f16, Json, Rng};
+use std::time::Duration;
+
+// A mid-size edge-model attention shape (GQA 4:1, 64-wide heads). One
+// query row against `ctx` cached positions is exactly the per-layer
+// decode-step workload.
+const N_HEADS: usize = 16;
+const N_KV_HEADS: usize = 4;
+const HEAD_DIM: usize = 64;
+const KV_DIM: usize = N_KV_HEADS * HEAD_DIM;
+
+/// Read-modify-write `BENCH_JSON`: replace `key` in the top-level object
+/// (an unparsable or missing file starts a fresh document).
+fn merge_into_bench_json(key: &str, value: Json) {
+    let path = match std::env::var("BENCH_JSON") {
+        Ok(p) => p,
+        Err(_) => return,
+    };
+    let mut pairs = match std::fs::read_to_string(&path).ok().and_then(|t| Json::parse(&t).ok())
+    {
+        Some(Json::Obj(pairs)) => pairs,
+        _ => Vec::new(),
+    };
+    pairs.retain(|(k, _)| k != key);
+    pairs.push((key.to_string(), value));
+    std::fs::write(&path, Json::Obj(pairs).to_string_pretty()).expect("write BENCH_JSON");
+    println!("# wrote {path} ({key})");
+}
+
+fn filled_arena(ctx: usize, dtype: KvDtype, rng: &mut Rng) -> KvArena {
+    let mut arena = KvArena::with_page_tokens(1, KV_DIM, 4096, dtype, 16);
+    assert!(arena.reserve(1, ctx));
+    for pos in 0..ctx {
+        let k: Vec<f32> = (0..KV_DIM).map(|_| rng.next_gaussian()).collect();
+        let v: Vec<f32> = (0..KV_DIM).map(|_| rng.next_gaussian()).collect();
+        arena.append(1, 0, pos, &k, &v);
+    }
+    arena
+}
+
+/// µs per decode-attention call at a forced SIMD tier.
+fn time_attend(arena: &KvArena, q: &[f32], ctx: usize, level: SimdLevel, fast: bool) -> f64 {
+    let scale = 1.0 / (HEAD_DIM as f32).sqrt();
+    let mut ws = AttnWorkspace::new();
+    let mut out = vec![0f32; N_HEADS * HEAD_DIM];
+    simd::with_level(level, || {
+        bench(
+            "attend",
+            Duration::from_millis(20),
+            Duration::from_millis(if fast { 80 } else { 250 }),
+            || {
+                out.fill(0.0);
+                arena.attend_with(
+                    &mut ws, 1, 0, q, ctx, N_HEADS, N_KV_HEADS, HEAD_DIM, scale, &mut out, None,
+                );
+                black_box(&out);
+            },
+        )
+        .seconds
+        .mean
+            * 1e6
+    })
+}
+
+fn sweep(fast: bool) -> Vec<Json> {
+    let vector = simd::available_levels().into_iter().find(|&l| l != SimdLevel::Scalar);
+    println!(
+        "# decode attention ({N_HEADS}h/{N_KV_HEADS}kv, head_dim {HEAD_DIM}), forced scalar vs vector tier"
+    );
+    println!(
+        "{:<6} {:>5} {:>12} {:>8} {:>12} {:>9}",
+        "dtype", "ctx", "scalar µs", "tier", "vector µs", "speedup"
+    );
+    let mut records = Vec::new();
+    for dtype in [KvDtype::F32, KvDtype::F16] {
+        for ctx in [64usize, 512, 2048] {
+            let mut rng = Rng::new(17);
+            let arena = filled_arena(ctx, dtype, &mut rng);
+            let q: Vec<f32> = (0..N_HEADS * HEAD_DIM).map(|_| rng.next_gaussian()).collect();
+            let scalar_us = time_attend(&arena, &q, ctx, SimdLevel::Scalar, fast);
+            let (vec_cell, speedup_cell, tier_name) = match vector {
+                Some(level) => {
+                    let vec_us = time_attend(&arena, &q, ctx, level, fast);
+                    (Json::Num(vec_us), Json::Num(scalar_us / vec_us), level.name())
+                }
+                None => (Json::Null, Json::Null, "-"),
+            };
+            let dt = format!("{dtype:?}");
+            match (&vec_cell, &speedup_cell) {
+                (Json::Num(v), Json::Num(s)) => println!(
+                    "{dt:<6} {ctx:>5} {scalar_us:>12.1} {tier_name:>8} {v:>12.1} {s:>8.2}x"
+                ),
+                _ => println!(
+                    "{dt:<6} {ctx:>5} {scalar_us:>12.1} {tier_name:>8} {:>12} {:>9}",
+                    "-", "-"
+                ),
+            }
+            records.push(Json::Obj(vec![
+                ("dtype".into(), Json::Str(format!("{dtype:?}"))),
+                ("ctx".into(), Json::Num(ctx as f64)),
+                ("n_heads".into(), Json::Num(N_HEADS as f64)),
+                ("n_kv_heads".into(), Json::Num(N_KV_HEADS as f64)),
+                ("head_dim".into(), Json::Num(HEAD_DIM as f64)),
+                ("scalar_us_per_step".into(), Json::Num(scalar_us)),
+                ("vector_level".into(), Json::Str(tier_name.into())),
+                ("vector_us_per_step".into(), vec_cell),
+                ("speedup".into(), speedup_cell),
+            ]));
+        }
+    }
+    if vector.is_none() {
+        println!("# (no vector tier on this host — scalar only)");
+    }
+    records
+}
+
+/// What fusing the f16 decode into the dot loop buys over the
+/// decode-to-scratch baseline it replaced: `ctx` score dots of width
+/// `HEAD_DIM` against f16 rows, fused vs materialize-then-dot, both at
+/// the host's best tier.
+fn fused_vs_scratch(fast: bool) -> Vec<Json> {
+    let level = *simd::available_levels().last().expect("scalar tier always present");
+    let mut rng = Rng::new(29);
+    let q: Vec<f32> = (0..HEAD_DIM).map(|_| rng.next_gaussian()).collect();
+    println!("\n# f16 score loop at {}: fused decode-in-dot vs decode-to-scratch", level.name());
+    println!("{:>5} {:>12} {:>12} {:>9}", "ctx", "fused µs", "scratch µs", "speedup");
+    let mut records = Vec::new();
+    for ctx in [64usize, 512, 2048] {
+        let rows: Vec<Vec<u16>> = (0..ctx)
+            .map(|_| (0..HEAD_DIM).map(|_| f32_to_f16(rng.next_gaussian())).collect())
+            .collect();
+        let mut scores = vec![0f32; ctx];
+        let budget = Duration::from_millis(if fast { 60 } else { 200 });
+        let fused_us = simd::with_level(level, || {
+            bench("fused", Duration::from_millis(10), budget, || {
+                for (s, row) in scores.iter_mut().zip(&rows) {
+                    *s = ops::dot_f16(&q, row);
+                }
+                black_box(&scores);
+            })
+            .seconds
+            .mean
+                * 1e6
+        });
+        let mut scratch = vec![0f32; HEAD_DIM];
+        let scratch_us = simd::with_level(level, || {
+            bench("scratch", Duration::from_millis(10), budget, || {
+                for (s, row) in scores.iter_mut().zip(&rows) {
+                    for (d, &h) in scratch.iter_mut().zip(row.iter()) {
+                        *d = f16_to_f32_fast(h);
+                    }
+                    *s = ops::dot_f32(&q, &scratch);
+                }
+                black_box(&scores);
+            })
+            .seconds
+            .mean
+                * 1e6
+        });
+        println!(
+            "{ctx:>5} {fused_us:>12.2} {scratch_us:>12.2} {:>8.2}x",
+            scratch_us / fused_us
+        );
+        records.push(Json::Obj(vec![
+            ("ctx".into(), Json::Num(ctx as f64)),
+            ("level".into(), Json::Str(level.name().into())),
+            ("fused_us".into(), Json::Num(fused_us)),
+            ("scratch_us".into(), Json::Num(scratch_us)),
+            ("speedup".into(), Json::Num(scratch_us / fused_us)),
+        ]));
+    }
+    records
+}
+
+fn main() {
+    let fast = std::env::var("BENCH_FAST").is_ok();
+    let records = sweep(fast);
+    let fusion = fused_vs_scratch(fast);
+    merge_into_bench_json(
+        "attention",
+        Json::Obj(vec![
+            ("sweep".into(), Json::Arr(records)),
+            ("f16_fused_vs_scratch".into(), Json::Arr(fusion)),
+        ]),
+    );
+}

@@ -66,7 +66,7 @@
 #![warn(clippy::undocumented_unsafe_blocks)]
 #![deny(unsafe_code)]
 
-pub use pallas_core::{threadpool, topology, util};
+pub use pallas_core::{simd, threadpool, topology, util};
 pub use pallas_model::{eval, model, modelio, tokenizer};
 pub use pallas_serve::{cli, config, coordinator, metrics, runtime};
 

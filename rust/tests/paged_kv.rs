@@ -73,6 +73,53 @@ fn paged_f32_is_bit_identical_to_contiguous_layout() {
     }
 }
 
+/// Page size must be invisible to attention at *both* KV dtypes: the
+/// same appended rows read through 1-, 3-, and 16-token pages produce
+/// bit-identical attend output to the one-page-per-sequence contiguous
+/// layout. The model-level suite above covers f32 end to end; this
+/// pins the f16 decode-in-the-loop path (where a scratch-materializing
+/// or differently-tiled gather would show up) at the arena level.
+#[test]
+fn paged_attend_matches_contiguous_at_both_dtypes() {
+    for dtype in [KvDtype::F32, KvDtype::F16] {
+        for (n_heads, n_kv_heads, head_dim, ctx) in
+            [(4usize, 4usize, 8usize, 17usize), (8, 2, 16, 33), (5, 1, 12, 16)]
+        {
+            let kv_dim = n_kv_heads * head_dim;
+            let mut rng = bitnet::util::Rng::new(77);
+            let rows: Vec<(Vec<f32>, Vec<f32>)> = (0..ctx)
+                .map(|_| {
+                    (
+                        (0..kv_dim).map(|_| rng.next_gaussian()).collect(),
+                        (0..kv_dim).map(|_| rng.next_gaussian()).collect(),
+                    )
+                })
+                .collect();
+            let q: Vec<f32> = (0..n_heads * head_dim).map(|_| rng.next_gaussian()).collect();
+            let scale = 1.0 / (head_dim as f32).sqrt();
+            let attend_paged = |page_tokens: usize| {
+                let mut arena = KvArena::with_page_tokens(1, kv_dim, 8192, dtype, page_tokens);
+                assert!(arena.reserve(1, ctx));
+                for (pos, (k, v)) in rows.iter().enumerate() {
+                    arena.append(1, 0, pos, k, v);
+                }
+                let mut out = vec![0f32; n_heads * head_dim];
+                arena.attend(1, 0, &q, ctx, n_heads, n_kv_heads, head_dim, scale, &mut out);
+                out
+            };
+            let contiguous = attend_paged(4096);
+            for page_tokens in [1usize, 3, 16] {
+                assert_eq!(
+                    attend_paged(page_tokens),
+                    contiguous,
+                    "{dtype:?} {n_heads}h/{n_kv_heads}kv hd={head_dim} ctx={ctx}: \
+                     page_tokens={page_tokens} diverges from contiguous"
+                );
+            }
+        }
+    }
+}
+
 /// Teacher-forced perplexity with a session of the given KV dtype
 /// (mirrors `eval::perplexity`, which always uses the f32 default).
 fn ppl_with_dtype(model: &Transformer, tokens: &[u32], dtype: KvDtype) -> f64 {

@@ -179,3 +179,30 @@ fn decode_steady_state_is_allocation_free_in_prepare_path() {
         assert!(ps.buffer_reuses > warm.buffer_reuses, "{qt:?}: builds keep reusing buffers");
     }
 }
+
+/// Steady-state decode must not allocate in the attention path either:
+/// the per-session `AttnWorkspace` grows its score buffer in
+/// power-of-two steps, so once prefill has sized it past the decode
+/// window the allocation counter flatlines while the reuse counter
+/// keeps climbing — every decode step reads the cache through a warm
+/// workspace.
+#[test]
+fn decode_steady_state_is_allocation_free_in_attention_path() {
+    let model = Transformer::synthetic(&ModelConfig::tiny(), QuantType::I2S, 9);
+    let mut s = model.new_session(64);
+    // 23-token prompt: with tiny's 4 heads the prefill peak is
+    // n_heads * ctx = 92 scores, so the workspace lands on a 128-slot
+    // power-of-two capacity — enough for decode out to ctx = 32.
+    let prompt: Vec<u32> = (0..23).map(|i| 5 + i % 40).collect();
+    let _ = model.prefill(&mut s, &prompt);
+    let _ = model.decode_step(&mut s, 1);
+    let _ = model.decode_step(&mut s, 2);
+    let (warm_allocs, warm_reuses) = s.attn_workspace_stats();
+    assert!(warm_allocs >= 1, "prefill must have sized the workspace");
+    for t in 3..10u32 {
+        let _ = model.decode_step(&mut s, t);
+    }
+    let (allocs, reuses) = s.attn_workspace_stats();
+    assert_eq!(allocs, warm_allocs, "steady-state decode attention must not allocate");
+    assert!(reuses > warm_reuses, "decode steps keep reusing the warm score buffer");
+}

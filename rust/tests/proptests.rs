@@ -2,7 +2,7 @@
 //! offline): randomized inputs over many iterations, asserting invariants
 //! of the kernel library and the coordinator state machines.
 
-use bitnet::coordinator::kv_pool::KvArena;
+use bitnet::coordinator::kv_pool::{KvArena, KvDtype};
 use bitnet::coordinator::scheduler::{Phase, Scheduler, SeqState};
 use bitnet::kernels::quant::{quantize_act_int8, training_scheme_ref_row, TernaryWeights};
 use bitnet::kernels::sparse::{self, SparseMode};
@@ -437,5 +437,170 @@ fn prop_f16_monotone_and_bounded() {
         let rt = f16_to_f32(f32_to_f16(v));
         let ulp = (v.abs() / 1024.0).max(6e-8); // half has 10 mantissa bits
         assert!((rt - v).abs() <= ulp, "{v} -> {rt}");
+    }
+}
+
+/// Invariant: the paged fused attend is bit-identical between the
+/// forced-scalar tier and every vector tier this host offers, across
+/// random GQA geometry (incl. MQA), head dims with remainder tails,
+/// context lengths, page sizes, and both KV dtypes (f16 decodes inside
+/// the vector loops).
+#[test]
+fn prop_attend_scalar_simd_equivalence_random_geometry() {
+    let mut rng = Rng::new(1200);
+    let levels = simd::available_levels();
+    for trial in 0..25 {
+        let head_dim = 2 * (1 + rng.next_below(12));
+        let n_kv_heads = 1 + rng.next_below(4);
+        let group = 1 + rng.next_below(3);
+        let n_heads = n_kv_heads * group;
+        let kv_dim = n_kv_heads * head_dim;
+        let ctx = 1 + rng.next_below(40);
+        let page_tokens = [1usize, 2, 3, 5, 8, 16, 64][rng.next_below(7)];
+        let dtype = if rng.next_below(2) == 0 { KvDtype::F32 } else { KvDtype::F16 };
+        let mut arena = KvArena::with_page_tokens(1, kv_dim, 8192, dtype, page_tokens);
+        assert!(arena.reserve(1, ctx));
+        for pos in 0..ctx {
+            let k: Vec<f32> = (0..kv_dim).map(|_| rng.next_gaussian()).collect();
+            let v: Vec<f32> = (0..kv_dim).map(|_| rng.next_gaussian()).collect();
+            arena.append(1, 0, pos, &k, &v);
+        }
+        let q: Vec<f32> = (0..n_heads * head_dim).map(|_| rng.next_gaussian()).collect();
+        let scale = 1.0 / (head_dim as f32).sqrt();
+        let attend_at = |level: SimdLevel| {
+            simd::with_level(level, || {
+                let mut out = vec![0f32; n_heads * head_dim];
+                arena.attend(1, 0, &q, ctx, n_heads, n_kv_heads, head_dim, scale, &mut out);
+                out
+            })
+        };
+        let reference = attend_at(SimdLevel::Scalar);
+        assert!(reference.iter().all(|v| v.is_finite()), "trial {trial}");
+        for &level in &levels {
+            assert_eq!(
+                attend_at(level),
+                reference,
+                "trial {trial} ({n_heads}h/{n_kv_heads}kv hd={head_dim} ctx={ctx} \
+                 page={page_tokens} {dtype:?}) at {}",
+                level.name()
+            );
+        }
+    }
+}
+
+/// Invariant: attention over an all-shared copy-on-write page table
+/// (prefix registered by one sequence, mapped by another) reads the
+/// exact same bits as the owning sequence, at every SIMD tier. Shared
+/// pages are pure page-table indirection — sharing must be invisible to
+/// the math.
+#[test]
+fn prop_attend_on_shared_cow_pages_identical_across_levels() {
+    let mut rng = Rng::new(1300);
+    let levels = simd::available_levels();
+    for trial in 0..10 {
+        let head_dim = 2 * (1 + rng.next_below(8));
+        let n_kv_heads = 1 + rng.next_below(3);
+        let group = 1 + rng.next_below(3);
+        let n_heads = n_kv_heads * group;
+        let kv_dim = n_kv_heads * head_dim;
+        let page_tokens = [2usize, 4, 8, 16][rng.next_below(4)];
+        let full_pages = 2 + rng.next_below(3);
+        // A strictly partial tail keeps the last page private (a full
+        // tail page would itself be indexed and shared); the full pages
+        // are the shared prefix.
+        let ctx = full_pages * page_tokens + 1 + rng.next_below(page_tokens - 1);
+        let dtype = if trial % 2 == 0 { KvDtype::F32 } else { KvDtype::F16 };
+        let mut arena = KvArena::with_page_tokens(1, kv_dim, 8192, dtype, page_tokens);
+        let prompt: Vec<u32> = (0..ctx as u32).map(|i| 3 + (i * 7) % 90).collect();
+        assert!(arena.reserve(1, ctx));
+        let rows: Vec<(Vec<f32>, Vec<f32>)> = (0..ctx)
+            .map(|_| {
+                (
+                    (0..kv_dim).map(|_| rng.next_gaussian()).collect(),
+                    (0..kv_dim).map(|_| rng.next_gaussian()).collect(),
+                )
+            })
+            .collect();
+        for (pos, (k, v)) in rows.iter().enumerate() {
+            arena.append(1, 0, pos, k, v);
+        }
+        arena.register_prefix(1, &prompt);
+        let resident = arena.map_prefix(2, &prompt);
+        assert_eq!(resident, full_pages * page_tokens, "trial {trial}: full pages map");
+        assert!(arena.reserve(2, ctx));
+        for pos in resident..ctx {
+            arena.append(2, 0, pos, &rows[pos].0, &rows[pos].1);
+        }
+        let q: Vec<f32> = (0..n_heads * head_dim).map(|_| rng.next_gaussian()).collect();
+        let scale = 1.0 / (head_dim as f32).sqrt();
+        let attend_at = |seq: u64, level: SimdLevel| {
+            simd::with_level(level, || {
+                let mut out = vec![0f32; n_heads * head_dim];
+                arena.attend(seq, 0, &q, ctx, n_heads, n_kv_heads, head_dim, scale, &mut out);
+                out
+            })
+        };
+        let reference = attend_at(1, SimdLevel::Scalar);
+        for &level in &levels {
+            assert_eq!(attend_at(1, level), reference, "trial {trial} owner at {}", level.name());
+            assert_eq!(
+                attend_at(2, level),
+                reference,
+                "trial {trial} at {}: shared COW pages must read identically",
+                level.name()
+            );
+        }
+    }
+}
+
+/// Invariant: every attention/ops SIMD primitive is bit-identical to the
+/// forced-scalar tier at random lengths (sub-register slices, exact
+/// multiples, and remainder tails all arise by construction).
+#[test]
+fn prop_ops_scalar_simd_equivalence_random_lengths() {
+    use bitnet::simd::ops;
+    let mut rng = Rng::new(1400);
+    let levels = simd::available_levels();
+    for trial in 0..40 {
+        let n = 1 + rng.next_below(300);
+        let a: Vec<f32> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let h: Vec<u16> = b.iter().map(|&v| bitnet::util::f32_to_f16(v)).collect();
+        let gain: Vec<f32> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let pairs = 1 + rng.next_below(80);
+        let rot0: Vec<f32> = (0..2 * pairs).map(|_| rng.next_gaussian()).collect();
+        let angles: Vec<f32> = (0..pairs).map(|i| 0.3 * i as f32 + trial as f32).collect();
+        let sin: Vec<f32> = angles.iter().map(|v| v.sin()).collect();
+        let cos: Vec<f32> = angles.iter().map(|v| v.cos()).collect();
+        let eval = |level: SimdLevel| {
+            simd::with_level(level, || {
+                let mut y = b.clone();
+                ops::axpy_f32(0.37, &a, &mut y);
+                let mut y16 = a.clone();
+                ops::axpy_f16(-1.25, &h, &mut y16);
+                let mut sg = vec![0f32; n];
+                ops::scale_gain(&a, 0.8, &gain, &mut sg);
+                let mut sm = a.clone();
+                bitnet::util::softmax(&mut sm);
+                let mut sl = vec![0f32; n];
+                ops::silu_mul(&a, &b, &mut sl);
+                let mut rot = rot0.clone();
+                ops::rope_rotate(&mut rot, &sin, &cos);
+                (
+                    (
+                        ops::dot_f32(&a, &b),
+                        ops::dot_f16(&a, &h),
+                        ops::sum_squares(&a),
+                        ops::sum(&a),
+                        ops::max_val(&a),
+                    ),
+                    (y, y16, sg, sm, sl, rot),
+                )
+            })
+        };
+        let reference = eval(SimdLevel::Scalar);
+        for &level in &levels {
+            assert_eq!(eval(level), reference, "trial {trial} n={n} at {}", level.name());
+        }
     }
 }

@@ -13,6 +13,7 @@
 //! which serializes on the kernel layer's force lock — so concurrent
 //! tests never observe each other's forced tier.
 
+use bitnet::coordinator::kv_pool::{AttnWorkspace, KvArena, KvDtype};
 use bitnet::kernels::quant::{quantize_act_int8, training_scheme_ref_row, TernaryWeights};
 use bitnet::kernels::sparse::{self, SparseMode, SPARSE_THRESHOLD};
 use bitnet::kernels::{
@@ -404,6 +405,171 @@ fn pack_time_threshold_gates_the_layout() {
             "{qt:?}: measured fraction {} below threshold yet the layout attached",
             idx.zero_block_fraction()
         );
+    }
+}
+
+/// A one-layer arena holding `ctx` random K/V rows for sequence 7.
+fn filled_arena(
+    kv_dim: usize,
+    ctx: usize,
+    dtype: KvDtype,
+    page_tokens: usize,
+    seed: u64,
+) -> KvArena {
+    let mut arena = KvArena::with_page_tokens(1, kv_dim, 8192, dtype, page_tokens);
+    assert!(arena.reserve(7, ctx));
+    let mut rng = Rng::new(seed);
+    for pos in 0..ctx {
+        let k: Vec<f32> = (0..kv_dim).map(|_| rng.next_gaussian()).collect();
+        let v: Vec<f32> = (0..kv_dim).map(|_| rng.next_gaussian()).collect();
+        arena.append(7, 0, pos, &k, &v);
+    }
+    arena
+}
+
+/// The paged fused attend must be bit-identical to the forced-scalar
+/// reference at every SIMD tier, across KV dtypes (f16 decodes *inside*
+/// the vector loops), GQA group sizes (incl. MQA), page sizes from
+/// maximal straddling (1) to the contiguous degenerate (4096), and
+/// ragged context lengths hitting page boundaries and remainder loops.
+#[test]
+fn attend_bit_identical_across_simd_levels() {
+    for dtype in [KvDtype::F32, KvDtype::F16] {
+        for (n_heads, n_kv_heads) in [(4usize, 4usize), (8, 2), (5, 1)] {
+            for head_dim in [8usize, 12] {
+                let kv_dim = n_kv_heads * head_dim;
+                for page_tokens in [1usize, 3, 16, 4096] {
+                    for ctx in [1usize, 16, 17, 33] {
+                        let arena =
+                            filled_arena(kv_dim, ctx, dtype, page_tokens, 70 + ctx as u64);
+                        let mut rng = Rng::new(71);
+                        let q: Vec<f32> =
+                            (0..n_heads * head_dim).map(|_| rng.next_gaussian()).collect();
+                        let scale = 1.0 / (head_dim as f32).sqrt();
+                        let attend_at = |level: SimdLevel| {
+                            simd::with_level(level, || {
+                                let mut out = vec![0f32; n_heads * head_dim];
+                                arena.attend(
+                                    7, 0, &q, ctx, n_heads, n_kv_heads, head_dim, scale,
+                                    &mut out,
+                                );
+                                out
+                            })
+                        };
+                        let reference = attend_at(SimdLevel::Scalar);
+                        assert!(reference.iter().all(|v| v.is_finite()));
+                        for level in levels() {
+                            assert_eq!(
+                                attend_at(level),
+                                reference,
+                                "{dtype:?} {n_heads}h/{n_kv_heads}kv hd={head_dim} \
+                                 page={page_tokens} ctx={ctx} at {}",
+                                level.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Head-parallel attend through a persistent workspace must be
+/// bit-identical to the serial no-pool path (head order and pool size
+/// cannot change a single bit), and the workspace must allocate once
+/// then reuse.
+#[test]
+fn attend_pooled_workspace_bit_identical_to_serial() {
+    let (n_heads, n_kv_heads, head_dim) = (8usize, 4usize, 16usize);
+    let kv_dim = n_kv_heads * head_dim;
+    // n_heads * ctx = 1040 ≥ 512 crosses the head-parallel threshold.
+    let ctx = 130usize;
+    let pool = ThreadPool::new(4);
+    for dtype in [KvDtype::F32, KvDtype::F16] {
+        let arena = filled_arena(kv_dim, ctx, dtype, 16, 90);
+        let mut rng = Rng::new(91);
+        let q: Vec<f32> = (0..n_heads * head_dim).map(|_| rng.next_gaussian()).collect();
+        let scale = 1.0 / (head_dim as f32).sqrt();
+        let mut reference = vec![0f32; n_heads * head_dim];
+        arena.attend(7, 0, &q, ctx, n_heads, n_kv_heads, head_dim, scale, &mut reference);
+        let mut ws = AttnWorkspace::new();
+        for level in levels() {
+            for round in 0..2 {
+                let out = simd::with_level(level, || {
+                    let mut out = vec![0f32; n_heads * head_dim];
+                    arena.attend_with(
+                        &mut ws,
+                        7,
+                        0,
+                        &q,
+                        ctx,
+                        n_heads,
+                        n_kv_heads,
+                        head_dim,
+                        scale,
+                        &mut out,
+                        Some(&pool),
+                    );
+                    out
+                });
+                assert_eq!(
+                    out,
+                    reference,
+                    "{dtype:?} round {round} at {}: pooled attend must match serial",
+                    level.name()
+                );
+            }
+        }
+        assert_eq!(ws.allocs(), 1, "{dtype:?}: one sizing allocation");
+        assert!(ws.reuses() >= 1, "{dtype:?}: later rounds reuse the score buffer");
+    }
+}
+
+/// The vectorized non-matmul ops (rmsnorm, rope, swiglu, softmax) are
+/// held to the same bar: bit-identical to forced scalar at every tier,
+/// at lengths covering sub-register slices, exact register multiples,
+/// and remainder tails.
+#[test]
+fn model_ops_bit_identical_across_simd_levels() {
+    use bitnet::model::ops::{rmsnorm, rope, swiglu};
+    for n in [1usize, 7, 64, 65, 256] {
+        let mut rng = Rng::new(500 + n as u64);
+        let x: Vec<f32> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let gain: Vec<f32> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let up: Vec<f32> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let eval = |level: SimdLevel| {
+            simd::with_level(level, || {
+                let mut normed = vec![0f32; n];
+                rmsnorm(&x, &gain, 1e-5, &mut normed);
+                let mut act = vec![0f32; n];
+                swiglu(&x, &up, &mut act);
+                let mut sm = x.clone();
+                bitnet::util::softmax(&mut sm);
+                (normed, act, sm)
+            })
+        };
+        let reference = eval(SimdLevel::Scalar);
+        for level in levels() {
+            assert_eq!(eval(level), reference, "ops n={n} at {}", level.name());
+        }
+    }
+    // RoPE separately: head_dim spans sub-block, unaligned, and
+    // multi-block (the sin/cos table block is 64 pairs).
+    for head_dim in [8usize, 20, 160] {
+        let n_heads = 3usize;
+        let mut rng = Rng::new(600 + head_dim as u64);
+        let x0: Vec<f32> = (0..n_heads * head_dim).map(|_| rng.next_gaussian()).collect();
+        let eval = |level: SimdLevel| {
+            simd::with_level(level, || {
+                let mut x = x0.clone();
+                rope(&mut x, n_heads, head_dim, 17, 10000.0);
+                x
+            })
+        };
+        let reference = eval(SimdLevel::Scalar);
+        for level in levels() {
+            assert_eq!(eval(level), reference, "rope hd={head_dim} at {}", level.name());
+        }
     }
 }
 
